@@ -1,0 +1,16 @@
+//! Developer calibration dump: prints every reproduced table/figure so
+//! model constants can be tuned against the paper's envelopes.
+use gengnn::report::{fig7, fig8, fig9, table4, table5};
+
+fn main() {
+    let hiv = fig7::compute(fig7::MolDataset::MolHiv, 150, 1);
+    println!("{}", fig7::render(fig7::MolDataset::MolHiv, &hiv));
+    let pcba = fig7::compute(fig7::MolDataset::MolPcba, 150, 1);
+    println!("{}", fig7::render(fig7::MolDataset::MolPcba, &pcba));
+    println!("{}", fig8::render(&fig8::compute(2)));
+    println!("{}", fig9::render_grid(&fig9::default_grid(80, 3)));
+    println!("{}", fig9::render_mol("MolHIV/GIN", &fig9::molhiv(150, 4, false)));
+    println!("{}", fig9::render_mol("MolHIV/GIN+VN", &fig9::molhiv(150, 4, true)));
+    println!("{}", table4::render());
+    println!("{}", table5::render());
+}

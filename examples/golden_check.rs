@@ -1,0 +1,31 @@
+//! Developer smoke check: compile every artifact, replay its golden
+//! input, verify numerics, and report steady-state inference latency.
+use gengnn::runtime::{Artifacts, Engine, Golden};
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::load("artifacts")?;
+    for name in arts.model_names() {
+        let t0 = std::time::Instant::now();
+        let mut e = Engine::load(&arts, &[name])?;
+        let compile = t0.elapsed();
+        let meta = e.meta(name)?.clone();
+        let g = Golden::load(&meta)?;
+        let out = e.infer_with_eig(name, &g.graph, g.eig.as_deref())?;
+        let ok = out
+            .iter()
+            .zip(&g.output)
+            .all(|(a, b)| (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())));
+        // Steady state: average of 20 runs after warmup.
+        let t1 = std::time::Instant::now();
+        for _ in 0..20 {
+            e.infer_with_eig(name, &g.graph, g.eig.as_deref())?;
+        }
+        let steady = t1.elapsed() / 20;
+        println!(
+            "{name:10} compile {compile:>8.0?}  steady {steady:>9.0?}  golden {}",
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        assert!(ok, "{name} golden mismatch");
+    }
+    Ok(())
+}

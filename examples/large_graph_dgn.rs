@@ -1,0 +1,84 @@
+//! Large Graph Extension demo (paper §4.6, Fig. 8, Table 5).
+//!
+//! Two halves:
+//! 1. **Numeric path** — a scaled-down citation graph (preserving
+//!    Cora's density) through the real `dgn_large` PJRT artifact,
+//!    node-level predictions out.
+//! 2. **Full-scale analysis** — the cycle-level large-graph simulator
+//!    on the real Table 5 sizes, with the §4.6 ablations (prefetcher,
+//!    packed transfers) and the Fig. 8 CPU/GPU comparison.
+//!
+//! ```sh
+//! cargo run --release --example large_graph_dgn
+//! ```
+
+use gengnn::baselines::{cpu, gpu, GraphStats};
+use gengnn::datagen::citation::{dataset, dataset_scaled, CitationDataset};
+use gengnn::models::ModelConfig;
+use gengnn::report::table5;
+use gengnn::runtime::{Artifacts, Engine};
+use gengnn::sim::{LargeGraphSim, PipelineMode};
+use gengnn::util::stats::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    // ---- numeric path on the scaled graph ------------------------------
+    let artifacts = Artifacts::load(Artifacts::default_dir())?;
+    let meta = artifacts.model("dgn_large")?.clone();
+    let g_small = dataset_scaled(CitationDataset::Cora, 11, 300, meta.in_dim);
+    eprintln!(
+        "[numeric] scaled Cora: {} nodes, {} edges through dgn_large ...",
+        g_small.n,
+        g_small.num_edges()
+    );
+    let mut engine = Engine::load(&artifacts, &["dgn_large"])?;
+    let t0 = std::time::Instant::now();
+    let out = engine.infer("dgn_large", &g_small)?;
+    let live = g_small.n * meta.out_dim;
+    println!(
+        "[numeric] node-level logits for {} nodes in {} (first node: {:?})",
+        g_small.n,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        &out[..meta.out_dim]
+    );
+    anyhow::ensure!(out[live..].iter().all(|&v| v == 0.0), "mask check");
+
+    // ---- full-scale simulation + Fig. 8 --------------------------------
+    let model = ModelConfig::by_name("dgn_large")?;
+    println!("\n[simulated] DGN + Large Graph Extension at Table 5 sizes:");
+    println!(
+        "{:<10} {:>10} {:>11} {:>11} {:>11} {:>9} {:>9}",
+        "dataset", "GenGNN", "-prefetch", "-packing", "non-pipe", "CPU", "GPU"
+    );
+    for which in CitationDataset::all() {
+        let g = dataset(which, 3);
+        let base = LargeGraphSim::default();
+        let t = |sim: &LargeGraphSim| sim.simulate(&g, &model).secs;
+        let full = t(&base);
+        let no_pf = t(&LargeGraphSim {
+            prefetch: false,
+            ..base.clone()
+        });
+        let no_pk = t(&LargeGraphSim {
+            packed: false,
+            ..base.clone()
+        });
+        let non = t(&LargeGraphSim {
+            mode: PipelineMode::NonPipelined,
+            ..base.clone()
+        });
+        let s = GraphStats::of(&g);
+        println!(
+            "{:<10} {:>10} {:>11} {:>11} {:>11} {:>9} {:>9}",
+            which.name(),
+            fmt_secs(full),
+            fmt_secs(no_pf),
+            fmt_secs(no_pk),
+            fmt_secs(non),
+            fmt_secs(cpu::latency(&model, s)),
+            fmt_secs(gpu::latency(&model, s)),
+        );
+    }
+
+    println!("\n{}", table5::render());
+    Ok(())
+}

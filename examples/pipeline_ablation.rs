@@ -1,0 +1,58 @@
+//! Pipelining-strategy ablation (paper Fig. 4 / Fig. 9): sweep the
+//! Fig. 9(a) random-graph grid, the MolHIV benchmark, the virtual-node
+//! variant, and the VN *placement* ablation (§4.5: "as long as it is
+//! processed early enough").
+//!
+//! ```sh
+//! cargo run --release --example pipeline_ablation
+//! ```
+
+use gengnn::datagen::{molecular, MolConfig};
+use gengnn::models::ModelConfig;
+use gengnn::report::fig9;
+use gengnn::sim::{Accelerator, PipelineMode};
+
+fn main() -> anyhow::Result<()> {
+    // Fig. 9(a): the grid.
+    println!("{}", fig9::render_grid(&fig9::default_grid(150, 9)));
+
+    // Fig. 9(b)/(c): real molecular benchmark, with and without VN.
+    print!(
+        "{}",
+        fig9::render_mol("b: MolHIV, GIN", &fig9::molhiv(300, 9, false))
+    );
+    print!(
+        "{}",
+        fig9::render_mol("c: MolHIV, GIN+VN", &fig9::molhiv(300, 9, true))
+    );
+
+    // VN placement ablation: first vs last in the processing order.
+    let cfg = ModelConfig::by_name("gin_vn")?;
+    let graphs = molecular::dataset(17, 200, &MolConfig::molhiv());
+    let mut first = Accelerator::new(cfg.clone(), PipelineMode::Streaming);
+    first.vn_first = true;
+    let mut last = Accelerator::new(cfg, PipelineMode::Streaming);
+    last.vn_first = false;
+    let (mut c_first, mut c_last) = (0u64, 0u64);
+    for g in &graphs {
+        c_first += first.simulate(g).cycles;
+        c_last += last.simulate(g).cycles;
+    }
+    println!(
+        "\nVN placement (streaming): first-in-order {} cycles, last-in-order {} cycles ({:+.1}%)",
+        c_first,
+        c_last,
+        (c_last as f64 / c_first as f64 - 1.0) * 100.0
+    );
+
+    // FIFO depth sweep around the paper's depth-10 choice.
+    println!("\nFIFO depth sweep (GIN, streaming, 200 MolHIV graphs):");
+    let gin = ModelConfig::by_name("gin")?;
+    for depth in [1usize, 2, 4, 10, 32] {
+        let mut acc = Accelerator::new(gin.clone(), PipelineMode::Streaming);
+        acc.params.fifo_depth = depth;
+        let total: u64 = graphs.iter().map(|g| acc.simulate(g).cycles).sum();
+        println!("  depth {depth:>3}: {total} cycles");
+    }
+    Ok(())
+}

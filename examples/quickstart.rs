@@ -1,0 +1,51 @@
+//! Quickstart: the smallest end-to-end use of GenGNN.
+//!
+//! 1. load the AOT artifacts (built once by `make artifacts`),
+//! 2. run a raw COO molecular graph through a compiled model,
+//! 3. cross-check the cycle-level simulator's latency estimate.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use gengnn::prelude::*;
+use gengnn::runtime::Artifacts;
+use gengnn::util::stats::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    // A raw graph, exactly as a real-time producer would emit it:
+    // an unordered COO edge list plus node/edge features.
+    let mut rng = Rng::new(7);
+    let graph = molecular_graph(&mut rng, &MolConfig::molhiv());
+    println!(
+        "graph: {} atoms, {} directed bonds",
+        graph.n,
+        graph.num_edges()
+    );
+
+    // Layer 2/1: the AOT-compiled GIN artifact, served via PJRT.
+    let artifacts = Artifacts::load(Artifacts::default_dir())?;
+    let mut engine = Engine::load(&artifacts, &["gin"])?;
+    let t0 = std::time::Instant::now();
+    let out = engine.infer("gin", &graph)?;
+    println!(
+        "gin prediction = {:.6} ({} on {})",
+        out[0],
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        engine.platform()
+    );
+
+    // Layer 3 analysis: what would this cost on the paper's U50?
+    let cfg = ModelConfig::by_name("gin")?;
+    for mode in PipelineMode::all() {
+        let acc = Accelerator::new(cfg.clone(), mode);
+        let r = acc.simulate(&graph);
+        println!(
+            "simulated {:<14} {:>8} cycles  ({} @ 300 MHz)",
+            mode.as_str(),
+            r.cycles,
+            fmt_secs(r.secs)
+        );
+    }
+    Ok(())
+}

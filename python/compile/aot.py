@@ -1,0 +1,154 @@
+"""AOT entrypoint: lower every registered model to HLO text + goldens.
+
+Run once at build time (`make artifacts`); the rust binary is then fully
+self-contained. Interchange is HLO *text*, NOT `.serialize()` — the
+image's xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos, while the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs per model into artifacts/:
+  <name>.hlo.txt      the lowered computation (weights baked in)
+  <name>.golden.json  a seeded input graph + expected output, used by the
+                      rust integration tests to replicate the paper's
+                      "cross-check against PyTorch" end-to-end guarantee
+  manifest.json       input tensor order/shapes for the rust runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import graphgen, model as M
+
+GOLDEN_SEED = 1234
+WEIGHT_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # Default printing elides big literals as `constant({...})`, which
+    # would silently corrupt the baked-in weights on the rust side --
+    # print with full constants.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax >= 0.5 emits source_end_line/source_end_column metadata that
+    # the image's xla_extension 0.5.1 text parser rejects -- strip it.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def golden_graph(name: str, rng: np.random.RandomState):
+    spec = M.SPECS[name]
+    if name == "dgn_large":
+        g = graphgen.citation_graph(rng, n=300, avg_deg=4.5, node_f=spec.in_dim)
+    else:
+        g = graphgen.molecular_graph(rng, n=23, node_f=spec.in_dim)
+    return g
+
+
+def dense_inputs(name: str, g: graphgen.SparseGraph):
+    spec = M.SPECS[name]
+    d = graphgen.densify(
+        g, spec.n_max, edge_f=M.BOND_F if spec.needs_edge_attr else None
+    )
+    args = [d["x"], d["adj"]]
+    if spec.needs_edge_attr:
+        args.append(d["edge_attr"])
+    if spec.needs_eig:
+        args.append(graphgen.laplacian_eigvec(g, spec.n_max))
+    args.append(d["mask"])
+    return args
+
+
+def export_model(name: str, out_dir: str, seed: int) -> dict:
+    spec = M.SPECS[name]
+    fn = M.build(name, seed)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*M.input_specs(name))
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    # Golden: seeded graph through the same jitted function.
+    rng = np.random.RandomState(GOLDEN_SEED)
+    g = golden_graph(name, rng)
+    args = dense_inputs(name, g)
+    out = np.asarray(jax.jit(fn)(*[np.asarray(a) for a in args])[0])
+    golden = {
+        "model": name,
+        "n": int(g.n),
+        "edges": [[int(u), int(v)] for u, v in g.edges],
+        "node_feat": np.round(g.node_feat, 6).tolist(),
+        "edge_feat": (
+            np.round(g.edge_feat, 6).tolist() if g.edge_feat is not None
+            and spec.needs_edge_attr else None
+        ),
+        "eig": (
+            np.round(graphgen.laplacian_eigvec(g, spec.n_max), 7).tolist()
+            if spec.needs_eig else None
+        ),
+        "output": np.round(out, 6).reshape(-1).tolist(),
+        "output_shape": list(np.shape(out)) or [1],
+    }
+    with open(os.path.join(out_dir, f"{name}.golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    inputs = []
+    for s, label in zip(
+        M.input_specs(name),
+        ["x", "adj"]
+        + (["edge_attr"] if spec.needs_edge_attr else [])
+        + (["eig"] if spec.needs_eig else [])
+        + ["mask"],
+    ):
+        inputs.append({"name": label, "shape": list(s.shape)})
+    entry = {
+        "name": name,
+        "layers": spec.layers,
+        "dim": spec.dim,
+        "heads": spec.heads,
+        "n_max": spec.n_max,
+        "in_dim": spec.in_dim,
+        "out_dim": spec.out_dim,
+        "node_level": spec.node_level,
+        "inputs": inputs,
+        "artifact": f"{name}.hlo.txt",
+        "golden": f"{name}.golden.json",
+        "hlo_bytes": len(text),
+    }
+    print(
+        f"[aot] {name}: {len(text) / 1e6:.2f} MB HLO, "
+        f"{time.time() - t0:.1f}s"
+    )
+    return entry
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--models", nargs="*", default=sorted(M.SPECS.keys()))
+    p.add_argument("--seed", type=int, default=WEIGHT_SEED)
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "weight_seed": args.seed, "models": []}
+    for name in args.models:
+        manifest["models"].append(export_model(name, args.out_dir, args.seed))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['models'])} models to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

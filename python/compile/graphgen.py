@@ -1,0 +1,119 @@
+"""Synthetic graph generation + densification for golden files and tests.
+
+The sparse->dense convention here is the contract with the rust runtime
+(`runtime/literal.rs` replicates it bit-for-bit): undirected edges are
+mirrored into a symmetric 0/1 adjacency, features are zero-padded to the
+artifact's node capacity, and the mask marks real nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SparseGraph:
+    """An undirected graph in raw COO form — the paper's streaming input."""
+
+    n: int
+    edges: np.ndarray  # [m, 2] int, u < v, unique
+    node_feat: np.ndarray  # [n, F0] f32
+    edge_feat: np.ndarray | None = None  # [m, De] f32
+
+
+def molecular_graph(rng: np.random.RandomState, n: int | None = None,
+                    node_f: int = 9, edge_f: int = 3) -> SparseGraph:
+    """OGB-mol-like graph: a random tree plus a few extra ring bonds,
+    matching MolHIV statistics (~25.5 nodes, ~27.5 undirected edges,
+    integer-coded categorical features)."""
+    if n is None:
+        n = max(2, int(rng.normal(25.5, 6.0)))
+    edges = set()
+    for v in range(1, n):
+        u = int(rng.randint(0, v))
+        edges.add((u, v))
+    extra = max(0, int(round(n * 0.08)) + rng.randint(0, 3))
+    for _ in range(extra):
+        u, v = rng.randint(0, n), rng.randint(0, n)
+        if u == v:
+            continue
+        edges.add((min(u, v), max(u, v)))
+    e = np.asarray(sorted(edges), dtype=np.int64)
+    nf = rng.randint(0, 6, size=(n, node_f)).astype(np.float32)
+    ef = rng.randint(0, 4, size=(len(e), edge_f)).astype(np.float32)
+    return SparseGraph(n=n, edges=e, node_feat=nf, edge_feat=ef)
+
+
+def citation_graph(rng: np.random.RandomState, n: int, avg_deg: float,
+                   node_f: int) -> SparseGraph:
+    """Preferential-attachment citation-style graph (power-law degrees)."""
+    m_per = max(1, int(round(avg_deg / 2.0)))
+    targets = list(range(min(m_per, n)))
+    repeated: list[int] = list(targets)
+    edges = set()
+    for v in range(m_per, n):
+        chosen = set()
+        while len(chosen) < min(m_per, v):
+            if repeated and rng.rand() < 0.9:
+                u = repeated[rng.randint(0, len(repeated))]
+            else:
+                u = int(rng.randint(0, v))
+            if u != v:
+                chosen.add(u)
+        for u in chosen:
+            edges.add((min(u, v), max(u, v)))
+            repeated.extend([u, v])
+    e = np.asarray(sorted(edges), dtype=np.int64)
+    nf = (rng.rand(n, node_f) < 0.01).astype(np.float32)  # sparse bag-of-words
+    return SparseGraph(n=n, edges=e, node_feat=nf)
+
+
+def densify(g: SparseGraph, n_max: int, edge_f: int | None = None):
+    """Sparse -> padded dense tensors (the rust-runtime contract)."""
+    assert g.n <= n_max, (g.n, n_max)
+    f0 = g.node_feat.shape[1]
+    x = np.zeros((n_max, f0), np.float32)
+    x[: g.n] = g.node_feat
+    adj = np.zeros((n_max, n_max), np.float32)
+    for u, v in g.edges:
+        adj[u, v] = 1.0
+        adj[v, u] = 1.0
+    mask = np.zeros(n_max, np.float32)
+    mask[: g.n] = 1.0
+    out = {"x": x, "adj": adj, "mask": mask}
+    if edge_f is not None:
+        ea = np.zeros((n_max, n_max, edge_f), np.float32)
+        if g.edge_feat is not None:
+            for (u, v), f in zip(g.edges, g.edge_feat):
+                ea[u, v] = f
+                ea[v, u] = f
+        out["edge_attr"] = ea
+    return out
+
+
+def laplacian_eigvec(g: SparseGraph, n_max: int) -> np.ndarray:
+    """First non-trivial eigenvector of the symmetric normalized Laplacian
+    (the Fiedler-like direction DGN aggregates along), zero-padded.
+
+    Sign convention (shared with rust graph::spectral): the entry of
+    largest magnitude is positive.
+    """
+    n = g.n
+    a = np.zeros((n, n), np.float64)
+    for u, v in g.edges:
+        a[u, v] = 1.0
+        a[v, u] = 1.0
+    deg = a.sum(1)
+    dinv = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-12)), 0.0)
+    lap = np.eye(n) - (a * dinv[:, None]) * dinv[None, :]
+    vals, vecs = np.linalg.eigh(lap)
+    idx = np.argsort(vals)
+    k = idx[1] if n > 1 else idx[0]  # skip the trivial eigenvector
+    v1 = vecs[:, k]
+    if v1[np.argmax(np.abs(v1))] < 0:
+        v1 = -v1
+    out = np.zeros(n_max, np.float32)
+    out[:n] = v1.astype(np.float32)
+    return out

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for GenGNN (interpret-mode; see common.py)."""
+
+from .attention import gat_attention
+from .dgn import dgn_aggregate
+from .gather import gin_gather, sum_gather
+from .linear import linear
+from .pna import pna_aggregate
+
+__all__ = [
+    "gat_attention",
+    "dgn_aggregate",
+    "gin_gather",
+    "sum_gather",
+    "linear",
+    "pna_aggregate",
+]

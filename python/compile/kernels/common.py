@@ -1,0 +1,51 @@
+"""Shared Pallas tiling utilities for the GenGNN kernels.
+
+Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+FPGA message-passing PE performs irregular per-edge scatter over CSR
+stored in BRAM. On a tiled-memory matrix machine the same O(N) on-chip
+message buffer becomes a VMEM-resident node-tile, and the gather
+``sum_{j in N(i)} m_j`` becomes a blocked ``A_tile @ M_tile`` matmul where
+the adjacency tile is the routing matrix feeding the MXU. BlockSpec
+expresses the HBM<->VMEM schedule the paper expressed with AXI bursts and
+BRAM partitioning pragmas.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain HLO
+that both the python tests and the rust runtime execute identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default tile sizes, chosen for the TPU-oriented accounting in DESIGN.md:
+# node tiles of 64 and feature tiles of 128 keep the largest per-step VMEM
+# working set (the [Tn, Tn, Tf] edge-embedding block in gin_gather) at
+# 64*64*128*4 B = 2 MiB and every matmul block MXU-shaped (128 lanes).
+TILE_N = 64
+TILE_F = 128
+
+INTERPRET = True  # CPU PJRT: interpret-mode only (see module docstring).
+
+
+def pad_dim(n: int, t: int) -> int:
+    """Round ``n`` up to a multiple of the tile size ``t``."""
+    return ((n + t - 1) // t) * t
+
+
+def pad_axis(x: jax.Array, axis: int, t: int, value: float = 0.0) -> jax.Array:
+    """Zero-pad (or value-pad) ``axis`` of ``x`` up to a multiple of ``t``."""
+    n = x.shape[axis]
+    p = pad_dim(n, t) - n
+    if p == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, p)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pick_tile(n: int, pref: int) -> int:
+    """Tile size for a dimension of size ``n``: the preferred tile, or the
+    whole (padded) dimension when it is smaller than one tile."""
+    return min(pad_dim(n, 8), pref)

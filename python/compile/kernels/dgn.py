@@ -1,0 +1,101 @@
+"""DGN directional aggregation kernel (paper Section 4.4).
+
+DGN aggregates with (a) the degree-normalized mean D^-1 A X and (b) the
+absolute directional derivative along the first non-trivial Laplacian
+eigenvector, |B_dx X|. The two aggregations run concurrently in the paper
+("the aggregation components run concurrently"); here they share one
+blocked pass over the adjacency tiles, accumulating into a [N, 2, F]
+buffer (slot 0 = mean, slot 1 = signed derivative, finalized with the
+centering term and |.| on the last neighbor tile).
+
+B_dx is built by the host graph layer (L2 for the JAX path, rust
+``graph::spectral`` for the serving path) from the precomputed eigenvector
+— matching the paper, which takes the eigenvectors as a parameter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, TILE_F, TILE_N, pad_axis, pick_tile
+
+
+def _dgn_kernel(an_ref, b_ref, m_ref, brow_ref, mi_ref, o_ref, *, nk: int,
+                absolute: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    an = an_ref[...]
+    b = b_ref[...]
+    m = m_ref[...]
+    cur = o_ref[...]
+    mean = cur[:, 0] + jnp.dot(an, m, preferred_element_type=jnp.float32)
+    dx = cur[:, 1] + jnp.dot(b, m, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.stack([mean, dx], axis=1)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        fin = o_ref[...]
+        # Centered directional term: B m - diag(B 1) m. The derivative
+        # aggregation (B_dx) takes |.|; the smoothing aggregation (B_av,
+        # DGN paper eq. for directional smoothing) keeps the sign.
+        dx_fin = fin[:, 1] - brow_ref[...] * mi_ref[...]
+        if absolute:
+            dx_fin = jnp.abs(dx_fin)
+        o_ref[...] = jnp.stack([fin[:, 0], dx_fin], axis=1)
+
+
+def dgn_aggregate(
+    adj_norm: jax.Array,
+    b_dx: jax.Array,
+    b_row: jax.Array,
+    m: jax.Array,
+    *,
+    tn: int | None = None,
+    tf: int | None = None,
+    absolute: bool = True,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """Mean + directional aggregation.
+
+    adj_norm: [N, N] = D^-1 A,   b_dx: [N, N] directional matrix,
+    b_row:    [N]    = row sums of b_dx,   m: [N, F] node embeddings.
+    returns   [N, 2, F]: (mean aggregation, B m - diag(B 1) m), with
+    |.| applied to the second slot when ``absolute`` (the derivative
+    aggregation B_dx; pass False for the smoothing aggregation B_av).
+    """
+    n = adj_norm.shape[0]
+    f = m.shape[1]
+    assert adj_norm.shape == (n, n) and b_dx.shape == (n, n)
+    assert b_row.shape == (n,) and m.shape == (n, f)
+
+    tn = tn or pick_tile(n, TILE_N)  # single grid step at n_max=64 (§Perf)
+    tf = tf or pick_tile(f, TILE_F)
+
+    anp = pad_axis(pad_axis(adj_norm, 0, tn), 1, tn)
+    bp = pad_axis(pad_axis(b_dx, 0, tn), 1, tn)
+    mp = pad_axis(pad_axis(m, 0, tn), 1, tf)
+    browp = pad_axis(b_row, 0, tn).reshape(-1, 1)
+    np_, fp = anp.shape[0], mp.shape[1]
+    grid = (np_ // tn, fp // tf, np_ // tn)
+
+    out = pl.pallas_call(
+        functools.partial(_dgn_kernel, nk=grid[2], absolute=absolute),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tf), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tn, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tn, tf), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, 2, tf), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, 2, fp), jnp.float32),
+        interpret=interpret,
+    )(anp, bp, mp, browp, mp)
+    return out[:n, :, :f]

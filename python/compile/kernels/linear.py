@@ -1,0 +1,88 @@
+"""Tiled matmul + bias + activation Pallas kernel: the MLP PE.
+
+This is the hardware analog of the paper's customized MLP PE (Fig. 5):
+fully-partitioned local in/out buffers become VMEM tiles, and the
+ping-pong copy/compute overlap becomes the Pallas grid pipeline that
+prefetches block (i, j, k+1) while block (i, j, k) multiplies on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, TILE_F, TILE_N, pad_axis, pick_tile
+
+
+def _apply_act(r: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return r
+    if act == "relu":
+        return jnp.maximum(r, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(r > 0, r, 0.2 * r)
+    if act == "elu":
+        return jnp.where(r > 0, r, jnp.expm1(r))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: str = "none",
+    *,
+    tn: int | None = None,
+    tk: int | None = None,
+    tf: int | None = None,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """``act(x @ w + b)`` with an (i, j, k) blocked Pallas grid.
+
+    x: [N, K]   w: [K, F]   b: [F]   ->   [N, F] (f32)
+    """
+    n, k = x.shape
+    k2, f = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (f,), b.shape
+
+    tn = tn or pick_tile(n, TILE_N)
+    tk = tk or pick_tile(k, TILE_F)
+    tf = tf or pick_tile(f, TILE_F)
+
+    xp = pad_axis(pad_axis(x, 0, tn), 1, tk)
+    wp = pad_axis(pad_axis(w, 0, tk), 1, tf)
+    bp = pad_axis(b, 0, tf).reshape(1, -1)
+    np_, kp, fp = xp.shape[0], xp.shape[1], wp.shape[1]
+    grid = (np_ // tn, fp // tf, kp // tk)
+
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tf), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tf), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tf), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, fp), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:n, :f]

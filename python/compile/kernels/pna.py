@@ -1,0 +1,93 @@
+"""PNA multi-aggregator kernel (paper Section 4.3).
+
+The paper's PNA PE runs four aggregators (mean, std, max, min), each with
+its own result buffer, then applies the three degree scalers. Here one
+blocked kernel produces the four raw moments/extremes in a single pass
+over the adjacency tiles — sum and sum-of-squares accumulate via matmul
+(MXU), max/min via masked running reduction (VPU) — into a [N, 4, F]
+buffer, mirroring the paper's four per-aggregator buffers. Degree
+normalization + scalers are cheap elementwise work left to the L2 graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, TILE_F, TILE_N, pad_axis, pick_tile
+
+_NEG = -3.0e38
+_POS = 3.0e38
+
+
+def _pna_kernel(a_ref, m_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        tn, _, tf = o_ref.shape
+        init = jnp.stack(
+            [
+                jnp.zeros((tn, tf), jnp.float32),
+                jnp.zeros((tn, tf), jnp.float32),
+                jnp.full((tn, tf), _NEG, jnp.float32),
+                jnp.full((tn, tf), _POS, jnp.float32),
+            ],
+            axis=1,
+        )
+        o_ref[...] = init
+
+    a = a_ref[...]
+    m = m_ref[...]
+    cur = o_ref[...]
+    s = cur[:, 0] + jnp.dot(a, m, preferred_element_type=jnp.float32)
+    ss = cur[:, 1] + jnp.dot(a, m * m, preferred_element_type=jnp.float32)
+    present = a[:, :, None] > 0.0
+    mx = jnp.maximum(
+        cur[:, 2], jnp.max(jnp.where(present, m[None, :, :], _NEG), axis=1)
+    )
+    mn = jnp.minimum(
+        cur[:, 3], jnp.min(jnp.where(present, m[None, :, :], _POS), axis=1)
+    )
+    o_ref[...] = jnp.stack([s, ss, mx, mn], axis=1)
+
+
+def pna_aggregate(
+    adj: jax.Array,
+    m: jax.Array,
+    *,
+    tn: int | None = None,
+    tf: int | None = None,
+    interpret: bool = INTERPRET,
+) -> jax.Array:
+    """Four raw aggregates over in-neighbors defined by ``adj > 0``.
+
+    adj: [N, N]   m: [N, F]   ->   [N, 4, F] = (sum, sum_sq, max, min).
+    Isolated nodes get (0, 0, -BIG, +BIG); L2 masks them with degree.
+    """
+    n = adj.shape[0]
+    f = m.shape[1]
+    assert adj.shape == (n, n) and m.shape == (n, f)
+
+    tn = tn or pick_tile(n, 32)  # wider tiles regressed 1.7x (§Perf: masked
+    # max/min broadcasts grow quadratically in the node tile)
+    tf = tf or pick_tile(f, TILE_F)
+
+    ap = pad_axis(pad_axis(adj, 0, tn), 1, tn)
+    mp = pad_axis(pad_axis(m, 0, tn), 1, tf)
+    np_, fp = ap.shape[0], mp.shape[1]
+    grid = (np_ // tn, fp // tf, np_ // tn)
+
+    out = pl.pallas_call(
+        functools.partial(_pna_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tf), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, 4, tf), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, 4, fp), jnp.float32),
+        interpret=interpret,
+    )(ap, mp)
+    return out[:n, :, :f]

@@ -1,0 +1,369 @@
+"""Layer-2 JAX forward passes for the six GenGNN models (paper Table 2).
+
+Every model operates on *dense padded* graph tensors (see DESIGN.md
+S-Hardware-Adaptation) and calls the Layer-1 Pallas kernels for its
+hot-spots. Weights are seeded-random constants baked in at lowering time
+-- inference artifacts, matching the paper's fixed trained models.
+
+Input conventions (all float32, N = padded node capacity):
+  x         [N, F0]    raw node features (padded rows are zero)
+  adj       [N, N]     adj[i, j] = 1.0 iff undirected edge {i, j} exists
+                       (no self-loops; models add what they need)
+  edge_attr [N, N, De] raw bond features, GIN models only
+  eig       [N]        first non-trivial Laplacian eigenvector, DGN only
+  mask      [N]        1.0 for real nodes
+
+Outputs: graph-level models return [1]; node-level (dgn_large) [N, C].
+
+Hyperparameters follow paper Section 5.1 exactly: GCN/GIN/GIN-VN 5 layers
+d=100; PNA 4 layers d=80, head (40, 20, 1); DGN 4 layers d=100, head
+(50, 25, 1); GAT 5 layers, 4 heads x 16 features; global average pooling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    dgn_aggregate,
+    gat_attention,
+    gin_gather,
+    linear,
+    pna_aggregate,
+    sum_gather,
+)
+
+ATOM_F = 9  # OGB mol atom feature width
+BOND_F = 3  # OGB mol bond feature width
+DEFAULT_N = 64  # padded node capacity for the molecular artifacts
+LARGE_N = 512  # padded capacity for the scaled large-graph artifact
+LARGE_F = 500  # PubMed-like feature width (Table 5)
+LARGE_C = 3  # PubMed class count
+EPS_GIN = 0.1
+AVG_LOG_DEG = float(np.log(1.0 + 2.15))  # mean degree of molecular graphs
+
+
+# --------------------------------------------------------------- weights
+class WInit:
+    """Seeded Glorot-ish initializer producing baked-in jnp constants."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.RandomState(seed)
+
+    def dense(self, fin: int, fout: int):
+        s = 1.0 / np.sqrt(fin)
+        w = self.rng.uniform(-s, s, size=(fin, fout)).astype(np.float32)
+        b = self.rng.uniform(-s, s, size=(fout,)).astype(np.float32)
+        return jnp.asarray(w), jnp.asarray(b)
+
+    def vec(self, f: int):
+        s = 1.0 / np.sqrt(f)
+        return jnp.asarray(self.rng.uniform(-s, s, size=(f,)).astype(np.float32))
+
+
+def mlp(wi: WInit, dims: list[int]):
+    """Build an MLP (relu between layers, none after the last) over the
+    Pallas `linear` kernel -- the paper's reusable MLP PE (Section 4.1)."""
+    layers = [wi.dense(a, b) for a, b in zip(dims[:-1], dims[1:])]
+
+    def apply(h, final_act: str = "none"):
+        for li, (w, b) in enumerate(layers):
+            act = "relu" if li + 1 < len(layers) else final_act
+            h = linear(h, w, b, act)
+        return h
+
+    return apply
+
+
+# ----------------------------------------------------------- graph utils
+def masked_mean_pool(h: jax.Array, mask: jax.Array) -> jax.Array:
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(h * mask[:, None], axis=0, keepdims=True) / denom
+
+
+def gcn_norm_adj(adj: jax.Array, mask: jax.Array) -> jax.Array:
+    """Symmetric GCN normalization D^-1/2 (A + I) D^-1/2 over real nodes."""
+    a_hat = adj + jnp.diag(mask)
+    deg = jnp.sum(a_hat, axis=1)
+    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    return a_hat * inv_sqrt[:, None] * inv_sqrt[None, :]
+
+
+def dgn_matrices(adj: jax.Array, eig: jax.Array):
+    """Mean-normalized adjacency plus the directional-derivative matrix
+    B_dx built from the precomputed eigenvector (paper Section 4.4)."""
+    deg = jnp.sum(adj, axis=1)
+    adj_norm = adj / jnp.maximum(deg, 1.0)[:, None]
+    fm = adj * (eig[None, :] - eig[:, None])
+    b = fm / (jnp.sum(jnp.abs(fm), axis=1, keepdims=True) + 1e-8)
+    return adj_norm, b, jnp.sum(b, axis=1)
+
+
+# ---------------------------------------------------------------- models
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    layers: int
+    dim: int
+    needs_edge_attr: bool = False
+    needs_eig: bool = False
+    node_level: bool = False
+    n_max: int = DEFAULT_N
+    in_dim: int = ATOM_F
+    out_dim: int = 1
+    heads: int = 0  # GAT only
+
+
+def build_gcn(spec: ModelSpec, seed: int = 0) -> Callable:
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    convs = [wi.dense(spec.dim, spec.dim) for _ in range(spec.layers)]
+    head = wi.dense(spec.dim, spec.out_dim)
+
+    def fn(x, adj, mask):
+        a_norm = gcn_norm_adj(adj, mask)
+        h = linear(x, *embed, "relu")
+        for li, (w, b) in enumerate(convs):
+            # GCNConv: A_norm @ (h W); relu between layers.
+            hw = linear(h, w, b)
+            h = sum_gather(a_norm, hw)
+            if li + 1 < len(convs):
+                h = jnp.maximum(h, 0.0)
+        h = h * mask[:, None]
+        if spec.node_level:
+            return (linear(h, *head),)
+        return (linear(masked_mean_pool(h, mask), *head)[0],)
+
+    return fn
+
+
+def build_gin(spec: ModelSpec, seed: int = 0, virtual_node: bool = False):
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    bond = [wi.dense(BOND_F, spec.dim) for _ in range(spec.layers)]
+    mlps = [mlp(wi, [spec.dim, 2 * spec.dim, spec.dim]) for _ in range(spec.layers)]
+    head = wi.dense(spec.dim, spec.out_dim)
+    if virtual_node:
+        vn0 = wi.vec(spec.dim)
+        vn_mlps = [
+            mlp(wi, [spec.dim, 2 * spec.dim, spec.dim])
+            for _ in range(spec.layers - 1)
+        ]
+
+    def fn(x, adj, edge_attr, mask):
+        h = linear(x, *embed, "relu")
+        vn = vn0 if virtual_node else None
+        for li in range(spec.layers):
+            if virtual_node:
+                # Every node receives the virtual node's message (Fig. 6).
+                h = h + vn[None, :] * mask[:, None]
+            we, be = bond[li]
+            e = jnp.einsum("uvd,df->uvf", edge_attr, we) + be
+            m = gin_gather(adj, h, e)
+            h = mlps[li]((1.0 + EPS_GIN) * h + m, final_act="relu")
+            h = h * mask[:, None]
+            if virtual_node and li + 1 < spec.layers:
+                # Virtual node gathers from the whole graph and updates.
+                vn = vn_mlps[li](
+                    (vn + jnp.sum(h * mask[:, None], axis=0))[None, :],
+                    final_act="relu",
+                )[0]
+        return (linear(masked_mean_pool(h, mask), *head)[0],)
+
+    return fn
+
+
+def build_gat(spec: ModelSpec, seed: int = 0):
+    heads, fh = spec.heads, spec.dim // spec.heads
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    convs = []
+    for _ in range(spec.layers):
+        w, b = wi.dense(spec.dim, spec.dim)
+        a_src = wi.vec(spec.dim).reshape(heads, fh)
+        a_dst = wi.vec(spec.dim).reshape(heads, fh)
+        convs.append((w, b, a_src, a_dst))
+    head = wi.dense(spec.dim, spec.out_dim)
+
+    def fn(x, adj, mask):
+        adj_sl = jnp.maximum(adj, jnp.diag(mask))  # self-loops on real nodes
+        n = x.shape[0]
+        h = linear(x, *embed, "relu")
+        for li, (w, b, a_src, a_dst) in enumerate(convs):
+            z = linear(h, w, b).reshape(n, heads, fh)
+            sl = jnp.einsum("nhf,hf->nh", z, a_src)
+            dl = jnp.einsum("nhf,hf->nh", z, a_dst)
+            out = gat_attention(z, sl, dl, adj_sl)
+            h = out.reshape(n, spec.dim)
+            if li + 1 < len(convs):
+                h = jnp.where(h > 0, h, jnp.expm1(h))  # ELU
+            h = h * mask[:, None]
+        return (linear(masked_mean_pool(h, mask), *head)[0],)
+
+    return fn
+
+
+def build_pna(spec: ModelSpec, seed: int = 0):
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    convs = [wi.dense(12 * spec.dim, spec.dim) for _ in range(spec.layers)]
+    head = mlp(wi, [spec.dim, spec.dim // 2, spec.dim // 4, spec.out_dim])
+
+    def fn(x, adj, mask):
+        h = linear(x, *embed, "relu")
+        deg = jnp.sum(adj, axis=1)
+        deg1 = jnp.maximum(deg, 1.0)
+        has = (deg > 0).astype(jnp.float32)[:, None]
+        log_deg = jnp.log(deg + 1.0)
+        amp = (log_deg / AVG_LOG_DEG)[:, None]
+        att = jnp.where(
+            deg > 0, AVG_LOG_DEG / jnp.maximum(log_deg, 1e-6), 0.0
+        )[:, None]
+        for w, b in convs:
+            raw = pna_aggregate(adj, h)  # [N, 4, d]: sum, sumsq, max, min
+            mean = raw[:, 0] / deg1[:, None]
+            var = jnp.maximum(raw[:, 1] / deg1[:, None] - mean * mean, 0.0)
+            std = jnp.sqrt(var + 1e-8) * has
+            mx = raw[:, 2] * has
+            mn = raw[:, 3] * has
+            agg = jnp.concatenate([mean, std, mx, mn], axis=1)  # [N, 4d]
+            full = jnp.concatenate([agg, agg * amp, agg * att], axis=1)
+            # Paper: relu(linear(aggregation)) with a skip connection.
+            h = (linear(full, w, b, "relu") + h) * mask[:, None]
+        return (head(masked_mean_pool(h, mask))[0],)
+
+    return fn
+
+
+def build_sgc(spec: ModelSpec, seed: int = 0):
+    """Simplified GCN (Wu et al.) — the paper's Table 2 notes SGC falls
+    into GCN's SpMM family: K propagation hops collapse into one linear.
+    Extension model: plugs into the framework with zero Rust changes."""
+    wi = WInit(seed)
+    w = wi.dense(spec.in_dim, spec.dim)
+    head = wi.dense(spec.dim, spec.out_dim)
+
+    def fn(x, adj, mask):
+        a_norm = gcn_norm_adj(adj, mask)
+        h = x
+        for _ in range(spec.layers):  # A_norm^K x, pure propagation
+            h = sum_gather(a_norm, h)
+        h = linear(h, *w, "relu") * mask[:, None]
+        if spec.node_level:
+            return (linear(h, *head),)
+        return (linear(masked_mean_pool(h, mask), *head)[0],)
+
+    return fn
+
+
+def build_sage(spec: ModelSpec, seed: int = 0):
+    """GraphSage (mean aggregator) — Table 2 places GraphSage in GIN's
+    family (edge-wise materialization, no SpMM). Extension model."""
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    convs = [
+        (wi.dense(spec.dim, spec.dim), wi.dense(spec.dim, spec.dim))
+        for _ in range(spec.layers)
+    ]
+    head = wi.dense(spec.dim, spec.out_dim)
+
+    def fn(x, adj, mask):
+        deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
+        h = linear(x, *embed, "relu")
+        for li, (w_self, w_nbr) in enumerate(convs):
+            mean_nbr = sum_gather(adj, h) / deg[:, None]
+            h = linear(h, *w_self) + linear(mean_nbr, *w_nbr)
+            if li + 1 < len(convs):
+                h = jnp.maximum(h, 0.0)
+            # L2 normalization, as in the GraphSage paper.
+            h = h / jnp.maximum(
+                jnp.linalg.norm(h, axis=1, keepdims=True), 1e-6
+            )
+            h = h * mask[:, None]
+        return (linear(masked_mean_pool(h, mask), *head)[0],)
+
+    return fn
+
+
+def build_dgn(spec: ModelSpec, seed: int = 0):
+    wi = WInit(seed)
+    embed = wi.dense(spec.in_dim, spec.dim)
+    convs = [wi.dense(2 * spec.dim, spec.dim) for _ in range(spec.layers)]
+    head = mlp(wi, [spec.dim, spec.dim // 2, spec.dim // 4, spec.out_dim])
+
+    def fn(x, adj, eig, mask):
+        adj_norm, b_dx, b_row = dgn_matrices(adj, eig)
+        h = linear(x, *embed, "relu")
+        for w, b in convs:
+            y = dgn_aggregate(adj_norm, b_dx, b_row, h)  # [N, 2, d]
+            y = jnp.concatenate([y[:, 0], y[:, 1]], axis=1)
+            # MLP with skip connection, "similar to PNA" (Section 4.4).
+            h = (linear(y, w, b, "relu") + h) * mask[:, None]
+        if spec.node_level:
+            return (head(h) * mask[:, None],)
+        return (head(masked_mean_pool(h, mask))[0],)
+
+    return fn
+
+
+# -------------------------------------------------------------- registry
+SPECS: dict[str, ModelSpec] = {
+    "gcn": ModelSpec("gcn", layers=5, dim=100),
+    "gin": ModelSpec("gin", layers=5, dim=100, needs_edge_attr=True),
+    "gin_vn": ModelSpec("gin_vn", layers=5, dim=100, needs_edge_attr=True),
+    "gat": ModelSpec("gat", layers=5, dim=64, heads=4),
+    "pna": ModelSpec("pna", layers=4, dim=80),
+    "dgn": ModelSpec("dgn", layers=4, dim=100, needs_eig=True),
+    # Extension models (paper Table 2 "Representativeness" families):
+    # added with ~30 lines each and zero Rust-side changes.
+    "sgc": ModelSpec("sgc", layers=2, dim=100),
+    "sage": ModelSpec("sage", layers=3, dim=100),
+    "dgn_large": ModelSpec(
+        "dgn_large",
+        layers=4,
+        dim=100,
+        needs_eig=True,
+        node_level=True,
+        n_max=LARGE_N,
+        in_dim=LARGE_F,
+        out_dim=LARGE_C,
+    ),
+}
+
+_BUILDERS = {
+    "gcn": build_gcn,
+    "gin": lambda s, seed=0: build_gin(s, seed),
+    "gin_vn": lambda s, seed=0: build_gin(s, seed, virtual_node=True),
+    "gat": build_gat,
+    "pna": build_pna,
+    "dgn": build_dgn,
+    "dgn_large": build_dgn,
+    "sgc": build_sgc,
+    "sage": build_sage,
+}
+
+
+def build(name: str, seed: int = 0) -> Callable:
+    """Build the forward function for a registered model."""
+    return _BUILDERS[name](SPECS[name], seed)
+
+
+def input_specs(name: str) -> list[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs in call order (mirrors artifacts/manifest.json)."""
+    s = SPECS[name]
+    n = s.n_max
+    specs = [
+        jax.ShapeDtypeStruct((n, s.in_dim), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+    ]
+    if s.needs_edge_attr:
+        specs.append(jax.ShapeDtypeStruct((n, n, BOND_F), jnp.float32))
+    if s.needs_eig:
+        specs.append(jax.ShapeDtypeStruct((n,), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((n,), jnp.float32))
+    return specs

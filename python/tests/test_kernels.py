@@ -1,0 +1,268 @@
+"""Pallas kernel vs pure-jnp oracle: the core correctness signal.
+
+Hypothesis sweeps shapes and densities; every kernel must match its
+oracle to float32 tolerance under arbitrary (valid) tilings.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dgn_aggregate,
+    gat_attention,
+    gin_gather,
+    linear,
+    pna_aggregate,
+    sum_gather,
+)
+from compile.kernels import ref as R
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.RandomState(seed)
+
+
+def _randf(rng, *shape):
+    return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+
+def _rand_adj(rng, n, p=0.25, self_loops=False):
+    a = (rng.rand(n, n) < p).astype(np.float32)
+    if self_loops:
+        a = np.maximum(a, np.eye(n, dtype=np.float32))
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------- linear
+@settings(**SET)
+@given(
+    n=st.integers(1, 70),
+    k=st.integers(1, 40),
+    f=st.integers(1, 40),
+    act=st.sampled_from(["none", "relu", "leaky_relu", "elu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(n, k, f, act, seed):
+    rng = _rng(seed)
+    x, w, b = _randf(rng, n, k), _randf(rng, k, f), _randf(rng, f)
+    got = linear(x, w, b, act)
+    want = R.linear_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tn,tk,tf", [(8, 8, 8), (16, 32, 8), (64, 128, 128)])
+def test_linear_tiling_invariance(tn, tk, tf):
+    rng = _rng(7)
+    x, w, b = _randf(rng, 33, 50), _randf(rng, 50, 21), _randf(rng, 21)
+    got = linear(x, w, b, "relu", tn=tn, tk=tk, tf=tf)
+    np.testing.assert_allclose(got, R.linear_ref(x, w, b, "relu"), rtol=1e-4, atol=1e-4)
+
+
+def test_linear_bad_act_raises():
+    rng = _rng(0)
+    with pytest.raises(ValueError):
+        linear(_randf(rng, 4, 4), _randf(rng, 4, 4), _randf(rng, 4), "tanh")
+
+
+# ---------------------------------------------------------------- gathers
+@settings(**SET)
+@given(
+    n=st.integers(1, 70),
+    f=st.integers(1, 40),
+    p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sum_gather_matches_ref(n, f, p, seed):
+    rng = _rng(seed)
+    adj, m = _rand_adj(rng, n, p), _randf(rng, n, f)
+    np.testing.assert_allclose(
+        sum_gather(adj, m), R.sum_gather_ref(adj, m), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_sum_gather_weighted_adjacency():
+    # GCN uses a degree-normalized (non-binary) adjacency.
+    rng = _rng(3)
+    adj = jnp.asarray(rng.rand(30, 30).astype(np.float32))
+    m = _randf(rng, 30, 10)
+    np.testing.assert_allclose(
+        sum_gather(adj, m), R.sum_gather_ref(adj, m), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 40),
+    f=st.integers(1, 24),
+    p=st.floats(0.0, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gin_gather_matches_ref(n, f, p, seed):
+    rng = _rng(seed)
+    adj = _rand_adj(rng, n, p)
+    x, e = _randf(rng, n, f), _randf(rng, n, n, f)
+    np.testing.assert_allclose(
+        gin_gather(adj, x, e), R.gin_gather_ref(adj, x, e), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gin_gather_isolated_nodes_zero():
+    rng = _rng(11)
+    n, f = 12, 8
+    adj = jnp.zeros((n, n), jnp.float32)
+    out = gin_gather(adj, _randf(rng, n, f), _randf(rng, n, n, f))
+    np.testing.assert_allclose(out, jnp.zeros((n, f)), atol=0)
+
+
+# ---------------------------------------------------------------- PNA
+@settings(**SET)
+@given(
+    n=st.integers(1, 40),
+    f=st.integers(1, 24),
+    p=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pna_matches_ref(n, f, p, seed):
+    rng = _rng(seed)
+    adj, m = _rand_adj(rng, n, p), _randf(rng, n, f)
+    np.testing.assert_allclose(
+        pna_aggregate(adj, m), R.pna_aggregate_ref(adj, m), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_pna_single_neighbor_moments_agree():
+    # With exactly one neighbor, max == min == mean and variance == 0.
+    n, f = 6, 5
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 3] = 1.0
+    m = _randf(_rng(5), n, f)
+    out = np.asarray(pna_aggregate(jnp.asarray(adj), m))
+    np.testing.assert_allclose(out[0, 0], m[3], rtol=1e-5)  # sum
+    np.testing.assert_allclose(out[0, 2], m[3], rtol=1e-5)  # max
+    np.testing.assert_allclose(out[0, 3], m[3], rtol=1e-5)  # min
+    var = out[0, 1] - out[0, 0] ** 2  # E[x^2] - E[x]^2, deg=1
+    np.testing.assert_allclose(var, np.zeros(f), atol=1e-4)
+
+
+# ---------------------------------------------------------------- GAT
+@settings(**SET)
+@given(
+    n=st.integers(1, 40),
+    h=st.integers(1, 6),
+    fh=st.integers(1, 24),
+    p=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gat_matches_ref(n, h, fh, p, seed):
+    rng = _rng(seed)
+    adj = _rand_adj(rng, n, p, self_loops=True)
+    z = _randf(rng, n, h, fh)
+    sl, dl = _randf(rng, n, h), _randf(rng, n, h)
+    np.testing.assert_allclose(
+        gat_attention(z, sl, dl, adj),
+        R.gat_attention_ref(z, sl, dl, adj),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_gat_attention_rows_are_convex():
+    # Attention output must lie in the convex hull of neighbor features:
+    # with constant z per head the output equals that constant.
+    rng = _rng(9)
+    n, h, fh = 15, 2, 4
+    adj = _rand_adj(rng, n, 0.4, self_loops=True)
+    z = jnp.ones((n, h, fh), jnp.float32) * jnp.asarray([2.0, -3.0])[None, :, None]
+    out = gat_attention(z, _randf(rng, n, h), _randf(rng, n, h), adj)
+    np.testing.assert_allclose(out, z, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- DGN
+def _dgn_inputs(rng, n, f, p=0.3):
+    adj = np.asarray(_rand_adj(rng, n, p))
+    deg = np.maximum(adj.sum(1), 1.0)
+    an = jnp.asarray(adj / deg[:, None])
+    eig = rng.randn(n).astype(np.float32)
+    fm = adj * (eig[None, :] - eig[:, None])
+    b = jnp.asarray(fm / (np.abs(fm).sum(1, keepdims=True) + 1e-8))
+    return an, b, b.sum(1), _randf(rng, n, f)
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 40),
+    f=st.integers(1, 24),
+    p=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dgn_matches_ref(n, f, p, seed):
+    an, b, brow, m = _dgn_inputs(_rng(seed), n, f, p)
+    np.testing.assert_allclose(
+        dgn_aggregate(an, b, brow, m),
+        R.dgn_aggregate_ref(an, b, brow, m),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 30),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dgn_smoothing_aggregation_matches_ref(n, f, seed):
+    # B_av variant (paper §4.4: "trivially extensible ... including
+    # directional smoothing B_av"): signed centered aggregation.
+    an, b, brow, m = _dgn_inputs(_rng(seed), n, f)
+    np.testing.assert_allclose(
+        dgn_aggregate(an, b, brow, m, absolute=False),
+        R.dgn_aggregate_ref(an, b, brow, m, absolute=False),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_dgn_smooth_vs_derivative_differ_only_in_sign():
+    rng = _rng(17)
+    an, b, brow, m = _dgn_inputs(rng, 12, 5)
+    dx = np.asarray(dgn_aggregate(an, b, brow, m, absolute=True))
+    av = np.asarray(dgn_aggregate(an, b, brow, m, absolute=False))
+    np.testing.assert_allclose(dx[:, 0], av[:, 0], rtol=1e-6)  # mean equal
+    np.testing.assert_allclose(dx[:, 1], np.abs(av[:, 1]), rtol=1e-5, atol=1e-6)
+
+
+def test_dgn_constant_field_has_zero_derivative():
+    # A constant eigenvector has no direction: the dx slot must be ~0
+    # because B_dx itself is 0.
+    rng = _rng(13)
+    n, f = 10, 6
+    adj = np.asarray(_rand_adj(rng, n, 0.5))
+    an = jnp.asarray(adj / np.maximum(adj.sum(1, keepdims=True), 1.0))
+    eig = np.ones(n, np.float32)
+    fm = adj * (eig[None, :] - eig[:, None])
+    b = jnp.asarray(fm / (np.abs(fm).sum(1, keepdims=True) + 1e-8))
+    out = dgn_aggregate(an, b, b.sum(1), _randf(rng, n, f))
+    np.testing.assert_allclose(out[:, 1], np.zeros((n, f)), atol=1e-6)
+
+
+# ------------------------------------------------------- permutation inv.
+def test_aggregation_is_permutation_invariant():
+    """The paper's A(.) must be permutation invariant (Section 3.3): relabel
+    nodes, aggregate, unrelabel -- identical result."""
+    rng = _rng(21)
+    n, f = 18, 7
+    adj = np.asarray(_rand_adj(rng, n, 0.3))
+    m = np.asarray(_randf(rng, n, f))
+    perm = rng.permutation(n)
+    adj_p = adj[np.ix_(perm, perm)]
+    m_p = m[perm]
+    for fn in (sum_gather, pna_aggregate):
+        out = np.asarray(fn(jnp.asarray(adj), jnp.asarray(m)))
+        out_p = np.asarray(fn(jnp.asarray(adj_p), jnp.asarray(m_p)))
+        np.testing.assert_allclose(out_p, out[perm], rtol=1e-4, atol=1e-4)

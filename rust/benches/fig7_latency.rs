@@ -1,0 +1,60 @@
+//! Bench: regenerate Fig. 7 (molecular latency, 6 models x 3 devices)
+//! and time the per-component costs that make up the GenGNN bar —
+//! simulation, PJRT inference, and the baselines.
+//!
+//! Run: `cargo bench --bench fig7_latency`
+
+use gengnn::baselines::{cpu, gpu, GraphStats};
+use gengnn::datagen::{molecular, MolConfig};
+use gengnn::models::ModelConfig;
+use gengnn::report::fig7;
+use gengnn::runtime::{Artifacts, Engine};
+use gengnn::sim::{Accelerator, PipelineMode};
+use gengnn::util::bench::{bench, black_box, section};
+
+fn main() {
+    section("Fig. 7 regeneration (300 graphs per dataset)");
+    for ds in [fig7::MolDataset::MolHiv, fig7::MolDataset::MolPcba] {
+        let rows = fig7::compute(ds, 300, 1);
+        println!("{}", fig7::render(ds, &rows));
+    }
+
+    section("component timing: cycle simulation (per graph)");
+    let graphs = molecular::dataset(5, 200, &MolConfig::molhiv());
+    for cfg in ModelConfig::fig7_models() {
+        let acc = Accelerator::new(cfg.clone(), PipelineMode::Streaming);
+        bench(&format!("simulate/{}", cfg.name), 2, 20, || {
+            let mut acc_cycles = 0u64;
+            for g in &graphs {
+                acc_cycles += acc.simulate(g).cycles;
+            }
+            acc_cycles
+        });
+    }
+
+    section("component timing: baseline models (per 200 graphs)");
+    for cfg in ModelConfig::fig7_models() {
+        bench(&format!("baselines/{}", cfg.name), 2, 50, || {
+            let mut t = 0.0;
+            for g in &graphs {
+                let s = GraphStats::of(g);
+                t += cpu::latency(&cfg, s) + gpu::latency(&cfg, s);
+            }
+            t
+        });
+    }
+
+    section("component timing: PJRT inference (per graph, steady state)");
+    if let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) {
+        for name in ["gcn", "gat", "dgn"] {
+            let mut engine = Engine::load(&artifacts, &[name]).expect("compile");
+            let g = &graphs[0];
+            black_box(engine.infer(name, g).unwrap()); // warm
+            bench(&format!("pjrt_infer/{name}"), 3, 30, || {
+                engine.infer(name, g).unwrap()
+            });
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT timing)");
+    }
+}

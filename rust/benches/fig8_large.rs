@@ -1,0 +1,61 @@
+//! Bench: regenerate Fig. 8 (large-graph DGN) plus the §4.6 ablation
+//! table (prefetcher / packed transfers / pipelining) and time the
+//! large-graph simulator itself.
+//!
+//! Run: `cargo bench --bench fig8_large`
+
+use gengnn::datagen::citation::{dataset, CitationDataset};
+use gengnn::models::ModelConfig;
+use gengnn::report::fig8;
+use gengnn::sim::{LargeGraphSim, PipelineMode};
+use gengnn::util::bench::{bench, section};
+use gengnn::util::stats::fmt_secs;
+
+fn main() {
+    section("Fig. 8 regeneration");
+    println!("{}", fig8::render(&fig8::compute(2)));
+
+    section("§4.6 ablations (simulated seconds per inference)");
+    let model = ModelConfig::by_name("dgn_large").unwrap();
+    println!(
+        "{:<10} {:>11} {:>11} {:>11} {:>11}",
+        "dataset", "full", "-prefetch", "-packing", "non-pipe"
+    );
+    for which in CitationDataset::all() {
+        let g = dataset(which, 3);
+        let t = |sim: LargeGraphSim| sim.simulate(&g, &model).secs;
+        println!(
+            "{:<10} {:>11} {:>11} {:>11} {:>11}",
+            which.name(),
+            fmt_secs(t(LargeGraphSim::default())),
+            fmt_secs(t(LargeGraphSim {
+                prefetch: false,
+                ..LargeGraphSim::default()
+            })),
+            fmt_secs(t(LargeGraphSim {
+                packed: false,
+                ..LargeGraphSim::default()
+            })),
+            fmt_secs(t(LargeGraphSim {
+                mode: PipelineMode::NonPipelined,
+                ..LargeGraphSim::default()
+            })),
+        );
+    }
+
+    section("simulator wall time");
+    for which in CitationDataset::all() {
+        let g = dataset(which, 3);
+        let sim = LargeGraphSim::default();
+        bench(&format!("large_sim/{}", which.name()), 1, 10, || {
+            sim.simulate(&g, &model).cycles
+        });
+    }
+
+    section("dataset generation wall time");
+    for which in CitationDataset::all() {
+        bench(&format!("citation_gen/{}", which.name()), 1, 5, || {
+            dataset(which, 9).num_edges()
+        });
+    }
+}

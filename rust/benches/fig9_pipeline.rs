@@ -1,0 +1,61 @@
+//! Bench: regenerate Fig. 9 (pipelining ablation grid + MolHIV + VN)
+//! and time the three schedulers on identical inputs.
+//!
+//! Run: `cargo bench --bench fig9_pipeline`
+
+use gengnn::datagen::{molecular, random, MolConfig, RandomGraphConfig};
+use gengnn::graph::Csr;
+use gengnn::models::ModelConfig;
+use gengnn::report::fig9;
+use gengnn::sim::cycles::CostParams;
+use gengnn::sim::event::streaming_via_events;
+use gengnn::sim::mp_pe::mp_profile;
+use gengnn::sim::ne_pe::ne_cycles;
+use gengnn::sim::pipeline::{schedule, PipelineMode};
+use gengnn::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 9(a) grid (150 graphs per cell)");
+    println!("{}", fig9::render_grid(&fig9::default_grid(150, 3)));
+
+    section("Fig. 9(b)/(c) MolHIV");
+    print!(
+        "{}",
+        fig9::render_mol("b: MolHIV, GIN", &fig9::molhiv(300, 3, false))
+    );
+    print!(
+        "{}",
+        fig9::render_mol("c: MolHIV, GIN+VN", &fig9::molhiv(300, 3, true))
+    );
+    println!();
+
+    section("scheduler micro-costs (1,000-node degree profile)");
+    let p = CostParams::default();
+    let gin = ModelConfig::by_name("gin").unwrap();
+    let g = random::random_graph(
+        &mut gengnn::util::rng::Rng::new(5),
+        &RandomGraphConfig {
+            nodes: 1000,
+            avg_degree: 4.0,
+            high_degree_fraction: 0.05,
+            ..RandomGraphConfig::default()
+        },
+    );
+    let csr = Csr::from_coo(&g);
+    let ne = vec![ne_cycles(&p, &gin); g.n];
+    let mp = mp_profile(&p, &gin, &csr.degree);
+    for mode in PipelineMode::all() {
+        bench(&format!("schedule/{}", mode.as_str()), 10, 200, || {
+            schedule(mode, &ne, &mp, p.fifo_depth).cycles
+        });
+    }
+    bench("schedule/streaming-via-events (reference)", 10, 200, || {
+        streaming_via_events(&ne, &mp, p.fifo_depth)
+    });
+
+    section("population sweep wall time (per 100-graph population)");
+    let graphs = molecular::dataset(7, 100, &MolConfig::molhiv());
+    bench("population_speedups/gin", 1, 10, || {
+        fig9::population_speedups(&gin, &graphs).streaming_over_non
+    });
+}

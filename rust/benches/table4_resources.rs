@@ -1,0 +1,50 @@
+//! Bench: regenerate Tables 4 and 5 and compare each cell against the
+//! paper's reported numbers, printing the per-cell ratio.
+//!
+//! Run: `cargo bench --bench table4_resources`
+
+use gengnn::models::ModelConfig;
+use gengnn::report::{table4, table5};
+use gengnn::resources::hls::estimate;
+use gengnn::util::bench::section;
+
+/// Paper Table 4 rows (DSP, LUT, FF, BRAM, URAM).
+const PAPER: [(&str, [u64; 5]); 6] = [
+    ("gin", [817, 66_326, 81_144, 365, 10]),
+    ("gin_vn", [817, 68_204, 82_498, 367, 10]),
+    ("gcn", [424, 173_899, 375_882, 203, 0]),
+    ("pna", [50, 40_951, 34_533, 233, 144]),
+    ("gat", [341, 80_545, 82_829, 484, 0]),
+    ("dgn", [1042, 73_735, 93_579, 523, 0]),
+];
+
+fn main() {
+    section("Table 4 regeneration");
+    println!("{}", table4::render());
+
+    section("per-cell comparison vs paper (ours/paper)");
+    println!(
+        "{:<8} {:>7} {:>7} {:>7} {:>7} {:>7}",
+        "model", "DSP", "LUT", "FF", "BRAM", "URAM"
+    );
+    let mut worst: f64 = 1.0;
+    for (name, row) in PAPER {
+        let e = estimate(&ModelConfig::by_name(name).unwrap()).unwrap();
+        let got = [e.total.dsp, e.total.lut, e.total.ff, e.total.bram, e.total.uram];
+        let mut cells = Vec::new();
+        for (g, p) in got.iter().zip(&row) {
+            if *p == 0 {
+                cells.push("  exact".to_string());
+            } else {
+                let r = *g as f64 / *p as f64;
+                worst = worst.max(r.max(1.0 / r));
+                cells.push(format!("{r:>7.3}"));
+            }
+        }
+        println!("{:<8} {}", name, cells.join(" "));
+    }
+    println!("\nworst per-cell deviation: {:.1}%", (worst - 1.0) * 100.0);
+
+    section("Table 5 regeneration");
+    println!("{}", table5::render());
+}

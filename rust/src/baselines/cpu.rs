@@ -1,0 +1,80 @@
+//! Xeon Gold 6226R (CPU) baseline model.
+//!
+//! Batch-1 PyG inference on a server CPU is dominated by per-operator
+//! framework overhead (~10 µs per dispatched op: Python glue, dispatch,
+//! thread-pool wake-ups), with the actual arithmetic nearly free at
+//! molecular scale but significant on the Table 5 citation graphs.
+
+use crate::models::ModelConfig;
+
+use super::device::{Device, GraphStats};
+
+/// The calibrated CPU device model.
+pub fn device() -> Device {
+    Device {
+        name: "CPU (Xeon Gold 6226R)",
+        base: 6.0e-5,
+        per_op: 1.0e-5,
+        // Effective MKL dense rate (16 cores, AVX-512, ~30% of peak).
+        flops_rate: 3.0e11,
+        embed_flops_rate: 3.0e11, // MKL dense, same silicon either way
+        // Irregular gather: cache-resident vs L3-spilled.
+        gather_fits_bw: 3.0e10,
+        gather_spills_bw: 6.0e9,
+        // 6226R has 22 MB L3; the live set shares it with weights.
+        llc_bytes: 8.0e6,
+        // In-memory: no staging.
+        staging_bw: f64::INFINITY,
+    }
+}
+
+/// Predicted CPU latency for one graph (seconds).
+pub fn latency(m: &ModelConfig, s: GraphStats) -> f64 {
+    device().latency(m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelConfig;
+
+    fn mol_stats() -> GraphStats {
+        GraphStats {
+            n: 25,
+            e: 54,
+            f_in: 9,
+        }
+    }
+
+    #[test]
+    fn molecular_latency_in_sub_millisecond_range() {
+        // PyG batch-1 molecular inference: hundreds of microseconds to
+        // a few ms.
+        for name in ["gcn", "gin", "gat", "pna", "dgn"] {
+            let t = latency(&ModelConfig::by_name(name).unwrap(), mol_stats());
+            assert!((1e-4..1e-2).contains(&t), "{name}: {t:.2e}");
+        }
+    }
+
+    #[test]
+    fn dgn_is_slowest_on_cpu() {
+        let t = |n: &str| latency(&ModelConfig::by_name(n).unwrap(), mol_stats());
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna"] {
+            assert!(t("dgn") > t(name), "dgn vs {name}");
+        }
+    }
+
+    #[test]
+    fn large_graph_flops_matter() {
+        // On a PubMed-scale graph the arithmetic term dominates ops.
+        let m = ModelConfig::by_name("dgn_large").unwrap();
+        let s = GraphStats {
+            n: 19717,
+            e: 88648,
+            f_in: 500,
+        };
+        let t = latency(&m, s);
+        let ops_only = device().base + super::super::op_count(&m) as f64 * device().per_op;
+        assert!(t > 3.0 * ops_only, "flops term should dominate: {t:.2e}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Shared device-model machinery for the CPU/GPU baselines.
+
+use crate::graph::CooGraph;
+use crate::models::{GnnKind, ModelConfig};
+
+use super::calib::op_count;
+
+/// Workload statistics a baseline needs about one graph.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphStats {
+    pub n: usize,
+    /// Directed edge count.
+    pub e: usize,
+    pub f_in: usize,
+}
+
+impl GraphStats {
+    pub fn of(g: &CooGraph) -> GraphStats {
+        GraphStats {
+            n: g.n,
+            e: g.num_edges(),
+            f_in: g.f_node,
+        }
+    }
+}
+
+/// An analytic device latency model:
+///
+/// ```text
+/// t = base + ops·per_op + flops/flops_rate
+///     + gather_bytes/gather_bw(working set vs LLC)
+///     + staging_bytes/staging_bw          (host→device, GPUs only)
+/// ```
+///
+/// The LLC gate models the cliff both devices hit when the layer-to-
+/// layer embedding state stops fitting in cache: the irregular
+/// scatter/gather of message passing degrades from cache-resident to
+/// memory-bound (PubMed's 19.7k nodes vs Cora's 2.7k — the mechanism
+/// behind the paper's Fig. 8 crossover).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    /// Fixed per-inference overhead (data staging glue, Python).
+    pub base: f64,
+    /// Per-operator dispatch cost (framework + launch for GPUs).
+    pub per_op: f64,
+    /// Effective rate for the per-layer conv arithmetic (unfused,
+    /// gather-interleaved kernels), FLOP/s.
+    pub flops_rate: f64,
+    /// Effective rate for the big dense embed/head matmuls — on GPUs
+    /// these hit the MMA units and run near peak, unlike the convs.
+    pub embed_flops_rate: f64,
+    /// Irregular-gather bandwidth while the working set fits the LLC.
+    pub gather_fits_bw: f64,
+    /// ... and once it spills.
+    pub gather_spills_bw: f64,
+    /// LLC capacity used for the spill decision, bytes.
+    pub llc_bytes: f64,
+    /// Host→device staging bandwidth (f64::INFINITY for in-memory CPUs).
+    pub staging_bw: f64,
+}
+
+impl Device {
+    /// Predicted batch-1 latency in seconds.
+    pub fn latency(&self, m: &ModelConfig, s: GraphStats) -> f64 {
+        let ops = op_count(m) as f64;
+        let gather_bw = if working_set_bytes(m, s) <= self.llc_bytes {
+            self.gather_fits_bw
+        } else {
+            self.gather_spills_bw
+        };
+        self.base
+            + ops * self.per_op
+            + layer_flops(m, s) / self.flops_rate
+            + embed_head_flops(m, s) / self.embed_flops_rate
+            + gather_bytes(m, s) / gather_bw
+            + staging_bytes(s) / self.staging_bw
+    }
+}
+
+/// Layer-to-layer embedding state churned by message passing: the two
+/// live buffers of N x d floats (node embeddings + partial aggregates).
+pub fn working_set_bytes(m: &ModelConfig, s: GraphStats) -> f64 {
+    2.0 * s.n as f64 * m.dim as f64 * 4.0
+}
+
+/// Host→device staging: raw features + edge list.
+pub fn staging_bytes(s: GraphStats) -> f64 {
+    s.n as f64 * s.f_in as f64 * 4.0 + s.e as f64 * 8.0
+}
+
+/// Per-layer conv FLOPs of one inference (2 x MACs).
+pub fn layer_flops(m: &ModelConfig, s: GraphStats) -> f64 {
+    let n = s.n as f64;
+    let d = m.dim as f64;
+    let per_layer = match m.kind {
+        GnnKind::Gcn => n * d * d,
+        GnnKind::Gin => n * (d * 2.0 * d + 2.0 * d * d) + s.e as f64 * m.edge_dim as f64 * d,
+        GnnKind::GinVn => n * (d * 2.0 * d + 2.0 * d * d) * 1.5 + s.e as f64 * m.edge_dim as f64 * d,
+        GnnKind::Gat => n * d * d + s.e as f64 * d * 2.0,
+        GnnKind::Pna => n * 12.0 * d * d,
+        GnnKind::Dgn => n * 2.0 * d * d,
+    };
+    2.0 * m.layers as f64 * per_layer
+}
+
+/// Embed + prediction-head FLOPs (large dense matmuls).
+pub fn embed_head_flops(m: &ModelConfig, s: GraphStats) -> f64 {
+    let n = s.n as f64;
+    let d = m.dim as f64;
+    let embed = n * s.f_in as f64 * d;
+    let head: f64 = {
+        let mut dims = vec![m.dim];
+        dims.extend(&m.head_dims);
+        let per: usize = dims.windows(2).map(|w| w[0] * w[1]).sum();
+        if m.node_level {
+            n * per as f64
+        } else {
+            per as f64
+        }
+    };
+    2.0 * (embed + head)
+}
+
+/// Total dense FLOPs of one inference.
+pub fn flop_count(m: &ModelConfig, s: GraphStats) -> f64 {
+    layer_flops(m, s) + embed_head_flops(m, s)
+}
+
+/// Bytes moved by irregular neighbor gathers (scatter/gather traffic).
+pub fn gather_bytes(m: &ModelConfig, s: GraphStats) -> f64 {
+    let streams = match m.kind {
+        GnnKind::Pna => 4.0,  // four aggregators
+        GnnKind::Dgn => 2.0,  // mean + directional
+        _ => 1.0,
+    };
+    m.layers as f64 * streams * s.e as f64 * m.dim as f64 * 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelConfig;
+
+    fn stats() -> GraphStats {
+        GraphStats {
+            n: 25,
+            e: 54,
+            f_in: 9,
+        }
+    }
+
+    fn toy() -> Device {
+        Device {
+            name: "toy",
+            base: 1e-4,
+            per_op: 1e-5,
+            flops_rate: 1e9,
+            embed_flops_rate: 1e9,
+            gather_fits_bw: 1e9,
+            gather_spills_bw: 1e8,
+            llc_bytes: 1e6,
+            staging_bw: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn latency_monotone_in_each_term() {
+        let m = ModelConfig::by_name("gin").unwrap();
+        let d = toy();
+        let faster = Device {
+            per_op: 5e-6,
+            ..d
+        };
+        assert!(faster.latency(&m, stats()) < d.latency(&m, stats()));
+    }
+
+    #[test]
+    fn llc_spill_slows_gather() {
+        let m = ModelConfig::by_name("dgn_large").unwrap();
+        let small = stats();
+        let big = GraphStats {
+            n: 50_000,
+            e: 200_000,
+            f_in: 9,
+        };
+        assert!(working_set_bytes(&m, small) < toy().llc_bytes);
+        assert!(working_set_bytes(&m, big) > toy().llc_bytes);
+        // Per-byte gather cost is 10x once spilled.
+        let t_big = toy().latency(&m, big);
+        let no_spill = Device {
+            gather_spills_bw: 1e9,
+            ..toy()
+        }
+        .latency(&m, big);
+        assert!(t_big > no_spill);
+    }
+
+    #[test]
+    fn flops_scale_with_nodes() {
+        let m = ModelConfig::by_name("gcn").unwrap();
+        let s1 = stats();
+        let s2 = GraphStats { n: 50, ..s1 };
+        assert!(flop_count(&m, s2) > flop_count(&m, s1) * 1.5);
+    }
+
+    #[test]
+    fn pna_gathers_four_streams() {
+        let pna = ModelConfig::by_name("pna").unwrap();
+        let gcn = ModelConfig::by_name("gcn").unwrap();
+        // Per layer per edge, PNA moves 4x the streams of GCN.
+        let r = gather_bytes(&pna, stats()) / pna.layers as f64
+            / (gather_bytes(&gcn, stats()) / gcn.layers as f64);
+        assert!((r - 4.0 * pna.dim as f64 / gcn.dim as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staging_counts_features_and_edges() {
+        let s = stats();
+        assert_eq!(staging_bytes(s), 25.0 * 9.0 * 4.0 + 54.0 * 8.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! RTX A6000 (GPU) baseline model.
+//!
+//! At batch size 1 every framework op becomes a kernel launch (plus
+//! synchronization and host-device staging), so the GPU is *slower*
+//! than the CPU on molecular graphs — exactly the paper's Fig. 7
+//! ordering (GPU speedups exceed CPU speedups for every model). On the
+//! large citation graphs the massive arithmetic/bandwidth advantage
+//! takes over, which is why the paper's Fig. 8 shows the GPU winning on
+//! PubMed.
+
+use crate::models::ModelConfig;
+
+use super::device::{Device, GraphStats};
+
+/// The calibrated GPU device model.
+pub fn device() -> Device {
+    Device {
+        name: "GPU (RTX A6000)",
+        base: 1.2e-4, // per-inference sync + allocator overhead
+        per_op: 1.9e-5, // kernel launch + dispatch at batch 1
+        // Effective rate for the small unfused conv kernels PyG emits
+        // (far below the card's 38 TFLOP peak)...
+        flops_rate: 4.0e11,
+        // ...while the big dense embed/head matmuls hit the MMA units.
+        embed_flops_rate: 5.0e12,
+        // Irregular gather: launch-bound scatter kernels, HBM round
+        // trips — the term that keeps PyG GNN convs off-peak.
+        gather_fits_bw: 1.0e10,
+        gather_spills_bw: 1.0e10,
+        // A6000 L2 is 6 MB.
+        llc_bytes: 6.0e6,
+        // PCIe gen4 effective host->device bandwidth (pinned).
+        staging_bw: 2.5e10,
+    }
+}
+
+/// Predicted GPU latency for one graph (seconds).
+pub fn latency(m: &ModelConfig, s: GraphStats) -> f64 {
+    device().latency(m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cpu;
+    use crate::models::ModelConfig;
+
+    fn mol_stats() -> GraphStats {
+        GraphStats {
+            n: 25,
+            e: 54,
+            f_in: 9,
+        }
+    }
+
+    #[test]
+    fn gpu_slower_than_cpu_on_molecules() {
+        // Batch-1 launch overhead: the paper's GPU bars sit above the
+        // CPU bars on Fig. 7 for every model.
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "dgn"] {
+            let m = ModelConfig::by_name(name).unwrap();
+            assert!(
+                latency(&m, mol_stats()) > cpu::latency(&m, mol_stats()),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_pubmed_scale() {
+        // Fig. 8: on PubMed the GPU overtakes (1.04x faster than FPGA,
+        // and well ahead of the CPU).
+        let m = ModelConfig::by_name("dgn_large").unwrap();
+        let s = GraphStats {
+            n: 19717,
+            e: 88648,
+            f_in: 500,
+        };
+        assert!(latency(&m, s) < cpu::latency(&m, s));
+    }
+
+    #[test]
+    fn dgn_is_slowest_on_gpu() {
+        let t = |n: &str| latency(&ModelConfig::by_name(n).unwrap(), mol_stats());
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna"] {
+            assert!(t("dgn") > t(name), "dgn vs {name}");
+        }
+    }
+}

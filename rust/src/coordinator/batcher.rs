@@ -1,0 +1,226 @@
+//! Dispatch batcher: groups consecutive same-model requests so the
+//! executor amortizes model-switch overhead (packing-buffer locality,
+//! instruction cache) while preserving arrival order within a model.
+//!
+//! The artifacts are batch-1 by construction (the paper's real-time
+//! setting), so this is *dispatch* batching, not tensor batching: a
+//! batch is a run of requests the executor services back to back
+//! without consulting the scheduler in between.
+
+use std::collections::VecDeque;
+
+use super::request::Prepared;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests dispatched per batch.
+    pub max_batch: usize,
+    /// Prefer continuing the current model while its queue is non-empty
+    /// (sticky) vs strict round-robin across models.
+    pub sticky: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            sticky: true,
+        }
+    }
+}
+
+/// Per-model FIFO queues + the batching decision.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queues: Vec<(String, VecDeque<Prepared>)>,
+    /// Index of the model served by the previous batch.
+    cursor: usize,
+}
+
+impl Batcher {
+    pub fn new(models: &[&str], policy: BatchPolicy) -> Batcher {
+        Batcher {
+            policy,
+            queues: models
+                .iter()
+                .map(|m| (m.to_string(), VecDeque::new()))
+                .collect(),
+            cursor: 0,
+        }
+    }
+
+    pub fn push(&mut self, p: Prepared) {
+        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == p.req.model) {
+            q.push_back(p);
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Pop the next batch: a run of up to `max_batch` requests for one
+    /// model. Sticky mode drains the current model first (switch only
+    /// when empty); round-robin advances every batch.
+    pub fn next_batch(&mut self) -> Vec<Prepared> {
+        let k = self.queues.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        // Choose the starting queue.
+        let start = self.cursor;
+        let mut chosen = None;
+        for off in 0..k {
+            let idx = (start + off) % k;
+            if !self.queues[idx].1.is_empty() {
+                chosen = Some(idx);
+                break;
+            }
+        }
+        let Some(idx) = chosen else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        while out.len() < self.policy.max_batch {
+            match self.queues[idx].1.pop_front() {
+                Some(p) => out.push(p),
+                None => break,
+            }
+        }
+        self.cursor = if self.policy.sticky && !self.queues[idx].1.is_empty() {
+            idx
+        } else {
+            (idx + 1) % k
+        };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::request::Request;
+    use std::time::Instant;
+
+    fn prepared(id: u64, model: &str) -> Prepared {
+        let g = crate::graph::CooGraph {
+            n: 1,
+            edges: vec![],
+            node_feat: vec![0.0; 9],
+            f_node: 9,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        Prepared {
+            req: Request::new(id, model, g),
+            prep_done: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batches_runs_of_one_model() {
+        let mut b = Batcher::new(&["gcn", "gat"], BatchPolicy::default());
+        for i in 0..5 {
+            b.push(prepared(i, "gcn"));
+        }
+        b.push(prepared(10, "gat"));
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 5);
+        assert!(batch.iter().all(|p| p.req.model == "gcn"));
+        let batch2 = b.next_batch();
+        assert_eq!(batch2.len(), 1);
+        assert_eq!(batch2[0].req.model, "gat");
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(
+            &["gcn"],
+            BatchPolicy {
+                max_batch: 3,
+                sticky: true,
+            },
+        );
+        for i in 0..7 {
+            b.push(prepared(i, "gcn"));
+        }
+        assert_eq!(b.next_batch().len(), 3);
+        assert_eq!(b.next_batch().len(), 3);
+        assert_eq!(b.next_batch().len(), 1);
+        assert!(b.next_batch().is_empty());
+    }
+
+    #[test]
+    fn preserves_fifo_within_model() {
+        let mut b = Batcher::new(&["gin"], BatchPolicy::default());
+        for i in 0..4 {
+            b.push(prepared(i, "gin"));
+        }
+        let ids: Vec<u64> = b.next_batch().iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut b = Batcher::new(
+            &["a", "b"],
+            BatchPolicy {
+                max_batch: 1,
+                sticky: false,
+            },
+        );
+        // Note: models "a"/"b" won't match pushes for other names.
+        b.push(prepared(0, "a"));
+        b.push(prepared(1, "a"));
+        b.push(prepared(2, "b"));
+        let m1 = b.next_batch()[0].req.model.clone();
+        let m2 = b.next_batch()[0].req.model.clone();
+        assert_ne!(m1, m2, "round-robin must alternate models");
+    }
+
+    #[test]
+    fn unknown_model_push_is_dropped() {
+        let mut b = Batcher::new(&["gcn"], BatchPolicy::default());
+        b.push(prepared(0, "nope"));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        use crate::util::proptest::forall;
+        forall("batcher-conservation", 100, 0xBA7C, |rng| {
+            let models = ["a", "b", "c"];
+            let mut b = Batcher::new(
+                &models,
+                BatchPolicy {
+                    max_batch: rng.range(1, 6),
+                    sticky: rng.chance(0.5),
+                },
+            );
+            let n = rng.range(1, 60);
+            for id in 0..n as u64 {
+                b.push(prepared(id, models[rng.below(3)]));
+            }
+            // Interleave draining with a few late arrivals.
+            let mut seen = std::collections::BTreeSet::new();
+            let mut next_id = n as u64;
+            let late = rng.range(0, 10);
+            for _ in 0..late {
+                b.push(prepared(next_id, models[rng.below(3)]));
+                next_id += 1;
+            }
+            while b.pending() > 0 {
+                for p in b.next_batch() {
+                    if !seen.insert(p.req.id) {
+                        return Err(format!("duplicate id {}", p.req.id));
+                    }
+                }
+            }
+            if seen.len() != next_id as usize {
+                return Err(format!("lost requests: {} of {next_id}", seen.len()));
+            }
+            Ok(())
+        });
+    }
+}

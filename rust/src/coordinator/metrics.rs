@@ -1,0 +1,158 @@
+//! Server metrics: per-model latency distributions, throughput, queue
+//! diagnostics — what the paper reads off the OpenCL summary report
+//! ("average execution time" over all testing graphs, §5.1).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{fmt_secs, Sample};
+
+#[derive(Default)]
+struct ModelMetrics {
+    latency: Sample,
+    exec_latency: Sample,
+    completed: u64,
+    failed: u64,
+}
+
+/// Thread-safe metrics registry shared across server stages.
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, ModelMetrics>>,
+    started: Instant,
+    rejected: Mutex<u64>,
+}
+
+/// A point-in-time latency/throughput summary for one model.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub model: String,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_latency: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub mean_exec: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+            rejected: Mutex::new(0),
+        }
+    }
+
+    /// Record one completed request: end-to-end and execute-only times.
+    pub fn record(&self, model: &str, e2e_secs: f64, exec_secs: f64, ok: bool) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(model.to_string()).or_default();
+        if ok {
+            e.completed += 1;
+            e.latency.push(e2e_secs);
+            e.exec_latency.push(exec_secs);
+        } else {
+            e.failed += 1;
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        *self.rejected.lock().unwrap() += 1;
+    }
+
+    pub fn rejected(&self) -> u64 {
+        *self.rejected.lock().unwrap()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(|m| m.completed).sum()
+    }
+
+    /// Aggregate throughput (completed/sec since server start).
+    pub fn throughput(&self) -> f64 {
+        self.total_completed() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn summaries(&self) -> Vec<Summary> {
+        let mut m = self.inner.lock().unwrap();
+        m.iter_mut()
+            .map(|(name, e)| Summary {
+                model: name.clone(),
+                completed: e.completed,
+                failed: e.failed,
+                mean_latency: e.latency.mean(),
+                p50: e.latency.median(),
+                p99: e.latency.percentile(99.0),
+                mean_exec: e.exec_latency.mean(),
+            })
+            .collect()
+    }
+
+    /// Human-readable report table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{:<10} {:>7} {:>6} {:>11} {:>11} {:>11} {:>11}\n",
+            "model", "done", "fail", "mean", "p50", "p99", "exec"
+        );
+        for s in self.summaries() {
+            out.push_str(&format!(
+                "{:<10} {:>7} {:>6} {:>11} {:>11} {:>11} {:>11}\n",
+                s.model,
+                s.completed,
+                s.failed,
+                fmt_secs(s.mean_latency),
+                fmt_secs(s.p50),
+                fmt_secs(s.p99),
+                fmt_secs(s.mean_exec),
+            ));
+        }
+        out.push_str(&format!(
+            "throughput {:.1} graphs/s, rejected {}\n",
+            self.throughput(),
+            self.rejected()
+        ));
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.record("gcn", 1e-3, 5e-4, true);
+        m.record("gcn", 3e-3, 1e-3, true);
+        m.record("gcn", 0.0, 0.0, false);
+        let s = &m.summaries()[0];
+        assert_eq!((s.completed, s.failed), (2, 1));
+        assert!((s.mean_latency - 2e-3).abs() < 1e-12);
+        assert_eq!(m.total_completed(), 2);
+    }
+
+    #[test]
+    fn render_contains_all_models() {
+        let m = Metrics::new();
+        m.record("gat", 1e-3, 1e-4, true);
+        m.record("dgn", 2e-3, 2e-4, true);
+        let r = m.render();
+        assert!(r.contains("gat") && r.contains("dgn"));
+        assert!(r.contains("throughput"));
+    }
+
+    #[test]
+    fn rejection_counter() {
+        let m = Metrics::new();
+        m.record_rejected();
+        m.record_rejected();
+        assert_eq!(m.rejected(), 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! The Layer-3 streaming coordinator: raw COO graphs in, predictions
+//! out, Python nowhere on the path (paper §3.1 "Real-time": "directly
+//! takes in raw graphs and processes on FPGA" — here, on the PJRT
+//! engine).
+//!
+//! * [`request`]      — request/response types
+//! * [`router`]       — model routing + envelope validation
+//! * [`batcher`]      — dispatch batching (same-model runs)
+//! * [`scheduler`]    — the executor thread owning the PJRT engine
+//! * [`backpressure`] — admission policies for the bounded ingest queue
+//! * [`metrics`]      — latency/throughput accounting
+//! * [`server`]       — wiring: ingest → prep workers → executor
+
+pub mod backpressure;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use backpressure::{Admission, AdmissionPolicy};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{Request, Response};
+pub use router::{Route, Router};
+pub use server::{Server, ServerConfig};

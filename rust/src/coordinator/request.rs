@@ -1,0 +1,102 @@
+//! Request/response types of the streaming inference server.
+
+use std::time::Instant;
+
+use crate::graph::CooGraph;
+
+/// One inference request: a raw COO graph aimed at a model — exactly
+/// what the paper's real-time sources produce ("the graphs are streamed
+/// in consecutively", §3.1), zero preprocessing attached.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub graph: CooGraph,
+    /// Precomputed Laplacian eigenvector if the producer has one
+    /// (DGN's contract); otherwise the prep stage computes it.
+    pub eig: Option<Vec<f32>>,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, model: impl Into<String>, graph: CooGraph) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            graph,
+            eig: None,
+            submitted: Instant::now(),
+        }
+    }
+}
+
+/// A prepared request: validation + eig done by the prep workers, ready
+/// for the executor (the "FPGA") to pack and run.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    pub req: Request,
+    pub prep_done: Instant,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub model: String,
+    pub output: Result<Vec<f32>, String>,
+    pub submitted: Instant,
+    pub completed: Instant,
+}
+
+impl Response {
+    /// End-to-end latency in seconds.
+    pub fn latency(&self) -> f64 {
+        self.completed.duration_since(self.submitted).as_secs_f64()
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.output.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph() -> CooGraph {
+        CooGraph {
+            n: 2,
+            edges: vec![(0, 1)],
+            node_feat: vec![0.0; 2 * 9],
+            f_node: 9,
+            edge_feat: vec![],
+            f_edge: 0,
+        }
+    }
+
+    #[test]
+    fn latency_is_nonnegative() {
+        let r = Request::new(1, "gcn", graph());
+        let resp = Response {
+            id: r.id,
+            model: r.model.clone(),
+            output: Ok(vec![0.5]),
+            submitted: r.submitted,
+            completed: Instant::now(),
+        };
+        assert!(resp.latency() >= 0.0);
+        assert!(resp.is_ok());
+    }
+
+    #[test]
+    fn error_response() {
+        let resp = Response {
+            id: 9,
+            model: "gat".into(),
+            output: Err("too big".into()),
+            submitted: Instant::now(),
+            completed: Instant::now(),
+        };
+        assert!(!resp.is_ok());
+    }
+}

@@ -1,0 +1,135 @@
+//! Request router: validates an incoming raw graph against the target
+//! artifact's envelope (model exists, node capacity, feature widths)
+//! and assigns it to the model's dispatch queue. Runs on the prep
+//! workers — cheap, allocation-free checks only.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::artifact::{Artifacts, ModelMeta};
+
+use super::request::Request;
+
+/// Routing verdict for one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Dispatch to the named model queue.
+    Accept(String),
+    /// Permanently unservable (wrong model name / graph shape).
+    Reject(String),
+}
+
+/// Immutable routing table built from the manifest.
+pub struct Router {
+    models: BTreeMap<String, ModelMeta>,
+}
+
+impl Router {
+    pub fn new(artifacts: &Artifacts, serve: &[&str]) -> Router {
+        let serve: Vec<&str> = if serve.is_empty() {
+            artifacts.model_names()
+        } else {
+            serve.to_vec()
+        };
+        Router {
+            models: artifacts
+                .models
+                .iter()
+                .filter(|m| serve.contains(&m.name.as_str()))
+                .map(|m| (m.name.clone(), m.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn served_models(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Validate and route one request.
+    pub fn route(&self, req: &Request) -> Route {
+        let Some(meta) = self.models.get(&req.model) else {
+            return Route::Reject(format!("unknown model {:?}", req.model));
+        };
+        if req.graph.n > meta.n_max {
+            return Route::Reject(format!(
+                "graph has {} nodes, {} serves at most {}",
+                req.graph.n, meta.name, meta.n_max
+            ));
+        }
+        if req.graph.f_node != meta.in_dim {
+            return Route::Reject(format!(
+                "graph feature width {} != model {}",
+                req.graph.f_node, meta.in_dim
+            ));
+        }
+        if meta.needs_edge_attr() && req.graph.f_edge == 0 && req.graph.num_edges() > 0 {
+            return Route::Reject("model needs edge features, graph has none".into());
+        }
+        if req.graph.validate().is_err() {
+            return Route::Reject("malformed graph".into());
+        }
+        Route::Accept(meta.name.clone())
+    }
+
+    pub fn meta(&self, model: &str) -> Option<&ModelMeta> {
+        self.models.get(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{molecular_graph, MolConfig};
+    use crate::util::rng::Rng;
+
+    fn router() -> Option<Router> {
+        let a = Artifacts::load(Artifacts::default_dir()).ok()?;
+        Some(Router::new(&a, &[]))
+    }
+
+    fn mol() -> crate::graph::CooGraph {
+        molecular_graph(&mut Rng::new(1), &MolConfig::molhiv())
+    }
+
+    #[test]
+    fn accepts_valid_request() {
+        let Some(r) = router() else { return };
+        let req = Request::new(1, "gin", mol());
+        assert_eq!(r.route(&req), Route::Accept("gin".into()));
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let Some(r) = router() else { return };
+        let req = Request::new(1, "transformer", mol());
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+    }
+
+    #[test]
+    fn rejects_oversized_graph() {
+        let Some(r) = router() else { return };
+        let g = crate::datagen::citation::citation_graph(3, 200, 500, 9);
+        let req = Request::new(1, "gin", g);
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+    }
+
+    #[test]
+    fn rejects_wrong_feature_width() {
+        let Some(r) = router() else { return };
+        let mut g = mol();
+        g.f_node = 5;
+        g.node_feat.truncate(g.n * 5);
+        let req = Request::new(1, "gcn", g);
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+    }
+
+    #[test]
+    fn serve_subset_filters() {
+        let Some(a) = Artifacts::load(Artifacts::default_dir()).ok() else {
+            return;
+        };
+        let r = Router::new(&a, &["gcn", "gat"]);
+        assert_eq!(r.served_models(), vec!["gat", "gcn"]);
+        let req = Request::new(1, "gin", mol());
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+    }
+}

@@ -1,0 +1,165 @@
+//! The executor: a dedicated thread owning the PJRT [`Engine`] — the
+//! software analog of the single FPGA card draining the graph stream.
+//! Upstream prep workers have already validated, routed, and (for DGN)
+//! eig-solved each request; the executor packs tensors and executes,
+//! batch by batch.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::{Artifacts, Engine};
+use crate::util::pool::Channel;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{Prepared, Response};
+
+/// Executor main loop. Compiles the artifacts first, reports readiness
+/// (or the compile error) through `ready`, then serves until the
+/// prepared-request channel closes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_executor(
+    artifacts: Artifacts,
+    models: Vec<String>,
+    prepared_rx: Channel<Prepared>,
+    responses_tx: Channel<Response>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+    ready: Channel<Result<(), String>>,
+) {
+    let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let mut engine = match Engine::load(&artifacts, &names) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    let mut batcher = Batcher::new(&names, policy);
+    // Blocking pull; then opportunistically drain whatever is queued so
+    // the batcher can form same-model runs.
+    while let Some(first) = prepared_rx.recv() {
+        batcher.push(first);
+        while let Some(more) = prepared_rx.try_recv() {
+            batcher.push(more);
+        }
+        while batcher.pending() > 0 {
+            for p in batcher.next_batch() {
+                let exec_start = Instant::now();
+                let out = engine
+                    .infer_with_eig(&p.req.model, &p.req.graph, p.req.eig.as_deref())
+                    .map_err(|e| format!("{e:#}"));
+                let completed = Instant::now();
+                let resp = Response {
+                    id: p.req.id,
+                    model: p.req.model.clone(),
+                    output: out,
+                    submitted: p.req.submitted,
+                    completed,
+                };
+                metrics.record(
+                    &resp.model,
+                    resp.latency(),
+                    completed.duration_since(exec_start).as_secs_f64(),
+                    resp.is_ok(),
+                );
+                if responses_tx.send(resp).is_err() {
+                    return; // consumer gone
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::datagen::{molecular_graph, MolConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn executor_serves_and_shuts_down() {
+        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+            return;
+        };
+        let prepared: Channel<Prepared> = Channel::bounded(16);
+        let responses: Channel<Response> = Channel::bounded(16);
+        let ready: Channel<Result<(), String>> = Channel::bounded(1);
+        let metrics = Arc::new(Metrics::new());
+        let (a2, m2, r2, p2, resp2) = (
+            artifacts.clone(),
+            Arc::clone(&metrics),
+            ready.clone(),
+            prepared.clone(),
+            responses.clone(),
+        );
+        let h = std::thread::spawn(move || {
+            run_executor(
+                a2,
+                vec!["gcn".into()],
+                p2,
+                resp2,
+                m2,
+                BatchPolicy::default(),
+                r2,
+            )
+        });
+        assert_eq!(ready.recv(), Some(Ok(())));
+        for i in 0..3 {
+            let g = molecular_graph(&mut Rng::new(i), &MolConfig::molhiv());
+            prepared
+                .send(Prepared {
+                    req: Request::new(i, "gcn", g),
+                    prep_done: Instant::now(),
+                })
+                .unwrap();
+        }
+        prepared.close();
+        let mut got = 0;
+        while let Some(r) = responses.recv() {
+            assert!(r.is_ok(), "{:?}", r.output);
+            got += 1;
+            if got == 3 {
+                break;
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(metrics.total_completed(), 3);
+    }
+
+    #[test]
+    fn compile_failure_reported_via_ready() {
+        let Ok(mut artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+            return;
+        };
+        // Point one model at a bogus artifact.
+        artifacts.models[0].hlo_path = "/nonexistent.hlo.txt".into();
+        let name = artifacts.models[0].name.clone();
+        let prepared: Channel<Prepared> = Channel::bounded(1);
+        let responses: Channel<Response> = Channel::bounded(1);
+        let ready: Channel<Result<(), String>> = Channel::bounded(1);
+        let metrics = Arc::new(Metrics::new());
+        let r2 = ready.clone();
+        let h = std::thread::spawn(move || {
+            run_executor(
+                artifacts,
+                vec![name],
+                prepared,
+                responses,
+                metrics,
+                BatchPolicy::default(),
+                r2,
+            )
+        });
+        match ready.recv() {
+            Some(Err(msg)) => assert!(msg.contains("nonexistent")),
+            other => panic!("expected compile error, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,308 @@
+//! The streaming inference server: the paper's real-time story as a
+//! process topology.
+//!
+//! ```text
+//! submit() ──► ingest queue ──► prep workers ──► prepared queue ──► executor ──► responses
+//!              (bounded,        (route, validate,  (bounded FIFO)     (PJRT         (drained by
+//!               backpressure)    eigensolve)                           engine)       the caller)
+//! ```
+//!
+//! The bounded queues *are* the paper's FIFOs: `submit` under the
+//! `Block` policy stalls the producer exactly like a full on-chip
+//! stream stalls the NE PE; under `Reject` it drops — the right
+//! semantics for real-time sources whose stale graphs are worthless.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{fiedler_vector, CooGraph};
+use crate::runtime::Artifacts;
+use crate::util::pool::Channel;
+
+use super::backpressure::{Admission, AdmissionPolicy};
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::request::{Prepared, Request, Response};
+use super::router::{Route, Router};
+use super::scheduler::run_executor;
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    /// Models to serve (empty = everything in the manifest).
+    pub models: Vec<String>,
+    /// Prep worker threads (routing, validation, eigensolves).
+    pub prep_workers: usize,
+    /// Ingest queue capacity (the backpressure bound).
+    pub queue_capacity: usize,
+    pub admission: AdmissionPolicy,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifact_dir: Artifacts::default_dir(),
+            models: Vec::new(),
+            prep_workers: 2,
+            queue_capacity: 256,
+            admission: AdmissionPolicy::Block,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A running server instance.
+pub struct Server {
+    ingest: Channel<Request>,
+    prepared: Channel<Prepared>,
+    responses: Channel<Response>,
+    metrics: Arc<Metrics>,
+    prep_handles: Vec<JoinHandle<()>>,
+    exec_handle: Option<JoinHandle<()>>,
+    admission: AdmissionPolicy,
+    next_id: AtomicU64,
+    served: Vec<String>,
+}
+
+impl Server {
+    /// Start all stages; returns once the executor has compiled every
+    /// served artifact (so first-request latency is steady-state).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let artifacts = Artifacts::load(&cfg.artifact_dir)
+            .context("loading artifacts for server")?;
+        let serve_refs: Vec<&str> =
+            cfg.models.iter().map(|s| s.as_str()).collect();
+        let router = Arc::new(Router::new(&artifacts, &serve_refs));
+        let served: Vec<String> = router
+            .served_models()
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        if served.is_empty() {
+            bail!("no models to serve");
+        }
+
+        let ingest: Channel<Request> = Channel::bounded(cfg.queue_capacity);
+        let prepared: Channel<Prepared> = Channel::bounded(cfg.queue_capacity);
+        let responses: Channel<Response> = Channel::bounded(cfg.queue_capacity.max(1024));
+        let metrics = Arc::new(Metrics::new());
+
+        // Prep workers: route + validate + eigensolve.
+        let mut prep_handles = Vec::new();
+        for w in 0..cfg.prep_workers.max(1) {
+            let rx = ingest.clone();
+            let tx = prepared.clone();
+            let router = Arc::clone(&router);
+            let metrics = Arc::clone(&metrics);
+            let resp_tx = responses.clone();
+            prep_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gengnn-prep-{w}"))
+                    .spawn(move || {
+                        while let Some(mut req) = rx.recv() {
+                            match router.route(&req) {
+                                Route::Accept(model) => {
+                                    let meta = router.meta(&model).expect("routed");
+                                    if req.eig.is_none()
+                                        && meta.inputs.iter().any(|i| i.name == "eig")
+                                    {
+                                        let r = fiedler_vector(&req.graph, 400, 1e-9);
+                                        let mut eig = vec![0.0f32; meta.n_max];
+                                        eig[..req.graph.n].copy_from_slice(&r.vector);
+                                        req.eig = Some(eig);
+                                    }
+                                    let p = Prepared {
+                                        req,
+                                        prep_done: Instant::now(),
+                                    };
+                                    if tx.send(p).is_err() {
+                                        return;
+                                    }
+                                }
+                                Route::Reject(reason) => {
+                                    metrics.record(&req.model, 0.0, 0.0, false);
+                                    let _ = resp_tx.send(Response {
+                                        id: req.id,
+                                        model: req.model.clone(),
+                                        output: Err(reason),
+                                        submitted: req.submitted,
+                                        completed: Instant::now(),
+                                    });
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn prep worker"),
+            );
+        }
+
+        // Executor thread (owns the PJRT engine).
+        let ready: Channel<std::result::Result<(), String>> = Channel::bounded(1);
+        let exec_handle = {
+            let prepared_rx = prepared.clone();
+            let responses_tx = responses.clone();
+            let metrics = Arc::clone(&metrics);
+            let ready_tx = ready.clone();
+            let served = served.clone();
+            let batch = cfg.batch;
+            std::thread::Builder::new()
+                .name("gengnn-executor".into())
+                .spawn(move || {
+                    run_executor(
+                        artifacts,
+                        served,
+                        prepared_rx,
+                        responses_tx,
+                        metrics,
+                        batch,
+                        ready_tx,
+                    )
+                })
+                .expect("spawn executor")
+        };
+
+        match ready.recv() {
+            Some(Ok(())) => {}
+            Some(Err(e)) => bail!("executor failed to compile artifacts: {e}"),
+            None => bail!("executor exited before becoming ready"),
+        }
+
+        Ok(Server {
+            ingest,
+            prepared,
+            responses,
+            metrics,
+            prep_handles,
+            exec_handle: Some(exec_handle),
+            admission: cfg.admission,
+            next_id: AtomicU64::new(0),
+            served,
+        })
+    }
+
+    pub fn served_models(&self) -> &[String] {
+        &self.served
+    }
+
+    /// Submit one raw graph; returns the request id on admission.
+    pub fn submit(&self, model: &str, graph: CooGraph) -> (Admission, u64) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request::new(id, model, graph);
+        match self.admission {
+            AdmissionPolicy::Block => match self.ingest.send(req) {
+                Ok(()) => (Admission::Accepted, id),
+                Err(_) => {
+                    self.metrics.record_rejected();
+                    (Admission::Rejected, id)
+                }
+            },
+            AdmissionPolicy::Reject => match self.ingest.try_send(req) {
+                Ok(()) => (Admission::Accepted, id),
+                Err(_) => {
+                    self.metrics.record_rejected();
+                    (Admission::Rejected, id)
+                }
+            },
+        }
+    }
+
+    /// Handle for draining responses (cloneable).
+    pub fn responses(&self) -> Channel<Response> {
+        self.responses.clone()
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Graceful shutdown: close ingest, let the prep workers drain and
+    /// exit, then close the prepared queue so the executor drains and
+    /// exits, then close responses. Returns the final metrics.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.ingest.close();
+        for h in self.prep_handles.drain(..) {
+            let _ = h.join();
+        }
+        // No producer is left for the prepared queue: release the
+        // executor's blocking recv (channel close drains first).
+        self.prepared.close();
+        if let Some(h) = self.exec_handle.take() {
+            let _ = h.join();
+        }
+        self.responses.close();
+        Arc::clone(&self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{molecular_graph, MolConfig};
+    use crate::util::rng::Rng;
+
+    fn start(models: &[&str]) -> Option<Server> {
+        let cfg = ServerConfig {
+            models: models.iter().map(|s| s.to_string()).collect(),
+            prep_workers: 2,
+            ..ServerConfig::default()
+        };
+        Server::start(cfg).ok()
+    }
+
+    #[test]
+    fn serves_a_small_stream_end_to_end() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let responses = server.responses();
+        let mut rng = Rng::new(11);
+        let total = 8;
+        for _ in 0..total {
+            let g = molecular_graph(&mut rng, &MolConfig::molhiv());
+            let (adm, _) = server.submit("gcn", g);
+            assert_eq!(adm, Admission::Accepted);
+        }
+        let mut got = 0;
+        while got < total {
+            let r = responses.recv().expect("response");
+            assert!(r.is_ok(), "{:?}", r.output);
+            assert_eq!(r.model, "gcn");
+            got += 1;
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.total_completed(), total as u64);
+    }
+
+    #[test]
+    fn bad_model_yields_error_response() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let responses = server.responses();
+        let g = molecular_graph(&mut Rng::new(1), &MolConfig::molhiv());
+        server.submit("nonexistent", g);
+        let r = responses.recv().unwrap();
+        assert!(!r.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_without_traffic_is_clean() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let m = server.shutdown();
+        assert_eq!(m.total_completed(), 0);
+    }
+
+    #[test]
+    fn dgn_requests_get_prep_side_eigensolve() {
+        let Some(server) = start(&["dgn"]) else { return };
+        let responses = server.responses();
+        let g = molecular_graph(&mut Rng::new(5), &MolConfig::molhiv());
+        server.submit("dgn", g);
+        let r = responses.recv().unwrap();
+        assert!(r.is_ok(), "{:?}", r.output);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,184 @@
+//! Synthetic citation-network generator (Cora / CiteSeer / PubMed
+//! substitute for the Large Graph Extension, paper Table 5 / Fig. 8).
+//!
+//! Preferential attachment yields the power-law degree distribution of
+//! real citation graphs; node/edge counts and feature widths match
+//! Table 5 exactly, which is what the DRAM-traffic model (sim/large.rs)
+//! and the baselines depend on.
+
+use crate::graph::CooGraph;
+use crate::util::rng::Rng;
+
+/// Table 5 rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CitationDataset {
+    Cora,
+    CiteSeer,
+    PubMed,
+}
+
+impl CitationDataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CitationDataset::Cora => "Cora",
+            CitationDataset::CiteSeer => "CiteSeer",
+            CitationDataset::PubMed => "PubMed",
+        }
+    }
+
+    /// (nodes, directed edges, feature dim) exactly as in Table 5.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        match self {
+            CitationDataset::Cora => (2708, 10_556, 1433),
+            CitationDataset::CiteSeer => (3327, 9104, 3703),
+            CitationDataset::PubMed => (19_717, 88_648, 500),
+        }
+    }
+
+    pub fn all() -> [CitationDataset; 3] {
+        [
+            CitationDataset::Cora,
+            CitationDataset::CiteSeer,
+            CitationDataset::PubMed,
+        ]
+    }
+}
+
+/// Generate a citation-style graph with `n` nodes and ~`m_directed/2`
+/// undirected edges via preferential attachment.
+pub fn citation_graph(seed: u64, n: usize, m_directed: usize, f: usize) -> CooGraph {
+    let mut rng = Rng::new(seed);
+    let target_und = m_directed / 2;
+    let m_per = (target_und as f64 / n.max(1) as f64).round().max(1.0) as usize;
+
+    let mut und: Vec<(u32, u32)> = Vec::with_capacity(target_und + n);
+    let mut seen = std::collections::HashSet::with_capacity(target_und * 2);
+    // `repeated` holds every endpoint once per incident edge: sampling it
+    // uniformly == degree-proportional attachment.
+    let mut repeated: Vec<u32> = Vec::with_capacity(target_und * 2 + n);
+    repeated.push(0);
+
+    for v in 1..n {
+        let k = m_per.min(v);
+        let mut attached = 0usize;
+        let mut attempts = 0usize;
+        while attached < k && attempts < 20 * k {
+            attempts += 1;
+            let u = if rng.chance(0.9) {
+                repeated[rng.below(repeated.len())]
+            } else {
+                rng.below(v) as u32
+            };
+            if u as usize == v {
+                continue;
+            }
+            let e = (u.min(v as u32), u.max(v as u32));
+            if seen.insert(e) {
+                und.push(e);
+                repeated.push(e.0);
+                repeated.push(e.1);
+                attached += 1;
+            }
+        }
+    }
+    // Top up or trim to hit the exact edge budget.
+    let mut guard = 0usize;
+    while und.len() < target_und && guard < 50 * target_und {
+        guard += 1;
+        let u = repeated[rng.below(repeated.len())];
+        let v = rng.below(n) as u32;
+        if u == v {
+            continue;
+        }
+        let e = (u.min(v), u.max(v));
+        if seen.insert(e) {
+            und.push(e);
+            repeated.push(e.0);
+            repeated.push(e.1);
+        }
+    }
+    und.truncate(target_und);
+
+    // Sparse bag-of-words features: ~1% nonzero, like the real datasets.
+    let nnz_per_node = (f as f64 * 0.01).ceil() as usize;
+    let mut node_feat = vec![0.0f32; n * f];
+    for v in 0..n {
+        for _ in 0..nnz_per_node {
+            node_feat[v * f + rng.below(f)] = 1.0;
+        }
+    }
+
+    CooGraph::from_undirected(n, &und, node_feat, f, &[], 0)
+        .expect("generator produces valid graphs")
+}
+
+/// Generate the named Table 5 dataset (full size).
+pub fn dataset(which: CitationDataset, seed: u64) -> CooGraph {
+    let (n, m, f) = which.stats();
+    citation_graph(seed, n, m, f)
+}
+
+/// Scaled-down version preserving density/feature ratios — used by the
+/// numeric (PJRT) path, where the full graphs exceed the artifact's
+/// padded capacity (DESIGN.md §Substitutions).
+pub fn dataset_scaled(which: CitationDataset, seed: u64, n: usize, f: usize) -> CooGraph {
+    let (n0, m0, _) = which.stats();
+    let m = (m0 as f64 * n as f64 / n0 as f64).round() as usize;
+    citation_graph(seed, n, m, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_table5_counts() {
+        for which in CitationDataset::all() {
+            let (n, m, f) = which.stats();
+            let g = dataset(which, 1);
+            assert_eq!(g.n, n);
+            assert_eq!(g.f_node, f);
+            let err = (g.num_edges() as f64 - m as f64).abs() / m as f64;
+            assert!(err < 0.02, "{}: edges {} vs {}", which.name(), g.num_edges(), m);
+        }
+    }
+
+    #[test]
+    fn degree_distribution_is_heavy_tailed() {
+        let g = citation_graph(3, 2000, 8000, 16);
+        let mut deg = g.out_degrees();
+        deg.sort_unstable_by(|a, b| b.cmp(a));
+        let top1pct: u32 = deg[..20].iter().sum();
+        let total: u32 = deg.iter().sum();
+        // Top 1% of nodes should hold well above 1% of the edges.
+        assert!(
+            top1pct as f64 / total as f64 > 0.05,
+            "top1% share {}",
+            top1pct as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = citation_graph(9, 500, 2000, 8);
+        let b = citation_graph(9, 500, 2000, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scaled_preserves_density() {
+        let g = dataset_scaled(CitationDataset::PubMed, 2, 400, 32);
+        let (n0, m0, _) = CitationDataset::PubMed.stats();
+        let want = m0 as f64 / n0 as f64;
+        let got = g.num_edges() as f64 / g.n as f64;
+        assert!((got - want).abs() / want < 0.25, "density {got} vs {want}");
+    }
+
+    #[test]
+    fn features_are_sparse_binary() {
+        let g = citation_graph(4, 100, 400, 64);
+        let nnz = g.node_feat.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz > 0 && nnz < g.node_feat.len() / 10);
+        assert!(g.node_feat.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

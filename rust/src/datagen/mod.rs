@@ -1,0 +1,14 @@
+//! Workload generators substituting for the paper's datasets
+//! (DESIGN.md §Substitutions): synthetic molecules (MolHIV/MolPCBA),
+//! preferential-attachment citation graphs (Cora/CiteSeer/PubMed), the
+//! Fig. 9(a) controlled random graphs, and virtual-node augmentation.
+
+pub mod citation;
+pub mod molecular;
+pub mod random;
+pub mod virtual_node;
+
+pub use citation::{citation_graph, CitationDataset};
+pub use molecular::{molecular_graph, MolConfig};
+pub use random::{random_graph, RandomGraphConfig};
+pub use virtual_node::{augment_with_virtual_node, augment_with_virtual_node_first};

@@ -1,0 +1,149 @@
+//! Controlled-statistics random graphs for the Fig. 9(a) sweep: the
+//! paper evaluates the pipelining strategies on "100k random graphs
+//! with various statistics, including average node degree (x-axis) and
+//! the percentage of large-degree nodes (y-axis)".
+
+use crate::graph::CooGraph;
+use crate::util::rng::Rng;
+
+/// Parameters of one Fig. 9(a) grid cell.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomGraphConfig {
+    pub nodes: usize,
+    /// Target average (directed) degree of ordinary nodes.
+    pub avg_degree: f64,
+    /// Fraction of nodes that are "large-degree" hubs.
+    pub high_degree_fraction: f64,
+    /// Hub degree multiplier relative to avg_degree.
+    pub hub_multiplier: f64,
+    pub f_node: usize,
+}
+
+impl Default for RandomGraphConfig {
+    fn default() -> Self {
+        RandomGraphConfig {
+            nodes: 32,
+            avg_degree: 4.0,
+            high_degree_fraction: 0.0,
+            hub_multiplier: 6.0,
+            f_node: 9,
+        }
+    }
+}
+
+/// Directed random graph with the requested degree profile.
+/// Hubs receive `hub_multiplier * avg_degree` out-edges; ordinary nodes
+/// `avg_degree` (rounded stochastically), so the *imbalance* knob of
+/// Fig. 9(a) is controlled independently of the mean.
+pub fn random_graph(rng: &mut Rng, cfg: &RandomGraphConfig) -> CooGraph {
+    let n = cfg.nodes;
+    let n_hubs = (n as f64 * cfg.high_degree_fraction).round() as usize;
+    let hubs: Vec<usize> = rng.permutation(n).into_iter().take(n_hubs).collect();
+    let mut is_hub = vec![false; n];
+    for &h in &hubs {
+        is_hub[h] = true;
+    }
+
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for v in 0..n {
+        let target = if is_hub[v] {
+            cfg.avg_degree * cfg.hub_multiplier
+        } else {
+            cfg.avg_degree
+        };
+        // Stochastic rounding preserves the exact expected mean.
+        let mut k = target.floor() as usize;
+        if rng.chance(target - target.floor()) {
+            k += 1;
+        }
+        let k = k.min(n.saturating_sub(1));
+        for _ in 0..k {
+            let mut w = rng.below(n);
+            if w == v {
+                w = (w + 1) % n;
+            }
+            edges.push((v as u32, w as u32));
+        }
+    }
+
+    let node_feat: Vec<f32> = (0..n * cfg.f_node).map(|_| rng.f32()).collect();
+    CooGraph {
+        n,
+        edges,
+        node_feat,
+        f_node: cfg.f_node,
+        edge_feat: vec![],
+        f_edge: 0,
+    }
+}
+
+/// Generate a batch for one grid cell.
+pub fn batch(seed: u64, count: usize, cfg: &RandomGraphConfig) -> Vec<CooGraph> {
+    let mut root = Rng::new(seed);
+    (0..count)
+        .map(|i| random_graph(&mut root.fork(i as u64), cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_target_average_degree() {
+        for &d in &[2.0, 4.0, 8.0, 16.0] {
+            let cfg = RandomGraphConfig {
+                avg_degree: d,
+                nodes: 64,
+                ..Default::default()
+            };
+            let gs = batch(11, 200, &cfg);
+            let mean: f64 = gs.iter().map(|g| g.avg_degree()).sum::<f64>()
+                / gs.len() as f64;
+            assert!(
+                (mean - d).abs() / d < 0.1,
+                "target {d}, measured {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn hub_fraction_creates_imbalance() {
+        let flat = RandomGraphConfig {
+            nodes: 100,
+            avg_degree: 4.0,
+            high_degree_fraction: 0.0,
+            ..Default::default()
+        };
+        let hubby = RandomGraphConfig {
+            high_degree_fraction: 0.2,
+            ..flat
+        };
+        let var = |gs: &[CooGraph]| {
+            let mut all: Vec<f64> = Vec::new();
+            for g in gs {
+                all.extend(g.out_degrees().iter().map(|&d| d as f64));
+            }
+            let m = all.iter().sum::<f64>() / all.len() as f64;
+            all.iter().map(|d| (d - m) * (d - m)).sum::<f64>() / all.len() as f64
+        };
+        let v_flat = var(&batch(5, 50, &flat));
+        let v_hub = var(&batch(5, 50, &hubby));
+        assert!(
+            v_hub > 2.0 * v_flat,
+            "hub variance {v_hub} vs flat {v_flat}"
+        );
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let g = random_graph(&mut Rng::new(3), &RandomGraphConfig::default());
+        assert!(g.edges.iter().all(|&(s, t)| s != t));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = RandomGraphConfig::default();
+        assert_eq!(batch(1, 5, &cfg), batch(1, 5, &cfg));
+    }
+}

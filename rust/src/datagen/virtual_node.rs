@@ -1,0 +1,116 @@
+//! Virtual-node augmentation (paper Sections 4.5 / Fig. 6): append an
+//! artificial node connected to every real node. The VN is the
+//! highest-degree node by construction, which is exactly the imbalance
+//! the streaming pipeline absorbs (Fig. 9(c)).
+
+use crate::graph::CooGraph;
+
+/// Id assigned to the virtual node after augmentation = original n.
+pub fn augment_with_virtual_node(g: &CooGraph) -> CooGraph {
+    let vn = g.n as u32;
+    let mut edges = g.edges.clone();
+    let mut edge_feat = g.edge_feat.clone();
+    // Bidirectional connection to every real node (Fig. 6 left), with
+    // zero edge features (the VN carries no bond semantics).
+    for v in 0..g.n as u32 {
+        edges.push((vn, v));
+        edges.push((v, vn));
+        edge_feat.extend(std::iter::repeat(0.0).take(2 * g.f_edge));
+    }
+    let mut node_feat = g.node_feat.clone();
+    node_feat.extend(std::iter::repeat(0.0).take(g.f_node));
+    CooGraph {
+        n: g.n + 1,
+        edges,
+        node_feat,
+        f_node: g.f_node,
+        edge_feat,
+        f_edge: g.f_edge,
+    }
+}
+
+/// Position the virtual node *first* in the processing order instead of
+/// last. Paper Section 4.5: the VN's long message-passing phase fully
+/// overlaps with other nodes' embedding computation "as long as it is
+/// processed early enough (depending on the node ID numbering and
+/// processing order, which is adjustable)".
+pub fn augment_with_virtual_node_first(g: &CooGraph) -> CooGraph {
+    // Relabel: new id 0 = VN, real node v -> v + 1.
+    let mut edges: Vec<(u32, u32)> =
+        g.edges.iter().map(|&(s, t)| (s + 1, t + 1)).collect();
+    let mut edge_feat = g.edge_feat.clone();
+    for v in 1..=g.n as u32 {
+        edges.push((0, v));
+        edges.push((v, 0));
+        edge_feat.extend(std::iter::repeat(0.0).take(2 * g.f_edge));
+    }
+    let mut node_feat = vec![0.0; g.f_node];
+    node_feat.extend_from_slice(&g.node_feat);
+    CooGraph {
+        n: g.n + 1,
+        edges,
+        node_feat,
+        f_node: g.f_node,
+        edge_feat,
+        f_edge: g.f_edge,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> CooGraph {
+        CooGraph::from_undirected(
+            3,
+            &[(0, 1), (1, 2)],
+            vec![1.0; 3 * 2],
+            2,
+            &[5.0, 6.0],
+            1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn vn_connects_to_all_nodes() {
+        let g = augment_with_virtual_node(&base());
+        assert_eq!(g.n, 4);
+        let deg = g.out_degrees();
+        assert_eq!(deg[3], 3, "VN out-degree must equal original n");
+        // Every real node gained exactly one out-edge (to the VN):
+        // path 0-1-2 had out-degrees [1, 2, 1].
+        assert_eq!(&deg[..3], &[2, 3, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn vn_first_is_relabelled_isomorph() {
+        let last = augment_with_virtual_node(&base());
+        let first = augment_with_virtual_node_first(&base());
+        assert_eq!(first.n, last.n);
+        assert_eq!(first.num_edges(), last.num_edges());
+        // VN (id 0) is the max-degree node.
+        let deg = first.out_degrees();
+        assert_eq!(deg[0], 3);
+        first.validate().unwrap();
+    }
+
+    #[test]
+    fn vn_edge_features_are_zero() {
+        let g = augment_with_virtual_node(&base());
+        // Last 6 directed edges are VN edges with 0-features.
+        let m = g.num_edges();
+        for ei in (m - 6)..m {
+            assert_eq!(g.edge_feat[ei], 0.0);
+        }
+    }
+
+    #[test]
+    fn vn_is_highest_degree() {
+        let g = augment_with_virtual_node(&base());
+        let deg = g.out_degrees();
+        let max = *deg.iter().max().unwrap();
+        assert_eq!(deg[3], max);
+    }
+}

@@ -1,0 +1,217 @@
+//! Design-space exploration (paper §6: "Future work includes design
+//! automation [and] design space exploration for GenGNN").
+//!
+//! The cycle-level simulator prices a candidate microarchitecture's
+//! *latency* on a workload; the HLS resource model prices its *area*.
+//! DSE sweeps the HLS design knobs — MLP-PE lane widths, MP-PE message
+//! lanes, FIFO depth — and returns the latency/utilization Pareto
+//! frontier for a model + workload, i.e. the automation loop a GenGNN
+//! user would run before synthesis.
+
+use crate::graph::CooGraph;
+use crate::models::ModelConfig;
+use crate::resources::hls::{estimate_scaled, Resources, U50};
+use crate::sim::cycles::CostParams;
+use crate::sim::{Accelerator, PipelineMode};
+
+/// One candidate configuration of the design knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DesignPoint {
+    pub p_in: usize,
+    pub p_out: usize,
+    pub p_msg: usize,
+    pub fifo_depth: usize,
+}
+
+impl DesignPoint {
+    pub fn params(&self) -> CostParams {
+        CostParams {
+            p_in: self.p_in,
+            p_out: self.p_out,
+            p_msg: self.p_msg,
+            fifo_depth: self.fifo_depth,
+            ..CostParams::default()
+        }
+    }
+}
+
+/// A priced candidate.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    pub point: DesignPoint,
+    /// Mean per-graph latency on the workload, seconds at 300 MHz.
+    pub latency: f64,
+    pub resources: Resources,
+    /// Worst per-column device utilization on the U50.
+    pub utilization: f64,
+    /// Candidates exceeding the device are kept but flagged.
+    pub fits: bool,
+}
+
+/// The default sweep grid (powers of two around the paper's design).
+pub fn default_space() -> Vec<DesignPoint> {
+    let mut pts = Vec::new();
+    for &p_in in &[4usize, 8, 16, 32] {
+        for &p_out in &[4usize, 8, 16, 32] {
+            for &p_msg in &[1usize, 2, 4, 8] {
+                for &fifo_depth in &[2usize, 10, 32] {
+                    pts.push(DesignPoint {
+                        p_in,
+                        p_out,
+                        p_msg,
+                        fifo_depth,
+                    });
+                }
+            }
+        }
+    }
+    pts
+}
+
+/// Evaluate every candidate on `graphs` for `model`.
+pub fn sweep(model: &ModelConfig, graphs: &[CooGraph], points: &[DesignPoint]) -> Vec<Evaluated> {
+    points
+        .iter()
+        .map(|&point| {
+            let mut acc = Accelerator::new(model.clone(), PipelineMode::Streaming);
+            acc.params = point.params();
+            let latency = acc.mean_latency(graphs);
+            let resources = estimate_scaled(model, &point.params())
+                .map(|e| e.total)
+                .unwrap_or_default();
+            let utilization = resources.max_utilization(&U50);
+            Evaluated {
+                point,
+                latency,
+                resources,
+                utilization,
+                fits: utilization <= 1.0,
+            }
+        })
+        .collect()
+}
+
+/// Keep the (latency, utilization) Pareto-optimal candidates among
+/// those that fit, sorted by latency.
+pub fn pareto(evals: &[Evaluated]) -> Vec<Evaluated> {
+    let mut fitting: Vec<&Evaluated> = evals.iter().filter(|e| e.fits).collect();
+    fitting.sort_by(|a, b| a.latency.total_cmp(&b.latency));
+    let mut front: Vec<Evaluated> = Vec::new();
+    let mut best_util = f64::INFINITY;
+    for e in fitting {
+        if e.utilization < best_util - 1e-12 {
+            front.push(e.clone());
+            best_util = e.utilization;
+        }
+    }
+    front
+}
+
+/// Render the frontier as a report table.
+pub fn render(model: &ModelConfig, front: &[Evaluated]) -> String {
+    let mut out = format!(
+        "DSE Pareto frontier for {} (streaming pipeline, U50 budget)\n{:>5} {:>5} {:>5} {:>5} {:>12} {:>6} {:>6} {:>8}\n",
+        model.name, "p_in", "p_out", "p_msg", "fifo", "latency", "DSP", "BRAM", "util"
+    );
+    for e in front {
+        out.push_str(&format!(
+            "{:>5} {:>5} {:>5} {:>5} {:>11.1}µs {:>6} {:>6} {:>7.1}%\n",
+            e.point.p_in,
+            e.point.p_out,
+            e.point.p_msg,
+            e.point.fifo_depth,
+            e.latency * 1e6,
+            e.resources.dsp,
+            e.resources.bram,
+            e.utilization * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{molecular, MolConfig};
+
+    fn workload() -> Vec<CooGraph> {
+        molecular::dataset(3, 40, &MolConfig::molhiv())
+    }
+
+    #[test]
+    fn wider_lanes_are_faster_but_bigger() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let graphs = workload();
+        let narrow = DesignPoint {
+            p_in: 4,
+            p_out: 4,
+            p_msg: 2,
+            fifo_depth: 10,
+        };
+        let wide = DesignPoint {
+            p_in: 32,
+            p_out: 32,
+            p_msg: 8,
+            fifo_depth: 10,
+        };
+        let evals = sweep(&gin, &graphs, &[narrow, wide]);
+        assert!(evals[1].latency < evals[0].latency);
+        assert!(evals[1].resources.dsp > evals[0].resources.dsp);
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let graphs = workload();
+        let evals = sweep(&gin, &graphs, &default_space());
+        let front = pareto(&evals);
+        assert!(!front.is_empty());
+        // Sorted by latency ascending -> utilization strictly descending.
+        for w in front.windows(2) {
+            assert!(w[0].latency <= w[1].latency);
+            assert!(w[0].utilization > w[1].utilization);
+        }
+        // Every front point must dominate or tie any non-front point in
+        // at least one dimension.
+        for e in &evals {
+            if !e.fits {
+                continue;
+            }
+            for f in &front {
+                assert!(
+                    f.latency <= e.latency + 1e-12 || f.utilization <= e.utilization + 1e-12,
+                    "front point dominated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_boundary_is_meaningful_for_gcn() {
+        // GCN's fabric-bound MACs blow past the U50's FF budget at wide
+        // lane configs — DSE must find both sides of the boundary.
+        let gcn = ModelConfig::by_name("gcn").unwrap();
+        let graphs = workload();
+        let evals = sweep(&gcn, &graphs, &default_space());
+        let narrow_fit = evals
+            .iter()
+            .filter(|e| e.point.p_in * e.point.p_out <= 64)
+            .all(|e| e.fits);
+        assert!(narrow_fit, "baseline-width designs must fit the U50");
+        assert!(
+            evals.iter().any(|e| !e.fits),
+            "the sweep should reach configs that exceed the device"
+        );
+        assert!(!pareto(&evals).is_empty());
+    }
+
+    #[test]
+    fn render_mentions_knobs() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let graphs = workload();
+        let front = pareto(&sweep(&gin, &graphs, &default_space()[..8]));
+        let s = render(&gin, &front);
+        assert!(s.contains("Pareto"));
+        assert!(s.contains("p_msg"));
+    }
+}

@@ -1,0 +1,268 @@
+//! CSR / CSC adjacency (paper Section 3.2, Fig. 1) and the on-chip
+//! COO converter (Section 3.2: "runs once when the graph is streamed
+//! into the FPGA and is reused for all the GNN layers").
+//!
+//! CSR stores, per *source* node, the concatenated out-neighbors —
+//! what the merged scatter-gather MP PE walks (Section 3.4). CSC is the
+//! column-major mirror (in-neighbors per destination), used by the
+//! gather-first execution variant. Both keep `edge_idx`, the position of
+//! each entry in the original COO list, so edge features need no copy.
+
+use super::coo::CooGraph;
+
+/// Compressed sparse row: out-neighbors grouped by source.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Degree table (out-degree per node) — first array in Fig. 1.
+    pub degree: Vec<u32>,
+    /// Exclusive prefix sums of `degree` (len n+1).
+    pub offsets: Vec<u32>,
+    /// Neighbor table — row-major concatenation of out-neighbors.
+    pub neighbors: Vec<u32>,
+    /// Original COO edge index for each neighbor entry (edge data table).
+    pub edge_idx: Vec<u32>,
+}
+
+/// Compressed sparse column: in-neighbors grouped by destination.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    /// In-degree per node.
+    pub degree: Vec<u32>,
+    pub offsets: Vec<u32>,
+    pub neighbors: Vec<u32>,
+    pub edge_idx: Vec<u32>,
+}
+
+fn bucket(
+    n: usize,
+    m: usize,
+    key: impl Fn(usize) -> usize,
+    val: impl Fn(usize) -> u32,
+) -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
+    // Single-pass counting sort: the linear-time analog of the paper's
+    // two-pass streaming hardware converter.
+    let mut degree = vec![0u32; n];
+    for e in 0..m {
+        degree[key(e)] += 1;
+    }
+    let mut offsets = vec![0u32; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + degree[v];
+    }
+    let mut cursor = offsets[..n].to_vec();
+    let mut neighbors = vec![0u32; m];
+    let mut edge_idx = vec![0u32; m];
+    for e in 0..m {
+        let k = key(e);
+        let slot = cursor[k] as usize;
+        neighbors[slot] = val(e);
+        edge_idx[slot] = e as u32;
+        cursor[k] += 1;
+    }
+    (degree, offsets, neighbors, edge_idx)
+}
+
+impl Csr {
+    /// COO -> CSR conversion (group by source node).
+    pub fn from_coo(g: &CooGraph) -> Csr {
+        let (degree, offsets, neighbors, edge_idx) = bucket(
+            g.n,
+            g.edges.len(),
+            |e| g.edges[e].0 as usize,
+            |e| g.edges[e].1,
+        );
+        Csr {
+            degree,
+            offsets,
+            neighbors,
+            edge_idx,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.degree.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Out-neighbors of `v` (the same-colored slice of Fig. 1).
+    pub fn row(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// COO edge ids matching `row(v)` entry-for-entry.
+    pub fn row_edges(&self, v: usize) -> &[u32] {
+        &self.edge_idx[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+}
+
+impl Csc {
+    /// COO -> CSC conversion (group by destination node).
+    pub fn from_coo(g: &CooGraph) -> Csc {
+        let (degree, offsets, neighbors, edge_idx) = bucket(
+            g.n,
+            g.edges.len(),
+            |e| g.edges[e].1 as usize,
+            |e| g.edges[e].0,
+        );
+        Csc {
+            degree,
+            offsets,
+            neighbors,
+            edge_idx,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.degree.len()
+    }
+
+    /// In-neighbors of `v`.
+    pub fn col(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    pub fn col_edges(&self, v: usize) -> &[u32] {
+        &self.edge_idx[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn fig1_graph() -> CooGraph {
+        // The example graph of paper Fig. 1: directed edges.
+        CooGraph {
+            n: 4,
+            edges: vec![(0, 1), (0, 2), (1, 2), (2, 3), (3, 0), (1, 3)],
+            node_feat: vec![0.0; 4],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        }
+    }
+
+    #[test]
+    fn csr_groups_by_source() {
+        let csr = Csr::from_coo(&fig1_graph());
+        assert_eq!(csr.degree, vec![2, 2, 1, 1]);
+        assert_eq!(csr.row(0), &[1, 2]);
+        assert_eq!(csr.row(1), &[2, 3]);
+        assert_eq!(csr.row(2), &[3]);
+        assert_eq!(csr.row(3), &[0]);
+    }
+
+    #[test]
+    fn csc_groups_by_destination() {
+        let csc = Csc::from_coo(&fig1_graph());
+        assert_eq!(csc.degree, vec![1, 1, 2, 2]);
+        assert_eq!(csc.col(2), &[0, 1]);
+        assert_eq!(csc.col(3), &[2, 1]);
+    }
+
+    #[test]
+    fn edge_idx_points_back_to_coo() {
+        let g = fig1_graph();
+        let csr = Csr::from_coo(&g);
+        for v in 0..g.n {
+            for (nbr, &ei) in csr.row(v).iter().zip(csr.row_edges(v)) {
+                assert_eq!(g.edges[ei as usize], (v as u32, *nbr));
+            }
+        }
+    }
+
+    fn random_coo(rng: &mut Rng) -> CooGraph {
+        let n = rng.range(1, 40);
+        let m = rng.range(0, 120);
+        let edges: Vec<(u32, u32)> = (0..m)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        CooGraph {
+            n,
+            edges,
+            node_feat: vec![0.0; n],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        }
+    }
+
+    #[test]
+    fn prop_csr_roundtrips_edge_multiset() {
+        forall("csr-roundtrip", 200, 0xC5A, |rng| {
+            let g = random_coo(rng);
+            let csr = Csr::from_coo(&g);
+            let mut rebuilt: Vec<(u32, u32)> = (0..g.n)
+                .flat_map(|v| {
+                    csr.row(v).iter().map(move |&t| (v as u32, t))
+                })
+                .collect();
+            let mut orig = g.edges.clone();
+            rebuilt.sort_unstable();
+            orig.sort_unstable();
+            prop_assert!(rebuilt == orig, "edge multiset changed");
+            prop_assert!(
+                csr.num_edges() == g.edges.len(),
+                "edge count changed"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_csc_is_csr_of_transpose() {
+        forall("csc-transpose", 200, 0xC5C, |rng| {
+            let g = random_coo(rng);
+            let csc = Csc::from_coo(&g);
+            let gt = CooGraph {
+                edges: g.edges.iter().map(|&(s, t)| (t, s)).collect(),
+                ..g.clone()
+            };
+            let csr_t = Csr::from_coo(&gt);
+            prop_assert!(
+                csc.degree == csr_t.degree
+                    && csc.offsets == csr_t.offsets
+                    && csc.neighbors == csr_t.neighbors,
+                "CSC != CSR(G^T)"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_degree_sums_to_edge_count() {
+        forall("degree-sum", 100, 0xDE6, |rng| {
+            let g = random_coo(rng);
+            let csr = Csr::from_coo(&g);
+            let total: u32 = csr.degree.iter().sum();
+            prop_assert!(
+                total as usize == g.edges.len(),
+                "sum(degree) {} != E {}",
+                total,
+                g.edges.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CooGraph {
+            n: 3,
+            edges: vec![],
+            node_feat: vec![0.0; 3],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        let csr = Csr::from_coo(&g);
+        assert_eq!(csr.degree, vec![0, 0, 0]);
+        assert!(csr.row(1).is_empty());
+    }
+}

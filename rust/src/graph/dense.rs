@@ -1,0 +1,194 @@
+//! Sparse -> padded-dense densification: the contract with the AOT
+//! artifacts (mirrors `python/compile/graphgen.densify` bit-for-bit).
+//!
+//! Dense tensors are what the TPU-adapted kernels consume (DESIGN.md
+//! §Hardware-Adaptation): adjacency as a routing matrix, features
+//! zero-padded to the artifact's node capacity, mask marking real nodes.
+
+use anyhow::{bail, Result};
+
+use super::coo::CooGraph;
+
+/// Padded dense tensors for one graph, in artifact input layout.
+#[derive(Clone, Debug)]
+pub struct DenseGraph {
+    pub n_max: usize,
+    pub n_real: usize,
+    pub f_node: usize,
+    /// [n_max, f_node] row-major.
+    pub x: Vec<f32>,
+    /// [n_max, n_max] row-major; adj[i*n_max+j] = 1 iff edge j -> i.
+    pub adj: Vec<f32>,
+    /// [n_max, n_max, f_edge] row-major (empty when f_edge = 0).
+    pub edge_attr: Vec<f32>,
+    pub f_edge: usize,
+    /// [n_max] 1.0 for real nodes.
+    pub mask: Vec<f32>,
+    /// [n_max] Laplacian eigenvector (zeros unless filled by spectral).
+    pub eig: Vec<f32>,
+}
+
+impl DenseGraph {
+    /// Densify a COO graph into `n_max`-padded tensors.
+    /// `with_edge_attr` controls whether the [N, N, f_edge] tensor is
+    /// materialized (GIN models only — it is the biggest buffer).
+    pub fn from_coo(g: &CooGraph, n_max: usize, with_edge_attr: bool) -> Result<DenseGraph> {
+        if g.n > n_max {
+            bail!("graph has {} nodes, exceeds capacity {}", g.n, n_max);
+        }
+        g.validate()?;
+        let mut d = DenseGraph {
+            n_max,
+            n_real: g.n,
+            f_node: g.f_node,
+            x: vec![0.0; n_max * g.f_node],
+            adj: vec![0.0; n_max * n_max],
+            edge_attr: if with_edge_attr {
+                vec![0.0; n_max * n_max * g.f_edge]
+            } else {
+                Vec::new()
+            },
+            f_edge: if with_edge_attr { g.f_edge } else { 0 },
+            mask: vec![0.0; n_max],
+            eig: vec![0.0; n_max],
+        };
+        d.fill_from(g)?;
+        Ok(d)
+    }
+
+    /// Re-fill in place from another graph (zero-allocation hot path for
+    /// the serving pipeline — buffers are reused across requests).
+    pub fn fill_from(&mut self, g: &CooGraph) -> Result<()> {
+        if g.n > self.n_max {
+            bail!("graph has {} nodes, exceeds capacity {}", g.n, self.n_max);
+        }
+        if g.f_node != self.f_node {
+            bail!("node feature width {} != {}", g.f_node, self.f_node);
+        }
+        if self.f_edge != 0 && g.f_edge != self.f_edge {
+            bail!("edge feature width {} != {}", g.f_edge, self.f_edge);
+        }
+        let nm = self.n_max;
+        self.x.fill(0.0);
+        self.adj.fill(0.0);
+        self.edge_attr.fill(0.0);
+        self.mask.fill(0.0);
+        self.eig.fill(0.0);
+        self.n_real = g.n;
+        self.x[..g.n * g.f_node].copy_from_slice(&g.node_feat);
+        for (ei, &(s, t)) in g.edges.iter().enumerate() {
+            let (s, t) = (s as usize, t as usize);
+            // Kernel convention: adj[i, j] weights message j -> i.
+            self.adj[t * nm + s] = 1.0;
+            if self.f_edge > 0 {
+                let src = &g.edge_feat[ei * g.f_edge..(ei + 1) * g.f_edge];
+                let off = (t * nm + s) * self.f_edge;
+                self.edge_attr[off..off + self.f_edge].copy_from_slice(src);
+            }
+        }
+        self.mask[..g.n].fill(1.0);
+        Ok(())
+    }
+
+    pub fn adj_at(&self, i: usize, j: usize) -> f32 {
+        self.adj[i * self.n_max + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::forall;
+
+    fn sample() -> CooGraph {
+        CooGraph::from_undirected(
+            3,
+            &[(0, 1), (1, 2)],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            2,
+            &[7.0, 8.0],
+            1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pads_and_masks() {
+        let d = DenseGraph::from_coo(&sample(), 5, true).unwrap();
+        assert_eq!(d.mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&d.x[..6], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(d.x[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_for_undirected() {
+        let d = DenseGraph::from_coo(&sample(), 4, false).unwrap();
+        assert_eq!(d.adj_at(0, 1), 1.0);
+        assert_eq!(d.adj_at(1, 0), 1.0);
+        assert_eq!(d.adj_at(0, 2), 0.0);
+        let e: f32 = d.adj.iter().sum();
+        assert_eq!(e, 4.0); // 2 undirected edges -> 4 directed entries
+    }
+
+    #[test]
+    fn edge_attr_mirrored() {
+        let d = DenseGraph::from_coo(&sample(), 4, true).unwrap();
+        let nm = 4;
+        assert_eq!(d.edge_attr[(0 * nm + 1) * 1], 7.0);
+        assert_eq!(d.edge_attr[(1 * nm + 0) * 1], 7.0);
+        assert_eq!(d.edge_attr[(2 * nm + 1) * 1], 8.0);
+    }
+
+    #[test]
+    fn rejects_oversized_graph() {
+        assert!(DenseGraph::from_coo(&sample(), 2, false).is_err());
+    }
+
+    #[test]
+    fn refill_equals_fresh() {
+        let g1 = sample();
+        let mut g2 = sample();
+        g2.node_feat.iter_mut().for_each(|v| *v += 10.0);
+        let mut d = DenseGraph::from_coo(&g1, 6, true).unwrap();
+        d.fill_from(&g2).unwrap();
+        let fresh = DenseGraph::from_coo(&g2, 6, true).unwrap();
+        assert_eq!(d.x, fresh.x);
+        assert_eq!(d.adj, fresh.adj);
+        assert_eq!(d.edge_attr, fresh.edge_attr);
+        assert_eq!(d.mask, fresh.mask);
+    }
+
+    #[test]
+    fn prop_adj_entry_count_matches_edges() {
+        forall("dense-edges", 100, 0xDE45E, |rng| {
+            let n = rng.range(1, 20);
+            let mut und = Vec::new();
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    if rng.chance(0.3) {
+                        und.push((u as u32, v as u32));
+                    }
+                }
+            }
+            let g = CooGraph::from_undirected(
+                n,
+                &und,
+                vec![0.0; n],
+                1,
+                &vec![0.0; und.len()],
+                1,
+            )
+            .unwrap();
+            let d = DenseGraph::from_coo(&g, n + 3, false).unwrap();
+            let nnz = d.adj.iter().filter(|&&v| v != 0.0).count();
+            prop_assert!(
+                nnz == und.len() * 2,
+                "nnz {} != 2*undirected {}",
+                nnz,
+                und.len() * 2
+            );
+            Ok(())
+        });
+    }
+}

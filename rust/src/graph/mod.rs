@@ -1,0 +1,14 @@
+//! Graph data representations (paper Section 3.2): COO raw input,
+//! CSR/CSC compressed adjacency with the on-chip converter, dense padded
+//! tensors for the TPU-adapted kernels, and the spectral substrate DGN
+//! needs for its directional aggregation.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod spectral;
+
+pub use coo::CooGraph;
+pub use csr::{Csc, Csr};
+pub use dense::DenseGraph;
+pub use spectral::{fiedler_vector, EigResult};

@@ -1,0 +1,262 @@
+//! Laplacian eigenvector substrate for DGN (paper Section 4.4).
+//!
+//! DGN "accepts the precomputed Laplacian eigenvectors as a parameter";
+//! in the paper's flow they come from the host. Here the serving path
+//! computes the first non-trivial eigenvector of the symmetric
+//! normalized Laplacian L = I - D^-1/2 A D^-1/2 with deflated power
+//! iteration on M = 2I - L (so the *smallest* Laplacian eigenvalues
+//! become dominant), which is O(E) per iteration on CSR — suitable for
+//! the streaming path.
+//!
+//! Sign convention (shared with python graphgen.laplacian_eigvec): the
+//! entry of largest magnitude is positive.
+
+use super::coo::CooGraph;
+use super::csr::Csr;
+
+/// Result of the eigensolve, with convergence diagnostics.
+#[derive(Clone, Debug)]
+pub struct EigResult {
+    /// First non-trivial eigenvector of L_sym, unit norm, sign-fixed.
+    pub vector: Vec<f32>,
+    /// Rayleigh quotient v^T L v (the eigenvalue estimate, in [0, 2]).
+    pub value: f64,
+    pub iterations: usize,
+}
+
+/// Power iteration with deflation of the trivial kernel vector
+/// v0 = D^{1/2} 1 / ||D^{1/2} 1||.
+pub fn fiedler_vector(g: &CooGraph, max_iter: usize, tol: f64) -> EigResult {
+    let n = g.n;
+    if n == 0 {
+        return EigResult {
+            vector: vec![],
+            value: 0.0,
+            iterations: 0,
+        };
+    }
+    let csr = Csr::from_coo(g);
+    let deg: Vec<f64> = csr.degree.iter().map(|&d| d as f64).collect();
+    let dinv_sqrt: Vec<f64> = deg
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+
+    // Trivial eigenvector of L_sym (eigenvalue 0): D^{1/2} 1, normalized.
+    let mut v0: Vec<f64> = deg.iter().map(|&d| d.sqrt()).collect();
+    let norm0 = l2(&v0);
+    if norm0 > 0.0 {
+        v0.iter_mut().for_each(|x| *x /= norm0);
+    }
+
+    // M v = 2v - L v = v + D^-1/2 A D^-1/2 v ; dominant non-deflated
+    // eigenpair of M is (2 - lambda_2, v_2).
+    let matvec = |v: &[f64], out: &mut [f64]| {
+        for i in 0..n {
+            let mut acc = 0.0;
+            for (k, &j) in csr.row(i).iter().enumerate() {
+                let _ = k;
+                acc += dinv_sqrt[j as usize] * v[j as usize];
+            }
+            out[i] = v[i] + dinv_sqrt[i] * acc;
+        }
+    };
+
+    // Deterministic pseudo-random start, deflated against v0.
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| {
+            let h = (i as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .rotate_left(31);
+            (h as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    deflate(&mut v, &v0);
+    normalize(&mut v);
+
+    let mut tmp = vec![0.0f64; n];
+    let mut iterations = 0;
+    let mut prev = vec![0.0f64; n];
+    for it in 0..max_iter {
+        iterations = it + 1;
+        matvec(&v, &mut tmp);
+        deflate(&mut tmp, &v0);
+        let norm = l2(&tmp);
+        if norm < 1e-30 {
+            // Graph with no non-trivial structure (e.g. n == 1).
+            break;
+        }
+        tmp.iter_mut().for_each(|x| *x /= norm);
+        let delta: f64 = v
+            .iter()
+            .zip(&tmp)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        prev.copy_from_slice(&v);
+        v.copy_from_slice(&tmp);
+        if delta < tol && it > 2 {
+            break;
+        }
+    }
+
+    // Rayleigh quotient on L: v^T L v = |v|^2 - v^T (D^-1/2 A D^-1/2) v.
+    matvec(&v, &mut tmp); // tmp = v + Av'
+    let vav: f64 = v.iter().zip(&tmp).map(|(a, b)| a * (b - a)).sum();
+    let value = (1.0 - vav).clamp(0.0, 2.0);
+
+    // Sign fix: largest-magnitude entry positive.
+    let mut imax = 0;
+    for i in 0..n {
+        if v[i].abs() > v[imax].abs() {
+            imax = i;
+        }
+    }
+    if n > 0 && v[imax] < 0.0 {
+        v.iter_mut().for_each(|x| *x = -*x);
+    }
+
+    EigResult {
+        vector: v.iter().map(|&x| x as f32).collect(),
+        value,
+        iterations,
+    }
+}
+
+fn l2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = l2(v);
+    if n > 0.0 {
+        v.iter_mut().for_each(|x| *x /= n);
+    }
+}
+
+fn deflate(v: &mut [f64], v0: &[f64]) {
+    let dot: f64 = v.iter().zip(v0).map(|(a, b)| a * b).sum();
+    for (x, &b) in v.iter_mut().zip(v0) {
+        *x -= dot * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(n: usize, und: &[(u32, u32)]) -> CooGraph {
+        CooGraph::from_undirected(n, und, vec![0.0; n], 1, &vec![0.0; und.len() * 0], 0)
+            .unwrap()
+    }
+
+    fn laplacian_residual(g: &CooGraph, r: &EigResult) -> f64 {
+        // || L v - lambda v ||
+        let n = g.n;
+        let csr = Csr::from_coo(g);
+        let dinv: Vec<f64> = csr
+            .degree
+            .iter()
+            .map(|&d| if d > 0 { 1.0 / (d as f64).sqrt() } else { 0.0 })
+            .collect();
+        let v: Vec<f64> = r.vector.iter().map(|&x| x as f64).collect();
+        let mut res = 0.0f64;
+        for i in 0..n {
+            let mut av = 0.0;
+            for &j in csr.row(i) {
+                av += dinv[j as usize] * v[j as usize];
+            }
+            let lv = v[i] - dinv[i] * av;
+            res += (lv - r.value * v[i]).powi(2);
+        }
+        res.sqrt()
+    }
+
+    #[test]
+    fn path2_eigenvalue_two() {
+        // P2: L_sym spectrum {0, 2}; non-trivial eigenvector (1,-1)/sqrt2.
+        let g = graph(2, &[(0, 1)]);
+        let r = fiedler_vector(&g, 500, 1e-12);
+        assert!((r.value - 2.0).abs() < 1e-6, "lambda={}", r.value);
+        assert!((r.vector[0] + r.vector[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn path3_eigenvalue_one() {
+        // P3: L_sym spectrum {0, 1, 2}; power iteration on 2I-L finds
+        // the *smallest* non-trivial lambda = 1.
+        let g = graph(3, &[(0, 1), (1, 2)]);
+        let r = fiedler_vector(&g, 2000, 1e-12);
+        assert!((r.value - 1.0).abs() < 1e-5, "lambda={}", r.value);
+        // Eigenvector for lambda=1 on P3: (1, 0, -1)/sqrt2 direction.
+        assert!(r.vector[1].abs() < 1e-4);
+    }
+
+    #[test]
+    fn eigen_residual_small_on_random_graph() {
+        let und: Vec<(u32, u32)> = vec![
+            (0, 1),
+            (0, 2),
+            (1, 3),
+            (2, 3),
+            (3, 4),
+            (4, 5),
+            (2, 5),
+            (1, 6),
+            (6, 7),
+            (5, 7),
+        ];
+        let g = graph(8, &und);
+        let r = fiedler_vector(&g, 5000, 1e-13);
+        assert!(
+            laplacian_residual(&g, &r) < 1e-4,
+            "residual {}",
+            laplacian_residual(&g, &r)
+        );
+        assert!(r.value > 0.0 && r.value < 2.0);
+    }
+
+    #[test]
+    fn orthogonal_to_trivial_vector() {
+        let g = graph(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)]);
+        let r = fiedler_vector(&g, 2000, 1e-12);
+        let csr = Csr::from_coo(&g);
+        let dot: f64 = r
+            .vector
+            .iter()
+            .zip(&csr.degree)
+            .map(|(&v, &d)| v as f64 * (d as f64).sqrt())
+            .sum();
+        assert!(dot.abs() < 1e-5, "not deflated: {dot}");
+    }
+
+    #[test]
+    fn sign_convention_largest_entry_positive() {
+        let g = graph(4, &[(0, 1), (1, 2), (2, 3)]);
+        let r = fiedler_vector(&g, 2000, 1e-12);
+        // First index of maximum magnitude (strict-gt scan) — the same
+        // tie-break as the library and as numpy's argmax in graphgen.
+        let mut imax = 0;
+        for i in 0..4 {
+            if r.vector[i].abs() > r.vector[imax].abs() {
+                imax = i;
+            }
+        }
+        assert!(r.vector[imax] > 0.0);
+    }
+
+    #[test]
+    fn unit_norm() {
+        let g = graph(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let r = fiedler_vector(&g, 2000, 1e-12);
+        let n: f64 = r.vector.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((n - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn singleton_graph_does_not_crash() {
+        let g = graph(1, &[]);
+        let r = fiedler_vector(&g, 100, 1e-12);
+        assert_eq!(r.vector.len(), 1);
+    }
+}

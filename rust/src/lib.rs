@@ -1,0 +1,45 @@
+//! # GenGNN — a generic GNN acceleration framework
+//!
+//! Reproduction of *GenGNN: A Generic FPGA Framework for Graph Neural
+//! Network Acceleration* (Abi-Karam et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   streaming inference server over raw COO graphs with zero
+//!   preprocessing ([`coordinator`]), a cycle-level simulator of the
+//!   GenGNN microarchitecture ([`sim`]), an HLS-style resource
+//!   estimator ([`resources`]), and analytic CPU/GPU baselines
+//!   ([`baselines`]).
+//! * **Layer 2** — JAX forward passes of the six representative GNNs
+//!   (GCN, GIN, GIN+VN, GAT, PNA, DGN), AOT-lowered to HLO text at
+//!   build time (`python/compile/`), loaded and executed from the Rust
+//!   hot path via PJRT ([`runtime`]). Python never runs at request time.
+//! * **Layer 1** — Pallas kernels for the compute hot-spots (gather,
+//!   MLP, attention, multi-aggregation), lowered into the same HLO.
+//!
+//! See `DESIGN.md` for the experiment inventory and the FPGA→TPU
+//! hardware-adaptation rationale, and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod datagen;
+pub mod dse;
+pub mod graph;
+pub mod models;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{Server, ServerConfig};
+    pub use crate::datagen::{molecular_graph, MolConfig};
+    pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph};
+    pub use crate::models::{GnnKind, ModelConfig};
+    pub use crate::runtime::{Artifacts, Engine};
+    pub use crate::sim::{Accelerator, PipelineMode};
+    pub use crate::util::rng::Rng;
+}

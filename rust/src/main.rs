@@ -1,0 +1,276 @@
+//! `gengnn` — command-line entrypoint for the GenGNN reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! gengnn serve          stream synthetic molecular graphs through the
+//!                       PJRT serving stack and print latency metrics
+//! gengnn infer          run one model on one generated graph
+//! gengnn simulate       cycle-level simulation of one model/graph
+//! gengnn resources      Table 4 (+ --detailed component inventory)
+//! gengnn report-fig7    Fig. 7  (MolHIV / MolPCBA latency bars)
+//! gengnn report-fig8    Fig. 8  (large-graph DGN latency)
+//! gengnn report-fig9    Fig. 9  (pipelining ablation, parts a/b/c)
+//! gengnn report-table4  Table 4 (resource utilization)
+//! gengnn report-table5  Table 5 (large-graph datasets + resources)
+//! gengnn selftest       golden cross-check of every artifact
+//! ```
+
+use anyhow::{bail, Result};
+
+use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::datagen::{molecular, MolConfig};
+use gengnn::models::ModelConfig;
+use gengnn::report::{fig7, fig8, fig9, table4, table5};
+use gengnn::runtime::{Artifacts, Engine, Golden};
+use gengnn::sim::{Accelerator, PipelineMode};
+use gengnn::util::cli::Args;
+use gengnn::util::rng::Rng;
+use gengnn::util::stats::fmt_secs;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    if let Err(e) = dispatch(&cmd, rest) {
+        eprintln!("gengnn {cmd}: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: gengnn <serve|infer|simulate|resources|dse|report-fig7|report-fig8|\
+         report-fig9|report-table4|report-table5|selftest> [--flags]"
+    );
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
+        "infer" => cmd_infer(Args::parse(rest, &[])?),
+        "simulate" => cmd_simulate(Args::parse(rest, &[])?),
+        "resources" | "report-table4" => {
+            cmd_table4(Args::parse(rest, &["detailed"])?)
+        }
+        "report-table5" => {
+            println!("{}", table5::render());
+            Ok(())
+        }
+        "report-fig7" => cmd_fig7(Args::parse(rest, &[])?),
+        "report-fig8" => {
+            let a = Args::parse(rest, &[])?;
+            println!("{}", fig8::render(&fig8::compute(a.u64_or("seed", 2)?)));
+            Ok(())
+        }
+        "report-fig9" => cmd_fig9(Args::parse(rest, &[])?),
+        "dse" => cmd_dse(Args::parse(rest, &[])?),
+        "selftest" => cmd_selftest(Args::parse(rest, &[])?),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        _ => bail!("unknown subcommand {cmd:?}"),
+    }
+}
+
+fn cmd_serve(a: Args) -> Result<()> {
+    let models = a.list_or("models", &["gcn", "gat", "dgn"]);
+    let count = a.usize_or("count", 500)?;
+    let seed = a.u64_or("seed", 7)?;
+    let cfg = ServerConfig {
+        models: models.clone(),
+        prep_workers: a.usize_or("prep-workers", 2)?,
+        queue_capacity: a.usize_or("queue", 256)?,
+        admission: if a.has("reject") {
+            AdmissionPolicy::Reject
+        } else {
+            AdmissionPolicy::Block
+        },
+        batch: BatchPolicy {
+            max_batch: a.usize_or("max-batch", 8)?,
+            sticky: true,
+        },
+        ..ServerConfig::default()
+    };
+    eprintln!("[serve] compiling {models:?} ...");
+    let server = Server::start(cfg)?;
+    let responses = server.responses();
+    eprintln!("[serve] streaming {count} molecular graphs ...");
+
+    let drain = std::thread::spawn(move || {
+        let mut ok = 0u64;
+        let mut err = 0u64;
+        while let Some(r) = responses.recv() {
+            if r.is_ok() {
+                ok += 1;
+            } else {
+                err += 1;
+            }
+            if ok + err >= count as u64 {
+                break;
+            }
+        }
+        (ok, err)
+    });
+
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let mut accepted = 0u64;
+    for i in 0..count {
+        let g = molecular::molecular_graph(&mut rng, &MolConfig::molhiv());
+        let model = &models[i % models.len()];
+        if server.submit(model, g).0 == Admission::Accepted {
+            accepted += 1;
+        }
+    }
+    let (ok, err) = drain.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    println!("{}", metrics.render());
+    println!(
+        "accepted {accepted}/{count}, ok {ok}, err {err}, wall {} ({:.0} graphs/s)",
+        fmt_secs(wall),
+        ok as f64 / wall
+    );
+    Ok(())
+}
+
+fn cmd_infer(a: Args) -> Result<()> {
+    let model = a.str_or("model", "gcn").to_string();
+    let seed = a.u64_or("seed", 1)?;
+    let artifacts = Artifacts::load(a.str_or(
+        "artifacts",
+        Artifacts::default_dir().to_str().unwrap(),
+    ))?;
+    let mut engine = Engine::load(&artifacts, &[&model])?;
+    let g = molecular::molecular_graph(&mut Rng::new(seed), &MolConfig::molhiv());
+    let t0 = std::time::Instant::now();
+    let out = engine.infer(&model, &g)?;
+    println!(
+        "model={model} n={} e={} out={:?} ({})",
+        g.n,
+        g.num_edges(),
+        &out[..out.len().min(8)],
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_simulate(a: Args) -> Result<()> {
+    let model = ModelConfig::by_name(a.str_or("model", "gin"))?;
+    let seed = a.u64_or("seed", 1)?;
+    let count = a.usize_or("count", 100)?;
+    let graphs = molecular::dataset(seed, count, &MolConfig::molhiv());
+    println!(
+        "{:<14} {:>12} {:>14}",
+        "pipeline", "avg cycles", "avg latency"
+    );
+    for mode in PipelineMode::all() {
+        let acc = Accelerator::new(model.clone(), mode);
+        let mean_cycles: f64 = graphs
+            .iter()
+            .map(|g| acc.simulate(g).cycles as f64)
+            .sum::<f64>()
+            / graphs.len() as f64;
+        let mean_secs = acc.mean_latency(&graphs);
+        println!(
+            "{:<14} {:>12.0} {:>14}",
+            mode.as_str(),
+            mean_cycles,
+            fmt_secs(mean_secs)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table4(a: Args) -> Result<()> {
+    if a.has("detailed") {
+        println!("{}", table4::render_detailed());
+    } else {
+        println!("{}", table4::render());
+    }
+    Ok(())
+}
+
+fn cmd_fig7(a: Args) -> Result<()> {
+    let count = a.usize_or("count", 300)?;
+    let seed = a.u64_or("seed", 1)?;
+    for ds in [fig7::MolDataset::MolHiv, fig7::MolDataset::MolPcba] {
+        let rows = fig7::compute(ds, count, seed);
+        println!("{}", fig7::render(ds, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_fig9(a: Args) -> Result<()> {
+    let part = a.str_or("part", "all").to_string();
+    let count = a.usize_or("count", 200)?;
+    let seed = a.u64_or("seed", 3)?;
+    if part == "a" || part == "all" {
+        println!("{}", fig9::render_grid(&fig9::default_grid(count, seed)));
+    }
+    if part == "b" || part == "all" {
+        let s = fig9::molhiv(count, seed, false);
+        print!("{}", fig9::render_mol("b: MolHIV, GIN", &s));
+    }
+    if part == "c" || part == "all" {
+        let s = fig9::molhiv(count, seed, true);
+        print!("{}", fig9::render_mol("c: MolHIV, GIN+VN", &s));
+    }
+    Ok(())
+}
+
+fn cmd_dse(a: Args) -> Result<()> {
+    let model = ModelConfig::by_name(a.str_or("model", "gin"))?;
+    let count = a.usize_or("count", 80)?;
+    let seed = a.u64_or("seed", 3)?;
+    let graphs = molecular::dataset(seed, count, &MolConfig::molhiv());
+    let evals = gengnn::dse::sweep(&model, &graphs, &gengnn::dse::default_space());
+    let front = gengnn::dse::pareto(&evals);
+    println!(
+        "swept {} design points over {count} graphs; {} on the frontier\n",
+        evals.len(),
+        front.len()
+    );
+    println!("{}", gengnn::dse::render(&model, &front));
+    Ok(())
+}
+
+fn cmd_selftest(a: Args) -> Result<()> {
+    let artifacts = Artifacts::load(a.str_or(
+        "artifacts",
+        Artifacts::default_dir().to_str().unwrap(),
+    ))?;
+    let mut failures = 0;
+    for meta in artifacts.models.clone() {
+        let mut engine = Engine::load(&artifacts, &[&meta.name])?;
+        let golden = Golden::load(&meta)?;
+        let t0 = std::time::Instant::now();
+        let out = engine.infer_with_eig(&meta.name, &golden.graph, golden.eig.as_deref())?;
+        let ok = out.len() == golden.output.len()
+            && out
+                .iter()
+                .zip(&golden.output)
+                .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + x.abs().max(y.abs())));
+        println!(
+            "{:<10} {} ({} outputs, {})",
+            meta.name,
+            if ok { "OK" } else { "MISMATCH" },
+            out.len(),
+            fmt_secs(t0.elapsed().as_secs_f64())
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} golden mismatches");
+    }
+    println!("all artifacts match their goldens");
+    Ok(())
+}

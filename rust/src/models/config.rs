@@ -1,0 +1,295 @@
+//! Model zoo configuration — the six representative GNNs of paper
+//! Table 2 with the exact hyperparameters of Section 5.1. These configs
+//! drive three independent consumers that must agree: the cycle-level
+//! simulator, the resource estimator, and the PJRT runtime (which
+//! cross-checks them against artifacts/manifest.json).
+
+use anyhow::{bail, Result};
+
+/// GNN family (paper Table 2, one representative per family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GnnKind {
+    /// SpMM-style convolution.
+    Gcn,
+    /// Edge embeddings + MLP transform, SpMM does not apply.
+    Gin,
+    /// GIN plus a virtual node connected to all nodes.
+    GinVn,
+    /// Multi-head self-attention.
+    Gat,
+    /// Multiple simultaneous aggregators with degree scalers.
+    Pna,
+    /// Directional aggregation along Laplacian eigenvectors.
+    Dgn,
+}
+
+impl GnnKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GnnKind::Gcn => "gcn",
+            GnnKind::Gin => "gin",
+            GnnKind::GinVn => "gin_vn",
+            GnnKind::Gat => "gat",
+            GnnKind::Pna => "pna",
+            GnnKind::Dgn => "dgn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<GnnKind> {
+        Ok(match s {
+            "gcn" => GnnKind::Gcn,
+            "gin" => GnnKind::Gin,
+            "gin_vn" | "gin+vn" | "ginvn" => GnnKind::GinVn,
+            "gat" => GnnKind::Gat,
+            "pna" => GnnKind::Pna,
+            "dgn" | "dgn_large" => GnnKind::Dgn,
+            _ => bail!("unknown model {s:?}"),
+        })
+    }
+
+    /// Display name used in the paper's tables/figures.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            GnnKind::Gcn => "GCN",
+            GnnKind::Gin => "GIN",
+            GnnKind::GinVn => "GIN+VN",
+            GnnKind::Gat => "GAT",
+            GnnKind::Pna => "PNA",
+            GnnKind::Dgn => "DGN",
+        }
+    }
+}
+
+/// Full configuration of one deployable model.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Registry key (matches the artifact name).
+    pub name: &'static str,
+    pub kind: GnnKind,
+    pub layers: usize,
+    /// Node embedding dimension per layer.
+    pub dim: usize,
+    /// Attention heads (GAT only, 0 otherwise).
+    pub heads: usize,
+    /// Padded node capacity of the AOT artifact.
+    pub n_max: usize,
+    /// Raw input feature width.
+    pub in_dim: usize,
+    /// Raw edge feature width (0 when unused).
+    pub edge_dim: usize,
+    pub out_dim: usize,
+    pub needs_eig: bool,
+    pub needs_edge_attr: bool,
+    pub node_level: bool,
+    /// Hidden sizes of the prediction head MLP (paper Section 5.1).
+    pub head_dims: Vec<usize>,
+}
+
+impl ModelConfig {
+    /// The on-chip registry: paper Section 5.1 hyperparameters.
+    pub fn registry() -> Vec<ModelConfig> {
+        vec![
+            ModelConfig {
+                name: "gcn",
+                kind: GnnKind::Gcn,
+                layers: 5,
+                dim: 100,
+                heads: 0,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 0,
+                out_dim: 1,
+                needs_eig: false,
+                needs_edge_attr: false,
+                node_level: false,
+                head_dims: vec![1],
+            },
+            ModelConfig {
+                name: "gin",
+                kind: GnnKind::Gin,
+                layers: 5,
+                dim: 100,
+                heads: 0,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 3,
+                out_dim: 1,
+                needs_eig: false,
+                needs_edge_attr: true,
+                node_level: false,
+                head_dims: vec![1],
+            },
+            ModelConfig {
+                name: "gin_vn",
+                kind: GnnKind::GinVn,
+                layers: 5,
+                dim: 100,
+                heads: 0,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 3,
+                out_dim: 1,
+                needs_eig: false,
+                needs_edge_attr: true,
+                node_level: false,
+                head_dims: vec![1],
+            },
+            ModelConfig {
+                name: "gat",
+                kind: GnnKind::Gat,
+                layers: 5,
+                dim: 64,
+                heads: 4,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 0,
+                out_dim: 1,
+                needs_eig: false,
+                needs_edge_attr: false,
+                node_level: false,
+                head_dims: vec![1],
+            },
+            ModelConfig {
+                name: "pna",
+                kind: GnnKind::Pna,
+                layers: 4,
+                dim: 80,
+                heads: 0,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 0,
+                out_dim: 1,
+                needs_eig: false,
+                needs_edge_attr: false,
+                node_level: false,
+                head_dims: vec![40, 20, 1],
+            },
+            ModelConfig {
+                name: "dgn",
+                kind: GnnKind::Dgn,
+                layers: 4,
+                dim: 100,
+                heads: 0,
+                n_max: 64,
+                in_dim: 9,
+                edge_dim: 0,
+                out_dim: 1,
+                needs_eig: true,
+                needs_edge_attr: false,
+                node_level: false,
+                head_dims: vec![50, 25, 1],
+            },
+            ModelConfig {
+                name: "dgn_large",
+                kind: GnnKind::Dgn,
+                layers: 4,
+                dim: 100,
+                heads: 0,
+                n_max: 512,
+                in_dim: 500,
+                edge_dim: 0,
+                out_dim: 3,
+                needs_eig: true,
+                needs_edge_attr: false,
+                node_level: true,
+                head_dims: vec![50, 25, 3],
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        Self::registry()
+            .into_iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+    }
+
+    /// The six molecular (Fig. 7) models in paper order.
+    pub fn fig7_models() -> Vec<ModelConfig> {
+        ["gin", "gin_vn", "gcn", "pna", "gat", "dgn"]
+            .iter()
+            .map(|n| Self::by_name(n).unwrap())
+            .collect()
+    }
+
+    /// Approximate trained-parameter count (weights + biases), used by
+    /// the resource estimator for BRAM sizing.
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let embed = self.in_dim * d + d;
+        let head: usize = {
+            let mut dims = vec![d];
+            dims.extend(&self.head_dims);
+            dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+        };
+        let per_layer = match self.kind {
+            GnnKind::Gcn => d * d + d,
+            GnnKind::Gin => self.edge_dim * d + d + (d * 2 * d + 2 * d) + (2 * d * d + d),
+            GnnKind::GinVn => {
+                // GIN layer + virtual-node MLP.
+                self.edge_dim * d + d
+                    + (d * 2 * d + 2 * d)
+                    + (2 * d * d + d)
+                    + (d * 2 * d + 2 * d)
+                    + (2 * d * d + d)
+            }
+            GnnKind::Gat => d * d + d + 2 * d,
+            GnnKind::Pna => 12 * d * d + d,
+            GnnKind::Dgn => 2 * d * d + d,
+        };
+        embed + self.layers * per_layer + head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_models() {
+        let names: Vec<&str> =
+            ModelConfig::registry().iter().map(|m| m.name).collect();
+        for want in ["gcn", "gin", "gin_vn", "gat", "pna", "dgn", "dgn_large"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn paper_hyperparameters() {
+        // Section 5.1: GCN/GIN 5 layers dim 100; PNA 4 layers dim 80
+        // head (40,20,1); DGN 4 layers dim 100 head (50,25,1); GAT 5
+        // layers 4 heads x 16.
+        let gcn = ModelConfig::by_name("gcn").unwrap();
+        assert_eq!((gcn.layers, gcn.dim), (5, 100));
+        let pna = ModelConfig::by_name("pna").unwrap();
+        assert_eq!((pna.layers, pna.dim), (4, 80));
+        assert_eq!(pna.head_dims, vec![40, 20, 1]);
+        let dgn = ModelConfig::by_name("dgn").unwrap();
+        assert_eq!(dgn.head_dims, vec![50, 25, 1]);
+        let gat = ModelConfig::by_name("gat").unwrap();
+        assert_eq!(gat.dim / gat.heads, 16);
+    }
+
+    #[test]
+    fn parse_kind_aliases() {
+        assert_eq!(GnnKind::parse("gin+vn").unwrap(), GnnKind::GinVn);
+        assert_eq!(GnnKind::parse("dgn_large").unwrap(), GnnKind::Dgn);
+        assert!(GnnKind::parse("transformer").is_err());
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // 5-layer d=100 GIN: ~310k params (2 MLP layers of ~20k each x5).
+        let gin = ModelConfig::by_name("gin").unwrap().param_count();
+        assert!((150_000..600_000).contains(&gin), "gin params {gin}");
+        let vn = ModelConfig::by_name("gin_vn").unwrap().param_count();
+        assert!(vn > gin, "VN adds parameters");
+    }
+
+    #[test]
+    fn fig7_order_matches_paper() {
+        let names: Vec<&str> =
+            ModelConfig::fig7_models().iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["gin", "gin_vn", "gcn", "pna", "gat", "dgn"]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Model zoo: configurations for the paper's six representative GNNs
+//! (Table 2, hyperparameters of Section 5.1).
+
+pub mod config;
+
+pub use config::{GnnKind, ModelConfig};

@@ -1,0 +1,177 @@
+//! Fig. 7 regeneration: average end-to-end latency per model on the
+//! molecular datasets, GenGNN (simulated U50) vs the CPU/GPU baselines.
+//!
+//! Paper envelopes (§5.3): on MolHIV GenGNN is 1.77–13.84× faster than
+//! CPU and 2.05–25.96× than GPU; on MolPCBA 1.64–9.69× / 1.92–17.66×;
+//! DGN shows the largest GPU speedup.
+
+use crate::baselines::{cpu, gpu, GraphStats, MOLPCBA_WARM_FACTOR};
+use crate::datagen::{molecular, MolConfig};
+use crate::models::ModelConfig;
+use crate::sim::{Accelerator, PipelineMode};
+
+/// One bar triple of Fig. 7.
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub model: String,
+    pub fpga_secs: f64,
+    pub cpu_secs: f64,
+    pub gpu_secs: f64,
+}
+
+impl Fig7Row {
+    pub fn cpu_speedup(&self) -> f64 {
+        self.cpu_secs / self.fpga_secs
+    }
+    pub fn gpu_speedup(&self) -> f64 {
+        self.gpu_secs / self.fpga_secs
+    }
+}
+
+/// Which half of Fig. 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MolDataset {
+    MolHiv,
+    MolPcba,
+}
+
+impl MolDataset {
+    pub fn config(&self) -> MolConfig {
+        match self {
+            MolDataset::MolHiv => MolConfig::molhiv(),
+            MolDataset::MolPcba => MolConfig::molpcba(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MolDataset::MolHiv => "MolHIV",
+            MolDataset::MolPcba => "MolPCBA",
+        }
+    }
+
+    /// Baseline warm factor (steady-state over the larger stream).
+    fn warm(&self) -> f64 {
+        match self {
+            MolDataset::MolHiv => 1.0,
+            MolDataset::MolPcba => MOLPCBA_WARM_FACTOR,
+        }
+    }
+}
+
+/// Compute all six rows over `count` generated graphs.
+pub fn compute(dataset: MolDataset, count: usize, seed: u64) -> Vec<Fig7Row> {
+    let graphs = molecular::dataset(seed, count, &dataset.config());
+    ModelConfig::fig7_models()
+        .into_iter()
+        .map(|cfg| {
+            let acc = Accelerator::new(cfg.clone(), PipelineMode::Streaming);
+            let fpga = acc.mean_latency(&graphs);
+            let (mut c, mut g) = (0.0, 0.0);
+            for gr in &graphs {
+                let s = GraphStats::of(gr);
+                c += cpu::latency(&cfg, s);
+                g += gpu::latency(&cfg, s);
+            }
+            let n = graphs.len() as f64;
+            Fig7Row {
+                model: cfg.kind.paper_name().to_string(),
+                fpga_secs: fpga,
+                cpu_secs: c / n * dataset.warm(),
+                gpu_secs: g / n * dataset.warm(),
+            }
+        })
+        .collect()
+}
+
+/// Render the figure as the series the paper plots.
+pub fn render(dataset: MolDataset, rows: &[Fig7Row]) -> String {
+    let mut out = format!(
+        "Fig. 7 ({}): average latency over test graphs\n{:<8} {:>12} {:>12} {:>12} {:>9} {:>9}\n",
+        dataset.name(),
+        "model",
+        "GenGNN",
+        "CPU",
+        "GPU",
+        "vs CPU",
+        "vs GPU"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:>11.1}µs {:>11.1}µs {:>11.1}µs {:>8.2}x {:>8.2}x\n",
+            r.model,
+            r.fpga_secs * 1e6,
+            r.cpu_secs * 1e6,
+            r.gpu_secs * 1e6,
+            r.cpu_speedup(),
+            r.gpu_speedup(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn molhiv_speedups_inside_paper_envelope() {
+        let rows = compute(MolDataset::MolHiv, 120, 0xF16_7);
+        for r in &rows {
+            assert!(
+                (1.5..=16.0).contains(&r.cpu_speedup()),
+                "{}: cpu speedup {:.2}",
+                r.model,
+                r.cpu_speedup()
+            );
+            assert!(
+                (1.8..=28.0).contains(&r.gpu_speedup()),
+                "{}: gpu speedup {:.2}",
+                r.model,
+                r.gpu_speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn dgn_has_largest_gpu_speedup() {
+        let rows = compute(MolDataset::MolHiv, 120, 0xF16_7);
+        let dgn = rows.iter().find(|r| r.model == "DGN").unwrap();
+        for r in &rows {
+            assert!(
+                dgn.gpu_speedup() >= r.gpu_speedup(),
+                "DGN {:.2} vs {} {:.2}",
+                dgn.gpu_speedup(),
+                r.model,
+                r.gpu_speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn molpcba_envelope_compresses() {
+        let hiv = compute(MolDataset::MolHiv, 120, 1);
+        let pcba = compute(MolDataset::MolPcba, 120, 1);
+        let max = |rows: &[Fig7Row]| {
+            rows.iter().map(|r| r.cpu_speedup()).fold(0.0, f64::max)
+        };
+        assert!(max(&pcba) < max(&hiv), "MolPCBA speedups compress");
+    }
+
+    #[test]
+    fn fpga_always_wins_on_molecules() {
+        for r in compute(MolDataset::MolHiv, 60, 3) {
+            assert!(r.fpga_secs < r.cpu_secs && r.fpga_secs < r.gpu_secs, "{}", r.model);
+        }
+    }
+
+    #[test]
+    fn render_has_six_rows() {
+        let rows = compute(MolDataset::MolHiv, 20, 5);
+        let s = render(MolDataset::MolHiv, &rows);
+        assert_eq!(rows.len(), 6);
+        for m in ["GIN", "GIN+VN", "GCN", "PNA", "GAT", "DGN"] {
+            assert!(s.contains(m), "missing {m}");
+        }
+    }
+}

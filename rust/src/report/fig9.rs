@@ -1,0 +1,236 @@
+//! Fig. 9 regeneration: the NE/MP pipelining ablation.
+//!
+//! (a) a grid of random-graph populations swept over average node
+//!     degree (x-axis) and the share of large-degree nodes (y-axis),
+//!     GIN model, reporting the three speed-up ratios per cell;
+//! (b) the MolHIV benchmark with GIN;
+//! (c) MolHIV with GIN + virtual node.
+//!
+//! Paper ranges: fixed/non 1.2–1.5; streaming/fixed 1.15–1.37;
+//! streaming/non 1.53–1.92; benefit shrinks as degree grows; MolHIV
+//! (1.38, 1.63); with VN (1.40, 1.61).
+
+use crate::datagen::{molecular, random, MolConfig, RandomGraphConfig};
+use crate::graph::{CooGraph, Csr};
+use crate::models::ModelConfig;
+use crate::sim::cycles::CostParams;
+use crate::sim::mp_pe::mp_profile;
+use crate::sim::ne_pe::{embed_cycles, ne_cycles};
+use crate::sim::pipeline::{schedule_cycles, PipelineMode};
+
+/// Speed-up triple for one workload population.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Speedups {
+    pub fixed_over_non: f64,
+    pub streaming_over_fixed: f64,
+    pub streaming_over_non: f64,
+}
+
+/// One grid cell of Fig. 9(a).
+#[derive(Clone, Debug)]
+pub struct Fig9Cell {
+    pub avg_degree: f64,
+    pub high_fraction: f64,
+    pub speedups: Speedups,
+}
+
+/// Aggregate pipeline cycles (all layers of `cfg`) across a population,
+/// per mode, then form ratios — mirroring the paper's per-population
+/// aggregation over 100k graphs.
+pub fn population_speedups(cfg: &ModelConfig, graphs: &[CooGraph]) -> Speedups {
+    let p = CostParams::default();
+    let mut totals = [0u64; 3];
+    let ne_base = ne_cycles(&p, cfg);
+    let embed = embed_cycles(&p, cfg);
+    let mut ne0: Vec<u64> = Vec::new();
+    let mut ne: Vec<u64> = Vec::new();
+    for g in graphs {
+        let csr = Csr::from_coo(g);
+        let mp = mp_profile(&p, cfg, &csr.degree);
+        // Layer 0 carries the input embedding; layers 1..L are
+        // identical, so schedule once and multiply (§Perf).
+        ne0.clear();
+        ne0.resize(g.n, embed + ne_base);
+        ne.clear();
+        ne.resize(g.n, ne_base);
+        for (mi, mode) in PipelineMode::all().into_iter().enumerate() {
+            totals[mi] += schedule_cycles(mode, &ne0, &mp, p.fifo_depth)
+                + (cfg.layers as u64 - 1)
+                    * schedule_cycles(mode, &ne, &mp, p.fifo_depth);
+        }
+    }
+    let [non, fixed, streaming] = totals.map(|t| t as f64);
+    Speedups {
+        fixed_over_non: non / fixed,
+        streaming_over_fixed: fixed / streaming,
+        streaming_over_non: non / streaming,
+    }
+}
+
+/// Fig. 9(a): the sweep grid (GIN, like the paper's evaluation).
+pub fn compute_grid(
+    degrees: &[f64],
+    high_fractions: &[f64],
+    graphs_per_cell: usize,
+    seed: u64,
+) -> Vec<Fig9Cell> {
+    let gin = ModelConfig::by_name("gin").unwrap();
+    let mut cells = Vec::new();
+    for (di, &avg_degree) in degrees.iter().enumerate() {
+        for (hi, &high_fraction) in high_fractions.iter().enumerate() {
+            let cfg = RandomGraphConfig {
+                nodes: 32,
+                avg_degree,
+                high_degree_fraction: high_fraction,
+                ..RandomGraphConfig::default()
+            };
+            let graphs = random::batch(
+                seed ^ ((di as u64) << 32) ^ (hi as u64),
+                graphs_per_cell,
+                &cfg,
+            );
+            cells.push(Fig9Cell {
+                avg_degree,
+                high_fraction,
+                speedups: population_speedups(&gin, &graphs),
+            });
+        }
+    }
+    cells
+}
+
+/// Default paper-like sweep axes. The degree axis covers the regime
+/// where NE and MP latencies are comparable (molecular graphs sit near
+/// degree ~2); past ~2x the balance point both pipelined schedules
+/// degenerate to the MP-bound critical path and the streaming/fixed
+/// ratio flattens to 1 — the same "degrade to fixed-pipeline" limit the
+/// paper describes for large degrees.
+pub fn default_grid(graphs_per_cell: usize, seed: u64) -> Vec<Fig9Cell> {
+    compute_grid(
+        &[1.0, 2.0, 3.0, 4.0, 6.0],
+        &[0.02, 0.05, 0.10, 0.20],
+        graphs_per_cell,
+        seed,
+    )
+}
+
+/// Fig. 9(b): MolHIV + GIN. Fig. 9(c): MolHIV + GIN with virtual node.
+pub fn molhiv(count: usize, seed: u64, virtual_node: bool) -> Speedups {
+    let graphs: Vec<CooGraph> = molecular::dataset(seed, count, &MolConfig::molhiv())
+        .into_iter()
+        .map(|g| {
+            if virtual_node {
+                crate::datagen::augment_with_virtual_node_first(&g)
+            } else {
+                g
+            }
+        })
+        .collect();
+    let name = if virtual_node { "gin_vn" } else { "gin" };
+    // The VN is materialized in the graph, so simulate with plain GIN
+    // costs (gin_vn would re-augment).
+    let mut cfg = ModelConfig::by_name(name).unwrap();
+    cfg.kind = crate::models::GnnKind::Gin;
+    population_speedups(&cfg, &graphs)
+}
+
+pub fn render_grid(cells: &[Fig9Cell]) -> String {
+    let mut out = format!(
+        "Fig. 9(a): pipelining speed-ups on random graphs (GIN)\n{:>7} {:>6} {:>9} {:>11} {:>9}\n",
+        "avg-deg", "%high", "fix/non", "stream/fix", "str/non"
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "{:>7.0} {:>5.0}% {:>9.2} {:>11.2} {:>9.2}\n",
+            c.avg_degree,
+            c.high_fraction * 100.0,
+            c.speedups.fixed_over_non,
+            c.speedups.streaming_over_fixed,
+            c.speedups.streaming_over_non,
+        ));
+    }
+    out
+}
+
+pub fn render_mol(label: &str, s: &Speedups) -> String {
+    format!(
+        "Fig. 9 ({label}): fixed/non {:.2}x, streaming/fixed {:.2}x, streaming/non {:.2}x\n",
+        s.fixed_over_non, s.streaming_over_fixed, s.streaming_over_non
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_always_at_least_one() {
+        for c in default_grid(40, 0xF19A) {
+            assert!(c.speedups.fixed_over_non >= 1.0, "{c:?}");
+            assert!(c.speedups.streaming_over_fixed >= 1.0, "{c:?}");
+            assert!(c.speedups.streaming_over_non >= 1.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn grid_ratios_in_paper_ballpark() {
+        // Paper ranges (1.2-1.5, 1.15-1.37, 1.53-1.92) with absolute
+        // slack for the simulator's cost constants; orderings and
+        // trends are checked exactly in the other tests.
+        for c in default_grid(60, 0xF19B) {
+            let s = &c.speedups;
+            assert!(
+                (1.0..=1.85).contains(&s.fixed_over_non),
+                "fixed/non {:.2} at {c:?}",
+                s.fixed_over_non
+            );
+            assert!(
+                (1.0..=1.65).contains(&s.streaming_over_fixed),
+                "st/fix {:.2} at {c:?}",
+                s.streaming_over_fixed
+            );
+            assert!(
+                (1.0..=2.25).contains(&s.streaming_over_non),
+                "st/non {:.2} at {c:?}",
+                s.streaming_over_non
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_benefit_shrinks_with_degree() {
+        // Paper trend: higher average degree -> streaming degenerates
+        // toward fixed. Compare deg=2 vs deg=32 at the same hub share.
+        let cells = compute_grid(&[2.0, 32.0], &[0.05], 100, 7);
+        let lo = &cells[0].speedups;
+        let hi = &cells[1].speedups;
+        assert!(
+            lo.streaming_over_non > hi.streaming_over_non,
+            "deg2 {:.2} !> deg32 {:.2}",
+            lo.streaming_over_non,
+            hi.streaming_over_non
+        );
+    }
+
+    #[test]
+    fn molhiv_speedups_in_ballpark() {
+        let s = molhiv(150, 0xB0B, false);
+        // Paper: (1.38, 1.63). Simulator tolerance: +-0.35 absolute.
+        assert!((1.0..=1.9).contains(&s.fixed_over_non), "{s:?}");
+        assert!((1.2..=2.1).contains(&s.streaming_over_non), "{s:?}");
+    }
+
+    #[test]
+    fn virtual_node_keeps_streaming_gain() {
+        let plain = molhiv(100, 0xC0C, false);
+        let vn = molhiv(100, 0xC0C, true);
+        // Paper: VN speedups (1.40, 1.61) stay close to plain (1.38,
+        // 1.63) *because* streaming absorbs the VN hub; the VN graph is
+        // strictly more imbalanced, so fixed/non must not collapse.
+        assert!(vn.fixed_over_non >= plain.fixed_over_non * 0.85, "{vn:?}");
+        assert!(
+            vn.streaming_over_non >= plain.streaming_over_non * 0.85,
+            "{vn:?}"
+        );
+    }
+}

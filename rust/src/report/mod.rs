@@ -1,0 +1,8 @@
+//! Paper-artifact regeneration: one module per table/figure of the
+//! evaluation section (DESIGN.md §6 per-experiment index).
+
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table4;
+pub mod table5;

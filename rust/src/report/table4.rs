@@ -1,0 +1,54 @@
+//! Table 4 regeneration: per-model resource utilization on the U50.
+
+use crate::models::ModelConfig;
+use crate::resources::hls::{estimate, Estimate};
+use crate::resources::table::render_table4;
+
+/// Compute estimates for the six Table 4 models in paper order.
+pub fn compute() -> Vec<Estimate> {
+    ["gin", "gin_vn", "gcn", "pna", "gat", "dgn"]
+        .iter()
+        .map(|n| estimate(&ModelConfig::by_name(n).unwrap()).unwrap())
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut s = String::from("Table 4: resource utilization (Alveo U50, 300 MHz)\n");
+    s.push_str(&render_table4(&compute()));
+    s
+}
+
+/// Verbose variant: per-component inventory per model.
+pub fn render_detailed() -> String {
+    let mut out = render();
+    for e in compute() {
+        out.push_str(&format!("\n[{}]\n", e.model));
+        for c in &e.components {
+            out.push_str(&format!(
+                "  {:<45} dsp {:>5} lut {:>7} ff {:>7} bram {:>4} uram {:>4}\n",
+                c.name, c.res.dsp, c.res.lut, c.res.ff, c.res.bram, c.res.uram
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_models_in_paper_order() {
+        let e = compute();
+        let names: Vec<&str> = e.iter().map(|x| x.model.as_str()).collect();
+        assert_eq!(names, vec!["gin", "gin_vn", "gcn", "pna", "gat", "dgn"]);
+    }
+
+    #[test]
+    fn render_contains_header_and_detail() {
+        assert!(render().contains("Available"));
+        let d = render_detailed();
+        assert!(d.contains("MAC"));
+        assert!(d.contains("[dgn]"));
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 5 regeneration: the Large Graph Extension — dataset sizes and
+//! per-dataset resource utilization.
+
+use crate::datagen::citation::CitationDataset;
+use crate::resources::hls::{estimate_large, Resources};
+use crate::resources::table::render_table5;
+
+/// (name, nodes, directed edges, feature dim, resources) per dataset.
+pub fn compute() -> Vec<(String, usize, usize, usize, Resources)> {
+    CitationDataset::all()
+        .into_iter()
+        .map(|d| {
+            let (n, e, f) = d.stats();
+            let est = estimate_large(d.name(), n, f);
+            (d.name().to_string(), n, e, f, est.total)
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let rows = compute();
+    let mut s = String::from("Table 5: Large Graph Extension datasets + resources\n");
+    s.push_str(&render_table5(&rows));
+    s.push_str(&format!(
+        "common: {} DSPs, {} BRAMs, {} URAMs for all three datasets\n",
+        rows[0].4.dsp, rows[0].4.bram, rows[0].4.uram
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_match_paper_exactly() {
+        let rows = compute();
+        assert_eq!(rows[0].1, 2708); // Cora nodes
+        assert_eq!(rows[1].3, 3703); // CiteSeer feature dim
+        assert_eq!(rows[2].2, 88_648); // PubMed edges
+    }
+
+    #[test]
+    fn common_resources_constant_across_datasets() {
+        let rows = compute();
+        assert!(rows.windows(2).all(|w| w[0].4.dsp == w[1].4.dsp
+            && w[0].4.bram == w[1].4.bram
+            && w[0].4.uram == w[1].4.uram));
+    }
+
+    #[test]
+    fn render_has_three_rows() {
+        let s = render();
+        assert!(s.contains("Cora") && s.contains("CiteSeer") && s.contains("PubMed"));
+    }
+}

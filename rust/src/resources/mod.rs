@@ -1,0 +1,15 @@
+//! HLS-style FPGA resource estimator (paper Tables 4 and 5).
+//!
+//! The paper reports post-synthesis DSP/LUT/FF/BRAM/URAM utilization on
+//! the Alveo U50 for each model. Without Vitis we reproduce the numbers
+//! the way an HLS engineer budgets them: a component inventory per model
+//! (MAC arrays with a DSP-or-fabric binding, partitioned on-chip
+//! buffers with a BRAM/URAM binding, register files, PE control) priced
+//! with per-unit costs, calibrated once against Table 4
+//! (DESIGN.md §Substitutions; Table 4's own PNA row is "estimates from
+//! the Vitis HLS tool", so estimate-vs-estimate is the fair comparison).
+
+pub mod hls;
+pub mod table;
+
+pub use hls::{estimate, estimate_large, estimate_scaled, Estimate, Resources, U50};

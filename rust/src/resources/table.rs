@@ -1,0 +1,69 @@
+//! Table formatting for the resource reports (paper Tables 4 and 5).
+
+use super::hls::{Estimate, Resources, U50};
+
+/// Render a Table-4-style utilization table for a set of estimates.
+pub fn render_table4(estimates: &[Estimate]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>6} {:>9} {:>9} {:>6} {:>6}\n",
+        "Model", "DSP", "LUT", "FF", "BRAM", "URAM"
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>6} {:>9} {:>9} {:>6} {:>6}\n",
+        "Available", U50.dsp, U50.lut, U50.ff, U50.bram, U50.uram
+    ));
+    for e in estimates {
+        out.push_str(&row(&e.model, &e.total));
+    }
+    out
+}
+
+/// Render one Table-5-style row (large-graph extension, per dataset).
+pub fn render_table5(rows: &[(String, usize, usize, usize, Resources)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>7} {:>7} {:>10} {:>9} {:>9}\n",
+        "Dataset", "Nodes", "Edges", "Feat. Dim.", "LUT", "FF"
+    ));
+    for (name, n, e, f, res) in rows {
+        out.push_str(&format!(
+            "{:<10} {:>7} {:>7} {:>10} {:>9} {:>9}\n",
+            name, n, e, f, res.lut, res.ff
+        ));
+    }
+    out
+}
+
+fn row(name: &str, r: &Resources) -> String {
+    format!(
+        "{:<10} {:>6} {:>9} {:>9} {:>6} {:>6}\n",
+        name, r.dsp, r.lut, r.ff, r.bram, r.uram
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelConfig;
+    use crate::resources::hls::estimate;
+
+    #[test]
+    fn table4_renders_all_models() {
+        let ests: Vec<Estimate> = ["gin", "gcn"]
+            .iter()
+            .map(|n| estimate(&ModelConfig::by_name(n).unwrap()).unwrap())
+            .collect();
+        let t = render_table4(&ests);
+        assert!(t.contains("Available"));
+        assert!(t.contains("gin") && t.contains("gcn"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn table5_renders_rows() {
+        let r = crate::resources::hls::estimate_large("Cora", 2708, 1433);
+        let t = render_table5(&[("Cora".into(), 2708, 10556, 1433, r.total)]);
+        assert!(t.contains("Cora") && t.contains("10556"));
+    }
+}

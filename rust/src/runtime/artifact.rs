@@ -1,0 +1,253 @@
+//! Artifact manifest + golden files (the build-time contract).
+//!
+//! `make artifacts` produces, per model: `<name>.hlo.txt` (the lowered
+//! computation with baked-in weights), `<name>.golden.json` (a seeded
+//! input graph and its expected output — the stand-in for the paper's
+//! "cross-check with PyTorch" end-to-end guarantee), and a shared
+//! `manifest.json` describing input tensor order and shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::CooGraph;
+use crate::util::json::Json;
+
+/// One input tensor slot of a model artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one compiled model (mirrors a manifest entry).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub layers: usize,
+    pub dim: usize,
+    pub n_max: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub node_level: bool,
+    pub inputs: Vec<InputSpec>,
+    pub hlo_path: PathBuf,
+    pub golden_path: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn needs_edge_attr(&self) -> bool {
+        self.inputs.iter().any(|i| i.name == "edge_attr")
+    }
+
+    pub fn needs_eig(&self) -> bool {
+        self.inputs.iter().any(|i| i.name == "eig")
+    }
+}
+
+/// The loaded artifact directory.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub weight_seed: u64,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Artifacts {
+    /// Parse `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let weight_seed = v.get("weight_seed")?.as_usize()? as u64;
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_arr()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            let mut inputs = Vec::new();
+            for i in m.get("inputs")?.as_arr()? {
+                let shape = i
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                inputs.push(InputSpec {
+                    name: i.get("name")?.as_str()?.to_string(),
+                    shape,
+                });
+            }
+            models.push(ModelMeta {
+                hlo_path: dir.join(m.get("artifact")?.as_str()?),
+                golden_path: dir.join(m.get("golden")?.as_str()?),
+                name,
+                layers: m.get("layers")?.as_usize()?,
+                dim: m.get("dim")?.as_usize()?,
+                n_max: m.get("n_max")?.as_usize()?,
+                in_dim: m.get("in_dim")?.as_usize()?,
+                out_dim: m.get("out_dim")?.as_usize()?,
+                node_level: m.get("node_level")?.as_bool()?,
+                inputs,
+            });
+        }
+        Ok(Artifacts {
+            dir,
+            weight_seed,
+            models,
+        })
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GENGNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+/// A golden cross-check case: input graph + expected output.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub model: String,
+    pub graph: CooGraph,
+    /// Precomputed Laplacian eigenvector (padded), when the model needs it.
+    pub eig: Option<Vec<f32>>,
+    pub output: Vec<f32>,
+    pub output_shape: Vec<usize>,
+}
+
+impl Golden {
+    /// Load a `<name>.golden.json` file.
+    pub fn load(meta: &ModelMeta) -> Result<Golden> {
+        let text = std::fs::read_to_string(&meta.golden_path)
+            .with_context(|| format!("reading {:?}", meta.golden_path))?;
+        let v = Json::parse(&text)?;
+        let n = v.get("n")?.as_usize()?;
+        let mut undirected = Vec::new();
+        for e in v.get("edges")?.as_arr()? {
+            let pair = e.as_arr()?;
+            if pair.len() != 2 {
+                bail!("bad edge entry");
+            }
+            undirected.push((pair[0].as_usize()? as u32, pair[1].as_usize()? as u32));
+        }
+        let node_feat = v.get("node_feat")?.as_f32_flat()?;
+        let f_node = if n > 0 { node_feat.len() / n } else { 0 };
+        let (edge_feat, f_edge) = match v.opt("edge_feat") {
+            Some(ef) => {
+                let flat = ef.as_f32_flat()?;
+                let fe = if undirected.is_empty() {
+                    0
+                } else {
+                    flat.len() / undirected.len()
+                };
+                (flat, fe)
+            }
+            None => (Vec::new(), 0),
+        };
+        let graph = CooGraph::from_undirected(
+            n,
+            &undirected,
+            node_feat,
+            f_node,
+            &edge_feat,
+            f_edge,
+        )?;
+        let eig = match v.opt("eig") {
+            Some(e) => Some(e.as_f32_flat()?),
+            None => None,
+        };
+        Ok(Golden {
+            model: v.get("model")?.as_str()?.to_string(),
+            graph,
+            eig,
+            output: v.get("output")?.as_f32_flat()?,
+            output_shape: v
+                .get("output_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Artifacts> {
+        Artifacts::load(Artifacts::default_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_lists_all_seven_models() {
+        let Some(a) = artifacts() else { return };
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "dgn", "dgn_large"] {
+            assert!(a.model(name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn input_order_matches_contract() {
+        let Some(a) = artifacts() else { return };
+        let gin = a.model("gin").unwrap();
+        let names: Vec<&str> = gin.inputs.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["x", "adj", "edge_attr", "mask"]);
+        let dgn = a.model("dgn").unwrap();
+        let names: Vec<&str> = dgn.inputs.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["x", "adj", "eig", "mask"]);
+        assert!(dgn.needs_eig() && !dgn.needs_edge_attr());
+    }
+
+    #[test]
+    fn shapes_are_consistent_with_config() {
+        let Some(a) = artifacts() else { return };
+        for m in &a.models {
+            let x = &m.inputs[0];
+            assert_eq!(x.shape, vec![m.n_max, m.in_dim], "{}", m.name);
+            let adj = &m.inputs[1];
+            assert_eq!(adj.shape, vec![m.n_max, m.n_max], "{}", m.name);
+            assert!(m.hlo_path.exists(), "{:?}", m.hlo_path);
+        }
+    }
+
+    #[test]
+    fn golden_files_parse_and_validate() {
+        let Some(a) = artifacts() else { return };
+        for m in &a.models {
+            let g = Golden::load(m).unwrap();
+            assert_eq!(g.model, m.name);
+            g.graph.validate().unwrap();
+            assert!(!g.output.is_empty());
+            if m.needs_eig() {
+                let eig = g.eig.as_ref().expect("eig present");
+                assert_eq!(eig.len(), m.n_max);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let e = Artifacts::load("/nonexistent/path").unwrap_err();
+        assert!(e.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,64 @@
+//! PJRT client wrapper + artifact compilation cache.
+//!
+//! One process-wide CPU client; each HLO-text artifact is parsed
+//! (`HloModuleProto::from_text_file` — the text parser reassigns
+//! instruction ids, which is why text is the interchange format; see
+//! DESIGN.md) and compiled once, then executed many times.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client with compile helpers.
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+impl Client {
+    /// Create the CPU client (the "device" the artifacts run on).
+    pub fn cpu() -> Result<Client> {
+        Ok(Client {
+            inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Parse an HLO-text artifact and compile it for this client.
+    pub fn compile_hlo_text(
+        &self,
+        path: impl AsRef<Path>,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = Client::cpu().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform_name().is_empty());
+    }
+
+    #[test]
+    fn bad_path_is_clean_error() {
+        let c = Client::cpu().unwrap();
+        assert!(c.compile_hlo_text("/nonexistent.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! The [`Engine`]: compiled executables + packing scratch per model —
+//! the complete request-path inference stack (raw COO graph in, output
+//! vector out), with Python nowhere in sight.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::graph::CooGraph;
+
+use super::artifact::{Artifacts, ModelMeta};
+use super::client::Client;
+use super::literal::InputPack;
+
+struct LoadedModel {
+    meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+    pack: InputPack,
+}
+
+/// Inference engine over a set of compiled artifacts.
+///
+/// Not `Send`: PJRT handles are thread-confined. The coordinator runs
+/// one `Engine` on a dedicated executor thread (the software analog of
+/// the single FPGA processing streamed graphs consecutively).
+pub struct Engine {
+    client: Client,
+    models: BTreeMap<String, LoadedModel>,
+    artifacts: Artifacts,
+}
+
+impl Engine {
+    /// Compile `names` (or every manifest model if empty) from an
+    /// artifact directory.
+    pub fn load(artifacts: &Artifacts, names: &[&str]) -> Result<Engine> {
+        let client = Client::cpu()?;
+        let mut models = BTreeMap::new();
+        let wanted: Vec<&str> = if names.is_empty() {
+            artifacts.model_names()
+        } else {
+            names.to_vec()
+        };
+        for name in wanted {
+            let meta = artifacts.model(name)?.clone();
+            let exe = client
+                .compile_hlo_text(&meta.hlo_path)
+                .with_context(|| format!("loading model {name}"))?;
+            let pack = InputPack::new(&meta);
+            models.insert(name.to_string(), LoadedModel { meta, exe, pack });
+        }
+        Ok(Engine {
+            client,
+            models,
+            artifacts: artifacts.clone(),
+        })
+    }
+
+    /// Convenience: load from the default artifact dir.
+    pub fn from_default_dir(names: &[&str]) -> Result<Engine> {
+        let artifacts = Artifacts::load(Artifacts::default_dir())?;
+        Engine::load(&artifacts, names)
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    pub fn loaded_models(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, model: &str) -> Result<&ModelMeta> {
+        Ok(&self.get(model)?.meta)
+    }
+
+    fn get(&self, model: &str) -> Result<&LoadedModel> {
+        self.models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model:?} not loaded"))
+    }
+
+    fn get_mut(&mut self, model: &str) -> Result<&mut LoadedModel> {
+        self.models
+            .get_mut(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model:?} not loaded"))
+    }
+
+    /// Run one graph through one model; returns the flat output vector
+    /// (graph-level: `[out_dim]`; node-level: `[n_max * out_dim]`).
+    pub fn infer(&mut self, model: &str, g: &CooGraph) -> Result<Vec<f32>> {
+        self.infer_with_eig(model, g, None)
+    }
+
+    /// `infer` with a caller-provided Laplacian eigenvector (golden
+    /// replay / precomputed-eig flows).
+    pub fn infer_with_eig(
+        &mut self,
+        model: &str,
+        g: &CooGraph,
+        eig: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let lm = self.get_mut(model)?;
+        lm.pack.fill(g, eig)?;
+        let literals = lm.pack.literals(&lm.meta)?;
+        let result = lm.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Golden;
+
+    fn engine(names: &[&str]) -> Option<Engine> {
+        Engine::from_default_dir(names).ok()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())))
+    }
+
+    #[test]
+    fn gcn_golden_matches() {
+        let Some(mut e) = engine(&["gcn"]) else { return };
+        let meta = e.meta("gcn").unwrap().clone();
+        let g = Golden::load(&meta).unwrap();
+        let out = e.infer("gcn", &g.graph).unwrap();
+        assert!(close(&out, &g.output, 1e-4), "{out:?} vs {:?}", g.output);
+    }
+
+    #[test]
+    fn inference_is_deterministic() {
+        let Some(mut e) = engine(&["gcn"]) else { return };
+        let meta = e.meta("gcn").unwrap().clone();
+        let g = Golden::load(&meta).unwrap();
+        let a = e.infer("gcn", &g.graph).unwrap();
+        let b = e.infer("gcn", &g.graph).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unloaded_model_is_an_error() {
+        let Some(mut e) = engine(&["gcn"]) else { return };
+        let meta = e.meta("gcn").unwrap().clone();
+        let g = Golden::load(&meta).unwrap();
+        assert!(e.infer("gat", &g.graph).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Graph → padded input-tensor packing.
+//!
+//! The artifact contract (mirrors `python/compile/graphgen.densify`
+//! bit-for-bit, see `graph::dense`): inputs arrive in manifest order —
+//! `x, adj, [edge_attr], [eig], mask` — all f32, padded to the model's
+//! node capacity. `InputPack` owns the scratch buffers so the serving
+//! hot path re-fills them per request with **zero allocation** (the f32
+//! staging is reused; only the PJRT literal creation copies).
+
+use anyhow::{bail, Result};
+
+use crate::graph::{fiedler_vector, CooGraph, DenseGraph};
+
+use super::artifact::ModelMeta;
+
+/// Reusable packing state for one model.
+#[derive(Clone, Debug)]
+pub struct InputPack {
+    dense: DenseGraph,
+    needs_eig: bool,
+    n_max: usize,
+}
+
+impl InputPack {
+    pub fn new(meta: &ModelMeta) -> InputPack {
+        InputPack {
+            dense: DenseGraph {
+                n_max: meta.n_max,
+                n_real: 0,
+                f_node: meta.in_dim,
+                x: vec![0.0; meta.n_max * meta.in_dim],
+                adj: vec![0.0; meta.n_max * meta.n_max],
+                edge_attr: if meta.needs_edge_attr() {
+                    let fe = meta
+                        .inputs
+                        .iter()
+                        .find(|i| i.name == "edge_attr")
+                        .map(|i| i.shape[2])
+                        .unwrap_or(0);
+                    vec![0.0; meta.n_max * meta.n_max * fe]
+                } else {
+                    Vec::new()
+                },
+                f_edge: if meta.needs_edge_attr() {
+                    meta.inputs
+                        .iter()
+                        .find(|i| i.name == "edge_attr")
+                        .map(|i| i.shape[2])
+                        .unwrap_or(0)
+                } else {
+                    0
+                },
+                mask: vec![0.0; meta.n_max],
+                eig: vec![0.0; meta.n_max],
+            },
+            needs_eig: meta.needs_eig(),
+            n_max: meta.n_max,
+        }
+    }
+
+    /// Refill the scratch tensors from a raw graph. `eig_override`
+    /// supplies a precomputed eigenvector (golden replay); otherwise the
+    /// packer computes it on the fly for eig-consuming models — matching
+    /// the paper's DGN flow where eigenvectors are an input parameter.
+    pub fn fill(&mut self, g: &CooGraph, eig_override: Option<&[f32]>) -> Result<()> {
+        if g.n > self.n_max {
+            bail!("graph with {} nodes exceeds capacity {}", g.n, self.n_max);
+        }
+        self.dense.fill_from(g)?;
+        if self.needs_eig {
+            match eig_override {
+                Some(e) => {
+                    if e.len() != self.n_max {
+                        bail!("eig override has wrong length");
+                    }
+                    self.dense.eig.copy_from_slice(e);
+                }
+                None => {
+                    let r = fiedler_vector(g, 400, 1e-9);
+                    self.dense.eig.fill(0.0);
+                    self.dense.eig[..g.n].copy_from_slice(&r.vector);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Borrow the staged f32 buffer for one manifest input slot.
+    pub fn slot(&self, name: &str) -> Result<&[f32]> {
+        Ok(match name {
+            "x" => &self.dense.x,
+            "adj" => &self.dense.adj,
+            "edge_attr" => &self.dense.edge_attr,
+            "eig" => &self.dense.eig,
+            "mask" => &self.dense.mask,
+            _ => bail!("unknown input slot {name:?}"),
+        })
+    }
+
+    /// Build the PJRT literals in manifest order.
+    pub fn literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(meta.inputs.len());
+        for spec in &meta.inputs {
+            let buf = self.slot(&spec.name)?;
+            if buf.len() != spec.elems() {
+                bail!(
+                    "slot {} staged {} elems, artifact wants {:?}",
+                    spec.name,
+                    buf.len(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            out.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        Ok(out)
+    }
+
+    pub fn n_real(&self) -> usize {
+        self.dense.n_real
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Artifacts;
+
+    fn meta(name: &str) -> Option<crate::runtime::artifact::ModelMeta> {
+        Artifacts::load(Artifacts::default_dir())
+            .ok()?
+            .model(name)
+            .ok()
+            .cloned()
+    }
+
+    fn mol() -> CooGraph {
+        let mut rng = crate::util::rng::Rng::new(5);
+        crate::datagen::molecular_graph(&mut rng, &crate::datagen::MolConfig::molhiv())
+    }
+
+    #[test]
+    fn refill_is_idempotent() {
+        let Some(m) = meta("gin") else { return };
+        let g = mol();
+        let mut p = InputPack::new(&m);
+        p.fill(&g, None).unwrap();
+        let x1 = p.slot("x").unwrap().to_vec();
+        let a1 = p.slot("adj").unwrap().to_vec();
+        p.fill(&g, None).unwrap();
+        assert_eq!(p.slot("x").unwrap(), &x1[..]);
+        assert_eq!(p.slot("adj").unwrap(), &a1[..]);
+    }
+
+    #[test]
+    fn refill_clears_previous_graph() {
+        let Some(m) = meta("gin") else { return };
+        let big = mol();
+        let small = {
+            let mut rng = crate::util::rng::Rng::new(9);
+            crate::datagen::molecular_graph(
+                &mut rng,
+                &crate::datagen::MolConfig {
+                    mean_nodes: 6.0,
+                    std_nodes: 0.5,
+                    ..crate::datagen::MolConfig::molhiv()
+                },
+            )
+        };
+        let mut p = InputPack::new(&m);
+        p.fill(&big, None).unwrap();
+        p.fill(&small, None).unwrap();
+        let mask = p.slot("mask").unwrap();
+        let live: usize = mask.iter().map(|&v| v as usize).sum();
+        assert_eq!(live, small.n);
+        // Adjacency must hold exactly small's directed edges.
+        let nnz = p.slot("adj").unwrap().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, small.num_edges());
+    }
+
+    #[test]
+    fn eig_computed_for_dgn() {
+        let Some(m) = meta("dgn") else { return };
+        let g = mol();
+        let mut p = InputPack::new(&m);
+        p.fill(&g, None).unwrap();
+        let eig = p.slot("eig").unwrap();
+        let norm: f32 = eig.iter().map(|v| v * v).sum();
+        assert!((norm - 1.0).abs() < 1e-3, "unit-norm eig, got {norm}");
+        assert!(eig[g.n..].iter().all(|&v| v == 0.0), "padding zeroed");
+    }
+
+    #[test]
+    fn oversized_graph_rejected() {
+        let Some(m) = meta("gin") else { return };
+        let mut rng = crate::util::rng::Rng::new(3);
+        let g = crate::datagen::citation::citation_graph(rng.next_u64(), 200, 600, 9);
+        let mut p = InputPack::new(&m);
+        assert!(p.fill(&g, None).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once at build time by `python/compile/aot.py`) and execute them from
+//! the Rust hot path. Python never runs at request time — the HLO text
+//! is parsed, compiled, and executed through the XLA PJRT CPU client.
+//!
+//! * [`artifact`] — manifest parsing + golden-file access
+//! * [`client`]   — PJRT client + compilation cache
+//! * [`literal`]  — graph → padded input-tensor packing (zero-alloc refill)
+//! * [`exec`]     — the [`Engine`]: end-to-end `CooGraph` → output vector
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+pub mod literal;
+
+pub use artifact::{Artifacts, Golden, ModelMeta};
+pub use client::Client;
+pub use exec::Engine;
+pub use literal::InputPack;

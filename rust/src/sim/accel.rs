@@ -1,0 +1,211 @@
+//! Whole-accelerator simulation: one raw COO graph, end to end
+//! (paper Fig. 3 execution flow).
+//!
+//! Composition per graph: on-chip COO→CSR conversion (once, reused by
+//! all layers), then per layer a node sweep scheduled across the NE and
+//! MP PEs under the configured pipelining strategy, then global pooling
+//! and the prediction head. For GIN+VN the virtual node is materialized
+//! as a real node in the processing order — by default *first*, which is
+//! what lets the streaming pipeline hide its whole-graph fan-out
+//! (paper §4.5, Fig. 6).
+
+use crate::datagen::{augment_with_virtual_node, augment_with_virtual_node_first};
+use crate::graph::CooGraph;
+use crate::models::{GnnKind, ModelConfig};
+
+use super::converter::convert_csr;
+use super::cycles::{cycles_to_secs, CostParams};
+use super::fifo::FifoStats;
+use super::mp_pe::mp_profile;
+use super::ne_pe::{embed_cycles, head_cycles, ne_cycles};
+use super::pipeline::{schedule, PipelineMode};
+
+/// A configured accelerator instance for one model.
+#[derive(Clone, Debug)]
+pub struct Accelerator {
+    pub params: CostParams,
+    pub model: ModelConfig,
+    pub mode: PipelineMode,
+    /// Process the virtual node first (GIN+VN only). The paper notes VN
+    /// overlap works "as long as it is processed early enough".
+    pub vn_first: bool,
+}
+
+/// End-to-end simulation outcome for one graph.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub secs: f64,
+    pub converter_cycles: u64,
+    pub layer_cycles: u64,
+    pub head_cycles: u64,
+    /// Worst FIFO stats across layers (streaming mode only).
+    pub fifo: FifoStats,
+}
+
+impl Accelerator {
+    pub fn new(model: ModelConfig, mode: PipelineMode) -> Self {
+        Accelerator {
+            params: CostParams::default(),
+            model,
+            mode,
+            vn_first: true,
+        }
+    }
+
+    /// Simulate one raw COO graph end to end; returns cycle counts at
+    /// the 300 MHz design clock.
+    pub fn simulate(&self, g: &CooGraph) -> SimResult {
+        // GIN+VN: the virtual node becomes part of the node schedule.
+        let augmented;
+        let g = if self.model.kind == GnnKind::GinVn {
+            augmented = if self.vn_first {
+                augment_with_virtual_node_first(g)
+            } else {
+                augment_with_virtual_node(g)
+            };
+            &augmented
+        } else {
+            g
+        };
+
+        let (csr, conv) = convert_csr(g);
+        let n = g.n;
+        let p = &self.params;
+        let m = &self.model;
+
+        let ne_steady = ne_cycles(p, m);
+        let embed = embed_cycles(p, m);
+        let mp = mp_profile(p, m, &csr.degree);
+
+        // Layers 1..L share an identical per-node profile, so their
+        // schedule is computed once and multiplied (perf: this is the
+        // Fig. 7/9 sweep hot path — see EXPERIMENTS.md §Perf).
+        let ne0: Vec<u64> = vec![embed + ne_steady; n];
+        let r0 = schedule(self.mode, &ne0, &mp, p.fifo_depth);
+        let mut layer_total = r0.cycles;
+        let mut worst_fifo = r0.fifo;
+        if m.layers > 1 {
+            let ne: Vec<u64> = vec![ne_steady; n];
+            let r = schedule(self.mode, &ne, &mp, p.fifo_depth);
+            layer_total += (m.layers as u64 - 1) * r.cycles;
+            if r.fifo.peak_depth >= worst_fifo.peak_depth {
+                worst_fifo = r.fifo;
+            }
+        }
+
+        let head = head_cycles(p, m, n);
+        let cycles = conv + layer_total + head;
+        SimResult {
+            cycles,
+            secs: cycles_to_secs(cycles),
+            converter_cycles: conv,
+            layer_cycles: layer_total,
+            head_cycles: head,
+            fifo: worst_fifo,
+        }
+    }
+
+    /// Average latency (seconds) over a batch of graphs — the quantity
+    /// Fig. 7 plots ("average execution time" over the test set).
+    pub fn mean_latency(&self, graphs: &[CooGraph]) -> f64 {
+        if graphs.is_empty() {
+            return 0.0;
+        }
+        graphs.iter().map(|g| self.simulate(g).secs).sum::<f64>() / graphs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{molecular_graph, MolConfig};
+    use crate::util::rng::Rng;
+
+    fn mol(seed: u64) -> CooGraph {
+        let mut rng = Rng::new(seed);
+        molecular_graph(&mut rng, &MolConfig::molhiv())
+    }
+
+    #[test]
+    fn streaming_fastest_non_slowest_for_every_model() {
+        let g = mol(7);
+        for cfg in ModelConfig::fig7_models() {
+            let non = Accelerator::new(cfg.clone(), PipelineMode::NonPipelined)
+                .simulate(&g)
+                .cycles;
+            let fx = Accelerator::new(cfg.clone(), PipelineMode::Fixed)
+                .simulate(&g)
+                .cycles;
+            let st = Accelerator::new(cfg.clone(), PipelineMode::Streaming)
+                .simulate(&g)
+                .cycles;
+            assert!(st <= fx && fx <= non, "{}: {st} {fx} {non}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn converter_counted_once_not_per_layer() {
+        let g = mol(9);
+        let cfg = ModelConfig::by_name("gcn").unwrap();
+        let r = Accelerator::new(cfg, PipelineMode::Streaming).simulate(&g);
+        assert_eq!(
+            r.converter_cycles,
+            (2 * g.num_edges() + g.n) as u64
+        );
+        assert_eq!(r.cycles, r.converter_cycles + r.layer_cycles + r.head_cycles);
+    }
+
+    #[test]
+    fn vn_first_placement_helps_streaming() {
+        let g = mol(21);
+        let cfg = ModelConfig::by_name("gin_vn").unwrap();
+        let mut first = Accelerator::new(cfg.clone(), PipelineMode::Streaming);
+        first.vn_first = true;
+        let mut last = Accelerator::new(cfg, PipelineMode::Streaming);
+        last.vn_first = false;
+        assert!(
+            first.simulate(&g).cycles <= last.simulate(&g).cycles,
+            "processing the virtual node early should never hurt"
+        );
+    }
+
+    #[test]
+    fn bigger_graphs_take_longer() {
+        let cfg = ModelConfig::by_name("gin").unwrap();
+        let acc = Accelerator::new(cfg, PipelineMode::Streaming);
+        let mut rng = Rng::new(3);
+        let small = molecular_graph(&mut rng, &MolConfig { mean_nodes: 10.0, ..MolConfig::molhiv() });
+        let big = molecular_graph(&mut rng, &MolConfig { mean_nodes: 50.0, ..MolConfig::molhiv() });
+        if big.n > small.n {
+            assert!(acc.simulate(&big).cycles > acc.simulate(&small).cycles);
+        }
+    }
+
+    #[test]
+    fn latency_in_plausible_microsecond_range() {
+        // Molecular graphs at 300 MHz should land in the 10 us - 10 ms
+        // window (paper Fig. 7 is microseconds-to-milliseconds).
+        let g = mol(11);
+        for cfg in ModelConfig::fig7_models() {
+            let r = Accelerator::new(cfg.clone(), PipelineMode::Streaming).simulate(&g);
+            assert!(
+                r.secs > 1e-5 && r.secs < 1e-2,
+                "{} latency {:.2e}s out of range",
+                cfg.name,
+                r.secs
+            );
+        }
+    }
+
+    #[test]
+    fn mean_latency_averages() {
+        let cfg = ModelConfig::by_name("gcn").unwrap();
+        let acc = Accelerator::new(cfg, PipelineMode::Streaming);
+        let graphs = vec![mol(1), mol(2)];
+        let m = acc.mean_latency(&graphs);
+        let s1 = acc.simulate(&graphs[0]).secs;
+        let s2 = acc.simulate(&graphs[1]).secs;
+        assert!((m - (s1 + s2) / 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,120 @@
+//! Cycle-accounting primitives (DESIGN.md §7).
+//!
+//! All cycle formulas in the simulator bottom out here. The parameters
+//! mirror the HLS design knobs of the paper: fully-partitioned
+//! input/output buffer widths of the MLP PE (§4.1 "parallelize the
+//! multiplications at the partitioned input and output buffers"), the
+//! message-lane width of the MP PE, per-row fetch setup, and the
+//! streaming FIFO depth ("we set the queue depth to be 10 nodes", §5.4).
+
+/// FPGA logic clock (paper §5.1: 300 MHz).
+pub const CLOCK_HZ: f64 = 300.0e6;
+
+/// Convert a cycle count to seconds at the 300 MHz design clock.
+pub fn cycles_to_secs(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_HZ
+}
+
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Tunable microarchitecture parameters shared by the PE models.
+#[derive(Clone, Debug)]
+pub struct CostParams {
+    /// Input-side multiplier lanes of the MLP PE (partitioned in-buffer).
+    pub p_in: usize,
+    /// Output-side accumulation lanes of the MLP PE.
+    pub p_out: usize,
+    /// Pipeline fill/drain overhead per linear layer (II=1 body).
+    pub d_pipe: u64,
+    /// Vector lanes of the MP PE message datapath.
+    pub p_msg: usize,
+    /// CSR row fetch setup cycles per node (address gen + first beat).
+    pub c_fetch: u64,
+    /// Inter-PE streaming FIFO depth in nodes (paper §5.4: 10).
+    pub fifo_depth: usize,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            p_in: 8,
+            p_out: 8,
+            d_pipe: 12,
+            p_msg: 2,
+            c_fetch: 8,
+            fifo_depth: 10,
+        }
+    }
+}
+
+impl CostParams {
+    /// One dense layer `fin -> fout` on the MLP PE (Fig. 5): the
+    /// multiplications are parallelized `p_in x p_out`, pipelined along
+    /// the hidden elements; the ping-pong local buffers overlap the
+    /// node-embedding-buffer copies with compute, so only fill/drain
+    /// (`d_pipe`) is exposed.
+    pub fn linear_cycles(&self, fin: usize, fout: usize) -> u64 {
+        (ceil_div(fin, self.p_in) * ceil_div(fout, self.p_out)) as u64 + self.d_pipe
+    }
+
+    /// A chain of dense layers (`dims = [f0, f1, ..., fk]`).
+    pub fn mlp_cycles(&self, dims: &[usize]) -> u64 {
+        dims.windows(2)
+            .map(|w| self.linear_cycles(w[0], w[1]))
+            .sum()
+    }
+
+    /// One elementwise pass over an f-wide vector on the MP datapath.
+    pub fn vector_cycles(&self, f: usize) -> u64 {
+        ceil_div(f, self.p_msg) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_300mhz() {
+        assert_eq!(CLOCK_HZ, 3.0e8);
+        assert!((cycles_to_secs(300) - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn ceil_div_edges() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+
+    #[test]
+    fn linear_cycles_formula() {
+        let p = CostParams::default();
+        // ceil(100/8)*ceil(100/8) + 12 = 13*13 + 12.
+        assert_eq!(p.linear_cycles(100, 100), 13 * 13 + 12);
+    }
+
+    #[test]
+    fn mlp_is_sum_of_layers() {
+        let p = CostParams::default();
+        assert_eq!(
+            p.mlp_cycles(&[100, 200, 100]),
+            p.linear_cycles(100, 200) + p.linear_cycles(200, 100)
+        );
+    }
+
+    #[test]
+    fn wider_lanes_are_faster() {
+        let narrow = CostParams::default();
+        let wide = CostParams {
+            p_in: 16,
+            p_out: 16,
+            ..CostParams::default()
+        };
+        assert!(wide.linear_cycles(128, 128) < narrow.linear_cycles(128, 128));
+    }
+}

@@ -1,0 +1,85 @@
+//! Off-chip DRAM model for the large-graph extension (paper §4.6).
+//!
+//! The U50's memory is reached through AXI: a burst pays a fixed
+//! first-beat latency, then streams at bus width per cycle. Graph
+//! buffers too big for BRAM/URAM (node embeddings, message buffers,
+//! neighbor lists of Cora/CiteSeer/PubMed) live here.
+
+use super::pack;
+
+/// AXI/DRAM channel model.
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    /// First-beat latency of a burst (address + row activation), cycles.
+    pub latency: u64,
+    /// Width of one AXI bus in bits (paper: 64).
+    pub bus_bits: usize,
+    /// Number of parallel buses (paper: four).
+    pub buses: usize,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        DramModel {
+            latency: 64,
+            bus_bits: 64,
+            buses: 4,
+        }
+    }
+}
+
+impl DramModel {
+    /// One random-access burst of `elems` x `elem_bits`, packed.
+    pub fn burst_cycles(&self, elems: usize, elem_bits: usize) -> u64 {
+        if elems == 0 {
+            return 0;
+        }
+        self.latency + pack::packed_cycles(elems, elem_bits, self.bus_bits, self.buses)
+    }
+
+    /// Streaming transfer (sequential, latency amortized away).
+    pub fn stream_cycles(&self, elems: usize, elem_bits: usize) -> u64 {
+        pack::packed_cycles(elems, elem_bits, self.bus_bits, self.buses)
+    }
+
+    /// Streaming transfer *without* packing (one elem per bus-cycle) —
+    /// the ablation baseline of §4.6.
+    pub fn stream_cycles_unpacked(&self, elems: usize) -> u64 {
+        pack::unpacked_cycles(elems, self.buses)
+    }
+
+    /// Effective bandwidth in bytes/cycle with packing.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        (self.bus_bits * self.buses) as f64 / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_pays_latency_once() {
+        let d = DramModel::default();
+        assert_eq!(d.burst_cycles(16, 16), 64 + 1);
+        assert_eq!(d.burst_cycles(0, 16), 0);
+    }
+
+    #[test]
+    fn stream_hides_latency() {
+        let d = DramModel::default();
+        assert!(d.stream_cycles(1024, 16) < d.burst_cycles(1024, 16));
+    }
+
+    #[test]
+    fn packing_beats_unpacked_stream() {
+        // 64-bit bus / 16-bit elems: packing moves 4x per bus-cycle.
+        let d = DramModel::default();
+        assert_eq!(d.stream_cycles(4096, 16) * 4, d.stream_cycles_unpacked(4096));
+    }
+
+    #[test]
+    fn bandwidth() {
+        assert_eq!(DramModel::default().bytes_per_cycle(), 32.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Discrete-event engine cross-validating the streaming schedule.
+//!
+//! [`super::pipeline`] computes the streaming pipeline with an O(n)
+//! recurrence. This module simulates the same two-actor system (NE PE,
+//! MP PE, bounded FIFO) event by event — the "obviously correct but
+//! slower" reference the recurrence is tested against, and a reusable
+//! engine for the DRAM/prefetch interplay in [`super::large`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A time-ordered event queue (min-heap keyed on timestamp).
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(u64, u64, E)>>,
+    seq: u64,
+}
+
+impl<E: Ord> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `event` at absolute time `t`. Ties break FIFO.
+    pub fn push(&mut self, t: u64, event: E) {
+        self.heap.push(Reverse((t, self.seq, event)));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E: Ord> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// NE PE finished node i and wants to enqueue it.
+    NeDone(usize),
+    /// MP PE finished node i and is free.
+    MpDone(usize),
+}
+
+/// Event-driven simulation of the streaming NE/MP pipeline.
+/// Returns the makespan in cycles; must agree exactly with
+/// `pipeline::schedule(Streaming, ...)`.
+pub fn streaming_via_events(ne: &[u64], mp: &[u64], depth: usize) -> u64 {
+    let n = ne.len();
+    if n == 0 {
+        return 0;
+    }
+    let depth = depth.max(1);
+    let mut q = EventQueue::new();
+    let mut fifo: Vec<usize> = Vec::new(); // nodes resident in the FIFO
+    let mut next_ne; // next node NE will compute
+    let mut ne_blocked: Option<usize> = None; // NE holding a finished node
+    let mut mp_busy = false;
+    let mut finished = 0usize;
+    let mut makespan = 0u64;
+
+    q.push(ne[0], Ev::NeDone(0));
+    next_ne = 1;
+
+    while let Some((t, ev)) = q.pop() {
+        makespan = makespan.max(t);
+        match ev {
+            Ev::NeDone(i) => {
+                if fifo.len() < depth {
+                    fifo.push(i);
+                    if next_ne < n {
+                        q.push(t + ne[next_ne], Ev::NeDone(next_ne));
+                        next_ne += 1;
+                    }
+                    if !mp_busy {
+                        let j = fifo.remove(0);
+                        mp_busy = true;
+                        q.push(t + mp[j], Ev::MpDone(j));
+                    }
+                } else {
+                    // FIFO full: NE stalls holding node i.
+                    ne_blocked = Some(i);
+                }
+            }
+            Ev::MpDone(i) => {
+                let _ = i;
+                finished += 1;
+                mp_busy = false;
+                if let Some(b) = ne_blocked.take() {
+                    // The pop just freed a slot; NE's held node enters
+                    // and NE resumes.
+                    fifo.push(b);
+                    if next_ne < n {
+                        q.push(t + ne[next_ne], Ev::NeDone(next_ne));
+                        next_ne += 1;
+                    }
+                }
+                if !fifo.is_empty() {
+                    let j = fifo.remove(0);
+                    mp_busy = true;
+                    q.push(t + mp[j], Ev::MpDone(j));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(finished, n);
+    makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sim::pipeline::{schedule, PipelineMode};
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn event_queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(5, "b");
+        q.push(1, "a");
+        q.push(5, "c");
+        assert_eq!(q.pop(), Some((1, "a")));
+        assert_eq!(q.pop(), Some((5, "b")));
+        assert_eq!(q.pop(), Some((5, "c")));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn agrees_with_recurrence_on_basics() {
+        let ne = vec![10u64; 6];
+        let mp = vec![10u64; 6];
+        assert_eq!(streaming_via_events(&ne, &mp, 10), 70);
+        let mp2 = vec![2u64, 50, 2, 2, 2, 2];
+        assert_eq!(
+            streaming_via_events(&ne, &mp2, 10),
+            schedule(PipelineMode::Streaming, &ne, &mp2, 10).cycles
+        );
+    }
+
+    #[test]
+    fn prop_event_sim_equals_recurrence() {
+        forall("events-vs-recurrence", 300, 0xE7E47, |rng| {
+            let n = rng.range(1, 40);
+            let ne: Vec<u64> = (0..n).map(|_| rng.range(1, 100) as u64).collect();
+            let mp: Vec<u64> = (0..n).map(|_| rng.range(0, 250) as u64).collect();
+            let depth = rng.range(1, 12);
+            let ev = streaming_via_events(&ne, &mp, depth);
+            let rec = schedule(PipelineMode::Streaming, &ne, &mp, depth).cycles;
+            prop_assert!(ev == rec, "event {ev} != recurrence {rec} (depth {depth})");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! Cycle-level simulator of the GenGNN microarchitecture (paper §3–§4.6).
+//!
+//! This is the substitute for the paper's on-board Alveo U50 measurement
+//! (DESIGN.md §Substitutions): the claims of Figs. 7–9 are properties of
+//! the *architecture schedule* — NE/MP pipeline overlap, degree
+//! imbalance, virtual-node overlap, prefetch latency hiding — all of
+//! which are cycle-accounting phenomena this model reproduces. We claim
+//! shape, not absolute cycle parity.
+//!
+//! Module map (one hardware block per module):
+//! * [`cycles`]    — cost primitives and the tunable [`cycles::CostParams`]
+//! * [`converter`] — on-chip COO→CSR/CSC converter (§3.2)
+//! * [`ne_pe`]     — node-embedding PE (§3.4, §4.1 MLP PE)
+//! * [`mp_pe`]     — message-passing PE with merged scatter-gather (§3.4)
+//! * [`fifo`]      — the inter-PE streaming FIFO (§3.5, depth 10)
+//! * [`pipeline`]  — the three NE/MP scheduling strategies (Fig. 4)
+//! * [`event`]     — discrete-event engine cross-validating the schedules
+//! * [`dram`]      — off-chip memory model (§4.6)
+//! * [`pack`]      — packed AXI transfers (§4.6)
+//! * [`prefetch`]  — degree-table prefetcher (§4.6)
+//! * [`large`]     — large-graph extension composite (§4.6, Fig. 8)
+//! * [`accel`]     — the whole accelerator: per-graph end-to-end cycles
+
+pub mod accel;
+pub mod converter;
+pub mod cycles;
+pub mod dram;
+pub mod event;
+pub mod fifo;
+pub mod large;
+pub mod mp_pe;
+pub mod ne_pe;
+pub mod pack;
+pub mod pipeline;
+pub mod prefetch;
+
+pub use accel::{Accelerator, SimResult};
+pub use cycles::{cycles_to_secs, CostParams, CLOCK_HZ};
+pub use large::{LargeGraphSim, LargeSimResult};
+pub use pipeline::PipelineMode;

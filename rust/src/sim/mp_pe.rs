@@ -1,0 +1,110 @@
+//! Message-passing PE cost model (paper §3.4 blue block).
+//!
+//! The MP PE implements the *merged scatter-gather*: once node i's
+//! embedding is updated, it walks the CSR row of i, computes the message
+//! φ(x, e) for each out-edge, and updates the receiver's partial
+//! aggregate in the message buffer in place. Per node:
+//!
+//! ```text
+//! mp(i) = c_fetch + deg(i) · (c_msg(model) + ceil(F / P_msg))
+//! ```
+//!
+//! `c_msg` is the model-specific message transformation φ (§4):
+//!
+//! * **GCN**  — scale by the normalized adjacency coefficient (1 mul).
+//! * **GIN**  — bond-feature linear `3→d` (edge embedding, §4.1) + add.
+//! * **GAT**  — attention logit combine + exp + weighted accumulate; the
+//!   softmax normalization pass is folded into the receiving gather.
+//! * **PNA**  — four aggregator buffers updated per edge (§4.3): the
+//!   `ceil(F/P_msg)` accumulate covers one, three more are charged.
+//! * **DGN**  — two concurrent aggregations (mean and |B_dx·|, §4.4)
+//!   plus the per-edge directional weight.
+
+use crate::models::{GnnKind, ModelConfig};
+
+use super::cycles::CostParams;
+
+/// Model-specific per-edge message transformation cost φ.
+pub fn msg_cycles(p: &CostParams, m: &ModelConfig) -> u64 {
+    let d = m.dim;
+    match m.kind {
+        GnnKind::Gcn => 1,
+        GnnKind::Gin | GnnKind::GinVn => {
+            // Edge-embedding linear 3 -> d (+ bias add) on the p_msg-wide
+            // message datapath: a real matrix-vector per edge, the
+            // heaviest φ of the zoo (§4.1).
+            ((m.edge_dim + 1) as u64) * p.vector_cycles(d)
+        }
+        GnnKind::Gat => {
+            // logit = LeakyReLU(sl_i + dl_j); exp; weighted accumulate.
+            let fh = d / m.heads.max(1);
+            4 + p.vector_cycles(fh)
+        }
+        GnnKind::Pna => {
+            // max/min/sumsq buffers beyond the base accumulate.
+            3 * p.vector_cycles(d)
+        }
+        GnnKind::Dgn => {
+            // Directional weight (eig difference, normalize) + the
+            // second (|B_dx|) aggregation stream.
+            4 + p.vector_cycles(d)
+        }
+    }
+}
+
+/// Per-node MP latency given its out-degree (CSR row length).
+pub fn mp_cycles(p: &CostParams, m: &ModelConfig, deg: u32) -> u64 {
+    p.c_fetch + deg as u64 * (msg_cycles(p, m) + p.vector_cycles(m.dim))
+}
+
+/// Per-node MP latencies for a whole degree table.
+pub fn mp_profile(p: &CostParams, m: &ModelConfig, degrees: &[u32]) -> Vec<u64> {
+    degrees.iter().map(|&d| mp_cycles(p, m, d)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelConfig;
+
+    fn p() -> CostParams {
+        CostParams::default()
+    }
+
+    #[test]
+    fn mp_is_affine_in_degree() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let c0 = mp_cycles(&p(), &gin, 0);
+        let c1 = mp_cycles(&p(), &gin, 1);
+        let c5 = mp_cycles(&p(), &gin, 5);
+        assert_eq!(c0, CostParams::default().c_fetch);
+        assert_eq!(c5 - c0, 5 * (c1 - c0));
+    }
+
+    #[test]
+    fn gin_edge_embedding_costs_more_than_gcn() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let gcn = ModelConfig::by_name("gcn").unwrap();
+        assert!(msg_cycles(&p(), &gin) > msg_cycles(&p(), &gcn));
+    }
+
+    #[test]
+    fn gin_edge_linear_is_heaviest_per_edge() {
+        // GIN's per-edge bond linear is a matrix-vector; PNA's extra
+        // aggregators and DGN's directional weight are elementwise.
+        let by = |n: &str| msg_cycles(&p(), &ModelConfig::by_name(n).unwrap());
+        assert!(by("gin") > by("pna"));
+        assert!(by("pna") > by("dgn"));
+        assert!(by("pna") > by("gat"));
+    }
+
+    #[test]
+    fn profile_matches_scalar() {
+        let dgn = ModelConfig::by_name("dgn").unwrap();
+        let degs = [0u32, 3, 7, 1];
+        let prof = mp_profile(&p(), &dgn, &degs);
+        for (i, &d) in degs.iter().enumerate() {
+            assert_eq!(prof[i], mp_cycles(&p(), &dgn, d));
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Node-embedding PE cost model (paper §3.4 yellow block, §4.1 Fig. 5).
+//!
+//! The NE PE applies the node transformation γ(·): identity, linear,
+//! weighted sum, or an MLP over the aggregated message and the current
+//! embedding. It is "the main component that distinguishes different
+//! GNN models", so its per-node latency is model-specific:
+//!
+//! * **GCN**  — one `d→d` linear (the `h W` half of A_norm (h W)).
+//! * **GIN**  — the 2-layer MLP `d→2d→d` (Fig. 5) over `(1+ε)x + m`.
+//! * **GAT**  — the shared `d→d` projection plus per-head attention
+//!   logit preparation (parallelized along heads, §4.2).
+//! * **PNA**  — degree-scaler application over the 4 aggregator buffers
+//!   (12d-wide concat) + the pipelined linear-ReLU (§4.3).
+//! * **DGN**  — linear over the 2d-wide concat of mean ∥ |B_dx X| (§4.4).
+//!
+//! The virtual node of GIN+VN runs its own 2-layer MLP through the same
+//! PE; in the simulator it appears as one more node in the schedule
+//! (augmented by `datagen::virtual_node`).
+
+use crate::models::{GnnKind, ModelConfig};
+
+use super::cycles::CostParams;
+
+/// Per-node NE latency at a steady-state layer (dim -> dim).
+pub fn ne_cycles(p: &CostParams, m: &ModelConfig) -> u64 {
+    let d = m.dim;
+    match m.kind {
+        GnnKind::Gcn => p.linear_cycles(d, d),
+        GnnKind::Gin | GnnKind::GinVn => {
+            // (1+eps)x + m vector op, then the 2-layer MLP.
+            p.vector_cycles(d) + p.mlp_cycles(&[d, 2 * d, d])
+        }
+        GnnKind::Gat => {
+            let fh = d / m.heads.max(1);
+            // Shared projection + per-head src/dst logit dot products;
+            // heads run in parallel (paper parallelizes the head dim).
+            p.linear_cycles(d, d) + 2 * p.vector_cycles(fh) as u64
+        }
+        GnnKind::Pna => {
+            // Scale the 4 aggregator buffers by the 3 degree scalers
+            // (12d-wide concat build) + linear 12d -> d with ReLU.
+            3 * p.vector_cycles(4 * d) + p.linear_cycles(12 * d, d)
+        }
+        GnnKind::Dgn => {
+            // concat(mean, |B_dx X|) is produced by the MP PE; NE is the
+            // linear 2d -> d with the PNA-style skip connection.
+            p.linear_cycles(2 * d, d) + p.vector_cycles(d)
+        }
+    }
+}
+
+/// Per-node latency of the input embedding layer (`in_dim -> dim`),
+/// charged once before layer 0.
+pub fn embed_cycles(p: &CostParams, m: &ModelConfig) -> u64 {
+    p.linear_cycles(m.in_dim, m.dim)
+}
+
+/// Global pooling + prediction-head latency, charged once per graph
+/// after the last layer (graph-level tasks, §3.3).
+pub fn head_cycles(p: &CostParams, m: &ModelConfig, n: usize) -> u64 {
+    let pool = if m.node_level {
+        0
+    } else {
+        // Masked mean pool: one vector accumulation per node.
+        n as u64 * p.vector_cycles(m.dim)
+    };
+    let mut dims = vec![m.dim];
+    dims.extend(&m.head_dims);
+    let head = p.mlp_cycles(&dims);
+    // Node-level heads run the MLP per node.
+    pool + if m.node_level { n as u64 * head } else { head }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelConfig;
+
+    fn p() -> CostParams {
+        CostParams::default()
+    }
+
+    #[test]
+    fn gin_ne_is_mlp_dominated() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let c = ne_cycles(&p(), &gin);
+        // vec(100)@2 lanes + MLP 100->200->100 at 8x8 lanes:
+        // 50 + (13*25 + 12) + (25*13 + 12) = 724.
+        assert_eq!(c, 50 + 325 + 12 + 325 + 12);
+    }
+
+    #[test]
+    fn gcn_ne_is_single_linear() {
+        let gcn = ModelConfig::by_name("gcn").unwrap();
+        assert_eq!(ne_cycles(&p(), &gcn), 13 * 13 + 12);
+    }
+
+    #[test]
+    fn pna_ne_heaviest_gat_lightest() {
+        // PNA's 12d-wide linear dominates every other NE; GAT's d=64
+        // projection with parallel heads is the lightest.
+        let ne = |name: &str| ne_cycles(&p(), &ModelConfig::by_name(name).unwrap());
+        assert!(ne("pna") > ne("gin"));
+        assert!(ne("gin") > ne("dgn"));
+        assert!(ne("dgn") > ne("gat"));
+    }
+
+    #[test]
+    fn head_cycles_scale_with_nodes_for_node_level() {
+        let dgn_l = ModelConfig::by_name("dgn_large").unwrap();
+        let h100 = head_cycles(&p(), &dgn_l, 100);
+        let h200 = head_cycles(&p(), &dgn_l, 200);
+        assert_eq!(h200, 2 * h100);
+    }
+
+    #[test]
+    fn graph_level_head_has_pool_term() {
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let h10 = head_cycles(&p(), &gin, 10);
+        let h20 = head_cycles(&p(), &gin, 20);
+        assert!(h20 > h10);
+        assert_eq!(h20 - h10, 10 * CostParams::default().vector_cycles(100));
+    }
+}

@@ -1,0 +1,251 @@
+//! The three NE/MP scheduling strategies of paper Fig. 4 / §3.5.
+//!
+//! Within one layer, node i's NE must precede its MP, but nodes are
+//! independent — the scheduling freedom the paper exploits:
+//!
+//! 1. **Non-pipelined** (Fig. 4a): strictly serial, `Σ (ne_i + mp_i)`.
+//! 2. **Fixed pipelining** (Fig. 4b): lock-step two-stage pipeline —
+//!    NE of node i overlaps MP of node i-1; each step takes the max of
+//!    the two, so degree imbalance leaves idle cycles.
+//! 3. **Streaming** (Fig. 4c): the PEs are decoupled by a depth-bounded
+//!    FIFO; NE runs ahead until the queue fills, MP drains at its own
+//!    pace. Computed by an O(n) recurrence (validated against the
+//!    discrete-event engine in [`super::event`]):
+//!
+//!    ```text
+//!    push_i = max(push_{i-1} + ne_i, pop_{i-B})      (B = FIFO depth)
+//!    pop_i  = max(done_{i-1}, push_i)
+//!    done_i = pop_i + mp_i
+//!    ```
+//!
+//!    (NE computes node i after the blocking FIFO write of node i-1 and
+//!    stalls on its own write until slot i-B is dequeued — the HLS
+//!    dataflow semantics of a full stream.)
+
+use super::fifo::{stats_from_events, FifoStats};
+
+/// Scheduling strategy selector (paper Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PipelineMode {
+    NonPipelined,
+    Fixed,
+    Streaming,
+}
+
+impl PipelineMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PipelineMode::NonPipelined => "non-pipelined",
+            PipelineMode::Fixed => "fixed",
+            PipelineMode::Streaming => "streaming",
+        }
+    }
+
+    pub fn all() -> [PipelineMode; 3] {
+        [
+            PipelineMode::NonPipelined,
+            PipelineMode::Fixed,
+            PipelineMode::Streaming,
+        ]
+    }
+}
+
+/// Schedule outcome for one layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScheduleResult {
+    pub cycles: u64,
+    /// FIFO diagnostics (zeroed for the non-streaming modes).
+    pub fifo: FifoStats,
+}
+
+/// Cycles-only fast path: identical numbers to [`schedule`] without
+/// materializing the FIFO diagnostics (no per-node `ready`/`mp_free`
+/// arrays). This is the inner loop of the Fig. 9 population sweeps.
+pub fn schedule_cycles(mode: PipelineMode, ne: &[u64], mp: &[u64], fifo_depth: usize) -> u64 {
+    assert_eq!(ne.len(), mp.len());
+    let n = ne.len();
+    if n == 0 {
+        return 0;
+    }
+    match mode {
+        PipelineMode::NonPipelined => ne.iter().sum::<u64>() + mp.iter().sum::<u64>(),
+        PipelineMode::Fixed => fixed(ne, mp),
+        PipelineMode::Streaming => {
+            let depth = fifo_depth.max(1);
+            let mut push = vec![0u64; n];
+            let mut pop = vec![0u64; n];
+            let mut done_prev = 0u64;
+            for i in 0..n {
+                let prev_push = if i > 0 { push[i - 1] } else { 0 };
+                let gate = if i >= depth { pop[i - depth] } else { 0 };
+                push[i] = (prev_push + ne[i]).max(gate);
+                pop[i] = done_prev.max(push[i]);
+                done_prev = pop[i] + mp[i];
+            }
+            done_prev
+        }
+    }
+}
+
+/// Total cycles for one layer's node sweep under `mode`.
+pub fn schedule(mode: PipelineMode, ne: &[u64], mp: &[u64], fifo_depth: usize) -> ScheduleResult {
+    assert_eq!(ne.len(), mp.len());
+    match mode {
+        PipelineMode::NonPipelined => ScheduleResult {
+            cycles: ne.iter().sum::<u64>() + mp.iter().sum::<u64>(),
+            fifo: FifoStats::default(),
+        },
+        PipelineMode::Fixed => ScheduleResult {
+            cycles: fixed(ne, mp),
+            fifo: FifoStats::default(),
+        },
+        PipelineMode::Streaming => streaming(ne, mp, fifo_depth),
+    }
+}
+
+/// Lock-step two-stage pipeline: step k runs NE(k) beside MP(k-1) and
+/// advances only when both finish (the paper's "fixed manner").
+fn fixed(ne: &[u64], mp: &[u64]) -> u64 {
+    let n = ne.len();
+    if n == 0 {
+        return 0;
+    }
+    let mut total = ne[0];
+    for i in 1..n {
+        total += ne[i].max(mp[i - 1]);
+    }
+    total + mp[n - 1]
+}
+
+/// FIFO-decoupled streaming pipeline with bounded queue depth.
+fn streaming(ne: &[u64], mp: &[u64], depth: usize) -> ScheduleResult {
+    let n = ne.len();
+    if n == 0 {
+        return ScheduleResult::default();
+    }
+    let depth = depth.max(1);
+    let mut push = vec![0u64; n]; // NE finish (= FIFO enqueue) time
+    let mut pop = vec![0u64; n]; // MP dequeue time
+    let mut done = vec![0u64; n]; // MP finish time
+    let mut ready = vec![0u64; n]; // NE finish absent backpressure
+    let mut mp_free = vec![0u64; n]; // MP idle-from time before node i
+    for i in 0..n {
+        let prev_push = if i > 0 { push[i - 1] } else { 0 };
+        let finish = prev_push + ne[i]; // compute done, pre-backpressure
+        // Slot i-depth must have been dequeued before node i can enqueue.
+        let gate = if i >= depth { pop[i - depth] } else { 0 };
+        ready[i] = finish;
+        push[i] = finish.max(gate);
+        mp_free[i] = if i > 0 { done[i - 1] } else { 0 };
+        pop[i] = mp_free[i].max(push[i]);
+        done[i] = pop[i] + mp[i];
+    }
+    ScheduleResult {
+        cycles: done[n - 1],
+        fifo: stats_from_events(&push, &pop, &ready, &mp_free),
+    }
+}
+
+/// Speed-up triple reported by Fig. 9: (fixed/non, streaming/fixed,
+/// streaming/non) for one workload.
+pub fn speedups(ne: &[u64], mp: &[u64], fifo_depth: usize) -> (f64, f64, f64) {
+    let non = schedule_cycles(PipelineMode::NonPipelined, ne, mp, fifo_depth) as f64;
+    let fix = schedule_cycles(PipelineMode::Fixed, ne, mp, fifo_depth) as f64;
+    let st = schedule_cycles(PipelineMode::Streaming, ne, mp, fifo_depth) as f64;
+    (non / fix, fix / st, non / st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn empty_and_singleton() {
+        for mode in PipelineMode::all() {
+            assert_eq!(schedule(mode, &[], &[], 10).cycles, 0);
+            assert_eq!(schedule(mode, &[5], &[3], 10).cycles, 8);
+        }
+    }
+
+    #[test]
+    fn uniform_fixed_matches_closed_form() {
+        // ne = mp = c: non = 2nc, fixed = (n+1)c.
+        let ne = vec![10u64; 6];
+        let mp = vec![10u64; 6];
+        assert_eq!(schedule(PipelineMode::NonPipelined, &ne, &mp, 10).cycles, 120);
+        assert_eq!(schedule(PipelineMode::Fixed, &ne, &mp, 10).cycles, 70);
+        assert_eq!(schedule(PipelineMode::Streaming, &ne, &mp, 10).cycles, 70);
+    }
+
+    #[test]
+    fn streaming_absorbs_degree_imbalance() {
+        // One hot node (mp=50) among cheap ones: fixed stalls NE behind
+        // it; streaming overlaps it with later NE work.
+        let ne = vec![10u64; 8];
+        let mp = vec![2, 50, 2, 2, 2, 2, 2, 2];
+        let fx = schedule(PipelineMode::Fixed, &ne, &mp, 10).cycles;
+        let st = schedule(PipelineMode::Streaming, &ne, &mp, 10).cycles;
+        assert!(st < fx, "streaming {st} !< fixed {fx}");
+    }
+
+    #[test]
+    fn depth_one_behaves_like_tight_coupling() {
+        let ne = vec![4u64, 4, 4, 4];
+        let mp = vec![9u64, 9, 9, 9];
+        let st1 = schedule(PipelineMode::Streaming, &ne, &mp, 1).cycles;
+        let st10 = schedule(PipelineMode::Streaming, &ne, &mp, 10).cycles;
+        assert!(st1 >= st10);
+    }
+
+    #[test]
+    fn fifo_peak_bounded_by_depth(){
+        let ne = vec![1u64; 64];
+        let mp = vec![40u64; 64];
+        let r = schedule(PipelineMode::Streaming, &ne, &mp, 10);
+        assert!(r.fifo.peak_depth <= 10, "peak {}", r.fifo.peak_depth);
+        assert!(r.fifo.producer_stall > 0, "NE must backpressure");
+    }
+
+    #[test]
+    fn prop_ordering_and_bounds() {
+        forall("pipeline-ordering", 300, 0xF19, |rng| {
+            let n = rng.range(1, 60);
+            let ne: Vec<u64> = (0..n).map(|_| rng.range(1, 200) as u64).collect();
+            let mp: Vec<u64> = (0..n).map(|_| rng.range(1, 400) as u64).collect();
+            let depth = rng.range(1, 16);
+            let non = schedule(PipelineMode::NonPipelined, &ne, &mp, depth).cycles;
+            let fx = schedule(PipelineMode::Fixed, &ne, &mp, depth).cycles;
+            let st = schedule(PipelineMode::Streaming, &ne, &mp, depth).cycles;
+            let sum_ne: u64 = ne.iter().sum();
+            let sum_mp: u64 = mp.iter().sum();
+            prop_assert!(st <= fx, "streaming {st} > fixed {fx}");
+            prop_assert!(fx <= non, "fixed {fx} > non {non}");
+            // Streaming can never beat the busier engine running alone.
+            prop_assert!(
+                st >= sum_ne.max(sum_mp),
+                "streaming {st} < critical path {}",
+                sum_ne.max(sum_mp)
+            );
+            // First NE and last MP are always exposed.
+            prop_assert!(st >= ne[0] + mp[n - 1], "pipeline fill/drain missing");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_deeper_fifo_never_hurts() {
+        forall("fifo-monotone", 200, 0xF1F0, |rng| {
+            let n = rng.range(1, 50);
+            let ne: Vec<u64> = (0..n).map(|_| rng.range(1, 100) as u64).collect();
+            let mp: Vec<u64> = (0..n).map(|_| rng.range(1, 300) as u64).collect();
+            let d1 = rng.range(1, 8);
+            let d2 = d1 + rng.range(1, 8);
+            let s1 = schedule(PipelineMode::Streaming, &ne, &mp, d1).cycles;
+            let s2 = schedule(PipelineMode::Streaming, &ne, &mp, d2).cycles;
+            prop_assert!(s2 <= s1, "deeper fifo slower: {s2} > {s1}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Degree-table prefetcher (paper §4.6 "Prefetching").
+//!
+//! For big graphs the CSR degree/neighbor tables live in DRAM; a
+//! loop-carried dependence on those reads would stall the MP PE for the
+//! full access latency every node. The prefetcher streams degrees of
+//! consecutive nodes into an on-chip FIFO ahead of consumption; the MP
+//! PE pops them and "behaves in the same way as for small graphs" —
+//! provided the FIFO never runs dry.
+
+use super::dram::DramModel;
+
+/// Prefetcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Prefetcher {
+    /// On-chip FIFO depth (entries).
+    pub depth: usize,
+    /// Entry width in bits (degree-table entries; paper uses 32-bit).
+    pub elem_bits: usize,
+}
+
+impl Default for Prefetcher {
+    fn default() -> Self {
+        Prefetcher {
+            depth: 64,
+            elem_bits: 32,
+        }
+    }
+}
+
+impl Prefetcher {
+    /// Stall cycles the MP PE sees with prefetching, given the cycle at
+    /// which it *wants* each consecutive entry. The prefetcher issues
+    /// ahead within its FIFO depth; entry i becomes ready at
+    /// `latency + (i+1)/epc` in the best case, gated by slot reuse.
+    pub fn stall_cycles(&self, want: &[u64], dram: &DramModel) -> u64 {
+        let n = want.len();
+        if n == 0 {
+            return 0;
+        }
+        let mut ready = vec![0u64; n];
+        let mut consume = vec![0u64; n];
+        let mut stall = 0u64;
+        for i in 0..n {
+            // Refill of entry i starts when its FIFO slot is free;
+            // refill rate is conservatively one entry per cycle (packed
+            // beats deliver several, but the FIFO write port is one).
+            let slot_free = if i >= self.depth {
+                consume[i - self.depth]
+            } else {
+                0
+            };
+            let prev_ready = if i > 0 { ready[i - 1] } else { dram.latency };
+            ready[i] = prev_ready.max(slot_free) + 1;
+            consume[i] = want[i].max(ready[i]);
+            stall += consume[i] - want[i];
+        }
+        stall
+    }
+
+    /// Stall cycles without prefetching: every node pays the full DRAM
+    /// burst latency for its degree inline (the §4.6 motivation).
+    pub fn stall_cycles_naive(&self, n: usize, dram: &DramModel) -> u64 {
+        n as u64 * dram.burst_cycles(1, self.elem_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_hides_latency_for_slow_consumer() {
+        let p = Prefetcher::default();
+        let d = DramModel::default();
+        // MP PE wants one degree every 200 cycles, starting at 200:
+        // the prefetcher runs far ahead -> zero stalls after warm-up.
+        let want: Vec<u64> = (1..=100).map(|i| i * 200).collect();
+        assert_eq!(p.stall_cycles(&want, &d), 0);
+    }
+
+    #[test]
+    fn moderately_fast_consumer_beats_naive_fetching() {
+        let p = Prefetcher::default();
+        let d = DramModel::default();
+        // MP PE consumes a degree every 5 cycles — far faster than the
+        // naive per-node DRAM latency, slower than the refill rate.
+        let want: Vec<u64> = (0..32).map(|i| i * 5).collect();
+        let s = p.stall_cycles(&want, &d);
+        assert!(s > 0, "warm-up stalls expected");
+        assert!(s < p.stall_cycles_naive(32, &d), "{s}");
+    }
+
+    #[test]
+    fn naive_scales_linearly() {
+        let p = Prefetcher::default();
+        let d = DramModel::default();
+        assert_eq!(
+            p.stall_cycles_naive(10, &d) * 10,
+            p.stall_cycles_naive(100, &d)
+        );
+    }
+
+    #[test]
+    fn empty_want_no_stall() {
+        let p = Prefetcher::default();
+        assert_eq!(p.stall_cycles(&[], &DramModel::default()), 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Micro-bench harness used by `rust/benches/*` (criterion is heavier
+//! than needed and not in the offline vendor set): warmup, repeated
+//! timed runs, outlier-trimmed summary.
+
+use std::time::Instant;
+
+use super::stats::{fmt_secs, Sample};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub min: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; the closure's
+/// return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut s = Sample::new();
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        s.push(dt);
+        min = min.min(dt);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: s.trimmed_mean(0.05),
+        p50: s.median(),
+        min,
+    };
+    println!(
+        "{:<44} {:>11}/iter (p50 {:>11}, min {:>11}, n={})",
+        r.name,
+        fmt_secs(r.mean),
+        fmt_secs(r.p50),
+        fmt_secs(r.min),
+        r.iters
+    );
+    r
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean > 0.0);
+        assert!(r.min <= r.mean * 1.01);
+        assert_eq!(r.iters, 5);
+    }
+}

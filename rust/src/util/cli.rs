@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser substrate (clap is not in the offline
+//! vendor set). Supports `--key value`, `--key=value`, boolean
+//! `--flag`, and positional arguments, with typed getters.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program/subcommand names).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        anyhow!("flag --{name} expects a value")
+                    })?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_positional() {
+        let a =
+            Args::parse(&argv(&["run", "--n", "5", "--name=x", "file"]), &[])
+                .unwrap();
+        assert_eq!(a.positional, vec!["run", "file"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+        assert_eq!(a.str_or("name", ""), "x");
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = Args::parse(&argv(&["--verbose", "--n", "2"]), &["verbose"])
+            .unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = Args::parse(&argv(&["--n", "zork"]), &[]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(&argv(&["--models", "gcn, gin,gat"]), &[]).unwrap();
+        assert_eq!(a.list_or("models", &[]), vec!["gcn", "gin", "gat"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+}

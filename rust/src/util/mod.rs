@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, statistics, concurrency, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,268 @@
+//! Concurrency substrate: bounded MPMC channel (backpressure-capable)
+//! and a scoped thread pool. Tokio is not in the offline vendor set, so
+//! the coordinator's event loop is built on these primitives — which
+//! also map more directly onto the paper's hardware FIFOs: the bounded
+//! channel *is* the streaming FIFO of Section 3.5, with `send` blocking
+//! exactly like a full on-chip queue stalls the NE PE.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Bounded MPMC channel. `send` blocks when full (backpressure),
+/// `recv` blocks when empty, `close` wakes all waiters.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    q: Mutex<ChannelState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+    peak: usize,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0, "channel capacity must be positive");
+        Channel {
+            inner: Arc::new(ChannelInner {
+                q: Mutex::new(ChannelState {
+                    buf: VecDeque::with_capacity(cap),
+                    closed: false,
+                    peak: 0,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking send; Err(v) if the channel is closed.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(v);
+            }
+            if st.buf.len() < self.inner.cap {
+                st.buf.push_back(v);
+                let depth = st.buf.len();
+                st.peak = st.peak.max(depth);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(v) when full or closed.
+    pub fn try_send(&self, v: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.buf.len() >= self.inner.cap {
+            return Err(v);
+        }
+        st.buf.push_back(v);
+        let d = st.buf.len();
+        st.peak = st.peak.max(d);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None once closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Close the channel: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-water mark of queue depth (backpressure diagnostics).
+    pub fn peak_depth(&self) -> usize {
+        self.inner.q.lock().unwrap().peak
+    }
+}
+
+/// Fixed-size worker pool executing closures from a shared queue.
+pub struct ThreadPool {
+    tx: Channel<Box<dyn FnOnce() + Send + 'static>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        let tx: Channel<Box<dyn FnOnce() + Send + 'static>> =
+            Channel::bounded(workers.max(1) * 64);
+        let mut handles = Vec::new();
+        for i in 0..workers.max(1) {
+            let rx = tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gengnn-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx, handles }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool closed"));
+    }
+
+    /// Close the queue and join all workers.
+    pub fn join(self) {
+        self.tx.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn channel_fifo_order() {
+        let ch = Channel::bounded(8);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(ch.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_until_drained() {
+        let ch = Channel::bounded(2);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert!(ch.try_send(3).is_err());
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.send(3).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.recv(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let ch = Channel::bounded(4);
+        ch.send("a").unwrap();
+        ch.close();
+        assert!(ch.send("b").is_err());
+        assert_eq!(ch.recv(), Some("a"));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn peak_depth_tracks_high_water() {
+        let ch = Channel::bounded(10);
+        for i in 0..7 {
+            ch.send(i).unwrap();
+        }
+        while ch.try_recv().is_some() {}
+        assert_eq!(ch.peak_depth(), 7);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn mpmc_multiple_consumers() {
+        let ch: Channel<usize> = Channel::bounded(16);
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..3 {
+            let rx = ch.clone();
+            let s = Arc::clone(&sum);
+            joins.push(std::thread::spawn(move || {
+                while let Some(v) = rx.recv() {
+                    s.fetch_add(v, Ordering::SeqCst);
+                }
+            }));
+        }
+        for i in 1..=100 {
+            ch.send(i).unwrap();
+        }
+        ch.close();
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), 5050);
+    }
+}

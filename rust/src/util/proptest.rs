@@ -1,0 +1,71 @@
+//! Minimal property-testing substrate (proptest is not in the offline
+//! vendor set). Runs a property over many seeded random cases and, on
+//! failure, reports the failing seed so the case can be replayed
+//! deterministically — the part of proptest we actually need for the
+//! coordinator/graph invariants.
+
+use crate::util::rng::Rng;
+
+/// Outcome of one case: Ok, or a message describing the violation.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`, each with a forked RNG.
+/// Panics with the seed + message of the first failure.
+pub fn forall(name: &str, cases: usize, base_seed: u64, prop: impl Fn(&mut Rng) -> CaseResult) {
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {i} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning CaseResult instead of panicking, so the
+/// failing seed is reported by `forall`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float comparison for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x*0==0", 50, 1, |rng| {
+            let x = rng.f64();
+            if x * 0.0 == 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn forall_reports_seed_on_failure() {
+        forall("always-fails", 5, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(1000.0, 1000.5, 1e-3));
+        assert!(!close(1.0, 2.0, 1e-3));
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration tests of the full serving stack: mixed-model streams,
+//! error paths, backpressure, and metrics consistency.
+
+use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::datagen::{molecular_graph, MolConfig};
+use gengnn::util::rng::Rng;
+
+fn server(models: &[&str], queue: usize, admission: AdmissionPolicy) -> Server {
+    Server::start(ServerConfig {
+        models: models.iter().map(|s| s.to_string()).collect(),
+        prep_workers: 2,
+        queue_capacity: queue,
+        admission,
+        batch: BatchPolicy::default(),
+        ..ServerConfig::default()
+    })
+    .expect("server start (run `make artifacts` first)")
+}
+
+#[test]
+fn mixed_model_stream_completes_with_correct_accounting() {
+    let models = ["gcn", "gat", "dgn"];
+    let server = server(&models, 64, AdmissionPolicy::Block);
+    let responses = server.responses();
+    let mut rng = Rng::new(42);
+    let total = 30usize;
+
+    let drain = std::thread::spawn(move || {
+        let mut per_model = std::collections::BTreeMap::<String, usize>::new();
+        for _ in 0..total {
+            let r = responses.recv().expect("response");
+            assert!(r.is_ok(), "{:?}", r.output);
+            assert!(r.latency() >= 0.0);
+            *per_model.entry(r.model).or_default() += 1;
+        }
+        per_model
+    });
+
+    for i in 0..total {
+        let g = molecular_graph(&mut rng, &MolConfig::molhiv());
+        let (adm, _) = server.submit(models[i % models.len()], g);
+        assert_eq!(adm, Admission::Accepted);
+    }
+    let per_model = drain.join().unwrap();
+    assert_eq!(per_model.values().sum::<usize>(), total);
+    assert_eq!(per_model.len(), 3, "{per_model:?}");
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_completed(), total as u64);
+    let summaries = metrics.summaries();
+    for s in &summaries {
+        assert_eq!(s.failed, 0);
+        assert!(s.mean_latency > 0.0);
+        assert!(s.p99 >= s.p50);
+        // Execute time is part of end-to-end time.
+        assert!(s.mean_exec <= s.mean_latency * 1.001);
+    }
+}
+
+#[test]
+fn invalid_requests_are_rejected_not_crashed() {
+    let server = server(&["gcn"], 16, AdmissionPolicy::Block);
+    let responses = server.responses();
+    let mut rng = Rng::new(1);
+
+    // Unknown model.
+    server.submit("bert", molecular_graph(&mut rng, &MolConfig::molhiv()));
+    // Oversized graph.
+    let big = gengnn::datagen::citation::citation_graph(1, 500, 1500, 9);
+    server.submit("gcn", big);
+    // Wrong feature width.
+    let mut bad = molecular_graph(&mut rng, &MolConfig::molhiv());
+    bad.f_node = 4;
+    bad.node_feat.truncate(bad.n * 4);
+    server.submit("gcn", bad);
+    // A valid one at the end.
+    server.submit("gcn", molecular_graph(&mut rng, &MolConfig::molhiv()));
+
+    let mut ok = 0;
+    let mut err = 0;
+    for _ in 0..4 {
+        let r = responses.recv().unwrap();
+        if r.is_ok() {
+            ok += 1;
+        } else {
+            err += 1;
+        }
+    }
+    assert_eq!((ok, err), (1, 3));
+    server.shutdown();
+}
+
+#[test]
+fn reject_policy_sheds_load_when_queue_full() {
+    // Tiny queue + reject admission: a burst must see rejections while
+    // the executor grinds, and every accepted request must complete.
+    let server = server(&["gin"], 2, AdmissionPolicy::Reject);
+    let responses = server.responses();
+    let mut rng = Rng::new(9);
+    let mut accepted = 0u64;
+    let burst = 40;
+    for _ in 0..burst {
+        let g = molecular_graph(&mut rng, &MolConfig::molhiv());
+        if server.submit("gin", g).0 == Admission::Accepted {
+            accepted += 1;
+        }
+    }
+    assert!(accepted >= 1, "at least the first must be admitted");
+    let mut done = 0u64;
+    while done < accepted {
+        let r = responses.recv().unwrap();
+        assert!(r.is_ok());
+        done += 1;
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_completed(), accepted);
+    assert_eq!(metrics.rejected(), burst - accepted);
+    assert!(
+        metrics.rejected() > 0,
+        "burst of {burst} into a queue of 2 must shed load"
+    );
+}
+
+#[test]
+fn throughput_counted_over_wall_clock() {
+    let server = server(&["gcn"], 64, AdmissionPolicy::Block);
+    let responses = server.responses();
+    let mut rng = Rng::new(5);
+    for _ in 0..10 {
+        server.submit("gcn", molecular_graph(&mut rng, &MolConfig::molhiv()));
+    }
+    for _ in 0..10 {
+        responses.recv().unwrap();
+    }
+    let m = server.shutdown();
+    assert!(m.throughput() > 0.0);
+    assert!(m.render().contains("gcn"));
+}
