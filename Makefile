@@ -1,0 +1,36 @@
+# GenGNN reproduction — build/verify entry points.
+#
+# Tier-1 verify (what CI gates on):      make check
+# Full artifact regeneration (needs jax): make artifacts
+
+.PHONY: build test check fmt clippy artifacts artifacts-golden bench-snapshot clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+check: build test fmt clippy
+
+# Full artifact set: HLO text + goldens + manifest (Layer 2 lowering).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Fixture set: goldens + manifest only, HLO elided (what is checked in).
+artifacts-golden:
+	cd python && python3 -m compile.aot --out-dir ../artifacts --golden-only
+
+# Refresh the perf-trajectory anchor from the micro bench.
+# (cargo runs benches with cwd = rust/, so anchor the path to the repo root.)
+bench-snapshot:
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_seed.json cargo bench --bench micro
+
+clean:
+	cargo clean

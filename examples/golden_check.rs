@@ -1,20 +1,26 @@
 //! Developer smoke check: compile every artifact, replay its golden
 //! input, verify numerics, and report steady-state inference latency.
+//!
+//! Runs out of the box against the checked-in fixtures at `artifacts/`
+//! (resolved via `Artifacts::default_dir`, so it works from any cwd);
+//! point `GENGNN_ARTIFACTS` elsewhere to check a freshly generated set.
 use gengnn::runtime::{Artifacts, Engine, Golden};
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::load("artifacts")?;
+    let arts = Artifacts::load(Artifacts::default_dir())?;
     for name in arts.model_names() {
         let t0 = std::time::Instant::now();
         let mut e = Engine::load(&arts, &[name])?;
         let compile = t0.elapsed();
+        let tol = e.golden_tolerance();
         let meta = e.meta(name)?.clone();
         let g = Golden::load(&meta)?;
         let out = e.infer_with_eig(name, &g.graph, g.eig.as_deref())?;
-        let ok = out
-            .iter()
-            .zip(&g.output)
-            .all(|(a, b)| (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())));
+        let ok = out.len() == g.output.len()
+            && out
+                .iter()
+                .zip(&g.output)
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())));
         // Steady state: average of 20 runs after warmup.
         let t1 = std::time::Instant::now();
         for _ in 0..20 {

@@ -1,9 +1,9 @@
-//! End-to-end serving driver — the flagship example (EXPERIMENTS.md
-//! §End-to-end): all six molecular models compiled from their AOT
-//! artifacts, then a 2,000-graph MolHIV-like stream served through the
-//! full coordinator stack (bounded ingest → prep workers → dispatch
-//! batcher → PJRT executor), reporting per-model latency and aggregate
-//! throughput. Python never runs here.
+//! End-to-end serving driver — the flagship example: all six molecular
+//! models compiled from their artifacts, then a 2,000-graph
+//! MolHIV-like stream served through the full coordinator stack
+//! (bounded ingest → prep workers → dispatch batcher → executor),
+//! reporting per-model latency and aggregate throughput. Python never
+//! runs here.
 //!
 //! ```sh
 //! cargo run --release --example molhiv_serving [-- --count 2000]

@@ -1,6 +1,7 @@
 //! Quickstart: the smallest end-to-end use of GenGNN.
 //!
-//! 1. load the AOT artifacts (built once by `make artifacts`),
+//! 1. load the artifact manifest (checked-in fixtures at `artifacts/`
+//!    work out of the box; regenerate the full set with `make artifacts`),
 //! 2. run a raw COO molecular graph through a compiled model,
 //! 3. cross-check the cycle-level simulator's latency estimate.
 //!

@@ -50,7 +50,9 @@ def to_hlo_text(lowered) -> str:
 def golden_graph(name: str, rng: np.random.RandomState):
     spec = M.SPECS[name]
     if name == "dgn_large":
-        g = graphgen.citation_graph(rng, n=300, avg_deg=4.5, node_f=spec.in_dim)
+        # Kept small so the golden JSON stays checked-in friendly while
+        # still exercising the node-level path well past n_max/4.
+        g = graphgen.citation_graph(rng, n=160, avg_deg=4.5, node_f=spec.in_dim)
     else:
         g = graphgen.molecular_graph(rng, n=23, node_f=spec.in_dim)
     return g
@@ -70,13 +72,25 @@ def dense_inputs(name: str, g: graphgen.SparseGraph):
     return args
 
 
-def export_model(name: str, out_dir: str, seed: int) -> dict:
+HLO_PLACEHOLDER = (
+    "HLO text elided (golden-only artifact set).\n"
+    "The native Rust backend regenerates weights from manifest.json and\n"
+    "does not execute HLO; regenerate the full set with `make artifacts`.\n"
+)
+
+
+def export_model(name: str, out_dir: str, seed: int, golden_only: bool = False) -> dict:
     spec = M.SPECS[name]
     fn = M.build(name, seed)
     t0 = time.time()
-    lowered = jax.jit(fn).lower(*M.input_specs(name))
-    text = to_hlo_text(lowered)
     hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    if golden_only:
+        # Fixture mode: skip lowering, keep the artifact slot present so
+        # manifests stay uniform (the rust side checks existence only).
+        text = HLO_PLACEHOLDER
+    else:
+        lowered = jax.jit(fn).lower(*M.input_specs(name))
+        text = to_hlo_text(lowered)
     with open(hlo_path, "w") as f:
         f.write(text)
 
@@ -125,7 +139,7 @@ def export_model(name: str, out_dir: str, seed: int) -> dict:
         "inputs": inputs,
         "artifact": f"{name}.hlo.txt",
         "golden": f"{name}.golden.json",
-        "hlo_bytes": len(text),
+        "hlo_bytes": 0 if golden_only else len(text),
     }
     print(
         f"[aot] {name}: {len(text) / 1e6:.2f} MB HLO, "
@@ -139,12 +153,20 @@ def main() -> None:
     p.add_argument("--out-dir", default="../artifacts")
     p.add_argument("--models", nargs="*", default=sorted(M.SPECS.keys()))
     p.add_argument("--seed", type=int, default=WEIGHT_SEED)
+    p.add_argument(
+        "--golden-only",
+        action="store_true",
+        help="skip HLO lowering; write goldens + manifest + placeholder "
+        "artifacts (the checked-in fixture mode)",
+    )
     args = p.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
     manifest = {"version": 1, "weight_seed": args.seed, "models": []}
     for name in args.models:
-        manifest["models"].append(export_model(name, args.out_dir, args.seed))
+        manifest["models"].append(
+            export_model(name, args.out_dir, args.seed, args.golden_only)
+        )
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] wrote {len(manifest['models'])} models to {args.out_dir}")

@@ -1,0 +1,344 @@
+"""Numpy transliteration of the Rust native reference engine.
+
+`rust/src/runtime/native.rs` re-implements the Layer-2 model forward
+passes in pure Rust so the serving stack runs without a PJRT backend.
+This module is the cross-language spec for that code: every function
+here mirrors the Rust implementation operation-for-operation (same
+weight-draw order, same epsilons, same masking points), and
+`python/tests/test_native_ref.py` asserts it agrees with the JAX
+models in `model.py` to float32 tolerance.
+
+Weight generation uses a from-scratch MT19937 so the Rust side can
+reproduce `np.random.RandomState(seed).uniform` bit-for-bit (the
+legacy numpy generator: two 32-bit draws per double, 53-bit mantissa).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EPS_GIN = 0.1
+AVG_LOG_DEG = float(np.log(1.0 + 2.15))
+
+
+# ------------------------------------------------------------- MT19937
+class Mt19937:
+    """Classic MT19937, matching numpy's legacy RandomState stream."""
+
+    def __init__(self, seed: int):
+        self.mt = [0] * 624
+        self.mt[0] = seed & 0xFFFFFFFF
+        for i in range(1, 624):
+            self.mt[i] = (
+                1812433253 * (self.mt[i - 1] ^ (self.mt[i - 1] >> 30)) + i
+            ) & 0xFFFFFFFF
+        self.idx = 624
+
+    def next_u32(self) -> int:
+        if self.idx >= 624:
+            mt = self.mt
+            for i in range(624):
+                y = (mt[i] & 0x80000000) | (mt[(i + 1) % 624] & 0x7FFFFFFF)
+                nxt = mt[(i + 397) % 624] ^ (y >> 1)
+                if y & 1:
+                    nxt ^= 0x9908B0DF
+                mt[i] = nxt
+            self.idx = 0
+        y = self.mt[self.idx]
+        self.idx += 1
+        y ^= y >> 11
+        y ^= (y << 7) & 0x9D2C5680
+        y ^= (y << 15) & 0xEFC60000
+        y ^= y >> 18
+        return y & 0xFFFFFFFF
+
+    def next_double(self) -> float:
+        a = self.next_u32() >> 5
+        b = self.next_u32() >> 6
+        return (a * 67108864.0 + b) / 9007199254740992.0
+
+    def uniform(self, lo: float, hi: float, count: int) -> np.ndarray:
+        return np.asarray(
+            [lo + (hi - lo) * self.next_double() for _ in range(count)],
+            dtype=np.float64,
+        )
+
+
+class WInit:
+    """Mirror of model.WInit over the from-scratch MT19937."""
+
+    def __init__(self, seed: int):
+        self.mt = Mt19937(seed)
+
+    def dense(self, fin: int, fout: int):
+        s = 1.0 / np.sqrt(fin)
+        w = self.mt.uniform(-s, s, fin * fout).reshape(fin, fout).astype(np.float32)
+        b = self.mt.uniform(-s, s, fout).astype(np.float32)
+        return w, b
+
+    def vec(self, f: int) -> np.ndarray:
+        s = 1.0 / np.sqrt(f)
+        return self.mt.uniform(-s, s, f).astype(np.float32)
+
+
+# ----------------------------------------------------------- primitives
+def linear(x, w, b, act: str = "none"):
+    r = (x.astype(np.float32) @ w + b).astype(np.float32)
+    if act == "relu":
+        r = np.maximum(r, np.float32(0.0))
+    elif act == "elu":
+        r = np.where(r > 0, r, np.expm1(r)).astype(np.float32)
+    elif act != "none":
+        raise ValueError(act)
+    return r
+
+
+def masked_mean_pool(h, mask):
+    denom = np.maximum(np.sum(mask, dtype=np.float32), np.float32(1.0))
+    return (np.sum(h * mask[:, None], axis=0, dtype=np.float32) / denom)[None, :]
+
+
+def gcn_norm_adj(adj, mask):
+    a_hat = (adj + np.diag(mask)).astype(np.float32)
+    deg = np.sum(a_hat, axis=1, dtype=np.float32)
+    inv_sqrt = np.where(
+        deg > 0,
+        np.float32(1.0) / np.sqrt(np.maximum(deg, np.float32(1e-12))),
+        np.float32(0.0),
+    ).astype(np.float32)
+    return (a_hat * inv_sqrt[:, None] * inv_sqrt[None, :]).astype(np.float32)
+
+
+def dgn_matrices(adj, eig):
+    deg = np.sum(adj, axis=1, dtype=np.float32)
+    adj_norm = (adj / np.maximum(deg, np.float32(1.0))[:, None]).astype(np.float32)
+    fm = (adj * (eig[None, :] - eig[:, None])).astype(np.float32)
+    b = (fm / (np.sum(np.abs(fm), axis=1, keepdims=True, dtype=np.float32) + np.float32(1e-8))).astype(np.float32)
+    return adj_norm, b, np.sum(b, axis=1, dtype=np.float32)
+
+
+# ----------------------------------------------------------------- models
+def forward_gcn(spec, seed, x, adj, mask):
+    wi = WInit(seed)
+    embed = wi.dense(spec["in_dim"], spec["dim"])
+    convs = [wi.dense(spec["dim"], spec["dim"]) for _ in range(spec["layers"])]
+    head = wi.dense(spec["dim"], spec["out_dim"])
+    a_norm = gcn_norm_adj(adj, mask)
+    h = linear(x, *embed, "relu")
+    for li, (w, b) in enumerate(convs):
+        hw = linear(h, w, b)
+        h = (a_norm @ hw).astype(np.float32)
+        if li + 1 < len(convs):
+            h = np.maximum(h, np.float32(0.0))
+    h = h * mask[:, None]
+    if spec["node_level"]:
+        return linear(h, *head).reshape(-1)
+    return linear(masked_mean_pool(h, mask), *head).reshape(-1)
+
+
+def forward_gin(spec, seed, x, adj, edge_attr, mask, virtual_node=False):
+    wi = WInit(seed)
+    d = spec["dim"]
+    embed = wi.dense(spec["in_dim"], d)
+    bond = [wi.dense(3, d) for _ in range(spec["layers"])]
+    mlps = [
+        [wi.dense(d, 2 * d), wi.dense(2 * d, d)] for _ in range(spec["layers"])
+    ]
+    head = wi.dense(d, spec["out_dim"])
+    if virtual_node:
+        vn0 = wi.vec(d)
+        vn_mlps = [
+            [wi.dense(d, 2 * d), wi.dense(2 * d, d)]
+            for _ in range(spec["layers"] - 1)
+        ]
+    h = linear(x, *embed, "relu")
+    vn = vn0 if virtual_node else None
+    for li in range(spec["layers"]):
+        if virtual_node:
+            h = (h + vn[None, :] * mask[:, None]).astype(np.float32)
+        we, be = bond[li]
+        e = (np.einsum("uvd,df->uvf", edge_attr, we) + be).astype(np.float32)
+        msg = np.maximum(h[None, :, :] + e, np.float32(0.0))
+        m = np.sum(adj[:, :, None] * msg, axis=1, dtype=np.float32)
+        z = (np.float32(1.0 + EPS_GIN) * h + m).astype(np.float32)
+        (w1, b1), (w2, b2) = mlps[li]
+        h = linear(linear(z, w1, b1, "relu"), w2, b2, "relu")
+        h = h * mask[:, None]
+        if virtual_node and li + 1 < spec["layers"]:
+            g = (vn + np.sum(h * mask[:, None], axis=0, dtype=np.float32)).astype(
+                np.float32
+            )[None, :]
+            (w1, b1), (w2, b2) = vn_mlps[li]
+            vn = linear(linear(g, w1, b1, "relu"), w2, b2, "relu")[0]
+    return linear(masked_mean_pool(h, mask), *head).reshape(-1)
+
+
+def forward_gat(spec, seed, x, adj, mask):
+    wi = WInit(seed)
+    d, heads = spec["dim"], spec["heads"]
+    fh = d // heads
+    embed = wi.dense(spec["in_dim"], d)
+    convs = []
+    for _ in range(spec["layers"]):
+        w, b = wi.dense(d, d)
+        a_src = wi.vec(d).reshape(heads, fh)
+        a_dst = wi.vec(d).reshape(heads, fh)
+        convs.append((w, b, a_src, a_dst))
+    head = wi.dense(d, spec["out_dim"])
+    n = x.shape[0]
+    adj_sl = np.maximum(adj, np.diag(mask)).astype(np.float32)
+    h = linear(x, *embed, "relu")
+    for li, (w, b, a_src, a_dst) in enumerate(convs):
+        z = linear(h, w, b).reshape(n, heads, fh)
+        sl = np.einsum("nhf,hf->nh", z, a_src).astype(np.float32)
+        dl = np.einsum("nhf,hf->nh", z, a_dst).astype(np.float32)
+        outs = []
+        for hh in range(heads):
+            logits = (sl[:, hh][:, None] + dl[:, hh][None, :]).astype(np.float32)
+            logits = np.where(logits > 0, logits, np.float32(0.2) * logits)
+            logits = np.where(adj_sl > 0, logits, np.float32(-1.0e9)).astype(
+                np.float32
+            )
+            lmax = np.max(logits, axis=1, keepdims=True)
+            p = np.exp((logits - lmax).astype(np.float32)).astype(np.float32)
+            p = np.where(adj_sl > 0, p, np.float32(0.0)).astype(np.float32)
+            p = p / np.maximum(
+                np.sum(p, axis=1, keepdims=True, dtype=np.float32),
+                np.float32(1e-16),
+            )
+            outs.append((p.astype(np.float32) @ z[:, hh, :]).astype(np.float32))
+        h = np.stack(outs, axis=1).reshape(n, d)
+        if li + 1 < len(convs):
+            h = np.where(h > 0, h, np.expm1(h)).astype(np.float32)
+        h = h * mask[:, None]
+    return linear(masked_mean_pool(h, mask), *head).reshape(-1)
+
+
+def forward_pna(spec, seed, x, adj, mask):
+    wi = WInit(seed)
+    d = spec["dim"]
+    embed = wi.dense(spec["in_dim"], d)
+    convs = [wi.dense(12 * d, d) for _ in range(spec["layers"])]
+    head = [
+        wi.dense(d, d // 2),
+        wi.dense(d // 2, d // 4),
+        wi.dense(d // 4, spec["out_dim"]),
+    ]
+    h = linear(x, *embed, "relu")
+    deg = np.sum(adj, axis=1, dtype=np.float32)
+    deg1 = np.maximum(deg, np.float32(1.0))
+    has = (deg > 0).astype(np.float32)[:, None]
+    log_deg = np.log(deg + np.float32(1.0)).astype(np.float32)
+    amp = (log_deg / np.float32(AVG_LOG_DEG))[:, None]
+    att = np.where(
+        deg > 0,
+        np.float32(AVG_LOG_DEG) / np.maximum(log_deg, np.float32(1e-6)),
+        np.float32(0.0),
+    ).astype(np.float32)[:, None]
+    neg = np.float32(-3.0e38)
+    pos = np.float32(3.0e38)
+    for w, b in convs:
+        s = (adj @ h).astype(np.float32)
+        ss = (adj @ (h * h)).astype(np.float32)
+        present = adj[:, :, None] > 0
+        mx = np.max(np.where(present, h[None, :, :], neg), axis=1).astype(np.float32)
+        mn = np.min(np.where(present, h[None, :, :], pos), axis=1).astype(np.float32)
+        mean = (s / deg1[:, None]).astype(np.float32)
+        var = np.maximum(
+            (ss / deg1[:, None]).astype(np.float32) - mean * mean, np.float32(0.0)
+        )
+        std = (np.sqrt(var + np.float32(1e-8)) * has).astype(np.float32)
+        agg = np.concatenate([mean, std, mx * has, mn * has], axis=1)
+        full = np.concatenate([agg, agg * amp, agg * att], axis=1).astype(np.float32)
+        h = ((linear(full, w, b, "relu") + h) * mask[:, None]).astype(np.float32)
+    p = masked_mean_pool(h, mask)
+    p = linear(p, *head[0], "relu")
+    p = linear(p, *head[1], "relu")
+    return linear(p, *head[2]).reshape(-1)
+
+
+def forward_sgc(spec, seed, x, adj, mask):
+    wi = WInit(seed)
+    w = wi.dense(spec["in_dim"], spec["dim"])
+    head = wi.dense(spec["dim"], spec["out_dim"])
+    a_norm = gcn_norm_adj(adj, mask)
+    h = x.astype(np.float32)
+    for _ in range(spec["layers"]):
+        h = (a_norm @ h).astype(np.float32)
+    h = linear(h, *w, "relu") * mask[:, None]
+    if spec["node_level"]:
+        return linear(h, *head).reshape(-1)
+    return linear(masked_mean_pool(h, mask), *head).reshape(-1)
+
+
+def forward_sage(spec, seed, x, adj, mask):
+    wi = WInit(seed)
+    d = spec["dim"]
+    embed = wi.dense(spec["in_dim"], d)
+    convs = [(wi.dense(d, d), wi.dense(d, d)) for _ in range(spec["layers"])]
+    head = wi.dense(d, spec["out_dim"])
+    deg = np.maximum(np.sum(adj, axis=1, dtype=np.float32), np.float32(1.0))
+    h = linear(x, *embed, "relu")
+    for li, ((ws, bs), (wn, bn)) in enumerate(convs):
+        mean_nbr = ((adj @ h).astype(np.float32) / deg[:, None]).astype(np.float32)
+        h = (linear(h, ws, bs) + linear(mean_nbr, wn, bn)).astype(np.float32)
+        if li + 1 < len(convs):
+            h = np.maximum(h, np.float32(0.0))
+        norm = np.sqrt(np.sum(h * h, axis=1, keepdims=True, dtype=np.float32))
+        h = (h / np.maximum(norm, np.float32(1e-6))).astype(np.float32)
+        h = h * mask[:, None]
+    return linear(masked_mean_pool(h, mask), *head).reshape(-1)
+
+
+def forward_dgn(spec, seed, x, adj, eig, mask):
+    wi = WInit(seed)
+    d = spec["dim"]
+    embed = wi.dense(spec["in_dim"], d)
+    convs = [wi.dense(2 * d, d) for _ in range(spec["layers"])]
+    head = [
+        wi.dense(d, d // 2),
+        wi.dense(d // 2, d // 4),
+        wi.dense(d // 4, spec["out_dim"]),
+    ]
+    adj_norm, b_dx, b_row = dgn_matrices(adj, eig)
+    h = linear(x, *embed, "relu")
+    for w, b in convs:
+        mean = (adj_norm @ h).astype(np.float32)
+        dx = np.abs((b_dx @ h).astype(np.float32) - b_row[:, None] * h).astype(
+            np.float32
+        )
+        y = np.concatenate([mean, dx], axis=1).astype(np.float32)
+        h = ((linear(y, w, b, "relu") + h) * mask[:, None]).astype(np.float32)
+
+    def apply_head(t):
+        t = linear(t, *head[0], "relu")
+        t = linear(t, *head[1], "relu")
+        return linear(t, *head[2])
+
+    if spec["node_level"]:
+        return (apply_head(h) * mask[:, None]).reshape(-1)
+    return apply_head(masked_mean_pool(h, mask)).reshape(-1)
+
+
+# --------------------------------------------------------------- dispatch
+def forward(name: str, spec: dict, seed: int, inputs: dict) -> np.ndarray:
+    x, adj, mask = inputs["x"], inputs["adj"], inputs["mask"]
+    if name == "gcn":
+        return forward_gcn(spec, seed, x, adj, mask)
+    if name == "gin":
+        return forward_gin(spec, seed, x, adj, inputs["edge_attr"], mask)
+    if name == "gin_vn":
+        return forward_gin(
+            spec, seed, x, adj, inputs["edge_attr"], mask, virtual_node=True
+        )
+    if name == "gat":
+        return forward_gat(spec, seed, x, adj, mask)
+    if name == "pna":
+        return forward_pna(spec, seed, x, adj, mask)
+    if name == "sgc":
+        return forward_sgc(spec, seed, x, adj, mask)
+    if name == "sage":
+        return forward_sage(spec, seed, x, adj, mask)
+    if name in ("dgn", "dgn_large"):
+        return forward_dgn(spec, seed, x, adj, inputs["eig"], mask)
+    raise KeyError(name)

@@ -1,74 +1,93 @@
-//! Micro-benchmarks of the L3 hot paths — the profile targets of the
-//! EXPERIMENTS.md §Perf pass: graph conversion, densification, the
-//! eigensolver, schedule kernels, and steady-state PJRT dispatch.
+//! Micro-benchmarks of the L3 hot paths: graph ingest (the unified
+//! COO→CSR/CSC conversion), densification, the eigensolver, schedule
+//! kernels, and steady-state engine dispatch.
 //!
 //! Run: `cargo bench --bench micro`
+//!
+//! Set `GENGNN_BENCH_JSON=<path>` to also write the results as a
+//! `BENCH_*.json` snapshot (the perf-trajectory anchor format).
 
 use gengnn::datagen::{citation, molecular, MolConfig};
-use gengnn::graph::{fiedler_vector, Csc, Csr, DenseGraph};
+use gengnn::graph::{fiedler_vector, Csc, Csr, DenseGraph, GraphBatch};
 use gengnn::runtime::{Artifacts, Engine, InputPack};
-use gengnn::util::bench::{bench, black_box, section};
+use gengnn::util::bench::{bench, black_box, results_to_json, section, BenchResult};
 use gengnn::util::rng::Rng;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
     let mol = molecular::molecular_graph(&mut Rng::new(1), &MolConfig::molhiv());
     let cora = citation::dataset(citation::CitationDataset::Cora, 1);
 
-    section("graph representation (paper §3.2)");
-    bench("coo_to_csr/molecular(25)", 100, 2000, || {
+    section("graph ingest (paper §3.2, unified GraphBatch path)");
+    results.push(bench("coo_to_csr/molecular(25)", 100, 2000, || {
         black_box(Csr::from_coo(&mol))
-    });
-    bench("coo_to_csc/molecular(25)", 100, 2000, || {
+    }));
+    results.push(bench("coo_to_csc/molecular(25)", 100, 2000, || {
         black_box(Csc::from_coo(&mol))
-    });
-    bench("coo_to_csr/cora(2708)", 5, 100, || {
+    }));
+    // Note: ingest consumes the graph, so this number includes the
+    // clone — labeled accordingly so the snapshot stays comparable.
+    results.push(bench("graph_batch_ingest+clone/molecular(25)", 100, 2000, || {
+        black_box(GraphBatch::ingest_unchecked(mol.clone()).converter_cycles)
+    }));
+    results.push(bench("coo_to_csr/cora(2708)", 5, 100, || {
         black_box(Csr::from_coo(&cora))
-    });
+    }));
 
     section("densification (runtime hot path)");
     let mut dense = DenseGraph::from_coo(&mol, 64, true).unwrap();
-    bench("densify_fresh/64pad+edge_attr", 50, 1000, || {
+    results.push(bench("densify_fresh/64pad+edge_attr", 50, 1000, || {
         black_box(DenseGraph::from_coo(&mol, 64, true).unwrap())
-    });
-    bench("densify_refill/64pad+edge_attr", 50, 2000, || {
+    }));
+    results.push(bench("densify_refill/64pad+edge_attr", 50, 2000, || {
         dense.fill_from(&mol).unwrap();
         black_box(dense.n_real)
-    });
+    }));
 
     section("spectral (DGN prep)");
-    bench("fiedler/molecular(25)", 20, 500, || {
+    results.push(bench("fiedler/molecular(25)", 20, 500, || {
         black_box(fiedler_vector(&mol, 400, 1e-9).iterations)
-    });
+    }));
     let cite_small = citation::dataset_scaled(citation::CitationDataset::Cora, 2, 300, 16);
-    bench("fiedler/citation(300)", 5, 100, || {
+    results.push(bench("fiedler/citation(300)", 5, 100, || {
         black_box(fiedler_vector(&cite_small, 400, 1e-9).iterations)
-    });
+    }));
 
     section("datagen");
-    bench("molecular_graph", 100, 2000, || {
+    results.push(bench("molecular_graph", 100, 2000, || {
         let mut rng = Rng::new(7);
         black_box(molecular::molecular_graph(&mut rng, &MolConfig::molhiv()).n)
-    });
+    }));
 
-    section("PJRT packing + dispatch (steady state)");
+    section("engine packing + dispatch (steady state)");
     match Artifacts::load(Artifacts::default_dir()) {
         Ok(artifacts) => {
             let meta = artifacts.model("gin").unwrap().clone();
+            let batch = GraphBatch::ingest_unchecked(mol.clone());
             let mut pack = InputPack::new(&meta);
-            bench("input_pack_fill/gin(64pad)", 20, 500, || {
-                pack.fill(&mol, None).unwrap();
+            results.push(bench("input_pack_fill/gin(64pad)", 20, 500, || {
+                pack.fill(&batch, None).unwrap();
                 black_box(pack.n_real())
-            });
-            pack.fill(&mol, None).unwrap();
-            bench("input_pack_literals/gin", 20, 500, || {
-                black_box(pack.literals(&meta).unwrap().len())
-            });
+            }));
+            pack.fill(&batch, None).unwrap();
+            results.push(bench("input_pack_staged/gin", 20, 500, || {
+                black_box(pack.staged_inputs(&meta).unwrap().len())
+            }));
             let mut engine = Engine::load(&artifacts, &["gcn"]).unwrap();
             black_box(engine.infer("gcn", &mol).unwrap());
-            bench("engine_infer/gcn", 5, 50, || {
+            results.push(bench("engine_infer/gcn", 5, 50, || {
                 black_box(engine.infer("gcn", &mol).unwrap()[0])
-            });
+            }));
+            results.push(bench("engine_infer_batch/gcn", 5, 50, || {
+                black_box(engine.infer_batch("gcn", &batch, None).unwrap()[0])
+            }));
         }
-        Err(_) => println!("(artifacts missing — skipping PJRT micro-benches)"),
+        Err(_) => println!("(artifacts missing — skipping engine micro-benches)"),
+    }
+
+    if let Some(path) = std::env::var_os("GENGNN_BENCH_JSON") {
+        let json = results_to_json("micro", &results);
+        std::fs::write(&path, json).expect("write bench snapshot");
+        println!("\nwrote {} results to {path:?}", results.len());
     }
 }

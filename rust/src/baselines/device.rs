@@ -1,28 +1,14 @@
 //! Shared device-model machinery for the CPU/GPU baselines.
+//!
+//! Workload statistics come from the unified ingest path: a baseline
+//! reads [`GraphStats`] off a [`crate::graph::GraphBatch`] (or directly
+//! off a raw graph) instead of deriving its own adjacency.
 
-use crate::graph::CooGraph;
 use crate::models::{GnnKind, ModelConfig};
 
+pub use crate::graph::GraphStats;
+
 use super::calib::op_count;
-
-/// Workload statistics a baseline needs about one graph.
-#[derive(Clone, Copy, Debug)]
-pub struct GraphStats {
-    pub n: usize,
-    /// Directed edge count.
-    pub e: usize,
-    pub f_in: usize,
-}
-
-impl GraphStats {
-    pub fn of(g: &CooGraph) -> GraphStats {
-        GraphStats {
-            n: g.n,
-            e: g.num_edges(),
-            f_in: g.f_node,
-        }
-    }
-}
 
 /// An analytic device latency model:
 ///

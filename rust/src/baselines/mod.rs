@@ -7,7 +7,7 @@
 //! both: per-operator framework dispatch dominates for ~25-node graphs
 //! (the FLOPs are trivial), and the GPU adds kernel-launch/sync
 //! overhead on top — which is why the FPGA wins and why the GPU loses
-//! to the CPU at batch size 1 (DESIGN.md §Substitutions). Constants are
+//! to the CPU at batch size 1 (rust/README.md § Backends). Constants are
 //! calibrated so the per-model speedups land inside the envelopes the
 //! paper reports (Figs. 7–8); see `calib`.
 

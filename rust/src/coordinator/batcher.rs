@@ -51,7 +51,7 @@ impl Batcher {
     }
 
     pub fn push(&mut self, p: Prepared) {
-        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == p.req.model) {
+        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == p.model) {
             q.push_back(p);
         }
     }
@@ -99,9 +99,8 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::request::Request;
-    use std::time::Instant;
+    use super::*;
 
     fn prepared(id: u64, model: &str) -> Prepared {
         let g = crate::graph::CooGraph {
@@ -112,10 +111,7 @@ mod tests {
             edge_feat: vec![],
             f_edge: 0,
         };
-        Prepared {
-            req: Request::new(id, model, g),
-            prep_done: Instant::now(),
-        }
+        Prepared::new(Request::new(id, model, g))
     }
 
     #[test]
@@ -127,10 +123,10 @@ mod tests {
         b.push(prepared(10, "gat"));
         let batch = b.next_batch();
         assert_eq!(batch.len(), 5);
-        assert!(batch.iter().all(|p| p.req.model == "gcn"));
+        assert!(batch.iter().all(|p| p.model == "gcn"));
         let batch2 = b.next_batch();
         assert_eq!(batch2.len(), 1);
-        assert_eq!(batch2[0].req.model, "gat");
+        assert_eq!(batch2[0].model, "gat");
     }
 
     #[test]
@@ -157,7 +153,7 @@ mod tests {
         for i in 0..4 {
             b.push(prepared(i, "gin"));
         }
-        let ids: Vec<u64> = b.next_batch().iter().map(|p| p.req.id).collect();
+        let ids: Vec<u64> = b.next_batch().iter().map(|p| p.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
     }
 
@@ -174,8 +170,8 @@ mod tests {
         b.push(prepared(0, "a"));
         b.push(prepared(1, "a"));
         b.push(prepared(2, "b"));
-        let m1 = b.next_batch()[0].req.model.clone();
-        let m2 = b.next_batch()[0].req.model.clone();
+        let m1 = b.next_batch()[0].model.clone();
+        let m2 = b.next_batch()[0].model.clone();
         assert_ne!(m1, m2, "round-robin must alternate models");
     }
 
@@ -212,8 +208,8 @@ mod tests {
             }
             while b.pending() > 0 {
                 for p in b.next_batch() {
-                    if !seen.insert(p.req.id) {
-                        return Err(format!("duplicate id {}", p.req.id));
+                    if !seen.insert(p.id) {
+                        return Err(format!("duplicate id {}", p.id));
                     }
                 }
             }

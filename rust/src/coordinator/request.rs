@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::graph::CooGraph;
+use crate::graph::{CooGraph, GraphBatch};
 
 /// One inference request: a raw COO graph aimed at a model — exactly
 /// what the paper's real-time sources produce ("the graphs are streamed
@@ -30,12 +30,42 @@ impl Request {
     }
 }
 
-/// A prepared request: validation + eig done by the prep workers, ready
-/// for the executor (the "FPGA") to pack and run.
+/// A prepared request: the prep workers have routed it, ingested the
+/// raw graph through [`GraphBatch`] (the one COO→CSR/CSC conversion),
+/// and solved the eigenvector if the model needs one — ready for the
+/// executor (the "FPGA") to pack and run with zero re-derivation.
 #[derive(Clone, Debug)]
 pub struct Prepared {
-    pub req: Request,
+    pub id: u64,
+    pub model: String,
+    /// Laplacian eigenvector, padded to the model capacity (DGN only).
+    pub eig: Option<Vec<f32>>,
+    pub submitted: Instant,
+    /// The ingested graph: raw COO + its converted CSR.
+    pub batch: GraphBatch,
     pub prep_done: Instant,
+}
+
+impl Prepared {
+    /// Ingest a request (no eigensolve — the server's prep stage adds
+    /// the eigenvector for models that need it).
+    pub fn new(req: Request) -> Prepared {
+        let Request {
+            id,
+            model,
+            graph,
+            eig,
+            submitted,
+        } = req;
+        Prepared {
+            id,
+            model,
+            eig,
+            submitted,
+            batch: GraphBatch::ingest_unchecked(graph),
+            prep_done: Instant::now(),
+        }
+    }
 }
 
 /// One inference response.

@@ -50,15 +50,17 @@ pub fn run_executor(
         while batcher.pending() > 0 {
             for p in batcher.next_batch() {
                 let exec_start = Instant::now();
+                // The prep stage already ingested the graph; execute on
+                // its batch directly (no re-conversion, no re-validation).
                 let out = engine
-                    .infer_with_eig(&p.req.model, &p.req.graph, p.req.eig.as_deref())
+                    .infer_batch(&p.model, &p.batch, p.eig.as_deref())
                     .map_err(|e| format!("{e:#}"));
                 let completed = Instant::now();
                 let resp = Response {
-                    id: p.req.id,
-                    model: p.req.model.clone(),
+                    id: p.id,
+                    model: p.model.clone(),
                     output: out,
-                    submitted: p.req.submitted,
+                    submitted: p.submitted,
                     completed,
                 };
                 metrics.record(
@@ -113,10 +115,7 @@ mod tests {
         for i in 0..3 {
             let g = molecular_graph(&mut Rng::new(i), &MolConfig::molhiv());
             prepared
-                .send(Prepared {
-                    req: Request::new(i, "gcn", g),
-                    prep_done: Instant::now(),
-                })
+                .send(Prepared::new(Request::new(i, "gcn", g)))
                 .unwrap();
         }
         prepared.close();

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::{fiedler_vector, CooGraph};
+use crate::graph::CooGraph;
 use crate::runtime::Artifacts;
 use crate::util::pool::Channel;
 
@@ -105,22 +105,22 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("gengnn-prep-{w}"))
                     .spawn(move || {
-                        while let Some(mut req) = rx.recv() {
+                        while let Some(req) = rx.recv() {
                             match router.route(&req) {
                                 Route::Accept(model) => {
                                     let meta = router.meta(&model).expect("routed");
-                                    if req.eig.is_none()
-                                        && meta.inputs.iter().any(|i| i.name == "eig")
-                                    {
-                                        let r = fiedler_vector(&req.graph, 400, 1e-9);
-                                        let mut eig = vec![0.0f32; meta.n_max];
-                                        eig[..req.graph.n].copy_from_slice(&r.vector);
-                                        req.eig = Some(eig);
+                                    let n_max = meta.n_max;
+                                    let needs_eig = meta.needs_eig();
+                                    // Single ingest point: the raw COO
+                                    // graph becomes a GraphBatch here and
+                                    // is never converted again downstream.
+                                    let mut p = Prepared::new(req);
+                                    if p.eig.is_none() && needs_eig {
+                                        let r = p.batch.fiedler(400, 1e-9);
+                                        let mut eig = vec![0.0f32; n_max];
+                                        eig[..p.batch.n()].copy_from_slice(&r.vector);
+                                        p.eig = Some(eig);
                                     }
-                                    let p = Prepared {
-                                        req,
-                                        prep_done: Instant::now(),
-                                    };
                                     if tx.send(p).is_err() {
                                         return;
                                     }

@@ -120,7 +120,7 @@ pub fn dataset(which: CitationDataset, seed: u64) -> CooGraph {
 
 /// Scaled-down version preserving density/feature ratios — used by the
 /// numeric (PJRT) path, where the full graphs exceed the artifact's
-/// padded capacity (DESIGN.md §Substitutions).
+/// padded capacity (rust/README.md § Backends).
 pub fn dataset_scaled(which: CitationDataset, seed: u64, n: usize, f: usize) -> CooGraph {
     let (n0, m0, _) = which.stats();
     let m = (m0 as f64 * n as f64 / n0 as f64).round() as usize;

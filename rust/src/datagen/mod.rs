@@ -1,5 +1,5 @@
 //! Workload generators substituting for the paper's datasets
-//! (DESIGN.md §Substitutions): synthetic molecules (MolHIV/MolPCBA),
+//! (rust/README.md § Backends): synthetic molecules (MolHIV/MolPCBA),
 //! preferential-attachment citation graphs (Cora/CiteSeer/PubMed), the
 //! Fig. 9(a) controlled random graphs, and virtual-node augmentation.
 

@@ -1,5 +1,5 @@
 //! Synthetic molecular-graph workload generator (MolHIV / MolPCBA
-//! substitute — see DESIGN.md §Substitutions).
+//! substitute — see rust/README.md § Backends).
 //!
 //! OGB molecular graphs are small (MolHIV mean ≈ 25.5 nodes, ≈ 27.5
 //! undirected bonds), tree-like with a few rings, with 9 integer-coded

@@ -1,9 +1,10 @@
 //! Sparse -> padded-dense densification: the contract with the AOT
 //! artifacts (mirrors `python/compile/graphgen.densify` bit-for-bit).
 //!
-//! Dense tensors are what the TPU-adapted kernels consume (DESIGN.md
-//! §Hardware-Adaptation): adjacency as a routing matrix, features
-//! zero-padded to the artifact's node capacity, mask marking real nodes.
+//! Dense tensors are what the TPU-adapted kernels consume (see
+//! `python/compile/kernels/common.py`): adjacency as a routing matrix,
+//! features zero-padded to the artifact's node capacity, mask marking
+//! real nodes.
 
 use anyhow::{bail, Result};
 

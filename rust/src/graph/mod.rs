@@ -2,13 +2,19 @@
 //! CSR/CSC compressed adjacency with the on-chip converter, dense padded
 //! tensors for the TPU-adapted kernels, and the spectral substrate DGN
 //! needs for its directional aggregation.
+//!
+//! [`GraphBatch`] is the single ingest entry point: every consumer that
+//! needs adjacency (simulator, coordinator, baselines) goes through one
+//! COO→CSR/CSC conversion — the paper's zero-preprocessing contract.
 
+pub mod batch;
 pub mod coo;
 pub mod csr;
 pub mod dense;
 pub mod spectral;
 
+pub use batch::{converter_cycles, GraphBatch, GraphStats};
 pub use coo::CooGraph;
 pub use csr::{Csc, Csr};
 pub use dense::DenseGraph;
-pub use spectral::{fiedler_vector, EigResult};
+pub use spectral::{fiedler_vector, fiedler_vector_csr, EigResult};

@@ -26,8 +26,17 @@ pub struct EigResult {
 
 /// Power iteration with deflation of the trivial kernel vector
 /// v0 = D^{1/2} 1 / ||D^{1/2} 1||.
+///
+/// Convenience wrapper converting on the spot; the ingest path uses
+/// [`fiedler_vector_csr`] over [`crate::graph::GraphBatch`]'s CSR so the
+/// graph is converted exactly once.
 pub fn fiedler_vector(g: &CooGraph, max_iter: usize, tol: f64) -> EigResult {
-    let n = g.n;
+    fiedler_vector_csr(&Csr::from_coo(g), max_iter, tol)
+}
+
+/// Power iteration over an already-converted CSR adjacency.
+pub fn fiedler_vector_csr(csr: &Csr, max_iter: usize, tol: f64) -> EigResult {
+    let n = csr.n();
     if n == 0 {
         return EigResult {
             vector: vec![],
@@ -35,7 +44,6 @@ pub fn fiedler_vector(g: &CooGraph, max_iter: usize, tol: f64) -> EigResult {
             iterations: 0,
         };
     }
-    let csr = Csr::from_coo(g);
     let deg: Vec<f64> = csr.degree.iter().map(|&d| d as f64).collect();
     let dinv_sqrt: Vec<f64> = deg
         .iter()
@@ -146,8 +154,7 @@ mod tests {
     use super::*;
 
     fn graph(n: usize, und: &[(u32, u32)]) -> CooGraph {
-        CooGraph::from_undirected(n, und, vec![0.0; n], 1, &vec![0.0; und.len() * 0], 0)
-            .unwrap()
+        CooGraph::from_undirected(n, und, vec![0.0; n], 1, &[], 0).unwrap()
     }
 
     fn laplacian_residual(g: &CooGraph, r: &EigResult) -> f64 {

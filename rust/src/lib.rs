@@ -6,20 +6,22 @@
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: a
 //!   streaming inference server over raw COO graphs with zero
-//!   preprocessing ([`coordinator`]), a cycle-level simulator of the
-//!   GenGNN microarchitecture ([`sim`]), an HLS-style resource
-//!   estimator ([`resources`]), and analytic CPU/GPU baselines
-//!   ([`baselines`]).
-//! * **Layer 2** — JAX forward passes of the six representative GNNs
-//!   (GCN, GIN, GIN+VN, GAT, PNA, DGN), AOT-lowered to HLO text at
-//!   build time (`python/compile/`), loaded and executed from the Rust
-//!   hot path via PJRT ([`runtime`]). Python never runs at request time.
+//!   preprocessing ([`coordinator`], ingesting through
+//!   [`graph::GraphBatch`]), a cycle-level simulator of the GenGNN
+//!   microarchitecture ([`sim`]), an HLS-style resource estimator
+//!   ([`resources`]), and analytic CPU/GPU baselines ([`baselines`]).
+//! * **Layer 2** — JAX forward passes of the representative GNNs
+//!   (GCN, GIN, GIN+VN, GAT, PNA, DGN, plus the SGC/SAGE extension
+//!   models), AOT-lowered to HLO text at build time
+//!   (`python/compile/`) and executed from the Rust hot path via the
+//!   [`runtime`] backends — the always-available native reference
+//!   executor, or PJRT behind the `xla` feature. Python never runs at
+//!   request time.
 //! * **Layer 1** — Pallas kernels for the compute hot-spots (gather,
 //!   MLP, attention, multi-aggregation), lowered into the same HLO.
 //!
-//! See `DESIGN.md` for the experiment inventory and the FPGA→TPU
-//! hardware-adaptation rationale, and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `rust/README.md` for the crate layout, the tier-1 verify
+//! command, the backend story, and the artifact flow.
 
 pub mod baselines;
 pub mod coordinator;
@@ -37,7 +39,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::{Server, ServerConfig};
     pub use crate::datagen::{molecular_graph, MolConfig};
-    pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph};
+    pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph, GraphBatch};
     pub use crate::models::{GnnKind, ModelConfig};
     pub use crate::runtime::{Artifacts, Engine};
     pub use crate::sim::{Accelerator, PipelineMode};

@@ -249,6 +249,7 @@ fn cmd_selftest(a: Args) -> Result<()> {
     let mut failures = 0;
     for meta in artifacts.models.clone() {
         let mut engine = Engine::load(&artifacts, &[&meta.name])?;
+        let tol = engine.golden_tolerance();
         let golden = Golden::load(&meta)?;
         let t0 = std::time::Instant::now();
         let out = engine.infer_with_eig(&meta.name, &golden.graph, golden.eig.as_deref())?;
@@ -256,7 +257,7 @@ fn cmd_selftest(a: Args) -> Result<()> {
             && out
                 .iter()
                 .zip(&golden.output)
-                .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + x.abs().max(y.abs())));
+                .all(|(x, y)| (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())));
         println!(
             "{:<10} {} ({} outputs, {})",
             meta.name,

@@ -5,8 +5,9 @@
 //! CPU and 2.05–25.96× than GPU; on MolPCBA 1.64–9.69× / 1.92–17.66×;
 //! DGN shows the largest GPU speedup.
 
-use crate::baselines::{cpu, gpu, GraphStats, MOLPCBA_WARM_FACTOR};
+use crate::baselines::{cpu, gpu, MOLPCBA_WARM_FACTOR};
 use crate::datagen::{molecular, MolConfig};
+use crate::graph::GraphBatch;
 use crate::models::ModelConfig;
 use crate::sim::{Accelerator, PipelineMode};
 
@@ -59,21 +60,26 @@ impl MolDataset {
     }
 }
 
-/// Compute all six rows over `count` generated graphs.
+/// Compute all six rows over `count` generated graphs. Each graph is
+/// ingested once ([`GraphBatch`]); the simulator and both baselines
+/// read the same converted batch.
 pub fn compute(dataset: MolDataset, count: usize, seed: u64) -> Vec<Fig7Row> {
-    let graphs = molecular::dataset(seed, count, &dataset.config());
+    let batches: Vec<GraphBatch> = molecular::dataset(seed, count, &dataset.config())
+        .into_iter()
+        .map(GraphBatch::ingest_unchecked)
+        .collect();
     ModelConfig::fig7_models()
         .into_iter()
         .map(|cfg| {
             let acc = Accelerator::new(cfg.clone(), PipelineMode::Streaming);
-            let fpga = acc.mean_latency(&graphs);
+            let fpga = acc.mean_latency_batches(&batches);
             let (mut c, mut g) = (0.0, 0.0);
-            for gr in &graphs {
-                let s = GraphStats::of(gr);
+            for b in &batches {
+                let s = b.stats();
                 c += cpu::latency(&cfg, s);
                 g += gpu::latency(&cfg, s);
             }
-            let n = graphs.len() as f64;
+            let n = batches.len() as f64;
             Fig7Row {
                 model: cfg.kind.paper_name().to_string(),
                 fpga_secs: fpga,

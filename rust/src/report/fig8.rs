@@ -6,8 +6,9 @@
 //! *slower* than the GPU on PubMed — the crossover where arithmetic
 //! intensity finally pays for the GPU's launch overhead.
 
-use crate::baselines::{cpu, gpu, GraphStats};
+use crate::baselines::{cpu, gpu};
 use crate::datagen::citation::{dataset, CitationDataset};
+use crate::graph::GraphBatch;
 use crate::models::ModelConfig;
 use crate::sim::LargeGraphSim;
 
@@ -37,16 +38,16 @@ pub fn compute(seed: u64) -> Vec<Fig8Row> {
     CitationDataset::all()
         .into_iter()
         .map(|which| {
-            let g = dataset(which, seed);
+            let b = GraphBatch::ingest_unchecked(dataset(which, seed));
             let sim = LargeGraphSim::default();
             // dgn_large's padded capacity (512) is a scaled-down golden
             // artifact; the simulator models the real Table 5 sizes.
-            let r = sim.simulate(&g, &model);
-            let s = GraphStats::of(&g);
+            let r = sim.simulate_batch(&b, &model);
+            let s = b.stats();
             Fig8Row {
                 dataset: which.name().to_string(),
-                nodes: g.n,
-                edges: g.num_edges(),
+                nodes: b.n(),
+                edges: b.num_edges(),
                 fpga_secs: r.secs,
                 cpu_secs: cpu::latency(&model, s),
                 gpu_secs: gpu::latency(&model, s),

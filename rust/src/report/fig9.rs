@@ -11,7 +11,7 @@
 //! (1.38, 1.63); with VN (1.40, 1.61).
 
 use crate::datagen::{molecular, random, MolConfig, RandomGraphConfig};
-use crate::graph::{CooGraph, Csr};
+use crate::graph::{CooGraph, GraphBatch};
 use crate::models::ModelConfig;
 use crate::sim::cycles::CostParams;
 use crate::sim::mp_pe::mp_profile;
@@ -45,8 +45,8 @@ pub fn population_speedups(cfg: &ModelConfig, graphs: &[CooGraph]) -> Speedups {
     let mut ne0: Vec<u64> = Vec::new();
     let mut ne: Vec<u64> = Vec::new();
     for g in graphs {
-        let csr = Csr::from_coo(g);
-        let mp = mp_profile(&p, cfg, &csr.degree);
+        let batch = GraphBatch::ingest_unchecked(g.clone());
+        let mp = mp_profile(&p, cfg, &batch.csr.degree);
         // Layer 0 carries the input embedding; layers 1..L are
         // identical, so schedule once and multiply (§Perf).
         ne0.clear();

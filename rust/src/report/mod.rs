@@ -1,5 +1,5 @@
 //! Paper-artifact regeneration: one module per table/figure of the
-//! evaluation section (DESIGN.md §6 per-experiment index).
+//! evaluation section (one module per figure/table).
 
 pub mod fig7;
 pub mod fig8;

@@ -6,7 +6,7 @@
 //! (MAC arrays with a DSP-or-fabric binding, partitioned on-chip
 //! buffers with a BRAM/URAM binding, register files, PE control) priced
 //! with per-unit costs, calibrated once against Table 4
-//! (DESIGN.md §Substitutions; Table 4's own PNA row is "estimates from
+//! (rust/README.md § Backends; Table 4's own PNA row is "estimates from
 //! the Vitis HLS tool", so estimate-vs-estimate is the fair comparison).
 
 pub mod hls;

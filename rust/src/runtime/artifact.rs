@@ -32,6 +32,8 @@ pub struct ModelMeta {
     pub name: String,
     pub layers: usize,
     pub dim: usize,
+    /// Attention heads (GAT only, 0 otherwise).
+    pub heads: usize,
     pub n_max: usize,
     pub in_dim: usize,
     pub out_dim: usize,
@@ -90,6 +92,10 @@ impl Artifacts {
                 name,
                 layers: m.get("layers")?.as_usize()?,
                 dim: m.get("dim")?.as_usize()?,
+                heads: match m.opt("heads") {
+                    Some(h) => h.as_usize()?,
+                    None => 0,
+                },
                 n_max: m.get("n_max")?.as_usize()?,
                 in_dim: m.get("in_dim")?.as_usize()?,
                 out_dim: m.get("out_dim")?.as_usize()?,
@@ -104,11 +110,20 @@ impl Artifacts {
         })
     }
 
-    /// Default artifact directory (repo-root `artifacts/`).
+    /// Default artifact directory: `GENGNN_ARTIFACTS` if set, else
+    /// `./artifacts` when it holds a manifest (binaries run from the
+    /// repo root), else the repo-root `artifacts/` located relative to
+    /// this crate — so `cargo test` (cwd `rust/`) and examples find the
+    /// checked-in fixtures without configuration.
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("GENGNN_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+        if let Some(d) = std::env::var_os("GENGNN_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let cwd_relative = PathBuf::from("artifacts");
+        if cwd_relative.join("manifest.json").exists() {
+            return cwd_relative;
+        }
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"))
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {

@@ -1,53 +1,110 @@
-//! PJRT client wrapper + artifact compilation cache.
+//! Execution-backend client + per-artifact compilation.
 //!
-//! One process-wide CPU client; each HLO-text artifact is parsed
-//! (`HloModuleProto::from_text_file` — the text parser reassigns
-//! instruction ids, which is why text is the interchange format; see
-//! DESIGN.md) and compiled once, then executed many times.
+//! Two backends sit behind one [`Client`]:
+//!
+//! * **native** (always available, the default): the pure-Rust
+//!   reference executor in [`super::native`], which regenerates the
+//!   artifact's baked-in weights from the manifest seed and runs the
+//!   forward pass directly — no XLA, no Python, no HLO parsing.
+//! * **PJRT** (cargo feature `xla`): parses the `<name>.hlo.txt`
+//!   artifact and compiles it for the XLA PJRT CPU client — the text
+//!   parser reassigns instruction ids, which is why text is the
+//!   interchange format. The workspace vendors an API stub for
+//!   `xla-rs`, so enabling the feature compiles everywhere but
+//!   executes only where the real XLA runtime is linked; [`Client::cpu`]
+//!   falls back to native when PJRT cannot come up.
 
-use std::path::Path;
+use anyhow::Result;
 
-use anyhow::{Context, Result};
+use super::artifact::ModelMeta;
+use super::native::NativeModel;
 
-/// A PJRT CPU client with compile helpers.
+#[cfg(feature = "xla")]
+use anyhow::Context as _;
+
+/// A compiled model, ready for repeated execution.
+pub enum Compiled {
+    /// Pure-Rust reference executor.
+    Native(NativeModel),
+    /// PJRT executable compiled from HLO text.
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+enum Backend {
+    Native,
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtClient),
+}
+
+/// The device the artifacts run on.
 pub struct Client {
-    inner: xla::PjRtClient,
+    backend: Backend,
 }
 
 impl Client {
-    /// Create the CPU client (the "device" the artifacts run on).
+    /// Bring up the best available backend: PJRT when the `xla`
+    /// feature is enabled *and* the runtime is actually present,
+    /// otherwise the native reference executor.
     pub fn cpu() -> Result<Client> {
+        #[cfg(feature = "xla")]
+        if let Ok(c) = xla::PjRtClient::cpu() {
+            return Ok(Client {
+                backend: Backend::Pjrt(c),
+            });
+        }
         Ok(Client {
-            inner: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            backend: Backend::Native,
         })
     }
 
     pub fn platform_name(&self) -> String {
-        self.inner.platform_name()
+        match &self.backend {
+            Backend::Native => "native-reference".to_string(),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(c) => c.platform_name(),
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.inner.device_count()
+        match &self.backend {
+            Backend::Native => 1,
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(c) => c.device_count(),
+        }
     }
 
-    /// Parse an HLO-text artifact and compile it for this client.
-    pub fn compile_hlo_text(
-        &self,
-        path: impl AsRef<Path>,
-    ) -> Result<xla::PjRtLoadedExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.inner
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))
+    /// Compile one manifest entry for this backend. Both paths check
+    /// the artifact file so a missing/bogus path is a clean error.
+    pub fn compile_model(&self, meta: &ModelMeta, weight_seed: u64) -> Result<Compiled> {
+        match &self.backend {
+            Backend::Native => {
+                if !meta.hlo_path.exists() {
+                    anyhow::bail!(
+                        "artifact file {:?} missing (run `make artifacts`)",
+                        meta.hlo_path
+                    );
+                }
+                Ok(Compiled::Native(NativeModel::build(meta, weight_seed)?))
+            }
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(c) => {
+                let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+                    .with_context(|| format!("parsing HLO text {:?}", meta.hlo_path))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = c
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {:?}", meta.hlo_path))?;
+                Ok(Compiled::Pjrt(exe))
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifact::InputSpec;
 
     #[test]
     fn cpu_client_comes_up() {
@@ -57,8 +114,35 @@ mod tests {
     }
 
     #[test]
-    fn bad_path_is_clean_error() {
+    fn bad_artifact_path_is_clean_error() {
         let c = Client::cpu().unwrap();
-        assert!(c.compile_hlo_text("/nonexistent.hlo.txt").is_err());
+        let meta = ModelMeta {
+            name: "gcn".into(),
+            layers: 2,
+            dim: 8,
+            heads: 0,
+            n_max: 8,
+            in_dim: 4,
+            out_dim: 1,
+            node_level: false,
+            inputs: vec![
+                InputSpec {
+                    name: "x".into(),
+                    shape: vec![8, 4],
+                },
+                InputSpec {
+                    name: "adj".into(),
+                    shape: vec![8, 8],
+                },
+                InputSpec {
+                    name: "mask".into(),
+                    shape: vec![8],
+                },
+            ],
+            hlo_path: "/nonexistent.hlo.txt".into(),
+            golden_path: "/nonexistent.golden.json".into(),
+        };
+        let err = c.compile_model(&meta, 0).unwrap_err().to_string();
+        assert!(err.contains("nonexistent"), "{err}");
     }
 }

@@ -5,11 +5,13 @@
 //! `x, adj, [edge_attr], [eig], mask` — all f32, padded to the model's
 //! node capacity. `InputPack` owns the scratch buffers so the serving
 //! hot path re-fills them per request with **zero allocation** (the f32
-//! staging is reused; only the PJRT literal creation copies).
+//! staging is reused). Filling consumes an ingested
+//! [`crate::graph::GraphBatch`], so the eigensolve for eig-consuming
+//! models reuses the batch's CSR instead of re-deriving adjacency.
 
 use anyhow::{bail, Result};
 
-use crate::graph::{fiedler_vector, CooGraph, DenseGraph};
+use crate::graph::{DenseGraph, GraphBatch};
 
 use super::artifact::ModelMeta;
 
@@ -23,6 +25,12 @@ pub struct InputPack {
 
 impl InputPack {
     pub fn new(meta: &ModelMeta) -> InputPack {
+        let f_edge = meta
+            .inputs
+            .iter()
+            .find(|i| i.name == "edge_attr")
+            .map(|i| *i.shape.last().unwrap_or(&0))
+            .unwrap_or(0);
         InputPack {
             dense: DenseGraph {
                 n_max: meta.n_max,
@@ -30,26 +38,8 @@ impl InputPack {
                 f_node: meta.in_dim,
                 x: vec![0.0; meta.n_max * meta.in_dim],
                 adj: vec![0.0; meta.n_max * meta.n_max],
-                edge_attr: if meta.needs_edge_attr() {
-                    let fe = meta
-                        .inputs
-                        .iter()
-                        .find(|i| i.name == "edge_attr")
-                        .map(|i| i.shape[2])
-                        .unwrap_or(0);
-                    vec![0.0; meta.n_max * meta.n_max * fe]
-                } else {
-                    Vec::new()
-                },
-                f_edge: if meta.needs_edge_attr() {
-                    meta.inputs
-                        .iter()
-                        .find(|i| i.name == "edge_attr")
-                        .map(|i| i.shape[2])
-                        .unwrap_or(0)
-                } else {
-                    0
-                },
+                edge_attr: vec![0.0; meta.n_max * meta.n_max * f_edge],
+                f_edge,
                 mask: vec![0.0; meta.n_max],
                 eig: vec![0.0; meta.n_max],
             },
@@ -58,11 +48,12 @@ impl InputPack {
         }
     }
 
-    /// Refill the scratch tensors from a raw graph. `eig_override`
-    /// supplies a precomputed eigenvector (golden replay); otherwise the
-    /// packer computes it on the fly for eig-consuming models — matching
-    /// the paper's DGN flow where eigenvectors are an input parameter.
-    pub fn fill(&mut self, g: &CooGraph, eig_override: Option<&[f32]>) -> Result<()> {
+    /// Refill the scratch tensors from an ingested batch.
+    /// `eig_override` supplies a precomputed eigenvector (golden replay
+    /// / the paper's DGN flow where eigenvectors are an input
+    /// parameter); otherwise the packer solves on the batch's CSR.
+    pub fn fill(&mut self, batch: &GraphBatch, eig_override: Option<&[f32]>) -> Result<()> {
+        let g = &batch.graph;
         if g.n > self.n_max {
             bail!("graph with {} nodes exceeds capacity {}", g.n, self.n_max);
         }
@@ -76,7 +67,7 @@ impl InputPack {
                     self.dense.eig.copy_from_slice(e);
                 }
                 None => {
-                    let r = fiedler_vector(g, 400, 1e-9);
+                    let r = batch.fiedler(400, 1e-9);
                     self.dense.eig.fill(0.0);
                     self.dense.eig[..g.n].copy_from_slice(&r.vector);
                 }
@@ -97,8 +88,9 @@ impl InputPack {
         })
     }
 
-    /// Build the PJRT literals in manifest order.
-    pub fn literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+    /// Staged buffers in manifest order, shape-checked — what the
+    /// native executor consumes and what the PJRT literal path wraps.
+    pub fn staged_inputs<'a>(&'a self, meta: &ModelMeta) -> Result<Vec<&'a [f32]>> {
         let mut out = Vec::with_capacity(meta.inputs.len());
         for spec in &meta.inputs {
             let buf = self.slot(&spec.name)?;
@@ -110,6 +102,21 @@ impl InputPack {
                     spec.shape
                 );
             }
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    /// The staged dense tensors (the native executor's input view).
+    pub fn dense(&self) -> &DenseGraph {
+        &self.dense
+    }
+
+    /// Build the PJRT literals in manifest order.
+    #[cfg(feature = "xla")]
+    pub fn literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(meta.inputs.len());
+        for (spec, buf) in meta.inputs.iter().zip(self.staged_inputs(meta)?) {
             let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
             out.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
@@ -124,6 +131,7 @@ impl InputPack {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::CooGraph;
     use crate::runtime::artifact::Artifacts;
 
     fn meta(name: &str) -> Option<crate::runtime::artifact::ModelMeta> {
@@ -134,20 +142,21 @@ mod tests {
             .cloned()
     }
 
-    fn mol() -> CooGraph {
+    fn mol() -> GraphBatch {
         let mut rng = crate::util::rng::Rng::new(5);
-        crate::datagen::molecular_graph(&mut rng, &crate::datagen::MolConfig::molhiv())
+        let g = crate::datagen::molecular_graph(&mut rng, &crate::datagen::MolConfig::molhiv());
+        GraphBatch::ingest_unchecked(g)
     }
 
     #[test]
     fn refill_is_idempotent() {
         let Some(m) = meta("gin") else { return };
-        let g = mol();
+        let b = mol();
         let mut p = InputPack::new(&m);
-        p.fill(&g, None).unwrap();
+        p.fill(&b, None).unwrap();
         let x1 = p.slot("x").unwrap().to_vec();
         let a1 = p.slot("adj").unwrap().to_vec();
-        p.fill(&g, None).unwrap();
+        p.fill(&b, None).unwrap();
         assert_eq!(p.slot("x").unwrap(), &x1[..]);
         assert_eq!(p.slot("adj").unwrap(), &a1[..]);
     }
@@ -158,21 +167,22 @@ mod tests {
         let big = mol();
         let small = {
             let mut rng = crate::util::rng::Rng::new(9);
-            crate::datagen::molecular_graph(
+            let g = crate::datagen::molecular_graph(
                 &mut rng,
                 &crate::datagen::MolConfig {
                     mean_nodes: 6.0,
                     std_nodes: 0.5,
                     ..crate::datagen::MolConfig::molhiv()
                 },
-            )
+            );
+            GraphBatch::ingest_unchecked(g)
         };
         let mut p = InputPack::new(&m);
         p.fill(&big, None).unwrap();
         p.fill(&small, None).unwrap();
         let mask = p.slot("mask").unwrap();
         let live: usize = mask.iter().map(|&v| v as usize).sum();
-        assert_eq!(live, small.n);
+        assert_eq!(live, small.n());
         // Adjacency must hold exactly small's directed edges.
         let nnz = p.slot("adj").unwrap().iter().filter(|&&v| v != 0.0).count();
         assert_eq!(nnz, small.num_edges());
@@ -181,13 +191,13 @@ mod tests {
     #[test]
     fn eig_computed_for_dgn() {
         let Some(m) = meta("dgn") else { return };
-        let g = mol();
+        let b = mol();
         let mut p = InputPack::new(&m);
-        p.fill(&g, None).unwrap();
+        p.fill(&b, None).unwrap();
         let eig = p.slot("eig").unwrap();
         let norm: f32 = eig.iter().map(|v| v * v).sum();
         assert!((norm - 1.0).abs() < 1e-3, "unit-norm eig, got {norm}");
-        assert!(eig[g.n..].iter().all(|&v| v == 0.0), "padding zeroed");
+        assert!(eig[b.n()..].iter().all(|&v| v == 0.0), "padding zeroed");
     }
 
     #[test]
@@ -196,6 +206,55 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(3);
         let g = crate::datagen::citation::citation_graph(rng.next_u64(), 200, 600, 9);
         let mut p = InputPack::new(&m);
-        assert!(p.fill(&g, None).is_err());
+        assert!(p.fill(&GraphBatch::ingest_unchecked(g), None).is_err());
+    }
+
+    #[test]
+    fn staged_inputs_shape_checked_without_artifacts() {
+        // A hand-built meta exercises the shape check even on a clean
+        // checkout with no artifact directory.
+        use crate::runtime::artifact::{InputSpec, ModelMeta};
+        let m = ModelMeta {
+            name: "gcn".into(),
+            layers: 1,
+            dim: 4,
+            heads: 0,
+            n_max: 4,
+            in_dim: 2,
+            out_dim: 1,
+            node_level: false,
+            inputs: vec![
+                InputSpec {
+                    name: "x".into(),
+                    shape: vec![4, 2],
+                },
+                InputSpec {
+                    name: "adj".into(),
+                    shape: vec![4, 4],
+                },
+                InputSpec {
+                    name: "mask".into(),
+                    shape: vec![4],
+                },
+            ],
+            hlo_path: "unused".into(),
+            golden_path: "unused".into(),
+        };
+        let g = CooGraph {
+            n: 2,
+            edges: vec![(0, 1), (1, 0)],
+            node_feat: vec![1.0, 2.0, 3.0, 4.0],
+            f_node: 2,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        let mut p = InputPack::new(&m);
+        p.fill(&GraphBatch::ingest_unchecked(g), None).unwrap();
+        let staged = p.staged_inputs(&m).unwrap();
+        assert_eq!(staged.len(), 3);
+        assert_eq!(staged[0].len(), 8);
+        assert_eq!(staged[1].len(), 16);
+        assert_eq!(staged[2].len(), 4);
+        assert_eq!(p.n_real(), 2);
     }
 }

@@ -1,10 +1,17 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, lowered
-//! once at build time by `python/compile/aot.py`) and execute them from
-//! the Rust hot path. Python never runs at request time — the HLO text
-//! is parsed, compiled, and executed through the XLA PJRT CPU client.
+//! Model runtime: load the AOT artifact manifest
+//! (`artifacts/manifest.json`, written by `python/compile/aot.py`) and
+//! execute models from the Rust hot path. Python never runs at request
+//! time.
+//!
+//! Two backends (see [`client`]): the always-available **native**
+//! reference executor re-implements the Layer-2 forward passes in pure
+//! Rust with the same seeded weights the artifacts bake in, and the
+//! optional `xla`-feature **PJRT** path parses + compiles the
+//! `<name>.hlo.txt` artifacts through the XLA PJRT CPU client.
 //!
 //! * [`artifact`] — manifest parsing + golden-file access
-//! * [`client`]   — PJRT client + compilation cache
+//! * [`client`]   — backend selection + per-artifact compilation
+//! * [`native`]   — pure-Rust reference executor (MT19937 weight port)
 //! * [`literal`]  — graph → padded input-tensor packing (zero-alloc refill)
 //! * [`exec`]     — the [`Engine`]: end-to-end `CooGraph` → output vector
 
@@ -12,8 +19,10 @@ pub mod artifact;
 pub mod client;
 pub mod exec;
 pub mod literal;
+pub mod native;
 
 pub use artifact::{Artifacts, Golden, ModelMeta};
 pub use client::Client;
 pub use exec::Engine;
 pub use literal::InputPack;
+pub use native::NativeModel;

@@ -10,10 +10,9 @@
 //! (paper §4.5, Fig. 6).
 
 use crate::datagen::{augment_with_virtual_node, augment_with_virtual_node_first};
-use crate::graph::CooGraph;
+use crate::graph::{CooGraph, GraphBatch};
 use crate::models::{GnnKind, ModelConfig};
 
-use super::converter::convert_csr;
 use super::cycles::{cycles_to_secs, CostParams};
 use super::fifo::FifoStats;
 use super::mp_pe::mp_profile;
@@ -54,23 +53,29 @@ impl Accelerator {
     }
 
     /// Simulate one raw COO graph end to end; returns cycle counts at
-    /// the 300 MHz design clock.
+    /// the 300 MHz design clock. Ingests through [`GraphBatch`] — the
+    /// crate's single COO→CSR conversion path.
     pub fn simulate(&self, g: &CooGraph) -> SimResult {
         // GIN+VN: the virtual node becomes part of the node schedule.
-        let augmented;
-        let g = if self.model.kind == GnnKind::GinVn {
-            augmented = if self.vn_first {
+        if self.model.kind == GnnKind::GinVn {
+            let augmented = if self.vn_first {
                 augment_with_virtual_node_first(g)
             } else {
                 augment_with_virtual_node(g)
             };
-            &augmented
+            self.simulate_batch(&GraphBatch::ingest_unchecked(augmented))
         } else {
-            g
-        };
+            self.simulate_batch(&GraphBatch::ingest_unchecked(g.clone()))
+        }
+    }
 
-        let (csr, conv) = convert_csr(g);
-        let n = g.n;
+    /// Core schedule over an already-ingested batch (no re-conversion).
+    /// Callers with a GIN+VN model must augment before ingesting —
+    /// [`Accelerator::simulate`] does exactly that.
+    pub fn simulate_batch(&self, batch: &GraphBatch) -> SimResult {
+        let csr = &batch.csr;
+        let conv = batch.converter_cycles;
+        let n = batch.n();
         let p = &self.params;
         let m = &self.model;
 
@@ -80,7 +85,7 @@ impl Accelerator {
 
         // Layers 1..L share an identical per-node profile, so their
         // schedule is computed once and multiplied (perf: this is the
-        // Fig. 7/9 sweep hot path — see EXPERIMENTS.md §Perf).
+        // Fig. 7/9 sweep hot path — the schedule is reused across layers).
         let ne0: Vec<u64> = vec![embed + ne_steady; n];
         let r0 = schedule(self.mode, &ne0, &mp, p.fifo_depth);
         let mut layer_total = r0.cycles;
@@ -113,6 +118,26 @@ impl Accelerator {
             return 0.0;
         }
         graphs.iter().map(|g| self.simulate(g).secs).sum::<f64>() / graphs.len() as f64
+    }
+
+    /// `mean_latency` over already-ingested batches. GIN+VN re-ingests
+    /// per graph (the virtual node changes the schedule's node set);
+    /// every other model reuses the shared conversion.
+    pub fn mean_latency_batches(&self, batches: &[GraphBatch]) -> f64 {
+        if batches.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = batches
+            .iter()
+            .map(|b| {
+                if self.model.kind == GnnKind::GinVn {
+                    self.simulate(&b.graph).secs
+                } else {
+                    self.simulate_batch(b).secs
+                }
+            })
+            .sum();
+        total / batches.len() as f64
     }
 }
 

@@ -4,13 +4,15 @@
 //! over the streamed edge list, plus a prefix-sum pass over the degree
 //! table: `2E + N` cycles. It "runs once when the graph is streamed into
 //! the FPGA and is reused for all the GNN layers".
+//!
+//! The ingest entry point is [`crate::graph::GraphBatch`]; this module
+//! re-exports the converter cost model and offers borrowed one-matrix
+//! conversions for callers that need exactly one adjacency view
+//! without taking ownership of the graph.
 
 use crate::graph::{CooGraph, Csc, Csr};
 
-/// Converter cycle cost: two passes over E edges + prefix over N nodes.
-pub fn converter_cycles(n: usize, e: usize) -> u64 {
-    (2 * e + n) as u64
-}
+pub use crate::graph::batch::converter_cycles;
 
 /// Functional conversion paired with its cycle cost — what the
 /// accelerator front-end does when a raw graph arrives.
@@ -48,6 +50,26 @@ mod tests {
         assert_eq!(c, converter_cycles(3, 3));
         let (csc, c2) = convert_csc(&g);
         assert_eq!(csc, Csc::from_coo(&g));
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn facade_agrees_with_graph_batch() {
+        use crate::graph::GraphBatch;
+        let g = CooGraph {
+            n: 4,
+            edges: vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            node_feat: vec![0.0; 4],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        let b = GraphBatch::ingest(g.clone()).unwrap();
+        let (csr, c) = convert_csr(&g);
+        assert_eq!(csr, b.csr);
+        assert_eq!(c, b.converter_cycles);
+        let (csc, c2) = convert_csc(&g);
+        assert_eq!(csc, b.csc());
         assert_eq!(c2, c);
     }
 }

@@ -1,4 +1,4 @@
-//! Cycle-accounting primitives (DESIGN.md §7).
+//! Cycle-accounting primitives (see rust/README.md).
 //!
 //! All cycle formulas in the simulator bottom out here. The parameters
 //! mirror the HLS design knobs of the paper: fully-partitioned

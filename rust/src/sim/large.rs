@@ -9,10 +9,9 @@
 //! per-edge message-buffer traffic, the degree-table prefetcher, and a
 //! whole-bus saturation bound.
 
-use crate::graph::CooGraph;
+use crate::graph::{CooGraph, GraphBatch};
 use crate::models::ModelConfig;
 
-use super::converter::converter_cycles;
 use super::cycles::{cycles_to_secs, CostParams};
 use super::dram::DramModel;
 use super::mp_pe::msg_cycles;
@@ -87,9 +86,17 @@ impl LargeGraphSim {
         }
     }
 
-    /// Simulate one graph that exceeds on-chip capacity.
+    /// Simulate one graph that exceeds on-chip capacity. Convenience
+    /// wrapper over [`LargeGraphSim::simulate_batch`]; callers running
+    /// several ablations on the same graph should ingest once.
     pub fn simulate(&self, g: &CooGraph, m: &ModelConfig) -> LargeSimResult {
-        let csr = crate::graph::Csr::from_coo(g);
+        self.simulate_batch(&GraphBatch::ingest_unchecked(g.clone()), m)
+    }
+
+    /// Simulate an already-ingested batch (single conversion path).
+    pub fn simulate_batch(&self, batch: &GraphBatch, m: &ModelConfig) -> LargeSimResult {
+        let g = &batch.graph;
+        let csr = &batch.csr;
         let n = g.n;
         let e = g.num_edges();
         let p = &self.params;
@@ -97,7 +104,7 @@ impl LargeGraphSim {
 
         // --- Front end: edge list streamed from DRAM, converted once.
         // Edges are (src, dst) pairs of 32-bit ids.
-        let conv = converter_cycles(n, e) + self.xfer_32(2 * e);
+        let conv = batch.converter_cycles + self.xfer_32(2 * e);
 
         // --- Input embedding layer: fetch x row (F wide), linear F->d,
         // write h row back; double-buffered so fetch overlaps compute.

@@ -1,7 +1,7 @@
 //! Cycle-level simulator of the GenGNN microarchitecture (paper §3–§4.6).
 //!
 //! This is the substitute for the paper's on-board Alveo U50 measurement
-//! (DESIGN.md §Substitutions): the claims of Figs. 7–9 are properties of
+//! (rust/README.md § Backends): the claims of Figs. 7–9 are properties of
 //! the *architecture schedule* — NE/MP pipeline overlap, degree
 //! imbalance, virtual-node overlap, prefetch latency hiding — all of
 //! which are cycle-accounting phenomena this model reproduces. We claim

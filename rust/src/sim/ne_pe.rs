@@ -34,7 +34,7 @@ pub fn ne_cycles(p: &CostParams, m: &ModelConfig) -> u64 {
             let fh = d / m.heads.max(1);
             // Shared projection + per-head src/dst logit dot products;
             // heads run in parallel (paper parallelizes the head dim).
-            p.linear_cycles(d, d) + 2 * p.vector_cycles(fh) as u64
+            p.linear_cycles(d, d) + 2 * p.vector_cycles(fh)
         }
         GnnKind::Pna => {
             // Scale the 4 aggregator buffers by the 3 degree scalers

@@ -235,6 +235,51 @@ mod tests {
     }
 
     #[test]
+    fn ordering_on_empty_single_node_and_self_loop_graphs() {
+        // Schedule-ordering invariants hold on degenerate real graphs,
+        // with per-node profiles derived through the unified ingest path.
+        use crate::graph::{CooGraph, GraphBatch};
+        use crate::models::ModelConfig;
+        use crate::sim::cycles::CostParams;
+        use crate::sim::mp_pe::mp_profile;
+        use crate::sim::ne_pe::ne_cycles;
+
+        let p = CostParams::default();
+        let gin = ModelConfig::by_name("gin").unwrap();
+        let mk = |n: usize, edges: Vec<(u32, u32)>| CooGraph {
+            node_feat: vec![0.0; n * 9],
+            f_node: 9,
+            edge_feat: vec![1.0; edges.len() * 3],
+            f_edge: 3,
+            n,
+            edges,
+        };
+        let cases = [
+            mk(0, vec![]),                                // empty graph
+            mk(1, vec![]),                                // single isolated node
+            mk(1, vec![(0, 0)]),                          // single node, self-loop
+            mk(2, vec![(0, 0), (0, 1), (1, 0), (1, 1)]),  // self-loops + edge
+        ];
+        for g in cases {
+            let b = GraphBatch::ingest(g).unwrap();
+            let ne = vec![ne_cycles(&p, &gin); b.n()];
+            let mp = mp_profile(&p, &gin, &b.csr.degree);
+            let non = schedule(PipelineMode::NonPipelined, &ne, &mp, p.fifo_depth).cycles;
+            let fx = schedule(PipelineMode::Fixed, &ne, &mp, p.fifo_depth).cycles;
+            let st = schedule(PipelineMode::Streaming, &ne, &mp, p.fifo_depth).cycles;
+            assert!(st <= fx && fx <= non, "ordering broke: {st} {fx} {non}");
+            if b.n() == 0 {
+                assert_eq!((non, fx, st), (0, 0, 0), "empty graph costs nothing");
+            } else {
+                let sum_ne: u64 = ne.iter().sum();
+                let sum_mp: u64 = mp.iter().sum();
+                assert!(st >= sum_ne.max(sum_mp), "beat the busier engine");
+                assert_eq!(non, sum_ne + sum_mp, "non-pipelined is the serial sum");
+            }
+        }
+    }
+
+    #[test]
     fn prop_deeper_fifo_never_hurts() {
         forall("fifo-monotone", 200, 0xF1F0, |rng| {
             let n = rng.range(1, 50);

@@ -54,6 +54,30 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Serialize bench results as the `BENCH_*.json` snapshot schema
+/// (perf-trajectory anchors checked in at the repo root).
+pub fn results_to_json(label: &str, results: &[BenchResult]) -> String {
+    use crate::util::json::{self, Json};
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", json::num(r.iters as f64)),
+                ("mean_s", json::num(r.mean)),
+                ("p50_s", json::num(r.p50)),
+                ("min_s", json::num(r.min)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("bench", Json::Str(label.to_string())),
+        ("status", Json::Str("measured".to_string())),
+        ("results", Json::Arr(entries)),
+    ])
+    .to_string_pretty()
+}
+
 /// Section header for bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");

