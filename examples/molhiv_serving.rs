@@ -6,7 +6,7 @@
 //! runs here.
 //!
 //! ```sh
-//! cargo run --release --example molhiv_serving [-- --count 2000]
+//! cargo run --release --example molhiv_serving [-- --count 2000 --lanes 4]
 //! ```
 
 use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
@@ -24,11 +24,16 @@ fn main() -> anyhow::Result<()> {
         &["gcn", "gin", "gin_vn", "gat", "pna", "dgn"],
     );
 
-    eprintln!("[molhiv_serving] compiling {} artifacts ...", models.len());
+    let lanes = args.usize_or("lanes", 2)?;
+    eprintln!(
+        "[molhiv_serving] compiling {} artifacts on {lanes} lane(s) ...",
+        models.len()
+    );
     let t_compile = std::time::Instant::now();
     let server = Server::start(ServerConfig {
         models: models.clone(),
         prep_workers: 3,
+        executor_lanes: lanes,
         queue_capacity: 512,
         admission: AdmissionPolicy::Block,
         batch: BatchPolicy {

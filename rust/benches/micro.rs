@@ -7,8 +7,9 @@
 //! Set `GENGNN_BENCH_JSON=<path>` to also write the results as a
 //! `BENCH_*.json` snapshot (the perf-trajectory anchor format).
 
+use gengnn::coordinator::{Server, ServerConfig};
 use gengnn::datagen::{citation, molecular, MolConfig};
-use gengnn::graph::{fiedler_vector, Csc, Csr, DenseGraph, GraphBatch};
+use gengnn::graph::{fiedler_vector, CooGraph, Csc, Csr, DenseGraph, GraphBatch};
 use gengnn::runtime::{Artifacts, Engine, InputPack};
 use gengnn::util::bench::{bench, black_box, results_to_json, section, BenchResult};
 use gengnn::util::rng::Rng;
@@ -83,6 +84,46 @@ fn main() {
             }));
         }
         Err(_) => println!("(artifacts missing — skipping engine micro-benches)"),
+    }
+
+    section("executor pool (lane scaling over a fixed request stream)");
+    match Artifacts::load(Artifacts::default_dir()) {
+        Ok(_) => {
+            // 64 graphs alternating across two models, replayed through
+            // servers that differ only in lane count — the whole-stack
+            // scaling number the lane pool exists for.
+            let stream: Vec<CooGraph> = (0..64u64)
+                .map(|i| {
+                    molecular::molecular_graph(&mut Rng::new(100 + i), &MolConfig::molhiv())
+                })
+                .collect();
+            for lanes in [1usize, 2, 4] {
+                let server = Server::start(ServerConfig {
+                    models: vec!["gcn".into(), "gin".into()],
+                    prep_workers: 2,
+                    executor_lanes: lanes,
+                    queue_capacity: 256,
+                    ..ServerConfig::default()
+                })
+                .expect("server start");
+                let responses = server.responses();
+                results.push(bench(&format!("lanes_scaling/{lanes}"), 1, 10, || {
+                    for (i, g) in stream.iter().enumerate() {
+                        let model = if i % 2 == 0 { "gcn" } else { "gin" };
+                        server.submit(model, g.clone());
+                    }
+                    let mut got = 0usize;
+                    while got < stream.len() {
+                        let r = responses.recv().expect("response");
+                        assert!(r.is_ok());
+                        got += 1;
+                    }
+                    black_box(got)
+                }));
+                server.shutdown();
+            }
+        }
+        Err(_) => println!("(artifacts missing — skipping lane-scaling bench)"),
     }
 
     if let Some(path) = std::env::var_os("GENGNN_BENCH_JSON") {

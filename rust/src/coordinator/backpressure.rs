@@ -23,6 +23,18 @@ impl AdmissionPolicy {
             _ => anyhow::bail!("unknown admission policy {s:?} (block|reject)"),
         })
     }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject => "reject",
+        }
+    }
+
+    /// Every policy — what sweep-style tests iterate over.
+    pub fn all() -> [AdmissionPolicy; 2] {
+        [AdmissionPolicy::Block, AdmissionPolicy::Reject]
+    }
 }
 
 /// Outcome of an admission attempt.
@@ -44,5 +56,12 @@ mod tests {
             AdmissionPolicy::Reject
         );
         assert!(AdmissionPolicy::parse("drop-oldest").is_err());
+    }
+
+    #[test]
+    fn as_str_roundtrips_through_parse() {
+        for p in AdmissionPolicy::all() {
+            assert_eq!(AdmissionPolicy::parse(p.as_str()).unwrap(), p);
+        }
     }
 }

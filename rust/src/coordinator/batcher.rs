@@ -4,8 +4,10 @@
 //!
 //! The artifacts are batch-1 by construction (the paper's real-time
 //! setting), so this is *dispatch* batching, not tensor batching: a
-//! batch is a run of requests the executor services back to back
-//! without consulting the scheduler in between.
+//! batch is a run of requests an executor lane services back to back
+//! without consulting the scheduler in between. The pool dispatcher
+//! ([`super::scheduler`]) owns one `Batcher` and fans the batches it
+//! forms out across the executor lanes by model affinity.
 
 use std::collections::VecDeque;
 
@@ -58,6 +60,10 @@ impl Batcher {
 
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|(_, q)| q.is_empty())
     }
 
     /// Pop the next batch: a run of up to `max_batch` requests for one

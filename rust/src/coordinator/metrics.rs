@@ -1,9 +1,18 @@
 //! Server metrics: per-model latency distributions, throughput, queue
 //! diagnostics — what the paper reads off the OpenCL summary report
 //! ("average execution time" over all testing graphs, §5.1).
+//!
+//! Sharded for lane parallelism: each model owns its own mutex (the
+//! registry itself is behind an `RwLock` taken for reading on the hot
+//! path), so executor lanes recording different models never serialize
+//! on a global lock. The server pre-registers every served model at
+//! build time; unknown names (failed routes) fall back to a one-time
+//! write-lock insertion. Per-lane counters (executed / stolen /
+//! busy-time) are plain atomics owned by their lane.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::util::stats::{fmt_secs, Sample};
@@ -16,11 +25,44 @@ struct ModelMetrics {
     failed: u64,
 }
 
+impl ModelMetrics {
+    fn record(&mut self, e2e_secs: f64, exec_secs: f64, ok: bool) {
+        if ok {
+            self.completed += 1;
+            self.latency.push(e2e_secs);
+            self.exec_latency.push(exec_secs);
+        } else {
+            self.failed += 1;
+        }
+    }
+}
+
+/// Per-lane execution counters, updated lock-free by the owning lane.
+#[derive(Default)]
+pub struct LaneCounters {
+    /// Requests this lane executed (ok or failed).
+    pub executed: AtomicU64,
+    /// Subset of `executed` obtained by stealing from a sibling lane.
+    pub stolen: AtomicU64,
+    /// Nanoseconds spent executing batches.
+    pub busy_ns: AtomicU64,
+}
+
+/// Point-in-time snapshot of one lane's counters.
+#[derive(Clone, Debug)]
+pub struct LaneSummary {
+    pub lane: usize,
+    pub executed: u64,
+    pub stolen: u64,
+    pub busy_secs: f64,
+}
+
 /// Thread-safe metrics registry shared across server stages.
 pub struct Metrics {
-    inner: Mutex<BTreeMap<String, ModelMetrics>>,
+    shards: RwLock<BTreeMap<String, Mutex<ModelMetrics>>>,
+    lanes: RwLock<Vec<Arc<LaneCounters>>>,
     started: Instant,
-    rejected: Mutex<u64>,
+    rejected: AtomicU64,
 }
 
 /// A point-in-time latency/throughput summary for one model.
@@ -38,35 +80,71 @@ pub struct Summary {
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
-            inner: Mutex::new(BTreeMap::new()),
+            shards: RwLock::new(BTreeMap::new()),
+            lanes: RwLock::new(Vec::new()),
             started: Instant::now(),
-            rejected: Mutex::new(0),
+            rejected: AtomicU64::new(0),
         }
+    }
+
+    /// Pre-create a model's shard so hot-path recording never needs the
+    /// registry write lock. Idempotent.
+    pub fn register_model(&self, model: &str) {
+        let mut shards = self.shards.write().unwrap();
+        shards.entry(model.to_string()).or_default();
+    }
+
+    /// Allocate `n` lane counter blocks. Idempotent for a given `n`:
+    /// re-registering the same size keeps the existing blocks (and any
+    /// handed-out [`LaneCounters`] Arcs) live; a different size resets
+    /// the pool's counters.
+    pub fn register_lanes(&self, n: usize) {
+        let mut lanes = self.lanes.write().unwrap();
+        if lanes.len() == n {
+            return;
+        }
+        lanes.clear();
+        lanes.extend((0..n).map(|_| Arc::new(LaneCounters::default())));
+    }
+
+    /// The counter block for lane `i` (panics if unregistered).
+    pub fn lane(&self, i: usize) -> Arc<LaneCounters> {
+        Arc::clone(&self.lanes.read().unwrap()[i])
     }
 
     /// Record one completed request: end-to-end and execute-only times.
     pub fn record(&self, model: &str, e2e_secs: f64, exec_secs: f64, ok: bool) {
-        let mut m = self.inner.lock().unwrap();
-        let e = m.entry(model.to_string()).or_default();
-        if ok {
-            e.completed += 1;
-            e.latency.push(e2e_secs);
-            e.exec_latency.push(exec_secs);
-        } else {
-            e.failed += 1;
+        {
+            let shards = self.shards.read().unwrap();
+            if let Some(shard) = shards.get(model) {
+                shard.lock().unwrap().record(e2e_secs, exec_secs, ok);
+                return;
+            }
         }
+        // Unregistered model (e.g. a failed route for an unknown name):
+        // one-time insertion, then retry through the fast path.
+        self.register_model(model);
+        self.record(model, e2e_secs, exec_secs, ok);
     }
 
     pub fn record_rejected(&self) {
-        *self.rejected.lock().unwrap() += 1;
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn rejected(&self) -> u64 {
-        *self.rejected.lock().unwrap()
+        self.rejected.load(Ordering::Relaxed)
     }
 
     pub fn total_completed(&self) -> u64 {
-        self.inner.lock().unwrap().values().map(|m| m.completed).sum()
+        let shards = self.shards.read().unwrap();
+        shards.values().map(|m| m.lock().unwrap().completed).sum()
+    }
+
+    /// Requests that produced an error response (failed routes and
+    /// executor errors) — admission rejections are counted separately.
+    pub fn total_failed(&self) -> u64 {
+        let shards = self.shards.read().unwrap();
+        shards.values().map(|m| m.lock().unwrap().failed).sum()
     }
 
     /// Aggregate throughput (completed/sec since server start).
@@ -74,17 +152,41 @@ impl Metrics {
         self.total_completed() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Per-model summaries; models registered but never exercised are
+    /// omitted.
     pub fn summaries(&self) -> Vec<Summary> {
-        let mut m = self.inner.lock().unwrap();
-        m.iter_mut()
-            .map(|(name, e)| Summary {
-                model: name.clone(),
-                completed: e.completed,
-                failed: e.failed,
-                mean_latency: e.latency.mean(),
-                p50: e.latency.median(),
-                p99: e.latency.percentile(99.0),
-                mean_exec: e.exec_latency.mean(),
+        let shards = self.shards.read().unwrap();
+        shards
+            .iter()
+            .filter_map(|(name, m)| {
+                let mut e = m.lock().unwrap();
+                if e.completed == 0 && e.failed == 0 {
+                    return None;
+                }
+                Some(Summary {
+                    model: name.clone(),
+                    completed: e.completed,
+                    failed: e.failed,
+                    mean_latency: e.latency.mean(),
+                    p50: e.latency.median(),
+                    p99: e.latency.percentile(99.0),
+                    mean_exec: e.exec_latency.mean(),
+                })
+            })
+            .collect()
+    }
+
+    /// Per-lane counter snapshots (empty when no lane pool registered).
+    pub fn lane_summaries(&self) -> Vec<LaneSummary> {
+        let lanes = self.lanes.read().unwrap();
+        lanes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| LaneSummary {
+                lane: i,
+                executed: c.executed.load(Ordering::Relaxed),
+                stolen: c.stolen.load(Ordering::Relaxed),
+                busy_secs: c.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
             })
             .collect()
     }
@@ -105,6 +207,15 @@ impl Metrics {
                 fmt_secs(s.p50),
                 fmt_secs(s.p99),
                 fmt_secs(s.mean_exec),
+            ));
+        }
+        for l in self.lane_summaries() {
+            out.push_str(&format!(
+                "lane {:>2}: executed {:>6} (stolen {:>6}), busy {}\n",
+                l.lane,
+                l.executed,
+                l.stolen,
+                fmt_secs(l.busy_secs),
             ));
         }
         out.push_str(&format!(
@@ -136,6 +247,7 @@ mod tests {
         assert_eq!((s.completed, s.failed), (2, 1));
         assert!((s.mean_latency - 2e-3).abs() < 1e-12);
         assert_eq!(m.total_completed(), 2);
+        assert_eq!(m.total_failed(), 1);
     }
 
     #[test]
@@ -154,5 +266,75 @@ mod tests {
         m.record_rejected();
         m.record_rejected();
         assert_eq!(m.rejected(), 2);
+    }
+
+    #[test]
+    fn preregistered_but_idle_models_are_omitted() {
+        let m = Metrics::new();
+        m.register_model("gcn");
+        m.register_model("gat");
+        m.record("gcn", 1e-3, 1e-4, true);
+        let s = m.summaries();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].model, "gcn");
+    }
+
+    #[test]
+    fn lane_counters_roundtrip() {
+        let m = Metrics::new();
+        m.register_lanes(2);
+        let c = m.lane(1);
+        c.executed.fetch_add(5, Ordering::Relaxed);
+        c.stolen.fetch_add(2, Ordering::Relaxed);
+        c.busy_ns.fetch_add(1_500_000, Ordering::Relaxed);
+        let ls = m.lane_summaries();
+        assert_eq!(ls.len(), 2);
+        assert_eq!((ls[1].executed, ls[1].stolen), (5, 2));
+        assert!((ls[1].busy_secs - 1.5e-3).abs() < 1e-12);
+        assert_eq!(ls[0].executed, 0);
+        assert!(m.render().contains("lane"));
+    }
+
+    #[test]
+    fn concurrent_recording_reconciles() {
+        // 8 threads hammering 4 model shards (half pre-registered, half
+        // discovered on the fly) plus rejections; every event must land.
+        let m = Arc::new(Metrics::new());
+        m.register_model("a");
+        m.register_model("b");
+        let threads = 8usize;
+        let per_thread = 500u64;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let m = Arc::clone(&m);
+            joins.push(std::thread::spawn(move || {
+                let models = ["a", "b", "c", "d"];
+                for i in 0..per_thread {
+                    let model = models[(t + i as usize) % 4];
+                    let ok = i % 10 != 0;
+                    m.record(model, 1e-4, 1e-5, ok);
+                    if i % 50 == 0 {
+                        m.record_rejected();
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let total = threads as u64 * per_thread;
+        let failures_per_thread = per_thread / 10; // i % 10 == 0
+        assert_eq!(
+            m.total_completed(),
+            total - threads as u64 * failures_per_thread
+        );
+        assert_eq!(m.total_failed(), threads as u64 * failures_per_thread);
+        assert_eq!(m.rejected(), threads as u64 * per_thread.div_ceil(50));
+        let s = m.summaries();
+        assert_eq!(s.len(), 4, "{s:?}");
+        assert_eq!(
+            s.iter().map(|x| x.completed + x.failed).sum::<u64>(),
+            total
+        );
     }
 }

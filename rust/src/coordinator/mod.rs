@@ -6,10 +6,12 @@
 //! * [`request`]      — request/response types
 //! * [`router`]       — model routing + envelope validation
 //! * [`batcher`]      — dispatch batching (same-model runs)
-//! * [`scheduler`]    — the executor thread owning the PJRT engine
+//! * [`scheduler`]    — the sharded executor pool: dispatcher + N
+//!   parallel lanes (one engine each) with work stealing
 //! * [`backpressure`] — admission policies for the bounded ingest queue
-//! * [`metrics`]      — latency/throughput accounting
-//! * [`server`]       — wiring: ingest → prep workers → executor
+//! * [`metrics`]      — latency/throughput accounting, sharded per
+//!   model, plus per-lane execution counters
+//! * [`server`]       — wiring: ingest → prep workers → executor pool
 
 pub mod backpressure;
 pub mod batcher;
@@ -21,7 +23,7 @@ pub mod server;
 
 pub use backpressure::{Admission, AdmissionPolicy};
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{LaneSummary, Metrics};
 pub use request::{Request, Response};
 pub use router::{Route, Router};
 pub use server::{Server, ServerConfig};

@@ -1,80 +1,367 @@
-//! The executor: a dedicated thread owning the PJRT [`Engine`] — the
-//! software analog of the single FPGA card draining the graph stream.
-//! Upstream prep workers have already validated, routed, and (for DGN)
-//! eig-solved each request; the executor packs tensors and executes,
-//! batch by batch.
+//! The sharded executor pool: N parallel inference lanes draining the
+//! prepared-request stream — the software analog of FlowGNN-style
+//! multi-lane GNN serving, where independent message-passing lanes
+//! process streamed graphs concurrently.
+//!
+//! Topology:
+//!
+//! ```text
+//!                      ┌► lane queue 0 ─► lane 0 (own Engine) ─┐
+//! prepared ─► dispatch ┼► lane queue 1 ─► lane 1 (own Engine) ─┼─► responses
+//!             (batcher)└► lane queue … ─► lane …  ⟲ steal      ─┘
+//! ```
+//!
+//! * The **dispatcher** owns the [`Batcher`]: it groups same-model runs
+//!   and routes each batch to its model's home lane (stable
+//!   model→lane affinity), so a lane keeps warm per-model state
+//!   (packing buffers, scratch allocations) for the models it owns.
+//!   When the home queue is full the batch overflows to any lane with
+//!   room, so a burst at one hot model engages idle lanes immediately.
+//! * Each **lane** owns a full [`Engine`] built from the shared
+//!   `Arc<Artifacts>` — identical seeded weights on every lane, which
+//!   is what makes N-lane output bit-identical to 1-lane output.
+//! * When a lane's own queue runs dry it **steals** a batch from a
+//!   sibling queue, so a single hot model still scales across lanes.
+//!
+//! Ordering contract: responses preserve nothing beyond per-request
+//! integrity — with more than one lane, same-model requests may
+//! complete out of submission order (consumers key on `Response::id`).
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::runtime::{Artifacts, Engine};
-use crate::util::pool::Channel;
+use crate::util::pool::{Channel, RecvTimeout};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{LaneCounters, Metrics};
 use super::request::{Prepared, Response};
 
-/// Executor main loop. Compiles the artifacts first, reports readiness
-/// (or the compile error) through `ready`, then serves until the
-/// prepared-request channel closes.
+/// Upper bound on per-lane queue depth, in batches. Kept shallow so
+/// work stays close to execution and backlogs remain visible to
+/// stealing siblings; upstream buffering belongs to the ingest and
+/// prepared queues. The actual depth also respects the server's
+/// `queue_capacity` (see [`spawn_executor_pool`]) so that a tiny
+/// ingest bound under the `Reject` policy still sheds load instead of
+/// hiding a burst inside the lane queues.
+const LANE_QUEUE_BATCHES: usize = 4;
+
+/// How long a lane parks on its own queue between steal sweeps while
+/// work was seen recently. Arrival on the lane's *own* queue always
+/// wakes it immediately (condvar notify); this interval only bounds
+/// how quickly an idle lane notices a sibling's backlog.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// Ceiling for the idle backoff: a lane that keeps finding nothing
+/// doubles its park interval up to this, so a quiet server does not
+/// burn CPU sweeping empty queues.
+const STEAL_POLL_MAX: Duration = Duration::from_millis(64);
+
+/// Sends a failure through its channel if dropped before an explicit
+/// `send` — converting a panic anywhere on the startup path into a
+/// reported error instead of a silent hang ([`Channel`] only closes
+/// explicitly, so a dropped sender alone would never wake the waiter).
+struct ReadyGuard {
+    ch: Channel<Result<(), String>>,
+    what: String,
+    sent: bool,
+}
+
+impl ReadyGuard {
+    fn new(ch: Channel<Result<(), String>>, what: impl Into<String>) -> ReadyGuard {
+        ReadyGuard {
+            ch,
+            what: what.into(),
+            sent: false,
+        }
+    }
+
+    fn send(&mut self, r: Result<(), String>) {
+        self.sent = true;
+        let _ = self.ch.send(r);
+    }
+}
+
+impl Drop for ReadyGuard {
+    fn drop(&mut self) {
+        if !self.sent {
+            let _ = self
+                .ch
+                .send(Err(format!("{} terminated before ready", self.what)));
+        }
+    }
+}
+
+/// Spawn the executor pool: one dispatcher plus `lanes` executor lanes,
+/// each lane compiling its own [`Engine`] for `models` from the shared
+/// artifacts. Readiness (all lanes compiled, or the first error) is
+/// reported once through `ready`. The pool drains `prepared_rx` until
+/// it is closed, then shuts down; join the returned handles after
+/// closing the channel.
 #[allow(clippy::too_many_arguments)]
-pub fn run_executor(
-    artifacts: Artifacts,
+pub fn spawn_executor_pool(
+    artifacts: Arc<Artifacts>,
     models: Vec<String>,
+    lanes: usize,
+    queue_capacity: usize,
     prepared_rx: Channel<Prepared>,
     responses_tx: Channel<Response>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
     ready: Channel<Result<(), String>>,
+) -> Vec<JoinHandle<()>> {
+    let lanes = lanes.max(1);
+    metrics.register_lanes(lanes);
+    // Scale batch size and lane-queue depth with the configured
+    // backpressure bound so the pool parks at most ~queue_capacity
+    // requests across lanes — a tiny ingest bound under `Reject` must
+    // shed a burst, not hide it inside the lane queues.
+    let mut policy = policy;
+    policy.max_batch = policy.max_batch.clamp(1, (queue_capacity / lanes).max(1));
+    let lane_depth =
+        (queue_capacity / (lanes * policy.max_batch)).clamp(1, LANE_QUEUE_BATCHES);
+    let lane_queues: Vec<Channel<Vec<Prepared>>> = (0..lanes)
+        .map(|_| Channel::bounded(lane_depth))
+        .collect();
+    let lane_ready: Channel<Result<(), String>> = Channel::bounded(lanes);
+
+    let mut handles = Vec::with_capacity(lanes + 1);
+    for lane in 0..lanes {
+        let artifacts = Arc::clone(&artifacts);
+        let models = models.clone();
+        let queues = lane_queues.clone();
+        let responses_tx = responses_tx.clone();
+        let counters = metrics.lane(lane);
+        let metrics = Arc::clone(&metrics);
+        let lane_ready = lane_ready.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("gengnn-lane-{lane}"))
+                .spawn(move || {
+                    run_lane(
+                        lane,
+                        &artifacts,
+                        &models,
+                        queues,
+                        responses_tx,
+                        metrics,
+                        counters,
+                        lane_ready,
+                    )
+                })
+                .expect("spawn executor lane"),
+        );
+    }
+
+    handles.push(
+        std::thread::Builder::new()
+            .name("gengnn-dispatch".into())
+            .spawn(move || {
+                let mut ready = ReadyGuard::new(ready, "executor pool dispatcher");
+                // Collect every lane's compile verdict before serving.
+                let mut errors = Vec::new();
+                for _ in 0..lanes {
+                    match lane_ready.recv() {
+                        Some(Ok(())) => {}
+                        Some(Err(e)) => errors.push(e),
+                        None => errors.push("lane exited before ready".into()),
+                    }
+                }
+                if !errors.is_empty() {
+                    for q in &lane_queues {
+                        q.close();
+                    }
+                    ready.send(Err(errors.join("; ")));
+                    return;
+                }
+                ready.send(Ok(()));
+                run_dispatcher(&models, policy, prepared_rx, &lane_queues);
+                for q in &lane_queues {
+                    q.close();
+                }
+            })
+            .expect("spawn dispatcher"),
+    );
+    handles
+}
+
+/// Dispatcher main loop: pull prepared requests, form same-model
+/// batches, route each to its model's home lane (blocking when that
+/// lane's queue is full — the backpressure path up to `submit`).
+fn run_dispatcher(
+    models: &[String],
+    policy: BatchPolicy,
+    prepared_rx: Channel<Prepared>,
+    lane_queues: &[Channel<Vec<Prepared>>],
 ) {
     let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
-    let mut engine = match Engine::load(&artifacts, &names) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
-        }
-        Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
-            return;
-        }
-    };
-
     let mut batcher = Batcher::new(&names, policy);
-    // Blocking pull; then opportunistically drain whatever is queued so
-    // the batcher can form same-model runs.
+    // Stable shard affinity: model i lives on lane i mod lanes.
+    let affinity: BTreeMap<&str, usize> = names
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| (m, i % lane_queues.len()))
+        .collect();
     while let Some(first) = prepared_rx.recv() {
         batcher.push(first);
         while let Some(more) = prepared_rx.try_recv() {
             batcher.push(more);
         }
-        while batcher.pending() > 0 {
-            for p in batcher.next_batch() {
-                let exec_start = Instant::now();
-                // The prep stage already ingested the graph; execute on
-                // its batch directly (no re-conversion, no re-validation).
-                let out = engine
-                    .infer_batch(&p.model, &p.batch, p.eig.as_deref())
-                    .map_err(|e| format!("{e:#}"));
-                let completed = Instant::now();
-                let resp = Response {
-                    id: p.id,
-                    model: p.model.clone(),
-                    output: out,
-                    submitted: p.submitted,
-                    completed,
-                };
-                metrics.record(
-                    &resp.model,
-                    resp.latency(),
-                    completed.duration_since(exec_start).as_secs_f64(),
-                    resp.is_ok(),
-                );
-                if responses_tx.send(resp).is_err() {
-                    return; // consumer gone
-                }
+        while !batcher.is_empty() {
+            let batch = batcher.next_batch();
+            let Some(head) = batch.first() else { break };
+            let home = affinity.get(head.model.as_str()).copied().unwrap_or(0);
+            if !dispatch(batch, home, lane_queues) {
+                return; // pool shutting down
             }
         }
     }
+}
+
+/// Place one batch: the home lane first (warm per-model state), then —
+/// if its queue is full — any lane with room, so a burst at one hot
+/// model wakes idle lanes through their own queues immediately instead
+/// of waiting out their steal-poll backoff. Only when every queue is
+/// full does the dispatcher block on the home lane (the backpressure
+/// path). Returns false when the queues are closed (shutdown).
+fn dispatch(batch: Vec<Prepared>, home: usize, queues: &[Channel<Vec<Prepared>>]) -> bool {
+    let mut batch = batch;
+    for off in 0..queues.len() {
+        match queues[(home + off) % queues.len()].try_send(batch) {
+            Ok(()) => return true,
+            Err(b) => batch = b,
+        }
+    }
+    queues[home].send(batch).is_ok()
+}
+
+/// One executor lane: compile an engine, then serve batches — own
+/// queue first, stealing from siblings when dry.
+#[allow(clippy::too_many_arguments)]
+fn run_lane(
+    lane: usize,
+    artifacts: &Artifacts,
+    models: &[String],
+    queues: Vec<Channel<Vec<Prepared>>>,
+    responses_tx: Channel<Response>,
+    metrics: Arc<Metrics>,
+    counters: Arc<LaneCounters>,
+    ready: Channel<Result<(), String>>,
+) {
+    let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    // Guarded: a panic inside Engine::load still reports through the
+    // ready protocol instead of hanging the dispatcher.
+    let mut ready = ReadyGuard::new(ready, format!("lane {lane}"));
+    let mut engine = match Engine::load(artifacts, &names) {
+        Ok(e) => {
+            ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            ready.send(Err(format!("lane {lane}: {e:#}")));
+            return;
+        }
+    };
+    let my_queue = queues[lane].clone();
+    let mut park = STEAL_POLL;
+    loop {
+        let (batch, stolen) = if let Some(b) = my_queue.try_recv() {
+            (b, false)
+        } else if let Some(b) = steal(lane, &queues) {
+            (b, true)
+        } else {
+            match my_queue.recv_timeout(park) {
+                RecvTimeout::Item(b) => (b, false),
+                RecvTimeout::TimedOut => {
+                    // Nothing anywhere: back the poll off so an idle
+                    // server stops sweeping queues at full tilt.
+                    park = (park * 2).min(STEAL_POLL_MAX);
+                    continue;
+                }
+                RecvTimeout::Closed => break,
+            }
+        };
+        park = STEAL_POLL;
+        if execute_batch(&mut engine, batch, stolen, &responses_tx, &metrics, &counters)
+            .is_err()
+        {
+            return; // response consumer gone
+        }
+    }
+    // Own queue closed and drained: sweep any leftovers still parked on
+    // sibling queues (their owners may be mid-batch), then exit.
+    while let Some(b) = steal(lane, &queues) {
+        if execute_batch(&mut engine, b, true, &responses_tx, &metrics, &counters).is_err() {
+            return;
+        }
+    }
+}
+
+/// Try to take one batch from any sibling queue, nearest-first.
+fn steal(lane: usize, queues: &[Channel<Vec<Prepared>>]) -> Option<Vec<Prepared>> {
+    let n = queues.len();
+    for off in 1..n {
+        if let Some(b) = queues[(lane + off) % n].try_recv() {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Execute one dispatch batch on this lane's engine, recording metrics
+/// and lane counters. `Err(())` means the response channel closed; the
+/// counters still cover every request actually executed, so they stay
+/// reconciled with `Metrics::record` even on that abnormal path.
+fn execute_batch(
+    engine: &mut Engine,
+    batch: Vec<Prepared>,
+    stolen: bool,
+    responses_tx: &Channel<Response>,
+    metrics: &Metrics,
+    counters: &LaneCounters,
+) -> Result<(), ()> {
+    let mut done = 0u64;
+    let mut exec_ns = 0u64;
+    let mut result = Ok(());
+    for p in batch {
+        let exec_start = Instant::now();
+        let out = engine
+            .infer_batch(&p.model, &p.batch, p.eig.as_deref())
+            .map_err(|e| format!("{e:#}"));
+        let completed = Instant::now();
+        let exec_time = completed.duration_since(exec_start);
+        let resp = Response {
+            id: p.id,
+            model: p.model,
+            output: out,
+            submitted: p.submitted,
+            completed,
+        };
+        metrics.record(
+            &resp.model,
+            resp.latency(),
+            exec_time.as_secs_f64(),
+            resp.is_ok(),
+        );
+        done += 1;
+        // Busy time is pure execute time — deliberately excluding the
+        // (possibly blocking) response send, so a slow consumer shows
+        // up as idle lanes, not busy ones.
+        exec_ns += exec_time.as_nanos() as u64;
+        if responses_tx.send(resp).is_err() {
+            result = Err(()); // response consumer gone
+            break;
+        }
+    }
+    counters.executed.fetch_add(done, Ordering::Relaxed);
+    if stolen {
+        counters.stolen.fetch_add(done, Ordering::Relaxed);
+    }
+    counters.busy_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    result
 }
 
 #[cfg(test)]
@@ -84,51 +371,64 @@ mod tests {
     use crate::datagen::{molecular_graph, MolConfig};
     use crate::util::rng::Rng;
 
+    fn pool_fixture(
+        artifacts: Artifacts,
+        lanes: usize,
+    ) -> (
+        Channel<Prepared>,
+        Channel<Response>,
+        Arc<Metrics>,
+        Channel<Result<(), String>>,
+        Vec<JoinHandle<()>>,
+    ) {
+        let prepared: Channel<Prepared> = Channel::bounded(32);
+        let responses: Channel<Response> = Channel::bounded(64);
+        let ready: Channel<Result<(), String>> = Channel::bounded(1);
+        let metrics = Arc::new(Metrics::new());
+        let handles = spawn_executor_pool(
+            Arc::new(artifacts),
+            vec!["gcn".into()],
+            lanes,
+            32,
+            prepared.clone(),
+            responses.clone(),
+            Arc::clone(&metrics),
+            BatchPolicy::default(),
+            ready.clone(),
+        );
+        (prepared, responses, metrics, ready, handles)
+    }
+
     #[test]
-    fn executor_serves_and_shuts_down() {
+    fn pool_serves_and_shuts_down() {
         let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
             return;
         };
-        let prepared: Channel<Prepared> = Channel::bounded(16);
-        let responses: Channel<Response> = Channel::bounded(16);
-        let ready: Channel<Result<(), String>> = Channel::bounded(1);
-        let metrics = Arc::new(Metrics::new());
-        let (a2, m2, r2, p2, resp2) = (
-            artifacts.clone(),
-            Arc::clone(&metrics),
-            ready.clone(),
-            prepared.clone(),
-            responses.clone(),
-        );
-        let h = std::thread::spawn(move || {
-            run_executor(
-                a2,
-                vec!["gcn".into()],
-                p2,
-                resp2,
-                m2,
-                BatchPolicy::default(),
-                r2,
-            )
-        });
-        assert_eq!(ready.recv(), Some(Ok(())));
-        for i in 0..3 {
-            let g = molecular_graph(&mut Rng::new(i), &MolConfig::molhiv());
-            prepared
-                .send(Prepared::new(Request::new(i, "gcn", g)))
-                .unwrap();
-        }
-        prepared.close();
-        let mut got = 0;
-        while let Some(r) = responses.recv() {
-            assert!(r.is_ok(), "{:?}", r.output);
-            got += 1;
-            if got == 3 {
-                break;
+        for lanes in [1usize, 3] {
+            let (prepared, responses, metrics, ready, handles) =
+                pool_fixture(artifacts.clone(), lanes);
+            assert_eq!(ready.recv(), Some(Ok(())));
+            let total = 7u64;
+            for i in 0..total {
+                let g = molecular_graph(&mut Rng::new(i), &MolConfig::molhiv());
+                prepared
+                    .send(Prepared::new(Request::new(i, "gcn", g)))
+                    .unwrap();
             }
+            prepared.close();
+            let mut got = std::collections::BTreeSet::new();
+            while got.len() < total as usize {
+                let r = responses.recv().expect("response");
+                assert!(r.is_ok(), "{:?}", r.output);
+                assert!(got.insert(r.id), "duplicate response id {}", r.id);
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(metrics.total_completed(), total);
+            let lane_sum: u64 = metrics.lane_summaries().iter().map(|l| l.executed).sum();
+            assert_eq!(lane_sum, total, "lane counters must cover every request");
         }
-        h.join().unwrap();
-        assert_eq!(metrics.total_completed(), 3);
     }
 
     #[test]
@@ -143,22 +443,60 @@ mod tests {
         let responses: Channel<Response> = Channel::bounded(1);
         let ready: Channel<Result<(), String>> = Channel::bounded(1);
         let metrics = Arc::new(Metrics::new());
-        let r2 = ready.clone();
-        let h = std::thread::spawn(move || {
-            run_executor(
-                artifacts,
-                vec![name],
-                prepared,
-                responses,
-                metrics,
-                BatchPolicy::default(),
-                r2,
-            )
-        });
+        let handles = spawn_executor_pool(
+            Arc::new(artifacts),
+            vec![name],
+            2,
+            8,
+            prepared.clone(),
+            responses,
+            metrics,
+            BatchPolicy::default(),
+            ready.clone(),
+        );
         match ready.recv() {
-            Some(Err(msg)) => assert!(msg.contains("nonexistent")),
+            Some(Err(msg)) => assert!(msg.contains("nonexistent"), "{msg}"),
             other => panic!("expected compile error, got {other:?}"),
         }
-        h.join().unwrap();
+        prepared.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn lanes_steal_a_hot_models_backlog() {
+        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+            return;
+        };
+        // One served model + 4 lanes: every batch's home is lane 0, so
+        // progress on lanes 1–3 comes only from stealing or overflow
+        // dispatch off the backlogged home lane.
+        let (prepared, responses, metrics, ready, handles) = pool_fixture(artifacts, 4);
+        assert_eq!(ready.recv(), Some(Ok(())));
+        let total = 48u64;
+        for i in 0..total {
+            let g = molecular_graph(&mut Rng::new(i), &MolConfig::molhiv());
+            prepared
+                .send(Prepared::new(Request::new(i, "gcn", g)))
+                .unwrap();
+        }
+        prepared.close();
+        let mut got = 0;
+        while got < total {
+            assert!(responses.recv().expect("response").is_ok());
+            got += 1;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let lanes = metrics.lane_summaries();
+        let executed: u64 = lanes.iter().map(|l| l.executed).sum();
+        let stolen: u64 = lanes.iter().map(|l| l.stolen).sum();
+        assert_eq!(executed, total);
+        // Stolen work is a subset of executed work (off-home batches
+        // can also arrive via overflow dispatch, and the home lane may
+        // even steal them back, so no tighter bound is race-free).
+        assert!(stolen <= executed, "stolen {stolen} > executed {executed}");
     }
 }

@@ -2,15 +2,22 @@
 //! process topology.
 //!
 //! ```text
-//! submit() ──► ingest queue ──► prep workers ──► prepared queue ──► executor ──► responses
-//!              (bounded,        (route, validate,  (bounded FIFO)     (PJRT         (drained by
-//!               backpressure)    eigensolve)                           engine)       the caller)
+//! submit() ──► ingest queue ──► prep workers ──► prepared queue ──► executor pool ──► responses
+//!              (bounded,        (route, validate,  (bounded FIFO)   (dispatcher +      (drained by
+//!               backpressure)    eigensolve)                         N lanes, each      the caller)
+//!                                                                    with its own
+//!                                                                    Engine; steal
+//!                                                                    when dry)
 //! ```
 //!
 //! The bounded queues *are* the paper's FIFOs: `submit` under the
 //! `Block` policy stalls the producer exactly like a full on-chip
 //! stream stalls the NE PE; under `Reject` it drops — the right
 //! semantics for real-time sources whose stale graphs are worthless.
+//! `executor_lanes` is the software analog of instantiating multiple
+//! parallel message-passing lanes on the fabric: every lane compiles
+//! the same artifacts from the same seed, so lane count changes
+//! throughput, never outputs (see `rust/tests/lane_determinism.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -28,7 +35,7 @@ use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::request::{Prepared, Request, Response};
 use super::router::{Route, Router};
-use super::scheduler::run_executor;
+use super::scheduler::spawn_executor_pool;
 
 /// Server construction parameters.
 #[derive(Clone, Debug)]
@@ -38,6 +45,10 @@ pub struct ServerConfig {
     pub models: Vec<String>,
     /// Prep worker threads (routing, validation, eigensolves).
     pub prep_workers: usize,
+    /// Parallel executor lanes, each owning a full engine over the
+    /// shared artifacts. Lane count scales throughput with cores and
+    /// never changes outputs (clamped to at least 1).
+    pub executor_lanes: usize,
     /// Ingest queue capacity (the backpressure bound).
     pub queue_capacity: usize,
     pub admission: AdmissionPolicy,
@@ -50,6 +61,7 @@ impl Default for ServerConfig {
             artifact_dir: Artifacts::default_dir(),
             models: Vec::new(),
             prep_workers: 2,
+            executor_lanes: 2,
             queue_capacity: 256,
             admission: AdmissionPolicy::Block,
             batch: BatchPolicy::default(),
@@ -64,18 +76,20 @@ pub struct Server {
     responses: Channel<Response>,
     metrics: Arc<Metrics>,
     prep_handles: Vec<JoinHandle<()>>,
-    exec_handle: Option<JoinHandle<()>>,
+    exec_handles: Vec<JoinHandle<()>>,
     admission: AdmissionPolicy,
     next_id: AtomicU64,
     served: Vec<String>,
+    lanes: usize,
 }
 
 impl Server {
-    /// Start all stages; returns once the executor has compiled every
-    /// served artifact (so first-request latency is steady-state).
+    /// Start all stages; returns once every executor lane has compiled
+    /// every served artifact (so first-request latency is steady-state).
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let artifacts = Artifacts::load(&cfg.artifact_dir)
-            .context("loading artifacts for server")?;
+        let artifacts = Arc::new(
+            Artifacts::load(&cfg.artifact_dir).context("loading artifacts for server")?,
+        );
         let serve_refs: Vec<&str> =
             cfg.models.iter().map(|s| s.as_str()).collect();
         let router = Arc::new(Router::new(&artifacts, &serve_refs));
@@ -92,6 +106,11 @@ impl Server {
         let prepared: Channel<Prepared> = Channel::bounded(cfg.queue_capacity);
         let responses: Channel<Response> = Channel::bounded(cfg.queue_capacity.max(1024));
         let metrics = Arc::new(Metrics::new());
+        // Pre-register served models so lane-parallel recording never
+        // takes the registry write lock on the hot path.
+        for m in &served {
+            metrics.register_model(m);
+        }
 
         // Prep workers: route + validate + eigensolve.
         let mut prep_handles = Vec::new();
@@ -142,35 +161,37 @@ impl Server {
             );
         }
 
-        // Executor thread (owns the PJRT engine).
+        // Executor pool: dispatcher + N lanes, each with its own engine.
+        let lanes = cfg.executor_lanes.max(1);
         let ready: Channel<std::result::Result<(), String>> = Channel::bounded(1);
-        let exec_handle = {
-            let prepared_rx = prepared.clone();
-            let responses_tx = responses.clone();
-            let metrics = Arc::clone(&metrics);
-            let ready_tx = ready.clone();
-            let served = served.clone();
-            let batch = cfg.batch;
-            std::thread::Builder::new()
-                .name("gengnn-executor".into())
-                .spawn(move || {
-                    run_executor(
-                        artifacts,
-                        served,
-                        prepared_rx,
-                        responses_tx,
-                        metrics,
-                        batch,
-                        ready_tx,
-                    )
-                })
-                .expect("spawn executor")
-        };
+        let exec_handles = spawn_executor_pool(
+            Arc::clone(&artifacts),
+            served.clone(),
+            lanes,
+            cfg.queue_capacity,
+            prepared.clone(),
+            responses.clone(),
+            Arc::clone(&metrics),
+            cfg.batch,
+            ready.clone(),
+        );
 
         match ready.recv() {
             Some(Ok(())) => {}
-            Some(Err(e)) => bail!("executor failed to compile artifacts: {e}"),
-            None => bail!("executor exited before becoming ready"),
+            Some(Err(e)) => {
+                // Unwind cleanly: release every spawned stage before
+                // reporting the compile failure.
+                ingest.close();
+                prepared.close();
+                for h in prep_handles {
+                    let _ = h.join();
+                }
+                for h in exec_handles {
+                    let _ = h.join();
+                }
+                bail!("executor pool failed to compile artifacts: {e}");
+            }
+            None => bail!("executor pool exited before becoming ready"),
         }
 
         Ok(Server {
@@ -179,15 +200,21 @@ impl Server {
             responses,
             metrics,
             prep_handles,
-            exec_handle: Some(exec_handle),
+            exec_handles,
             admission: cfg.admission,
             next_id: AtomicU64::new(0),
             served,
+            lanes,
         })
     }
 
     pub fn served_models(&self) -> &[String] {
         &self.served
+    }
+
+    /// Number of executor lanes this server runs.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Submit one raw graph; returns the request id on admission.
@@ -222,17 +249,19 @@ impl Server {
     }
 
     /// Graceful shutdown: close ingest, let the prep workers drain and
-    /// exit, then close the prepared queue so the executor drains and
-    /// exits, then close responses. Returns the final metrics.
+    /// exit, then close the prepared queue so the dispatcher drains,
+    /// closes the lane queues, and every lane finishes its backlog;
+    /// finally close responses. Returns the final metrics.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.ingest.close();
         for h in self.prep_handles.drain(..) {
             let _ = h.join();
         }
         // No producer is left for the prepared queue: release the
-        // executor's blocking recv (channel close drains first).
+        // dispatcher's blocking recv (channel close drains first). The
+        // dispatcher closes the per-lane queues on its way out.
         self.prepared.close();
-        if let Some(h) = self.exec_handle.take() {
+        for h in self.exec_handles.drain(..) {
             let _ = h.join();
         }
         self.responses.close();
@@ -247,9 +276,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn start(models: &[&str]) -> Option<Server> {
+        start_with_lanes(models, 2)
+    }
+
+    fn start_with_lanes(models: &[&str], lanes: usize) -> Option<Server> {
         let cfg = ServerConfig {
             models: models.iter().map(|s| s.to_string()).collect(),
             prep_workers: 2,
+            executor_lanes: lanes,
             ..ServerConfig::default()
         };
         Server::start(cfg).ok()
@@ -275,6 +309,35 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.total_completed(), total as u64);
+        let lane_sum: u64 = metrics.lane_summaries().iter().map(|l| l.executed).sum();
+        assert_eq!(lane_sum, total as u64);
+    }
+
+    #[test]
+    fn four_lane_server_accounts_every_request() {
+        let Some(server) = start_with_lanes(&["gcn", "sgc"], 4) else {
+            return;
+        };
+        assert_eq!(server.lanes(), 4);
+        let responses = server.responses();
+        let mut rng = Rng::new(23);
+        let total = 24u64;
+        for i in 0..total {
+            let g = molecular_graph(&mut rng, &MolConfig::molhiv());
+            let model = if i % 2 == 0 { "gcn" } else { "sgc" };
+            assert_eq!(server.submit(model, g).0, Admission::Accepted);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        while seen.len() < total as usize {
+            let r = responses.recv().expect("response");
+            assert!(r.is_ok(), "{:?}", r.output);
+            assert!(seen.insert(r.id), "duplicate response id {}", r.id);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.total_completed(), total);
+        assert_eq!(metrics.lane_summaries().len(), 4);
+        let lane_sum: u64 = metrics.lane_summaries().iter().map(|l| l.executed).sum();
+        assert_eq!(lane_sum, total);
     }
 
     #[test]

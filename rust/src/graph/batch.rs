@@ -234,6 +234,117 @@ mod tests {
         });
     }
 
+    /// Adversarial generator: empty graphs (n = 0), edgeless graphs,
+    /// guaranteed isolated tail nodes (edges only touch a prefix), and
+    /// forced duplicate edges — the shapes real streams throw at
+    /// `ingest` that a uniform generator rarely produces.
+    fn adversarial_coo(rng: &mut Rng) -> CooGraph {
+        let n = rng.range(0, 40);
+        let mut edges = Vec::new();
+        if n > 0 {
+            let active = rng.range(1, n + 1);
+            for _ in 0..rng.range(0, 120) {
+                let e = (rng.below(active) as u32, rng.below(active) as u32);
+                edges.push(e);
+                if rng.chance(0.3) {
+                    edges.push(e); // forced duplicate
+                }
+            }
+        }
+        CooGraph {
+            n,
+            edges,
+            node_feat: vec![0.0; n],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        }
+    }
+
+    #[test]
+    fn prop_adversarial_roundtrip_csr_csc() {
+        forall("batch-adversarial-roundtrip", 150, 0xADC0, |rng| {
+            let g = adversarial_coo(rng);
+            let e = g.edges.len();
+            let b = GraphBatch::ingest(g).unwrap();
+            prop_assert!(b.num_edges() == e, "ingest changed the edge count");
+            let csc = b.csc();
+            let out_sum: u32 = b.csr.degree.iter().sum();
+            let in_sum: u32 = csc.degree.iter().sum();
+            prop_assert!(out_sum as usize == e, "sum(out-deg) {out_sum} != E {e}");
+            prop_assert!(in_sum as usize == e, "sum(in-deg) {in_sum} != E {e}");
+            // CSR and CSC must encode exactly the COO edge multiset.
+            let mut via_coo = b.graph.edges.clone();
+            let mut via_csr = Vec::with_capacity(e);
+            let mut via_csc = Vec::with_capacity(e);
+            for v in 0..b.n() {
+                for &t in b.csr.row(v) {
+                    via_csr.push((v as u32, t));
+                }
+                for &s in csc.col(v) {
+                    via_csc.push((s, v as u32));
+                }
+            }
+            via_coo.sort_unstable();
+            via_csr.sort_unstable();
+            via_csc.sort_unstable();
+            prop_assert!(via_csr == via_coo, "CSR lost or invented edges");
+            prop_assert!(via_csc == via_coo, "CSC lost or invented edges");
+            // Isolated nodes: zero degree and empty rows on both sides.
+            let mut touched = vec![false; b.n()];
+            for &(s, t) in &b.graph.edges {
+                touched[s as usize] = true;
+                touched[t as usize] = true;
+            }
+            for (v, &is_touched) in touched.iter().enumerate() {
+                if !is_touched {
+                    prop_assert!(
+                        b.csr.degree[v] == 0 && csc.degree[v] == 0,
+                        "isolated node {v} has nonzero degree"
+                    );
+                    prop_assert!(
+                        b.csr.row(v).is_empty() && csc.col(v).is_empty(),
+                        "isolated node {v} has neighbors"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_duplicate_edges_preserved_with_multiplicity() {
+        forall("batch-duplicate-multiplicity", 100, 0xD0B1, |rng| {
+            let n = rng.range(2, 20);
+            let (s, t) = (rng.below(n) as u32, rng.below(n) as u32);
+            let copies = rng.range(2, 6);
+            let g = CooGraph {
+                n,
+                edges: vec![(s, t); copies],
+                node_feat: vec![0.0; n],
+                f_node: 1,
+                edge_feat: vec![],
+                f_edge: 0,
+            };
+            let b = GraphBatch::ingest(g).unwrap();
+            let row_hits = b.csr.row(s as usize).iter().filter(|&&x| x == t).count();
+            let col_hits = b.csc().col(t as usize).iter().filter(|&&x| x == s).count();
+            prop_assert!(
+                row_hits == copies,
+                "CSR collapsed duplicates: {row_hits} != {copies}"
+            );
+            prop_assert!(
+                col_hits == copies,
+                "CSC collapsed duplicates: {col_hits} != {copies}"
+            );
+            prop_assert!(
+                b.csr.degree[s as usize] as usize == copies,
+                "degree table missed duplicates"
+            );
+            Ok(())
+        });
+    }
+
     #[test]
     fn deterministic_under_seeded_generation() {
         // Same seed -> same generated graph -> identical conversion.

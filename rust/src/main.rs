@@ -4,7 +4,8 @@
 //!
 //! ```text
 //! gengnn serve          stream synthetic molecular graphs through the
-//!                       PJRT serving stack and print latency metrics
+//!                       serving stack (--lanes N parallel executor
+//!                       lanes) and print latency + per-lane metrics
 //! gengnn infer          run one model on one generated graph
 //! gengnn simulate       cycle-level simulation of one model/graph
 //! gengnn resources      Table 4 (+ --detailed component inventory)
@@ -25,6 +26,7 @@ use gengnn::report::{fig7, fig8, fig9, table4, table5};
 use gengnn::runtime::{Artifacts, Engine, Golden};
 use gengnn::sim::{Accelerator, PipelineMode};
 use gengnn::util::cli::Args;
+use gengnn::util::pool::{Channel, RecvTimeout};
 use gengnn::util::rng::Rng;
 use gengnn::util::stats::fmt_secs;
 
@@ -82,9 +84,11 @@ fn cmd_serve(a: Args) -> Result<()> {
     let models = a.list_or("models", &["gcn", "gat", "dgn"]);
     let count = a.usize_or("count", 500)?;
     let seed = a.u64_or("seed", 7)?;
+    let lanes = a.usize_or("lanes", 2)?;
     let cfg = ServerConfig {
         models: models.clone(),
         prep_workers: a.usize_or("prep-workers", 2)?,
+        executor_lanes: lanes,
         queue_capacity: a.usize_or("queue", 256)?,
         admission: if a.has("reject") {
             AdmissionPolicy::Reject
@@ -97,22 +101,39 @@ fn cmd_serve(a: Args) -> Result<()> {
         },
         ..ServerConfig::default()
     };
-    eprintln!("[serve] compiling {models:?} ...");
+    eprintln!("[serve] compiling {models:?} on {lanes} executor lane(s) ...");
     let server = Server::start(cfg)?;
     let responses = server.responses();
     eprintln!("[serve] streaming {count} molecular graphs ...");
 
+    // Admission-rejected requests never produce a response, so the
+    // drain target is the *accepted* count — delivered once submission
+    // finishes; until then the drainer polls.
+    let target_ch: Channel<u64> = Channel::bounded(1);
+    let target_rx = target_ch.clone();
     let drain = std::thread::spawn(move || {
         let mut ok = 0u64;
         let mut err = 0u64;
-        while let Some(r) = responses.recv() {
-            if r.is_ok() {
-                ok += 1;
-            } else {
-                err += 1;
+        let mut target: Option<u64> = None;
+        loop {
+            if target.is_none() {
+                target = target_rx.try_recv();
             }
-            if ok + err >= count as u64 {
-                break;
+            if let Some(t) = target {
+                if ok + err >= t {
+                    break;
+                }
+            }
+            match responses.recv_timeout(std::time::Duration::from_millis(10)) {
+                RecvTimeout::Item(r) => {
+                    if r.is_ok() {
+                        ok += 1;
+                    } else {
+                        err += 1;
+                    }
+                }
+                RecvTimeout::TimedOut => {}
+                RecvTimeout::Closed => break,
             }
         }
         (ok, err)
@@ -128,6 +149,7 @@ fn cmd_serve(a: Args) -> Result<()> {
             accepted += 1;
         }
     }
+    let _ = target_ch.send(accepted);
     let (ok, err) = drain.join().unwrap();
     let wall = t0.elapsed().as_secs_f64();
     let metrics = server.shutdown();

@@ -13,6 +13,10 @@
 //!   `xla-rs`, so enabling the feature compiles everywhere but
 //!   executes only where the real XLA runtime is linked; [`Client::cpu`]
 //!   falls back to native when PJRT cannot come up.
+//!
+//! Clients are cheap and thread-confined: the coordinator's executor
+//! pool brings up one per lane (each lane's [`super::Engine`] owns its
+//! own), rather than sharing one across threads.
 
 use anyhow::Result;
 

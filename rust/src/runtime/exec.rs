@@ -22,9 +22,11 @@ struct LoadedModel {
 ///
 /// Runs on the native reference backend by default; with the `xla`
 /// feature and a real PJRT runtime it executes the HLO artifacts
-/// instead (handles are thread-confined either way, so the coordinator
-/// runs one `Engine` on a dedicated executor thread — the software
-/// analog of the single FPGA processing streamed graphs consecutively).
+/// instead. Handles are thread-confined either way, so the coordinator
+/// builds one `Engine` per executor lane from the shared artifacts —
+/// the software analog of instantiating N parallel processing lanes on
+/// the fabric. Weights regenerate from the manifest seed, so every
+/// lane's engine is bit-identical and lane count never changes outputs.
 pub struct Engine {
     client: Client,
     models: BTreeMap<String, LoadedModel>,

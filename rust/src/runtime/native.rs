@@ -15,10 +15,19 @@
 //! Everything operates on the padded dense tensors of
 //! [`crate::graph::DenseGraph`] — identical shapes and conventions to
 //! the AOT artifact inputs, padded rows included.
+//!
+//! Hot-loop temporaries ([`Mat`]) draw their storage from the
+//! per-thread scratch pool in [`crate::util::pool`] and return it on
+//! drop, so an executor lane running forward after forward recycles
+//! the same allocations instead of hitting the allocator per request
+//! (the software analog of statically-allocated on-chip buffers).
+//! Buffers are fully re-initialized on take, so pooling can never
+//! change an output bit.
 
 use anyhow::{bail, Result};
 
 use crate::graph::DenseGraph;
+use crate::util::pool::{scratch_put, scratch_take_copied, scratch_take_zeroed};
 
 use super::artifact::ModelMeta;
 
@@ -123,8 +132,10 @@ impl WInit {
 }
 
 // ---------------------------------------------------------- primitives
-/// Row-major `[r, c]` float32 matrix.
-#[derive(Clone, Debug)]
+/// Row-major `[r, c]` float32 matrix. Storage comes from the calling
+/// thread's scratch pool and is returned on drop; [`Mat::into_vec`]
+/// lets a result escape the pool (model outputs).
+#[derive(Debug)]
 struct Mat {
     r: usize,
     c: usize,
@@ -142,7 +153,7 @@ impl Mat {
         Mat {
             r,
             c,
-            d: vec![0.0; r * c],
+            d: scratch_take_zeroed(r * c),
         }
     }
 
@@ -151,8 +162,22 @@ impl Mat {
         Mat {
             r,
             c,
-            d: d.to_vec(),
+            d: scratch_take_copied(d),
         }
+    }
+
+    /// Take the backing buffer out of the pool's reach (for outputs
+    /// that outlive the forward pass). An output much smaller than the
+    /// recycled buffer backing it is copied out instead, so responses
+    /// never pin a large pooled allocation.
+    fn into_vec(mut self) -> Vec<f32> {
+        let d = std::mem::take(&mut self.d);
+        if d.capacity() > 2 * d.len().max(32) {
+            let out = d.to_vec();
+            scratch_put(d);
+            return out;
+        }
+        d
     }
 
     fn row(&self, i: usize) -> &[f32] {
@@ -161,6 +186,24 @@ impl Mat {
 
     fn at(&self, i: usize, j: usize) -> f32 {
         self.d[i * self.c + j]
+    }
+}
+
+impl Clone for Mat {
+    fn clone(&self) -> Mat {
+        Mat {
+            r: self.r,
+            c: self.c,
+            d: scratch_take_copied(&self.d),
+        }
+    }
+}
+
+impl Drop for Mat {
+    fn drop(&mut self) {
+        // `into_vec` leaves an empty, zero-capacity Vec behind, which
+        // the pool ignores.
+        scratch_put(std::mem::take(&mut self.d));
     }
 }
 
@@ -530,9 +573,9 @@ impl NativeModel {
         }
         mask_rows(&mut h, mask);
         if self.node_level {
-            linear(&h, head, Act::None).d
+            linear(&h, head, Act::None).into_vec()
         } else {
-            linear(&masked_mean_pool(&h, mask), head, Act::None).d
+            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
         }
     }
 
@@ -545,9 +588,9 @@ impl NativeModel {
         let mut h = linear(&h, w, Act::Relu);
         mask_rows(&mut h, mask);
         if self.node_level {
-            linear(&h, head, Act::None).d
+            linear(&h, head, Act::None).into_vec()
         } else {
-            linear(&masked_mean_pool(&h, mask), head, Act::None).d
+            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
         }
     }
 
@@ -637,7 +680,7 @@ impl NativeModel {
                 }
             }
         }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).d
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
     }
 
     fn fwd_gat(
@@ -725,7 +768,7 @@ impl NativeModel {
             }
             mask_rows(&mut h, mask);
         }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).d
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
     }
 
     fn fwd_pna(
@@ -799,7 +842,7 @@ impl NativeModel {
         let mut p = masked_mean_pool(&h, mask);
         p = linear(&p, &head[0], Act::Relu);
         p = linear(&p, &head[1], Act::Relu);
-        linear(&p, &head[2], Act::None).d
+        linear(&p, &head[2], Act::None).into_vec()
     }
 
     fn fwd_sage(
@@ -842,7 +885,7 @@ impl NativeModel {
             }
             mask_rows(&mut h, mask);
         }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).d
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -909,9 +952,9 @@ impl NativeModel {
         if self.node_level {
             let mut out = apply_head(&h);
             mask_rows(&mut out, mask);
-            out.d
+            out.into_vec()
         } else {
-            apply_head(&masked_mean_pool(&h, mask)).d
+            apply_head(&masked_mean_pool(&h, mask)).into_vec()
         }
     }
 
@@ -1088,6 +1131,29 @@ mod tests {
         let live = g.n * 3;
         assert!(out[live..].iter().all(|&v| v == 0.0), "padding not masked");
         assert!(out[..live].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers_without_changing_outputs() {
+        // Dedicated thread: the scratch pool is per-thread, so other
+        // tests cannot perturb the counters.
+        std::thread::spawn(|| {
+            let meta = tiny_meta("gcn");
+            let m = NativeModel::build(&meta, 0).unwrap();
+            let d = dense_for(&meta, &tiny_graph(1.0));
+            let a = m.forward(&d).unwrap();
+            let (hits_before, _) = crate::util::pool::scratch_stats();
+            let b = m.forward(&d).unwrap();
+            let (hits_after, _) = crate::util::pool::scratch_stats();
+            assert_eq!(a, b, "pooled scratch must not change outputs");
+            assert!(
+                hits_after > hits_before,
+                "second forward must recycle scratch buffers \
+                 ({hits_before} -> {hits_after} hits)"
+            );
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

@@ -1,12 +1,18 @@
-//! Concurrency substrate: bounded MPMC channel (backpressure-capable)
-//! and a scoped thread pool. Tokio is not in the offline vendor set, so
-//! the coordinator's event loop is built on these primitives — which
-//! also map more directly onto the paper's hardware FIFOs: the bounded
-//! channel *is* the streaming FIFO of Section 3.5, with `send` blocking
-//! exactly like a full on-chip queue stalls the NE PE.
+//! Concurrency substrate: bounded MPMC channel (backpressure-capable),
+//! a scoped thread pool, and reusable scratch buffers. Tokio is not in
+//! the offline vendor set, so the coordinator's event loop is built on
+//! these primitives — which also map more directly onto the paper's
+//! hardware FIFOs: the bounded channel *is* the streaming FIFO of
+//! Section 3.5, with `send` blocking exactly like a full on-chip queue
+//! stalls the NE PE. The scratch [`BufferPool`] is the software analog
+//! of statically-allocated on-chip BRAM: each executor lane re-uses the
+//! same working buffers for every graph it processes instead of
+//! re-allocating per request.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Bounded MPMC channel. `send` blocks when full (backpressure),
 /// `recv` blocks when empty, `close` wakes all waiters.
@@ -101,6 +107,33 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Blocking receive with a deadline — what an executor lane parks
+    /// on so it can periodically wake and steal from sibling lanes.
+    pub fn recv_timeout(&self, timeout: Duration) -> RecvTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return RecvTimeout::Item(v);
+            }
+            if st.closed {
+                return RecvTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvTimeout::TimedOut;
+            }
+            let (guard, _) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
     pub fn try_recv(&self) -> Option<T> {
         let mut st = self.inner.q.lock().unwrap();
         let v = st.buf.pop_front();
@@ -132,6 +165,167 @@ impl<T> Channel<T> {
     pub fn peak_depth(&self) -> usize {
         self.inner.q.lock().unwrap().peak
     }
+}
+
+/// Outcome of a bounded-wait receive ([`Channel::recv_timeout`]).
+#[derive(Debug)]
+pub enum RecvTimeout<T> {
+    /// An item arrived within the deadline.
+    Item(T),
+    /// The deadline elapsed with the channel open but empty.
+    TimedOut,
+    /// The channel is closed and fully drained.
+    Closed,
+}
+
+/// Recycled f32 scratch buffers: `take_zeroed` hands out a cleared
+/// buffer (re-using a previously returned allocation when one is
+/// available), `put` returns one. Bounded by buffer count *and* total
+/// retained bytes, so neither a burst of many buffers nor a phase of
+/// oversized graphs can pin unbounded memory for the thread's life.
+pub struct BufferPool {
+    free: Vec<Vec<f32>>,
+    max_buffers: usize,
+    max_bytes: usize,
+    retained_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl BufferPool {
+    pub fn new(max_buffers: usize, max_bytes: usize) -> BufferPool {
+        BufferPool {
+            free: Vec::new(),
+            max_buffers,
+            max_bytes,
+            retained_bytes: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements. Prefers a
+    /// recycled allocation whose capacity already covers `len`.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.take_raw(len) {
+            Some(mut b) => {
+                b.resize(len, 0.0);
+                b
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A buffer holding a copy of `src` (no intermediate zero-fill).
+    pub fn take_copied(&mut self, src: &[f32]) -> Vec<f32> {
+        match self.take_raw(src.len()) {
+            Some(mut b) => {
+                b.extend_from_slice(src);
+                b
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Pop a cleared recycled buffer, first-fit on capacity; None when
+    /// the pool is empty (caller allocates fresh). A take no pooled
+    /// buffer can satisfy still recycles the last buffer — it grows to
+    /// the new size and re-enters the pool, adapting it to the
+    /// workload — but counts as a miss, since it reallocates exactly
+    /// like a fresh `Vec` would.
+    fn take_raw(&mut self, len: usize) -> Option<Vec<f32>> {
+        if let Some(p) = self.free.iter().position(|b| b.capacity() >= len) {
+            let mut b = self.free.swap_remove(p);
+            self.retained_bytes -= b.capacity() * std::mem::size_of::<f32>();
+            b.clear();
+            self.hits += 1;
+            return Some(b);
+        }
+        self.misses += 1;
+        self.free.pop().map(|mut b| {
+            self.retained_bytes -= b.capacity() * std::mem::size_of::<f32>();
+            b.clear();
+            b
+        })
+    }
+
+    /// Return a buffer for re-use. Zero-capacity buffers and overflow
+    /// beyond `max_buffers` / `max_bytes` are dropped.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        let bytes = buf.capacity() * std::mem::size_of::<f32>();
+        if buf.capacity() > 0
+            && self.free.len() < self.max_buffers
+            && self.retained_bytes + bytes <= self.max_bytes
+        {
+            self.retained_bytes += bytes;
+            self.free.push(buf);
+        }
+    }
+
+    /// Bytes currently parked in the pool.
+    pub fn retained_bytes(&self) -> usize {
+        self.retained_bytes
+    }
+
+    /// `(hits, misses)` across the pool's lifetime.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+impl Default for BufferPool {
+    /// 32 buffers / 16 MiB per thread: comfortably covers a lane's
+    /// live set for the largest fixture model (dgn_large temporaries
+    /// are ~1 MiB each) without pinning unbounded memory after a
+    /// large-graph phase ends.
+    fn default() -> Self {
+        BufferPool::new(32, 16 << 20)
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch pool: each executor lane (its own thread)
+    /// recycles forward-pass temporaries across the requests it serves.
+    static SCRATCH: RefCell<BufferPool> = RefCell::new(BufferPool::default());
+}
+
+/// Take a zero-filled f32 buffer from this thread's scratch pool.
+/// Falls back to a plain allocation if the pool is unavailable
+/// (re-entrant use or thread teardown).
+pub fn scratch_take_zeroed(len: usize) -> Vec<f32> {
+    SCRATCH
+        .try_with(|p| match p.try_borrow_mut() {
+            Ok(mut pool) => pool.take_zeroed(len),
+            Err(_) => vec![0.0; len],
+        })
+        .unwrap_or_else(|_| vec![0.0; len])
+}
+
+/// Take a buffer holding a copy of `src` from this thread's pool.
+pub fn scratch_take_copied(src: &[f32]) -> Vec<f32> {
+    SCRATCH
+        .try_with(|p| match p.try_borrow_mut() {
+            Ok(mut pool) => pool.take_copied(src),
+            Err(_) => src.to_vec(),
+        })
+        .unwrap_or_else(|_| src.to_vec())
+}
+
+/// Return a buffer to this thread's scratch pool (drops it if the
+/// pool is unavailable or full).
+pub fn scratch_put(buf: Vec<f32>) {
+    let _ = SCRATCH.try_with(|p| {
+        if let Ok(mut pool) = p.try_borrow_mut() {
+            pool.put(buf);
+        }
+    });
+}
+
+/// `(hits, misses)` of this thread's scratch pool.
+pub fn scratch_stats() -> (u64, u64) {
+    SCRATCH
+        .try_with(|p| p.borrow().stats())
+        .unwrap_or((0, 0))
 }
 
 /// Fixed-size worker pool executing closures from a shared queue.
@@ -226,6 +420,106 @@ mod tests {
         }
         while ch.try_recv().is_some() {}
         assert_eq!(ch.peak_depth(), 7);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        match ch.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::TimedOut => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        ch.send(7).unwrap();
+        match ch.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Item(7) => {}
+            other => panic!("expected item, got {other:?}"),
+        }
+        ch.close();
+        match ch.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Closed => {}
+            other => panic!("expected closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_timeout_drains_before_reporting_closed() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        ch.send(1).unwrap();
+        ch.close();
+        match ch.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Item(1) => {}
+            other => panic!("expected item, got {other:?}"),
+        }
+        match ch.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Closed => {}
+            other => panic!("expected closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn buffer_pool_recycles_and_zeroes() {
+        let mut pool = BufferPool::new(4, 1 << 20);
+        let mut a = pool.take_zeroed(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a[3] = 5.0;
+        pool.put(a);
+        let b = pool.take_zeroed(8);
+        assert_eq!(b, vec![0.0; 8], "recycled buffer must be re-zeroed");
+        let (hits, misses) = pool.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn buffer_pool_take_copied() {
+        let mut pool = BufferPool::new(4, 1 << 20);
+        pool.put(vec![9.0; 16]);
+        let b = pool.take_copied(&[1.0, 2.0, 3.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        assert_eq!(pool.stats().0, 1, "copy should reuse the pooled buffer");
+    }
+
+    #[test]
+    fn buffer_pool_bounds_retained_buffers() {
+        let mut pool = BufferPool::new(2, 1 << 20);
+        for _ in 0..5 {
+            pool.put(vec![0.0; 4]);
+        }
+        assert_eq!(pool.free.len(), 2);
+        pool.put(Vec::new()); // zero-capacity: dropped, not retained
+        assert_eq!(pool.free.len(), 2);
+    }
+
+    #[test]
+    fn buffer_pool_bounds_retained_bytes() {
+        // 100-float budget: one 80-float buffer fits, a second is
+        // dropped; taking the first frees its bytes again.
+        let mut pool = BufferPool::new(32, 100 * std::mem::size_of::<f32>());
+        pool.put(vec![0.0f32; 80]);
+        assert_eq!(pool.free.len(), 1);
+        assert!(pool.retained_bytes() >= 80 * std::mem::size_of::<f32>());
+        pool.put(vec![0.0f32; 80]); // would exceed the byte cap
+        assert_eq!(pool.free.len(), 1);
+        let b = pool.take_zeroed(10);
+        assert_eq!(pool.retained_bytes(), 0);
+        assert_eq!(b.len(), 10);
+        pool.put(b);
+        assert!(pool.retained_bytes() > 0);
+    }
+
+    #[test]
+    fn thread_scratch_reuses_across_calls() {
+        // Run on a dedicated thread so other tests' scratch use cannot
+        // perturb the counters.
+        std::thread::spawn(|| {
+            let a = scratch_take_zeroed(64);
+            scratch_put(a);
+            let b = scratch_take_zeroed(64);
+            assert_eq!(b.len(), 64);
+            let (hits, _) = scratch_stats();
+            assert!(hits >= 1, "second take must hit the pool");
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Differential determinism test for the sharded executor pool: for
+//! every model in the fixture manifest, the same request stream must
+//! produce **bit-identical** outputs on a 1-lane and a 4-lane server,
+//! with exactly one response per submitted request on both.
+//!
+//! This is the contract that makes lane count a pure throughput knob:
+//! every lane compiles the same artifacts from the same weight seed,
+//! and scratch-buffer pooling re-initializes buffers per request, so
+//! neither parallelism nor recycling may perturb a single output bit.
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, the test skips with a notice.
+
+use std::collections::BTreeMap;
+
+use gengnn::coordinator::{
+    Admission, AdmissionPolicy, BatchPolicy, Metrics, Server, ServerConfig,
+};
+use gengnn::datagen::{random_graph, RandomGraphConfig};
+use gengnn::graph::CooGraph;
+use gengnn::runtime::{Artifacts, ModelMeta};
+use gengnn::util::rng::Rng;
+
+/// A valid request graph for `meta`: node count inside the model's
+/// capacity, feature widths matching the manifest, edge features only
+/// when the model consumes them.
+fn fixture_graph(meta: &ModelMeta, rng: &mut Rng) -> CooGraph {
+    let n_cap = meta.n_max.min(32);
+    let mut g = random_graph(
+        rng,
+        &RandomGraphConfig {
+            nodes: rng.range(4, n_cap + 1),
+            avg_degree: 3.0,
+            high_degree_fraction: 0.1,
+            hub_multiplier: 3.0,
+            f_node: meta.in_dim,
+        },
+    );
+    let f_edge = meta
+        .inputs
+        .iter()
+        .find(|i| i.name == "edge_attr")
+        .and_then(|i| i.shape.last().copied())
+        .unwrap_or(0);
+    if f_edge > 0 {
+        g.f_edge = f_edge;
+        g.edge_feat = (0..g.num_edges() * f_edge)
+            .map(|_| rng.below(4) as f32)
+            .collect();
+    }
+    g
+}
+
+type ResponseMap = BTreeMap<u64, Result<Vec<f32>, String>>;
+
+/// Run `graphs` through a fresh server with `lanes` executor lanes and
+/// return outputs keyed by request id, plus the final metrics.
+fn run_stream(
+    model: &str,
+    lanes: usize,
+    graphs: &[CooGraph],
+) -> (ResponseMap, std::sync::Arc<Metrics>) {
+    let server = Server::start(ServerConfig {
+        models: vec![model.to_string()],
+        prep_workers: 2,
+        executor_lanes: lanes,
+        queue_capacity: 64,
+        admission: AdmissionPolicy::Block,
+        batch: BatchPolicy::default(),
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let responses = server.responses();
+    let mut submitted = Vec::with_capacity(graphs.len());
+    for g in graphs {
+        let (adm, id) = server.submit(model, g.clone());
+        assert_eq!(adm, Admission::Accepted, "{model}: submission refused");
+        submitted.push(id);
+    }
+    let mut out = ResponseMap::new();
+    for _ in 0..graphs.len() {
+        let r = responses.recv().expect("response stream ended early");
+        assert!(
+            out.insert(r.id, r.output).is_none(),
+            "{model}: duplicate response for id {}",
+            r.id
+        );
+    }
+    let metrics = server.shutdown();
+    // Response-per-request accounting: exactly one response per id.
+    assert_eq!(out.len(), graphs.len(), "{model}: response count mismatch");
+    for id in submitted {
+        assert!(out.contains_key(&id), "{model}: no response for id {id}");
+    }
+    assert_eq!(
+        metrics.total_completed() + metrics.total_failed(),
+        graphs.len() as u64,
+        "{model}: metrics do not cover the stream"
+    );
+    (out, metrics)
+}
+
+#[test]
+fn four_lanes_bit_identical_to_one_lane_across_the_model_zoo() {
+    let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+        eprintln!("skipping lane determinism test — no artifacts; run `make artifacts`");
+        return;
+    };
+    for (idx, meta) in artifacts.models.iter().enumerate() {
+        // The large node-level model is expensive per forward; a short
+        // stream still exercises dispatch, stealing, and packing.
+        let count = if meta.n_max > 64 { 2 } else { 6 };
+        let mut rng = Rng::new(0xD1FF + idx as u64);
+        let graphs: Vec<CooGraph> =
+            (0..count).map(|_| fixture_graph(meta, &mut rng)).collect();
+
+        let (one_lane, m1) = run_stream(&meta.name, 1, &graphs);
+        let (four_lane, m4) = run_stream(&meta.name, 4, &graphs);
+
+        for (id, out) in &one_lane {
+            assert!(
+                out.is_ok(),
+                "{}: request {id} failed on the 1-lane server: {out:?}",
+                meta.name
+            );
+        }
+        assert_eq!(
+            one_lane, four_lane,
+            "{}: 4-lane outputs differ from 1-lane outputs",
+            meta.name
+        );
+
+        // Lane accounting must cover the whole stream on both servers.
+        assert_eq!(m1.lane_summaries().len(), 1);
+        assert_eq!(m4.lane_summaries().len(), 4);
+        let sum1: u64 = m1.lane_summaries().iter().map(|l| l.executed).sum();
+        let sum4: u64 = m4.lane_summaries().iter().map(|l| l.executed).sum();
+        assert_eq!(sum1, count as u64, "{}: 1-lane counter mismatch", meta.name);
+        assert_eq!(sum4, count as u64, "{}: 4-lane counter mismatch", meta.name);
+    }
+}
+
+#[test]
+fn repeated_runs_of_the_same_stream_are_bit_identical() {
+    // Same stream, same lane count, fresh server: the pool (engines,
+    // scratch buffers, dispatch order) must not leak state between
+    // runs. gin exercises the heaviest packing path (edge_attr).
+    let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+        eprintln!("skipping lane determinism test — no artifacts; run `make artifacts`");
+        return;
+    };
+    let Ok(meta) = artifacts.model("gin") else {
+        return;
+    };
+    let mut rng = Rng::new(0xBEEF);
+    let graphs: Vec<CooGraph> = (0..8).map(|_| fixture_graph(meta, &mut rng)).collect();
+    let (a, _) = run_stream("gin", 3, &graphs);
+    let (b, _) = run_stream("gin", 3, &graphs);
+    assert_eq!(a, b, "two 3-lane runs over the same stream diverged");
+}

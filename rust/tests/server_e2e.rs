@@ -10,6 +10,15 @@ use gengnn::datagen::{molecular_graph, MolConfig};
 use gengnn::util::rng::Rng;
 
 fn server(models: &[&str], queue: usize, admission: AdmissionPolicy) -> Option<Server> {
+    server_with_lanes(models, queue, admission, 2)
+}
+
+fn server_with_lanes(
+    models: &[&str],
+    queue: usize,
+    admission: AdmissionPolicy,
+    lanes: usize,
+) -> Option<Server> {
     // Skip ONLY when the artifact fixtures are absent; any other
     // Server::start failure is a real regression and must fail loudly.
     if let Err(e) =
@@ -22,6 +31,7 @@ fn server(models: &[&str], queue: usize, admission: AdmissionPolicy) -> Option<S
         Server::start(ServerConfig {
             models: models.iter().map(|s| s.to_string()).collect(),
             prep_workers: 2,
+            executor_lanes: lanes,
             queue_capacity: queue,
             admission,
             batch: BatchPolicy::default(),
@@ -139,6 +149,47 @@ fn reject_policy_sheds_load_when_queue_full() {
         metrics.rejected() > 0,
         "burst of {burst} into a queue of 2 must shed load"
     );
+}
+
+#[test]
+fn four_lane_mixed_stream_reconciles_lane_counters() {
+    let models = ["gcn", "gat", "dgn"];
+    let Some(server) = server_with_lanes(&models, 32, AdmissionPolicy::Block, 4) else {
+        return;
+    };
+    assert_eq!(server.lanes(), 4);
+    let responses = server.responses();
+    let mut rng = Rng::new(77);
+    let total = 36u64;
+
+    let drain = std::thread::spawn(move || {
+        let mut ids = std::collections::BTreeSet::new();
+        for _ in 0..total {
+            let r = responses.recv().expect("response");
+            assert!(r.is_ok(), "{:?}", r.output);
+            assert!(ids.insert(r.id), "duplicate response id {}", r.id);
+        }
+        ids
+    });
+
+    for i in 0..total {
+        let g = molecular_graph(&mut rng, &MolConfig::molhiv());
+        let (adm, _) = server.submit(models[i as usize % models.len()], g);
+        assert_eq!(adm, Admission::Accepted);
+    }
+    let ids = drain.join().unwrap();
+    assert_eq!(ids.len() as u64, total);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.total_completed(), total);
+    let lanes = metrics.lane_summaries();
+    assert_eq!(lanes.len(), 4);
+    assert_eq!(lanes.iter().map(|l| l.executed).sum::<u64>(), total);
+    // Stolen work is a subset of executed work, lane by lane.
+    for l in &lanes {
+        assert!(l.stolen <= l.executed, "{l:?}");
+    }
+    assert!(metrics.render().contains("lane"));
 }
 
 #[test]

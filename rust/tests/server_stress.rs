@@ -1,0 +1,238 @@
+//! Concurrency stress tests of the sharded executor pool: multiple
+//! producer threads hammering a small ingest queue under both
+//! admission policies, with a concurrent drainer. The invariants:
+//!
+//! * no deadlock on shutdown (the test completing is the assertion);
+//! * no lost or duplicated responses — every admitted request yields
+//!   exactly one response, keyed by id;
+//! * metrics reconcile: submitted = completed + failed + rejected,
+//!   and the per-lane counters cover exactly the executed requests.
+//!
+//! CI runs this file in release mode as well
+//! (`cargo test --release --test server_stress`).
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, each test skips with a notice.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::datagen::{random_graph, RandomGraphConfig};
+use gengnn::util::rng::Rng;
+
+const MODELS: [&str; 3] = ["gcn", "sgc", "sage"];
+
+fn artifacts_present() -> bool {
+    match gengnn::runtime::Artifacts::load(gengnn::runtime::Artifacts::default_dir()) {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping stress test — no artifacts ({e}); run `make artifacts`");
+            false
+        }
+    }
+}
+
+/// What one full stress run produced, for reconciliation.
+struct Outcome {
+    submitted: u64,
+    accepted: u64,
+    /// Admitted requests aimed at an unknown model — rejected by the
+    /// router in the prep stage, so they never reach an executor lane.
+    invalid_accepted: u64,
+    rejected_at_admission: u64,
+    ok_responses: u64,
+    err_responses: u64,
+}
+
+/// `producers` threads submit `per_producer` random `datagen` graphs
+/// each (a slice of them aimed at an unknown model to exercise the
+/// failed-route path) into a `queue`-deep ingest under `policy`, while
+/// a drainer thread consumes responses concurrently. Panics on any
+/// lost/duplicated response or metrics mismatch.
+fn stress(policy: AdmissionPolicy, lanes: usize, queue: usize, producers: u64, per_producer: u64) {
+    let server = Arc::new(
+        Server::start(ServerConfig {
+            models: MODELS.iter().map(|s| s.to_string()).collect(),
+            prep_workers: 2,
+            executor_lanes: lanes,
+            queue_capacity: queue,
+            admission: policy,
+            batch: BatchPolicy {
+                max_batch: 4,
+                sticky: true,
+            },
+            ..ServerConfig::default()
+        })
+        .unwrap_or_else(|e| panic!("server start ({}): {e:#}", policy.as_str())),
+    );
+
+    // Concurrent drainer: collects every response until the channel
+    // closes at shutdown; duplicates are detected via the id set.
+    let responses = server.responses();
+    let drainer = std::thread::spawn(move || {
+        let mut ids = BTreeSet::new();
+        let (mut ok, mut err) = (0u64, 0u64);
+        while let Some(r) = responses.recv() {
+            assert!(ids.insert(r.id), "duplicate response for id {}", r.id);
+            if r.is_ok() {
+                ok += 1;
+            } else {
+                err += 1;
+            }
+        }
+        (ids, ok, err)
+    });
+
+    let accepted = Arc::new(AtomicU64::new(0));
+    let invalid_accepted = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let mut joins = Vec::new();
+    for t in 0..producers {
+        let server = Arc::clone(&server);
+        let accepted = Arc::clone(&accepted);
+        let invalid_accepted = Arc::clone(&invalid_accepted);
+        let rejected = Arc::clone(&rejected);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x57E55 + t);
+            for i in 0..per_producer {
+                let g = random_graph(
+                    &mut rng,
+                    &RandomGraphConfig {
+                        nodes: rng.range(4, 33),
+                        avg_degree: 3.0,
+                        high_degree_fraction: 0.1,
+                        hub_multiplier: 4.0,
+                        f_node: 9,
+                    },
+                );
+                // Every 13th request aims at an unknown model: admitted
+                // by the queue, rejected by the router, answered with
+                // an error response.
+                let model = if i % 13 == 9 {
+                    "no-such-model"
+                } else {
+                    MODELS[((t + i) % MODELS.len() as u64) as usize]
+                };
+                match server.submit(model, g) {
+                    (Admission::Accepted, _) => {
+                        accepted.fetch_add(1, Ordering::Relaxed);
+                        if model == "no-such-model" {
+                            invalid_accepted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    (Admission::Rejected, _) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => panic!("producers must have released the server"),
+    };
+    let metrics = server.shutdown(); // closes responses → drainer exits
+    let (ids, ok, err) = drainer.join().unwrap();
+
+    let outcome = Outcome {
+        submitted: producers * per_producer,
+        accepted: accepted.load(Ordering::Relaxed),
+        invalid_accepted: invalid_accepted.load(Ordering::Relaxed),
+        rejected_at_admission: rejected.load(Ordering::Relaxed),
+        ok_responses: ok,
+        err_responses: err,
+    };
+    reconcile(&outcome, &ids, &metrics, policy);
+}
+
+fn reconcile(
+    o: &Outcome,
+    ids: &BTreeSet<u64>,
+    metrics: &gengnn::coordinator::Metrics,
+    policy: AdmissionPolicy,
+) {
+    let tag = policy.as_str();
+    // Admission partitions the submissions…
+    assert_eq!(
+        o.accepted + o.rejected_at_admission,
+        o.submitted,
+        "[{tag}] admission accounting"
+    );
+    // …every admitted request yields exactly one response…
+    assert_eq!(
+        ids.len() as u64,
+        o.accepted,
+        "[{tag}] lost or duplicated responses"
+    );
+    assert_eq!(
+        o.ok_responses + o.err_responses,
+        o.accepted,
+        "[{tag}] response split"
+    );
+    // …and the metrics agree with what the drainer saw.
+    assert_eq!(
+        metrics.total_completed(),
+        o.ok_responses,
+        "[{tag}] completed mismatch"
+    );
+    assert_eq!(
+        metrics.total_failed(),
+        o.err_responses,
+        "[{tag}] failed mismatch"
+    );
+    assert_eq!(
+        metrics.rejected(),
+        o.rejected_at_admission,
+        "[{tag}] rejection counter mismatch"
+    );
+    assert_eq!(
+        metrics.total_completed() + metrics.total_failed() + metrics.rejected(),
+        o.submitted,
+        "[{tag}] submitted != completed + failed + rejected"
+    );
+    // Only routed requests reach the lanes (failed routes never leave
+    // the prep stage), and `executed` counts lane work whether the
+    // execution succeeded or not — so the race-free invariant is
+    // lane_sum == accepted - router-rejected, independent of backend.
+    let lane_sum: u64 = metrics.lane_summaries().iter().map(|l| l.executed).sum();
+    assert_eq!(
+        lane_sum,
+        o.accepted - o.invalid_accepted,
+        "[{tag}] lane counter mismatch"
+    );
+    if policy == AdmissionPolicy::Block {
+        assert_eq!(o.rejected_at_admission, 0, "[{tag}] Block must not shed");
+    }
+}
+
+#[test]
+fn stress_block_admission_four_lanes_tiny_queue() {
+    if !artifacts_present() {
+        return;
+    }
+    stress(AdmissionPolicy::Block, 4, 4, 4, 30);
+}
+
+#[test]
+fn stress_reject_admission_four_lanes_tiny_queue() {
+    if !artifacts_present() {
+        return;
+    }
+    stress(AdmissionPolicy::Reject, 4, 4, 4, 30);
+}
+
+#[test]
+fn stress_single_lane_both_policies() {
+    if !artifacts_present() {
+        return;
+    }
+    for policy in AdmissionPolicy::all() {
+        stress(policy, 1, 2, 2, 15);
+    }
+}
