@@ -3,7 +3,11 @@
 # Tier-1 verify (what CI gates on):      make check
 # Full artifact regeneration (needs jax): make artifacts
 
-.PHONY: build test check fmt clippy artifacts artifacts-golden bench-snapshot clean
+.PHONY: build test check fmt clippy artifacts artifacts-golden bench-snapshot \
+	serve loadgen check-artifacts clean
+
+# Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
+SERVE_ADDR ?= 127.0.0.1:7447
 
 build:
 	cargo build --release
@@ -26,6 +30,20 @@ artifacts:
 # Fixture set: goldens + manifest only, HLO elided (what is checked in).
 artifacts-golden:
 	cd python && python3 -m compile.aot --out-dir ../artifacts --golden-only
+
+# Expose the wire protocol over TCP (runs until killed).
+serve:
+	cargo run --release --bin gengnn -- serve --listen $(SERVE_ADDR)
+
+# Drive a running `make serve` with the open-loop load generator.
+loadgen:
+	cargo run --release --bin gengnn -- loadgen --addr $(SERVE_ADDR) \
+		--rps 200 --count 2000
+
+# Re-validate the checked-in golden/manifest fixtures (CI's
+# artifacts-integrity job).
+check-artifacts:
+	python3 python/tools/check_artifacts.py artifacts
 
 # Refresh the perf-trajectory anchor from the micro bench.
 # (cargo runs benches with cwd = rust/, so anchor the path to the repo root.)

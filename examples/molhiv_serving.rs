@@ -1,24 +1,28 @@
-//! End-to-end serving driver — the flagship example: all six molecular
-//! models compiled from their artifacts, then a 2,000-graph
-//! MolHIV-like stream served through the full coordinator stack
-//! (bounded ingest → prep workers → dispatch batcher → executor),
-//! reporting per-model latency and aggregate throughput. Python never
-//! runs here.
+//! End-to-end serving driver — the flagship example, now over the
+//! wire: all six molecular models compiled from their artifacts and
+//! exposed through the TCP front-end on loopback, then an open-loop
+//! MolHIV-like stream driven at a target request rate through the full
+//! network path (framed TCP → per-connection readers → bounded ingest
+//! → prep workers → dispatch batcher → executor lanes → demux →
+//! writers), reporting latency percentiles and aggregate throughput.
+//! Python never runs here — and neither does anything in-process: the
+//! client side only speaks the wire protocol.
 //!
 //! ```sh
-//! cargo run --release --example molhiv_serving [-- --count 2000 --lanes 4]
+//! cargo run --release --example molhiv_serving [-- --count 2000 --rps 400 --lanes 4]
 //! ```
 
-use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
-use gengnn::datagen::{molecular_graph, MolConfig};
+use gengnn::coordinator::{AdmissionPolicy, BatchPolicy, ServerConfig};
+use gengnn::net::{loadgen, LoadGenConfig, NetServer, NetServerConfig};
 use gengnn::util::cli::Args;
-use gengnn::util::rng::Rng;
 use gengnn::util::stats::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &[])?;
     let count = args.usize_or("count", 2000)?;
+    let rps = args.f64_or("rps", 400.0)?;
+    let connections = args.usize_or("connections", 4)?;
     let models: Vec<String> = args.list_or(
         "models",
         &["gcn", "gin", "gin_vn", "gat", "pna", "dgn"],
@@ -30,56 +34,46 @@ fn main() -> anyhow::Result<()> {
         models.len()
     );
     let t_compile = std::time::Instant::now();
-    let server = Server::start(ServerConfig {
-        models: models.clone(),
-        prep_workers: 3,
-        executor_lanes: lanes,
-        queue_capacity: 512,
-        admission: AdmissionPolicy::Block,
-        batch: BatchPolicy {
-            max_batch: 16,
-            sticky: true,
+    let net = NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        server: ServerConfig {
+            models: models.clone(),
+            prep_workers: 3,
+            executor_lanes: lanes,
+            queue_capacity: 512,
+            admission: AdmissionPolicy::Block,
+            batch: BatchPolicy {
+                max_batch: 16,
+                sticky: true,
+            },
+            ..ServerConfig::default()
         },
-        ..ServerConfig::default()
     })?;
+    let addr = net.local_addr();
     eprintln!(
-        "[molhiv_serving] ready in {} — streaming {count} graphs",
+        "[molhiv_serving] ready in {} — listening on {addr}, \
+         streaming {count} graphs @ {rps} rps over {connections} connection(s)",
         fmt_secs(t_compile.elapsed().as_secs_f64())
     );
 
-    let responses = server.responses();
-    let drain = std::thread::spawn(move || {
-        let (mut ok, mut err) = (0u64, 0u64);
-        while ok + err < count as u64 {
-            match responses.recv() {
-                Some(r) if r.is_ok() => ok += 1,
-                Some(_) => err += 1,
-                None => break,
-            }
-        }
-        (ok, err)
-    });
+    // The stream: raw molecular graphs over the wire, round-robin
+    // across models on a deterministic open-loop schedule — zero
+    // preprocessing, like the paper's consecutive raw-graph feed.
+    let report = loadgen::run(&LoadGenConfig {
+        addr: addr.to_string(),
+        rps,
+        count,
+        connections,
+        models,
+        seed: 0x1234,
+        graph_pool: 64,
+        drain_timeout: std::time::Duration::from_secs(60),
+    })?;
+    print!("{}", report.render());
 
-    // The stream: raw molecular graphs, round-robin across models —
-    // zero preprocessing, like the paper's consecutive raw-graph feed.
-    let mut rng = Rng::new(0x1234);
-    let t0 = std::time::Instant::now();
-    for i in 0..count {
-        let g = molecular_graph(&mut rng, &MolConfig::molhiv());
-        let model = &models[i % models.len()];
-        let (adm, _) = server.submit(model, g);
-        assert_eq!(adm, Admission::Accepted);
-    }
-    let (ok, err) = drain.join().unwrap();
-    let wall = t0.elapsed().as_secs_f64();
-
-    let metrics = server.shutdown();
+    let metrics = net.shutdown();
     println!("{}", metrics.render());
-    println!(
-        "stream: {count} graphs in {} → {:.0} graphs/s end-to-end (ok {ok}, err {err})",
-        fmt_secs(wall),
-        ok as f64 / wall
-    );
-    anyhow::ensure!(err == 0, "all requests must succeed");
+    anyhow::ensure!(report.reconciles(), "request accounting must reconcile");
+    anyhow::ensure!(report.failed == 0, "all requests must succeed");
     Ok(())
 }

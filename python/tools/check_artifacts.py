@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Artifacts-integrity check for CI: re-validate `artifacts/manifest.json`
+against the checked-in golden fixtures so a stale or hand-edited fixture
+set fails fast instead of silently skipping Rust tests.
+
+Checks, per manifest entry:
+  * the golden file exists, parses, and names the same model
+  * the golden graph fits the model envelope (n <= n_max, feature
+    widths match in_dim, edge indices in range)
+  * the captured output agrees with the declared output shape, and the
+    shape agrees with the model head (node_level -> [n_max * out_dim],
+    graph-level -> [out_dim])
+  * the eig vector is present exactly when the model consumes one, and
+    is padded to n_max
+  * input tensor slots follow the x/adj contract ([n_max, in_dim],
+    [n_max, n_max])
+
+Plus directory-level checks: every `*.golden.json` on disk is
+referenced by the manifest (no dead fixtures), the weight seed is the
+pinned one, and the core model zoo is complete.
+
+Usage: python3 python/tools/check_artifacts.py [artifacts_dir]
+Exits nonzero with a message per violation.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+CORE_MODELS = {"gcn", "gin", "gin_vn", "gat", "pna", "dgn", "dgn_large", "sage", "sgc"}
+PINNED_WEIGHT_SEED = 0
+
+
+def flat_len(v):
+    """Length of a possibly-nested numeric array; None for null."""
+    if v is None:
+        return None
+    if isinstance(v, (int, float)):
+        return 1
+    return sum(flat_len(e) or 0 for e in v)
+
+
+def check_numbers_finite(v, path, errors):
+    if isinstance(v, (int, float)):
+        if isinstance(v, float) and not math.isfinite(v):
+            errors.append(f"{path}: non-finite value {v}")
+    elif isinstance(v, list):
+        for i, e in enumerate(v):
+            check_numbers_finite(e, f"{path}[{i}]", errors)
+
+
+def check_model(art_dir: Path, m: dict, errors: list):
+    name = m.get("name", "<unnamed>")
+
+    def err(msg):
+        errors.append(f"{name}: {msg}")
+
+    for key in ("layers", "dim", "n_max", "in_dim", "out_dim"):
+        if not isinstance(m.get(key), int) or m[key] < 0:
+            err(f"manifest field {key!r} must be a non-negative integer")
+            return
+    if not isinstance(m.get("node_level"), bool):
+        err("manifest field 'node_level' must be a bool")
+        return
+
+    inputs = m.get("inputs")
+    if not isinstance(inputs, list) or len(inputs) < 2:
+        err("manifest must list at least the x and adj input slots")
+        return
+    in_names = [i.get("name") for i in inputs]
+    if inputs[0].get("shape") != [m["n_max"], m["in_dim"]]:
+        err(f"input x shape {inputs[0].get('shape')} != [{m['n_max']}, {m['in_dim']}]")
+    if inputs[1].get("shape") != [m["n_max"], m["n_max"]]:
+        err(f"input adj shape {inputs[1].get('shape')} != [n_max, n_max]")
+
+    golden_path = art_dir / m.get("golden", "")
+    if not golden_path.is_file():
+        err(f"golden file {golden_path.name} missing")
+        return
+    try:
+        g = json.loads(golden_path.read_text())
+    except json.JSONDecodeError as e:
+        err(f"golden file does not parse: {e}")
+        return
+
+    if g.get("model") != name:
+        err(f"golden names model {g.get('model')!r}")
+    n = g.get("n")
+    if not isinstance(n, int) or not 0 < n <= m["n_max"]:
+        err(f"golden graph n={n} outside (0, n_max={m['n_max']}]")
+        return
+    if flat_len(g.get("node_feat")) != n * m["in_dim"]:
+        err(
+            f"node_feat has {flat_len(g.get('node_feat'))} values, "
+            f"want n*in_dim = {n * m['in_dim']}"
+        )
+    for i, e in enumerate(g.get("edges", [])):
+        if (
+            not isinstance(e, list)
+            or len(e) != 2
+            or not all(isinstance(v, int) and 0 <= v < n for v in e)
+        ):
+            err(f"edge {i} = {e} out of range for n={n}")
+            break
+
+    needs_eig = "eig" in in_names
+    has_eig = g.get("eig") is not None
+    if needs_eig != has_eig:
+        err(f"eig present={has_eig} but model consumes eig={needs_eig}")
+    if has_eig and flat_len(g["eig"]) != m["n_max"]:
+        err(f"eig has {flat_len(g['eig'])} values, want n_max={m['n_max']}")
+
+    out_len = flat_len(g.get("output"))
+    shape = g.get("output_shape")
+    if not isinstance(shape, list) or out_len != math.prod(shape):
+        err(f"output has {out_len} values but output_shape={shape}")
+    want_shape = [m["n_max"], m["out_dim"]] if m["node_level"] else [m["out_dim"]]
+    if shape != want_shape:
+        err(f"output_shape {shape} != {want_shape} for node_level={m['node_level']}")
+    check_numbers_finite(g.get("output"), f"{name}.output", errors)
+
+
+def main() -> int:
+    art_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts")
+    manifest_path = art_dir / "manifest.json"
+    if not manifest_path.is_file():
+        print(f"FAIL: {manifest_path} missing", file=sys.stderr)
+        return 1
+    try:
+        manifest = json.loads(manifest_path.read_text())
+    except json.JSONDecodeError as e:
+        print(f"FAIL: manifest does not parse: {e}", file=sys.stderr)
+        return 1
+
+    errors: list = []
+    if manifest.get("version") != 1:
+        errors.append(f"manifest version {manifest.get('version')} != 1")
+    if manifest.get("weight_seed") != PINNED_WEIGHT_SEED:
+        errors.append(
+            f"weight_seed {manifest.get('weight_seed')} != pinned {PINNED_WEIGHT_SEED} "
+            "(the Rust native executor regenerates weights from this seed; "
+            "changing it invalidates every golden)"
+        )
+    models = manifest.get("models")
+    if not isinstance(models, list) or not models:
+        errors.append("manifest lists no models")
+        models = []
+
+    names = [m.get("name") for m in models]
+    if len(set(names)) != len(names):
+        errors.append(f"duplicate model names: {names}")
+    missing = CORE_MODELS - set(names)
+    if missing:
+        errors.append(f"core models missing from manifest: {sorted(missing)}")
+
+    for m in models:
+        check_model(art_dir, m, errors)
+
+    referenced = {m.get("golden") for m in models}
+    for p in sorted(art_dir.glob("*.golden.json")):
+        if p.name not in referenced:
+            errors.append(
+                f"{p.name}: golden on disk but not referenced by the manifest "
+                "(dead fixture — tests will silently never load it)"
+            )
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"OK: {len(models)} models validated against {art_dir}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

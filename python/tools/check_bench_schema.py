@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Validate a `BENCH_*.json` perf snapshot against the trajectory-anchor
+schema (the format `util::bench::results_to_json` emits and
+`BENCH_seed.json` anchors).
+
+CI's bench-smoke job runs the micro benches in quick mode with
+`GENGNN_BENCH_JSON` and feeds the output through this check, so a
+refactor that breaks the snapshot writer (or silently empties the
+result list) fails the build instead of producing an unusable
+trajectory point.
+
+Usage:
+  python3 python/tools/check_bench_schema.py MEASURED.json \
+      [--schema BENCH_seed.json] [--require-measured]
+
+The schema file is only consulted for its top-level key set (the
+anchor contract); the measured file must carry the same keys. With
+--require-measured, status must be "measured" and the result list
+non-empty (the seed anchors themselves are allowed to be unmeasured —
+they were written in containers without a Rust toolchain).
+"""
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+RESULT_KEYS = {"name", "iters", "mean_s", "p50_s", "min_s"}
+STATUSES = {"measured", "unmeasured"}
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_results(results, label: str) -> None:
+    if not isinstance(results, list):
+        fail(f"{label}: 'results' must be a list (or null for unmeasured anchors)")
+    names = []
+    for i, r in enumerate(results):
+        where = f"{label}: results[{i}]"
+        if not isinstance(r, dict):
+            fail(f"{where} is not an object")
+        missing = RESULT_KEYS - r.keys()
+        if missing:
+            fail(f"{where} missing keys {sorted(missing)}")
+        if not isinstance(r["name"], str) or not r["name"]:
+            fail(f"{where}: 'name' must be a non-empty string")
+        if not isinstance(r["iters"], int) or isinstance(r["iters"], bool) or r["iters"] < 0:
+            fail(f"{where}: 'iters' must be a non-negative integer, got {r['iters']!r}")
+        for k in ("mean_s", "p50_s", "min_s"):
+            v = r[k]
+            if not is_number(v) or not math.isfinite(v) or v < 0:
+                fail(f"{where}: {k} must be a finite non-negative number, got {v!r}")
+        if r["min_s"] > r["mean_s"] * 1.01 + 1e-12:
+            fail(f"{where}: min_s {r['min_s']} exceeds mean_s {r['mean_s']}")
+        names.append(r["name"])
+    if len(set(names)) != len(names):
+        fail(f"{label}: duplicate result names")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", type=Path)
+    ap.add_argument("--schema", type=Path, default=Path("BENCH_seed.json"))
+    ap.add_argument(
+        "--require-measured",
+        action="store_true",
+        help="status must be 'measured' with a non-empty result list",
+    )
+    args = ap.parse_args()
+
+    try:
+        measured = json.loads(args.measured.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.measured}: {e}")
+    try:
+        schema = json.loads(args.schema.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.schema}: {e}")
+
+    if not isinstance(measured, dict) or not isinstance(schema, dict):
+        fail("both files must be JSON objects")
+
+    # The anchor contract: every required key of the schema file must be
+    # present (extra annotation keys like 'note'/'command' are optional).
+    required = {"bench", "status", "results"}
+    if not required <= schema.keys():
+        fail(f"{args.schema}: anchor itself lacks required keys {sorted(required)}")
+    missing = required - measured.keys()
+    if missing:
+        fail(f"{args.measured}: missing required keys {sorted(missing)}")
+
+    if not isinstance(measured["bench"], str) or not measured["bench"]:
+        fail("'bench' must be a non-empty string")
+    if measured["status"] not in STATUSES:
+        fail(f"'status' must be one of {sorted(STATUSES)}, got {measured['status']!r}")
+
+    if measured["results"] is not None:
+        check_results(measured["results"], str(args.measured))
+
+    if args.require_measured:
+        if measured["status"] != "measured":
+            fail(f"status is {measured['status']!r}, expected 'measured'")
+        if not measured["results"]:
+            fail("measured snapshot has an empty result list")
+
+    n = len(measured["results"] or [])
+    print(f"OK: {args.measured} matches the BENCH snapshot schema ({n} results)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,603 @@
+#!/usr/bin/env python3
+"""No-toolchain validation harness for `rust/src/net/`: a Python
+replica speaking the exact wire format (see the frame layout in
+`rust/src/net/proto.rs`) with the same thread topology -- accept loop,
+per-connection reader/writer threads, response demux with try-send
+drop-on-full outboxes, bounded ingest queue, executor lanes -- and the
+same open-loop loadgen structure (scheduled arrivals, pending map,
+submitted = completed + rejected + failed + lost reconciliation).
+
+Trials cover: Block-mode loadgen reconciliation over real loopback
+sockets, Reject-mode burst shedding on a surviving connection,
+decode-error answering/counting, shutdown with unread in-flight
+responses, and a stalled reader not starving other connections.
+
+Usage: python3 python/tools/net_replica.py [trials]
+
+This validates the *design* (deadlock freedom, accounting, protocol
+self-consistency); the Rust implementation itself is gated by
+`cargo test --release --test net_e2e` where a toolchain exists.
+"""
+import json
+import queue
+import socket
+import struct
+import threading
+import time
+from collections import defaultdict
+
+VERSION = 1
+KIND_REQ, KIND_RESP = 1, 2
+OK, REJECTED, ERROR, BADREQ = 0, 1, 2, 3
+MAX_FRAME = 64 << 20
+
+
+def fnv1a(body: bytes) -> int:
+    h = 0x811C9DC5
+    for b in body:
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def seal(kind: int, body: bytes) -> bytes:
+    payload = bytes([VERSION, kind]) + struct.pack("<I", fnv1a(body)) + body
+    return struct.pack("<I", len(payload)) + payload
+
+
+def encode_request(rid, model, graph):
+    n, edges, node_feat, f_node, edge_feat, f_edge = graph
+    body = struct.pack("<Q", rid)
+    mb = model.encode()
+    body += struct.pack("<H", len(mb)) + mb
+    body += struct.pack("<IHHI", n, f_node, f_edge, len(edges))
+    for s, t in edges:
+        body += struct.pack("<II", s, t)
+    body += struct.pack(f"<{len(node_feat)}f", *node_feat)
+    body += struct.pack(f"<{len(edge_feat)}f", *edge_feat)
+    return seal(KIND_REQ, body)
+
+
+def encode_response(rid, model, status, output=(), error=""):
+    mb = model.encode()
+    body = struct.pack("<Q", rid) + struct.pack("<H", len(mb)) + mb + bytes([status])
+    if status == OK:
+        body += struct.pack("<I", len(output)) + struct.pack(f"<{len(output)}f", *output)
+    else:
+        eb = error.encode()
+        body += struct.pack("<I", len(eb)) + eb
+    return seal(KIND_RESP, body)
+
+
+def decode_frame(payload: bytes):
+    assert len(payload) >= 6, "frame too short"
+    if payload[0] != VERSION:
+        raise ValueError("unsupported protocol version")
+    kind = payload[1]
+    want = struct.unpack_from("<I", payload, 2)[0]
+    body = payload[6:]
+    if want != fnv1a(body):
+        raise ValueError("checksum mismatch")
+    i = 0
+
+    def take(n):
+        nonlocal i
+        if len(body) - i < n:
+            raise ValueError("truncated frame")
+        s = body[i : i + n]
+        i += n
+        return s
+
+    if kind == KIND_REQ:
+        rid = struct.unpack("<Q", take(8))[0]
+        mlen = struct.unpack("<H", take(2))[0]
+        model = take(mlen).decode()
+        n, f_node, f_edge, ne = struct.unpack("<IHHI", take(12))
+        edges = [struct.unpack("<II", take(8)) for _ in range(ne)]
+        node_feat = list(struct.unpack(f"<{n*f_node}f", take(4 * n * f_node)))
+        edge_feat = list(struct.unpack(f"<{ne*f_edge}f", take(4 * ne * f_edge)))
+        if i != len(body):
+            raise ValueError("trailing bytes")
+        for s, t in edges:
+            if s >= n or t >= n:
+                raise ValueError("edge out of range")
+        return ("req", rid, model, (n, edges, node_feat, f_node, edge_feat, f_edge))
+    elif kind == KIND_RESP:
+        rid = struct.unpack("<Q", take(8))[0]
+        mlen = struct.unpack("<H", take(2))[0]
+        model = take(mlen).decode()
+        status = take(1)[0]
+        if status == OK:
+            olen = struct.unpack("<I", take(4))[0]
+            out = list(struct.unpack(f"<{olen}f", take(4 * olen)))
+            err = ""
+        else:
+            elen = struct.unpack("<I", take(4))[0]
+            out, err = [], take(elen).decode()
+        if i != len(body):
+            raise ValueError("trailing bytes")
+        return ("resp", rid, model, status, out, err)
+    raise ValueError("unknown kind")
+
+
+def read_frame(sockfile):
+    hdr = sockfile.read(4)
+    if not hdr:
+        return None
+    while len(hdr) < 4:
+        more = sockfile.read(4 - len(hdr))
+        if not more:
+            raise IOError("EOF in length prefix")
+        hdr += more
+    (ln,) = struct.unpack("<I", hdr)
+    if ln < 6 or ln > MAX_FRAME:
+        raise ValueError("bad length")
+    payload = b""
+    while len(payload) < ln:
+        chunk = sockfile.read(ln - len(payload))
+        if not chunk:
+            raise IOError("EOF mid frame")
+        payload += chunk
+    return payload
+
+
+class Closed(Exception):
+    pass
+
+
+class Channel:
+    """Bounded MPMC channel with close semantics (drain then None)."""
+
+    def __init__(self, cap):
+        self.q = queue.Queue(maxsize=cap)
+        self.closed = threading.Event()
+
+    def send(self, v):
+        while True:
+            if self.closed.is_set():
+                raise Closed()
+            try:
+                self.q.put(v, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def try_send(self, v):
+        if self.closed.is_set():
+            return False
+        try:
+            self.q.put_nowait(v)
+            return True
+        except queue.Full:
+            return False
+
+    def recv(self):
+        while True:
+            try:
+                return self.q.get(timeout=0.05)
+            except queue.Empty:
+                if self.closed.is_set():
+                    return None
+
+    def close(self):
+        self.closed.set()
+
+    def empty(self):
+        return self.q.empty()
+
+
+class Server:
+    """Replica of coordinator Server + NetServer with the same topology."""
+
+    def __init__(self, addr, queue_cap=256, reject=False, lanes=2, exec_delay=0.0005, outbox_cap=1024):
+        self.ingest = Channel(queue_cap)
+        self.responses = Channel(max(queue_cap, 1024))
+        self.reject = reject
+        self.metrics = defaultdict(int)
+        self.next_id = 0
+        self.id_lock = threading.Lock()
+        self.exec_delay = exec_delay
+        self.outbox_cap = outbox_cap
+        self.stop = threading.Event()
+        self.routes = {}
+        self.routes_lock = threading.Lock()
+        self.conn_threads = []
+        self.conn_socks = {}
+        self.socks_lock = threading.Lock()
+        # lanes (collapsing prep+dispatch: prep is pass-through here)
+        self.lanes = [threading.Thread(target=self._lane, daemon=True) for _ in range(lanes)]
+        for t in self.lanes:
+            t.start()
+        self.demux_t = threading.Thread(target=self._demux, daemon=True)
+        self.demux_t.start()
+        self.listener = socket.create_server(addr)
+        self.local_addr = self.listener.getsockname()
+        self.accept_t = threading.Thread(target=self._accept, daemon=True)
+        self.accept_t.start()
+
+    def reserve_id(self):
+        with self.id_lock:
+            i = self.next_id
+            self.next_id += 1
+            return i
+
+    def submit_with_id(self, rid, model, graph):
+        req = (rid, model, graph, time.monotonic())
+        if self.reject:
+            if self.ingest.try_send(req):
+                return True
+            self.metrics["rejected"] += 1
+            return False
+        try:
+            self.ingest.send(req)
+            return True
+        except Closed:
+            self.metrics["rejected"] += 1
+            return False
+
+    def _lane(self):
+        while True:
+            item = self.ingest.recv()
+            if item is None:
+                return
+            rid, model, graph, t_sub = item
+            time.sleep(self.exec_delay)  # "inference"
+            if model == "bad":
+                out = ("err", "model not served")
+            else:
+                out = ("ok", [sum(graph[2]) + len(graph[1])])
+            try:
+                self.responses.send((rid, model, out, t_sub))
+            except Closed:
+                return
+
+    def _demux(self):
+        while True:
+            item = self.responses.recv()
+            if item is None:
+                return
+            rid, model, out, t_sub = item
+            self.metrics["e2e_count"] += 1
+            with self.routes_lock:
+                entry = self.routes.pop(rid, None)
+            if entry is None:
+                continue
+            outbox, client_id = entry
+            self.metrics["in_flight"] -= 1
+            if out[0] == "ok":
+                wire = encode_response(client_id, model, OK, out[1])
+                self.metrics["completed"] += 1
+            else:
+                wire = encode_response(client_id, model, ERROR, error=out[1])
+                self.metrics["failed"] += 1
+            if not outbox.try_send(wire):
+                self.metrics["responses_dropped"] += 1
+
+    def _accept(self):
+        conn_no = 0
+        while True:
+            try:
+                sock, _ = self.listener.accept()
+            except OSError:
+                return
+            if self.stop.is_set():
+                sock.close()
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self.metrics["conns_accepted"] += 1
+            self.metrics["conns_open"] += 1
+            with self.socks_lock:
+                self.conn_socks[conn_no] = sock
+            outbox = Channel(self.outbox_cap)
+            wt = threading.Thread(target=self._writer, args=(sock, outbox), daemon=True)
+            rt = threading.Thread(target=self._reader, args=(conn_no, sock, outbox), daemon=True)
+            wt.start()
+            rt.start()
+            self.conn_threads += [wt, rt]
+            conn_no += 1
+
+    def _writer(self, sock, outbox):
+        try:
+            while True:
+                frame = outbox.recv()
+                if frame is None:
+                    return
+                sock.sendall(frame)
+        except OSError:
+            pass
+
+    def _reader(self, conn_no, sock, outbox):
+        f = sock.makefile("rb")
+        try:
+            while True:
+                try:
+                    payload = read_frame(f)
+                except (IOError, ValueError, OSError):
+                    break
+                if payload is None:
+                    break
+                try:
+                    kind, rid, model, graph = decode_frame(payload)
+                    if kind != "req":
+                        raise ValueError("response frame sent to server")
+                except ValueError as e:
+                    self.metrics["decode_errors"] += 1
+                    try:
+                        outbox.send(encode_response(0, "", BADREQ, error=str(e)))
+                    except Closed:
+                        pass
+                    continue
+                server_id = self.reserve_id()
+                with self.routes_lock:
+                    self.routes[server_id] = (outbox, rid)
+                self.metrics["in_flight"] += 1
+                if not self.submit_with_id(server_id, model, graph):
+                    with self.routes_lock:
+                        self.routes.pop(server_id, None)
+                    self.metrics["in_flight"] -= 1
+                    try:
+                        outbox.send(encode_response(rid, model, REJECTED, error="ingest queue full"))
+                    except Closed:
+                        pass
+        finally:
+            outbox.close()
+            with self.socks_lock:
+                self.conn_socks.pop(conn_no, None)
+            self.metrics["conns_open"] -= 1
+
+    def shutdown(self):
+        self.stop.set()
+        try:
+            socket.create_connection(self.local_addr, timeout=1).close()
+        except OSError:
+            pass
+        self.listener.close()
+        self.accept_t.join(5)
+        assert not self.accept_t.is_alive(), "accept loop stuck"
+        with self.socks_lock:
+            socks = list(self.conn_socks.values())
+        for s in socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        for t in self.conn_threads:
+            t.join(5)
+            assert not t.is_alive(), "conn thread stuck"
+        self.ingest.close()
+        for t in self.lanes:
+            t.join(5)
+            assert not t.is_alive(), "lane stuck"
+        self.responses.close()
+        self.demux_t.join(5)
+        assert not self.demux_t.is_alive(), "demux stuck"
+        return self.metrics
+
+
+def mol_graph(seed):
+    import random
+
+    r = random.Random(seed)
+    n = r.randint(4, 25)
+    edges = []
+    for v in range(1, n):
+        u = r.randrange(v)
+        edges += [(u, v), (v, u)]
+    node_feat = [float(r.randint(0, 3)) for _ in range(n * 9)]
+    return (n, edges, node_feat, 9, [], 0)
+
+
+def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
+    pending = {}
+    plock = threading.Lock()
+    counters = defaultdict(int)
+    clock = threading.Lock()
+    latencies = []
+    written = [0] * connections
+    writer_done = [False] * connections
+    t0 = time.monotonic()
+    threads = []
+    graphs = [mol_graph(s) for s in range(16)]
+    for c in range(connections):
+        sock = socket.create_connection(addr)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(drain_timeout)
+        rf = sock.makefile("rb")
+
+        def writer(c=c, sock=sock):
+            for k in range(c, count, connections):
+                sched = t0 + k / rps
+                now = time.monotonic()
+                if sched > now:
+                    time.sleep(sched - now)
+                model = models[k % len(models)]
+                frame = encode_request(k, model, graphs[(k // len(models)) % len(graphs)])
+                with plock:
+                    pending[k] = sched
+                written[c] += 1
+                try:
+                    sock.sendall(frame)
+                except OSError:
+                    with plock:
+                        pending.pop(k, None)
+                    written[c] -= 1
+                    break
+            writer_done[c] = True
+
+        def reader(c=c, rf=rf):
+            received = 0
+            while True:
+                # Only park in a socket read when a response is owed
+                # (written counts before sendall), mirroring the Rust
+                # reader: the writer_done race cannot strand us in a
+                # long blocking read.
+                if received >= written[c]:
+                    if writer_done[c]:
+                        break
+                    time.sleep(0.001)
+                    continue
+                try:
+                    payload = read_frame(rf)
+                except (IOError, OSError, ValueError, socket.timeout):
+                    break
+                if payload is None:
+                    break
+                _, rid, model, status, out, err = decode_frame(payload)
+                received += 1
+                with plock:
+                    sched = pending.pop(rid, None)
+                with clock:
+                    if status == OK:
+                        counters["completed"] += 1
+                        if sched is not None:
+                            latencies.append(time.monotonic() - sched)
+                    elif status == REJECTED:
+                        counters["rejected"] += 1
+                    else:
+                        counters["failed"] += 1
+
+        wt = threading.Thread(target=writer, daemon=True)
+        rt = threading.Thread(target=reader, daemon=True)
+        wt.start()
+        rt.start()
+        threads += [wt, rt]
+    deadline = time.monotonic() + drain_timeout + count / rps + 30
+    for t in threads:
+        t.join(max(0.1, deadline - time.monotonic()))
+        assert not t.is_alive(), "loadgen thread stuck"
+    submitted = sum(written)
+    lost = len(pending)
+    wall = time.monotonic() - t0
+    return dict(
+        submitted=submitted,
+        lost=lost,
+        wall=wall,
+        latencies=latencies,
+        **counters,
+    )
+
+
+def trial_block():
+    srv = Server(("127.0.0.1", 0), queue_cap=64, reject=False, lanes=2, exec_delay=0.0002)
+    rep = loadgen(srv.local_addr, rps=800, count=300, connections=3, models=["gcn", "sgc"])
+    m = srv.shutdown()
+    assert rep["submitted"] == 300, rep
+    assert rep["completed"] == 300, rep
+    assert rep.get("rejected", 0) == 0 and rep.get("failed", 0) == 0 and rep["lost"] == 0, rep
+    assert m["completed"] == 300 and m["in_flight"] == 0 and m["conns_open"] == 0, dict(m)
+    assert len(rep["latencies"]) == 300
+    return "block ok"
+
+
+def trial_reject_burst():
+    srv = Server(("127.0.0.1", 0), queue_cap=2, reject=True, lanes=1, exec_delay=0.002)
+    sock = socket.create_connection(srv.local_addr)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(20)
+    rf = sock.makefile("rb")
+    burst = 40
+    for i in range(burst):
+        sock.sendall(encode_request(i, "gcn", mol_graph(i)))
+    ok = rej = 0
+    seen = set()
+    for _ in range(burst):
+        payload = read_frame(rf)
+        assert payload is not None, "connection dropped mid burst"
+        _, rid, model, status, out, err = decode_frame(payload)
+        assert rid not in seen
+        seen.add(rid)
+        if status == OK:
+            ok += 1
+        elif status == REJECTED:
+            rej += 1
+        else:
+            raise AssertionError(f"unexpected status {status} {err}")
+    assert ok >= 1 and rej >= 1 and ok + rej == burst, (ok, rej)
+    # connection still alive
+    sock.sendall(encode_request(1000, "gcn", mol_graph(7)))
+    payload = read_frame(rf)
+    _, rid, *_ = decode_frame(payload)
+    assert rid == 1000
+    sock.close()
+    m = srv.shutdown()
+    assert m["rejected"] == rej, (m["rejected"], rej)
+    return f"reject ok (ok={ok} rej={rej})"
+
+
+def trial_decode_error():
+    srv = Server(("127.0.0.1", 0))
+    sock = socket.create_connection(srv.local_addr)
+    sock.settimeout(10)
+    rf = sock.makefile("rb")
+    frame = bytearray(encode_request(1, "gcn", mol_graph(1)))
+    frame[4] = 99  # version byte
+    sock.sendall(bytes(frame))
+    payload = read_frame(rf)
+    _, rid, model, status, out, err = decode_frame(payload)
+    assert status == BADREQ and "version" in err, (status, err)
+    # still serving
+    sock.sendall(encode_request(2, "gcn", mol_graph(2)))
+    _, rid, model, status, out, err = decode_frame(read_frame(rf))
+    assert rid == 2 and status == OK
+    # unknown model -> typed error
+    sock.sendall(encode_request(3, "bad", mol_graph(3)))
+    _, rid, model, status, out, err = decode_frame(read_frame(rf))
+    assert rid == 3 and status == ERROR, (rid, status)
+    sock.close()
+    m = srv.shutdown()
+    assert m["decode_errors"] == 1
+    return "decode-error ok"
+
+
+def trial_shutdown_with_open_conns_and_inflight():
+    srv = Server(("127.0.0.1", 0), queue_cap=8, lanes=1, exec_delay=0.005)
+    sock = socket.create_connection(srv.local_addr)
+    sock.settimeout(10)
+    for i in range(6):
+        sock.sendall(encode_request(i, "gcn", mol_graph(i)))
+    time.sleep(0.01)  # let some land in flight
+    # client walks away without reading; server must still shut down clean
+    m = srv.shutdown()
+    assert m["conns_open"] == 0
+    sock.close()
+    return "shutdown-with-inflight ok"
+
+
+
+def trial_stalled_reader_does_not_starve_others():
+    srv = Server(("127.0.0.1", 0), queue_cap=64, lanes=2, exec_delay=0.0005, outbox_cap=8)
+    a = socket.create_connection(srv.local_addr)
+    for i in range(60):
+        a.sendall(encode_request(i, "gcn", mol_graph(i)))
+    time.sleep(0.3)
+    b = socket.create_connection(srv.local_addr)
+    b.settimeout(5)
+    rfb = b.makefile("rb")
+    t0 = time.monotonic()
+    for i in range(10):
+        b.sendall(encode_request(1000 + i, "gcn", mol_graph(i)))
+        _, rid, model, status, out, err = decode_frame(read_frame(rfb))
+        assert rid == 1000 + i and status == OK
+    dt = time.monotonic() - t0
+    assert dt < 3, "B starved behind stalled A"
+    a.close()
+    b.close()
+    m = srv.shutdown()
+    return "stalled-reader ok (B served in %.0fms, dropped=%d)" % (dt * 1000, m["responses_dropped"])
+
+
+if __name__ == "__main__":
+    import sys
+
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 3
+    for i in range(trials):
+        print(
+            i,
+            trial_block(),
+            trial_reject_burst(),
+            trial_decode_error(),
+            trial_shutdown_with_open_conns_and_inflight(),
+            trial_stalled_reader_does_not_starve_others(),
+            flush=True,
+        )
+    print("ALL REPLICA TRIALS PASSED")

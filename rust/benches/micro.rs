@@ -5,7 +5,9 @@
 //! Run: `cargo bench --bench micro`
 //!
 //! Set `GENGNN_BENCH_JSON=<path>` to also write the results as a
-//! `BENCH_*.json` snapshot (the perf-trajectory anchor format).
+//! `BENCH_*.json` snapshot (the perf-trajectory anchor format), and
+//! `GENGNN_BENCH_QUICK=1` for a seconds-long smoke run (CI's
+//! bench-smoke job) that still emits a schema-valid snapshot.
 
 use gengnn::coordinator::{Server, ServerConfig};
 use gengnn::datagen::{citation, molecular, MolConfig};
@@ -15,47 +17,52 @@ use gengnn::util::bench::{bench, black_box, results_to_json, section, BenchResul
 use gengnn::util::rng::Rng;
 
 fn main() {
+    // Quick mode (CI's bench-smoke job): slash warmup/iteration counts
+    // so the whole suite finishes in seconds while still emitting a
+    // schema-valid `GENGNN_BENCH_JSON` snapshot.
+    let quick = std::env::var_os("GENGNN_BENCH_QUICK").is_some();
+    let q = |n: usize| if quick { (n / 50).max(2) } else { n };
     let mut results: Vec<BenchResult> = Vec::new();
     let mol = molecular::molecular_graph(&mut Rng::new(1), &MolConfig::molhiv());
     let cora = citation::dataset(citation::CitationDataset::Cora, 1);
 
     section("graph ingest (paper §3.2, unified GraphBatch path)");
-    results.push(bench("coo_to_csr/molecular(25)", 100, 2000, || {
+    results.push(bench("coo_to_csr/molecular(25)", q(100), q(2000), || {
         black_box(Csr::from_coo(&mol))
     }));
-    results.push(bench("coo_to_csc/molecular(25)", 100, 2000, || {
+    results.push(bench("coo_to_csc/molecular(25)", q(100), q(2000), || {
         black_box(Csc::from_coo(&mol))
     }));
     // Note: ingest consumes the graph, so this number includes the
     // clone — labeled accordingly so the snapshot stays comparable.
-    results.push(bench("graph_batch_ingest+clone/molecular(25)", 100, 2000, || {
+    results.push(bench("graph_batch_ingest+clone/molecular(25)", q(100), q(2000), || {
         black_box(GraphBatch::ingest_unchecked(mol.clone()).converter_cycles)
     }));
-    results.push(bench("coo_to_csr/cora(2708)", 5, 100, || {
+    results.push(bench("coo_to_csr/cora(2708)", q(5), q(100), || {
         black_box(Csr::from_coo(&cora))
     }));
 
     section("densification (runtime hot path)");
     let mut dense = DenseGraph::from_coo(&mol, 64, true).unwrap();
-    results.push(bench("densify_fresh/64pad+edge_attr", 50, 1000, || {
+    results.push(bench("densify_fresh/64pad+edge_attr", q(50), q(1000), || {
         black_box(DenseGraph::from_coo(&mol, 64, true).unwrap())
     }));
-    results.push(bench("densify_refill/64pad+edge_attr", 50, 2000, || {
+    results.push(bench("densify_refill/64pad+edge_attr", q(50), q(2000), || {
         dense.fill_from(&mol).unwrap();
         black_box(dense.n_real)
     }));
 
     section("spectral (DGN prep)");
-    results.push(bench("fiedler/molecular(25)", 20, 500, || {
+    results.push(bench("fiedler/molecular(25)", q(20), q(500), || {
         black_box(fiedler_vector(&mol, 400, 1e-9).iterations)
     }));
     let cite_small = citation::dataset_scaled(citation::CitationDataset::Cora, 2, 300, 16);
-    results.push(bench("fiedler/citation(300)", 5, 100, || {
+    results.push(bench("fiedler/citation(300)", q(5), q(100), || {
         black_box(fiedler_vector(&cite_small, 400, 1e-9).iterations)
     }));
 
     section("datagen");
-    results.push(bench("molecular_graph", 100, 2000, || {
+    results.push(bench("molecular_graph", q(100), q(2000), || {
         let mut rng = Rng::new(7);
         black_box(molecular::molecular_graph(&mut rng, &MolConfig::molhiv()).n)
     }));
@@ -66,20 +73,20 @@ fn main() {
             let meta = artifacts.model("gin").unwrap().clone();
             let batch = GraphBatch::ingest_unchecked(mol.clone());
             let mut pack = InputPack::new(&meta);
-            results.push(bench("input_pack_fill/gin(64pad)", 20, 500, || {
+            results.push(bench("input_pack_fill/gin(64pad)", q(20), q(500), || {
                 pack.fill(&batch, None).unwrap();
                 black_box(pack.n_real())
             }));
             pack.fill(&batch, None).unwrap();
-            results.push(bench("input_pack_staged/gin", 20, 500, || {
+            results.push(bench("input_pack_staged/gin", q(20), q(500), || {
                 black_box(pack.staged_inputs(&meta).unwrap().len())
             }));
             let mut engine = Engine::load(&artifacts, &["gcn"]).unwrap();
             black_box(engine.infer("gcn", &mol).unwrap());
-            results.push(bench("engine_infer/gcn", 5, 50, || {
+            results.push(bench("engine_infer/gcn", q(5), q(50), || {
                 black_box(engine.infer("gcn", &mol).unwrap()[0])
             }));
-            results.push(bench("engine_infer_batch/gcn", 5, 50, || {
+            results.push(bench("engine_infer_batch/gcn", q(5), q(50), || {
                 black_box(engine.infer_batch("gcn", &batch, None).unwrap()[0])
             }));
         }
@@ -107,7 +114,7 @@ fn main() {
                 })
                 .expect("server start");
                 let responses = server.responses();
-                results.push(bench(&format!("lanes_scaling/{lanes}"), 1, 10, || {
+                results.push(bench(&format!("lanes_scaling/{lanes}"), 1, q(10), || {
                     for (i, g) in stream.iter().enumerate() {
                         let model = if i % 2 == 0 { "gcn" } else { "gin" };
                         server.submit(model, g.clone());

@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use crate::util::stats::{fmt_secs, Sample};
+use crate::util::stats::{fmt_secs, LatencyHistogram, Sample};
 
 #[derive(Default)]
 struct ModelMetrics {
@@ -57,12 +57,38 @@ pub struct LaneSummary {
     pub busy_secs: f64,
 }
 
+/// Wire front-end counters, updated lock-free by the accept loop,
+/// connection readers, and the response demux. `connections_open` and
+/// `requests_in_flight` are gauges (incremented and decremented);
+/// everything else is monotonic.
+#[derive(Default)]
+pub struct NetCounters {
+    /// Completed `accept(2)` calls — counted before connection setup,
+    /// so this includes connections later dropped during setup under
+    /// resource pressure (`connections_open` is rolled back for those).
+    pub connections_accepted: AtomicU64,
+    /// Currently-open connections (gauge).
+    pub connections_open: AtomicU64,
+    /// Frames that failed to decode (bad version, checksum, truncation).
+    pub decode_errors: AtomicU64,
+    /// Wire requests admitted but not yet answered (gauge).
+    pub requests_in_flight: AtomicU64,
+    /// Responses dropped because a connection's outbox was full (the
+    /// client stopped reading) — the demux never blocks on one stalled
+    /// connection at the expense of the others.
+    pub responses_dropped: AtomicU64,
+}
+
 /// Thread-safe metrics registry shared across server stages.
 pub struct Metrics {
     shards: RwLock<BTreeMap<String, Mutex<ModelMetrics>>>,
     lanes: RwLock<Vec<Arc<LaneCounters>>>,
     started: Instant,
     rejected: AtomicU64,
+    net: NetCounters,
+    /// End-to-end latency of every completed request, log-bucketed so
+    /// the distribution stays bounded under production-length streams.
+    e2e: LatencyHistogram,
 }
 
 /// A point-in-time latency/throughput summary for one model.
@@ -84,7 +110,25 @@ impl Metrics {
             lanes: RwLock::new(Vec::new()),
             started: Instant::now(),
             rejected: AtomicU64::new(0),
+            net: NetCounters::default(),
+            e2e: LatencyHistogram::new(),
         }
+    }
+
+    /// The wire front-end's counter block.
+    pub fn net(&self) -> &NetCounters {
+        &self.net
+    }
+
+    /// Record one completed request into the end-to-end latency
+    /// histogram (the p50/p95/p99 source).
+    pub fn record_e2e_latency(&self, secs: f64) {
+        self.e2e.record(secs);
+    }
+
+    /// The end-to-end latency histogram.
+    pub fn e2e_histogram(&self) -> &LatencyHistogram {
+        &self.e2e
     }
 
     /// Pre-create a model's shard so hot-path recording never needs the
@@ -218,6 +262,19 @@ impl Metrics {
                 fmt_secs(l.busy_secs),
             ));
         }
+        if !self.e2e.is_empty() {
+            out.push_str(&format!("e2e latency: {}\n", self.e2e.render_quantiles()));
+        }
+        if self.net.connections_accepted.load(Ordering::Relaxed) > 0 {
+            out.push_str(&format!(
+                "net: {} conns accepted ({} open), {} decode errors, {} in flight, {} dropped\n",
+                self.net.connections_accepted.load(Ordering::Relaxed),
+                self.net.connections_open.load(Ordering::Relaxed),
+                self.net.decode_errors.load(Ordering::Relaxed),
+                self.net.requests_in_flight.load(Ordering::Relaxed),
+                self.net.responses_dropped.load(Ordering::Relaxed),
+            ));
+        }
         out.push_str(&format!(
             "throughput {:.1} graphs/s, rejected {}\n",
             self.throughput(),
@@ -293,6 +350,27 @@ mod tests {
         assert!((ls[1].busy_secs - 1.5e-3).abs() < 1e-12);
         assert_eq!(ls[0].executed, 0);
         assert!(m.render().contains("lane"));
+    }
+
+    #[test]
+    fn net_counters_and_e2e_histogram_render() {
+        let m = Metrics::new();
+        // Nothing net-related rendered before any connection arrives.
+        assert!(!m.render().contains("net:"));
+        m.net().connections_accepted.fetch_add(3, Ordering::Relaxed);
+        m.net().connections_open.fetch_add(2, Ordering::Relaxed);
+        m.net().decode_errors.fetch_add(1, Ordering::Relaxed);
+        m.net().requests_in_flight.fetch_add(4, Ordering::Relaxed);
+        for i in 1..=100u64 {
+            m.record_e2e_latency(i as f64 * 1e-4);
+        }
+        assert_eq!(m.e2e_histogram().count(), 100);
+        let p99 = m.e2e_histogram().quantile(0.99);
+        assert!((p99 - 99e-4).abs() < 99e-4 * 0.05, "p99 {p99}");
+        let r = m.render();
+        assert!(r.contains("3 conns accepted (2 open)"), "{r}");
+        assert!(r.contains("1 decode errors"), "{r}");
+        assert!(r.contains("e2e latency: p50"), "{r}");
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod server;
 
 pub use backpressure::{Admission, AdmissionPolicy};
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{LaneSummary, Metrics};
+pub use metrics::{LaneSummary, Metrics, NetCounters};
 pub use request::{Request, Response};
 pub use router::{Route, Router};
 pub use server::{Server, ServerConfig};

@@ -219,21 +219,35 @@ impl Server {
 
     /// Submit one raw graph; returns the request id on admission.
     pub fn submit(&self, model: &str, graph: CooGraph) -> (Admission, u64) {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.reserve_id();
+        (self.submit_with_id(id, model, graph), id)
+    }
+
+    /// Allocate a request id without submitting anything. Front-ends
+    /// that must register response routing *before* admission (the TCP
+    /// server's demux map) reserve the id first, install the route,
+    /// then call [`Server::submit_with_id`] — otherwise a fast lane
+    /// could complete the request before the route exists.
+    pub fn reserve_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit one raw graph under a previously reserved id.
+    pub fn submit_with_id(&self, id: u64, model: &str, graph: CooGraph) -> Admission {
         let req = Request::new(id, model, graph);
         match self.admission {
             AdmissionPolicy::Block => match self.ingest.send(req) {
-                Ok(()) => (Admission::Accepted, id),
+                Ok(()) => Admission::Accepted,
                 Err(_) => {
                     self.metrics.record_rejected();
-                    (Admission::Rejected, id)
+                    Admission::Rejected
                 }
             },
             AdmissionPolicy::Reject => match self.ingest.try_send(req) {
-                Ok(()) => (Admission::Accepted, id),
+                Ok(()) => Admission::Accepted,
                 Err(_) => {
                     self.metrics.record_rejected();
-                    (Admission::Rejected, id)
+                    Admission::Rejected
                 }
             },
         }
@@ -348,6 +362,20 @@ mod tests {
         server.submit("nonexistent", g);
         let r = responses.recv().unwrap();
         assert!(!r.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn reserved_ids_flow_through_submit_with_id() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let responses = server.responses();
+        let a = server.reserve_id();
+        let b = server.reserve_id();
+        assert_ne!(a, b, "reserved ids must be unique");
+        let g = molecular_graph(&mut Rng::new(2), &MolConfig::molhiv());
+        assert_eq!(server.submit_with_id(b, "gcn", g), Admission::Accepted);
+        let r = responses.recv().expect("response");
+        assert_eq!(r.id, b, "response must carry the reserved id");
         server.shutdown();
     }
 

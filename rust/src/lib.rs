@@ -7,7 +7,8 @@
 //! * **Layer 3 (this crate)** — the coordination contribution: a
 //!   streaming inference server over raw COO graphs with zero
 //!   preprocessing ([`coordinator`], ingesting through
-//!   [`graph::GraphBatch`]), a cycle-level simulator of the GenGNN
+//!   [`graph::GraphBatch`]), a wire-level TCP serving front-end with
+//!   an open-loop load generator ([`net`]), a cycle-level simulator of the GenGNN
 //!   microarchitecture ([`sim`]), an HLS-style resource estimator
 //!   ([`resources`]), and analytic CPU/GPU baselines ([`baselines`]).
 //! * **Layer 2** — JAX forward passes of the representative GNNs
@@ -29,6 +30,7 @@ pub mod datagen;
 pub mod dse;
 pub mod graph;
 pub mod models;
+pub mod net;
 pub mod report;
 pub mod resources;
 pub mod runtime;
@@ -39,6 +41,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::{Server, ServerConfig};
     pub use crate::datagen::{molecular_graph, MolConfig};
+    pub use crate::net::{NetClient, NetServer, NetServerConfig};
     pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph, GraphBatch};
     pub use crate::models::{GnnKind, ModelConfig};
     pub use crate::runtime::{Artifacts, Engine};

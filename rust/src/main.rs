@@ -5,7 +5,12 @@
 //! ```text
 //! gengnn serve          stream synthetic molecular graphs through the
 //!                       serving stack (--lanes N parallel executor
-//!                       lanes) and print latency + per-lane metrics
+//!                       lanes) and print latency + per-lane metrics;
+//!                       with --listen ADDR, expose the wire protocol
+//!                       over TCP instead (--duration S to exit)
+//! gengnn loadgen        open-loop load generator against a serving
+//!                       front-end: --addr, --rps, --count, model mix;
+//!                       reports p50/p95/p99 + throughput
 //! gengnn infer          run one model on one generated graph
 //! gengnn simulate       cycle-level simulation of one model/graph
 //! gengnn resources      Table 4 (+ --detailed component inventory)
@@ -22,6 +27,7 @@ use anyhow::{bail, Result};
 use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
 use gengnn::datagen::{molecular, MolConfig};
 use gengnn::models::ModelConfig;
+use gengnn::net::{loadgen, LoadGenConfig, NetServer, NetServerConfig};
 use gengnn::report::{fig7, fig8, fig9, table4, table5};
 use gengnn::runtime::{Artifacts, Engine, Golden};
 use gengnn::sim::{Accelerator, PipelineMode};
@@ -46,14 +52,15 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gengnn <serve|infer|simulate|resources|dse|report-fig7|report-fig8|\
-         report-fig9|report-table4|report-table5|selftest> [--flags]"
+        "usage: gengnn <serve|loadgen|infer|simulate|resources|dse|report-fig7|\
+         report-fig8|report-fig9|report-table4|report-table5|selftest> [--flags]"
     );
 }
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
+        "loadgen" => cmd_loadgen(Args::parse(rest, &[])?),
         "infer" => cmd_infer(Args::parse(rest, &[])?),
         "simulate" => cmd_simulate(Args::parse(rest, &[])?),
         "resources" | "report-table4" => {
@@ -101,6 +108,37 @@ fn cmd_serve(a: Args) -> Result<()> {
         },
         ..ServerConfig::default()
     };
+    // Wire-serving mode: expose the protocol over TCP instead of
+    // streaming synthetic graphs in-process.
+    if let Some(listen) = a.str_opt("listen") {
+        let duration = a.u64_or("duration", 0)?;
+        eprintln!("[serve] compiling {models:?} on {lanes} executor lane(s) ...");
+        let net = NetServer::start(NetServerConfig {
+            listen: listen.to_string(),
+            server: cfg,
+        })?;
+        eprintln!(
+            "[serve] listening on {} ({}); drive it with `gengnn loadgen --addr {}`",
+            net.local_addr(),
+            if duration == 0 {
+                "until killed".to_string()
+            } else {
+                format!("for {duration}s")
+            },
+            net.local_addr(),
+        );
+        if duration == 0 {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(60));
+                eprintln!("{}", net.metrics().render());
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+        let metrics = net.shutdown();
+        println!("{}", metrics.render());
+        return Ok(());
+    }
+
     eprintln!("[serve] compiling {models:?} on {lanes} executor lane(s) ...");
     let server = Server::start(cfg)?;
     let responses = server.responses();
@@ -159,6 +197,46 @@ fn cmd_serve(a: Args) -> Result<()> {
         fmt_secs(wall),
         ok as f64 / wall
     );
+    Ok(())
+}
+
+fn cmd_loadgen(a: Args) -> Result<()> {
+    let cfg = LoadGenConfig {
+        addr: a.str_or("addr", "127.0.0.1:7447").to_string(),
+        rps: a.f64_or("rps", 200.0)?,
+        count: a.usize_or("count", 1000)?,
+        connections: a.usize_or("connections", 2)?,
+        models: a.list_or("models", &["gcn", "gat", "dgn"]),
+        seed: a.u64_or("seed", 7)?,
+        graph_pool: a.usize_or("graph-pool", 32)?,
+        drain_timeout: std::time::Duration::from_secs(a.u64_or("drain-timeout", 30)?),
+    };
+    eprintln!(
+        "[loadgen] {} requests @ {} rps over {} connection(s) → {}",
+        cfg.count, cfg.rps, cfg.connections, cfg.addr
+    );
+    let report = loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    if !report.reconciles() {
+        bail!(
+            "accounting mismatch: {} submitted vs {} completed + {} rejected + {} failed + {} lost",
+            report.submitted,
+            report.completed,
+            report.rejected,
+            report.failed,
+            report.lost
+        );
+    }
+    // Export only after reconciliation: a broken run must not leave a
+    // schema-valid "measured" point on the perf trajectory.
+    if let Some(path) = std::env::var_os("GENGNN_BENCH_JSON") {
+        let json = gengnn::util::bench::results_to_json(
+            "loadgen",
+            &report.to_bench_results(),
+        );
+        std::fs::write(&path, json)?;
+        eprintln!("[loadgen] wrote bench snapshot to {path:?}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,137 @@
+//! Blocking wire client with connection pooling.
+//!
+//! [`NetClient`] is the programmatic counterpart of the TCP front-end:
+//! `infer(model, graph)` encodes a request frame, sends it on a pooled
+//! connection, and blocks for the matching response. Connections are
+//! checked out per call; up to `max_pool` idle sockets are retained
+//! between calls, and concurrent callers beyond that dial transient
+//! connections that are torn down on return — the pool bounds idle
+//! state, not peak concurrency. Each socket carries one request at a
+//! time (pipelined streaming is the load generator's business, see
+//! [`super::loadgen`]).
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::CooGraph;
+
+use super::proto::{self, WireFrame, WireResponse};
+use super::server::dial;
+
+/// One pooled connection: the write half and a buffered read half over
+/// a clone of the same socket.
+struct PooledConn {
+    tx: TcpStream,
+    rx: BufReader<TcpStream>,
+}
+
+impl PooledConn {
+    fn dial(addr: &str, timeout: Duration) -> Result<PooledConn> {
+        let tx = dial(addr)?;
+        // A server that admits a request but never answers (dead lane,
+        // dropped response) must surface as an error, not an infinite
+        // block in `infer`.
+        tx.set_read_timeout(Some(timeout))
+            .context("setting client read timeout")?;
+        let rx = BufReader::new(tx.try_clone().context("cloning client socket")?);
+        Ok(PooledConn { tx, rx })
+    }
+}
+
+/// Default per-response wait before [`NetClient::infer`] gives up on a
+/// silent server.
+const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Blocking inference client over the wire protocol.
+pub struct NetClient {
+    addr: String,
+    pool: Mutex<Vec<PooledConn>>,
+    max_pool: usize,
+    timeout: Duration,
+    next_id: AtomicU64,
+}
+
+impl NetClient {
+    /// Connect to a serving front-end; dials one connection eagerly so
+    /// an unreachable address fails here, not on the first `infer`.
+    /// Responses are waited on for a 60 s default — see
+    /// [`NetClient::connect_with_timeout`] to tune it.
+    pub fn connect(addr: impl Into<String>, max_pool: usize) -> Result<NetClient> {
+        Self::connect_with_timeout(addr, max_pool, DEFAULT_CLIENT_TIMEOUT)
+    }
+
+    /// [`NetClient::connect`] with an explicit per-response timeout.
+    pub fn connect_with_timeout(
+        addr: impl Into<String>,
+        max_pool: usize,
+        timeout: Duration,
+    ) -> Result<NetClient> {
+        let addr = addr.into();
+        let first = PooledConn::dial(&addr, timeout)?;
+        Ok(NetClient {
+            addr,
+            pool: Mutex::new(vec![first]),
+            max_pool: max_pool.max(1),
+            timeout,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Run one inference over the wire; blocks for the response.
+    ///
+    /// `Rejected` / `Error` / `BadRequest` wire statuses are returned
+    /// as an `Ok(WireResponse)` — they are protocol-level answers, not
+    /// transport failures — so callers can distinguish shed load from
+    /// a dead server.
+    pub fn infer(&self, model: &str, graph: &CooGraph) -> Result<WireResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = proto::encode_request_parts(id, model, graph)?;
+        // Checkout (or dial) a connection. A transport error tears the
+        // connection down instead of returning it, so one bad socket
+        // cannot poison later calls.
+        let mut conn = match self.pool.lock().unwrap().pop() {
+            Some(c) => c,
+            None => PooledConn::dial(&self.addr, self.timeout)?,
+        };
+        let resp = Self::exchange(&mut conn, &frame, id);
+        if resp.is_ok() {
+            let mut pool = self.pool.lock().unwrap();
+            if pool.len() < self.max_pool {
+                pool.push(conn);
+            }
+        }
+        resp
+    }
+
+    fn exchange(conn: &mut PooledConn, frame: &[u8], want_id: u64) -> Result<WireResponse> {
+        conn.tx.write_all(frame).context("sending request frame")?;
+        conn.tx.flush().context("flushing request frame")?;
+        loop {
+            let payload = match proto::read_frame(&mut conn.rx)? {
+                Some(p) => p,
+                None => bail!("server closed the connection before responding"),
+            };
+            match proto::decode_frame(&payload)? {
+                WireFrame::Response(resp) if resp.id == want_id => return Ok(resp),
+                // A stale response (e.g. from an aborted earlier call on
+                // this socket) is skipped, not an error.
+                WireFrame::Response(_) => continue,
+                WireFrame::Request(_) => bail!("server sent a request frame"),
+            }
+        }
+    }
+
+    /// Connections currently parked in the pool.
+    pub fn pooled_connections(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}

@@ -1,0 +1,523 @@
+//! Open-loop load generator for the TCP serving front-end.
+//!
+//! Open-loop means arrivals follow a fixed schedule — request `k` is
+//! sent at `t0 + k/rps` regardless of how fast responses come back —
+//! so a saturated server shows up as growing latency (and, under the
+//! `Reject` admission policy, as `Rejected` wire statuses) instead of
+//! silently throttling the generator (the coordinated-omission trap of
+//! closed-loop benchmarks). Latency is therefore measured from the
+//! *scheduled* arrival time: queueing delay the server imposes on a
+//! late request is part of the number.
+//!
+//! The request stream is deterministic: a seeded pool of
+//! datagen-sourced molecular graphs, a round-robin model mix, and the
+//! `k/rps` inter-arrival grid, so two runs with the same config put an
+//! identical byte stream on the wire.
+//!
+//! Requests are striped over `connections` sockets; each socket has a
+//! writer thread (paces the schedule, pipelines frames without
+//! waiting) and a reader thread (drains responses, classifies
+//! Ok / Rejected / Error, feeds the latency histogram). The report
+//! reconciles `submitted = completed + rejected + failed + lost`;
+//! `lost` is nonzero only if the server dropped a connection or the
+//! drain timed out.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::datagen::{molecular_graph, MolConfig};
+use crate::graph::CooGraph;
+use crate::util::bench::BenchResult;
+use crate::util::rng::Rng;
+use crate::util::stats::{fmt_secs, LatencyHistogram};
+
+use super::proto::{self, WireFrame, WireStatus};
+use super::server::dial;
+
+/// Load generator parameters.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Server address, e.g. `127.0.0.1:7447`.
+    pub addr: String,
+    /// Target request rate (the open-loop schedule).
+    pub rps: f64,
+    /// Total requests to send.
+    pub count: usize,
+    /// Connections to stripe the stream over.
+    pub connections: usize,
+    /// Model mix, applied round-robin per request.
+    pub models: Vec<String>,
+    /// Seed for the graph pool.
+    pub seed: u64,
+    /// Distinct pre-generated graphs cycled through the stream.
+    pub graph_pool: usize,
+    /// How long a reader waits on a silent socket — *beyond the full
+    /// open-loop schedule span* (`count/rps`, during which silence is
+    /// normal at low rates) — before declaring the remaining responses
+    /// lost.
+    pub drain_timeout: Duration,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            addr: "127.0.0.1:7447".to_string(),
+            rps: 200.0,
+            count: 1000,
+            connections: 2,
+            models: vec!["gcn".to_string()],
+            seed: 7,
+            graph_pool: 32,
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one load-generation run produced.
+#[derive(Clone, Debug)]
+pub struct LoadGenReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    /// Requests that never received a response (connection drop or
+    /// drain timeout) — zero on a healthy run.
+    pub lost: u64,
+    pub wall_secs: f64,
+    pub target_rps: f64,
+    /// Completed responses per second of wall clock.
+    pub achieved_rps: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Completed responses per model.
+    pub per_model: Vec<(String, u64)>,
+}
+
+impl LoadGenReport {
+    /// Every submitted request is accounted for and none were lost.
+    pub fn reconciles(&self) -> bool {
+        self.lost == 0
+            && self.submitted == self.completed + self.rejected + self.failed
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "loadgen: {} submitted @ {:.0} rps target → {} ok, {} rejected, {} failed, {} lost\n\
+             wall {} → {:.1} rps achieved\n",
+            self.submitted,
+            self.target_rps,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.lost,
+            fmt_secs(self.wall_secs),
+            self.achieved_rps,
+        );
+        if self.completed == 0 {
+            // Total shedding (e.g. Reject-mode saturation) is a
+            // first-class outcome: no latencies exist, say so instead
+            // of printing NaNs.
+            out.push_str("latency: no requests completed\n");
+        } else {
+            out.push_str(&format!(
+                "latency (from scheduled arrival): mean {} p50 {} p95 {} p99 {} max {}\n",
+                fmt_secs(self.mean),
+                fmt_secs(self.p50),
+                fmt_secs(self.p95),
+                fmt_secs(self.p99),
+                fmt_secs(self.max),
+            ));
+        }
+        for (model, n) in &self.per_model {
+            out.push_str(&format!("  {model:<10} {n} completed\n"));
+        }
+        out
+    }
+
+    /// The run as `BENCH_*.json`-schema entries (the perf-trajectory
+    /// anchor format of `util::bench::results_to_json`). Every entry
+    /// honors the snapshot invariants `check_bench_schema.py` enforces
+    /// (finite non-negative values, `min_s <= mean_s`); a run with no
+    /// completions exports nothing rather than NaNs.
+    pub fn to_bench_results(&self) -> Vec<BenchResult> {
+        let n = self.completed as usize;
+        if n == 0 {
+            return Vec::new();
+        }
+        let per_completed = 1.0 / self.achieved_rps;
+        vec![
+            BenchResult {
+                name: "loadgen/e2e_latency".to_string(),
+                iters: n,
+                mean: self.mean,
+                p50: self.p50,
+                min: self.min,
+            },
+            BenchResult {
+                name: "loadgen/e2e_latency_p95".to_string(),
+                iters: n,
+                mean: self.p95,
+                p50: self.p95,
+                min: self.p95,
+            },
+            BenchResult {
+                name: "loadgen/e2e_latency_p99".to_string(),
+                iters: n,
+                mean: self.p99,
+                p50: self.p99,
+                min: self.p99,
+            },
+            BenchResult {
+                name: "loadgen/seconds_per_completed".to_string(),
+                iters: n,
+                mean: per_completed,
+                p50: per_completed,
+                min: per_completed,
+            },
+        ]
+    }
+}
+
+/// Shared run state: the latency histogram and outcome counters — all
+/// lock-free. Pending maps (request id → scheduled arrival) are per
+/// connection (ids are striped by connection, so each map has exactly
+/// one writer and one reader), and per-model counts are local to each
+/// reader and merged at join time: the hot path takes no cross-
+/// connection lock, so the generator cannot serialize on its own
+/// bookkeeping while measuring the server.
+struct RunState {
+    latency: LatencyHistogram,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    failed: AtomicU64,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, Instant>>>;
+
+/// Run one open-loop load generation pass against a live server.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    anyhow::ensure!(cfg.rps > 0.0, "rps must be positive");
+    anyhow::ensure!(cfg.count > 0, "count must be positive");
+    anyhow::ensure!(!cfg.models.is_empty(), "need at least one model");
+    let connections = cfg.connections.clamp(1, cfg.count);
+
+    // Deterministic graph pool: `graph_pool` seeded molecular graphs
+    // total, shared across the model mix and cycled through the
+    // schedule (every manifest model accepts the MolHIV envelope).
+    let mut rng = Rng::new(cfg.seed);
+    let pool_size = cfg.graph_pool.max(1);
+    let graphs: Vec<CooGraph> = (0..pool_size)
+        .map(|_| molecular_graph(&mut rng, &MolConfig::molhiv()))
+        .collect();
+    let graphs = Arc::new(graphs);
+
+    let state = Arc::new(RunState {
+        latency: LatencyHistogram::new(),
+        completed: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        failed: AtomicU64::new(0),
+    });
+
+    let t0 = Instant::now();
+    let mut writer_handles = Vec::new();
+    let mut reader_handles: Vec<std::thread::JoinHandle<BTreeMap<String, u64>>> =
+        Vec::new();
+    let mut written_counters = Vec::new();
+    let mut pending_maps: Vec<PendingMap> = Vec::new();
+    // The socket read timeout must tolerate the whole schedule: at low
+    // rates a reader legitimately sees nothing for `connections/rps`
+    // between arrivals, so only silence outlasting the remaining
+    // schedule *plus* the drain allowance means responses are lost.
+    let read_timeout = cfg
+        .drain_timeout
+        .saturating_add(Duration::from_secs_f64(cfg.count as f64 / cfg.rps));
+    for conn_no in 0..connections {
+        let sock = dial(&cfg.addr)
+            .with_context(|| format!("loadgen connection {conn_no}"))?;
+        sock.set_read_timeout(Some(read_timeout))
+            .context("setting drain timeout")?;
+        let read_half = BufReader::new(sock.try_clone().context("cloning loadgen socket")?);
+
+        // Per-connection accounting the reader drains against.
+        let written = Arc::new(AtomicU64::new(0));
+        let writer_done = Arc::new(AtomicBool::new(false));
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        written_counters.push(Arc::clone(&written));
+        pending_maps.push(Arc::clone(&pending));
+
+        let writer = {
+            let cfg = cfg.clone();
+            let graphs = Arc::clone(&graphs);
+            let pending = Arc::clone(&pending);
+            let written = Arc::clone(&written);
+            let writer_done = Arc::clone(&writer_done);
+            let mut sock = sock;
+            std::thread::Builder::new()
+                .name(format!("gengnn-loadgen-writer-{conn_no}"))
+                .spawn(move || {
+                    for k in (conn_no..cfg.count).step_by(connections) {
+                        // The open-loop schedule: request k departs at
+                        // t0 + k/rps, never earlier.
+                        let sched = t0 + Duration::from_secs_f64(k as f64 / cfg.rps);
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        let model = &cfg.models[k % cfg.models.len()];
+                        let graph = &graphs[(k / cfg.models.len()) % graphs.len()];
+                        let Ok(frame) =
+                            proto::encode_request_parts(k as u64, model, graph)
+                        else {
+                            continue;
+                        };
+                        // Count + register *before* the write: the
+                        // response to a written frame can arrive (and be
+                        // checked against `written`) before control
+                        // returns from write_all.
+                        pending.lock().unwrap().insert(k as u64, sched);
+                        written.fetch_add(1, Ordering::Release);
+                        if sock.write_all(&frame).is_err() {
+                            pending.lock().unwrap().remove(&(k as u64));
+                            written.fetch_sub(1, Ordering::Release);
+                            break;
+                        }
+                    }
+                    let _ = sock.flush();
+                    writer_done.store(true, Ordering::Release);
+                })
+                .expect("spawn loadgen writer")
+        };
+        writer_handles.push(writer);
+
+        let reader = {
+            let state = Arc::clone(&state);
+            let pending = Arc::clone(&pending);
+            let written = Arc::clone(&written);
+            let writer_done = Arc::clone(&writer_done);
+            let mut rx = read_half;
+            std::thread::Builder::new()
+                .name(format!("gengnn-loadgen-reader-{conn_no}"))
+                .spawn(move || {
+                    let mut per_model: BTreeMap<String, u64> = BTreeMap::new();
+                    let mut received = 0u64;
+                    loop {
+                        // Only park in a socket read when a response is
+                        // actually owed (`written` counts before the
+                        // frame hits the wire), so the end-of-run
+                        // writer_done race can never strand this reader
+                        // in a long blocking read. The 1 ms flag poll
+                        // between arrivals cannot bias latency: an owed
+                        // response always takes the read path below.
+                        if received >= written.load(Ordering::Acquire) {
+                            if writer_done.load(Ordering::Acquire) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
+                            continue;
+                        }
+                        let payload = match proto::read_frame(&mut rx) {
+                            Ok(Some(p)) => p,
+                            // Server closed, socket error, or drain
+                            // timeout: the rest is lost.
+                            Ok(None) | Err(_) => break,
+                        };
+                        let Ok(WireFrame::Response(resp)) = proto::decode_frame(&payload)
+                        else {
+                            break;
+                        };
+                        received += 1;
+                        let sched = pending.lock().unwrap().remove(&resp.id);
+                        match resp.status {
+                            WireStatus::Ok => {
+                                state.completed.fetch_add(1, Ordering::Relaxed);
+                                if let Some(sched) = sched {
+                                    state.latency.record(
+                                        Instant::now()
+                                            .saturating_duration_since(sched)
+                                            .as_secs_f64(),
+                                    );
+                                }
+                                *per_model.entry(resp.model).or_default() += 1;
+                            }
+                            WireStatus::Rejected => {
+                                state.rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            WireStatus::Error | WireStatus::BadRequest => {
+                                state.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    per_model
+                })
+                .expect("spawn loadgen reader")
+        };
+        reader_handles.push(reader);
+    }
+
+    for h in writer_handles {
+        h.join().map_err(|_| anyhow::anyhow!("loadgen writer panicked"))?;
+    }
+    let mut per_model: BTreeMap<String, u64> = BTreeMap::new();
+    for h in reader_handles {
+        let conn_counts =
+            h.join().map_err(|_| anyhow::anyhow!("loadgen reader panicked"))?;
+        for (model, n) in conn_counts {
+            *per_model.entry(model).or_default() += n;
+        }
+    }
+    // Submitted = frames actually written. Everything still pending
+    // after the drain is lost; pending inserts that failed to write
+    // were removed by the writer, so the maps now hold exactly the
+    // unanswered requests.
+    let submitted: u64 = written_counters
+        .iter()
+        .map(|w| w.load(Ordering::Relaxed))
+        .sum();
+    let lost: u64 = pending_maps
+        .iter()
+        .map(|p| p.lock().unwrap().len() as u64)
+        .sum();
+    let completed = state.completed.load(Ordering::Relaxed);
+    let rejected = state.rejected.load(Ordering::Relaxed);
+    let failed = state.failed.load(Ordering::Relaxed);
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let h = &state.latency;
+    Ok(LoadGenReport {
+        submitted,
+        completed,
+        rejected,
+        failed,
+        lost,
+        wall_secs,
+        target_rps: cfg.rps,
+        achieved_rps: completed as f64 / wall_secs.max(1e-9),
+        mean: h.mean(),
+        p50: h.quantile(0.50),
+        p95: h.quantile(0.95),
+        p99: h.quantile(0.99),
+        min: h.min(),
+        max: h.max(),
+        per_model: per_model.into_iter().collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_reconciliation_logic() {
+        let mut r = LoadGenReport {
+            submitted: 10,
+            completed: 7,
+            rejected: 2,
+            failed: 1,
+            lost: 0,
+            wall_secs: 1.0,
+            target_rps: 10.0,
+            achieved_rps: 7.0,
+            mean: 1e-3,
+            p50: 1e-3,
+            p95: 2e-3,
+            p99: 3e-3,
+            min: 5e-4,
+            max: 4e-3,
+            per_model: vec![("gcn".to_string(), 7)],
+        };
+        assert!(r.reconciles());
+        r.lost = 1;
+        assert!(!r.reconciles());
+        r.lost = 0;
+        r.failed = 0;
+        assert!(!r.reconciles(), "accounting gap must fail reconciliation");
+    }
+
+    #[test]
+    fn report_renders_and_exports_bench_schema() {
+        let r = LoadGenReport {
+            submitted: 100,
+            completed: 100,
+            rejected: 0,
+            failed: 0,
+            lost: 0,
+            wall_secs: 0.5,
+            target_rps: 200.0,
+            achieved_rps: 200.0,
+            mean: 2e-3,
+            p50: 1.8e-3,
+            p95: 3e-3,
+            p99: 4e-3,
+            min: 1e-3,
+            max: 5e-3,
+            per_model: vec![("gcn".to_string(), 50), ("gat".to_string(), 50)],
+        };
+        let text = r.render();
+        assert!(text.contains("p99"), "{text}");
+        assert!(text.contains("gcn"), "{text}");
+        let results = r.to_bench_results();
+        assert_eq!(results.len(), 4);
+        // The snapshot invariants check_bench_schema.py enforces.
+        for b in &results {
+            assert!(b.mean.is_finite() && b.mean >= 0.0, "{}: {}", b.name, b.mean);
+            assert!(
+                b.min <= b.mean * 1.01 + 1e-12,
+                "{}: min {} exceeds mean {}",
+                b.name,
+                b.min,
+                b.mean
+            );
+        }
+        let json = crate::util::bench::results_to_json("loadgen", &results);
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "loadgen");
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 4);
+        // A run with no completions must export nothing, not NaNs.
+        let empty = LoadGenReport {
+            completed: 0,
+            achieved_rps: 0.0,
+            mean: f64::NAN,
+            p50: f64::NAN,
+            p95: f64::NAN,
+            p99: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+            per_model: Vec::new(),
+            ..r
+        };
+        assert!(empty.to_bench_results().is_empty());
+        // Total shedding renders a clear line, not NaN latencies.
+        let shed = LoadGenReport {
+            completed: 0,
+            rejected: empty.submitted,
+            ..empty
+        };
+        let text = shed.render();
+        assert!(text.contains("no requests completed"), "{text}");
+        assert!(!text.contains("NaN"), "{text}");
+    }
+
+    #[test]
+    fn config_validation() {
+        let bad = LoadGenConfig {
+            rps: 0.0,
+            ..LoadGenConfig::default()
+        };
+        assert!(run(&bad).is_err());
+        let bad = LoadGenConfig {
+            models: vec![],
+            ..LoadGenConfig::default()
+        };
+        assert!(run(&bad).is_err());
+    }
+}

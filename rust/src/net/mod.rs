@@ -1,0 +1,34 @@
+//! The network serving front-end: wire-level ingress for the
+//! coordinator's executor pool, plus the measurement harness that
+//! puts traffic on it.
+//!
+//! After PR 2 the sharded executor pool was only reachable in-process
+//! through `ServerHandle` channels; this subsystem is what makes the
+//! ROADMAP's "serves heavy traffic" claim testable — FlowGNN-style
+//! explicit streaming ingress in front of the lanes, GNNBuilder-style
+//! measure-everything harness around them:
+//!
+//! * [`proto`]   — length-prefixed binary frames (version byte,
+//!   FNV-1a checksum, raw COO graphs, bit-exact f32 outputs)
+//! * [`server`]  — threaded TCP front-end: accept loop, per-connection
+//!   reader/writer threads, response demux into per-connection
+//!   outboxes, admission backpressure mapped to wire statuses
+//! * [`client`]  — blocking client with connection pooling
+//! * [`loadgen`] — open-loop load generator: deterministic
+//!   inter-arrival schedule, model mix, HDR-style latency histogram
+//!   reporting p50/p95/p99 + throughput, `BENCH_*.json` export
+//!
+//! `rust/tests/net_e2e.rs` pins the contract: outputs served over TCP
+//! are bit-identical to in-process results for every manifest model,
+//! and a saturated Reject-mode queue surfaces as a `Rejected` wire
+//! status rather than a hang or a dropped connection.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::NetClient;
+pub use loadgen::{LoadGenConfig, LoadGenReport};
+pub use proto::{WireFrame, WireRequest, WireResponse, WireStatus, PROTO_VERSION};
+pub use server::{NetServer, NetServerConfig};

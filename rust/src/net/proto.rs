@@ -1,0 +1,655 @@
+//! The length-prefixed binary wire protocol of the serving front-end.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! ┌──────────────┬─────────────────────────────────────────────────┐
+//! │ u32 len      │ payload (len bytes)                             │
+//! └──────────────┴─────────────────────────────────────────────────┘
+//! payload:
+//!   [0]      version byte (PROTO_VERSION)
+//!   [1]      kind byte (1 = request, 2 = response)
+//!   [2..6]   u32 FNV-1a checksum of the body
+//!   [6..]    body
+//!
+//! request body:
+//!   u64 id · u16 model_len · model (utf-8)
+//!   u32 n · u16 f_node · u16 f_edge · u32 num_edges
+//!   edges   (num_edges × [u32 src, u32 dst])
+//!   node_feat (n × f_node × f32)
+//!   edge_feat (num_edges × f_edge × f32)
+//!
+//! response body:
+//!   u64 id · u16 model_len · model (utf-8) · u8 status
+//!   status Ok:         u32 out_len · output (f32 × out_len)
+//!   status otherwise:  u32 msg_len · message (utf-8)
+//! ```
+//!
+//! Graphs cross the wire as raw COO — exactly the zero-preprocessing
+//! input contract of the in-process path (paper §3.1), so the TCP
+//! front-end feeds `Server::submit` the same `CooGraph` a local caller
+//! would. f32 values are transmitted as their IEEE-754 bit patterns,
+//! so a served output is **bit-identical** to the in-process result
+//! (pinned by `rust/tests/net_e2e.rs`).
+//!
+//! Encoding is single-allocation (the frame buffer is sized up front
+//! and filled in place); decoding walks one immutable byte slice with
+//! a cursor and only materializes the feature vectors it must hand to
+//! [`CooGraph`] — no intermediate reframing or re-parsing.
+
+use anyhow::{bail, Result};
+
+use crate::graph::CooGraph;
+
+/// Protocol version carried in every frame.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Frame kind bytes.
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+
+/// Refuse frames above this payload size (a corrupt or hostile length
+/// prefix must not allocate unbounded memory).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Correlation id the server uses when answering a frame whose own id
+/// could not be trusted (see [`salvage_request_id`]). Clients must not
+/// assign this id to real requests.
+pub const BAD_FRAME_ID: u64 = u64::MAX;
+
+/// Bytes of frame overhead before the body (version, kind, checksum).
+const HEADER_BYTES: usize = 6;
+
+/// Wire status of a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireStatus {
+    /// Inference succeeded; the payload is the output vector.
+    Ok,
+    /// Admission control shed the request (Reject policy, queue full).
+    Rejected,
+    /// The request was admitted but failed (unknown model, oversized
+    /// graph, executor error); the payload is the error message.
+    Error,
+    /// The server could not decode the request frame.
+    BadRequest,
+}
+
+impl WireStatus {
+    fn to_byte(self) -> u8 {
+        match self {
+            WireStatus::Ok => 0,
+            WireStatus::Rejected => 1,
+            WireStatus::Error => 2,
+            WireStatus::BadRequest => 3,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<WireStatus> {
+        Ok(match b {
+            0 => WireStatus::Ok,
+            1 => WireStatus::Rejected,
+            2 => WireStatus::Error,
+            3 => WireStatus::BadRequest,
+            _ => bail!("unknown wire status byte {b}"),
+        })
+    }
+}
+
+/// One inference request as it crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    /// Caller-chosen correlation id, echoed verbatim in the response.
+    pub id: u64,
+    pub model: String,
+    pub graph: CooGraph,
+}
+
+/// One inference response as it crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub model: String,
+    pub status: WireStatus,
+    /// Output vector (empty unless `status == Ok`).
+    pub output: Vec<f32>,
+    /// Error message (empty when `status == Ok`).
+    pub error: String,
+}
+
+impl WireResponse {
+    pub fn ok(id: u64, model: impl Into<String>, output: Vec<f32>) -> WireResponse {
+        WireResponse {
+            id,
+            model: model.into(),
+            status: WireStatus::Ok,
+            output,
+            error: String::new(),
+        }
+    }
+
+    pub fn err(
+        id: u64,
+        model: impl Into<String>,
+        status: WireStatus,
+        error: impl Into<String>,
+    ) -> WireResponse {
+        WireResponse {
+            id,
+            model: model.into(),
+            status,
+            output: Vec::new(),
+            error: error.into(),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == WireStatus::Ok
+    }
+}
+
+/// A decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireFrame {
+    Request(WireRequest),
+    Response(WireResponse),
+}
+
+/// FNV-1a over the body bytes — cheap, deterministic, and enough to
+/// catch framing slips and truncation (this is an integrity check for
+/// a trusted link, not an authenticity mechanism).
+fn checksum(body: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in body {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---- encoding -----------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Seal a body into a full frame (length prefix + header + body).
+fn seal(kind: u8, body: Vec<u8>) -> Vec<u8> {
+    let payload_len = HEADER_BYTES + body.len();
+    let mut out = Vec::with_capacity(4 + payload_len);
+    put_u32(&mut out, payload_len as u32);
+    out.push(PROTO_VERSION);
+    out.push(kind);
+    put_u32(&mut out, checksum(&body));
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a request into one contiguous frame ready for `write_all`.
+pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
+    encode_request_parts(req.id, &req.model, &req.graph)
+}
+
+/// Borrowed-parts variant of [`encode_request`]: hot paths (the load
+/// generator's writer, [`super::NetClient::infer`]) serialize straight
+/// from a borrowed graph without cloning it into a [`WireRequest`].
+pub fn encode_request_parts(id: u64, model: &str, g: &CooGraph) -> Result<Vec<u8>> {
+    if model.len() > u16::MAX as usize {
+        bail!("model name too long");
+    }
+    if g.n > u32::MAX as usize || g.edges.len() > u32::MAX as usize {
+        bail!("graph too large for the wire format");
+    }
+    if g.f_node > u16::MAX as usize || g.f_edge > u16::MAX as usize {
+        bail!("feature width too large for the wire format");
+    }
+    let mut body = Vec::with_capacity(
+        8 + 2
+            + model.len()
+            + 12
+            + g.edges.len() * 8
+            + (g.node_feat.len() + g.edge_feat.len()) * 4,
+    );
+    put_u64(&mut body, id);
+    put_u16(&mut body, model.len() as u16);
+    body.extend_from_slice(model.as_bytes());
+    put_u32(&mut body, g.n as u32);
+    put_u16(&mut body, g.f_node as u16);
+    put_u16(&mut body, g.f_edge as u16);
+    put_u32(&mut body, g.edges.len() as u32);
+    for &(s, t) in &g.edges {
+        put_u32(&mut body, s);
+        put_u32(&mut body, t);
+    }
+    put_f32s(&mut body, &g.node_feat);
+    put_f32s(&mut body, &g.edge_feat);
+    Ok(seal(KIND_REQUEST, body))
+}
+
+/// Encode a response into one contiguous frame.
+pub fn encode_response(resp: &WireResponse) -> Result<Vec<u8>> {
+    if resp.model.len() > u16::MAX as usize {
+        bail!("model name too long");
+    }
+    let mut body =
+        Vec::with_capacity(8 + 2 + resp.model.len() + 5 + resp.output.len() * 4 + resp.error.len());
+    put_u64(&mut body, resp.id);
+    put_u16(&mut body, resp.model.len() as u16);
+    body.extend_from_slice(resp.model.as_bytes());
+    body.push(resp.status.to_byte());
+    if resp.status == WireStatus::Ok {
+        if resp.output.len() > u32::MAX as usize {
+            bail!("output too large for the wire format");
+        }
+        put_u32(&mut body, resp.output.len() as u32);
+        put_f32s(&mut body, &resp.output);
+    } else {
+        if resp.error.len() > u32::MAX as usize {
+            bail!("error message too large");
+        }
+        put_u32(&mut body, resp.error.len() as u32);
+        body.extend_from_slice(resp.error.as_bytes());
+    }
+    Ok(seal(KIND_RESPONSE, body))
+}
+
+// ---- decoding -----------------------------------------------------------
+
+/// Cursor over one immutable payload slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String> {
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let raw = self.take(count.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("f32 vector length overflow")
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+/// Decode one payload (a frame minus its length prefix) into a typed
+/// frame, verifying version and checksum.
+pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
+    if payload.len() < HEADER_BYTES {
+        bail!("frame too short ({} bytes)", payload.len());
+    }
+    let version = payload[0];
+    if version != PROTO_VERSION {
+        bail!("unsupported protocol version {version} (expected {PROTO_VERSION})");
+    }
+    let kind = payload[1];
+    let want = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+    let body = &payload[HEADER_BYTES..];
+    let got = checksum(body);
+    if want != got {
+        bail!("checksum mismatch: frame says {want:#010x}, body hashes to {got:#010x}");
+    }
+    let mut c = Cursor { b: body, i: 0 };
+    let frame = match kind {
+        KIND_REQUEST => {
+            let id = c.u64()?;
+            let model_len = c.u16()? as usize;
+            let model = c.utf8(model_len)?;
+            let n = c.u32()? as usize;
+            let f_node = c.u16()? as usize;
+            let f_edge = c.u16()? as usize;
+            let num_edges = c.u32()? as usize;
+            // Bound the claimed count by the bytes actually present
+            // before allocating for it (a corrupt count that passed the
+            // checksum must not drive a multi-GiB reservation).
+            if num_edges.saturating_mul(8) > c.remaining() {
+                bail!("edge count {num_edges} exceeds the frame body");
+            }
+            let mut edges = Vec::with_capacity(num_edges);
+            for _ in 0..num_edges {
+                let s = c.u32()?;
+                let t = c.u32()?;
+                edges.push((s, t));
+            }
+            let node_feat = c.f32s(n.checked_mul(f_node).ok_or_else(|| {
+                anyhow::anyhow!("node feature size overflow")
+            })?)?;
+            let edge_feat = c.f32s(num_edges.checked_mul(f_edge).ok_or_else(|| {
+                anyhow::anyhow!("edge feature size overflow")
+            })?)?;
+            let graph = CooGraph {
+                n,
+                edges,
+                node_feat,
+                f_node,
+                edge_feat,
+                f_edge,
+            };
+            graph.validate()?;
+            WireFrame::Request(WireRequest { id, model, graph })
+        }
+        KIND_RESPONSE => {
+            let id = c.u64()?;
+            let model_len = c.u16()? as usize;
+            let model = c.utf8(model_len)?;
+            let status = WireStatus::from_byte(c.u8()?)?;
+            let (output, error) = if status == WireStatus::Ok {
+                let out_len = c.u32()? as usize;
+                (c.f32s(out_len)?, String::new())
+            } else {
+                let msg_len = c.u32()? as usize;
+                (Vec::new(), c.utf8(msg_len)?)
+            };
+            WireFrame::Response(WireResponse {
+                id,
+                model,
+                status,
+                output,
+                error,
+            })
+        }
+        k => bail!("unknown frame kind byte {k}"),
+    };
+    if !c.done() {
+        bail!("frame has {} trailing bytes", payload.len() - HEADER_BYTES - c.i);
+    }
+    Ok(frame)
+}
+
+/// Best-effort request-id extraction from a payload that failed full
+/// decoding, so a `BadRequest` answer can carry the caller's own
+/// correlation id (e.g. a well-framed request whose graph failed
+/// validation). The id is returned only when the envelope is
+/// trustworthy — right version, request kind, matching checksum;
+/// anything less yields `None` and the server answers under
+/// [`BAD_FRAME_ID`], never under a guessed id that could collide with
+/// a different in-flight request.
+pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
+    if payload.len() < HEADER_BYTES + 8
+        || payload[0] != PROTO_VERSION
+        || payload[1] != KIND_REQUEST
+    {
+        return None;
+    }
+    let want = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+    let body = &payload[HEADER_BYTES..];
+    if checksum(body) != want {
+        return None;
+    }
+    Some(u64::from_le_bytes(body[..8].try_into().unwrap()))
+}
+
+/// Read one frame's payload from a stream. Returns `Ok(None)` on a
+/// clean EOF at a frame boundary (the peer closed the connection);
+/// mid-frame EOF and oversized lengths are errors.
+pub fn read_frame(r: &mut impl std::io::Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        let k = r.read(&mut len_buf[filled..])?;
+        if k == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("EOF inside a frame length prefix");
+        }
+        filled += k;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < HEADER_BYTES {
+        bail!("frame length {len} below header size");
+    }
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{molecular_graph, MolConfig};
+    use crate::util::rng::Rng;
+
+    fn graph() -> CooGraph {
+        molecular_graph(&mut Rng::new(3), &MolConfig::molhiv())
+    }
+
+    #[test]
+    fn request_roundtrips_bit_exact() {
+        let req = WireRequest {
+            id: 0xDEAD_BEEF_1234,
+            model: "gin_vn".into(),
+            graph: graph(),
+        };
+        let frame = encode_request(&req).unwrap();
+        // The borrowed-parts encoder is byte-identical to the owned one.
+        assert_eq!(
+            frame,
+            encode_request_parts(req.id, &req.model, &req.graph).unwrap()
+        );
+        let mut r = std::io::Cursor::new(&frame);
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::Request(got) => assert_eq!(got, req),
+            other => panic!("decoded {other:?}"),
+        }
+        // Exactly one frame in the buffer.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn response_roundtrips_all_statuses() {
+        let cases = vec![
+            WireResponse::ok(7, "gcn", vec![0.25, -1.5e-7, f32::MIN_POSITIVE]),
+            WireResponse::err(8, "gcn", WireStatus::Rejected, "queue full"),
+            WireResponse::err(9, "", WireStatus::Error, "model \"bert\" not served"),
+            WireResponse::err(0, "", WireStatus::BadRequest, "checksum mismatch"),
+        ];
+        for resp in cases {
+            let frame = encode_response(&resp).unwrap();
+            let payload = read_frame(&mut std::io::Cursor::new(&frame))
+                .unwrap()
+                .unwrap();
+            match decode_frame(&payload).unwrap() {
+                WireFrame::Response(got) => assert_eq!(got, resp),
+                other => panic!("decoded {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn output_floats_cross_the_wire_bit_identically() {
+        // NaN payloads and denormals must survive: compare bit patterns,
+        // not float equality.
+        let out = vec![f32::NAN, -0.0, 1e-40, f32::INFINITY];
+        let resp = WireResponse::ok(1, "m", out.clone());
+        let frame = encode_response(&resp).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(&frame))
+            .unwrap()
+            .unwrap();
+        let WireFrame::Response(got) = decode_frame(&payload).unwrap() else {
+            panic!("not a response");
+        };
+        let got_bits: Vec<u32> = got.output.iter().map(|x| x.to_bits()).collect();
+        let want_bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let req = WireRequest {
+            id: 1,
+            model: "gcn".into(),
+            graph: graph(),
+        };
+        let frame = encode_request(&req).unwrap();
+        // Flip one body byte: the checksum must catch it.
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let payload = read_frame(&mut std::io::Cursor::new(&bad)).unwrap().unwrap();
+        let e = decode_frame(&payload).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+        // Wrong version byte.
+        let mut wrong_ver = frame.clone();
+        wrong_ver[4] = 99;
+        let payload = read_frame(&mut std::io::Cursor::new(&wrong_ver))
+            .unwrap()
+            .unwrap();
+        assert!(decode_frame(&payload)
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+        // Truncated payload.
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        assert!(decode_frame(&payload[..payload.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(u32::MAX).to_le_bytes());
+        frame.extend_from_slice(&[0u8; 16]);
+        let e = read_frame(&mut std::io::Cursor::new(&frame)).unwrap_err();
+        assert!(e.to_string().contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn eof_mid_frame_is_an_error_not_a_clean_close() {
+        let req = WireRequest {
+            id: 2,
+            model: "gat".into(),
+            graph: graph(),
+        };
+        let frame = encode_request(&req).unwrap();
+        let cut = &frame[..frame.len() / 2];
+        assert!(read_frame(&mut std::io::Cursor::new(cut)).is_err());
+        // Clean close at a boundary is None, not an error.
+        assert!(read_frame(&mut std::io::Cursor::new(&[] as &[u8]))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn invalid_graph_payload_is_rejected_at_decode() {
+        // Edge index out of range for n: the decoder must refuse it so
+        // malformed graphs never reach the coordinator.
+        let mut g = graph();
+        g.edges[0] = (9999, 0);
+        let req = WireRequest {
+            id: 3,
+            model: "gcn".into(),
+            graph: g,
+        };
+        let frame = encode_request(&req).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        assert!(decode_frame(&payload).is_err());
+    }
+
+    #[test]
+    fn salvage_recovers_ids_only_from_trustworthy_envelopes() {
+        // A well-framed request whose graph fails validation: the
+        // checksum vouches for the body, so the id is recoverable.
+        let mut g = graph();
+        g.edges[0] = (9999, 0);
+        let frame = encode_request(&WireRequest {
+            id: 77,
+            model: "gcn".into(),
+            graph: g,
+        })
+        .unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        assert!(decode_frame(&payload).is_err());
+        assert_eq!(salvage_request_id(&payload), Some(77));
+        // Corrupt body: checksum fails, id is untrusted.
+        let mut bad = payload.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert_eq!(salvage_request_id(&bad), None);
+        // Response frames and wrong versions never yield an id.
+        let resp = encode_response(&WireResponse::ok(5, "m", vec![1.0])).unwrap();
+        let rp = read_frame(&mut std::io::Cursor::new(&resp)).unwrap().unwrap();
+        assert_eq!(salvage_request_id(&rp), None);
+        let mut wrong_ver = payload;
+        wrong_ver[0] = 9;
+        assert_eq!(salvage_request_id(&wrong_ver), None);
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let a = encode_response(&WireResponse::ok(1, "a", vec![1.0])).unwrap();
+        let b = encode_response(&WireResponse::err(2, "b", WireStatus::Rejected, "shed")).unwrap();
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let mut r = std::io::Cursor::new(&stream);
+        let p1 = read_frame(&mut r).unwrap().unwrap();
+        let p2 = read_frame(&mut r).unwrap().unwrap();
+        assert!(read_frame(&mut r).unwrap().is_none());
+        let WireFrame::Response(r1) = decode_frame(&p1).unwrap() else {
+            panic!()
+        };
+        let WireFrame::Response(r2) = decode_frame(&p2).unwrap() else {
+            panic!()
+        };
+        assert_eq!((r1.id, r2.id), (1, 2));
+        assert_eq!(r2.status, WireStatus::Rejected);
+    }
+}

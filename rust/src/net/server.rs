@@ -1,0 +1,532 @@
+//! The threaded TCP front-end: the wire-level ingress that puts real
+//! traffic on the executor pool.
+//!
+//! ```text
+//! conn 0 ─ reader ─┐                                   ┌─ writer ─ conn 0
+//! conn 1 ─ reader ─┼─► Server::submit_with_id ─► lanes ─► responses
+//! conn … ─ reader ─┘        (ingest queue,              │
+//!                            Block | Reject)     demux ─┴─► per-conn
+//!                                                            outboxes
+//! ```
+//!
+//! One reader and one writer thread per connection, plus a single
+//! **demux** thread draining the coordinator's response channel and
+//! routing each response to its connection's outbox by request id.
+//! Readers register the route *before* admission (via
+//! [`Server::reserve_id`]), so a response can never race past its
+//! routing entry.
+//!
+//! Backpressure is inherited from the coordinator: under
+//! `AdmissionPolicy::Block` a full ingest queue blocks the reader,
+//! which stops draining the socket, which backs TCP up to the client —
+//! the paper's full-FIFO stall propagated all the way to the producer.
+//! Under `Reject` a shed request is answered immediately with a
+//! `Rejected` wire status on the same connection; the connection
+//! stays up.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Admission, Metrics, Server, ServerConfig};
+use crate::util::pool::Channel;
+
+use super::proto::{self, WireFrame, WireResponse, WireStatus};
+
+/// Routing entry for one in-flight wire request: which connection to
+/// answer on, under which client-side id.
+struct RouteEntry {
+    outbox: Channel<WireResponse>,
+    client_id: u64,
+}
+
+/// Stripe count of the routing table. Requests hash to a shard by id,
+/// so N connection readers and the demux contend per-stripe, not on
+/// one global lock — the same sharding story as the per-model metrics.
+const ROUTE_SHARDS: usize = 16;
+
+/// Sharded routing table for in-flight wire requests, keyed by the
+/// reserved coordinator id.
+struct RouteTable {
+    shards: Vec<Mutex<HashMap<u64, RouteEntry>>>,
+}
+
+impl RouteTable {
+    fn new() -> RouteTable {
+        RouteTable {
+            shards: (0..ROUTE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn insert(&self, id: u64, entry: RouteEntry) {
+        self.shards[id as usize % ROUTE_SHARDS]
+            .lock()
+            .unwrap()
+            .insert(id, entry);
+    }
+
+    fn remove(&self, id: u64) -> Option<RouteEntry> {
+        self.shards[id as usize % ROUTE_SHARDS]
+            .lock()
+            .unwrap()
+            .remove(&id)
+    }
+}
+
+type RouteMap = Arc<RouteTable>;
+
+/// Live-connection socket registry, keyed by connection number so a
+/// closing reader can deregister itself — long-running servers must
+/// not pin a dead connection's file descriptor until shutdown.
+type SockRegistry = Arc<Mutex<HashMap<usize, TcpStream>>>;
+
+/// Construction parameters of the TCP front-end.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7447` (port 0 for ephemeral).
+    pub listen: String,
+    /// The wrapped coordinator's configuration (models, lanes, queue
+    /// capacity, admission policy).
+    pub server: ServerConfig,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+/// A running TCP front-end over a coordinator [`Server`].
+pub struct NetServer {
+    local_addr: SocketAddr,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    demux_handle: Option<JoinHandle<()>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conn_socks: SockRegistry,
+}
+
+impl NetServer {
+    /// Compile the coordinator, bind the listener, and start serving.
+    pub fn start(cfg: NetServerConfig) -> Result<NetServer> {
+        let server = Arc::new(Server::start(cfg.server)?);
+        let metrics = server.metrics();
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        // Nonblocking accept + a short poll keeps shutdown deterministic:
+        // the accept thread re-checks the stop flag every tick instead of
+        // parking in accept(2) until a wake connection that might never
+        // land (wildcard binds, full backlogs).
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let local_addr = listener.local_addr()?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let routes: RouteMap = Arc::new(RouteTable::new());
+        let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let conn_socks: SockRegistry = Arc::new(Mutex::new(HashMap::new()));
+
+        // Demux: the coordinator's single response stream fans back out
+        // to per-connection outboxes. Also the one place end-to-end
+        // latency lands in the histogram.
+        let demux_handle = {
+            let responses = server.responses();
+            let routes = Arc::clone(&routes);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("gengnn-net-demux".to_string())
+                .spawn(move || {
+                    while let Some(r) = responses.recv() {
+                        metrics.record_e2e_latency(r.latency());
+                        let Some(entry) = routes.remove(r.id) else {
+                            // Connection closed while the request was in
+                            // flight; the result has nowhere to go.
+                            continue;
+                        };
+                        metrics
+                            .net()
+                            .requests_in_flight
+                            .fetch_sub(1, Ordering::Relaxed);
+                        let wire = match r.output {
+                            Ok(output) => {
+                                WireResponse::ok(entry.client_id, r.model, output)
+                            }
+                            Err(msg) => WireResponse::err(
+                                entry.client_id,
+                                r.model,
+                                WireStatus::Error,
+                                msg,
+                            ),
+                        };
+                        // Never block the demux on one connection: a
+                        // full outbox means the client stopped reading
+                        // (its writer is wedged against TCP), and a
+                        // closed one means the connection is gone —
+                        // drop the response either way so every other
+                        // connection keeps receiving.
+                        if entry.outbox.try_send(wire).is_err() {
+                            metrics
+                                .net()
+                                .responses_dropped
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+                .expect("spawn net demux")
+        };
+
+        // Accept loop: one reader + one writer thread per connection.
+        let accept_handle = {
+            let server = Arc::clone(&server);
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            let routes = Arc::clone(&routes);
+            let conn_handles = Arc::clone(&conn_handles);
+            let conn_socks = Arc::clone(&conn_socks);
+            std::thread::Builder::new()
+                .name("gengnn-net-accept".to_string())
+                .spawn(move || {
+                    let mut conn_no = 0usize;
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let sock = match listener.accept() {
+                            Ok((s, _)) => s,
+                            Err(e)
+                                if e.kind() == std::io::ErrorKind::WouldBlock =>
+                            {
+                                // Idle: nothing pending; poll the stop
+                                // flag again shortly.
+                                std::thread::sleep(
+                                    std::time::Duration::from_millis(20),
+                                );
+                                continue;
+                            }
+                            Err(_) => {
+                                // Persistent accept errors (e.g. fd
+                                // exhaustion) repeat immediately; back
+                                // off instead of spinning a core.
+                                std::thread::sleep(
+                                    std::time::Duration::from_millis(10),
+                                );
+                                continue;
+                            }
+                        };
+                        conn_no += 1;
+                        // Whether an accepted socket inherits the
+                        // listener's nonblocking mode is
+                        // platform-dependent; connection threads use
+                        // blocking I/O.
+                        if sock.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let _ = sock.set_nodelay(true);
+                        metrics
+                            .net()
+                            .connections_accepted
+                            .fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .net()
+                            .connections_open
+                            .fetch_add(1, Ordering::Relaxed);
+                        // The registry entry is what shutdown uses to
+                        // force this connection closed; serving an
+                        // untracked socket could hang the reader join,
+                        // so a failed clone drops the connection.
+                        match sock.try_clone() {
+                            Ok(clone) => {
+                                conn_socks.lock().unwrap().insert(conn_no, clone);
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "[net] dropping connection {conn_no}: {e}"
+                                );
+                                metrics
+                                    .net()
+                                    .connections_open
+                                    .fetch_sub(1, Ordering::Relaxed);
+                                continue;
+                            }
+                        }
+                        match spawn_connection(
+                            conn_no,
+                            sock,
+                            Arc::clone(&server),
+                            Arc::clone(&metrics),
+                            Arc::clone(&routes),
+                            Arc::clone(&conn_socks),
+                        ) {
+                            Ok((rh, wh)) => {
+                                // Reap finished connection threads so the
+                                // handle list tracks live connections,
+                                // not history.
+                                let mut handles = conn_handles.lock().unwrap();
+                                let mut i = 0;
+                                while i < handles.len() {
+                                    if handles[i].is_finished() {
+                                        let _ = handles.swap_remove(i).join();
+                                    } else {
+                                        i += 1;
+                                    }
+                                }
+                                handles.push(rh);
+                                handles.push(wh);
+                            }
+                            Err(e) => {
+                                // Resource exhaustion (clone or thread
+                                // spawn failed): drop this connection and
+                                // keep accepting — the listener must
+                                // outlive transient pressure.
+                                eprintln!(
+                                    "[net] dropping connection {conn_no}: {e}"
+                                );
+                                conn_socks.lock().unwrap().remove(&conn_no);
+                                metrics
+                                    .net()
+                                    .connections_open
+                                    .fetch_sub(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
+                .expect("spawn net accept loop")
+        };
+
+        Ok(NetServer {
+            local_addr,
+            server,
+            metrics,
+            stop,
+            accept_handle: Some(accept_handle),
+            demux_handle: Some(demux_handle),
+            conn_handles,
+            conn_socks,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Models the wrapped coordinator serves.
+    pub fn served_models(&self) -> &[String] {
+        self.server.served_models()
+    }
+
+    /// Stop accepting, close every connection, drain the coordinator,
+    /// and return the final metrics.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        // The accept loop polls this flag between nonblocking accepts,
+        // so it exits within one tick — no wake connection required.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // Force every connection closed so readers and writers unwind.
+        for (_, s) in self.conn_socks.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conn_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // All reader clones of the coordinator are joined; unwrap the
+        // sole remaining Arc and drain it. Closing the response channel
+        // (inside Server::shutdown) releases the demux thread.
+        let server = Arc::try_unwrap(self.server)
+            .unwrap_or_else(|_| panic!("coordinator still shared at shutdown"));
+        let metrics = server.shutdown();
+        if let Some(h) = self.demux_handle.take() {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+/// Spawn the reader/writer pair for one accepted connection. Errors
+/// (socket clone or thread spawn failing under resource exhaustion)
+/// are returned, not panicked — the accept loop drops the connection
+/// and keeps serving.
+fn spawn_connection(
+    conn_no: usize,
+    sock: TcpStream,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    routes: RouteMap,
+    socks: SockRegistry,
+) -> Result<(JoinHandle<()>, JoinHandle<()>)> {
+    // Outbox sized generously; if a client stops reading long enough
+    // to fill it anyway, the demux drops that connection's responses
+    // (`responses_dropped`) rather than stalling everyone else.
+    let outbox: Channel<WireResponse> = Channel::bounded(1024);
+
+    let writer_handle = {
+        let outbox = outbox.clone();
+        let sock = sock.try_clone().context("cloning connection for writer")?;
+        std::thread::Builder::new()
+            .name(format!("gengnn-net-writer-{conn_no}"))
+            .spawn(move || {
+                let mut w = BufWriter::new(sock);
+                while let Some(resp) = outbox.recv() {
+                    let Ok(frame) = proto::encode_response(&resp) else {
+                        continue;
+                    };
+                    if w.write_all(&frame).is_err() {
+                        break;
+                    }
+                    // Batch flushes under load: only hit the socket
+                    // when no further response is already queued.
+                    if outbox.is_empty() && w.flush().is_err() {
+                        break;
+                    }
+                }
+                // Whatever ended this writer (closed outbox or a dead
+                // socket), close the outbox: a reader parked in a
+                // blocking outbox.send would otherwise wait forever on
+                // a channel nothing will ever drain again.
+                outbox.close();
+            })
+            .context("spawning net writer")?
+    };
+
+    let outbox_on_err = outbox.clone();
+    let reader_handle = {
+        match std::thread::Builder::new()
+            .name(format!("gengnn-net-reader-{conn_no}"))
+            .spawn(move || {
+                let mut r = BufReader::new(sock);
+                loop {
+                    let payload = match proto::read_frame(&mut r) {
+                        Ok(Some(p)) => p,
+                        // Clean EOF or socket error: unwind the connection.
+                        Ok(None) | Err(_) => break,
+                    };
+                    let req = match proto::decode_frame(&payload) {
+                        Ok(WireFrame::Request(req)) => req,
+                        Ok(WireFrame::Response(_)) => {
+                            // A response frame on the server's ingress is
+                            // a protocol violation; answer and move on.
+                            metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = outbox.send(WireResponse::err(
+                                proto::BAD_FRAME_ID,
+                                "",
+                                WireStatus::BadRequest,
+                                "response frame sent to server",
+                            ));
+                            continue;
+                        }
+                        Err(e) => {
+                            // Framing is intact (read_frame succeeded) but
+                            // the payload is bad: report it on this
+                            // connection — under the caller's own id when
+                            // the envelope checksum vouches for it — and
+                            // keep serving.
+                            metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
+                            let id = proto::salvage_request_id(&payload)
+                                .unwrap_or(proto::BAD_FRAME_ID);
+                            let _ = outbox.send(WireResponse::err(
+                                id,
+                                "",
+                                WireStatus::BadRequest,
+                                format!("{e}"),
+                            ));
+                            continue;
+                        }
+                    };
+                    // Route registration precedes admission (see module
+                    // docs): reserve, install, then submit.
+                    let server_id = server.reserve_id();
+                    routes.insert(
+                        server_id,
+                        RouteEntry {
+                            outbox: outbox.clone(),
+                            client_id: req.id,
+                        },
+                    );
+                    metrics
+                        .net()
+                        .requests_in_flight
+                        .fetch_add(1, Ordering::Relaxed);
+                    match server.submit_with_id(server_id, &req.model, req.graph) {
+                        Admission::Accepted => {}
+                        Admission::Rejected => {
+                            // Shed: unregister and answer immediately with
+                            // the Rejected wire status.
+                            routes.remove(server_id);
+                            metrics
+                                .net()
+                                .requests_in_flight
+                                .fetch_sub(1, Ordering::Relaxed);
+                            let _ = outbox.send(WireResponse::err(
+                                req.id,
+                                req.model,
+                                WireStatus::Rejected,
+                                "ingest queue full",
+                            ));
+                        }
+                    }
+                }
+                // Reader gone: close the outbox so the writer drains
+                // what is queued and exits, deregister the socket (the
+                // fd must not outlive the connection), and drop the
+                // open-connections gauge; late demux sends fail soft.
+                outbox.close();
+                socks.lock().unwrap().remove(&conn_no);
+                metrics
+                    .net()
+                    .connections_open
+                    .fetch_sub(1, Ordering::Relaxed);
+            }) {
+            Ok(h) => h,
+            Err(e) => {
+                // The writer is already running: close its outbox so it
+                // exits, join it, then report the spawn failure.
+                outbox_on_err.close();
+                let _ = writer_handle.join();
+                return Err(anyhow::Error::from(e).context("spawning net reader"));
+            }
+        }
+    };
+
+    Ok((reader_handle, writer_handle))
+}
+
+/// Dial helper shared by the client and the load generator.
+pub(crate) fn dial(addr: &str) -> Result<TcpStream> {
+    let mut last_err = None;
+    for a in addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+    {
+        match TcpStream::connect(a) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(match last_err {
+        Some(e) => anyhow::Error::from(e).context(format!("connecting to {addr}")),
+        None => anyhow::anyhow!("{addr} resolved to no addresses"),
+    })
+}

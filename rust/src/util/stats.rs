@@ -1,5 +1,8 @@
-//! Statistics substrate: streaming moments, percentiles, and the
-//! latency summaries printed by the coordinator and bench harness.
+//! Statistics substrate: streaming moments, percentiles, a lock-free
+//! HDR-style latency histogram, and the latency summaries printed by
+//! the coordinator and bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Welford streaming mean/variance plus min/max.
 #[derive(Clone, Debug, Default)]
@@ -143,6 +146,175 @@ impl Sample {
     }
 }
 
+/// Sub-buckets per power of two in [`LatencyHistogram`] — 32 gives a
+/// worst-case relative quantile error of 1/64 (~1.6%), HDR-histogram
+/// territory at a fraction of the footprint.
+const HIST_SUB_BUCKETS: usize = 32;
+/// Bucket count covering the full u64 nanosecond range: indices 0..32
+/// are exact 1 ns buckets, then 32 log-spaced sub-buckets per octave
+/// up to 2^63 ns (~292 years).
+const HIST_BUCKETS: usize = 60 * HIST_SUB_BUCKETS;
+
+/// Lock-free log-bucketed latency histogram (HDR-histogram style):
+/// bounded memory regardless of sample count, ~1.6% worst-case
+/// quantile error, recordable concurrently from every server stage
+/// without a lock. Values are durations in seconds, stored as integer
+/// nanoseconds.
+///
+/// This is the telemetry substrate behind the wire front-end's
+/// end-to-end latency report and the load generator's p50/p95/p99
+/// summary — the retained-sample [`Sample`] stays exact but grows with
+/// the stream, which a server holding millions of requests cannot do.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    min_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            min_nanos: AtomicU64::new(u64::MAX),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a nanosecond value: exact below 32 ns, then
+    /// `HIST_SUB_BUCKETS` linear sub-buckets per power of two.
+    fn bucket_index(nanos: u64) -> usize {
+        if nanos < HIST_SUB_BUCKETS as u64 {
+            nanos as usize
+        } else {
+            let msb = 63 - nanos.leading_zeros() as usize;
+            let sub = ((nanos >> (msb - 5)) & (HIST_SUB_BUCKETS as u64 - 1)) as usize;
+            (msb - 4) * HIST_SUB_BUCKETS + sub
+        }
+    }
+
+    /// Inclusive lower bound of a bucket, in nanoseconds.
+    fn bucket_lower(idx: usize) -> u64 {
+        if idx < HIST_SUB_BUCKETS {
+            idx as u64
+        } else {
+            let msb = idx / HIST_SUB_BUCKETS + 4;
+            let sub = (idx % HIST_SUB_BUCKETS) as u64;
+            (HIST_SUB_BUCKETS as u64 + sub) << (msb - 5)
+        }
+    }
+
+    /// Representative (midpoint) value of a bucket, in nanoseconds.
+    fn bucket_mid(idx: usize) -> u64 {
+        let lo = Self::bucket_lower(idx);
+        if idx < HIST_SUB_BUCKETS {
+            lo
+        } else {
+            let width = 1u64 << (idx / HIST_SUB_BUCKETS - 1);
+            lo + width / 2
+        }
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[Self::bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.min_nanos.fetch_min(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds (negative values clamp to zero).
+    pub fn record(&self, secs: f64) {
+        self.record_nanos((secs.max(0.0) * 1e9).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Mean recorded duration in seconds (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 * 1e-9 / n as f64
+    }
+
+    /// Smallest recorded duration in seconds (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        self.min_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Largest recorded duration in seconds (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        self.max_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Quantile in seconds, `q` in [0, 1]; NaN when empty. The walk is
+    /// a snapshot — concurrent recording may perturb the answer by the
+    /// in-flight samples, never corrupt it.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let mid = Self::bucket_mid(idx) as f64 * 1e-9;
+                // Bucket midpoints can exceed the true extremes; the
+                // recorded min/max are exact, so clamp to them. A
+                // racing first `record_nanos` may have bumped the
+                // bucket before min/max — skip the clamp while the
+                // extremes are still at their sentinels (min > max),
+                // f64::clamp panics on an inverted range.
+                let lo = self.min_nanos.load(Ordering::Relaxed);
+                let hi = self.max_nanos.load(Ordering::Relaxed);
+                if lo <= hi {
+                    return mid.clamp(lo as f64 * 1e-9, hi as f64 * 1e-9);
+                }
+                return mid;
+            }
+        }
+        self.max()
+    }
+
+    /// The `p50 / p95 / p99` line every latency report prints.
+    pub fn render_quantiles(&self) -> String {
+        if self.is_empty() {
+            return "p50 - p95 - p99 -".to_string();
+        }
+        format!(
+            "p50 {} p95 {} p99 {}",
+            fmt_secs(self.quantile(0.50)),
+            fmt_secs(self.quantile(0.95)),
+            fmt_secs(self.quantile(0.99)),
+        )
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Human format for a duration in seconds.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -197,6 +369,79 @@ mod tests {
         s.push(1000.0);
         s.push(-1000.0);
         assert!((s.trimmed_mean(0.05) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bucket_roundtrip() {
+        // Every bucket's representative value must map back to the
+        // same bucket, and lower bounds must be strictly increasing.
+        let mut prev = 0u64;
+        for idx in 0..HIST_BUCKETS {
+            let lo = LatencyHistogram::bucket_lower(idx);
+            assert_eq!(LatencyHistogram::bucket_index(lo), idx, "lower of {idx}");
+            let mid = LatencyHistogram::bucket_mid(idx);
+            assert_eq!(LatencyHistogram::bucket_index(mid), idx, "mid of {idx}");
+            if idx > 0 {
+                assert!(lo > prev, "bucket {idx} not increasing");
+            }
+            prev = lo;
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_track_exact_sample() {
+        // 10 µs .. 10 ms in distinct steps against the exact Sample
+        // implementation: the log buckets promise <= 1/64 relative
+        // error (the 5% bound also absorbs the rank-definition gap).
+        let h = LatencyHistogram::new();
+        let mut s = Sample::new();
+        for i in 1..=1000u64 {
+            let secs = i as f64 * 1e-5;
+            h.record(secs);
+            s.push(secs);
+        }
+        assert_eq!(h.count(), 1000);
+        for q in [0.5, 0.95, 0.99] {
+            let exact = s.percentile(q * 100.0);
+            let approx = h.quantile(q);
+            assert!(
+                (approx - exact).abs() <= exact * 0.05 + 1e-9,
+                "q{q}: approx {approx} vs exact {exact}"
+            );
+        }
+        assert!((h.mean() - s.mean()).abs() < 1e-4);
+        assert!((h.min() - 1e-5).abs() < 1e-8);
+        assert!((h.max() - 1e-2).abs() < 1e-6);
+        assert!(h.render_quantiles().contains("p99"));
+    }
+
+    #[test]
+    fn histogram_empty_is_nan() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan() && h.min().is_nan() && h.max().is_nan());
+        assert_eq!(h.render_quantiles(), "p50 - p95 - p99 -");
+    }
+
+    #[test]
+    fn histogram_concurrent_recording_reconciles() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = std::sync::Arc::clone(&h);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_nanos((t + 1) * 1000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        let p100 = h.quantile(1.0);
+        assert!(p100 <= h.max() + 1e-12);
     }
 
     #[test]

@@ -1,0 +1,56 @@
+//! Helpers shared across the integration-test crates. Each file in
+//! `rust/tests/` compiles as its own crate and links this in via
+//! `mod common;`, so fixture conventions (the request-graph envelope,
+//! the skip-on-stripped-artifacts policy) have one definition instead
+//! of drifting copies.
+#![allow(dead_code)] // not every test crate uses every helper
+
+use gengnn::datagen::{random_graph, RandomGraphConfig};
+use gengnn::graph::CooGraph;
+use gengnn::runtime::{Artifacts, ModelMeta};
+use gengnn::util::rng::Rng;
+
+/// Load the checked-in artifact fixtures, or skip (None) with a notice
+/// on a clean-but-stripped checkout. `cargo test -q` must pass either
+/// way.
+pub fn artifacts_or_skip() -> Option<Artifacts> {
+    match Artifacts::load(Artifacts::default_dir()) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!(
+                "skipping artifact-gated test — no artifacts ({e}); run `make artifacts`"
+            );
+            None
+        }
+    }
+}
+
+/// A valid request graph for `meta`: node count inside the model's
+/// capacity, feature widths matching the manifest, edge features only
+/// when the model consumes them.
+pub fn fixture_graph(meta: &ModelMeta, rng: &mut Rng) -> CooGraph {
+    let n_cap = meta.n_max.min(32);
+    let mut g = random_graph(
+        rng,
+        &RandomGraphConfig {
+            nodes: rng.range(4, n_cap + 1),
+            avg_degree: 3.0,
+            high_degree_fraction: 0.1,
+            hub_multiplier: 3.0,
+            f_node: meta.in_dim,
+        },
+    );
+    let f_edge = meta
+        .inputs
+        .iter()
+        .find(|i| i.name == "edge_attr")
+        .and_then(|i| i.shape.last().copied())
+        .unwrap_or(0);
+    if f_edge > 0 {
+        g.f_edge = f_edge;
+        g.edge_feat = (0..g.num_edges() * f_edge)
+            .map(|_| rng.below(4) as f32)
+            .collect();
+    }
+    g
+}

@@ -15,25 +15,16 @@
 //! forward pass (accumulated-f32 noise vs JAX), while a PJRT backend
 //! executes the identical HLO and must match tighter.
 
-use gengnn::runtime::{Artifacts, Engine, Golden};
+use gengnn::runtime::{Engine, Golden};
+
+mod common;
+use common::artifacts_or_skip;
 
 fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
     a.len() == b.len()
         && a.iter()
             .zip(b)
             .all(|(x, y)| (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())))
-}
-
-/// Load artifacts or skip (None) with a notice on a clean-but-stripped
-/// checkout. `cargo test -q` must pass either way.
-fn artifacts_or_skip() -> Option<Artifacts> {
-    match Artifacts::load(Artifacts::default_dir()) {
-        Ok(a) => Some(a),
-        Err(e) => {
-            eprintln!("skipping golden test — no artifacts ({e}); run `make artifacts`");
-            None
-        }
-    }
 }
 
 #[test]
@@ -59,6 +50,55 @@ fn every_model_matches_its_golden() {
             &out[..out.len().min(6)],
             &golden.output[..golden.output.len().min(6)]
         );
+    }
+}
+
+#[test]
+fn every_shipped_golden_is_exercised_or_explicitly_skipped() {
+    // Coverage guard for the fixture set: a `*.golden.json` sitting in
+    // `artifacts/` but absent from the manifest would never be touched
+    // by `every_model_matches_its_golden` (which iterates the
+    // manifest) — it would ship as a silently dead fixture. Any model
+    // intentionally not exercised by the Rust zoo must be named here.
+    const SKIP: &[&str] = &[];
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let referenced: std::collections::BTreeSet<String> = artifacts
+        .models
+        .iter()
+        .filter_map(|m| {
+            m.golden_path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+        })
+        .collect();
+    for entry in std::fs::read_dir(&artifacts.dir).expect("artifact dir") {
+        let name = entry.expect("dir entry").file_name();
+        let name = name.to_string_lossy();
+        let Some(stem) = name.strip_suffix(".golden.json") else {
+            continue;
+        };
+        assert!(
+            referenced.contains(name.as_ref()) || SKIP.contains(&stem),
+            "{name}: shipped golden is neither in the manifest (so golden.rs \
+             never exercises it) nor on the explicit skip list"
+        );
+    }
+    // And the converse: every manifest entry ships its golden.
+    for m in &artifacts.models {
+        assert!(
+            m.golden_path.is_file(),
+            "{}: manifest references {:?} but it is not on disk",
+            m.name,
+            m.golden_path
+        );
+    }
+    // The sgc/sage extension models ride the same guarantee: they are
+    // manifest entries, so the golden sweep above covers them — pin
+    // that so they can never silently fall off the zoo again.
+    for name in ["sage.golden.json", "sgc.golden.json"] {
+        assert!(referenced.contains(name), "{name} missing from manifest");
     }
 }
 

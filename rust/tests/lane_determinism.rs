@@ -16,40 +16,12 @@ use std::collections::BTreeMap;
 use gengnn::coordinator::{
     Admission, AdmissionPolicy, BatchPolicy, Metrics, Server, ServerConfig,
 };
-use gengnn::datagen::{random_graph, RandomGraphConfig};
 use gengnn::graph::CooGraph;
-use gengnn::runtime::{Artifacts, ModelMeta};
+use gengnn::runtime::Artifacts;
 use gengnn::util::rng::Rng;
 
-/// A valid request graph for `meta`: node count inside the model's
-/// capacity, feature widths matching the manifest, edge features only
-/// when the model consumes them.
-fn fixture_graph(meta: &ModelMeta, rng: &mut Rng) -> CooGraph {
-    let n_cap = meta.n_max.min(32);
-    let mut g = random_graph(
-        rng,
-        &RandomGraphConfig {
-            nodes: rng.range(4, n_cap + 1),
-            avg_degree: 3.0,
-            high_degree_fraction: 0.1,
-            hub_multiplier: 3.0,
-            f_node: meta.in_dim,
-        },
-    );
-    let f_edge = meta
-        .inputs
-        .iter()
-        .find(|i| i.name == "edge_attr")
-        .and_then(|i| i.shape.last().copied())
-        .unwrap_or(0);
-    if f_edge > 0 {
-        g.f_edge = f_edge;
-        g.edge_feat = (0..g.num_edges() * f_edge)
-            .map(|_| rng.below(4) as f32)
-            .collect();
-    }
-    g
-}
+mod common;
+use common::fixture_graph;
 
 type ResponseMap = BTreeMap<u64, Result<Vec<f32>, String>>;
 

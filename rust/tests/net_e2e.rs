@@ -1,0 +1,332 @@
+//! End-to-end tests of the TCP serving front-end: outputs served over
+//! the wire must be **bit-identical** to in-process `ServerHandle`
+//! results for every manifest model; a saturated Reject-mode queue
+//! must surface as a `Rejected` wire status (not a hang or a dropped
+//! connection); malformed frames must be answered and counted, never
+//! crash the server; and a full open-loop loadgen run over loopback
+//! must reconcile `submitted = completed + rejected + failed`.
+//!
+//! CI runs this file in release mode as well
+//! (`cargo test --release --test net_e2e`).
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, each test skips with a notice.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::Duration;
+
+use gengnn::coordinator::{AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::graph::CooGraph;
+use gengnn::net::proto::{self, WireFrame, WireRequest};
+use gengnn::net::{
+    loadgen, LoadGenConfig, NetClient, NetServer, NetServerConfig, WireStatus,
+};
+use gengnn::util::rng::Rng;
+
+mod common;
+use common::{artifacts_or_skip, fixture_graph};
+
+fn net_server(cfg: ServerConfig) -> NetServer {
+    NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        server: cfg,
+    })
+    .expect("net server start")
+}
+
+#[test]
+fn tcp_outputs_bit_identical_to_in_process_for_every_model() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    // Per-model fixture streams (shorter for the large node-level
+    // model, whose padded forward dominates test time).
+    let mut streams: BTreeMap<String, Vec<CooGraph>> = BTreeMap::new();
+    for (idx, meta) in artifacts.models.iter().enumerate() {
+        let count = if meta.n_max > 64 { 2 } else { 3 };
+        let mut rng = Rng::new(0x4E7 + idx as u64);
+        streams.insert(
+            meta.name.clone(),
+            (0..count).map(|_| fixture_graph(meta, &mut rng)).collect(),
+        );
+    }
+
+    // In-process reference: the plain `ServerHandle` path.
+    let in_process = Server::start(ServerConfig {
+        executor_lanes: 2,
+        ..ServerConfig::default()
+    })
+    .expect("in-process server start");
+    let responses = in_process.responses();
+    let mut reference: BTreeMap<(String, usize), Vec<u32>> = BTreeMap::new();
+    for (model, graphs) in &streams {
+        let mut by_id = BTreeMap::new();
+        for (i, g) in graphs.iter().enumerate() {
+            let (_, id) = in_process.submit(model, g.clone());
+            by_id.insert(id, i);
+        }
+        for _ in 0..graphs.len() {
+            let r = responses.recv().expect("in-process response");
+            let out = r.output.unwrap_or_else(|e| panic!("{model}: {e}"));
+            let i = by_id[&r.id];
+            reference.insert(
+                (model.clone(), i),
+                out.iter().map(|x| x.to_bits()).collect(),
+            );
+        }
+    }
+    in_process.shutdown();
+
+    // Wire path: same graphs, fresh server, served over loopback TCP.
+    let net = net_server(ServerConfig {
+        executor_lanes: 2,
+        ..ServerConfig::default()
+    });
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 2).expect("client connect");
+    for (model, graphs) in &streams {
+        for (i, g) in graphs.iter().enumerate() {
+            let resp = client.infer(model, g).expect("wire infer");
+            assert_eq!(
+                resp.status,
+                WireStatus::Ok,
+                "{model}[{i}]: {}",
+                resp.error
+            );
+            assert_eq!(resp.model, *model);
+            let got: Vec<u32> = resp.output.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                got,
+                reference[&(model.clone(), i)],
+                "{model}[{i}]: TCP-served output differs from in-process bits"
+            );
+        }
+    }
+    let metrics = net.shutdown();
+    let total: u64 = streams.values().map(|g| g.len() as u64).sum();
+    assert_eq!(metrics.total_completed(), total);
+    assert_eq!(metrics.e2e_histogram().count(), total);
+    assert_eq!(
+        metrics.net().requests_in_flight.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "every wire request must be answered"
+    );
+}
+
+#[test]
+fn unknown_model_over_tcp_is_a_typed_error_response() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string()],
+        ..ServerConfig::default()
+    });
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 1).expect("client connect");
+    let mut rng = Rng::new(5);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+    let resp = client.infer("bert", &g).expect("wire exchange");
+    assert_eq!(resp.status, WireStatus::Error);
+    assert!(!resp.error.is_empty());
+    // The connection is still good for a valid request afterwards.
+    let resp = client.infer("gcn", &g).expect("wire infer");
+    assert_eq!(resp.status, WireStatus::Ok, "{}", resp.error);
+    net.shutdown();
+}
+
+#[test]
+fn reject_mode_saturation_surfaces_as_rejected_wire_status() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    // Tiny queue + Reject admission + a pipelined burst on one
+    // connection: the server must answer all 40 frames (mix of Ok and
+    // Rejected), not hang and not drop the connection.
+    let net = net_server(ServerConfig {
+        models: vec!["gin".to_string()],
+        prep_workers: 1,
+        executor_lanes: 1,
+        queue_capacity: 2,
+        admission: AdmissionPolicy::Reject,
+        batch: BatchPolicy::default(),
+        ..ServerConfig::default()
+    });
+    let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
+    sock.set_nodelay(true).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut rx = std::io::BufReader::new(sock.try_clone().unwrap());
+
+    let mut rng = Rng::new(9);
+    let cfg = gengnn::datagen::MolConfig::molhiv();
+    let burst = 40u64;
+    for id in 0..burst {
+        let req = WireRequest {
+            id,
+            model: "gin".to_string(),
+            graph: gengnn::datagen::molecular_graph(&mut rng, &cfg),
+        };
+        sock.write_all(&proto::encode_request(&req).unwrap()).unwrap();
+    }
+    sock.flush().unwrap();
+
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..burst {
+        let payload = proto::read_frame(&mut rx)
+            .expect("read response")
+            .expect("connection must stay open through the burst");
+        let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+            panic!("server sent a non-response frame");
+        };
+        assert!(seen.insert(resp.id), "duplicate response id {}", resp.id);
+        match resp.status {
+            WireStatus::Ok => ok += 1,
+            WireStatus::Rejected => {
+                assert!(!resp.error.is_empty());
+                rejected += 1;
+            }
+            other => panic!("unexpected status {other:?}: {}", resp.error),
+        }
+    }
+    assert_eq!(ok + rejected, burst);
+    assert!(ok >= 1, "at least the first request must be admitted");
+    assert!(
+        rejected >= 1,
+        "a 40-request burst into a queue of 2 must shed load"
+    );
+
+    // The connection survives the shedding: one more request round-trips.
+    let req = WireRequest {
+        id: 1000,
+        model: "gin".to_string(),
+        graph: gengnn::datagen::molecular_graph(&mut rng, &cfg),
+    };
+    sock.write_all(&proto::encode_request(&req).unwrap()).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("still open");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!(resp.id, 1000);
+
+    let metrics = net.shutdown();
+    assert_eq!(metrics.rejected(), rejected);
+}
+
+#[test]
+fn malformed_frames_are_counted_and_answered_not_fatal() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string()],
+        ..ServerConfig::default()
+    });
+    let metrics = net.metrics();
+    let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
+    sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut rx = std::io::BufReader::new(sock.try_clone().unwrap());
+
+    // A structurally valid frame with a wrong version byte.
+    let mut rng = Rng::new(11);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+    let mut frame = proto::encode_request(&WireRequest {
+        id: 1,
+        model: "gcn".to_string(),
+        graph: g.clone(),
+    })
+    .unwrap();
+    frame[4] = 99; // version byte lives right after the length prefix
+    sock.write_all(&frame).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!(resp.status, WireStatus::BadRequest);
+    assert!(resp.error.contains("version"), "{}", resp.error);
+    // A corrupt envelope cannot vouch for its id: the sentinel keeps
+    // the answer from colliding with a real in-flight request.
+    assert_eq!(resp.id, proto::BAD_FRAME_ID);
+    assert_eq!(
+        metrics.net().decode_errors.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+
+    // A well-framed request whose graph fails validation is answered
+    // under the caller's own id.
+    let mut bad_graph = g.clone();
+    bad_graph.edges[0] = (9999, 0);
+    sock.write_all(
+        &proto::encode_request(&WireRequest {
+            id: 55,
+            model: "gcn".to_string(),
+            graph: bad_graph,
+        })
+        .unwrap(),
+    )
+    .unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!((resp.id, resp.status), (55, WireStatus::BadRequest));
+
+    // Same connection, valid request: still served.
+    sock.write_all(
+        &proto::encode_request(&WireRequest {
+            id: 2,
+            model: "gcn".to_string(),
+            graph: g,
+        })
+        .unwrap(),
+    )
+    .unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("still open");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!((resp.id, resp.status), (2, WireStatus::Ok));
+    net.shutdown();
+}
+
+#[test]
+fn loadgen_over_loopback_reconciles_and_reports_percentiles() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string(), "sgc".to_string()],
+        executor_lanes: 2,
+        ..ServerConfig::default()
+    });
+    let report = loadgen::run(&LoadGenConfig {
+        addr: net.local_addr().to_string(),
+        rps: 400.0,
+        count: 80,
+        connections: 2,
+        models: vec!["gcn".to_string(), "sgc".to_string()],
+        seed: 3,
+        graph_pool: 8,
+        drain_timeout: Duration::from_secs(60),
+    })
+    .expect("loadgen run");
+
+    assert!(report.reconciles(), "{report:?}");
+    assert_eq!(report.submitted, 80);
+    assert_eq!(report.completed, 80, "{report:?}");
+    assert_eq!((report.rejected, report.failed, report.lost), (0, 0, 0));
+    assert!(report.achieved_rps > 0.0);
+    assert!(report.p50 > 0.0 && report.p50.is_finite());
+    assert!(report.p50 <= report.p95 && report.p95 <= report.p99, "{report:?}");
+    assert!(report.p99 <= report.max * 1.001, "{report:?}");
+    let per_model: u64 = report.per_model.iter().map(|(_, n)| *n).sum();
+    assert_eq!(per_model, 80, "model mix must cover every completion");
+    assert_eq!(report.per_model.len(), 2);
+    assert!(report.render().contains("p99"));
+
+    let metrics = net.shutdown();
+    assert_eq!(metrics.total_completed(), 80);
+    assert_eq!(metrics.e2e_histogram().count(), 80);
+}
