@@ -4,7 +4,7 @@
 # Full artifact regeneration (needs jax): make artifacts
 
 .PHONY: build test check fmt clippy artifacts artifacts-golden bench-snapshot \
-	serve loadgen check-artifacts clean
+	serve loadgen check-artifacts check-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -44,6 +44,17 @@ loadgen:
 # artifacts-integrity job).
 check-artifacts:
 	python3 python/tools/check_artifacts.py artifacts
+
+# Lower every manifest model through the real binary and validate the
+# stage-IR dumps (CI's plan-coverage step).
+check-plans: build
+	@mkdir -p target/plans; \
+	models=$$(python3 -c "import json; print(' '.join(x['name'] for x in json.load(open('artifacts/manifest.json'))['models']))"); \
+	test -n "$$models" || { echo "no models in artifacts/manifest.json"; exit 1; }; \
+	for m in $$models; do \
+		./target/release/gengnn plan $$m --json > target/plans/$$m.json && \
+		python3 python/tools/check_plan_schema.py target/plans/$$m.json --model $$m || exit 1; \
+	done
 
 # Refresh the perf-trajectory anchor from the micro bench.
 # (cargo runs benches with cwd = rust/, so anchor the path to the repo root.)

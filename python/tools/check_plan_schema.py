@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Validate a `gengnn plan --json` dump against the stage-IR schema.
+
+CI's plan-coverage step lowers every manifest model through the real
+binary and feeds each dump through this check, so a model that stops
+lowering to a `ModelPlan` — or a dump whose stage widths stop chaining
+— fails the build instead of shipping a broken component registry.
+
+Schema (emitted by `ModelPlan::to_json` in `rust/src/models/plan.rs`):
+
+  {
+    "model": str, "n_max": int, "in_dim": int, "out_dim": int,
+    "edge_dim": int, "node_level": bool,
+    "vn_params": int, "total_params": int,
+    "stages": [
+      {"index": int, "stage": str, "detail": str,
+       "in_width": int, "out_width": int, "params": int}, ...
+    ]
+  }
+
+Checked invariants: stages non-empty and consecutively indexed; every
+stage name drawn from the component library; widths chain stage to
+stage, opening at in_dim and closing at out_dim; exactly one readout;
+total_params = vn_params + sum(stage params).
+
+Usage:
+  python3 python/tools/check_plan_schema.py PLAN.json [--model NAME]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+TOP_KEYS = {
+    "model",
+    "n_max",
+    "in_dim",
+    "out_dim",
+    "edge_dim",
+    "node_level",
+    "vn_params",
+    "total_params",
+    "stages",
+}
+STAGE_KEYS = {"index", "stage", "detail", "in_width", "out_width", "params"}
+STAGE_NAMES = {
+    "linear",
+    "sparse_aggregate",
+    "take_aggregate",
+    "eps_combine",
+    "residual_linear",
+    "dual_linear",
+    "edge_attention",
+    "activation",
+    "l2_normalize",
+    "virtual_node_add",
+    "virtual_node_update",
+    "readout",
+}
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_nat(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("plan", type=Path)
+    ap.add_argument("--model", help="expected model name", default=None)
+    a = ap.parse_args()
+
+    try:
+        dump = json.loads(a.plan.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{a.plan}: unreadable plan dump: {e}")
+
+    if not isinstance(dump, dict):
+        fail("top level is not an object")
+    missing = TOP_KEYS - dump.keys()
+    if missing:
+        fail(f"missing top-level keys {sorted(missing)}")
+    if not isinstance(dump["model"], str) or not dump["model"]:
+        fail("'model' must be a non-empty string")
+    if a.model is not None and dump["model"] != a.model:
+        fail(f"dump is for model {dump['model']!r}, expected {a.model!r}")
+    for k in ("n_max", "in_dim", "out_dim", "edge_dim", "vn_params", "total_params"):
+        if not is_nat(dump[k]):
+            fail(f"'{k}' must be a non-negative integer, got {dump[k]!r}")
+    if not isinstance(dump["node_level"], bool):
+        fail("'node_level' must be a bool")
+
+    stages = dump["stages"]
+    if not isinstance(stages, list) or not stages:
+        fail("'stages' must be a non-empty list")
+    prev_out = dump["in_dim"]
+    readouts = 0
+    params_sum = 0
+    for i, s in enumerate(stages):
+        where = f"stages[{i}]"
+        if not isinstance(s, dict):
+            fail(f"{where} is not an object")
+        missing = STAGE_KEYS - s.keys()
+        if missing:
+            fail(f"{where} missing keys {sorted(missing)}")
+        if s["index"] != i:
+            fail(f"{where}: index {s['index']!r} out of order")
+        if s["stage"] not in STAGE_NAMES:
+            fail(f"{where}: unknown stage {s['stage']!r}")
+        if not isinstance(s["detail"], str):
+            fail(f"{where}: 'detail' must be a string")
+        for k in ("in_width", "out_width", "params"):
+            if not is_nat(s[k]):
+                fail(f"{where}: '{k}' must be a non-negative integer")
+        if s["in_width"] != prev_out:
+            fail(
+                f"{where}: in_width {s['in_width']} does not chain from "
+                f"previous out_width {prev_out}"
+            )
+        prev_out = s["out_width"]
+        if s["stage"] == "readout":
+            readouts += 1
+        params_sum += s["params"]
+    if readouts != 1:
+        fail(f"expected exactly one readout stage, found {readouts}")
+    if prev_out != dump["out_dim"]:
+        fail(f"plan closes at width {prev_out}, artifact wants {dump['out_dim']}")
+    if dump["total_params"] != dump["vn_params"] + params_sum:
+        fail(
+            f"total_params {dump['total_params']} != vn_params "
+            f"{dump['vn_params']} + stage params {params_sum}"
+        )
+    print(
+        f"OK: {a.plan} — model {dump['model']}, {len(stages)} stages, "
+        f"{dump['total_params']} params"
+    )
+
+
+if __name__ == "__main__":
+    main()

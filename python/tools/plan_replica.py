@@ -1,0 +1,971 @@
+#!/usr/bin/env python3
+"""Bit-exactness spec for the stage-IR sparse interpreter.
+
+The Rust native executor's model forwards were redesigned around a
+composable message-passing stage IR executed by a generic sparse
+interpreter (`rust/src/runtime/interp.rs`) that walks sorted,
+deduplicated in-neighbor lists instead of padded dense adjacency
+matmuls. The hard contract of that redesign: for every model kind, the
+sparse plan execution must reproduce the legacy dense-matmul reference
+(`rust/src/runtime/dense_ref.rs`) **bit for bit** — float32 summation
+order and all.
+
+This module is the executable cross-language spec of that contract
+(the same role `net_replica.py` plays for the wire protocol): it
+re-implements *both* sides — the dense reference loops and the sparse
+stage interpreter — in scalar float32, operation-for-operation in the
+same order as the Rust code, and asserts bitwise (u32-view) equality
+over randomized graphs covering the adversarial shapes:
+
+  * empty edge lists and n = 0 graphs
+  * isolated nodes (edges confined to a prefix)
+  * duplicate directed edges with *different* edge features
+    (densification is last-write-wins -> sparse dedup keeps the
+    highest COO index)
+  * self-loops (merged into GCN's normalized diagonal and GAT's
+    mandatory self-attention edge)
+
+Ordering decisions this file pins down (mirrored by interp.rs):
+
+  * aggregation walks in-neighbors in ascending node order; the dense
+    reference's skipped zero-entries are additive no-ops, so the two
+    accumulation orders coincide;
+  * GCN-norm inserts the self-loop diagonal entry at its sorted
+    position i, with value adj[i][i] + 1.0;
+  * GAT seeds the softmax max with -1.0e9 whenever the merged
+    neighborhood is smaller than n_max (the dense reference max()es
+    over padded non-neighbors);
+  * per-row scalars (degree, PNA scalers, DGN b_row) use the same
+    float32 expressions as the dense loops;
+  * graph-level readout divides by max(n_real, 1) — bitwise equal to
+    the dense mask sum.
+
+Run:  python3 python/tools/plan_replica.py [--cases N] [--seed S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ""))
+from compile.native_ref import WInit  # noqa: E402
+
+F = np.float32
+ZERO = F(0.0)
+ONE = F(1.0)
+
+EPS_GIN = F(0.1)
+AVG_LOG_DEG = F(np.log(1.0 + 2.15))  # computed in f64, cast — as in Rust
+NEG_BIG = F(-3.0e38)
+POS_BIG = F(3.0e38)
+GAT_NEG = F(-1.0e9)
+
+
+def bits(a) -> bytes:
+    return np.ascontiguousarray(np.asarray(a, dtype=F)).view(np.uint32).tobytes()
+
+
+def outputs_match(dense, sparse, live: int):
+    """Bitwise equality on the live region; padding must be zero on both
+    sides (sign-insensitive: the dense reference's trailing mask multiply
+    can stamp -0.0 where the plan contract pads with +0.0)."""
+    dense = np.asarray(dense, dtype=F).reshape(-1)
+    sparse = np.asarray(sparse, dtype=F).reshape(-1)
+    if dense.shape != sparse.shape:
+        return False
+    if bits(dense[:live]) != bits(sparse[:live]):
+        return False
+    return bool(np.all(dense[live:] == ZERO) and np.all(sparse[live:] == ZERO))
+
+
+# ---------------------------------------------------------------- shared
+# Primitives shared verbatim by the dense reference and the sparse
+# interpreter in Rust (`runtime/tensor.rs`); shared here too, so the
+# comparison stresses only the aggregation/order differences.
+
+
+def linear(x: np.ndarray, w: np.ndarray, b: np.ndarray, act: str = "none") -> np.ndarray:
+    """Rust `linear`: per-row bias init + ascending-k accumulate, skipping
+    exact-zero inputs."""
+    r, fin = x.shape
+    fout = w.shape[1]
+    out = np.empty((r, fout), dtype=F)
+    for i in range(r):
+        row = b.copy()
+        xi = x[i]
+        for k in range(fin):
+            xv = xi[k]
+            if xv != ZERO:
+                row = row + xv * w[k]
+        if act == "relu":
+            row = np.maximum(row, ZERO)
+        out[i] = row
+    return out
+
+
+def relu(m: np.ndarray) -> np.ndarray:
+    return np.maximum(m, ZERO)
+
+
+def elu_inplace(m: np.ndarray) -> np.ndarray:
+    out = m.copy()
+    flat = out.reshape(-1)
+    for i in range(flat.shape[0]):
+        if flat[i] <= ZERO:
+            flat[i] = np.expm1(flat[i])
+    return out
+
+
+def l2_normalize_rows(h: np.ndarray) -> np.ndarray:
+    out = h.copy()
+    for i in range(out.shape[0]):
+        acc = ZERO
+        for v in out[i]:
+            acc = acc + v * v
+        div = np.maximum(np.sqrt(acc), F(1e-6))
+        out[i] = out[i] / div
+    return out
+
+
+def pool_rows(h: np.ndarray, rows: int, denom: np.float32) -> np.ndarray:
+    """Ascending-row masked mean accumulate (mask entries are 1.0)."""
+    out = np.zeros((1, h.shape[1]), dtype=F)
+    for i in range(rows):
+        out[0] = out[0] + h[i]
+    out[0] = out[0] / denom
+    return out
+
+
+# ------------------------------------------------------- dense reference
+# Line-for-line replica of rust/src/runtime/dense_ref.rs (the legacy
+# fwd_* bodies of native.rs), over n_max-padded tensors.
+
+
+def densify(n_max, g):
+    n, edges, x, f_node, edge_feat, f_edge = g
+    xd = np.zeros((n_max, f_node), dtype=F)
+    xd[:n] = x
+    adj = np.zeros((n_max, n_max), dtype=F)
+    ea = np.zeros((n_max, n_max, f_edge), dtype=F)
+    for ei, (s, t) in enumerate(edges):
+        adj[t, s] = ONE
+        if f_edge:
+            ea[t, s] = edge_feat[ei]
+    mask = np.zeros(n_max, dtype=F)
+    mask[:n] = ONE
+    return xd, adj, ea, mask
+
+
+def d_masked_mean_pool(h, mask):
+    acc = ZERO
+    for mk in mask:
+        acc = acc + mk
+    denom = np.maximum(acc, ONE)
+    out = np.zeros((1, h.shape[1]), dtype=F)
+    for i in range(h.shape[0]):
+        mk = mask[i]
+        if mk != ZERO:
+            out[0] = out[0] + h[i] * mk
+    out[0] = out[0] / denom
+    return out
+
+
+def d_mask_rows(h, mask):
+    out = h.copy()
+    for i in range(out.shape[0]):
+        if mask[i] != ONE:
+            out[i] = out[i] * mask[i]
+    return out
+
+
+def d_gcn_norm_adj(adj, mask):
+    n = adj.shape[0]
+    a_hat = adj.copy()
+    for i in range(n):
+        a_hat[i, i] = a_hat[i, i] + mask[i]
+    inv_sqrt = np.zeros(n, dtype=F)
+    for i in range(n):
+        deg = ZERO
+        for v in a_hat[i]:
+            deg = deg + v
+        if deg > ZERO:
+            inv_sqrt[i] = ONE / np.sqrt(np.maximum(deg, F(1e-12)))
+    for i in range(n):
+        for j in range(n):
+            a_hat[i, j] = a_hat[i, j] * (inv_sqrt[i] * inv_sqrt[j])
+    return a_hat
+
+
+def d_matmul(a, bm):
+    out = np.zeros((a.shape[0], bm.shape[1]), dtype=F)
+    for i in range(a.shape[0]):
+        for k in range(a.shape[1]):
+            av = a[i, k]
+            if av != ZERO:
+                out[i] = out[i] + av * bm[k]
+    return out
+
+
+def dense_gcn(ws, layers, node_level, x, adj, mask):
+    a_norm = d_gcn_norm_adj(adj, mask)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        hw = linear(h, *ws["convs"][li])
+        h = d_matmul(a_norm, hw)
+        if li + 1 < layers:
+            h = relu(h)
+    h = d_mask_rows(h, mask)
+    if node_level:
+        return linear(h, *ws["head"]).reshape(-1)
+    return linear(d_masked_mean_pool(h, mask), *ws["head"]).reshape(-1)
+
+
+def dense_sgc(ws, layers, node_level, x, adj, mask):
+    a_norm = d_gcn_norm_adj(adj, mask)
+    h = x.astype(F)
+    for _ in range(layers):
+        h = d_matmul(a_norm, h)
+    h = linear(h, *ws["w"], "relu")
+    h = d_mask_rows(h, mask)
+    if node_level:
+        return linear(h, *ws["head"]).reshape(-1)
+    return linear(d_masked_mean_pool(h, mask), *ws["head"]).reshape(-1)
+
+
+def dense_gin(ws, layers, x, adj, ea, mask, vn_on):
+    n, d = adj.shape[0], ws["embed"][0].shape[1]
+    h = linear(x, *ws["embed"], "relu")
+    vn = ws["vn0"].copy() if vn_on else None
+    for li in range(layers):
+        if vn is not None:
+            for i in range(n):
+                mk = mask[i]
+                if mk != ZERO:
+                    h[i] = h[i] + vn * mk
+        we, be = ws["bond"][li]
+        m = np.zeros((n, d), dtype=F)
+        for u in range(n):
+            for v in range(n):
+                a = adj[u, v]
+                if a == ZERO:
+                    continue
+                e_row = be.copy()
+                for k in range(ea.shape[2]):
+                    ev = ea[u, v, k]
+                    if ev != ZERO:
+                        e_row = e_row + ev * we[k]
+                msg = np.maximum(h[v] + e_row, ZERO)
+                m[u] = m[u] + a * msg
+        z = (ONE + EPS_GIN) * h + m
+        (w1, b1), (w2, b2) = ws["mlps"][li]
+        h = linear(linear(z, w1, b1, "relu"), w2, b2, "relu")
+        h = d_mask_rows(h, mask)
+        if vn is not None and li + 1 < layers:
+            g = vn.copy()
+            for i in range(n):
+                mk = mask[i]
+                if mk != ZERO:
+                    g = g + h[i] * mk
+            (w1, b1), (w2, b2) = ws["vn_mlps"][li]
+            vn = linear(linear(g[None, :], w1, b1, "relu"), w2, b2, "relu")[0]
+    return linear(d_masked_mean_pool(h, mask), *ws["head"]).reshape(-1)
+
+
+def dense_gat(ws, layers, heads, x, adj, mask):
+    n = adj.shape[0]
+    d = ws["embed"][0].shape[1]
+    fh = d // heads
+    adj_sl = adj.copy()
+    for i in range(n):
+        adj_sl[i, i] = np.maximum(adj_sl[i, i], mask[i])
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        w, b, a_src, a_dst = ws["convs"][li]
+        z = linear(h, w, b)
+        sl = np.zeros((n, heads), dtype=F)
+        dl = np.zeros((n, heads), dtype=F)
+        for i in range(n):
+            for hh in range(heads):
+                zs = z[i, hh * fh : (hh + 1) * fh]
+                acc_s = ZERO
+                acc_d = ZERO
+                for k in range(fh):
+                    acc_s = acc_s + zs[k] * a_src[hh * fh + k]
+                    acc_d = acc_d + zs[k] * a_dst[hh * fh + k]
+                sl[i, hh] = acc_s
+                dl[i, hh] = acc_d
+        out = np.zeros((n, d), dtype=F)
+        for hh in range(heads):
+            for i in range(n):
+                logits = np.zeros(n, dtype=F)
+                lmax = F(-np.inf)
+                for j in range(n):
+                    l = sl[i, hh] + dl[j, hh]
+                    if l <= ZERO:
+                        l = l * F(0.2)
+                    if adj_sl[i, j] <= ZERO:
+                        l = GAT_NEG
+                    logits[j] = l
+                    lmax = np.maximum(lmax, l)
+                denom = ZERO
+                for j in range(n):
+                    p = np.exp(logits[j] - lmax) if adj_sl[i, j] > ZERO else ZERO
+                    logits[j] = p
+                    denom = denom + p
+                denom = np.maximum(denom, F(1e-16))
+                for j in range(n):
+                    p = logits[j] / denom
+                    if p != ZERO:
+                        zs = z[j, hh * fh : (hh + 1) * fh]
+                        out[i, hh * fh : (hh + 1) * fh] = (
+                            out[i, hh * fh : (hh + 1) * fh] + p * zs
+                        )
+        h = out
+        if li + 1 < layers:
+            h = elu_inplace(h)
+        h = d_mask_rows(h, mask)
+    return linear(d_masked_mean_pool(h, mask), *ws["head"]).reshape(-1)
+
+
+def pna_row_scalars(dg):
+    dg1 = np.maximum(dg, ONE)
+    has = ONE if dg > ZERO else ZERO
+    log_deg = np.log(dg + ONE)
+    amp = log_deg / AVG_LOG_DEG
+    att = AVG_LOG_DEG / np.maximum(log_deg, F(1e-6)) if dg > ZERO else ZERO
+    return dg1, has, amp, att
+
+
+def pna_fill_row(fr, d, s, ss, mx, mn, dg):
+    dg1, has, amp, att = pna_row_scalars(dg)
+    for k in range(d):
+        mean = s[k] / dg1
+        var = np.maximum(ss[k] / dg1 - mean * mean, ZERO)
+        std = np.sqrt(var + F(1e-8)) * has
+        agg = (mean, std, mx[k] * has, mn[k] * has)
+        for bi, v in enumerate(agg):
+            fr[bi * d + k] = v
+            fr[(4 + bi) * d + k] = v * amp
+            fr[(8 + bi) * d + k] = v * att
+
+
+def dense_pna(ws, layers, x, adj, mask):
+    n = adj.shape[0]
+    d = ws["embed"][0].shape[1]
+    h = linear(x, *ws["embed"], "relu")
+    deg = np.zeros(n, dtype=F)
+    for i in range(n):
+        acc = ZERO
+        for v in adj[i]:
+            acc = acc + v
+        deg[i] = acc
+    for li in range(layers):
+        full = np.zeros((n, 12 * d), dtype=F)
+        for i in range(n):
+            s = np.zeros(d, dtype=F)
+            ss = np.zeros(d, dtype=F)
+            mx = np.full(d, NEG_BIG, dtype=F)
+            mn = np.full(d, POS_BIG, dtype=F)
+            for j in range(n):
+                a = adj[i, j]
+                if a == ZERO:
+                    continue
+                hj = h[j]
+                for k in range(d):
+                    v = hj[k]
+                    s[k] = s[k] + a * v
+                    ss[k] = ss[k] + a * v * v
+                    mx[k] = np.maximum(mx[k], v)
+                    mn[k] = np.minimum(mn[k], v)
+            pna_fill_row(full[i], d, s, ss, mx, mn, deg[i])
+        up = linear(full, *ws["convs"][li], "relu")
+        h = up + h
+        h = d_mask_rows(h, mask)
+    p = d_masked_mean_pool(h, mask)
+    p = linear(p, *ws["head"][0], "relu")
+    p = linear(p, *ws["head"][1], "relu")
+    return linear(p, *ws["head"][2]).reshape(-1)
+
+
+def dense_sage(ws, layers, x, adj, mask):
+    n = adj.shape[0]
+    deg1 = np.zeros(n, dtype=F)
+    for i in range(n):
+        acc = ZERO
+        for v in adj[i]:
+            acc = acc + v
+        deg1[i] = np.maximum(acc, ONE)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        mean_nbr = d_matmul(adj, h)
+        for i in range(n):
+            mean_nbr[i] = mean_nbr[i] / deg1[i]
+        (wsf, bsf), (wn, bn) = ws["convs"][li]
+        h = linear(h, wsf, bsf) + linear(mean_nbr, wn, bn)
+        if li + 1 < layers:
+            h = relu(h)
+        h = l2_normalize_rows(h)
+        h = d_mask_rows(h, mask)
+    return linear(d_masked_mean_pool(h, mask), *ws["head"]).reshape(-1)
+
+
+def dense_dgn(ws, layers, node_level, x, adj, eig, mask):
+    n = adj.shape[0]
+    adj_norm = np.zeros((n, n), dtype=F)
+    b_dx = np.zeros((n, n), dtype=F)
+    b_row = np.zeros(n, dtype=F)
+    for i in range(n):
+        deg = ZERO
+        for v in adj[i]:
+            deg = deg + v
+        dg1 = np.maximum(deg, ONE)
+        abs_sum = ZERO
+        for j in range(n):
+            a = adj[i, j]
+            adj_norm[i, j] = a / dg1
+            fm = a * (eig[j] - eig[i])
+            b_dx[i, j] = fm
+            abs_sum = abs_sum + np.abs(fm)
+        denom = abs_sum + F(1e-8)
+        row_sum = ZERO
+        for j in range(n):
+            b_dx[i, j] = b_dx[i, j] / denom
+            row_sum = row_sum + b_dx[i, j]
+        b_row[i] = row_sum
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        mean = d_matmul(adj_norm, h)
+        bh = d_matmul(b_dx, h)
+        y = np.zeros((n, 2 * h.shape[1]), dtype=F)
+        d = h.shape[1]
+        for i in range(n):
+            y[i, :d] = mean[i]
+            for k in range(d):
+                y[i, d + k] = np.abs(bh[i, k] - b_row[i] * h[i, k])
+        up = linear(y, *ws["convs"][li], "relu")
+        h = up + h
+        h = d_mask_rows(h, mask)
+
+    def apply_head(t):
+        t = linear(t, *ws["head"][0], "relu")
+        t = linear(t, *ws["head"][1], "relu")
+        return linear(t, *ws["head"][2])
+
+    if node_level:
+        return d_mask_rows(apply_head(h), mask).reshape(-1)
+    return apply_head(d_masked_mean_pool(h, mask)).reshape(-1)
+
+
+# ----------------------------------------------------- sparse interpreter
+# Replica of runtime/interp.rs: sorted dedup in-neighbor lists, real
+# rows only, padded zeros appended for node-level output.
+
+
+class Nbrs:
+    """Per-destination in-neighbor lists: ascending source order,
+    duplicates collapsed keeping the highest COO edge index
+    (densification is last-write-wins)."""
+
+    def __init__(self, n, edges):
+        rows = [[] for _ in range(n)]
+        for ei, (s, t) in enumerate(edges):
+            rows[t].append((s, ei))
+        self.rows = []
+        for r in rows:
+            r.sort(key=lambda p: p[0])  # stable: COO order among equals
+            dedup = []
+            for s, ei in r:
+                if dedup and dedup[-1][0] == s:
+                    dedup[-1] = (s, ei)
+                else:
+                    dedup.append((s, ei))
+            self.rows.append(dedup)
+
+    def row(self, i):
+        return self.rows[i]
+
+    def deg(self, i) -> int:
+        return len(self.rows[i])
+
+    def has_self(self, i) -> bool:
+        return any(s == i for s, _ in self.rows[i])
+
+
+def s_pool(h, n):
+    denom = np.maximum(F(n), ONE)
+    return pool_rows(h, n, denom)
+
+
+def s_gcn_norm(nbrs, n):
+    """Per-row inv-sqrt factors of D^-1/2 (A + I) D^-1/2."""
+    inv_sqrt = np.zeros(n, dtype=F)
+    for i in range(n):
+        deg = ZERO
+        # Merged ascending walk: neighbors plus the diagonal at its
+        # sorted position (value adj[i][i] + mask[i]).
+        for v, d_val in merged_row(nbrs, i):
+            deg = deg + d_val
+        if deg > ZERO:
+            inv_sqrt[i] = ONE / np.sqrt(np.maximum(deg, F(1e-12)))
+    return inv_sqrt
+
+
+def merged_row(nbrs, i):
+    """Ascending (node, a_hat value) walk of row i of A + diag(mask):
+    neighbors carry 1.0; the diagonal carries adj[i][i] + 1.0."""
+    yielded_diag = False
+    for s, _ in nbrs.row(i):
+        if s == i:
+            yield s, F(2.0)  # self-edge 1.0 + mask 1.0
+            yielded_diag = True
+        else:
+            if not yielded_diag and s > i:
+                yield i, ONE
+                yielded_diag = True
+            yield s, ONE
+    if not yielded_diag:
+        yield i, ONE
+
+
+def sparse_agg_gcn(nbrs, n, inv_sqrt, h):
+    out = np.zeros((n, h.shape[1]), dtype=F)
+    for i in range(n):
+        for j, a_hat in merged_row(nbrs, i):
+            av = a_hat * (inv_sqrt[i] * inv_sqrt[j])
+            if av != ZERO:
+                out[i] = out[i] + av * h[j]
+    return out
+
+
+def sparse_agg_sum(nbrs, n, h):
+    out = np.zeros((n, h.shape[1]), dtype=F)
+    for i in range(n):
+        for j, _ in nbrs.row(i):
+            out[i] = out[i] + h[j]
+    return out
+
+
+def sparse_agg_mean(nbrs, n, h):
+    out = sparse_agg_sum(nbrs, n, h)
+    for i in range(n):
+        dg1 = np.maximum(F(nbrs.deg(i)), ONE)
+        out[i] = out[i] / dg1
+    return out
+
+
+def sparse_agg_edge_relu_sum(nbrs, n, h, edge_feat, we, be):
+    d = h.shape[1]
+    out = np.zeros((n, d), dtype=F)
+    for u in range(n):
+        for v, ei in nbrs.row(u):
+            e_row = be.copy()
+            for k in range(edge_feat.shape[1]):
+                ev = edge_feat[ei, k]
+                if ev != ZERO:
+                    e_row = e_row + ev * we[k]
+            msg = np.maximum(h[v] + e_row, ZERO)
+            out[u] = out[u] + msg
+    return out
+
+
+def sparse_edge_attention(nbrs, n, n_max, z, a_src, a_dst, heads):
+    d = z.shape[1]
+    fh = d // heads
+    sl = np.zeros((n, heads), dtype=F)
+    dl = np.zeros((n, heads), dtype=F)
+    for i in range(n):
+        for hh in range(heads):
+            zs = z[i, hh * fh : (hh + 1) * fh]
+            acc_s = ZERO
+            acc_d = ZERO
+            for k in range(fh):
+                acc_s = acc_s + zs[k] * a_src[hh * fh + k]
+                acc_d = acc_d + zs[k] * a_dst[hh * fh + k]
+            sl[i, hh] = acc_s
+            dl[i, hh] = acc_d
+    out = np.zeros((n, d), dtype=F)
+    for hh in range(heads):
+        for i in range(n):
+            merged = [s for s, _ in nbrs.row(i)]
+            if not nbrs.has_self(i):
+                # mandatory self-loop, inserted at its sorted position
+                import bisect
+
+                bisect.insort(merged, i)
+            logits = np.zeros(len(merged), dtype=F)
+            lmax = F(-np.inf)
+            for idx, j in enumerate(merged):
+                l = sl[i, hh] + dl[j, hh]
+                if l <= ZERO:
+                    l = l * F(0.2)
+                logits[idx] = l
+                lmax = np.maximum(lmax, l)
+            if len(merged) < n_max:
+                # the dense reference max()es -1e9 over non-neighbors
+                lmax = np.maximum(lmax, GAT_NEG)
+            denom = ZERO
+            for idx in range(len(merged)):
+                p = np.exp(logits[idx] - lmax)
+                logits[idx] = p
+                denom = denom + p
+            denom = np.maximum(denom, F(1e-16))
+            for idx, j in enumerate(merged):
+                p = logits[idx] / denom
+                if p != ZERO:
+                    zs = z[j, hh * fh : (hh + 1) * fh]
+                    out[i, hh * fh : (hh + 1) * fh] = (
+                        out[i, hh * fh : (hh + 1) * fh] + p * zs
+                    )
+    return out
+
+
+def sparse_agg_pna(nbrs, n, h):
+    d = h.shape[1]
+    out = np.zeros((n, 12 * d), dtype=F)
+    for i in range(n):
+        s = np.zeros(d, dtype=F)
+        ss = np.zeros(d, dtype=F)
+        mx = np.full(d, NEG_BIG, dtype=F)
+        mn = np.full(d, POS_BIG, dtype=F)
+        for j, _ in nbrs.row(i):
+            hj = h[j]
+            for k in range(d):
+                v = hj[k]
+                s[k] = s[k] + v  # a == 1.0: a*v == v bitwise
+                ss[k] = ss[k] + v * v
+                mx[k] = np.maximum(mx[k], v)
+                mn[k] = np.minimum(mn[k], v)
+        pna_fill_row(out[i], d, s, ss, mx, mn, F(nbrs.deg(i)))
+    return out
+
+
+def dgn_context(nbrs, n, eig):
+    """Per-row (1/dg1, [(j, b_val)], b_row) for the directional stage."""
+    ctx = []
+    for i in range(n):
+        dg1 = np.maximum(F(nbrs.deg(i)), ONE)
+        inv = ONE / dg1
+        abs_sum = ZERO
+        fms = []
+        for j, _ in nbrs.row(i):
+            fm = ONE * (eig[j] - eig[i])
+            fms.append((j, fm))
+            abs_sum = abs_sum + np.abs(fm)
+        denom = abs_sum + F(1e-8)
+        row_sum = ZERO
+        bvals = []
+        for j, fm in fms:
+            bv = fm / denom
+            bvals.append((j, bv))
+            row_sum = row_sum + bv
+        ctx.append((inv, bvals, row_sum))
+    return ctx
+
+
+def sparse_agg_dgn(nbrs, n, ctx, h):
+    d = h.shape[1]
+    out = np.zeros((n, 2 * d), dtype=F)
+    for i in range(n):
+        inv, bvals, b_row = ctx[i]
+        mean = np.zeros(d, dtype=F)
+        for j, _ in nbrs.row(i):
+            mean = mean + inv * h[j]
+        bh = np.zeros(d, dtype=F)
+        for j, bv in bvals:
+            if bv != ZERO:  # dense matmul skips zero entries
+                bh = bh + bv * h[j]
+        out[i, :d] = mean
+        for k in range(d):
+            out[i, d + k] = np.abs(bh[k] - b_row * h[i, k])
+    return out
+
+
+def pad_node_level(rows: np.ndarray, n_max: int) -> np.ndarray:
+    out = np.zeros((n_max, rows.shape[1]), dtype=F)
+    out[: rows.shape[0]] = rows
+    return out
+
+
+def sparse_gcn(ws, layers, node_level, n_max, g):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    inv_sqrt = s_gcn_norm(nbrs, n)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        hw = linear(h, *ws["convs"][li])
+        h = sparse_agg_gcn(nbrs, n, inv_sqrt, hw)
+        if li + 1 < layers:
+            h = relu(h)
+    if node_level:
+        return pad_node_level(linear(h, *ws["head"]), n_max).reshape(-1)
+    return linear(s_pool(h, n), *ws["head"]).reshape(-1)
+
+
+def sparse_sgc(ws, layers, node_level, n_max, g):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    inv_sqrt = s_gcn_norm(nbrs, n)
+    h = x.astype(F)
+    for _ in range(layers):
+        h = sparse_agg_gcn(nbrs, n, inv_sqrt, h)
+    h = linear(h, *ws["w"], "relu")
+    if node_level:
+        return pad_node_level(linear(h, *ws["head"]), n_max).reshape(-1)
+    return linear(s_pool(h, n), *ws["head"]).reshape(-1)
+
+
+def sparse_gin(ws, layers, g, vn_on):
+    n, edges, x, _f, edge_feat, _fe = g
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    vn = ws["vn0"].copy() if vn_on else None
+    for li in range(layers):
+        if vn is not None:
+            for i in range(n):
+                h[i] = h[i] + vn  # mk == 1.0: vv * mk == vv bitwise
+        we, be = ws["bond"][li]
+        m = sparse_agg_edge_relu_sum(nbrs, n, h, edge_feat, we, be)
+        z = (ONE + EPS_GIN) * h + m
+        (w1, b1), (w2, b2) = ws["mlps"][li]
+        h = linear(linear(z, w1, b1, "relu"), w2, b2, "relu")
+        if vn is not None and li + 1 < layers:
+            gacc = vn.copy()
+            for i in range(n):
+                gacc = gacc + h[i]
+            (w1, b1), (w2, b2) = ws["vn_mlps"][li]
+            vn = linear(linear(gacc[None, :], w1, b1, "relu"), w2, b2, "relu")[0]
+    return linear(s_pool(h, n), *ws["head"]).reshape(-1)
+
+
+def sparse_gat(ws, layers, heads, n_max, g):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        w, b, a_src, a_dst = ws["convs"][li]
+        z = linear(h, w, b)
+        h = sparse_edge_attention(nbrs, n, n_max, z, a_src, a_dst, heads)
+        if li + 1 < layers:
+            h = elu_inplace(h)
+    return linear(s_pool(h, n), *ws["head"]).reshape(-1)
+
+
+def sparse_pna(ws, layers, g):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_pna(nbrs, n, h)
+        up = linear(m, *ws["convs"][li], "relu")
+        h = up + h
+    p = s_pool(h, n)
+    p = linear(p, *ws["head"][0], "relu")
+    p = linear(p, *ws["head"][1], "relu")
+    return linear(p, *ws["head"][2]).reshape(-1)
+
+
+def sparse_sage(ws, layers, g):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_mean(nbrs, n, h)
+        (wsf, bsf), (wn, bn) = ws["convs"][li]
+        h = linear(h, wsf, bsf) + linear(m, wn, bn)
+        if li + 1 < layers:
+            h = relu(h)
+        h = l2_normalize_rows(h)
+    return linear(s_pool(h, n), *ws["head"]).reshape(-1)
+
+
+def sparse_dgn(ws, layers, node_level, n_max, g, eig):
+    n, edges, x, *_ = g
+    nbrs = Nbrs(n, edges)
+    ctx = dgn_context(nbrs, n, eig[:n])
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_dgn(nbrs, n, ctx, h)
+        up = linear(m, *ws["convs"][li], "relu")
+        h = up + h
+
+    def apply_head(t):
+        t = linear(t, *ws["head"][0], "relu")
+        t = linear(t, *ws["head"][1], "relu")
+        return linear(t, *ws["head"][2])
+
+    if node_level:
+        return pad_node_level(apply_head(h), n_max).reshape(-1)
+    return apply_head(s_pool(h, n)).reshape(-1)
+
+
+# --------------------------------------------------------------- weights
+def build_weights(kind, seed, in_dim, d, layers, heads, edge_dim, out_dim):
+    wi = WInit(seed)
+    if kind in ("gcn",):
+        return {
+            "embed": wi.dense(in_dim, d),
+            "convs": [wi.dense(d, d) for _ in range(layers)],
+            "head": wi.dense(d, out_dim),
+        }
+    if kind in ("gin", "gin_vn"):
+        ws = {
+            "embed": wi.dense(in_dim, d),
+            "bond": [wi.dense(edge_dim, d) for _ in range(layers)],
+            "mlps": [
+                [wi.dense(d, 2 * d), wi.dense(2 * d, d)] for _ in range(layers)
+            ],
+            "head": wi.dense(d, out_dim),
+        }
+        if kind == "gin_vn":
+            ws["vn0"] = wi.vec(d)
+            ws["vn_mlps"] = [
+                [wi.dense(d, 2 * d), wi.dense(2 * d, d)]
+                for _ in range(layers - 1)
+            ]
+        return ws
+    if kind == "gat":
+        embed = wi.dense(in_dim, d)
+        convs = []
+        for _ in range(layers):
+            w, b = wi.dense(d, d)
+            convs.append((w, b, wi.vec(d), wi.vec(d)))
+        return {"embed": embed, "convs": convs, "head": wi.dense(d, out_dim)}
+    if kind == "pna":
+        return {
+            "embed": wi.dense(in_dim, d),
+            "convs": [wi.dense(12 * d, d) for _ in range(layers)],
+            "head": [
+                wi.dense(d, d // 2),
+                wi.dense(d // 2, d // 4),
+                wi.dense(d // 4, out_dim),
+            ],
+        }
+    if kind == "sgc":
+        return {"w": wi.dense(in_dim, d), "head": wi.dense(d, out_dim)}
+    if kind == "sage":
+        return {
+            "embed": wi.dense(in_dim, d),
+            "convs": [(wi.dense(d, d), wi.dense(d, d)) for _ in range(layers)],
+            "head": wi.dense(d, out_dim),
+        }
+    if kind == "dgn":
+        return {
+            "embed": wi.dense(in_dim, d),
+            "convs": [wi.dense(2 * d, d) for _ in range(layers)],
+            "head": [
+                wi.dense(d, d // 2),
+                wi.dense(d // 2, d // 4),
+                wi.dense(d // 4, out_dim),
+            ],
+        }
+    raise KeyError(kind)
+
+
+# ------------------------------------------------------------ generation
+def random_graph(rng, in_dim, edge_dim, n_max, force=None):
+    shape = force or rng.choice(
+        ["plain", "empty_nodes", "no_edges", "isolated", "dups", "self_loops", "mixed"]
+    )
+    if shape == "empty_nodes":
+        n = 0
+    else:
+        n = rng.randint(1, min(6, n_max))
+    edges = []
+    if n > 0 and shape != "no_edges":
+        active = max(1, n - 2) if shape == "isolated" else n
+        for _ in range(rng.randint(0, 3 * n)):
+            s, t = rng.randrange(active), rng.randrange(active)
+            if shape == "self_loops" and rng.random() < 0.5:
+                t = s
+            edges.append((s, t))
+            if shape in ("dups", "mixed") and rng.random() < 0.5:
+                edges.append((s, t))  # duplicate with its own features
+    x = np.asarray(
+        [
+            [0.0 if rng.random() < 0.3 else rng.uniform(-2, 2) for _ in range(in_dim)]
+            for _ in range(n)
+        ],
+        dtype=F,
+    ).reshape(n, in_dim)
+    ef = np.asarray(
+        [
+            [0.0 if rng.random() < 0.3 else rng.uniform(-1, 1) for _ in range(edge_dim)]
+            for _ in range(len(edges))
+        ],
+        dtype=F,
+    ).reshape(len(edges), edge_dim)
+    return (n, edges, x, in_dim, ef, edge_dim)
+
+
+def run(cases: int, seed: int) -> None:
+    rng = random.Random(seed)
+    n_max, in_dim, d, layers, heads, edge_dim = 8, 4, 8, 2, 2, 3
+    kinds = ["gcn", "sgc", "gin", "gin_vn", "gat", "pna", "sage", "dgn", "dgn_node"]
+    shapes = [None, "empty_nodes", "no_edges", "isolated", "dups", "self_loops"]
+    checked = 0
+    for case in range(cases):
+        force = shapes[case % len(shapes)]
+        g = random_graph(rng, in_dim, edge_dim, n_max, force=force)
+        n = g[0]
+        eig = np.zeros(n_max, dtype=F)
+        for i in range(n):
+            eig[i] = F(rng.uniform(-1, 1) if rng.random() < 0.8 else 0.0)
+        xd, adj, ea, mask = densify(n_max, g)
+        wseed = rng.randrange(0, 2**31)
+        for kind in kinds:
+            node_level = kind == "dgn_node"
+            base = "dgn" if node_level else kind
+            out_dim = 3 if node_level else 1
+            ws = build_weights(
+                base, wseed, in_dim, d, layers, heads, edge_dim, out_dim
+            )
+            if base == "gcn":
+                dense = dense_gcn(ws, layers, False, xd, adj, mask)
+                sparse = sparse_gcn(ws, layers, False, n_max, g)
+            elif base == "sgc":
+                dense = dense_sgc(ws, layers, False, xd, adj, mask)
+                sparse = sparse_sgc(ws, layers, False, n_max, g)
+            elif base in ("gin", "gin_vn"):
+                dense = dense_gin(ws, layers, xd, adj, ea, mask, base == "gin_vn")
+                sparse = sparse_gin(ws, layers, g, base == "gin_vn")
+            elif base == "gat":
+                dense = dense_gat(ws, layers, heads, xd, adj, mask)
+                sparse = sparse_gat(ws, layers, heads, n_max, g)
+            elif base == "pna":
+                dense = dense_pna(ws, layers, xd, adj, mask)
+                sparse = sparse_pna(ws, layers, g)
+            elif base == "sage":
+                dense = dense_sage(ws, layers, xd, adj, mask)
+                sparse = sparse_sage(ws, layers, g)
+            else:  # dgn / dgn_node
+                dense = dense_dgn(ws, layers, node_level, xd, adj, eig, mask)
+                sparse = sparse_dgn(ws, layers, node_level, n_max, g, eig)
+            live = n * out_dim if node_level else out_dim
+            if not outputs_match(dense, sparse, live):
+                diff = [
+                    (i, float(a), float(b))
+                    for i, (a, b) in enumerate(zip(dense, sparse))
+                    if F(a).view(np.uint32) != F(b).view(np.uint32)
+                ]
+                raise SystemExit(
+                    f"FAIL case {case} kind {kind} shape {force}: "
+                    f"n={n} edges={g[1]} wseed={wseed}\nfirst diffs: {diff[:5]}"
+                )
+            checked += 1
+        if (case + 1) % 6 == 0:
+            print(f"  {case + 1}/{cases} cases, {checked} forwards bit-equal")
+    print(f"OK: {checked} dense-vs-sparse forwards bit-identical "
+          f"({cases} graphs x {len(kinds)} kinds)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cases", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0x5A17)
+    a = ap.parse_args()
+    run(a.cases, a.seed)

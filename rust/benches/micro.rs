@@ -11,8 +11,8 @@
 
 use gengnn::coordinator::{Server, ServerConfig};
 use gengnn::datagen::{citation, molecular, MolConfig};
-use gengnn::graph::{fiedler_vector, CooGraph, Csc, Csr, DenseGraph, GraphBatch};
-use gengnn::runtime::{Artifacts, Engine, InputPack};
+use gengnn::graph::{fiedler_vector, CooGraph, Csc, Csr, DenseGraph, GraphBatch, InNbrs};
+use gengnn::runtime::{Artifacts, DenseRef, Engine, InputPack, NativeModel};
 use gengnn::util::bench::{bench, black_box, results_to_json, section, BenchResult};
 use gengnn::util::rng::Rng;
 
@@ -42,7 +42,10 @@ fn main() {
         black_box(Csr::from_coo(&cora))
     }));
 
-    section("densification (runtime hot path)");
+    section("adjacency views (sparse serving path vs dense reference staging)");
+    results.push(bench("in_nbrs/molecular(25)", q(100), q(2000), || {
+        black_box(InNbrs::from_coo(&mol).num_entries())
+    }));
     let mut dense = DenseGraph::from_coo(&mol, 64, true).unwrap();
     results.push(bench("densify_fresh/64pad+edge_attr", q(50), q(1000), || {
         black_box(DenseGraph::from_coo(&mol, 64, true).unwrap())
@@ -67,11 +70,14 @@ fn main() {
         black_box(molecular::molecular_graph(&mut rng, &MolConfig::molhiv()).n)
     }));
 
-    section("engine packing + dispatch (steady state)");
+    section("engine dispatch (steady state, sparse plan path)");
     match Artifacts::load(Artifacts::default_dir()) {
         Ok(artifacts) => {
             let meta = artifacts.model("gin").unwrap().clone();
             let batch = GraphBatch::ingest_unchecked(mol.clone());
+            // Legacy dense staging (PJRT-only since the stage-IR
+            // redesign) — kept as the O(n_max²) cost anchor the sparse
+            // path retired.
             let mut pack = InputPack::new(&meta);
             results.push(bench("input_pack_fill/gin(64pad)", q(20), q(500), || {
                 pack.fill(&batch, None).unwrap();
@@ -91,6 +97,36 @@ fn main() {
             }));
         }
         Err(_) => println!("(artifacts missing — skipping engine micro-benches)"),
+    }
+
+    section("plan vs legacy (stage-IR sparse executor vs dense reference)");
+    match Artifacts::load(Artifacts::default_dir()) {
+        Ok(artifacts) => {
+            // The six paper models on one MolHIV-sized graph: the same
+            // forward through the lowered plan (sparse, O(edges)) and
+            // through the legacy dense-matmul reference (O(n_max²)).
+            for name in ["gin", "gin_vn", "gcn", "pna", "gat", "dgn"] {
+                let meta = artifacts.model(name).unwrap().clone();
+                let plan_model = NativeModel::build(&meta, artifacts.weight_seed).unwrap();
+                let legacy = DenseRef::build(&meta, artifacts.weight_seed).unwrap();
+                let batch = GraphBatch::ingest_unchecked(mol.clone());
+                let eig = meta.needs_eig().then(|| {
+                    let mut e = vec![0.0f32; meta.n_max];
+                    let r = batch.fiedler(400, 1e-9);
+                    e[..batch.n()].copy_from_slice(&r.vector);
+                    e
+                });
+                let mut pack = InputPack::new(&meta);
+                pack.fill(&batch, eig.as_deref()).unwrap();
+                results.push(bench(&format!("plan_sparse/{name}"), q(5), q(50), || {
+                    black_box(plan_model.forward_batch(&batch, eig.as_deref()).unwrap()[0])
+                }));
+                results.push(bench(&format!("legacy_dense/{name}"), q(5), q(50), || {
+                    black_box(legacy.forward(pack.dense()).unwrap()[0])
+                }));
+            }
+        }
+        Err(_) => println!("(artifacts missing — skipping plan-vs-legacy benches)"),
     }
 
     section("executor pool (lane scaling over a fixed request stream)");

@@ -19,10 +19,13 @@
 //! `2E + N` cycles, and "runs once when the graph is streamed into the
 //! FPGA and is reused for all the GNN layers" (§3.2).
 
+use std::sync::OnceLock;
+
 use anyhow::Result;
 
 use super::coo::CooGraph;
 use super::csr::{Csc, Csr};
+use super::nbr::InNbrs;
 use super::spectral::{fiedler_vector_csr, EigResult};
 
 /// Converter cycle cost: two passes over E edges + prefix over N nodes.
@@ -59,6 +62,10 @@ pub struct GraphBatch {
     pub csr: Csr,
     /// Modeled cost of the one-time on-chip conversion (`2E + N`).
     pub converter_cycles: u64,
+    /// Sorted dedup in-neighbor lists, built on first use and shared
+    /// by every subsequent plan execution over this batch (the
+    /// stage-IR interpreter's adjacency view).
+    nbrs: OnceLock<InNbrs>,
 }
 
 impl GraphBatch {
@@ -78,6 +85,7 @@ impl GraphBatch {
             graph,
             csr,
             converter_cycles,
+            nbrs: OnceLock::new(),
         }
     }
 
@@ -86,6 +94,14 @@ impl GraphBatch {
     /// would tax every serving request for nothing.
     pub fn csc(&self) -> Csc {
         Csc::from_coo(&self.graph)
+    }
+
+    /// Sorted dedup in-neighbor lists — the stage-IR interpreter's
+    /// adjacency view, built once on first forward and reused by every
+    /// later forward over this batch (one conversion per ingest, same
+    /// contract as the CSR).
+    pub fn in_nbrs(&self) -> &InNbrs {
+        self.nbrs.get_or_init(|| InNbrs::from_coo(&self.graph))
     }
 
     pub fn n(&self) -> usize {

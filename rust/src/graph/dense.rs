@@ -5,6 +5,17 @@
 //! `python/compile/kernels/common.py`): adjacency as a routing matrix,
 //! features zero-padded to the artifact's node capacity, mask marking
 //! real nodes.
+//!
+//! **Contract shift (stage-IR redesign):** densification is
+//! *reference-only*. The native serving path executes lowered
+//! `ModelPlan`s over sparse in-neighbor lists ([`super::nbr::InNbrs`])
+//! and never materializes these O(n_max²) tensors; they remain the
+//! input layout of the AOT/PJRT artifacts (`runtime::literal`), the
+//! substrate of the dense reference executor (`runtime::dense_ref`),
+//! and the ground truth the sparse interpreter is property-tested
+//! against bit-for-bit (`tests/plan_equivalence.rs`). Duplicate edges
+//! overwrite — one adjacency entry, last edge's features win — which
+//! is exactly the dedup rule `InNbrs` mirrors.
 
 use anyhow::{bail, Result};
 

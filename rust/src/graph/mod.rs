@@ -1,7 +1,8 @@
 //! Graph data representations (paper Section 3.2): COO raw input,
-//! CSR/CSC compressed adjacency with the on-chip converter, dense padded
-//! tensors for the TPU-adapted kernels, and the spectral substrate DGN
-//! needs for its directional aggregation.
+//! CSR/CSC compressed adjacency with the on-chip converter, sorted
+//! dedup in-neighbor lists for the stage-IR interpreter, dense padded
+//! tensors for the AOT artifact contract, and the spectral substrate
+//! DGN needs for its directional aggregation.
 //!
 //! [`GraphBatch`] is the single ingest entry point: every consumer that
 //! needs adjacency (simulator, coordinator, baselines) goes through one
@@ -11,10 +12,12 @@ pub mod batch;
 pub mod coo;
 pub mod csr;
 pub mod dense;
+pub mod nbr;
 pub mod spectral;
 
 pub use batch::{converter_cycles, GraphBatch, GraphStats};
 pub use coo::CooGraph;
 pub use csr::{Csc, Csr};
 pub use dense::DenseGraph;
+pub use nbr::InNbrs;
 pub use spectral::{fiedler_vector, fiedler_vector_csr, EigResult};

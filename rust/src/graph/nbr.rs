@@ -1,0 +1,221 @@
+//! Sorted, deduplicated in-neighbor lists — the adjacency view the
+//! stage-IR interpreter walks (`runtime::interp`).
+//!
+//! The dense densification (`graph::dense`) writes `adj[t][s] = 1.0`
+//! per directed COO edge: duplicates collapse to one entry and a
+//! duplicate's edge features are **last-write-wins** (the highest COO
+//! index). [`InNbrs`] is the sparse image of exactly that contract:
+//! per destination node, the distinct source nodes in ascending order,
+//! each carrying the COO index of its *last* occurrence. Ascending
+//! order is load-bearing — it makes the interpreter's float32
+//! accumulation order identical to the dense reference's ascending-j
+//! matmul loops, which is what the bit-exactness contract between
+//! `runtime::interp` and `runtime::dense_ref` rests on (spec:
+//! `python/tools/plan_replica.py`).
+//!
+//! Cost: one counting pass over the edges plus a per-row sort —
+//! O(E log deg_max) time, O(N + E) memory. No O(n_max²) buffer exists
+//! anywhere on this path.
+
+use super::coo::CooGraph;
+
+/// Per-destination in-neighbor lists: ascending source order,
+/// duplicate edges collapsed keeping the highest COO edge index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InNbrs {
+    n: usize,
+    /// Exclusive prefix offsets (len n+1) over the deduped entries.
+    offsets: Vec<u32>,
+    /// Deduped in-neighbors, ascending within each row.
+    nbrs: Vec<u32>,
+    /// COO index of the last occurrence of each (src, dst) pair —
+    /// the edge whose features densification would have kept.
+    edge_idx: Vec<u32>,
+}
+
+impl InNbrs {
+    /// Build from a raw COO edge list (any order, duplicates allowed).
+    pub fn from_coo(g: &CooGraph) -> InNbrs {
+        let n = g.n;
+        let m = g.edges.len();
+        // Counting sort by destination (stable: keeps COO order within
+        // a row, so equal-neighbor runs are ascending in edge index).
+        let mut degree = vec![0u32; n];
+        for &(_, t) in &g.edges {
+            degree[t as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets[..n].to_vec();
+        let mut nbrs = vec![0u32; m];
+        let mut edge_idx = vec![0u32; m];
+        for (e, &(s, t)) in g.edges.iter().enumerate() {
+            let slot = cursor[t as usize] as usize;
+            nbrs[slot] = s;
+            edge_idx[slot] = e as u32;
+            cursor[t as usize] += 1;
+        }
+        // Per row: sort by (neighbor, edge index) and collapse each
+        // neighbor run to its last (= highest-index) entry.
+        let mut compact_offsets = vec![0u32; n + 1];
+        let mut write = 0usize;
+        let mut row: Vec<(u32, u32)> = Vec::new();
+        for v in 0..n {
+            let (lo, hi) = (offsets[v] as usize, offsets[v + 1] as usize);
+            row.clear();
+            row.extend(nbrs[lo..hi].iter().copied().zip(edge_idx[lo..hi].iter().copied()));
+            row.sort_unstable();
+            let mut r = 0;
+            while r < row.len() {
+                let mut last = r;
+                while last + 1 < row.len() && row[last + 1].0 == row[r].0 {
+                    last += 1;
+                }
+                nbrs[write] = row[r].0;
+                edge_idx[write] = row[last].1;
+                write += 1;
+                r = last + 1;
+            }
+            compact_offsets[v + 1] = write as u32;
+        }
+        nbrs.truncate(write);
+        edge_idx.truncate(write);
+        InNbrs {
+            n,
+            offsets: compact_offsets,
+            nbrs,
+            edge_idx,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total deduped entries (≤ the COO edge count).
+    pub fn num_entries(&self) -> usize {
+        self.nbrs.len()
+    }
+
+    /// Distinct in-neighbors of `v`, ascending.
+    pub fn row(&self, v: usize) -> &[u32] {
+        &self.nbrs[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// COO edge indices matching `row(v)` entry-for-entry (each the
+    /// last occurrence of its pair).
+    pub fn row_edges(&self, v: usize) -> &[u32] {
+        &self.edge_idx[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Deduplicated in-degree of `v` — bitwise equal (as f32) to the
+    /// dense reference's adjacency row sum.
+    pub fn deg(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn has_self_loop(&self, v: usize) -> bool {
+        self.row(v).binary_search(&(v as u32)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DenseGraph;
+    use crate::prop_assert;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn graph(n: usize, edges: Vec<(u32, u32)>) -> CooGraph {
+        let ne = edges.len();
+        CooGraph {
+            n,
+            edges,
+            node_feat: vec![0.0; n],
+            f_node: 1,
+            edge_feat: (0..ne).map(|e| e as f32).collect(),
+            f_edge: 1,
+        }
+    }
+
+    #[test]
+    fn rows_are_sorted_and_deduped_last_wins() {
+        // (2,0) appears at COO indices 1 and 4 — entry keeps index 4.
+        let g = graph(3, vec![(1, 0), (2, 0), (0, 2), (2, 0), (2, 0), (0, 0)]);
+        let nb = InNbrs::from_coo(&g);
+        assert_eq!(nb.row(0), &[0, 1, 2]);
+        assert_eq!(nb.row_edges(0), &[5, 0, 4]);
+        assert_eq!(nb.row(1), &[] as &[u32]);
+        assert_eq!(nb.row(2), &[0]);
+        assert_eq!(nb.deg(0), 3);
+        assert!(nb.has_self_loop(0));
+        assert!(!nb.has_self_loop(2));
+    }
+
+    #[test]
+    fn empty_and_edgeless_graphs() {
+        let nb = InNbrs::from_coo(&graph(0, vec![]));
+        assert_eq!(nb.n(), 0);
+        assert_eq!(nb.num_entries(), 0);
+        let nb = InNbrs::from_coo(&graph(4, vec![]));
+        for v in 0..4 {
+            assert!(nb.row(v).is_empty());
+            assert_eq!(nb.deg(v), 0);
+        }
+    }
+
+    /// The sparse view must be the exact image of densification:
+    /// same nonzero pattern, and each entry's edge features are the
+    /// ones the last dense write would have left behind.
+    #[test]
+    fn prop_matches_densification_contract() {
+        forall("nbr-vs-dense", 150, 0x17B2, |rng| {
+            let n = rng.range(1, 16);
+            let m = rng.range(0, 60);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+                .collect();
+            let g = graph(n, edges);
+            let nb = InNbrs::from_coo(&g);
+            let d = DenseGraph::from_coo(&g, n, true).unwrap();
+            let mut entries = 0usize;
+            for v in 0..n {
+                let row = nb.row(v);
+                prop_assert!(
+                    row.windows(2).all(|w| w[0] < w[1]),
+                    "row {v} not strictly ascending: {row:?}"
+                );
+                for j in 0..n {
+                    let dense_set = d.adj_at(v, j) != 0.0;
+                    let sparse_set = row.binary_search(&(j as u32)).is_ok();
+                    prop_assert!(
+                        dense_set == sparse_set,
+                        "pattern mismatch at ({v},{j})"
+                    );
+                }
+                for (&s, &ei) in row.iter().zip(nb.row_edges(v)) {
+                    prop_assert!(
+                        g.edges[ei as usize] == (s, v as u32),
+                        "edge_idx {ei} does not point at ({s},{v})"
+                    );
+                    let dense_feat = d.edge_attr[v * n + s as usize];
+                    let sparse_feat = g.edge_feat[ei as usize];
+                    prop_assert!(
+                        dense_feat == sparse_feat,
+                        "({s}->{v}): dense kept feature {dense_feat}, \
+                         sparse edge_idx {ei} carries {sparse_feat}"
+                    );
+                }
+                entries += row.len();
+            }
+            prop_assert!(
+                entries == nb.num_entries(),
+                "offsets do not cover all entries"
+            );
+            Ok(())
+        });
+    }
+}

@@ -12,6 +12,9 @@
 //!                       front-end: --addr, --rps, --count, model mix;
 //!                       reports p50/p95/p99 + throughput
 //! gengnn infer          run one model on one generated graph
+//! gengnn plan           dump the lowered stage IR of a manifest model
+//!                       (stage names, shapes, parameter counts;
+//!                       --json for the schema-checked dump)
 //! gengnn simulate       cycle-level simulation of one model/graph
 //! gengnn resources      Table 4 (+ --detailed component inventory)
 //! gengnn report-fig7    Fig. 7  (MolHIV / MolPCBA latency bars)
@@ -52,7 +55,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gengnn <serve|loadgen|infer|simulate|resources|dse|report-fig7|\
+        "usage: gengnn <serve|loadgen|infer|plan|simulate|resources|dse|report-fig7|\
          report-fig8|report-fig9|report-table4|report-table5|selftest> [--flags]"
     );
 }
@@ -62,6 +65,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
         "loadgen" => cmd_loadgen(Args::parse(rest, &[])?),
         "infer" => cmd_infer(Args::parse(rest, &[])?),
+        "plan" => cmd_plan(Args::parse(rest, &["json"])?),
         "simulate" => cmd_simulate(Args::parse(rest, &[])?),
         "resources" | "report-table4" => {
             cmd_table4(Args::parse(rest, &["detailed"])?)
@@ -258,6 +262,29 @@ fn cmd_infer(a: Args) -> Result<()> {
         &out[..out.len().min(8)],
         fmt_secs(t0.elapsed().as_secs_f64())
     );
+    Ok(())
+}
+
+/// `gengnn plan <model> [--json]` — dump the lowered stage IR for any
+/// manifest model: the ordered component sequence the generic sparse
+/// interpreter executes, with per-stage shapes and parameter counts.
+fn cmd_plan(a: Args) -> Result<()> {
+    let model = match (a.positional.first(), a.str_opt("model")) {
+        (Some(p), _) => p.clone(),
+        (None, Some(m)) => m.to_string(),
+        (None, None) => bail!("usage: gengnn plan <model> [--json] [--artifacts DIR]"),
+    };
+    let artifacts = Artifacts::load(a.str_or(
+        "artifacts",
+        Artifacts::default_dir().to_str().unwrap(),
+    ))?;
+    let meta = artifacts.model(&model)?;
+    let plan = gengnn::models::lower(meta, artifacts.weight_seed)?;
+    if a.has("json") {
+        println!("{}", plan.to_json()?.to_string_pretty());
+    } else {
+        print!("{}", plan.render_text()?);
+    }
     Ok(())
 }
 

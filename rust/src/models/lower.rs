@@ -1,0 +1,478 @@
+//! The per-kind lowering registry: manifest entry ([`ModelMeta`]) →
+//! executable [`ModelPlan`].
+//!
+//! Each registry entry owns a set of manifest model names and a
+//! lowering function that draws the model's weights from the seeded
+//! [`WInit`] stream **in the exact order `python/compile/model.py`'s
+//! builders do** (that order is the contract with the AOT artifacts —
+//! reshuffling it silently changes every weight) and then composes the
+//! stage sequence from the component library in [`super::plan`].
+//!
+//! Adding a model to the zoo is now a registry entry plus a stage
+//! composition — no new forward pass, no new executor code.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::ModelMeta;
+
+use super::params::{Dense, WInit};
+use super::plan::{Act, Aggregate, ModelPlan, Readout, Stage};
+
+const EPS_GIN: f32 = 0.1;
+
+/// A lowering function: manifest entry + seeded weight stream →
+/// (stage sequence, optional virtual-node initial state).
+type LowerFn = fn(&ModelMeta, &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)>;
+
+/// One registry entry: the model kind, the manifest names it lowers,
+/// and its lowering function.
+pub struct Lowering {
+    pub kind: &'static str,
+    pub models: &'static [&'static str],
+    lower: LowerFn,
+}
+
+/// The component registry — one entry per GNN kind in the zoo.
+pub fn registry() -> &'static [Lowering] {
+    REGISTRY
+}
+
+const REGISTRY: &[Lowering] = &[
+    Lowering {
+        kind: "gcn",
+        models: &["gcn"],
+        lower: lower_gcn,
+    },
+    Lowering {
+        kind: "gin",
+        models: &["gin"],
+        lower: lower_gin,
+    },
+    Lowering {
+        kind: "gin_vn",
+        models: &["gin_vn"],
+        lower: lower_gin_vn,
+    },
+    Lowering {
+        kind: "gat",
+        models: &["gat"],
+        lower: lower_gat,
+    },
+    Lowering {
+        kind: "pna",
+        models: &["pna"],
+        lower: lower_pna,
+    },
+    Lowering {
+        kind: "sgc",
+        models: &["sgc"],
+        lower: lower_sgc,
+    },
+    Lowering {
+        kind: "sage",
+        models: &["sage"],
+        lower: lower_sage,
+    },
+    Lowering {
+        kind: "dgn",
+        models: &["dgn", "dgn_large"],
+        lower: lower_dgn,
+    },
+];
+
+/// Lower a manifest entry to its stage-IR plan, regenerating the
+/// baked-in weights from the artifact seed.
+pub fn lower(meta: &ModelMeta, weight_seed: u64) -> Result<ModelPlan> {
+    if weight_seed > u32::MAX as u64 {
+        bail!("weight_seed {weight_seed} exceeds the scalar MT19937 seeding range");
+    }
+    if meta.dim == 0 || meta.layers == 0 {
+        bail!("model {:?} has degenerate dims", meta.name);
+    }
+    // Node-level output is defined only for DGN (mask applied *after*
+    // the head, so padding is exactly zero — the plan contract). The
+    // other kinds either pool unconditionally or, in the dense
+    // reference, leak head bias into padded rows; lowering them
+    // node-level would break the bit-exactness contract silently.
+    if meta.node_level && !meta.name.starts_with("dgn") {
+        bail!(
+            "model {:?}: node-level lowering is only defined for dgn",
+            meta.name
+        );
+    }
+    let entry = registry()
+        .iter()
+        .find(|l| l.models.contains(&meta.name.as_str()))
+        .ok_or_else(|| {
+            anyhow::anyhow!("no lowering registered for model {:?}", meta.name)
+        })?;
+    let mut wi = WInit::new(weight_seed as u32);
+    let (stages, vn_init) = (entry.lower)(meta, &mut wi)?;
+    let plan = ModelPlan {
+        model: meta.name.clone(),
+        n_max: meta.n_max,
+        in_dim: meta.in_dim,
+        out_dim: meta.out_dim,
+        edge_dim: edge_dim_of(meta),
+        node_level: meta.node_level,
+        vn_init,
+        stages,
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+fn edge_dim_of(meta: &ModelMeta) -> usize {
+    meta.inputs
+        .iter()
+        .find(|i| i.name == "edge_attr")
+        .map(|i| *i.shape.last().unwrap_or(&0))
+        .unwrap_or(0)
+}
+
+fn readout_of(meta: &ModelMeta) -> Stage {
+    Stage::Readout(if meta.node_level {
+        Readout::NodeHead
+    } else {
+        Readout::MaskedMeanPool
+    })
+}
+
+fn linear(w: Dense, act: Act) -> Stage {
+    Stage::Linear { w, act }
+}
+
+fn lower_gcn(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    let embed = wi.dense(meta.in_dim, d);
+    let convs: Vec<Dense> = (0..meta.layers).map(|_| wi.dense(d, d)).collect();
+    let head = wi.dense(d, meta.out_dim);
+    let mut stages = vec![linear(embed, Act::Relu)];
+    let layers = convs.len();
+    for (li, conv) in convs.into_iter().enumerate() {
+        stages.push(linear(conv, Act::None));
+        stages.push(Stage::SparseAggregate(Aggregate::GcnNorm));
+        stages.push(Stage::TakeAggregate);
+        if li + 1 < layers {
+            stages.push(Stage::Activation(Act::Relu));
+        }
+    }
+    stages.push(readout_of(meta));
+    stages.push(linear(head, Act::None));
+    Ok((stages, None))
+}
+
+fn lower_sgc(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let w = wi.dense(meta.in_dim, meta.dim);
+    let head = wi.dense(meta.dim, meta.out_dim);
+    let mut stages = Vec::new();
+    for _ in 0..meta.layers {
+        stages.push(Stage::SparseAggregate(Aggregate::GcnNorm));
+        stages.push(Stage::TakeAggregate);
+    }
+    stages.push(linear(w, Act::Relu));
+    stages.push(readout_of(meta));
+    stages.push(linear(head, Act::None));
+    Ok((stages, None))
+}
+
+fn gin_stages(
+    meta: &ModelMeta,
+    wi: &mut WInit,
+    virtual_node: bool,
+) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    let edge_dim = edge_dim_of(meta);
+    if edge_dim == 0 {
+        bail!("GIN artifact {:?} lists no edge_attr input", meta.name);
+    }
+    let embed = wi.dense(meta.in_dim, d);
+    let bond: Vec<Dense> = (0..meta.layers).map(|_| wi.dense(edge_dim, d)).collect();
+    let mlps: Vec<(Dense, Dense)> = (0..meta.layers)
+        .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
+        .collect();
+    let head = wi.dense(d, meta.out_dim);
+    let (vn_init, vn_mlps) = if virtual_node {
+        let vn0 = wi.vec(d);
+        let vn_mlps: Vec<(Dense, Dense)> = (0..meta.layers - 1)
+            .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
+            .collect();
+        (Some(vn0), vn_mlps)
+    } else {
+        (None, Vec::new())
+    };
+    let mut vn_mlps = vn_mlps.into_iter();
+    let layers = meta.layers;
+    let mut stages = vec![linear(embed, Act::Relu)];
+    for (li, (bond_l, (w1, w2))) in bond.into_iter().zip(mlps).enumerate() {
+        if virtual_node {
+            stages.push(Stage::VirtualNodeAdd);
+        }
+        stages.push(Stage::SparseAggregate(Aggregate::EdgeReluSum { bond: bond_l }));
+        stages.push(Stage::EpsCombine { eps: EPS_GIN });
+        stages.push(linear(w1, Act::Relu));
+        stages.push(linear(w2, Act::Relu));
+        if virtual_node && li + 1 < layers {
+            let (w1, w2) = vn_mlps.next().expect("one vn mlp per inner layer");
+            stages.push(Stage::VirtualNodeUpdate { w1, w2 });
+        }
+    }
+    stages.push(readout_of(meta));
+    stages.push(linear(head, Act::None));
+    Ok((stages, vn_init))
+}
+
+fn lower_gin(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    gin_stages(meta, wi, false)
+}
+
+fn lower_gin_vn(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    gin_stages(meta, wi, true)
+}
+
+fn lower_gat(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    if meta.heads == 0 || d % meta.heads != 0 {
+        bail!(
+            "GAT artifact {:?}: dim {} not divisible by heads {}",
+            meta.name,
+            d,
+            meta.heads
+        );
+    }
+    let embed = wi.dense(meta.in_dim, d);
+    let convs: Vec<(Dense, Vec<f32>, Vec<f32>)> = (0..meta.layers)
+        .map(|_| {
+            let w = wi.dense(d, d);
+            let a_src = wi.vec(d);
+            let a_dst = wi.vec(d);
+            (w, a_src, a_dst)
+        })
+        .collect();
+    let head = wi.dense(d, meta.out_dim);
+    let mut stages = vec![linear(embed, Act::Relu)];
+    let layers = convs.len();
+    for (li, (w, a_src, a_dst)) in convs.into_iter().enumerate() {
+        stages.push(linear(w, Act::None));
+        stages.push(Stage::EdgeAttention {
+            heads: meta.heads,
+            a_src,
+            a_dst,
+        });
+        if li + 1 < layers {
+            stages.push(Stage::Activation(Act::Elu));
+        }
+    }
+    stages.push(readout_of(meta));
+    stages.push(linear(head, Act::None));
+    Ok((stages, None))
+}
+
+fn lower_pna(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    let embed = wi.dense(meta.in_dim, d);
+    let convs: Vec<Dense> = (0..meta.layers).map(|_| wi.dense(12 * d, d)).collect();
+    let head = [
+        wi.dense(d, d / 2),
+        wi.dense(d / 2, d / 4),
+        wi.dense(d / 4, meta.out_dim),
+    ];
+    let mut stages = vec![linear(embed, Act::Relu)];
+    for conv in convs {
+        stages.push(Stage::SparseAggregate(Aggregate::PnaTower));
+        stages.push(Stage::ResidualLinear {
+            w: conv,
+            act: Act::Relu,
+        });
+    }
+    stages.push(readout_of(meta));
+    let [h0, h1, h2] = head;
+    stages.push(linear(h0, Act::Relu));
+    stages.push(linear(h1, Act::Relu));
+    stages.push(linear(h2, Act::None));
+    Ok((stages, None))
+}
+
+fn lower_sage(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    let embed = wi.dense(meta.in_dim, d);
+    let convs: Vec<(Dense, Dense)> = (0..meta.layers)
+        .map(|_| (wi.dense(d, d), wi.dense(d, d)))
+        .collect();
+    let head = wi.dense(d, meta.out_dim);
+    let mut stages = vec![linear(embed, Act::Relu)];
+    let layers = convs.len();
+    for (li, (w_self, w_nbr)) in convs.into_iter().enumerate() {
+        stages.push(Stage::SparseAggregate(Aggregate::Mean));
+        stages.push(Stage::DualLinear { w_self, w_nbr });
+        if li + 1 < layers {
+            stages.push(Stage::Activation(Act::Relu));
+        }
+        stages.push(Stage::L2Normalize);
+    }
+    stages.push(readout_of(meta));
+    stages.push(linear(head, Act::None));
+    Ok((stages, None))
+}
+
+fn lower_dgn(meta: &ModelMeta, wi: &mut WInit) -> Result<(Vec<Stage>, Option<Vec<f32>>)> {
+    let d = meta.dim;
+    let embed = wi.dense(meta.in_dim, d);
+    let convs: Vec<Dense> = (0..meta.layers).map(|_| wi.dense(2 * d, d)).collect();
+    let head = [
+        wi.dense(d, d / 2),
+        wi.dense(d / 2, d / 4),
+        wi.dense(d / 4, meta.out_dim),
+    ];
+    let mut stages = vec![linear(embed, Act::Relu)];
+    for conv in convs {
+        stages.push(Stage::SparseAggregate(Aggregate::DgnDirectional));
+        stages.push(Stage::ResidualLinear {
+            w: conv,
+            act: Act::Relu,
+        });
+    }
+    stages.push(readout_of(meta));
+    let [h0, h1, h2] = head;
+    stages.push(linear(h0, Act::Relu));
+    stages.push(linear(h1, Act::Relu));
+    stages.push(linear(h2, Act::None));
+    Ok((stages, None))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::InputSpec;
+
+    fn tiny_meta(name: &str) -> ModelMeta {
+        let n_max = 8;
+        let in_dim = 4;
+        let mut inputs = vec![
+            InputSpec {
+                name: "x".into(),
+                shape: vec![n_max, in_dim],
+            },
+            InputSpec {
+                name: "adj".into(),
+                shape: vec![n_max, n_max],
+            },
+        ];
+        if name.starts_with("gin") {
+            inputs.push(InputSpec {
+                name: "edge_attr".into(),
+                shape: vec![n_max, n_max, 3],
+            });
+        }
+        if name.starts_with("dgn") {
+            inputs.push(InputSpec {
+                name: "eig".into(),
+                shape: vec![n_max],
+            });
+        }
+        inputs.push(InputSpec {
+            name: "mask".into(),
+            shape: vec![n_max],
+        });
+        ModelMeta {
+            name: name.to_string(),
+            layers: 2,
+            dim: 8,
+            heads: if name == "gat" { 2 } else { 0 },
+            n_max,
+            in_dim,
+            out_dim: 1,
+            node_level: false,
+            inputs,
+            hlo_path: "unused.hlo.txt".into(),
+            golden_path: "unused.golden.json".into(),
+        }
+    }
+
+    #[test]
+    fn every_kind_lowers_and_validates() {
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
+            let plan = lower(&tiny_meta(name), 0).unwrap();
+            assert_eq!(plan.model, name);
+            plan.validate().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(plan.param_count() > 0, "{name} has no params");
+            assert!(!plan.render_text().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn registry_covers_the_zoo_disjointly() {
+        let mut seen = std::collections::BTreeSet::new();
+        for entry in registry() {
+            for m in entry.models {
+                assert!(seen.insert(*m), "model {m} claimed twice");
+            }
+        }
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn", "dgn_large"]
+        {
+            assert!(seen.contains(name), "registry misses {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let mut meta = tiny_meta("gcn");
+        meta.name = "transformer".into();
+        let err = lower(&meta, 0).unwrap_err().to_string();
+        assert!(err.contains("no lowering registered"), "{err}");
+    }
+
+    #[test]
+    fn gat_dim_must_divide_heads() {
+        let mut meta = tiny_meta("gat");
+        meta.heads = 3;
+        assert!(lower(&meta, 0).is_err());
+    }
+
+    #[test]
+    fn gin_requires_edge_attr_input() {
+        let mut meta = tiny_meta("gin");
+        meta.inputs.retain(|i| i.name != "edge_attr");
+        assert!(lower(&meta, 0).is_err());
+    }
+
+    #[test]
+    fn oversized_seed_is_rejected() {
+        assert!(lower(&tiny_meta("gcn"), u64::MAX).is_err());
+    }
+
+    #[test]
+    fn node_level_is_dgn_only() {
+        let mut meta = tiny_meta("dgn");
+        meta.node_level = true;
+        meta.out_dim = 3;
+        lower(&meta, 0).unwrap();
+        for name in ["gcn", "sgc", "gat", "gin", "pna", "sage"] {
+            let mut meta = tiny_meta(name);
+            meta.node_level = true;
+            let err = lower(&meta, 0).unwrap_err().to_string();
+            assert!(err.contains("node-level"), "{name}: {err}");
+        }
+    }
+
+    #[test]
+    fn gin_vn_carries_state_and_eps() {
+        let plan = lower(&tiny_meta("gin_vn"), 0).unwrap();
+        assert_eq!(plan.vn_params(), 8);
+        assert!(plan
+            .stages
+            .iter()
+            .any(|s| matches!(s, Stage::VirtualNodeUpdate { .. })));
+        assert!(plan
+            .stages
+            .iter()
+            .any(|s| matches!(s, Stage::EpsCombine { eps } if *eps == EPS_GIN)));
+    }
+
+    #[test]
+    fn dgn_needs_eig_and_gin_needs_edges() {
+        assert!(lower(&tiny_meta("dgn"), 0).unwrap().needs_eig());
+        assert!(!lower(&tiny_meta("gcn"), 0).unwrap().needs_eig());
+        assert!(lower(&tiny_meta("gin"), 0).unwrap().needs_edge_attr());
+    }
+}

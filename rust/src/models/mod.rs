@@ -1,6 +1,19 @@
-//! Model zoo: configurations for the paper's six representative GNNs
-//! (Table 2, hyperparameters of Section 5.1).
+//! Model zoo: configurations for the paper's representative GNNs
+//! (Table 2, hyperparameters of Section 5.1) plus the composable
+//! message-passing stage IR they all lower to:
+//!
+//! * [`config`] — the static hyperparameter registry (simulator /
+//!   resource-estimator consumers)
+//! * [`params`] — seeded weight substrate (MT19937 numpy port)
+//! * [`plan`]   — the stage IR: [`ModelPlan`], the component library
+//! * [`lower`]  — the per-kind registry lowering `ModelMeta` → plan
 
 pub mod config;
+pub mod lower;
+pub mod params;
+pub mod plan;
 
 pub use config::{GnnKind, ModelConfig};
+pub use lower::lower;
+pub use params::{Dense, Mt19937, WInit};
+pub use plan::{Act, Aggregate, ModelPlan, Readout, Stage, StageSummary};

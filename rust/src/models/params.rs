@@ -1,0 +1,155 @@
+//! Seeded weight substrate shared by the stage-IR lowering registry
+//! (`models::lower`) and the dense reference executor
+//! (`runtime::dense_ref`).
+//!
+//! [`Mt19937`] is a port of numpy's legacy `RandomState` stream
+//! (scalar-int seeding, two 32-bit draws per 53-bit double), so
+//! [`WInit`] reproduces `model.py`'s `WInit(seed)` draw order
+//! bit-for-bit — the same baked-in constants the AOT artifacts carry.
+//! Every lowering must draw its [`Dense`] layers in the exact order the
+//! JAX model builders do, or the regenerated weights stop matching the
+//! golden files.
+
+/// Classic MT19937 matching numpy's legacy `RandomState` stream.
+pub struct Mt19937 {
+    mt: [u32; 624],
+    idx: usize,
+}
+
+impl Mt19937 {
+    pub fn new(seed: u32) -> Mt19937 {
+        let mut mt = [0u32; 624];
+        mt[0] = seed;
+        for i in 1..624 {
+            mt[i] = 1_812_433_253u32
+                .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+                .wrapping_add(i as u32);
+        }
+        Mt19937 { mt, idx: 624 }
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        if self.idx >= 624 {
+            for i in 0..624 {
+                let y = (self.mt[i] & 0x8000_0000) | (self.mt[(i + 1) % 624] & 0x7fff_ffff);
+                let mut next = self.mt[(i + 397) % 624] ^ (y >> 1);
+                if y & 1 == 1 {
+                    next ^= 0x9908_b0df;
+                }
+                self.mt[i] = next;
+            }
+            self.idx = 0;
+        }
+        let mut y = self.mt[self.idx];
+        self.idx += 1;
+        y ^= y >> 11;
+        y ^= (y << 7) & 0x9d2c_5680;
+        y ^= (y << 15) & 0xefc6_0000;
+        y ^= y >> 18;
+        y
+    }
+
+    /// numpy `random_sample`: two 32-bit draws into a 53-bit double.
+    pub fn next_double(&mut self) -> f64 {
+        let a = (self.next_u32() >> 5) as f64;
+        let b = (self.next_u32() >> 6) as f64;
+        (a * 67_108_864.0 + b) / 9_007_199_254_740_992.0
+    }
+
+    /// `RandomState.uniform(lo, hi, count).astype(float32)`.
+    pub fn uniform_f32(&mut self, lo: f64, hi: f64, count: usize) -> Vec<f32> {
+        (0..count)
+            .map(|_| (lo + (hi - lo) * self.next_double()) as f32)
+            .collect()
+    }
+}
+
+/// One dense layer's weights: `w` is `[fin, fout]` row-major.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub fin: usize,
+    pub fout: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    /// Trained-parameter count (weights + biases).
+    pub fn params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+/// Mirror of `model.WInit`: the exact draw order of the AOT weights.
+pub struct WInit {
+    mt: Mt19937,
+}
+
+impl WInit {
+    pub fn new(seed: u32) -> WInit {
+        WInit {
+            mt: Mt19937::new(seed),
+        }
+    }
+
+    pub fn dense(&mut self, fin: usize, fout: usize) -> Dense {
+        let s = 1.0 / (fin as f64).sqrt();
+        Dense {
+            fin,
+            fout,
+            w: self.mt.uniform_f32(-s, s, fin * fout),
+            b: self.mt.uniform_f32(-s, s, fout),
+        }
+    }
+
+    pub fn vec(&mut self, f: usize) -> Vec<f32> {
+        let s = 1.0 / (f as f64).sqrt();
+        self.mt.uniform_f32(-s, s, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// numpy `RandomState(0).uniform(-0.5, 0.5, 6)` reference values.
+    #[test]
+    fn mt19937_matches_numpy_randomstate_stream() {
+        let mut mt = Mt19937::new(0);
+        let want = [
+            0.04881350392732475,
+            0.21518936637241948,
+            0.10276337607164387,
+            0.044883182996896864,
+            -0.07634520066109529,
+            0.14589411306665612,
+        ];
+        for w in want {
+            let got = -0.5 + (0.5 - (-0.5)) * mt.next_double();
+            assert!((got - w).abs() < 1e-16, "got {got}, want {w}");
+        }
+        let mut mt2 = Mt19937::new(12345);
+        let want2 = [
+            0.8592321856342957,
+            -0.3672488908364282,
+            -0.6321623766458111,
+            -0.5908794428939206,
+        ];
+        for w in want2 {
+            let got = -1.0 + 2.0 * mt2.next_double();
+            assert!((got - w).abs() < 1e-15, "got {got}, want {w}");
+        }
+    }
+
+    /// `WInit(0).dense(9, d)` first f32 weights, as numpy casts them.
+    #[test]
+    fn winit_f32_cast_matches_numpy() {
+        let mut wi = WInit::new(0);
+        let dense = wi.dense(9, 4);
+        let want: [f32; 3] = [0.032542337, 0.14345957, 0.068508916];
+        for (g, w) in dense.w.iter().zip(&want) {
+            assert_eq!(*g, *w, "weight cast mismatch");
+        }
+        assert_eq!(dense.params(), 9 * 4 + 4);
+    }
+}

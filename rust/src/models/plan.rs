@@ -1,0 +1,579 @@
+//! The composable message-passing stage IR (the paper's §3.1 claim made
+//! executable): every model in the zoo is an ordered sequence of stages
+//! drawn from one component library, instead of a hand-written
+//! monolithic forward pass.
+//!
+//! A [`ModelPlan`] is lowered from a manifest entry by the per-kind
+//! registry in [`super::lower`] and executed by the generic sparse
+//! interpreter in `runtime::interp`, which walks sorted in-neighbor
+//! lists ([`crate::graph::InNbrs`]) — O(edges) per request, no padded
+//! adjacency anywhere. The legacy dense-matmul forwards survive as
+//! `runtime::dense_ref`, the bit-exactness reference the interpreter is
+//! property-tested against.
+//!
+//! The interpreter is a two-register machine: `h` holds the live node
+//! (or pooled graph) features, `m` holds the latest sparse-aggregation
+//! result until a combine stage consumes it, plus optional virtual-node
+//! state seeded from [`ModelPlan::vn_init`].
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Json};
+
+use super::params::Dense;
+
+/// Elementwise activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    /// `v <= 0 → exp(v) - 1` (GAT inter-layer).
+    Elu,
+}
+
+impl Act {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Act::None => "none",
+            Act::Relu => "relu",
+            Act::Elu => "elu",
+        }
+    }
+}
+
+/// Sparse neighborhood aggregation — the component library's gather/
+/// aggregate building blocks. All walk in-neighbors in ascending node
+/// order (the bit-exactness contract with the dense reference).
+#[derive(Clone, Debug)]
+pub enum Aggregate {
+    /// Plain neighbor sum.
+    Sum,
+    /// Neighbor mean, degree clamped to ≥ 1 (GraphSAGE).
+    Mean,
+    /// Elementwise neighbor max (0 for isolated nodes).
+    Max,
+    /// Elementwise neighbor min (0 for isolated nodes).
+    Min,
+    /// Symmetric GCN normalization `D^-1/2 (A + I) D^-1/2 · h`, with
+    /// the self-loop diagonal merged at its sorted position.
+    GcnNorm,
+    /// `Σ relu(h_j + bond(e_ij))` — GIN's edge-embedding message sum.
+    EdgeReluSum { bond: Dense },
+    /// PNA multi-aggregator tower: [mean, std, max, min] × scalers
+    /// [identity, amplification, attenuation] → width 12·d.
+    PnaTower,
+    /// DGN directional pair: [mean ‖ |B·h − b_row∘h|] along the
+    /// Laplacian eigenvector → width 2·d. Needs the `eig` input.
+    DgnDirectional,
+}
+
+impl Aggregate {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregate::Sum => "sum",
+            Aggregate::Mean => "mean",
+            Aggregate::Max => "max",
+            Aggregate::Min => "min",
+            Aggregate::GcnNorm => "gcn_norm",
+            Aggregate::EdgeReluSum { .. } => "edge_relu_sum",
+            Aggregate::PnaTower => "pna_tower",
+            Aggregate::DgnDirectional => "dgn_directional",
+        }
+    }
+
+    /// Output width of the aggregation register for input width `d`.
+    pub fn out_width(&self, d: usize) -> usize {
+        match self {
+            Aggregate::PnaTower => 12 * d,
+            Aggregate::DgnDirectional => 2 * d,
+            _ => d,
+        }
+    }
+
+    pub fn params(&self) -> usize {
+        match self {
+            Aggregate::EdgeReluSum { bond } => bond.params(),
+            _ => 0,
+        }
+    }
+}
+
+/// Graph-level vs node-level readout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Readout {
+    /// Mean over real nodes → one `[1, d]` graph row.
+    MaskedMeanPool,
+    /// Keep per-node rows; the interpreter zero-pads them to the
+    /// artifact capacity after the head.
+    NodeHead,
+}
+
+/// One stage of a model plan. `h` is the live feature register, `m`
+/// the aggregation register.
+#[derive(Clone, Debug)]
+pub enum Stage {
+    /// `h ← act(h·W + b)`
+    Linear { w: Dense, act: Act },
+    /// `m ← aggregate(h)` over the sparse in-neighborhoods.
+    SparseAggregate(Aggregate),
+    /// `h ← m` (adopt the aggregation result — GCN/SGC convolutions).
+    TakeAggregate,
+    /// `h ← (1 + ε)·h + m` (GIN combine).
+    EpsCombine { eps: f32 },
+    /// `h ← act(m·W + b) + h` (PNA/DGN residual update).
+    ResidualLinear { w: Dense, act: Act },
+    /// `h ← h·W_self + m·W_nbr` (GraphSAGE combine).
+    DualLinear { w_self: Dense, w_nbr: Dense },
+    /// Multi-head softmax attention over neighbors ∪ {self} applied to
+    /// the already-projected `h` (GAT). Per-head logit vectors.
+    EdgeAttention {
+        heads: usize,
+        a_src: Vec<f32>,
+        a_dst: Vec<f32>,
+    },
+    /// `h ← act(h)` elementwise.
+    Activation(Act),
+    /// Row-wise L2 normalization (GraphSAGE).
+    L2Normalize,
+    /// `h ← h + vn` broadcast of the virtual-node state.
+    VirtualNodeAdd,
+    /// `vn ← mlp(vn + Σ_i h_i)` (between GIN+VN layers).
+    VirtualNodeUpdate { w1: Dense, w2: Dense },
+    /// Collapse to the output shape.
+    Readout(Readout),
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Linear { .. } => "linear",
+            Stage::SparseAggregate(_) => "sparse_aggregate",
+            Stage::TakeAggregate => "take_aggregate",
+            Stage::EpsCombine { .. } => "eps_combine",
+            Stage::ResidualLinear { .. } => "residual_linear",
+            Stage::DualLinear { .. } => "dual_linear",
+            Stage::EdgeAttention { .. } => "edge_attention",
+            Stage::Activation(_) => "activation",
+            Stage::L2Normalize => "l2_normalize",
+            Stage::VirtualNodeAdd => "virtual_node_add",
+            Stage::VirtualNodeUpdate { .. } => "virtual_node_update",
+            Stage::Readout(_) => "readout",
+        }
+    }
+
+    /// Human-readable parameterization for `gengnn plan`.
+    pub fn detail(&self) -> String {
+        match self {
+            Stage::Linear { w, act } => format!("{}x{} act={}", w.fin, w.fout, act.name()),
+            Stage::SparseAggregate(a) => match a {
+                Aggregate::EdgeReluSum { bond } => {
+                    format!("{} bond={}x{}", a.name(), bond.fin, bond.fout)
+                }
+                _ => a.name().to_string(),
+            },
+            Stage::TakeAggregate => String::new(),
+            Stage::EpsCombine { eps } => format!("eps={eps}"),
+            Stage::ResidualLinear { w, act } => {
+                format!("{}x{} act={}", w.fin, w.fout, act.name())
+            }
+            Stage::DualLinear { w_self, w_nbr } => format!(
+                "self={}x{} nbr={}x{}",
+                w_self.fin, w_self.fout, w_nbr.fin, w_nbr.fout
+            ),
+            Stage::EdgeAttention { heads, a_src, .. } => {
+                let fh = a_src.len() / (*heads).max(1);
+                format!("heads={heads} fh={fh}")
+            }
+            Stage::Activation(a) => a.name().to_string(),
+            Stage::L2Normalize => String::new(),
+            Stage::VirtualNodeAdd => String::new(),
+            Stage::VirtualNodeUpdate { w1, w2 } => {
+                format!("mlp={}x{}x{}", w1.fin, w1.fout, w2.fout)
+            }
+            Stage::Readout(r) => match r {
+                Readout::MaskedMeanPool => "masked_mean_pool".to_string(),
+                Readout::NodeHead => "node_head".to_string(),
+            },
+        }
+    }
+
+    pub fn params(&self) -> usize {
+        match self {
+            Stage::Linear { w, .. } | Stage::ResidualLinear { w, .. } => w.params(),
+            Stage::SparseAggregate(a) => a.params(),
+            Stage::DualLinear { w_self, w_nbr } => w_self.params() + w_nbr.params(),
+            Stage::EdgeAttention { a_src, a_dst, .. } => a_src.len() + a_dst.len(),
+            Stage::VirtualNodeUpdate { w1, w2 } => w1.params() + w2.params(),
+            _ => 0,
+        }
+    }
+}
+
+/// Shape/param summary of one stage, produced by the plan walk.
+#[derive(Clone, Debug)]
+pub struct StageSummary {
+    pub index: usize,
+    pub name: &'static str,
+    pub detail: String,
+    pub in_width: usize,
+    pub out_width: usize,
+    pub params: usize,
+}
+
+/// A lowered model: metadata + the executable stage sequence.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub model: String,
+    pub n_max: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Edge feature width consumed by `EdgeReluSum` stages (0 if none).
+    pub edge_dim: usize,
+    pub node_level: bool,
+    /// Initial virtual-node state (GIN+VN).
+    pub vn_init: Option<Vec<f32>>,
+    pub stages: Vec<Stage>,
+}
+
+impl ModelPlan {
+    /// Whether execution needs a Laplacian eigenvector input.
+    pub fn needs_eig(&self) -> bool {
+        self.stages
+            .iter()
+            .any(|s| matches!(s, Stage::SparseAggregate(Aggregate::DgnDirectional)))
+    }
+
+    pub fn needs_edge_attr(&self) -> bool {
+        self.edge_dim > 0
+    }
+
+    /// Parameters carried by the virtual-node initial state.
+    pub fn vn_params(&self) -> usize {
+        self.vn_init.as_ref().map_or(0, |v| v.len())
+    }
+
+    /// Total trained parameters (stages + virtual-node state).
+    pub fn param_count(&self) -> usize {
+        self.vn_params() + self.stages.iter().map(|s| s.params()).sum::<usize>()
+    }
+
+    /// Walk the stage sequence, checking that widths chain and that
+    /// register/state use is well-formed, producing per-stage shape
+    /// summaries. This is the schema the `gengnn plan` dump exposes.
+    pub fn summaries(&self) -> Result<Vec<StageSummary>> {
+        let mut out = Vec::with_capacity(self.stages.len());
+        let mut h = self.in_dim;
+        // Width of the pending aggregation register, if any.
+        let mut m: Option<usize> = None;
+        let mut pooled = false;
+        let take_m = |m: &mut Option<usize>, what: &str| -> Result<usize> {
+            m.take()
+                .ok_or_else(|| anyhow::anyhow!("{what} with no pending SparseAggregate"))
+        };
+        for (index, stage) in self.stages.iter().enumerate() {
+            let in_width = h;
+            // After a pooling readout only head stages make sense:
+            // everything that walks node rows or touches per-node
+            // state would misalign with the single pooled row (and
+            // the interpreter would index out of bounds).
+            if pooled && !matches!(stage, Stage::Linear { .. } | Stage::Activation(_)) {
+                bail!("stage {index}: {} after readout", stage.name());
+            }
+            match stage {
+                Stage::Linear { w, .. } => {
+                    if w.fin != h {
+                        bail!("stage {index}: linear expects width {}, h is {h}", w.fin);
+                    }
+                    h = w.fout;
+                }
+                Stage::SparseAggregate(a) => {
+                    if m.is_some() {
+                        bail!(
+                            "stage {index}: aggregation would overwrite an \
+                             unconsumed aggregation register"
+                        );
+                    }
+                    if let Aggregate::EdgeReluSum { bond } = a {
+                        if self.edge_dim == 0 {
+                            bail!("stage {index}: edge aggregation without edge features");
+                        }
+                        if bond.fin != self.edge_dim || bond.fout != h {
+                            bail!(
+                                "stage {index}: bond {}x{} does not map edge_dim {} \
+                                 onto h({h})",
+                                bond.fin,
+                                bond.fout,
+                                self.edge_dim
+                            );
+                        }
+                    }
+                    m = Some(a.out_width(h));
+                }
+                Stage::TakeAggregate => {
+                    h = take_m(&mut m, "take_aggregate")?;
+                }
+                Stage::EpsCombine { .. } => {
+                    let mw = take_m(&mut m, "eps_combine")?;
+                    if mw != h {
+                        bail!("stage {index}: eps_combine widths differ ({mw} vs {h})");
+                    }
+                }
+                Stage::ResidualLinear { w, .. } => {
+                    let mw = take_m(&mut m, "residual_linear")?;
+                    if w.fin != mw || w.fout != h {
+                        bail!(
+                            "stage {index}: residual {}x{} does not map m({mw}) onto h({h})",
+                            w.fin,
+                            w.fout
+                        );
+                    }
+                }
+                Stage::DualLinear { w_self, w_nbr } => {
+                    let mw = take_m(&mut m, "dual_linear")?;
+                    if w_self.fin != h || w_nbr.fin != mw || w_self.fout != w_nbr.fout {
+                        bail!("stage {index}: dual_linear width mismatch");
+                    }
+                    h = w_self.fout;
+                }
+                Stage::EdgeAttention { heads, a_src, a_dst } => {
+                    if *heads == 0 || h % heads != 0 {
+                        bail!("stage {index}: width {h} not divisible by {heads} heads");
+                    }
+                    if a_src.len() != h || a_dst.len() != h {
+                        bail!("stage {index}: attention logit vectors must have width {h}");
+                    }
+                }
+                Stage::Activation(_) | Stage::L2Normalize => {}
+                Stage::VirtualNodeAdd | Stage::VirtualNodeUpdate { .. } => {
+                    let vn = self
+                        .vn_init
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("stage {index}: no vn_init state"))?;
+                    if vn.len() != h {
+                        bail!("stage {index}: vn width {} vs h {h}", vn.len());
+                    }
+                    if let Stage::VirtualNodeUpdate { w1, w2 } = stage {
+                        if w1.fin != h || w2.fout != h {
+                            bail!("stage {index}: vn mlp must map {h} -> {h}");
+                        }
+                    }
+                }
+                Stage::Readout(r) => {
+                    if m.is_some() {
+                        bail!(
+                            "stage {index}: readout with an unconsumed \
+                             aggregation register"
+                        );
+                    }
+                    pooled = true;
+                    if *r == Readout::NodeHead && !self.node_level {
+                        bail!("stage {index}: node_head readout in a graph-level plan");
+                    }
+                    if *r == Readout::MaskedMeanPool && self.node_level {
+                        bail!("stage {index}: pooled readout in a node-level plan");
+                    }
+                }
+            }
+            out.push(StageSummary {
+                index,
+                name: stage.name(),
+                detail: stage.detail(),
+                in_width,
+                out_width: h,
+                params: stage.params(),
+            });
+        }
+        if m.is_some() {
+            bail!("plan ends with an unconsumed aggregation register");
+        }
+        if !pooled {
+            bail!("plan has no readout stage");
+        }
+        if h != self.out_dim {
+            bail!("plan ends at width {h}, artifact wants {}", self.out_dim);
+        }
+        Ok(out)
+    }
+
+    /// Shape-check the stage chain.
+    pub fn validate(&self) -> Result<()> {
+        self.summaries().map(|_| ())
+    }
+
+    /// Render the `gengnn plan` text dump.
+    pub fn render_text(&self) -> Result<String> {
+        use std::fmt::Write as _;
+        let summaries = self.summaries()?;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "model {} (n_max {}, in {}, out {}, {} level{})",
+            self.model,
+            self.n_max,
+            self.in_dim,
+            self.out_dim,
+            if self.node_level { "node" } else { "graph" },
+            if self.edge_dim > 0 {
+                format!(", edge_dim {}", self.edge_dim)
+            } else {
+                String::new()
+            }
+        );
+        let _ = writeln!(
+            s,
+            "{:>3}  {:<18} {:<28} {:>5} {:>6} {:>9}",
+            "#", "stage", "detail", "in", "out", "params"
+        );
+        for sum in &summaries {
+            let _ = writeln!(
+                s,
+                "{:>3}  {:<18} {:<28} {:>5} {:>6} {:>9}",
+                sum.index, sum.name, sum.detail, sum.in_width, sum.out_width, sum.params
+            );
+        }
+        let _ = writeln!(
+            s,
+            "{} stages, {} params ({} in virtual-node state)",
+            summaries.len(),
+            self.param_count(),
+            self.vn_params()
+        );
+        Ok(s)
+    }
+
+    /// The machine-readable dump `gengnn plan --json` emits, validated
+    /// by `python/tools/check_plan_schema.py` in CI.
+    pub fn to_json(&self) -> Result<Json> {
+        let stages: Vec<Json> = self
+            .summaries()?
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("index", json::num(s.index as f64)),
+                    ("stage", Json::Str(s.name.to_string())),
+                    ("detail", Json::Str(s.detail.clone())),
+                    ("in_width", json::num(s.in_width as f64)),
+                    ("out_width", json::num(s.out_width as f64)),
+                    ("params", json::num(s.params as f64)),
+                ])
+            })
+            .collect();
+        Ok(json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("n_max", json::num(self.n_max as f64)),
+            ("in_dim", json::num(self.in_dim as f64)),
+            ("out_dim", json::num(self.out_dim as f64)),
+            ("edge_dim", json::num(self.edge_dim as f64)),
+            ("node_level", Json::Bool(self.node_level)),
+            ("vn_params", json::num(self.vn_params() as f64)),
+            ("total_params", json::num(self.param_count() as f64)),
+            ("stages", Json::Arr(stages)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::params::WInit;
+
+    fn tiny_plan() -> ModelPlan {
+        let mut wi = WInit::new(0);
+        ModelPlan {
+            model: "tiny".into(),
+            n_max: 8,
+            in_dim: 4,
+            out_dim: 1,
+            edge_dim: 0,
+            node_level: false,
+            vn_init: None,
+            stages: vec![
+                Stage::Linear {
+                    w: wi.dense(4, 8),
+                    act: Act::Relu,
+                },
+                Stage::SparseAggregate(Aggregate::GcnNorm),
+                Stage::TakeAggregate,
+                Stage::Readout(Readout::MaskedMeanPool),
+                Stage::Linear {
+                    w: wi.dense(8, 1),
+                    act: Act::None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn summaries_chain_widths() {
+        let p = tiny_plan();
+        let s = p.summaries().unwrap();
+        assert_eq!(s.len(), 5);
+        for pair in s.windows(2) {
+            assert_eq!(pair[0].out_width, pair[1].in_width);
+        }
+        assert_eq!(s[0].in_width, 4);
+        assert_eq!(s.last().unwrap().out_width, 1);
+        assert_eq!(p.param_count(), (4 * 8 + 8) + (8 + 1));
+    }
+
+    #[test]
+    fn unconsumed_aggregate_is_rejected() {
+        let mut p = tiny_plan();
+        p.stages.remove(2); // drop TakeAggregate
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn width_mismatch_is_rejected() {
+        let mut p = tiny_plan();
+        if let Stage::Linear { w, .. } = &mut p.stages[4] {
+            w.fin = 5;
+        }
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn missing_readout_is_rejected() {
+        let mut p = tiny_plan();
+        p.stages.remove(3);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn consecutive_aggregations_are_rejected() {
+        // A second aggregation would silently discard the first.
+        let mut p = tiny_plan();
+        p.stages.insert(2, Stage::SparseAggregate(Aggregate::Sum));
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("overwrite"), "{err}");
+    }
+
+    #[test]
+    fn node_stages_after_readout_are_rejected() {
+        // Post-readout, only head Linear/Activation stages are legal —
+        // node-topology stages would misalign with the pooled row.
+        let mut p = tiny_plan();
+        p.stages.insert(4, Stage::L2Normalize);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("after readout"), "{err}");
+        let mut p = tiny_plan();
+        p.stages.push(Stage::Readout(Readout::MaskedMeanPool));
+        assert!(p.validate().is_err(), "second readout must be rejected");
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let p = tiny_plan();
+        let text = p.to_json().unwrap().to_string_pretty();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str().unwrap(), "tiny");
+        assert_eq!(
+            v.get("stages").unwrap().as_arr().unwrap().len(),
+            p.stages.len()
+        );
+        assert_eq!(
+            v.get("total_params").unwrap().as_usize().unwrap(),
+            p.param_count()
+        );
+    }
+}

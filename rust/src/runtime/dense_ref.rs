@@ -1,0 +1,806 @@
+//! The legacy dense-matmul forward passes, preserved verbatim as the
+//! **reference executor** — no serving path reaches this module.
+//!
+//! Until the stage-IR redesign, these monolithic per-model forwards
+//! *were* the native backend: every request densified its graph into an
+//! O(n_max²) padded adjacency ([`crate::graph::DenseGraph`]) and ran
+//! one of seven hand-written `fwd_*` bodies. The serving path now
+//! executes lowered [`crate::models::ModelPlan`]s through the sparse
+//! interpreter ([`super::interp`]); this module remains for exactly two
+//! consumers:
+//!
+//! * the bit-exactness property tests (`tests/plan_equivalence.rs`),
+//!   which pin the interpreter to these loops bit-for-bit, and
+//! * the `plan_vs_legacy` micro benches, which track the speedup of
+//!   sparse plan execution over the dense reference.
+//!
+//! It mirrors `python/compile/native_ref.py` (the cross-language spec
+//! pinned to the JAX models) operation-for-operation, with the same
+//! seeded weights the AOT artifacts bake in.
+
+use anyhow::{bail, Result};
+
+use crate::graph::DenseGraph;
+use crate::models::params::{Dense, WInit};
+use crate::models::plan::Act;
+
+use super::artifact::ModelMeta;
+use super::tensor::{
+    apply_act, avg_log_deg, linear, mask_rows, masked_mean_pool, matmul, Mat,
+};
+
+const EPS_GIN: f32 = 0.1;
+
+/// Symmetric GCN normalization `D^-1/2 (A + diag(mask)) D^-1/2`.
+fn gcn_norm_adj(adj: &Mat, mask: &[f32]) -> Mat {
+    let n = adj.r;
+    let mut a_hat = adj.clone();
+    for i in 0..n {
+        a_hat.d[i * n + i] += mask[i];
+    }
+    let mut inv_sqrt = vec![0.0f32; n];
+    for i in 0..n {
+        let deg: f32 = a_hat.row(i).iter().sum();
+        if deg > 0.0 {
+            inv_sqrt[i] = 1.0 / deg.max(1e-12).sqrt();
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            a_hat.d[i * n + j] *= inv_sqrt[i] * inv_sqrt[j];
+        }
+    }
+    a_hat
+}
+
+/// Which reference forward to run (resolved from the manifest name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RefKind {
+    Gcn,
+    Gin { virtual_node: bool },
+    Gat,
+    Pna,
+    Sgc,
+    Sage,
+    Dgn,
+}
+
+fn kind_of(name: &str) -> Result<RefKind> {
+    Ok(match name {
+        "gcn" => RefKind::Gcn,
+        "gin" => RefKind::Gin {
+            virtual_node: false,
+        },
+        "gin_vn" => RefKind::Gin { virtual_node: true },
+        "gat" => RefKind::Gat,
+        "pna" => RefKind::Pna,
+        "sgc" => RefKind::Sgc,
+        "sage" => RefKind::Sage,
+        "dgn" | "dgn_large" => RefKind::Dgn,
+        _ => bail!("dense reference has no forward pass for model {name:?}"),
+    })
+}
+
+enum Weights {
+    Gcn {
+        embed: Dense,
+        convs: Vec<Dense>,
+        head: Dense,
+    },
+    Gin {
+        embed: Dense,
+        bond: Vec<Dense>,
+        mlps: Vec<(Dense, Dense)>,
+        head: Dense,
+        /// `(vn0, vn_mlps)` for GIN+VN.
+        vn: Option<(Vec<f32>, Vec<(Dense, Dense)>)>,
+    },
+    Gat {
+        embed: Dense,
+        /// Per layer: projection + per-head (a_src, a_dst) vectors.
+        convs: Vec<(Dense, Vec<f32>, Vec<f32>)>,
+        head: Dense,
+    },
+    Pna {
+        embed: Dense,
+        convs: Vec<Dense>,
+        head: [Dense; 3],
+    },
+    Sgc {
+        w: Dense,
+        head: Dense,
+    },
+    Sage {
+        embed: Dense,
+        convs: Vec<(Dense, Dense)>,
+        head: Dense,
+    },
+    Dgn {
+        embed: Dense,
+        convs: Vec<Dense>,
+        head: [Dense; 3],
+    },
+}
+
+/// The dense reference model: resolved kind, manifest dims, and the
+/// regenerated baked-in weights.
+pub struct DenseRef {
+    kind: RefKind,
+    layers: usize,
+    dim: usize,
+    heads: usize,
+    out_dim: usize,
+    node_level: bool,
+    edge_dim: usize,
+    weights: Weights,
+}
+
+impl DenseRef {
+    /// Rebuild the model's weights from the manifest entry and the
+    /// artifact weight seed (same draw order as `model.py`'s builders).
+    pub fn build(meta: &ModelMeta, weight_seed: u64) -> Result<DenseRef> {
+        if weight_seed > u32::MAX as u64 {
+            bail!("weight_seed {weight_seed} exceeds the scalar MT19937 seeding range");
+        }
+        let kind = kind_of(&meta.name)?;
+        let d = meta.dim;
+        if d == 0 || meta.layers == 0 {
+            bail!("model {:?} has degenerate dims", meta.name);
+        }
+        let edge_dim = meta
+            .inputs
+            .iter()
+            .find(|i| i.name == "edge_attr")
+            .map(|i| *i.shape.last().unwrap_or(&0))
+            .unwrap_or(0);
+        let mut wi = WInit::new(weight_seed as u32);
+        let weights = match kind {
+            RefKind::Gcn => Weights::Gcn {
+                embed: wi.dense(meta.in_dim, d),
+                convs: (0..meta.layers).map(|_| wi.dense(d, d)).collect(),
+                head: wi.dense(d, meta.out_dim),
+            },
+            RefKind::Gin { virtual_node } => {
+                if edge_dim == 0 {
+                    bail!("GIN artifact {:?} lists no edge_attr input", meta.name);
+                }
+                let embed = wi.dense(meta.in_dim, d);
+                let bond: Vec<Dense> =
+                    (0..meta.layers).map(|_| wi.dense(edge_dim, d)).collect();
+                let mlps: Vec<(Dense, Dense)> = (0..meta.layers)
+                    .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
+                    .collect();
+                let head = wi.dense(d, meta.out_dim);
+                let vn = if virtual_node {
+                    let vn0 = wi.vec(d);
+                    let vn_mlps = (0..meta.layers - 1)
+                        .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
+                        .collect();
+                    Some((vn0, vn_mlps))
+                } else {
+                    None
+                };
+                Weights::Gin {
+                    embed,
+                    bond,
+                    mlps,
+                    head,
+                    vn,
+                }
+            }
+            RefKind::Gat => {
+                if meta.heads == 0 || d % meta.heads != 0 {
+                    bail!(
+                        "GAT artifact {:?}: dim {} not divisible by heads {}",
+                        meta.name,
+                        d,
+                        meta.heads
+                    );
+                }
+                let embed = wi.dense(meta.in_dim, d);
+                let convs = (0..meta.layers)
+                    .map(|_| {
+                        let w = wi.dense(d, d);
+                        let a_src = wi.vec(d);
+                        let a_dst = wi.vec(d);
+                        (w, a_src, a_dst)
+                    })
+                    .collect();
+                Weights::Gat {
+                    embed,
+                    convs,
+                    head: wi.dense(d, meta.out_dim),
+                }
+            }
+            RefKind::Pna => Weights::Pna {
+                embed: wi.dense(meta.in_dim, d),
+                convs: (0..meta.layers).map(|_| wi.dense(12 * d, d)).collect(),
+                head: [
+                    wi.dense(d, d / 2),
+                    wi.dense(d / 2, d / 4),
+                    wi.dense(d / 4, meta.out_dim),
+                ],
+            },
+            RefKind::Sgc => Weights::Sgc {
+                w: wi.dense(meta.in_dim, d),
+                head: wi.dense(d, meta.out_dim),
+            },
+            RefKind::Sage => Weights::Sage {
+                embed: wi.dense(meta.in_dim, d),
+                convs: (0..meta.layers)
+                    .map(|_| (wi.dense(d, d), wi.dense(d, d)))
+                    .collect(),
+                head: wi.dense(d, meta.out_dim),
+            },
+            RefKind::Dgn => Weights::Dgn {
+                embed: wi.dense(meta.in_dim, d),
+                convs: (0..meta.layers).map(|_| wi.dense(2 * d, d)).collect(),
+                head: [
+                    wi.dense(d, d / 2),
+                    wi.dense(d / 2, d / 4),
+                    wi.dense(d / 4, meta.out_dim),
+                ],
+            },
+        };
+        Ok(DenseRef {
+            kind,
+            layers: meta.layers,
+            dim: d,
+            heads: meta.heads,
+            out_dim: meta.out_dim,
+            node_level: meta.node_level,
+            edge_dim,
+            weights,
+        })
+    }
+
+    /// Run the forward pass over staged dense tensors. Graph-level
+    /// models return `[out_dim]`; node-level `[n_max * out_dim]`.
+    pub fn forward(&self, dense: &DenseGraph) -> Result<Vec<f32>> {
+        let n = dense.n_max;
+        let x = Mat::from_slice(n, dense.f_node, &dense.x);
+        let adj = Mat::from_slice(n, n, &dense.adj);
+        let mask = &dense.mask;
+        let out = match (&self.kind, &self.weights) {
+            (RefKind::Gcn, Weights::Gcn { embed, convs, head }) => {
+                self.fwd_gcn(&x, &adj, mask, embed, convs, head)
+            }
+            (RefKind::Sgc, Weights::Sgc { w, head }) => {
+                self.fwd_sgc(&x, &adj, mask, w, head)
+            }
+            (
+                RefKind::Gin { .. },
+                Weights::Gin {
+                    embed,
+                    bond,
+                    mlps,
+                    head,
+                    vn,
+                },
+            ) => {
+                if self.edge_dim == 0 || dense.f_edge != self.edge_dim {
+                    bail!(
+                        "GIN forward needs {}-wide edge features, staged {}",
+                        self.edge_dim,
+                        dense.f_edge
+                    );
+                }
+                self.fwd_gin(&x, &adj, dense, mask, embed, bond, mlps, head, vn.as_ref())
+            }
+            (RefKind::Gat, Weights::Gat { embed, convs, head }) => {
+                self.fwd_gat(&x, &adj, mask, embed, convs, head)
+            }
+            (RefKind::Pna, Weights::Pna { embed, convs, head }) => {
+                self.fwd_pna(&x, &adj, mask, embed, convs, head)
+            }
+            (RefKind::Sage, Weights::Sage { embed, convs, head }) => {
+                self.fwd_sage(&x, &adj, mask, embed, convs, head)
+            }
+            (RefKind::Dgn, Weights::Dgn { embed, convs, head }) => {
+                self.fwd_dgn(&x, &adj, &dense.eig, mask, embed, convs, head)
+            }
+            _ => bail!("dense reference weight/kind mismatch"),
+        };
+        Ok(out)
+    }
+
+    fn fwd_gcn(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        mask: &[f32],
+        embed: &Dense,
+        convs: &[Dense],
+        head: &Dense,
+    ) -> Vec<f32> {
+        let a_norm = gcn_norm_adj(adj, mask);
+        let mut h = linear(x, embed, Act::Relu);
+        for (li, conv) in convs.iter().enumerate() {
+            let hw = linear(&h, conv, Act::None);
+            h = matmul(&a_norm, &hw);
+            if li + 1 < convs.len() {
+                apply_act(&mut h, Act::Relu);
+            }
+        }
+        mask_rows(&mut h, mask);
+        if self.node_level {
+            linear(&h, head, Act::None).into_vec()
+        } else {
+            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
+        }
+    }
+
+    fn fwd_sgc(&self, x: &Mat, adj: &Mat, mask: &[f32], w: &Dense, head: &Dense) -> Vec<f32> {
+        let a_norm = gcn_norm_adj(adj, mask);
+        let mut h = x.clone();
+        for _ in 0..self.layers {
+            h = matmul(&a_norm, &h);
+        }
+        let mut h = linear(&h, w, Act::Relu);
+        mask_rows(&mut h, mask);
+        if self.node_level {
+            linear(&h, head, Act::None).into_vec()
+        } else {
+            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_gin(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        dense: &DenseGraph,
+        mask: &[f32],
+        embed: &Dense,
+        bond: &[Dense],
+        mlps: &[(Dense, Dense)],
+        head: &Dense,
+        vn: Option<&(Vec<f32>, Vec<(Dense, Dense)>)>,
+    ) -> Vec<f32> {
+        let n = adj.r;
+        let d = self.dim;
+        let de = self.edge_dim;
+        let mut h = linear(x, embed, Act::Relu);
+        let mut vn_state: Option<Vec<f32>> = vn.map(|(vn0, _)| vn0.clone());
+        for li in 0..self.layers {
+            if let Some(vn_vec) = &vn_state {
+                for i in 0..n {
+                    let mk = mask[i];
+                    if mk != 0.0 {
+                        let hr = &mut h.d[i * d..(i + 1) * d];
+                        for (hv, &vv) in hr.iter_mut().zip(vn_vec) {
+                            *hv += vv * mk;
+                        }
+                    }
+                }
+            }
+            // Edge embedding + merged scatter-gather:
+            //   m[u] = sum_v adj[u,v] * relu(h[v] + (edge_attr[u,v] @ We + be))
+            let bl = &bond[li];
+            let mut m = Mat::zeros(n, d);
+            let mut e_row = vec![0.0f32; d];
+            for u in 0..n {
+                let mr = &mut m.d[u * d..(u + 1) * d];
+                for v in 0..n {
+                    let a = adj.at(u, v);
+                    if a == 0.0 {
+                        continue;
+                    }
+                    e_row.copy_from_slice(&bl.b);
+                    let ea = &dense.edge_attr[(u * n + v) * de..(u * n + v + 1) * de];
+                    for (k, &ev) in ea.iter().enumerate() {
+                        if ev != 0.0 {
+                            let wr = &bl.w[k * d..(k + 1) * d];
+                            for (o, &wv) in e_row.iter_mut().zip(wr) {
+                                *o += ev * wv;
+                            }
+                        }
+                    }
+                    let hv = h.row(v);
+                    for j in 0..d {
+                        let msg = (hv[j] + e_row[j]).max(0.0);
+                        mr[j] += a * msg;
+                    }
+                }
+            }
+            // (1 + eps) x + m through the 2-layer MLP.
+            let mut z = Mat::zeros(n, d);
+            for i in 0..n * d {
+                z.d[i] = (1.0 + EPS_GIN) * h.d[i] + m.d[i];
+            }
+            let (w1, w2) = &mlps[li];
+            h = linear(&linear(&z, w1, Act::Relu), w2, Act::Relu);
+            mask_rows(&mut h, mask);
+            if let Some(vn_vec) = &mut vn_state {
+                if li + 1 < self.layers {
+                    let (_, vn_mlps) = vn.unwrap();
+                    let mut g = Mat::zeros(1, d);
+                    g.d.copy_from_slice(vn_vec);
+                    for i in 0..n {
+                        let mk = mask[i];
+                        if mk != 0.0 {
+                            for (gv, &hv) in g.d.iter_mut().zip(h.row(i)) {
+                                *gv += hv * mk;
+                            }
+                        }
+                    }
+                    let (w1, w2) = &vn_mlps[li];
+                    let updated = linear(&linear(&g, w1, Act::Relu), w2, Act::Relu);
+                    vn_vec.copy_from_slice(&updated.d);
+                }
+            }
+        }
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
+    }
+
+    fn fwd_gat(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        mask: &[f32],
+        embed: &Dense,
+        convs: &[(Dense, Vec<f32>, Vec<f32>)],
+        head: &Dense,
+    ) -> Vec<f32> {
+        let n = adj.r;
+        let d = self.dim;
+        let heads = self.heads;
+        let fh = d / heads;
+        // Self-loops on real nodes: adj_sl = max(adj, diag(mask)).
+        let mut adj_sl = adj.clone();
+        for i in 0..n {
+            let v = adj_sl.at(i, i).max(mask[i]);
+            adj_sl.d[i * n + i] = v;
+        }
+        let mut h = linear(x, embed, Act::Relu);
+        for (li, (w, a_src, a_dst)) in convs.iter().enumerate() {
+            let z = linear(&h, w, Act::None); // [n, d] = [n, heads*fh]
+            // Per-node, per-head logit dot products.
+            let mut sl = vec![0.0f32; n * heads];
+            let mut dl = vec![0.0f32; n * heads];
+            for i in 0..n {
+                let zr = z.row(i);
+                for hh in 0..heads {
+                    let zs = &zr[hh * fh..(hh + 1) * fh];
+                    let asr = &a_src[hh * fh..(hh + 1) * fh];
+                    let ads = &a_dst[hh * fh..(hh + 1) * fh];
+                    sl[i * heads + hh] = zs.iter().zip(asr).map(|(a, b)| a * b).sum();
+                    dl[i * heads + hh] = zs.iter().zip(ads).map(|(a, b)| a * b).sum();
+                }
+            }
+            let mut out = Mat::zeros(n, d);
+            let mut logits = vec![0.0f32; n];
+            for hh in 0..heads {
+                for i in 0..n {
+                    // LeakyReLU(sl_i + dl_j), masked to the neighborhood.
+                    let mut lmax = f32::NEG_INFINITY;
+                    for j in 0..n {
+                        let mut l = sl[i * heads + hh] + dl[j * heads + hh];
+                        if l <= 0.0 {
+                            l *= 0.2;
+                        }
+                        if adj_sl.at(i, j) <= 0.0 {
+                            l = -1.0e9;
+                        }
+                        logits[j] = l;
+                        lmax = lmax.max(l);
+                    }
+                    let mut denom = 0.0f32;
+                    for (j, l) in logits.iter_mut().enumerate() {
+                        let p = if adj_sl.at(i, j) > 0.0 {
+                            (*l - lmax).exp()
+                        } else {
+                            0.0
+                        };
+                        *l = p;
+                        denom += p;
+                    }
+                    let denom = denom.max(1e-16);
+                    let or = &mut out.d[i * d + hh * fh..i * d + (hh + 1) * fh];
+                    for j in 0..n {
+                        let p = logits[j] / denom;
+                        if p != 0.0 {
+                            let zs = &z.row(j)[hh * fh..(hh + 1) * fh];
+                            for (o, &zv) in or.iter_mut().zip(zs) {
+                                *o += p * zv;
+                            }
+                        }
+                    }
+                }
+            }
+            h = out;
+            if li + 1 < convs.len() {
+                apply_act(&mut h, Act::Elu);
+            }
+            mask_rows(&mut h, mask);
+        }
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
+    }
+
+    fn fwd_pna(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        mask: &[f32],
+        embed: &Dense,
+        convs: &[Dense],
+        head: &[Dense; 3],
+    ) -> Vec<f32> {
+        let n = adj.r;
+        let d = self.dim;
+        let mut h = linear(x, embed, Act::Relu);
+        let deg: Vec<f32> = (0..n).map(|i| adj.row(i).iter().sum()).collect();
+        let avg = avg_log_deg();
+        const NEG: f32 = -3.0e38;
+        const POS: f32 = 3.0e38;
+        for conv in convs {
+            // Four aggregators (sum, sumsq, max, min) over the neighborhood.
+            let mut full = Mat::zeros(n, 12 * d);
+            for i in 0..n {
+                let mut s = vec![0.0f32; d];
+                let mut ss = vec![0.0f32; d];
+                let mut mx = vec![NEG; d];
+                let mut mn = vec![POS; d];
+                for j in 0..n {
+                    let a = adj.at(i, j);
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let hj = h.row(j);
+                    for k in 0..d {
+                        let v = hj[k];
+                        s[k] += a * v;
+                        ss[k] += a * v * v;
+                        mx[k] = mx[k].max(v);
+                        mn[k] = mn[k].min(v);
+                    }
+                }
+                let dg = deg[i];
+                let dg1 = dg.max(1.0);
+                let has = if dg > 0.0 { 1.0 } else { 0.0 };
+                let log_deg = (dg + 1.0).ln();
+                let amp = log_deg / avg;
+                let att = if dg > 0.0 {
+                    avg / log_deg.max(1e-6)
+                } else {
+                    0.0
+                };
+                let fr = &mut full.d[i * 12 * d..(i + 1) * 12 * d];
+                for k in 0..d {
+                    let mean = s[k] / dg1;
+                    let var = (ss[k] / dg1 - mean * mean).max(0.0);
+                    let std = (var + 1e-8).sqrt() * has;
+                    // agg = [mean, std, max, min], then scaled copies.
+                    let agg = [mean, std, mx[k] * has, mn[k] * has];
+                    for (b, &v) in agg.iter().enumerate() {
+                        fr[b * d + k] = v;
+                        fr[(4 + b) * d + k] = v * amp;
+                        fr[(8 + b) * d + k] = v * att;
+                    }
+                }
+            }
+            let up = linear(&full, conv, Act::Relu);
+            for i in 0..n * d {
+                h.d[i] = up.d[i] + h.d[i];
+            }
+            mask_rows(&mut h, mask);
+        }
+        let mut p = masked_mean_pool(&h, mask);
+        p = linear(&p, &head[0], Act::Relu);
+        p = linear(&p, &head[1], Act::Relu);
+        linear(&p, &head[2], Act::None).into_vec()
+    }
+
+    fn fwd_sage(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        mask: &[f32],
+        embed: &Dense,
+        convs: &[(Dense, Dense)],
+        head: &Dense,
+    ) -> Vec<f32> {
+        let n = adj.r;
+        let d = self.dim;
+        let deg1: Vec<f32> = (0..n)
+            .map(|i| adj.row(i).iter().sum::<f32>().max(1.0))
+            .collect();
+        let mut h = linear(x, embed, Act::Relu);
+        for (li, (w_self, w_nbr)) in convs.iter().enumerate() {
+            let mut mean_nbr = matmul(adj, &h);
+            for i in 0..n {
+                let dv = deg1[i];
+                mean_nbr.d[i * d..(i + 1) * d]
+                    .iter_mut()
+                    .for_each(|v| *v /= dv);
+            }
+            let hs = linear(&h, w_self, Act::None);
+            let hn = linear(&mean_nbr, w_nbr, Act::None);
+            for i in 0..n * d {
+                h.d[i] = hs.d[i] + hn.d[i];
+            }
+            if li + 1 < convs.len() {
+                apply_act(&mut h, Act::Relu);
+            }
+            // Row-wise L2 normalization (GraphSage).
+            super::tensor::l2_normalize_rows(&mut h);
+            mask_rows(&mut h, mask);
+        }
+        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_dgn(
+        &self,
+        x: &Mat,
+        adj: &Mat,
+        eig: &[f32],
+        mask: &[f32],
+        embed: &Dense,
+        convs: &[Dense],
+        head: &[Dense; 3],
+    ) -> Vec<f32> {
+        let n = adj.r;
+        let d = self.dim;
+        // Mean-normalized adjacency + directional matrix B_dx (§4.4).
+        let mut adj_norm = Mat::zeros(n, n);
+        let mut b_dx = Mat::zeros(n, n);
+        let mut b_row = vec![0.0f32; n];
+        for i in 0..n {
+            let deg: f32 = adj.row(i).iter().sum();
+            let dg1 = deg.max(1.0);
+            let mut abs_sum = 0.0f32;
+            for j in 0..n {
+                let a = adj.at(i, j);
+                adj_norm.d[i * n + j] = a / dg1;
+                let fm = a * (eig[j] - eig[i]);
+                b_dx.d[i * n + j] = fm;
+                abs_sum += fm.abs();
+            }
+            let denom = abs_sum + 1e-8;
+            let mut row_sum = 0.0f32;
+            for j in 0..n {
+                b_dx.d[i * n + j] /= denom;
+                row_sum += b_dx.d[i * n + j];
+            }
+            b_row[i] = row_sum;
+        }
+        let mut h = linear(x, embed, Act::Relu);
+        for conv in convs {
+            let mean = matmul(&adj_norm, &h);
+            let bh = matmul(&b_dx, &h);
+            let mut y = Mat::zeros(n, 2 * d);
+            for i in 0..n {
+                let yr = &mut y.d[i * 2 * d..(i + 1) * 2 * d];
+                yr[..d].copy_from_slice(mean.row(i));
+                let hr = h.row(i);
+                let br = bh.row(i);
+                for k in 0..d {
+                    yr[d + k] = (br[k] - b_row[i] * hr[k]).abs();
+                }
+            }
+            let up = linear(&y, conv, Act::Relu);
+            for i in 0..n * d {
+                h.d[i] = up.d[i] + h.d[i];
+            }
+            mask_rows(&mut h, mask);
+        }
+        let apply_head = |t: &Mat| -> Mat {
+            let t = linear(t, &head[0], Act::Relu);
+            let t = linear(&t, &head[1], Act::Relu);
+            linear(&t, &head[2], Act::None)
+        };
+        if self.node_level {
+            let mut out = apply_head(&h);
+            mask_rows(&mut out, mask);
+            out.into_vec()
+        } else {
+            apply_head(&masked_mean_pool(&h, mask)).into_vec()
+        }
+    }
+
+    /// Expected output length for shape checks.
+    pub fn output_len(&self, n_max: usize) -> usize {
+        if self.node_level {
+            n_max * self.out_dim
+        } else {
+            self.out_dim
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CooGraph, DenseGraph};
+    use crate::runtime::artifact::InputSpec;
+
+    fn tiny_meta(name: &str) -> ModelMeta {
+        let n_max = 8;
+        let in_dim = 4;
+        let mut inputs = vec![
+            InputSpec {
+                name: "x".into(),
+                shape: vec![n_max, in_dim],
+            },
+            InputSpec {
+                name: "adj".into(),
+                shape: vec![n_max, n_max],
+            },
+        ];
+        if name.starts_with("gin") {
+            inputs.push(InputSpec {
+                name: "edge_attr".into(),
+                shape: vec![n_max, n_max, 3],
+            });
+        }
+        if name.starts_with("dgn") {
+            inputs.push(InputSpec {
+                name: "eig".into(),
+                shape: vec![n_max],
+            });
+        }
+        inputs.push(InputSpec {
+            name: "mask".into(),
+            shape: vec![n_max],
+        });
+        ModelMeta {
+            name: name.to_string(),
+            layers: 2,
+            dim: 8,
+            heads: if name == "gat" { 2 } else { 0 },
+            n_max,
+            in_dim,
+            out_dim: 1,
+            node_level: false,
+            inputs,
+            hlo_path: "unused.hlo.txt".into(),
+            golden_path: "unused.golden.json".into(),
+        }
+    }
+
+    fn tiny_graph() -> CooGraph {
+        CooGraph::from_undirected(
+            5,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4), (1, 3)],
+            (0..5 * 4).map(|i| (i % 5) as f32).collect(),
+            4,
+            &(0..6 * 3).map(|i| (i % 3) as f32).collect::<Vec<f32>>(),
+            3,
+        )
+        .unwrap()
+    }
+
+    fn dense_for(meta: &ModelMeta, g: &CooGraph) -> DenseGraph {
+        let mut d = DenseGraph::from_coo(g, meta.n_max, meta.needs_edge_attr()).unwrap();
+        if meta.needs_eig() {
+            let r = crate::graph::fiedler_vector(g, 500, 1e-10);
+            d.eig[..g.n].copy_from_slice(&r.vector);
+        }
+        d
+    }
+
+    #[test]
+    fn all_reference_kinds_build_and_run() {
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
+            let meta = tiny_meta(name);
+            let m = DenseRef::build(&meta, 0).unwrap();
+            let g = tiny_graph();
+            let d = dense_for(&meta, &g);
+            let out = m.forward(&d).unwrap();
+            assert_eq!(out.len(), m.output_len(meta.n_max), "{name}");
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "{name}: non-finite output {out:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let mut meta = tiny_meta("gcn");
+        meta.name = "transformer".into();
+        assert!(DenseRef::build(&meta, 0).is_err());
+    }
+}

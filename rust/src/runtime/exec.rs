@@ -1,6 +1,8 @@
-//! The [`Engine`]: compiled executables + packing scratch per model —
-//! the complete request-path inference stack (raw COO graph in, output
-//! vector out), with Python nowhere in sight.
+//! The [`Engine`]: compiled executables per model — the complete
+//! request-path inference stack (raw COO graph in, output vector out),
+//! with Python nowhere in sight. Native models execute their lowered
+//! stage-IR plans sparsely; dense input staging exists only for the
+//! PJRT backend, built lazily per compiled executable.
 
 use std::collections::BTreeMap;
 
@@ -10,12 +12,17 @@ use crate::graph::{CooGraph, GraphBatch};
 
 use super::artifact::{Artifacts, ModelMeta};
 use super::client::{Client, Compiled};
+#[cfg(feature = "xla")]
 use super::literal::InputPack;
 
 struct LoadedModel {
     meta: ModelMeta,
     exe: Compiled,
-    pack: InputPack,
+    /// Dense input staging — PJRT only. The native path executes the
+    /// stage-IR plan sparsely and never materializes padded tensors,
+    /// so a native engine holds no O(n_max²) buffers at all.
+    #[cfg(feature = "xla")]
+    pack: Option<InputPack>,
 }
 
 /// Inference engine over a set of compiled artifacts.
@@ -49,8 +56,15 @@ impl Engine {
             let exe = client
                 .compile_model(&meta, artifacts.weight_seed)
                 .with_context(|| format!("loading model {name}"))?;
-            let pack = InputPack::new(&meta);
-            models.insert(name.to_string(), LoadedModel { meta, exe, pack });
+            models.insert(
+                name.to_string(),
+                LoadedModel {
+                    meta,
+                    exe,
+                    #[cfg(feature = "xla")]
+                    pack: None,
+                },
+            );
         }
         Ok(Engine {
             client,
@@ -111,6 +125,9 @@ impl Engine {
 
     /// The core inference path over an already-ingested batch — no
     /// re-validation, no re-conversion (zero-preprocessing contract).
+    /// On the native backend this executes the model's stage-IR plan
+    /// over the batch's sparse neighbor lists: per-request memory is
+    /// O(edges), never O(n_max²).
     pub fn infer_batch(
         &mut self,
         model: &str,
@@ -118,12 +135,17 @@ impl Engine {
         eig: Option<&[f32]>,
     ) -> Result<Vec<f32>> {
         let lm = self.get_mut(model)?;
-        lm.pack.fill(batch, eig)?;
         match &lm.exe {
-            Compiled::Native(native) => native.forward(lm.pack.dense()),
+            Compiled::Native(native) => native.forward_batch(batch, eig),
             #[cfg(feature = "xla")]
             Compiled::Pjrt(exe) => {
-                let literals = lm.pack.literals(&lm.meta)?;
+                // PJRT consumes the AOT artifact's padded dense input
+                // layout; the staging pack is built lazily so native
+                // engines (and the xla-feature fallback) never pay for
+                // it.
+                let pack = lm.pack.get_or_insert_with(|| InputPack::new(&lm.meta));
+                pack.fill(batch, eig)?;
+                let literals = pack.literals(&lm.meta)?;
                 let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
                 // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
                 let out = result.to_tuple1()?;

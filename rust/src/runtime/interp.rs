@@ -1,0 +1,753 @@
+//! The generic stage-IR interpreter: one executor for every model in
+//! the zoo.
+//!
+//! Executes a lowered [`ModelPlan`] over a raw COO graph by walking
+//! sorted, deduplicated in-neighbor lists ([`InNbrs`]) — per-request
+//! cost O(edges · dim), memory O(edges + n · dim). The padded
+//! O(n_max²) adjacency of the legacy path never exists here.
+//!
+//! **Bit-exactness contract:** for every plan the lowering registry
+//! produces, this interpreter's output is bit-identical to the dense
+//! reference executor ([`super::dense_ref`]) — live entries exactly,
+//! node-level padding exactly `+0.0`. The contract holds because
+//! per-row primitives are shared (`super::tensor`) and every
+//! neighborhood accumulation walks ascending node order, which is the
+//! order the dense reference's ascending-j loops sum in (the skipped
+//! zero adjacency entries are additive no-ops). The executable spec of
+//! this ordering argument is `python/tools/plan_replica.py`; the Rust
+//! property tests live in `tests/plan_equivalence.rs`.
+//!
+//! Interpreter state is a two-register machine plus optional
+//! virtual-node state:
+//!
+//! * `h` — live features: `[n, d]` node rows until a pooling readout
+//!   collapses them to one graph row;
+//! * `m` — the latest [`Stage::SparseAggregate`] result, consumed by
+//!   the next combine stage (`TakeAggregate`, `EpsCombine`,
+//!   `ResidualLinear`, `DualLinear`);
+//! * `vn` — the virtual-node vector, seeded from
+//!   [`ModelPlan::vn_init`].
+//!
+//! Per-graph spectral/normalization contexts (GCN inverse-sqrt
+//! degrees, DGN directional weights) are computed lazily once per
+//! request and shared across the layers that need them.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{CooGraph, InNbrs};
+use crate::models::params::Dense;
+use crate::models::plan::{Act, Aggregate, ModelPlan, Readout, Stage};
+
+use super::tensor::{apply_act, avg_log_deg, l2_normalize_rows, linear, Mat};
+
+/// Validate a raw graph against a plan's input contract (same checks
+/// the dense packing path performed).
+pub fn check_input(plan: &ModelPlan, g: &CooGraph) -> Result<()> {
+    if g.n > plan.n_max {
+        bail!("graph with {} nodes exceeds capacity {}", g.n, plan.n_max);
+    }
+    if g.f_node != plan.in_dim {
+        bail!("node feature width {} != {}", g.f_node, plan.in_dim);
+    }
+    if plan.edge_dim > 0 && g.f_edge != plan.edge_dim {
+        bail!("edge feature width {} != {}", g.f_edge, plan.edge_dim);
+    }
+    Ok(())
+}
+
+/// [`execute_over`] with the in-neighbor view derived on the spot
+/// (tests and one-shot flows; the serving path reuses the batch's
+/// cached view).
+pub fn execute(plan: &ModelPlan, g: &CooGraph, eig: Option<&[f32]>) -> Result<Vec<f32>> {
+    execute_over(plan, g, &InNbrs::from_coo(g), eig)
+}
+
+/// Execute a plan over one graph and its in-neighbor view. `eig` must
+/// cover the graph's real nodes when the plan needs it (extra padded
+/// entries are ignored). Graph-level plans return `[out_dim]`;
+/// node-level plans `[n_max * out_dim]` with `+0.0` padding.
+pub fn execute_over(
+    plan: &ModelPlan,
+    g: &CooGraph,
+    nbrs: &InNbrs,
+    eig: Option<&[f32]>,
+) -> Result<Vec<f32>> {
+    check_input(plan, g)?;
+    let n = g.n;
+    let eig = match (plan.needs_eig(), eig) {
+        (true, None) => bail!("model {} needs an eig input", plan.model),
+        (true, Some(e)) if e.len() < n => {
+            bail!("eig has {} entries for {} nodes", e.len(), n)
+        }
+        (_, e) => e,
+    };
+    let mut h = Mat::from_slice(n, plan.in_dim, &g.node_feat);
+    let mut m: Option<Mat> = None;
+    let mut vn: Option<Vec<f32>> = plan.vn_init.clone();
+    let mut gcn_isq: Option<Vec<f32>> = None;
+    let mut dgn_ctx: Option<DgnCtx> = None;
+    for (si, stage) in plan.stages.iter().enumerate() {
+        match stage {
+            Stage::Linear { w, act } => h = linear(&h, w, *act),
+            Stage::SparseAggregate(agg) => {
+                let out =
+                    dispatch_aggregate(agg, nbrs, g, &h, eig, &mut gcn_isq, &mut dgn_ctx)?;
+                m = Some(out);
+            }
+            Stage::TakeAggregate => h = take(&mut m, si)?,
+            Stage::EpsCombine { eps } => {
+                let mm = take(&mut m, si)?;
+                for (hv, &mv) in h.d.iter_mut().zip(&mm.d) {
+                    *hv = (1.0 + eps) * *hv + mv;
+                }
+            }
+            Stage::ResidualLinear { w, act } => {
+                let mm = take(&mut m, si)?;
+                let up = linear(&mm, w, *act);
+                for (hv, &uv) in h.d.iter_mut().zip(&up.d) {
+                    *hv = uv + *hv;
+                }
+            }
+            Stage::DualLinear { w_self, w_nbr } => {
+                let mm = take(&mut m, si)?;
+                let hs = linear(&h, w_self, Act::None);
+                let hn = linear(&mm, w_nbr, Act::None);
+                h = hs;
+                for (hv, &nv) in h.d.iter_mut().zip(&hn.d) {
+                    *hv += nv;
+                }
+            }
+            Stage::EdgeAttention { heads, a_src, a_dst } => {
+                h = edge_attention(nbrs, plan.n_max, &h, a_src, a_dst, *heads);
+            }
+            Stage::Activation(a) => apply_act(&mut h, *a),
+            Stage::L2Normalize => l2_normalize_rows(&mut h),
+            Stage::VirtualNodeAdd => {
+                let vnv = vn
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("stage {si}: no virtual-node state"))?;
+                for i in 0..h.r {
+                    // mask is 1.0 on every real row: `vv * mk == vv`.
+                    for (hv, &vv) in h.row_mut(i).iter_mut().zip(vnv) {
+                        *hv += vv;
+                    }
+                }
+            }
+            Stage::VirtualNodeUpdate { w1, w2 } => {
+                let vnv = vn
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("stage {si}: no virtual-node state"))?;
+                let mut gacc = Mat::zeros(1, vnv.len());
+                gacc.d.copy_from_slice(vnv);
+                for i in 0..h.r {
+                    for (gv, &hv) in gacc.d.iter_mut().zip(h.row(i)) {
+                        *gv += hv;
+                    }
+                }
+                let updated = linear(&linear(&gacc, w1, Act::Relu), w2, Act::Relu);
+                vnv.copy_from_slice(&updated.d);
+            }
+            Stage::Readout(r) => match r {
+                Readout::MaskedMeanPool => h = pool(&h),
+                Readout::NodeHead => {}
+            },
+        }
+    }
+    if plan.node_level {
+        let mut out = vec![0.0f32; plan.n_max * plan.out_dim];
+        out[..h.d.len()].copy_from_slice(&h.d);
+        Ok(out)
+    } else {
+        Ok(h.into_vec())
+    }
+}
+
+/// Run one aggregation component standalone over `[n, width]` features
+/// (the property-test entry point for the component library — the
+/// exact dispatch the plan executor runs, nothing re-implemented).
+pub fn run_aggregate(
+    agg: &Aggregate,
+    g: &CooGraph,
+    h_flat: &[f32],
+    width: usize,
+    eig: Option<&[f32]>,
+) -> Result<Vec<f32>> {
+    if h_flat.len() != g.n * width {
+        bail!("feature buffer is {} floats, want {}", h_flat.len(), g.n * width);
+    }
+    if let Aggregate::EdgeReluSum { bond } = agg {
+        if g.f_edge != bond.fin {
+            bail!("edge feature width {} != bond input {}", g.f_edge, bond.fin);
+        }
+    }
+    let nbrs = InNbrs::from_coo(g);
+    let h = Mat::from_slice(g.n, width, h_flat);
+    let out = dispatch_aggregate(agg, &nbrs, g, &h, eig, &mut None, &mut None)?;
+    Ok(out.into_vec())
+}
+
+/// The single aggregation dispatch shared by [`execute_over`] and
+/// [`run_aggregate`]: one implementation, so the property tests
+/// exercise exactly the code the serving path executes. Per-graph
+/// contexts (GCN inverse-sqrt degrees, DGN directional weights) are
+/// built on first use into the caller-owned caches.
+fn dispatch_aggregate(
+    agg: &Aggregate,
+    nbrs: &InNbrs,
+    g: &CooGraph,
+    h: &Mat,
+    eig: Option<&[f32]>,
+    gcn_isq: &mut Option<Vec<f32>>,
+    dgn_ctx: &mut Option<DgnCtx>,
+) -> Result<Mat> {
+    Ok(match agg {
+        Aggregate::GcnNorm => {
+            let isq = gcn_isq.get_or_insert_with(|| gcn_inv_sqrt(nbrs));
+            agg_gcn_norm(nbrs, isq, h)
+        }
+        Aggregate::DgnDirectional => {
+            let e = eig.ok_or_else(|| anyhow::anyhow!("dgn aggregation needs eig"))?;
+            if e.len() < nbrs.n() {
+                bail!("eig has {} entries for {} nodes", e.len(), nbrs.n());
+            }
+            let ctx = dgn_ctx.get_or_insert_with(|| DgnCtx::build(nbrs, e));
+            agg_dgn_directional(nbrs, ctx, h)
+        }
+        Aggregate::EdgeReluSum { bond } => agg_edge_relu_sum(nbrs, g, h, bond),
+        Aggregate::Sum => agg_sum(nbrs, h),
+        Aggregate::Mean => agg_mean(nbrs, h),
+        Aggregate::Max => agg_minmax(nbrs, h, true),
+        Aggregate::Min => agg_minmax(nbrs, h, false),
+        Aggregate::PnaTower => agg_pna_tower(nbrs, h),
+    })
+}
+
+fn take(m: &mut Option<Mat>, stage: usize) -> Result<Mat> {
+    m.take()
+        .ok_or_else(|| anyhow::anyhow!("stage {stage}: no pending aggregation"))
+}
+
+/// Graph-level readout: mean over the real rows. `n` real nodes each
+/// carry mask 1.0, so the dense reference's mask sum is exactly
+/// `n as f32` and its `v * mk` accumulate is exactly `v`.
+fn pool(h: &Mat) -> Mat {
+    let denom = (h.r as f32).max(1.0);
+    let mut out = Mat::zeros(1, h.c);
+    for i in 0..h.r {
+        for (o, &v) in out.d.iter_mut().zip(h.row(i)) {
+            *o += v;
+        }
+    }
+    out.d.iter_mut().for_each(|v| *v /= denom);
+    out
+}
+
+/// Ascending walk of row i of `A + diag(mask)`: deduped neighbors carry
+/// 1.0, the diagonal (inserted at its sorted position) carries
+/// `adj[i][i] + 1.0` — i.e. 2.0 when a self-edge exists, else 1.0.
+struct MergedRow<'a> {
+    row: &'a [u32],
+    i: u32,
+    idx: usize,
+    diag_done: bool,
+}
+
+impl<'a> MergedRow<'a> {
+    fn new(nbrs: &'a InNbrs, i: usize) -> MergedRow<'a> {
+        MergedRow {
+            row: nbrs.row(i),
+            i: i as u32,
+            idx: 0,
+            diag_done: false,
+        }
+    }
+}
+
+impl Iterator for MergedRow<'_> {
+    type Item = (usize, f32);
+
+    fn next(&mut self) -> Option<(usize, f32)> {
+        if self.idx < self.row.len() {
+            let s = self.row[self.idx];
+            if !self.diag_done && s >= self.i {
+                self.diag_done = true;
+                if s == self.i {
+                    self.idx += 1;
+                    return Some((s as usize, 2.0));
+                }
+                return Some((self.i as usize, 1.0));
+            }
+            self.idx += 1;
+            return Some((s as usize, 1.0));
+        }
+        if !self.diag_done {
+            self.diag_done = true;
+            return Some((self.i as usize, 1.0));
+        }
+        None
+    }
+}
+
+/// Per-row `1/sqrt(deg)` of `A + diag(mask)` — the GCN-norm context.
+fn gcn_inv_sqrt(nbrs: &InNbrs) -> Vec<f32> {
+    let n = nbrs.n();
+    let mut isq = vec![0.0f32; n];
+    for (i, slot) in isq.iter_mut().enumerate() {
+        let mut deg = 0.0f32;
+        for (_, a_hat) in MergedRow::new(nbrs, i) {
+            deg += a_hat;
+        }
+        if deg > 0.0 {
+            *slot = 1.0 / deg.max(1e-12).sqrt();
+        }
+    }
+    isq
+}
+
+/// `m ← D^-1/2 (A + diag(mask)) D^-1/2 · h`, ascending per row with the
+/// diagonal merged in order — the dense `gcn_norm_adj` matmul exactly.
+fn agg_gcn_norm(nbrs: &InNbrs, isq: &[f32], h: &Mat) -> Mat {
+    let n = nbrs.n();
+    let mut out = Mat::zeros(n, h.c);
+    for i in 0..n {
+        let or = &mut out.d[i * h.c..(i + 1) * h.c];
+        for (j, a_hat) in MergedRow::new(nbrs, i) {
+            // Same expression shape as the dense reference:
+            // a_hat * (isq_i * isq_j), then skip exact zeros.
+            let av = a_hat * (isq[i] * isq[j]);
+            if av != 0.0 {
+                for (o, &hv) in or.iter_mut().zip(h.row(j)) {
+                    *o += av * hv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn agg_sum(nbrs: &InNbrs, h: &Mat) -> Mat {
+    let n = nbrs.n();
+    let mut out = Mat::zeros(n, h.c);
+    for i in 0..n {
+        let or = &mut out.d[i * h.c..(i + 1) * h.c];
+        for &j in nbrs.row(i) {
+            // adjacency entries are exactly 1.0: `a * v == v`.
+            for (o, &hv) in or.iter_mut().zip(h.row(j as usize)) {
+                *o += hv;
+            }
+        }
+    }
+    out
+}
+
+/// Neighbor mean with the degree clamped to ≥ 1 (the dense reference's
+/// `matmul` then row-divide, fused).
+fn agg_mean(nbrs: &InNbrs, h: &Mat) -> Mat {
+    let mut out = agg_sum(nbrs, h);
+    for i in 0..out.r {
+        let dv = (nbrs.deg(i) as f32).max(1.0);
+        out.row_mut(i).iter_mut().for_each(|v| *v /= dv);
+    }
+    out
+}
+
+/// Elementwise neighbor max/min; isolated rows stay 0.0.
+fn agg_minmax(nbrs: &InNbrs, h: &Mat, is_max: bool) -> Mat {
+    let n = nbrs.n();
+    let mut out = Mat::zeros(n, h.c);
+    for i in 0..n {
+        let row = nbrs.row(i);
+        let Some((&first, rest)) = row.split_first() else {
+            continue;
+        };
+        let or = &mut out.d[i * h.c..(i + 1) * h.c];
+        or.copy_from_slice(h.row(first as usize));
+        for &j in rest {
+            for (o, &hv) in or.iter_mut().zip(h.row(j as usize)) {
+                *o = if is_max { o.max(hv) } else { o.min(hv) };
+            }
+        }
+    }
+    out
+}
+
+/// GIN message sum: `m[u] = Σ_v relu(h[v] + bond(edge_attr[u,v]))`
+/// over deduped in-neighbors, each edge carrying the features of its
+/// last COO occurrence (the dense last-write-wins contract).
+fn agg_edge_relu_sum(nbrs: &InNbrs, g: &CooGraph, h: &Mat, bond: &Dense) -> Mat {
+    let n = nbrs.n();
+    let d = bond.fout;
+    let de = bond.fin;
+    let mut out = Mat::zeros(n, d);
+    let mut e_row = vec![0.0f32; d];
+    for u in 0..n {
+        let mr = &mut out.d[u * d..(u + 1) * d];
+        for (&v, &ei) in nbrs.row(u).iter().zip(nbrs.row_edges(u)) {
+            e_row.copy_from_slice(&bond.b);
+            let ei = ei as usize;
+            let ea = &g.edge_feat[ei * de..(ei + 1) * de];
+            for (k, &ev) in ea.iter().enumerate() {
+                if ev != 0.0 {
+                    let wr = &bond.w[k * d..(k + 1) * d];
+                    for (o, &wv) in e_row.iter_mut().zip(wr) {
+                        *o += ev * wv;
+                    }
+                }
+            }
+            let hv = h.row(v as usize);
+            for j in 0..d {
+                // adjacency entry is exactly 1.0: `a * msg == msg`.
+                let msg = (hv[j] + e_row[j]).max(0.0);
+                mr[j] += msg;
+            }
+        }
+    }
+    out
+}
+
+/// PNA tower: [mean, std, max, min] × [identity, amplification,
+/// attenuation] scalers → `[n, 12·d]`, scalar expressions identical to
+/// the dense reference.
+fn agg_pna_tower(nbrs: &InNbrs, h: &Mat) -> Mat {
+    let n = nbrs.n();
+    let d = h.c;
+    let avg = avg_log_deg();
+    const NEG: f32 = -3.0e38;
+    const POS: f32 = 3.0e38;
+    let mut out = Mat::zeros(n, 12 * d);
+    let mut s = vec![0.0f32; d];
+    let mut ss = vec![0.0f32; d];
+    let mut mx = vec![0.0f32; d];
+    let mut mn = vec![0.0f32; d];
+    for i in 0..n {
+        s.fill(0.0);
+        ss.fill(0.0);
+        mx.fill(NEG);
+        mn.fill(POS);
+        for &j in nbrs.row(i) {
+            let hj = h.row(j as usize);
+            for k in 0..d {
+                let v = hj[k];
+                // a == 1.0: `a*v == v` and `a*v*v == v*v` bitwise.
+                s[k] += v;
+                ss[k] += v * v;
+                mx[k] = mx[k].max(v);
+                mn[k] = mn[k].min(v);
+            }
+        }
+        let dg = nbrs.deg(i) as f32;
+        let dg1 = dg.max(1.0);
+        let has = if dg > 0.0 { 1.0 } else { 0.0 };
+        let log_deg = (dg + 1.0).ln();
+        let amp = log_deg / avg;
+        let att = if dg > 0.0 {
+            avg / log_deg.max(1e-6)
+        } else {
+            0.0
+        };
+        let fr = &mut out.d[i * 12 * d..(i + 1) * 12 * d];
+        for k in 0..d {
+            let mean = s[k] / dg1;
+            let var = (ss[k] / dg1 - mean * mean).max(0.0);
+            let std = (var + 1e-8).sqrt() * has;
+            let agg = [mean, std, mx[k] * has, mn[k] * has];
+            for (b, &v) in agg.iter().enumerate() {
+                fr[b * d + k] = v;
+                fr[(4 + b) * d + k] = v * amp;
+                fr[(8 + b) * d + k] = v * att;
+            }
+        }
+    }
+    out
+}
+
+/// Per-graph DGN directional context: per row the mean weight
+/// `1/max(deg,1)`, the normalized eigen-gradient weights `b_vals`
+/// (flat, row-major over the deduped entries), and their row sums.
+struct DgnCtx {
+    inv: Vec<f32>,
+    b_vals: Vec<f32>,
+    b_row: Vec<f32>,
+}
+
+impl DgnCtx {
+    fn build(nbrs: &InNbrs, eig: &[f32]) -> DgnCtx {
+        let n = nbrs.n();
+        let mut inv = vec![0.0f32; n];
+        let mut b_vals = Vec::with_capacity(nbrs.num_entries());
+        let mut b_row = vec![0.0f32; n];
+        for i in 0..n {
+            let dg1 = (nbrs.deg(i) as f32).max(1.0);
+            inv[i] = 1.0 / dg1;
+            let start = b_vals.len();
+            let mut abs_sum = 0.0f32;
+            for &j in nbrs.row(i) {
+                // adjacency entry 1.0: `a * diff == diff`.
+                let fm = eig[j as usize] - eig[i];
+                b_vals.push(fm);
+                abs_sum += fm.abs();
+            }
+            let denom = abs_sum + 1e-8;
+            let mut row_sum = 0.0f32;
+            for bv in &mut b_vals[start..] {
+                *bv /= denom;
+                row_sum += *bv;
+            }
+            b_row[i] = row_sum;
+        }
+        DgnCtx { inv, b_vals, b_row }
+    }
+}
+
+/// DGN directional pair: `m = [mean ‖ |B·h − b_row∘h|]` → `[n, 2·d]`.
+fn agg_dgn_directional(nbrs: &InNbrs, ctx: &DgnCtx, h: &Mat) -> Mat {
+    let n = nbrs.n();
+    let d = h.c;
+    let mut out = Mat::zeros(n, 2 * d);
+    let mut bh = vec![0.0f32; d];
+    let mut cursor = 0usize;
+    for i in 0..n {
+        let row = nbrs.row(i);
+        let b_vals = &ctx.b_vals[cursor..cursor + row.len()];
+        cursor += row.len();
+        let yr = &mut out.d[i * 2 * d..(i + 1) * 2 * d];
+        let inv = ctx.inv[i];
+        for &j in row {
+            for (o, &hv) in yr[..d].iter_mut().zip(h.row(j as usize)) {
+                *o += inv * hv;
+            }
+        }
+        bh.fill(0.0);
+        for (&j, &bv) in row.iter().zip(b_vals) {
+            // The dense matmul skips exact-zero entries — so do we.
+            if bv != 0.0 {
+                for (o, &hv) in bh.iter_mut().zip(h.row(j as usize)) {
+                    *o += bv * hv;
+                }
+            }
+        }
+        let hr = h.row(i);
+        for k in 0..d {
+            yr[d + k] = (bh[k] - ctx.b_row[i] * hr[k]).abs();
+        }
+    }
+    out
+}
+
+/// GAT layer over the projected features `z`: per-head softmax over
+/// neighbors ∪ {self} (ascending, self merged at its sorted position).
+/// `n_max` matters: the dense reference's softmax max() runs over
+/// padded non-neighbors stamped -1e9, so any row with fewer than
+/// `n_max` merged entries seeds its max with -1e9 too.
+fn edge_attention(
+    nbrs: &InNbrs,
+    n_max: usize,
+    z: &Mat,
+    a_src: &[f32],
+    a_dst: &[f32],
+    heads: usize,
+) -> Mat {
+    let n = z.r;
+    let d = z.c;
+    let fh = d / heads;
+    let mut sl = vec![0.0f32; n * heads];
+    let mut dl = vec![0.0f32; n * heads];
+    for i in 0..n {
+        let zr = z.row(i);
+        for hh in 0..heads {
+            let zs = &zr[hh * fh..(hh + 1) * fh];
+            let asr = &a_src[hh * fh..(hh + 1) * fh];
+            let ads = &a_dst[hh * fh..(hh + 1) * fh];
+            sl[i * heads + hh] = zs.iter().zip(asr).map(|(a, b)| a * b).sum();
+            dl[i * heads + hh] = zs.iter().zip(ads).map(|(a, b)| a * b).sum();
+        }
+    }
+    let mut out = Mat::zeros(n, d);
+    let mut merged: Vec<u32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    for i in 0..n {
+        merged.clear();
+        let row = nbrs.row(i);
+        match row.binary_search(&(i as u32)) {
+            Ok(_) => merged.extend_from_slice(row),
+            Err(pos) => {
+                merged.extend_from_slice(&row[..pos]);
+                merged.push(i as u32);
+                merged.extend_from_slice(&row[pos..]);
+            }
+        }
+        for hh in 0..heads {
+            logits.clear();
+            let mut lmax = f32::NEG_INFINITY;
+            for &j in &merged {
+                let mut l = sl[i * heads + hh] + dl[j as usize * heads + hh];
+                if l <= 0.0 {
+                    l *= 0.2;
+                }
+                logits.push(l);
+                lmax = lmax.max(l);
+            }
+            if merged.len() < n_max {
+                lmax = lmax.max(-1.0e9);
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut() {
+                let p = (*l - lmax).exp();
+                *l = p;
+                denom += p;
+            }
+            let denom = denom.max(1e-16);
+            let or = &mut out.d[i * d + hh * fh..i * d + (hh + 1) * fh];
+            for (&j, &p0) in merged.iter().zip(&logits) {
+                let p = p0 / denom;
+                if p != 0.0 {
+                    let zs = &z.row(j as usize)[hh * fh..(hh + 1) * fh];
+                    for (o, &zv) in or.iter_mut().zip(zs) {
+                        *o += p * zv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::params::WInit;
+    use crate::models::plan::Readout;
+
+    fn line_graph(n: usize, f_node: usize) -> CooGraph {
+        let und: Vec<(u32, u32)> = (0..n.saturating_sub(1))
+            .map(|i| (i as u32, (i + 1) as u32))
+            .collect();
+        CooGraph::from_undirected(
+            n,
+            &und,
+            (0..n * f_node).map(|i| (i % 7) as f32 - 3.0).collect(),
+            f_node,
+            &[],
+            0,
+        )
+        .unwrap()
+    }
+
+    fn tiny_plan() -> ModelPlan {
+        let mut wi = WInit::new(3);
+        ModelPlan {
+            model: "tiny".into(),
+            n_max: 8,
+            in_dim: 4,
+            out_dim: 2,
+            edge_dim: 0,
+            node_level: false,
+            vn_init: None,
+            stages: vec![
+                Stage::Linear {
+                    w: wi.dense(4, 6),
+                    act: Act::Relu,
+                },
+                Stage::SparseAggregate(Aggregate::GcnNorm),
+                Stage::TakeAggregate,
+                Stage::Readout(Readout::MaskedMeanPool),
+                Stage::Linear {
+                    w: wi.dense(6, 2),
+                    act: Act::None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn executes_and_is_deterministic() {
+        let plan = tiny_plan();
+        let g = line_graph(5, 4);
+        let a = execute(&plan, &g, None).unwrap();
+        let b = execute(&plan, &g, None).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn input_contract_is_enforced() {
+        let plan = tiny_plan();
+        let big = line_graph(9, 4);
+        assert!(execute(&plan, &big, None).is_err(), "capacity");
+        let narrow = line_graph(4, 3);
+        assert!(execute(&plan, &narrow, None).is_err(), "feature width");
+    }
+
+    #[test]
+    fn sum_mean_max_min_components() {
+        // Node features: node i carries [i+1]. Graph 0-1-2 (undirected).
+        let g = CooGraph::from_undirected(
+            3,
+            &[(0, 1), (1, 2)],
+            vec![1.0, 2.0, 3.0],
+            1,
+            &[],
+            0,
+        )
+        .unwrap();
+        let h = [1.0f32, 2.0, 3.0];
+        let sum = run_aggregate(&Aggregate::Sum, &g, &h, 1, None).unwrap();
+        assert_eq!(sum, vec![2.0, 4.0, 2.0]);
+        let mean = run_aggregate(&Aggregate::Mean, &g, &h, 1, None).unwrap();
+        assert_eq!(mean, vec![2.0, 2.0, 2.0]);
+        let max = run_aggregate(&Aggregate::Max, &g, &h, 1, None).unwrap();
+        assert_eq!(max, vec![2.0, 3.0, 2.0]);
+        let min = run_aggregate(&Aggregate::Min, &g, &h, 1, None).unwrap();
+        assert_eq!(min, vec![2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn isolated_nodes_aggregate_to_zero() {
+        let g = CooGraph {
+            n: 3,
+            edges: vec![(0, 1)],
+            node_feat: vec![5.0, -7.0, 9.0],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        for agg in [Aggregate::Sum, Aggregate::Mean, Aggregate::Max, Aggregate::Min] {
+            let out = run_aggregate(&agg, &g, &[5.0, -7.0, 9.0], 1, None).unwrap();
+            assert_eq!(out[0], 0.0, "{agg:?} row 0 has no in-edges");
+            assert_eq!(out[2], 0.0, "{agg:?} row 2 isolated");
+        }
+    }
+
+    #[test]
+    fn merged_row_inserts_diagonal_in_order() {
+        let g = CooGraph {
+            n: 4,
+            edges: vec![(0, 2), (3, 2), (2, 2), (1, 0)],
+            node_feat: vec![0.0; 4],
+            f_node: 1,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        let nbrs = InNbrs::from_coo(&g);
+        // Row 2 has in-nbrs {0, 2, 3}; diagonal (self-edge) carries 2.0.
+        let walk: Vec<(usize, f32)> = MergedRow::new(&nbrs, 2).collect();
+        assert_eq!(walk, vec![(0, 1.0), (2, 2.0), (3, 1.0)]);
+        // Row 0 has in-nbr {1}; synthetic diagonal first (0 < 1).
+        let walk: Vec<(usize, f32)> = MergedRow::new(&nbrs, 0).collect();
+        assert_eq!(walk, vec![(0, 1.0), (1, 1.0)]);
+        // Row 3 has no in-nbrs; only the synthetic diagonal.
+        let walk: Vec<(usize, f32)> = MergedRow::new(&nbrs, 3).collect();
+        assert_eq!(walk, vec![(3, 1.0)]);
+    }
+
+    #[test]
+    fn missing_eig_is_a_clean_error() {
+        let mut plan = tiny_plan();
+        plan.stages[1] = Stage::SparseAggregate(Aggregate::DgnDirectional);
+        // (invalid widths aside, the eig check fires first)
+        let g = line_graph(3, 4);
+        let err = execute(&plan, &g, None).unwrap_err().to_string();
+        assert!(err.contains("eig"), "{err}");
+    }
+}

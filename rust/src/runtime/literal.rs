@@ -1,13 +1,19 @@
-//! Graph → padded input-tensor packing.
+//! Graph → padded input-tensor packing (PJRT staging + dense
+//! reference tests — **not** on the native serving path).
 //!
 //! The artifact contract (mirrors `python/compile/graphgen.densify`
 //! bit-for-bit, see `graph::dense`): inputs arrive in manifest order —
 //! `x, adj, [edge_attr], [eig], mask` — all f32, padded to the model's
-//! node capacity. `InputPack` owns the scratch buffers so the serving
-//! hot path re-fills them per request with **zero allocation** (the f32
-//! staging is reused). Filling consumes an ingested
-//! [`crate::graph::GraphBatch`], so the eigensolve for eig-consuming
-//! models reuses the batch's CSR instead of re-deriving adjacency.
+//! node capacity. `InputPack` owns the scratch buffers so repeated
+//! fills allocate nothing (the f32 staging is reused). Filling consumes
+//! an ingested [`crate::graph::GraphBatch`], so the eigensolve for
+//! eig-consuming models reuses the batch's CSR instead of re-deriving
+//! adjacency.
+//!
+//! Since the stage-IR redesign the native backend executes plans over
+//! sparse neighbor lists and never stages these tensors; the engine
+//! builds an `InputPack` lazily only when a PJRT executable actually
+//! needs the padded layout.
 
 use anyhow::{bail, Result};
 

@@ -4,25 +4,32 @@
 //! time.
 //!
 //! Two backends (see [`client`]): the always-available **native**
-//! reference executor re-implements the Layer-2 forward passes in pure
-//! Rust with the same seeded weights the artifacts bake in, and the
-//! optional `xla`-feature **PJRT** path parses + compiles the
-//! `<name>.hlo.txt` artifacts through the XLA PJRT CPU client.
+//! backend lowers each manifest entry to a composable stage-IR plan
+//! (`crate::models::lower`) and executes it through the generic sparse
+//! interpreter, and the optional `xla`-feature **PJRT** path parses +
+//! compiles the `<name>.hlo.txt` artifacts through the XLA PJRT CPU
+//! client.
 //!
-//! * [`artifact`] — manifest parsing + golden-file access
-//! * [`client`]   — backend selection + per-artifact compilation
-//! * [`native`]   — pure-Rust reference executor (MT19937 weight port)
-//! * [`literal`]  — graph → padded input-tensor packing (zero-alloc refill)
-//! * [`exec`]     — the [`Engine`]: end-to-end `CooGraph` → output vector
+//! * [`artifact`]  — manifest parsing + golden-file access
+//! * [`client`]    — backend selection + per-artifact compilation
+//! * [`native`]    — native backend: thin shim over plan execution
+//! * [`interp`]    — the generic stage-IR interpreter (sparse, O(edges))
+//! * [`dense_ref`] — legacy dense-matmul forwards (test/bench reference)
+//! * [`literal`]   — graph → padded input-tensor packing (PJRT staging)
+//! * [`exec`]      — the [`Engine`]: end-to-end `CooGraph` → output vector
 
 pub mod artifact;
 pub mod client;
+pub mod dense_ref;
 pub mod exec;
+pub mod interp;
 pub mod literal;
 pub mod native;
+mod tensor;
 
 pub use artifact::{Artifacts, Golden, ModelMeta};
 pub use client::Client;
+pub use dense_ref::DenseRef;
 pub use exec::Engine;
 pub use literal::InputPack;
 pub use native::NativeModel;

@@ -1,969 +1,84 @@
-//! Native reference backend: the Layer-2 model forward passes
-//! re-implemented in pure Rust, so the full serving stack runs without
-//! a PJRT/XLA runtime.
+//! Native backend: a thin shim over stage-IR plan execution.
 //!
-//! This is a transliteration of `python/compile/native_ref.py`, which
-//! in turn mirrors the JAX models of `python/compile/model.py`
-//! operation-for-operation (`python/tests/test_native_ref.py` pins the
-//! two Python sides together to float32 tolerance). Weights are the
-//! same seeded constants the AOT artifacts bake in: an MT19937 port of
-//! numpy's legacy `RandomState.uniform` stream reproduces
-//! `WInit(seed)` bit-for-bit, so golden files produced by
-//! `python/compile/aot.py` are directly comparable against this
-//! engine's outputs (float32 accumulation-order noise only).
-//!
-//! Everything operates on the padded dense tensors of
-//! [`crate::graph::DenseGraph`] — identical shapes and conventions to
-//! the AOT artifact inputs, padded rows included.
-//!
-//! Hot-loop temporaries ([`Mat`]) draw their storage from the
-//! per-thread scratch pool in [`crate::util::pool`] and return it on
-//! drop, so an executor lane running forward after forward recycles
-//! the same allocations instead of hitting the allocator per request
-//! (the software analog of statically-allocated on-chip buffers).
-//! Buffers are fully re-initialized on take, so pooling can never
-//! change an output bit.
+//! [`NativeModel::build`] lowers the manifest entry through the
+//! per-kind registry ([`crate::models::lower`]), regenerating the
+//! artifact's baked-in weights from the manifest seed (an MT19937 port
+//! of numpy's legacy `RandomState.uniform` stream — see
+//! [`crate::models::params`]); [`NativeModel::forward_batch`] hands the
+//! plan to the generic sparse interpreter ([`super::interp`]), which
+//! walks CSR-style in-neighbor lists in O(edges) — the padded
+//! O(n_max²) dense tensors of the legacy path are never materialized.
+//! Golden files produced by `python/compile/aot.py` remain directly
+//! comparable: the interpreter is bit-identical to the legacy dense
+//! forwards ([`super::dense_ref`]), which match the JAX reference to
+//! float32-accumulation tolerance.
 
 use anyhow::{bail, Result};
 
-use crate::graph::DenseGraph;
-use crate::util::pool::{scratch_put, scratch_take_copied, scratch_take_zeroed};
+use crate::graph::GraphBatch;
+use crate::models::lower;
+use crate::models::plan::ModelPlan;
 
 use super::artifact::ModelMeta;
+use super::interp;
 
-const EPS_GIN: f32 = 0.1;
-/// `ln(1 + 2.15)` — mean degree constant of the PNA scalers, computed
-/// in f64 exactly as `model.py` does.
-fn avg_log_deg() -> f32 {
-    (1.0f64 + 2.15f64).ln() as f32
-}
-
-// ------------------------------------------------------------- MT19937
-/// Classic MT19937 matching numpy's legacy `RandomState` stream
-/// (scalar-int seeding, two 32-bit draws per 53-bit double).
-pub struct Mt19937 {
-    mt: [u32; 624],
-    idx: usize,
-}
-
-impl Mt19937 {
-    pub fn new(seed: u32) -> Mt19937 {
-        let mut mt = [0u32; 624];
-        mt[0] = seed;
-        for i in 1..624 {
-            mt[i] = 1_812_433_253u32
-                .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
-                .wrapping_add(i as u32);
-        }
-        Mt19937 { mt, idx: 624 }
-    }
-
-    fn next_u32(&mut self) -> u32 {
-        if self.idx >= 624 {
-            for i in 0..624 {
-                let y = (self.mt[i] & 0x8000_0000) | (self.mt[(i + 1) % 624] & 0x7fff_ffff);
-                let mut next = self.mt[(i + 397) % 624] ^ (y >> 1);
-                if y & 1 == 1 {
-                    next ^= 0x9908_b0df;
-                }
-                self.mt[i] = next;
-            }
-            self.idx = 0;
-        }
-        let mut y = self.mt[self.idx];
-        self.idx += 1;
-        y ^= y >> 11;
-        y ^= (y << 7) & 0x9d2c_5680;
-        y ^= (y << 15) & 0xefc6_0000;
-        y ^= y >> 18;
-        y
-    }
-
-    /// numpy `random_sample`: two 32-bit draws into a 53-bit double.
-    pub fn next_double(&mut self) -> f64 {
-        let a = (self.next_u32() >> 5) as f64;
-        let b = (self.next_u32() >> 6) as f64;
-        (a * 67_108_864.0 + b) / 9_007_199_254_740_992.0
-    }
-
-    /// `RandomState.uniform(lo, hi, count).astype(float32)`.
-    pub fn uniform_f32(&mut self, lo: f64, hi: f64, count: usize) -> Vec<f32> {
-        (0..count)
-            .map(|_| (lo + (hi - lo) * self.next_double()) as f32)
-            .collect()
-    }
-}
-
-/// One dense layer's weights: `w` is `[fin, fout]` row-major.
-#[derive(Clone, Debug)]
-struct Dense {
-    fin: usize,
-    fout: usize,
-    w: Vec<f32>,
-    b: Vec<f32>,
-}
-
-/// Mirror of `model.WInit`: the exact draw order of the AOT weights.
-struct WInit {
-    mt: Mt19937,
-}
-
-impl WInit {
-    fn new(seed: u32) -> WInit {
-        WInit {
-            mt: Mt19937::new(seed),
-        }
-    }
-
-    fn dense(&mut self, fin: usize, fout: usize) -> Dense {
-        let s = 1.0 / (fin as f64).sqrt();
-        Dense {
-            fin,
-            fout,
-            w: self.mt.uniform_f32(-s, s, fin * fout),
-            b: self.mt.uniform_f32(-s, s, fout),
-        }
-    }
-
-    fn vec(&mut self, f: usize) -> Vec<f32> {
-        let s = 1.0 / (f as f64).sqrt();
-        self.mt.uniform_f32(-s, s, f)
-    }
-}
-
-// ---------------------------------------------------------- primitives
-/// Row-major `[r, c]` float32 matrix. Storage comes from the calling
-/// thread's scratch pool and is returned on drop; [`Mat::into_vec`]
-/// lets a result escape the pool (model outputs).
-#[derive(Debug)]
-struct Mat {
-    r: usize,
-    c: usize,
-    d: Vec<f32>,
-}
-
-#[derive(Clone, Copy)]
-enum Act {
-    None,
-    Relu,
-}
-
-impl Mat {
-    fn zeros(r: usize, c: usize) -> Mat {
-        Mat {
-            r,
-            c,
-            d: scratch_take_zeroed(r * c),
-        }
-    }
-
-    fn from_slice(r: usize, c: usize, d: &[f32]) -> Mat {
-        debug_assert_eq!(d.len(), r * c);
-        Mat {
-            r,
-            c,
-            d: scratch_take_copied(d),
-        }
-    }
-
-    /// Take the backing buffer out of the pool's reach (for outputs
-    /// that outlive the forward pass). An output much smaller than the
-    /// recycled buffer backing it is copied out instead, so responses
-    /// never pin a large pooled allocation.
-    fn into_vec(mut self) -> Vec<f32> {
-        let d = std::mem::take(&mut self.d);
-        if d.capacity() > 2 * d.len().max(32) {
-            let out = d.to_vec();
-            scratch_put(d);
-            return out;
-        }
-        d
-    }
-
-    fn row(&self, i: usize) -> &[f32] {
-        &self.d[i * self.c..(i + 1) * self.c]
-    }
-
-    fn at(&self, i: usize, j: usize) -> f32 {
-        self.d[i * self.c + j]
-    }
-}
-
-impl Clone for Mat {
-    fn clone(&self) -> Mat {
-        Mat {
-            r: self.r,
-            c: self.c,
-            d: scratch_take_copied(&self.d),
-        }
-    }
-}
-
-impl Drop for Mat {
-    fn drop(&mut self) {
-        // `into_vec` leaves an empty, zero-capacity Vec behind, which
-        // the pool ignores.
-        scratch_put(std::mem::take(&mut self.d));
-    }
-}
-
-/// `x @ w + b` with optional activation (`model.py linear`).
-fn linear(x: &Mat, l: &Dense, act: Act) -> Mat {
-    debug_assert_eq!(x.c, l.fin);
-    let mut out = Mat::zeros(x.r, l.fout);
-    for i in 0..x.r {
-        let xr = x.row(i);
-        let or = &mut out.d[i * l.fout..(i + 1) * l.fout];
-        or.copy_from_slice(&l.b);
-        for (k, &xv) in xr.iter().enumerate() {
-            if xv != 0.0 {
-                let wr = &l.w[k * l.fout..(k + 1) * l.fout];
-                for (o, &wv) in or.iter_mut().zip(wr) {
-                    *o += xv * wv;
-                }
-            }
-        }
-        match act {
-            Act::None => {}
-            Act::Relu => or.iter_mut().for_each(|v| *v = v.max(0.0)),
-        }
-    }
-    out
-}
-
-/// Plain `a @ b`.
-fn matmul(a: &Mat, b: &Mat) -> Mat {
-    debug_assert_eq!(a.c, b.r);
-    let mut out = Mat::zeros(a.r, b.c);
-    for i in 0..a.r {
-        let or = &mut out.d[i * b.c..(i + 1) * b.c];
-        for k in 0..a.c {
-            let av = a.at(i, k);
-            if av != 0.0 {
-                let br = b.row(k);
-                for (o, &bv) in or.iter_mut().zip(br) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-    out
-}
-
-fn relu_inplace(m: &mut Mat) {
-    m.d.iter_mut().for_each(|v| *v = v.max(0.0));
-}
-
-fn mask_rows(m: &mut Mat, mask: &[f32]) {
-    for i in 0..m.r {
-        let mk = mask[i];
-        if mk != 1.0 {
-            m.d[i * m.c..(i + 1) * m.c].iter_mut().for_each(|v| *v *= mk);
-        }
-    }
-}
-
-/// Masked mean pool -> `[1, c]` (`model.py masked_mean_pool`).
-fn masked_mean_pool(h: &Mat, mask: &[f32]) -> Mat {
-    let denom = mask.iter().sum::<f32>().max(1.0);
-    let mut out = Mat::zeros(1, h.c);
-    for i in 0..h.r {
-        let mk = mask[i];
-        if mk != 0.0 {
-            for (o, &v) in out.d.iter_mut().zip(h.row(i)) {
-                *o += v * mk;
-            }
-        }
-    }
-    out.d.iter_mut().for_each(|v| *v /= denom);
-    out
-}
-
-/// Symmetric GCN normalization `D^-1/2 (A + diag(mask)) D^-1/2`.
-fn gcn_norm_adj(adj: &Mat, mask: &[f32]) -> Mat {
-    let n = adj.r;
-    let mut a_hat = adj.clone();
-    for i in 0..n {
-        a_hat.d[i * n + i] += mask[i];
-    }
-    let mut inv_sqrt = vec![0.0f32; n];
-    for i in 0..n {
-        let deg: f32 = a_hat.row(i).iter().sum();
-        if deg > 0.0 {
-            inv_sqrt[i] = 1.0 / deg.max(1e-12).sqrt();
-        }
-    }
-    for i in 0..n {
-        for j in 0..n {
-            a_hat.d[i * n + j] *= inv_sqrt[i] * inv_sqrt[j];
-        }
-    }
-    a_hat
-}
-
-// ---------------------------------------------------------------- model
-/// Which forward pass to run (resolved from the manifest model name).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum NativeKind {
-    Gcn,
-    Gin { virtual_node: bool },
-    Gat,
-    Pna,
-    Sgc,
-    Sage,
-    Dgn,
-}
-
-fn kind_of(name: &str) -> Result<NativeKind> {
-    Ok(match name {
-        "gcn" => NativeKind::Gcn,
-        "gin" => NativeKind::Gin {
-            virtual_node: false,
-        },
-        "gin_vn" => NativeKind::Gin { virtual_node: true },
-        "gat" => NativeKind::Gat,
-        "pna" => NativeKind::Pna,
-        "sgc" => NativeKind::Sgc,
-        "sage" => NativeKind::Sage,
-        "dgn" | "dgn_large" => NativeKind::Dgn,
-        _ => bail!("native backend has no forward pass for model {name:?}"),
-    })
-}
-
-enum Weights {
-    Gcn {
-        embed: Dense,
-        convs: Vec<Dense>,
-        head: Dense,
-    },
-    Gin {
-        embed: Dense,
-        bond: Vec<Dense>,
-        mlps: Vec<(Dense, Dense)>,
-        head: Dense,
-        /// `(vn0, vn_mlps)` for GIN+VN.
-        vn: Option<(Vec<f32>, Vec<(Dense, Dense)>)>,
-    },
-    Gat {
-        embed: Dense,
-        /// Per layer: projection + per-head (a_src, a_dst) vectors.
-        convs: Vec<(Dense, Vec<f32>, Vec<f32>)>,
-        head: Dense,
-    },
-    Pna {
-        embed: Dense,
-        convs: Vec<Dense>,
-        head: [Dense; 3],
-    },
-    Sgc {
-        w: Dense,
-        head: Dense,
-    },
-    Sage {
-        embed: Dense,
-        convs: Vec<(Dense, Dense)>,
-        head: Dense,
-    },
-    Dgn {
-        embed: Dense,
-        convs: Vec<Dense>,
-        head: [Dense; 3],
-    },
-}
-
-/// A model compiled for the native backend: resolved kind, manifest
-/// dims, and the regenerated baked-in weights.
+/// A model compiled for the native backend: the lowered stage-IR plan
+/// with its regenerated baked-in weights.
 pub struct NativeModel {
-    kind: NativeKind,
-    layers: usize,
-    dim: usize,
-    heads: usize,
-    out_dim: usize,
-    node_level: bool,
-    edge_dim: usize,
-    weights: Weights,
+    plan: ModelPlan,
 }
 
 impl NativeModel {
-    /// Rebuild the model's weights from the manifest entry and the
-    /// artifact weight seed (same draw order as `model.py`'s builders).
+    /// Lower the manifest entry to its executable plan.
     pub fn build(meta: &ModelMeta, weight_seed: u64) -> Result<NativeModel> {
-        if weight_seed > u32::MAX as u64 {
-            bail!("weight_seed {weight_seed} exceeds the scalar MT19937 seeding range");
-        }
-        let kind = kind_of(&meta.name)?;
-        let d = meta.dim;
-        if d == 0 || meta.layers == 0 {
-            bail!("model {:?} has degenerate dims", meta.name);
-        }
-        let edge_dim = meta
-            .inputs
-            .iter()
-            .find(|i| i.name == "edge_attr")
-            .map(|i| *i.shape.last().unwrap_or(&0))
-            .unwrap_or(0);
-        let mut wi = WInit::new(weight_seed as u32);
-        let weights = match kind {
-            NativeKind::Gcn => Weights::Gcn {
-                embed: wi.dense(meta.in_dim, d),
-                convs: (0..meta.layers).map(|_| wi.dense(d, d)).collect(),
-                head: wi.dense(d, meta.out_dim),
-            },
-            NativeKind::Gin { virtual_node } => {
-                if edge_dim == 0 {
-                    bail!("GIN artifact {:?} lists no edge_attr input", meta.name);
-                }
-                let embed = wi.dense(meta.in_dim, d);
-                let bond: Vec<Dense> =
-                    (0..meta.layers).map(|_| wi.dense(edge_dim, d)).collect();
-                let mlps: Vec<(Dense, Dense)> = (0..meta.layers)
-                    .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
-                    .collect();
-                let head = wi.dense(d, meta.out_dim);
-                let vn = if virtual_node {
-                    let vn0 = wi.vec(d);
-                    let vn_mlps = (0..meta.layers - 1)
-                        .map(|_| (wi.dense(d, 2 * d), wi.dense(2 * d, d)))
-                        .collect();
-                    Some((vn0, vn_mlps))
-                } else {
-                    None
-                };
-                Weights::Gin {
-                    embed,
-                    bond,
-                    mlps,
-                    head,
-                    vn,
-                }
-            }
-            NativeKind::Gat => {
-                if meta.heads == 0 || d % meta.heads != 0 {
-                    bail!(
-                        "GAT artifact {:?}: dim {} not divisible by heads {}",
-                        meta.name,
-                        d,
-                        meta.heads
-                    );
-                }
-                let embed = wi.dense(meta.in_dim, d);
-                let convs = (0..meta.layers)
-                    .map(|_| {
-                        let w = wi.dense(d, d);
-                        let a_src = wi.vec(d);
-                        let a_dst = wi.vec(d);
-                        (w, a_src, a_dst)
-                    })
-                    .collect();
-                Weights::Gat {
-                    embed,
-                    convs,
-                    head: wi.dense(d, meta.out_dim),
-                }
-            }
-            NativeKind::Pna => Weights::Pna {
-                embed: wi.dense(meta.in_dim, d),
-                convs: (0..meta.layers).map(|_| wi.dense(12 * d, d)).collect(),
-                head: [
-                    wi.dense(d, d / 2),
-                    wi.dense(d / 2, d / 4),
-                    wi.dense(d / 4, meta.out_dim),
-                ],
-            },
-            NativeKind::Sgc => Weights::Sgc {
-                w: wi.dense(meta.in_dim, d),
-                head: wi.dense(d, meta.out_dim),
-            },
-            NativeKind::Sage => Weights::Sage {
-                embed: wi.dense(meta.in_dim, d),
-                convs: (0..meta.layers)
-                    .map(|_| (wi.dense(d, d), wi.dense(d, d)))
-                    .collect(),
-                head: wi.dense(d, meta.out_dim),
-            },
-            NativeKind::Dgn => Weights::Dgn {
-                embed: wi.dense(meta.in_dim, d),
-                convs: (0..meta.layers).map(|_| wi.dense(2 * d, d)).collect(),
-                head: [
-                    wi.dense(d, d / 2),
-                    wi.dense(d / 2, d / 4),
-                    wi.dense(d / 4, meta.out_dim),
-                ],
-            },
-        };
         Ok(NativeModel {
-            kind,
-            layers: meta.layers,
-            dim: d,
-            heads: meta.heads,
-            out_dim: meta.out_dim,
-            node_level: meta.node_level,
-            edge_dim,
-            weights,
+            plan: lower::lower(meta, weight_seed)?,
         })
     }
 
-    /// Run the forward pass over staged dense tensors. Graph-level
-    /// models return `[out_dim]`; node-level `[n_max * out_dim]`.
-    pub fn forward(&self, dense: &DenseGraph) -> Result<Vec<f32>> {
-        let n = dense.n_max;
-        let x = Mat::from_slice(n, dense.f_node, &dense.x);
-        let adj = Mat::from_slice(n, n, &dense.adj);
-        let mask = &dense.mask;
-        let out = match (&self.kind, &self.weights) {
-            (NativeKind::Gcn, Weights::Gcn { embed, convs, head }) => {
-                self.fwd_gcn(&x, &adj, mask, embed, convs, head)
-            }
-            (NativeKind::Sgc, Weights::Sgc { w, head }) => {
-                self.fwd_sgc(&x, &adj, mask, w, head)
-            }
-            (
-                NativeKind::Gin { .. },
-                Weights::Gin {
-                    embed,
-                    bond,
-                    mlps,
-                    head,
-                    vn,
-                },
-            ) => {
-                if self.edge_dim == 0 || dense.f_edge != self.edge_dim {
-                    bail!(
-                        "GIN forward needs {}-wide edge features, staged {}",
-                        self.edge_dim,
-                        dense.f_edge
-                    );
-                }
-                self.fwd_gin(&x, &adj, dense, mask, embed, bond, mlps, head, vn.as_ref())
-            }
-            (NativeKind::Gat, Weights::Gat { embed, convs, head }) => {
-                self.fwd_gat(&x, &adj, mask, embed, convs, head)
-            }
-            (NativeKind::Pna, Weights::Pna { embed, convs, head }) => {
-                self.fwd_pna(&x, &adj, mask, embed, convs, head)
-            }
-            (NativeKind::Sage, Weights::Sage { embed, convs, head }) => {
-                self.fwd_sage(&x, &adj, mask, embed, convs, head)
-            }
-            (NativeKind::Dgn, Weights::Dgn { embed, convs, head }) => {
-                self.fwd_dgn(&x, &adj, &dense.eig, mask, embed, convs, head)
-            }
-            _ => bail!("native model weight/kind mismatch"),
-        };
-        Ok(out)
+    /// The lowered stage sequence (what `gengnn plan` dumps).
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
     }
 
-    fn fwd_gcn(
+    /// Run one ingested graph through the plan interpreter.
+    ///
+    /// `eig_override` supplies a precomputed Laplacian eigenvector
+    /// padded to the artifact capacity (golden replay / the prep
+    /// stage's eigensolve); otherwise eig-consuming models solve on the
+    /// batch's CSR right here, with the same iteration budget the prep
+    /// stage uses. Graph-level models return `[out_dim]`; node-level
+    /// `[n_max * out_dim]` zero-padded.
+    pub fn forward_batch(
         &self,
-        x: &Mat,
-        adj: &Mat,
-        mask: &[f32],
-        embed: &Dense,
-        convs: &[Dense],
-        head: &Dense,
-    ) -> Vec<f32> {
-        let a_norm = gcn_norm_adj(adj, mask);
-        let mut h = linear(x, embed, Act::Relu);
-        for (li, conv) in convs.iter().enumerate() {
-            let hw = linear(&h, conv, Act::None);
-            h = matmul(&a_norm, &hw);
-            if li + 1 < convs.len() {
-                relu_inplace(&mut h);
-            }
-        }
-        mask_rows(&mut h, mask);
-        if self.node_level {
-            linear(&h, head, Act::None).into_vec()
-        } else {
-            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
-        }
-    }
-
-    fn fwd_sgc(&self, x: &Mat, adj: &Mat, mask: &[f32], w: &Dense, head: &Dense) -> Vec<f32> {
-        let a_norm = gcn_norm_adj(adj, mask);
-        let mut h = x.clone();
-        for _ in 0..self.layers {
-            h = matmul(&a_norm, &h);
-        }
-        let mut h = linear(&h, w, Act::Relu);
-        mask_rows(&mut h, mask);
-        if self.node_level {
-            linear(&h, head, Act::None).into_vec()
-        } else {
-            linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn fwd_gin(
-        &self,
-        x: &Mat,
-        adj: &Mat,
-        dense: &DenseGraph,
-        mask: &[f32],
-        embed: &Dense,
-        bond: &[Dense],
-        mlps: &[(Dense, Dense)],
-        head: &Dense,
-        vn: Option<&(Vec<f32>, Vec<(Dense, Dense)>)>,
-    ) -> Vec<f32> {
-        let n = adj.r;
-        let d = self.dim;
-        let de = self.edge_dim;
-        let mut h = linear(x, embed, Act::Relu);
-        let mut vn_state: Option<Vec<f32>> = vn.map(|(vn0, _)| vn0.clone());
-        for li in 0..self.layers {
-            if let Some(vn_vec) = &vn_state {
-                for i in 0..n {
-                    let mk = mask[i];
-                    if mk != 0.0 {
-                        let hr = &mut h.d[i * d..(i + 1) * d];
-                        for (hv, &vv) in hr.iter_mut().zip(vn_vec) {
-                            *hv += vv * mk;
-                        }
-                    }
+        batch: &GraphBatch,
+        eig_override: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        // The batch's in-neighbor view is built on first forward and
+        // reused by every later forward over the same batch; input
+        // validation happens once, inside `execute_over`.
+        let nbrs = batch.in_nbrs();
+        if self.plan.needs_eig() {
+            if let Some(e) = eig_override {
+                if e.len() != self.plan.n_max {
+                    bail!("eig override has wrong length");
                 }
+                return interp::execute_over(&self.plan, &batch.graph, nbrs, Some(e));
             }
-            // Edge embedding + merged scatter-gather:
-            //   m[u] = sum_v adj[u,v] * relu(h[v] + (edge_attr[u,v] @ We + be))
-            let bl = &bond[li];
-            let mut m = Mat::zeros(n, d);
-            let mut e_row = vec![0.0f32; d];
-            for u in 0..n {
-                let mr = &mut m.d[u * d..(u + 1) * d];
-                for v in 0..n {
-                    let a = adj.at(u, v);
-                    if a == 0.0 {
-                        continue;
-                    }
-                    e_row.copy_from_slice(&bl.b);
-                    let ea = &dense.edge_attr[(u * n + v) * de..(u * n + v + 1) * de];
-                    for (k, &ev) in ea.iter().enumerate() {
-                        if ev != 0.0 {
-                            let wr = &bl.w[k * d..(k + 1) * d];
-                            for (o, &wv) in e_row.iter_mut().zip(wr) {
-                                *o += ev * wv;
-                            }
-                        }
-                    }
-                    let hv = h.row(v);
-                    for j in 0..d {
-                        let msg = (hv[j] + e_row[j]).max(0.0);
-                        mr[j] += a * msg;
-                    }
-                }
-            }
-            // (1 + eps) x + m through the 2-layer MLP.
-            let mut z = Mat::zeros(n, d);
-            for i in 0..n * d {
-                z.d[i] = (1.0 + EPS_GIN) * h.d[i] + m.d[i];
-            }
-            let (w1, w2) = &mlps[li];
-            h = linear(&linear(&z, w1, Act::Relu), w2, Act::Relu);
-            mask_rows(&mut h, mask);
-            if let Some(vn_vec) = &mut vn_state {
-                if li + 1 < self.layers {
-                    let (_, vn_mlps) = vn.unwrap();
-                    let mut g = Mat::zeros(1, d);
-                    g.d.copy_from_slice(vn_vec);
-                    for i in 0..n {
-                        let mk = mask[i];
-                        if mk != 0.0 {
-                            for (gv, &hv) in g.d.iter_mut().zip(h.row(i)) {
-                                *gv += hv * mk;
-                            }
-                        }
-                    }
-                    let (w1, w2) = &vn_mlps[li];
-                    let updated = linear(&linear(&g, w1, Act::Relu), w2, Act::Relu);
-                    vn_vec.copy_from_slice(&updated.d);
-                }
-            }
+            let r = batch.fiedler(400, 1e-9);
+            return interp::execute_over(&self.plan, &batch.graph, nbrs, Some(&r.vector));
         }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
-    }
-
-    fn fwd_gat(
-        &self,
-        x: &Mat,
-        adj: &Mat,
-        mask: &[f32],
-        embed: &Dense,
-        convs: &[(Dense, Vec<f32>, Vec<f32>)],
-        head: &Dense,
-    ) -> Vec<f32> {
-        let n = adj.r;
-        let d = self.dim;
-        let heads = self.heads;
-        let fh = d / heads;
-        // Self-loops on real nodes: adj_sl = max(adj, diag(mask)).
-        let mut adj_sl = adj.clone();
-        for i in 0..n {
-            let v = adj_sl.at(i, i).max(mask[i]);
-            adj_sl.d[i * n + i] = v;
-        }
-        let mut h = linear(x, embed, Act::Relu);
-        for (li, (w, a_src, a_dst)) in convs.iter().enumerate() {
-            let z = linear(&h, w, Act::None); // [n, d] = [n, heads*fh]
-            // Per-node, per-head logit dot products.
-            let mut sl = vec![0.0f32; n * heads];
-            let mut dl = vec![0.0f32; n * heads];
-            for i in 0..n {
-                let zr = z.row(i);
-                for hh in 0..heads {
-                    let zs = &zr[hh * fh..(hh + 1) * fh];
-                    let asr = &a_src[hh * fh..(hh + 1) * fh];
-                    let ads = &a_dst[hh * fh..(hh + 1) * fh];
-                    sl[i * heads + hh] = zs.iter().zip(asr).map(|(a, b)| a * b).sum();
-                    dl[i * heads + hh] = zs.iter().zip(ads).map(|(a, b)| a * b).sum();
-                }
-            }
-            let mut out = Mat::zeros(n, d);
-            let mut logits = vec![0.0f32; n];
-            for hh in 0..heads {
-                for i in 0..n {
-                    // LeakyReLU(sl_i + dl_j), masked to the neighborhood.
-                    let mut lmax = f32::NEG_INFINITY;
-                    for j in 0..n {
-                        let mut l = sl[i * heads + hh] + dl[j * heads + hh];
-                        if l <= 0.0 {
-                            l *= 0.2;
-                        }
-                        if adj_sl.at(i, j) <= 0.0 {
-                            l = -1.0e9;
-                        }
-                        logits[j] = l;
-                        lmax = lmax.max(l);
-                    }
-                    let mut denom = 0.0f32;
-                    for (j, l) in logits.iter_mut().enumerate() {
-                        let p = if adj_sl.at(i, j) > 0.0 {
-                            (*l - lmax).exp()
-                        } else {
-                            0.0
-                        };
-                        *l = p;
-                        denom += p;
-                    }
-                    let denom = denom.max(1e-16);
-                    let or = &mut out.d[i * d + hh * fh..i * d + (hh + 1) * fh];
-                    for j in 0..n {
-                        let p = logits[j] / denom;
-                        if p != 0.0 {
-                            let zs = &z.row(j)[hh * fh..(hh + 1) * fh];
-                            for (o, &zv) in or.iter_mut().zip(zs) {
-                                *o += p * zv;
-                            }
-                        }
-                    }
-                }
-            }
-            h = out;
-            if li + 1 < convs.len() {
-                h.d.iter_mut().for_each(|v| {
-                    if *v <= 0.0 {
-                        *v = v.exp_m1();
-                    }
-                });
-            }
-            mask_rows(&mut h, mask);
-        }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
-    }
-
-    fn fwd_pna(
-        &self,
-        x: &Mat,
-        adj: &Mat,
-        mask: &[f32],
-        embed: &Dense,
-        convs: &[Dense],
-        head: &[Dense; 3],
-    ) -> Vec<f32> {
-        let n = adj.r;
-        let d = self.dim;
-        let mut h = linear(x, embed, Act::Relu);
-        let deg: Vec<f32> = (0..n).map(|i| adj.row(i).iter().sum()).collect();
-        let avg = avg_log_deg();
-        const NEG: f32 = -3.0e38;
-        const POS: f32 = 3.0e38;
-        for conv in convs {
-            // Four aggregators (sum, sumsq, max, min) over the neighborhood.
-            let mut full = Mat::zeros(n, 12 * d);
-            for i in 0..n {
-                let mut s = vec![0.0f32; d];
-                let mut ss = vec![0.0f32; d];
-                let mut mx = vec![NEG; d];
-                let mut mn = vec![POS; d];
-                for j in 0..n {
-                    let a = adj.at(i, j);
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let hj = h.row(j);
-                    for k in 0..d {
-                        let v = hj[k];
-                        s[k] += a * v;
-                        ss[k] += a * v * v;
-                        mx[k] = mx[k].max(v);
-                        mn[k] = mn[k].min(v);
-                    }
-                }
-                let dg = deg[i];
-                let dg1 = dg.max(1.0);
-                let has = if dg > 0.0 { 1.0 } else { 0.0 };
-                let log_deg = (dg + 1.0).ln();
-                let amp = log_deg / avg;
-                let att = if dg > 0.0 {
-                    avg / log_deg.max(1e-6)
-                } else {
-                    0.0
-                };
-                let fr = &mut full.d[i * 12 * d..(i + 1) * 12 * d];
-                for k in 0..d {
-                    let mean = s[k] / dg1;
-                    let var = (ss[k] / dg1 - mean * mean).max(0.0);
-                    let std = (var + 1e-8).sqrt() * has;
-                    // agg = [mean, std, max, min], then scaled copies.
-                    let agg = [mean, std, mx[k] * has, mn[k] * has];
-                    for (b, &v) in agg.iter().enumerate() {
-                        fr[b * d + k] = v;
-                        fr[(4 + b) * d + k] = v * amp;
-                        fr[(8 + b) * d + k] = v * att;
-                    }
-                }
-            }
-            let up = linear(&full, conv, Act::Relu);
-            for i in 0..n * d {
-                h.d[i] = up.d[i] + h.d[i];
-            }
-            mask_rows(&mut h, mask);
-        }
-        let mut p = masked_mean_pool(&h, mask);
-        p = linear(&p, &head[0], Act::Relu);
-        p = linear(&p, &head[1], Act::Relu);
-        linear(&p, &head[2], Act::None).into_vec()
-    }
-
-    fn fwd_sage(
-        &self,
-        x: &Mat,
-        adj: &Mat,
-        mask: &[f32],
-        embed: &Dense,
-        convs: &[(Dense, Dense)],
-        head: &Dense,
-    ) -> Vec<f32> {
-        let n = adj.r;
-        let d = self.dim;
-        let deg1: Vec<f32> = (0..n)
-            .map(|i| adj.row(i).iter().sum::<f32>().max(1.0))
-            .collect();
-        let mut h = linear(x, embed, Act::Relu);
-        for (li, (w_self, w_nbr)) in convs.iter().enumerate() {
-            let mut mean_nbr = matmul(adj, &h);
-            for i in 0..n {
-                let dv = deg1[i];
-                mean_nbr.d[i * d..(i + 1) * d]
-                    .iter_mut()
-                    .for_each(|v| *v /= dv);
-            }
-            let hs = linear(&h, w_self, Act::None);
-            let hn = linear(&mean_nbr, w_nbr, Act::None);
-            for i in 0..n * d {
-                h.d[i] = hs.d[i] + hn.d[i];
-            }
-            if li + 1 < convs.len() {
-                relu_inplace(&mut h);
-            }
-            // Row-wise L2 normalization (GraphSage).
-            for i in 0..n {
-                let row = &mut h.d[i * d..(i + 1) * d];
-                let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
-                let div = norm.max(1e-6);
-                row.iter_mut().for_each(|v| *v /= div);
-            }
-            mask_rows(&mut h, mask);
-        }
-        linear(&masked_mean_pool(&h, mask), head, Act::None).into_vec()
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn fwd_dgn(
-        &self,
-        x: &Mat,
-        adj: &Mat,
-        eig: &[f32],
-        mask: &[f32],
-        embed: &Dense,
-        convs: &[Dense],
-        head: &[Dense; 3],
-    ) -> Vec<f32> {
-        let n = adj.r;
-        let d = self.dim;
-        // Mean-normalized adjacency + directional matrix B_dx (§4.4).
-        let mut adj_norm = Mat::zeros(n, n);
-        let mut b_dx = Mat::zeros(n, n);
-        let mut b_row = vec![0.0f32; n];
-        for i in 0..n {
-            let deg: f32 = adj.row(i).iter().sum();
-            let dg1 = deg.max(1.0);
-            let mut abs_sum = 0.0f32;
-            for j in 0..n {
-                let a = adj.at(i, j);
-                adj_norm.d[i * n + j] = a / dg1;
-                let fm = a * (eig[j] - eig[i]);
-                b_dx.d[i * n + j] = fm;
-                abs_sum += fm.abs();
-            }
-            let denom = abs_sum + 1e-8;
-            let mut row_sum = 0.0f32;
-            for j in 0..n {
-                b_dx.d[i * n + j] /= denom;
-                row_sum += b_dx.d[i * n + j];
-            }
-            b_row[i] = row_sum;
-        }
-        let mut h = linear(x, embed, Act::Relu);
-        for conv in convs {
-            let mean = matmul(&adj_norm, &h);
-            let bh = matmul(&b_dx, &h);
-            let mut y = Mat::zeros(n, 2 * d);
-            for i in 0..n {
-                let yr = &mut y.d[i * 2 * d..(i + 1) * 2 * d];
-                yr[..d].copy_from_slice(mean.row(i));
-                let hr = h.row(i);
-                let br = bh.row(i);
-                for k in 0..d {
-                    yr[d + k] = (br[k] - b_row[i] * hr[k]).abs();
-                }
-            }
-            let up = linear(&y, conv, Act::Relu);
-            for i in 0..n * d {
-                h.d[i] = up.d[i] + h.d[i];
-            }
-            mask_rows(&mut h, mask);
-        }
-        let apply_head = |t: &Mat| -> Mat {
-            let t = linear(t, &head[0], Act::Relu);
-            let t = linear(&t, &head[1], Act::Relu);
-            linear(&t, &head[2], Act::None)
-        };
-        if self.node_level {
-            let mut out = apply_head(&h);
-            mask_rows(&mut out, mask);
-            out.into_vec()
-        } else {
-            apply_head(&masked_mean_pool(&h, mask)).into_vec()
-        }
+        // Models that do not consume an eigenvector ignore a supplied
+        // one (a producer may attach eig to any request).
+        interp::execute_over(&self.plan, &batch.graph, nbrs, None)
     }
 
     /// Expected output length for shape checks.
     pub fn output_len(&self, n_max: usize) -> usize {
-        if self.node_level {
-            n_max * self.out_dim
+        if self.plan.node_level {
+            n_max * self.plan.out_dim
         } else {
-            self.out_dim
+            self.plan.out_dim
         }
     }
 }
@@ -971,48 +86,8 @@ impl NativeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{CooGraph, DenseGraph};
+    use crate::graph::CooGraph;
     use crate::runtime::artifact::InputSpec;
-
-    /// numpy `RandomState(0).uniform(-0.5, 0.5, 6)` reference values.
-    #[test]
-    fn mt19937_matches_numpy_randomstate_stream() {
-        let mut mt = Mt19937::new(0);
-        let want = [
-            0.04881350392732475,
-            0.21518936637241948,
-            0.10276337607164387,
-            0.044883182996896864,
-            -0.07634520066109529,
-            0.14589411306665612,
-        ];
-        for w in want {
-            let got = -0.5 + (0.5 - (-0.5)) * mt.next_double();
-            assert!((got - w).abs() < 1e-16, "got {got}, want {w}");
-        }
-        let mut mt2 = Mt19937::new(12345);
-        let want2 = [
-            0.8592321856342957,
-            -0.3672488908364282,
-            -0.6321623766458111,
-            -0.5908794428939206,
-        ];
-        for w in want2 {
-            let got = -1.0 + 2.0 * mt2.next_double();
-            assert!((got - w).abs() < 1e-15, "got {got}, want {w}");
-        }
-    }
-
-    /// `WInit(0).dense(9, d)` first f32 weights, as numpy casts them.
-    #[test]
-    fn winit_f32_cast_matches_numpy() {
-        let mut wi = WInit::new(0);
-        let dense = wi.dense(9, 4);
-        let want: [f32; 3] = [0.032542337, 0.14345957, 0.068508916];
-        for (g, w) in dense.w.iter().zip(&want) {
-            assert_eq!(*g, *w, "weight cast mismatch");
-        }
-    }
 
     fn tiny_meta(name: &str) -> ModelMeta {
         let n_max = 8;
@@ -1070,13 +145,8 @@ mod tests {
         .unwrap()
     }
 
-    fn dense_for(meta: &ModelMeta, g: &CooGraph) -> DenseGraph {
-        let mut d = DenseGraph::from_coo(g, meta.n_max, meta.needs_edge_attr()).unwrap();
-        if meta.needs_eig() {
-            let r = crate::graph::fiedler_vector(g, 500, 1e-10);
-            d.eig[..g.n].copy_from_slice(&r.vector);
-        }
-        d
+    fn batch(feat_scale: f32) -> GraphBatch {
+        GraphBatch::ingest(tiny_graph(feat_scale)).unwrap()
     }
 
     #[test]
@@ -1084,9 +154,7 @@ mod tests {
         for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
             let meta = tiny_meta(name);
             let m = NativeModel::build(&meta, 0).unwrap();
-            let g = tiny_graph(1.0);
-            let d = dense_for(&meta, &g);
-            let out = m.forward(&d).unwrap();
+            let out = m.forward_batch(&batch(1.0), None).unwrap();
             assert_eq!(out.len(), m.output_len(meta.n_max), "{name}");
             assert!(
                 out.iter().all(|v| v.is_finite()),
@@ -1097,13 +165,11 @@ mod tests {
 
     #[test]
     fn forward_is_deterministic_and_input_sensitive() {
-        let meta = tiny_meta("gcn");
-        let m = NativeModel::build(&meta, 0).unwrap();
-        let d1 = dense_for(&meta, &tiny_graph(1.0));
-        let d2 = dense_for(&meta, &tiny_graph(2.0));
-        let a = m.forward(&d1).unwrap();
-        let b = m.forward(&d1).unwrap();
-        let c = m.forward(&d2).unwrap();
+        let m = NativeModel::build(&tiny_meta("gcn"), 0).unwrap();
+        let b1 = batch(1.0);
+        let a = m.forward_batch(&b1, None).unwrap();
+        let b = m.forward_batch(&b1, None).unwrap();
+        let c = m.forward_batch(&batch(2.0), None).unwrap();
         assert_eq!(a, b, "same input must give identical output");
         assert_ne!(a, c, "different features must change the output");
     }
@@ -1111,26 +177,53 @@ mod tests {
     #[test]
     fn weight_seed_changes_outputs() {
         let meta = tiny_meta("gin");
-        let g = tiny_graph(1.0);
-        let d = dense_for(&meta, &g);
-        let a = NativeModel::build(&meta, 0).unwrap().forward(&d).unwrap();
-        let b = NativeModel::build(&meta, 1).unwrap().forward(&d).unwrap();
-        assert_ne!(a, b);
+        let b = batch(1.0);
+        let a = NativeModel::build(&meta, 0)
+            .unwrap()
+            .forward_batch(&b, None)
+            .unwrap();
+        let z = NativeModel::build(&meta, 1)
+            .unwrap()
+            .forward_batch(&b, None)
+            .unwrap();
+        assert_ne!(a, z);
     }
 
     #[test]
-    fn node_level_output_is_masked() {
+    fn node_level_output_is_padded_with_zeros() {
         let mut meta = tiny_meta("dgn");
         meta.node_level = true;
         meta.out_dim = 3;
         let m = NativeModel::build(&meta, 0).unwrap();
-        let g = tiny_graph(1.0);
-        let d = dense_for(&meta, &g);
-        let out = m.forward(&d).unwrap();
+        let b = batch(1.0);
+        let out = m.forward_batch(&b, None).unwrap();
         assert_eq!(out.len(), meta.n_max * 3);
-        let live = g.n * 3;
-        assert!(out[live..].iter().all(|&v| v == 0.0), "padding not masked");
+        let live = b.n() * 3;
+        assert!(out[live..].iter().all(|&v| v == 0.0), "padding not zeroed");
         assert!(out[..live].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn eig_override_must_be_padded_to_capacity() {
+        let meta = tiny_meta("dgn");
+        let m = NativeModel::build(&meta, 0).unwrap();
+        let b = batch(1.0);
+        let short = vec![0.5f32; b.n()];
+        assert!(m.forward_batch(&b, Some(&short)).is_err());
+        let padded = vec![0.5f32; meta.n_max];
+        m.forward_batch(&b, Some(&padded)).unwrap();
+    }
+
+    #[test]
+    fn non_eig_models_ignore_a_supplied_eigenvector() {
+        // Producers may attach eig to any request; models that do not
+        // consume one must not reject it (whatever its length).
+        let m = NativeModel::build(&tiny_meta("gcn"), 0).unwrap();
+        let b = batch(1.0);
+        let plain = m.forward_batch(&b, None).unwrap();
+        let stray = vec![0.25f32; 3];
+        let with_eig = m.forward_batch(&b, Some(&stray)).unwrap();
+        assert_eq!(plain, with_eig);
     }
 
     #[test]
@@ -1138,14 +231,13 @@ mod tests {
         // Dedicated thread: the scratch pool is per-thread, so other
         // tests cannot perturb the counters.
         std::thread::spawn(|| {
-            let meta = tiny_meta("gcn");
-            let m = NativeModel::build(&meta, 0).unwrap();
-            let d = dense_for(&meta, &tiny_graph(1.0));
-            let a = m.forward(&d).unwrap();
+            let m = NativeModel::build(&tiny_meta("gcn"), 0).unwrap();
+            let b = batch(1.0);
+            let a = m.forward_batch(&b, None).unwrap();
             let (hits_before, _) = crate::util::pool::scratch_stats();
-            let b = m.forward(&d).unwrap();
+            let c = m.forward_batch(&b, None).unwrap();
             let (hits_after, _) = crate::util::pool::scratch_stats();
-            assert_eq!(a, b, "pooled scratch must not change outputs");
+            assert_eq!(a, c, "pooled scratch must not change outputs");
             assert!(
                 hits_after > hits_before,
                 "second forward must recycle scratch buffers \
@@ -1165,12 +257,15 @@ mod tests {
 
     #[test]
     fn virtual_node_changes_gin_output() {
-        let g = tiny_graph(1.0);
-        let gin = tiny_meta("gin");
-        let gin_vn = tiny_meta("gin_vn");
-        let d = dense_for(&gin, &g);
-        let a = NativeModel::build(&gin, 0).unwrap().forward(&d).unwrap();
-        let b = NativeModel::build(&gin_vn, 0).unwrap().forward(&d).unwrap();
-        assert_ne!(a, b);
+        let b = batch(1.0);
+        let a = NativeModel::build(&tiny_meta("gin"), 0)
+            .unwrap()
+            .forward_batch(&b, None)
+            .unwrap();
+        let v = NativeModel::build(&tiny_meta("gin_vn"), 0)
+            .unwrap()
+            .forward_batch(&b, None)
+            .unwrap();
+        assert_ne!(a, v);
     }
 }

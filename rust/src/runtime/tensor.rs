@@ -1,0 +1,238 @@
+//! Pooled float32 matrix primitives shared by the stage-IR interpreter
+//! ([`super::interp`]) and the dense reference executor
+//! ([`super::dense_ref`]).
+//!
+//! Sharing matters for more than code size: the bit-exactness contract
+//! between the two executors holds because every per-row primitive
+//! (`linear`, activation, pooling) is literally the same code on both
+//! sides — only the neighborhood aggregation differs, and there the
+//! ascending-neighbor iteration order is pinned by
+//! `python/tools/plan_replica.py`.
+//!
+//! Hot-loop temporaries ([`Mat`]) draw their storage from the
+//! per-thread scratch pool in [`crate::util::pool`] and return it on
+//! drop, so an executor lane running forward after forward recycles the
+//! same allocations instead of hitting the allocator per request (the
+//! software analog of statically-allocated on-chip buffers). Buffers
+//! are fully re-initialized on take, so pooling can never change an
+//! output bit.
+
+use crate::models::params::Dense;
+use crate::models::plan::Act;
+use crate::util::pool::{scratch_put, scratch_take_copied, scratch_take_zeroed};
+
+/// Row-major `[r, c]` float32 matrix. Storage comes from the calling
+/// thread's scratch pool and is returned on drop; [`Mat::into_vec`]
+/// lets a result escape the pool (model outputs).
+#[derive(Debug)]
+pub(crate) struct Mat {
+    pub r: usize,
+    pub c: usize,
+    pub d: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(r: usize, c: usize) -> Mat {
+        Mat {
+            r,
+            c,
+            d: scratch_take_zeroed(r * c),
+        }
+    }
+
+    pub fn from_slice(r: usize, c: usize, d: &[f32]) -> Mat {
+        debug_assert_eq!(d.len(), r * c);
+        Mat {
+            r,
+            c,
+            d: scratch_take_copied(d),
+        }
+    }
+
+    /// Take the backing buffer out of the pool's reach (for outputs
+    /// that outlive the forward pass). An output much smaller than the
+    /// recycled buffer backing it is copied out instead, so responses
+    /// never pin a large pooled allocation.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        let d = std::mem::take(&mut self.d);
+        if d.capacity() > 2 * d.len().max(32) {
+            let out = d.to_vec();
+            scratch_put(d);
+            return out;
+        }
+        d
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.d[i * self.c..(i + 1) * self.c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.d[i * self.c..(i + 1) * self.c]
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.d[i * self.c + j]
+    }
+}
+
+impl Clone for Mat {
+    fn clone(&self) -> Mat {
+        Mat {
+            r: self.r,
+            c: self.c,
+            d: scratch_take_copied(&self.d),
+        }
+    }
+}
+
+impl Drop for Mat {
+    fn drop(&mut self) {
+        // `into_vec` leaves an empty, zero-capacity Vec behind, which
+        // the pool ignores.
+        scratch_put(std::mem::take(&mut self.d));
+    }
+}
+
+/// `x @ w + b` with optional activation (`model.py linear`).
+pub(crate) fn linear(x: &Mat, l: &Dense, act: Act) -> Mat {
+    debug_assert_eq!(x.c, l.fin);
+    let mut out = Mat::zeros(x.r, l.fout);
+    for i in 0..x.r {
+        let xr = x.row(i);
+        let or = &mut out.d[i * l.fout..(i + 1) * l.fout];
+        or.copy_from_slice(&l.b);
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let wr = &l.w[k * l.fout..(k + 1) * l.fout];
+                for (o, &wv) in or.iter_mut().zip(wr) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        apply_act_slice(or, act);
+    }
+    out
+}
+
+/// Plain `a @ b` (dense reference only — the sparse interpreter never
+/// materializes an adjacency matrix).
+pub(crate) fn matmul(a: &Mat, b: &Mat) -> Mat {
+    debug_assert_eq!(a.c, b.r);
+    let mut out = Mat::zeros(a.r, b.c);
+    for i in 0..a.r {
+        let or = &mut out.d[i * b.c..(i + 1) * b.c];
+        for k in 0..a.c {
+            let av = a.at(i, k);
+            if av != 0.0 {
+                let br = b.row(k);
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn apply_act_slice(s: &mut [f32], act: Act) {
+    match act {
+        Act::None => {}
+        Act::Relu => s.iter_mut().for_each(|v| *v = v.max(0.0)),
+        Act::Elu => s.iter_mut().for_each(|v| {
+            if *v <= 0.0 {
+                *v = v.exp_m1();
+            }
+        }),
+    }
+}
+
+pub(crate) fn apply_act(m: &mut Mat, act: Act) {
+    apply_act_slice(&mut m.d, act);
+}
+
+/// Multiply non-real rows down to zero (dense reference only — the
+/// sparse interpreter holds real rows exclusively).
+pub(crate) fn mask_rows(m: &mut Mat, mask: &[f32]) {
+    for i in 0..m.r {
+        let mk = mask[i];
+        if mk != 1.0 {
+            m.d[i * m.c..(i + 1) * m.c].iter_mut().for_each(|v| *v *= mk);
+        }
+    }
+}
+
+/// Masked mean pool -> `[1, c]` (`model.py masked_mean_pool`).
+pub(crate) fn masked_mean_pool(h: &Mat, mask: &[f32]) -> Mat {
+    let denom = mask.iter().sum::<f32>().max(1.0);
+    let mut out = Mat::zeros(1, h.c);
+    for i in 0..h.r {
+        let mk = mask[i];
+        if mk != 0.0 {
+            for (o, &v) in out.d.iter_mut().zip(h.row(i)) {
+                *o += v * mk;
+            }
+        }
+    }
+    out.d.iter_mut().for_each(|v| *v /= denom);
+    out
+}
+
+/// Row-wise L2 normalization (GraphSAGE).
+pub(crate) fn l2_normalize_rows(h: &mut Mat) {
+    for i in 0..h.r {
+        let row = &mut h.d[i * h.c..(i + 1) * h.c];
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let div = norm.max(1e-6);
+        row.iter_mut().for_each(|v| *v /= div);
+    }
+}
+
+/// `ln(1 + 2.15)` — mean degree constant of the PNA scalers, computed
+/// in f64 exactly as `model.py` does.
+pub(crate) fn avg_log_deg() -> f32 {
+    (1.0f64 + 2.15f64).ln() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::params::WInit;
+
+    #[test]
+    fn linear_matches_manual_matmul() {
+        let mut wi = WInit::new(1);
+        let l = wi.dense(3, 2);
+        let x = Mat::from_slice(2, 3, &[1.0, 0.0, 2.0, -1.0, 0.5, 0.0]);
+        let out = linear(&x, &l, Act::None);
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut want = l.b[j];
+                for k in 0..3 {
+                    let xv = x.at(i, k);
+                    if xv != 0.0 {
+                        want += xv * l.w[k * 2 + j];
+                    }
+                }
+                assert_eq!(out.at(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn activations() {
+        let mut m = Mat::from_slice(1, 3, &[-1.0, 0.0, 2.0]);
+        apply_act(&mut m, Act::Relu);
+        assert_eq!(m.d, vec![0.0, 0.0, 2.0]);
+        let mut m = Mat::from_slice(1, 2, &[-1.0, 2.0]);
+        apply_act(&mut m, Act::Elu);
+        assert_eq!(m.d, vec![(-1.0f32).exp_m1(), 2.0]);
+    }
+
+    #[test]
+    fn pool_divides_by_live_count() {
+        let h = Mat::from_slice(3, 2, &[2.0, 4.0, 4.0, 8.0, 9.0, 9.0]);
+        let p = masked_mean_pool(&h, &[1.0, 1.0, 0.0]);
+        assert_eq!(p.d, vec![3.0, 6.0]);
+    }
+}

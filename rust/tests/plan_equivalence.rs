@@ -1,0 +1,396 @@
+//! The stage-IR redesign's hard contract: sparse plan execution is
+//! **bit-identical** to the legacy dense-matmul reference.
+//!
+//! Three rings of evidence:
+//!
+//! * component-level: each sparse aggregation primitive against an
+//!   in-test dense-matmul comparator over randomized COO graphs
+//!   (empty, edgeless, isolated-node, duplicate-edge, self-loop);
+//! * model-level: every lowered kind, full forward, sparse interpreter
+//!   vs `DenseRef`, bitwise on live outputs (node-level padding must
+//!   be exactly zero on both sides — the dense reference may stamp
+//!   `-0.0` where the plan contract pads `+0.0`);
+//! * fixture-level: every manifest model on its checked-in golden
+//!   graph through the real `Engine`, vs the dense reference on the
+//!   packed tensors.
+//!
+//! The executable cross-language spec of the ordering argument is
+//! `python/tools/plan_replica.py`.
+
+mod common;
+
+use common::artifacts_or_skip;
+use gengnn::graph::{CooGraph, DenseGraph, GraphBatch};
+use gengnn::models::{lower, Aggregate};
+use gengnn::prop_assert;
+use gengnn::runtime::artifact::InputSpec;
+use gengnn::runtime::{interp, DenseRef, Engine, Golden, InputPack, ModelMeta, NativeModel};
+use gengnn::util::proptest::forall;
+use gengnn::util::rng::Rng;
+
+fn tiny_meta(name: &str, node_level: bool) -> ModelMeta {
+    let n_max = 8;
+    let in_dim = 4;
+    let mut inputs = vec![
+        InputSpec {
+            name: "x".into(),
+            shape: vec![n_max, in_dim],
+        },
+        InputSpec {
+            name: "adj".into(),
+            shape: vec![n_max, n_max],
+        },
+    ];
+    if name.starts_with("gin") {
+        inputs.push(InputSpec {
+            name: "edge_attr".into(),
+            shape: vec![n_max, n_max, 3],
+        });
+    }
+    if name.starts_with("dgn") {
+        inputs.push(InputSpec {
+            name: "eig".into(),
+            shape: vec![n_max],
+        });
+    }
+    inputs.push(InputSpec {
+        name: "mask".into(),
+        shape: vec![n_max],
+    });
+    ModelMeta {
+        name: name.to_string(),
+        layers: 2,
+        dim: 8,
+        heads: if name == "gat" { 2 } else { 0 },
+        n_max,
+        in_dim,
+        out_dim: if node_level { 3 } else { 1 },
+        node_level,
+        inputs,
+        hlo_path: "unused.hlo.txt".into(),
+        golden_path: "unused.golden.json".into(),
+    }
+}
+
+/// Adversarial raw COO graphs: rotates through empty node sets,
+/// edgeless graphs, isolated tail nodes, forced duplicate edges (each
+/// occurrence with its *own* feature row — last write must win), and
+/// self-loop-heavy graphs. ~30% of feature entries are exact zeros to
+/// stress the skip-zero accumulate paths.
+fn adversarial_graph(rng: &mut Rng, case: usize, in_dim: usize, f_edge: usize) -> CooGraph {
+    let shape = case % 6;
+    let n = match shape {
+        0 => 0,
+        _ => rng.range(1, 7),
+    };
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    if n > 0 && shape != 1 {
+        let active = if shape == 2 { 1.max(n.saturating_sub(2)) } else { n };
+        for _ in 0..rng.range(0, 3 * n + 1) {
+            let mut s = rng.below(active) as u32;
+            let mut t = rng.below(active) as u32;
+            if shape == 4 && rng.chance(0.5) {
+                t = s; // self-loop pressure
+            }
+            if shape == 5 {
+                // keep a fixed pair around so duplicates pile up
+                s = 0;
+                t = (active - 1) as u32;
+            }
+            edges.push((s, t));
+            if (shape == 3 || shape == 5) && rng.chance(0.5) {
+                edges.push((s, t)); // duplicate with its own features
+            }
+        }
+    }
+    let feat = |rng: &mut Rng, count: usize, scale: f64| -> Vec<f32> {
+        (0..count)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    0.0
+                } else {
+                    ((rng.f64() * 2.0 - 1.0) * scale) as f32
+                }
+            })
+            .collect()
+    };
+    let node_feat = feat(rng, n * in_dim, 2.0);
+    let edge_feat = feat(rng, edges.len() * f_edge, 1.0);
+    CooGraph {
+        n,
+        edges,
+        node_feat,
+        f_node: in_dim,
+        edge_feat,
+        f_edge,
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Live region bitwise; padding exactly zero on both sides
+/// (sign-insensitive, see module docs).
+fn outputs_match(dense: &[f32], sparse: &[f32], live: usize) -> bool {
+    dense.len() == sparse.len()
+        && bits_eq(&dense[..live], &sparse[..live])
+        && dense[live..].iter().all(|&v| v == 0.0)
+        && sparse[live..].iter().all(|&v| v == 0.0)
+}
+
+// ------------------------------------------------------------ component
+/// Dense comparator for the plain aggregations, written the way the
+/// dense reference's matmul walks a padded adjacency row: ascending j,
+/// skipping exact zeros.
+fn dense_aggregate(agg: &Aggregate, d: &DenseGraph, h: &[f32], w: usize) -> Vec<f32> {
+    let n = d.n_real;
+    let mut out = vec![0.0f32; n * w];
+    for i in 0..n {
+        match agg {
+            Aggregate::Sum | Aggregate::Mean => {
+                for j in 0..n {
+                    let av = d.adj_at(i, j);
+                    if av != 0.0 {
+                        for k in 0..w {
+                            out[i * w + k] += av * h[j * w + k];
+                        }
+                    }
+                }
+                if matches!(agg, Aggregate::Mean) {
+                    let mut deg = 0.0f32;
+                    for j in 0..d.n_max {
+                        deg += d.adj_at(i, j);
+                    }
+                    let dv = deg.max(1.0);
+                    for k in 0..w {
+                        out[i * w + k] /= dv;
+                    }
+                }
+            }
+            Aggregate::Max | Aggregate::Min => {
+                let mut any = false;
+                for j in 0..n {
+                    if d.adj_at(i, j) != 0.0 {
+                        for k in 0..w {
+                            let v = h[j * w + k];
+                            let slot = &mut out[i * w + k];
+                            if !any {
+                                *slot = v;
+                            } else if matches!(agg, Aggregate::Max) {
+                                *slot = slot.max(v);
+                            } else {
+                                *slot = slot.min(v);
+                            }
+                        }
+                        any = true;
+                    }
+                }
+            }
+            _ => unreachable!("comparator covers the plain aggregations"),
+        }
+    }
+    out
+}
+
+/// Dense GCN-norm comparator: the reference's `gcn_norm_adj` + matmul,
+/// restricted to the real rows (padded rows cannot reach them).
+fn dense_gcn_norm(d: &DenseGraph, h: &[f32], w: usize) -> Vec<f32> {
+    let nm = d.n_max;
+    let mut a_hat: Vec<f32> = d.adj.clone();
+    for i in 0..nm {
+        a_hat[i * nm + i] += d.mask[i];
+    }
+    let mut isq = vec![0.0f32; nm];
+    for i in 0..nm {
+        let deg: f32 = a_hat[i * nm..(i + 1) * nm].iter().sum();
+        if deg > 0.0 {
+            isq[i] = 1.0 / deg.max(1e-12).sqrt();
+        }
+    }
+    for i in 0..nm {
+        for j in 0..nm {
+            a_hat[i * nm + j] *= isq[i] * isq[j];
+        }
+    }
+    let n = d.n_real;
+    let mut out = vec![0.0f32; n * w];
+    for i in 0..n {
+        for j in 0..n {
+            let av = a_hat[i * nm + j];
+            if av != 0.0 {
+                for k in 0..w {
+                    out[i * w + k] += av * h[j * w + k];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_sparse_aggregation_matches_dense_matmul() {
+    forall("agg-vs-dense", 200, 0xA66, |rng| {
+        let w = rng.range(1, 5);
+        let case = rng.below(6);
+        let g = adversarial_graph(rng, case, 1, 0);
+        let n = g.n;
+        let h: Vec<f32> = (0..n * w)
+            .map(|_| ((rng.f64() * 4.0 - 2.0) * 1.5) as f32)
+            .collect();
+        let d = DenseGraph::from_coo(&g, n.max(1) + rng.range(0, 3), false)
+            .map_err(|e| e.to_string())?;
+        for agg in [
+            Aggregate::Sum,
+            Aggregate::Mean,
+            Aggregate::Max,
+            Aggregate::Min,
+            Aggregate::GcnNorm,
+        ] {
+            let sparse = interp::run_aggregate(&agg, &g, &h, w, None)
+                .map_err(|e| e.to_string())?;
+            let dense = if matches!(agg, Aggregate::GcnNorm) {
+                dense_gcn_norm(&d, &h, w)
+            } else {
+                dense_aggregate(&agg, &d, &h, w)
+            };
+            prop_assert!(
+                bits_eq(&sparse, &dense),
+                "{agg:?} diverges on n={n} edges={:?}\n sparse {sparse:?}\n dense  {dense:?}",
+                g.edges
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- model
+#[test]
+fn prop_every_kind_bit_identical_to_dense_reference() {
+    let kinds: &[(&str, bool)] = &[
+        ("gcn", false),
+        ("sgc", false),
+        ("gin", false),
+        ("gin_vn", false),
+        ("gat", false),
+        ("pna", false),
+        ("sage", false),
+        ("dgn", false),
+        ("dgn", true), // node-level: padded output contract
+    ];
+    forall("plan-vs-dense-forward", 60, 0xB17E, |rng| {
+        let case = rng.below(6);
+        for &(name, node_level) in kinds {
+            let meta = tiny_meta(name, node_level);
+            let f_edge = if name.starts_with("gin") { 3 } else { 0 };
+            let g = adversarial_graph(rng, case, meta.in_dim, f_edge);
+            let n = g.n;
+            let seed = rng.below(1 << 31) as u64;
+            let reference = DenseRef::build(&meta, seed).map_err(|e| e.to_string())?;
+            let native = NativeModel::build(&meta, seed).map_err(|e| e.to_string())?;
+            let mut d = DenseGraph::from_coo(&g, meta.n_max, meta.needs_edge_attr())
+                .map_err(|e| e.to_string())?;
+            let eig = if meta.needs_eig() {
+                let mut e = vec![0.0f32; meta.n_max];
+                for slot in e.iter_mut().take(n) {
+                    *slot = (rng.f64() * 2.0 - 1.0) as f32;
+                }
+                d.eig.copy_from_slice(&e);
+                Some(e)
+            } else {
+                None
+            };
+            let want = reference.forward(&d).map_err(|e| e.to_string())?;
+            let batch = GraphBatch::ingest(g).map_err(|e| e.to_string())?;
+            let got = native
+                .forward_batch(&batch, eig.as_deref())
+                .map_err(|e| e.to_string())?;
+            let live = if node_level { n * meta.out_dim } else { meta.out_dim };
+            prop_assert!(
+                outputs_match(&want, &got, live),
+                "{name} (node_level={node_level}) diverges on n={n} \
+                 edges={:?}\n dense  {:?}\n sparse {:?}",
+                batch.graph.edges,
+                &want[..want.len().min(8)],
+                &got[..got.len().min(8)]
+            );
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- fixture
+#[test]
+fn every_manifest_model_bit_identical_on_its_golden_graph() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let mut engine = Engine::load(&artifacts, &[]).expect("compile all");
+    for meta in artifacts.models.clone() {
+        let golden = Golden::load(&meta).unwrap();
+        let reference = DenseRef::build(&meta, artifacts.weight_seed).unwrap();
+        let batch = GraphBatch::ingest(golden.graph.clone()).unwrap();
+        let mut pack = InputPack::new(&meta);
+        pack.fill(&batch, golden.eig.as_deref()).unwrap();
+        let want = reference.forward(pack.dense()).unwrap();
+        let got = engine
+            .infer_with_eig(&meta.name, &golden.graph, golden.eig.as_deref())
+            .unwrap();
+        let live = if meta.node_level {
+            golden.graph.n * meta.out_dim
+        } else {
+            meta.out_dim
+        };
+        assert!(
+            outputs_match(&want, &got, live),
+            "{}: plan interpreter diverges from the dense reference on \
+             its golden graph\n dense  {:?}\n sparse {:?}",
+            meta.name,
+            &want[..want.len().min(6)],
+            &got[..got.len().min(6)]
+        );
+    }
+}
+
+/// Every manifest model lowers to a validating plan whose JSON dump
+/// round-trips through the crate's own parser — the Rust side of the
+/// CI plan-coverage job.
+#[test]
+fn every_manifest_model_lowers_and_dumps() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    for meta in &artifacts.models {
+        let plan = lower(meta, artifacts.weight_seed)
+            .unwrap_or_else(|e| panic!("{}: no plan: {e:#}", meta.name));
+        plan.validate()
+            .unwrap_or_else(|e| panic!("{}: invalid plan: {e:#}", meta.name));
+        let text = plan.render_text().unwrap();
+        assert!(text.contains(&meta.name), "{}: dump lacks name", meta.name);
+        let json = plan.to_json().unwrap().to_string_pretty();
+        let parsed = gengnn::util::json::Json::parse(&json)
+            .unwrap_or_else(|e| panic!("{}: dump not valid JSON: {e:#}", meta.name));
+        assert_eq!(
+            parsed.get("model").unwrap().as_str().unwrap(),
+            meta.name,
+            "dump names the wrong model"
+        );
+        let stages = parsed.get("stages").unwrap().as_arr().unwrap();
+        assert!(!stages.is_empty(), "{}: empty stage list", meta.name);
+        assert_eq!(
+            parsed.get("total_params").unwrap().as_usize().unwrap(),
+            plan.param_count()
+        );
+        // Width chaining is part of the dump contract.
+        let mut prev_out: Option<usize> = None;
+        for s in stages {
+            let in_w = s.get("in_width").unwrap().as_usize().unwrap();
+            let out_w = s.get("out_width").unwrap().as_usize().unwrap();
+            if let Some(p) = prev_out {
+                assert_eq!(p, in_w, "{}: stage widths do not chain", meta.name);
+            }
+            prev_out = Some(out_w);
+        }
+        assert_eq!(prev_out, Some(meta.out_dim), "{}: tail width", meta.name);
+    }
+}
