@@ -3,8 +3,8 @@
 # Tier-1 verify (what CI gates on):      make check
 # Full artifact regeneration (needs jax): make artifacts
 
-.PHONY: build test check fmt clippy artifacts artifacts-golden bench-snapshot \
-	serve loadgen check-artifacts check-plans clean
+.PHONY: build test check fmt clippy doc artifacts artifacts-golden \
+	bench-snapshot serve loadgen check-artifacts check-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -21,7 +21,12 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-check: build test fmt clippy
+# Rustdoc with warnings promoted to errors, so intra-doc links (the
+# module-contract cross-references docs/ relies on) stay live.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p gengnn
+
+check: build test fmt clippy doc
 
 # Full artifact set: HLO text + goldens + manifest (Layer 2 lowering).
 artifacts:

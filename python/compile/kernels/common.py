@@ -1,6 +1,7 @@
 """Shared Pallas tiling utilities for the GenGNN kernels.
 
-Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+Hardware-adaptation note (see docs/ARCHITECTURE.md and rust/README.md
+"Three layers" for where these kernels sit in the stack): the paper's
 FPGA message-passing PE performs irregular per-edge scatter over CSR
 stored in BRAM. On a tiled-memory matrix machine the same O(N) on-chip
 message buffer becomes a VMEM-resident node-tile, and the gather
@@ -19,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-# Default tile sizes, chosen for the TPU-oriented accounting in DESIGN.md:
+# Default tile sizes for the TPU-oriented accounting (module docstring):
 # node tiles of 64 and feature tiles of 128 keep the largest per-step VMEM
 # working set (the [Tn, Tn, Tf] edge-embedding block in gin_gather) at
 # 64*64*128*4 B = 2 MiB and every matmul block MXU-shaped (128 lanes).

@@ -1,8 +1,9 @@
 """Layer-2 JAX forward passes for the six GenGNN models (paper Table 2).
 
-Every model operates on *dense padded* graph tensors (see DESIGN.md
-S-Hardware-Adaptation) and calls the Layer-1 Pallas kernels for its
-hot-spots. Weights are seeded-random constants baked in at lowering time
+Every model operates on *dense padded* graph tensors (the AOT artifact
+input contract -- see rust/README.md "Backends" and
+docs/ARCHITECTURE.md for how the Rust serving path relates to it) and
+calls the Layer-1 Pallas kernels for its hot-spots. Weights are seeded-random constants baked in at lowering time
 -- inference artifacts, matching the paper's fixed trained models.
 
 Input conventions (all float32, N = padded node capacity):

@@ -1,0 +1,351 @@
+#!/usr/bin/env python3
+"""Bit-exactness spec for fused micro-batch execution.
+
+The executor lanes merge N same-model requests into one block-diagonal
+graph and run the stage-IR interpreter **once**
+(`rust/src/graph/fused.rs` + the segmented core in
+`rust/src/runtime/interp.rs`), splitting the outputs back per request.
+The hard contract: fused outputs are bit-identical to executing every
+graph alone.
+
+This module is the executable cross-language spec of that contract,
+layered on `plan_replica.py` (the per-graph sparse interpreter spec,
+itself pinned bitwise to the dense reference): it re-implements the
+*fused* executor — offset-shifted edge concatenation, one in-neighbor
+view over the merged COO, per-segment pooling / virtual-node state /
+node-level splitting, per-node GAT `n_max` semantics, concatenated DGN
+eigenvector slices — in the same scalar-float32 operation order as the
+Rust segmented core, and asserts bitwise (u32-view) equality against
+the per-graph drivers over randomized batches covering the adversarial
+shapes (empty graphs, isolated nodes, duplicate edges, self-loops).
+
+The argument it validates is the one `interp.rs` relies on: shifting a
+graph's node ids by a constant relocates its in-neighbor rows without
+changing their order, degrees, dedup, or edge-feature bindings, so
+every per-node float accumulation is unchanged; only readout and
+virtual-node stages need to know where one graph ends and the next
+begins.
+
+Run:  python3 python/tools/fused_replica.py [--cases N] [--seed S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+
+import numpy as np
+
+from plan_replica import (
+    EPS_GIN,
+    F,
+    ONE,
+    Nbrs,
+    ZERO,
+    bits,
+    build_weights,
+    dgn_context,
+    elu_inplace,
+    l2_normalize_rows,
+    linear,
+    random_graph,
+    relu,
+    s_gcn_norm,
+    sparse_agg_dgn,
+    sparse_agg_edge_relu_sum,
+    sparse_agg_gcn,
+    sparse_agg_mean,
+    sparse_agg_pna,
+    sparse_agg_sum,
+    sparse_dgn,
+    sparse_edge_attention,
+    sparse_gat,
+    sparse_gcn,
+    sparse_gin,
+    sparse_pna,
+    sparse_sage,
+    sparse_sgc,
+)
+
+
+# ------------------------------------------------------------------ fuse
+def fuse_graphs(graphs):
+    """Replica of `FusedBatch::fuse`: block-diagonal merge with a
+    per-graph (node_offset, n, edge_offset, e) segment table."""
+    in_dim = graphs[0][3]
+    edge_dim = graphs[0][5]
+    segs, edges_f, xs, efs = [], [], [], []
+    node_off, edge_off = 0, 0
+    for n, edges, x, fin, ef, fe in graphs:
+        assert fin == in_dim and fe == edge_dim
+        segs.append((node_off, n, edge_off, len(edges)))
+        edges_f.extend((s + node_off, t + node_off) for s, t in edges)
+        xs.append(x.reshape(n, in_dim))
+        efs.append(ef.reshape(len(edges), edge_dim))
+        node_off += n
+        edge_off += len(edges)
+    x = (
+        np.concatenate(xs, axis=0)
+        if xs
+        else np.zeros((0, in_dim), dtype=F)
+    ).astype(F)
+    ef = (
+        np.concatenate(efs, axis=0)
+        if efs
+        else np.zeros((0, edge_dim), dtype=F)
+    ).astype(F)
+    return node_off, edges_f, x, ef, segs
+
+
+def pool_segments(h, segs):
+    """Replica of interp.rs `pool_segments`: per segment, sum rows in
+    ascending order, divide by max(n, 1)."""
+    out = np.zeros((len(segs), h.shape[1]), dtype=F)
+    for si, (off, n, _eo, _e) in enumerate(segs):
+        denom = np.maximum(F(n), ONE)
+        acc = np.zeros(h.shape[1], dtype=F)
+        for i in range(off, off + n):
+            acc = acc + h[i]
+        out[si] = acc / denom
+    return out
+
+
+def split_node_level(h, segs, n_max):
+    """Per segment: copy the live rows, pad to n_max with +0.0."""
+    outs = []
+    for off, n, _eo, _e in segs:
+        out = np.zeros((n_max, h.shape[1]), dtype=F)
+        out[:n] = h[off : off + n]
+        outs.append(out.reshape(-1))
+    return outs
+
+
+# -------------------------------------------------- fused model drivers
+# Mirrors of plan_replica's per-graph sparse drivers, run once over the
+# fused graph with segment-aware readout / virtual-node stages.
+
+
+def fused_gcn(ws, layers, node_level, n_max, fused):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    inv_sqrt = s_gcn_norm(nbrs, n)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        hw = linear(h, *ws["convs"][li])
+        h = sparse_agg_gcn(nbrs, n, inv_sqrt, hw)
+        if li + 1 < layers:
+            h = relu(h)
+    if node_level:
+        return split_node_level(linear(h, *ws["head"]), segs, n_max)
+    p = linear(pool_segments(h, segs), *ws["head"])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_sgc(ws, layers, fused):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    inv_sqrt = s_gcn_norm(nbrs, n)
+    h = x.astype(F)
+    for _ in range(layers):
+        h = sparse_agg_gcn(nbrs, n, inv_sqrt, h)
+    h = linear(h, *ws["w"], "relu")
+    p = linear(pool_segments(h, segs), *ws["head"])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_gin(ws, layers, fused, vn_on):
+    n, edges, x, edge_feat, segs = fused
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    # Virtual-node state is per segment (one vector per source graph).
+    vns = [ws["vn0"].copy() for _ in segs] if vn_on else None
+    for li in range(layers):
+        if vns is not None:
+            for (off, sn, _eo, _e), vn in zip(segs, vns):
+                for i in range(off, off + sn):
+                    h[i] = h[i] + vn
+        we, be = ws["bond"][li]
+        m = sparse_agg_edge_relu_sum(nbrs, n, h, edge_feat, we, be)
+        z = (ONE + EPS_GIN) * h + m
+        (w1, b1), (w2, b2) = ws["mlps"][li]
+        h = linear(linear(z, w1, b1, "relu"), w2, b2, "relu")
+        if vns is not None and li + 1 < layers:
+            (w1, b1), (w2, b2) = ws["vn_mlps"][li]
+            # Stacked per-segment accumulators through one
+            # row-independent MLP evaluation — as the Rust core does.
+            gacc = np.zeros((len(segs), h.shape[1]), dtype=F)
+            for si, ((off, sn, _eo, _e), vn) in enumerate(zip(segs, vns)):
+                acc = vn.copy()
+                for i in range(off, off + sn):
+                    acc = acc + h[i]
+                gacc[si] = acc
+            upd = linear(linear(gacc, w1, b1, "relu"), w2, b2, "relu")
+            vns = [upd[si].copy() for si in range(len(segs))]
+    p = linear(pool_segments(h, segs), *ws["head"])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_gat(ws, layers, heads, n_max, fused):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        w, b, a_src, a_dst = ws["convs"][li]
+        z = linear(h, w, b)
+        # n_max is the *model* capacity: the softmax -1e9 seeding is a
+        # per-node rule, so the fused pass uses the same value every
+        # per-graph pass does.
+        h = sparse_edge_attention(nbrs, n, n_max, z, a_src, a_dst, heads)
+        if li + 1 < layers:
+            h = elu_inplace(h)
+    p = linear(pool_segments(h, segs), *ws["head"])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_pna(ws, layers, fused):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_pna(nbrs, n, h)
+        up = linear(m, *ws["convs"][li], "relu")
+        h = up + h
+    p = pool_segments(h, segs)
+    p = linear(p, *ws["head"][0], "relu")
+    p = linear(p, *ws["head"][1], "relu")
+    p = linear(p, *ws["head"][2])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_sage(ws, layers, fused):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_mean(nbrs, n, h)
+        (wsf, bsf), (wn, bn) = ws["convs"][li]
+        h = linear(h, wsf, bsf) + linear(m, wn, bn)
+        if li + 1 < layers:
+            h = relu(h)
+        h = l2_normalize_rows(h)
+    p = linear(pool_segments(h, segs), *ws["head"])
+    return [p[s] for s in range(len(segs))]
+
+
+def fused_dgn(ws, layers, node_level, n_max, fused, eig_f):
+    n, edges, x, _ef, segs = fused
+    nbrs = Nbrs(n, edges)
+    ctx = dgn_context(nbrs, n, eig_f[:n])
+    h = linear(x, *ws["embed"], "relu")
+    for li in range(layers):
+        m = sparse_agg_dgn(nbrs, n, ctx, h)
+        up = linear(m, *ws["convs"][li], "relu")
+        h = up + h
+
+    def apply_head(t):
+        t = linear(t, *ws["head"][0], "relu")
+        t = linear(t, *ws["head"][1], "relu")
+        return linear(t, *ws["head"][2])
+
+    if node_level:
+        return split_node_level(apply_head(h), segs, n_max)
+    p = apply_head(pool_segments(h, segs))
+    return [p[s] for s in range(len(segs))]
+
+
+# ---------------------------------------------------------------- driver
+def run(cases: int, seed: int) -> None:
+    rng = random.Random(seed)
+    n_max, in_dim, d, layers, heads, edge_dim = 8, 4, 8, 2, 2, 3
+    kinds = ["gcn", "sgc", "gin", "gin_vn", "gat", "pna", "sage", "dgn", "dgn_node"]
+    shapes = [None, "empty_nodes", "no_edges", "isolated", "dups", "self_loops"]
+    checked = 0
+    for case in range(cases):
+        # A batch of 2–5 graphs, one forced into an adversarial shape so
+        # every batch crosses at least one boundary case.
+        k = rng.randint(2, 5)
+        graphs = [
+            random_graph(
+                rng,
+                in_dim,
+                edge_dim,
+                n_max,
+                force=shapes[case % len(shapes)] if gi == 0 else None,
+            )
+            for gi in range(k)
+        ]
+        # Per-graph eigs padded to n_max (the prep-stage contract) and
+        # their fused concatenation of the live slices.
+        eigs = []
+        for g in graphs:
+            e = np.zeros(n_max, dtype=F)
+            for i in range(g[0]):
+                e[i] = F(rng.uniform(-1, 1) if rng.random() < 0.8 else 0.0)
+            eigs.append(e)
+        fused = fuse_graphs(graphs)
+        eig_f = np.zeros(max(fused[0], 1), dtype=F)
+        for (off, sn, _eo, _e), e in zip(fused[4], eigs):
+            eig_f[off : off + sn] = e[:sn]
+        wseed = rng.randrange(0, 2**31)
+        for kind in kinds:
+            node_level = kind == "dgn_node"
+            base = "dgn" if node_level else kind
+            out_dim = 3 if node_level else 1
+            ws = build_weights(
+                base, wseed, in_dim, d, layers, heads, edge_dim, out_dim
+            )
+            if base == "gcn":
+                seq = [sparse_gcn(ws, layers, False, n_max, g) for g in graphs]
+                fus = fused_gcn(ws, layers, False, n_max, fused)
+            elif base == "sgc":
+                seq = [sparse_sgc(ws, layers, False, n_max, g) for g in graphs]
+                fus = fused_sgc(ws, layers, fused)
+            elif base in ("gin", "gin_vn"):
+                vn_on = base == "gin_vn"
+                seq = [sparse_gin(ws, layers, g, vn_on) for g in graphs]
+                fus = fused_gin(ws, layers, fused, vn_on)
+            elif base == "gat":
+                seq = [sparse_gat(ws, layers, heads, n_max, g) for g in graphs]
+                fus = fused_gat(ws, layers, heads, n_max, fused)
+            elif base == "pna":
+                seq = [sparse_pna(ws, layers, g) for g in graphs]
+                fus = fused_pna(ws, layers, fused)
+            elif base == "sage":
+                seq = [sparse_sage(ws, layers, g) for g in graphs]
+                fus = fused_sage(ws, layers, fused)
+            else:  # dgn / dgn_node
+                seq = [
+                    sparse_dgn(ws, layers, node_level, n_max, g, e)
+                    for g, e in zip(graphs, eigs)
+                ]
+                fus = fused_dgn(ws, layers, node_level, n_max, fused, eig_f)
+            assert len(seq) == len(fus) == k
+            for gi, (a, b) in enumerate(zip(seq, fus)):
+                a = np.asarray(a, dtype=F).reshape(-1)
+                b = np.asarray(b, dtype=F).reshape(-1)
+                if a.shape != b.shape or bits(a) != bits(b):
+                    diff = [
+                        (i, float(x), float(y))
+                        for i, (x, y) in enumerate(zip(a, b))
+                        if F(x).view(np.uint32) != F(y).view(np.uint32)
+                    ]
+                    raise SystemExit(
+                        f"FAIL case {case} kind {kind} graph {gi}/{k}: "
+                        f"n={graphs[gi][0]} edges={graphs[gi][1]} "
+                        f"wseed={wseed}\nfirst diffs: {diff[:5]}"
+                    )
+                checked += 1
+        if (case + 1) % 6 == 0:
+            print(f"  {case + 1}/{cases} batches, {checked} outputs bit-equal")
+    print(
+        f"OK: {checked} fused-vs-sequential outputs bit-identical "
+        f"({cases} batches x {len(kinds)} kinds)"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cases", type=int, default=36)
+    ap.add_argument("--seed", type=int, default=20260731)
+    args = ap.parse_args()
+    run(args.cases, args.seed)

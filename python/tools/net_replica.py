@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """No-toolchain validation harness for `rust/src/net/`: a Python
-replica speaking the exact wire format (see the frame layout in
-`rust/src/net/proto.rs`) with the same thread topology -- accept loop,
+replica speaking the exact wire format (normative spec:
+`docs/WIRE_PROTOCOL.md`; implementation: `rust/src/net/proto.rs`)
+with the same thread topology -- accept loop,
 per-connection reader/writer threads, response demux with try-send
 drop-on-full outboxes, bounded ingest queue, executor lanes -- and the
 same open-loop loadgen structure (scheduled arrivals, pending map,

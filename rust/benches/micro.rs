@@ -129,6 +129,68 @@ fn main() {
         Err(_) => println!("(artifacts missing — skipping plan-vs-legacy benches)"),
     }
 
+    section("fused micro-batches (one block-diagonal pass vs per-request)");
+    match Artifacts::load(Artifacts::default_dir()) {
+        Ok(artifacts) => {
+            // Same k graphs through the engine twice: once as k
+            // per-request passes, once merged into a single fused
+            // interpreter pass — the amortization the lane executor
+            // buys with `fuse_max_graphs` (outputs bit-identical).
+            for name in ["gcn", "gin", "dgn"] {
+                let meta = artifacts.model(name).unwrap().clone();
+                let mut engine = Engine::load(&artifacts, &[name]).unwrap();
+                for k in [2usize, 8] {
+                    let batches: Vec<GraphBatch> = (0..k as u64)
+                        .map(|i| {
+                            GraphBatch::ingest_unchecked(molecular::molecular_graph(
+                                &mut Rng::new(500 + i),
+                                &MolConfig::molhiv(),
+                            ))
+                        })
+                        .collect();
+                    let eigs: Vec<Option<Vec<f32>>> = batches
+                        .iter()
+                        .map(|b| {
+                            meta.needs_eig().then(|| {
+                                let mut e = vec![0.0f32; meta.n_max];
+                                let r = b.fiedler(400, 1e-9);
+                                e[..b.n()].copy_from_slice(&r.vector);
+                                e
+                            })
+                        })
+                        .collect();
+                    let parts: Vec<&GraphBatch> = batches.iter().collect();
+                    let eig_refs: Vec<Option<&[f32]>> =
+                        eigs.iter().map(|e| e.as_deref()).collect();
+                    black_box(engine.infer_fused(name, &parts, &eig_refs).unwrap());
+                    results.push(bench(
+                        &format!("sequential_batch/{name}/{k}"),
+                        q(5),
+                        q(50),
+                        || {
+                            let mut acc = 0.0f32;
+                            for (b, e) in batches.iter().zip(&eig_refs) {
+                                acc += engine.infer_batch(name, b, *e).unwrap()[0];
+                            }
+                            black_box(acc)
+                        },
+                    ));
+                    results.push(bench(
+                        &format!("fused_batch/{name}/{k}"),
+                        q(5),
+                        q(50),
+                        || {
+                            black_box(
+                                engine.infer_fused(name, &parts, &eig_refs).unwrap()[0][0],
+                            )
+                        },
+                    ));
+                }
+            }
+        }
+        Err(_) => println!("(artifacts missing — skipping fused-batch benches)"),
+    }
+
     section("executor pool (lane scaling over a fixed request stream)");
     match Artifacts::load(Artifacts::default_dir()) {
         Ok(_) => {

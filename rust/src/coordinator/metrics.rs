@@ -86,6 +86,12 @@ pub struct Metrics {
     started: Instant,
     rejected: AtomicU64,
     net: NetCounters,
+    /// Fused interpreter passes executed (each covering ≥ 2 requests).
+    fused_batches: AtomicU64,
+    /// Requests served through a fused pass (subset of completed).
+    fused_graphs: AtomicU64,
+    /// Size of the most recent fused batch (gauge; 0 before any fuse).
+    last_fused_size: AtomicU64,
     /// End-to-end latency of every completed request, log-bucketed so
     /// the distribution stays bounded under production-length streams.
     e2e: LatencyHistogram,
@@ -111,6 +117,9 @@ impl Metrics {
             started: Instant::now(),
             rejected: AtomicU64::new(0),
             net: NetCounters::default(),
+            fused_batches: AtomicU64::new(0),
+            fused_graphs: AtomicU64::new(0),
+            last_fused_size: AtomicU64::new(0),
             e2e: LatencyHistogram::new(),
         }
     }
@@ -173,6 +182,30 @@ impl Metrics {
 
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one fused interpreter pass covering `graphs` requests
+    /// (the executor lane calls this once per block-diagonal batch).
+    pub fn record_fused(&self, graphs: u64) {
+        self.fused_batches.fetch_add(1, Ordering::Relaxed);
+        self.fused_graphs.fetch_add(graphs, Ordering::Relaxed);
+        self.last_fused_size.store(graphs, Ordering::Relaxed);
+    }
+
+    /// Fused interpreter passes executed so far.
+    pub fn fused_batches(&self) -> u64 {
+        self.fused_batches.load(Ordering::Relaxed)
+    }
+
+    /// Requests served through a fused pass (subset of completed).
+    pub fn fused_graphs(&self) -> u64 {
+        self.fused_graphs.load(Ordering::Relaxed)
+    }
+
+    /// Size of the most recent fused batch (the fused-batch-size
+    /// gauge; 0 until the first fuse).
+    pub fn last_fused_size(&self) -> u64 {
+        self.last_fused_size.load(Ordering::Relaxed)
     }
 
     pub fn rejected(&self) -> u64 {
@@ -262,6 +295,17 @@ impl Metrics {
                 fmt_secs(l.busy_secs),
             ));
         }
+        let fb = self.fused_batches();
+        if fb > 0 {
+            let fg = self.fused_graphs();
+            out.push_str(&format!(
+                "fused: {} batches / {} graphs (avg {:.1}, last {})\n",
+                fb,
+                fg,
+                fg as f64 / fb as f64,
+                self.last_fused_size(),
+            ));
+        }
         if !self.e2e.is_empty() {
             out.push_str(&format!("e2e latency: {}\n", self.e2e.render_quantiles()));
         }
@@ -315,6 +359,20 @@ mod tests {
         let r = m.render();
         assert!(r.contains("gat") && r.contains("dgn"));
         assert!(r.contains("throughput"));
+    }
+
+    #[test]
+    fn fused_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        assert!(!m.render().contains("fused:"), "no fused line before use");
+        m.record_fused(4);
+        m.record_fused(2);
+        assert_eq!(m.fused_batches(), 2);
+        assert_eq!(m.fused_graphs(), 6);
+        assert_eq!(m.last_fused_size(), 2);
+        let r = m.render();
+        assert!(r.contains("fused: 2 batches / 6 graphs"), "{r}");
+        assert!(r.contains("last 2"), "{r}");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! * [`router`]       — model routing + envelope validation
 //! * [`batcher`]      — dispatch batching (same-model runs)
 //! * [`scheduler`]    — the sharded executor pool: dispatcher + N
-//!   parallel lanes (one engine each) with work stealing
+//!   parallel lanes (one engine each) with work stealing and fused
+//!   micro-batch execution (`fuse_max_graphs`)
 //! * [`backpressure`] — admission policies for the bounded ingest queue
 //! * [`metrics`]      — latency/throughput accounting, sharded per
 //!   model, plus per-lane execution counters

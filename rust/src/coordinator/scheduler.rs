@@ -22,6 +22,15 @@
 //!   is what makes N-lane output bit-identical to 1-lane output.
 //! * When a lane's own queue runs dry it **steals** a batch from a
 //!   sibling queue, so a single hot model still scales across lanes.
+//! * With `fuse_max_graphs ≥ 2`, a lane executes each same-model
+//!   dispatch batch as **fused micro-batches**: up to `fuse_max_graphs`
+//!   requests merged into one block-diagonal graph
+//!   ([`crate::graph::FusedBatch`]) and run through a single
+//!   interpreter pass, amortizing per-request dispatch overhead.
+//!   Outputs are split back per request, bit-identical to sequential
+//!   execution; any fusion error falls back to the per-request path so
+//!   error responses are also identical
+//!   (`rust/tests/fused_equivalence.rs`).
 //!
 //! Ordering contract: responses preserve nothing beyond per-request
 //! integrity — with more than one lane, same-model requests may
@@ -33,6 +42,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::graph::GraphBatch;
 use crate::runtime::{Artifacts, Engine};
 use crate::util::pool::{Channel, RecvTimeout};
 
@@ -111,9 +121,11 @@ pub fn spawn_executor_pool(
     responses_tx: Channel<Response>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
+    fuse_max_graphs: usize,
     ready: Channel<Result<(), String>>,
 ) -> Vec<JoinHandle<()>> {
     let lanes = lanes.max(1);
+    let fuse_max = fuse_max_graphs.max(1);
     metrics.register_lanes(lanes);
     // Scale batch size and lane-queue depth with the configured
     // backpressure bound so the pool parks at most ~queue_capacity
@@ -149,6 +161,7 @@ pub fn spawn_executor_pool(
                         responses_tx,
                         metrics,
                         counters,
+                        fuse_max,
                         lane_ready,
                     )
                 })
@@ -239,7 +252,8 @@ fn dispatch(batch: Vec<Prepared>, home: usize, queues: &[Channel<Vec<Prepared>>]
 }
 
 /// One executor lane: compile an engine, then serve batches — own
-/// queue first, stealing from siblings when dry.
+/// queue first, stealing from siblings when dry. Batches execute in
+/// fused chunks of up to `fuse_max` requests (1 = per-request).
 #[allow(clippy::too_many_arguments)]
 fn run_lane(
     lane: usize,
@@ -249,6 +263,7 @@ fn run_lane(
     responses_tx: Channel<Response>,
     metrics: Arc<Metrics>,
     counters: Arc<LaneCounters>,
+    fuse_max: usize,
     ready: Channel<Result<(), String>>,
 ) {
     let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
@@ -285,8 +300,16 @@ fn run_lane(
             }
         };
         park = STEAL_POLL;
-        if execute_batch(&mut engine, batch, stolen, &responses_tx, &metrics, &counters)
-            .is_err()
+        if execute_batch(
+            &mut engine,
+            batch,
+            stolen,
+            fuse_max,
+            &responses_tx,
+            &metrics,
+            &counters,
+        )
+        .is_err()
         {
             return; // response consumer gone
         }
@@ -294,7 +317,17 @@ fn run_lane(
     // Own queue closed and drained: sweep any leftovers still parked on
     // sibling queues (their owners may be mid-batch), then exit.
     while let Some(b) = steal(lane, &queues) {
-        if execute_batch(&mut engine, b, true, &responses_tx, &metrics, &counters).is_err() {
+        if execute_batch(
+            &mut engine,
+            b,
+            true,
+            fuse_max,
+            &responses_tx,
+            &metrics,
+            &counters,
+        )
+        .is_err()
+        {
             return;
         }
     }
@@ -311,49 +344,116 @@ fn steal(lane: usize, queues: &[Channel<Vec<Prepared>>]) -> Option<Vec<Prepared>
     None
 }
 
+/// Attempt one fused interpreter pass over a same-model chunk.
+/// `None` means the fused path declined — mixed models (defensive;
+/// the batcher emits same-model batches), a non-native backend, or any
+/// fusion/validation error — and the caller falls back to per-request
+/// execution, whose results and error strings are the per-request
+/// contract.
+fn try_fuse(engine: &mut Engine, chunk: &[Prepared]) -> Option<(Vec<Vec<f32>>, Duration)> {
+    let model = &chunk[0].model;
+    if chunk.iter().any(|p| &p.model != model) {
+        return None;
+    }
+    let parts: Vec<&GraphBatch> = chunk.iter().map(|p| &p.batch).collect();
+    let eigs: Vec<Option<&[f32]>> = chunk.iter().map(|p| p.eig.as_deref()).collect();
+    let t0 = Instant::now();
+    let outs = engine.infer_fused(model, &parts, &eigs).ok()?;
+    (outs.len() == chunk.len()).then(|| (outs, t0.elapsed()))
+}
+
 /// Execute one dispatch batch on this lane's engine, recording metrics
-/// and lane counters. `Err(())` means the response channel closed; the
-/// counters still cover every request actually executed, so they stay
-/// reconciled with `Metrics::record` even on that abnormal path.
+/// and lane counters. Chunks of up to `fuse_max` same-model requests
+/// run as one fused interpreter pass (falling back to per-request
+/// execution whenever fusion declines). `Err(())` means the response
+/// channel closed; the counters still cover every request actually
+/// executed, so they stay reconciled with `Metrics::record` even on
+/// that abnormal path.
 fn execute_batch(
     engine: &mut Engine,
     batch: Vec<Prepared>,
     stolen: bool,
+    fuse_max: usize,
     responses_tx: &Channel<Response>,
     metrics: &Metrics,
     counters: &LaneCounters,
 ) -> Result<(), ()> {
+    let mut batch = batch;
     let mut done = 0u64;
     let mut exec_ns = 0u64;
     let mut result = Ok(());
-    for p in batch {
-        let exec_start = Instant::now();
-        let out = engine
-            .infer_batch(&p.model, &p.batch, p.eig.as_deref())
-            .map_err(|e| format!("{e:#}"));
-        let completed = Instant::now();
-        let exec_time = completed.duration_since(exec_start);
-        let resp = Response {
-            id: p.id,
-            model: p.model,
-            output: out,
-            submitted: p.submitted,
-            completed,
-        };
-        metrics.record(
-            &resp.model,
-            resp.latency(),
-            exec_time.as_secs_f64(),
-            resp.is_ok(),
-        );
-        done += 1;
-        // Busy time is pure execute time — deliberately excluding the
-        // (possibly blocking) response send, so a slow consumer shows
-        // up as idle lanes, not busy ones.
-        exec_ns += exec_time.as_nanos() as u64;
-        if responses_tx.send(resp).is_err() {
-            result = Err(()); // response consumer gone
-            break;
+    'drain: while !batch.is_empty() {
+        let take = fuse_max.max(1).min(batch.len());
+        let chunk: Vec<Prepared> = batch.drain(..take).collect();
+        if take >= 2 {
+            if let Some((outs, dur)) = try_fuse(engine, &chunk) {
+                metrics.record_fused(take as u64);
+                let completed = Instant::now();
+                // One pass served `take` requests: attribute the
+                // amortized share to each so per-model mean_exec stays
+                // the per-request execution cost.
+                let per_req = dur.as_secs_f64() / take as f64;
+                exec_ns += dur.as_nanos() as u64;
+                // The fused pass executed the *whole* chunk, so record
+                // every request before sending — a response consumer
+                // that disappears mid-chunk must not leave executed
+                // work uncounted (fused_graphs stays a subset of
+                // completed, and the lane counters stay reconciled).
+                let resps: Vec<Response> = chunk
+                    .into_iter()
+                    .zip(outs)
+                    .map(|(p, out)| Response {
+                        id: p.id,
+                        model: p.model,
+                        output: Ok(out),
+                        submitted: p.submitted,
+                        completed,
+                    })
+                    .collect();
+                for resp in &resps {
+                    metrics.record(&resp.model, resp.latency(), per_req, true);
+                }
+                done += take as u64;
+                for resp in resps {
+                    if responses_tx.send(resp).is_err() {
+                        result = Err(()); // response consumer gone
+                        break 'drain;
+                    }
+                }
+                continue;
+            }
+        }
+        // Per-request path: fusion disabled, single-request chunk, or
+        // the fused pass declined (its errors surface per request here).
+        for p in chunk {
+            let exec_start = Instant::now();
+            let out = engine
+                .infer_batch(&p.model, &p.batch, p.eig.as_deref())
+                .map_err(|e| format!("{e:#}"));
+            let completed = Instant::now();
+            let exec_time = completed.duration_since(exec_start);
+            let resp = Response {
+                id: p.id,
+                model: p.model,
+                output: out,
+                submitted: p.submitted,
+                completed,
+            };
+            metrics.record(
+                &resp.model,
+                resp.latency(),
+                exec_time.as_secs_f64(),
+                resp.is_ok(),
+            );
+            done += 1;
+            // Busy time is pure execute time — deliberately excluding
+            // the (possibly blocking) response send, so a slow consumer
+            // shows up as idle lanes, not busy ones.
+            exec_ns += exec_time.as_nanos() as u64;
+            if responses_tx.send(resp).is_err() {
+                result = Err(()); // response consumer gone
+                break 'drain;
+            }
         }
     }
     counters.executed.fetch_add(done, Ordering::Relaxed);
@@ -394,6 +494,7 @@ mod tests {
             responses.clone(),
             Arc::clone(&metrics),
             BatchPolicy::default(),
+            4,
             ready.clone(),
         );
         (prepared, responses, metrics, ready, handles)
@@ -452,6 +553,7 @@ mod tests {
             responses,
             metrics,
             BatchPolicy::default(),
+            1,
             ready.clone(),
         );
         match ready.recv() {
@@ -462,6 +564,57 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// Deterministic fused-vs-sequential check at the exact layer the
+    /// lane executes: `execute_batch` with `fuse_max = 4` over six
+    /// same-model requests must fuse two chunks (4 + 2), produce
+    /// bit-identical outputs to a `fuse_max = 1` run, and reconcile
+    /// the fused counters.
+    #[test]
+    fn execute_batch_fuses_chunks_bit_identically() {
+        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+            return;
+        };
+        let make_batch = || -> Vec<Prepared> {
+            (0..6u64)
+                .map(|i| {
+                    let g = molecular_graph(&mut Rng::new(40 + i), &MolConfig::molhiv());
+                    Prepared::new(Request::new(i, "gcn", g))
+                })
+                .collect()
+        };
+        let collect = |fuse_max: usize| {
+            let mut engine = Engine::load(&artifacts, &["gcn"]).unwrap();
+            let responses: Channel<Response> = Channel::bounded(16);
+            let metrics = Metrics::new();
+            metrics.register_lanes(1);
+            let counters = metrics.lane(0);
+            execute_batch(
+                &mut engine,
+                make_batch(),
+                false,
+                fuse_max,
+                &responses,
+                &metrics,
+                &counters,
+            )
+            .unwrap();
+            let mut out = std::collections::BTreeMap::new();
+            for _ in 0..6 {
+                let r = responses.try_recv().expect("response missing");
+                assert!(r.is_ok(), "{:?}", r.output);
+                out.insert(r.id, r.output.unwrap());
+            }
+            assert_eq!(counters.executed.load(Ordering::Relaxed), 6);
+            assert_eq!(metrics.total_completed(), 6);
+            (out, metrics.fused_batches(), metrics.fused_graphs())
+        };
+        let (fused_out, fb, fg) = collect(4);
+        let (seq_out, sb, sg) = collect(1);
+        assert_eq!(fused_out, seq_out, "fused outputs diverge from sequential");
+        assert_eq!((fb, fg), (2, 6), "expected 4+2 fused chunks");
+        assert_eq!((sb, sg), (0, 0), "fuse_max=1 must never fuse");
     }
 
     #[test]

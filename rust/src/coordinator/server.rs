@@ -18,6 +18,10 @@
 //! parallel message-passing lanes on the fabric: every lane compiles
 //! the same artifacts from the same seed, so lane count changes
 //! throughput, never outputs (see `rust/tests/lane_determinism.rs`).
+//! `fuse_max_graphs` is the second pure-throughput knob: lanes merge
+//! same-model dispatch batches into block-diagonal fused interpreter
+//! passes (the FlowGNN many-small-graphs amortization), bit-identical
+//! to per-request execution (`rust/tests/fused_equivalence.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -53,6 +57,12 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     pub admission: AdmissionPolicy,
     pub batch: BatchPolicy,
+    /// Max same-model requests an executor lane merges into one
+    /// block-diagonal fused interpreter pass (`1` disables fusion —
+    /// strictly per-request execution). Fused outputs are
+    /// bit-identical to per-request outputs, so this is a pure
+    /// throughput knob like `executor_lanes`.
+    pub fuse_max_graphs: usize,
 }
 
 impl Default for ServerConfig {
@@ -65,6 +75,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             admission: AdmissionPolicy::Block,
             batch: BatchPolicy::default(),
+            fuse_max_graphs: 8,
         }
     }
 }
@@ -173,6 +184,7 @@ impl Server {
             responses.clone(),
             Arc::clone(&metrics),
             cfg.batch,
+            cfg.fuse_max_graphs,
             ready.clone(),
         );
 

@@ -28,8 +28,11 @@ pub struct Csr {
 pub struct Csc {
     /// In-degree per node.
     pub degree: Vec<u32>,
+    /// Exclusive prefix sums of `degree` (len n+1).
     pub offsets: Vec<u32>,
+    /// Neighbor table — column-major concatenation of in-neighbors.
     pub neighbors: Vec<u32>,
+    /// Original COO edge index for each neighbor entry (edge data table).
     pub edge_idx: Vec<u32>,
 }
 

@@ -1,0 +1,300 @@
+//! Block-diagonal fusion of ingested graphs — the substrate of fused
+//! micro-batch execution.
+//!
+//! The dispatcher's batcher groups same-model requests, but until this
+//! module existed a lane still executed them one interpreter pass per
+//! request. [`FusedBatch::fuse`] merges N ingested [`GraphBatch`]es
+//! into **one** block-diagonal graph — offset-shifted COO edges,
+//! concatenated node/edge features, and an offset-shifted concatenation
+//! of the per-graph [`InNbrs`] views — plus a per-graph segment table,
+//! so the stage-IR interpreter (`runtime::interp`) can run the whole
+//! batch as a single pass and split the outputs back per request.
+//!
+//! **Bit-exactness contract:** fusion never changes an output bit
+//! relative to per-request execution. Each node's in-neighbor list in
+//! the fused view is its per-graph list shifted by a constant node
+//! offset, so neighbor *order* (ascending), deduplication (last COO
+//! occurrence wins), degrees, and therefore every accumulation order
+//! the interpreter walks are untouched; readout and virtual-node
+//! stages operate per segment. The equality of the shifted-concat view
+//! with a from-scratch conversion of the fused COO is pinned by the
+//! property tests below; fused-vs-sequential output equality across
+//! the model zoo is pinned by `rust/tests/fused_equivalence.rs`.
+
+use anyhow::{bail, Result};
+
+use super::batch::GraphBatch;
+use super::coo::CooGraph;
+use super::nbr::InNbrs;
+
+/// One source graph's slice of the fused index space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusedSegment {
+    /// First fused node index of this graph (its nodes occupy
+    /// `node_offset .. node_offset + n`).
+    pub node_offset: usize,
+    /// Node count of this graph.
+    pub n: usize,
+    /// First fused COO edge index of this graph.
+    pub edge_offset: usize,
+    /// Directed edge count of this graph.
+    pub e: usize,
+}
+
+impl FusedSegment {
+    /// The segment's node range in the fused index space.
+    pub fn nodes(&self) -> std::ops::Range<usize> {
+        self.node_offset..self.node_offset + self.n
+    }
+}
+
+/// N ingested graphs merged into one block-diagonal execution unit.
+///
+/// Built by the executor lane right before a fused interpreter pass;
+/// never stored. The merged [`CooGraph`] and [`InNbrs`] are exactly
+/// what per-request execution would walk, relocated by per-segment
+/// constant offsets.
+#[derive(Clone, Debug)]
+pub struct FusedBatch {
+    graph: CooGraph,
+    nbrs: InNbrs,
+    segments: Vec<FusedSegment>,
+}
+
+impl FusedBatch {
+    /// Merge `parts` into one block-diagonal batch. All parts must
+    /// share node/edge feature widths (guaranteed for a same-model
+    /// batch that passed routing; mismatches bail so the caller can
+    /// fall back to per-request execution and surface per-request
+    /// errors). Reuses each part's cached in-neighbor view — no
+    /// re-conversion, only offset shifts.
+    pub fn fuse(parts: &[&GraphBatch]) -> Result<FusedBatch> {
+        let Some(first) = parts.first() else {
+            bail!("cannot fuse an empty batch");
+        };
+        let f_node = first.graph.f_node;
+        let f_edge = first.graph.f_edge;
+        let (mut total_n, mut total_e) = (0u64, 0u64);
+        for p in parts {
+            if p.graph.f_node != f_node {
+                bail!(
+                    "node feature width mismatch in fused batch: {} vs {}",
+                    p.graph.f_node,
+                    f_node
+                );
+            }
+            if p.graph.f_edge != f_edge {
+                bail!(
+                    "edge feature width mismatch in fused batch: {} vs {}",
+                    p.graph.f_edge,
+                    f_edge
+                );
+            }
+            total_n += p.n() as u64;
+            total_e += p.num_edges() as u64;
+        }
+        if total_n > u32::MAX as u64 || total_e > u32::MAX as u64 {
+            bail!("fused batch exceeds the u32 node/edge index space");
+        }
+        let mut graph = CooGraph {
+            n: total_n as usize,
+            edges: Vec::with_capacity(total_e as usize),
+            node_feat: Vec::with_capacity(total_n as usize * f_node),
+            f_node,
+            edge_feat: Vec::with_capacity(total_e as usize * f_edge),
+            f_edge,
+        };
+        let mut segments = Vec::with_capacity(parts.len());
+        let mut nbr_parts = Vec::with_capacity(parts.len());
+        let (mut node_off, mut edge_off) = (0usize, 0usize);
+        for p in parts {
+            let g = &p.graph;
+            segments.push(FusedSegment {
+                node_offset: node_off,
+                n: g.n,
+                edge_offset: edge_off,
+                e: g.edges.len(),
+            });
+            let shift = node_off as u32;
+            graph
+                .edges
+                .extend(g.edges.iter().map(|&(s, t)| (s + shift, t + shift)));
+            graph.node_feat.extend_from_slice(&g.node_feat);
+            graph.edge_feat.extend_from_slice(&g.edge_feat);
+            nbr_parts.push((p.in_nbrs(), shift, edge_off as u32));
+            node_off += g.n;
+            edge_off += g.edges.len();
+        }
+        let nbrs = InNbrs::concat_shifted(&nbr_parts);
+        Ok(FusedBatch {
+            graph,
+            nbrs,
+            segments,
+        })
+    }
+
+    /// The merged block-diagonal COO graph.
+    pub fn graph(&self) -> &CooGraph {
+        &self.graph
+    }
+
+    /// The merged in-neighbor view (offset-shifted per-graph rows).
+    pub fn in_nbrs(&self) -> &InNbrs {
+        &self.nbrs
+    }
+
+    /// Per-source-graph slices of the fused index space, in fuse order.
+    pub fn segments(&self) -> &[FusedSegment] {
+        &self.segments
+    }
+
+    /// Number of source graphs.
+    pub fn num_graphs(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total node count across all segments.
+    pub fn total_nodes(&self) -> usize {
+        self.graph.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, f_node: usize, f_edge: usize) -> CooGraph {
+        let n = rng.range(0, 12);
+        let m = if n == 0 { 0 } else { rng.range(0, 40) };
+        let edges: Vec<(u32, u32)> = (0..m)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        CooGraph {
+            n,
+            edges,
+            node_feat: (0..n * f_node).map(|i| i as f32 * 0.5 - 1.0).collect(),
+            f_node,
+            edge_feat: (0..m * f_edge).map(|i| i as f32 * 0.25).collect(),
+            f_edge,
+        }
+    }
+
+    #[test]
+    fn segment_table_covers_the_fused_index_space() {
+        let mut rng = Rng::new(7);
+        let batches: Vec<GraphBatch> = (0..4)
+            .map(|_| GraphBatch::ingest(random_coo(&mut rng, 3, 2)).unwrap())
+            .collect();
+        let parts: Vec<&GraphBatch> = batches.iter().collect();
+        let fused = FusedBatch::fuse(&parts).unwrap();
+        assert_eq!(fused.num_graphs(), 4);
+        let (mut node_off, mut edge_off) = (0usize, 0usize);
+        for (seg, b) in fused.segments().iter().zip(&batches) {
+            assert_eq!(seg.node_offset, node_off);
+            assert_eq!(seg.n, b.n());
+            assert_eq!(seg.edge_offset, edge_off);
+            assert_eq!(seg.e, b.num_edges());
+            node_off += b.n();
+            edge_off += b.num_edges();
+        }
+        assert_eq!(fused.total_nodes(), node_off);
+        assert_eq!(fused.graph().num_edges(), edge_off);
+        fused.graph().validate().unwrap();
+    }
+
+    #[test]
+    fn feature_width_mismatch_bails() {
+        let a = GraphBatch::ingest(random_coo(&mut Rng::new(1), 3, 0)).unwrap();
+        let b = GraphBatch::ingest(random_coo(&mut Rng::new(2), 4, 0)).unwrap();
+        assert!(FusedBatch::fuse(&[&a, &b]).is_err());
+        assert!(FusedBatch::fuse(&[]).is_err(), "empty fuse must bail");
+    }
+
+    /// The load-bearing property: the offset-shifted concatenation of
+    /// the per-graph in-neighbor views must be **identical** to a
+    /// from-scratch conversion of the fused block-diagonal COO — same
+    /// rows, same order, same kept edge indices. This is the whole
+    /// bit-exactness argument for fusion reduced to a data-structure
+    /// equality.
+    #[test]
+    fn prop_shifted_concat_equals_fresh_conversion() {
+        forall("fused-nbr-equivalence", 120, 0xF05E, |rng| {
+            let k = rng.range(1, 6);
+            let batches: Vec<GraphBatch> = (0..k)
+                .map(|_| GraphBatch::ingest(random_coo(rng, 2, 1)).unwrap())
+                .collect();
+            let parts: Vec<&GraphBatch> = batches.iter().collect();
+            let fused = FusedBatch::fuse(&parts).unwrap();
+            let fresh = InNbrs::from_coo(fused.graph());
+            prop_assert!(
+                *fused.in_nbrs() == fresh,
+                "shifted concat differs from fresh conversion of the fused COO"
+            );
+            Ok(())
+        });
+    }
+
+    /// Cross-graph isolation: no fused in-neighbor row may reach
+    /// outside its own segment's node range.
+    #[test]
+    fn prop_segments_stay_block_diagonal() {
+        forall("fused-block-diagonal", 120, 0xB10C, |rng| {
+            let k = rng.range(2, 5);
+            let batches: Vec<GraphBatch> = (0..k)
+                .map(|_| GraphBatch::ingest(random_coo(rng, 1, 0)).unwrap())
+                .collect();
+            let parts: Vec<&GraphBatch> = batches.iter().collect();
+            let fused = FusedBatch::fuse(&parts).unwrap();
+            for seg in fused.segments() {
+                for v in seg.nodes() {
+                    for &s in fused.in_nbrs().row(v) {
+                        prop_assert!(
+                            seg.nodes().contains(&(s as usize)),
+                            "node {v} of segment at {} has out-of-segment \
+                             neighbor {s}",
+                            seg.node_offset
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Each segment's rows must be its source graph's rows shifted by
+    /// the segment's node offset, with edge indices shifted by the edge
+    /// offset (so fused edge-feature lookups hit the same features).
+    #[test]
+    fn rows_are_offset_shifted_copies() {
+        let mut rng = Rng::new(0x5EED);
+        let batches: Vec<GraphBatch> = (0..3)
+            .map(|_| GraphBatch::ingest(random_coo(&mut rng, 2, 2)).unwrap())
+            .collect();
+        let parts: Vec<&GraphBatch> = batches.iter().collect();
+        let fused = FusedBatch::fuse(&parts).unwrap();
+        for (seg, b) in fused.segments().iter().zip(&batches) {
+            let own = b.in_nbrs();
+            for v in 0..seg.n {
+                let fused_row = fused.in_nbrs().row(seg.node_offset + v);
+                let own_row = own.row(v);
+                assert_eq!(fused_row.len(), own_row.len());
+                for (&f, &o) in fused_row.iter().zip(own_row) {
+                    assert_eq!(f as usize, o as usize + seg.node_offset);
+                }
+                let fused_edges = fused.in_nbrs().row_edges(seg.node_offset + v);
+                let own_edges = own.row_edges(v);
+                for (&f, &o) in fused_edges.iter().zip(own_edges) {
+                    assert_eq!(f as usize, o as usize + seg.edge_offset);
+                    // And the fused feature row equals the source's.
+                    let fe = &fused.graph().edge_feat
+                        [f as usize * 2..(f as usize + 1) * 2];
+                    let oe = &b.graph.edge_feat[o as usize * 2..(o as usize + 1) * 2];
+                    assert_eq!(fe, oe);
+                }
+            }
+        }
+    }
+}

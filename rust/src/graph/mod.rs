@@ -7,11 +7,15 @@
 //! [`GraphBatch`] is the single ingest entry point: every consumer that
 //! needs adjacency (simulator, coordinator, baselines) goes through one
 //! COO→CSR/CSC conversion — the paper's zero-preprocessing contract.
+//! [`FusedBatch`] merges several ingested graphs into one
+//! block-diagonal execution unit for fused micro-batch inference
+//! (see `docs/ARCHITECTURE.md`), without re-converting anything.
 
 pub mod batch;
 pub mod coo;
 pub mod csr;
 pub mod dense;
+pub mod fused;
 pub mod nbr;
 pub mod spectral;
 
@@ -19,5 +23,6 @@ pub use batch::{converter_cycles, GraphBatch, GraphStats};
 pub use coo::CooGraph;
 pub use csr::{Csc, Csr};
 pub use dense::DenseGraph;
+pub use fused::{FusedBatch, FusedSegment};
 pub use nbr::InNbrs;
 pub use spectral::{fiedler_vector, fiedler_vector_csr, EigResult};

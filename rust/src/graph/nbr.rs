@@ -90,6 +90,62 @@ impl InNbrs {
         }
     }
 
+    /// Concatenate per-graph views into one block-diagonal view, each
+    /// part's neighbor entries shifted by its node offset and its kept
+    /// COO edge indices by its edge offset (`(view, node_offset,
+    /// edge_offset)` per part, in fuse order).
+    ///
+    /// Because every part's rows are copied verbatim modulo a constant
+    /// per-part shift, row order (ascending), deduplication, and
+    /// degrees are untouched — the result is identical to
+    /// [`InNbrs::from_coo`] over the fused block-diagonal COO graph
+    /// (pinned by `graph::fused`'s property tests), at concat cost
+    /// instead of a full re-sort.
+    ///
+    /// # Panics
+    ///
+    /// If the combined node count, source-graph edge count, or entry
+    /// count would overflow the u32 index space — wrapped offsets
+    /// would silently corrupt the adjacency. `FusedBatch::fuse`
+    /// pre-checks and bails cleanly before calling this.
+    pub fn concat_shifted(parts: &[(&InNbrs, u32, u32)]) -> InNbrs {
+        let n: usize = parts.iter().map(|(p, _, _)| p.n).sum();
+        let entries: usize = parts.iter().map(|(p, _, _)| p.nbrs.len()).sum();
+        assert!(
+            n <= u32::MAX as usize && entries <= u32::MAX as usize,
+            "fused view exceeds the u32 index space"
+        );
+        for &(p, node_off, edge_off) in parts {
+            // Shifted neighbor ids top out at node_off + p.n - 1 and
+            // shifted edge indices at edge_off + max(edge_idx).
+            let max_edge = p.edge_idx.iter().max().copied().unwrap_or(0);
+            assert!(
+                node_off as u64 + p.n as u64 <= u32::MAX as u64 + 1
+                    && edge_off as u64 + max_edge as u64 <= u32::MAX as u64,
+                "fused node/edge offsets exceed the u32 index space"
+            );
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        let mut nbrs = Vec::with_capacity(entries);
+        let mut edge_idx = Vec::with_capacity(entries);
+        let mut base = 0u32;
+        for &(p, node_off, edge_off) in parts {
+            for v in 0..p.n {
+                offsets.push(base + p.offsets[v + 1]);
+            }
+            nbrs.extend(p.nbrs.iter().map(|&s| s + node_off));
+            edge_idx.extend(p.edge_idx.iter().map(|&e| e + edge_off));
+            base += p.offsets[p.n];
+        }
+        InNbrs {
+            n,
+            offsets,
+            nbrs,
+            edge_idx,
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }
@@ -165,6 +221,25 @@ mod tests {
             assert!(nb.row(v).is_empty());
             assert_eq!(nb.deg(v), 0);
         }
+    }
+
+    #[test]
+    fn concat_shifted_relocates_rows_and_edges() {
+        // Part A: 2 nodes, edge (1,0) at COO index 0.
+        let a = InNbrs::from_coo(&graph(2, vec![(1, 0)]));
+        // Part B: 3 nodes, edges (2,1)@0, (0,1)@1, duplicate (0,1)@2.
+        let b = InNbrs::from_coo(&graph(3, vec![(2, 1), (0, 1), (0, 1)]));
+        let fused = InNbrs::concat_shifted(&[(&a, 0, 0), (&b, 2, 1)]);
+        assert_eq!(fused.n(), 5);
+        assert_eq!(fused.row(0), &[1]);
+        assert_eq!(fused.row_edges(0), &[0]);
+        assert_eq!(fused.row(1), &[] as &[u32]);
+        // B's node 1 (fused node 3): in-nbrs {0, 2} shifted to {2, 4},
+        // the duplicate (0,1) keeping COO index 2, shifted to 3.
+        assert_eq!(fused.row(3), &[2, 4]);
+        assert_eq!(fused.row_edges(3), &[3, 1]);
+        assert_eq!(fused.deg(3), 2);
+        assert_eq!(fused.num_entries(), a.num_entries() + b.num_entries());
     }
 
     /// The sparse view must be the exact image of densification:

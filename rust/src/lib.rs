@@ -42,7 +42,7 @@ pub mod prelude {
     pub use crate::coordinator::{Server, ServerConfig};
     pub use crate::datagen::{molecular_graph, MolConfig};
     pub use crate::net::{NetClient, NetServer, NetServerConfig};
-    pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph, GraphBatch};
+    pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph, FusedBatch, GraphBatch};
     pub use crate::models::{GnnKind, ModelConfig};
     pub use crate::runtime::{Artifacts, Engine};
     pub use crate::sim::{Accelerator, PipelineMode};

@@ -5,9 +5,11 @@
 //! ```text
 //! gengnn serve          stream synthetic molecular graphs through the
 //!                       serving stack (--lanes N parallel executor
-//!                       lanes) and print latency + per-lane metrics;
-//!                       with --listen ADDR, expose the wire protocol
-//!                       over TCP instead (--duration S to exit)
+//!                       lanes, --fuse N fused micro-batch size, 1 to
+//!                       disable) and print latency + per-lane/fused
+//!                       metrics; with --listen ADDR, expose the wire
+//!                       protocol over TCP instead (--duration S to
+//!                       exit)
 //! gengnn loadgen        open-loop load generator against a serving
 //!                       front-end: --addr, --rps, --count, model mix;
 //!                       reports p50/p95/p99 + throughput
@@ -110,6 +112,9 @@ fn cmd_serve(a: Args) -> Result<()> {
             max_batch: a.usize_or("max-batch", 8)?,
             sticky: true,
         },
+        // Fused micro-batching: lanes merge up to N same-model requests
+        // into one block-diagonal interpreter pass (1 disables).
+        fuse_max_graphs: a.usize_or("fuse", 8)?,
         ..ServerConfig::default()
     };
     // Wire-serving mode: expose the protocol over TCP instead of

@@ -14,7 +14,11 @@
 //! The interpreter is a two-register machine: `h` holds the live node
 //! (or pooled graph) features, `m` holds the latest sparse-aggregation
 //! result until a combine stage consumes it, plus optional virtual-node
-//! state seeded from [`ModelPlan::vn_init`].
+//! state seeded from [`ModelPlan::vn_init`]. The same stage sequence
+//! also executes *fused micro-batches* (several graphs merged
+//! block-diagonally, one interpreter pass, per-graph readout segments
+//! — see [`crate::graph::FusedBatch`]) without any plan-level change:
+//! stages are defined per node or per graph, never per batch.
 
 use anyhow::{bail, Result};
 
@@ -32,6 +36,7 @@ pub enum Act {
 }
 
 impl Act {
+    /// Stable identifier used by the `gengnn plan` dumps.
     pub fn name(&self) -> &'static str {
         match self {
             Act::None => "none",
@@ -68,6 +73,8 @@ pub enum Aggregate {
 }
 
 impl Aggregate {
+    /// Stable identifier used by the `gengnn plan` dumps (validated by
+    /// `python/tools/check_plan_schema.py`).
     pub fn name(&self) -> &'static str {
         match self {
             Aggregate::Sum => "sum",
@@ -90,6 +97,8 @@ impl Aggregate {
         }
     }
 
+    /// Trained parameters carried by this aggregation (the GIN bond
+    /// embedding; every other aggregate is parameter-free).
     pub fn params(&self) -> usize {
         match self {
             Aggregate::EdgeReluSum { bond } => bond.params(),
@@ -144,6 +153,7 @@ pub enum Stage {
 }
 
 impl Stage {
+    /// Stable identifier used by the `gengnn plan` dumps.
     pub fn name(&self) -> &'static str {
         match self {
             Stage::Linear { .. } => "linear",
@@ -197,6 +207,7 @@ impl Stage {
         }
     }
 
+    /// Trained parameters this stage carries.
     pub fn params(&self) -> usize {
         match self {
             Stage::Linear { w, .. } | Stage::ResidualLinear { w, .. } => w.params(),
@@ -243,6 +254,7 @@ impl ModelPlan {
             .any(|s| matches!(s, Stage::SparseAggregate(Aggregate::DgnDirectional)))
     }
 
+    /// Whether execution consumes per-edge features (GIN models).
     pub fn needs_edge_attr(&self) -> bool {
         self.edge_dim > 0
     }

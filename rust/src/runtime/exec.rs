@@ -154,6 +154,32 @@ impl Engine {
         }
     }
 
+    /// Run several same-model requests as **one** fused interpreter
+    /// pass over a block-diagonal merge of their graphs, returning one
+    /// output per request (input order), bit-identical to calling
+    /// [`Engine::infer_batch`] per request.
+    ///
+    /// `eigs` pairs one optional precomputed eigenvector with each
+    /// graph (same contract as [`Engine::infer_batch`]). Native
+    /// backend only — the PJRT artifacts are batch-1 by construction,
+    /// so that path errors and the caller (the executor lane) falls
+    /// back to per-request execution.
+    pub fn infer_fused(
+        &mut self,
+        model: &str,
+        parts: &[&GraphBatch],
+        eigs: &[Option<&[f32]>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lm = self.get_mut(model)?;
+        match &lm.exe {
+            Compiled::Native(native) => native.forward_fused(parts, eigs),
+            #[cfg(feature = "xla")]
+            Compiled::Pjrt(_) => {
+                anyhow::bail!("fused execution requires the native backend")
+            }
+        }
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -216,6 +242,18 @@ mod tests {
         let batch = GraphBatch::ingest(g.graph.clone()).unwrap();
         let via_batch = e.infer_batch("gcn", &batch, None).unwrap();
         assert_eq!(via_coo, via_batch);
+    }
+
+    #[test]
+    fn fused_path_matches_sequential_batches() {
+        let Some(mut e) = engine(&["gcn"]) else { return };
+        let meta = e.meta("gcn").unwrap().clone();
+        let g = Golden::load(&meta).unwrap();
+        let b = GraphBatch::ingest(g.graph.clone()).unwrap();
+        let seq = e.infer_batch("gcn", &b, None).unwrap();
+        let fused = e.infer_fused("gcn", &[&b, &b], &[None, None]).unwrap();
+        assert_eq!(fused, vec![seq.clone(), seq]);
+        assert!(e.infer_fused("gat", &[&b], &[None]).is_err(), "unloaded");
     }
 
     #[test]

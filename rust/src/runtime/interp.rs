@@ -21,20 +21,32 @@
 //! virtual-node state:
 //!
 //! * `h` — live features: `[n, d]` node rows until a pooling readout
-//!   collapses them to one graph row;
+//!   collapses them to one row per graph;
 //! * `m` — the latest [`Stage::SparseAggregate`] result, consumed by
 //!   the next combine stage (`TakeAggregate`, `EpsCombine`,
 //!   `ResidualLinear`, `DualLinear`);
-//! * `vn` — the virtual-node vector, seeded from
-//!   [`ModelPlan::vn_init`].
+//! * `vn` — the virtual-node vector(s), seeded from
+//!   [`ModelPlan::vn_init`] — one per graph.
 //!
 //! Per-graph spectral/normalization contexts (GCN inverse-sqrt
 //! degrees, DGN directional weights) are computed lazily once per
 //! request and shared across the layers that need them.
+//!
+//! **Fused micro-batches:** the core loop is *segmented*. Per-request
+//! execution ([`execute_over`]) runs it with a single segment spanning
+//! the whole graph; fused execution ([`execute_fused`]) runs the same
+//! loop once over a block-diagonal [`FusedBatch`] with one segment per
+//! source graph. Per-node stages never look at segments (a fused
+//! node's neighborhood is its per-graph neighborhood, offset-shifted);
+//! only the readouts ([`Readout::MaskedMeanPool`] pools per segment,
+//! [`Readout::NodeHead`] splits per segment) and the `VirtualNode*`
+//! stages (independent per-graph state, batched through one
+//! row-independent MLP evaluation) consult the segment table — which
+//! is why fused outputs are bit-identical to sequential ones.
 
 use anyhow::{bail, Result};
 
-use crate::graph::{CooGraph, InNbrs};
+use crate::graph::{CooGraph, FusedBatch, FusedSegment, InNbrs};
 use crate::models::params::Dense;
 use crate::models::plan::{Act, Aggregate, ModelPlan, Readout, Stage};
 
@@ -66,6 +78,12 @@ pub fn execute(plan: &ModelPlan, g: &CooGraph, eig: Option<&[f32]>) -> Result<Ve
 /// cover the graph's real nodes when the plan needs it (extra padded
 /// entries are ignored). Graph-level plans return `[out_dim]`;
 /// node-level plans `[n_max * out_dim]` with `+0.0` padding.
+///
+/// This is the degenerate single-segment case of the segmented core:
+/// fused multi-graph execution ([`execute_fused`]) runs the *same*
+/// stage implementations over a block-diagonal graph, which is how
+/// the fused path inherits the bit-exactness contract instead of
+/// re-proving it.
 pub fn execute_over(
     plan: &ModelPlan,
     g: &CooGraph,
@@ -81,9 +99,69 @@ pub fn execute_over(
         }
         (_, e) => e,
     };
+    let whole = [FusedSegment {
+        node_offset: 0,
+        n,
+        edge_offset: 0,
+        e: g.num_edges(),
+    }];
+    let mut outs = execute_segments(plan, g, nbrs, &whole, eig)?;
+    Ok(outs.pop().expect("one segment yields one output"))
+}
+
+/// Execute a plan **once** over a fused block-diagonal batch,
+/// returning one output vector per source graph (fuse order).
+///
+/// Per-node stages are oblivious to fusion (every node's neighborhood
+/// is its per-graph neighborhood shifted by a constant offset);
+/// readout and virtual-node stages operate per segment. Outputs are
+/// bit-identical to executing each graph alone — pinned by
+/// `rust/tests/fused_equivalence.rs` across the model zoo.
+pub fn execute_fused(
+    plan: &ModelPlan,
+    fused: &FusedBatch,
+    eig: Option<&[f32]>,
+) -> Result<Vec<Vec<f32>>> {
+    let g = fused.graph();
+    for seg in fused.segments() {
+        if seg.n > plan.n_max {
+            bail!("graph with {} nodes exceeds capacity {}", seg.n, plan.n_max);
+        }
+    }
+    if g.f_node != plan.in_dim {
+        bail!("node feature width {} != {}", g.f_node, plan.in_dim);
+    }
+    if plan.edge_dim > 0 && g.f_edge != plan.edge_dim {
+        bail!("edge feature width {} != {}", g.f_edge, plan.edge_dim);
+    }
+    let eig = match (plan.needs_eig(), eig) {
+        (true, None) => bail!("model {} needs an eig input", plan.model),
+        (true, Some(e)) if e.len() < g.n => {
+            bail!("eig has {} entries for {} fused nodes", e.len(), g.n)
+        }
+        (_, e) => e,
+    };
+    execute_segments(plan, g, fused.in_nbrs(), fused.segments(), eig)
+}
+
+/// The segmented interpreter core shared by [`execute_over`] (one
+/// segment spanning the whole graph) and [`execute_fused`] (one
+/// segment per source graph). Inputs are assumed validated.
+fn execute_segments(
+    plan: &ModelPlan,
+    g: &CooGraph,
+    nbrs: &InNbrs,
+    segments: &[FusedSegment],
+    eig: Option<&[f32]>,
+) -> Result<Vec<Vec<f32>>> {
+    let n = g.n;
     let mut h = Mat::from_slice(n, plan.in_dim, &g.node_feat);
     let mut m: Option<Mat> = None;
-    let mut vn: Option<Vec<f32>> = plan.vn_init.clone();
+    // Virtual-node state is per graph: one vector per segment.
+    let mut vn: Option<Vec<Vec<f32>>> = plan
+        .vn_init
+        .as_ref()
+        .map(|v| segments.iter().map(|_| v.clone()).collect());
     let mut gcn_isq: Option<Vec<f32>> = None;
     let mut dgn_ctx: Option<DgnCtx> = None;
     for (si, stage) in plan.stages.iter().enumerate() {
@@ -123,42 +201,68 @@ pub fn execute_over(
             Stage::Activation(a) => apply_act(&mut h, *a),
             Stage::L2Normalize => l2_normalize_rows(&mut h),
             Stage::VirtualNodeAdd => {
-                let vnv = vn
+                let vns = vn
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("stage {si}: no virtual-node state"))?;
-                for i in 0..h.r {
-                    // mask is 1.0 on every real row: `vv * mk == vv`.
-                    for (hv, &vv) in h.row_mut(i).iter_mut().zip(vnv) {
-                        *hv += vv;
+                for (seg, vnv) in segments.iter().zip(vns) {
+                    for i in seg.nodes() {
+                        // mask is 1.0 on every real row: `vv * mk == vv`.
+                        for (hv, &vv) in h.row_mut(i).iter_mut().zip(vnv) {
+                            *hv += vv;
+                        }
                     }
                 }
             }
             Stage::VirtualNodeUpdate { w1, w2 } => {
-                let vnv = vn
+                let vns = vn
                     .as_mut()
                     .ok_or_else(|| anyhow::anyhow!("stage {si}: no virtual-node state"))?;
-                let mut gacc = Mat::zeros(1, vnv.len());
-                gacc.d.copy_from_slice(vnv);
-                for i in 0..h.r {
-                    for (gv, &hv) in gacc.d.iter_mut().zip(h.row(i)) {
-                        *gv += hv;
+                // Stack the per-segment accumulators into one matrix:
+                // `linear` is row-independent, so the stacked MLP is
+                // bit-identical to per-graph `[1, d]` updates.
+                let width = vns[0].len();
+                let mut gacc = Mat::zeros(segments.len(), width);
+                for (s, (seg, vnv)) in segments.iter().zip(vns.iter()).enumerate() {
+                    let gr = &mut gacc.d[s * width..(s + 1) * width];
+                    gr.copy_from_slice(vnv);
+                    for i in seg.nodes() {
+                        for (gv, &hv) in gr.iter_mut().zip(h.row(i)) {
+                            *gv += hv;
+                        }
                     }
                 }
                 let updated = linear(&linear(&gacc, w1, Act::Relu), w2, Act::Relu);
-                vnv.copy_from_slice(&updated.d);
+                for (s, vnv) in vns.iter_mut().enumerate() {
+                    vnv.copy_from_slice(updated.row(s));
+                }
             }
             Stage::Readout(r) => match r {
-                Readout::MaskedMeanPool => h = pool(&h),
+                Readout::MaskedMeanPool => h = pool_segments(&h, segments),
                 Readout::NodeHead => {}
             },
         }
     }
     if plan.node_level {
-        let mut out = vec![0.0f32; plan.n_max * plan.out_dim];
-        out[..h.d.len()].copy_from_slice(&h.d);
-        Ok(out)
+        let d = plan.out_dim;
+        let mut outs = Vec::with_capacity(segments.len());
+        for seg in segments {
+            let mut out = vec![0.0f32; plan.n_max * d];
+            let live = seg.n * d;
+            out[..live]
+                .copy_from_slice(&h.d[seg.node_offset * d..seg.node_offset * d + live]);
+            outs.push(out);
+        }
+        Ok(outs)
     } else {
-        Ok(h.into_vec())
+        // After the pooling readout `h` holds one row per segment.
+        if h.r != segments.len() {
+            bail!(
+                "plan left {} rows for {} graphs (missing pooling readout?)",
+                h.r,
+                segments.len()
+            );
+        }
+        Ok((0..segments.len()).map(|s| h.row(s).to_vec()).collect())
     }
 }
 
@@ -227,18 +331,24 @@ fn take(m: &mut Option<Mat>, stage: usize) -> Result<Mat> {
         .ok_or_else(|| anyhow::anyhow!("stage {stage}: no pending aggregation"))
 }
 
-/// Graph-level readout: mean over the real rows. `n` real nodes each
-/// carry mask 1.0, so the dense reference's mask sum is exactly
-/// `n as f32` and its `v * mk` accumulate is exactly `v`.
-fn pool(h: &Mat) -> Mat {
-    let denom = (h.r as f32).max(1.0);
-    let mut out = Mat::zeros(1, h.c);
-    for i in 0..h.r {
-        for (o, &v) in out.d.iter_mut().zip(h.row(i)) {
-            *o += v;
+/// Graph-level readout, one output row per segment: mean over the
+/// segment's real rows. A segment's `n` real nodes each carry mask
+/// 1.0, so the dense reference's mask sum is exactly `n as f32` and
+/// its `v * mk` accumulate is exactly `v`; rows are summed in
+/// ascending order within the segment, exactly as a per-graph pool
+/// would.
+fn pool_segments(h: &Mat, segments: &[FusedSegment]) -> Mat {
+    let mut out = Mat::zeros(segments.len(), h.c);
+    for (s, seg) in segments.iter().enumerate() {
+        let denom = (seg.n as f32).max(1.0);
+        let or = &mut out.d[s * h.c..(s + 1) * h.c];
+        for i in seg.nodes() {
+            for (o, &v) in or.iter_mut().zip(h.row(i)) {
+                *o += v;
+            }
         }
+        or.iter_mut().for_each(|v| *v /= denom);
     }
-    out.d.iter_mut().for_each(|v| *v /= denom);
     out
 }
 
@@ -739,6 +849,103 @@ mod tests {
         // Row 3 has no in-nbrs; only the synthetic diagonal.
         let walk: Vec<(usize, f32)> = MergedRow::new(&nbrs, 3).collect();
         assert_eq!(walk, vec![(3, 1.0)]);
+    }
+
+    fn ingest_all(graphs: &[CooGraph]) -> Vec<crate::graph::GraphBatch> {
+        graphs
+            .iter()
+            .map(|g| crate::graph::GraphBatch::ingest(g.clone()).unwrap())
+            .collect()
+    }
+
+    fn fuse_all(batches: &[crate::graph::GraphBatch]) -> FusedBatch {
+        let parts: Vec<&crate::graph::GraphBatch> = batches.iter().collect();
+        FusedBatch::fuse(&parts).unwrap()
+    }
+
+    #[test]
+    fn fused_execution_matches_per_graph_execution() {
+        let plan = tiny_plan();
+        // Mixed sizes, including a single-node graph (pool denom 1).
+        let graphs = [line_graph(5, 4), line_graph(1, 4), line_graph(3, 4)];
+        let batches = ingest_all(&graphs);
+        let outs = execute_fused(&plan, &fuse_all(&batches), None).unwrap();
+        assert_eq!(outs.len(), graphs.len());
+        for (g, out) in graphs.iter().zip(&outs) {
+            assert_eq!(*out, execute(&plan, g, None).unwrap());
+        }
+    }
+
+    #[test]
+    fn fused_virtual_node_state_is_per_graph() {
+        // VN plan: the per-graph virtual-node state must not bleed
+        // across segments (a shared accumulator would).
+        let mut wi = WInit::new(9);
+        let plan = ModelPlan {
+            model: "tiny_vn".into(),
+            n_max: 8,
+            in_dim: 4,
+            out_dim: 2,
+            edge_dim: 0,
+            node_level: false,
+            vn_init: Some(vec![0.25; 6]),
+            stages: vec![
+                Stage::Linear {
+                    w: wi.dense(4, 6),
+                    act: Act::Relu,
+                },
+                Stage::VirtualNodeAdd,
+                Stage::SparseAggregate(Aggregate::Sum),
+                Stage::TakeAggregate,
+                Stage::VirtualNodeUpdate {
+                    w1: wi.dense(6, 6),
+                    w2: wi.dense(6, 6),
+                },
+                Stage::VirtualNodeAdd,
+                Stage::Readout(Readout::MaskedMeanPool),
+                Stage::Linear {
+                    w: wi.dense(6, 2),
+                    act: Act::None,
+                },
+            ],
+        };
+        plan.validate().unwrap();
+        let graphs = [line_graph(4, 4), line_graph(6, 4), line_graph(2, 4)];
+        let batches = ingest_all(&graphs);
+        let outs = execute_fused(&plan, &fuse_all(&batches), None).unwrap();
+        for (g, out) in graphs.iter().zip(&outs) {
+            assert_eq!(*out, execute(&plan, g, None).unwrap());
+        }
+    }
+
+    #[test]
+    fn fused_handles_empty_segments() {
+        let plan = tiny_plan();
+        let empty = CooGraph {
+            n: 0,
+            edges: vec![],
+            node_feat: vec![],
+            f_node: 4,
+            edge_feat: vec![],
+            f_edge: 0,
+        };
+        let graphs = [line_graph(3, 4), empty.clone(), line_graph(2, 4)];
+        let batches = ingest_all(&graphs);
+        let outs = execute_fused(&plan, &fuse_all(&batches), None).unwrap();
+        assert_eq!(outs[1], execute(&plan, &empty, None).unwrap());
+        assert_eq!(outs[0], execute(&plan, &graphs[0], None).unwrap());
+        assert_eq!(outs[2], execute(&plan, &graphs[2], None).unwrap());
+    }
+
+    #[test]
+    fn fused_enforces_per_segment_capacity() {
+        let plan = tiny_plan(); // n_max = 8
+        let graphs = [line_graph(3, 4), line_graph(9, 4)];
+        let batches = ingest_all(&graphs);
+        let err = execute_fused(&plan, &fuse_all(&batches), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds capacity"), "{err}");
     }
 
     #[test]

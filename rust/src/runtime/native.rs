@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::graph::GraphBatch;
+use crate::graph::{FusedBatch, GraphBatch};
 use crate::models::lower;
 use crate::models::plan::ModelPlan;
 
@@ -71,6 +71,68 @@ impl NativeModel {
         // Models that do not consume an eigenvector ignore a supplied
         // one (a producer may attach eig to any request).
         interp::execute_over(&self.plan, &batch.graph, nbrs, None)
+    }
+
+    /// Run several ingested graphs through **one** fused interpreter
+    /// pass, returning one output per graph (input order).
+    ///
+    /// `eigs` pairs one optional precomputed eigenvector (padded to
+    /// the artifact capacity, like [`NativeModel::forward_batch`])
+    /// with each graph; for eig-consuming models, missing entries are
+    /// solved per graph on the part's CSR with the same iteration
+    /// budget the sequential path uses — so fused outputs are
+    /// bit-identical to per-request outputs either way.
+    pub fn forward_fused(
+        &self,
+        parts: &[&GraphBatch],
+        eigs: &[Option<&[f32]>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if parts.len() != eigs.len() {
+            bail!(
+                "{} graphs paired with {} eig slots",
+                parts.len(),
+                eigs.len()
+            );
+        }
+        if parts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let fused = FusedBatch::fuse(parts)?;
+        // Per-segment capacity check *before* the eig concat below
+        // slices overrides with `seg.n` (an oversized graph must get
+        // the same clean error the sequential path returns, not a
+        // slice panic). `execute_fused` re-checks harmlessly.
+        for seg in fused.segments() {
+            if seg.n > self.plan.n_max {
+                bail!(
+                    "graph with {} nodes exceeds capacity {}",
+                    seg.n,
+                    self.plan.n_max
+                );
+            }
+        }
+        let eig_buf: Option<Vec<f32>> = if self.plan.needs_eig() {
+            let mut buf = vec![0.0f32; fused.total_nodes()];
+            for ((part, eig), seg) in parts.iter().zip(eigs).zip(fused.segments()) {
+                let dst = &mut buf[seg.node_offset..seg.node_offset + seg.n];
+                match eig {
+                    Some(e) => {
+                        if e.len() != self.plan.n_max {
+                            bail!("eig override has wrong length");
+                        }
+                        dst.copy_from_slice(&e[..seg.n]);
+                    }
+                    None => {
+                        let r = part.fiedler(400, 1e-9);
+                        dst.copy_from_slice(&r.vector);
+                    }
+                }
+            }
+            Some(buf)
+        } else {
+            None
+        };
+        interp::execute_fused(&self.plan, &fused, eig_buf.as_deref())
     }
 
     /// Expected output length for shape checks.
@@ -246,6 +308,85 @@ mod tests {
         })
         .join()
         .unwrap();
+    }
+
+    #[test]
+    fn fused_forward_matches_sequential_for_every_kind() {
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
+            let meta = tiny_meta(name);
+            let m = NativeModel::build(&meta, 0).unwrap();
+            let batches = [batch(1.0), batch(2.0), batch(0.5)];
+            let parts: Vec<&GraphBatch> = batches.iter().collect();
+            let eigs: Vec<Option<&[f32]>> = vec![None; parts.len()];
+            let fused = m.forward_fused(&parts, &eigs).unwrap();
+            assert_eq!(fused.len(), parts.len(), "{name}");
+            for (b, out) in batches.iter().zip(&fused) {
+                assert_eq!(
+                    *out,
+                    m.forward_batch(b, None).unwrap(),
+                    "{name}: fused output diverges from sequential"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_node_level_outputs_are_split_and_padded() {
+        let mut meta = tiny_meta("dgn");
+        meta.node_level = true;
+        meta.out_dim = 3;
+        let m = NativeModel::build(&meta, 0).unwrap();
+        let batches = [batch(1.0), batch(2.0)];
+        let parts: Vec<&GraphBatch> = batches.iter().collect();
+        let fused = m.forward_fused(&parts, &[None, None]).unwrap();
+        for (b, out) in batches.iter().zip(&fused) {
+            assert_eq!(out.len(), meta.n_max * 3);
+            assert_eq!(*out, m.forward_batch(b, None).unwrap());
+        }
+    }
+
+    #[test]
+    fn fused_eig_overrides_match_sequential_overrides() {
+        let meta = tiny_meta("dgn");
+        let m = NativeModel::build(&meta, 0).unwrap();
+        let (b1, b2) = (batch(1.0), batch(2.0));
+        let e1: Vec<f32> = (0..meta.n_max).map(|i| i as f32 * 0.1 - 0.3).collect();
+        let e2: Vec<f32> = (0..meta.n_max).map(|i| 0.5 - i as f32 * 0.05).collect();
+        let fused = m
+            .forward_fused(&[&b1, &b2], &[Some(&e1), Some(&e2)])
+            .unwrap();
+        assert_eq!(fused[0], m.forward_batch(&b1, Some(&e1)).unwrap());
+        assert_eq!(fused[1], m.forward_batch(&b2, Some(&e2)).unwrap());
+        // Length mismatches are clean errors.
+        assert!(m.forward_fused(&[&b1], &[]).is_err());
+        let short = vec![0.5f32; 3];
+        assert!(m.forward_fused(&[&b1], &[Some(&short)]).is_err());
+        // Empty fuse is a no-op.
+        assert!(m.forward_fused(&[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fused_oversized_graph_is_a_clean_error() {
+        // Must match the sequential error, not panic slicing the eig
+        // override with the oversized node count.
+        let meta = tiny_meta("dgn");
+        let m = NativeModel::build(&meta, 0).unwrap();
+        let big = CooGraph::from_undirected(
+            9,
+            &[(0, 1)],
+            (0..9 * 4).map(|i| i as f32).collect(),
+            4,
+            &[2.0, 1.0, 0.0],
+            3,
+        )
+        .unwrap();
+        let big = GraphBatch::ingest(big).unwrap();
+        let e = vec![0.5f32; meta.n_max];
+        let err = m
+            .forward_fused(&[&big], &[Some(&e)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds capacity"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Differential bit-exactness test for fused micro-batch execution:
+//! for every model in the fixture manifest, merging N requests into
+//! one block-diagonal interpreter pass must produce outputs
+//! **bit-identical** to executing the N requests one at a time — and
+//! the `fuse_max_graphs = 1` gate must be a strict no-op.
+//!
+//! This is the contract that makes `fuse_max_graphs` a pure throughput
+//! knob (like `executor_lanes` in `lane_determinism.rs`): offsetting a
+//! graph's node ids by a constant relocates its neighbor lists without
+//! touching their order, degrees, or dedup, so every float
+//! accumulation the interpreter performs is unchanged; readout and
+//! virtual-node stages operate per segment.
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, the tests skip with a notice.
+
+use std::collections::BTreeMap;
+
+use gengnn::coordinator::{
+    Admission, AdmissionPolicy, BatchPolicy, Metrics, Server, ServerConfig,
+};
+use gengnn::graph::{CooGraph, GraphBatch};
+use gengnn::runtime::{Engine, ModelMeta};
+use gengnn::util::rng::Rng;
+
+mod common;
+use common::{artifacts_or_skip, fixture_graph};
+
+/// Edge-feature width `meta` consumes (0 when the model takes none).
+fn edge_width(meta: &ModelMeta) -> usize {
+    meta.inputs
+        .iter()
+        .find(|i| i.name == "edge_attr")
+        .and_then(|i| i.shape.last().copied())
+        .unwrap_or(0)
+}
+
+/// Sequential-vs-fused comparison over one engine: each graph through
+/// `infer_batch` alone, then all of them through one `infer_fused`
+/// pass; the outputs must match bit-for-bit.
+fn assert_fused_matches_sequential(
+    engine: &mut Engine,
+    model: &str,
+    batches: &[GraphBatch],
+    eigs: &[Option<Vec<f32>>],
+) {
+    let eig_refs: Vec<Option<&[f32]>> = eigs.iter().map(|e| e.as_deref()).collect();
+    let sequential: Vec<Vec<f32>> = batches
+        .iter()
+        .zip(&eig_refs)
+        .map(|(b, e)| {
+            engine
+                .infer_batch(model, b, *e)
+                .unwrap_or_else(|err| panic!("{model}: sequential failed: {err:#}"))
+        })
+        .collect();
+    let parts: Vec<&GraphBatch> = batches.iter().collect();
+    let fused = engine
+        .infer_fused(model, &parts, &eig_refs)
+        .unwrap_or_else(|err| panic!("{model}: fused failed: {err:#}"));
+    assert_eq!(fused.len(), sequential.len(), "{model}: output count");
+    for (i, (f, s)) in fused.iter().zip(&sequential).enumerate() {
+        assert_eq!(
+            f, s,
+            "{model}: fused output {i} diverges from sequential execution"
+        );
+    }
+}
+
+#[test]
+fn fused_matches_sequential_across_the_model_zoo() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    for (idx, meta) in artifacts.models.iter().enumerate() {
+        // The large node-level model is expensive per forward; a short
+        // batch still exercises segmentation and output splitting.
+        let k = if meta.n_max > 64 { 2 } else { 5 };
+        let mut rng = Rng::new(0xF05E + idx as u64);
+        let batches: Vec<GraphBatch> = (0..k)
+            .map(|_| GraphBatch::ingest(fixture_graph(meta, &mut rng)).unwrap())
+            .collect();
+        let mut engine = Engine::load(&artifacts, &[meta.name.as_str()]).unwrap();
+        let eigs: Vec<Option<Vec<f32>>> = vec![None; k];
+        assert_fused_matches_sequential(&mut engine, &meta.name, &batches, &eigs);
+    }
+}
+
+#[test]
+fn fused_matches_sequential_with_precomputed_eigs() {
+    // The prep stage hands lanes eigenvectors padded to the artifact
+    // capacity; the fused concatenation of those paddings must not
+    // perturb a bit either.
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    for meta in artifacts.models.iter().filter(|m| m.needs_eig()) {
+        let k = if meta.n_max > 64 { 2 } else { 4 };
+        let mut rng = Rng::new(0xE16);
+        let batches: Vec<GraphBatch> = (0..k)
+            .map(|_| GraphBatch::ingest(fixture_graph(meta, &mut rng)).unwrap())
+            .collect();
+        let eigs: Vec<Option<Vec<f32>>> = batches
+            .iter()
+            .map(|b| {
+                let mut e = vec![0.0f32; meta.n_max];
+                let r = b.fiedler(400, 1e-9);
+                e[..b.n()].copy_from_slice(&r.vector);
+                Some(e)
+            })
+            .collect();
+        let mut engine = Engine::load(&artifacts, &[meta.name.as_str()]).unwrap();
+        assert_fused_matches_sequential(&mut engine, &meta.name, &batches, &eigs);
+    }
+}
+
+#[test]
+fn adversarial_coo_shapes_fuse_bit_identically() {
+    // Shapes a uniform generator rarely produces: empty graphs,
+    // isolated single nodes, duplicate edges, self loops — fused in
+    // one batch so segment offsets land on every boundary case.
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    for name in ["gcn", "gin", "gat"] {
+        let Ok(meta) = artifacts.model(name) else { continue };
+        let fe = edge_width(meta);
+        let fnod = meta.in_dim;
+        let feat = |n: usize| -> Vec<f32> {
+            (0..n * fnod).map(|i| (i % 5) as f32 - 2.0).collect()
+        };
+        let efeat = |m: usize| -> Vec<f32> {
+            (0..m * fe).map(|i| (i % 3) as f32).collect()
+        };
+        let empty = CooGraph {
+            n: 0,
+            edges: vec![],
+            node_feat: vec![],
+            f_node: fnod,
+            edge_feat: vec![],
+            f_edge: fe,
+        };
+        let lone = CooGraph {
+            n: 1,
+            edges: vec![],
+            node_feat: feat(1),
+            f_node: fnod,
+            edge_feat: vec![],
+            f_edge: fe,
+        };
+        let messy_edges: Vec<(u32, u32)> =
+            vec![(0, 0), (0, 0), (1, 2), (2, 1), (1, 2), (3, 3), (0, 2)];
+        let messy = CooGraph {
+            n: 4,
+            edges: messy_edges.clone(),
+            node_feat: feat(4),
+            f_node: fnod,
+            edge_feat: efeat(messy_edges.len()),
+            f_edge: fe,
+        };
+        let mut rng = Rng::new(0xADC0);
+        let normal = fixture_graph(meta, &mut rng);
+        let batches: Vec<GraphBatch> = [empty, lone, messy, normal]
+            .into_iter()
+            .map(|g| GraphBatch::ingest(g).unwrap())
+            .collect();
+        let mut engine = Engine::load(&artifacts, &[name]).unwrap();
+        let eigs: Vec<Option<Vec<f32>>> = vec![None; batches.len()];
+        assert_fused_matches_sequential(&mut engine, name, &batches, &eigs);
+    }
+}
+
+type ResponseMap = BTreeMap<u64, Result<Vec<f32>, String>>;
+
+/// Run `graphs` through a fresh server with the given fused-batch cap
+/// and return outputs keyed by request id plus the final metrics.
+fn run_stream(
+    model: &str,
+    fuse_max_graphs: usize,
+    graphs: &[CooGraph],
+) -> (ResponseMap, std::sync::Arc<Metrics>) {
+    let server = Server::start(ServerConfig {
+        models: vec![model.to_string()],
+        prep_workers: 2,
+        executor_lanes: 2,
+        queue_capacity: 64,
+        admission: AdmissionPolicy::Block,
+        batch: BatchPolicy::default(),
+        fuse_max_graphs,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+    let responses = server.responses();
+    for g in graphs {
+        let (adm, _) = server.submit(model, g.clone());
+        assert_eq!(adm, Admission::Accepted, "{model}: submission refused");
+    }
+    let mut out = ResponseMap::new();
+    for _ in 0..graphs.len() {
+        let r = responses.recv().expect("response stream ended early");
+        assert!(
+            out.insert(r.id, r.output).is_none(),
+            "{model}: duplicate response for id {}",
+            r.id
+        );
+    }
+    (out, server.shutdown())
+}
+
+#[test]
+fn fuse_gate_off_is_a_noop_and_on_is_bit_identical() {
+    let Some(artifacts) = artifacts_or_skip() else { return };
+    for name in ["gcn", "gin_vn"] {
+        let Ok(meta) = artifacts.model(name) else { continue };
+        let mut rng = Rng::new(0x6A7E);
+        let graphs: Vec<CooGraph> =
+            (0..12).map(|_| fixture_graph(meta, &mut rng)).collect();
+        let (off, m_off) = run_stream(name, 1, &graphs);
+        let (on, m_on) = run_stream(name, 8, &graphs);
+        for (id, out) in &off {
+            assert!(out.is_ok(), "{name}: request {id} failed: {out:?}");
+        }
+        assert_eq!(
+            off, on,
+            "{name}: fused server outputs differ from unfused server outputs"
+        );
+        // The degenerate gate must never take the fused path…
+        assert_eq!(m_off.fused_batches(), 0, "{name}: fuse_max=1 fused anyway");
+        assert_eq!(m_off.fused_graphs(), 0);
+        // …while the fused server's accounting stays within bounds
+        // (how many batches actually form depends on queue timing).
+        assert!(
+            m_on.fused_graphs() <= m_on.total_completed(),
+            "{name}: fused_graphs exceeds completed"
+        );
+        assert_eq!(m_off.total_completed(), graphs.len() as u64);
+        assert_eq!(m_on.total_completed(), graphs.len() as u64);
+    }
+}
