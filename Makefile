@@ -4,7 +4,7 @@
 # Full artifact regeneration (needs jax): make artifacts
 
 .PHONY: build test check fmt clippy doc artifacts artifacts-golden \
-	bench-snapshot serve loadgen check-artifacts check-plans clean
+	bench-snapshot serve loadgen check-artifacts check-plans lint-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -26,7 +26,7 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p gengnn
 
-check: build test fmt clippy doc
+check: build test fmt clippy doc lint-plans
 
 # Full artifact set: HLO text + goldens + manifest (Layer 2 lowering).
 artifacts:
@@ -60,6 +60,14 @@ check-plans: build
 		./target/release/gengnn plan $$m --json > target/plans/$$m.json && \
 		python3 python/tools/check_plan_schema.py target/plans/$$m.json --model $$m || exit 1; \
 	done
+
+# Run the stage-IR static analyzer over every manifest model and
+# validate the findings JSON against the lint schema (part of `check`
+# and CI's plan-coverage step; see docs/STATIC_ANALYSIS.md).
+lint-plans: build
+	@mkdir -p target/plans; \
+	./target/release/gengnn lint-plan --all --json > target/plans/lint.json && \
+	python3 python/tools/check_plan_schema.py target/plans/lint.json --lint-all
 
 # Refresh the perf-trajectory anchor from the micro bench.
 # (cargo runs benches with cwd = rust/, so anchor the path to the repo root.)

@@ -23,12 +23,39 @@ stage name drawn from the component library; widths chain stage to
 stage, opening at in_dim and closing at out_dim; exactly one readout;
 total_params = vn_params + sum(stage params).
 
+With `--lint` the input is instead a `gengnn lint-plan <model> --json`
+analyzer report (emitted by `Report::to_json` in
+`rust/src/analysis/mod.rs`); `--lint-all` takes the
+`lint-plan --all --json` wrapper. Lint schema:
+
+  {
+    "model": str, "ok": bool, "fusable": bool,
+    "errors": int, "warnings": int, "infos": int,
+    "stages": [
+      {"index": int, "stage": str, "fusion": str, "reduction": str}, ...
+    ],
+    "findings": [
+      {"code": "GN-XNN", "severity": str, "stage": int|null,
+       "message": str}, ...
+    ]
+  }
+
+Checked lint invariants: diagnostic codes match ^GN-[A-Z][0-9]{2}$;
+severities drawn from {info, warning, error} with the three counters
+agreeing with the findings list; `ok` iff zero errors; stage rows
+consecutively indexed with fusion facts from the safety lattice and
+reduction tags from the determinism audit; `fusable` iff no stage is
+cross_segment_unsafe; per-finding stage indexes in range.
+
 Usage:
   python3 python/tools/check_plan_schema.py PLAN.json [--model NAME]
+  python3 python/tools/check_plan_schema.py LINT.json --lint [--model NAME]
+  python3 python/tools/check_plan_schema.py LINT.json --lint-all
 """
 
 import argparse
 import json
+import re
 import sys
 from pathlib import Path
 
@@ -60,6 +87,29 @@ STAGE_NAMES = {
 }
 
 
+LINT_TOP_KEYS = {
+    "model",
+    "ok",
+    "fusable",
+    "errors",
+    "warnings",
+    "infos",
+    "stages",
+    "findings",
+}
+LINT_STAGE_KEYS = {"index", "stage", "fusion", "reduction"}
+LINT_FINDING_KEYS = {"code", "severity", "stage", "message"}
+FUSION_FACTS = {
+    "row_independent",
+    "neighborhood_local",
+    "segment_local",
+    "cross_segment_unsafe",
+}
+REDUCTION_TAGS = {"none", "order_insensitive", "ascending_node_order"}
+SEVERITIES = {"info", "warning", "error"}
+CODE_RE = re.compile(r"^GN-[A-Z][0-9]{2}$")
+
+
 def fail(msg: str) -> None:
     print(f"FAIL: {msg}", file=sys.stderr)
     sys.exit(1)
@@ -69,16 +119,131 @@ def is_nat(v) -> bool:
     return isinstance(v, int) and not isinstance(v, bool) and v >= 0
 
 
+def check_lint_report(dump, want_model=None, where="report") -> str:
+    """Validate one analyzer report object; returns the model name."""
+    if not isinstance(dump, dict):
+        fail(f"{where}: not an object")
+    missing = LINT_TOP_KEYS - dump.keys()
+    if missing:
+        fail(f"{where}: missing keys {sorted(missing)}")
+    if not isinstance(dump["model"], str) or not dump["model"]:
+        fail(f"{where}: 'model' must be a non-empty string")
+    where = f"{where}({dump['model']})"
+    if want_model is not None and dump["model"] != want_model:
+        fail(f"{where}: expected model {want_model!r}")
+    for k in ("ok", "fusable"):
+        if not isinstance(dump[k], bool):
+            fail(f"{where}: '{k}' must be a bool")
+    for k in ("errors", "warnings", "infos"):
+        if not is_nat(dump[k]):
+            fail(f"{where}: '{k}' must be a non-negative integer")
+
+    stages = dump["stages"]
+    if not isinstance(stages, list) or not stages:
+        fail(f"{where}: 'stages' must be a non-empty list")
+    unsafe = 0
+    for i, s in enumerate(stages):
+        w = f"{where}.stages[{i}]"
+        if not isinstance(s, dict) or LINT_STAGE_KEYS - s.keys():
+            fail(f"{w}: wants keys {sorted(LINT_STAGE_KEYS)}")
+        if s["index"] != i:
+            fail(f"{w}: index {s['index']!r} out of order")
+        if s["stage"] not in STAGE_NAMES:
+            fail(f"{w}: unknown stage {s['stage']!r}")
+        if s["fusion"] not in FUSION_FACTS:
+            fail(f"{w}: unknown fusion fact {s['fusion']!r}")
+        if s["reduction"] not in REDUCTION_TAGS:
+            fail(f"{w}: unknown reduction tag {s['reduction']!r}")
+        if s["fusion"] == "cross_segment_unsafe":
+            unsafe += 1
+    if dump["fusable"] != (unsafe == 0):
+        fail(f"{where}: 'fusable' disagrees with {unsafe} unsafe stage(s)")
+
+    findings = dump["findings"]
+    if not isinstance(findings, list):
+        fail(f"{where}: 'findings' must be a list")
+    by_sev = {s: 0 for s in SEVERITIES}
+    for i, f in enumerate(findings):
+        w = f"{where}.findings[{i}]"
+        if not isinstance(f, dict) or LINT_FINDING_KEYS - f.keys():
+            fail(f"{w}: wants keys {sorted(LINT_FINDING_KEYS)}")
+        if not isinstance(f["code"], str) or not CODE_RE.match(f["code"]):
+            fail(f"{w}: malformed diagnostic code {f['code']!r}")
+        if f["severity"] not in SEVERITIES:
+            fail(f"{w}: unknown severity {f['severity']!r}")
+        if f["stage"] is not None and not (
+            is_nat(f["stage"]) and f["stage"] < len(stages)
+        ):
+            fail(f"{w}: stage {f['stage']!r} out of range")
+        if not isinstance(f["message"], str) or not f["message"]:
+            fail(f"{w}: 'message' must be a non-empty string")
+        by_sev[f["severity"]] += 1
+    for k, sev in (("errors", "error"), ("warnings", "warning"), ("infos", "info")):
+        if dump[k] != by_sev[sev]:
+            fail(f"{where}: '{k}' is {dump[k]} but findings hold {by_sev[sev]}")
+    if dump["ok"] != (by_sev["error"] == 0):
+        fail(f"{where}: 'ok' disagrees with {by_sev['error']} error finding(s)")
+    return dump["model"]
+
+
+def check_lint_all(dump) -> None:
+    """Validate the `lint-plan --all --json` wrapper."""
+    if not isinstance(dump, dict):
+        fail("wrapper: not an object")
+    missing = {"ok", "models", "reports"} - dump.keys()
+    if missing:
+        fail(f"wrapper: missing keys {sorted(missing)}")
+    if not isinstance(dump["ok"], bool):
+        fail("wrapper: 'ok' must be a bool")
+    reports = dump["reports"]
+    if not isinstance(reports, list) or not reports:
+        fail("wrapper: 'reports' must be a non-empty list")
+    if dump["models"] != len(reports):
+        fail(f"wrapper: 'models' is {dump['models']}, holds {len(reports)} reports")
+    names = [
+        check_lint_report(r, where=f"reports[{i}]") for i, r in enumerate(reports)
+    ]
+    if len(set(names)) != len(names):
+        fail("wrapper: duplicate model reports")
+    clean = all(r["errors"] == 0 for r in reports)
+    if dump["ok"] != clean:
+        fail("wrapper: 'ok' disagrees with the per-report error counts")
+    bad = [n for n, r in zip(names, reports) if r["errors"]]
+    if bad:
+        fail(f"analyzer errors in: {', '.join(bad)}")
+    print(f"OK: {len(reports)} analyzer report(s) clean: {', '.join(names)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("plan", type=Path)
     ap.add_argument("--model", help="expected model name", default=None)
+    ap.add_argument(
+        "--lint",
+        action="store_true",
+        help="input is a `gengnn lint-plan --json` analyzer report",
+    )
+    ap.add_argument(
+        "--lint-all",
+        action="store_true",
+        help="input is the `gengnn lint-plan --all --json` wrapper",
+    )
     a = ap.parse_args()
 
     try:
         dump = json.loads(a.plan.read_text())
     except (OSError, json.JSONDecodeError) as e:
         fail(f"{a.plan}: unreadable plan dump: {e}")
+
+    if a.lint_all:
+        check_lint_all(dump)
+        return
+    if a.lint:
+        model = check_lint_report(dump, want_model=a.model)
+        if dump["errors"]:
+            fail(f"{model}: analyzer reports {dump['errors']} error(s)")
+        print(f"OK: {a.plan} — analyzer report for {model} is clean")
+        return
 
     if not isinstance(dump, dict):
         fail("top level is not an object")

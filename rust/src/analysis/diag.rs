@@ -1,0 +1,239 @@
+//! Diagnostic vocabulary of the plan analyzer: stable codes, severity
+//! levels, and the [`Diagnostic`] record the passes emit.
+//!
+//! Codes are part of the tool contract — `gengnn lint-plan --json`
+//! emits them verbatim, `python/tools/check_plan_schema.py` validates
+//! their format, the mutation harness in `rust/tests/plan_lint.rs`
+//! asserts one specific code per corruption class, and
+//! `docs/STATIC_ANALYSIS.md` documents them. Renaming a code is a
+//! breaking change to all four.
+
+use std::fmt;
+
+/// How bad a finding is. `Error` findings fail the lowering gate and
+/// give `lint-plan` a nonzero exit; `Warning`/`Info` findings are
+/// reported but do not reject the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    /// Stable identifier used in the JSON findings report.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Every distinct defect class the analyzer can report. The letter
+/// groups the pass that finds it: `P` plan metadata, `S` shape chain,
+/// `D` register dataflow, `R` readout, `E` edge-input contract,
+/// `V` virtual-node state, `W` weight audit, `F` fusion safety,
+/// `I` informational notes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Code {
+    /// `GN-P01` — degenerate plan metadata (zero `n_max`/`in_dim`/`out_dim`).
+    DegeneratePlan,
+    /// `GN-S01` — a stage's weight shape does not chain with the live width.
+    StageWidthMismatch,
+    /// `GN-S02` — the terminal width differs from the artifact `out_dim`.
+    TerminalWidthMismatch,
+    /// `GN-S03` — attention heads/logit vectors inconsistent with the width.
+    AttentionShapeMismatch,
+    /// `GN-S04` — virtual-node state or MLP widths inconsistent with `h`.
+    VirtualNodeShapeMismatch,
+    /// `GN-D01` — an aggregation would overwrite an unconsumed register.
+    AggregateOverwrite,
+    /// `GN-D02` — a combine stage reads the register before any write.
+    CombineWithoutAggregate,
+    /// `GN-D03` — the plan ends with an unconsumed aggregation register.
+    DanglingAggregate,
+    /// `GN-D04` — readout fires while an aggregation is still pending.
+    ReadoutOverPendingAggregate,
+    /// `GN-R01` — the plan never collapses to the output shape.
+    MissingReadout,
+    /// `GN-R02` — a non-head stage appears after the readout.
+    StageAfterReadout,
+    /// `GN-R03` — readout kind contradicts the plan's output level.
+    ReadoutLevelMismatch,
+    /// `GN-E01` — edge aggregation without (or mismatching) edge features.
+    EdgeDataContract,
+    /// `GN-E02` — declared edge features are never consumed.
+    UnusedEdgeInput,
+    /// `GN-V01` — a virtual-node stage with no `vn_init` state.
+    MissingVnState,
+    /// `GN-V02` — `vn_init` state that no stage ever touches.
+    UnusedVnState,
+    /// `GN-W01` — drawn weight scalars differ from the params the plan carries.
+    WeightStreamMismatch,
+    /// `GN-W02` — a parameter value is NaN or infinite.
+    NonFiniteParam,
+    /// `GN-W03` — a parameter tensor is malformed (zero dims / wrong length).
+    MalformedParam,
+    /// `GN-F01` — a stage carries no fusion-safety argument; the fused
+    /// path must refuse this plan.
+    FusionUnsafeStage,
+    /// `GN-F02` — an order-sensitive f32 reduction whose fused
+    /// evaluation order could diverge from per-request order.
+    FusedOrderDivergence,
+    /// `GN-I01` — note: order-sensitive reductions present, all walked
+    /// in ascending node order on both execution paths.
+    ReductionOrderNote,
+}
+
+impl Code {
+    /// The stable wire identifier (`GN-<pass letter><2 digits>`).
+    pub fn id(&self) -> &'static str {
+        match self {
+            Code::DegeneratePlan => "GN-P01",
+            Code::StageWidthMismatch => "GN-S01",
+            Code::TerminalWidthMismatch => "GN-S02",
+            Code::AttentionShapeMismatch => "GN-S03",
+            Code::VirtualNodeShapeMismatch => "GN-S04",
+            Code::AggregateOverwrite => "GN-D01",
+            Code::CombineWithoutAggregate => "GN-D02",
+            Code::DanglingAggregate => "GN-D03",
+            Code::ReadoutOverPendingAggregate => "GN-D04",
+            Code::MissingReadout => "GN-R01",
+            Code::StageAfterReadout => "GN-R02",
+            Code::ReadoutLevelMismatch => "GN-R03",
+            Code::EdgeDataContract => "GN-E01",
+            Code::UnusedEdgeInput => "GN-E02",
+            Code::MissingVnState => "GN-V01",
+            Code::UnusedVnState => "GN-V02",
+            Code::WeightStreamMismatch => "GN-W01",
+            Code::NonFiniteParam => "GN-W02",
+            Code::MalformedParam => "GN-W03",
+            Code::FusionUnsafeStage => "GN-F01",
+            Code::FusedOrderDivergence => "GN-F02",
+            Code::ReductionOrderNote => "GN-I01",
+        }
+    }
+
+    /// Default severity of this code. Individual findings never
+    /// override this: one code, one severity, so downstream tooling
+    /// can triage on the code alone.
+    pub fn severity(&self) -> Severity {
+        match self {
+            Code::UnusedEdgeInput
+            | Code::UnusedVnState
+            | Code::FusionUnsafeStage
+            | Code::FusedOrderDivergence => Severity::Warning,
+            Code::ReductionOrderNote => Severity::Info,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One analyzer finding: a code, the stage it anchors to (or `None`
+/// for plan-level findings), and a human-readable message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub stage: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn plan(code: Code, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            stage: None,
+            message: message.into(),
+        }
+    }
+
+    pub fn at(code: Code, stage: usize, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            stage: Some(stage),
+            message: message.into(),
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.stage {
+            Some(i) => write!(
+                f,
+                "{} [{}] stage {i}: {}",
+                self.code.id(),
+                self.severity().name(),
+                self.message
+            ),
+            None => write!(
+                f,
+                "{} [{}] plan: {}",
+                self.code.id(),
+                self.severity().name(),
+                self.message
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: &[Code] = &[
+        Code::DegeneratePlan,
+        Code::StageWidthMismatch,
+        Code::TerminalWidthMismatch,
+        Code::AttentionShapeMismatch,
+        Code::VirtualNodeShapeMismatch,
+        Code::AggregateOverwrite,
+        Code::CombineWithoutAggregate,
+        Code::DanglingAggregate,
+        Code::ReadoutOverPendingAggregate,
+        Code::MissingReadout,
+        Code::StageAfterReadout,
+        Code::ReadoutLevelMismatch,
+        Code::EdgeDataContract,
+        Code::UnusedEdgeInput,
+        Code::MissingVnState,
+        Code::UnusedVnState,
+        Code::WeightStreamMismatch,
+        Code::NonFiniteParam,
+        Code::MalformedParam,
+        Code::FusionUnsafeStage,
+        Code::FusedOrderDivergence,
+        Code::ReductionOrderNote,
+    ];
+
+    #[test]
+    fn code_ids_are_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in ALL {
+            let id = c.id();
+            assert!(seen.insert(id), "duplicate id {id}");
+            let b = id.as_bytes();
+            // GN-<letter><digit><digit>, the format the schema checker pins.
+            assert_eq!(b.len(), 6, "{id}");
+            assert_eq!(&id[..3], "GN-", "{id}");
+            assert!(b[3].is_ascii_uppercase(), "{id}");
+            assert!(b[4].is_ascii_digit() && b[5].is_ascii_digit(), "{id}");
+        }
+    }
+
+    #[test]
+    fn severity_orders_error_highest() {
+        assert!(Severity::Error > Severity::Warning);
+        assert!(Severity::Warning > Severity::Info);
+        let d = Diagnostic::at(Code::StageWidthMismatch, 3, "w");
+        assert_eq!(d.severity(), Severity::Error);
+        assert!(d.to_string().contains("GN-S01"));
+        assert!(d.to_string().contains("stage 3"));
+    }
+}

@@ -1,0 +1,294 @@
+//! Fusion-safety facts: per-stage classification of why (or whether)
+//! a stage may run over a block-diagonal fused batch, plus the f32
+//! reduction-order tag the determinism audit reports.
+//!
+//! Before this pass existed, `runtime::interp::execute_fused` *assumed*
+//! every stage kind was safe to evaluate over merged segments — true
+//! for the current component library, but nothing enforced it for the
+//! next stage somebody adds. Now the safety argument is explicit: an
+//! exhaustive `match` (no wildcard arm) classifies every stage, so a
+//! new `Stage` or `Aggregate` variant fails to compile until its
+//! author states a fact, and the fused execution path refuses any plan
+//! containing a [`FusionFact::CrossSegmentUnsafe`] stage instead of
+//! silently miscomputing it.
+
+use anyhow::{bail, Result};
+
+use crate::models::plan::{Aggregate, ModelPlan, Readout, Stage};
+
+/// Why one stage is safe (or not) under fused block-diagonal
+/// execution. Ordered from the strongest safety argument to none.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FusionFact {
+    /// Pure per-row computation — cannot observe fusion at all.
+    RowIndependent,
+    /// Reads other rows only through the in-neighbor view, which is
+    /// block-diagonal under fusion: neighborhoods never cross a
+    /// segment boundary, so each segment sees exactly its own graph.
+    NeighborhoodLocal,
+    /// Touches per-graph state (readout rows, virtual-node vectors)
+    /// and therefore needs the segment table — safe because the fused
+    /// interpreter materializes one state slot per segment.
+    SegmentLocal,
+    /// No safety argument. Fused execution must refuse the plan.
+    CrossSegmentUnsafe,
+}
+
+impl FusionFact {
+    /// Stable identifier used by the `lint-plan` JSON report.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FusionFact::RowIndependent => "row_independent",
+            FusionFact::NeighborhoodLocal => "neighborhood_local",
+            FusionFact::SegmentLocal => "segment_local",
+            FusionFact::CrossSegmentUnsafe => "cross_segment_unsafe",
+        }
+    }
+}
+
+/// How a stage's f32 reduction visits its operands — the determinism
+/// audit compares this order between per-request and fused execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReductionOrder {
+    /// No floating-point reduction at all.
+    None,
+    /// Order-insensitive reduction (elementwise max/min).
+    OrderInsensitive,
+    /// f32 accumulation walking rows in ascending node order — the
+    /// bit-exactness contract shared by the per-request and fused
+    /// paths (segment-relative order equals whole-graph order because
+    /// fused node ids are a shifted, order-preserving renumbering).
+    AscendingNodeOrder,
+}
+
+impl ReductionOrder {
+    /// Stable identifier used by the `lint-plan` JSON report.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReductionOrder::None => "none",
+            ReductionOrder::OrderInsensitive => "order_insensitive",
+            ReductionOrder::AscendingNodeOrder => "ascending_node_order",
+        }
+    }
+
+    pub fn is_order_sensitive(&self) -> bool {
+        matches!(self, ReductionOrder::AscendingNodeOrder)
+    }
+}
+
+/// Classify one stage. Exhaustive on purpose: adding a `Stage` (or
+/// `Aggregate`) variant without classifying it is a compile error, not
+/// a silently-wrong fused batch.
+pub fn stage_fact(stage: &Stage) -> FusionFact {
+    match stage {
+        // Register ops that touch only the current row of `h`/`m`.
+        Stage::Linear { .. }
+        | Stage::TakeAggregate
+        | Stage::EpsCombine { .. }
+        | Stage::ResidualLinear { .. }
+        | Stage::DualLinear { .. }
+        | Stage::Activation(_)
+        | Stage::L2Normalize => FusionFact::RowIndependent,
+        // Neighborhood walks over the block-diagonal in-neighbor view.
+        Stage::SparseAggregate(a) => match a {
+            Aggregate::Sum
+            | Aggregate::Mean
+            | Aggregate::Max
+            | Aggregate::Min
+            | Aggregate::GcnNorm
+            | Aggregate::EdgeReluSum { .. }
+            | Aggregate::PnaTower
+            | Aggregate::DgnDirectional => FusionFact::NeighborhoodLocal,
+        },
+        Stage::EdgeAttention { .. } => FusionFact::NeighborhoodLocal,
+        // Per-graph state: one slot per fused segment.
+        Stage::VirtualNodeAdd | Stage::VirtualNodeUpdate { .. } => FusionFact::SegmentLocal,
+        Stage::Readout(r) => match r {
+            Readout::MaskedMeanPool | Readout::NodeHead => FusionFact::SegmentLocal,
+        },
+    }
+}
+
+/// Tag the f32 reduction order of one stage (exhaustive, like
+/// [`stage_fact`]).
+pub fn stage_reduction(stage: &Stage) -> ReductionOrder {
+    match stage {
+        Stage::Linear { .. }
+        | Stage::TakeAggregate
+        | Stage::EpsCombine { .. }
+        | Stage::ResidualLinear { .. }
+        | Stage::DualLinear { .. }
+        | Stage::Activation(_)
+        // Row-local dot/norm sums have a fixed within-row order that
+        // fusion cannot perturb, so they carry no cross-path hazard.
+        | Stage::L2Normalize
+        | Stage::VirtualNodeAdd => ReductionOrder::None,
+        Stage::SparseAggregate(a) => match a {
+            Aggregate::Max | Aggregate::Min => ReductionOrder::OrderInsensitive,
+            Aggregate::Sum
+            | Aggregate::Mean
+            | Aggregate::GcnNorm
+            | Aggregate::EdgeReluSum { .. }
+            | Aggregate::PnaTower
+            | Aggregate::DgnDirectional => ReductionOrder::AscendingNodeOrder,
+        },
+        // Softmax max/denominator and the weighted sum walk the merged
+        // neighborhood (self included) in ascending node order.
+        Stage::EdgeAttention { .. } => ReductionOrder::AscendingNodeOrder,
+        // Σ_i h_i over the segment's real nodes, ascending.
+        Stage::VirtualNodeUpdate { .. } => ReductionOrder::AscendingNodeOrder,
+        Stage::Readout(r) => match r {
+            Readout::MaskedMeanPool => ReductionOrder::AscendingNodeOrder,
+            Readout::NodeHead => ReductionOrder::None,
+        },
+    }
+}
+
+/// The derived facts for one stage.
+#[derive(Clone, Copy, Debug)]
+pub struct StageFacts {
+    pub fact: FusionFact,
+    pub reduction: ReductionOrder,
+}
+
+/// Facts for a whole plan, index-aligned with `plan.stages`. Derived
+/// once at lowering time and cached by the native executor; the fused
+/// paths (`graph::FusedBatch::fuse_checked`,
+/// `runtime::interp::execute_fused`) consume these instead of assuming
+/// fusability.
+#[derive(Clone, Debug)]
+pub struct PlanFacts {
+    pub stages: Vec<StageFacts>,
+}
+
+impl PlanFacts {
+    pub fn derive(plan: &ModelPlan) -> PlanFacts {
+        PlanFacts {
+            stages: plan
+                .stages
+                .iter()
+                .map(|s| StageFacts {
+                    fact: stage_fact(s),
+                    reduction: stage_reduction(s),
+                })
+                .collect(),
+        }
+    }
+
+    /// Index of the first stage with no fusion-safety argument.
+    pub fn first_unfusable(&self) -> Option<usize> {
+        self.stages
+            .iter()
+            .position(|s| s.fact == FusionFact::CrossSegmentUnsafe)
+    }
+
+    /// Whether every stage carries a fusion-safety argument.
+    pub fn fusable(&self) -> bool {
+        self.first_unfusable().is_none()
+    }
+
+    /// Hard gate used by the fused execution path: error (naming the
+    /// offending stage) when the facts do not justify fusion.
+    pub fn require_fusable(&self, model: &str) -> Result<()> {
+        if let Some(i) = self.first_unfusable() {
+            bail!(
+                "model {model:?}: stage {i} is cross-segment-unsafe — \
+                 fused execution refused (run per-request instead)"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::params::WInit;
+    use crate::models::plan::Act;
+
+    #[test]
+    fn component_library_is_entirely_fusable() {
+        let mut wi = WInit::new(0);
+        let stages = vec![
+            Stage::Linear {
+                w: wi.dense(4, 8),
+                act: Act::Relu,
+            },
+            Stage::SparseAggregate(Aggregate::GcnNorm),
+            Stage::SparseAggregate(Aggregate::Max),
+            Stage::SparseAggregate(Aggregate::EdgeReluSum { bond: wi.dense(3, 8) }),
+            Stage::TakeAggregate,
+            Stage::EpsCombine { eps: 0.1 },
+            Stage::EdgeAttention {
+                heads: 2,
+                a_src: vec![0.0; 8],
+                a_dst: vec![0.0; 8],
+            },
+            Stage::VirtualNodeAdd,
+            Stage::VirtualNodeUpdate {
+                w1: wi.dense(8, 16),
+                w2: wi.dense(16, 8),
+            },
+            Stage::Readout(Readout::MaskedMeanPool),
+            Stage::Readout(Readout::NodeHead),
+        ];
+        for s in &stages {
+            assert_ne!(
+                stage_fact(s),
+                FusionFact::CrossSegmentUnsafe,
+                "{} must carry a safety argument",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_tags_match_the_interpreter_contract() {
+        assert_eq!(
+            stage_reduction(&Stage::SparseAggregate(Aggregate::Max)),
+            ReductionOrder::OrderInsensitive
+        );
+        assert_eq!(
+            stage_reduction(&Stage::SparseAggregate(Aggregate::Sum)),
+            ReductionOrder::AscendingNodeOrder
+        );
+        assert_eq!(
+            stage_reduction(&Stage::Readout(Readout::MaskedMeanPool)),
+            ReductionOrder::AscendingNodeOrder
+        );
+        assert_eq!(
+            stage_reduction(&Stage::Readout(Readout::NodeHead)),
+            ReductionOrder::None
+        );
+        assert!(ReductionOrder::AscendingNodeOrder.is_order_sensitive());
+        assert!(!ReductionOrder::OrderInsensitive.is_order_sensitive());
+    }
+
+    #[test]
+    fn unfusable_facts_fail_the_gate_with_the_stage_index() {
+        let facts = PlanFacts {
+            stages: vec![
+                StageFacts {
+                    fact: FusionFact::RowIndependent,
+                    reduction: ReductionOrder::None,
+                },
+                StageFacts {
+                    fact: FusionFact::CrossSegmentUnsafe,
+                    reduction: ReductionOrder::AscendingNodeOrder,
+                },
+            ],
+        };
+        assert!(!facts.fusable());
+        assert_eq!(facts.first_unfusable(), Some(1));
+        let err = facts.require_fusable("hypothetical").unwrap_err().to_string();
+        assert!(err.contains("stage 1"), "{err}");
+        assert!(err.contains("cross-segment-unsafe"), "{err}");
+    }
+
+    #[test]
+    fn fact_lattice_orders_weakest_last() {
+        assert!(FusionFact::RowIndependent < FusionFact::NeighborhoodLocal);
+        assert!(FusionFact::NeighborhoodLocal < FusionFact::SegmentLocal);
+        assert!(FusionFact::SegmentLocal < FusionFact::CrossSegmentUnsafe);
+    }
+}

@@ -1,0 +1,395 @@
+//! Static analysis over the stage IR: every lowered [`ModelPlan`] is
+//! abstract-interpreted **before** it may serve traffic.
+//!
+//! Three passes (see `docs/STATIC_ANALYSIS.md` for the full catalog):
+//!
+//! 1. **Shape/dataflow** ([`shape`]) — symbolic width chaining,
+//!    write-before-read discipline on the aggregation register and
+//!    virtual-node state, readout compatibility, parameter audit, and
+//!    weight-stream coverage (unused or doubly-consumed params).
+//! 2. **Fusion-safety facts** ([`facts`]) — classifies every stage on
+//!    the `row_independent ⊑ neighborhood_local ⊑ segment_local ⊑
+//!    cross_segment_unsafe` lattice. The fused execution path
+//!    (`graph::FusedBatch::fuse_checked`,
+//!    `runtime::interp::execute_fused`) consumes these derived facts
+//!    instead of assuming every stage kind is safe to merge.
+//! 3. **Determinism audit** — tags each stage's f32 reduction order
+//!    and flags any stage whose fused evaluation order could diverge
+//!    from per-request order.
+//!
+//! Entry points: [`analyze`] / [`analyze_lowered`] produce a
+//! [`Report`]; [`require_clean`] is the mandatory gate
+//! `models::lower::lower` (and therefore `Engine` construction and the
+//! coordinator's `LOAD` path) applies; `gengnn lint-plan` renders the
+//! report for humans and CI.
+
+pub mod diag;
+pub mod facts;
+pub mod shape;
+
+use anyhow::{bail, Result};
+
+use crate::models::plan::ModelPlan;
+use crate::util::json::{self, Json};
+
+pub use diag::{Code, Diagnostic, Severity};
+pub use facts::{FusionFact, PlanFacts, ReductionOrder, StageFacts};
+
+/// Per-stage row of the findings report: the derived facts, keyed by
+/// stage index and name.
+#[derive(Clone, Debug)]
+pub struct StageRow {
+    pub index: usize,
+    pub name: &'static str,
+    pub fact: FusionFact,
+    pub reduction: ReductionOrder,
+}
+
+/// The analyzer's structured verdict on one plan.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub model: String,
+    pub stages: Vec<StageRow>,
+    pub findings: Vec<Diagnostic>,
+    /// Whether every stage carries a fusion-safety argument (derived
+    /// from the facts pass, not from the findings).
+    pub fusable: bool,
+}
+
+impl Report {
+    pub fn count(&self, s: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity() == s).count()
+    }
+
+    /// No `Error`-severity findings: the plan may be deployed.
+    pub fn ok(&self) -> bool {
+        self.count(Severity::Error) == 0
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.findings
+            .iter()
+            .find(|f| f.severity() == Severity::Error)
+    }
+
+    pub fn has_code(&self, code: Code) -> bool {
+        self.findings.iter().any(|f| f.code == code)
+    }
+
+    /// The `gengnn lint-plan --json` schema, validated by
+    /// `python/tools/check_plan_schema.py --lint`.
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("index", json::num(s.index as f64)),
+                    ("stage", Json::Str(s.name.to_string())),
+                    ("fusion", Json::Str(s.fact.name().to_string())),
+                    ("reduction", Json::Str(s.reduction.name().to_string())),
+                ])
+            })
+            .collect();
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("code", Json::Str(f.code.id().to_string())),
+                    ("severity", Json::Str(f.severity().name().to_string())),
+                    (
+                        "stage",
+                        f.stage.map_or(Json::Null, |i| json::num(i as f64)),
+                    ),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("ok", Json::Bool(self.ok())),
+            ("fusable", Json::Bool(self.fusable)),
+            ("errors", json::num(self.count(Severity::Error) as f64)),
+            ("warnings", json::num(self.count(Severity::Warning) as f64)),
+            ("infos", json::num(self.count(Severity::Info) as f64)),
+            ("stages", Json::Arr(stages)),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Human-readable rendering for `gengnn lint-plan`.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{}: {} ({} stages, fusable: {})",
+            self.model,
+            if self.ok() { "PASS" } else { "FAIL" },
+            self.stages.len(),
+            if self.fusable { "yes" } else { "no" },
+        );
+        let _ = writeln!(
+            s,
+            "{:>3}  {:<18} {:<22} {}",
+            "#", "stage", "fusion", "reduction"
+        );
+        for row in &self.stages {
+            let _ = writeln!(
+                s,
+                "{:>3}  {:<18} {:<22} {}",
+                row.index,
+                row.name,
+                row.fact.name(),
+                row.reduction.name()
+            );
+        }
+        for f in &self.findings {
+            let _ = writeln!(s, "  {f}");
+        }
+        let _ = writeln!(
+            s,
+            "{} error(s), {} warning(s), {} note(s)",
+            self.count(Severity::Error),
+            self.count(Severity::Warning),
+            self.count(Severity::Info)
+        );
+        s
+    }
+}
+
+/// Analyze a plan assembled without a seeded weight stream (tests,
+/// hand-built plans). Skips the weight-coverage pass.
+pub fn analyze(plan: &ModelPlan) -> Report {
+    analyze_inner(plan, None)
+}
+
+/// Analyze a freshly-lowered plan whose weights came from a counted
+/// [`crate::models::params::WInit`] stream; `drawn_params` enables the
+/// weight-coverage check.
+pub fn analyze_lowered(plan: &ModelPlan, drawn_params: usize) -> Report {
+    analyze_inner(plan, Some(drawn_params))
+}
+
+fn analyze_inner(plan: &ModelPlan, drawn_params: Option<usize>) -> Report {
+    let mut findings = shape::check(plan, drawn_params);
+    let facts = PlanFacts::derive(plan);
+    let stages: Vec<StageRow> = plan
+        .stages
+        .iter()
+        .zip(&facts.stages)
+        .enumerate()
+        .map(|(index, (stage, f))| StageRow {
+            index,
+            name: stage.name(),
+            fact: f.fact,
+            reduction: f.reduction,
+        })
+        .collect();
+    audit_determinism(&stages, &mut findings);
+    Report {
+        model: plan.model.clone(),
+        stages,
+        findings,
+        fusable: facts.fusable(),
+    }
+}
+
+/// The determinism audit: a stage's fused evaluation order can only
+/// diverge from per-request order when the stage has no fusion-safety
+/// argument (every classified fact preserves segment-relative node
+/// order — the bit-exactness property the fused_equivalence suite
+/// pins). Flag exactly those, distinguishing the actively dangerous
+/// case (order-sensitive f32 reduction) from the merely unproven one.
+fn audit_determinism(stages: &[StageRow], findings: &mut Vec<Diagnostic>) {
+    let mut order_sensitive = 0usize;
+    let mut all_safe = true;
+    for row in stages {
+        if row.reduction.is_order_sensitive() {
+            order_sensitive += 1;
+        }
+        if row.fact == FusionFact::CrossSegmentUnsafe {
+            all_safe = false;
+            let (code, what) = if row.reduction.is_order_sensitive() {
+                (
+                    Code::FusedOrderDivergence,
+                    "order-sensitive f32 reduction with no fusion-safety argument: \
+                     fused evaluation order could diverge from per-request order",
+                )
+            } else {
+                (
+                    Code::FusionUnsafeStage,
+                    "no fusion-safety argument: the fused path will refuse this plan",
+                )
+            };
+            findings.push(Diagnostic::at(code, row.index, format!("{}: {what}", row.name)));
+        }
+    }
+    if all_safe && order_sensitive > 0 {
+        findings.push(Diagnostic::plan(
+            Code::ReductionOrderNote,
+            format!(
+                "{order_sensitive} order-sensitive f32 reduction stage(s); per-request \
+                 and fused execution both walk ascending node order, so outputs are \
+                 bit-identical"
+            ),
+        ));
+    }
+}
+
+/// The mandatory lowering gate: reject any plan with `Error` findings.
+pub fn require_clean(report: &Report) -> Result<()> {
+    if let Some(first) = report.first_error() {
+        bail!(
+            "plan analysis rejected model {:?}: {} error(s), first: {first}",
+            report.model,
+            report.count(Severity::Error)
+        );
+    }
+    Ok(())
+}
+
+/// Derive the fusion-safety facts for a plan (cached by the native
+/// executor at build time).
+pub fn plan_facts(plan: &ModelPlan) -> PlanFacts {
+    PlanFacts::derive(plan)
+}
+
+/// Gate used by the fused execution path: error unless every stage of
+/// the plan carries a fusion-safety argument.
+pub fn assert_fusable(plan: &ModelPlan) -> Result<()> {
+    PlanFacts::derive(plan).require_fusable(&plan.model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::params::WInit;
+    use crate::models::plan::{Act, Aggregate, Readout, Stage};
+
+    fn tiny_plan() -> ModelPlan {
+        let mut wi = WInit::new(0);
+        ModelPlan {
+            model: "tiny".into(),
+            n_max: 8,
+            in_dim: 4,
+            out_dim: 1,
+            edge_dim: 0,
+            node_level: false,
+            vn_init: None,
+            stages: vec![
+                Stage::Linear {
+                    w: wi.dense(4, 8),
+                    act: Act::Relu,
+                },
+                Stage::SparseAggregate(Aggregate::GcnNorm),
+                Stage::TakeAggregate,
+                Stage::Readout(Readout::MaskedMeanPool),
+                Stage::Linear {
+                    w: wi.dense(8, 1),
+                    act: Act::None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn clean_plan_passes_with_a_determinism_note() {
+        let p = tiny_plan();
+        let r = analyze(&p);
+        assert!(r.ok(), "{:?}", r.findings);
+        assert!(r.fusable);
+        assert!(require_clean(&r).is_ok());
+        assert!(r.has_code(Code::ReductionOrderNote));
+        assert_eq!(r.stages.len(), p.stages.len());
+        assert!(assert_fusable(&p).is_ok());
+    }
+
+    #[test]
+    fn weight_coverage_flags_both_directions() {
+        let p = tiny_plan();
+        let carried = p.param_count();
+        assert!(analyze_lowered(&p, carried).ok());
+        let over = analyze_lowered(&p, carried + 8);
+        assert!(over.has_code(Code::WeightStreamMismatch));
+        assert!(over.findings.iter().any(|f| f.message.contains("unused")));
+        let under = analyze_lowered(&p, carried - 1);
+        assert!(under.has_code(Code::WeightStreamMismatch));
+        assert!(under
+            .findings
+            .iter()
+            .any(|f| f.message.contains("doubly-consumed")));
+        assert!(require_clean(&over).is_err());
+    }
+
+    #[test]
+    fn recovery_reports_multiple_independent_defects() {
+        let mut p = tiny_plan();
+        // Defect 1: head expects the wrong width.
+        if let Stage::Linear { w, .. } = &mut p.stages[4] {
+            w.fin = 5;
+            w.w = vec![0.0; 5];
+        }
+        // Defect 2: a NaN weight in the embed layer.
+        if let Stage::Linear { w, .. } = &mut p.stages[0] {
+            w.w[0] = f32::NAN;
+        }
+        let r = analyze(&p);
+        assert!(r.has_code(Code::StageWidthMismatch));
+        assert!(r.has_code(Code::NonFiniteParam));
+        assert!(r.count(Severity::Error) >= 2, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn unused_inputs_warn_without_failing_the_gate() {
+        let mut p = tiny_plan();
+        p.edge_dim = 3;
+        p.vn_init = Some(vec![0.0; 8]);
+        let r = analyze(&p);
+        assert!(r.has_code(Code::UnusedEdgeInput));
+        assert!(r.has_code(Code::UnusedVnState));
+        assert!(r.ok(), "warnings must not reject: {:?}", r.findings);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = analyze(&tiny_plan());
+        let v = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str().unwrap(), "tiny");
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        assert!(v.get("fusable").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("stages").unwrap().as_arr().unwrap().len(), 5);
+        let findings = v.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), r.findings.len());
+        for f in findings {
+            assert!(f.get("code").unwrap().as_str().unwrap().starts_with("GN-"));
+        }
+        assert!(r.render_text().contains("PASS"));
+    }
+
+    #[test]
+    fn analyzer_subsumes_validate_on_simple_mutations() {
+        // Every summaries() rejection must map to at least one Error
+        // finding (the full matrix lives in rust/tests/plan_lint.rs).
+        let mutations: Vec<(&str, Box<dyn Fn(&mut ModelPlan)>)> = vec![
+            ("drop take", Box::new(|p| drop(p.stages.remove(2)))),
+            ("drop readout", Box::new(|p| drop(p.stages.remove(3)))),
+            (
+                "double aggregate",
+                Box::new(|p| p.stages.insert(2, Stage::SparseAggregate(Aggregate::Sum))),
+            ),
+            (
+                "post-readout node stage",
+                Box::new(|p| p.stages.insert(4, Stage::L2Normalize)),
+            ),
+        ];
+        for (name, mutate) in mutations {
+            let mut p = tiny_plan();
+            mutate(&mut p);
+            assert!(p.validate().is_err(), "{name}: validate must reject");
+            let r = analyze(&p);
+            assert!(!r.ok(), "{name}: analyzer must also reject");
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! The shape/dataflow pass: an abstract interpreter over the stage
+//! sequence that tracks the symbolic machine state — live width `h`,
+//! pending aggregation register `m`, pooled flag — plus the plan-level
+//! input contracts (edge features, virtual-node state, weight stream).
+//!
+//! Unlike `ModelPlan::summaries`, which bails on the first defect (the
+//! right behavior for an execution gate), this pass **recovers**: a
+//! width mismatch is recorded and the walk continues with the stage's
+//! declared output width, so one lint run surfaces every independent
+//! defect in a corrupted plan instead of the first. The analyzer is a
+//! strict superset of `summaries`: every plan `summaries` rejects
+//! yields at least one `Error` finding here (pinned by the mutation
+//! harness in `rust/tests/plan_lint.rs`).
+
+use crate::models::params::Dense;
+use crate::models::plan::{Aggregate, ModelPlan, Readout, Stage};
+
+use super::diag::{Code, Diagnostic};
+
+/// Run the shape/dataflow pass. `drawn_params` is the number of
+/// scalars the lowering drew from the seeded weight stream
+/// ([`crate::models::params::WInit::drawn`]) when known; `None` skips
+/// the weight-coverage check (plans assembled by hand in tests).
+pub fn check(plan: &ModelPlan, drawn_params: Option<usize>) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    check_metadata(plan, &mut d);
+    check_stage_chain(plan, &mut d);
+    check_input_consumption(plan, &mut d);
+    check_weights(plan, &mut d);
+    if let Some(drawn) = drawn_params {
+        check_weight_coverage(plan, drawn, &mut d);
+    }
+    d
+}
+
+fn check_metadata(plan: &ModelPlan, d: &mut Vec<Diagnostic>) {
+    if plan.n_max == 0 || plan.in_dim == 0 || plan.out_dim == 0 {
+        d.push(Diagnostic::plan(
+            Code::DegeneratePlan,
+            format!(
+                "degenerate dims (n_max {}, in_dim {}, out_dim {})",
+                plan.n_max, plan.in_dim, plan.out_dim
+            ),
+        ));
+    }
+}
+
+/// The abstract stage walk. Mirrors the interpreter's two-register
+/// machine symbolically; recovery rule on a width defect is "trust the
+/// stage's declared output shape and keep walking".
+fn check_stage_chain(plan: &ModelPlan, d: &mut Vec<Diagnostic>) {
+    let mut h = plan.in_dim;
+    // Width of the pending aggregation register, if any write reached it.
+    let mut m: Option<usize> = None;
+    let mut pooled = false;
+    for (i, stage) in plan.stages.iter().enumerate() {
+        if pooled && !matches!(stage, Stage::Linear { .. } | Stage::Activation(_)) {
+            d.push(Diagnostic::at(
+                Code::StageAfterReadout,
+                i,
+                format!("{} after readout (only head linear/activation is legal)", stage.name()),
+            ));
+        }
+        match stage {
+            Stage::Linear { w, .. } => {
+                if w.fin != h {
+                    d.push(Diagnostic::at(
+                        Code::StageWidthMismatch,
+                        i,
+                        format!("linear expects width {}, h is {h}", w.fin),
+                    ));
+                }
+                h = w.fout;
+            }
+            Stage::SparseAggregate(a) => {
+                if m.is_some() {
+                    d.push(Diagnostic::at(
+                        Code::AggregateOverwrite,
+                        i,
+                        "aggregation would overwrite an unconsumed aggregation register",
+                    ));
+                }
+                if let Aggregate::EdgeReluSum { bond } = a {
+                    if plan.edge_dim == 0 {
+                        d.push(Diagnostic::at(
+                            Code::EdgeDataContract,
+                            i,
+                            "edge aggregation in a plan that declares no edge features",
+                        ));
+                    } else if bond.fin != plan.edge_dim || bond.fout != h {
+                        d.push(Diagnostic::at(
+                            Code::EdgeDataContract,
+                            i,
+                            format!(
+                                "bond {}x{} does not map edge_dim {} onto h({h})",
+                                bond.fin, bond.fout, plan.edge_dim
+                            ),
+                        ));
+                    }
+                }
+                m = Some(a.out_width(h));
+            }
+            Stage::TakeAggregate => match m.take() {
+                Some(mw) => h = mw,
+                None => d.push(no_pending(i, "take_aggregate")),
+            },
+            Stage::EpsCombine { .. } => match m.take() {
+                Some(mw) if mw != h => d.push(Diagnostic::at(
+                    Code::StageWidthMismatch,
+                    i,
+                    format!("eps_combine widths differ (m {mw} vs h {h})"),
+                )),
+                Some(_) => {}
+                None => d.push(no_pending(i, "eps_combine")),
+            },
+            Stage::ResidualLinear { w, .. } => match m.take() {
+                Some(mw) => {
+                    if w.fin != mw || w.fout != h {
+                        d.push(Diagnostic::at(
+                            Code::StageWidthMismatch,
+                            i,
+                            format!(
+                                "residual {}x{} does not map m({mw}) onto h({h})",
+                                w.fin, w.fout
+                            ),
+                        ));
+                    }
+                }
+                None => d.push(no_pending(i, "residual_linear")),
+            },
+            Stage::DualLinear { w_self, w_nbr } => {
+                match m.take() {
+                    Some(mw) => {
+                        if w_self.fin != h || w_nbr.fin != mw || w_self.fout != w_nbr.fout {
+                            d.push(Diagnostic::at(
+                                Code::StageWidthMismatch,
+                                i,
+                                format!(
+                                    "dual_linear self {}x{} / nbr {}x{} does not combine \
+                                     h({h}) with m({mw})",
+                                    w_self.fin, w_self.fout, w_nbr.fin, w_nbr.fout
+                                ),
+                            ));
+                        }
+                    }
+                    None => d.push(no_pending(i, "dual_linear")),
+                }
+                h = w_self.fout;
+            }
+            Stage::EdgeAttention { heads, a_src, a_dst } => {
+                if *heads == 0 || h % heads != 0 {
+                    d.push(Diagnostic::at(
+                        Code::AttentionShapeMismatch,
+                        i,
+                        format!("width {h} not divisible into {heads} heads"),
+                    ));
+                }
+                if a_src.len() != h || a_dst.len() != h {
+                    d.push(Diagnostic::at(
+                        Code::AttentionShapeMismatch,
+                        i,
+                        format!(
+                            "attention logit vectors ({}, {}) must both have width {h}",
+                            a_src.len(),
+                            a_dst.len()
+                        ),
+                    ));
+                }
+            }
+            Stage::Activation(_) | Stage::L2Normalize => {}
+            Stage::VirtualNodeAdd | Stage::VirtualNodeUpdate { .. } => {
+                match plan.vn_init.as_ref() {
+                    None => d.push(Diagnostic::at(
+                        Code::MissingVnState,
+                        i,
+                        format!("{} in a plan with no vn_init state", stage.name()),
+                    )),
+                    Some(vn) if vn.len() != h => d.push(Diagnostic::at(
+                        Code::VirtualNodeShapeMismatch,
+                        i,
+                        format!("vn state width {} vs h {h}", vn.len()),
+                    )),
+                    Some(_) => {}
+                }
+                if let Stage::VirtualNodeUpdate { w1, w2 } = stage {
+                    if w1.fin != h || w2.fout != h || w1.fout != w2.fin {
+                        d.push(Diagnostic::at(
+                            Code::VirtualNodeShapeMismatch,
+                            i,
+                            format!(
+                                "vn mlp {}x{} -> {}x{} must chain and map {h} -> {h}",
+                                w1.fin, w1.fout, w2.fin, w2.fout
+                            ),
+                        ));
+                    }
+                }
+            }
+            Stage::Readout(r) => {
+                if m.is_some() {
+                    d.push(Diagnostic::at(
+                        Code::ReadoutOverPendingAggregate,
+                        i,
+                        "readout with an unconsumed aggregation register",
+                    ));
+                    m = None;
+                }
+                if !pooled {
+                    match r {
+                        Readout::NodeHead if !plan.node_level => d.push(Diagnostic::at(
+                            Code::ReadoutLevelMismatch,
+                            i,
+                            "node_head readout in a graph-level plan",
+                        )),
+                        Readout::MaskedMeanPool if plan.node_level => d.push(Diagnostic::at(
+                            Code::ReadoutLevelMismatch,
+                            i,
+                            "pooled readout in a node-level plan",
+                        )),
+                        _ => {}
+                    }
+                }
+                pooled = true;
+            }
+        }
+    }
+    if m.is_some() {
+        d.push(Diagnostic::plan(
+            Code::DanglingAggregate,
+            "plan ends with an unconsumed aggregation register",
+        ));
+    }
+    if !pooled {
+        d.push(Diagnostic::plan(
+            Code::MissingReadout,
+            "plan never collapses to the output shape (no readout stage)",
+        ));
+    } else if h != plan.out_dim {
+        d.push(Diagnostic::plan(
+            Code::TerminalWidthMismatch,
+            format!("plan ends at width {h}, artifact wants {}", plan.out_dim),
+        ));
+    }
+}
+
+/// Declared inputs that no stage reads are latent bugs in a lowering —
+/// the dual of the read-before-write register checks above.
+fn check_input_consumption(plan: &ModelPlan, d: &mut Vec<Diagnostic>) {
+    let consumes_edges = plan
+        .stages
+        .iter()
+        .any(|s| matches!(s, Stage::SparseAggregate(Aggregate::EdgeReluSum { .. })));
+    if plan.edge_dim > 0 && !consumes_edges {
+        d.push(Diagnostic::plan(
+            Code::UnusedEdgeInput,
+            format!("edge_dim {} declared but no stage consumes edge features", plan.edge_dim),
+        ));
+    }
+    let touches_vn = plan
+        .stages
+        .iter()
+        .any(|s| matches!(s, Stage::VirtualNodeAdd | Stage::VirtualNodeUpdate { .. }));
+    if plan.vn_init.is_some() && !touches_vn {
+        d.push(Diagnostic::plan(
+            Code::UnusedVnState,
+            "vn_init state present but no stage touches the virtual node",
+        ));
+    }
+}
+
+/// Parameter audit: every tensor well-formed and every value finite.
+/// A NaN weight is legal f32 and would propagate silently through the
+/// whole forward pass; it can only come from a corrupted lowering.
+fn check_weights(plan: &ModelPlan, d: &mut Vec<Diagnostic>) {
+    for (i, stage) in plan.stages.iter().enumerate() {
+        match stage {
+            Stage::Linear { w, .. } | Stage::ResidualLinear { w, .. } => {
+                check_dense(i, "w", w, d);
+            }
+            Stage::SparseAggregate(Aggregate::EdgeReluSum { bond }) => {
+                check_dense(i, "bond", bond, d);
+            }
+            Stage::SparseAggregate(_) => {}
+            Stage::DualLinear { w_self, w_nbr } => {
+                check_dense(i, "w_self", w_self, d);
+                check_dense(i, "w_nbr", w_nbr, d);
+            }
+            Stage::EdgeAttention { a_src, a_dst, .. } => {
+                check_finite(i, "a_src", a_src, d);
+                check_finite(i, "a_dst", a_dst, d);
+            }
+            Stage::VirtualNodeUpdate { w1, w2 } => {
+                check_dense(i, "w1", w1, d);
+                check_dense(i, "w2", w2, d);
+            }
+            Stage::EpsCombine { eps } => {
+                if !eps.is_finite() {
+                    d.push(Diagnostic::at(
+                        Code::NonFiniteParam,
+                        i,
+                        format!("eps is {eps}"),
+                    ));
+                }
+            }
+            Stage::TakeAggregate
+            | Stage::Activation(_)
+            | Stage::L2Normalize
+            | Stage::VirtualNodeAdd
+            | Stage::Readout(_) => {}
+        }
+    }
+    if let Some(vn) = plan.vn_init.as_ref() {
+        if vn.iter().any(|v| !v.is_finite()) {
+            d.push(Diagnostic::plan(
+                Code::NonFiniteParam,
+                "vn_init contains a non-finite value",
+            ));
+        }
+    }
+}
+
+fn check_dense(stage: usize, label: &str, w: &Dense, d: &mut Vec<Diagnostic>) {
+    if w.fin == 0 || w.fout == 0 || w.w.len() != w.fin * w.fout || w.b.len() != w.fout {
+        d.push(Diagnostic::at(
+            Code::MalformedParam,
+            stage,
+            format!(
+                "{label} declares {}x{} but carries {} weights / {} biases",
+                w.fin,
+                w.fout,
+                w.w.len(),
+                w.b.len()
+            ),
+        ));
+        return;
+    }
+    check_finite(stage, label, &w.w, d);
+    check_finite(stage, label, &w.b, d);
+}
+
+fn check_finite(stage: usize, label: &str, v: &[f32], d: &mut Vec<Diagnostic>) {
+    if let Some(j) = v.iter().position(|x| !x.is_finite()) {
+        d.push(Diagnostic::at(
+            Code::NonFiniteParam,
+            stage,
+            format!("{label}[{j}] is {}", v[j]),
+        ));
+    }
+}
+
+/// Weight-stream coverage: the lowering drew `drawn` scalars from the
+/// seeded stream; the plan carries `param_count()` of them. Any gap
+/// means parameters were drawn and dropped (stream position silently
+/// shifted — every later tensor is wrong vs the AOT artifacts) or a
+/// tensor is consumed twice.
+fn check_weight_coverage(plan: &ModelPlan, drawn: usize, d: &mut Vec<Diagnostic>) {
+    let carried = plan.param_count();
+    if drawn != carried {
+        let what = if drawn > carried {
+            "drawn but never carried by a stage (unused parameters)"
+        } else {
+            "carried by stages but never drawn (doubly-consumed parameters)"
+        };
+        d.push(Diagnostic::plan(
+            Code::WeightStreamMismatch,
+            format!(
+                "weight stream drew {drawn} scalars, plan carries {carried}: \
+                 {} scalars {what}",
+                drawn.abs_diff(carried)
+            ),
+        ));
+    }
+}
+
+fn no_pending(stage: usize, what: &str) -> Diagnostic {
+    Diagnostic::at(
+        Code::CombineWithoutAggregate,
+        stage,
+        format!("{what} reads the aggregation register before any aggregation wrote it"),
+    )
+}

@@ -143,7 +143,7 @@ impl Metrics {
     /// Pre-create a model's shard so hot-path recording never needs the
     /// registry write lock. Idempotent.
     pub fn register_model(&self, model: &str) {
-        let mut shards = self.shards.write().unwrap();
+        let mut shards = crate::util::sync::write(&self.shards);
         shards.entry(model.to_string()).or_default();
     }
 
@@ -152,7 +152,7 @@ impl Metrics {
     /// handed-out [`LaneCounters`] Arcs) live; a different size resets
     /// the pool's counters.
     pub fn register_lanes(&self, n: usize) {
-        let mut lanes = self.lanes.write().unwrap();
+        let mut lanes = crate::util::sync::write(&self.lanes);
         if lanes.len() == n {
             return;
         }
@@ -162,15 +162,15 @@ impl Metrics {
 
     /// The counter block for lane `i` (panics if unregistered).
     pub fn lane(&self, i: usize) -> Arc<LaneCounters> {
-        Arc::clone(&self.lanes.read().unwrap()[i])
+        Arc::clone(&crate::util::sync::read(&self.lanes)[i])
     }
 
     /// Record one completed request: end-to-end and execute-only times.
     pub fn record(&self, model: &str, e2e_secs: f64, exec_secs: f64, ok: bool) {
         {
-            let shards = self.shards.read().unwrap();
+            let shards = crate::util::sync::read(&self.shards);
             if let Some(shard) = shards.get(model) {
-                shard.lock().unwrap().record(e2e_secs, exec_secs, ok);
+                crate::util::sync::lock(shard).record(e2e_secs, exec_secs, ok);
                 return;
             }
         }
@@ -213,15 +213,21 @@ impl Metrics {
     }
 
     pub fn total_completed(&self) -> u64 {
-        let shards = self.shards.read().unwrap();
-        shards.values().map(|m| m.lock().unwrap().completed).sum()
+        let shards = crate::util::sync::read(&self.shards);
+        shards
+            .values()
+            .map(|m| crate::util::sync::lock(m).completed)
+            .sum()
     }
 
     /// Requests that produced an error response (failed routes and
     /// executor errors) — admission rejections are counted separately.
     pub fn total_failed(&self) -> u64 {
-        let shards = self.shards.read().unwrap();
-        shards.values().map(|m| m.lock().unwrap().failed).sum()
+        let shards = crate::util::sync::read(&self.shards);
+        shards
+            .values()
+            .map(|m| crate::util::sync::lock(m).failed)
+            .sum()
     }
 
     /// Aggregate throughput (completed/sec since server start).
@@ -232,11 +238,11 @@ impl Metrics {
     /// Per-model summaries; models registered but never exercised are
     /// omitted.
     pub fn summaries(&self) -> Vec<Summary> {
-        let shards = self.shards.read().unwrap();
+        let shards = crate::util::sync::read(&self.shards);
         shards
             .iter()
             .filter_map(|(name, m)| {
-                let mut e = m.lock().unwrap();
+                let mut e = crate::util::sync::lock(m);
                 if e.completed == 0 && e.failed == 0 {
                     return None;
                 }
@@ -255,7 +261,7 @@ impl Metrics {
 
     /// Per-lane counter snapshots (empty when no lane pool registered).
     pub fn lane_summaries(&self) -> Vec<LaneSummary> {
-        let lanes = self.lanes.read().unwrap();
+        let lanes = crate::util::sync::read(&self.lanes);
         lanes
             .iter()
             .enumerate()

@@ -1,3 +1,8 @@
+// The coordinator hot path must degrade, not panic: poisoned locks
+// recover through `crate::util::sync`; anything that must hold uses
+// `.expect()` with a stated invariant. Tests may still unwrap.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 //! The Layer-3 streaming coordinator: raw COO graphs in, predictions
 //! out, Python nowhere on the path (paper §3.1 "Real-time": "directly
 //! takes in raw graphs and processes on FPGA" — here, on the PJRT

@@ -346,13 +346,18 @@ fn steal(lane: usize, queues: &[Channel<Vec<Prepared>>]) -> Option<Vec<Prepared>
 
 /// Attempt one fused interpreter pass over a same-model chunk.
 /// `None` means the fused path declined — mixed models (defensive;
-/// the batcher emits same-model batches), a non-native backend, or any
-/// fusion/validation error — and the caller falls back to per-request
-/// execution, whose results and error strings are the per-request
-/// contract.
+/// the batcher emits same-model batches), a plan the static analyzer
+/// derived no fusion-safety facts for (consulted via
+/// [`Engine::fusable`] before any merge work happens), a non-native
+/// backend, or any fusion/validation error — and the caller falls
+/// back to per-request execution, whose results and error strings are
+/// the per-request contract.
 fn try_fuse(engine: &mut Engine, chunk: &[Prepared]) -> Option<(Vec<Vec<f32>>, Duration)> {
     let model = &chunk[0].model;
     if chunk.iter().any(|p| &p.model != model) {
+        return None;
+    }
+    if !engine.fusable(model) {
         return None;
     }
     let parts: Vec<&GraphBatch> = chunk.iter().map(|p| &p.batch).collect();

@@ -133,6 +133,22 @@ impl FusedBatch {
         })
     }
 
+    /// [`FusedBatch::fuse`] behind the static analyzer's derived
+    /// fusion-safety facts: refuses to build the block-diagonal merge
+    /// at all when some stage of the plan that will execute it carries
+    /// no safety argument. This is how the fused path consumes the
+    /// facts instead of assuming every stage kind is mergeable — a
+    /// future cross-segment-unsafe stage is turned away here (and
+    /// again at `runtime::interp::execute_fused`), never miscomputed.
+    pub fn fuse_checked(
+        parts: &[&GraphBatch],
+        facts: &crate::analysis::PlanFacts,
+        model: &str,
+    ) -> Result<FusedBatch> {
+        facts.require_fusable(model)?;
+        FusedBatch::fuse(parts)
+    }
+
     /// The merged block-diagonal COO graph.
     pub fn graph(&self) -> &CooGraph {
         &self.graph
@@ -203,6 +219,29 @@ mod tests {
         assert_eq!(fused.total_nodes(), node_off);
         assert_eq!(fused.graph().num_edges(), edge_off);
         fused.graph().validate().unwrap();
+    }
+
+    #[test]
+    fn fuse_checked_consumes_analyzer_facts() {
+        use crate::analysis::{FusionFact, PlanFacts, ReductionOrder, StageFacts};
+        let a = GraphBatch::ingest(random_coo(&mut Rng::new(3), 2, 0)).unwrap();
+        let safe = PlanFacts {
+            stages: vec![StageFacts {
+                fact: FusionFact::SegmentLocal,
+                reduction: ReductionOrder::AscendingNodeOrder,
+            }],
+        };
+        assert!(FusedBatch::fuse_checked(&[&a], &safe, "m").is_ok());
+        let unsafe_facts = PlanFacts {
+            stages: vec![StageFacts {
+                fact: FusionFact::CrossSegmentUnsafe,
+                reduction: ReductionOrder::None,
+            }],
+        };
+        let err = FusedBatch::fuse_checked(&[&a], &unsafe_facts, "m")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cross-segment-unsafe"), "{err}");
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //!   streaming inference server over raw COO graphs with zero
 //!   preprocessing ([`coordinator`], ingesting through
 //!   [`graph::GraphBatch`]), a wire-level TCP serving front-end with
-//!   an open-loop load generator ([`net`]), a cycle-level simulator of the GenGNN
+//!   an open-loop load generator ([`net`]), a static plan analyzer
+//!   gating every lowering ([`analysis`]), a cycle-level simulator of the GenGNN
 //!   microarchitecture ([`sim`]), an HLS-style resource estimator
 //!   ([`resources`]), and analytic CPU/GPU baselines ([`baselines`]).
 //! * **Layer 2** — JAX forward passes of the representative GNNs
@@ -24,6 +25,7 @@
 //! See `rust/README.md` for the crate layout, the tier-1 verify
 //! command, the backend story, and the artifact flow.
 
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod datagen;

@@ -17,6 +17,11 @@
 //! gengnn plan           dump the lowered stage IR of a manifest model
 //!                       (stage names, shapes, parameter counts;
 //!                       --json for the schema-checked dump)
+//! gengnn lint-plan      run the static plan analyzer on one manifest
+//!                       model (or --all): shape/dataflow findings,
+//!                       fusion-safety facts, determinism audit;
+//!                       --json for the schema-checked findings report;
+//!                       nonzero exit on any error-level finding
 //! gengnn simulate       cycle-level simulation of one model/graph
 //! gengnn resources      Table 4 (+ --detailed component inventory)
 //! gengnn report-fig7    Fig. 7  (MolHIV / MolPCBA latency bars)
@@ -57,8 +62,9 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gengnn <serve|loadgen|infer|plan|simulate|resources|dse|report-fig7|\
-         report-fig8|report-fig9|report-table4|report-table5|selftest> [--flags]"
+        "usage: gengnn <serve|loadgen|infer|plan|lint-plan|simulate|resources|dse|\
+         report-fig7|report-fig8|report-fig9|report-table4|report-table5|selftest> \
+         [--flags]"
     );
 }
 
@@ -68,6 +74,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "loadgen" => cmd_loadgen(Args::parse(rest, &[])?),
         "infer" => cmd_infer(Args::parse(rest, &[])?),
         "plan" => cmd_plan(Args::parse(rest, &["json"])?),
+        "lint-plan" => cmd_lint_plan(Args::parse(rest, &["json", "all"])?),
         "simulate" => cmd_simulate(Args::parse(rest, &[])?),
         "resources" | "report-table4" => {
             cmd_table4(Args::parse(rest, &["detailed"])?)
@@ -289,6 +296,65 @@ fn cmd_plan(a: Args) -> Result<()> {
         println!("{}", plan.to_json()?.to_string_pretty());
     } else {
         print!("{}", plan.render_text()?);
+    }
+    Ok(())
+}
+
+/// `gengnn lint-plan <model|--all> [--json]` — run the static plan
+/// analyzer (`gengnn::analysis`) on lowered manifest models and print
+/// the structured findings report: shape/dataflow diagnostics, the
+/// per-stage fusion-safety facts, and the determinism audit. Exits
+/// nonzero if any model has an error-level finding, which makes the
+/// `make lint-plans` CI step a hard gate.
+fn cmd_lint_plan(a: Args) -> Result<()> {
+    use gengnn::analysis::Severity;
+    use gengnn::util::json::{self, Json};
+    let artifacts = Artifacts::load(a.str_or(
+        "artifacts",
+        Artifacts::default_dir().to_str().unwrap(),
+    ))?;
+    let models: Vec<String> = if a.has("all") {
+        artifacts.model_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        match (a.positional.first(), a.str_opt("model")) {
+            (Some(p), _) => vec![p.clone()],
+            (None, Some(m)) => vec![m.to_string()],
+            (None, None) => {
+                bail!("usage: gengnn lint-plan <model|--all> [--json] [--artifacts DIR]")
+            }
+        }
+    };
+    let mut reports = Vec::new();
+    let mut errors = 0usize;
+    for name in &models {
+        let meta = artifacts.model(name)?;
+        let (_plan, report) =
+            gengnn::models::lower_with_report(meta, artifacts.weight_seed)?;
+        errors += report.count(Severity::Error);
+        reports.push(report);
+    }
+    if a.has("json") {
+        if reports.len() == 1 && !a.has("all") {
+            println!("{}", reports[0].to_json().to_string_pretty());
+        } else {
+            let arr: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+            let wrapper = json::obj(vec![
+                ("ok", Json::Bool(errors == 0)),
+                ("models", json::num(reports.len() as f64)),
+                ("reports", Json::Arr(arr)),
+            ]);
+            println!("{}", wrapper.to_string_pretty());
+        }
+    } else {
+        for r in &reports {
+            print!("{}", r.render_text());
+        }
+    }
+    if errors > 0 {
+        bail!(
+            "plan analysis found {errors} error(s) across {} model(s)",
+            reports.len()
+        );
     }
     Ok(())
 }

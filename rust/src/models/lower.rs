@@ -81,8 +81,24 @@ const REGISTRY: &[Lowering] = &[
 ];
 
 /// Lower a manifest entry to its stage-IR plan, regenerating the
-/// baked-in weights from the artifact seed.
+/// baked-in weights from the artifact seed. The static analyzer
+/// ([`crate::analysis`]) is a mandatory gate here: any `Error`-level
+/// finding rejects the plan before it can serve traffic, which covers
+/// `Engine` construction and the coordinator's `LOAD` path (both lower
+/// through this function).
 pub fn lower(meta: &ModelMeta, weight_seed: u64) -> Result<ModelPlan> {
+    let (plan, report) = lower_with_report(meta, weight_seed)?;
+    crate::analysis::require_clean(&report)?;
+    Ok(plan)
+}
+
+/// Lower and return the full analyzer report alongside the plan —
+/// `gengnn lint-plan` wants every finding (warnings and notes
+/// included), not just the pass/fail verdict [`lower`] enforces.
+pub fn lower_with_report(
+    meta: &ModelMeta,
+    weight_seed: u64,
+) -> Result<(ModelPlan, crate::analysis::Report)> {
     if weight_seed > u32::MAX as u64 {
         bail!("weight_seed {weight_seed} exceeds the scalar MT19937 seeding range");
     }
@@ -118,8 +134,8 @@ pub fn lower(meta: &ModelMeta, weight_seed: u64) -> Result<ModelPlan> {
         vn_init,
         stages,
     };
-    plan.validate()?;
-    Ok(plan)
+    let report = crate::analysis::analyze_lowered(&plan, wi.drawn());
+    Ok((plan, report))
 }
 
 fn edge_dim_of(meta: &ModelMeta) -> usize {
@@ -397,6 +413,27 @@ mod tests {
             plan.validate().unwrap_or_else(|e| panic!("{name}: {e:#}"));
             assert!(plan.param_count() > 0, "{name} has no params");
             assert!(!plan.render_text().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn every_kind_passes_the_analyzer_gate() {
+        // lower() must agree with the full report: zero errors, all
+        // stages fusable, and a weight stream that exactly covers the
+        // params the plan carries.
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
+            let (plan, report) = lower_with_report(&tiny_meta(name), 0).unwrap();
+            assert!(
+                report.ok(),
+                "{name}: {:?}",
+                report.first_error().map(|d| d.to_string())
+            );
+            assert!(report.fusable, "{name} must be fusable");
+            assert!(
+                !report.has_code(crate::analysis::Code::WeightStreamMismatch),
+                "{name}: weight stream must cover the plan exactly"
+            );
+            assert_eq!(report.stages.len(), plan.stages.len());
         }
     }
 

@@ -14,6 +14,6 @@ pub mod params;
 pub mod plan;
 
 pub use config::{GnnKind, ModelConfig};
-pub use lower::lower;
+pub use lower::{lower, lower_with_report};
 pub use params::{Dense, Mt19937, WInit};
 pub use plan::{Act, Aggregate, ModelPlan, Readout, Stage, StageSummary};

@@ -83,17 +83,20 @@ impl Dense {
 /// Mirror of `model.WInit`: the exact draw order of the AOT weights.
 pub struct WInit {
     mt: Mt19937,
+    drawn: usize,
 }
 
 impl WInit {
     pub fn new(seed: u32) -> WInit {
         WInit {
             mt: Mt19937::new(seed),
+            drawn: 0,
         }
     }
 
     pub fn dense(&mut self, fin: usize, fout: usize) -> Dense {
         let s = 1.0 / (fin as f64).sqrt();
+        self.drawn += fin * fout + fout;
         Dense {
             fin,
             fout,
@@ -104,7 +107,17 @@ impl WInit {
 
     pub fn vec(&mut self, f: usize) -> Vec<f32> {
         let s = 1.0 / (f as f64).sqrt();
+        self.drawn += f;
         self.mt.uniform_f32(-s, s, f)
+    }
+
+    /// Scalars drawn from the stream so far. The static analyzer's
+    /// weight-coverage pass compares this against the lowered plan's
+    /// [`crate::models::ModelPlan::param_count`]: a lowering that draws
+    /// parameters its stage sequence never carries (or vice versa) has
+    /// silently broken the AOT draw-order contract.
+    pub fn drawn(&self) -> usize {
+        self.drawn
     }
 }
 
@@ -151,5 +164,15 @@ mod tests {
             assert_eq!(*g, *w, "weight cast mismatch");
         }
         assert_eq!(dense.params(), 9 * 4 + 4);
+    }
+
+    #[test]
+    fn drawn_counter_tracks_every_scalar() {
+        let mut wi = WInit::new(0);
+        assert_eq!(wi.drawn(), 0);
+        let d = wi.dense(3, 5);
+        assert_eq!(wi.drawn(), d.params());
+        wi.vec(7);
+        assert_eq!(wi.drawn(), d.params() + 7);
     }
 }

@@ -94,13 +94,13 @@ impl NetClient {
         // Checkout (or dial) a connection. A transport error tears the
         // connection down instead of returning it, so one bad socket
         // cannot poison later calls.
-        let mut conn = match self.pool.lock().unwrap().pop() {
+        let mut conn = match crate::util::sync::lock(&self.pool).pop() {
             Some(c) => c,
             None => PooledConn::dial(&self.addr, self.timeout)?,
         };
         let resp = Self::exchange(&mut conn, &frame, id);
         if resp.is_ok() {
-            let mut pool = self.pool.lock().unwrap();
+            let mut pool = crate::util::sync::lock(&self.pool);
             if pool.len() < self.max_pool {
                 pool.push(conn);
             }
@@ -128,7 +128,7 @@ impl NetClient {
 
     /// Connections currently parked in the pool.
     pub fn pooled_connections(&self) -> usize {
-        self.pool.lock().unwrap().len()
+        crate::util::sync::lock(&self.pool).len()
     }
 
     pub fn addr(&self) -> &str {

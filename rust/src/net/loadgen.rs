@@ -284,10 +284,10 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                         // response to a written frame can arrive (and be
                         // checked against `written`) before control
                         // returns from write_all.
-                        pending.lock().unwrap().insert(k as u64, sched);
+                        crate::util::sync::lock(&pending).insert(k as u64, sched);
                         written.fetch_add(1, Ordering::Release);
                         if sock.write_all(&frame).is_err() {
-                            pending.lock().unwrap().remove(&(k as u64));
+                            crate::util::sync::lock(&pending).remove(&(k as u64));
                             written.fetch_sub(1, Ordering::Release);
                             break;
                         }
@@ -336,7 +336,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                             break;
                         };
                         received += 1;
-                        let sched = pending.lock().unwrap().remove(&resp.id);
+                        let sched = crate::util::sync::lock(&pending).remove(&resp.id);
                         match resp.status {
                             WireStatus::Ok => {
                                 state.completed.fetch_add(1, Ordering::Relaxed);
@@ -385,7 +385,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         .sum();
     let lost: u64 = pending_maps
         .iter()
-        .map(|p| p.lock().unwrap().len() as u64)
+        .map(|p| crate::util::sync::lock(p).len() as u64)
         .sum();
     let completed = state.completed.load(Ordering::Relaxed);
     let rejected = state.rejected.load(Ordering::Relaxed);

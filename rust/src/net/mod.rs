@@ -1,3 +1,9 @@
+// The serving hot path must degrade, not panic: poisoned locks recover
+// through `crate::util::sync`, wire decoding uses infallible array
+// construction. Tests may still unwrap (a failed assertion is the
+// point there).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 //! The network serving front-end: wire-level ingress for the
 //! coordinator's executor pool, plus the measurement harness that
 //! puts traffic on it.

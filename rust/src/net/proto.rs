@@ -268,6 +268,22 @@ pub fn encode_response(resp: &WireResponse) -> Result<Vec<u8>> {
 
 // ---- decoding -----------------------------------------------------------
 
+/// Infallible fixed-width array construction from already
+/// length-checked slices. Indexing keeps the bounds check (a short
+/// slice is a plain panic-free `take` error upstream) while avoiding
+/// the `try_into().unwrap()` panic path this module forbids.
+fn arr2(b: &[u8]) -> [u8; 2] {
+    [b[0], b[1]]
+}
+
+fn arr4(b: &[u8]) -> [u8; 4] {
+    [b[0], b[1], b[2], b[3]]
+}
+
+fn arr8(b: &[u8]) -> [u8; 8] {
+    [b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]
+}
+
 /// Cursor over one immutable payload slice.
 struct Cursor<'a> {
     b: &'a [u8],
@@ -293,15 +309,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(arr2(self.take(2)?)))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(arr4(self.take(4)?)))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr8(self.take(8)?)))
     }
 
     fn utf8(&mut self, n: usize) -> Result<String> {
@@ -314,7 +330,7 @@ impl<'a> Cursor<'a> {
         })?)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes(arr4(c)))
             .collect())
     }
 
@@ -338,7 +354,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
         bail!("unsupported protocol version {version} (expected {PROTO_VERSION})");
     }
     let kind = payload[1];
-    let want = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+    let want = u32::from_le_bytes(arr4(&payload[2..6]));
     let body = &payload[HEADER_BYTES..];
     let got = checksum(body);
     if want != got {
@@ -426,12 +442,12 @@ pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
     {
         return None;
     }
-    let want = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+    let want = u32::from_le_bytes(arr4(&payload[2..6]));
     let body = &payload[HEADER_BYTES..];
     if checksum(body) != want {
         return None;
     }
-    Some(u64::from_le_bytes(body[..8].try_into().unwrap()))
+    Some(u64::from_le_bytes(arr8(&body[..8])))
 }
 
 /// Read one frame's payload from a stream. Returns `Ok(None)` on a

@@ -64,17 +64,11 @@ impl RouteTable {
     }
 
     fn insert(&self, id: u64, entry: RouteEntry) {
-        self.shards[id as usize % ROUTE_SHARDS]
-            .lock()
-            .unwrap()
-            .insert(id, entry);
+        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).insert(id, entry);
     }
 
     fn remove(&self, id: u64) -> Option<RouteEntry> {
-        self.shards[id as usize % ROUTE_SHARDS]
-            .lock()
-            .unwrap()
-            .remove(&id)
+        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).remove(&id)
     }
 }
 
@@ -248,7 +242,7 @@ impl NetServer {
                         // so a failed clone drops the connection.
                         match sock.try_clone() {
                             Ok(clone) => {
-                                conn_socks.lock().unwrap().insert(conn_no, clone);
+                                crate::util::sync::lock(&conn_socks).insert(conn_no, clone);
                             }
                             Err(e) => {
                                 eprintln!(
@@ -273,7 +267,7 @@ impl NetServer {
                                 // Reap finished connection threads so the
                                 // handle list tracks live connections,
                                 // not history.
-                                let mut handles = conn_handles.lock().unwrap();
+                                let mut handles = crate::util::sync::lock(&conn_handles);
                                 let mut i = 0;
                                 while i < handles.len() {
                                     if handles[i].is_finished() {
@@ -293,7 +287,7 @@ impl NetServer {
                                 eprintln!(
                                     "[net] dropping connection {conn_no}: {e}"
                                 );
-                                conn_socks.lock().unwrap().remove(&conn_no);
+                                crate::util::sync::lock(&conn_socks).remove(&conn_no);
                                 metrics
                                     .net()
                                     .connections_open
@@ -341,11 +335,11 @@ impl NetServer {
             let _ = h.join();
         }
         // Force every connection closed so readers and writers unwind.
-        for (_, s) in self.conn_socks.lock().unwrap().drain() {
+        for (_, s) in crate::util::sync::lock(&self.conn_socks).drain() {
             let _ = s.shutdown(Shutdown::Both);
         }
         let handles: Vec<JoinHandle<()>> =
-            self.conn_handles.lock().unwrap().drain(..).collect();
+            crate::util::sync::lock(&self.conn_handles).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -490,7 +484,7 @@ fn spawn_connection(
                 // fd must not outlive the connection), and drop the
                 // open-connections gauge; late demux sends fail soft.
                 outbox.close();
-                socks.lock().unwrap().remove(&conn_no);
+                crate::util::sync::lock(&socks).remove(&conn_no);
                 metrics
                     .net()
                     .connections_open

@@ -180,6 +180,23 @@ impl Engine {
         }
     }
 
+    /// Whether this model may serve fused micro-batches: true only on
+    /// the native backend and only when the static analyzer derived a
+    /// fusion-safety fact for every stage of the lowered plan. The
+    /// executor lane consults this before grouping a chunk, so an
+    /// unfusable plan is never even merged (PJRT artifacts are batch-1
+    /// by construction and always answer `false`).
+    pub fn fusable(&self, model: &str) -> bool {
+        match self.get(model) {
+            Ok(lm) => match &lm.exe {
+                Compiled::Native(native) => native.fusable(),
+                #[cfg(feature = "xla")]
+                Compiled::Pjrt(_) => false,
+            },
+            Err(_) => false,
+        }
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -254,6 +271,8 @@ mod tests {
         let fused = e.infer_fused("gcn", &[&b, &b], &[None, None]).unwrap();
         assert_eq!(fused, vec![seq.clone(), seq]);
         assert!(e.infer_fused("gat", &[&b], &[None]).is_err(), "unloaded");
+        assert!(e.fusable("gcn"), "native gcn must expose fusion facts");
+        assert!(!e.fusable("gat"), "unloaded model is not fusable");
     }
 
     #[test]

@@ -122,6 +122,11 @@ pub fn execute_fused(
     fused: &FusedBatch,
     eig: Option<&[f32]>,
 ) -> Result<Vec<Vec<f32>>> {
+    // Consume the analyzer's derived fusion-safety facts instead of
+    // assuming every stage kind can run over merged segments: a plan
+    // containing a cross-segment-unsafe stage is refused up front (the
+    // caller falls back to per-request execution), never miscomputed.
+    crate::analysis::assert_fusable(plan)?;
     let g = fused.graph();
     for seg in fused.segments() {
         if seg.n > plan.n_max {
@@ -165,6 +170,14 @@ fn execute_segments(
     let mut gcn_isq: Option<Vec<f32>> = None;
     let mut dgn_ctx: Option<DgnCtx> = None;
     for (si, stage) in plan.stages.iter().enumerate() {
+        // Belt to execute_fused's suspenders: no stage without a
+        // fusion-safety fact may reach a multi-segment pass.
+        debug_assert!(
+            segments.len() <= 1
+                || crate::analysis::facts::stage_fact(stage)
+                    != crate::analysis::FusionFact::CrossSegmentUnsafe,
+            "unfusable stage {si} reached the segmented core"
+        );
         match stage {
             Stage::Linear { w, act } => h = linear(&h, w, *act),
             Stage::SparseAggregate(agg) => {

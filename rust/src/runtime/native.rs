@@ -15,6 +15,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::analysis::PlanFacts;
 use crate::graph::{FusedBatch, GraphBatch};
 use crate::models::lower;
 use crate::models::plan::ModelPlan;
@@ -23,22 +24,34 @@ use super::artifact::ModelMeta;
 use super::interp;
 
 /// A model compiled for the native backend: the lowered stage-IR plan
-/// with its regenerated baked-in weights.
+/// with its regenerated baked-in weights, plus the static analyzer's
+/// fusion-safety facts derived once at build time.
 pub struct NativeModel {
     plan: ModelPlan,
+    facts: PlanFacts,
 }
 
 impl NativeModel {
-    /// Lower the manifest entry to its executable plan.
+    /// Lower the manifest entry to its executable plan. Lowering runs
+    /// the static analyzer as a mandatory gate (see
+    /// [`crate::models::lower::lower`]); the fusion-safety facts are
+    /// derived here and consulted on every fused forward.
     pub fn build(meta: &ModelMeta, weight_seed: u64) -> Result<NativeModel> {
-        Ok(NativeModel {
-            plan: lower::lower(meta, weight_seed)?,
-        })
+        let plan = lower::lower(meta, weight_seed)?;
+        let facts = crate::analysis::plan_facts(&plan);
+        Ok(NativeModel { plan, facts })
     }
 
     /// The lowered stage sequence (what `gengnn plan` dumps).
     pub fn plan(&self) -> &ModelPlan {
         &self.plan
+    }
+
+    /// Whether every stage of the plan carries a fusion-safety fact —
+    /// the scheduler consults this before grouping requests for fused
+    /// execution instead of trying and falling back.
+    pub fn fusable(&self) -> bool {
+        self.facts.fusable()
     }
 
     /// Run one ingested graph through the plan interpreter.
@@ -97,7 +110,7 @@ impl NativeModel {
         if parts.is_empty() {
             return Ok(Vec::new());
         }
-        let fused = FusedBatch::fuse(parts)?;
+        let fused = FusedBatch::fuse_checked(parts, &self.facts, &self.plan.model)?;
         // Per-segment capacity check *before* the eig concat below
         // slices overrides with `seg.n` (an oversized graph must get
         // the same clean error the sequential path returns, not a
@@ -327,6 +340,14 @@ mod tests {
                     "{name}: fused output diverges from sequential"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn every_kind_carries_fusion_safety_facts() {
+        for name in ["gcn", "gin", "gin_vn", "gat", "pna", "sgc", "sage", "dgn"] {
+            let m = NativeModel::build(&tiny_meta(name), 0).unwrap();
+            assert!(m.fusable(), "{name}: component library must be fusable");
         }
     }
 

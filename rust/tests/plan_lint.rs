@@ -1,0 +1,448 @@
+//! The static analyzer's contract over the real model zoo:
+//!
+//! * **Golden accept** — every manifest model's lowered plan passes
+//!   `analyze_lowered` with zero errors, carries a fusion-safety fact
+//!   for every stage, and serializes to the `lint-plan --json` schema.
+//! * **Mutation harness** — each corruption class applied to a real
+//!   lowered plan is rejected with its *specific* diagnostic code
+//!   (no false-accepts, no panics, no "one generic error for
+//!   everything"). This is the executable definition of what each
+//!   `GN-*` code means.
+//!
+//! Skips (not fails) on a checkout without artifact fixtures, like the
+//! other artifact-gated suites.
+
+mod common;
+
+use gengnn::analysis::{analyze, analyze_lowered, Code, Severity};
+use gengnn::models::plan::{Act, Aggregate, ModelPlan, Readout, Stage};
+use gengnn::models::{lower, lower_with_report};
+use gengnn::runtime::Artifacts;
+use gengnn::util::json::Json;
+
+/// Lower one manifest model, panicking on failure (the golden-accept
+/// test separately proves lowering succeeds for every model).
+fn lowered(artifacts: &Artifacts, model: &str) -> ModelPlan {
+    let meta = artifacts.model(model).expect("manifest model");
+    lower(meta, artifacts.weight_seed).expect("clean lowering")
+}
+
+/// Index of the first stage matching `pred`.
+fn find(plan: &ModelPlan, pred: impl Fn(&Stage) -> bool) -> usize {
+    plan.stages
+        .iter()
+        .position(pred)
+        .expect("expected stage kind missing from the lowered plan")
+}
+
+#[test]
+fn every_manifest_model_is_golden_accepted() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    for model in artifacts.model_names() {
+        let meta = artifacts.model(model).expect("manifest model");
+        let (plan, report) = lower_with_report(meta, artifacts.weight_seed)
+            .unwrap_or_else(|e| panic!("{model}: lowering failed: {e}"));
+        assert!(
+            report.ok(),
+            "{model}: analyzer rejected a shipped plan: {:?}",
+            report.findings
+        );
+        assert_eq!(report.count(Severity::Error), 0, "{model}");
+        assert!(
+            report.fusable,
+            "{model}: every component-library stage must carry a fusion fact"
+        );
+        assert_eq!(
+            report.stages.len(),
+            plan.stages.len(),
+            "{model}: one fact row per stage"
+        );
+        assert!(
+            !report.has_code(Code::WeightStreamMismatch),
+            "{model}: lowering must consume exactly the scalars it draws"
+        );
+    }
+}
+
+#[test]
+fn lint_json_matches_the_documented_schema() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    let meta = artifacts.model("gcn").expect("gcn in manifest");
+    let (_, report) = lower_with_report(meta, artifacts.weight_seed).expect("lower gcn");
+    let v = Json::parse(&report.to_json().to_string_pretty()).expect("valid json");
+    assert_eq!(v.get("model").unwrap().as_str().unwrap(), "gcn");
+    assert!(v.get("ok").unwrap().as_bool().unwrap());
+    assert!(v.get("fusable").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("errors").unwrap().as_usize().unwrap(), 0);
+    let stages = v.get("stages").unwrap().as_arr().unwrap();
+    assert!(!stages.is_empty());
+    for (i, s) in stages.iter().enumerate() {
+        assert_eq!(s.get("index").unwrap().as_usize().unwrap(), i);
+        let fusion = s.get("fusion").unwrap().as_str().unwrap().to_string();
+        assert!(
+            [
+                "row_independent",
+                "neighborhood_local",
+                "segment_local",
+                "cross_segment_unsafe"
+            ]
+            .contains(&fusion.as_str()),
+            "unknown fusion fact {fusion}"
+        );
+        let red = s.get("reduction").unwrap().as_str().unwrap().to_string();
+        assert!(
+            ["none", "order_insensitive", "ascending_node_order"].contains(&red.as_str()),
+            "unknown reduction tag {red}"
+        );
+    }
+    for f in v.get("findings").unwrap().as_arr().unwrap() {
+        let code = f.get("code").unwrap().as_str().unwrap();
+        assert!(code.starts_with("GN-") && code.len() == 6, "bad code {code}");
+    }
+}
+
+/// One corruption class: a mutation applied to a real lowered plan and
+/// the single diagnostic code that must name it.
+struct Corruption {
+    name: &'static str,
+    model: &'static str,
+    expect: Code,
+    mutate: fn(&mut ModelPlan),
+}
+
+fn corruptions() -> Vec<Corruption> {
+    vec![
+        Corruption {
+            name: "degenerate metadata (n_max zeroed)",
+            model: "gcn",
+            expect: Code::DegeneratePlan,
+            mutate: |p| p.n_max = 0,
+        },
+        Corruption {
+            name: "embed linear expects the wrong input width",
+            model: "gcn",
+            expect: Code::StageWidthMismatch,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::Linear { .. }));
+                if let Stage::Linear { w, .. } = &mut p.stages[i] {
+                    w.fin += 1;
+                    w.w = vec![0.0; w.fin * w.fout];
+                }
+            },
+        },
+        Corruption {
+            name: "head resized away from the artifact output width",
+            model: "gcn",
+            expect: Code::TerminalWidthMismatch,
+            mutate: |p| {
+                let i = p.stages.len()
+                    - 1
+                    - p.stages
+                        .iter()
+                        .rev()
+                        .position(|s| matches!(s, Stage::Linear { .. }))
+                        .expect("head linear");
+                if let Stage::Linear { w, .. } = &mut p.stages[i] {
+                    w.fout += 1;
+                    w.w = vec![0.0; w.fin * w.fout];
+                    w.b = vec![0.0; w.fout];
+                }
+            },
+        },
+        Corruption {
+            name: "aggregation overwrites an unconsumed register",
+            model: "gcn",
+            expect: Code::AggregateOverwrite,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::SparseAggregate(_)));
+                p.stages.insert(i, Stage::SparseAggregate(Aggregate::Sum));
+            },
+        },
+        Corruption {
+            name: "combine before any aggregation wrote the register",
+            model: "gcn",
+            expect: Code::CombineWithoutAggregate,
+            mutate: |p| p.stages.insert(0, Stage::TakeAggregate),
+        },
+        Corruption {
+            name: "trailing aggregation nothing ever consumes",
+            model: "sgc",
+            expect: Code::DanglingAggregate,
+            mutate: |p| p.stages.push(Stage::SparseAggregate(Aggregate::Sum)),
+        },
+        Corruption {
+            name: "readout over a pending aggregation register",
+            model: "gcn",
+            expect: Code::ReadoutOverPendingAggregate,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::Readout(_)));
+                p.stages.insert(i, Stage::SparseAggregate(Aggregate::Max));
+            },
+        },
+        Corruption {
+            name: "plan never reads out",
+            model: "gcn",
+            expect: Code::MissingReadout,
+            mutate: |p| p.stages.retain(|s| !matches!(s, Stage::Readout(_))),
+        },
+        Corruption {
+            name: "node stage after the readout collapse",
+            model: "gcn",
+            expect: Code::StageAfterReadout,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::Readout(_)));
+                p.stages.insert(i + 1, Stage::L2Normalize);
+            },
+        },
+        Corruption {
+            name: "pooled readout in a node-level plan",
+            model: "gcn",
+            expect: Code::ReadoutLevelMismatch,
+            mutate: |p| p.node_level = true,
+        },
+        Corruption {
+            name: "node_head readout in a graph-level plan",
+            model: "dgn",
+            expect: Code::ReadoutLevelMismatch,
+            mutate: |p| p.node_level = false,
+        },
+        Corruption {
+            name: "edge aggregation with the edge contract revoked",
+            model: "gin",
+            expect: Code::EdgeDataContract,
+            mutate: |p| p.edge_dim = 0,
+        },
+        Corruption {
+            name: "bond embedding no longer maps edge_dim onto h",
+            model: "gin",
+            expect: Code::EdgeDataContract,
+            mutate: |p| {
+                let i = find(
+                    p,
+                    |s| matches!(s, Stage::SparseAggregate(Aggregate::EdgeReluSum { .. })),
+                );
+                if let Stage::SparseAggregate(Aggregate::EdgeReluSum { bond }) =
+                    &mut p.stages[i]
+                {
+                    bond.fin += 1;
+                    bond.w = vec![0.0; bond.fin * bond.fout];
+                }
+            },
+        },
+        Corruption {
+            name: "attention logit vectors truncated",
+            model: "gat",
+            expect: Code::AttentionShapeMismatch,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::EdgeAttention { .. }));
+                if let Stage::EdgeAttention { a_src, .. } = &mut p.stages[i] {
+                    a_src.pop();
+                }
+            },
+        },
+        Corruption {
+            name: "attention heads zeroed",
+            model: "gat",
+            expect: Code::AttentionShapeMismatch,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::EdgeAttention { .. }));
+                if let Stage::EdgeAttention { heads, .. } = &mut p.stages[i] {
+                    *heads = 0;
+                }
+            },
+        },
+        Corruption {
+            name: "virtual-node stages with the init state removed",
+            model: "gin_vn",
+            expect: Code::MissingVnState,
+            mutate: |p| p.vn_init = None,
+        },
+        Corruption {
+            name: "virtual-node state truncated",
+            model: "gin_vn",
+            expect: Code::VirtualNodeShapeMismatch,
+            mutate: |p| {
+                if let Some(vn) = p.vn_init.as_mut() {
+                    vn.pop();
+                }
+            },
+        },
+        Corruption {
+            name: "NaN injected into a weight tensor",
+            model: "gcn",
+            expect: Code::NonFiniteParam,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::Linear { .. }));
+                if let Stage::Linear { w, .. } = &mut p.stages[i] {
+                    w.w[0] = f32::NAN;
+                }
+            },
+        },
+        Corruption {
+            name: "weight tensor truncated behind its declared shape",
+            model: "sage",
+            expect: Code::MalformedParam,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::DualLinear { .. }));
+                if let Stage::DualLinear { w_nbr, .. } = &mut p.stages[i] {
+                    w_nbr.w.pop();
+                }
+            },
+        },
+        Corruption {
+            name: "residual update no longer maps m onto h",
+            model: "pna",
+            expect: Code::StageWidthMismatch,
+            mutate: |p| {
+                let i = find(p, |s| matches!(s, Stage::ResidualLinear { .. }));
+                if let Stage::ResidualLinear { w, .. } = &mut p.stages[i] {
+                    w.fin += 1;
+                    w.w = vec![0.0; w.fin * w.fout];
+                }
+            },
+        },
+    ]
+}
+
+#[test]
+fn every_corruption_class_yields_its_specific_diagnostic() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    for c in corruptions() {
+        let mut plan = lowered(&artifacts, c.model);
+        (c.mutate)(&mut plan);
+        // The analyzer must neither panic nor false-accept.
+        let report = analyze(&plan);
+        assert!(
+            !report.ok(),
+            "{}: corrupted {} plan was accepted: {:?}",
+            c.name,
+            c.model,
+            report.findings
+        );
+        assert!(
+            report.has_code(c.expect),
+            "{}: wanted {} among {:?}",
+            c.name,
+            c.expect.id(),
+            report
+                .findings
+                .iter()
+                .map(|f| f.code.id())
+                .collect::<Vec<_>>()
+        );
+        // The gate message names the code, so a rejected LOAD is
+        // diagnosable from the error string alone.
+        let err = gengnn::analysis::require_clean(&report)
+            .expect_err("gate must reject")
+            .to_string();
+        assert!(err.contains("GN-"), "gate error carries no code: {err}");
+    }
+}
+
+#[test]
+fn weight_stream_coverage_is_checked_on_real_lowerings() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    let plan = lowered(&artifacts, "gin");
+    let carried = plan.param_count();
+    assert!(analyze_lowered(&plan, carried).ok());
+    for (drawn, tag) in [(carried + 3, "unused"), (carried - 3, "doubly-consumed")] {
+        let r = analyze_lowered(&plan, drawn);
+        assert!(r.has_code(Code::WeightStreamMismatch));
+        assert!(
+            r.findings.iter().any(|f| f.message.contains(tag)),
+            "wanted {tag:?} in {:?}",
+            r.findings
+        );
+    }
+}
+
+#[test]
+fn warn_only_findings_do_not_reject_a_servable_plan() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    // Declaring inputs nothing consumes is suspicious (warned) but the
+    // plan still executes correctly — the gate must let it through.
+    let mut plan = lowered(&artifacts, "gcn");
+    plan.edge_dim = 3;
+    let report = analyze(&plan);
+    assert!(report.has_code(Code::UnusedEdgeInput));
+    assert!(report.ok(), "warnings must not fail the gate");
+    assert!(gengnn::analysis::require_clean(&report).is_ok());
+}
+
+#[test]
+fn analyzer_is_a_strict_superset_of_validate() {
+    let Some(artifacts) = common::artifacts_or_skip() else {
+        return;
+    };
+    // Every plan validate() rejects must also fail analysis; and the
+    // shipped plans pass both.
+    for model in artifacts.model_names() {
+        let plan = lowered(&artifacts, model);
+        assert!(plan.validate().is_ok(), "{model}");
+        assert!(analyze(&plan).ok(), "{model}");
+    }
+    for c in corruptions() {
+        let mut plan = lowered(&artifacts, c.model);
+        (c.mutate)(&mut plan);
+        if plan.validate().is_err() {
+            assert!(
+                !analyze(&plan).ok(),
+                "{}: validate rejects but the analyzer accepts",
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
+fn hand_built_plans_exercise_the_remaining_codes() {
+    // Codes that cannot be reached by mutating a shipped model's plan
+    // (they need stage sequences the zoo never produces) still need a
+    // rejection pin: eps-combine misuse and vn-mlp chain breakage.
+    let mut wi = gengnn::models::WInit::new(0);
+    let mut plan = ModelPlan {
+        model: "hand".into(),
+        n_max: 8,
+        in_dim: 4,
+        out_dim: 1,
+        edge_dim: 0,
+        node_level: false,
+        vn_init: Some(vec![0.0; 4]),
+        stages: vec![
+            Stage::SparseAggregate(Aggregate::Sum),
+            Stage::EpsCombine { eps: f32::INFINITY },
+            Stage::VirtualNodeUpdate {
+                w1: wi.dense(4, 6),
+                w2: wi.dense(6, 5), // w2.fout != h: broken chain
+            },
+            Stage::Readout(Readout::MaskedMeanPool),
+            Stage::Linear {
+                w: wi.dense(4, 1),
+                act: Act::None,
+            },
+        ],
+    };
+    let r = analyze(&plan);
+    assert!(r.has_code(Code::NonFiniteParam), "inf eps");
+    assert!(r.has_code(Code::VirtualNodeShapeMismatch), "broken vn mlp");
+    assert!(!r.ok());
+
+    // Repair the plan; it must then pass, proving the two findings
+    // above were the only defects.
+    plan.stages[1] = Stage::EpsCombine { eps: 0.5 };
+    plan.stages[2] = Stage::VirtualNodeUpdate {
+        w1: wi.dense(4, 6),
+        w2: wi.dense(6, 4),
+    };
+    assert!(analyze(&plan).ok(), "{:?}", analyze(&plan).findings);
+}
