@@ -4,7 +4,8 @@
 # Full artifact regeneration (needs jax): make artifacts
 
 .PHONY: build test check fmt clippy doc artifacts artifacts-golden \
-	bench-snapshot serve loadgen check-artifacts check-plans lint-plans clean
+	bench-snapshot serve loadgen loadgen-deadline-smoke check-artifacts \
+	check-plans lint-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -44,6 +45,26 @@ serve:
 loadgen:
 	cargo run --release --bin gengnn -- loadgen --addr $(SERVE_ADDR) \
 		--rps 200 --count 2000
+
+# Self-contained QoS overload smoke (CI's bench-smoke deadline step):
+# a one-lane server with a queue of 2, a paced burst carrying 1 ms
+# TTLs, and the exported snapshot must reconcile and carry a nonzero
+# loadgen/shed_by_deadline series.
+DEADLINE_ADDR ?= 127.0.0.1:17447
+loadgen-deadline-smoke: build
+	@set -e; \
+	./target/release/gengnn serve --listen $(DEADLINE_ADDR) --models gin \
+		--lanes 1 --prep-workers 1 --queue 2 --duration 120 & \
+	pid=$$!; \
+	trap 'kill $$pid 2>/dev/null || true' EXIT; \
+	sleep 2; \
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_loadgen_smoke.json \
+		./target/release/gengnn loadgen --addr $(DEADLINE_ADDR) \
+		--rps 5000 --count 200 --connections 4 --models gin \
+		--ttl-ms 1 --priority-mix high:1,normal:2,low:1; \
+	python3 python/tools/check_bench_schema.py BENCH_loadgen_smoke.json \
+		--schema BENCH_seed.json --require-measured \
+		--require-result "loadgen/shed_by_deadline>0"
 
 # Re-validate the checked-in golden/manifest fixtures (CI's
 # artifacts-integrity job).

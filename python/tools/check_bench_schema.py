@@ -11,13 +11,20 @@ trajectory point.
 
 Usage:
   python3 python/tools/check_bench_schema.py MEASURED.json \
-      [--schema BENCH_seed.json] [--require-measured]
+      [--schema BENCH_seed.json] [--require-measured] \
+      [--require-result NAME[>0]] ...
 
 The schema file is only consulted for its top-level key set (the
 anchor contract); the measured file must carry the same keys. With
 --require-measured, status must be "measured" and the result list
 non-empty (the seed anchors themselves are allowed to be unmeasured —
 they were written in containers without a Rust toolchain).
+
+--require-result pins a named series into the snapshot (repeatable);
+a trailing ">0" additionally requires its mean to be positive — how
+CI asserts the deadline-overload loadgen run actually shed requests
+(the loadgen/shed_by_deadline series encodes the count in its
+mean/p50/min fields).
 """
 
 import argparse
@@ -74,6 +81,14 @@ def main() -> None:
         action="store_true",
         help="status must be 'measured' with a non-empty result list",
     )
+    ap.add_argument(
+        "--require-result",
+        action="append",
+        default=[],
+        metavar="NAME[>0]",
+        help="a result with this name must be present; "
+        "'>0' also requires a positive mean",
+    )
     args = ap.parse_args()
 
     try:
@@ -110,6 +125,15 @@ def main() -> None:
             fail(f"status is {measured['status']!r}, expected 'measured'")
         if not measured["results"]:
             fail("measured snapshot has an empty result list")
+
+    by_name = {r["name"]: r for r in (measured["results"] or [])}
+    for want in args.require_result:
+        name, positive = (want[:-2], True) if want.endswith(">0") else (want, False)
+        r = by_name.get(name)
+        if r is None:
+            fail(f"required result {name!r} missing from {args.measured}")
+        if positive and not r["mean_s"] > 0:
+            fail(f"required result {name!r} must be positive, got {r['mean_s']!r}")
 
     n = len(measured["results"] or [])
     print(f"OK: {args.measured} matches the BENCH snapshot schema ({n} results)")

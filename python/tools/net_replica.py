@@ -2,16 +2,37 @@
 """No-toolchain validation harness for `rust/src/net/`: a Python
 replica speaking the exact wire format (normative spec:
 `docs/WIRE_PROTOCOL.md`; implementation: `rust/src/net/proto.rs`)
-with the same thread topology -- accept loop,
-per-connection reader/writer threads, response demux with try-send
-drop-on-full outboxes, bounded ingest queue, executor lanes -- and the
-same open-loop loadgen structure (scheduled arrivals, pending map,
-submitted = completed + rejected + failed + lost reconciliation).
+with the same thread topology as the reactor front-end -- one accept
+loop, a fixed pool of nonblocking reactor event loops (`selectors`
+standing in for `polly`), a response pump settling a shared route
+table, a bounded ingest queue, and executor lanes -- and the same
+open-loop loadgen structure (scheduled arrivals, pending map,
+submitted = completed + rejected + failed + lost reconciliation,
+shed_by_deadline as a sub-count of rejected).
+
+Replicated design points under test:
+
+* protocol v2 (TTL/priority QoS in request frames) alongside legacy
+  v1, with per-frame version negotiation: responses echo the version
+  of the request they answer;
+* parked-request backpressure: under Block admission a full ingest
+  queue parks the decoded request on its connection and drops read
+  interest (TCP backpressure without a blocked thread), retried on a
+  short tick; a TTL lapsing while parked answers `Expired`;
+* deadline shedding at the lanes (the replica collapses prep +
+  dispatch into the lane, so the batcher's priority bands are out of
+  scope here -- they are unit-tested in Rust);
+* symmetric `requests_in_flight` accounting around the route table:
+  +1 per install, -1 by exactly one of delivery, rejection, expiry,
+  or connection-teardown sweep (the orphaned-response trial).
 
 Trials cover: Block-mode loadgen reconciliation over real loopback
 sockets, Reject-mode burst shedding on a surviving connection,
-decode-error answering/counting, shutdown with unread in-flight
-responses, and a stalled reader not starving other connections.
+decode-error answering/counting (sentinel vs salvaged ids), v1/v2
+interleaving on one connection, deadline-overload shedding that
+reconciles exactly, a connection closed mid-flight settling the
+gauge, a stalled reader not starving other connections, and a
+many-connection sweep over the fixed reactor pool.
 
 Usage: python3 python/tools/net_replica.py [trials]
 
@@ -19,18 +40,20 @@ This validates the *design* (deadlock freedom, accounting, protocol
 self-consistency); the Rust implementation itself is gated by
 `cargo test --release --test net_e2e` where a toolchain exists.
 """
-import json
-import queue
+import selectors
 import socket
 import struct
 import threading
 import time
 from collections import defaultdict
 
-VERSION = 1
+VERSION = 2
+V1 = 1
 KIND_REQ, KIND_RESP = 1, 2
-OK, REJECTED, ERROR, BADREQ = 0, 1, 2, 3
+OK, REJECTED, ERROR, BADREQ, EXPIRED = 0, 1, 2, 3, 4
+PRIO_NORMAL, PRIO_HIGH, PRIO_LOW = 0, 1, 2
 MAX_FRAME = 64 << 20
+BAD_FRAME_ID = (1 << 64) - 1
 
 
 def fnv1a(body: bytes) -> int:
@@ -41,25 +64,43 @@ def fnv1a(body: bytes) -> int:
     return h
 
 
-def seal(kind: int, body: bytes) -> bytes:
-    payload = bytes([VERSION, kind]) + struct.pack("<I", fnv1a(body)) + body
+def seal(version: int, kind: int, body: bytes) -> bytes:
+    payload = bytes([version, kind]) + struct.pack("<I", fnv1a(body)) + body
     return struct.pack("<I", len(payload)) + payload
 
 
-def encode_request(rid, model, graph):
+def encode_request(rid, model, graph, ttl_ms=0, priority=PRIO_NORMAL):
+    """v2 request frame: id . ttl_ms . priority . model . graph."""
+    n, edges, node_feat, f_node, edge_feat, f_edge = graph
+    body = struct.pack("<QIB", rid, ttl_ms, priority)
+    mb = model.encode()
+    body += struct.pack("<H", len(mb)) + mb
+    body += _graph_bytes(n, edges, node_feat, f_node, edge_feat, f_edge)
+    return seal(VERSION, KIND_REQ, body)
+
+
+def encode_request_v1(rid, model, graph):
+    """Legacy v1 request frame: same body minus the QoS fields."""
     n, edges, node_feat, f_node, edge_feat, f_edge = graph
     body = struct.pack("<Q", rid)
     mb = model.encode()
     body += struct.pack("<H", len(mb)) + mb
-    body += struct.pack("<IHHI", n, f_node, f_edge, len(edges))
+    body += _graph_bytes(n, edges, node_feat, f_node, edge_feat, f_edge)
+    return seal(V1, KIND_REQ, body)
+
+
+def _graph_bytes(n, edges, node_feat, f_node, edge_feat, f_edge):
+    body = struct.pack("<IHHI", n, f_node, f_edge, len(edges))
     for s, t in edges:
         body += struct.pack("<II", s, t)
     body += struct.pack(f"<{len(node_feat)}f", *node_feat)
     body += struct.pack(f"<{len(edge_feat)}f", *edge_feat)
-    return seal(KIND_REQ, body)
+    return body
 
 
-def encode_response(rid, model, status, output=(), error=""):
+def encode_response(version, rid, model, status, output=(), error=""):
+    """Response bodies are version-invariant; only the envelope's
+    version byte differs (it echoes the request's)."""
     mb = model.encode()
     body = struct.pack("<Q", rid) + struct.pack("<H", len(mb)) + mb + bytes([status])
     if status == OK:
@@ -67,42 +108,68 @@ def encode_response(rid, model, status, output=(), error=""):
     else:
         eb = error.encode()
         body += struct.pack("<I", len(eb)) + eb
-    return seal(KIND_RESP, body)
+    return seal(version, KIND_RESP, body)
+
+
+class DecodeError(ValueError):
+    """Frame validation failure; carries the salvaged request id when
+    the envelope vouched for it (right version/kind, body checksum
+    ok) so the error answer can use the caller's id instead of the
+    BAD_FRAME_ID sentinel."""
+
+    def __init__(self, msg, rid=None):
+        super().__init__(msg)
+        self.rid = rid
 
 
 def decode_frame(payload: bytes):
-    assert len(payload) >= 6, "frame too short"
-    if payload[0] != VERSION:
-        raise ValueError("unsupported protocol version")
+    if len(payload) < 6:
+        raise DecodeError("frame too short")
+    version = payload[0]
+    if version not in (V1, VERSION):
+        raise DecodeError("unsupported protocol version")
     kind = payload[1]
     want = struct.unpack_from("<I", payload, 2)[0]
     body = payload[6:]
     if want != fnv1a(body):
-        raise ValueError("checksum mismatch")
+        raise DecodeError("checksum mismatch")
     i = 0
 
     def take(n):
         nonlocal i
         if len(body) - i < n:
-            raise ValueError("truncated frame")
+            raise DecodeError("truncated frame")
         s = body[i : i + n]
         i += n
         return s
 
     if kind == KIND_REQ:
         rid = struct.unpack("<Q", take(8))[0]
-        mlen = struct.unpack("<H", take(2))[0]
-        model = take(mlen).decode()
-        n, f_node, f_edge, ne = struct.unpack("<IHHI", take(12))
-        edges = [struct.unpack("<II", take(8)) for _ in range(ne)]
-        node_feat = list(struct.unpack(f"<{n*f_node}f", take(4 * n * f_node)))
-        edge_feat = list(struct.unpack(f"<{ne*f_edge}f", take(4 * ne * f_edge)))
-        if i != len(body):
-            raise ValueError("trailing bytes")
-        for s, t in edges:
-            if s >= n or t >= n:
-                raise ValueError("edge out of range")
-        return ("req", rid, model, (n, edges, node_feat, f_node, edge_feat, f_edge))
+        try:
+            if version == VERSION:
+                ttl_ms, priority = struct.unpack("<IB", take(5))
+                if priority not in (PRIO_NORMAL, PRIO_HIGH, PRIO_LOW):
+                    raise DecodeError("unknown priority byte")
+            else:
+                ttl_ms, priority = 0, PRIO_NORMAL  # v1 decodes default QoS
+            mlen = struct.unpack("<H", take(2))[0]
+            model = take(mlen).decode()
+            n, f_node, f_edge, ne = struct.unpack("<IHHI", take(12))
+            edges = [struct.unpack("<II", take(8)) for _ in range(ne)]
+            node_feat = list(struct.unpack(f"<{n*f_node}f", take(4 * n * f_node)))
+            edge_feat = list(struct.unpack(f"<{ne*f_edge}f", take(4 * ne * f_edge)))
+            if i != len(body):
+                raise DecodeError("trailing bytes")
+            for s, t in edges:
+                if s >= n or t >= n:
+                    raise DecodeError("edge out of range")
+        except DecodeError as e:
+            # The envelope checksum already vouched for the body, so
+            # the id at its head is trustworthy even when the rest is
+            # not (mirrors proto::salvage_request_id).
+            raise DecodeError(str(e), rid=rid) from None
+        graph = (n, edges, node_feat, f_node, edge_feat, f_edge)
+        return ("req", rid, model, (ttl_ms, priority), graph, version)
     elif kind == KIND_RESP:
         rid = struct.unpack("<Q", take(8))[0]
         mlen = struct.unpack("<H", take(2))[0]
@@ -116,9 +183,9 @@ def decode_frame(payload: bytes):
             elen = struct.unpack("<I", take(4))[0]
             out, err = [], take(elen).decode()
         if i != len(body):
-            raise ValueError("trailing bytes")
+            raise DecodeError("trailing bytes")
         return ("resp", rid, model, status, out, err)
-    raise ValueError("unknown kind")
+    raise DecodeError("unknown kind")
 
 
 def read_frame(sockfile):
@@ -131,7 +198,7 @@ def read_frame(sockfile):
             raise IOError("EOF in length prefix")
         hdr += more
     (ln,) = struct.unpack("<I", hdr)
-    if ln < 6 or ln > MAX_FRAME:
+    if ln > MAX_FRAME:
         raise ValueError("bad length")
     payload = b""
     while len(payload) < ln:
@@ -150,6 +217,9 @@ class Channel:
     """Bounded MPMC channel with close semantics (drain then None)."""
 
     def __init__(self, cap):
+        import queue
+
+        self.queue_mod = queue
         self.q = queue.Queue(maxsize=cap)
         self.closed = threading.Event()
 
@@ -160,7 +230,7 @@ class Channel:
             try:
                 self.q.put(v, timeout=0.05)
                 return
-            except queue.Full:
+            except self.queue_mod.Full:
                 continue
 
     def try_send(self, v):
@@ -169,52 +239,123 @@ class Channel:
         try:
             self.q.put_nowait(v)
             return True
-        except queue.Full:
+        except self.queue_mod.Full:
             return False
 
     def recv(self):
         while True:
             try:
                 return self.q.get(timeout=0.05)
-            except queue.Empty:
+            except self.queue_mod.Empty:
                 if self.closed.is_set():
                     return None
 
     def close(self):
         self.closed.set()
 
-    def empty(self):
-        return self.q.empty()
+
+class ReactorQueue:
+    """Cross-thread inbox + self-pipe waker, the replica of
+    `reactor::ReactorQueue` (polly::Waker is a socketpair here)."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.items = []
+        self.wake_tx, self.wake_rx = socket.socketpair()
+        self.wake_tx.setblocking(False)
+        self.wake_rx.setblocking(False)
+
+    def send(self, item):
+        with self.lock:
+            self.items.append(item)
+        try:
+            self.wake_tx.send(b"x")
+        except OSError:
+            pass
+
+    def drain(self):
+        with self.lock:
+            items, self.items = self.items, []
+        try:
+            while self.wake_rx.recv(4096):
+                pass
+        except (BlockingIOError, OSError):
+            pass
+        return items
+
+    def close(self):
+        self.wake_tx.close()
+        self.wake_rx.close()
+
+
+class Conn:
+    """Per-connection state owned by exactly one reactor."""
+
+    def __init__(self, sock):
+        self.sock = sock
+        self.inbuf = bytearray()
+        self.outbuf = bytearray()
+        self.pending = set()  # server-side ids routed to this conn
+        self.parked = None  # (request, version) awaiting admission
+        self.reading = True
+        self.mask = 0  # currently registered selector interest
+
+
+PARK_TICK = 0.005
+READ_QUANTUM = 256 * 1024
 
 
 class Server:
-    """Replica of coordinator Server + NetServer with the same topology."""
+    """Replica of coordinator Server + the reactor NetServer with the
+    same thread topology: accept x1, reactors xR, pump x1, lanes xL.
+    Thread count is independent of connection count."""
 
-    def __init__(self, addr, queue_cap=256, reject=False, lanes=2, exec_delay=0.0005, outbox_cap=1024):
+    def __init__(
+        self,
+        addr,
+        queue_cap=256,
+        reject=False,
+        lanes=2,
+        reactors=2,
+        exec_delay=0.0005,
+        outbuf_cap=8 << 20,
+    ):
         self.ingest = Channel(queue_cap)
         self.responses = Channel(max(queue_cap, 1024))
         self.reject = reject
+        self.exec_delay = exec_delay
+        self.outbuf_cap = outbuf_cap
         self.metrics = defaultdict(int)
+        self.mlock = threading.Lock()
         self.next_id = 0
         self.id_lock = threading.Lock()
-        self.exec_delay = exec_delay
-        self.outbox_cap = outbox_cap
-        self.stop = threading.Event()
-        self.routes = {}
+        self.routes = {}  # server id -> (reactor idx, token, client id, version)
         self.routes_lock = threading.Lock()
-        self.conn_threads = []
-        self.conn_socks = {}
-        self.socks_lock = threading.Lock()
-        # lanes (collapsing prep+dispatch: prep is pass-through here)
-        self.lanes = [threading.Thread(target=self._lane, daemon=True) for _ in range(lanes)]
-        for t in self.lanes:
+        self.stop = threading.Event()
+
+        self.lane_threads = [
+            threading.Thread(target=self._lane, daemon=True) for _ in range(lanes)
+        ]
+        for t in self.lane_threads:
             t.start()
-        self.demux_t = threading.Thread(target=self._demux, daemon=True)
-        self.demux_t.start()
+        self.pump_t = threading.Thread(target=self._pump, daemon=True)
+        self.pump_t.start()
+        self.queues = [ReactorQueue() for _ in range(max(1, reactors))]
+        self.reactor_threads = [
+            threading.Thread(target=self._reactor, args=(i, q), daemon=True)
+            for i, q in enumerate(self.queues)
+        ]
+        for t in self.reactor_threads:
+            t.start()
         self.listener = socket.create_server(addr)
+        self.listener.settimeout(0.05)
         self.local_addr = self.listener.getsockname()
         self.accept_t = threading.Thread(target=self._accept, daemon=True)
         self.accept_t.start()
+
+    def bump(self, key, d=1):
+        with self.mlock:
+            self.metrics[key] += d
 
     def reserve_id(self):
         with self.id_lock:
@@ -222,156 +363,334 @@ class Server:
             self.next_id += 1
             return i
 
-    def submit_with_id(self, rid, model, graph):
-        req = (rid, model, graph, time.monotonic())
-        if self.reject:
-            if self.ingest.try_send(req):
-                return True
-            self.metrics["rejected"] += 1
-            return False
-        try:
-            self.ingest.send(req)
-            return True
-        except Closed:
-            self.metrics["rejected"] += 1
-            return False
+    def try_submit(self, req):
+        """Nonblocking admission: 'accepted', 'rejected' (Reject
+        policy), or 'retry' (Block policy: park on the connection)."""
+        if self.ingest.try_send(req):
+            return "accepted"
+        return "rejected" if self.reject else "retry"
+
+    # -- coordinator side ------------------------------------------------
 
     def _lane(self):
         while True:
             item = self.ingest.recv()
             if item is None:
                 return
-            rid, model, graph, t_sub = item
-            time.sleep(self.exec_delay)  # "inference"
-            if model == "bad":
-                out = ("err", "model not served")
+            rid, model, graph, t_sub, deadline = item
+            if deadline is not None and time.monotonic() > deadline:
+                # Shed by deadline right before execution (the Rust
+                # pipeline also sheds at prep and at dispatch purge;
+                # one site suffices for the accounting contract).
+                self.bump("deadline_expired")
+                out = ("expired", "deadline expired before execution")
             else:
-                out = ("ok", [sum(graph[2]) + len(graph[1])])
+                time.sleep(self.exec_delay)  # "inference"
+                if model == "bad":
+                    out = ("err", "model not served")
+                else:
+                    out = ("ok", [sum(graph[2]) + len(graph[1])])
+            if out[0] == "ok":
+                self.bump("completed")
+            elif out[0] == "err":
+                self.bump("failed")
             try:
                 self.responses.send((rid, model, out, t_sub))
             except Closed:
                 return
 
-    def _demux(self):
+    def _pump(self):
+        """Response pump: settle the route table (one side of the
+        symmetric in_flight accounting), encode in the request's own
+        version, repost to the owning reactor."""
         while True:
             item = self.responses.recv()
             if item is None:
                 return
             rid, model, out, t_sub = item
-            self.metrics["e2e_count"] += 1
+            self.bump("e2e_count")
             with self.routes_lock:
                 entry = self.routes.pop(rid, None)
             if entry is None:
+                # Connection closed while the request was in flight;
+                # its teardown already settled the gauge, so only
+                # count the loss.
+                self.bump("responses_dropped")
                 continue
-            outbox, client_id = entry
-            self.metrics["in_flight"] -= 1
+            reactor_idx, token, client_id, version = entry
+            self.bump("in_flight", -1)
             if out[0] == "ok":
-                wire = encode_response(client_id, model, OK, out[1])
-                self.metrics["completed"] += 1
+                wire = encode_response(version, client_id, model, OK, out[1])
+            elif out[0] == "expired":
+                wire = encode_response(version, client_id, model, EXPIRED, error=out[1])
             else:
-                wire = encode_response(client_id, model, ERROR, error=out[1])
-                self.metrics["failed"] += 1
-            if not outbox.try_send(wire):
-                self.metrics["responses_dropped"] += 1
+                wire = encode_response(version, client_id, model, ERROR, error=out[1])
+            self.queues[reactor_idx].send(("deliver", token, rid, wire))
+
+    # -- wire side -------------------------------------------------------
 
     def _accept(self):
         conn_no = 0
-        while True:
+        while not self.stop.is_set():
             try:
                 sock, _ = self.listener.accept()
+            except socket.timeout:
+                continue
             except OSError:
-                return
-            if self.stop.is_set():
-                sock.close()
-                return
+                break
+            sock.setblocking(False)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self.metrics["conns_accepted"] += 1
-            self.metrics["conns_open"] += 1
-            with self.socks_lock:
-                self.conn_socks[conn_no] = sock
-            outbox = Channel(self.outbox_cap)
-            wt = threading.Thread(target=self._writer, args=(sock, outbox), daemon=True)
-            rt = threading.Thread(target=self._reader, args=(conn_no, sock, outbox), daemon=True)
-            wt.start()
-            rt.start()
-            self.conn_threads += [wt, rt]
+            self.bump("conns_accepted")
+            self.bump("conns_open")
+            self.queues[conn_no % len(self.queues)].send(("conn", sock))
             conn_no += 1
 
-    def _writer(self, sock, outbox):
-        try:
-            while True:
-                frame = outbox.recv()
-                if frame is None:
-                    return
-                sock.sendall(frame)
-        except OSError:
-            pass
+    def _reactor(self, idx, q):
+        sel = selectors.DefaultSelector()
+        sel.register(q.wake_rx, selectors.EVENT_READ, None)
+        conns = {}
+        next_token = [1]
+        stop = [False]
 
-    def _reader(self, conn_no, sock, outbox):
-        f = sock.makefile("rb")
-        try:
-            while True:
+        def destroy(token, conn):
+            # Sweep this connection's in-flight routes: the teardown
+            # side of the symmetric gauge accounting.
+            if conn.mask:
                 try:
-                    payload = read_frame(f)
-                except (IOError, ValueError, OSError):
-                    break
-                if payload is None:
-                    break
-                try:
-                    kind, rid, model, graph = decode_frame(payload)
-                    if kind != "req":
-                        raise ValueError("response frame sent to server")
-                except ValueError as e:
-                    self.metrics["decode_errors"] += 1
-                    try:
-                        outbox.send(encode_response(0, "", BADREQ, error=str(e)))
-                    except Closed:
-                        pass
-                    continue
-                server_id = self.reserve_id()
+                    sel.unregister(conn.sock)
+                except (KeyError, ValueError, OSError):
+                    pass
+                conn.mask = 0
+            for sid in conn.pending:
                 with self.routes_lock:
-                    self.routes[server_id] = (outbox, rid)
-                self.metrics["in_flight"] += 1
-                if not self.submit_with_id(server_id, model, graph):
-                    with self.routes_lock:
-                        self.routes.pop(server_id, None)
-                    self.metrics["in_flight"] -= 1
-                    try:
-                        outbox.send(encode_response(rid, model, REJECTED, error="ingest queue full"))
-                    except Closed:
-                        pass
-        finally:
-            outbox.close()
-            with self.socks_lock:
-                self.conn_socks.pop(conn_no, None)
-            self.metrics["conns_open"] -= 1
+                    hit = self.routes.pop(sid, None) is not None
+                if hit:
+                    self.bump("in_flight", -1)
+            conn.pending.clear()
+            conns.pop(token, None)
+            conn.sock.close()
+            self.bump("conns_open", -1)
+
+        def settle(token, conn, close):
+            if close:
+                destroy(token, conn)
+                return
+            want = (selectors.EVENT_READ if conn.reading else 0) | (
+                selectors.EVENT_WRITE if conn.outbuf else 0
+            )
+            if want == conn.mask:
+                return
+            try:
+                if conn.mask == 0:
+                    sel.register(conn.sock, want, token)
+                elif want == 0:
+                    sel.unregister(conn.sock)
+                else:
+                    sel.modify(conn.sock, want, token)
+                conn.mask = want
+            except (OSError, ValueError, KeyError):
+                destroy(token, conn)
+
+        def answer(conn, version, rid, model, status, output=(), error=""):
+            frame = encode_response(version, rid, model, status, output, error)
+            if len(conn.outbuf) + len(frame) > self.outbuf_cap:
+                self.bump("responses_dropped")
+            else:
+                conn.outbuf += frame
+
+        def flush(conn):
+            while conn.outbuf:
+                try:
+                    n = conn.sock.send(conn.outbuf)
+                except BlockingIOError:
+                    return False
+                except OSError:
+                    return True
+                if n == 0:
+                    return True
+                del conn.outbuf[:n]
+            return False
+
+        def read_sock(conn):
+            total = 0
+            while total < READ_QUANTUM:
+                try:
+                    data = conn.sock.recv(65536)
+                except BlockingIOError:
+                    return False
+                except OSError:
+                    return True
+                if not data:
+                    return True
+                conn.inbuf += data
+                total += len(data)
+            return False
+
+        def parse_frames(token, conn):
+            # Parked connections hold their buffered bytes: parsing
+            # resumes only once the parked request settles.
+            while conn.parked is None:
+                if len(conn.inbuf) < 4:
+                    return False
+                (ln,) = struct.unpack_from("<I", conn.inbuf)
+                if ln > MAX_FRAME:
+                    # Transport-level hostility: close without a
+                    # decode_errors count (mirrors the Rust reactor).
+                    return True
+                if len(conn.inbuf) < 4 + ln:
+                    return False
+                payload = bytes(conn.inbuf[4 : 4 + ln])
+                del conn.inbuf[: 4 + ln]
+                handle_payload(token, conn, payload)
+            return False
+
+        def handle_payload(token, conn, payload):
+            version = payload[0] if payload and payload[0] in (V1, VERSION) else VERSION
+            try:
+                decoded = decode_frame(payload)
+            except DecodeError as e:
+                self.bump("decode_errors")
+                rid = e.rid if e.rid is not None else BAD_FRAME_ID
+                answer(conn, version, rid, "", BADREQ, error=str(e))
+                return
+            if decoded[0] != "req":
+                self.bump("decode_errors")
+                answer(
+                    conn, version, BAD_FRAME_ID, "", BADREQ,
+                    error="response frame sent to server",
+                )
+                return
+            _, rid, model, (ttl_ms, _priority), graph, version = decoded
+            # Route before admission: a response can never race past
+            # its routing entry.
+            server_id = self.reserve_id()
+            with self.routes_lock:
+                self.routes[server_id] = (idx, token, rid, version)
+            self.bump("in_flight")
+            deadline = time.monotonic() + ttl_ms / 1000.0 if ttl_ms else None
+            req = (server_id, model, graph, time.monotonic(), deadline)
+            admit(token, conn, req, version)
+
+        def admit(token, conn, req, version):
+            server_id, model = req[0], req[1]
+            st = self.try_submit(req)
+            if st == "accepted":
+                conn.pending.add(server_id)
+            elif st == "rejected":
+                with self.routes_lock:
+                    entry = self.routes.pop(server_id, None)
+                if entry is not None:
+                    self.bump("in_flight", -1)
+                    self.bump("rejected")
+                    answer(conn, version, entry[2], model, REJECTED,
+                           error="ingest queue full")
+            else:  # park: Block-policy backpressure without a thread
+                conn.pending.add(server_id)
+                conn.parked = (req, version)
+                conn.reading = False
+
+        def tick_parked(token, conn):
+            req, version = conn.parked
+            server_id, model, _graph, _t, deadline = req
+            if deadline is not None and time.monotonic() > deadline:
+                conn.parked = None
+                conn.reading = True
+                conn.pending.discard(server_id)
+                with self.routes_lock:
+                    entry = self.routes.pop(server_id, None)
+                if entry is not None:
+                    self.bump("in_flight", -1)
+                    self.bump("deadline_expired")
+                    answer(conn, version, entry[2], model, EXPIRED,
+                           error="deadline expired before admission")
+            else:
+                if not self.ingest.try_send(req):
+                    return  # still parked
+                conn.parked = None
+                conn.reading = True
+            close = parse_frames(token, conn)
+            close = close or flush(conn)
+            settle(token, conn, close)
+
+        while True:
+            timeout = PARK_TICK if any(c.parked for c in conns.values()) else None
+            events = sel.select(timeout)
+            for key, mask in events:
+                if key.data is None:
+                    for msg in q.drain():
+                        if msg[0] == "conn":
+                            sock = msg[1]
+                            token = next_token[0]
+                            next_token[0] += 1
+                            conn = Conn(sock)
+                            conns[token] = conn
+                            try:
+                                sel.register(sock, selectors.EVENT_READ, token)
+                                conn.mask = selectors.EVENT_READ
+                            except OSError:
+                                conns.pop(token, None)
+                                sock.close()
+                                self.bump("conns_open", -1)
+                        elif msg[0] == "deliver":
+                            _, token, rid, frame = msg
+                            conn = conns.get(token)
+                            if conn is None:
+                                # Route hit but connection since died:
+                                # the pump already settled the gauge.
+                                self.bump("responses_dropped")
+                                continue
+                            conn.pending.discard(rid)
+                            if len(conn.outbuf) + len(frame) > self.outbuf_cap:
+                                self.bump("responses_dropped")
+                            else:
+                                conn.outbuf += frame
+                            settle(token, conn, flush(conn))
+                        else:
+                            stop[0] = True
+                    continue
+                token = key.data
+                conn = conns.get(token)
+                if conn is None:
+                    continue
+                close = False
+                if conn.reading and (mask & selectors.EVENT_READ):
+                    close = read_sock(conn)
+                    if not close:
+                        close = parse_frames(token, conn)
+                    elif conn.inbuf:
+                        # EOF still delivers what was buffered first
+                        # (a client may send-then-close).
+                        parse_frames(token, conn)
+                if not close:
+                    close = flush(conn)
+                settle(token, conn, close)
+            if stop[0]:
+                for token, conn in list(conns.items()):
+                    destroy(token, conn)
+                sel.close()
+                q.close()
+                return
+            for token, conn in list(conns.items()):
+                if conn.parked is not None:
+                    tick_parked(token, conn)
 
     def shutdown(self):
         self.stop.set()
-        try:
-            socket.create_connection(self.local_addr, timeout=1).close()
-        except OSError:
-            pass
-        self.listener.close()
         self.accept_t.join(5)
         assert not self.accept_t.is_alive(), "accept loop stuck"
-        with self.socks_lock:
-            socks = list(self.conn_socks.values())
-        for s in socks:
-            try:
-                s.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-        for t in self.conn_threads:
+        self.listener.close()
+        for q in self.queues:
+            q.send(("stop",))
+        for t in self.reactor_threads:
             t.join(5)
-            assert not t.is_alive(), "conn thread stuck"
+            assert not t.is_alive(), "reactor stuck"
         self.ingest.close()
-        for t in self.lanes:
+        for t in self.lane_threads:
             t.join(5)
             assert not t.is_alive(), "lane stuck"
         self.responses.close()
-        self.demux_t.join(5)
-        assert not self.demux_t.is_alive(), "demux stuck"
+        self.pump_t.join(5)
+        assert not self.pump_t.is_alive(), "pump stuck"
         return self.metrics
 
 
@@ -388,7 +707,26 @@ def mol_graph(seed):
     return (n, edges, node_feat, 9, [], 0)
 
 
-def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
+def priority_pattern(mix):
+    """Replica of loadgen::priority_pattern: "high:1,normal:2,low:1"
+    expands to a deterministic repeating pattern applied by request
+    index."""
+    names = {"high": PRIO_HIGH, "normal": PRIO_NORMAL, "low": PRIO_LOW}
+    mix = mix.strip()
+    if not mix:
+        return [PRIO_NORMAL]
+    out = []
+    for part in mix.split(","):
+        name, _, w = part.partition(":")
+        weight = int(w) if w else 1
+        assert name in names and weight > 0, part
+        out += [names[name]] * weight
+    assert 0 < len(out) <= 4096
+    return out
+
+
+def loadgen(addr, rps, count, connections, models, drain_timeout=10.0,
+            ttl_ms=0, priority_mix=""):
     pending = {}
     plock = threading.Lock()
     counters = defaultdict(int)
@@ -396,6 +734,7 @@ def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
     latencies = []
     written = [0] * connections
     writer_done = [False] * connections
+    pattern = priority_pattern(priority_mix)
     t0 = time.monotonic()
     threads = []
     graphs = [mol_graph(s) for s in range(16)]
@@ -412,7 +751,10 @@ def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
                 if sched > now:
                     time.sleep(sched - now)
                 model = models[k % len(models)]
-                frame = encode_request(k, model, graphs[(k // len(models)) % len(graphs)])
+                frame = encode_request(
+                    k, model, graphs[(k // len(models)) % len(graphs)],
+                    ttl_ms=ttl_ms, priority=pattern[k % len(pattern)],
+                )
                 with plock:
                     pending[k] = sched
                 written[c] += 1
@@ -429,9 +771,8 @@ def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
             received = 0
             while True:
                 # Only park in a socket read when a response is owed
-                # (written counts before sendall), mirroring the Rust
-                # reader: the writer_done race cannot strand us in a
-                # long blocking read.
+                # (written counts before sendall): the writer_done race
+                # cannot strand us in a long blocking read.
                 if received >= written[c]:
                     if writer_done[c]:
                         break
@@ -454,6 +795,12 @@ def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
                             latencies.append(time.monotonic() - sched)
                     elif status == REJECTED:
                         counters["rejected"] += 1
+                    elif status == EXPIRED:
+                        # Deadline sheds fold into `rejected` so the
+                        # reconciliation identity is unchanged;
+                        # shed_by_deadline is the sub-count.
+                        counters["rejected"] += 1
+                        counters["shed_by_deadline"] += 1
                     else:
                         counters["failed"] += 1
 
@@ -479,8 +826,10 @@ def loadgen(addr, rps, count, connections, models, drain_timeout=10.0):
 
 
 def trial_block():
-    srv = Server(("127.0.0.1", 0), queue_cap=64, reject=False, lanes=2, exec_delay=0.0002)
-    rep = loadgen(srv.local_addr, rps=800, count=300, connections=3, models=["gcn", "sgc"])
+    srv = Server(("127.0.0.1", 0), queue_cap=64, reject=False, lanes=2,
+                 exec_delay=0.0002)
+    rep = loadgen(srv.local_addr, rps=800, count=300, connections=3,
+                  models=["gcn", "sgc"])
     m = srv.shutdown()
     assert rep["submitted"] == 300, rep
     assert rep["completed"] == 300, rep
@@ -491,7 +840,8 @@ def trial_block():
 
 
 def trial_reject_burst():
-    srv = Server(("127.0.0.1", 0), queue_cap=2, reject=True, lanes=1, exec_delay=0.002)
+    srv = Server(("127.0.0.1", 0), queue_cap=2, reject=True, lanes=1,
+                 exec_delay=0.002)
     sock = socket.create_connection(srv.local_addr)
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     sock.settimeout(20)
@@ -522,6 +872,7 @@ def trial_reject_burst():
     sock.close()
     m = srv.shutdown()
     assert m["rejected"] == rej, (m["rejected"], rej)
+    assert m["in_flight"] == 0, dict(m)
     return f"reject ok (ok={ok} rej={rej})"
 
 
@@ -531,11 +882,21 @@ def trial_decode_error():
     sock.settimeout(10)
     rf = sock.makefile("rb")
     frame = bytearray(encode_request(1, "gcn", mol_graph(1)))
-    frame[4] = 99  # version byte
+    frame[4] = 99  # version byte lives right after the length prefix
     sock.sendall(bytes(frame))
     payload = read_frame(rf)
     _, rid, model, status, out, err = decode_frame(payload)
     assert status == BADREQ and "version" in err, (status, err)
+    # A corrupt envelope cannot vouch for its id: the sentinel keeps
+    # the answer from colliding with a real in-flight request.
+    assert rid == BAD_FRAME_ID, rid
+    # A well-framed request whose graph fails validation is answered
+    # under the caller's own (salvaged) id.
+    n, edges, nf, fn, ef, fe = mol_graph(5)
+    bad = (n, [(9999, 0)] + edges[1:], nf, fn, ef, fe)
+    sock.sendall(encode_request(55, "gcn", bad))
+    _, rid, model, status, out, err = decode_frame(read_frame(rf))
+    assert (rid, status) == (55, BADREQ), (rid, status, err)
     # still serving
     sock.sendall(encode_request(2, "gcn", mol_graph(2)))
     _, rid, model, status, out, err = decode_frame(read_frame(rf))
@@ -546,27 +907,87 @@ def trial_decode_error():
     assert rid == 3 and status == ERROR, (rid, status)
     sock.close()
     m = srv.shutdown()
-    assert m["decode_errors"] == 1
+    assert m["decode_errors"] == 2, dict(m)
+    assert m["in_flight"] == 0, dict(m)
     return "decode-error ok"
 
 
-def trial_shutdown_with_open_conns_and_inflight():
-    srv = Server(("127.0.0.1", 0), queue_cap=8, lanes=1, exec_delay=0.005)
+def trial_v1_compat():
+    """A v1 (QoS-less) frame is served with default QoS and answered
+    with a v1-stamped response; a v2 frame on the same connection
+    negotiates independently."""
+    srv = Server(("127.0.0.1", 0))
     sock = socket.create_connection(srv.local_addr)
     sock.settimeout(10)
-    for i in range(6):
-        sock.sendall(encode_request(i, "gcn", mol_graph(i)))
-    time.sleep(0.01)  # let some land in flight
-    # client walks away without reading; server must still shut down clean
-    m = srv.shutdown()
-    assert m["conns_open"] == 0
+    rf = sock.makefile("rb")
+    g = mol_graph(13)
+    sock.sendall(encode_request_v1(7, "gcn", g))
+    payload = read_frame(rf)
+    assert payload[0] == V1, "v1 requests get v1-stamped responses"
+    _, rid, model, status, out, err = decode_frame(payload)
+    assert (rid, status) == (7, OK), (rid, status, err)
+    v1_out = out
+    sock.sendall(encode_request(8, "gcn", g, ttl_ms=0, priority=PRIO_HIGH))
+    payload = read_frame(rf)
+    assert payload[0] == VERSION, "v2 requests get v2-stamped responses"
+    _, rid, model, status, out, err = decode_frame(payload)
+    assert (rid, status) == (8, OK), (rid, status, err)
+    assert out == v1_out, "same graph, same bits regardless of version"
     sock.close()
-    return "shutdown-with-inflight ok"
+    srv.shutdown()
+    return "v1-compat ok"
 
+
+def trial_deadline_shed():
+    """Overload with TTLs: a one-lane server with a queue of 2 under a
+    fast 1 ms-TTL burst must shed by deadline -- and every shed must
+    still be answered, so the accounting reconciles exactly and the
+    server-side deadline_expired count equals the client-observed
+    shed_by_deadline."""
+    srv = Server(("127.0.0.1", 0), queue_cap=2, reject=False, lanes=1,
+                 exec_delay=0.003)
+    rep = loadgen(srv.local_addr, rps=5000, count=60, connections=4,
+                  models=["gin"], ttl_ms=1,
+                  priority_mix="high:1,normal:2,low:1")
+    m = srv.shutdown()
+    total = rep["completed"] + rep.get("rejected", 0) + rep.get("failed", 0)
+    assert rep["submitted"] == 60 and rep["lost"] == 0, rep
+    assert total == 60, rep
+    shed = rep.get("shed_by_deadline", 0)
+    assert shed >= 1, rep
+    assert shed <= rep.get("rejected", 0), rep
+    assert m["deadline_expired"] == shed, (dict(m), rep)
+    assert m["in_flight"] == 0, dict(m)
+    return f"deadline-shed ok (shed={shed} completed={rep['completed']})"
+
+
+def trial_orphaned_response_settles_gauge():
+    """A connection closed with a request still in flight: the
+    teardown sweep (or the pump's route miss) must settle the
+    in_flight gauge and count the orphaned response as dropped."""
+    srv = Server(("127.0.0.1", 0), exec_delay=0.01)
+    sock = socket.create_connection(srv.local_addr)
+    sock.sendall(encode_request(9, "gcn", mol_graph(9)))
+    sock.close()  # walk away mid-flight
+    deadline = time.monotonic() + 5
+    while True:
+        with srv.mlock:
+            dropped = srv.metrics["responses_dropped"]
+        if dropped >= 1:
+            break
+        assert time.monotonic() < deadline, "orphaned response never counted"
+        time.sleep(0.002)
+    with srv.mlock:
+        assert srv.metrics["in_flight"] == 0, dict(srv.metrics)
+    m = srv.shutdown()
+    assert m["completed"] == 1, dict(m)
+    assert m["in_flight"] == 0 and m["conns_open"] == 0, dict(m)
+    return "orphan-gauge ok"
 
 
 def trial_stalled_reader_does_not_starve_others():
-    srv = Server(("127.0.0.1", 0), queue_cap=64, lanes=2, exec_delay=0.0005, outbox_cap=8)
+    srv = Server(("127.0.0.1", 0), queue_cap=64, lanes=2, exec_delay=0.0005,
+                 outbuf_cap=4096)
     a = socket.create_connection(srv.local_addr)
     for i in range(60):
         a.sendall(encode_request(i, "gcn", mol_graph(i)))
@@ -584,7 +1005,36 @@ def trial_stalled_reader_does_not_starve_others():
     a.close()
     b.close()
     m = srv.shutdown()
-    return "stalled-reader ok (B served in %.0fms, dropped=%d)" % (dt * 1000, m["responses_dropped"])
+    return "stalled-reader ok (B served in %.0fms, dropped=%d)" % (
+        dt * 1000, m["responses_dropped"])
+
+
+def trial_many_connections_fixed_pool():
+    """N simultaneous connections, one request each, two reactors:
+    every connection answered, thread count independent of N."""
+    srv = Server(("127.0.0.1", 0), queue_cap=64, lanes=2, reactors=2,
+                 exec_delay=0.0002)
+    n_conns = 200
+    g = mol_graph(17)
+    socks = []
+    for i in range(n_conns):
+        s = socket.create_connection(srv.local_addr)
+        s.settimeout(30)
+        socks.append(s)
+    for i, s in enumerate(socks):
+        s.sendall(encode_request(i, "gcn", g))
+    for i, s in enumerate(socks):
+        rf = s.makefile("rb")
+        _, rid, model, status, out, err = decode_frame(read_frame(rf))
+        assert (rid, status) == (i, OK), (i, rid, status, err)
+        rf.close()
+    for s in socks:
+        s.close()
+    m = srv.shutdown()
+    assert m["conns_accepted"] == n_conns, dict(m)
+    assert m["completed"] == n_conns, dict(m)
+    assert m["in_flight"] == 0, dict(m)
+    return f"many-conns ok ({n_conns} conns)"
 
 
 if __name__ == "__main__":
@@ -597,8 +1047,11 @@ if __name__ == "__main__":
             trial_block(),
             trial_reject_burst(),
             trial_decode_error(),
-            trial_shutdown_with_open_conns_and_inflight(),
+            trial_v1_compat(),
+            trial_deadline_shed(),
+            trial_orphaned_response_settles_gauge(),
             trial_stalled_reader_does_not_starve_others(),
+            trial_many_connections_fixed_pool(),
             flush=True,
         )
     print("ALL REPLICA TRIALS PASSED")

@@ -44,6 +44,86 @@ pub enum Admission {
     Rejected,
 }
 
+/// Outcome of a nonblocking admission attempt
+/// ([`super::Server::try_submit`]). A reactor thread can never block
+/// on a full ingest queue — under the Block policy the request comes
+/// back as `Retry` and the caller parks it (dropping read interest, so
+/// backpressure propagates to the peer as TCP flow control) instead of
+/// wedging its whole event loop.
+#[derive(Debug)]
+pub enum TrySubmit {
+    /// Queued; the response will arrive on the response channel.
+    Accepted,
+    /// Shed (Reject policy with a full queue, or a closed server).
+    Rejected,
+    /// Queue full under the Block policy: the request is handed back
+    /// intact for the caller to retry when capacity frees.
+    Retry(super::Request),
+}
+
+/// Scheduling class carried in a v2 wire frame and honored by the
+/// dispatcher's batcher: higher classes drain first under overload
+/// (shed-by-deadline serving, GRIP-style, instead of strict FIFO).
+/// The wire byte is 0 = normal so v1 frames (no QoS field) and
+/// zero-filled defaults mean the same thing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            Priority::Normal => 0,
+            Priority::High => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> anyhow::Result<Priority> {
+        Ok(match b {
+            0 => Priority::Normal,
+            1 => Priority::High,
+            2 => Priority::Low,
+            _ => anyhow::bail!("unknown priority byte {b}"),
+        })
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        Ok(match s {
+            "high" => Priority::High,
+            "normal" => Priority::Normal,
+            "low" => Priority::Low,
+            _ => anyhow::bail!("unknown priority {s:?} (high|normal|low)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Drain order for the batcher's bands: High before Normal before
+    /// Low. `Priority::all()[band]` inverts [`Priority::band`].
+    pub fn band(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn all() -> [Priority; 3] {
+        [Priority::High, Priority::Normal, Priority::Low]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +143,18 @@ mod tests {
         for p in AdmissionPolicy::all() {
             assert_eq!(AdmissionPolicy::parse(p.as_str()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn priority_bytes_and_strings_roundtrip() {
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::default().to_byte(), 0, "v1 default must be 0");
+        for (band, p) in Priority::all().into_iter().enumerate() {
+            assert_eq!(Priority::from_byte(p.to_byte()).unwrap(), p);
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+            assert_eq!(p.band(), band);
+        }
+        assert!(Priority::from_byte(9).is_err());
+        assert!(Priority::parse("urgent").is_err());
     }
 }

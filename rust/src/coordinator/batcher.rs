@@ -8,10 +8,22 @@
 //! without consulting the scheduler in between. The pool dispatcher
 //! ([`super::scheduler`]) owns one `Batcher` and fans the batches it
 //! forms out across the executor lanes by model affinity.
+//!
+//! Queues are banded by [`Priority`]: every queued High request
+//! dispatches before any Normal one, which dispatches before any Low
+//! one — arrival order is preserved only within a band. Combined with
+//! [`Batcher::purge_expired`] this turns overload shedding from
+//! shed-by-arrival into shed-by-deadline: the dispatcher drops what
+//! can no longer meet its TTL, not whatever happened to arrive last.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
+use super::backpressure::Priority;
 use super::request::Prepared;
+
+/// Number of priority bands ([`Priority::all`]'s length).
+const BANDS: usize = 3;
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -32,10 +44,10 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Per-model FIFO queues + the batching decision.
+/// Per-model, per-priority-band FIFO queues + the batching decision.
 pub struct Batcher {
     policy: BatchPolicy,
-    queues: Vec<(String, VecDeque<Prepared>)>,
+    queues: Vec<(String, [VecDeque<Prepared>; BANDS])>,
     /// Index of the model served by the previous batch.
     cursor: usize,
 }
@@ -46,55 +58,96 @@ impl Batcher {
             policy,
             queues: models
                 .iter()
-                .map(|m| (m.to_string(), VecDeque::new()))
+                .map(|m| (m.to_string(), std::array::from_fn(|_| VecDeque::new())))
                 .collect(),
             cursor: 0,
         }
     }
 
     pub fn push(&mut self, p: Prepared) {
-        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == p.model) {
-            q.push_back(p);
+        let band = p.priority.band();
+        if let Some((_, bands)) = self.queues.iter_mut().find(|(m, _)| *m == p.model) {
+            bands[band].push_back(p);
         }
     }
 
     pub fn pending(&self) -> usize {
-        self.queues.iter().map(|(_, q)| q.len()).sum()
+        self.queues
+            .iter()
+            .map(|(_, bands)| bands.iter().map(VecDeque::len).sum::<usize>())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(|(_, q)| q.is_empty())
+        self.queues
+            .iter()
+            .all(|(_, bands)| bands.iter().all(VecDeque::is_empty))
+    }
+
+    fn model_pending(&self, idx: usize) -> usize {
+        self.queues[idx].1.iter().map(VecDeque::len).sum()
+    }
+
+    /// Remove every queued request whose deadline has passed and hand
+    /// them back (the dispatcher answers each with an expired
+    /// response). Queue-order is preserved for the survivors.
+    pub fn purge_expired(&mut self, now: Instant) -> Vec<Prepared> {
+        let mut expired = Vec::new();
+        for (_, bands) in &mut self.queues {
+            for q in bands.iter_mut() {
+                if q.iter().any(|p| p.is_expired(now)) {
+                    let mut keep = VecDeque::with_capacity(q.len());
+                    for p in q.drain(..) {
+                        if p.is_expired(now) {
+                            expired.push(p);
+                        } else {
+                            keep.push_back(p);
+                        }
+                    }
+                    *q = keep;
+                }
+            }
+        }
+        expired
     }
 
     /// Pop the next batch: a run of up to `max_batch` requests for one
-    /// model. Sticky mode drains the current model first (switch only
+    /// model, always serving the highest non-empty priority band in
+    /// the system first. Within the chosen model the batch tops up
+    /// from lower bands (same-model requests fuse regardless of
+    /// class). Sticky mode drains the current model first (switch only
     /// when empty); round-robin advances every batch.
     pub fn next_batch(&mut self) -> Vec<Prepared> {
         let k = self.queues.len();
         if k == 0 {
             return Vec::new();
         }
-        // Choose the starting queue.
+        // Choose the starting queue: the first model (from the cursor)
+        // holding work in the highest occupied band.
         let start = self.cursor;
         let mut chosen = None;
-        for off in 0..k {
-            let idx = (start + off) % k;
-            if !self.queues[idx].1.is_empty() {
-                chosen = Some(idx);
-                break;
+        'bands: for band in 0..BANDS {
+            for off in 0..k {
+                let idx = (start + off) % k;
+                if !self.queues[idx].1[band].is_empty() {
+                    chosen = Some(idx);
+                    break 'bands;
+                }
             }
         }
         let Some(idx) = chosen else {
             return Vec::new();
         };
         let mut out = Vec::new();
-        while out.len() < self.policy.max_batch {
-            match self.queues[idx].1.pop_front() {
-                Some(p) => out.push(p),
-                None => break,
+        for band in 0..BANDS {
+            while out.len() < self.policy.max_batch {
+                match self.queues[idx].1[band].pop_front() {
+                    Some(p) => out.push(p),
+                    None => break,
+                }
             }
         }
-        self.cursor = if self.policy.sticky && !self.queues[idx].1.is_empty() {
+        self.cursor = if self.policy.sticky && self.model_pending(idx) > 0 {
             idx
         } else {
             (idx + 1) % k
@@ -118,6 +171,15 @@ mod tests {
             f_edge: 0,
         };
         Prepared::new(Request::new(id, model, g))
+    }
+
+    fn prepared_with(id: u64, model: &str, prio: Priority, ttl_ms: u32) -> Prepared {
+        let mut p = prepared(id, model);
+        p.priority = prio;
+        if ttl_ms > 0 {
+            p.deadline = Some(p.submitted + std::time::Duration::from_millis(ttl_ms as u64));
+        }
+        p
     }
 
     #[test]
@@ -179,6 +241,53 @@ mod tests {
         let m1 = b.next_batch()[0].model.clone();
         let m2 = b.next_batch()[0].model.clone();
         assert_ne!(m1, m2, "round-robin must alternate models");
+    }
+
+    #[test]
+    fn high_priority_jumps_the_line_across_models() {
+        let mut b = Batcher::new(
+            &["a", "b"],
+            BatchPolicy {
+                max_batch: 8,
+                sticky: true,
+            },
+        );
+        // Low/Normal work for model "a" arrives first; a High request
+        // for model "b" must still dispatch before any of it.
+        for i in 0..4 {
+            b.push(prepared_with(i, "a", Priority::Normal, 0));
+        }
+        b.push(prepared_with(50, "a", Priority::Low, 0));
+        b.push(prepared_with(99, "b", Priority::High, 0));
+        let first = b.next_batch();
+        assert_eq!(first[0].id, 99, "High class must dispatch first");
+        assert!(first.iter().all(|p| p.model == "b"));
+        // Then the Normal band drains before the Low band.
+        let second = b.next_batch();
+        assert_eq!(
+            second.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 50],
+            "Normal FIFO first, Low last (same model tops up the batch)"
+        );
+    }
+
+    #[test]
+    fn purge_expired_sheds_only_past_deadline() {
+        let mut b = Batcher::new(&["gcn"], BatchPolicy::default());
+        b.push(prepared_with(0, "gcn", Priority::Normal, 0)); // no deadline
+        b.push(prepared_with(1, "gcn", Priority::Normal, 1)); // 1 ms TTL
+        b.push(prepared_with(2, "gcn", Priority::High, 3600_000)); // 1 h TTL
+        let soon = Instant::now() + std::time::Duration::from_secs(60);
+        let expired = b.purge_expired(soon);
+        assert_eq!(
+            expired.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![1],
+            "only the lapsed TTL is shed; no-deadline and 1 h TTL survive"
+        );
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.next_batch()[0].id, 2, "survivors keep band order");
+        // Purging when nothing has lapsed is a no-op.
+        assert!(b.purge_expired(soon).is_empty());
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct Metrics {
     lanes: RwLock<Vec<Arc<LaneCounters>>>,
     started: Instant,
     rejected: AtomicU64,
+    /// Requests shed because their TTL ran out before a lane executed
+    /// them (counted at whichever pipeline stage noticed: prep,
+    /// dispatch, or lane).
+    deadline_expired: AtomicU64,
     net: NetCounters,
     /// Fused interpreter passes executed (each covering ≥ 2 requests).
     fused_batches: AtomicU64,
@@ -116,6 +120,7 @@ impl Metrics {
             lanes: RwLock::new(Vec::new()),
             started: Instant::now(),
             rejected: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             net: NetCounters::default(),
             fused_batches: AtomicU64::new(0),
             fused_graphs: AtomicU64::new(0),
@@ -182,6 +187,17 @@ impl Metrics {
 
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request shed because its deadline passed before
+    /// execution (the server-side `shed_by_deadline` source).
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed by deadline expiry so far.
+    pub fn deadline_expired(&self) -> u64 {
+        self.deadline_expired.load(Ordering::Relaxed)
     }
 
     /// Record one fused interpreter pass covering `graphs` requests
@@ -326,9 +342,10 @@ impl Metrics {
             ));
         }
         out.push_str(&format!(
-            "throughput {:.1} graphs/s, rejected {}\n",
+            "throughput {:.1} graphs/s, rejected {}, deadline expired {}\n",
             self.throughput(),
-            self.rejected()
+            self.rejected(),
+            self.deadline_expired()
         ));
         out
     }
@@ -387,6 +404,17 @@ mod tests {
         m.record_rejected();
         m.record_rejected();
         assert_eq!(m.rejected(), 2);
+    }
+
+    #[test]
+    fn deadline_expired_counter_renders() {
+        let m = Metrics::new();
+        assert_eq!(m.deadline_expired(), 0);
+        m.record_deadline_expired();
+        m.record_deadline_expired();
+        m.record_deadline_expired();
+        assert_eq!(m.deadline_expired(), 3);
+        assert!(m.render().contains("deadline expired 3"), "{}", m.render());
     }
 
     #[test]

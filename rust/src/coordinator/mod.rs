@@ -27,7 +27,7 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use backpressure::{Admission, AdmissionPolicy};
+pub use backpressure::{Admission, AdmissionPolicy, Priority, TrySubmit};
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{LaneSummary, Metrics, NetCounters};
 pub use request::{Request, Response};

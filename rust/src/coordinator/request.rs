@@ -1,7 +1,8 @@
 //! Request/response types of the streaming inference server.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::backpressure::Priority;
 use crate::graph::{CooGraph, GraphBatch};
 
 /// One inference request: a raw COO graph aimed at a model — exactly
@@ -16,6 +17,11 @@ pub struct Request {
     /// (DGN's contract); otherwise the prep stage computes it.
     pub eig: Option<Vec<f32>>,
     pub submitted: Instant,
+    /// Absolute deadline derived from the wire TTL; `None` means the
+    /// caller will wait forever (v1 frames, in-process callers).
+    pub deadline: Option<Instant>,
+    /// Scheduling class: the batcher drains higher classes first.
+    pub priority: Priority,
 }
 
 impl Request {
@@ -26,7 +32,35 @@ impl Request {
             graph,
             eig: None,
             submitted: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
         }
+    }
+
+    /// A request carrying wire QoS: `ttl_ms == 0` means no deadline.
+    pub fn with_qos(
+        id: u64,
+        model: impl Into<String>,
+        graph: CooGraph,
+        ttl_ms: u32,
+        priority: Priority,
+    ) -> Request {
+        let submitted = Instant::now();
+        Request {
+            id,
+            model: model.into(),
+            graph,
+            eig: None,
+            submitted,
+            deadline: (ttl_ms > 0).then(|| submitted + Duration::from_millis(ttl_ms as u64)),
+            priority,
+        }
+    }
+
+    /// True once the deadline (if any) has passed: executing this
+    /// request would burn a lane on an answer nobody is waiting for.
+    pub fn is_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -44,6 +78,8 @@ pub struct Prepared {
     /// The ingested graph: raw COO + its converted CSR.
     pub batch: GraphBatch,
     pub prep_done: Instant,
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
 }
 
 impl Prepared {
@@ -56,6 +92,8 @@ impl Prepared {
             graph,
             eig,
             submitted,
+            deadline,
+            priority,
         } = req;
         Prepared {
             id,
@@ -64,7 +102,14 @@ impl Prepared {
             submitted,
             batch: GraphBatch::ingest_unchecked(graph),
             prep_done: Instant::now(),
+            deadline,
+            priority,
         }
+    }
+
+    /// See [`Request::is_expired`].
+    pub fn is_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -76,9 +121,26 @@ pub struct Response {
     pub output: Result<Vec<f32>, String>,
     pub submitted: Instant,
     pub completed: Instant,
+    /// True when the request was shed because its deadline passed
+    /// before execution (distinct from `Err` executor failures: the
+    /// wire front-end answers with `Expired`, not `Error`).
+    pub expired: bool,
 }
 
 impl Response {
+    /// The shed-by-deadline response every pipeline stage emits when a
+    /// request's TTL runs out before it reaches a lane.
+    pub fn deadline_expired(id: u64, model: impl Into<String>, submitted: Instant) -> Response {
+        Response {
+            id,
+            model: model.into(),
+            output: Err("deadline expired before execution".into()),
+            submitted,
+            completed: Instant::now(),
+            expired: true,
+        }
+    }
+
     /// End-to-end latency in seconds.
     pub fn latency(&self) -> f64 {
         self.completed.duration_since(self.submitted).as_secs_f64()
@@ -113,6 +175,7 @@ mod tests {
             output: Ok(vec![0.5]),
             submitted: r.submitted,
             completed: Instant::now(),
+            expired: false,
         };
         assert!(resp.latency() >= 0.0);
         assert!(resp.is_ok());
@@ -126,7 +189,30 @@ mod tests {
             output: Err("too big".into()),
             submitted: Instant::now(),
             completed: Instant::now(),
+            expired: false,
         };
         assert!(!resp.is_ok());
+    }
+
+    #[test]
+    fn qos_deadlines_expire_and_survive_prep() {
+        let r = Request::new(1, "gcn", graph());
+        assert!(r.deadline.is_none() && r.priority == Priority::Normal);
+        assert!(!r.is_expired(Instant::now() + Duration::from_secs(3600)));
+
+        let r = Request::with_qos(2, "gcn", graph(), 0, Priority::High);
+        assert!(r.deadline.is_none(), "ttl 0 means no deadline");
+
+        let r = Request::with_qos(3, "gcn", graph(), 5, Priority::Low);
+        let d = r.deadline.expect("ttl > 0 sets a deadline");
+        assert!(!r.is_expired(r.submitted));
+        assert!(r.is_expired(d));
+        let p = Prepared::new(r);
+        assert_eq!(p.deadline, Some(d));
+        assert_eq!(p.priority, Priority::Low);
+        assert!(p.is_expired(d + Duration::from_millis(1)));
+
+        let resp = Response::deadline_expired(p.id, &p.model, p.submitted);
+        assert!(resp.expired && !resp.is_ok());
     }
 }

@@ -191,7 +191,14 @@ pub fn spawn_executor_pool(
                     return;
                 }
                 ready.send(Ok(()));
-                run_dispatcher(&models, policy, prepared_rx, &lane_queues);
+                run_dispatcher(
+                    &models,
+                    policy,
+                    prepared_rx,
+                    &lane_queues,
+                    &responses_tx,
+                    &metrics,
+                );
                 for q in &lane_queues {
                     q.close();
                 }
@@ -204,11 +211,16 @@ pub fn spawn_executor_pool(
 /// Dispatcher main loop: pull prepared requests, form same-model
 /// batches, route each to its model's home lane (blocking when that
 /// lane's queue is full — the backpressure path up to `submit`).
+/// Before each batching round the banded queues are purged of lapsed
+/// deadlines (shed-by-deadline: under overload the dispatcher drops
+/// what can no longer be answered in time, not whatever arrived last).
 fn run_dispatcher(
     models: &[String],
     policy: BatchPolicy,
     prepared_rx: Channel<Prepared>,
     lane_queues: &[Channel<Vec<Prepared>>],
+    responses_tx: &Channel<Response>,
+    metrics: &Metrics,
 ) {
     let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
     let mut batcher = Batcher::new(&names, policy);
@@ -222,6 +234,10 @@ fn run_dispatcher(
         batcher.push(first);
         while let Some(more) = prepared_rx.try_recv() {
             batcher.push(more);
+        }
+        for p in batcher.purge_expired(Instant::now()) {
+            metrics.record_deadline_expired();
+            let _ = responses_tx.send(Response::deadline_expired(p.id, p.model, p.submitted));
         }
         while !batcher.is_empty() {
             let batch = batcher.next_batch();
@@ -389,7 +405,33 @@ fn execute_batch(
     let mut result = Ok(());
     'drain: while !batch.is_empty() {
         let take = fuse_max.max(1).min(batch.len());
-        let chunk: Vec<Prepared> = batch.drain(..take).collect();
+        let mut chunk: Vec<Prepared> = batch.drain(..take).collect();
+        // Last-moment deadline check: anything that lapsed while queued
+        // on the lane is shed here instead of burning execute time on
+        // an answer nobody is waiting for.
+        let now = Instant::now();
+        if chunk.iter().any(|p| p.is_expired(now)) {
+            let mut live = Vec::with_capacity(chunk.len());
+            for p in chunk {
+                if p.is_expired(now) {
+                    metrics.record_deadline_expired();
+                    if responses_tx
+                        .send(Response::deadline_expired(p.id, p.model, p.submitted))
+                        .is_err()
+                    {
+                        result = Err(()); // response consumer gone
+                        break 'drain;
+                    }
+                } else {
+                    live.push(p);
+                }
+            }
+            chunk = live;
+        }
+        let take = chunk.len();
+        if take == 0 {
+            continue;
+        }
         if take >= 2 {
             if let Some((outs, dur)) = try_fuse(engine, &chunk) {
                 metrics.record_fused(take as u64);
@@ -413,6 +455,7 @@ fn execute_batch(
                         output: Ok(out),
                         submitted: p.submitted,
                         completed,
+                        expired: false,
                     })
                     .collect();
                 for resp in &resps {
@@ -443,6 +486,7 @@ fn execute_batch(
                 output: out,
                 submitted: p.submitted,
                 completed,
+                expired: false,
             };
             metrics.record(
                 &resp.model,

@@ -34,7 +34,7 @@ use crate::graph::CooGraph;
 use crate::runtime::Artifacts;
 use crate::util::pool::Channel;
 
-use super::backpressure::{Admission, AdmissionPolicy};
+use super::backpressure::{Admission, AdmissionPolicy, TrySubmit};
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::request::{Prepared, Request, Response};
@@ -136,6 +136,18 @@ impl Server {
                     .name(format!("gengnn-prep-{w}"))
                     .spawn(move || {
                         while let Some(req) = rx.recv() {
+                            // Shed-by-deadline at the first pipeline
+                            // stage: an expired request must not cost
+                            // an eigensolve, let alone a lane slot.
+                            if req.is_expired(Instant::now()) {
+                                metrics.record_deadline_expired();
+                                let _ = resp_tx.send(Response::deadline_expired(
+                                    req.id,
+                                    &req.model,
+                                    req.submitted,
+                                ));
+                                continue;
+                            }
                             match router.route(&req) {
                                 Route::Accept(model) => {
                                     let meta = router.meta(&model).expect("routed");
@@ -163,6 +175,7 @@ impl Server {
                                         output: Err(reason),
                                         submitted: req.submitted,
                                         completed: Instant::now(),
+                                        expired: false,
                                     });
                                 }
                             }
@@ -261,6 +274,26 @@ impl Server {
                     self.metrics.record_rejected();
                     Admission::Rejected
                 }
+            },
+        }
+    }
+
+    /// Nonblocking admission of a fully-formed request (QoS attached).
+    /// Never parks the caller: a full queue under the `Block` policy
+    /// hands the request back as [`TrySubmit::Retry`] so an event-loop
+    /// front-end can shelve it and propagate backpressure as TCP flow
+    /// control instead of wedging its reactor thread. (The coordinator
+    /// outlives its front-ends in the shutdown order, so `Retry` never
+    /// spins against a closed ingest queue.)
+    pub fn try_submit(&self, req: Request) -> TrySubmit {
+        match self.ingest.try_send(req) {
+            Ok(()) => TrySubmit::Accepted,
+            Err(req) => match self.admission {
+                AdmissionPolicy::Reject => {
+                    self.metrics.record_rejected();
+                    TrySubmit::Rejected
+                }
+                AdmissionPolicy::Block => TrySubmit::Retry(req),
             },
         }
     }
@@ -396,6 +429,33 @@ mod tests {
         let Some(server) = start(&["gcn"]) else { return };
         let m = server.shutdown();
         assert_eq!(m.total_completed(), 0);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_expired_responses() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let responses = server.responses();
+        let g = molecular_graph(&mut Rng::new(9), &MolConfig::molhiv());
+        let mut req = super::super::Request::with_qos(
+            server.reserve_id(),
+            "gcn",
+            g,
+            1,
+            super::super::Priority::High,
+        );
+        // Pin the deadline into the past so the prep stage must shed it
+        // regardless of scheduling jitter.
+        req.deadline = Some(Instant::now() - std::time::Duration::from_millis(5));
+        match server.try_submit(req) {
+            TrySubmit::Accepted => {}
+            other => panic!("expected admission, got {other:?}"),
+        }
+        let r = responses.recv().expect("shed response");
+        assert!(r.expired, "response must be marked expired");
+        assert!(!r.is_ok());
+        let m = server.shutdown();
+        assert_eq!(m.deadline_expired(), 1);
+        assert_eq!(m.total_completed(), 0, "expired work must not execute");
     }
 
     #[test]

@@ -8,10 +8,11 @@
 //!                       lanes, --fuse N fused micro-batch size, 1 to
 //!                       disable) and print latency + per-lane/fused
 //!                       metrics; with --listen ADDR, expose the wire
-//!                       protocol over TCP instead (--duration S to
-//!                       exit)
+//!                       protocol over TCP instead (--reactors N
+//!                       event-loop threads, --duration S to exit)
 //! gengnn loadgen        open-loop load generator against a serving
-//!                       front-end: --addr, --rps, --count, model mix;
+//!                       front-end: --addr, --rps, --count, model mix,
+//!                       --ttl-ms / --priority-mix QoS profile;
 //!                       reports p50/p95/p99 + throughput
 //! gengnn infer          run one model on one generated graph
 //! gengnn plan           dump the lowered stage IR of a manifest model
@@ -131,6 +132,7 @@ fn cmd_serve(a: Args) -> Result<()> {
         eprintln!("[serve] compiling {models:?} on {lanes} executor lane(s) ...");
         let net = NetServer::start(NetServerConfig {
             listen: listen.to_string(),
+            reactors: a.usize_or("reactors", 2)?,
             server: cfg,
         })?;
         eprintln!(
@@ -226,6 +228,11 @@ fn cmd_loadgen(a: Args) -> Result<()> {
         seed: a.u64_or("seed", 7)?,
         graph_pool: a.usize_or("graph-pool", 32)?,
         drain_timeout: std::time::Duration::from_secs(a.u64_or("drain-timeout", 30)?),
+        // QoS profile: a nonzero TTL lets the server shed requests
+        // whose deadline lapses (`Expired`); the mix assigns priority
+        // classes round-robin, e.g. "high:1,normal:8,low:1".
+        ttl_ms: a.u64_or("ttl-ms", 0)? as u32,
+        priority_mix: a.str_or("priority-mix", "").to_string(),
     };
     eprintln!(
         "[loadgen] {} requests @ {} rps over {} connection(s) → {}",

@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::CooGraph;
 
-use super::proto::{self, WireFrame, WireResponse};
+use super::proto::{self, WireFrame, WireQos, WireResponse};
 use super::server::dial;
 
 /// One pooled connection: the write half and a buffered read half over
@@ -89,8 +89,21 @@ impl NetClient {
     /// transport failures — so callers can distinguish shed load from
     /// a dead server.
     pub fn infer(&self, model: &str, graph: &CooGraph) -> Result<WireResponse> {
+        self.infer_with_qos(model, graph, WireQos::default())
+    }
+
+    /// [`NetClient::infer`] with explicit QoS: a TTL after which the
+    /// server may shed the request (answered `Expired`) and a priority
+    /// class for its dispatch queue. The default QoS (no TTL, normal
+    /// priority) is exactly what a v1 frame decodes to.
+    pub fn infer_with_qos(
+        &self,
+        model: &str,
+        graph: &CooGraph,
+        qos: WireQos,
+    ) -> Result<WireResponse> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = proto::encode_request_parts(id, model, graph)?;
+        let frame = proto::encode_request_parts(id, model, qos, graph)?;
         // Checkout (or dial) a connection. A transport error tears the
         // connection down instead of returning it, so one bad socket
         // cannot poison later calls.

@@ -36,7 +36,9 @@ use crate::util::bench::BenchResult;
 use crate::util::rng::Rng;
 use crate::util::stats::{fmt_secs, LatencyHistogram};
 
-use super::proto::{self, WireFrame, WireStatus};
+use crate::coordinator::Priority;
+
+use super::proto::{self, WireFrame, WireQos, WireStatus};
 use super::server::dial;
 
 /// Load generator parameters.
@@ -61,6 +63,14 @@ pub struct LoadGenConfig {
     /// normal at low rates) — before declaring the remaining responses
     /// lost.
     pub drain_timeout: Duration,
+    /// TTL stamped on every request (`0` = none): under overload the
+    /// server sheds lapsed requests as `Expired` instead of queueing
+    /// them to a deadline nobody will meet.
+    pub ttl_ms: u32,
+    /// Priority-class mix, e.g. `"high:1,normal:8,low:1"` — weights
+    /// expand into a deterministic repeating pattern applied by
+    /// request index. Empty = all normal.
+    pub priority_mix: String,
 }
 
 impl Default for LoadGenConfig {
@@ -74,8 +84,42 @@ impl Default for LoadGenConfig {
             seed: 7,
             graph_pool: 32,
             drain_timeout: Duration::from_secs(30),
+            ttl_ms: 0,
+            priority_mix: String::new(),
         }
     }
+}
+
+/// Expand a `"high:1,normal:8,low:1"` mix into the deterministic
+/// repeating priority pattern applied by request index (so two runs
+/// with the same config stamp identical QoS on the wire).
+pub fn priority_pattern(mix: &str) -> Result<Vec<Priority>> {
+    let mix = mix.trim();
+    if mix.is_empty() {
+        return Ok(vec![Priority::Normal]);
+    }
+    let mut pattern = Vec::new();
+    for part in mix.split(',') {
+        let part = part.trim();
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad weight in priority mix entry {part:?}"))?,
+            ),
+            None => (part, 1),
+        };
+        let prio = Priority::parse(name)?;
+        anyhow::ensure!(weight > 0, "zero weight in priority mix entry {part:?}");
+        pattern.extend(std::iter::repeat(prio).take(weight));
+    }
+    anyhow::ensure!(
+        pattern.len() <= 4096,
+        "priority mix expands to {} slots (max 4096)",
+        pattern.len()
+    );
+    Ok(pattern)
 }
 
 /// What one load-generation run produced.
@@ -83,7 +127,12 @@ impl Default for LoadGenConfig {
 pub struct LoadGenReport {
     pub submitted: u64,
     pub completed: u64,
+    /// Requests the server shed: admission rejections plus deadline
+    /// expiries (`shed_by_deadline` is the expiry sub-count).
     pub rejected: u64,
+    /// Of `rejected`, how many came back `Expired` — the server chose
+    /// to shed by lapsed TTL rather than by arrival order.
+    pub shed_by_deadline: u64,
     pub failed: u64,
     /// Requests that never received a response (connection drop or
     /// drain timeout) — zero on a healthy run.
@@ -112,12 +161,13 @@ impl LoadGenReport {
     /// Human-readable summary.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "loadgen: {} submitted @ {:.0} rps target → {} ok, {} rejected, {} failed, {} lost\n\
+            "loadgen: {} submitted @ {:.0} rps target → {} ok, {} rejected ({} shed by deadline), {} failed, {} lost\n\
              wall {} → {:.1} rps achieved\n",
             self.submitted,
             self.target_rps,
             self.completed,
             self.rejected,
+            self.shed_by_deadline,
             self.failed,
             self.lost,
             fmt_secs(self.wall_secs),
@@ -184,6 +234,16 @@ impl LoadGenReport {
                 p50: per_completed,
                 min: per_completed,
             },
+            // A count, not a duration — exported so the deadline-shed
+            // path stays observable in the perf trajectory (zero on an
+            // unloaded run is itself the signal).
+            BenchResult {
+                name: "loadgen/shed_by_deadline".to_string(),
+                iters: self.submitted as usize,
+                mean: self.shed_by_deadline as f64,
+                p50: self.shed_by_deadline as f64,
+                min: self.shed_by_deadline as f64,
+            },
         ]
     }
 }
@@ -199,6 +259,7 @@ struct RunState {
     latency: LatencyHistogram,
     completed: AtomicU64,
     rejected: AtomicU64,
+    shed_by_deadline: AtomicU64,
     failed: AtomicU64,
 }
 
@@ -210,6 +271,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(cfg.count > 0, "count must be positive");
     anyhow::ensure!(!cfg.models.is_empty(), "need at least one model");
     let connections = cfg.connections.clamp(1, cfg.count);
+    let pattern = Arc::new(priority_pattern(&cfg.priority_mix)?);
 
     // Deterministic graph pool: `graph_pool` seeded molecular graphs
     // total, shared across the model mix and cycled through the
@@ -225,6 +287,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         latency: LatencyHistogram::new(),
         completed: AtomicU64::new(0),
         rejected: AtomicU64::new(0),
+        shed_by_deadline: AtomicU64::new(0),
         failed: AtomicU64::new(0),
     });
 
@@ -258,6 +321,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         let writer = {
             let cfg = cfg.clone();
             let graphs = Arc::clone(&graphs);
+            let pattern = Arc::clone(&pattern);
             let pending = Arc::clone(&pending);
             let written = Arc::clone(&written);
             let writer_done = Arc::clone(&writer_done);
@@ -275,8 +339,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                         }
                         let model = &cfg.models[k % cfg.models.len()];
                         let graph = &graphs[(k / cfg.models.len()) % graphs.len()];
+                        let qos = WireQos::new(cfg.ttl_ms, pattern[k % pattern.len()]);
                         let Ok(frame) =
-                            proto::encode_request_parts(k as u64, model, graph)
+                            proto::encode_request_parts(k as u64, model, qos, graph)
                         else {
                             continue;
                         };
@@ -352,6 +417,14 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                             WireStatus::Rejected => {
                                 state.rejected.fetch_add(1, Ordering::Relaxed);
                             }
+                            WireStatus::Expired => {
+                                // Shed-by-deadline is a sub-class of
+                                // rejection (the server chose what to
+                                // shed by TTL, not arrival), so the
+                                // reconciliation formula is unchanged.
+                                state.rejected.fetch_add(1, Ordering::Relaxed);
+                                state.shed_by_deadline.fetch_add(1, Ordering::Relaxed);
+                            }
                             WireStatus::Error | WireStatus::BadRequest => {
                                 state.failed.fetch_add(1, Ordering::Relaxed);
                             }
@@ -389,6 +462,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         .sum();
     let completed = state.completed.load(Ordering::Relaxed);
     let rejected = state.rejected.load(Ordering::Relaxed);
+    let shed_by_deadline = state.shed_by_deadline.load(Ordering::Relaxed);
     let failed = state.failed.load(Ordering::Relaxed);
     let wall_secs = t0.elapsed().as_secs_f64();
 
@@ -397,6 +471,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         submitted,
         completed,
         rejected,
+        shed_by_deadline,
         failed,
         lost,
         wall_secs,
@@ -422,6 +497,7 @@ mod tests {
             submitted: 10,
             completed: 7,
             rejected: 2,
+            shed_by_deadline: 1,
             failed: 1,
             lost: 0,
             wall_secs: 1.0,
@@ -449,6 +525,7 @@ mod tests {
             submitted: 100,
             completed: 100,
             rejected: 0,
+            shed_by_deadline: 0,
             failed: 0,
             lost: 0,
             wall_secs: 0.5,
@@ -466,7 +543,11 @@ mod tests {
         assert!(text.contains("p99"), "{text}");
         assert!(text.contains("gcn"), "{text}");
         let results = r.to_bench_results();
-        assert_eq!(results.len(), 4);
+        assert_eq!(results.len(), 5);
+        assert!(
+            results.iter().any(|b| b.name == "loadgen/shed_by_deadline"),
+            "deadline shedding must stay observable in the bench export"
+        );
         // The snapshot invariants check_bench_schema.py enforces.
         for b in &results {
             assert!(b.mean.is_finite() && b.mean >= 0.0, "{}: {}", b.name, b.mean);
@@ -481,7 +562,7 @@ mod tests {
         let json = crate::util::bench::results_to_json("loadgen", &results);
         let v = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "loadgen");
-        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 5);
         // A run with no completions must export nothing, not NaNs.
         let empty = LoadGenReport {
             completed: 0,
@@ -519,5 +600,33 @@ mod tests {
             ..LoadGenConfig::default()
         };
         assert!(run(&bad).is_err());
+        let bad = LoadGenConfig {
+            priority_mix: "urgent:3".to_string(),
+            ..LoadGenConfig::default()
+        };
+        assert!(run(&bad).is_err(), "unknown priority class must refuse");
+    }
+
+    #[test]
+    fn priority_mix_expands_deterministically() {
+        assert_eq!(priority_pattern("").unwrap(), vec![Priority::Normal]);
+        let p = priority_pattern("high:1,normal:2,low:1").unwrap();
+        assert_eq!(
+            p,
+            vec![
+                Priority::High,
+                Priority::Normal,
+                Priority::Normal,
+                Priority::Low
+            ]
+        );
+        // Bare names default to weight 1.
+        assert_eq!(
+            priority_pattern("high,low").unwrap(),
+            vec![Priority::High, Priority::Low]
+        );
+        assert!(priority_pattern("high:0").is_err());
+        assert!(priority_pattern("high:x").is_err());
+        assert!(priority_pattern("normal:99999").is_err());
     }
 }

@@ -15,26 +15,36 @@
 //! measure-everything harness around them:
 //!
 //! * [`proto`]   — length-prefixed binary frames (version byte,
-//!   FNV-1a checksum, raw COO graphs, bit-exact f32 outputs)
-//! * [`server`]  — threaded TCP front-end: accept loop, per-connection
-//!   reader/writer threads, response demux into per-connection
-//!   outboxes, admission backpressure mapped to wire statuses
+//!   FNV-1a checksum, raw COO graphs, TTL/priority QoS in v2 request
+//!   frames, bit-exact f32 outputs)
+//! * [`reactor`] — the nonblocking event-loop pool: a fixed set of
+//!   `polly`-driven reactor threads owning every connection's frame
+//!   reassembly, write draining, and admission state machine
+//! * [`server`]  — front-end wiring: accept loop handing connections
+//!   to the reactors, response pump settling the route table,
+//!   admission backpressure mapped to wire statuses (`Rejected`,
+//!   `Expired`)
 //! * [`client`]  — blocking client with connection pooling
 //! * [`loadgen`] — open-loop load generator: deterministic
-//!   inter-arrival schedule, model mix, HDR-style latency histogram
-//!   reporting p50/p95/p99 + throughput, `BENCH_*.json` export
+//!   inter-arrival schedule, model mix, TTL/priority QoS profiles,
+//!   HDR-style latency histogram reporting p50/p95/p99 + throughput,
+//!   `BENCH_*.json` export
 //!
 //! `rust/tests/net_e2e.rs` pins the contract: outputs served over TCP
 //! are bit-identical to in-process results for every manifest model,
-//! and a saturated Reject-mode queue surfaces as a `Rejected` wire
-//! status rather than a hang or a dropped connection.
+//! a saturated Reject-mode queue surfaces as a `Rejected` wire status
+//! rather than a hang or a dropped connection, and overload with TTLs
+//! sheds by deadline (`Expired`) instead of by arrival.
 
 pub mod client;
 pub mod loadgen;
 pub mod proto;
+pub mod reactor;
 pub mod server;
 
 pub use client::NetClient;
 pub use loadgen::{LoadGenConfig, LoadGenReport};
-pub use proto::{WireFrame, WireRequest, WireResponse, WireStatus, PROTO_VERSION};
+pub use proto::{
+    WireFrame, WireQos, WireRequest, WireResponse, WireStatus, PROTO_V1, PROTO_VERSION,
+};
 pub use server::{NetServer, NetServerConfig};

@@ -7,23 +7,32 @@
 //! │ u32 len      │ payload (len bytes)                             │
 //! └──────────────┴─────────────────────────────────────────────────┘
 //! payload:
-//!   [0]      version byte (PROTO_VERSION)
+//!   [0]      version byte (2 = current, 1 = legacy still decoded)
 //!   [1]      kind byte (1 = request, 2 = response)
 //!   [2..6]   u32 FNV-1a checksum of the body
 //!   [6..]    body
 //!
-//! request body:
-//!   u64 id · u16 model_len · model (utf-8)
+//! request body (v2):
+//!   u64 id · u32 ttl_ms · u8 priority · u16 model_len · model (utf-8)
 //!   u32 n · u16 f_node · u16 f_edge · u32 num_edges
 //!   edges   (num_edges × [u32 src, u32 dst])
 //!   node_feat (n × f_node × f32)
 //!   edge_feat (num_edges × f_edge × f32)
 //!
-//! response body:
+//! request body (v1): identical minus the `ttl_ms`/`priority` fields
+//! (decodes with default QoS: no deadline, normal priority).
+//!
+//! response body (identical in v1 and v2):
 //!   u64 id · u16 model_len · model (utf-8) · u8 status
 //!   status Ok:         u32 out_len · output (f32 × out_len)
 //!   status otherwise:  u32 msg_len · message (utf-8)
 //! ```
+//!
+//! Version negotiation is per-frame and server-side only: the server
+//! decodes both versions (the QoS fields default for v1) and always
+//! answers with the response layout, which did not change — so a v1
+//! client never needs to know v2 exists. Unknown versions are decode
+//! errors answered as `BadRequest`.
 //!
 //! Graphs cross the wire as raw COO — exactly the zero-preprocessing
 //! input contract of the in-process path (paper §3.1), so the TCP
@@ -39,10 +48,14 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::Priority;
 use crate::graph::CooGraph;
 
-/// Protocol version carried in every frame.
-pub const PROTO_VERSION: u8 = 1;
+/// Protocol version stamped on every encoded frame.
+pub const PROTO_VERSION: u8 = 2;
+
+/// The legacy pre-QoS version; still accepted by the decoder.
+pub const PROTO_V1: u8 = 1;
 
 /// Frame kind bytes.
 const KIND_REQUEST: u8 = 1;
@@ -72,6 +85,9 @@ pub enum WireStatus {
     Error,
     /// The server could not decode the request frame.
     BadRequest,
+    /// The request's TTL ran out before a lane executed it
+    /// (shed-by-deadline; the payload is the explanatory message).
+    Expired,
 }
 
 impl WireStatus {
@@ -81,6 +97,7 @@ impl WireStatus {
             WireStatus::Rejected => 1,
             WireStatus::Error => 2,
             WireStatus::BadRequest => 3,
+            WireStatus::Expired => 4,
         }
     }
 
@@ -90,8 +107,24 @@ impl WireStatus {
             1 => WireStatus::Rejected,
             2 => WireStatus::Error,
             3 => WireStatus::BadRequest,
+            4 => WireStatus::Expired,
             _ => bail!("unknown wire status byte {b}"),
         })
+    }
+}
+
+/// Per-request QoS carried in a v2 request frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireQos {
+    /// Time-to-live in milliseconds from submission; 0 = no deadline
+    /// (also what every v1 frame decodes to).
+    pub ttl_ms: u32,
+    pub priority: Priority,
+}
+
+impl WireQos {
+    pub fn new(ttl_ms: u32, priority: Priority) -> WireQos {
+        WireQos { ttl_ms, priority }
     }
 }
 
@@ -101,6 +134,7 @@ pub struct WireRequest {
     /// Caller-chosen correlation id, echoed verbatim in the response.
     pub id: u64,
     pub model: String,
+    pub qos: WireQos,
     pub graph: CooGraph,
 }
 
@@ -187,11 +221,11 @@ fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
 }
 
 /// Seal a body into a full frame (length prefix + header + body).
-fn seal(kind: u8, body: Vec<u8>) -> Vec<u8> {
+fn seal(version: u8, kind: u8, body: Vec<u8>) -> Vec<u8> {
     let payload_len = HEADER_BYTES + body.len();
     let mut out = Vec::with_capacity(4 + payload_len);
     put_u32(&mut out, payload_len as u32);
-    out.push(PROTO_VERSION);
+    out.push(version);
     out.push(kind);
     put_u32(&mut out, checksum(&body));
     out.extend_from_slice(&body);
@@ -200,13 +234,10 @@ fn seal(kind: u8, body: Vec<u8>) -> Vec<u8> {
 
 /// Encode a request into one contiguous frame ready for `write_all`.
 pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
-    encode_request_parts(req.id, &req.model, &req.graph)
+    encode_request_parts(req.id, &req.model, req.qos, &req.graph)
 }
 
-/// Borrowed-parts variant of [`encode_request`]: hot paths (the load
-/// generator's writer, [`super::NetClient::infer`]) serialize straight
-/// from a borrowed graph without cloning it into a [`WireRequest`].
-pub fn encode_request_parts(id: u64, model: &str, g: &CooGraph) -> Result<Vec<u8>> {
+fn check_graph_bounds(model: &str, g: &CooGraph) -> Result<()> {
     if model.len() > u16::MAX as usize {
         bail!("model name too long");
     }
@@ -216,6 +247,50 @@ pub fn encode_request_parts(id: u64, model: &str, g: &CooGraph) -> Result<Vec<u8
     if g.f_node > u16::MAX as usize || g.f_edge > u16::MAX as usize {
         bail!("feature width too large for the wire format");
     }
+    Ok(())
+}
+
+fn put_graph(body: &mut Vec<u8>, model: &str, g: &CooGraph) {
+    put_u16(body, model.len() as u16);
+    body.extend_from_slice(model.as_bytes());
+    put_u32(body, g.n as u32);
+    put_u16(body, g.f_node as u16);
+    put_u16(body, g.f_edge as u16);
+    put_u32(body, g.edges.len() as u32);
+    for &(s, t) in &g.edges {
+        put_u32(body, s);
+        put_u32(body, t);
+    }
+    put_f32s(body, &g.node_feat);
+    put_f32s(body, &g.edge_feat);
+}
+
+/// Borrowed-parts variant of [`encode_request`]: hot paths (the load
+/// generator's writer, [`super::NetClient::infer`]) serialize straight
+/// from a borrowed graph without cloning it into a [`WireRequest`].
+/// Emits the current (v2) layout.
+pub fn encode_request_parts(id: u64, model: &str, qos: WireQos, g: &CooGraph) -> Result<Vec<u8>> {
+    check_graph_bounds(model, g)?;
+    let mut body = Vec::with_capacity(
+        8 + 5
+            + 2
+            + model.len()
+            + 12
+            + g.edges.len() * 8
+            + (g.node_feat.len() + g.edge_feat.len()) * 4,
+    );
+    put_u64(&mut body, id);
+    put_u32(&mut body, qos.ttl_ms);
+    body.push(qos.priority.to_byte());
+    put_graph(&mut body, model, g);
+    Ok(seal(PROTO_VERSION, KIND_REQUEST, body))
+}
+
+/// Encode the legacy v1 request layout (no QoS fields). Kept for the
+/// version-compatibility tests and for talking to pre-v2 servers,
+/// which reject unknown versions as `BadRequest`.
+pub fn encode_request_parts_v1(id: u64, model: &str, g: &CooGraph) -> Result<Vec<u8>> {
+    check_graph_bounds(model, g)?;
     let mut body = Vec::with_capacity(
         8 + 2
             + model.len()
@@ -224,23 +299,25 @@ pub fn encode_request_parts(id: u64, model: &str, g: &CooGraph) -> Result<Vec<u8
             + (g.node_feat.len() + g.edge_feat.len()) * 4,
     );
     put_u64(&mut body, id);
-    put_u16(&mut body, model.len() as u16);
-    body.extend_from_slice(model.as_bytes());
-    put_u32(&mut body, g.n as u32);
-    put_u16(&mut body, g.f_node as u16);
-    put_u16(&mut body, g.f_edge as u16);
-    put_u32(&mut body, g.edges.len() as u32);
-    for &(s, t) in &g.edges {
-        put_u32(&mut body, s);
-        put_u32(&mut body, t);
-    }
-    put_f32s(&mut body, &g.node_feat);
-    put_f32s(&mut body, &g.edge_feat);
-    Ok(seal(KIND_REQUEST, body))
+    put_graph(&mut body, model, g);
+    Ok(seal(PROTO_V1, KIND_REQUEST, body))
 }
 
-/// Encode a response into one contiguous frame.
+/// Encode a response into one contiguous frame, stamped
+/// [`PROTO_VERSION`]. Servers answering a v1 client use
+/// [`encode_response_with_version`] to echo the caller's version.
 pub fn encode_response(resp: &WireResponse) -> Result<Vec<u8>> {
+    encode_response_with_version(PROTO_VERSION, resp)
+}
+
+/// Encode a response stamped with an explicit protocol version (the
+/// body layout is identical in v1 and v2, so a server negotiates by
+/// simply echoing whatever version the request frame carried — a v1
+/// client never sees a version byte it does not understand).
+pub fn encode_response_with_version(version: u8, resp: &WireResponse) -> Result<Vec<u8>> {
+    if version != PROTO_V1 && version != PROTO_VERSION {
+        bail!("cannot encode protocol version {version}");
+    }
     if resp.model.len() > u16::MAX as usize {
         bail!("model name too long");
     }
@@ -263,7 +340,7 @@ pub fn encode_response(resp: &WireResponse) -> Result<Vec<u8>> {
         put_u32(&mut body, resp.error.len() as u32);
         body.extend_from_slice(resp.error.as_bytes());
     }
-    Ok(seal(KIND_RESPONSE, body))
+    Ok(seal(version, KIND_RESPONSE, body))
 }
 
 // ---- decoding -----------------------------------------------------------
@@ -344,14 +421,16 @@ impl<'a> Cursor<'a> {
 }
 
 /// Decode one payload (a frame minus its length prefix) into a typed
-/// frame, verifying version and checksum.
+/// frame, verifying version and checksum. Both protocol versions are
+/// accepted: v1 request frames carry no QoS fields and decode with
+/// [`WireQos::default`] (no deadline, normal priority).
 pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
     if payload.len() < HEADER_BYTES {
         bail!("frame too short ({} bytes)", payload.len());
     }
     let version = payload[0];
-    if version != PROTO_VERSION {
-        bail!("unsupported protocol version {version} (expected {PROTO_VERSION})");
+    if version != PROTO_V1 && version != PROTO_VERSION {
+        bail!("unsupported protocol version {version} (expected {PROTO_V1} or {PROTO_VERSION})");
     }
     let kind = payload[1];
     let want = u32::from_le_bytes(arr4(&payload[2..6]));
@@ -364,6 +443,14 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
     let frame = match kind {
         KIND_REQUEST => {
             let id = c.u64()?;
+            let qos = if version >= PROTO_VERSION {
+                WireQos {
+                    ttl_ms: c.u32()?,
+                    priority: Priority::from_byte(c.u8()?)?,
+                }
+            } else {
+                WireQos::default()
+            };
             let model_len = c.u16()? as usize;
             let model = c.utf8(model_len)?;
             let n = c.u32()? as usize;
@@ -397,7 +484,12 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
                 f_edge,
             };
             graph.validate()?;
-            WireFrame::Request(WireRequest { id, model, graph })
+            WireFrame::Request(WireRequest {
+                id,
+                model,
+                qos,
+                graph,
+            })
         }
         KIND_RESPONSE => {
             let id = c.u64()?;
@@ -437,7 +529,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
 /// a different in-flight request.
 pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
     if payload.len() < HEADER_BYTES + 8
-        || payload[0] != PROTO_VERSION
+        || (payload[0] != PROTO_V1 && payload[0] != PROTO_VERSION)
         || payload[1] != KIND_REQUEST
     {
         return None;
@@ -493,13 +585,14 @@ mod tests {
         let req = WireRequest {
             id: 0xDEAD_BEEF_1234,
             model: "gin_vn".into(),
+            qos: WireQos::new(1500, Priority::High),
             graph: graph(),
         };
         let frame = encode_request(&req).unwrap();
         // The borrowed-parts encoder is byte-identical to the owned one.
         assert_eq!(
             frame,
-            encode_request_parts(req.id, &req.model, &req.graph).unwrap()
+            encode_request_parts(req.id, &req.model, req.qos, &req.graph).unwrap()
         );
         let mut r = std::io::Cursor::new(&frame);
         let payload = read_frame(&mut r).unwrap().unwrap();
@@ -518,6 +611,7 @@ mod tests {
             WireResponse::err(8, "gcn", WireStatus::Rejected, "queue full"),
             WireResponse::err(9, "", WireStatus::Error, "model \"bert\" not served"),
             WireResponse::err(0, "", WireStatus::BadRequest, "checksum mismatch"),
+            WireResponse::err(11, "gcn", WireStatus::Expired, "deadline expired"),
         ];
         for resp in cases {
             let frame = encode_response(&resp).unwrap();
@@ -554,6 +648,7 @@ mod tests {
         let req = WireRequest {
             id: 1,
             model: "gcn".into(),
+            qos: WireQos::default(),
             graph: graph(),
         };
         let frame = encode_request(&req).unwrap();
@@ -593,6 +688,7 @@ mod tests {
         let req = WireRequest {
             id: 2,
             model: "gat".into(),
+            qos: WireQos::default(),
             graph: graph(),
         };
         let frame = encode_request(&req).unwrap();
@@ -613,6 +709,7 @@ mod tests {
         let req = WireRequest {
             id: 3,
             model: "gcn".into(),
+            qos: WireQos::default(),
             graph: g,
         };
         let frame = encode_request(&req).unwrap();
@@ -629,6 +726,7 @@ mod tests {
         let frame = encode_request(&WireRequest {
             id: 77,
             model: "gcn".into(),
+            qos: WireQos::default(),
             graph: g,
         })
         .unwrap();
@@ -647,6 +745,66 @@ mod tests {
         let mut wrong_ver = payload;
         wrong_ver[0] = 9;
         assert_eq!(salvage_request_id(&wrong_ver), None);
+    }
+
+    #[test]
+    fn v1_frames_decode_with_default_qos() {
+        // A legacy client's frame (no TTL/priority fields) must still
+        // be served, with QoS defaulting to "no deadline, normal".
+        let g = graph();
+        let frame = encode_request_parts_v1(42, "gcn", &g).unwrap();
+        assert_eq!(frame[4], PROTO_V1, "version byte");
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        let WireFrame::Request(req) = decode_frame(&payload).unwrap() else {
+            panic!("not a request");
+        };
+        assert_eq!(req.id, 42);
+        assert_eq!(req.model, "gcn");
+        assert_eq!(req.qos, WireQos::default());
+        assert_eq!(req.graph, g);
+        // And its id is salvageable like any trustworthy envelope.
+        assert_eq!(salvage_request_id(&payload), Some(42));
+    }
+
+    #[test]
+    fn response_version_echoes_the_request() {
+        // The response layout is version-invariant: a server answering
+        // a v1 client stamps v1 so the client's strict decoder accepts
+        // it; the body bytes are identical either way.
+        let resp = WireResponse::ok(3, "gcn", vec![1.0, 2.0]);
+        let v1 = encode_response_with_version(PROTO_V1, &resp).unwrap();
+        let v2 = encode_response_with_version(PROTO_VERSION, &resp).unwrap();
+        assert_eq!(v1[4], PROTO_V1);
+        assert_eq!(v2[4], PROTO_VERSION);
+        assert_eq!(v1[..4], v2[..4], "length prefix");
+        assert_eq!(v1[5..], v2[5..], "kind + checksum + body");
+        for frame in [v1, v2] {
+            let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+            match decode_frame(&payload).unwrap() {
+                WireFrame::Response(got) => assert_eq!(got, resp),
+                other => panic!("decoded {other:?}"),
+            }
+        }
+        assert!(encode_response_with_version(3, &resp).is_err());
+    }
+
+    #[test]
+    fn unknown_priority_byte_is_a_decode_error() {
+        let frame = encode_request_parts(
+            1,
+            "gcn",
+            WireQos::new(0, Priority::Normal),
+            &graph(),
+        )
+        .unwrap();
+        let mut payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        // Body offset 12 is the priority byte (8 id + 4 ttl); patch it
+        // and re-seal the checksum so only the priority is wrong.
+        payload[HEADER_BYTES + 12] = 7;
+        let fixed = checksum(&payload[HEADER_BYTES..]);
+        payload[2..6].copy_from_slice(&fixed.to_le_bytes());
+        let e = decode_frame(&payload).unwrap_err();
+        assert!(e.to_string().contains("priority"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,863 @@
+//! The nonblocking reactor pool: a fixed set of event-loop threads
+//! multiplexing every client connection, replacing the old
+//! thread-per-connection reader/writer pairs.
+//!
+//! ```text
+//!             ┌► reactor 0 ─ conns {a, b, …} ─┐ try_submit   lanes
+//! accept ─────┼► reactor 1 ─ conns {c, d, …} ─┼────────────► … ──┐
+//!  (rr)       └► reactor … ─ conns {…}       ─┘                  │
+//!                  ▲     Deliver {token, frame}        responses │
+//!                  └──────────────── response pump ◄─────────────┘
+//! ```
+//!
+//! Each reactor owns a [`polly::Poller`] plus the full state machine
+//! of every connection assigned to it: an inbound [`FrameBuf`]
+//! reassembling length-prefixed frames from nonblocking reads, an
+//! outbound [`WriteBuf`] drained on writability, and the set of
+//! in-flight request ids routed to the connection. Nothing about a
+//! connection is shared across threads — the response pump reaches a
+//! connection only by posting a [`ReactorMsg::Deliver`] to its
+//! reactor's inbox and waking the poller.
+//!
+//! Backpressure under `AdmissionPolicy::Block` is modeled without a
+//! blocked thread: when the ingest queue is full the decoded request
+//! is *parked* on its connection and the reactor drops the
+//! connection's read interest, so the kernel socket buffer — and then
+//! the client's TCP window — absorbs the stall, exactly like the old
+//! blocked reader but at zero thread cost. Parked requests are
+//! retried on a short tick; one whose TTL lapses while parked is
+//! answered `Expired` (shed-by-deadline at the front door).
+//!
+//! Gauge discipline (`requests_in_flight`): incremented exactly once
+//! when a route is installed, decremented exactly once by whoever
+//! successfully removes the route — the response pump on delivery,
+//! the reject/expiry paths, or the connection teardown sweeping its
+//! still-pending ids. A connection that dies mid-flight therefore
+//! returns the gauge to zero instead of leaking it (the old demux
+//! skipped the decrement when the route was already gone).
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Metrics, Request, Server, TrySubmit};
+
+use super::proto::{self, WireFrame, WireResponse, WireStatus, PROTO_V1, PROTO_VERSION};
+
+/// Poller token of the reactor's waker; connection tokens start above.
+const WAKER_TOKEN: u64 = 0;
+
+/// Per-connection outbound buffer ceiling. A client that stops
+/// reading long enough to queue this much has wedged its TCP window;
+/// further responses for it are dropped (`responses_dropped`) so one
+/// stalled reader never holds memory or the reactor hostage.
+const OUTBUF_CAP: usize = 8 << 20;
+
+/// Poll timeout while any connection has a parked request: bounds how
+/// quickly admission is retried / a parked TTL is noticed.
+const PARK_TICK_MS: i32 = 5;
+
+/// Max bytes pulled off one socket per readiness event. Level-
+/// triggered polling re-reports a still-readable socket, so capping
+/// the per-event quantum keeps one firehose client from starving its
+/// reactor siblings without losing data.
+const READ_QUANTUM: usize = 256 * 1024;
+
+/// Stripe count of the routing table. Requests hash to a shard by id,
+/// so the reactors and the response pump contend per-stripe, not on
+/// one global lock — the same sharding story as the per-model metrics.
+const ROUTE_SHARDS: usize = 16;
+
+/// Routing entry for one in-flight wire request: which reactor and
+/// connection to answer on, under which client-side id, speaking
+/// which protocol version (responses echo the request frame's
+/// version, so v1 clients never see a v2 byte).
+pub(crate) struct RouteEntry {
+    pub reactor: usize,
+    pub token: u64,
+    pub client_id: u64,
+    pub version: u8,
+}
+
+/// Sharded routing table for in-flight wire requests, keyed by the
+/// reserved coordinator id.
+pub(crate) struct RouteTable {
+    shards: Vec<Mutex<HashMap<u64, RouteEntry>>>,
+}
+
+impl RouteTable {
+    pub(crate) fn new() -> RouteTable {
+        RouteTable {
+            shards: (0..ROUTE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    pub(crate) fn insert(&self, id: u64, entry: RouteEntry) {
+        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).insert(id, entry);
+    }
+
+    pub(crate) fn remove(&self, id: u64) -> Option<RouteEntry> {
+        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).remove(&id)
+    }
+}
+
+/// Work posted to a reactor from outside its thread (the accept loop
+/// and the response pump).
+pub(crate) enum ReactorMsg {
+    /// A freshly accepted (already nonblocking) connection to adopt.
+    NewConn(TcpStream),
+    /// An encoded response frame for connection `token`; `id` is the
+    /// coordinator id to clear from the connection's pending set.
+    Deliver { token: u64, id: u64, frame: Vec<u8> },
+    /// Drain the inbox, tear every connection down, and exit.
+    Shutdown,
+}
+
+/// A reactor's cross-thread mailbox: push under the mutex, then wake
+/// the poller so the message is seen even mid-`wait`.
+pub(crate) struct ReactorQueue {
+    inbox: Mutex<Vec<ReactorMsg>>,
+    waker: polly::Waker,
+}
+
+impl ReactorQueue {
+    pub(crate) fn send(&self, msg: ReactorMsg) {
+        crate::util::sync::lock(&self.inbox).push(msg);
+        let _ = self.waker.wake();
+    }
+}
+
+/// Incremental reassembly of `u32 len · payload` frames from
+/// nonblocking reads. `next_payload` yields `Ok(None)` until a full
+/// frame is buffered and errors only on a hostile length prefix —
+/// the one condition the blocking front-end also answered by closing
+/// the connection rather than with a `BadRequest` frame.
+pub(crate) struct FrameBuf {
+    buf: Vec<u8>,
+    off: usize,
+}
+
+impl FrameBuf {
+    pub(crate) fn new() -> FrameBuf {
+        FrameBuf { buf: Vec::new(), off: 0 }
+    }
+
+    pub(crate) fn extend(&mut self, bytes: &[u8]) {
+        if self.off > 0 && (self.off == self.buf.len() || self.off >= 64 * 1024) {
+            self.buf.drain(..self.off);
+            self.off = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub(crate) fn next_payload(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.buf.len() - self.off;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let b = &self.buf[self.off..];
+        let len = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        if len > proto::MAX_FRAME_BYTES {
+            bail!("frame length {len} exceeds the {} byte limit", proto::MAX_FRAME_BYTES);
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[self.off + 4..self.off + 4 + len].to_vec();
+        self.off += 4 + len;
+        Ok(Some(payload))
+    }
+}
+
+/// Outbound byte queue with a hard ceiling and cursor-based draining.
+pub(crate) struct WriteBuf {
+    buf: Vec<u8>,
+    off: usize,
+    cap: usize,
+}
+
+impl WriteBuf {
+    pub(crate) fn with_cap(cap: usize) -> WriteBuf {
+        WriteBuf { buf: Vec::new(), off: 0, cap }
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.off == self.buf.len()
+    }
+
+    pub(crate) fn queued(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// Append one frame; `false` means the ceiling would be exceeded
+    /// and the frame was dropped (the caller counts it).
+    pub(crate) fn push(&mut self, frame: &[u8]) -> bool {
+        if self.queued() + frame.len() > self.cap {
+            return false;
+        }
+        if self.off > 0 && (self.is_empty() || self.off >= 64 * 1024) {
+            self.buf.drain(..self.off);
+            self.off = 0;
+        }
+        self.buf.extend_from_slice(frame);
+        true
+    }
+
+    /// Drain as much as the socket accepts right now. `WouldBlock`
+    /// simply stops (poll for writability); any real error is the
+    /// caller's cue to close the connection.
+    pub(crate) fn write_to(&mut self, w: &mut impl Write) -> std::io::Result<()> {
+        while !self.is_empty() {
+            match w.write(&self.buf[self.off..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(n) => self.off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.is_empty() && self.off > 0 {
+            self.buf.clear();
+            self.off = 0;
+        }
+        Ok(())
+    }
+}
+
+/// The full state machine of one connection, owned by its reactor.
+struct Conn {
+    sock: TcpStream,
+    inbuf: FrameBuf,
+    outbuf: WriteBuf,
+    /// Coordinator ids in flight on this connection; teardown sweeps
+    /// these out of the route table (closing a connection really does
+    /// forget its requests now — see the module docs on the gauge).
+    pending: HashSet<u64>,
+    /// The request waiting out a full ingest queue (`Block` policy).
+    /// While set, read interest is dropped: TCP absorbs the stall.
+    parked: Option<Request>,
+    /// Whether we currently want read events (false while parked).
+    reading: bool,
+    /// Interest bits last registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+}
+
+impl Conn {
+    fn new(sock: TcpStream) -> Conn {
+        Conn {
+            sock,
+            inbuf: FrameBuf::new(),
+            outbuf: WriteBuf::with_cap(OUTBUF_CAP),
+            pending: HashSet::new(),
+            parked: None,
+            reading: true,
+            reg_read: true,
+            reg_write: false,
+        }
+    }
+}
+
+/// One event-loop thread: poller + every connection assigned to it.
+struct Reactor {
+    idx: usize,
+    poller: polly::Poller,
+    queue: Arc<ReactorQueue>,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    routes: Arc<RouteTable>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+/// Spawn `count` reactor threads. Each returned [`ReactorQueue`] is
+/// the only way to reach its reactor from outside.
+pub(crate) fn spawn_reactors(
+    count: usize,
+    server: &Arc<Server>,
+    metrics: &Arc<Metrics>,
+    routes: &Arc<RouteTable>,
+) -> Result<(Vec<Arc<ReactorQueue>>, Vec<JoinHandle<()>>)> {
+    let count = count.max(1);
+    let mut queues = Vec::with_capacity(count);
+    let mut handles = Vec::with_capacity(count);
+    for idx in 0..count {
+        let poller = polly::Poller::new().context("creating reactor poller")?;
+        let waker = polly::Waker::new().context("creating reactor waker")?;
+        waker
+            .register(&poller, WAKER_TOKEN)
+            .context("registering reactor waker")?;
+        let queue = Arc::new(ReactorQueue {
+            inbox: Mutex::new(Vec::new()),
+            waker,
+        });
+        let reactor = Reactor {
+            idx,
+            poller,
+            queue: Arc::clone(&queue),
+            server: Arc::clone(server),
+            metrics: Arc::clone(metrics),
+            routes: Arc::clone(routes),
+            conns: HashMap::new(),
+            next_token: WAKER_TOKEN + 1,
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("gengnn-net-reactor-{idx}"))
+                .spawn(move || reactor.run())
+                .context("spawning reactor thread")?,
+        );
+        queues.push(queue);
+    }
+    Ok((queues, handles))
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<polly::Event> = Vec::new();
+        loop {
+            let timeout = if self.conns.values().any(|c| c.parked.is_some()) {
+                PARK_TICK_MS
+            } else {
+                -1 // nothing parked: sleep until an event or a wake
+            };
+            if self.poller.wait(&mut events, timeout).is_err() {
+                // Poller errors other than EINTR (handled inside
+                // polly) are not actionable per-iteration; yield so a
+                // persistent failure cannot spin a core.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            for ev in events.drain(..) {
+                if ev.token == WAKER_TOKEN {
+                    self.queue.waker.drain();
+                    if self.drain_inbox() {
+                        self.cleanup();
+                        return;
+                    }
+                } else {
+                    self.conn_event(ev);
+                }
+            }
+            self.tick_parked();
+        }
+    }
+
+    /// Process queued cross-thread messages; `true` means shutdown.
+    fn drain_inbox(&mut self) -> bool {
+        let msgs: Vec<ReactorMsg> =
+            std::mem::take(&mut *crate::util::sync::lock(&self.queue.inbox));
+        let mut stop = false;
+        for msg in msgs {
+            match msg {
+                ReactorMsg::NewConn(sock) => self.add_conn(sock),
+                ReactorMsg::Deliver { token, id, frame } => self.deliver(token, id, frame),
+                ReactorMsg::Shutdown => stop = true,
+            }
+        }
+        stop
+    }
+
+    fn add_conn(&mut self, sock: TcpStream) {
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.register(sock.as_raw_fd(), token, polly::Interest::READ).is_err() {
+            // fd exhaustion or a socket that died before adoption:
+            // the accept loop already counted it open.
+            self.metrics.net().connections_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        self.conns.insert(token, Conn::new(sock));
+    }
+
+    /// A response frame from the pump. The pump already settled the
+    /// route (and the in-flight gauge); here the frame either lands in
+    /// the connection's write buffer or is counted dropped.
+    fn deliver(&mut self, token: u64, id: u64, frame: Vec<u8>) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        conn.pending.remove(&id);
+        if !conn.outbuf.push(&frame) {
+            self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        // Opportunistic flush: most sockets accept the frame outright,
+        // so the common case never registers write interest at all.
+        let close = self.flush(&mut conn);
+        self.settle(token, conn, close);
+    }
+
+    /// Readiness on one connection. The connection is removed from the
+    /// map while serviced so helper methods can borrow the reactor
+    /// freely, then reinserted or destroyed.
+    fn conn_event(&mut self, ev: polly::Event) {
+        let Some(mut conn) = self.conns.remove(&ev.token) else {
+            return;
+        };
+        let mut close = false;
+        if conn.reading {
+            if ev.readable {
+                close = self.read_and_parse(ev.token, &mut conn);
+            }
+        } else if ev.readable || ev.hangup {
+            // A parked connection holds no read interest, so any
+            // readable/hangup edge here is ERR or HUP from the kernel:
+            // the peer is gone and the parked request with it.
+            close = true;
+        }
+        if !close && !conn.outbuf.is_empty() {
+            close = self.flush(&mut conn);
+        }
+        self.settle(ev.token, conn, close);
+    }
+
+    /// Reinsert a serviced connection (syncing poller interest) or
+    /// tear it down.
+    fn settle(&mut self, token: u64, mut conn: Conn, close: bool) {
+        if close {
+            self.destroy(token, conn);
+            return;
+        }
+        let want_read = conn.reading;
+        let want_write = !conn.outbuf.is_empty();
+        if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
+            let interest = polly::Interest {
+                readable: want_read,
+                writable: want_write,
+            };
+            if self.poller.modify(conn.sock.as_raw_fd(), token, interest).is_err() {
+                self.destroy(token, conn);
+                return;
+            }
+            conn.reg_read = want_read;
+            conn.reg_write = want_write;
+        }
+        self.conns.insert(token, conn);
+    }
+
+    /// Full teardown: deregister, sweep the connection's in-flight
+    /// routes (decrementing the gauge for every route actually
+    /// removed — the other half of the pump's accounting), close.
+    fn destroy(&mut self, _token: u64, conn: Conn) {
+        let _ = self.poller.deregister(conn.sock.as_raw_fd());
+        for id in &conn.pending {
+            if self.routes.remove(*id).is_some() {
+                self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        self.metrics.net().connections_open.fetch_sub(1, Ordering::Relaxed);
+        // Dropping the stream closes the fd; a client blocked on a
+        // response observes EOF.
+    }
+
+    /// Drain the socket (bounded per event) and process every complete
+    /// frame. Returns `true` when the connection must close (EOF,
+    /// socket error, or a hostile length prefix).
+    fn read_and_parse(&mut self, token: u64, conn: &mut Conn) -> bool {
+        let mut tmp = [0u8; 64 * 1024];
+        let mut total = 0usize;
+        loop {
+            match conn.sock.read(&mut tmp) {
+                Ok(0) => return true, // EOF
+                Ok(n) => {
+                    conn.inbuf.extend(&tmp[..n]);
+                    total += n;
+                    if total >= READ_QUANTUM {
+                        break; // level-triggered poll re-reports the rest
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+        if self.parse_frames(token, conn) {
+            return true;
+        }
+        if !conn.outbuf.is_empty() {
+            return self.flush(conn);
+        }
+        false
+    }
+
+    /// Decode buffered frames until the buffer runs dry or a request
+    /// parks (backpressure stops consuming input at a frame boundary).
+    fn parse_frames(&mut self, token: u64, conn: &mut Conn) -> bool {
+        while conn.parked.is_none() {
+            match conn.inbuf.next_payload() {
+                Ok(Some(payload)) => self.handle_payload(token, conn, &payload),
+                Ok(None) => break,
+                // An unframeable length prefix is transport-level
+                // garbage, not a decodable-but-bad request: close,
+                // exactly like the blocking front-end's read path.
+                Err(_) => return true,
+            }
+        }
+        false
+    }
+
+    fn handle_payload(&mut self, token: u64, conn: &mut Conn, payload: &[u8]) {
+        // Responses echo the version of the frame they answer; frames
+        // whose version byte is itself unknown get the current one.
+        let version = if payload.first() == Some(&PROTO_V1) {
+            PROTO_V1
+        } else {
+            PROTO_VERSION
+        };
+        match proto::decode_frame(payload) {
+            Ok(WireFrame::Request(req)) => self.admit(token, conn, req, version),
+            Ok(WireFrame::Response(_)) => {
+                // A response frame on the server's ingress is a
+                // protocol violation; answer and move on.
+                self.metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
+                self.answer(
+                    conn,
+                    version,
+                    WireResponse::err(
+                        proto::BAD_FRAME_ID,
+                        "",
+                        WireStatus::BadRequest,
+                        "response frame sent to server",
+                    ),
+                );
+            }
+            Err(e) => {
+                // Framing is intact but the payload is bad: report it
+                // on this connection — under the caller's own id when
+                // the envelope checksum vouches for it — and keep
+                // serving.
+                self.metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
+                let id = proto::salvage_request_id(payload).unwrap_or(proto::BAD_FRAME_ID);
+                self.answer(
+                    conn,
+                    version,
+                    WireResponse::err(id, "", WireStatus::BadRequest, format!("{e}")),
+                );
+            }
+        }
+    }
+
+    /// Route registration precedes admission (see module docs of
+    /// [`super::server`]): reserve, install, then submit — a response
+    /// can never race past its routing entry.
+    fn admit(&mut self, token: u64, conn: &mut Conn, req: proto::WireRequest, version: u8) {
+        let server_id = self.server.reserve_id();
+        self.routes.insert(
+            server_id,
+            RouteEntry {
+                reactor: self.idx,
+                token,
+                client_id: req.id,
+                version,
+            },
+        );
+        self.metrics.net().requests_in_flight.fetch_add(1, Ordering::Relaxed);
+        let creq =
+            Request::with_qos(server_id, req.model, req.graph, req.qos.ttl_ms, req.qos.priority);
+        self.try_admit(conn, creq);
+    }
+
+    fn try_admit(&mut self, conn: &mut Conn, creq: Request) {
+        let id = creq.id;
+        let model = creq.model.clone();
+        match self.server.try_submit(creq) {
+            TrySubmit::Accepted => {
+                conn.pending.insert(id);
+            }
+            TrySubmit::Rejected => {
+                // Shed: unregister and answer immediately with the
+                // Rejected wire status; the connection stays up.
+                if let Some(entry) = self.routes.remove(id) {
+                    self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
+                    self.answer(
+                        conn,
+                        entry.version,
+                        WireResponse::err(
+                            entry.client_id,
+                            model,
+                            WireStatus::Rejected,
+                            "ingest queue full",
+                        ),
+                    );
+                }
+            }
+            TrySubmit::Retry(creq) => {
+                // Full queue under Block: park the request and stop
+                // reading this socket — TCP carries the stall to the
+                // client until the queue drains or the TTL lapses.
+                conn.pending.insert(id);
+                conn.parked = Some(creq);
+                conn.reading = false;
+            }
+        }
+    }
+
+    /// Retry every parked request: admit it, expire it, or keep it
+    /// parked for the next tick.
+    fn tick_parked(&mut self) {
+        let tokens: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.parked.is_some())
+            .map(|(t, _)| *t)
+            .collect();
+        for token in tokens {
+            let Some(mut conn) = self.conns.remove(&token) else {
+                continue;
+            };
+            let close = self.tick_conn(token, &mut conn);
+            self.settle(token, conn, close);
+        }
+    }
+
+    fn tick_conn(&mut self, token: u64, conn: &mut Conn) -> bool {
+        let Some(creq) = conn.parked.take() else {
+            return false;
+        };
+        if creq.is_expired(Instant::now()) {
+            // Shed-by-deadline at the front door: the TTL lapsed while
+            // the request waited out a full queue.
+            conn.pending.remove(&creq.id);
+            if let Some(entry) = self.routes.remove(creq.id) {
+                self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.record_deadline_expired();
+                self.answer(
+                    conn,
+                    entry.version,
+                    WireResponse::err(
+                        entry.client_id,
+                        creq.model,
+                        WireStatus::Expired,
+                        "deadline expired before admission",
+                    ),
+                );
+            }
+        } else {
+            let id = creq.id;
+            let model = creq.model.clone();
+            match self.server.try_submit(creq) {
+                TrySubmit::Accepted => {} // already in conn.pending
+                TrySubmit::Rejected => {
+                    // Unreachable under Block (the only policy that
+                    // parks), kept total for safety.
+                    conn.pending.remove(&id);
+                    if let Some(entry) = self.routes.remove(id) {
+                        self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
+                        self.answer(
+                            conn,
+                            entry.version,
+                            WireResponse::err(
+                                entry.client_id,
+                                model,
+                                WireStatus::Rejected,
+                                "ingest queue full",
+                            ),
+                        );
+                    }
+                }
+                TrySubmit::Retry(creq) => {
+                    conn.parked = Some(creq);
+                    return false; // still parked; stay off the socket
+                }
+            }
+        }
+        // Unparked (admitted, expired, or rejected): resume reading
+        // and work through whatever frames buffered meanwhile.
+        conn.reading = true;
+        if self.parse_frames(token, conn) {
+            return true;
+        }
+        if !conn.outbuf.is_empty() {
+            return self.flush(conn);
+        }
+        false
+    }
+
+    /// Encode and queue one locally generated response (rejections,
+    /// expiries, decode errors), in the version the client speaks.
+    fn answer(&mut self, conn: &mut Conn, version: u8, wire: WireResponse) {
+        match proto::encode_response_with_version(version, &wire) {
+            Ok(frame) => {
+                if !conn.outbuf.push(&frame) {
+                    self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Unreachable: `version` comes from a frame the decoder
+            // accepted, but a dropped answer must still be counted.
+            Err(_) => {
+                self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn flush(&mut self, conn: &mut Conn) -> bool {
+        conn.outbuf.write_to(&mut conn.sock).is_err()
+    }
+
+    /// Shutdown: tear down every connection (sweeping their routes so
+    /// the gauge lands back at zero) before the thread exits.
+    fn cleanup(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            if let Some(conn) = self.conns.remove(&token) {
+                self.destroy(token, conn);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CooGraph;
+
+    fn tiny_graph() -> CooGraph {
+        CooGraph {
+            n: 1,
+            edges: vec![],
+            node_feat: vec![0.5; 9],
+            f_node: 9,
+            edge_feat: vec![],
+            f_edge: 0,
+        }
+    }
+
+    #[test]
+    fn frame_reassembly_survives_arbitrary_splits() {
+        let f1 = proto::encode_request_parts(7, "gcn", proto::WireQos::default(), &tiny_graph())
+            .unwrap();
+        let f2 =
+            proto::encode_response(&WireResponse::ok(8, "gcn", vec![1.0, 2.0])).unwrap();
+        let stream: Vec<u8> = f1.iter().chain(f2.iter()).copied().collect();
+        // Feed the concatenated stream one byte at a time; exactly two
+        // payloads must pop out, each equal to its frame minus the
+        // length prefix.
+        let mut fb = FrameBuf::new();
+        let mut payloads = Vec::new();
+        for b in &stream {
+            fb.extend(std::slice::from_ref(b));
+            while let Some(p) = fb.next_payload().unwrap() {
+                payloads.push(p);
+            }
+        }
+        assert_eq!(payloads.len(), 2);
+        assert_eq!(payloads[0], f1[4..].to_vec());
+        assert_eq!(payloads[1], f2[4..].to_vec());
+        // And both decode back to typed frames.
+        assert!(matches!(
+            proto::decode_frame(&payloads[0]).unwrap(),
+            WireFrame::Request(_)
+        ));
+        assert!(matches!(
+            proto::decode_frame(&payloads[1]).unwrap(),
+            WireFrame::Response(_)
+        ));
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_an_error() {
+        let mut fb = FrameBuf::new();
+        let len = (proto::MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        fb.extend(&len);
+        assert!(fb.next_payload().is_err());
+        // A zero-length frame, by contrast, is well-framed (it will
+        // fail *decoding* and be answered BadRequest, like the
+        // blocking path).
+        let mut fb = FrameBuf::new();
+        fb.extend(&0u32.to_le_bytes());
+        assert_eq!(fb.next_payload().unwrap(), Some(Vec::new()));
+    }
+
+    /// A writer that accepts a fixed number of bytes per call, then
+    /// reports `WouldBlock` — the shape of a nonblocking socket under
+    /// a slow reader.
+    struct Trickle {
+        accepted: Vec<u8>,
+        per_call: usize,
+        budget: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(self.per_call).min(self.budget);
+            self.accepted.extend_from_slice(&buf[..n]);
+            self.budget -= n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_buffer_caps_queueing_and_drains_incrementally() {
+        let mut wb = WriteBuf::with_cap(10);
+        assert!(wb.push(&[1, 2, 3, 4, 5, 6]));
+        assert!(!wb.push(&[0; 5]), "over-cap push must report the drop");
+        assert!(wb.push(&[7, 8, 9, 10]), "exactly-at-cap push fits");
+        assert_eq!(wb.queued(), 10);
+
+        let mut w = Trickle {
+            accepted: Vec::new(),
+            per_call: 3,
+            budget: 4,
+        };
+        wb.write_to(&mut w).unwrap();
+        assert_eq!(w.accepted, vec![1, 2, 3, 4], "partial drain stops at WouldBlock");
+        assert_eq!(wb.queued(), 6, "cursor advanced past written bytes");
+
+        // Freed capacity is reusable, and a full drain resets the
+        // buffer entirely.
+        assert!(wb.push(&[11, 12]));
+        let mut w2 = Trickle {
+            accepted: Vec::new(),
+            per_call: 64,
+            budget: 64,
+        };
+        wb.write_to(&mut w2).unwrap();
+        assert_eq!(w2.accepted, vec![5, 6, 7, 8, 9, 10, 11, 12]);
+        assert!(wb.is_empty());
+        assert_eq!(wb.queued(), 0);
+    }
+
+    #[test]
+    fn route_table_settles_each_id_exactly_once() {
+        let routes = RouteTable::new();
+        for id in 0..64u64 {
+            routes.insert(
+                id,
+                RouteEntry {
+                    reactor: 0,
+                    token: id,
+                    client_id: id * 2,
+                    version: PROTO_VERSION,
+                },
+            );
+        }
+        let mut hits = 0;
+        for id in 0..64u64 {
+            if let Some(e) = routes.remove(id) {
+                assert_eq!(e.client_id, id * 2);
+                hits += 1;
+            }
+            assert!(routes.remove(id).is_none(), "double remove must miss");
+        }
+        assert_eq!(hits, 64);
+    }
+}

@@ -1,89 +1,59 @@
-//! The threaded TCP front-end: the wire-level ingress that puts real
+//! The TCP front-end: nonblocking reactor ingress that puts real
 //! traffic on the executor pool.
 //!
 //! ```text
-//! conn 0 ─ reader ─┐                                   ┌─ writer ─ conn 0
-//! conn 1 ─ reader ─┼─► Server::submit_with_id ─► lanes ─► responses
-//! conn … ─ reader ─┘        (ingest queue,              │
-//!                            Block | Reject)     demux ─┴─► per-conn
-//!                                                            outboxes
+//! conn 0 ─┐                  ┌────────────┐   try_submit
+//! conn 1 ─┼─► accept (rr) ─► │ reactor 0… │ ─────────────► lanes
+//! conn … ─┘                  │ reactor N-1│ ◄─ Deliver ─┐     │
+//!                            └────────────┘             │     ▼
+//!                                         response pump ◄─ responses
 //! ```
 //!
-//! One reader and one writer thread per connection, plus a single
-//! **demux** thread draining the coordinator's response channel and
-//! routing each response to its connection's outbox by request id.
-//! Readers register the route *before* admission (via
+//! One accept thread hands each connection to a fixed pool of
+//! [`super::reactor`] event loops (no per-connection threads: a
+//! reactor multiplexes thousands of sockets through one
+//! `polly::Poller`), and one **response pump** drains the
+//! coordinator's response channel, settles the routing table, and
+//! posts each encoded frame back to the owning reactor.
+//!
+//! Reactors register the route *before* admission (via
 //! [`Server::reserve_id`]), so a response can never race past its
-//! routing entry.
+//! routing entry. The `requests_in_flight` gauge is symmetric around
+//! that table: incremented once per insert, decremented by whichever
+//! path removes the entry — pump delivery, rejection, deadline
+//! expiry, or connection teardown sweeping its in-flight ids (a
+//! connection that dies mid-request no longer strands the gauge).
 //!
 //! Backpressure is inherited from the coordinator: under
-//! `AdmissionPolicy::Block` a full ingest queue blocks the reader,
-//! which stops draining the socket, which backs TCP up to the client —
-//! the paper's full-FIFO stall propagated all the way to the producer.
-//! Under `Reject` a shed request is answered immediately with a
-//! `Rejected` wire status on the same connection; the connection
-//! stays up.
+//! `AdmissionPolicy::Block` a full ingest queue parks the decoded
+//! request on its connection and drops read interest, which backs TCP
+//! up to the client — the paper's full-FIFO stall propagated all the
+//! way to the producer, without a blocked thread. Under `Reject` a
+//! shed request is answered immediately with a `Rejected` wire status
+//! on the same connection; requests whose TTL lapses while parked or
+//! queued come back `Expired` (shed-by-deadline).
 
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Admission, Metrics, Server, ServerConfig};
-use crate::util::pool::Channel;
+use crate::coordinator::{Metrics, Server, ServerConfig};
 
-use super::proto::{self, WireFrame, WireResponse, WireStatus};
-
-/// Routing entry for one in-flight wire request: which connection to
-/// answer on, under which client-side id.
-struct RouteEntry {
-    outbox: Channel<WireResponse>,
-    client_id: u64,
-}
-
-/// Stripe count of the routing table. Requests hash to a shard by id,
-/// so N connection readers and the demux contend per-stripe, not on
-/// one global lock — the same sharding story as the per-model metrics.
-const ROUTE_SHARDS: usize = 16;
-
-/// Sharded routing table for in-flight wire requests, keyed by the
-/// reserved coordinator id.
-struct RouteTable {
-    shards: Vec<Mutex<HashMap<u64, RouteEntry>>>,
-}
-
-impl RouteTable {
-    fn new() -> RouteTable {
-        RouteTable {
-            shards: (0..ROUTE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-        }
-    }
-
-    fn insert(&self, id: u64, entry: RouteEntry) {
-        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).insert(id, entry);
-    }
-
-    fn remove(&self, id: u64) -> Option<RouteEntry> {
-        crate::util::sync::lock(&self.shards[id as usize % ROUTE_SHARDS]).remove(&id)
-    }
-}
-
-type RouteMap = Arc<RouteTable>;
-
-/// Live-connection socket registry, keyed by connection number so a
-/// closing reader can deregister itself — long-running servers must
-/// not pin a dead connection's file descriptor until shutdown.
-type SockRegistry = Arc<Mutex<HashMap<usize, TcpStream>>>;
+use super::proto::{self, WireResponse, WireStatus};
+use super::reactor::{self, ReactorMsg, ReactorQueue, RouteTable};
 
 /// Construction parameters of the TCP front-end.
 #[derive(Clone, Debug)]
 pub struct NetServerConfig {
     /// Listen address, e.g. `127.0.0.1:7447` (port 0 for ephemeral).
     pub listen: String,
+    /// Reactor (event-loop) threads. Every connection is pinned to
+    /// one reactor for its lifetime; 2 keeps accept/drain work off a
+    /// single core without competing with the executor lanes.
+    pub reactors: usize,
     /// The wrapped coordinator's configuration (models, lanes, queue
     /// capacity, admission policy).
     pub server: ServerConfig,
@@ -93,6 +63,7 @@ impl Default for NetServerConfig {
     fn default() -> Self {
         NetServerConfig {
             listen: "127.0.0.1:0".to_string(),
+            reactors: 2,
             server: ServerConfig::default(),
         }
     }
@@ -105,14 +76,19 @@ pub struct NetServer {
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
-    demux_handle: Option<JoinHandle<()>>,
-    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    conn_socks: SockRegistry,
+    pump_handle: Option<JoinHandle<()>>,
+    reactor_queues: Vec<Arc<ReactorQueue>>,
+    reactor_handles: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
     /// Compile the coordinator, bind the listener, and start serving.
     pub fn start(cfg: NetServerConfig) -> Result<NetServer> {
+        // Thousands of multiplexed connections need thousands of fds;
+        // lift a conservative soft limit up front (best effort — the
+        // hard limit still caps us, and failure is not fatal here).
+        let _ = polly::raise_nofile_limit(8192);
+
         let server = Arc::new(Server::start(cfg.server)?);
         let metrics = server.metrics();
         let listener = TcpListener::bind(&cfg.listen)
@@ -127,68 +103,84 @@ impl NetServer {
         let local_addr = listener.local_addr()?;
 
         let stop = Arc::new(AtomicBool::new(false));
-        let routes: RouteMap = Arc::new(RouteTable::new());
-        let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let conn_socks: SockRegistry = Arc::new(Mutex::new(HashMap::new()));
+        let routes = Arc::new(RouteTable::new());
+        let (reactor_queues, reactor_handles) =
+            reactor::spawn_reactors(cfg.reactors, &server, &metrics, &routes)?;
 
-        // Demux: the coordinator's single response stream fans back out
-        // to per-connection outboxes. Also the one place end-to-end
-        // latency lands in the histogram.
-        let demux_handle = {
+        // Response pump: the coordinator's single response stream fans
+        // back out to the reactors as pre-encoded frames. Also the one
+        // place end-to-end latency lands in the histogram, and one of
+        // the two sides of the route-table accounting (see module docs).
+        let pump_handle = {
             let responses = server.responses();
             let routes = Arc::clone(&routes);
             let metrics = Arc::clone(&metrics);
+            let queues = reactor_queues.clone();
             std::thread::Builder::new()
-                .name("gengnn-net-demux".to_string())
+                .name("gengnn-net-pump".to_string())
                 .spawn(move || {
                     while let Some(r) = responses.recv() {
                         metrics.record_e2e_latency(r.latency());
                         let Some(entry) = routes.remove(r.id) else {
-                            // Connection closed while the request was in
-                            // flight; the result has nowhere to go.
+                            // Connection closed while the request was
+                            // in flight; its teardown already settled
+                            // the gauge, so only count the loss.
+                            metrics
+                                .net()
+                                .responses_dropped
+                                .fetch_add(1, Ordering::Relaxed);
                             continue;
                         };
                         metrics
                             .net()
                             .requests_in_flight
                             .fetch_sub(1, Ordering::Relaxed);
-                        let wire = match r.output {
-                            Ok(output) => {
-                                WireResponse::ok(entry.client_id, r.model, output)
-                            }
-                            Err(msg) => WireResponse::err(
+                        let wire = if r.expired {
+                            WireResponse::err(
                                 entry.client_id,
                                 r.model,
-                                WireStatus::Error,
-                                msg,
-                            ),
+                                WireStatus::Expired,
+                                r.output.err().unwrap_or_default(),
+                            )
+                        } else {
+                            match r.output {
+                                Ok(output) => {
+                                    WireResponse::ok(entry.client_id, r.model, output)
+                                }
+                                Err(msg) => WireResponse::err(
+                                    entry.client_id,
+                                    r.model,
+                                    WireStatus::Error,
+                                    msg,
+                                ),
+                            }
                         };
-                        // Never block the demux on one connection: a
-                        // full outbox means the client stopped reading
-                        // (its writer is wedged against TCP), and a
-                        // closed one means the connection is gone —
-                        // drop the response either way so every other
-                        // connection keeps receiving.
-                        if entry.outbox.try_send(wire).is_err() {
-                            metrics
-                                .net()
-                                .responses_dropped
-                                .fetch_add(1, Ordering::Relaxed);
+                        // Responses echo the version of the request
+                        // frame they answer (see proto module docs).
+                        match proto::encode_response_with_version(entry.version, &wire) {
+                            Ok(frame) => queues[entry.reactor].send(ReactorMsg::Deliver {
+                                token: entry.token,
+                                id: r.id,
+                                frame,
+                            }),
+                            Err(_) => {
+                                metrics
+                                    .net()
+                                    .responses_dropped
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                     }
                 })
-                .expect("spawn net demux")
+                .expect("spawn net response pump")
         };
 
-        // Accept loop: one reader + one writer thread per connection.
+        // Accept loop: adopt each connection into a reactor,
+        // round-robin. No per-connection threads are spawned.
         let accept_handle = {
-            let server = Arc::clone(&server);
             let metrics = Arc::clone(&metrics);
             let stop = Arc::clone(&stop);
-            let routes = Arc::clone(&routes);
-            let conn_handles = Arc::clone(&conn_handles);
-            let conn_socks = Arc::clone(&conn_socks);
+            let queues = reactor_queues.clone();
             std::thread::Builder::new()
                 .name("gengnn-net-accept".to_string())
                 .spawn(move || {
@@ -199,32 +191,24 @@ impl NetServer {
                         }
                         let sock = match listener.accept() {
                             Ok((s, _)) => s,
-                            Err(e)
-                                if e.kind() == std::io::ErrorKind::WouldBlock =>
-                            {
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                                 // Idle: nothing pending; poll the stop
                                 // flag again shortly.
-                                std::thread::sleep(
-                                    std::time::Duration::from_millis(20),
-                                );
+                                std::thread::sleep(std::time::Duration::from_millis(20));
                                 continue;
                             }
                             Err(_) => {
                                 // Persistent accept errors (e.g. fd
                                 // exhaustion) repeat immediately; back
                                 // off instead of spinning a core.
-                                std::thread::sleep(
-                                    std::time::Duration::from_millis(10),
-                                );
+                                std::thread::sleep(std::time::Duration::from_millis(10));
                                 continue;
                             }
                         };
-                        conn_no += 1;
-                        // Whether an accepted socket inherits the
-                        // listener's nonblocking mode is
-                        // platform-dependent; connection threads use
-                        // blocking I/O.
-                        if sock.set_nonblocking(false).is_err() {
+                        // The reactors drive every socket through the
+                        // poller; a connection that cannot enter
+                        // nonblocking mode cannot be served.
+                        if sock.set_nonblocking(true).is_err() {
                             continue;
                         }
                         let _ = sock.set_nodelay(true);
@@ -236,64 +220,8 @@ impl NetServer {
                             .net()
                             .connections_open
                             .fetch_add(1, Ordering::Relaxed);
-                        // The registry entry is what shutdown uses to
-                        // force this connection closed; serving an
-                        // untracked socket could hang the reader join,
-                        // so a failed clone drops the connection.
-                        match sock.try_clone() {
-                            Ok(clone) => {
-                                crate::util::sync::lock(&conn_socks).insert(conn_no, clone);
-                            }
-                            Err(e) => {
-                                eprintln!(
-                                    "[net] dropping connection {conn_no}: {e}"
-                                );
-                                metrics
-                                    .net()
-                                    .connections_open
-                                    .fetch_sub(1, Ordering::Relaxed);
-                                continue;
-                            }
-                        }
-                        match spawn_connection(
-                            conn_no,
-                            sock,
-                            Arc::clone(&server),
-                            Arc::clone(&metrics),
-                            Arc::clone(&routes),
-                            Arc::clone(&conn_socks),
-                        ) {
-                            Ok((rh, wh)) => {
-                                // Reap finished connection threads so the
-                                // handle list tracks live connections,
-                                // not history.
-                                let mut handles = crate::util::sync::lock(&conn_handles);
-                                let mut i = 0;
-                                while i < handles.len() {
-                                    if handles[i].is_finished() {
-                                        let _ = handles.swap_remove(i).join();
-                                    } else {
-                                        i += 1;
-                                    }
-                                }
-                                handles.push(rh);
-                                handles.push(wh);
-                            }
-                            Err(e) => {
-                                // Resource exhaustion (clone or thread
-                                // spawn failed): drop this connection and
-                                // keep accepting — the listener must
-                                // outlive transient pressure.
-                                eprintln!(
-                                    "[net] dropping connection {conn_no}: {e}"
-                                );
-                                crate::util::sync::lock(&conn_socks).remove(&conn_no);
-                                metrics
-                                    .net()
-                                    .connections_open
-                                    .fetch_sub(1, Ordering::Relaxed);
-                            }
-                        }
+                        queues[conn_no % queues.len()].send(ReactorMsg::NewConn(sock));
+                        conn_no += 1;
                     }
                 })
                 .expect("spawn net accept loop")
@@ -305,9 +233,9 @@ impl NetServer {
             metrics,
             stop,
             accept_handle: Some(accept_handle),
-            demux_handle: Some(demux_handle),
-            conn_handles,
-            conn_socks,
+            pump_handle: Some(pump_handle),
+            reactor_queues,
+            reactor_handles,
         })
     }
 
@@ -325,8 +253,9 @@ impl NetServer {
         self.server.served_models()
     }
 
-    /// Stop accepting, close every connection, drain the coordinator,
-    /// and return the final metrics.
+    /// Stop accepting, tear down the reactors (closing every
+    /// connection), drain the coordinator, and return the final
+    /// metrics.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         // The accept loop polls this flag between nonblocking accepts,
         // so it exits within one tick — no wake connection required.
@@ -334,174 +263,27 @@ impl NetServer {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        // Force every connection closed so readers and writers unwind.
-        for (_, s) in crate::util::sync::lock(&self.conn_socks).drain() {
-            let _ = s.shutdown(Shutdown::Both);
+        // Reactors close their connections on the way out (sweeping
+        // in-flight routes, so the gauge lands at zero) and drop their
+        // coordinator handles.
+        for q in &self.reactor_queues {
+            q.send(ReactorMsg::Shutdown);
         }
-        let handles: Vec<JoinHandle<()>> =
-            crate::util::sync::lock(&self.conn_handles).drain(..).collect();
-        for h in handles {
+        for h in self.reactor_handles.drain(..) {
             let _ = h.join();
         }
-        // All reader clones of the coordinator are joined; unwrap the
-        // sole remaining Arc and drain it. Closing the response channel
-        // (inside Server::shutdown) releases the demux thread.
+        // Every other holder of the coordinator Arc is joined; unwrap
+        // the sole remaining one and drain it. Closing the response
+        // channel (inside Server::shutdown) releases the pump thread,
+        // whose late route lookups all miss (counted as drops).
         let server = Arc::try_unwrap(self.server)
             .unwrap_or_else(|_| panic!("coordinator still shared at shutdown"));
         let metrics = server.shutdown();
-        if let Some(h) = self.demux_handle.take() {
+        if let Some(h) = self.pump_handle.take() {
             let _ = h.join();
         }
         metrics
     }
-}
-
-/// Spawn the reader/writer pair for one accepted connection. Errors
-/// (socket clone or thread spawn failing under resource exhaustion)
-/// are returned, not panicked — the accept loop drops the connection
-/// and keeps serving.
-fn spawn_connection(
-    conn_no: usize,
-    sock: TcpStream,
-    server: Arc<Server>,
-    metrics: Arc<Metrics>,
-    routes: RouteMap,
-    socks: SockRegistry,
-) -> Result<(JoinHandle<()>, JoinHandle<()>)> {
-    // Outbox sized generously; if a client stops reading long enough
-    // to fill it anyway, the demux drops that connection's responses
-    // (`responses_dropped`) rather than stalling everyone else.
-    let outbox: Channel<WireResponse> = Channel::bounded(1024);
-
-    let writer_handle = {
-        let outbox = outbox.clone();
-        let sock = sock.try_clone().context("cloning connection for writer")?;
-        std::thread::Builder::new()
-            .name(format!("gengnn-net-writer-{conn_no}"))
-            .spawn(move || {
-                let mut w = BufWriter::new(sock);
-                while let Some(resp) = outbox.recv() {
-                    let Ok(frame) = proto::encode_response(&resp) else {
-                        continue;
-                    };
-                    if w.write_all(&frame).is_err() {
-                        break;
-                    }
-                    // Batch flushes under load: only hit the socket
-                    // when no further response is already queued.
-                    if outbox.is_empty() && w.flush().is_err() {
-                        break;
-                    }
-                }
-                // Whatever ended this writer (closed outbox or a dead
-                // socket), close the outbox: a reader parked in a
-                // blocking outbox.send would otherwise wait forever on
-                // a channel nothing will ever drain again.
-                outbox.close();
-            })
-            .context("spawning net writer")?
-    };
-
-    let outbox_on_err = outbox.clone();
-    let reader_handle = {
-        match std::thread::Builder::new()
-            .name(format!("gengnn-net-reader-{conn_no}"))
-            .spawn(move || {
-                let mut r = BufReader::new(sock);
-                loop {
-                    let payload = match proto::read_frame(&mut r) {
-                        Ok(Some(p)) => p,
-                        // Clean EOF or socket error: unwind the connection.
-                        Ok(None) | Err(_) => break,
-                    };
-                    let req = match proto::decode_frame(&payload) {
-                        Ok(WireFrame::Request(req)) => req,
-                        Ok(WireFrame::Response(_)) => {
-                            // A response frame on the server's ingress is
-                            // a protocol violation; answer and move on.
-                            metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = outbox.send(WireResponse::err(
-                                proto::BAD_FRAME_ID,
-                                "",
-                                WireStatus::BadRequest,
-                                "response frame sent to server",
-                            ));
-                            continue;
-                        }
-                        Err(e) => {
-                            // Framing is intact (read_frame succeeded) but
-                            // the payload is bad: report it on this
-                            // connection — under the caller's own id when
-                            // the envelope checksum vouches for it — and
-                            // keep serving.
-                            metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
-                            let id = proto::salvage_request_id(&payload)
-                                .unwrap_or(proto::BAD_FRAME_ID);
-                            let _ = outbox.send(WireResponse::err(
-                                id,
-                                "",
-                                WireStatus::BadRequest,
-                                format!("{e}"),
-                            ));
-                            continue;
-                        }
-                    };
-                    // Route registration precedes admission (see module
-                    // docs): reserve, install, then submit.
-                    let server_id = server.reserve_id();
-                    routes.insert(
-                        server_id,
-                        RouteEntry {
-                            outbox: outbox.clone(),
-                            client_id: req.id,
-                        },
-                    );
-                    metrics
-                        .net()
-                        .requests_in_flight
-                        .fetch_add(1, Ordering::Relaxed);
-                    match server.submit_with_id(server_id, &req.model, req.graph) {
-                        Admission::Accepted => {}
-                        Admission::Rejected => {
-                            // Shed: unregister and answer immediately with
-                            // the Rejected wire status.
-                            routes.remove(server_id);
-                            metrics
-                                .net()
-                                .requests_in_flight
-                                .fetch_sub(1, Ordering::Relaxed);
-                            let _ = outbox.send(WireResponse::err(
-                                req.id,
-                                req.model,
-                                WireStatus::Rejected,
-                                "ingest queue full",
-                            ));
-                        }
-                    }
-                }
-                // Reader gone: close the outbox so the writer drains
-                // what is queued and exits, deregister the socket (the
-                // fd must not outlive the connection), and drop the
-                // open-connections gauge; late demux sends fail soft.
-                outbox.close();
-                crate::util::sync::lock(&socks).remove(&conn_no);
-                metrics
-                    .net()
-                    .connections_open
-                    .fetch_sub(1, Ordering::Relaxed);
-            }) {
-            Ok(h) => h,
-            Err(e) => {
-                // The writer is already running: close its outbox so it
-                // exits, join it, then report the spawn failure.
-                outbox_on_err.close();
-                let _ = writer_handle.join();
-                return Err(anyhow::Error::from(e).context("spawning net reader"));
-            }
-        }
-    };
-
-    Ok((reader_handle, writer_handle))
 }
 
 /// Dial helper shared by the client and the load generator.

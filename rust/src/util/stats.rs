@@ -5,13 +5,22 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Welford streaming mean/variance plus min/max.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+// A derived `Default` would zero-initialize `min`/`max`, so an empty
+// accumulator reports a spurious `min = 0.0`; the ±INFINITY sentinels
+// in `new()` are load-bearing.
+impl Default for Welford {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Welford {
@@ -117,12 +126,14 @@ impl Sample {
         }
     }
 
-    /// Linear-interpolated percentile, p in [0, 100].
+    /// Linear-interpolated percentile; `p` is clamped to [0, 100] so
+    /// an out-of-range request cannot index past either end.
     pub fn percentile(&mut self, p: f64) -> f64 {
         self.ensure_sorted();
         if self.xs.is_empty() {
             return f64::NAN;
         }
+        let p = p.clamp(0.0, 100.0);
         let rank = p / 100.0 * (self.xs.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -135,9 +146,13 @@ impl Sample {
     }
 
     /// Trim a fraction from each tail (bench outlier rejection).
+    /// `frac >= 0.5` trims everything; the cut is clamped to `len / 2`
+    /// so the slice range can never invert, and an empty core falls
+    /// back to the untrimmed mean.
     pub fn trimmed_mean(&mut self, frac: f64) -> f64 {
         self.ensure_sorted();
-        let k = (self.xs.len() as f64 * frac) as usize;
+        let k = (self.xs.len() as f64 * frac.max(0.0)) as usize;
+        let k = k.min(self.xs.len() / 2);
         let core = &self.xs[k..self.xs.len() - k];
         if core.is_empty() {
             return self.mean();
@@ -349,6 +364,28 @@ mod tests {
     }
 
     #[test]
+    fn welford_default_matches_new() {
+        // Regression: a derived Default zero-initialized min/max, so a
+        // default-constructed accumulator reported min = 0.0 even when
+        // every pushed sample was positive.
+        let d = Welford::default();
+        assert_eq!(d.count(), 0);
+        assert_eq!(d.min(), f64::INFINITY);
+        assert_eq!(d.max(), f64::NEG_INFINITY);
+        let mut from_default = Welford::default();
+        let mut from_new = Welford::new();
+        for &x in &[3.5, 7.25, 5.0] {
+            from_default.push(x);
+            from_new.push(x);
+        }
+        assert_eq!(from_default.min(), from_new.min());
+        assert_eq!(from_default.max(), from_new.max());
+        assert_eq!(from_default.mean(), from_new.mean());
+        assert_eq!(from_default.var(), from_new.var());
+        assert!(from_default.min() > 0.0, "spurious zero min resurfaced");
+    }
+
+    #[test]
     fn percentiles() {
         let mut s = Sample::new();
         for i in 0..=100 {
@@ -369,6 +406,60 @@ mod tests {
         s.push(1000.0);
         s.push(-1000.0);
         assert!((s.trimmed_mean(0.05) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_out_of_range_clamps() {
+        let mut s = Sample::new();
+        for i in 0..10 {
+            s.push(i as f64);
+        }
+        // Regression: p > 100 used to compute rank past the end and
+        // index out of bounds; p < 0 produced a negative rank.
+        assert_eq!(s.percentile(150.0), 9.0);
+        assert_eq!(s.percentile(-25.0), 0.0);
+        assert_eq!(s.percentile(100.0), 9.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn trimmed_mean_never_panics_across_fracs_and_lens() {
+        // Regression: frac >= 0.5 made k > len - k and the core slice
+        // panicked on an inverted range. Sweep the satellite matrix.
+        for len in [0usize, 1, 3] {
+            for frac in [0.0f64, 0.49, 0.5, 0.9] {
+                let mut s = Sample::new();
+                for i in 0..len {
+                    s.push(i as f64 + 1.0);
+                }
+                let tm = s.trimmed_mean(frac);
+                if len == 0 {
+                    assert!(tm.is_nan(), "len=0 frac={frac}");
+                } else {
+                    // Fully-trimmed cores fall back to the plain mean,
+                    // which also bounds every partial trim of 1..=3
+                    // symmetric samples.
+                    assert!(
+                        (tm - s.mean()).abs() < 1e-12,
+                        "len={len} frac={frac}: {tm}"
+                    );
+                }
+            }
+        }
+        // A len-2 sample with frac 0.5 trims both elements: empty core
+        // must fall back to the mean instead of underflowing.
+        let mut two = Sample::new();
+        two.push(1.0);
+        two.push(3.0);
+        assert_eq!(two.trimmed_mean(0.5), 2.0);
+        // And an asymmetric sample where trimming actually changes the
+        // answer still works.
+        let mut s = Sample::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.push(x);
+        }
+        assert_eq!(s.trimmed_mean(0.2), 3.0);
+        assert_eq!(s.trimmed_mean(0.9), 3.0);
     }
 
     #[test]

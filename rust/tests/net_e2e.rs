@@ -6,6 +6,14 @@
 //! crash the server; and a full open-loop loadgen run over loopback
 //! must reconcile `submitted = completed + rejected + failed`.
 //!
+//! The reactor front-end adds its own contracts: a connection that
+//! dies mid-request must settle the `requests_in_flight` gauge (the
+//! orphaned response is counted, not leaked); overload with TTLs
+//! sheds by deadline (`Expired` status, reconciled by the load
+//! generator's `shed_by_deadline`); ~1000 concurrent connections
+//! multiplex onto the fixed reactor pool; and v1 frames are still
+//! served, answered with v1-stamped responses.
+//!
 //! CI runs this file in release mode as well
 //! (`cargo test --release --test net_e2e`).
 //!
@@ -16,11 +24,12 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::time::Duration;
 
-use gengnn::coordinator::{AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::coordinator::{AdmissionPolicy, BatchPolicy, Priority, Server, ServerConfig};
 use gengnn::graph::CooGraph;
-use gengnn::net::proto::{self, WireFrame, WireRequest};
+use gengnn::net::proto::{self, WireFrame, WireQos, WireRequest};
 use gengnn::net::{
     loadgen, LoadGenConfig, NetClient, NetServer, NetServerConfig, WireStatus,
+    PROTO_V1, PROTO_VERSION,
 };
 use gengnn::util::rng::Rng;
 
@@ -30,6 +39,7 @@ use common::{artifacts_or_skip, fixture_graph};
 fn net_server(cfg: ServerConfig) -> NetServer {
     NetServer::start(NetServerConfig {
         listen: "127.0.0.1:0".to_string(),
+        reactors: 2,
         server: cfg,
     })
     .expect("net server start")
@@ -165,6 +175,7 @@ fn reject_mode_saturation_surfaces_as_rejected_wire_status() {
         let req = WireRequest {
             id,
             model: "gin".to_string(),
+            qos: WireQos::default(),
             graph: gengnn::datagen::molecular_graph(&mut rng, &cfg),
         };
         sock.write_all(&proto::encode_request(&req).unwrap()).unwrap();
@@ -202,6 +213,7 @@ fn reject_mode_saturation_surfaces_as_rejected_wire_status() {
     let req = WireRequest {
         id: 1000,
         model: "gin".to_string(),
+        qos: WireQos::default(),
         graph: gengnn::datagen::molecular_graph(&mut rng, &cfg),
     };
     sock.write_all(&proto::encode_request(&req).unwrap()).unwrap();
@@ -235,6 +247,7 @@ fn malformed_frames_are_counted_and_answered_not_fatal() {
     let mut frame = proto::encode_request(&WireRequest {
         id: 1,
         model: "gcn".to_string(),
+        qos: WireQos::default(),
         graph: g.clone(),
     })
     .unwrap();
@@ -262,6 +275,7 @@ fn malformed_frames_are_counted_and_answered_not_fatal() {
         &proto::encode_request(&WireRequest {
             id: 55,
             model: "gcn".to_string(),
+            qos: WireQos::default(),
             graph: bad_graph,
         })
         .unwrap(),
@@ -278,6 +292,7 @@ fn malformed_frames_are_counted_and_answered_not_fatal() {
         &proto::encode_request(&WireRequest {
             id: 2,
             model: "gcn".to_string(),
+            qos: WireQos::default(),
             graph: g,
         })
         .unwrap(),
@@ -310,6 +325,7 @@ fn loadgen_over_loopback_reconciles_and_reports_percentiles() {
         seed: 3,
         graph_pool: 8,
         drain_timeout: Duration::from_secs(60),
+        ..LoadGenConfig::default()
     })
     .expect("loadgen run");
 
@@ -329,4 +345,217 @@ fn loadgen_over_loopback_reconciles_and_reports_percentiles() {
     let metrics = net.shutdown();
     assert_eq!(metrics.total_completed(), 80);
     assert_eq!(metrics.e2e_histogram().count(), 80);
+}
+
+#[test]
+fn connection_closed_mid_flight_settles_the_gauge_and_counts_the_orphan() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string()],
+        ..ServerConfig::default()
+    });
+    let metrics = net.metrics();
+    let mut rng = Rng::new(21);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+    {
+        let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
+        sock.write_all(
+            &proto::encode_request_parts(9, "gcn", WireQos::default(), &g).unwrap(),
+        )
+        .unwrap();
+        sock.flush().unwrap();
+        // Drop the connection with the request still in flight. The
+        // reactor reads the buffered frame before it sees EOF, so the
+        // request is admitted — and its response has nowhere to go.
+    }
+    // The coordinator still completes the work; the pump's route
+    // lookup misses (or the reactor's does, depending on which side
+    // tears down first) and the response is counted as dropped.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let dropped = metrics
+            .net()
+            .responses_dropped
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if dropped >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "orphaned response never surfaced in responses_dropped"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        metrics.net().requests_in_flight.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "a dead connection must not strand the in-flight gauge"
+    );
+    let metrics = net.shutdown();
+    assert_eq!(metrics.total_completed(), 1);
+    assert_eq!(
+        metrics.net().requests_in_flight.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn deadline_overload_sheds_by_ttl_and_reconciles() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    // One slow lane, a queue of 2, Block admission, and a burst of 60
+    // requests carrying a 1 ms TTL: most deadlines lapse while queued
+    // or parked, so the server must shed by deadline (`Expired`) —
+    // and every shed request must still be answered, so the loadgen
+    // accounting reconciles exactly.
+    let net = net_server(ServerConfig {
+        models: vec!["gin".to_string()],
+        prep_workers: 1,
+        executor_lanes: 1,
+        queue_capacity: 2,
+        admission: AdmissionPolicy::Block,
+        batch: BatchPolicy::default(),
+        ..ServerConfig::default()
+    });
+    let report = loadgen::run(&LoadGenConfig {
+        addr: net.local_addr().to_string(),
+        rps: 50_000.0,
+        count: 60,
+        connections: 4,
+        models: vec!["gin".to_string()],
+        seed: 5,
+        graph_pool: 4,
+        drain_timeout: Duration::from_secs(120),
+        ttl_ms: 1,
+        priority_mix: "high:1,normal:2,low:1".to_string(),
+    })
+    .expect("loadgen run");
+
+    assert!(report.reconciles(), "{report:?}");
+    assert_eq!(report.submitted, 60);
+    assert_eq!(report.lost, 0, "{report:?}");
+    assert!(
+        report.shed_by_deadline >= 1,
+        "a 60-request burst with 1 ms TTLs through one lane must shed: {report:?}"
+    );
+    assert!(
+        report.shed_by_deadline <= report.rejected,
+        "shed_by_deadline is a sub-count of rejected: {report:?}"
+    );
+    assert!(report.render().contains("shed by deadline"), "{}", report.render());
+
+    let metrics = net.shutdown();
+    // Every server-side shed produced exactly one `Expired` answer the
+    // generator observed (lost == 0 above), so the two counts agree.
+    assert_eq!(metrics.deadline_expired(), report.shed_by_deadline, "{report:?}");
+}
+
+#[test]
+fn a_thousand_connections_multiplex_onto_the_fixed_reactor_pool() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    // Two reactor threads — not a thread per connection — carry every
+    // socket. NetServer::start raises the fd soft limit best-effort;
+    // size the fleet to whatever limit actually stuck (each loopback
+    // connection burns two fds in this process: client end + server
+    // end), so the test degrades instead of erroring on locked-down
+    // machines.
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string()],
+        executor_lanes: 2,
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    let (soft, _hard) = polly::nofile_limit().expect("query fd limit");
+    let conns = 1000usize.min(((soft.saturating_sub(256)) / 2) as usize).max(8);
+
+    let mut rng = Rng::new(33);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+    let mut socks = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let sock = std::net::TcpStream::connect(net.local_addr())
+            .unwrap_or_else(|e| panic!("connect #{i}: {e}"));
+        sock.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        socks.push(sock);
+        // Let the accept loop drain the backlog under mass connect.
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // All requests go out before any response is read: every
+    // connection is live and in flight at once.
+    for (i, sock) in socks.iter_mut().enumerate() {
+        let frame =
+            proto::encode_request_parts(i as u64, "gcn", WireQos::default(), &g).unwrap();
+        sock.write_all(&frame).unwrap();
+    }
+    for (i, sock) in socks.iter_mut().enumerate() {
+        let payload = proto::read_frame(sock)
+            .unwrap_or_else(|e| panic!("conn #{i} read: {e}"))
+            .unwrap_or_else(|| panic!("conn #{i} closed before its response"));
+        let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+            panic!("conn #{i}: non-response frame");
+        };
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.status, WireStatus::Ok, "conn #{i}: {}", resp.error);
+    }
+    drop(socks);
+
+    let metrics = net.shutdown();
+    assert_eq!(
+        metrics.net().connections_accepted.load(std::sync::atomic::Ordering::Relaxed),
+        conns as u64
+    );
+    assert_eq!(metrics.total_completed(), conns as u64);
+    assert_eq!(
+        metrics.net().requests_in_flight.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn v1_frames_are_served_and_answered_with_v1_responses() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = net_server(ServerConfig {
+        models: vec!["gcn".to_string()],
+        ..ServerConfig::default()
+    });
+    let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
+    sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut rx = std::io::BufReader::new(sock.try_clone().unwrap());
+    let mut rng = Rng::new(41);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+
+    // A legacy (v1, QoS-less) request frame: served with default QoS,
+    // answered with a response the v1 decoder understands.
+    sock.write_all(&proto::encode_request_parts_v1(7, "gcn", &g).unwrap()).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    assert_eq!(payload[0], PROTO_V1, "v1 requests get v1-stamped responses");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!((resp.id, resp.status), (7, WireStatus::Ok));
+
+    // A v2 frame on the same connection negotiates independently.
+    let frame = proto::encode_request_parts(
+        8,
+        "gcn",
+        WireQos::new(0, Priority::High),
+        &g,
+    )
+    .unwrap();
+    sock.write_all(&frame).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    assert_eq!(payload[0], PROTO_VERSION, "v2 requests get v2-stamped responses");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!((resp.id, resp.status), (8, WireStatus::Ok));
+    net.shutdown();
 }

@@ -1,0 +1,611 @@
+//! A minimal readiness poller for the gengnn reactor front-end.
+//!
+//! Vendored like `anyhow`/`xla`: no registry deps, no build script —
+//! the whole OS surface is a handful of `extern "C"` declarations
+//! against the C library every supported target already links. The
+//! API is the small mio-shaped core the reactor needs and nothing
+//! more:
+//!
+//! * [`Poller`] — register/modify/deregister interest in raw fds and
+//!   [`Poller::wait`] for [`Event`]s, **level-triggered** (an event
+//!   repeats every wait until the condition is consumed, so a reactor
+//!   that processes partially is never stranded).
+//! * [`Waker`] — a nonblocking self-pipe for cross-thread wakeups
+//!   (accept loop and response pump poke reactors out of `wait`).
+//! * [`nofile_limit`] / [`raise_nofile_limit`] — `RLIMIT_NOFILE`
+//!   introspection so "thousands of connections" does not die at the
+//!   default 1024 soft cap.
+//!
+//! On Linux the backend is epoll(7); elsewhere a poll(2) scan keeps
+//! the crate compiling and tests honest (the reactor only targets
+//! Linux in CI, but a laptop build should not need a cfg fence).
+//!
+//! Tokens are caller-chosen `u64`s echoed back verbatim in events; fd
+//! lifetime stays with the caller (`deregister` before close).
+
+use std::io;
+
+/// Raw file descriptor. `std::os::unix::io::RawFd` without pulling
+/// the unix prelude into every caller.
+pub type Fd = i32;
+
+/// Readiness delivered by [`Poller::wait`]. `readable` is set on
+/// error/hangup too so a reader always observes EOF-ish conditions;
+/// `hangup` singles out peer-close for callers that want to fast-path
+/// teardown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+/// Interest to (re)arm for an fd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    pub const BOTH: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+mod sys {
+    //! The entire FFI surface. Everything here is a direct
+    //! declaration of a libc symbol; no types leave this module
+    //! except through the safe wrappers below.
+    #![allow(non_camel_case_types)]
+
+    pub type c_int = i32;
+
+    #[repr(C)]
+    pub struct rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    /// `RLIMIT_NOFILE`: 7 on Linux, 8 on the macOS/BSD family.
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    pub const RLIMIT_NOFILE: c_int = 8;
+
+    pub const F_SETFL: c_int = 4;
+    pub const F_GETFL: c_int = 3;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    #[cfg(target_os = "linux")]
+    pub mod epoll {
+        use super::c_int;
+
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLPRI: u32 = 0x002;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+
+        /// Kernel ABI layout: packed on x86 so the 64-bit payload sits
+        /// at offset 4 (the historical i386 layout the syscall expects
+        /// on both x86 widths); natural alignment everywhere else.
+        #[repr(C)]
+        #[cfg_attr(
+            any(target_arch = "x86_64", target_arch = "x86"),
+            repr(packed)
+        )]
+        #[derive(Clone, Copy)]
+        pub struct epoll_event {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut epoll_event,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut epoll_event,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub mod pollsys {
+        use super::c_int;
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLPRI: i16 = 0x002;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        pub struct pollfd {
+            pub fd: c_int,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        /// `nfds_t` is `u32` on every non-Linux unix we could build on
+        /// (Linux takes the epoll path above).
+        pub type nfds_t = u32;
+
+        extern "C" {
+            pub fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: c_int) -> c_int;
+        }
+    }
+
+    extern "C" {
+        pub fn close(fd: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+        pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
+    }
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// Mark an fd nonblocking (used for the waker pipe; sockets go
+/// through `TcpStream::set_nonblocking`).
+fn set_nonblocking(fd: Fd) -> io::Result<()> {
+    unsafe {
+        let flags = cvt(sys::fcntl(fd, sys::F_GETFL))?;
+        cvt(sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK))?;
+    }
+    Ok(())
+}
+
+/// Current `(soft, hard)` RLIMIT_NOFILE.
+pub fn nofile_limit() -> io::Result<(u64, u64)> {
+    let mut r = sys::rlimit {
+        rlim_cur: 0,
+        rlim_max: 0,
+    };
+    cvt(unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut r) })?;
+    Ok((r.rlim_cur, r.rlim_max))
+}
+
+/// Raise the soft RLIMIT_NOFILE toward `want`, clamped to the hard
+/// limit (unprivileged processes cannot exceed it). Returns the soft
+/// limit actually in effect afterwards; never lowers it.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let (soft, hard) = nofile_limit()?;
+    let target = want.min(hard);
+    if target <= soft {
+        return Ok(soft);
+    }
+    let r = sys::rlimit {
+        rlim_cur: target,
+        rlim_max: hard,
+    };
+    cvt(unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &r) })?;
+    Ok(target)
+}
+
+#[cfg(target_os = "linux")]
+mod backend {
+    use super::sys::epoll::*;
+    use super::{cvt, Event, Fd, Interest};
+    use std::io;
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    /// epoll(7) instance. Level-triggered; interest is per-fd.
+    pub struct Poller {
+        epfd: Fd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = epoll_event {
+                events: mask(interest),
+                data: token,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: Fd) -> io::Result<()> {
+            let mut ev = epoll_event { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        /// Block up to `timeout_ms` (-1 = forever) and append ready
+        /// events. EINTR retries; returns the number appended.
+        pub fn wait(&self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            const CAP: usize = 1024;
+            let mut buf = [epoll_event { events: 0, data: 0 }; CAP];
+            let n = loop {
+                let r = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), CAP as i32, timeout_ms)
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            for ev in &buf[..n] {
+                let bits = ev.events;
+                events.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLPRI | EPOLLERR | EPOLLHUP | EPOLLRDHUP)
+                        != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR) != 0,
+                    hangup: bits & (EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(n)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { super::sys::close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod backend {
+    use super::sys::pollsys::*;
+    use super::{cvt, Event, Fd, Interest};
+    use std::collections::HashMap;
+    use std::io;
+    use std::sync::Mutex;
+
+    /// poll(2) scan over the registered set. O(fds) per wait — fine
+    /// for dev boxes; production reactors run the Linux epoll path.
+    pub struct Poller {
+        registered: Mutex<HashMap<Fd, (u64, Interest)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                registered: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn register(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap_or_else(|e| e.into_inner());
+            if reg.insert(fd, (token, interest)).is_some() {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "fd already registered",
+                ));
+            }
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: Fd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap_or_else(|e| e.into_inner());
+            match reg.get_mut(&fd) {
+                Some(slot) => {
+                    *slot = (token, interest);
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&self, fd: Fd) -> io::Result<()> {
+            let mut reg = self.registered.lock().unwrap_or_else(|e| e.into_inner());
+            match reg.remove(&fd) {
+                Some(_) => Ok(()),
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn wait(&self, events: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            let mut fds: Vec<pollfd> = Vec::new();
+            let mut tokens: Vec<u64> = Vec::new();
+            {
+                let reg = self.registered.lock().unwrap_or_else(|e| e.into_inner());
+                for (&fd, &(token, interest)) in reg.iter() {
+                    let mut ev = 0i16;
+                    if interest.readable {
+                        ev |= POLLIN | POLLPRI;
+                    }
+                    if interest.writable {
+                        ev |= POLLOUT;
+                    }
+                    fds.push(pollfd {
+                        fd,
+                        events: ev,
+                        revents: 0,
+                    });
+                    tokens.push(token);
+                }
+            }
+            let n = loop {
+                let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as nfds_t, timeout_ms) };
+                match cvt(r) {
+                    Ok(r) => break r as usize,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let bits = pfd.revents;
+                if bits == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: bits & (POLLIN | POLLPRI | POLLERR | POLLHUP) != 0,
+                    writable: bits & (POLLOUT | POLLERR) != 0,
+                    hangup: bits & POLLHUP != 0,
+                });
+            }
+            Ok(n)
+        }
+    }
+}
+
+pub use backend::Poller;
+
+/// Cross-thread wakeup: a nonblocking self-pipe whose read end the
+/// owning reactor registers under a reserved token. `wake` is safe
+/// from any thread; a full pipe already guarantees a pending wakeup,
+/// so `EAGAIN` counts as success.
+pub struct Waker {
+    read_fd: Fd,
+    write_fd: Fd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let mut fds = [0i32; 2];
+        cvt(unsafe { sys::pipe(fds.as_mut_ptr()) })?;
+        let (read_fd, write_fd) = (fds[0], fds[1]);
+        for fd in [read_fd, write_fd] {
+            if let Err(e) = set_nonblocking(fd) {
+                unsafe {
+                    sys::close(read_fd);
+                    sys::close(write_fd);
+                }
+                return Err(e);
+            }
+        }
+        Ok(Waker { read_fd, write_fd })
+    }
+
+    /// Register the pipe's read end with `poller` under `token`.
+    pub fn register(&self, poller: &Poller, token: u64) -> io::Result<()> {
+        poller.register(self.read_fd, token, Interest::READ)
+    }
+
+    /// Poke the poller out of `wait`. Never blocks.
+    pub fn wake(&self) -> io::Result<()> {
+        let byte = [1u8];
+        let r = unsafe { sys::write(self.write_fd, byte.as_ptr(), 1) };
+        if r >= 0 {
+            return Ok(());
+        }
+        let err = io::Error::last_os_error();
+        match err.kind() {
+            // Pipe full: a wakeup is already pending, job done.
+            io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted => Ok(()),
+            _ => Err(err),
+        }
+    }
+
+    /// Consume all pending wakeup bytes (call when the waker token
+    /// fires, before scanning inboxes, so level-triggered polling
+    /// does not spin).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let r = unsafe { sys::read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if r <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+// The fds are plain integers; wake() and drain() are independent ends
+// of the pipe and each is atomic at the syscall level.
+unsafe impl Send for Waker {}
+unsafe impl Sync for Waker {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    fn wait_for(poller: &Poller, token: u64, want_read: bool) -> Event {
+        let mut events = Vec::new();
+        for _ in 0..100 {
+            events.clear();
+            poller.wait(&mut events, 100).expect("wait");
+            if let Some(ev) = events
+                .iter()
+                .find(|e| e.token == token && (!want_read || e.readable))
+            {
+                return *ev;
+            }
+        }
+        panic!("token {token} never became ready");
+    }
+
+    #[test]
+    fn socket_readiness_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        server.set_nonblocking(true).expect("nonblocking");
+
+        let poller = Poller::new().expect("poller");
+        use std::os::unix::io::AsRawFd;
+        let fd = server.as_raw_fd();
+        poller.register(fd, 7, Interest::BOTH).expect("register");
+
+        // A fresh socket with empty buffers: writable, not readable.
+        let ev = wait_for(&poller, 7, false);
+        assert!(ev.writable && !ev.readable, "{ev:?}");
+
+        client.write_all(b"ping").expect("write");
+        let ev = wait_for(&poller, 7, true);
+        assert!(ev.readable, "{ev:?}");
+
+        // Level-triggered: still readable on the next wait because the
+        // bytes were not consumed.
+        let ev = wait_for(&poller, 7, true);
+        assert!(ev.readable, "{ev:?}");
+
+        // Dropping write interest stops writable events.
+        poller.modify(fd, 7, Interest::READ).expect("modify");
+        let ev = wait_for(&poller, 7, true);
+        assert!(ev.readable && !ev.writable, "{ev:?}");
+
+        // Peer close surfaces as readable (EOF) with hangup.
+        drop(client);
+        let ev = wait_for(&poller, 7, true);
+        assert!(ev.readable, "{ev:?}");
+        let mut one = [0u8; 16];
+        let mut s = &server;
+        assert_eq!(s.read(&mut one).expect("read data"), 4);
+
+        poller.deregister(fd).expect("deregister");
+        let mut events = Vec::new();
+        poller.wait(&mut events, 10).expect("wait");
+        assert!(
+            events.iter().all(|e| e.token != 7),
+            "deregistered fd still reported: {events:?}"
+        );
+    }
+
+    #[test]
+    fn waker_crosses_threads_and_drains() {
+        let poller = Poller::new().expect("poller");
+        let waker = std::sync::Arc::new(Waker::new().expect("waker"));
+        waker.register(&poller, 0).expect("register");
+
+        // No wake yet: a short wait returns nothing for token 0.
+        let mut events = Vec::new();
+        poller.wait(&mut events, 10).expect("wait");
+        assert!(events.iter().all(|e| e.token != 0));
+
+        let w = std::sync::Arc::clone(&waker);
+        let t = std::thread::spawn(move || {
+            for _ in 0..100 {
+                w.wake().expect("wake");
+            }
+        });
+        let ev = wait_for(&poller, 0, true);
+        assert!(ev.readable);
+        t.join().expect("join");
+
+        // After draining, the level-triggered readable condition is
+        // gone (100 coalesced bytes consumed in one drain).
+        waker.drain();
+        events.clear();
+        poller.wait(&mut events, 10).expect("wait");
+        assert!(events.iter().all(|e| e.token != 0), "{events:?}");
+
+        // Wake again after drain still works.
+        waker.wake().expect("wake");
+        let ev = wait_for(&poller, 0, true);
+        assert!(ev.readable);
+    }
+
+    #[test]
+    fn nofile_limit_helpers() {
+        let (soft, hard) = nofile_limit().expect("getrlimit");
+        assert!(soft > 0 && hard >= soft, "soft={soft} hard={hard}");
+        // Raising toward an absurd target clamps to the hard limit and
+        // never errors or lowers the soft limit.
+        let now = raise_nofile_limit(u64::MAX).expect("setrlimit");
+        assert!(now >= soft && now <= hard);
+        // Asking for less than the current soft limit is a no-op.
+        assert_eq!(raise_nofile_limit(1).expect("noop"), now.max(1));
+    }
+
+    #[test]
+    fn register_duplicate_fd_errors() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        use std::os::unix::io::AsRawFd;
+        let fd = listener.as_raw_fd();
+        let poller = Poller::new().expect("poller");
+        poller.register(fd, 1, Interest::READ).expect("register");
+        assert!(poller.register(fd, 2, Interest::READ).is_err());
+        poller.deregister(fd).expect("deregister");
+        assert!(poller.deregister(fd).is_err());
+    }
+}
