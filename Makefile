@@ -4,8 +4,8 @@
 # Full artifact regeneration (needs jax): make artifacts
 
 .PHONY: build test check fmt clippy doc artifacts artifacts-golden \
-	bench-snapshot serve loadgen loadgen-deadline-smoke check-artifacts \
-	check-plans lint-plans clean
+	bench-snapshot serve loadgen loadgen-deadline-smoke deploy-smoke \
+	check-artifacts check-plans lint-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -65,6 +65,33 @@ loadgen-deadline-smoke: build
 	python3 python/tools/check_bench_schema.py BENCH_loadgen_smoke.json \
 		--schema BENCH_seed.json --require-measured \
 		--require-result "loadgen/shed_by_deadline>0"
+
+# Control-plane smoke (CI's bench-smoke deploy step): boot a server on
+# gcn only, live-deploy the staged gin over the wire, drive real
+# traffic at it (the snapshot must show completed requests), roll back,
+# and assert every registry state transition via LIST_MODELS.
+DEPLOY_ADDR ?= 127.0.0.1:17448
+deploy-smoke: build
+	@set -e; \
+	./target/release/gengnn serve --listen $(DEPLOY_ADDR) --models gcn \
+		--lanes 2 --duration 120 & \
+	pid=$$!; \
+	trap 'kill $$pid 2>/dev/null || true' EXIT; \
+	sleep 2; \
+	./target/release/gengnn models --addr $(DEPLOY_ADDR) --json \
+		| python3 python/tools/check_registry_state.py --live gcn --staged gin; \
+	./target/release/gengnn deploy gin --addr $(DEPLOY_ADDR); \
+	./target/release/gengnn models --addr $(DEPLOY_ADDR) --json \
+		| python3 python/tools/check_registry_state.py --live gcn,gin; \
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_deploy_smoke.json \
+		./target/release/gengnn loadgen --addr $(DEPLOY_ADDR) \
+		--rps 100 --count 100 --connections 2 --models gin; \
+	python3 python/tools/check_bench_schema.py BENCH_deploy_smoke.json \
+		--schema BENCH_seed.json --require-measured \
+		--require-result "loadgen/e2e_latency>0"; \
+	./target/release/gengnn deploy --rollback 0 --addr $(DEPLOY_ADDR); \
+	./target/release/gengnn models --addr $(DEPLOY_ADDR) --json \
+		| python3 python/tools/check_registry_state.py --live gcn --staged gin
 
 # Re-validate the checked-in golden/manifest fixtures (CI's
 # artifacts-integrity job).

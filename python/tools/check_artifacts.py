@@ -19,10 +19,23 @@ Plus directory-level checks: every `*.golden.json` on disk is
 referenced by the manifest (no dead fixtures), the weight seed is the
 pinned one, and the core model zoo is complete.
 
+Plus the content-addressed registry (`registry.json`, written by
+`gen_registry.py` and consumed by `rust/src/registry/`):
+  * every blob's recorded sha256 and size match the bytes on disk
+  * every model digest matches the canonical blob-listing encoding
+  * every deploy-log record digest matches its canonical encoding,
+    parent links chain, and versions are dense from 1
+  * every manifest model has a catalog entry (and vice versa)
+
+The canonical encodings are shared with `rust/src/registry/manifest.rs`;
+this re-derivation with `hashlib` is what keeps the pure-Rust SHA-256
+honest.
+
 Usage: python3 python/tools/check_artifacts.py [artifacts_dir]
 Exits nonzero with a message per violation.
 """
 
+import hashlib
 import json
 import math
 import sys
@@ -30,6 +43,7 @@ from pathlib import Path
 
 CORE_MODELS = {"gcn", "gin", "gin_vn", "gat", "pna", "dgn", "dgn_large", "sage", "sgc"}
 PINNED_WEIGHT_SEED = 0
+REGISTRY_SCHEMA = 1
 
 
 def flat_len(v):
@@ -121,6 +135,124 @@ def check_model(art_dir: Path, m: dict, errors: list):
     check_numbers_finite(g.get("output"), f"{name}.output", errors)
 
 
+def model_digest(name: str, blobs: list) -> str:
+    canon = f"model:{name}\n"
+    for b in sorted(blobs, key=lambda b: b.get("path", "")):
+        canon += f"blob:{b.get('path')}:{b.get('sha256')}:{b.get('size')}\n"
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def record_digest(rec: dict) -> str:
+    canon = (
+        f"record:{rec.get('version')}|{rec.get('op')}|{rec.get('model')}|"
+        f"{rec.get('digest')}|{rec.get('arg')}|{rec.get('parent')}"
+    )
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def check_registry(art_dir: Path, manifest_names: set, errors: list):
+    """Verify the content-addressed registry's digest chain end-to-end."""
+    reg_path = art_dir / "registry.json"
+    if not reg_path.is_file():
+        errors.append(
+            "registry.json missing (run python3 python/tools/gen_registry.py "
+            f"{art_dir} after regenerating fixtures)"
+        )
+        return
+    try:
+        reg = json.loads(reg_path.read_text())
+    except json.JSONDecodeError as e:
+        errors.append(f"registry.json does not parse: {e}")
+        return
+
+    if reg.get("schema") != REGISTRY_SCHEMA:
+        errors.append(f"registry schema {reg.get('schema')} != {REGISTRY_SCHEMA}")
+
+    catalog = reg.get("models")
+    if not isinstance(catalog, list) or not catalog:
+        errors.append("registry lists no models")
+        return
+    by_name = {}
+    for m in catalog:
+        name = m.get("name", "<unnamed>")
+        if name in by_name:
+            errors.append(f"registry: duplicate catalog entry {name}")
+            continue
+        by_name[name] = m
+        blobs = m.get("blobs", [])
+        if not blobs:
+            errors.append(f"registry: {name} has no blobs")
+            continue
+        for b in blobs:
+            path = art_dir / b.get("path", "")
+            if not path.is_file():
+                errors.append(f"registry: {name} blob {b.get('path')} missing on disk")
+                continue
+            data = path.read_bytes()
+            if len(data) != b.get("size"):
+                errors.append(
+                    f"registry: {name} blob {b['path']} size {len(data)} "
+                    f"!= recorded {b.get('size')}"
+                )
+            actual = hashlib.sha256(data).hexdigest()
+            if actual != b.get("sha256"):
+                errors.append(
+                    f"registry: {name} blob {b['path']} hashes to {actual[:12]}… "
+                    f"but registry pins {str(b.get('sha256'))[:12]}…"
+                )
+        want = model_digest(name, blobs)
+        if m.get("digest") != want:
+            errors.append(
+                f"registry: {name} model digest {str(m.get('digest'))[:12]}… "
+                f"does not match canonical encoding {want[:12]}…"
+            )
+
+    # Catalog <-> manifest agreement, both directions.
+    for name in sorted(manifest_names - set(by_name)):
+        errors.append(f"registry: manifest model {name} has no catalog entry")
+    for name in sorted(set(by_name) - manifest_names):
+        errors.append(f"registry: catalog entry {name} is not in manifest.json")
+
+    # The deploy log: dense versions, parent chaining, honest record
+    # digests, and load records that pin what the catalog hashes to.
+    log = reg.get("log")
+    if not isinstance(log, list) or not log:
+        errors.append("registry log is empty")
+        return
+    parent = ""
+    for i, rec in enumerate(log):
+        v = rec.get("version")
+        if v != i + 1:
+            errors.append(f"registry log[{i}]: version {v} != {i + 1} (gap or reorder)")
+        if rec.get("parent") != parent:
+            errors.append(
+                f"registry log v{v}: parent {str(rec.get('parent'))[:12]}… breaks the "
+                f"chain (previous record is {parent[:12] if parent else '<none>'}…)"
+            )
+        want = record_digest(rec)
+        if rec.get("record") != want:
+            errors.append(
+                f"registry log v{v}: record digest does not match canonical encoding"
+            )
+        op = rec.get("op")
+        if op not in ("load", "unload", "rollback"):
+            errors.append(f"registry log v{v}: unknown op {op!r}")
+        elif op == "load":
+            entry = by_name.get(rec.get("model"))
+            if entry is None:
+                errors.append(f"registry log v{v}: loads uncataloged {rec.get('model')!r}")
+            elif rec.get("digest") != entry.get("digest"):
+                errors.append(
+                    f"registry log v{v}: pins digest {str(rec.get('digest'))[:12]}… but "
+                    f"catalog has {str(entry.get('digest'))[:12]}… for {rec.get('model')}"
+                )
+        elif op == "rollback":
+            arg = rec.get("arg")
+            if not isinstance(arg, int) or not 1 <= arg < (v or 0):
+                errors.append(f"registry log v{v}: rollback target {arg} out of range")
+        parent = rec.get("record") or ""
+
+
 def main() -> int:
     art_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts")
     manifest_path = art_dir / "manifest.json"
@@ -165,11 +297,13 @@ def main() -> int:
                 "(dead fixture — tests will silently never load it)"
             )
 
+    check_registry(art_dir, {n for n in names if n}, errors)
+
     if errors:
         for e in errors:
             print(f"FAIL: {e}", file=sys.stderr)
         return 1
-    print(f"OK: {len(models)} models validated against {art_dir}/")
+    print(f"OK: {len(models)} models validated against {art_dir}/ (registry chain verified)")
     return 0
 
 

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Assert registry state from `gengnn models --json` output.
+
+Reads the LIST_MODELS JSON document from stdin and verifies that the
+named models are live / staged (present but not serving). Used by
+`make deploy-smoke` to pin the deploy → rollback state transitions
+from the operator's point of view, over the real wire.
+
+Usage:
+    gengnn models --addr HOST:PORT --json \
+        | python3 check_registry_state.py --live gcn [--staged gin]
+            [--min-version N]
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def split(arg: str) -> list[str]:
+    return [m for m in arg.split(",") if m] if arg else []
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--live", default="", help="comma-separated models that must be live")
+    ap.add_argument(
+        "--staged",
+        default="",
+        help="comma-separated models that must be in the catalog but not live",
+    )
+    ap.add_argument(
+        "--min-version",
+        type=int,
+        default=1,
+        help="registry version must be at least this",
+    )
+    args = ap.parse_args()
+
+    try:
+        doc = json.load(sys.stdin)
+    except json.JSONDecodeError as e:
+        fail(f"stdin is not a JSON registry document: {e}")
+
+    version = doc.get("version")
+    if not isinstance(version, int) or version < args.min_version:
+        fail(f"registry version {version!r} < required {args.min_version}")
+
+    models = {m["name"]: bool(m["live"]) for m in doc.get("models", [])}
+    for name in split(args.live):
+        if name not in models:
+            fail(f"model {name!r} missing from the catalog ({sorted(models)})")
+        if not models[name]:
+            fail(f"model {name!r} must be live, but is staged")
+    for name in split(args.staged):
+        if name not in models:
+            fail(f"model {name!r} missing from the catalog ({sorted(models)})")
+        if models[name]:
+            fail(f"model {name!r} must be staged, but is live")
+
+    print(
+        f"OK: registry v{version}: "
+        f"{sum(models.values())} live / {len(models)} cataloged"
+    )
+
+
+if __name__ == "__main__":
+    main()

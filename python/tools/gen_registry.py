@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Generate artifacts/registry.json — the content-addressed registry manifest.
+
+Reads an artifacts directory (manifest.json + per-model fixtures),
+hashes every blob with SHA-256, and writes the registry manifest:
+
+* a model catalog pinning each model's blobs by digest and size, plus
+  a per-model "model digest" over the canonical blob listing, and
+* an append-only deploy log with one `load` record per model (name
+  order), chained by record digest.
+
+The canonical encodings are shared verbatim with the Rust side
+(`rust/src/registry/manifest.rs`) and the verifier
+(`check_artifacts.py`):
+
+    model digest:  sha256("model:<name>\n" + "blob:<path>:<sha256>:<size>\n"...)
+    record digest: sha256("record:<version>|<op>|<model>|<digest>|<arg>|<parent>")
+
+Run after `make artifacts` regenerates fixtures:
+
+    python3 python/tools/gen_registry.py artifacts
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+REGISTRY_SCHEMA = 1
+
+
+def sha256_hex(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def model_digest(name: str, blobs: list[dict]) -> str:
+    canon = f"model:{name}\n"
+    for b in sorted(blobs, key=lambda b: b["path"]):
+        canon += f"blob:{b['path']}:{b['sha256']}:{b['size']}\n"
+    return sha256_hex(canon.encode())
+
+
+def record_digest(rec: dict) -> str:
+    canon = (
+        f"record:{rec['version']}|{rec['op']}|{rec['model']}|"
+        f"{rec['digest']}|{rec['arg']}|{rec['parent']}"
+    )
+    return sha256_hex(canon.encode())
+
+
+def blob_entry(root: Path, rel: str) -> dict:
+    data = (root / rel).read_bytes()
+    return {"path": rel, "sha256": sha256_hex(data), "size": len(data)}
+
+
+def build(root: Path) -> dict:
+    manifest = json.loads((root / "manifest.json").read_text())
+    models = []
+    log = []
+    parent = ""
+    version = 0
+    for entry in sorted(manifest["models"], key=lambda m: m["name"]):
+        name = entry["name"]
+        blobs = []
+        for key in ("golden", "artifact"):
+            rel = entry.get(key, "")
+            if rel and (root / rel).exists():
+                blobs.append(blob_entry(root, rel))
+        if not blobs:
+            raise SystemExit(f"model {name} has no blobs under {root}")
+        blobs.sort(key=lambda b: b["path"])
+        digest = model_digest(name, blobs)
+        models.append({"name": name, "digest": digest, "blobs": blobs})
+        version += 1
+        rec = {
+            "version": version,
+            "op": "load",
+            "model": name,
+            "digest": digest,
+            "arg": 0,
+            "parent": parent,
+        }
+        rec["record"] = record_digest(rec)
+        parent = rec["record"]
+        log.append(rec)
+    return {"schema": REGISTRY_SCHEMA, "models": models, "log": log}
+
+
+def main() -> None:
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts")
+    if not (root / "manifest.json").exists():
+        raise SystemExit(f"no manifest.json under {root}")
+    registry = build(root)
+    out = root / "registry.json"
+    out.write_text(json.dumps(registry, indent=2) + "\n")
+    print(
+        f"wrote {out}: {len(registry['models'])} models, "
+        f"log head version {registry['log'][-1]['version']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@
 //! `GENGNN_BENCH_QUICK=1` for a seconds-long smoke run (CI's
 //! bench-smoke job) that still emits a schema-valid snapshot.
 
-use gengnn::coordinator::{Server, ServerConfig};
+use gengnn::coordinator::ServerConfig;
 use gengnn::datagen::{citation, molecular, MolConfig};
 use gengnn::graph::{fiedler_vector, CooGraph, Csc, Csr, DenseGraph, GraphBatch, InNbrs};
 use gengnn::runtime::{Artifacts, DenseRef, Engine, InputPack, NativeModel};
@@ -203,14 +203,13 @@ fn main() {
                 })
                 .collect();
             for lanes in [1usize, 2, 4] {
-                let server = Server::start(ServerConfig {
-                    models: vec!["gcn".into(), "gin".into()],
-                    prep_workers: 2,
-                    executor_lanes: lanes,
-                    queue_capacity: 256,
-                    ..ServerConfig::default()
-                })
-                .expect("server start");
+                let server = ServerConfig::builder()
+                    .models(["gcn", "gin"])
+                    .prep_workers(2)
+                    .executor_lanes(lanes)
+                    .queue_capacity(256)
+                    .start()
+                    .expect("server start");
                 let responses = server.responses();
                 results.push(bench(&format!("lanes_scaling/{lanes}"), 1, q(10), || {
                     for (i, g) in stream.iter().enumerate() {

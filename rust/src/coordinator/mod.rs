@@ -9,15 +9,20 @@
 //! engine).
 //!
 //! * [`request`]      — request/response types
-//! * [`router`]       — model routing + envelope validation
-//! * [`batcher`]      — dispatch batching (same-model runs)
+//! * [`router`]       — model routing + envelope validation against
+//!   the live registry snapshot (deploys take effect per request)
+//! * [`batcher`]      — dispatch batching (same-model runs), banded by
+//!   priority, earliest-deadline-first within a band
 //! * [`scheduler`]    — the sharded executor pool: dispatcher + N
-//!   parallel lanes (one engine each) with work stealing and fused
-//!   micro-batch execution (`fuse_max_graphs`)
+//!   parallel lanes (one engine each, synced from the model registry)
+//!   with work stealing and fused micro-batch execution
+//!   (`fuse_max_graphs`)
 //! * [`backpressure`] — admission policies for the bounded ingest queue
 //! * [`metrics`]      — latency/throughput accounting, sharded per
 //!   model, plus per-lane execution counters
-//! * [`server`]       — wiring: ingest → prep workers → executor pool
+//! * [`server`]       — wiring: ingest → prep workers → executor pool,
+//!   plus the control plane ([`Server::control`]) driving the live
+//!   [`crate::registry::ModelRegistry`]
 
 pub mod backpressure;
 pub mod batcher;
@@ -32,4 +37,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{LaneSummary, Metrics, NetCounters};
 pub use request::{Request, Response};
 pub use router::{Route, Router};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, ServerConfigBuilder};

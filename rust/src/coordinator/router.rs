@@ -1,11 +1,18 @@
 //! Request router: validates an incoming raw graph against the target
-//! artifact's envelope (model exists, node capacity, feature widths)
-//! and assigns it to the model's dispatch queue. Runs on the prep
+//! model's envelope (model live, node capacity, feature widths) and
+//! assigns it to the model's dispatch queue. Runs on the prep
 //! workers — cheap, allocation-free checks only.
+//!
+//! Since the live-registry redesign the route table is **not** frozen
+//! at startup: every `route` call resolves the registry's current
+//! [`Snapshot`], so a model made live by `LOAD_MODEL` is routable on
+//! the very next request and an unloaded one stops admitting without
+//! touching requests already past this gate.
 
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use crate::runtime::artifact::{Artifacts, ModelMeta};
+use crate::registry::{ModelRegistry, Snapshot};
+use crate::runtime::artifact::ModelMeta;
 
 use super::request::Request;
 
@@ -18,35 +25,30 @@ pub enum Route {
     Reject(String),
 }
 
-/// Immutable routing table built from the manifest.
+/// Live routing view over the model registry.
 pub struct Router {
-    models: BTreeMap<String, ModelMeta>,
+    registry: Arc<ModelRegistry>,
 }
 
 impl Router {
-    pub fn new(artifacts: &Artifacts, serve: &[&str]) -> Router {
-        let serve: Vec<&str> = if serve.is_empty() {
-            artifacts.model_names()
-        } else {
-            serve.to_vec()
-        };
-        Router {
-            models: artifacts
-                .models
-                .iter()
-                .filter(|m| serve.contains(&m.name.as_str()))
-                .map(|m| (m.name.clone(), m.clone()))
-                .collect(),
-        }
+    pub fn new(registry: Arc<ModelRegistry>) -> Router {
+        Router { registry }
     }
 
-    pub fn served_models(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+    /// Names currently admitting traffic (this instant's snapshot).
+    pub fn served_models(&self) -> Vec<String> {
+        self.registry.snapshot().model_names()
     }
 
-    /// Validate and route one request.
+    /// Validate and route one request against the current snapshot.
     pub fn route(&self, req: &Request) -> Route {
-        let Some(meta) = self.models.get(&req.model) else {
+        Self::route_in(&self.registry.snapshot(), req)
+    }
+
+    /// The validation core against one pinned snapshot (callers that
+    /// must make several decisions atomically resolve once and reuse).
+    pub fn route_in(snapshot: &Snapshot, req: &Request) -> Route {
+        let Some(meta) = snapshot.meta(&req.model) else {
             return Route::Reject(format!("unknown model {:?}", req.model));
         };
         if req.graph.n > meta.n_max {
@@ -70,8 +72,10 @@ impl Router {
         Route::Accept(meta.name.clone())
     }
 
-    pub fn meta(&self, model: &str) -> Option<&ModelMeta> {
-        self.models.get(model)
+    /// Meta for a currently-live model (cloned out of the snapshot —
+    /// the snapshot itself is transient).
+    pub fn meta(&self, model: &str) -> Option<ModelMeta> {
+        self.registry.snapshot().meta(model).cloned()
     }
 }
 
@@ -79,11 +83,20 @@ impl Router {
 mod tests {
     use super::*;
     use crate::datagen::{molecular_graph, MolConfig};
+    use crate::registry::ControlRequest;
+    use crate::runtime::Artifacts;
+
     use crate::util::rng::Rng;
 
+    fn registry(serve: &[&str]) -> Option<Arc<ModelRegistry>> {
+        let serve: Vec<String> = serve.iter().map(|s| s.to_string()).collect();
+        ModelRegistry::open(Artifacts::default_dir(), &serve)
+            .ok()
+            .map(Arc::new)
+    }
+
     fn router() -> Option<Router> {
-        let a = Artifacts::load(Artifacts::default_dir()).ok()?;
-        Some(Router::new(&a, &[]))
+        registry(&[]).map(Router::new)
     }
 
     fn mol() -> crate::graph::CooGraph {
@@ -124,12 +137,36 @@ mod tests {
 
     #[test]
     fn serve_subset_filters() {
-        let Some(a) = Artifacts::load(Artifacts::default_dir()).ok() else {
+        let Some(reg) = registry(&["gcn", "gat"]) else {
             return;
         };
-        let r = Router::new(&a, &["gcn", "gat"]);
+        let r = Router::new(reg);
         assert_eq!(r.served_models(), vec!["gat", "gcn"]);
         let req = Request::new(1, "gin", mol());
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+    }
+
+    #[test]
+    fn routes_follow_live_deploys() {
+        // The route table is not startup-frozen: a LOAD_MODEL admits
+        // on the next request, an UNLOAD_MODEL stops admitting, and a
+        // ROLLBACK restores the earlier verdicts.
+        let Some(reg) = registry(&["gcn"]) else { return };
+        let r = Router::new(Arc::clone(&reg));
+        let req = Request::new(1, "gin", mol());
+        assert!(matches!(r.route(&req), Route::Reject(_)));
+
+        let boot = reg.version();
+        assert!(
+            reg.apply(&ControlRequest::Load {
+                model: "gin".into(),
+                digest: None
+            })
+            .ok
+        );
+        assert_eq!(r.route(&req), Route::Accept("gin".into()));
+
+        assert!(reg.apply(&ControlRequest::Rollback { version: boot }).ok);
         assert!(matches!(r.route(&req), Route::Reject(_)));
     }
 }

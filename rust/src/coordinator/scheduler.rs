@@ -13,13 +13,19 @@
 //!
 //! * The **dispatcher** owns the [`Batcher`]: it groups same-model runs
 //!   and routes each batch to its model's home lane (stable
-//!   model→lane affinity), so a lane keeps warm per-model state
-//!   (packing buffers, scratch allocations) for the models it owns.
-//!   When the home queue is full the batch overflows to any lane with
-//!   room, so a burst at one hot model engages idle lanes immediately.
-//! * Each **lane** owns a full [`Engine`] built from the shared
-//!   `Arc<Artifacts>` — identical seeded weights on every lane, which
-//!   is what makes N-lane output bit-identical to 1-lane output.
+//!   model→lane affinity by name hash), so a lane keeps warm per-model
+//!   state (packing buffers, scratch allocations) for the models it
+//!   owns. When the home queue is full the batch overflows to any lane
+//!   with room, so a burst at one hot model engages idle lanes
+//!   immediately.
+//! * Each **lane** owns a full [`Engine`] synced from the live
+//!   [`ModelRegistry`]: it boots from the registry's snapshot and
+//!   re-syncs whenever the lock-free registry version counter moves —
+//!   compiling freshly deployed models on demand, and deliberately
+//!   *never* evicting on unload, so in-flight requests drain against
+//!   the cached plan. Weights regenerate from the shared seed, which
+//!   is what makes N-lane output bit-identical to 1-lane output and a
+//!   same-digest reload bit-identical to no reload at all.
 //! * When a lane's own queue runs dry it **steals** a batch from a
 //!   sibling queue, so a single hot model still scales across lanes.
 //! * With `fuse_max_graphs ≥ 2`, a lane executes each same-model
@@ -36,14 +42,14 @@
 //! integrity — with more than one lane, same-model requests may
 //! complete out of submission order (consumers key on `Response::id`).
 
-use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::graph::GraphBatch;
-use crate::runtime::{Artifacts, Engine};
+use crate::registry::ModelRegistry;
+use crate::runtime::Engine;
 use crate::util::pool::{Channel, RecvTimeout};
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -69,6 +75,19 @@ const STEAL_POLL: Duration = Duration::from_millis(1);
 /// doubles its park interval up to this, so a quiet server does not
 /// burn CPU sweeping empty queues.
 const STEAL_POLL_MAX: Duration = Duration::from_millis(64);
+
+/// Stable model→home-lane affinity: FNV-1a over the model name. Hash
+/// based (rather than index-in-serving-set based) so a model's home
+/// lane never moves when deploys grow or shrink the set around it —
+/// warm per-model lane state survives unrelated cutovers.
+fn home_lane(model: &str, lanes: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % lanes.max(1) as u64) as usize
+}
 
 /// Sends a failure through its channel if dropped before an explicit
 /// `send` — converting a panic anywhere on the startup path into a
@@ -106,15 +125,15 @@ impl Drop for ReadyGuard {
 }
 
 /// Spawn the executor pool: one dispatcher plus `lanes` executor lanes,
-/// each lane compiling its own [`Engine`] for `models` from the shared
-/// artifacts. Readiness (all lanes compiled, or the first error) is
+/// each lane compiling its own [`Engine`] from the registry's boot
+/// snapshot and re-syncing on every registry version change.
+/// Readiness (all lanes compiled the boot set, or the first error) is
 /// reported once through `ready`. The pool drains `prepared_rx` until
 /// it is closed, then shuts down; join the returned handles after
 /// closing the channel.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_executor_pool(
-    artifacts: Arc<Artifacts>,
-    models: Vec<String>,
+    registry: Arc<ModelRegistry>,
     lanes: usize,
     queue_capacity: usize,
     prepared_rx: Channel<Prepared>,
@@ -142,8 +161,7 @@ pub fn spawn_executor_pool(
 
     let mut handles = Vec::with_capacity(lanes + 1);
     for lane in 0..lanes {
-        let artifacts = Arc::clone(&artifacts);
-        let models = models.clone();
+        let registry = Arc::clone(&registry);
         let queues = lane_queues.clone();
         let responses_tx = responses_tx.clone();
         let counters = metrics.lane(lane);
@@ -155,8 +173,7 @@ pub fn spawn_executor_pool(
                 .spawn(move || {
                     run_lane(
                         lane,
-                        &artifacts,
-                        &models,
+                        registry,
                         queues,
                         responses_tx,
                         metrics,
@@ -192,7 +209,7 @@ pub fn spawn_executor_pool(
                 }
                 ready.send(Ok(()));
                 run_dispatcher(
-                    &models,
+                    &registry,
                     policy,
                     prepared_rx,
                     &lane_queues,
@@ -215,21 +232,18 @@ pub fn spawn_executor_pool(
 /// deadlines (shed-by-deadline: under overload the dispatcher drops
 /// what can no longer be answered in time, not whatever arrived last).
 fn run_dispatcher(
-    models: &[String],
+    registry: &ModelRegistry,
     policy: BatchPolicy,
     prepared_rx: Channel<Prepared>,
     lane_queues: &[Channel<Vec<Prepared>>],
     responses_tx: &Channel<Response>,
     metrics: &Metrics,
 ) {
-    let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    // Seed the batcher with the boot serving set; models deployed
+    // later get queues on their first routed request.
+    let boot = registry.snapshot().model_names();
+    let names: Vec<&str> = boot.iter().map(|s| s.as_str()).collect();
     let mut batcher = Batcher::new(&names, policy);
-    // Stable shard affinity: model i lives on lane i mod lanes.
-    let affinity: BTreeMap<&str, usize> = names
-        .iter()
-        .enumerate()
-        .map(|(i, &m)| (m, i % lane_queues.len()))
-        .collect();
     while let Some(first) = prepared_rx.recv() {
         batcher.push(first);
         while let Some(more) = prepared_rx.try_recv() {
@@ -242,7 +256,7 @@ fn run_dispatcher(
         while !batcher.is_empty() {
             let batch = batcher.next_batch();
             let Some(head) = batch.first() else { break };
-            let home = affinity.get(head.model.as_str()).copied().unwrap_or(0);
+            let home = home_lane(&head.model, lane_queues.len());
             if !dispatch(batch, home, lane_queues) {
                 return; // pool shutting down
             }
@@ -267,14 +281,44 @@ fn dispatch(batch: Vec<Prepared>, home: usize, queues: &[Channel<Vec<Prepared>>]
     queues[home].send(batch).is_ok()
 }
 
-/// One executor lane: compile an engine, then serve batches — own
-/// queue first, stealing from siblings when dry. Batches execute in
-/// fused chunks of up to `fuse_max` requests (1 = per-request).
+/// Bring `engine` up to date with the registry's live snapshot if the
+/// version counter moved since `seen`. Compiles models present in the
+/// snapshot but not in the engine; never evicts — in-flight and
+/// already-queued requests for a just-unloaded model must drain
+/// against the cached plan, and a same-digest reload must keep serving
+/// the *identical* compiled plan (the bit-exactness contract).
+///
+/// A compile failure here (possible only for artifacts that passed
+/// the registry's deploy gate but rot on disk afterwards) leaves the
+/// model unresident on this lane; its requests get per-request error
+/// responses from the execute path instead of poisoning the lane.
+fn sync_engine(engine: &mut Engine, registry: &ModelRegistry, seen: &mut u64) {
+    let v = registry.version();
+    if v == *seen {
+        return;
+    }
+    let snap = registry.snapshot();
+    for entry in snap.models.values() {
+        // An Err leaves the model unresident; its requests answer with
+        // per-request "model not loaded" errors rather than taking the
+        // lane down (the deploy gate byte-verified the blobs, so this
+        // is strictly a disk-rot-after-deploy path).
+        let _ = engine.ensure_model(&entry.meta);
+    }
+    // Record the snapshot's own version (it may already be newer than
+    // the trigger `v`; re-syncing on the next change is then a no-op).
+    *seen = snap.version.max(v);
+}
+
+/// One executor lane: boot an engine from the registry snapshot, then
+/// serve batches — own queue first, stealing from siblings when dry,
+/// re-syncing the engine whenever the registry publishes a new
+/// version. Batches execute in fused chunks of up to `fuse_max`
+/// requests (1 = per-request).
 #[allow(clippy::too_many_arguments)]
 fn run_lane(
     lane: usize,
-    artifacts: &Artifacts,
-    models: &[String],
+    registry: Arc<ModelRegistry>,
     queues: Vec<Channel<Vec<Prepared>>>,
     responses_tx: Channel<Response>,
     metrics: Arc<Metrics>,
@@ -282,11 +326,11 @@ fn run_lane(
     fuse_max: usize,
     ready: Channel<Result<(), String>>,
 ) {
-    let names: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
-    // Guarded: a panic inside Engine::load still reports through the
-    // ready protocol instead of hanging the dispatcher.
+    // Guarded: a panic inside engine compilation still reports through
+    // the ready protocol instead of hanging the dispatcher.
     let mut ready = ReadyGuard::new(ready, format!("lane {lane}"));
-    let mut engine = match Engine::load(artifacts, &names) {
+    let mut seen = 0u64;
+    let mut engine = match boot_engine(&registry, &mut seen) {
         Ok(e) => {
             ready.send(Ok(()));
             e
@@ -316,6 +360,7 @@ fn run_lane(
             }
         };
         park = STEAL_POLL;
+        sync_engine(&mut engine, &registry, &mut seen);
         if execute_batch(
             &mut engine,
             batch,
@@ -333,6 +378,7 @@ fn run_lane(
     // Own queue closed and drained: sweep any leftovers still parked on
     // sibling queues (their owners may be mid-batch), then exit.
     while let Some(b) = steal(lane, &queues) {
+        sync_engine(&mut engine, &registry, &mut seen);
         if execute_batch(
             &mut engine,
             b,
@@ -347,6 +393,20 @@ fn run_lane(
             return;
         }
     }
+}
+
+/// Compile the registry's boot snapshot into a fresh engine (the
+/// startup path, where a compile failure must abort server start
+/// through the ready protocol rather than degrade to per-request
+/// errors).
+fn boot_engine(registry: &ModelRegistry, seen: &mut u64) -> anyhow::Result<Engine> {
+    let snap = registry.snapshot();
+    let mut engine = Engine::empty(registry.artifacts())?;
+    for entry in snap.models.values() {
+        engine.ensure_model(&entry.meta)?;
+    }
+    *seen = snap.version;
+    Ok(engine)
 }
 
 /// Try to take one batch from any sibling queue, nearest-first.
@@ -518,10 +578,19 @@ mod tests {
     use super::*;
     use crate::coordinator::request::Request;
     use crate::datagen::{molecular_graph, MolConfig};
+    use crate::registry::ControlRequest;
+    use crate::runtime::Artifacts;
     use crate::util::rng::Rng;
 
+    fn open_registry(serve: &[&str]) -> Option<Arc<ModelRegistry>> {
+        let serve: Vec<String> = serve.iter().map(|s| s.to_string()).collect();
+        ModelRegistry::open(Artifacts::default_dir(), &serve)
+            .ok()
+            .map(Arc::new)
+    }
+
     fn pool_fixture(
-        artifacts: Artifacts,
+        registry: Arc<ModelRegistry>,
         lanes: usize,
     ) -> (
         Channel<Prepared>,
@@ -535,8 +604,7 @@ mod tests {
         let ready: Channel<Result<(), String>> = Channel::bounded(1);
         let metrics = Arc::new(Metrics::new());
         let handles = spawn_executor_pool(
-            Arc::new(artifacts),
-            vec!["gcn".into()],
+            registry,
             lanes,
             32,
             prepared.clone(),
@@ -551,12 +619,11 @@ mod tests {
 
     #[test]
     fn pool_serves_and_shuts_down() {
-        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
-            return;
-        };
         for lanes in [1usize, 3] {
-            let (prepared, responses, metrics, ready, handles) =
-                pool_fixture(artifacts.clone(), lanes);
+            let Some(registry) = open_registry(&["gcn"]) else {
+                return;
+            };
+            let (prepared, responses, metrics, ready, handles) = pool_fixture(registry, lanes);
             assert_eq!(ready.recv(), Some(Ok(())));
             let total = 7u64;
             for i in 0..total {
@@ -586,16 +653,21 @@ mod tests {
         let Ok(mut artifacts) = Artifacts::load(Artifacts::default_dir()) else {
             return;
         };
-        // Point one model at a bogus artifact.
+        // Point one model at a bogus artifact. The verified open would
+        // refuse this outright, which is exactly why the fixture goes
+        // through the unverified test constructor: the target here is
+        // the lane compile-failure protocol, not the deploy gate.
         artifacts.models[0].hlo_path = "/nonexistent.hlo.txt".into();
         let name = artifacts.models[0].name.clone();
+        let Ok(registry) = ModelRegistry::open_unverified(artifacts, &[name]) else {
+            return;
+        };
         let prepared: Channel<Prepared> = Channel::bounded(1);
         let responses: Channel<Response> = Channel::bounded(1);
         let ready: Channel<Result<(), String>> = Channel::bounded(1);
         let metrics = Arc::new(Metrics::new());
         let handles = spawn_executor_pool(
-            Arc::new(artifacts),
-            vec![name],
+            Arc::new(registry),
             2,
             8,
             prepared.clone(),
@@ -668,13 +740,13 @@ mod tests {
 
     #[test]
     fn lanes_steal_a_hot_models_backlog() {
-        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+        // One served model + 4 lanes: every batch's home is one lane,
+        // so progress on the other three comes only from stealing or
+        // overflow dispatch off the backlogged home lane.
+        let Some(registry) = open_registry(&["gcn"]) else {
             return;
         };
-        // One served model + 4 lanes: every batch's home is lane 0, so
-        // progress on lanes 1–3 comes only from stealing or overflow
-        // dispatch off the backlogged home lane.
-        let (prepared, responses, metrics, ready, handles) = pool_fixture(artifacts, 4);
+        let (prepared, responses, metrics, ready, handles) = pool_fixture(registry, 4);
         assert_eq!(ready.recv(), Some(Ok(())));
         let total = 48u64;
         for i in 0..total {
@@ -700,5 +772,48 @@ mod tests {
         // can also arrive via overflow dispatch, and the home lane may
         // even steal them back, so no tighter bound is race-free).
         assert!(stolen <= executed, "stolen {stolen} > executed {executed}");
+    }
+
+    /// The live-deploy drain path at pool level: serve a model that
+    /// was NOT in the boot set — the registry publishes a new version
+    /// mid-flight and the lanes must compile it on demand.
+    #[test]
+    fn lanes_pick_up_a_mid_flight_deploy() {
+        let Some(registry) = open_registry(&["gcn"]) else {
+            return;
+        };
+        let (prepared, responses, metrics, ready, handles) =
+            pool_fixture(Arc::clone(&registry), 2);
+        assert_eq!(ready.recv(), Some(Ok(())));
+        // Warm the pool on the boot model first.
+        let g = molecular_graph(&mut Rng::new(1), &MolConfig::molhiv());
+        prepared
+            .send(Prepared::new(Request::new(0, "gcn", g)))
+            .unwrap();
+        assert!(responses.recv().expect("boot response").is_ok());
+
+        let r = registry.apply(&ControlRequest::Load {
+            model: "gin".into(),
+            digest: None,
+        });
+        assert!(r.ok, "{}", r.message);
+        for i in 1..=4u64 {
+            let g = molecular_graph(&mut Rng::new(10 + i), &MolConfig::molhiv());
+            prepared
+                .send(Prepared::new(Request::new(i, "gin", g)))
+                .unwrap();
+        }
+        prepared.close();
+        let mut got = 0;
+        while got < 4 {
+            let resp = responses.recv().expect("deployed-model response");
+            assert!(resp.is_ok(), "{:?}", resp.output);
+            assert_eq!(resp.model, "gin");
+            got += 1;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(metrics.total_completed(), 5);
     }
 }

@@ -22,6 +22,13 @@
 //! same-model dispatch batches into block-diagonal fused interpreter
 //! passes (the FlowGNN many-small-graphs amortization), bit-identical
 //! to per-request execution (`rust/tests/fused_equivalence.rs`).
+//!
+//! The model set is **live**: the server opens a
+//! [`ModelRegistry`] over the artifact directory and every pipeline
+//! stage re-resolves its [`crate::registry::Snapshot`] — control ops
+//! ([`Server::control`]) load, unload, and roll back models with
+//! zero dropped and zero bit-changed in-flight requests
+//! (`rust/tests/registry_e2e.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -31,6 +38,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::graph::CooGraph;
+use crate::registry::{ControlReply, ControlRequest, ModelRegistry};
 use crate::runtime::Artifacts;
 use crate::util::pool::Channel;
 
@@ -42,10 +50,17 @@ use super::router::{Route, Router};
 use super::scheduler::spawn_executor_pool;
 
 /// Server construction parameters.
+///
+/// Construct through [`ServerConfig::builder`], which validates the
+/// knobs at build time. The `Default` + struct-literal path still
+/// works for compatibility (every field stays public), but it is the
+/// deprecated surface: it can express configurations `Server::start`
+/// will only reject at runtime.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub artifact_dir: std::path::PathBuf,
-    /// Models to serve (empty = everything in the manifest).
+    /// Models to serve at boot (empty = everything in the manifest).
+    /// The set is live after start: see [`Server::control`].
     pub models: Vec<String>,
     /// Prep worker threads (routing, validation, eigensolves).
     pub prep_workers: usize,
@@ -65,6 +80,15 @@ pub struct ServerConfig {
     pub fuse_max_graphs: usize,
 }
 
+impl ServerConfig {
+    /// Start building a validated configuration.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder {
+            cfg: ServerConfig::default(),
+        }
+    }
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -80,35 +104,128 @@ impl Default for ServerConfig {
     }
 }
 
+/// Validating builder for [`ServerConfig`] — the supported way to
+/// construct one. Setters take `self` by value and chain; `build`
+/// rejects degenerate knob combinations (zero workers/lanes/capacity)
+/// that the raw struct path would let through to a runtime clamp or a
+/// late `Server::start` failure.
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn artifact_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.artifact_dir = dir.into();
+        self
+    }
+
+    /// Replace the boot serving set (empty = everything cataloged).
+    pub fn models<I, S>(mut self, models: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.cfg.models = models.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Add one model to the boot serving set.
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.models.push(model.into());
+        self
+    }
+
+    pub fn prep_workers(mut self, n: usize) -> Self {
+        self.cfg.prep_workers = n;
+        self
+    }
+
+    pub fn executor_lanes(mut self, n: usize) -> Self {
+        self.cfg.executor_lanes = n;
+        self
+    }
+
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.cfg.queue_capacity = n;
+        self
+    }
+
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.cfg.admission = policy;
+        self
+    }
+
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        self.cfg.batch = batch;
+        self
+    }
+
+    pub fn fuse_max_graphs(mut self, n: usize) -> Self {
+        self.cfg.fuse_max_graphs = n;
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<ServerConfig> {
+        let cfg = self.cfg;
+        if cfg.prep_workers == 0 {
+            bail!("server config: prep_workers must be at least 1");
+        }
+        if cfg.executor_lanes == 0 {
+            bail!("server config: executor_lanes must be at least 1");
+        }
+        if cfg.queue_capacity == 0 {
+            bail!("server config: queue_capacity must be at least 1");
+        }
+        if cfg.batch.max_batch == 0 {
+            bail!("server config: batch.max_batch must be at least 1");
+        }
+        if cfg.fuse_max_graphs == 0 {
+            bail!("server config: fuse_max_graphs must be at least 1 (1 disables fusion)");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for m in &cfg.models {
+            if m.is_empty() {
+                bail!("server config: empty model name in serving set");
+            }
+            if !seen.insert(m.as_str()) {
+                bail!("server config: model {m:?} listed twice in serving set");
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Convenience: validate and start the server in one call.
+    pub fn start(self) -> Result<Server> {
+        Server::start(self.build()?)
+    }
+}
+
 /// A running server instance.
 pub struct Server {
     ingest: Channel<Request>,
     prepared: Channel<Prepared>,
     responses: Channel<Response>,
     metrics: Arc<Metrics>,
+    registry: Arc<ModelRegistry>,
     prep_handles: Vec<JoinHandle<()>>,
     exec_handles: Vec<JoinHandle<()>>,
     admission: AdmissionPolicy,
     next_id: AtomicU64,
-    served: Vec<String>,
     lanes: usize,
 }
 
 impl Server {
     /// Start all stages; returns once every executor lane has compiled
-    /// every served artifact (so first-request latency is steady-state).
+    /// every boot-served artifact (so first-request latency is
+    /// steady-state).
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let artifacts = Arc::new(
-            Artifacts::load(&cfg.artifact_dir).context("loading artifacts for server")?,
+        let registry = Arc::new(
+            ModelRegistry::open(cfg.artifact_dir.clone(), &cfg.models)
+                .context("opening model registry for server")?,
         );
-        let serve_refs: Vec<&str> =
-            cfg.models.iter().map(|s| s.as_str()).collect();
-        let router = Arc::new(Router::new(&artifacts, &serve_refs));
-        let served: Vec<String> = router
-            .served_models()
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let served = registry.snapshot().model_names();
         if served.is_empty() {
             bail!("no models to serve");
         }
@@ -118,17 +235,20 @@ impl Server {
         let responses: Channel<Response> = Channel::bounded(cfg.queue_capacity.max(1024));
         let metrics = Arc::new(Metrics::new());
         // Pre-register served models so lane-parallel recording never
-        // takes the registry write lock on the hot path.
+        // takes the registry write lock on the hot path. (Models
+        // deployed live register in `Server::control`.)
         for m in &served {
             metrics.register_model(m);
         }
 
-        // Prep workers: route + validate + eigensolve.
+        // Prep workers: route + validate + eigensolve — each request
+        // against the registry snapshot current at its arrival, so the
+        // route table follows deploys without a restart.
         let mut prep_handles = Vec::new();
         for w in 0..cfg.prep_workers.max(1) {
             let rx = ingest.clone();
             let tx = prepared.clone();
-            let router = Arc::clone(&router);
+            let registry = Arc::clone(&registry);
             let metrics = Arc::clone(&metrics);
             let resp_tx = responses.clone();
             prep_handles.push(
@@ -148,9 +268,18 @@ impl Server {
                                 ));
                                 continue;
                             }
-                            match router.route(&req) {
+                            // One snapshot for both the routing verdict
+                            // and the meta lookup: a concurrent unload
+                            // cannot admit a request and then lose its
+                            // meta halfway through prep.
+                            let snapshot = registry.snapshot();
+                            match Router::route_in(&snapshot, &req) {
                                 Route::Accept(model) => {
-                                    let meta = router.meta(&model).expect("routed");
+                                    let Some(meta) = snapshot.meta(&model) else {
+                                        // Unreachable: route_in resolved
+                                        // the meta from this snapshot.
+                                        continue;
+                                    };
                                     let n_max = meta.n_max;
                                     let needs_eig = meta.needs_eig();
                                     // Single ingest point: the raw COO
@@ -185,12 +314,12 @@ impl Server {
             );
         }
 
-        // Executor pool: dispatcher + N lanes, each with its own engine.
+        // Executor pool: dispatcher + N lanes, each with its own engine
+        // synced from the live registry.
         let lanes = cfg.executor_lanes.max(1);
         let ready: Channel<std::result::Result<(), String>> = Channel::bounded(1);
         let exec_handles = spawn_executor_pool(
-            Arc::clone(&artifacts),
-            served.clone(),
+            Arc::clone(&registry),
             lanes,
             cfg.queue_capacity,
             prepared.clone(),
@@ -224,17 +353,42 @@ impl Server {
             prepared,
             responses,
             metrics,
+            registry,
             prep_handles,
             exec_handles,
             admission: cfg.admission,
             next_id: AtomicU64::new(0),
-            served,
             lanes,
         })
     }
 
-    pub fn served_models(&self) -> &[String] {
-        &self.served
+    /// The models currently admitting traffic. Live: reflects every
+    /// control op applied so far, not the boot set.
+    pub fn served_models(&self) -> Vec<String> {
+        self.registry.snapshot().model_names()
+    }
+
+    /// The live model registry this server routes against.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Execute one control-plane operation (`LOAD_MODEL`,
+    /// `UNLOAD_MODEL`, `ROLLBACK`, `LIST_MODELS`) against the live
+    /// registry. Synchronous and atomic with respect to the data
+    /// plane: on success the new snapshot is published before this
+    /// returns, and requests already admitted keep their routing
+    /// verdicts and outputs (see `rust/tests/registry_e2e.rs`).
+    pub fn control(&self, req: &ControlRequest) -> ControlReply {
+        let reply = self.registry.apply(req);
+        if reply.ok {
+            if let ControlRequest::Load { model, .. } = req {
+                // Keep metrics recording lock-free on the hot path for
+                // the new arrival, same as boot-served models.
+                self.metrics.register_model(model);
+            }
+        }
+        reply
     }
 
     /// Number of executor lanes this server runs.
@@ -339,13 +493,39 @@ mod tests {
     }
 
     fn start_with_lanes(models: &[&str], lanes: usize) -> Option<Server> {
-        let cfg = ServerConfig {
-            models: models.iter().map(|s| s.to_string()).collect(),
-            prep_workers: 2,
-            executor_lanes: lanes,
-            ..ServerConfig::default()
-        };
-        Server::start(cfg).ok()
+        ServerConfig::builder()
+            .models(models.iter().copied())
+            .prep_workers(2)
+            .executor_lanes(lanes)
+            .start()
+            .ok()
+    }
+
+    #[test]
+    fn builder_validates_knobs() {
+        assert!(ServerConfig::builder().build().is_ok());
+        assert!(ServerConfig::builder().executor_lanes(0).build().is_err());
+        assert!(ServerConfig::builder().prep_workers(0).build().is_err());
+        assert!(ServerConfig::builder().queue_capacity(0).build().is_err());
+        assert!(ServerConfig::builder().fuse_max_graphs(0).build().is_err());
+        assert!(ServerConfig::builder()
+            .model("gcn")
+            .model("gcn")
+            .build()
+            .is_err());
+        assert!(ServerConfig::builder().model("").build().is_err());
+        let cfg = ServerConfig::builder()
+            .models(["gcn", "gin"])
+            .executor_lanes(4)
+            .queue_capacity(64)
+            .admission(AdmissionPolicy::Reject)
+            .fuse_max_graphs(1)
+            .build()
+            .expect("valid config");
+        assert_eq!(cfg.models, vec!["gcn", "gin"]);
+        assert_eq!(cfg.executor_lanes, 4);
+        assert_eq!(cfg.queue_capacity, 64);
+        assert_eq!(cfg.fuse_max_graphs, 1);
     }
 
     #[test]
@@ -466,6 +646,40 @@ mod tests {
         server.submit("dgn", g);
         let r = responses.recv().unwrap();
         assert!(r.is_ok(), "{:?}", r.output);
+        server.shutdown();
+    }
+
+    #[test]
+    fn control_ops_reshape_the_serving_set_live() {
+        let Some(server) = start(&["gcn"]) else { return };
+        let responses = server.responses();
+        assert_eq!(server.served_models(), vec!["gcn"]);
+
+        // A request for an unserved model rejects...
+        let g = molecular_graph(&mut Rng::new(3), &MolConfig::molhiv());
+        server.submit("gin", g.clone());
+        assert!(!responses.recv().expect("reject").is_ok());
+
+        // ...until a LOAD_MODEL makes it live, with no restart.
+        let r = server.control(&ControlRequest::Load {
+            model: "gin".into(),
+            digest: None,
+        });
+        assert!(r.ok, "{}", r.message);
+        assert_eq!(server.served_models(), vec!["gcn", "gin"]);
+        server.submit("gin", g.clone());
+        let ok = responses.recv().expect("served");
+        assert!(ok.is_ok(), "{:?}", ok.output);
+        assert_eq!(ok.model, "gin");
+
+        // UNLOAD_MODEL stops admission again.
+        let r = server.control(&ControlRequest::Unload {
+            model: "gin".into(),
+        });
+        assert!(r.ok, "{}", r.message);
+        server.submit("gin", g);
+        assert!(!responses.recv().expect("reject again").is_ok());
+
         server.shutdown();
     }
 }

@@ -8,10 +8,12 @@
 //!   streaming inference server over raw COO graphs with zero
 //!   preprocessing ([`coordinator`], ingesting through
 //!   [`graph::GraphBatch`]), a wire-level TCP serving front-end with
-//!   an open-loop load generator ([`net`]), a static plan analyzer
-//!   gating every lowering ([`analysis`]), a cycle-level simulator of the GenGNN
-//!   microarchitecture ([`sim`]), an HLS-style resource estimator
-//!   ([`resources`]), and analytic CPU/GPU baselines ([`baselines`]).
+//!   an open-loop load generator ([`net`]), a content-addressed model
+//!   registry with live deploys ([`registry`]), a static plan
+//!   analyzer gating every lowering ([`analysis`]), a cycle-level
+//!   simulator of the GenGNN microarchitecture ([`sim`]), an
+//!   HLS-style resource estimator ([`resources`]), and analytic
+//!   CPU/GPU baselines ([`baselines`]).
 //! * **Layer 2** — JAX forward passes of the representative GNNs
 //!   (GCN, GIN, GIN+VN, GAT, PNA, DGN, plus the SGC/SAGE extension
 //!   models), AOT-lowered to HLO text at build time
@@ -33,6 +35,7 @@ pub mod dse;
 pub mod graph;
 pub mod models;
 pub mod net;
+pub mod registry;
 pub mod report;
 pub mod resources;
 pub mod runtime;
@@ -41,11 +44,12 @@ pub mod util;
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::coordinator::{Server, ServerConfig};
+    pub use crate::coordinator::{Server, ServerConfig, ServerConfigBuilder};
     pub use crate::datagen::{molecular_graph, MolConfig};
-    pub use crate::net::{NetClient, NetServer, NetServerConfig};
+    pub use crate::net::{NetClient, NetServer, NetServerConfig, RequestOptions};
     pub use crate::graph::{CooGraph, Csc, Csr, DenseGraph, FusedBatch, GraphBatch};
     pub use crate::models::{GnnKind, ModelConfig};
+    pub use crate::registry::{ControlReply, ControlRequest, ModelRegistry, Snapshot};
     pub use crate::runtime::{Artifacts, Engine};
     pub use crate::sim::{Accelerator, PipelineMode};
     pub use crate::util::rng::Rng;

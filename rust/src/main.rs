@@ -14,6 +14,15 @@
 //!                       front-end: --addr, --rps, --count, model mix,
 //!                       --ttl-ms / --priority-mix QoS profile;
 //!                       reports p50/p95/p99 + throughput
+//! gengnn deploy         drive the v3 control plane of a running
+//!                       server: `deploy <model> [--digest D]` makes a
+//!                       model live (digest pins the exact catalog
+//!                       bytes), `--unload MODEL` retires one,
+//!                       `--rollback N` restores version N's serving
+//!                       set (0 = previous)
+//! gengnn models         list a running server's catalog, live set,
+//!                       and version history (--json for the raw
+//!                       registry document)
 //! gengnn infer          run one model on one generated graph
 //! gengnn plan           dump the lowered stage IR of a manifest model
 //!                       (stage names, shapes, parameter counts;
@@ -38,7 +47,7 @@ use anyhow::{bail, Result};
 use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
 use gengnn::datagen::{molecular, MolConfig};
 use gengnn::models::ModelConfig;
-use gengnn::net::{loadgen, LoadGenConfig, NetServer, NetServerConfig};
+use gengnn::net::{loadgen, LoadGenConfig, NetClient, NetServer, NetServerConfig};
 use gengnn::report::{fig7, fig8, fig9, table4, table5};
 use gengnn::runtime::{Artifacts, Engine, Golden};
 use gengnn::sim::{Accelerator, PipelineMode};
@@ -63,9 +72,9 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gengnn <serve|loadgen|infer|plan|lint-plan|simulate|resources|dse|\
-         report-fig7|report-fig8|report-fig9|report-table4|report-table5|selftest> \
-         [--flags]"
+        "usage: gengnn <serve|loadgen|deploy|models|infer|plan|lint-plan|simulate|\
+         resources|dse|report-fig7|report-fig8|report-fig9|report-table4|\
+         report-table5|selftest> [--flags]"
     );
 }
 
@@ -73,6 +82,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
         "loadgen" => cmd_loadgen(Args::parse(rest, &[])?),
+        "deploy" => cmd_deploy(Args::parse(rest, &[])?),
+        "models" => cmd_models(Args::parse(rest, &["json"])?),
         "infer" => cmd_infer(Args::parse(rest, &[])?),
         "plan" => cmd_plan(Args::parse(rest, &["json"])?),
         "lint-plan" => cmd_lint_plan(Args::parse(rest, &["json", "all"])?),
@@ -106,25 +117,24 @@ fn cmd_serve(a: Args) -> Result<()> {
     let count = a.usize_or("count", 500)?;
     let seed = a.u64_or("seed", 7)?;
     let lanes = a.usize_or("lanes", 2)?;
-    let cfg = ServerConfig {
-        models: models.clone(),
-        prep_workers: a.usize_or("prep-workers", 2)?,
-        executor_lanes: lanes,
-        queue_capacity: a.usize_or("queue", 256)?,
-        admission: if a.has("reject") {
+    let cfg = ServerConfig::builder()
+        .models(models.iter().cloned())
+        .prep_workers(a.usize_or("prep-workers", 2)?)
+        .executor_lanes(lanes)
+        .queue_capacity(a.usize_or("queue", 256)?)
+        .admission(if a.has("reject") {
             AdmissionPolicy::Reject
         } else {
             AdmissionPolicy::Block
-        },
-        batch: BatchPolicy {
+        })
+        .batch(BatchPolicy {
             max_batch: a.usize_or("max-batch", 8)?,
             sticky: true,
-        },
+        })
         // Fused micro-batching: lanes merge up to N same-model requests
         // into one block-diagonal interpreter pass (1 disables).
-        fuse_max_graphs: a.usize_or("fuse", 8)?,
-        ..ServerConfig::default()
-    };
+        .fuse_max_graphs(a.usize_or("fuse", 8)?)
+        .build()?;
     // Wire-serving mode: expose the protocol over TCP instead of
     // streaming synthetic graphs in-process.
     if let Some(listen) = a.str_opt("listen") {
@@ -259,6 +269,84 @@ fn cmd_loadgen(a: Args) -> Result<()> {
         );
         std::fs::write(&path, json)?;
         eprintln!("[loadgen] wrote bench snapshot to {path:?}");
+    }
+    Ok(())
+}
+
+/// `gengnn deploy` — the operator's side of the v3 control plane:
+/// `deploy <model> [--digest D]` loads a model into the live serving
+/// set (the server byte-verifies blobs and re-runs the plan analyzer
+/// before the cutover; a pinned digest additionally insists on the
+/// exact catalog bytes the operator audited), `--unload MODEL` retires
+/// one, `--rollback N` restores version N's serving set (0 = the
+/// previous set). Exits nonzero on a rejected op, with the server's
+/// reason on stderr.
+fn cmd_deploy(a: Args) -> Result<()> {
+    let addr = a.str_or("addr", "127.0.0.1:7447").to_string();
+    let client = NetClient::connect(&addr, 1)?;
+    let resp = if let Some(v) = a.str_opt("rollback") {
+        let version: u64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--rollback takes a registry version, got {v:?}"))?;
+        client.rollback(version)?
+    } else if let Some(model) = a.str_opt("unload") {
+        client.undeploy(model)?
+    } else {
+        let model = match (a.positional.first(), a.str_opt("model")) {
+            (Some(p), _) => p.clone(),
+            (None, Some(m)) => m.to_string(),
+            (None, None) => bail!(
+                "usage: gengnn deploy <model> [--digest D] | --unload MODEL | --rollback N \
+                 [--addr HOST:PORT]"
+            ),
+        };
+        client.deploy(&model, a.str_opt("digest"))?
+    };
+    if resp.is_ok() {
+        println!(
+            "{} ok: registry at version {}{}",
+            resp.op.as_str(),
+            resp.version,
+            if resp.message.is_empty() {
+                String::new()
+            } else {
+                format!(" ({})", resp.message)
+            }
+        );
+        Ok(())
+    } else {
+        bail!("{} rejected: {}", resp.op.as_str(), resp.message);
+    }
+}
+
+/// `gengnn models` — ask a running server for its catalog, live
+/// serving set, and version history (`LIST_MODELS`). `--json` prints
+/// the raw registry document for scripting.
+fn cmd_models(a: Args) -> Result<()> {
+    let addr = a.str_or("addr", "127.0.0.1:7447").to_string();
+    let client = NetClient::connect(&addr, 1)?;
+    let resp = client.models()?;
+    if !resp.is_ok() {
+        bail!("LIST_MODELS rejected: {}", resp.message);
+    }
+    if a.has("json") {
+        println!("{}", resp.message);
+        return Ok(());
+    }
+    let doc = gengnn::util::json::Json::parse(&resp.message)
+        .map_err(|e| anyhow::anyhow!("unparseable registry document: {e}"))?;
+    println!("registry version {}", resp.version);
+    if let Ok(models) = doc.get("models").and_then(|m| m.as_arr()) {
+        for m in models {
+            let name = m.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+            let live = m.get("live").and_then(|v| v.as_bool()).unwrap_or(false);
+            let digest = m.get("digest").and_then(|v| v.as_str()).unwrap_or("");
+            println!(
+                "  {name:<10} {} {}",
+                if live { "live  " } else { "staged" },
+                &digest[..digest.len().min(12)]
+            );
+        }
     }
     Ok(())
 }

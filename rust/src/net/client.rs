@@ -1,14 +1,20 @@
 //! Blocking wire client with connection pooling.
 //!
-//! [`NetClient`] is the programmatic counterpart of the TCP front-end:
-//! `infer(model, graph)` encodes a request frame, sends it on a pooled
-//! connection, and blocks for the matching response. Connections are
-//! checked out per call; up to `max_pool` idle sockets are retained
-//! between calls, and concurrent callers beyond that dial transient
-//! connections that are torn down on return — the pool bounds idle
-//! state, not peak concurrency. Each socket carries one request at a
-//! time (pipelined streaming is the load generator's business, see
-//! [`super::loadgen`]).
+//! [`NetClient`] is the programmatic counterpart of the TCP front-end.
+//! Every data-plane entry point funnels through one core,
+//! [`NetClient::call`], taking the request knobs as a
+//! [`RequestOptions`] struct — `infer`/`infer_with_qos` remain as thin
+//! wrappers over it. The control plane ([`NetClient::deploy`],
+//! [`NetClient::undeploy`], [`NetClient::rollback`],
+//! [`NetClient::models`]) speaks v3 control frames to the server's
+//! live model registry over the same pooled connections.
+//!
+//! Connections are checked out per call; up to `max_pool` idle sockets
+//! are retained between calls, and concurrent callers beyond that dial
+//! transient connections that are torn down on return — the pool
+//! bounds idle state, not peak concurrency. Each socket carries one
+//! request at a time (pipelined streaming is the load generator's
+//! business, see [`super::loadgen`]).
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
@@ -18,10 +24,43 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::Priority;
 use crate::graph::CooGraph;
 
-use super::proto::{self, WireFrame, WireQos, WireResponse};
+use super::proto::{self, Op, WireControl, WireControlResp, WireFrame, WireQos, WireResponse};
 use super::server::dial;
+
+/// Per-request knobs for [`NetClient::call`], so QoS travels as one
+/// named struct instead of positional arguments. `Default` is exactly
+/// the v1 wire semantics: no TTL, normal priority.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestOptions {
+    /// Time-to-live in milliseconds from submission; 0 = no deadline.
+    /// Past the TTL the server may shed the request (`Expired`).
+    pub ttl_ms: u32,
+    /// Dispatch priority class.
+    pub priority: Priority,
+}
+
+impl RequestOptions {
+    pub fn new(ttl_ms: u32, priority: Priority) -> RequestOptions {
+        RequestOptions { ttl_ms, priority }
+    }
+
+    /// The wire QoS block this encodes to.
+    pub fn qos(&self) -> WireQos {
+        WireQos::new(self.ttl_ms, self.priority)
+    }
+}
+
+impl From<WireQos> for RequestOptions {
+    fn from(qos: WireQos) -> RequestOptions {
+        RequestOptions {
+            ttl_ms: qos.ttl_ms,
+            priority: qos.priority,
+        }
+    }
+}
 
 /// One pooled connection: the write half and a buffered read half over
 /// a clone of the same socket.
@@ -43,11 +82,11 @@ impl PooledConn {
     }
 }
 
-/// Default per-response wait before [`NetClient::infer`] gives up on a
+/// Default per-response wait before [`NetClient::call`] gives up on a
 /// silent server.
 const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// Blocking inference client over the wire protocol.
+/// Blocking inference + control client over the wire protocol.
 pub struct NetClient {
     addr: String,
     pool: Mutex<Vec<PooledConn>>,
@@ -82,36 +121,92 @@ impl NetClient {
         })
     }
 
-    /// Run one inference over the wire; blocks for the response.
+    /// Run one inference over the wire; blocks for the response. This
+    /// is the single data-plane core — every other inference entry
+    /// point wraps it.
     ///
     /// `Rejected` / `Error` / `BadRequest` wire statuses are returned
     /// as an `Ok(WireResponse)` — they are protocol-level answers, not
     /// transport failures — so callers can distinguish shed load from
     /// a dead server.
-    pub fn infer(&self, model: &str, graph: &CooGraph) -> Result<WireResponse> {
-        self.infer_with_qos(model, graph, WireQos::default())
+    pub fn call(
+        &self,
+        model: &str,
+        graph: &CooGraph,
+        opts: &RequestOptions,
+    ) -> Result<WireResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = proto::encode_request_parts(id, model, opts.qos(), graph)?;
+        self.with_conn(|conn| Self::exchange(conn, &frame, id))
     }
 
-    /// [`NetClient::infer`] with explicit QoS: a TTL after which the
-    /// server may shed the request (answered `Expired`) and a priority
-    /// class for its dispatch queue. The default QoS (no TTL, normal
-    /// priority) is exactly what a v1 frame decodes to.
+    /// [`NetClient::call`] with default options (no TTL, normal
+    /// priority — exactly what a v1 frame decodes to).
+    pub fn infer(&self, model: &str, graph: &CooGraph) -> Result<WireResponse> {
+        self.call(model, graph, &RequestOptions::default())
+    }
+
+    /// [`NetClient::call`] with QoS given as the wire block (legacy
+    /// surface; prefer [`RequestOptions`]).
     pub fn infer_with_qos(
         &self,
         model: &str,
         graph: &CooGraph,
         qos: WireQos,
     ) -> Result<WireResponse> {
+        self.call(model, graph, &RequestOptions::from(qos))
+    }
+
+    /// Issue one control-plane op; blocks for the control response.
+    /// A rejected op (unknown model, digest mismatch, analyzer
+    /// refusal) comes back as an `Ok` reply whose
+    /// [`WireControlResp::is_ok`] is false — inspect `message`.
+    pub fn control(&self, op: Op, model: &str, digest: &str, version: u64) -> Result<WireControlResp> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = proto::encode_request_parts(id, model, qos, graph)?;
-        // Checkout (or dial) a connection. A transport error tears the
-        // connection down instead of returning it, so one bad socket
-        // cannot poison later calls.
+        let frame = proto::encode_control(&WireControl {
+            id,
+            op,
+            model: model.to_string(),
+            digest: digest.to_string(),
+            version,
+        })?;
+        self.with_conn(|conn| Self::exchange_control(conn, &frame, id))
+    }
+
+    /// `LOAD_MODEL`: make `model` live on the server. `digest`, when
+    /// given, pins the exact catalog digest the caller audited.
+    pub fn deploy(&self, model: &str, digest: Option<&str>) -> Result<WireControlResp> {
+        self.control(Op::LoadModel, model, digest.unwrap_or(""), 0)
+    }
+
+    /// `UNLOAD_MODEL`: remove `model` from admission (in-flight work
+    /// still completes server-side).
+    pub fn undeploy(&self, model: &str) -> Result<WireControlResp> {
+        self.control(Op::UnloadModel, model, "", 0)
+    }
+
+    /// `ROLLBACK`: restore the serving set of registry `version`
+    /// (0 = the previous serving set).
+    pub fn rollback(&self, version: u64) -> Result<WireControlResp> {
+        self.control(Op::Rollback, "", "", version)
+    }
+
+    /// `LIST_MODELS`: the server's catalog + live set + history as a
+    /// JSON document in the reply message.
+    pub fn models(&self) -> Result<WireControlResp> {
+        self.control(Op::ListModels, "", "", 0)
+    }
+
+    /// Check out a pooled connection (or dial), run `f`, and return
+    /// the connection to the pool on success. A transport error tears
+    /// the connection down instead of returning it, so one bad socket
+    /// cannot poison later calls.
+    fn with_conn<T>(&self, f: impl FnOnce(&mut PooledConn) -> Result<T>) -> Result<T> {
         let mut conn = match crate::util::sync::lock(&self.pool).pop() {
             Some(c) => c,
             None => PooledConn::dial(&self.addr, self.timeout)?,
         };
-        let resp = Self::exchange(&mut conn, &frame, id);
+        let resp = f(&mut conn);
         if resp.is_ok() {
             let mut pool = crate::util::sync::lock(&self.pool);
             if pool.len() < self.max_pool {
@@ -125,18 +220,42 @@ impl NetClient {
         conn.tx.write_all(frame).context("sending request frame")?;
         conn.tx.flush().context("flushing request frame")?;
         loop {
-            let payload = match proto::read_frame(&mut conn.rx)? {
-                Some(p) => p,
-                None => bail!("server closed the connection before responding"),
-            };
-            match proto::decode_frame(&payload)? {
+            match Self::read_reply(conn)? {
                 WireFrame::Response(resp) if resp.id == want_id => return Ok(resp),
-                // A stale response (e.g. from an aborted earlier call on
-                // this socket) is skipped, not an error.
-                WireFrame::Response(_) => continue,
-                WireFrame::Request(_) => bail!("server sent a request frame"),
+                // Stale frames (e.g. from an aborted earlier call on
+                // this socket) are skipped, not an error.
+                WireFrame::Response(_) | WireFrame::ControlResp(_) => continue,
+                WireFrame::Request(_) | WireFrame::Control(_) => {
+                    bail!("server sent a request frame")
+                }
             }
         }
+    }
+
+    fn exchange_control(
+        conn: &mut PooledConn,
+        frame: &[u8],
+        want_id: u64,
+    ) -> Result<WireControlResp> {
+        conn.tx.write_all(frame).context("sending control frame")?;
+        conn.tx.flush().context("flushing control frame")?;
+        loop {
+            match Self::read_reply(conn)? {
+                WireFrame::ControlResp(resp) if resp.id == want_id => return Ok(resp),
+                WireFrame::ControlResp(_) | WireFrame::Response(_) => continue,
+                WireFrame::Request(_) | WireFrame::Control(_) => {
+                    bail!("server sent a request frame")
+                }
+            }
+        }
+    }
+
+    fn read_reply(conn: &mut PooledConn) -> Result<WireFrame> {
+        let payload = match proto::read_frame(&mut conn.rx)? {
+            Some(p) => p,
+            None => bail!("server closed the connection before responding"),
+        };
+        proto::decode_frame(&payload)
     }
 
     /// Connections currently parked in the pool.

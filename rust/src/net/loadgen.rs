@@ -38,7 +38,8 @@ use crate::util::stats::{fmt_secs, LatencyHistogram};
 
 use crate::coordinator::Priority;
 
-use super::proto::{self, WireFrame, WireQos, WireStatus};
+use super::client::RequestOptions;
+use super::proto::{self, WireFrame, WireStatus};
 use super::server::dial;
 
 /// Load generator parameters.
@@ -339,9 +340,13 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                         }
                         let model = &cfg.models[k % cfg.models.len()];
                         let graph = &graphs[(k / cfg.models.len()) % graphs.len()];
-                        let qos = WireQos::new(cfg.ttl_ms, pattern[k % pattern.len()]);
+                        // Same per-request options struct as the
+                        // client's `call` path, so loadgen and client
+                        // traffic stamp QoS identically.
+                        let opts =
+                            RequestOptions::new(cfg.ttl_ms, pattern[k % pattern.len()]);
                         let Ok(frame) =
-                            proto::encode_request_parts(k as u64, model, qos, graph)
+                            proto::encode_request_parts(k as u64, model, opts.qos(), graph)
                         else {
                             continue;
                         };

@@ -15,8 +15,9 @@
 //! measure-everything harness around them:
 //!
 //! * [`proto`]   — length-prefixed binary frames (version byte,
-//!   FNV-1a checksum, raw COO graphs, TTL/priority QoS in v2 request
-//!   frames, bit-exact f32 outputs)
+//!   FNV-1a checksum, raw COO graphs, TTL/priority QoS in v2+ request
+//!   frames, bit-exact f32 outputs, and — in v3 — the typed control
+//!   [`Op`] family driving the live model registry)
 //! * [`reactor`] — the nonblocking event-loop pool: a fixed set of
 //!   `polly`-driven reactor threads owning every connection's frame
 //!   reassembly, write draining, and admission state machine
@@ -42,9 +43,10 @@ pub mod proto;
 pub mod reactor;
 pub mod server;
 
-pub use client::NetClient;
+pub use client::{NetClient, RequestOptions};
 pub use loadgen::{LoadGenConfig, LoadGenReport};
 pub use proto::{
-    WireFrame, WireQos, WireRequest, WireResponse, WireStatus, PROTO_V1, PROTO_VERSION,
+    Op, WireControl, WireControlResp, WireFrame, WireQos, WireRequest, WireResponse, WireStatus,
+    PROTO_V1, PROTO_V3, PROTO_VERSION,
 };
 pub use server::{NetServer, NetServerConfig};

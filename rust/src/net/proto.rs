@@ -7,12 +7,13 @@
 //! │ u32 len      │ payload (len bytes)                             │
 //! └──────────────┴─────────────────────────────────────────────────┘
 //! payload:
-//!   [0]      version byte (2 = current, 1 = legacy still decoded)
-//!   [1]      kind byte (1 = request, 2 = response)
+//!   [0]      version byte (3 = current; 2 and 1 still decoded)
+//!   [1]      kind byte (1 = request, 2 = response,
+//!            3 = control, 4 = control response — v3 frames only)
 //!   [2..6]   u32 FNV-1a checksum of the body
 //!   [6..]    body
 //!
-//! request body (v2):
+//! request body (v2 and v3):
 //!   u64 id · u32 ttl_ms · u8 priority · u16 model_len · model (utf-8)
 //!   u32 n · u16 f_node · u16 f_edge · u32 num_edges
 //!   edges   (num_edges × [u32 src, u32 dst])
@@ -22,17 +23,30 @@
 //! request body (v1): identical minus the `ttl_ms`/`priority` fields
 //! (decodes with default QoS: no deadline, normal priority).
 //!
-//! response body (identical in v1 and v2):
+//! response body (identical in every version):
 //!   u64 id · u16 model_len · model (utf-8) · u8 status
 //!   status Ok:         u32 out_len · output (f32 × out_len)
 //!   status otherwise:  u32 msg_len · message (utf-8)
+//!
+//! control body (v3 only; the typed [`Op`] enum):
+//!   u64 id · u8 op · u16 model_len · model (utf-8)
+//!   u16 digest_len · digest (utf-8, lowercase hex; may be empty)
+//!   u64 version_arg (rollback target; 0 otherwise)
+//!
+//! control response body (v3 only):
+//!   u64 id · u8 op · u8 status · u64 version
+//!   u32 msg_len · message (utf-8)
 //! ```
 //!
 //! Version negotiation is per-frame and server-side only: the server
-//! decodes both versions (the QoS fields default for v1) and always
-//! answers with the response layout, which did not change — so a v1
-//! client never needs to know v2 exists. Unknown versions are decode
-//! errors answered as `BadRequest`.
+//! decodes every version (the QoS fields default for v1) and always
+//! answers each frame stamped with *that frame's* version; the
+//! response layout never changed, so a v1 client never needs to know
+//! v2 or v3 exist. Unknown versions are decode errors answered as
+//! `BadRequest`. What v3 adds is not a new inference layout but a new
+//! *frame family*: control ops ([`Op`]: `LOAD_MODEL` / `UNLOAD_MODEL`
+//! / `ROLLBACK` / `LIST_MODELS`) against the live model registry —
+//! before v3, every frame was implicitly an inference.
 //!
 //! Graphs cross the wire as raw COO — exactly the zero-preprocessing
 //! input contract of the in-process path (paper §3.1), so the TCP
@@ -51,15 +65,27 @@ use anyhow::{bail, Result};
 use crate::coordinator::Priority;
 use crate::graph::CooGraph;
 
-/// Protocol version stamped on every encoded frame.
+/// The QoS protocol version; inference frames are still encoded at
+/// this version by default (v3 changed nothing about inference).
 pub const PROTO_VERSION: u8 = 2;
 
 /// The legacy pre-QoS version; still accepted by the decoder.
 pub const PROTO_V1: u8 = 1;
 
+/// The control-plane version: inference bodies identical to v2, plus
+/// the control frame kinds carrying registry [`Op`]s.
+pub const PROTO_V3: u8 = 3;
+
 /// Frame kind bytes.
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
+const KIND_CONTROL: u8 = 3;
+const KIND_CONTROL_RESP: u8 = 4;
+
+/// Is `version` one the decoder understands?
+fn known_version(version: u8) -> bool {
+    version == PROTO_V1 || version == PROTO_VERSION || version == PROTO_V3
+}
 
 /// Refuse frames above this payload size (a corrupt or hostile length
 /// prefix must not allocate unbounded memory).
@@ -181,11 +207,92 @@ impl WireResponse {
     }
 }
 
+/// A control-plane operation against the server's model registry —
+/// the typed op table of the v3 wire protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Make a model live (validates blob digests + re-runs the plan
+    /// analyzer before the cutover).
+    LoadModel,
+    /// Remove a model from admission; in-flight work completes.
+    UnloadModel,
+    /// Restore an earlier registry version's serving set.
+    Rollback,
+    /// Report catalog, live set, and version history.
+    ListModels,
+}
+
+impl Op {
+    fn to_byte(self) -> u8 {
+        match self {
+            Op::LoadModel => 1,
+            Op::UnloadModel => 2,
+            Op::Rollback => 3,
+            Op::ListModels => 4,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Op> {
+        Ok(match b {
+            1 => Op::LoadModel,
+            2 => Op::UnloadModel,
+            3 => Op::Rollback,
+            4 => Op::ListModels,
+            _ => bail!("unknown control op byte {b}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Op::LoadModel => "LOAD_MODEL",
+            Op::UnloadModel => "UNLOAD_MODEL",
+            Op::Rollback => "ROLLBACK",
+            Op::ListModels => "LIST_MODELS",
+        }
+    }
+}
+
+/// One control request as it crosses the wire (v3 frames only).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireControl {
+    /// Caller-chosen correlation id, echoed in the control response.
+    pub id: u64,
+    pub op: Op,
+    /// Model the op applies to (empty for `Rollback`/`ListModels`).
+    pub model: String,
+    /// Expected model digest for `LoadModel` (lowercase hex; empty =
+    /// unpinned, trust the server catalog).
+    pub digest: String,
+    /// Rollback target version; 0 otherwise.
+    pub version: u64,
+}
+
+/// The server's answer to a control request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireControlResp {
+    pub id: u64,
+    pub op: Op,
+    /// `Ok` on success; `Error` (message explains) on a rejected op.
+    pub status: WireStatus,
+    /// Registry head version after the op.
+    pub version: u64,
+    /// Detail message; for `ListModels`, a JSON document.
+    pub message: String,
+}
+
+impl WireControlResp {
+    pub fn is_ok(&self) -> bool {
+        self.status == WireStatus::Ok
+    }
+}
+
 /// A decoded frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireFrame {
     Request(WireRequest),
     Response(WireResponse),
+    Control(WireControl),
+    ControlResp(WireControlResp),
 }
 
 /// FNV-1a over the body bytes — cheap, deterministic, and enough to
@@ -310,12 +417,47 @@ pub fn encode_response(resp: &WireResponse) -> Result<Vec<u8>> {
     encode_response_with_version(PROTO_VERSION, resp)
 }
 
+/// Encode a control request (always a v3 frame — control ops did not
+/// exist before v3, so there is no version to negotiate).
+pub fn encode_control(ctrl: &WireControl) -> Result<Vec<u8>> {
+    if ctrl.model.len() > u16::MAX as usize {
+        bail!("model name too long");
+    }
+    if ctrl.digest.len() > u16::MAX as usize {
+        bail!("digest too long");
+    }
+    let mut body = Vec::with_capacity(8 + 1 + 2 + ctrl.model.len() + 2 + ctrl.digest.len() + 8);
+    put_u64(&mut body, ctrl.id);
+    body.push(ctrl.op.to_byte());
+    put_u16(&mut body, ctrl.model.len() as u16);
+    body.extend_from_slice(ctrl.model.as_bytes());
+    put_u16(&mut body, ctrl.digest.len() as u16);
+    body.extend_from_slice(ctrl.digest.as_bytes());
+    put_u64(&mut body, ctrl.version);
+    Ok(seal(PROTO_V3, KIND_CONTROL, body))
+}
+
+/// Encode a control response (always a v3 frame).
+pub fn encode_control_resp(resp: &WireControlResp) -> Result<Vec<u8>> {
+    if resp.message.len() > u32::MAX as usize {
+        bail!("control message too large");
+    }
+    let mut body = Vec::with_capacity(8 + 1 + 1 + 8 + 4 + resp.message.len());
+    put_u64(&mut body, resp.id);
+    body.push(resp.op.to_byte());
+    body.push(resp.status.to_byte());
+    put_u64(&mut body, resp.version);
+    put_u32(&mut body, resp.message.len() as u32);
+    body.extend_from_slice(resp.message.as_bytes());
+    Ok(seal(PROTO_V3, KIND_CONTROL_RESP, body))
+}
+
 /// Encode a response stamped with an explicit protocol version (the
-/// body layout is identical in v1 and v2, so a server negotiates by
-/// simply echoing whatever version the request frame carried — a v1
-/// client never sees a version byte it does not understand).
+/// body layout is identical in every version, so a server negotiates
+/// by simply echoing whatever version the request frame carried — a
+/// v1 client never sees a version byte it does not understand).
 pub fn encode_response_with_version(version: u8, resp: &WireResponse) -> Result<Vec<u8>> {
-    if version != PROTO_V1 && version != PROTO_VERSION {
+    if !known_version(version) {
         bail!("cannot encode protocol version {version}");
     }
     if resp.model.len() > u16::MAX as usize {
@@ -429,8 +571,10 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
         bail!("frame too short ({} bytes)", payload.len());
     }
     let version = payload[0];
-    if version != PROTO_V1 && version != PROTO_VERSION {
-        bail!("unsupported protocol version {version} (expected {PROTO_V1} or {PROTO_VERSION})");
+    if !known_version(version) {
+        bail!(
+            "unsupported protocol version {version} (expected {PROTO_V1}, {PROTO_VERSION}, or {PROTO_V3})"
+        );
     }
     let kind = payload[1];
     let want = u32::from_le_bytes(arr4(&payload[2..6]));
@@ -511,6 +655,43 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
                 error,
             })
         }
+        KIND_CONTROL => {
+            if version != PROTO_V3 {
+                bail!("control frames require protocol version {PROTO_V3} (got {version})");
+            }
+            let id = c.u64()?;
+            let op = Op::from_byte(c.u8()?)?;
+            let model_len = c.u16()? as usize;
+            let model = c.utf8(model_len)?;
+            let digest_len = c.u16()? as usize;
+            let digest = c.utf8(digest_len)?;
+            let version_arg = c.u64()?;
+            WireFrame::Control(WireControl {
+                id,
+                op,
+                model,
+                digest,
+                version: version_arg,
+            })
+        }
+        KIND_CONTROL_RESP => {
+            if version != PROTO_V3 {
+                bail!("control frames require protocol version {PROTO_V3} (got {version})");
+            }
+            let id = c.u64()?;
+            let op = Op::from_byte(c.u8()?)?;
+            let status = WireStatus::from_byte(c.u8()?)?;
+            let head = c.u64()?;
+            let msg_len = c.u32()? as usize;
+            let message = c.utf8(msg_len)?;
+            WireFrame::ControlResp(WireControlResp {
+                id,
+                op,
+                status,
+                version: head,
+                message,
+            })
+        }
         k => bail!("unknown frame kind byte {k}"),
     };
     if !c.done() {
@@ -528,10 +709,12 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
 /// [`BAD_FRAME_ID`], never under a guessed id that could collide with
 /// a different in-flight request.
 pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
-    if payload.len() < HEADER_BYTES + 8
-        || (payload[0] != PROTO_V1 && payload[0] != PROTO_VERSION)
-        || payload[1] != KIND_REQUEST
-    {
+    // Control bodies also lead with the u64 id, so a well-framed v3
+    // control op that fails full decoding (e.g. unknown op byte) still
+    // gets its answer under the caller's own correlation id.
+    let kind_ok = payload.len() >= 2
+        && (payload[1] == KIND_REQUEST || (payload[0] == PROTO_V3 && payload[1] == KIND_CONTROL));
+    if payload.len() < HEADER_BYTES + 8 || !known_version(payload[0]) || !kind_ok {
         return None;
     }
     let want = u32::from_le_bytes(arr4(&payload[2..6]));
@@ -774,18 +957,129 @@ mod tests {
         let resp = WireResponse::ok(3, "gcn", vec![1.0, 2.0]);
         let v1 = encode_response_with_version(PROTO_V1, &resp).unwrap();
         let v2 = encode_response_with_version(PROTO_VERSION, &resp).unwrap();
+        let v3 = encode_response_with_version(PROTO_V3, &resp).unwrap();
         assert_eq!(v1[4], PROTO_V1);
         assert_eq!(v2[4], PROTO_VERSION);
+        assert_eq!(v3[4], PROTO_V3);
         assert_eq!(v1[..4], v2[..4], "length prefix");
         assert_eq!(v1[5..], v2[5..], "kind + checksum + body");
-        for frame in [v1, v2] {
+        assert_eq!(v2[5..], v3[5..], "v3 response body is unchanged");
+        for frame in [v1, v2, v3] {
             let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
             match decode_frame(&payload).unwrap() {
                 WireFrame::Response(got) => assert_eq!(got, resp),
                 other => panic!("decoded {other:?}"),
             }
         }
-        assert!(encode_response_with_version(3, &resp).is_err());
+        assert!(encode_response_with_version(4, &resp).is_err());
+        assert!(encode_response_with_version(99, &resp).is_err());
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        let cases = vec![
+            WireControl {
+                id: 101,
+                op: Op::LoadModel,
+                model: "gin".into(),
+                digest: "ab".repeat(32),
+                version: 0,
+            },
+            WireControl {
+                id: 102,
+                op: Op::UnloadModel,
+                model: "gcn".into(),
+                digest: String::new(),
+                version: 0,
+            },
+            WireControl {
+                id: 103,
+                op: Op::Rollback,
+                model: String::new(),
+                digest: String::new(),
+                version: 42,
+            },
+            WireControl {
+                id: 104,
+                op: Op::ListModels,
+                model: String::new(),
+                digest: String::new(),
+                version: 0,
+            },
+        ];
+        for ctrl in cases {
+            let frame = encode_control(&ctrl).unwrap();
+            assert_eq!(frame[4], PROTO_V3, "control frames are v3");
+            let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+            match decode_frame(&payload).unwrap() {
+                WireFrame::Control(got) => assert_eq!(got, ctrl),
+                other => panic!("decoded {other:?}"),
+            }
+            // A failed full decode of a control frame still salvages
+            // the id (the body leads with it, checksum vouches).
+            assert_eq!(salvage_request_id(&payload), Some(ctrl.id));
+        }
+        let resp = WireControlResp {
+            id: 103,
+            op: Op::Rollback,
+            status: WireStatus::Error,
+            version: 41,
+            message: "version 42 not in this process's history".into(),
+        };
+        let frame = encode_control_resp(&resp).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::ControlResp(got) => assert_eq!(got, resp),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_kinds_require_v3() {
+        // A control frame re-stamped v2 must be refused even with a
+        // valid checksum: pre-v3 peers defined no such kind.
+        let frame = encode_control(&WireControl {
+            id: 1,
+            op: Op::ListModels,
+            model: String::new(),
+            digest: String::new(),
+            version: 0,
+        })
+        .unwrap();
+        let mut payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        payload[0] = PROTO_VERSION;
+        let e = decode_frame(&payload).unwrap_err();
+        assert!(e.to_string().contains("require protocol version"), "{e}");
+        // And an unknown op byte inside a valid v3 envelope fails
+        // decoding but keeps the id salvageable.
+        let mut bad_op = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        bad_op[HEADER_BYTES + 8] = 9;
+        let fixed = checksum(&bad_op[HEADER_BYTES..]);
+        bad_op[2..6].copy_from_slice(&fixed.to_le_bytes());
+        let e = decode_frame(&bad_op).unwrap_err();
+        assert!(e.to_string().contains("control op"), "{e}");
+        assert_eq!(salvage_request_id(&bad_op), Some(1));
+    }
+
+    #[test]
+    fn v3_inference_requests_decode_like_v2() {
+        // The inference body did not change in v3: re-stamp a v2
+        // request as v3 (checksum covers the body only) and it must
+        // decode identically.
+        let req = WireRequest {
+            id: 55,
+            model: "sage".into(),
+            qos: WireQos::new(250, Priority::Low),
+            graph: graph(),
+        };
+        let frame = encode_request(&req).unwrap();
+        let mut payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        payload[0] = PROTO_V3;
+        match decode_frame(&payload).unwrap() {
+            WireFrame::Request(got) => assert_eq!(got, req),
+            other => panic!("decoded {other:?}"),
+        }
+        assert_eq!(salvage_request_id(&payload), Some(55));
     }
 
     #[test]

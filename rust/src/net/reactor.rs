@@ -48,8 +48,12 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Metrics, Request, Server, TrySubmit};
+use crate::registry::ControlRequest;
 
-use super::proto::{self, WireFrame, WireResponse, WireStatus, PROTO_V1, PROTO_VERSION};
+use super::proto::{
+    self, Op, WireControlResp, WireFrame, WireResponse, WireStatus, PROTO_V1, PROTO_V3,
+    PROTO_VERSION,
+};
 
 /// Poller token of the reactor's waker; connection tokens start above.
 const WAKER_TOKEN: u64 = 0;
@@ -512,14 +516,15 @@ impl Reactor {
     fn handle_payload(&mut self, token: u64, conn: &mut Conn, payload: &[u8]) {
         // Responses echo the version of the frame they answer; frames
         // whose version byte is itself unknown get the current one.
-        let version = if payload.first() == Some(&PROTO_V1) {
-            PROTO_V1
-        } else {
-            PROTO_VERSION
+        let version = match payload.first() {
+            Some(&PROTO_V1) => PROTO_V1,
+            Some(&PROTO_V3) => PROTO_V3,
+            _ => PROTO_VERSION,
         };
         match proto::decode_frame(payload) {
             Ok(WireFrame::Request(req)) => self.admit(token, conn, req, version),
-            Ok(WireFrame::Response(_)) => {
+            Ok(WireFrame::Control(ctrl)) => self.handle_control(conn, ctrl),
+            Ok(WireFrame::Response(_)) | Ok(WireFrame::ControlResp(_)) => {
                 // A response frame on the server's ingress is a
                 // protocol violation; answer and move on.
                 self.metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
@@ -568,6 +573,51 @@ impl Reactor {
         let creq =
             Request::with_qos(server_id, req.model, req.graph, req.qos.ttl_ms, req.qos.priority);
         self.try_admit(conn, creq);
+    }
+
+    /// One control-plane op, handled synchronously on the reactor
+    /// thread: deploys are rare, and the registry's deploy lock bounds
+    /// the work anyway (the data-plane lanes never wait on it — they
+    /// read the published snapshot). No routing entry is installed:
+    /// the reply is generated and queued before the next frame of this
+    /// connection is even parsed.
+    fn handle_control(&mut self, conn: &mut Conn, ctrl: proto::WireControl) {
+        let req = match ctrl.op {
+            Op::LoadModel => ControlRequest::Load {
+                model: ctrl.model.clone(),
+                digest: if ctrl.digest.is_empty() {
+                    None
+                } else {
+                    Some(ctrl.digest.clone())
+                },
+            },
+            Op::UnloadModel => ControlRequest::Unload {
+                model: ctrl.model.clone(),
+            },
+            Op::Rollback => ControlRequest::Rollback { version: ctrl.version },
+            Op::ListModels => ControlRequest::List,
+        };
+        let reply = self.server.control(&req);
+        let resp = WireControlResp {
+            id: ctrl.id,
+            op: ctrl.op,
+            status: if reply.ok { WireStatus::Ok } else { WireStatus::Error },
+            version: reply.version,
+            message: reply.message,
+        };
+        match proto::encode_control_resp(&resp) {
+            Ok(frame) => {
+                if !conn.outbuf.push(&frame) {
+                    self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Unreachable for replies the registry produced (their
+            // messages are far under the frame limit), but a dropped
+            // answer must still be counted.
+            Err(_) => {
+                self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     fn try_admit(&mut self, conn: &mut Conn, creq: Request) {

@@ -248,8 +248,9 @@ impl NetServer {
         Arc::clone(&self.metrics)
     }
 
-    /// Models the wrapped coordinator serves.
-    pub fn served_models(&self) -> &[String] {
+    /// Models the wrapped coordinator currently serves (live — follows
+    /// control-plane deploys).
+    pub fn served_models(&self) -> Vec<String> {
         self.server.served_models()
     }
 

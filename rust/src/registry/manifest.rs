@@ -1,0 +1,423 @@
+//! The versioned, digest-chained registry manifest.
+//!
+//! `artifacts/registry.json` pins every model's blobs by SHA-256 and
+//! records deploy history as an append-only log whose records are
+//! chained by digest: each record's `record` field is the SHA-256 of
+//! its own canonical encoding, and each record's `parent` is the
+//! previous record's digest — so the history cannot be silently
+//! edited in the middle, only truncated (which the head version
+//! exposes) or extended. The same chain is re-verified in Python by
+//! `check_artifacts.py`, keeping the two implementations honest
+//! against each other.
+//!
+//! Canonical encodings (what gets hashed — kept to flat `|`/`\n`
+//! joined strings precisely so that no JSON-canonicalization question
+//! ever enters the trust path):
+//!
+//! * model digest: `model:<name>\n` then, per blob in path order,
+//!   `blob:<path>:<sha256>:<size>\n`
+//! * record digest: `record:<version>|<op>|<model>|<digest>|<arg>|<parent>`
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::sha256;
+use super::store::BlobRef;
+
+/// Current `registry.json` schema version.
+pub const REGISTRY_SCHEMA: u64 = 1;
+
+/// What a log record did to the serving set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogOp {
+    Load,
+    Unload,
+    Rollback,
+}
+
+impl LogOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LogOp::Load => "load",
+            LogOp::Unload => "unload",
+            LogOp::Rollback => "rollback",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LogOp> {
+        match s {
+            "load" => Ok(LogOp::Load),
+            "unload" => Ok(LogOp::Unload),
+            "rollback" => Ok(LogOp::Rollback),
+            other => anyhow::bail!("unknown registry log op {other:?}"),
+        }
+    }
+}
+
+impl fmt::Display for LogOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One model's content-addressed entry: its blobs and the model
+/// digest that summarizes them (what `LOAD_MODEL` pins on the wire).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelRecord {
+    pub name: String,
+    /// SHA-256 over the canonical model encoding (see module docs).
+    pub digest: String,
+    pub blobs: Vec<BlobRef>,
+}
+
+impl ModelRecord {
+    /// Build a record from blobs, computing the model digest.
+    pub fn new(name: &str, mut blobs: Vec<BlobRef>) -> ModelRecord {
+        blobs.sort_by(|a, b| a.path.cmp(&b.path));
+        let digest = Self::compute_digest(name, &blobs);
+        ModelRecord {
+            name: name.to_string(),
+            digest,
+            blobs,
+        }
+    }
+
+    /// The canonical model digest over `name` + path-sorted blobs.
+    pub fn compute_digest(name: &str, blobs: &[BlobRef]) -> String {
+        let mut canon = format!("model:{name}\n");
+        for b in blobs {
+            canon.push_str(&format!("blob:{}:{}:{}\n", b.path, b.digest, b.size));
+        }
+        sha256::hex_digest(canon.as_bytes())
+    }
+}
+
+/// One entry in the append-only deploy log.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogRecord {
+    /// Monotonic registry version this record produced (first record
+    /// is version 1).
+    pub version: u64,
+    pub op: LogOp,
+    /// Model the op applied to (empty for `rollback`).
+    pub model: String,
+    /// Model digest at load time (empty for `unload`/`rollback`).
+    pub digest: String,
+    /// Op argument: the rollback target version; 0 otherwise.
+    pub arg: u64,
+    /// `record` digest of the previous log entry; empty for the
+    /// first.
+    pub parent: String,
+    /// SHA-256 of this record's canonical encoding.
+    pub record: String,
+}
+
+impl LogRecord {
+    /// The canonical record digest (over everything except `record`
+    /// itself).
+    pub fn compute_digest(&self) -> String {
+        let canon = format!(
+            "record:{}|{}|{}|{}|{}|{}",
+            self.version, self.op, self.model, self.digest, self.arg, self.parent
+        );
+        sha256::hex_digest(canon.as_bytes())
+    }
+}
+
+/// The parsed `registry.json`: the model catalog plus the chained
+/// deploy log.
+#[derive(Clone, Debug, Default)]
+pub struct RegistryManifest {
+    pub models: Vec<ModelRecord>,
+    pub log: Vec<LogRecord>,
+}
+
+impl RegistryManifest {
+    /// Append a record, computing version, parent link, and record
+    /// digest. Returns the new head version.
+    pub fn append(&mut self, op: LogOp, model: &str, digest: &str, arg: u64) -> u64 {
+        let version = self.head_version() + 1;
+        let parent = self.log.last().map(|r| r.record.clone()).unwrap_or_default();
+        let mut rec = LogRecord {
+            version,
+            op,
+            model: model.to_string(),
+            digest: digest.to_string(),
+            arg,
+            parent,
+            record: String::new(),
+        };
+        rec.record = rec.compute_digest();
+        self.log.push(rec);
+        version
+    }
+
+    /// Latest registry version (0 when the log is empty).
+    pub fn head_version(&self) -> u64 {
+        self.log.last().map(|r| r.version).unwrap_or(0)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelRecord> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Verify every digest claim the manifest makes about *itself*:
+    /// model digests match their blob lists, record digests match
+    /// their canonical encodings, parent links chain, versions are
+    /// dense from 1, and log entries only name cataloged models.
+    /// (Blob contents are verified separately, against the store.)
+    pub fn verify_chain(&self) -> Result<()> {
+        let names: BTreeSet<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+        anyhow::ensure!(
+            names.len() == self.models.len(),
+            "duplicate model entries in registry catalog"
+        );
+        for m in &self.models {
+            anyhow::ensure!(!m.blobs.is_empty(), "model {} has no blobs", m.name);
+            let expect = ModelRecord::compute_digest(&m.name, &m.blobs);
+            anyhow::ensure!(
+                m.digest == expect,
+                "model {} digest mismatch: recorded {}, blobs hash to {}",
+                m.name,
+                m.digest,
+                expect
+            );
+        }
+        let mut parent = String::new();
+        for (i, rec) in self.log.iter().enumerate() {
+            anyhow::ensure!(
+                rec.version == i as u64 + 1,
+                "registry log version gap at index {i}: got {}",
+                rec.version
+            );
+            anyhow::ensure!(
+                rec.parent == parent,
+                "registry log chain broken at version {}: parent {} != previous record {}",
+                rec.version,
+                rec.parent,
+                parent
+            );
+            let expect = rec.compute_digest();
+            anyhow::ensure!(
+                rec.record == expect,
+                "registry log record {} digest mismatch: recorded {}, encodes to {}",
+                rec.version,
+                rec.record,
+                expect
+            );
+            match rec.op {
+                LogOp::Load => {
+                    let m = self.model(&rec.model).with_context(|| {
+                        format!("log loads uncataloged model {:?}", rec.model)
+                    })?;
+                    anyhow::ensure!(
+                        rec.digest == m.digest,
+                        "log record {} pins digest {} but catalog has {} for {}",
+                        rec.version,
+                        rec.digest,
+                        m.digest,
+                        rec.model
+                    );
+                }
+                LogOp::Unload => {
+                    anyhow::ensure!(
+                        names.contains(rec.model.as_str()),
+                        "log unloads uncataloged model {:?}",
+                        rec.model
+                    );
+                }
+                LogOp::Rollback => {
+                    anyhow::ensure!(
+                        rec.arg >= 1 && rec.arg < rec.version,
+                        "log record {} rolls back to invalid version {}",
+                        rec.version,
+                        rec.arg
+                    );
+                }
+            }
+            parent = rec.record.clone();
+        }
+        Ok(())
+    }
+
+    pub fn parse(text: &str) -> Result<RegistryManifest> {
+        let root = Json::parse(text).context("parsing registry.json")?;
+        let schema = root.get("schema")?.as_usize()? as u64;
+        anyhow::ensure!(
+            schema == REGISTRY_SCHEMA,
+            "registry.json schema {schema} unsupported (want {REGISTRY_SCHEMA})"
+        );
+        let mut models = Vec::new();
+        for m in root.get("models")?.as_arr()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            let digest = m.get("digest")?.as_str()?.to_string();
+            let mut blobs = Vec::new();
+            for b in m.get("blobs")?.as_arr()? {
+                blobs.push(BlobRef {
+                    path: b.get("path")?.as_str()?.to_string(),
+                    digest: b.get("sha256")?.as_str()?.to_string(),
+                    size: b.get("size")?.as_usize()? as u64,
+                });
+            }
+            models.push(ModelRecord {
+                name,
+                digest,
+                blobs,
+            });
+        }
+        let mut log = Vec::new();
+        for r in root.get("log")?.as_arr()? {
+            log.push(LogRecord {
+                version: r.get("version")?.as_usize()? as u64,
+                op: LogOp::parse(r.get("op")?.as_str()?)?,
+                model: r.get("model")?.as_str()?.to_string(),
+                digest: r.get("digest")?.as_str()?.to_string(),
+                arg: r.get("arg")?.as_usize()? as u64,
+                parent: r.get("parent")?.as_str()?.to_string(),
+                record: r.get("record")?.as_str()?.to_string(),
+            });
+        }
+        let manifest = RegistryManifest { models, log };
+        manifest.verify_chain()?;
+        Ok(manifest)
+    }
+
+    pub fn load(path: &Path) -> Result<RegistryManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Serialize back to the `registry.json` schema.
+    pub fn to_json(&self) -> Json {
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let blobs = m
+                    .blobs
+                    .iter()
+                    .map(|b| {
+                        json::obj(vec![
+                            ("path", Json::Str(b.path.clone())),
+                            ("sha256", Json::Str(b.digest.clone())),
+                            ("size", json::num(b.size as f64)),
+                        ])
+                    })
+                    .collect();
+                json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("digest", Json::Str(m.digest.clone())),
+                    ("blobs", Json::Arr(blobs)),
+                ])
+            })
+            .collect();
+        let log = self
+            .log
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("version", json::num(r.version as f64)),
+                    ("op", Json::Str(r.op.as_str().to_string())),
+                    ("model", Json::Str(r.model.clone())),
+                    ("digest", Json::Str(r.digest.clone())),
+                    ("arg", json::num(r.arg as f64)),
+                    ("parent", Json::Str(r.parent.clone())),
+                    ("record", Json::Str(r.record.clone())),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::num(REGISTRY_SCHEMA as f64)),
+            ("models", Json::Arr(models)),
+            ("log", Json::Arr(log)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(path: &str, body: &[u8]) -> BlobRef {
+        BlobRef {
+            path: path.to_string(),
+            digest: sha256::hex_digest(body),
+            size: body.len() as u64,
+        }
+    }
+
+    fn sample() -> RegistryManifest {
+        let mut m = RegistryManifest {
+            models: vec![
+                ModelRecord::new("gcn", vec![blob("gcn.golden.json", b"g"), blob("gcn.hlo.txt", b"h")]),
+                ModelRecord::new("gin", vec![blob("gin.golden.json", b"i")]),
+            ],
+            log: Vec::new(),
+        };
+        let d0 = m.models[0].digest.clone();
+        let d1 = m.models[1].digest.clone();
+        m.append(LogOp::Load, "gcn", &d0, 0);
+        m.append(LogOp::Load, "gin", &d1, 0);
+        m
+    }
+
+    #[test]
+    fn chain_round_trips_through_json() {
+        let m = sample();
+        m.verify_chain().expect("fresh chain verifies");
+        let text = m.to_json().to_string_pretty();
+        let back = RegistryManifest::parse(&text).expect("parse back");
+        assert_eq!(back.models, m.models);
+        assert_eq!(back.log, m.log);
+        assert_eq!(back.head_version(), 2);
+    }
+
+    #[test]
+    fn model_digest_is_order_invariant() {
+        let a = ModelRecord::new("m", vec![blob("b.txt", b"2"), blob("a.txt", b"1")]);
+        let b = ModelRecord::new("m", vec![blob("a.txt", b"1"), blob("b.txt", b"2")]);
+        assert_eq!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn edited_record_breaks_the_chain() {
+        let mut m = sample();
+        m.log[0].model = "gin".to_string();
+        let err = m.verify_chain().expect_err("edit must break the chain");
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn relinked_chain_still_fails_on_tampered_catalog() {
+        // Re-chaining after an edit is possible (append-only is not
+        // append-proof) — but a load record can only pin what the
+        // catalog hashes to, so tampered blobs still surface.
+        let mut m = sample();
+        m.models[0].blobs[0].digest = sha256::hex_digest(b"evil");
+        let err = m.verify_chain().expect_err("catalog tamper must fail");
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn version_gaps_are_refused() {
+        let mut m = sample();
+        m.log[1].version = 5;
+        assert!(m.verify_chain().is_err());
+    }
+
+    #[test]
+    fn rollback_targets_are_bounded() {
+        let mut m = sample();
+        m.append(LogOp::Rollback, "", "", 1);
+        m.verify_chain().expect("valid rollback");
+        let mut bad = sample();
+        bad.append(LogOp::Rollback, "", "", 9);
+        assert!(bad.verify_chain().is_err(), "future target must fail");
+    }
+}

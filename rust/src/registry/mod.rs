@@ -1,0 +1,709 @@
+//! Content-addressed model registry with live deploys.
+//!
+//! The serving tier used to bake the model zoo in at startup: every
+//! lane compiled its engines from a static `Arc<Artifacts>` and the
+//! router's table was frozen at boot. This module makes the loaded
+//! model set a live object:
+//!
+//! * [`BlobStore`]/[`BlobRef`] (`store`) — artifact files addressed
+//!   by SHA-256; every read re-verifies the digest.
+//! * [`RegistryManifest`] (`manifest`) — `artifacts/registry.json`,
+//!   the model catalog plus an append-only, digest-chained deploy
+//!   log.
+//! * [`ModelRegistry`] (here) — the live serving set. Control ops
+//!   ([`ControlRequest`]: load / unload / rollback / list) validate
+//!   blob digests, re-run the static plan analyzer
+//!   (`models::lower`, whose `require_clean` gate is unchanged), and
+//!   publish a new immutable [`Snapshot`] by `Arc` swap. Readers
+//!   (router, dispatcher, lanes) never block a deploy: they hold the
+//!   snapshot they started with, and pick up the next one at their
+//!   next re-resolve point.
+//!
+//! **Bit-exactness contract.** Weights regenerate deterministically
+//! from `weight_seed`, and lanes cache compiled engines keyed by
+//! model identity: a `LOAD_MODEL` of an already-live digest swaps the
+//! snapshot without touching the compiled plan, so the same request
+//! stream before/during/after a no-op reload produces identical
+//! bytes. Unload removes a model from *admission* only — in-flight
+//! requests finish against the lane-cached engine, so a cutover never
+//! drops work it already accepted.
+
+pub mod manifest;
+pub mod sha256;
+pub mod store;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Artifacts, ModelMeta};
+use crate::util::json::{self, Json};
+use crate::util::sync as usync;
+
+pub use manifest::{LogOp, LogRecord, ModelRecord, RegistryManifest, REGISTRY_SCHEMA};
+pub use store::{BlobRef, BlobStore};
+
+/// File name of the content-addressed manifest inside an artifacts
+/// directory.
+pub const REGISTRY_FILE: &str = "registry.json";
+
+/// One live model in a snapshot.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub meta: ModelMeta,
+    /// Catalog model digest the entry was validated against.
+    pub digest: String,
+}
+
+/// Immutable view of the serving set at one registry version.
+///
+/// Everything that used to read the startup-frozen `Arc<Artifacts>`
+/// (router, dispatcher, lanes) now re-resolves one of these; a deploy
+/// publishes a new snapshot and never mutates an old one.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Registry version that produced this serving set.
+    pub version: u64,
+    /// Weight-stream seed every engine compiles with.
+    pub weight_seed: u64,
+    /// Live models, keyed by name.
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Snapshot {
+    pub fn meta(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.get(name).map(|e| &e.meta)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+/// A control-plane operation against the live registry (the typed
+/// form of the wire `Op`; `net/proto.rs` maps v3 control frames to
+/// this).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControlRequest {
+    /// Make `model` live. `digest`, when pinned, must match the
+    /// catalog digest — a client can insist on exactly the bytes it
+    /// audited. `None` trusts the server's catalog (whose blobs are
+    /// still byte-verified before the swap).
+    Load {
+        model: String,
+        digest: Option<String>,
+    },
+    /// Remove `model` from admission (in-flight work still
+    /// completes).
+    Unload { model: String },
+    /// Restore the serving set of an earlier version, as a *new*
+    /// version. `version: 0` means "the previous serving set".
+    Rollback { version: u64 },
+    /// Report catalog + live set + version history.
+    List,
+}
+
+/// Outcome of a control op — deliberately never a Rust `Err`: a
+/// rejected deploy is a normal, reportable serving event, not a
+/// control-plane crash.
+#[derive(Clone, Debug)]
+pub struct ControlReply {
+    pub ok: bool,
+    /// Registry head version after the op (unchanged if rejected).
+    pub version: u64,
+    /// Human-readable detail; for `List`, a JSON document.
+    pub message: String,
+}
+
+/// Mutable core, guarded by one deploy lock: the in-memory log and
+/// the per-version serving-set history rollback restores from.
+struct Inner {
+    manifest: RegistryManifest,
+    /// `(version, serving set)` for every version this process has
+    /// published, starting at boot.
+    history: Vec<(u64, BTreeSet<String>)>,
+}
+
+/// The live model registry: catalog + serving snapshot + deploy log.
+pub struct ModelRegistry {
+    store: BlobStore,
+    artifacts: Artifacts,
+    inner: Mutex<Inner>,
+    live: RwLock<Arc<Snapshot>>,
+    /// Mirror of the live snapshot's version for lock-free staleness
+    /// checks on the lane hot path.
+    version: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Open an artifacts directory and publish the boot snapshot
+    /// serving `serve` (empty = every cataloged model).
+    ///
+    /// If `registry.json` is present its digest chain is verified and
+    /// becomes the version history's seed; if absent (a fresh
+    /// `make artifacts` output, or a synthetic test dir) a catalog is
+    /// synthesized by hashing the manifest blobs in place.
+    pub fn open(dir: impl Into<PathBuf>, serve: &[String]) -> Result<ModelRegistry> {
+        let dir = dir.into();
+        let artifacts = Artifacts::load(&dir)?;
+        let store = BlobStore::open(&dir);
+        let registry_path = dir.join(REGISTRY_FILE);
+        let manifest = if registry_path.exists() {
+            RegistryManifest::load(&registry_path)?
+        } else {
+            Self::synthesize(&artifacts, &store)?
+        };
+        for meta in &artifacts.models {
+            anyhow::ensure!(
+                manifest.model(&meta.name).is_some(),
+                "model {} is in manifest.json but has no registry catalog entry",
+                meta.name
+            );
+        }
+
+        let serving: BTreeSet<String> = if serve.is_empty() {
+            artifacts.models.iter().map(|m| m.name.clone()).collect()
+        } else {
+            let mut set = BTreeSet::new();
+            for name in serve {
+                anyhow::ensure!(
+                    artifacts.model(name).is_ok(),
+                    "cannot serve unknown model {name:?}"
+                );
+                set.insert(name.clone());
+            }
+            set
+        };
+        anyhow::ensure!(!serving.is_empty(), "no models to serve");
+
+        let boot_version = manifest.head_version();
+        let snapshot = Self::build_snapshot(&artifacts, &manifest, boot_version, &serving)?;
+        Ok(ModelRegistry {
+            store,
+            artifacts,
+            inner: Mutex::new(Inner {
+                manifest,
+                history: vec![(boot_version, serving)],
+            }),
+            live: RwLock::new(snapshot),
+            version: AtomicU64::new(boot_version),
+        })
+    }
+
+    /// Catalog for a directory with no `registry.json`: hash every
+    /// manifest blob in place and seed the log with one load record
+    /// per model (name order), exactly what `gen_registry.py` writes.
+    fn synthesize(artifacts: &Artifacts, store: &BlobStore) -> Result<RegistryManifest> {
+        let mut manifest = RegistryManifest::default();
+        let mut metas: Vec<&ModelMeta> = artifacts.models.iter().collect();
+        metas.sort_by(|a, b| a.name.cmp(&b.name));
+        for meta in metas {
+            let record = ModelRecord::new(&meta.name, Self::blob_refs(store, meta)?);
+            let digest = record.digest.clone();
+            manifest.models.push(record);
+            manifest.append(LogOp::Load, &meta.name, &digest, 0);
+        }
+        Ok(manifest)
+    }
+
+    /// The blob set addressed for one model: its golden fixture and,
+    /// when present, its HLO text (elided from some fixture sets).
+    /// Meta paths are absolute (`Artifacts::load` joins them with the
+    /// dir); blob refs are store-relative, so strip the root back off.
+    fn blob_refs(store: &BlobStore, meta: &ModelMeta) -> Result<Vec<BlobRef>> {
+        let mut blobs = Vec::new();
+        for abs in [&meta.golden_path, &meta.hlo_path] {
+            let rel = match abs.strip_prefix(store.root()) {
+                Ok(rel) => rel.to_string_lossy().into_owned(),
+                // Outside the store root: not content-addressable.
+                Err(_) => continue,
+            };
+            if store.root().join(&rel).exists() {
+                blobs.push(store.describe(&rel)?);
+            }
+        }
+        anyhow::ensure!(
+            !blobs.is_empty(),
+            "model {} has no artifact blobs under {}",
+            meta.name,
+            store.root().display()
+        );
+        Ok(blobs)
+    }
+
+    /// Test-only: open over an in-memory `Artifacts` with a synthetic
+    /// catalog (placeholder blob digests, nothing hashed from disk) —
+    /// for tests that deliberately point metas at broken files to
+    /// exercise the lane compile-failure path, which a verified open
+    /// would refuse long before a lane spawns.
+    #[cfg(test)]
+    pub(crate) fn open_unverified(artifacts: Artifacts, serve: &[String]) -> Result<ModelRegistry> {
+        let store = BlobStore::open(&artifacts.dir);
+        let mut manifest = RegistryManifest::default();
+        let mut names: Vec<String> = artifacts.models.iter().map(|m| m.name.clone()).collect();
+        names.sort();
+        for name in &names {
+            let blob = BlobRef {
+                path: format!("{name}.synthetic"),
+                digest: "0".repeat(64),
+                size: 0,
+            };
+            let record = ModelRecord::new(name, vec![blob]);
+            let digest = record.digest.clone();
+            manifest.models.push(record);
+            manifest.append(LogOp::Load, name, &digest, 0);
+        }
+        let serving: BTreeSet<String> = if serve.is_empty() {
+            names.into_iter().collect()
+        } else {
+            serve.iter().cloned().collect()
+        };
+        anyhow::ensure!(!serving.is_empty(), "no models to serve");
+        let boot_version = manifest.head_version();
+        let snapshot = Self::build_snapshot(&artifacts, &manifest, boot_version, &serving)?;
+        Ok(ModelRegistry {
+            store,
+            artifacts,
+            inner: Mutex::new(Inner {
+                manifest,
+                history: vec![(boot_version, serving)],
+            }),
+            live: RwLock::new(snapshot),
+            version: AtomicU64::new(boot_version),
+        })
+    }
+
+    /// The current serving snapshot (cheap: one `RwLock` read and an
+    /// `Arc` clone).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        Arc::clone(&usync::read(&self.live))
+    }
+
+    /// Current registry version without taking any lock — the lane
+    /// hot path polls this to decide whether to re-resolve.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    /// Execute one control op. Deploy-path failures (unknown model,
+    /// digest mismatch, analyzer rejection) come back as `ok: false`
+    /// replies; the registry is unchanged on any failure.
+    pub fn apply(&self, req: &ControlRequest) -> ControlReply {
+        match req {
+            ControlRequest::Load { model, digest } => {
+                self.mutate(|inner| Self::plan_load(&self.store, inner, model, digest.as_deref()))
+            }
+            ControlRequest::Unload { model } => {
+                self.mutate(|inner| Self::plan_unload(inner, model))
+            }
+            ControlRequest::Rollback { version } => {
+                self.mutate(|inner| Self::plan_rollback(inner, *version))
+            }
+            ControlRequest::List => ControlReply {
+                ok: true,
+                version: self.version(),
+                message: self.list_json().to_string_pretty(),
+            },
+        }
+    }
+
+    /// Run a planned mutation under the deploy lock: the planner
+    /// returns the next serving set + the log append to make; the
+    /// snapshot build (which lowers through the analyzer) must also
+    /// succeed before anything is published.
+    fn mutate<F>(&self, plan: F) -> ControlReply
+    where
+        F: FnOnce(&Inner) -> Result<(BTreeSet<String>, LogOp, String, String, u64, String)>,
+    {
+        let mut inner = usync::lock(&self.inner);
+        let (serving, op, model, digest, arg, detail) = match plan(&inner) {
+            Ok(p) => p,
+            Err(e) => {
+                return ControlReply {
+                    ok: false,
+                    version: self.version(),
+                    message: format!("{e:#}"),
+                }
+            }
+        };
+        let next_version = inner.manifest.head_version() + 1;
+        let snapshot = match Self::build_snapshot(&self.artifacts, &inner.manifest, next_version, &serving)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                return ControlReply {
+                    ok: false,
+                    version: self.version(),
+                    message: format!("{e:#}"),
+                }
+            }
+        };
+        let version = inner.manifest.append(op, &model, &digest, arg);
+        debug_assert_eq!(version, next_version);
+        inner.history.push((version, serving));
+        self.publish(snapshot);
+        ControlReply {
+            ok: true,
+            version,
+            message: detail,
+        }
+    }
+
+    fn plan_load(
+        store: &BlobStore,
+        inner: &Inner,
+        model: &str,
+        pinned: Option<&str>,
+    ) -> Result<(BTreeSet<String>, LogOp, String, String, u64, String)> {
+        let record = inner
+            .manifest
+            .model(model)
+            .with_context(|| format!("unknown model {model:?} (not in registry catalog)"))?;
+        if let Some(want) = pinned {
+            anyhow::ensure!(
+                sha256::is_hex_digest(want),
+                "malformed digest {want:?} (want 64 lowercase hex chars)"
+            );
+            anyhow::ensure!(
+                want == record.digest,
+                "digest mismatch for {model}: request pins {want}, catalog has {}",
+                record.digest
+            );
+        }
+        // Byte-verify every blob the catalog claims — a tampered or
+        // rotted fixture must fail here, not at inference time.
+        for blob in &record.blobs {
+            store
+                .verify(blob)
+                .with_context(|| format!("blob verification failed for {model}"))?;
+        }
+        let (_, current) = inner.history.last().expect("history is never empty");
+        let mut serving = current.clone();
+        let fresh = serving.insert(model.to_string());
+        let detail = if fresh {
+            format!("loaded {model} (digest {})", &record.digest[..12])
+        } else {
+            format!("reloaded {model} (digest {}, already live)", &record.digest[..12])
+        };
+        Ok((
+            serving,
+            LogOp::Load,
+            model.to_string(),
+            record.digest.clone(),
+            0,
+            detail,
+        ))
+    }
+
+    fn plan_unload(
+        inner: &Inner,
+        model: &str,
+    ) -> Result<(BTreeSet<String>, LogOp, String, String, u64, String)> {
+        let (_, current) = inner.history.last().expect("history is never empty");
+        anyhow::ensure!(current.contains(model), "model {model:?} is not live");
+        anyhow::ensure!(
+            current.len() > 1,
+            "refusing to unload the last live model ({model}); roll forward instead"
+        );
+        let mut serving = current.clone();
+        serving.remove(model);
+        Ok((
+            serving,
+            LogOp::Unload,
+            model.to_string(),
+            String::new(),
+            0,
+            format!("unloaded {model}"),
+        ))
+    }
+
+    fn plan_rollback(
+        inner: &Inner,
+        target: u64,
+    ) -> Result<(BTreeSet<String>, LogOp, String, String, u64, String)> {
+        anyhow::ensure!(
+            inner.history.len() > 1 || target != 0,
+            "nothing to roll back: no deploys since boot"
+        );
+        let target = if target == 0 {
+            inner.history[inner.history.len() - 2].0
+        } else {
+            target
+        };
+        let serving = inner
+            .history
+            .iter()
+            .rev()
+            .find(|(v, _)| *v == target)
+            .map(|(_, s)| s.clone())
+            .with_context(|| {
+                let (lo, _) = inner.history[0];
+                let hi = inner.manifest.head_version();
+                format!("version {target} not in this process's history (have {lo}..={hi})")
+            })?;
+        Ok((
+            serving,
+            LogOp::Rollback,
+            String::new(),
+            String::new(),
+            target,
+            format!("rolled back to the serving set of version {target}"),
+        ))
+    }
+
+    /// Build the snapshot for a serving set: resolve every meta and
+    /// re-run the lowering gate (`models::lower` → `require_clean`) so
+    /// a plan the analyzer rejects can never become live. Takes the
+    /// manifest by reference because callers (boot, and `mutate`
+    /// under the deploy lock) already hold it.
+    fn build_snapshot(
+        artifacts: &Artifacts,
+        manifest: &RegistryManifest,
+        version: u64,
+        serving: &BTreeSet<String>,
+    ) -> Result<Arc<Snapshot>> {
+        let mut models = BTreeMap::new();
+        for name in serving {
+            let meta = artifacts.model(name)?.clone();
+            let digest = manifest
+                .model(name)
+                .map(|m| m.digest.clone())
+                .unwrap_or_default();
+            crate::models::lower(&meta, artifacts.weight_seed)
+                .with_context(|| format!("plan analyzer rejected {name}"))?;
+            models.insert(name.clone(), ModelEntry { meta, digest });
+        }
+        Ok(Arc::new(Snapshot {
+            version,
+            weight_seed: artifacts.weight_seed,
+            models,
+        }))
+    }
+
+    fn publish(&self, snapshot: Arc<Snapshot>) {
+        let version = snapshot.version;
+        *usync::write(&self.live) = snapshot;
+        self.version.store(version, Ordering::Release);
+    }
+
+    /// The catalog + live set + history as the JSON document `LIST`
+    /// returns and `gengnn models` renders.
+    pub fn list_json(&self) -> Json {
+        let snap = self.snapshot();
+        let inner = usync::lock(&self.inner);
+        let models = inner
+            .manifest
+            .models
+            .iter()
+            .map(|m| {
+                json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("digest", Json::Str(m.digest.clone())),
+                    ("live", Json::Bool(snap.contains(&m.name))),
+                ])
+            })
+            .collect();
+        let history = inner
+            .history
+            .iter()
+            .map(|(v, set)| {
+                json::obj(vec![
+                    ("version", json::num(*v as f64)),
+                    (
+                        "serving",
+                        Json::Arr(set.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("version", json::num(snap.version as f64)),
+            ("weight_seed", json::num(snap.weight_seed as f64)),
+            ("models", Json::Arr(models)),
+            ("history", Json::Arr(history)),
+        ])
+    }
+
+    /// Catalog digest for a model, if cataloged (what `gengnn deploy`
+    /// pins when the caller doesn't pass `--digest`).
+    pub fn catalog_digest(&self, model: &str) -> Option<String> {
+        let inner = usync::lock(&self.inner);
+        inner.manifest.model(model).map(|m| m.digest.clone())
+    }
+}
+
+/// Look up a model digest straight from an artifacts directory
+/// (client-side helper for `gengnn deploy`: pin the digest of the
+/// local checkout without opening a full registry).
+pub fn local_digest(dir: &Path, model: &str) -> Result<String> {
+    let registry_path = dir.join(REGISTRY_FILE);
+    if registry_path.exists() {
+        let manifest = RegistryManifest::load(&registry_path)?;
+        return manifest
+            .model(model)
+            .map(|m| m.digest.clone())
+            .with_context(|| format!("model {model:?} not in {}", registry_path.display()));
+    }
+    let artifacts = Artifacts::load(dir)?;
+    let store = BlobStore::open(dir);
+    let meta = artifacts.model(model)?;
+    let record = ModelRecord::new(model, ModelRegistry::blob_refs(&store, meta)?);
+    Ok(record.digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open_default(serve: &[&str]) -> ModelRegistry {
+        let serve: Vec<String> = serve.iter().map(|s| s.to_string()).collect();
+        ModelRegistry::open(Artifacts::default_dir(), &serve).expect("open registry")
+    }
+
+    #[test]
+    fn boot_snapshot_serves_the_requested_subset() {
+        let reg = open_default(&["gcn", "gin"]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.model_names(), vec!["gcn", "gin"]);
+        assert!(snap.meta("gcn").is_some());
+        assert!(!snap.contains("gat"));
+    }
+
+    #[test]
+    fn load_publishes_a_new_version_and_is_idempotent() {
+        let reg = open_default(&["gcn"]);
+        let v0 = reg.version();
+        let r = reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: None,
+        });
+        assert!(r.ok, "{}", r.message);
+        assert_eq!(r.version, v0 + 1);
+        assert!(reg.snapshot().contains("gin"));
+        // Same-digest reload: version advances, serving set unchanged.
+        let again = reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: None,
+        });
+        assert!(again.ok, "{}", again.message);
+        assert_eq!(again.version, v0 + 2);
+        assert_eq!(reg.snapshot().model_names(), vec!["gcn", "gin"]);
+    }
+
+    #[test]
+    fn pinned_digest_must_match_catalog() {
+        let reg = open_default(&["gcn"]);
+        let good = reg.catalog_digest("gin").expect("cataloged");
+        let bad = format!("{}{}", &good[..63], if good.ends_with('0') { "1" } else { "0" });
+        let r = reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: Some(bad),
+        });
+        assert!(!r.ok);
+        assert!(r.message.contains("digest mismatch"), "{}", r.message);
+        assert!(!reg.snapshot().contains("gin"), "failed load must not go live");
+
+        let ok = reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: Some(good),
+        });
+        assert!(ok.ok, "{}", ok.message);
+    }
+
+    #[test]
+    fn malformed_digest_is_refused_up_front() {
+        let reg = open_default(&["gcn"]);
+        let r = reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: Some("nothex".to_string()),
+        });
+        assert!(!r.ok);
+        assert!(r.message.contains("malformed digest"), "{}", r.message);
+    }
+
+    #[test]
+    fn unload_removes_admission_but_keeps_last_model() {
+        let reg = open_default(&["gcn", "gin"]);
+        let r = reg.apply(&ControlRequest::Unload {
+            model: "gin".to_string(),
+        });
+        assert!(r.ok, "{}", r.message);
+        assert!(!reg.snapshot().contains("gin"));
+        let last = reg.apply(&ControlRequest::Unload {
+            model: "gcn".to_string(),
+        });
+        assert!(!last.ok, "must refuse to empty the serving set");
+        let missing = reg.apply(&ControlRequest::Unload {
+            model: "gat".to_string(),
+        });
+        assert!(!missing.ok);
+    }
+
+    #[test]
+    fn rollback_restores_an_earlier_serving_set() {
+        let reg = open_default(&["gcn"]);
+        let boot = reg.version();
+        reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: None,
+        });
+        reg.apply(&ControlRequest::Load {
+            model: "gat".to_string(),
+            digest: None,
+        });
+        assert_eq!(reg.snapshot().model_names(), vec!["gat", "gcn", "gin"]);
+
+        let r = reg.apply(&ControlRequest::Rollback { version: boot });
+        assert!(r.ok, "{}", r.message);
+        assert_eq!(reg.snapshot().model_names(), vec!["gcn"]);
+        assert_eq!(reg.version(), boot + 3, "rollback is a new version");
+
+        // `0` = previous serving set: undoes the rollback itself.
+        let undo = reg.apply(&ControlRequest::Rollback { version: 0 });
+        assert!(undo.ok, "{}", undo.message);
+        assert_eq!(reg.snapshot().model_names(), vec!["gat", "gcn", "gin"]);
+
+        let bad = reg.apply(&ControlRequest::Rollback { version: 99999 });
+        assert!(!bad.ok);
+        assert!(bad.message.contains("not in this process"), "{}", bad.message);
+    }
+
+    #[test]
+    fn list_reports_catalog_live_flags_and_history() {
+        let reg = open_default(&["gcn"]);
+        let r = reg.apply(&ControlRequest::List);
+        assert!(r.ok);
+        let doc = Json::parse(&r.message).expect("list is JSON");
+        let models = doc.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), reg.artifacts().models.len());
+        let gcn = models
+            .iter()
+            .find(|m| m.get("name").unwrap().as_str().unwrap() == "gcn")
+            .expect("gcn listed");
+        assert!(gcn.get("live").unwrap().as_bool().unwrap());
+        assert!(doc.get("history").unwrap().as_arr().unwrap().len() == 1);
+    }
+
+    #[test]
+    fn snapshot_is_immutable_across_deploys() {
+        let reg = open_default(&["gcn"]);
+        let before = reg.snapshot();
+        reg.apply(&ControlRequest::Load {
+            model: "gin".to_string(),
+            digest: None,
+        });
+        assert!(!before.contains("gin"), "old snapshots never mutate");
+        assert!(reg.snapshot().contains("gin"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Content-addressed blob access over the artifacts directory.
+//!
+//! A [`BlobRef`] is a *claim*: "the file at this path has this
+//! SHA-256 and this size". The [`BlobStore`] is the only component
+//! that turns claims into bytes, and it refuses to return bytes whose
+//! digest does not match the claim — a tampered or bit-rotted fixture
+//! surfaces as a digest-mismatch error at `LOAD_MODEL` time, never as
+//! silently wrong model output. Blob paths stay human-readable
+//! (`gcn.golden.json`, not `sha256-ab12…`) so the checked-in fixture
+//! set remains diffable; content addressing lives in the recorded
+//! digests, which `registry.json` pins and CI re-verifies.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::sha256;
+
+/// A digest-pinned reference to one artifact file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlobRef {
+    /// Path relative to the store root.
+    pub path: String,
+    /// Lowercase-hex SHA-256 of the file contents.
+    pub digest: String,
+    /// File size in bytes (a cheap first-line integrity check and a
+    /// capacity hint for readers).
+    pub size: u64,
+}
+
+/// Read-only view of an artifacts directory as a blob store.
+#[derive(Clone, Debug)]
+pub struct BlobStore {
+    root: PathBuf,
+}
+
+impl BlobStore {
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        BlobStore { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Resolve a blob path against the store root. Rejects absolute
+    /// and parent-escaping paths: a manifest must not be able to
+    /// address files outside the store.
+    fn resolve(&self, rel: &str) -> Result<PathBuf> {
+        let p = Path::new(rel);
+        anyhow::ensure!(
+            p.is_relative()
+                && !p
+                    .components()
+                    .any(|c| matches!(c, std::path::Component::ParentDir)),
+            "blob path {rel:?} escapes the store root"
+        );
+        Ok(self.root.join(p))
+    }
+
+    /// Hash a file in the store and return the `BlobRef` describing
+    /// its *current* contents (used when building references, not
+    /// when checking them).
+    pub fn describe(&self, rel: &str) -> Result<BlobRef> {
+        let path = self.resolve(rel)?;
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading blob {}", path.display()))?;
+        Ok(BlobRef {
+            path: rel.to_string(),
+            digest: sha256::hex_digest(&bytes),
+            size: bytes.len() as u64,
+        })
+    }
+
+    /// Read a blob and verify it against its claimed digest and size.
+    /// The error message carries both digests so a failed deploy is
+    /// diagnosable from the wire response alone.
+    pub fn read_verified(&self, blob: &BlobRef) -> Result<Vec<u8>> {
+        let path = self.resolve(&blob.path)?;
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading blob {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() as u64 == blob.size,
+            "blob {} size mismatch: manifest says {} bytes, file has {}",
+            blob.path,
+            blob.size,
+            bytes.len()
+        );
+        let actual = sha256::hex_digest(&bytes);
+        anyhow::ensure!(
+            actual == blob.digest,
+            "blob {} digest mismatch: manifest pins {}, file hashes to {}",
+            blob.path,
+            blob.digest,
+            actual
+        );
+        Ok(bytes)
+    }
+
+    /// Verify a blob without keeping the bytes.
+    pub fn verify(&self, blob: &BlobRef) -> Result<()> {
+        self.read_verified(blob).map(|_| ())
+    }
+
+    /// Write a blob (test and tooling path — the serving process never
+    /// mutates its store). Writes via a temp file + rename so a
+    /// concurrent reader sees the old or the new bytes, never a torn
+    /// write.
+    pub fn put(&self, rel: &str, bytes: &[u8]) -> Result<BlobRef> {
+        let path = self.resolve(rel)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating blob dir {}", parent.display()))?;
+        }
+        let tmp = path.with_extension("tmp-put");
+        fs::write(&tmp, bytes).with_context(|| format!("writing blob {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing blob {}", path.display()))?;
+        Ok(BlobRef {
+            path: rel.to_string(),
+            digest: sha256::hex_digest(bytes),
+            size: bytes.len() as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store() -> (tempdir::TempDir, BlobStore) {
+        let dir = tempdir::TempDir::new("blobstore").expect("tempdir");
+        let store = BlobStore::open(dir.path());
+        (dir, store)
+    }
+
+    // Minimal tempdir shim: std has no tempdir, and the container
+    // vendors no crates — a process-unique directory under the target
+    // tmp root is enough for these tests.
+    mod tempdir {
+        use std::path::{Path, PathBuf};
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+
+        pub struct TempDir {
+            path: PathBuf,
+        }
+
+        impl TempDir {
+            pub fn new(tag: &str) -> std::io::Result<TempDir> {
+                let n = NEXT.fetch_add(1, Ordering::Relaxed);
+                let path = std::env::temp_dir().join(format!(
+                    "gengnn-{tag}-{}-{n}",
+                    std::process::id()
+                ));
+                std::fs::create_dir_all(&path)?;
+                Ok(TempDir { path })
+            }
+
+            pub fn path(&self) -> &Path {
+                &self.path
+            }
+        }
+
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.path);
+            }
+        }
+    }
+
+    #[test]
+    fn put_then_read_verified_round_trips() {
+        let (_guard, store) = temp_store();
+        let blob = store.put("m/fixture.json", b"{\"x\":1}").expect("put");
+        assert_eq!(blob.size, 7);
+        let bytes = store.read_verified(&blob).expect("verified read");
+        assert_eq!(bytes, b"{\"x\":1}");
+    }
+
+    #[test]
+    fn tampered_blob_is_refused() {
+        let (_guard, store) = temp_store();
+        let blob = store.put("fixture.bin", b"original").expect("put");
+        store.put("fixture.bin", b"tampered").expect("tamper");
+        let err = store.read_verified(&blob).expect_err("must refuse");
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn size_mismatch_is_refused_before_digest() {
+        let (_guard, store) = temp_store();
+        let mut blob = store.put("fixture.bin", b"abc").expect("put");
+        blob.size = 2;
+        let err = store.read_verified(&blob).expect_err("must refuse");
+        assert!(err.to_string().contains("size mismatch"), "{err}");
+    }
+
+    #[test]
+    fn escaping_paths_are_rejected() {
+        let (_guard, store) = temp_store();
+        assert!(store.describe("../outside").is_err());
+        assert!(store.describe("/etc/passwd").is_err());
+    }
+
+    #[test]
+    fn describe_matches_put() {
+        let (_guard, store) = temp_store();
+        let put = store.put("a.txt", b"hello registry").expect("put");
+        let described = store.describe("a.txt").expect("describe");
+        assert_eq!(put, described);
+    }
+}

@@ -73,6 +73,54 @@ impl Engine {
         })
     }
 
+    /// An engine with no compiled models — the starting point for a
+    /// lane that syncs its model set from a live registry snapshot
+    /// (see [`Engine::ensure_model`]).
+    pub fn empty(artifacts: &Artifacts) -> Result<Engine> {
+        Ok(Engine {
+            client: Client::cpu()?,
+            models: BTreeMap::new(),
+            artifacts: artifacts.clone(),
+        })
+    }
+
+    /// Compile `meta` into this engine if it is not already resident.
+    /// Returns `true` when a compile actually happened.
+    ///
+    /// Compilation is deterministic (weights regenerate from the
+    /// artifact seed), so skipping an already-resident model is not an
+    /// optimization shortcut but the bit-exactness guarantee for
+    /// same-digest live reloads: the plan that served the last request
+    /// is — by identity, not just by construction — the plan that
+    /// serves the next one.
+    pub fn ensure_model(&mut self, meta: &ModelMeta) -> Result<bool> {
+        if self.models.contains_key(&meta.name) {
+            return Ok(false);
+        }
+        let exe = self
+            .client
+            .compile_model(meta, self.artifacts.weight_seed)
+            .with_context(|| format!("loading model {}", meta.name))?;
+        self.models.insert(
+            meta.name.clone(),
+            LoadedModel {
+                meta: meta.clone(),
+                exe,
+                #[cfg(feature = "xla")]
+                pack: None,
+            },
+        );
+        Ok(true)
+    }
+
+    /// Drop a compiled model. Returns whether it was resident. The
+    /// serving lanes deliberately do *not* call this on unload —
+    /// in-flight requests drain against the cached plan — but
+    /// memory-conscious embedders can.
+    pub fn evict_model(&mut self, name: &str) -> bool {
+        self.models.remove(name).is_some()
+    }
+
     /// Convenience: load from the default artifact dir.
     pub fn from_default_dir(names: &[&str]) -> Result<Engine> {
         let artifacts = Artifacts::load(Artifacts::default_dir())?;
@@ -281,5 +329,46 @@ mod tests {
         let meta = e.meta("gcn").unwrap().clone();
         let g = Golden::load(&meta).unwrap();
         assert!(e.infer("gat", &g.graph).is_err());
+    }
+
+    #[test]
+    fn ensure_model_compiles_once_and_serves_identically() {
+        let Some(mut e) = engine(&["gcn"]) else { return };
+        let baseline = {
+            let meta = e.meta("gcn").unwrap().clone();
+            let g = Golden::load(&meta).unwrap();
+            e.infer("gcn", &g.graph).unwrap()
+        };
+        // Live-load a second model into the running engine.
+        let gin_meta = e.artifacts().model("gin").unwrap().clone();
+        assert!(e.ensure_model(&gin_meta).unwrap(), "first ensure compiles");
+        assert!(!e.ensure_model(&gin_meta).unwrap(), "second ensure is a no-op");
+        let g = Golden::load(&gin_meta).unwrap();
+        assert!(e.infer("gin", &g.graph).is_ok());
+        // The resident model's outputs are untouched by the live load.
+        let meta = e.meta("gcn").unwrap().clone();
+        let g = Golden::load(&meta).unwrap();
+        assert_eq!(e.infer("gcn", &g.graph).unwrap(), baseline);
+        // Eviction frees the slot; ensure recompiles bit-identically.
+        assert!(e.evict_model("gin"));
+        assert!(!e.evict_model("gin"), "double evict is a no-op");
+        assert!(e.ensure_model(&gin_meta).unwrap());
+    }
+
+    #[test]
+    fn empty_engine_grows_from_snapshots() {
+        let Ok(artifacts) = Artifacts::load(Artifacts::default_dir()) else {
+            return;
+        };
+        let mut e = Engine::empty(&artifacts).unwrap();
+        assert!(e.loaded_models().is_empty());
+        let meta = artifacts.model("gcn").unwrap().clone();
+        e.ensure_model(&meta).unwrap();
+        let g = Golden::load(&meta).unwrap();
+        let out = e.infer("gcn", &g.graph).unwrap();
+        // Bit-identical to a startup-loaded engine: live load is not a
+        // different compile path.
+        let mut boot = Engine::load(&artifacts, &["gcn"]).unwrap();
+        assert_eq!(out, boot.infer("gcn", &g.graph).unwrap());
     }
 }

@@ -16,9 +16,7 @@
 
 use std::collections::BTreeMap;
 
-use gengnn::coordinator::{
-    Admission, AdmissionPolicy, BatchPolicy, Metrics, Server, ServerConfig,
-};
+use gengnn::coordinator::{Admission, AdmissionPolicy, Metrics, ServerConfig};
 use gengnn::graph::{CooGraph, GraphBatch};
 use gengnn::runtime::{Engine, ModelMeta};
 use gengnn::util::rng::Rng;
@@ -173,17 +171,15 @@ fn run_stream(
     fuse_max_graphs: usize,
     graphs: &[CooGraph],
 ) -> (ResponseMap, std::sync::Arc<Metrics>) {
-    let server = Server::start(ServerConfig {
-        models: vec![model.to_string()],
-        prep_workers: 2,
-        executor_lanes: 2,
-        queue_capacity: 64,
-        admission: AdmissionPolicy::Block,
-        batch: BatchPolicy::default(),
-        fuse_max_graphs,
-        ..ServerConfig::default()
-    })
-    .expect("server start");
+    let server = ServerConfig::builder()
+        .model(model)
+        .prep_workers(2)
+        .executor_lanes(2)
+        .queue_capacity(64)
+        .admission(AdmissionPolicy::Block)
+        .fuse_max_graphs(fuse_max_graphs)
+        .start()
+        .expect("server start");
     let responses = server.responses();
     for g in graphs {
         let (adm, _) = server.submit(model, g.clone());

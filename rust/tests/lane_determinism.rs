@@ -13,9 +13,7 @@
 
 use std::collections::BTreeMap;
 
-use gengnn::coordinator::{
-    Admission, AdmissionPolicy, BatchPolicy, Metrics, Server, ServerConfig,
-};
+use gengnn::coordinator::{Admission, AdmissionPolicy, Metrics, ServerConfig};
 use gengnn::graph::CooGraph;
 use gengnn::runtime::Artifacts;
 use gengnn::util::rng::Rng;
@@ -32,16 +30,14 @@ fn run_stream(
     lanes: usize,
     graphs: &[CooGraph],
 ) -> (ResponseMap, std::sync::Arc<Metrics>) {
-    let server = Server::start(ServerConfig {
-        models: vec![model.to_string()],
-        prep_workers: 2,
-        executor_lanes: lanes,
-        queue_capacity: 64,
-        admission: AdmissionPolicy::Block,
-        batch: BatchPolicy::default(),
-        ..ServerConfig::default()
-    })
-    .expect("server start");
+    let server = ServerConfig::builder()
+        .model(model)
+        .prep_workers(2)
+        .executor_lanes(lanes)
+        .queue_capacity(64)
+        .admission(AdmissionPolicy::Block)
+        .start()
+        .expect("server start");
     let responses = server.responses();
     let mut submitted = Vec::with_capacity(graphs.len());
     for g in graphs {

@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::time::Duration;
 
-use gengnn::coordinator::{AdmissionPolicy, BatchPolicy, Priority, Server, ServerConfig};
+use gengnn::coordinator::{AdmissionPolicy, Priority, ServerConfig, ServerConfigBuilder};
 use gengnn::graph::CooGraph;
 use gengnn::net::proto::{self, WireFrame, WireQos, WireRequest};
 use gengnn::net::{
@@ -36,11 +36,11 @@ use gengnn::util::rng::Rng;
 mod common;
 use common::{artifacts_or_skip, fixture_graph};
 
-fn net_server(cfg: ServerConfig) -> NetServer {
+fn net_server(cfg: ServerConfigBuilder) -> NetServer {
     NetServer::start(NetServerConfig {
         listen: "127.0.0.1:0".to_string(),
         reactors: 2,
-        server: cfg,
+        server: cfg.build().expect("server config"),
     })
     .expect("net server start")
 }
@@ -63,11 +63,10 @@ fn tcp_outputs_bit_identical_to_in_process_for_every_model() {
     }
 
     // In-process reference: the plain `ServerHandle` path.
-    let in_process = Server::start(ServerConfig {
-        executor_lanes: 2,
-        ..ServerConfig::default()
-    })
-    .expect("in-process server start");
+    let in_process = ServerConfig::builder()
+        .executor_lanes(2)
+        .start()
+        .expect("in-process server start");
     let responses = in_process.responses();
     let mut reference: BTreeMap<(String, usize), Vec<u32>> = BTreeMap::new();
     for (model, graphs) in &streams {
@@ -89,10 +88,7 @@ fn tcp_outputs_bit_identical_to_in_process_for_every_model() {
     in_process.shutdown();
 
     // Wire path: same graphs, fresh server, served over loopback TCP.
-    let net = net_server(ServerConfig {
-        executor_lanes: 2,
-        ..ServerConfig::default()
-    });
+    let net = net_server(ServerConfig::builder().executor_lanes(2));
     let client =
         NetClient::connect(net.local_addr().to_string(), 2).expect("client connect");
     for (model, graphs) in &streams {
@@ -129,10 +125,7 @@ fn unknown_model_over_tcp_is_a_typed_error_response() {
     let Some(_) = artifacts_or_skip() else {
         return;
     };
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string()],
-        ..ServerConfig::default()
-    });
+    let net = net_server(ServerConfig::builder().model("gcn"));
     let client =
         NetClient::connect(net.local_addr().to_string(), 1).expect("client connect");
     let mut rng = Rng::new(5);
@@ -154,15 +147,14 @@ fn reject_mode_saturation_surfaces_as_rejected_wire_status() {
     // Tiny queue + Reject admission + a pipelined burst on one
     // connection: the server must answer all 40 frames (mix of Ok and
     // Rejected), not hang and not drop the connection.
-    let net = net_server(ServerConfig {
-        models: vec!["gin".to_string()],
-        prep_workers: 1,
-        executor_lanes: 1,
-        queue_capacity: 2,
-        admission: AdmissionPolicy::Reject,
-        batch: BatchPolicy::default(),
-        ..ServerConfig::default()
-    });
+    let net = net_server(
+        ServerConfig::builder()
+            .model("gin")
+            .prep_workers(1)
+            .executor_lanes(1)
+            .queue_capacity(2)
+            .admission(AdmissionPolicy::Reject),
+    );
     let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
     sock.set_nodelay(true).unwrap();
     sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
@@ -232,10 +224,7 @@ fn malformed_frames_are_counted_and_answered_not_fatal() {
     let Some(_) = artifacts_or_skip() else {
         return;
     };
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string()],
-        ..ServerConfig::default()
-    });
+    let net = net_server(ServerConfig::builder().model("gcn"));
     let metrics = net.metrics();
     let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
     sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
@@ -311,11 +300,11 @@ fn loadgen_over_loopback_reconciles_and_reports_percentiles() {
     let Some(_) = artifacts_or_skip() else {
         return;
     };
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string(), "sgc".to_string()],
-        executor_lanes: 2,
-        ..ServerConfig::default()
-    });
+    let net = net_server(
+        ServerConfig::builder()
+            .models(["gcn", "sgc"])
+            .executor_lanes(2),
+    );
     let report = loadgen::run(&LoadGenConfig {
         addr: net.local_addr().to_string(),
         rps: 400.0,
@@ -352,10 +341,7 @@ fn connection_closed_mid_flight_settles_the_gauge_and_counts_the_orphan() {
     let Some(_) = artifacts_or_skip() else {
         return;
     };
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string()],
-        ..ServerConfig::default()
-    });
+    let net = net_server(ServerConfig::builder().model("gcn"));
     let metrics = net.metrics();
     let mut rng = Rng::new(21);
     let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
@@ -411,15 +397,14 @@ fn deadline_overload_sheds_by_ttl_and_reconciles() {
     // or parked, so the server must shed by deadline (`Expired`) —
     // and every shed request must still be answered, so the loadgen
     // accounting reconciles exactly.
-    let net = net_server(ServerConfig {
-        models: vec!["gin".to_string()],
-        prep_workers: 1,
-        executor_lanes: 1,
-        queue_capacity: 2,
-        admission: AdmissionPolicy::Block,
-        batch: BatchPolicy::default(),
-        ..ServerConfig::default()
-    });
+    let net = net_server(
+        ServerConfig::builder()
+            .model("gin")
+            .prep_workers(1)
+            .executor_lanes(1)
+            .queue_capacity(2)
+            .admission(AdmissionPolicy::Block),
+    );
     let report = loadgen::run(&LoadGenConfig {
         addr: net.local_addr().to_string(),
         rps: 50_000.0,
@@ -464,12 +449,12 @@ fn a_thousand_connections_multiplex_onto_the_fixed_reactor_pool() {
     // connection burns two fds in this process: client end + server
     // end), so the test degrades instead of erroring on locked-down
     // machines.
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string()],
-        executor_lanes: 2,
-        queue_capacity: 64,
-        ..ServerConfig::default()
-    });
+    let net = net_server(
+        ServerConfig::builder()
+            .model("gcn")
+            .executor_lanes(2)
+            .queue_capacity(64),
+    );
     let (soft, _hard) = polly::nofile_limit().expect("query fd limit");
     let conns = 1000usize.min(((soft.saturating_sub(256)) / 2) as usize).max(8);
 
@@ -522,10 +507,7 @@ fn v1_frames_are_served_and_answered_with_v1_responses() {
     let Some(_) = artifacts_or_skip() else {
         return;
     };
-    let net = net_server(ServerConfig {
-        models: vec!["gcn".to_string()],
-        ..ServerConfig::default()
-    });
+    let net = net_server(ServerConfig::builder().model("gcn"));
     let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
     sock.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
     let mut rx = std::io::BufReader::new(sock.try_clone().unwrap());

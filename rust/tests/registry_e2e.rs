@@ -1,0 +1,378 @@
+//! End-to-end tests of the content-addressed model registry and the
+//! v3 control plane:
+//!
+//! * **Concurrent-swap bit-exactness** — a request stream racing a
+//!   storm of no-op `LOAD_MODEL` reloads must produce byte-identical
+//!   outputs to the same stream on a quiet server, with zero dropped
+//!   responses (the cutover contract of `registry::ModelRegistry`).
+//! * **Rollback over TCP** — deploy → serve → rollback round-trips
+//!   through real wire frames (`gengnn deploy` / `gengnn models`
+//!   speak exactly this path), and a rolled-back model stops being
+//!   routable.
+//! * **Corrupt-blob rejection** — a tampered artifact file fails
+//!   digest verification at `LOAD_MODEL` time and the serving set is
+//!   untouched.
+//! * **Analyzer gate** — a catalog entry whose plan the static
+//!   analyzer rejects can never become live, even with intact blobs.
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, each test skips with a notice.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use gengnn::coordinator::{Admission, ServerConfig};
+use gengnn::graph::CooGraph;
+use gengnn::net::{NetClient, NetServer, NetServerConfig, WireStatus};
+use gengnn::registry::{local_digest, ControlRequest};
+use gengnn::runtime::Artifacts;
+use gengnn::util::rng::Rng;
+
+mod common;
+use common::{artifacts_or_skip, fixture_graph};
+
+/// Copy the checked-in artifacts directory (flat files only) into a
+/// process-unique temp dir the test may tamper with freely. The
+/// serving process never writes its artifacts dir, so a plain copy is
+/// a faithful fixture.
+fn temp_artifacts_copy(tag: &str) -> Option<PathBuf> {
+    let src = Artifacts::default_dir();
+    if !src.join("manifest.json").exists() {
+        eprintln!("skipping registry e2e test — no artifacts; run `make artifacts`");
+        return None;
+    }
+    let dst = std::env::temp_dir().join(format!(
+        "gengnn-registry-e2e-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).expect("create temp artifacts dir");
+    for entry in std::fs::read_dir(&src).expect("read artifacts dir") {
+        let entry = entry.expect("dir entry");
+        if entry.file_type().expect("file type").is_file() {
+            std::fs::copy(entry.path(), dst.join(entry.file_name())).expect("copy fixture");
+        }
+    }
+    Some(dst)
+}
+
+type BitMap = BTreeMap<usize, Vec<u32>>;
+
+/// Stream `graphs` through a fresh gcn server and return outputs (as
+/// bits) keyed by submission index. With `reload`, a control-plane
+/// thread hammers no-op `LOAD_MODEL gcn` reloads for the whole stream,
+/// so snapshot swaps race every batch.
+fn run_stream(graphs: &[CooGraph], reload: bool) -> BitMap {
+    let server = Arc::new(
+        ServerConfig::builder()
+            .model("gcn")
+            .prep_workers(2)
+            .executor_lanes(2)
+            .queue_capacity(64)
+            .start()
+            .expect("server start"),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let boot_version = server.registry().version();
+    let reloader = reload.then(|| {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let reply = server.control(&ControlRequest::Load {
+                    model: "gcn".to_string(),
+                    digest: None,
+                });
+                assert!(reply.ok, "no-op reload refused: {}", reply.message);
+                swaps += 1;
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            swaps
+        })
+    });
+
+    let responses = server.responses();
+    let mut by_id = BTreeMap::new();
+    for (i, g) in graphs.iter().enumerate() {
+        let (adm, id) = server.submit("gcn", g.clone());
+        assert_eq!(adm, Admission::Accepted);
+        by_id.insert(id, i);
+        // Pace the stream so deploys demonstrably interleave with it.
+        std::thread::sleep(std::time::Duration::from_micros(500));
+    }
+    let mut out = BitMap::new();
+    for _ in 0..graphs.len() {
+        let r = responses.recv().expect("response stream ended early");
+        let bits = r
+            .output
+            .unwrap_or_else(|e| panic!("request {} failed mid-swap: {e}", r.id))
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert!(
+            out.insert(by_id[&r.id], bits).is_none(),
+            "duplicate response for id {}",
+            r.id
+        );
+    }
+    stop.store(true, Ordering::Release);
+    if let Some(h) = reloader {
+        let swaps = h.join().expect("reloader join");
+        assert!(swaps > 0, "the reload storm never actually deployed");
+        assert!(
+            server.registry().version() > boot_version,
+            "registry version must advance under reloads"
+        );
+    }
+    let server = Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("server still shared after joins"));
+    server.shutdown();
+    out
+}
+
+#[test]
+fn concurrent_reload_storm_is_bit_exact_and_drops_nothing() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let Ok(meta) = artifacts.model("gcn") else {
+        return;
+    };
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let graphs: Vec<CooGraph> = (0..40).map(|_| fixture_graph(meta, &mut rng)).collect();
+
+    let quiet = run_stream(&graphs, false);
+    let raced = run_stream(&graphs, true);
+    assert_eq!(quiet.len(), graphs.len(), "quiet run dropped responses");
+    assert_eq!(raced.len(), graphs.len(), "raced run dropped responses");
+    for i in 0..graphs.len() {
+        assert_eq!(
+            quiet[&i], raced[&i],
+            "request {i}: outputs changed under a concurrent no-op reload"
+        );
+    }
+}
+
+#[test]
+fn rollback_round_trips_over_tcp() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    if artifacts.model("gin").is_err() {
+        return;
+    }
+    let net = NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        reactors: 2,
+        server: ServerConfig::builder()
+            .model("gcn")
+            .build()
+            .expect("server config"),
+    })
+    .expect("net server start");
+    let client = NetClient::connect(net.local_addr().to_string(), 2).expect("connect");
+    let mut rng = Rng::new(0xD0_11BACC);
+    let gin_graph = fixture_graph(artifacts.model("gin").unwrap(), &mut rng);
+    let gcn_graph = fixture_graph(artifacts.model("gcn").unwrap(), &mut rng);
+
+    // Before the deploy, gin is not routable.
+    let resp = client.infer("gin", &gin_graph).expect("exchange");
+    assert_eq!(resp.status, WireStatus::Error, "gin must start unknown");
+
+    // Deploy gin pinned to the digest of the local checkout — the same
+    // pin `gengnn deploy --digest` sends.
+    let digest = local_digest(&Artifacts::default_dir(), "gin").expect("local digest");
+    let reply = client.deploy("gin", Some(&digest)).expect("deploy");
+    assert!(reply.is_ok(), "deploy refused: {}", reply.message);
+    let deployed_version = reply.version;
+
+    // It serves real traffic now.
+    let resp = client.infer("gin", &gin_graph).expect("exchange");
+    assert_eq!(resp.status, WireStatus::Ok, "{}", resp.error);
+
+    // LIST_MODELS sees it live.
+    let listing = client.models().expect("list");
+    assert!(listing.is_ok());
+    let doc = gengnn::util::json::Json::parse(&listing.message).expect("registry doc");
+    let live: Vec<(String, bool)> = doc
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .expect("models array")
+        .iter()
+        .map(|m| {
+            (
+                m.get("name").and_then(|v| v.as_str()).unwrap().to_string(),
+                m.get("live").and_then(|v| v.as_bool()).unwrap(),
+            )
+        })
+        .collect();
+    assert!(live.iter().any(|(n, l)| n == "gin" && *l), "{live:?}");
+    assert!(live.iter().any(|(n, l)| n == "gcn" && *l), "{live:?}");
+
+    // Roll back to the pre-deploy serving set (0 = previous). The
+    // rollback is itself a *new* version, never a rewound log.
+    let reply = client.rollback(0).expect("rollback");
+    assert!(reply.is_ok(), "rollback refused: {}", reply.message);
+    assert!(
+        reply.version > deployed_version,
+        "rollback must advance the version ({} -> {})",
+        deployed_version,
+        reply.version
+    );
+
+    // gin is gone from admission; gcn still serves.
+    let resp = client.infer("gin", &gin_graph).expect("exchange");
+    assert_eq!(resp.status, WireStatus::Error, "rolled-back model must be refused");
+    let resp = client.infer("gcn", &gcn_graph).expect("exchange");
+    assert_eq!(resp.status, WireStatus::Ok, "{}", resp.error);
+
+    let listing = client.models().expect("list");
+    let doc = gengnn::util::json::Json::parse(&listing.message).expect("registry doc");
+    let gin_live = doc
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .expect("models array")
+        .iter()
+        .find(|m| m.get("name").and_then(|v| v.as_str()).unwrap() == "gin")
+        .map(|m| m.get("live").and_then(|v| v.as_bool()).unwrap());
+    assert_eq!(gin_live, Some(false), "gin must be staged, not live");
+    net.shutdown();
+}
+
+#[test]
+fn tampered_blob_is_rejected_at_deploy_time() {
+    let Some(dir) = temp_artifacts_copy("tamper") else {
+        return;
+    };
+    // Flip bytes in gin's golden fixture without changing its length,
+    // so the failure is the digest check, not the cheaper size check.
+    let golden = dir.join("gin.golden.json");
+    let mut bytes = std::fs::read(&golden).expect("read golden");
+    let mid = bytes.len() / 2;
+    bytes[mid] = bytes[mid].wrapping_add(1);
+    std::fs::write(&golden, &bytes).expect("tamper golden");
+
+    // Boot serves only the untampered gcn, so startup succeeds.
+    let server = ServerConfig::builder()
+        .artifact_dir(&dir)
+        .model("gcn")
+        .start()
+        .expect("server start");
+    let before = server.registry().version();
+
+    let reply = server.control(&ControlRequest::Load {
+        model: "gin".to_string(),
+        digest: None,
+    });
+    assert!(!reply.ok, "a tampered blob must not deploy");
+    assert!(
+        reply.message.contains("mismatch"),
+        "rejection must name the digest mismatch: {}",
+        reply.message
+    );
+    assert_eq!(
+        server.registry().version(),
+        before,
+        "a refused deploy must not advance the registry"
+    );
+    assert_eq!(server.served_models(), vec!["gcn".to_string()]);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn analyzer_rejected_plan_cannot_become_live() {
+    let Some(dir) = temp_artifacts_copy("analyzer") else {
+        return;
+    };
+    // Corrupt gin's *plan* (not its blobs): a zero out_dim is a
+    // degenerate plan the static analyzer rejects at lowering time.
+    // manifest.json is not a content-addressed blob, so this models a
+    // catalog entry whose bytes verify but whose plan is bad.
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).expect("read manifest");
+    let gin_at = text.find("\"name\": \"gin\"").expect("gin entry");
+    let out_dim_at = gin_at + text[gin_at..].find("\"out_dim\": 1").expect("gin out_dim");
+    let mut patched = text.clone();
+    patched.replace_range(out_dim_at..out_dim_at + "\"out_dim\": 1".len(), "\"out_dim\": 0");
+    std::fs::write(&manifest_path, patched).expect("write manifest");
+
+    let server = ServerConfig::builder()
+        .artifact_dir(&dir)
+        .model("gcn")
+        .start()
+        .expect("server start");
+    let before = server.registry().version();
+
+    let reply = server.control(&ControlRequest::Load {
+        model: "gin".to_string(),
+        digest: None,
+    });
+    assert!(!reply.ok, "an analyzer-rejected plan must not deploy");
+    assert!(
+        reply.message.contains("analyzer") || reply.message.contains("analysis"),
+        "rejection must surface the analyzer verdict: {}",
+        reply.message
+    );
+    assert_eq!(server.registry().version(), before);
+    assert_eq!(server.served_models(), vec!["gcn".to_string()]);
+
+    // The live set still serves after the refused deploy.
+    let responses = server.responses();
+    let Some(artifacts) = artifacts_or_skip() else {
+        server.shutdown();
+        return;
+    };
+    let mut rng = Rng::new(7);
+    let g = fixture_graph(artifacts.model("gcn").unwrap(), &mut rng);
+    let (adm, _) = server.submit("gcn", g);
+    assert_eq!(adm, Admission::Accepted);
+    let r = responses.recv().expect("response");
+    assert!(r.is_ok(), "{:?}", r.output);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unload_then_reload_over_tcp_preserves_bits() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    if artifacts.model("gin").is_err() {
+        return;
+    }
+    let net = NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        reactors: 2,
+        server: ServerConfig::builder()
+            .models(["gcn", "gin"])
+            .build()
+            .expect("server config"),
+    })
+    .expect("net server start");
+    let client = NetClient::connect(net.local_addr().to_string(), 2).expect("connect");
+    let mut rng = Rng::new(0xB17_E8AC);
+    let g = fixture_graph(artifacts.model("gin").unwrap(), &mut rng);
+
+    let before = client.infer("gin", &g).expect("exchange");
+    assert_eq!(before.status, WireStatus::Ok, "{}", before.error);
+
+    let reply = client.undeploy("gin").expect("undeploy");
+    assert!(reply.is_ok(), "{}", reply.message);
+    let resp = client.infer("gin", &g).expect("exchange");
+    assert_eq!(resp.status, WireStatus::Error, "unloaded model must be refused");
+
+    let reply = client.deploy("gin", None).expect("redeploy");
+    assert!(reply.is_ok(), "{}", reply.message);
+    let after = client.infer("gin", &g).expect("exchange");
+    assert_eq!(after.status, WireStatus::Ok, "{}", after.error);
+    assert_eq!(
+        before.output.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        after.output.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "an unload/reload cycle must not change a single output bit"
+    );
+    net.shutdown();
+}

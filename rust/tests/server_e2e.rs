@@ -5,7 +5,7 @@
 //! if that directory has been stripped, each test skips with a notice
 //! (regenerate with `make artifacts`).
 
-use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::coordinator::{Admission, AdmissionPolicy, Server, ServerConfig};
 use gengnn::datagen::{molecular_graph, MolConfig};
 use gengnn::util::rng::Rng;
 
@@ -28,16 +28,14 @@ fn server_with_lanes(
         return None;
     }
     Some(
-        Server::start(ServerConfig {
-            models: models.iter().map(|s| s.to_string()).collect(),
-            prep_workers: 2,
-            executor_lanes: lanes,
-            queue_capacity: queue,
-            admission,
-            batch: BatchPolicy::default(),
-            ..ServerConfig::default()
-        })
-        .expect("server start"),
+        ServerConfig::builder()
+            .models(models.iter().copied())
+            .prep_workers(2)
+            .executor_lanes(lanes)
+            .queue_capacity(queue)
+            .admission(admission)
+            .start()
+            .expect("server start"),
     )
 }
 

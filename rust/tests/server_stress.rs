@@ -18,7 +18,7 @@ use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
+use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, ServerConfig};
 use gengnn::datagen::{random_graph, RandomGraphConfig};
 use gengnn::util::rng::Rng;
 
@@ -53,19 +53,18 @@ struct Outcome {
 /// lost/duplicated response or metrics mismatch.
 fn stress(policy: AdmissionPolicy, lanes: usize, queue: usize, producers: u64, per_producer: u64) {
     let server = Arc::new(
-        Server::start(ServerConfig {
-            models: MODELS.iter().map(|s| s.to_string()).collect(),
-            prep_workers: 2,
-            executor_lanes: lanes,
-            queue_capacity: queue,
-            admission: policy,
-            batch: BatchPolicy {
+        ServerConfig::builder()
+            .models(MODELS.iter().copied())
+            .prep_workers(2)
+            .executor_lanes(lanes)
+            .queue_capacity(queue)
+            .admission(policy)
+            .batch(BatchPolicy {
                 max_batch: 4,
                 sticky: true,
-            },
-            ..ServerConfig::default()
-        })
-        .unwrap_or_else(|e| panic!("server start ({}): {e:#}", policy.as_str())),
+            })
+            .start()
+            .unwrap_or_else(|e| panic!("server start ({}): {e:#}", policy.as_str())),
     );
 
     // Concurrent drainer: collects every response until the channel
