@@ -5,7 +5,7 @@
 
 .PHONY: build test check fmt clippy doc artifacts artifacts-golden \
 	bench-snapshot serve loadgen loadgen-deadline-smoke deploy-smoke \
-	check-artifacts check-plans lint-plans clean
+	resident-smoke check-artifacts check-plans lint-plans clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -92,6 +92,31 @@ deploy-smoke: build
 	./target/release/gengnn deploy --rollback 0 --addr $(DEPLOY_ADDR); \
 	./target/release/gengnn models --addr $(DEPLOY_ADDR) --json \
 		| python3 python/tools/check_registry_state.py --live gcn --staged gin
+
+# Resident-serving smoke (CI's bench-smoke resident step): boot a
+# server hosting the Cora-scale resident graph, drive a mixed
+# molecular/query/mutate scenario stream over a diurnal schedule, and
+# require the exported snapshot to reconcile and carry nonzero
+# resident series (queries completed, mutation ops applied). The
+# fanout cap keeps 2-hop closures inside the resident plan's 512-node
+# capacity on hub-heavy citation graphs (see docs/SCENARIOS.md).
+RESIDENT_ADDR ?= 127.0.0.1:17449
+resident-smoke: build
+	@set -e; \
+	./target/release/gengnn serve --listen $(RESIDENT_ADDR) --models gcn \
+		--resident cora --lanes 2 --duration 120 & \
+	pid=$$!; \
+	trap 'kill $$pid 2>/dev/null || true' EXIT; \
+	sleep 3; \
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_resident_smoke.json \
+		./target/release/gengnn loadgen --addr $(RESIDENT_ADDR) \
+		--rps 100 --count 200 --connections 2 --models gcn \
+		--scenario molecular:1,query:2,mutate:1 --diurnal \
+		--query-hops 2 --query-fanout 8 --resident-nodes 2708; \
+	python3 python/tools/check_bench_schema.py BENCH_resident_smoke.json \
+		--schema BENCH_seed.json --require-measured \
+		--require-result "loadgen/query_completed>0" \
+		--require-result "loadgen/mutate_applied>0"
 
 # Re-validate the checked-in golden/manifest fixtures (CI's
 # artifacts-integrity job).

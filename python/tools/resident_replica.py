@@ -1,0 +1,542 @@
+#!/usr/bin/env python3
+"""No-toolchain validation harness for `rust/src/resident/` +
+`rust/src/datagen/citation.rs`: a scalar Python replica of resident
+large-graph serving — the copy-on-write snapshot store, the
+deterministic k-hop extractor, and the exactness contract that a
+forward over the extracted closure is **bit-identical** to a
+full-graph forward restricted to the seed rows, across interleaved
+mutation batches.
+
+Replicated design points under test:
+
+* xoshiro256**/SplitMix64 PRNG and the preferential-attachment
+  citation generator, including the deterministic lexicographic fill
+  that guarantees the *exact* Table 5 edge counts (Cora 10,556,
+  CiteSeer 9,104, PubMed 88,648 directed edges) — no self-loops, no
+  duplicate undirected edges, deterministic per seed;
+* copy-on-write mutation batches: per-op validation (self-loops,
+  out-of-range endpoints, duplicate/missing edges, wrong feature
+  width) rejects the op but not the batch; an all-rejected batch
+  publishes nothing and leaves the version unchanged;
+* the three pillars of the bit-exactness argument (see
+  `rust/src/resident/extract.rs`): complete closure when
+  `hops >= layers` and `fanout == 0`, monotone ascending-global-id
+  relabeling preserving the ascending-neighbor f32 accumulation
+  order, and the snapshot's *full-graph* Fiedler vector restricted to
+  the closure (scalar port of `rust/src/graph/spectral.rs`, same
+  iteration/deflation/sum order in f64);
+* the negative control: a 1-hop closure under a 2-layer model really
+  does diverge (the server's hops-rejection rule is load-bearing);
+* client deadline propagation: the retry TTL shrink sequence of
+  `NetClient::shrink_ttl` (budget minus elapsed, `None` once spent).
+
+The forward itself reuses `plan_replica.py`'s DGN port (sorted
+in-neighbor scalar aggregation over the from-scratch MT19937 weight
+init) — one numeric substrate, no drifting copies.
+
+Usage: python3 python/tools/resident_replica.py [--seed S]
+
+This validates the *design*; the Rust implementation itself is gated
+by `cargo test --release --test resident_e2e` where a toolchain
+exists.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+import plan_replica as pr  # noqa: E402  (same-directory import)
+
+F = np.float32
+M64 = (1 << 64) - 1
+
+TABLE5 = {
+    # name: (nodes, directed edges, feature dim, classes)
+    "Cora": (2708, 10_556, 1433, 7),
+    "CiteSeer": (3327, 9104, 3703, 6),
+    "PubMed": (19_717, 88_648, 500, 3),
+}
+
+RESIDENT_LAYERS = 2
+RESIDENT_DIM = 64
+EIG_MAX_ITER, EIG_TOL = 400, 1e-9
+
+
+# ------------------------------------------------------------------ PRNG
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+def _splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs: xoshiro256** seeded via SplitMix64."""
+
+    def __init__(self, seed: int):
+        s, sm = [], seed & M64
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        r = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        # Lemire without modulo bias, as in Rust.
+        x = self.next_u64()
+        m = x * n
+        low = m & M64
+        if low < n:
+            t = ((1 << 64) - n) % n
+            while low < t:
+                x = self.next_u64()
+                m = x * n
+                low = m & M64
+        return m >> 64
+
+    def chance(self, p: float) -> bool:
+        return self.f64() < p
+
+
+# ------------------------------------------------- citation generator
+def citation_graph(seed: int, n: int, m_directed: int, f: int):
+    """Port of datagen/citation.rs: returns (undirected edge list,
+    features[n*f]) with the exact edge budget."""
+    rng = Rng(seed)
+    target_und = m_directed // 2
+    m_per = max(int(round(target_und / max(n, 1))), 1)
+
+    und, seen = [], set()
+    repeated = [0]
+    for v in range(1, n):
+        k = min(m_per, v)
+        attached = attempts = 0
+        while attached < k and attempts < 20 * k:
+            attempts += 1
+            if rng.chance(0.9):
+                u = repeated[rng.below(len(repeated))]
+            else:
+                u = rng.below(v)
+            if u == v:
+                continue
+            e = (min(u, v), max(u, v))
+            if e not in seen:
+                seen.add(e)
+                und.append(e)
+                repeated.append(e[0])
+                repeated.append(e[1])
+                attached += 1
+    guard = 0
+    while len(und) < target_und and guard < 50 * target_und:
+        guard += 1
+        u = repeated[rng.below(len(repeated))]
+        v = rng.below(n)
+        if u == v:
+            continue
+        e = (min(u, v), max(u, v))
+        if e not in seen:
+            seen.add(e)
+            und.append(e)
+            repeated.append(e[0])
+            repeated.append(e[1])
+    # Deterministic lexicographic fill (the exact-count guarantee).
+    if len(und) < target_und:
+        for u in range(n):
+            if len(und) >= target_und:
+                break
+            for v in range(u + 1, n):
+                if len(und) >= target_und:
+                    break
+                if (u, v) not in seen:
+                    seen.add((u, v))
+                    und.append((u, v))
+    und = und[:target_und]
+
+    nnz_per_node = int(np.ceil(f * 0.01))
+    feat = np.zeros(n * f, dtype=F)
+    for v in range(n):
+        for _ in range(nnz_per_node):
+            feat[v * f + rng.below(f)] = F(1.0)
+    return und, feat
+
+
+# ------------------------------------------------------ resident store
+class Snapshot:
+    """Immutable published graph state: canonical undirected edge set,
+    sorted adjacency, features, lazily solved full-graph Fiedler."""
+
+    def __init__(self, version, n, f, edges, features):
+        self.version = version
+        self.n = n
+        self.f = f
+        self.edges = edges  # frozenset of (u, v), u < v
+        self.features = features  # np.float32 [n * f]
+        self.nbrs = [[] for _ in range(n)]
+        for u, v in edges:
+            self.nbrs[u].append(v)
+            self.nbrs[v].append(u)
+        for row in self.nbrs:
+            row.sort()
+        self._eig = None
+
+    def feature_row(self, v):
+        return self.features[v * self.f : (v + 1) * self.f]
+
+    def eig(self):
+        if self._eig is None:
+            self._eig = fiedler(self.n, self.nbrs, EIG_MAX_ITER, EIG_TOL)
+        return self._eig
+
+
+class Store:
+    """Copy-on-write mutation semantics of resident/store.rs."""
+
+    def __init__(self, n, und, features, f):
+        assert all(u != v for u, v in und), "seed graph has a self-loop"
+        edges = {(min(u, v), max(u, v)) for u, v in und}
+        assert len(edges) == len(und), "seed graph has duplicate edges"
+        self.live = Snapshot(1, n, f, frozenset(edges), np.asarray(features, dtype=F))
+
+    def snapshot(self) -> Snapshot:
+        return self.live
+
+    def version(self) -> int:
+        return self.live.version
+
+    def apply(self, ops):
+        cur = self.live
+        edges = set(cur.edges)
+        n = cur.n
+        features = None
+        applied = rejected = 0
+        for op in ops:
+            kind = op[0]
+            if kind == "add_edge":
+                _, u, v = op
+                ok = u != v and u < n and v < n and (min(u, v), max(u, v)) not in edges
+                if ok:
+                    edges.add((min(u, v), max(u, v)))
+            elif kind == "remove_edge":
+                _, u, v = op
+                e = (min(u, v), max(u, v))
+                ok = e in edges
+                if ok:
+                    edges.remove(e)
+            elif kind == "add_node":
+                feat = op[1]
+                ok = len(feat) == cur.f and cur.f > 0
+                if ok:
+                    if features is None:
+                        features = list(cur.features)
+                    features.extend(F(x) for x in feat)
+                    n += 1
+            else:
+                raise ValueError(kind)
+            if ok:
+                applied += 1
+            else:
+                rejected += 1
+        if applied == 0:
+            return applied, rejected, cur.version
+        feats = np.asarray(features, dtype=F) if features is not None else cur.features
+        self.live = Snapshot(cur.version + 1, n, cur.f, frozenset(edges), feats)
+        return applied, rejected, self.live.version
+
+
+# ---------------------------------------------------------- eigensolve
+def fiedler(n, nbrs, max_iter, tol):
+    """Scalar f64 port of graph/spectral.rs::fiedler_vector_csr over
+    sorted adjacency (the CSR row order of a mirrored sorted edge set
+    is ascending — same accumulation order, same IEEE results)."""
+    if n == 0:
+        return np.zeros(0, dtype=F)
+    deg = [float(len(nbrs[i])) for i in range(n)]
+    dinv_sqrt = [1.0 / np.sqrt(d) if d > 0.0 else 0.0 for d in deg]
+
+    v0 = [np.sqrt(d) for d in deg]
+    norm0 = _l2(v0)
+    if norm0 > 0.0:
+        v0 = [x / norm0 for x in v0]
+
+    def matvec(v, out):
+        for i in range(n):
+            acc = 0.0
+            for j in nbrs[i]:
+                acc += dinv_sqrt[j] * v[j]
+            out[i] = v[i] + dinv_sqrt[i] * acc
+
+    v = []
+    for i in range(n):
+        h = _rotl((i * 0x9E3779B97F4A7C15) & M64, 31)
+        v.append(h / float(M64) - 0.5)
+    _deflate(v, v0)
+    _normalize(v)
+
+    tmp = [0.0] * n
+    for it in range(max_iter):
+        matvec(v, tmp)
+        _deflate(tmp, v0)
+        norm = _l2(tmp)
+        if norm < 1e-30:
+            break
+        tmp = [x / norm for x in tmp]
+        delta = np.sqrt(sum((a - b) * (a - b) for a, b in zip(v, tmp)))
+        v = list(tmp)
+        if delta < tol and it > 2:
+            break
+
+    imax = 0
+    for i in range(n):
+        if abs(v[i]) > abs(v[imax]):
+            imax = i
+    if v[imax] < 0.0:
+        v = [-x for x in v]
+    return np.asarray(v, dtype=F)
+
+
+def _l2(v):
+    return np.sqrt(sum(x * x for x in v))
+
+
+def _normalize(v):
+    n = _l2(v)
+    if n > 0.0:
+        for i in range(len(v)):
+            v[i] /= n
+
+
+def _deflate(v, v0):
+    dot = sum(a * b for a, b in zip(v, v0))
+    for i in range(len(v)):
+        v[i] -= dot * v0[i]
+
+
+# ---------------------------------------------------------- extraction
+def extract_khop(snap: Snapshot, seeds, hops, fanout, cap):
+    """Port of resident/extract.rs: BFS closure with ascending
+    expansion, monotone relabeling, restricted full-graph eig."""
+    assert seeds, "no seeds"
+    closure = set()
+    for s in seeds:
+        assert s < snap.n, f"seed {s} out of range"
+        assert s not in closure, f"duplicate seed {s}"
+        closure.add(s)
+    assert len(closure) <= cap
+    frontier = sorted(closure)
+    for _ in range(hops):
+        if not frontier:
+            break
+        nxt = []
+        for v in frontier:
+            row = snap.nbrs[v]
+            take = len(row) if fanout == 0 else min(fanout, len(row))
+            for u in row[:take]:
+                if u not in closure:
+                    closure.add(u)
+                    if len(closure) > cap:
+                        raise AssertionError(f"extraction spans {len(closure)}+ nodes, cap {cap}")
+                    nxt.append(u)
+        frontier = sorted(nxt)
+
+    nodes = sorted(closure)
+    local = {g: i for i, g in enumerate(nodes)}
+    seed_locals = [local[s] for s in seeds]
+    x = np.stack([snap.feature_row(g) for g in nodes]).astype(F)
+    edges = []
+    for li, g in enumerate(nodes):
+        for u in snap.nbrs[g]:
+            if u in local:
+                edges.append((local[u], li))
+    eig_full = snap.eig()
+    eig = np.asarray([eig_full[g] for g in nodes], dtype=F)
+    return nodes, seed_locals, (len(nodes), edges, x, snap.f, None, 0), eig
+
+
+def full_coo(snap: Snapshot):
+    edges = []
+    for u, v in sorted(snap.edges):
+        edges.append((u, v))
+        edges.append((v, u))
+    x = snap.features.reshape(snap.n, snap.f)
+    return (snap.n, edges, x, snap.f, None, 0)
+
+
+def dgn_forward(ws, g, eig, out_dim):
+    n = g[0]
+    flat = pr.sparse_dgn(ws, RESIDENT_LAYERS, True, n, g, eig)
+    return np.asarray(flat, dtype=F).reshape(n, out_dim)
+
+
+def bits(a) -> bytes:
+    return np.ascontiguousarray(np.asarray(a, dtype=F)).view(np.uint32).tobytes()
+
+
+# -------------------------------------------------------------- trials
+def toy_store():
+    """The 40-node ring + distance-7 chords shared with the Rust pins."""
+    n, f = 40, 8
+    und = []
+    for i in range(n):
+        und.append((i, (i + 1) % n))
+        und.append((i, (i + 7) % n))
+    feat = np.asarray(
+        [1.0 if (k * 2654435761) % 7 < 3 else 0.0 for k in range(n * f)], dtype=F
+    )
+    return Store(n, und, feat, f), f
+
+
+def trial_citation_exact_counts():
+    for name, (n, m, f, _classes) in TABLE5.items():
+        und, feat = citation_graph(1, n, m, f)
+        assert len(und) == m // 2, f"{name}: {len(und)} und edges vs {m // 2}"
+        assert all(u != v for u, v in und), f"{name}: self-loop"
+        assert len(set(und)) == len(und), f"{name}: duplicate edge"
+        assert all(0 <= u < n and 0 <= v < n for u, v in und), f"{name}: range"
+        nnz = int(np.count_nonzero(feat))
+        assert 0 < nnz <= n * int(np.ceil(f * 0.01)), f"{name}: feature nnz {nnz}"
+    # Determinism per seed; distinct seeds give distinct graphs.
+    a1, _ = citation_graph(9, 500, 2000, 8)
+    a2, _ = citation_graph(9, 500, 2000, 8)
+    b, _ = citation_graph(10, 500, 2000, 8)
+    assert a1 == a2 and a1 != b and len(a1) == len(b) == 1000
+    return "citation counts exact (Cora/CiteSeer/PubMed)"
+
+
+def trial_lexicographic_fill_closes_the_gap():
+    # Near-clique budget: 12 nodes, 60 of the 66 possible edges — the
+    # stochastic top-up alone collides too often to be guaranteed; the
+    # fill must close the count exactly anyway.
+    und, _ = citation_graph(3, 12, 120, 4)
+    assert len(und) == 60, len(und)
+    assert len(set(und)) == 60
+    return "lexicographic fill exact (60/66 near-clique)"
+
+
+def trial_khop_bitwise_across_mutations(weight_seed):
+    store, f = toy_store()
+    out_dim = 7  # Cora-shaped resident head
+    ws = pr.build_weights("dgn", weight_seed, f, RESIDENT_DIM, RESIDENT_LAYERS, 0, 0, out_dim)
+    seeds = [3, 17, 30]
+    mutations = [
+        [],
+        [("add_edge", 3, 20), ("remove_edge", 17, 18)],
+        [("add_node", [1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]), ("add_edge", 30, 40)],
+    ]
+    for round_i, ops in enumerate(mutations):
+        if ops:
+            applied, rejected, version = store.apply(ops)
+            assert (applied, rejected) == (len(ops), 0)
+            assert version == round_i + 1
+        snap = store.snapshot()
+        full = dgn_forward(ws, full_coo(snap), snap.eig(), out_dim)
+        nodes, seed_locals, g, eig = extract_khop(snap, seeds, RESIDENT_LAYERS, 0, 512)
+        assert len(nodes) < snap.n, "closure must be a strict subgraph here"
+        ex = dgn_forward(ws, g, eig, out_dim)
+        for s, li in zip(seeds, seed_locals):
+            assert bits(ex[li]) == bits(full[s]), (
+                f"round {round_i}: seed {s} diverged from full-graph bits"
+            )
+    return "k-hop bitwise == full graph across 3 mutation rounds"
+
+
+def trial_shallow_hops_diverge(weight_seed):
+    store, f = toy_store()
+    out_dim = 7
+    ws = pr.build_weights("dgn", weight_seed, f, RESIDENT_DIM, RESIDENT_LAYERS, 0, 0, out_dim)
+    snap = store.snapshot()
+    full = dgn_forward(ws, full_coo(snap), snap.eig(), out_dim)
+    _, seed_locals, g, eig = extract_khop(snap, [3], 1, 0, 512)
+    ex = dgn_forward(ws, g, eig, out_dim)
+    assert bits(ex[seed_locals[0]]) != bits(full[3]), "1-hop closure must diverge"
+    return "1-hop closure diverges (rejection rule is load-bearing)"
+
+
+def trial_fanout_caps_extraction():
+    store, _ = toy_store()
+    snap = store.snapshot()
+    nodes_full, _, _, _ = extract_khop(snap, [3], 2, 0, 512)
+    nodes_capped, _, _, _ = extract_khop(snap, [3], 2, 2, 512)
+    assert len(nodes_capped) < len(nodes_full), (len(nodes_capped), len(nodes_full))
+    return f"fanout caps closure ({len(nodes_capped)} < {len(nodes_full)} nodes)"
+
+
+def trial_mutation_validation():
+    store, f = toy_store()
+    v0 = store.version()
+    # Every op invalid: nothing publishes.
+    applied, rejected, version = store.apply(
+        [
+            ("add_edge", 5, 5),          # self-loop
+            ("add_edge", 0, 1),          # already present
+            ("add_edge", 0, 4000),       # out of range
+            ("remove_edge", 2, 25),      # not present
+            ("add_node", [1.0] * (f + 1)),  # wrong width
+        ]
+    )
+    assert (applied, rejected, version) == (0, 5, v0), (applied, rejected, version)
+    assert store.version() == v0
+    # Mixed batch: valid ops land, invalid ones only count.
+    applied, rejected, version = store.apply(
+        [("add_edge", 0, 2), ("add_edge", 0, 2)]
+    )
+    assert (applied, rejected, version) == (1, 1, v0 + 1)
+    snap = store.snapshot()
+    assert (0, 2) in snap.edges
+    return "mutation validation (all-rejected batch publishes nothing)"
+
+
+def trial_deadline_budget_shrinks():
+    def shrink(budget_ms, elapsed_ms):
+        if elapsed_ms >= budget_ms:
+            return None
+        return budget_ms - elapsed_ms
+
+    seq = [shrink(100, e) for e in (0, 30, 70, 100, 250)]
+    assert seq == [100, 70, 30, None, None], seq
+    assert shrink(0, 0) is None
+    return "retry TTL shrink sequence 100→70→30→None"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=20180414, help="weight seed")
+    args = ap.parse_args()
+    results = [
+        trial_citation_exact_counts(),
+        trial_lexicographic_fill_closes_the_gap(),
+        trial_khop_bitwise_across_mutations(args.seed),
+        trial_shallow_hops_diverge(args.seed),
+        trial_fanout_caps_extraction(),
+        trial_mutation_validation(),
+        trial_deadline_budget_shrinks(),
+    ]
+    for r in results:
+        print("ok:", r, flush=True)
+    print("ALL RESIDENT REPLICA TRIALS PASSED")
+
+
+if __name__ == "__main__":
+    main()

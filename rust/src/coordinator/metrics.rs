@@ -79,6 +79,43 @@ pub struct NetCounters {
     pub responses_dropped: AtomicU64,
 }
 
+/// Resident graph-serving counters, updated lock-free by the reactor
+/// threads handling `GRAPH_QUERY` / `GRAPH_MUTATE` frames and by the
+/// response pump. `snapshot_version` and `extraction_nodes_max` are
+/// gauges; everything else is monotonic.
+#[derive(Default)]
+pub struct ResidentCounters {
+    /// k-hop queries whose neighborhood was extracted and dispatched
+    /// toward admission (a later shed also lands in
+    /// `queries_rejected`).
+    pub queries: AtomicU64,
+    /// Queries refused: not resident, hops below the layer count, bad
+    /// seeds, extraction over the node cap, or shed by backpressure /
+    /// parked-TTL expiry after extraction.
+    pub queries_rejected: AtomicU64,
+    /// Mutation batches that published a new snapshot.
+    pub mutations_applied: AtomicU64,
+    /// Individual mutation ops rejected inside batches (duplicate
+    /// edges, unknown endpoints, feature-width mismatches).
+    pub mutation_ops_rejected: AtomicU64,
+    /// Version of the live snapshot (gauge; 0 before the store boots).
+    pub snapshot_version: AtomicU64,
+    /// Total nodes across all extracted k-hop neighborhoods (divide by
+    /// `queries` for the mean extraction size).
+    pub extraction_nodes: AtomicU64,
+    /// Largest extracted neighborhood seen so far (gauge).
+    pub extraction_nodes_max: AtomicU64,
+}
+
+impl ResidentCounters {
+    /// Record one admitted query that extracted `nodes` closure nodes.
+    pub fn record_query(&self, nodes: u64) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.extraction_nodes.fetch_add(nodes, Ordering::Relaxed);
+        self.extraction_nodes_max.fetch_max(nodes, Ordering::Relaxed);
+    }
+}
+
 /// Thread-safe metrics registry shared across server stages.
 pub struct Metrics {
     shards: RwLock<BTreeMap<String, Mutex<ModelMetrics>>>,
@@ -90,6 +127,7 @@ pub struct Metrics {
     /// dispatch, or lane).
     deadline_expired: AtomicU64,
     net: NetCounters,
+    resident: ResidentCounters,
     /// Fused interpreter passes executed (each covering ≥ 2 requests).
     fused_batches: AtomicU64,
     /// Requests served through a fused pass (subset of completed).
@@ -122,6 +160,7 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             deadline_expired: AtomicU64::new(0),
             net: NetCounters::default(),
+            resident: ResidentCounters::default(),
             fused_batches: AtomicU64::new(0),
             fused_graphs: AtomicU64::new(0),
             last_fused_size: AtomicU64::new(0),
@@ -132,6 +171,11 @@ impl Metrics {
     /// The wire front-end's counter block.
     pub fn net(&self) -> &NetCounters {
         &self.net
+    }
+
+    /// The resident graph-serving counter block.
+    pub fn resident(&self) -> &ResidentCounters {
+        &self.resident
     }
 
     /// Record one completed request into the end-to-end latency
@@ -341,6 +385,22 @@ impl Metrics {
                 self.net.responses_dropped.load(Ordering::Relaxed),
             ));
         }
+        let rq = self.resident.queries.load(Ordering::Relaxed);
+        let rm = self.resident.mutations_applied.load(Ordering::Relaxed);
+        if rq > 0 || rm > 0 {
+            let nodes = self.resident.extraction_nodes.load(Ordering::Relaxed);
+            out.push_str(&format!(
+                "resident: {} queries ({} rejected), {} mutations ({} ops rejected), \
+                 snapshot v{}, extraction avg {:.1} / max {} nodes\n",
+                rq,
+                self.resident.queries_rejected.load(Ordering::Relaxed),
+                rm,
+                self.resident.mutation_ops_rejected.load(Ordering::Relaxed),
+                self.resident.snapshot_version.load(Ordering::Relaxed),
+                if rq > 0 { nodes as f64 / rq as f64 } else { 0.0 },
+                self.resident.extraction_nodes_max.load(Ordering::Relaxed),
+            ));
+        }
         out.push_str(&format!(
             "throughput {:.1} graphs/s, rejected {}, deadline expired {}\n",
             self.throughput(),
@@ -463,6 +523,31 @@ mod tests {
         assert!(r.contains("3 conns accepted (2 open)"), "{r}");
         assert!(r.contains("1 decode errors"), "{r}");
         assert!(r.contains("e2e latency: p50"), "{r}");
+    }
+
+    #[test]
+    fn resident_counters_render_when_active() {
+        let m = Metrics::new();
+        assert!(!m.render().contains("resident:"), "idle stays silent");
+        m.resident().record_query(12);
+        m.resident().record_query(40);
+        m.resident().queries_rejected.fetch_add(1, Ordering::Relaxed);
+        m.resident().mutations_applied.fetch_add(3, Ordering::Relaxed);
+        m.resident()
+            .mutation_ops_rejected
+            .fetch_add(2, Ordering::Relaxed);
+        m.resident().snapshot_version.store(4, Ordering::Relaxed);
+        assert_eq!(m.resident().queries.load(Ordering::Relaxed), 2);
+        assert_eq!(m.resident().extraction_nodes.load(Ordering::Relaxed), 52);
+        assert_eq!(
+            m.resident().extraction_nodes_max.load(Ordering::Relaxed),
+            40
+        );
+        let r = m.render();
+        assert!(r.contains("resident: 2 queries (1 rejected)"), "{r}");
+        assert!(r.contains("3 mutations (2 ops rejected)"), "{r}");
+        assert!(r.contains("snapshot v4"), "{r}");
+        assert!(r.contains("avg 26.0 / max 40 nodes"), "{r}");
     }
 
     #[test]

@@ -39,7 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::CooGraph;
 use crate::registry::{ControlReply, ControlRequest, ModelRegistry};
-use crate::runtime::Artifacts;
+use crate::runtime::{Artifacts, ModelMeta};
 use crate::util::pool::Channel;
 
 use super::backpressure::{Admission, AdmissionPolicy, TrySubmit};
@@ -78,6 +78,11 @@ pub struct ServerConfig {
     /// bit-identical to per-request outputs, so this is a pure
     /// throughput knob like `executor_lanes`.
     pub fuse_max_graphs: usize,
+    /// Catalog entries injected in-memory at registry open (no on-disk
+    /// artifacts of their own) — the resident serving mode registers
+    /// its synthesized DGN variant here. See
+    /// [`crate::registry::ModelRegistry::open_with_synthetic`].
+    pub synthetic_models: Vec<ModelMeta>,
 }
 
 impl ServerConfig {
@@ -100,6 +105,7 @@ impl Default for ServerConfig {
             admission: AdmissionPolicy::Block,
             batch: BatchPolicy::default(),
             fuse_max_graphs: 8,
+            synthetic_models: Vec::new(),
         }
     }
 }
@@ -166,6 +172,12 @@ impl ServerConfigBuilder {
         self
     }
 
+    /// Inject in-memory catalog entries (resident serving mode).
+    pub fn synthetic_models(mut self, metas: Vec<ModelMeta>) -> Self {
+        self.cfg.synthetic_models = metas;
+        self
+    }
+
     /// Validate and produce the configuration.
     pub fn build(self) -> Result<ServerConfig> {
         let cfg = self.cfg;
@@ -222,8 +234,12 @@ impl Server {
     /// steady-state).
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let registry = Arc::new(
-            ModelRegistry::open(cfg.artifact_dir.clone(), &cfg.models)
-                .context("opening model registry for server")?,
+            ModelRegistry::open_with_synthetic(
+                cfg.artifact_dir.clone(),
+                &cfg.models,
+                cfg.synthetic_models.clone(),
+            )
+            .context("opening model registry for server")?,
         );
         let served = registry.snapshot().model_names();
         if served.is_empty() {

@@ -35,6 +35,26 @@ impl CitationDataset {
         }
     }
 
+    /// Label-space size of the real dataset — the resident model's
+    /// output width (Cora 7, CiteSeer 6, PubMed 3).
+    pub fn num_classes(&self) -> usize {
+        match self {
+            CitationDataset::Cora => 7,
+            CitationDataset::CiteSeer => 6,
+            CitationDataset::PubMed => 3,
+        }
+    }
+
+    /// Parse a CLI spelling, case-insensitively.
+    pub fn parse(s: &str) -> anyhow::Result<CitationDataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "cora" => Ok(CitationDataset::Cora),
+            "citeseer" => Ok(CitationDataset::CiteSeer),
+            "pubmed" => Ok(CitationDataset::PubMed),
+            _ => anyhow::bail!("unknown citation dataset {s:?} (cora|citeseer|pubmed)"),
+        }
+    }
+
     pub fn all() -> [CitationDataset; 3] {
         [
             CitationDataset::Cora,
@@ -97,6 +117,23 @@ pub fn citation_graph(seed: u64, n: usize, m_directed: usize, f: usize) -> CooGr
             repeated.push(e.1);
         }
     }
+    // Deterministic lexicographic fill: on dense graphs the stochastic
+    // top-up can exhaust its guard budget in collisions, leaving the
+    // count short of Table 5. Walking (u, v) pairs in order closes the
+    // gap exactly whenever target_und <= n*(n-1)/2.
+    'fill: for u in 0..n as u32 {
+        if und.len() >= target_und {
+            break;
+        }
+        for v in (u + 1)..n as u32 {
+            if und.len() >= target_und {
+                break 'fill;
+            }
+            if seen.insert((u, v)) {
+                und.push((u, v));
+            }
+        }
+    }
     und.truncate(target_und);
 
     // Sparse bag-of-words features: ~1% nonzero, like the real datasets.
@@ -132,15 +169,41 @@ mod tests {
     use super::*;
 
     #[test]
-    fn matches_table5_counts() {
+    fn matches_table5_counts_exactly() {
         for which in CitationDataset::all() {
             let (n, m, f) = which.stats();
             let g = dataset(which, 1);
             assert_eq!(g.n, n);
             assert_eq!(g.f_node, f);
-            let err = (g.num_edges() as f64 - m as f64).abs() / m as f64;
-            assert!(err < 0.02, "{}: edges {} vs {}", which.name(), g.num_edges(), m);
+            assert_eq!(
+                g.num_edges(),
+                m,
+                "{}: edges {} vs Table 5's {}",
+                which.name(),
+                g.num_edges(),
+                m
+            );
         }
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicate_edges() {
+        for seed in [1, 5, 11] {
+            let g = citation_graph(seed, 800, 3200, 8);
+            let mut seen = std::collections::HashSet::new();
+            for &(s, d) in &g.edges {
+                assert_ne!(s, d, "seed {seed}: self-loop at {s}");
+                assert!(seen.insert((s, d)), "seed {seed}: duplicate edge {s}->{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_give_distinct_graphs() {
+        let a = citation_graph(9, 500, 2000, 8);
+        let b = citation_graph(10, 500, 2000, 8);
+        assert_ne!(a, b);
+        assert_eq!(a.num_edges(), b.num_edges());
     }
 
     #[test]
@@ -172,6 +235,17 @@ mod tests {
         let want = m0 as f64 / n0 as f64;
         let got = g.num_edges() as f64 / g.n as f64;
         assert!((got - want).abs() / want < 0.25, "density {got} vs {want}");
+    }
+
+    #[test]
+    fn parse_accepts_case_insensitive_names() {
+        assert_eq!(CitationDataset::parse("cora").unwrap(), CitationDataset::Cora);
+        assert_eq!(
+            CitationDataset::parse("CiteSeer").unwrap(),
+            CitationDataset::CiteSeer
+        );
+        assert_eq!(CitationDataset::parse("PUBMED").unwrap(), CitationDataset::PubMed);
+        assert!(CitationDataset::parse("reddit").is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod models;
 pub mod net;
 pub mod registry;
 pub mod report;
+pub mod resident;
 pub mod resources;
 pub mod runtime;
 pub mod sim;

@@ -9,10 +9,17 @@
 //!                       disable) and print latency + per-lane/fused
 //!                       metrics; with --listen ADDR, expose the wire
 //!                       protocol over TCP instead (--reactors N
-//!                       event-loop threads, --duration S to exit)
+//!                       event-loop threads, --duration S to exit);
+//!                       --resident DATASET (cora/citeseer/pubmed)
+//!                       additionally hosts a resident citation graph
+//!                       serving v4 GRAPH_QUERY / GRAPH_MUTATE ops
 //! gengnn loadgen        open-loop load generator against a serving
 //!                       front-end: --addr, --rps, --count, model mix,
 //!                       --ttl-ms / --priority-mix QoS profile;
+//!                       --scenario molecular:N,query:N,mutate:N mixes
+//!                       resident traffic in (--query-hops/--query-fanout
+//!                       /--resident-nodes shape it), --diurnal bends
+//!                       the schedule along a sinusoidal rate curve;
 //!                       reports p50/p95/p99 + throughput
 //! gengnn deploy         drive the v3 control plane of a running
 //!                       server: `deploy <model> [--digest D]` makes a
@@ -45,10 +52,11 @@
 use anyhow::{bail, Result};
 
 use gengnn::coordinator::{Admission, AdmissionPolicy, BatchPolicy, Server, ServerConfig};
-use gengnn::datagen::{molecular, MolConfig};
+use gengnn::datagen::{molecular, CitationDataset, MolConfig};
 use gengnn::models::ModelConfig;
 use gengnn::net::{loadgen, LoadGenConfig, NetClient, NetServer, NetServerConfig};
 use gengnn::report::{fig7, fig8, fig9, table4, table5};
+use gengnn::resident::ResidentState;
 use gengnn::runtime::{Artifacts, Engine, Golden};
 use gengnn::sim::{Accelerator, PipelineMode};
 use gengnn::util::cli::Args;
@@ -81,7 +89,7 @@ fn print_usage() {
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
-        "loadgen" => cmd_loadgen(Args::parse(rest, &[])?),
+        "loadgen" => cmd_loadgen(Args::parse(rest, &["diurnal"])?),
         "deploy" => cmd_deploy(Args::parse(rest, &[])?),
         "models" => cmd_models(Args::parse(rest, &["json"])?),
         "infer" => cmd_infer(Args::parse(rest, &[])?),
@@ -117,7 +125,25 @@ fn cmd_serve(a: Args) -> Result<()> {
     let count = a.usize_or("count", 500)?;
     let seed = a.u64_or("seed", 7)?;
     let lanes = a.usize_or("lanes", 2)?;
-    let cfg = ServerConfig::builder()
+    // Resident mode: host a citation-scale graph in-process and serve
+    // k-hop `GRAPH_QUERY` extractions against it. The synthesized
+    // model entry rides into the registry in-memory, never on disk.
+    let resident = match a.str_opt("resident") {
+        Some(name) => {
+            let dataset = CitationDataset::parse(name)?;
+            let arts = Artifacts::load(Artifacts::default_dir())?;
+            // Any cataloged DGN entry works as the shape donor; prefer
+            // the large-graph one when the manifest carries it.
+            let base = arts.model("dgn_large").or_else(|_| arts.model("dgn"))?;
+            eprintln!(
+                "[serve] booting resident store from {} (seed {seed}) ...",
+                dataset.name()
+            );
+            Some(std::sync::Arc::new(ResidentState::boot(dataset, seed, base)?))
+        }
+        None => None,
+    };
+    let mut builder = ServerConfig::builder()
         .models(models.iter().cloned())
         .prep_workers(a.usize_or("prep-workers", 2)?)
         .executor_lanes(lanes)
@@ -133,8 +159,11 @@ fn cmd_serve(a: Args) -> Result<()> {
         })
         // Fused micro-batching: lanes merge up to N same-model requests
         // into one block-diagonal interpreter pass (1 disables).
-        .fuse_max_graphs(a.usize_or("fuse", 8)?)
-        .build()?;
+        .fuse_max_graphs(a.usize_or("fuse", 8)?);
+    if let Some(rs) = &resident {
+        builder = builder.synthetic_models(vec![rs.meta.clone()]);
+    }
+    let cfg = builder.build()?;
     // Wire-serving mode: expose the protocol over TCP instead of
     // streaming synthetic graphs in-process.
     if let Some(listen) = a.str_opt("listen") {
@@ -144,6 +173,7 @@ fn cmd_serve(a: Args) -> Result<()> {
             listen: listen.to_string(),
             reactors: a.usize_or("reactors", 2)?,
             server: cfg,
+            resident,
         })?;
         eprintln!(
             "[serve] listening on {} ({}); drive it with `gengnn loadgen --addr {}`",
@@ -165,6 +195,9 @@ fn cmd_serve(a: Args) -> Result<()> {
         let metrics = net.shutdown();
         println!("{}", metrics.render());
         return Ok(());
+    }
+    if resident.is_some() {
+        bail!("--resident requires --listen (resident mode is wire-serving only)");
     }
 
     eprintln!("[serve] compiling {models:?} on {lanes} executor lane(s) ...");
@@ -243,6 +276,14 @@ fn cmd_loadgen(a: Args) -> Result<()> {
         // classes round-robin, e.g. "high:1,normal:8,low:1".
         ttl_ms: a.u64_or("ttl-ms", 0)? as u32,
         priority_mix: a.str_or("priority-mix", "").to_string(),
+        // Mixed-scenario traffic against a resident server, e.g.
+        // `--scenario molecular:2,query:6,mutate:1`; `--diurnal` bends
+        // the open-loop schedule along a sinusoidal rate curve.
+        scenario: a.str_or("scenario", "").to_string(),
+        diurnal: a.has("diurnal"),
+        query_hops: a.u64_or("query-hops", 2)? as u8,
+        query_fanout: a.u64_or("query-fanout", 0)? as u16,
+        resident_nodes: a.u64_or("resident-nodes", 2708)? as u32,
     };
     eprintln!(
         "[loadgen] {} requests @ {} rps over {} connection(s) → {}",

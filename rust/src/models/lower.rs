@@ -75,7 +75,7 @@ const REGISTRY: &[Lowering] = &[
     },
     Lowering {
         kind: "dgn",
-        models: &["dgn", "dgn_large"],
+        models: &["dgn", "dgn_large", "dgn_resident"],
         lower: lower_dgn,
     },
 ];

@@ -20,14 +20,18 @@ use std::io::{BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Priority;
 use crate::graph::CooGraph;
+use crate::resident::MutateOp;
 
-use super::proto::{self, Op, WireControl, WireControlResp, WireFrame, WireQos, WireResponse};
+use super::proto::{
+    self, Op, WireControl, WireControlResp, WireFrame, WireGraphMutate, WireGraphMutateResp,
+    WireGraphQuery, WireGraphQueryResp, WireQos, WireResponse, WireStatus,
+};
 use super::server::dial;
 
 /// Per-request knobs for [`NetClient::call`], so QoS travels as one
@@ -157,6 +161,84 @@ impl NetClient {
         self.call(model, graph, &RequestOptions::from(qos))
     }
 
+    /// Remaining TTL of a deadline budget: `budget_ms` minus the time
+    /// already elapsed, `None` once the budget is spent. Pure — retry
+    /// loops (and the unit test pinning the shrink sequence) drive it
+    /// with explicit clocks. Never yields 0, which would decode as "no
+    /// deadline" on the wire: a fully consumed budget is `None`.
+    pub fn shrink_ttl(budget_ms: u32, start: Instant, now: Instant) -> Option<u32> {
+        let elapsed = now.saturating_duration_since(start).as_millis();
+        let remaining = u128::from(budget_ms).checked_sub(elapsed)?;
+        (remaining > 0).then_some(remaining as u32)
+    }
+
+    /// Deadline-propagating retry wrapper around [`NetClient::call`]:
+    /// a `Rejected` answer is retried (up to `max_retries` times) with
+    /// the TTL shrunk to budget-minus-elapsed, so no retry can outlive
+    /// the caller's original deadline — the server sees the *remaining*
+    /// budget, not a fresh one. A budget that runs out between
+    /// attempts comes back as a synthetic `Expired` response.
+    pub fn call_with_budget(
+        &self,
+        model: &str,
+        graph: &CooGraph,
+        budget_ms: u32,
+        priority: Priority,
+        max_retries: u32,
+    ) -> Result<WireResponse> {
+        let start = Instant::now();
+        let mut attempts = 0u32;
+        loop {
+            let Some(ttl) = Self::shrink_ttl(budget_ms, start, Instant::now()) else {
+                return Ok(WireResponse::err(
+                    0,
+                    model,
+                    WireStatus::Expired,
+                    "deadline budget exhausted before submission",
+                ));
+            };
+            let resp = self.call(model, graph, &RequestOptions::new(ttl, priority))?;
+            if resp.status != WireStatus::Rejected || attempts >= max_retries {
+                return Ok(resp);
+            }
+            attempts += 1;
+        }
+    }
+
+    /// One resident k-hop query (wire v4 `GRAPH_QUERY`); blocks for
+    /// the per-seed output rows. Non-`Ok` statuses (`Rejected` on a
+    /// non-resident server or shallow hops, `BadRequest` on bad seeds)
+    /// come back as an `Ok(WireGraphQueryResp)` — inspect `status`.
+    pub fn graph_query(
+        &self,
+        seeds: &[u32],
+        hops: u8,
+        fanout: u16,
+        opts: &RequestOptions,
+    ) -> Result<WireGraphQueryResp> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = proto::encode_graph_query(&WireGraphQuery {
+            id,
+            qos: opts.qos(),
+            hops,
+            fanout,
+            seeds: seeds.to_vec(),
+        })?;
+        self.with_conn(|conn| Self::exchange_query(conn, &frame, id))
+    }
+
+    /// One mutation batch against the resident graph (wire v4
+    /// `GRAPH_MUTATE`); blocks for the applied/rejected counts and the
+    /// published snapshot version.
+    pub fn graph_mutate(&self, ops: &[MutateOp]) -> Result<WireGraphMutateResp> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = proto::encode_graph_mutate(&WireGraphMutate {
+            id,
+            ops: ops.to_vec(),
+        })?;
+        self.with_conn(|conn| Self::exchange_mutate(conn, &frame, id))
+    }
+
     /// Issue one control-plane op; blocks for the control response.
     /// A rejected op (unknown model, digest mismatch, analyzer
     /// refusal) comes back as an `Ok` reply whose
@@ -224,8 +306,14 @@ impl NetClient {
                 WireFrame::Response(resp) if resp.id == want_id => return Ok(resp),
                 // Stale frames (e.g. from an aborted earlier call on
                 // this socket) are skipped, not an error.
-                WireFrame::Response(_) | WireFrame::ControlResp(_) => continue,
-                WireFrame::Request(_) | WireFrame::Control(_) => {
+                WireFrame::Response(_)
+                | WireFrame::ControlResp(_)
+                | WireFrame::GraphQueryResp(_)
+                | WireFrame::GraphMutateResp(_) => continue,
+                WireFrame::Request(_)
+                | WireFrame::Control(_)
+                | WireFrame::GraphQuery(_)
+                | WireFrame::GraphMutate(_) => {
                     bail!("server sent a request frame")
                 }
             }
@@ -242,8 +330,78 @@ impl NetClient {
         loop {
             match Self::read_reply(conn)? {
                 WireFrame::ControlResp(resp) if resp.id == want_id => return Ok(resp),
-                WireFrame::ControlResp(_) | WireFrame::Response(_) => continue,
-                WireFrame::Request(_) | WireFrame::Control(_) => {
+                WireFrame::ControlResp(_)
+                | WireFrame::Response(_)
+                | WireFrame::GraphQueryResp(_)
+                | WireFrame::GraphMutateResp(_) => continue,
+                WireFrame::Request(_)
+                | WireFrame::Control(_)
+                | WireFrame::GraphQuery(_)
+                | WireFrame::GraphMutate(_) => {
+                    bail!("server sent a request frame")
+                }
+            }
+        }
+    }
+
+    fn exchange_query(
+        conn: &mut PooledConn,
+        frame: &[u8],
+        want_id: u64,
+    ) -> Result<WireGraphQueryResp> {
+        conn.tx.write_all(frame).context("sending graph query frame")?;
+        conn.tx.flush().context("flushing graph query frame")?;
+        loop {
+            match Self::read_reply(conn)? {
+                WireFrame::GraphQueryResp(resp) if resp.id == want_id => return Ok(resp),
+                // A plain response under our id: a front-door path
+                // (decode salvage) that could not tell the frame was a
+                // query. Surface it as a query-shaped error outcome.
+                WireFrame::Response(r) if r.id == want_id => {
+                    return Ok(WireGraphQueryResp::err(r.id, r.status, 0, r.error))
+                }
+                WireFrame::GraphQueryResp(_)
+                | WireFrame::GraphMutateResp(_)
+                | WireFrame::Response(_)
+                | WireFrame::ControlResp(_) => continue,
+                WireFrame::Request(_)
+                | WireFrame::Control(_)
+                | WireFrame::GraphQuery(_)
+                | WireFrame::GraphMutate(_) => {
+                    bail!("server sent a request frame")
+                }
+            }
+        }
+    }
+
+    fn exchange_mutate(
+        conn: &mut PooledConn,
+        frame: &[u8],
+        want_id: u64,
+    ) -> Result<WireGraphMutateResp> {
+        conn.tx.write_all(frame).context("sending graph mutate frame")?;
+        conn.tx.flush().context("flushing graph mutate frame")?;
+        loop {
+            match Self::read_reply(conn)? {
+                WireFrame::GraphMutateResp(resp) if resp.id == want_id => return Ok(resp),
+                WireFrame::Response(r) if r.id == want_id => {
+                    return Ok(WireGraphMutateResp {
+                        id: r.id,
+                        status: r.status,
+                        snapshot_version: 0,
+                        applied: 0,
+                        rejected: 0,
+                        message: r.error,
+                    })
+                }
+                WireFrame::GraphQueryResp(_)
+                | WireFrame::GraphMutateResp(_)
+                | WireFrame::Response(_)
+                | WireFrame::ControlResp(_) => continue,
+                WireFrame::Request(_)
+                | WireFrame::Control(_)
+                | WireFrame::GraphQuery(_)
+                | WireFrame::GraphMutate(_) => {
                     bail!("server sent a request frame")
                 }
             }
@@ -265,5 +423,31 @@ impl NetClient {
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The deadline-propagation satellite's pin: a 100 ms budget
+    /// shrinks to exactly the remaining milliseconds at each retry
+    /// instant, and runs dry (None, never a 0 = "no deadline" TTL)
+    /// once the budget is consumed.
+    #[test]
+    fn retry_ttl_shrinks_with_the_consumed_budget() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        assert_eq!(NetClient::shrink_ttl(100, t0, at(0)), Some(100));
+        assert_eq!(NetClient::shrink_ttl(100, t0, at(30)), Some(70));
+        assert_eq!(NetClient::shrink_ttl(100, t0, at(70)), Some(30));
+        assert_eq!(NetClient::shrink_ttl(100, t0, at(100)), None);
+        assert_eq!(NetClient::shrink_ttl(100, t0, at(250)), None);
+        // A zero budget is already spent — not the wire's "no
+        // deadline" sentinel.
+        assert_eq!(NetClient::shrink_ttl(0, t0, at(0)), None);
+        // A clock that runs backwards (now < start) saturates to no
+        // elapsed time instead of inflating the budget.
+        assert_eq!(NetClient::shrink_ttl(50, at(10), t0), Some(50));
     }
 }

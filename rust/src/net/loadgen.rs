@@ -38,8 +38,10 @@ use crate::util::stats::{fmt_secs, LatencyHistogram};
 
 use crate::coordinator::Priority;
 
+use crate::resident::MutateOp;
+
 use super::client::RequestOptions;
-use super::proto::{self, WireFrame, WireStatus};
+use super::proto::{self, WireFrame, WireGraphMutate, WireGraphQuery, WireStatus};
 use super::server::dial;
 
 /// Load generator parameters.
@@ -72,6 +74,24 @@ pub struct LoadGenConfig {
     /// expand into a deterministic repeating pattern applied by
     /// request index. Empty = all normal.
     pub priority_mix: String,
+    /// Mixed-scenario traffic, e.g. `"molecular:2,query:6,mutate:1"`
+    /// — same weight syntax as `priority_mix`, expanded into a
+    /// deterministic repeating [`Scenario`] pattern by request index.
+    /// Empty = all molecular (the pre-v4 stream, byte-identical).
+    pub scenario: String,
+    /// Shape the open-loop schedule with a deterministic sinusoidal
+    /// rate curve — one synthetic "day" mapped onto the run, sweeping
+    /// 0.5× to 1.5× the target rate — instead of a flat `k/rps` grid.
+    pub diurnal: bool,
+    /// Hop depth stamped on `query` scenario requests.
+    pub query_hops: u8,
+    /// Fanout stamped on `query` scenario requests (0 = bit-exact
+    /// full expansion).
+    pub query_fanout: u16,
+    /// Node-id range `[0, resident_nodes)` that query seeds and
+    /// mutation endpoints are drawn from; must match the resident
+    /// dataset (e.g. 2708 for Cora).
+    pub resident_nodes: u32,
 }
 
 impl Default for LoadGenConfig {
@@ -87,8 +107,91 @@ impl Default for LoadGenConfig {
             drain_timeout: Duration::from_secs(30),
             ttl_ms: 0,
             priority_mix: String::new(),
+            scenario: String::new(),
+            diurnal: false,
+            query_hops: 2,
+            query_fanout: 0,
+            resident_nodes: 2708,
         }
     }
+}
+
+/// One request's traffic class in a mixed-scenario run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// A whole molecular graph shipped in the request (v2 frames).
+    Molecular,
+    /// A resident k-hop `GRAPH_QUERY` (v4 frames).
+    Query,
+    /// A resident `GRAPH_MUTATE` batch (v4 frames).
+    Mutate,
+}
+
+impl Scenario {
+    fn parse(name: &str) -> Result<Scenario> {
+        match name {
+            "molecular" => Ok(Scenario::Molecular),
+            "query" => Ok(Scenario::Query),
+            "mutate" => Ok(Scenario::Mutate),
+            other => anyhow::bail!(
+                "unknown scenario {other:?} (expected molecular, query, or mutate)"
+            ),
+        }
+    }
+}
+
+/// Expand a `"molecular:2,query:6,mutate:1"` mix into the
+/// deterministic repeating scenario pattern applied by request index
+/// (same weight syntax and determinism story as [`priority_pattern`]).
+pub fn scenario_pattern(mix: &str) -> Result<Vec<Scenario>> {
+    let mix = mix.trim();
+    if mix.is_empty() {
+        return Ok(vec![Scenario::Molecular]);
+    }
+    let mut pattern = Vec::new();
+    for part in mix.split(',') {
+        let part = part.trim();
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad weight in scenario entry {part:?}"))?,
+            ),
+            None => (part, 1),
+        };
+        let sc = Scenario::parse(name)?;
+        anyhow::ensure!(weight > 0, "zero weight in scenario entry {part:?}");
+        pattern.extend(std::iter::repeat(sc).take(weight));
+    }
+    anyhow::ensure!(
+        pattern.len() <= 4096,
+        "scenario mix expands to {} slots (max 4096)",
+        pattern.len()
+    );
+    Ok(pattern)
+}
+
+/// Per-request departure offsets from `t0`. Flat mode is the classic
+/// `k/rps` grid. Diurnal mode accumulates inter-arrival gaps
+/// `1/(rps·m(x))` with `m(x) = 1 + 0.5·sin(2πx)`, `x = k/count` — the
+/// whole run is one synthetic day, so the stream sweeps trough
+/// (0.5×), peak (1.5×), and back, deterministically: two runs with
+/// the same config still put an identical schedule on the wire.
+fn departure_offsets(cfg: &LoadGenConfig) -> Vec<Duration> {
+    let mut offs = Vec::with_capacity(cfg.count);
+    let mut t = 0.0f64;
+    for k in 0..cfg.count {
+        offs.push(Duration::from_secs_f64(t));
+        let rate = if cfg.diurnal {
+            let x = k as f64 / cfg.count as f64;
+            cfg.rps * (1.0 + 0.5 * (2.0 * std::f64::consts::PI * x).sin())
+        } else {
+            cfg.rps
+        };
+        t += 1.0 / rate.max(1e-9);
+    }
+    offs
 }
 
 /// Expand a `"high:1,normal:8,low:1"` mix into the deterministic
@@ -150,6 +253,13 @@ pub struct LoadGenReport {
     pub max: f64,
     /// Completed responses per model.
     pub per_model: Vec<(String, u64)>,
+    /// Of `completed`, resident k-hop queries answered `Ok`.
+    pub query_completed: u64,
+    /// Of `completed`, mutation batches the server processed.
+    pub mutate_completed: u64,
+    /// Individual mutation ops the server applied across all
+    /// completed mutate batches.
+    pub mutate_ops_applied: u64,
 }
 
 impl LoadGenReport {
@@ -192,6 +302,12 @@ impl LoadGenReport {
         for (model, n) in &self.per_model {
             out.push_str(&format!("  {model:<10} {n} completed\n"));
         }
+        if self.query_completed > 0 || self.mutate_completed > 0 {
+            out.push_str(&format!(
+                "resident: {} queries ok, {} mutate batches ({} ops applied)\n",
+                self.query_completed, self.mutate_completed, self.mutate_ops_applied,
+            ));
+        }
         out
     }
 
@@ -206,7 +322,7 @@ impl LoadGenReport {
             return Vec::new();
         }
         let per_completed = 1.0 / self.achieved_rps;
-        vec![
+        let mut out = vec![
             BenchResult {
                 name: "loadgen/e2e_latency".to_string(),
                 iters: n,
@@ -245,7 +361,27 @@ impl LoadGenReport {
                 p50: self.shed_by_deadline as f64,
                 min: self.shed_by_deadline as f64,
             },
-        ]
+        ];
+        // Mixed-scenario series (counts, like shed_by_deadline):
+        // exported only when resident traffic ran, so molecular-only
+        // snapshots keep their exact pre-v4 shape.
+        if self.query_completed > 0 || self.mutate_completed > 0 {
+            out.push(BenchResult {
+                name: "loadgen/query_completed".to_string(),
+                iters: self.submitted as usize,
+                mean: self.query_completed as f64,
+                p50: self.query_completed as f64,
+                min: self.query_completed as f64,
+            });
+            out.push(BenchResult {
+                name: "loadgen/mutate_applied".to_string(),
+                iters: self.submitted as usize,
+                mean: self.mutate_ops_applied as f64,
+                p50: self.mutate_ops_applied as f64,
+                min: self.mutate_ops_applied as f64,
+            });
+        }
+        out
     }
 }
 
@@ -262,9 +398,42 @@ struct RunState {
     rejected: AtomicU64,
     shed_by_deadline: AtomicU64,
     failed: AtomicU64,
+    query_completed: AtomicU64,
+    mutate_completed: AtomicU64,
+    mutate_ops_applied: AtomicU64,
 }
 
 type PendingMap = Arc<Mutex<HashMap<u64, Instant>>>;
+
+/// Deterministic query seed set for request `k`: one or two distinct
+/// node ids hashed from the request index (requires `nodes >= 2`).
+fn query_seeds(k: usize, nodes: u32) -> Vec<u32> {
+    let n = u64::from(nodes);
+    let a = ((k as u64).wrapping_mul(2_654_435_761) % n) as u32;
+    if k % 2 == 0 {
+        // An offset in [1, n-1] can never collide with `a` mod n.
+        let off = 1 + (k as u64 % (n - 1));
+        let b = ((u64::from(a) + off) % n) as u32;
+        vec![a, b]
+    } else {
+        vec![a]
+    }
+}
+
+/// Deterministic mutation batch for request `k`: alternating add /
+/// remove of a hashed edge, so the resident graph churns under load
+/// without drifting unboundedly.
+fn mutate_ops(k: usize, nodes: u32) -> Vec<MutateOp> {
+    let n = u64::from(nodes);
+    let a = ((k as u64).wrapping_mul(7_919) % n) as u32;
+    let off = 1 + ((k as u64).wrapping_mul(104_729) % (n - 1));
+    let b = ((u64::from(a) + off) % n) as u32;
+    if k % 2 == 0 {
+        vec![MutateOp::AddEdge(a, b)]
+    } else {
+        vec![MutateOp::RemoveEdge(a, b)]
+    }
+}
 
 /// Run one open-loop load generation pass against a live server.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
@@ -273,6 +442,17 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(!cfg.models.is_empty(), "need at least one model");
     let connections = cfg.connections.clamp(1, cfg.count);
     let pattern = Arc::new(priority_pattern(&cfg.priority_mix)?);
+    let scenarios = Arc::new(scenario_pattern(&cfg.scenario)?);
+    if scenarios.iter().any(|s| *s != Scenario::Molecular) {
+        anyhow::ensure!(
+            cfg.resident_nodes >= 2,
+            "resident scenarios need resident_nodes >= 2 (got {})",
+            cfg.resident_nodes
+        );
+    }
+    // The departure schedule (flat or diurnal), computed once and
+    // indexed by request number from every writer.
+    let offsets = Arc::new(departure_offsets(cfg));
 
     // Deterministic graph pool: `graph_pool` seeded molecular graphs
     // total, shared across the model mix and cycled through the
@@ -290,6 +470,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         rejected: AtomicU64::new(0),
         shed_by_deadline: AtomicU64::new(0),
         failed: AtomicU64::new(0),
+        query_completed: AtomicU64::new(0),
+        mutate_completed: AtomicU64::new(0),
+        mutate_ops_applied: AtomicU64::new(0),
     });
 
     let t0 = Instant::now();
@@ -323,6 +506,8 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
             let cfg = cfg.clone();
             let graphs = Arc::clone(&graphs);
             let pattern = Arc::clone(&pattern);
+            let scenarios = Arc::clone(&scenarios);
+            let offsets = Arc::clone(&offsets);
             let pending = Arc::clone(&pending);
             let written = Arc::clone(&written);
             let writer_done = Arc::clone(&writer_done);
@@ -332,22 +517,37 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                 .spawn(move || {
                     for k in (conn_no..cfg.count).step_by(connections) {
                         // The open-loop schedule: request k departs at
-                        // t0 + k/rps, never earlier.
-                        let sched = t0 + Duration::from_secs_f64(k as f64 / cfg.rps);
+                        // its precomputed offset (flat `k/rps` or the
+                        // diurnal curve), never earlier.
+                        let sched = t0 + offsets[k];
                         let now = Instant::now();
                         if sched > now {
                             std::thread::sleep(sched - now);
                         }
-                        let model = &cfg.models[k % cfg.models.len()];
-                        let graph = &graphs[(k / cfg.models.len()) % graphs.len()];
                         // Same per-request options struct as the
                         // client's `call` path, so loadgen and client
                         // traffic stamp QoS identically.
                         let opts =
                             RequestOptions::new(cfg.ttl_ms, pattern[k % pattern.len()]);
-                        let Ok(frame) =
-                            proto::encode_request_parts(k as u64, model, opts.qos(), graph)
-                        else {
+                        let frame = match scenarios[k % scenarios.len()] {
+                            Scenario::Molecular => {
+                                let model = &cfg.models[k % cfg.models.len()];
+                                let graph = &graphs[(k / cfg.models.len()) % graphs.len()];
+                                proto::encode_request_parts(k as u64, model, opts.qos(), graph)
+                            }
+                            Scenario::Query => proto::encode_graph_query(&WireGraphQuery {
+                                id: k as u64,
+                                qos: opts.qos(),
+                                hops: cfg.query_hops,
+                                fanout: cfg.query_fanout,
+                                seeds: query_seeds(k, cfg.resident_nodes),
+                            }),
+                            Scenario::Mutate => proto::encode_graph_mutate(&WireGraphMutate {
+                                id: k as u64,
+                                ops: mutate_ops(k, cfg.resident_nodes),
+                            }),
+                        };
+                        let Ok(frame) = frame else {
                             continue;
                         };
                         // Count + register *before* the write: the
@@ -401,15 +601,50 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                             // timeout: the rest is lost.
                             Ok(None) | Err(_) => break,
                         };
-                        let Ok(WireFrame::Response(resp)) = proto::decode_frame(&payload)
-                        else {
+                        let Ok(frame) = proto::decode_frame(&payload) else {
                             break;
                         };
+                        // Every answer frame classifies into the same
+                        // four buckets, so `submitted = completed +
+                        // rejected + failed (+ lost)` reconciles across
+                        // mixed-scenario streams too.
+                        let (id, status, label, ops_applied) = match frame {
+                            WireFrame::Response(resp) => {
+                                (resp.id, resp.status, resp.model, 0)
+                            }
+                            WireFrame::GraphQueryResp(resp) => (
+                                resp.id,
+                                resp.status,
+                                "resident_query".to_string(),
+                                0,
+                            ),
+                            WireFrame::GraphMutateResp(resp) => (
+                                resp.id,
+                                resp.status,
+                                "resident_mutate".to_string(),
+                                u64::from(resp.applied),
+                            ),
+                            // A request or control frame from the
+                            // server is a protocol violation.
+                            _ => break,
+                        };
                         received += 1;
-                        let sched = crate::util::sync::lock(&pending).remove(&resp.id);
-                        match resp.status {
+                        let sched = crate::util::sync::lock(&pending).remove(&id);
+                        match status {
                             WireStatus::Ok => {
                                 state.completed.fetch_add(1, Ordering::Relaxed);
+                                match label.as_str() {
+                                    "resident_query" => {
+                                        state.query_completed.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    "resident_mutate" => {
+                                        state.mutate_completed.fetch_add(1, Ordering::Relaxed);
+                                        state
+                                            .mutate_ops_applied
+                                            .fetch_add(ops_applied, Ordering::Relaxed);
+                                    }
+                                    _ => {}
+                                }
                                 if let Some(sched) = sched {
                                     state.latency.record(
                                         Instant::now()
@@ -417,7 +652,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                                             .as_secs_f64(),
                                     );
                                 }
-                                *per_model.entry(resp.model).or_default() += 1;
+                                *per_model.entry(label).or_default() += 1;
                             }
                             WireStatus::Rejected => {
                                 state.rejected.fetch_add(1, Ordering::Relaxed);
@@ -489,6 +724,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         min: h.min(),
         max: h.max(),
         per_model: per_model.into_iter().collect(),
+        query_completed: state.query_completed.load(Ordering::Relaxed),
+        mutate_completed: state.mutate_completed.load(Ordering::Relaxed),
+        mutate_ops_applied: state.mutate_ops_applied.load(Ordering::Relaxed),
     })
 }
 
@@ -515,6 +753,9 @@ mod tests {
             min: 5e-4,
             max: 4e-3,
             per_model: vec![("gcn".to_string(), 7)],
+            query_completed: 0,
+            mutate_completed: 0,
+            mutate_ops_applied: 0,
         };
         assert!(r.reconciles());
         r.lost = 1;
@@ -543,6 +784,9 @@ mod tests {
             min: 1e-3,
             max: 5e-3,
             per_model: vec![("gcn".to_string(), 50), ("gat".to_string(), 50)],
+            query_completed: 0,
+            mutate_completed: 0,
+            mutate_ops_applied: 0,
         };
         let text = r.render();
         assert!(text.contains("p99"), "{text}");
@@ -610,6 +854,121 @@ mod tests {
             ..LoadGenConfig::default()
         };
         assert!(run(&bad).is_err(), "unknown priority class must refuse");
+    }
+
+    #[test]
+    fn scenario_mix_expands_deterministically() {
+        assert_eq!(scenario_pattern("").unwrap(), vec![Scenario::Molecular]);
+        let p = scenario_pattern("molecular:2,query:6,mutate:1").unwrap();
+        assert_eq!(p.len(), 9);
+        assert_eq!(p[0], Scenario::Molecular);
+        assert_eq!(p[2], Scenario::Query);
+        assert_eq!(p[8], Scenario::Mutate);
+        assert_eq!(
+            scenario_pattern("query,mutate").unwrap(),
+            vec![Scenario::Query, Scenario::Mutate]
+        );
+        assert!(scenario_pattern("replay:2").is_err());
+        assert!(scenario_pattern("query:0").is_err());
+        // Resident traffic against a degenerate node range refuses.
+        let bad = LoadGenConfig {
+            scenario: "query".to_string(),
+            resident_nodes: 1,
+            ..LoadGenConfig::default()
+        };
+        assert!(run(&bad).is_err());
+    }
+
+    #[test]
+    fn scenario_bench_series_appear_only_with_resident_traffic() {
+        let base = LoadGenReport {
+            submitted: 10,
+            completed: 10,
+            rejected: 0,
+            shed_by_deadline: 0,
+            failed: 0,
+            lost: 0,
+            wall_secs: 1.0,
+            target_rps: 10.0,
+            achieved_rps: 10.0,
+            mean: 1e-3,
+            p50: 1e-3,
+            p95: 1e-3,
+            p99: 1e-3,
+            min: 1e-3,
+            max: 1e-3,
+            per_model: vec![],
+            query_completed: 0,
+            mutate_completed: 0,
+            mutate_ops_applied: 0,
+        };
+        let names: Vec<String> =
+            base.to_bench_results().into_iter().map(|b| b.name).collect();
+        assert!(!names.iter().any(|n| n.contains("query")), "{names:?}");
+        let mixed = LoadGenReport {
+            query_completed: 6,
+            mutate_completed: 2,
+            mutate_ops_applied: 2,
+            ..base
+        };
+        let results = mixed.to_bench_results();
+        let q = results
+            .iter()
+            .find(|b| b.name == "loadgen/query_completed")
+            .expect("query series");
+        assert_eq!(q.mean, 6.0);
+        let m = results
+            .iter()
+            .find(|b| b.name == "loadgen/mutate_applied")
+            .expect("mutate series");
+        assert_eq!(m.mean, 2.0);
+        assert!(mixed.render().contains("6 queries ok"), "{}", mixed.render());
+    }
+
+    #[test]
+    fn deterministic_seed_and_mutation_generators() {
+        for k in 0..200 {
+            let s = query_seeds(k, 40);
+            assert!(!s.is_empty() && s.len() <= 2);
+            assert!(s.iter().all(|&v| v < 40), "{s:?}");
+            if s.len() == 2 {
+                assert_ne!(s[0], s[1], "k={k}");
+            }
+            assert_eq!(s, query_seeds(k, 40), "must be deterministic");
+            for op in mutate_ops(k, 40) {
+                match op {
+                    MutateOp::AddEdge(a, b) | MutateOp::RemoveEdge(a, b) => {
+                        assert!(a < 40 && b < 40 && a != b, "k={k}");
+                    }
+                    MutateOp::AddNode(_) => panic!("generator emits edge churn only"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_schedule_is_monotone_and_sweeps_the_rate() {
+        let cfg = LoadGenConfig {
+            rps: 100.0,
+            count: 400,
+            diurnal: true,
+            ..LoadGenConfig::default()
+        };
+        let offs = departure_offsets(&cfg);
+        assert_eq!(offs.len(), 400);
+        assert!(offs.windows(2).all(|w| w[0] < w[1]), "monotone departures");
+        assert_eq!(offs, departure_offsets(&cfg), "deterministic");
+        // Peak gaps (around x=0.25, rate 1.5x) are shorter than trough
+        // gaps (around x=0.75, rate 0.5x).
+        let gap = |i: usize| (offs[i + 1] - offs[i]).as_secs_f64();
+        assert!(gap(100) < gap(300), "peak {} vs trough {}", gap(100), gap(300));
+        // Flat mode is the classic grid.
+        let flat = LoadGenConfig {
+            diurnal: false,
+            ..cfg
+        };
+        let f = departure_offsets(&flat);
+        assert!((f[100].as_secs_f64() - 1.0).abs() < 1e-9);
     }
 
     #[test]

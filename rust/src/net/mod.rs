@@ -16,18 +16,25 @@
 //!
 //! * [`proto`]   — length-prefixed binary frames (version byte,
 //!   FNV-1a checksum, raw COO graphs, TTL/priority QoS in v2+ request
-//!   frames, bit-exact f32 outputs, and — in v3 — the typed control
-//!   [`Op`] family driving the live model registry)
+//!   frames, bit-exact f32 outputs, in v3 the typed control [`Op`]
+//!   family driving the live model registry, and in v4 the
+//!   resident-graph ops: [`WireGraphQuery`] / [`WireGraphMutate`] and
+//!   their responses)
 //! * [`reactor`] — the nonblocking event-loop pool: a fixed set of
 //!   `polly`-driven reactor threads owning every connection's frame
-//!   reassembly, write draining, and admission state machine
+//!   reassembly, write draining, and admission state machine — plus,
+//!   in resident mode, k-hop extraction and copy-on-write mutation
+//!   application against the shared [`crate::resident::ResidentState`]
 //! * [`server`]  — front-end wiring: accept loop handing connections
 //!   to the reactors, response pump settling the route table,
 //!   admission backpressure mapped to wire statuses (`Rejected`,
 //!   `Expired`)
-//! * [`client`]  — blocking client with connection pooling
+//! * [`client`]  — blocking client with connection pooling,
+//!   deadline-carrying retries, and the v4 `graph_query` /
+//!   `graph_mutate` calls
 //! * [`loadgen`] — open-loop load generator: deterministic
-//!   inter-arrival schedule, model mix, TTL/priority QoS profiles,
+//!   inter-arrival schedule (flat or diurnal), model mix, TTL/priority
+//!   QoS profiles, mixed molecular/query/mutate scenario streams,
 //!   HDR-style latency histogram reporting p50/p95/p99 + throughput,
 //!   `BENCH_*.json` export
 //!
@@ -36,6 +43,9 @@
 //! a saturated Reject-mode queue surfaces as a `Rejected` wire status
 //! rather than a hang or a dropped connection, and overload with TTLs
 //! sheds by deadline (`Expired`) instead of by arrival.
+//! `rust/tests/resident_e2e.rs` pins the v4 plane: wire-served k-hop
+//! query rows bit-identical to full-graph forwards across interleaved
+//! mutations, with pre-v4 clients unaffected (`docs/SCENARIOS.md`).
 
 pub mod client;
 pub mod loadgen;
@@ -46,7 +56,8 @@ pub mod server;
 pub use client::{NetClient, RequestOptions};
 pub use loadgen::{LoadGenConfig, LoadGenReport};
 pub use proto::{
-    Op, WireControl, WireControlResp, WireFrame, WireQos, WireRequest, WireResponse, WireStatus,
-    PROTO_V1, PROTO_V3, PROTO_VERSION,
+    Op, WireControl, WireControlResp, WireFrame, WireGraphMutate, WireGraphMutateResp,
+    WireGraphQuery, WireGraphQueryResp, WireQos, WireRequest, WireResponse, WireStatus, PROTO_V1,
+    PROTO_V3, PROTO_V4, PROTO_VERSION,
 };
 pub use server::{NetServer, NetServerConfig};

@@ -7,9 +7,11 @@
 //! │ u32 len      │ payload (len bytes)                             │
 //! └──────────────┴─────────────────────────────────────────────────┘
 //! payload:
-//!   [0]      version byte (3 = current; 2 and 1 still decoded)
+//!   [0]      version byte (4 = current; 3, 2, and 1 still decoded)
 //!   [1]      kind byte (1 = request, 2 = response,
-//!            3 = control, 4 = control response — v3 frames only)
+//!            3 = control, 4 = control response — v3 frames only;
+//!            5 = graph query, 6 = graph query response,
+//!            7 = graph mutate, 8 = graph mutate response — v4 only)
 //!   [2..6]   u32 FNV-1a checksum of the body
 //!   [6..]    body
 //!
@@ -36,6 +38,26 @@
 //! control response body (v3 only):
 //!   u64 id · u8 op · u8 status · u64 version
 //!   u32 msg_len · message (utf-8)
+//!
+//! graph query body (v4 only; resident serving mode):
+//!   u64 id · u32 ttl_ms · u8 priority · u8 hops · u16 fanout
+//!   u16 num_seeds · seeds (num_seeds × u32)
+//!
+//! graph query response body (v4 only):
+//!   u64 id · u8 status · u64 snapshot_version
+//!   status Ok:         u16 num_seeds · u16 out_dim
+//!                      outputs (num_seeds × out_dim × f32)
+//!   status otherwise:  u32 msg_len · message (utf-8)
+//!
+//! graph mutate body (v4 only):
+//!   u64 id · u16 num_ops · ops, each:
+//!     u8 1 (add edge) · u32 a · u32 b
+//!     u8 2 (remove edge) · u32 a · u32 b
+//!     u8 3 (add node) · u16 f · features (f × f32)
+//!
+//! graph mutate response body (v4 only):
+//!   u64 id · u8 status · u64 snapshot_version
+//!   u32 applied · u32 rejected · u32 msg_len · message (utf-8)
 //! ```
 //!
 //! Version negotiation is per-frame and server-side only: the server
@@ -46,7 +68,11 @@
 //! `BadRequest`. What v3 adds is not a new inference layout but a new
 //! *frame family*: control ops ([`Op`]: `LOAD_MODEL` / `UNLOAD_MODEL`
 //! / `ROLLBACK` / `LIST_MODELS`) against the live model registry —
-//! before v3, every frame was implicitly an inference.
+//! before v3, every frame was implicitly an inference. v4 likewise
+//! adds only a frame family: resident graph ops (`GRAPH_QUERY` /
+//! `GRAPH_MUTATE`) against a server-hosted graph — inference and
+//! control layouts are byte-identical under v4, so v1–v3 clients
+//! interoperate with a resident server unmodified.
 //!
 //! Graphs cross the wire as raw COO — exactly the zero-preprocessing
 //! input contract of the in-process path (paper §3.1), so the TCP
@@ -76,15 +102,24 @@ pub const PROTO_V1: u8 = 1;
 /// the control frame kinds carrying registry [`Op`]s.
 pub const PROTO_V3: u8 = 3;
 
+/// The resident-graph version: inference and control bodies identical
+/// to v3, plus the resident frame kinds (`GRAPH_QUERY` /
+/// `GRAPH_MUTATE`) against a server-hosted graph.
+pub const PROTO_V4: u8 = 4;
+
 /// Frame kind bytes.
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_CONTROL: u8 = 3;
 const KIND_CONTROL_RESP: u8 = 4;
+const KIND_GRAPH_QUERY: u8 = 5;
+const KIND_GRAPH_QUERY_RESP: u8 = 6;
+const KIND_GRAPH_MUTATE: u8 = 7;
+const KIND_GRAPH_MUTATE_RESP: u8 = 8;
 
 /// Is `version` one the decoder understands?
 fn known_version(version: u8) -> bool {
-    version == PROTO_V1 || version == PROTO_VERSION || version == PROTO_V3
+    version == PROTO_V1 || version == PROTO_VERSION || version == PROTO_V3 || version == PROTO_V4
 }
 
 /// Refuse frames above this payload size (a corrupt or hostile length
@@ -286,6 +321,112 @@ impl WireControlResp {
     }
 }
 
+/// One resident k-hop query as it crosses the wire (v4 frames only).
+/// The server extracts the `hops`-hop closure of `seeds` from its
+/// resident graph and answers with one output row per seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireGraphQuery {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: u64,
+    pub qos: WireQos,
+    /// Neighborhood depth; must be at least the resident model's layer
+    /// count or the server rejects the query (exactness contract).
+    pub hops: u8,
+    /// 0 = full expansion (bit-exact); k > 0 = expand only the first
+    /// k ascending neighbors per node (bounded approximation).
+    pub fanout: u16,
+    /// Global node ids in the resident graph (distinct, non-empty).
+    pub seeds: Vec<u32>,
+}
+
+/// The server's answer to a graph query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireGraphQueryResp {
+    pub id: u64,
+    pub status: WireStatus,
+    /// Version of the resident snapshot the query resolved (0 when the
+    /// query never reached the store).
+    pub snapshot_version: u64,
+    /// Output width per seed (0 unless `status == Ok`).
+    pub out_dim: usize,
+    /// Row-major `[num_seeds, out_dim]` outputs, seed request order.
+    pub outputs: Vec<f32>,
+    /// Error message (empty when `status == Ok`).
+    pub error: String,
+}
+
+impl WireGraphQueryResp {
+    pub fn ok(id: u64, snapshot_version: u64, out_dim: usize, outputs: Vec<f32>) -> Self {
+        WireGraphQueryResp {
+            id,
+            status: WireStatus::Ok,
+            snapshot_version,
+            out_dim,
+            outputs,
+            error: String::new(),
+        }
+    }
+
+    pub fn err(
+        id: u64,
+        status: WireStatus,
+        snapshot_version: u64,
+        error: impl Into<String>,
+    ) -> Self {
+        WireGraphQueryResp {
+            id,
+            status,
+            snapshot_version,
+            out_dim: 0,
+            outputs: Vec::new(),
+            error: error.into(),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == WireStatus::Ok
+    }
+
+    /// Output row of the `i`-th requested seed.
+    pub fn seed_output(&self, i: usize) -> Option<&[f32]> {
+        if self.out_dim == 0 {
+            return None;
+        }
+        self.outputs.get(i * self.out_dim..(i + 1) * self.out_dim)
+    }
+}
+
+/// One mutation batch against the resident graph (v4 frames only).
+/// Ops apply in order with copy-on-write snapshot semantics — see
+/// [`crate::resident::ResidentStore::apply`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireGraphMutate {
+    pub id: u64,
+    pub ops: Vec<crate::resident::MutateOp>,
+}
+
+/// The server's answer to a mutation batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireGraphMutateResp {
+    pub id: u64,
+    /// `Ok` when the batch was processed (even if some ops were
+    /// rejected — the counts tell the story); `Error`/`BadRequest`
+    /// when it never reached the store.
+    pub status: WireStatus,
+    /// Resident snapshot version after the batch.
+    pub snapshot_version: u64,
+    /// Ops applied / rejected within the batch.
+    pub applied: u32,
+    pub rejected: u32,
+    pub message: String,
+}
+
+impl WireGraphMutateResp {
+    pub fn is_ok(&self) -> bool {
+        self.status == WireStatus::Ok
+    }
+}
+
 /// A decoded frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireFrame {
@@ -293,6 +434,10 @@ pub enum WireFrame {
     Response(WireResponse),
     Control(WireControl),
     ControlResp(WireControlResp),
+    GraphQuery(WireGraphQuery),
+    GraphQueryResp(WireGraphQueryResp),
+    GraphMutate(WireGraphMutate),
+    GraphMutateResp(WireGraphMutateResp),
 }
 
 /// FNV-1a over the body bytes — cheap, deterministic, and enough to
@@ -452,6 +597,109 @@ pub fn encode_control_resp(resp: &WireControlResp) -> Result<Vec<u8>> {
     Ok(seal(PROTO_V3, KIND_CONTROL_RESP, body))
 }
 
+/// Encode a resident k-hop query (always a v4 frame — resident ops
+/// did not exist before v4).
+pub fn encode_graph_query(q: &WireGraphQuery) -> Result<Vec<u8>> {
+    if q.seeds.is_empty() {
+        bail!("graph query carries no seeds");
+    }
+    if q.seeds.len() > u16::MAX as usize {
+        bail!("too many seeds for the wire format");
+    }
+    let mut body = Vec::with_capacity(8 + 5 + 3 + 2 + q.seeds.len() * 4);
+    put_u64(&mut body, q.id);
+    put_u32(&mut body, q.qos.ttl_ms);
+    body.push(q.qos.priority.to_byte());
+    body.push(q.hops);
+    put_u16(&mut body, q.fanout);
+    put_u16(&mut body, q.seeds.len() as u16);
+    for &s in &q.seeds {
+        put_u32(&mut body, s);
+    }
+    Ok(seal(PROTO_V4, KIND_GRAPH_QUERY, body))
+}
+
+/// Encode a graph query response (always a v4 frame).
+pub fn encode_graph_query_resp(resp: &WireGraphQueryResp) -> Result<Vec<u8>> {
+    let mut body = Vec::with_capacity(8 + 1 + 8 + 8 + resp.outputs.len() * 4 + resp.error.len());
+    put_u64(&mut body, resp.id);
+    body.push(resp.status.to_byte());
+    put_u64(&mut body, resp.snapshot_version);
+    if resp.status == WireStatus::Ok {
+        if resp.out_dim == 0 || resp.outputs.len() % resp.out_dim != 0 {
+            bail!(
+                "graph query outputs ({}) are not rows of out_dim {}",
+                resp.outputs.len(),
+                resp.out_dim
+            );
+        }
+        let num_seeds = resp.outputs.len() / resp.out_dim;
+        if num_seeds > u16::MAX as usize || resp.out_dim > u16::MAX as usize {
+            bail!("graph query response too large for the wire format");
+        }
+        put_u16(&mut body, num_seeds as u16);
+        put_u16(&mut body, resp.out_dim as u16);
+        put_f32s(&mut body, &resp.outputs);
+    } else {
+        if resp.error.len() > u32::MAX as usize {
+            bail!("error message too large");
+        }
+        put_u32(&mut body, resp.error.len() as u32);
+        body.extend_from_slice(resp.error.as_bytes());
+    }
+    Ok(seal(PROTO_V4, KIND_GRAPH_QUERY_RESP, body))
+}
+
+/// Encode a resident mutation batch (always a v4 frame).
+pub fn encode_graph_mutate(m: &WireGraphMutate) -> Result<Vec<u8>> {
+    use crate::resident::MutateOp;
+    if m.ops.len() > u16::MAX as usize {
+        bail!("too many mutation ops for the wire format");
+    }
+    let mut body = Vec::with_capacity(8 + 2 + m.ops.len() * 9);
+    put_u64(&mut body, m.id);
+    put_u16(&mut body, m.ops.len() as u16);
+    for op in &m.ops {
+        match op {
+            MutateOp::AddEdge(a, b) => {
+                body.push(1);
+                put_u32(&mut body, *a);
+                put_u32(&mut body, *b);
+            }
+            MutateOp::RemoveEdge(a, b) => {
+                body.push(2);
+                put_u32(&mut body, *a);
+                put_u32(&mut body, *b);
+            }
+            MutateOp::AddNode(feat) => {
+                if feat.len() > u16::MAX as usize {
+                    bail!("node feature width too large for the wire format");
+                }
+                body.push(3);
+                put_u16(&mut body, feat.len() as u16);
+                put_f32s(&mut body, feat);
+            }
+        }
+    }
+    Ok(seal(PROTO_V4, KIND_GRAPH_MUTATE, body))
+}
+
+/// Encode a graph mutate response (always a v4 frame).
+pub fn encode_graph_mutate_resp(resp: &WireGraphMutateResp) -> Result<Vec<u8>> {
+    if resp.message.len() > u32::MAX as usize {
+        bail!("mutate message too large");
+    }
+    let mut body = Vec::with_capacity(8 + 1 + 8 + 8 + 4 + resp.message.len());
+    put_u64(&mut body, resp.id);
+    body.push(resp.status.to_byte());
+    put_u64(&mut body, resp.snapshot_version);
+    put_u32(&mut body, resp.applied);
+    put_u32(&mut body, resp.rejected);
+    put_u32(&mut body, resp.message.len() as u32);
+    body.extend_from_slice(resp.message.as_bytes());
+    Ok(seal(PROTO_V4, KIND_GRAPH_MUTATE_RESP, body))
+}
+
 /// Encode a response stamped with an explicit protocol version (the
 /// body layout is identical in every version, so a server negotiates
 /// by simply echoing whatever version the request frame carried — a
@@ -573,7 +821,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
     let version = payload[0];
     if !known_version(version) {
         bail!(
-            "unsupported protocol version {version} (expected {PROTO_V1}, {PROTO_VERSION}, or {PROTO_V3})"
+            "unsupported protocol version {version} (expected {PROTO_V1}, {PROTO_VERSION}, {PROTO_V3}, or {PROTO_V4})"
         );
     }
     let kind = payload[1];
@@ -692,6 +940,93 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
                 message,
             })
         }
+        KIND_GRAPH_QUERY => {
+            if version != PROTO_V4 {
+                bail!("resident frames require protocol version {PROTO_V4} (got {version})");
+            }
+            let id = c.u64()?;
+            let qos = WireQos {
+                ttl_ms: c.u32()?,
+                priority: Priority::from_byte(c.u8()?)?,
+            };
+            let hops = c.u8()?;
+            let fanout = c.u16()?;
+            let num_seeds = c.u16()? as usize;
+            if num_seeds.saturating_mul(4) > c.remaining() {
+                bail!("seed count {num_seeds} exceeds the frame body");
+            }
+            let mut seeds = Vec::with_capacity(num_seeds);
+            for _ in 0..num_seeds {
+                seeds.push(c.u32()?);
+            }
+            WireFrame::GraphQuery(WireGraphQuery {
+                id,
+                qos,
+                hops,
+                fanout,
+                seeds,
+            })
+        }
+        KIND_GRAPH_QUERY_RESP => {
+            if version != PROTO_V4 {
+                bail!("resident frames require protocol version {PROTO_V4} (got {version})");
+            }
+            let id = c.u64()?;
+            let status = WireStatus::from_byte(c.u8()?)?;
+            let snapshot_version = c.u64()?;
+            let resp = if status == WireStatus::Ok {
+                let num_seeds = c.u16()? as usize;
+                let out_dim = c.u16()? as usize;
+                let outputs = c.f32s(num_seeds.checked_mul(out_dim).ok_or_else(|| {
+                    anyhow::anyhow!("graph query output size overflow")
+                })?)?;
+                WireGraphQueryResp::ok(id, snapshot_version, out_dim, outputs)
+            } else {
+                let msg_len = c.u32()? as usize;
+                WireGraphQueryResp::err(id, status, snapshot_version, c.utf8(msg_len)?)
+            };
+            WireFrame::GraphQueryResp(resp)
+        }
+        KIND_GRAPH_MUTATE => {
+            if version != PROTO_V4 {
+                bail!("resident frames require protocol version {PROTO_V4} (got {version})");
+            }
+            let id = c.u64()?;
+            let num_ops = c.u16()? as usize;
+            let mut ops = Vec::with_capacity(num_ops.min(c.remaining()));
+            for _ in 0..num_ops {
+                ops.push(match c.u8()? {
+                    1 => crate::resident::MutateOp::AddEdge(c.u32()?, c.u32()?),
+                    2 => crate::resident::MutateOp::RemoveEdge(c.u32()?, c.u32()?),
+                    3 => {
+                        let f = c.u16()? as usize;
+                        crate::resident::MutateOp::AddNode(c.f32s(f)?)
+                    }
+                    k => bail!("unknown mutation op byte {k}"),
+                });
+            }
+            WireFrame::GraphMutate(WireGraphMutate { id, ops })
+        }
+        KIND_GRAPH_MUTATE_RESP => {
+            if version != PROTO_V4 {
+                bail!("resident frames require protocol version {PROTO_V4} (got {version})");
+            }
+            let id = c.u64()?;
+            let status = WireStatus::from_byte(c.u8()?)?;
+            let snapshot_version = c.u64()?;
+            let applied = c.u32()?;
+            let rejected = c.u32()?;
+            let msg_len = c.u32()? as usize;
+            let message = c.utf8(msg_len)?;
+            WireFrame::GraphMutateResp(WireGraphMutateResp {
+                id,
+                status,
+                snapshot_version,
+                applied,
+                rejected,
+                message,
+            })
+        }
         k => bail!("unknown frame kind byte {k}"),
     };
     if !c.done() {
@@ -709,11 +1044,15 @@ pub fn decode_frame(payload: &[u8]) -> Result<WireFrame> {
 /// [`BAD_FRAME_ID`], never under a guessed id that could collide with
 /// a different in-flight request.
 pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
-    // Control bodies also lead with the u64 id, so a well-framed v3
-    // control op that fails full decoding (e.g. unknown op byte) still
-    // gets its answer under the caller's own correlation id.
+    // Control and resident bodies also lead with the u64 id, so a
+    // well-framed v3 control op or v4 graph op that fails full
+    // decoding (e.g. unknown op byte, out-of-range seed) still gets
+    // its answer under the caller's own correlation id.
     let kind_ok = payload.len() >= 2
-        && (payload[1] == KIND_REQUEST || (payload[0] == PROTO_V3 && payload[1] == KIND_CONTROL));
+        && (payload[1] == KIND_REQUEST
+            || (payload[0] == PROTO_V3 && payload[1] == KIND_CONTROL)
+            || (payload[0] == PROTO_V4
+                && (payload[1] == KIND_GRAPH_QUERY || payload[1] == KIND_GRAPH_MUTATE)));
     if payload.len() < HEADER_BYTES + 8 || !known_version(payload[0]) || !kind_ok {
         return None;
     }
@@ -958,20 +1297,23 @@ mod tests {
         let v1 = encode_response_with_version(PROTO_V1, &resp).unwrap();
         let v2 = encode_response_with_version(PROTO_VERSION, &resp).unwrap();
         let v3 = encode_response_with_version(PROTO_V3, &resp).unwrap();
+        let v4 = encode_response_with_version(PROTO_V4, &resp).unwrap();
         assert_eq!(v1[4], PROTO_V1);
         assert_eq!(v2[4], PROTO_VERSION);
         assert_eq!(v3[4], PROTO_V3);
+        assert_eq!(v4[4], PROTO_V4);
         assert_eq!(v1[..4], v2[..4], "length prefix");
         assert_eq!(v1[5..], v2[5..], "kind + checksum + body");
         assert_eq!(v2[5..], v3[5..], "v3 response body is unchanged");
-        for frame in [v1, v2, v3] {
+        assert_eq!(v3[5..], v4[5..], "v4 response body is unchanged");
+        for frame in [v1, v2, v3, v4] {
             let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
             match decode_frame(&payload).unwrap() {
                 WireFrame::Response(got) => assert_eq!(got, resp),
                 other => panic!("decoded {other:?}"),
             }
         }
-        assert!(encode_response_with_version(4, &resp).is_err());
+        assert!(encode_response_with_version(5, &resp).is_err());
         assert!(encode_response_with_version(99, &resp).is_err());
     }
 
@@ -1099,6 +1441,142 @@ mod tests {
         payload[2..6].copy_from_slice(&fixed.to_le_bytes());
         let e = decode_frame(&payload).unwrap_err();
         assert!(e.to_string().contains("priority"), "{e}");
+    }
+
+    #[test]
+    fn graph_query_frames_round_trip() {
+        let q = WireGraphQuery {
+            id: 0xFEED,
+            qos: WireQos::new(750, Priority::High),
+            hops: 2,
+            fanout: 16,
+            seeds: vec![5, 900, 31],
+        };
+        let frame = encode_graph_query(&q).unwrap();
+        assert_eq!(frame[4], PROTO_V4, "resident frames are v4");
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::GraphQuery(got) => assert_eq!(got, q),
+            other => panic!("decoded {other:?}"),
+        }
+        assert_eq!(salvage_request_id(&payload), Some(0xFEED));
+        assert!(encode_graph_query(&WireGraphQuery {
+            seeds: vec![],
+            ..q.clone()
+        })
+        .is_err());
+
+        let ok = WireGraphQueryResp::ok(0xFEED, 3, 2, vec![1.5, -2.5, 0.0, f32::MIN_POSITIVE, 4.0, 5.0]);
+        let frame = encode_graph_query_resp(&ok).unwrap();
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::GraphQueryResp(got) => {
+                assert_eq!(got, ok);
+                assert_eq!(got.seed_output(1), Some(&[0.0, f32::MIN_POSITIVE][..]));
+                assert_eq!(got.seed_output(3), None);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        let rej = WireGraphQueryResp::err(9, WireStatus::Rejected, 3, "extraction spans 600+ nodes");
+        let payload = read_frame(&mut std::io::Cursor::new(&encode_graph_query_resp(&rej).unwrap()))
+            .unwrap()
+            .unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::GraphQueryResp(got) => assert_eq!(got, rej),
+            other => panic!("decoded {other:?}"),
+        }
+        // Ragged outputs cannot be encoded.
+        let mut bad = ok;
+        bad.outputs.pop();
+        assert!(encode_graph_query_resp(&bad).is_err());
+    }
+
+    #[test]
+    fn graph_mutate_frames_round_trip() {
+        use crate::resident::MutateOp;
+        let m = WireGraphMutate {
+            id: 404,
+            ops: vec![
+                MutateOp::AddEdge(1, 2),
+                MutateOp::RemoveEdge(7, 3),
+                MutateOp::AddNode(vec![0.5, -1.0, 2.25]),
+            ],
+        };
+        let frame = encode_graph_mutate(&m).unwrap();
+        assert_eq!(frame[4], PROTO_V4);
+        let payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::GraphMutate(got) => assert_eq!(got, m),
+            other => panic!("decoded {other:?}"),
+        }
+        assert_eq!(salvage_request_id(&payload), Some(404));
+        // Unknown op byte fails decoding but keeps the id salvageable.
+        let mut bad_op = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        bad_op[HEADER_BYTES + 10] = 9;
+        let fixed = checksum(&bad_op[HEADER_BYTES..]);
+        bad_op[2..6].copy_from_slice(&fixed.to_le_bytes());
+        let e = decode_frame(&bad_op).unwrap_err();
+        assert!(e.to_string().contains("mutation op"), "{e}");
+        assert_eq!(salvage_request_id(&bad_op), Some(404));
+
+        let resp = WireGraphMutateResp {
+            id: 404,
+            status: WireStatus::Ok,
+            snapshot_version: 12,
+            applied: 2,
+            rejected: 1,
+            message: "1 op rejected".into(),
+        };
+        let payload =
+            read_frame(&mut std::io::Cursor::new(&encode_graph_mutate_resp(&resp).unwrap()))
+                .unwrap()
+                .unwrap();
+        match decode_frame(&payload).unwrap() {
+            WireFrame::GraphMutateResp(got) => assert_eq!(got, resp),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resident_kinds_require_v4() {
+        // A resident frame re-stamped v3 must be refused even with a
+        // valid checksum: pre-v4 peers defined no such kind.
+        let frame = encode_graph_query(&WireGraphQuery {
+            id: 1,
+            qos: WireQos::default(),
+            hops: 2,
+            fanout: 0,
+            seeds: vec![0],
+        })
+        .unwrap();
+        let mut payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        payload[0] = PROTO_V3;
+        let e = decode_frame(&payload).unwrap_err();
+        assert!(e.to_string().contains("require protocol version"), "{e}");
+        // And a v3-stamped resident kind salvages nothing: the
+        // envelope is not trustworthy under that version.
+        assert_eq!(salvage_request_id(&payload), None);
+    }
+
+    #[test]
+    fn v4_inference_requests_decode_like_v2() {
+        // The inference body did not change in v4 either: a mixed
+        // workload interleaves v2 molecular frames and v4 resident
+        // frames on one connection.
+        let req = WireRequest {
+            id: 66,
+            model: "dgn_resident".into(),
+            qos: WireQos::new(100, Priority::Normal),
+            graph: graph(),
+        };
+        let frame = encode_request(&req).unwrap();
+        let mut payload = read_frame(&mut std::io::Cursor::new(&frame)).unwrap().unwrap();
+        payload[0] = PROTO_V4;
+        match decode_frame(&payload).unwrap() {
+            WireFrame::Request(got) => assert_eq!(got, req),
+            other => panic!("decoded {other:?}"),
+        }
+        assert_eq!(salvage_request_id(&payload), Some(66));
     }
 
     #[test]

@@ -49,10 +49,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Metrics, Request, Server, TrySubmit};
 use crate::registry::ControlRequest;
+use crate::resident::{extract_khop, QueryPending, ResidentState, RESIDENT_LAYERS, RESIDENT_MODEL};
 
 use super::proto::{
-    self, Op, WireControlResp, WireFrame, WireResponse, WireStatus, PROTO_V1, PROTO_V3,
-    PROTO_VERSION,
+    self, Op, WireControlResp, WireFrame, WireGraphMutateResp, WireGraphQueryResp, WireResponse,
+    WireStatus, PROTO_V1, PROTO_V3, PROTO_V4, PROTO_VERSION,
 };
 
 /// Poller token of the reactor's waker; connection tokens start above.
@@ -282,6 +283,10 @@ struct Reactor {
     server: Arc<Server>,
     metrics: Arc<Metrics>,
     routes: Arc<RouteTable>,
+    /// Resident graph-serving state; `None` outside resident mode, in
+    /// which case v4 `GRAPH_QUERY` / `GRAPH_MUTATE` frames are
+    /// answered `Rejected` without touching the executor pipeline.
+    resident: Option<Arc<ResidentState>>,
     conns: HashMap<u64, Conn>,
     next_token: u64,
 }
@@ -293,6 +298,7 @@ pub(crate) fn spawn_reactors(
     server: &Arc<Server>,
     metrics: &Arc<Metrics>,
     routes: &Arc<RouteTable>,
+    resident: Option<&Arc<ResidentState>>,
 ) -> Result<(Vec<Arc<ReactorQueue>>, Vec<JoinHandle<()>>)> {
     let count = count.max(1);
     let mut queues = Vec::with_capacity(count);
@@ -314,6 +320,7 @@ pub(crate) fn spawn_reactors(
             server: Arc::clone(server),
             metrics: Arc::clone(metrics),
             routes: Arc::clone(routes),
+            resident: resident.map(Arc::clone),
             conns: HashMap::new(),
             next_token: WAKER_TOKEN + 1,
         };
@@ -461,6 +468,11 @@ impl Reactor {
             if self.routes.remove(*id).is_some() {
                 self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
             }
+            // A resident query's slice bookkeeping dies with its
+            // connection (the pump's take_pending will simply miss).
+            if let Some(r) = &self.resident {
+                r.take_pending(*id);
+            }
         }
         self.metrics.net().connections_open.fetch_sub(1, Ordering::Relaxed);
         // Dropping the stream closes the fd; a client blocked on a
@@ -519,12 +531,18 @@ impl Reactor {
         let version = match payload.first() {
             Some(&PROTO_V1) => PROTO_V1,
             Some(&PROTO_V3) => PROTO_V3,
+            Some(&PROTO_V4) => PROTO_V4,
             _ => PROTO_VERSION,
         };
         match proto::decode_frame(payload) {
             Ok(WireFrame::Request(req)) => self.admit(token, conn, req, version),
             Ok(WireFrame::Control(ctrl)) => self.handle_control(conn, ctrl),
-            Ok(WireFrame::Response(_)) | Ok(WireFrame::ControlResp(_)) => {
+            Ok(WireFrame::GraphQuery(q)) => self.handle_graph_query(token, conn, q),
+            Ok(WireFrame::GraphMutate(m)) => self.handle_graph_mutate(conn, m),
+            Ok(WireFrame::Response(_))
+            | Ok(WireFrame::ControlResp(_))
+            | Ok(WireFrame::GraphQueryResp(_))
+            | Ok(WireFrame::GraphMutateResp(_)) => {
                 // A response frame on the server's ingress is a
                 // protocol violation; answer and move on.
                 self.metrics.net().decode_errors.fetch_add(1, Ordering::Relaxed);
@@ -620,6 +638,177 @@ impl Reactor {
         }
     }
 
+    /// One resident k-hop query. Extraction happens here on the
+    /// reactor thread (it is a bounded BFS over the cap, comparable to
+    /// frame decoding); the forward itself goes through the ordinary
+    /// reserve → route → admit pipeline under [`RESIDENT_MODEL`], with
+    /// the snapshot's full-graph Fiedler vector attached so prep never
+    /// re-solves on the subgraph (the exactness contract).
+    fn handle_graph_query(&mut self, token: u64, conn: &mut Conn, q: proto::WireGraphQuery) {
+        let Some(resident) = self.resident.clone() else {
+            self.metrics.resident().queries_rejected.fetch_add(1, Ordering::Relaxed);
+            self.answer_query(
+                conn,
+                WireGraphQueryResp::err(
+                    q.id,
+                    WireStatus::Rejected,
+                    0,
+                    "server is not in resident mode",
+                ),
+            );
+            return;
+        };
+        if (q.hops as usize) < RESIDENT_LAYERS {
+            self.metrics.resident().queries_rejected.fetch_add(1, Ordering::Relaxed);
+            self.answer_query(
+                conn,
+                WireGraphQueryResp::err(
+                    q.id,
+                    WireStatus::Rejected,
+                    0,
+                    format!(
+                        "hops {} below the resident model's {} layers (exactness contract)",
+                        q.hops, RESIDENT_LAYERS
+                    ),
+                ),
+            );
+            return;
+        }
+        let snap = resident.store.snapshot();
+        let ex = match extract_khop(&snap, &q.seeds, q.hops, q.fanout, resident.meta.n_max) {
+            Ok(ex) => ex,
+            Err(e) => {
+                self.metrics.resident().queries_rejected.fetch_add(1, Ordering::Relaxed);
+                let status = if e.is_bad_request() {
+                    WireStatus::BadRequest
+                } else {
+                    WireStatus::Rejected
+                };
+                self.answer_query(
+                    conn,
+                    WireGraphQueryResp::err(q.id, status, snap.version, format!("{e}")),
+                );
+                return;
+            }
+        };
+        self.metrics.resident().record_query(ex.nodes.len() as u64);
+        self.metrics.resident().snapshot_version.store(snap.version, Ordering::Relaxed);
+        let server_id = self.server.reserve_id();
+        self.routes.insert(
+            server_id,
+            RouteEntry {
+                reactor: self.idx,
+                token,
+                client_id: q.id,
+                version: PROTO_V4,
+            },
+        );
+        self.metrics.net().requests_in_flight.fetch_add(1, Ordering::Relaxed);
+        resident.register_pending(
+            server_id,
+            QueryPending {
+                seed_locals: ex.seed_locals.clone(),
+                out_dim: resident.meta.out_dim,
+                snapshot_version: ex.snapshot_version,
+            },
+        );
+        let mut eig = ex.eig;
+        eig.resize(resident.meta.n_max, 0.0);
+        let mut creq =
+            Request::with_qos(server_id, RESIDENT_MODEL, ex.graph, q.qos.ttl_ms, q.qos.priority);
+        creq.eig = Some(eig);
+        self.try_admit(conn, creq);
+    }
+
+    /// One mutation batch, applied synchronously on the reactor thread
+    /// (copy-on-write assembly is bounded by the resident graph size,
+    /// and the store's mutate lock serializes concurrent batches).
+    fn handle_graph_mutate(&mut self, conn: &mut Conn, m: proto::WireGraphMutate) {
+        let resp = match &self.resident {
+            None => WireGraphMutateResp {
+                id: m.id,
+                status: WireStatus::Rejected,
+                snapshot_version: 0,
+                applied: 0,
+                rejected: 0,
+                message: "server is not in resident mode".into(),
+            },
+            Some(resident) => {
+                let out = resident.store.apply(&m.ops);
+                let rc = self.metrics.resident();
+                if out.applied > 0 {
+                    rc.mutations_applied.fetch_add(1, Ordering::Relaxed);
+                }
+                rc.mutation_ops_rejected.fetch_add(out.rejected as u64, Ordering::Relaxed);
+                rc.snapshot_version.store(out.version, Ordering::Relaxed);
+                WireGraphMutateResp {
+                    id: m.id,
+                    status: WireStatus::Ok,
+                    snapshot_version: out.version,
+                    applied: out.applied,
+                    rejected: out.rejected,
+                    message: String::new(),
+                }
+            }
+        };
+        match proto::encode_graph_mutate_resp(&resp) {
+            Ok(frame) => {
+                if !conn.outbuf.push(&frame) {
+                    self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Encode and queue one locally generated graph-query response.
+    fn answer_query(&mut self, conn: &mut Conn, resp: WireGraphQueryResp) {
+        match proto::encode_graph_query_resp(&resp) {
+            Ok(frame) => {
+                if !conn.outbuf.push(&frame) {
+                    self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                self.metrics.net().responses_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Answer a request shed before execution (queue-full rejection or
+    /// parked-TTL expiry) in the client's own dialect: a resident query
+    /// — identified by its pending entry — gets a v4 GRAPH_QUERY_RESP;
+    /// everything else gets the plain response frame.
+    fn answer_shed(
+        &mut self,
+        conn: &mut Conn,
+        server_id: u64,
+        entry: &RouteEntry,
+        model: &str,
+        status: WireStatus,
+        msg: &str,
+    ) {
+        let pending = self
+            .resident
+            .as_ref()
+            .and_then(|r| r.take_pending(server_id));
+        if let Some(p) = pending {
+            self.metrics.resident().queries_rejected.fetch_add(1, Ordering::Relaxed);
+            self.answer_query(
+                conn,
+                WireGraphQueryResp::err(entry.client_id, status, p.snapshot_version, msg),
+            );
+        } else {
+            self.answer(
+                conn,
+                entry.version,
+                WireResponse::err(entry.client_id, model, status, msg),
+            );
+        }
+    }
+
     fn try_admit(&mut self, conn: &mut Conn, creq: Request) {
         let id = creq.id;
         let model = creq.model.clone();
@@ -632,15 +821,13 @@ impl Reactor {
                 // Rejected wire status; the connection stays up.
                 if let Some(entry) = self.routes.remove(id) {
                     self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
-                    self.answer(
+                    self.answer_shed(
                         conn,
-                        entry.version,
-                        WireResponse::err(
-                            entry.client_id,
-                            model,
-                            WireStatus::Rejected,
-                            "ingest queue full",
-                        ),
+                        id,
+                        &entry,
+                        &model,
+                        WireStatus::Rejected,
+                        "ingest queue full",
                     );
                 }
             }
@@ -684,15 +871,13 @@ impl Reactor {
             if let Some(entry) = self.routes.remove(creq.id) {
                 self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.record_deadline_expired();
-                self.answer(
+                self.answer_shed(
                     conn,
-                    entry.version,
-                    WireResponse::err(
-                        entry.client_id,
-                        creq.model,
-                        WireStatus::Expired,
-                        "deadline expired before admission",
-                    ),
+                    creq.id,
+                    &entry,
+                    &creq.model,
+                    WireStatus::Expired,
+                    "deadline expired before admission",
                 );
             }
         } else {
@@ -706,15 +891,13 @@ impl Reactor {
                     conn.pending.remove(&id);
                     if let Some(entry) = self.routes.remove(id) {
                         self.metrics.net().requests_in_flight.fetch_sub(1, Ordering::Relaxed);
-                        self.answer(
+                        self.answer_shed(
                             conn,
-                            entry.version,
-                            WireResponse::err(
-                                entry.client_id,
-                                model,
-                                WireStatus::Rejected,
-                                "ingest queue full",
-                            ),
+                            id,
+                            &entry,
+                            &model,
+                            WireStatus::Rejected,
+                            "ingest queue full",
                         );
                     }
                 }

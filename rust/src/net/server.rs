@@ -41,8 +41,9 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Metrics, Server, ServerConfig};
+use crate::resident::ResidentState;
 
-use super::proto::{self, WireResponse, WireStatus};
+use super::proto::{self, WireGraphQueryResp, WireResponse, WireStatus};
 use super::reactor::{self, ReactorMsg, ReactorQueue, RouteTable};
 
 /// Construction parameters of the TCP front-end.
@@ -57,6 +58,11 @@ pub struct NetServerConfig {
     /// The wrapped coordinator's configuration (models, lanes, queue
     /// capacity, admission policy).
     pub server: ServerConfig,
+    /// Resident graph-serving state (wire-v4 `GRAPH_QUERY` /
+    /// `GRAPH_MUTATE`). `None` = molecular-only serving; the caller
+    /// boots the state ([`ResidentState::boot`]) and must also inject
+    /// its synthesized model via `ServerConfig::synthetic_models`.
+    pub resident: Option<Arc<ResidentState>>,
 }
 
 impl Default for NetServerConfig {
@@ -65,6 +71,7 @@ impl Default for NetServerConfig {
             listen: "127.0.0.1:0".to_string(),
             reactors: 2,
             server: ServerConfig::default(),
+            resident: None,
         }
     }
 }
@@ -105,7 +112,7 @@ impl NetServer {
         let stop = Arc::new(AtomicBool::new(false));
         let routes = Arc::new(RouteTable::new());
         let (reactor_queues, reactor_handles) =
-            reactor::spawn_reactors(cfg.reactors, &server, &metrics, &routes)?;
+            reactor::spawn_reactors(cfg.reactors, &server, &metrics, &routes, cfg.resident.as_ref())?;
 
         // Response pump: the coordinator's single response stream fans
         // back out to the reactors as pre-encoded frames. Also the one
@@ -116,6 +123,7 @@ impl NetServer {
             let routes = Arc::clone(&routes);
             let metrics = Arc::clone(&metrics);
             let queues = reactor_queues.clone();
+            let resident = cfg.resident.clone();
             std::thread::Builder::new()
                 .name("gengnn-net-pump".to_string())
                 .spawn(move || {
@@ -135,6 +143,60 @@ impl NetServer {
                             .net()
                             .requests_in_flight
                             .fetch_sub(1, Ordering::Relaxed);
+                        // A resident k-hop query (identified by its
+                        // pending entry): carve the per-seed rows out
+                        // of the node-level output and answer as a v4
+                        // GRAPH_QUERY_RESP instead of a plain response.
+                        if let Some(p) = resident.as_ref().and_then(|rs| rs.take_pending(r.id)) {
+                            let wire = if r.expired {
+                                WireGraphQueryResp::err(
+                                    entry.client_id,
+                                    WireStatus::Expired,
+                                    p.snapshot_version,
+                                    r.output.err().unwrap_or_default(),
+                                )
+                            } else {
+                                match r.output {
+                                    Ok(output) => seed_rows(&output, &p.seed_locals, p.out_dim)
+                                        .map(|rows| {
+                                            WireGraphQueryResp::ok(
+                                                entry.client_id,
+                                                p.snapshot_version,
+                                                p.out_dim,
+                                                rows,
+                                            )
+                                        })
+                                        .unwrap_or_else(|| {
+                                            WireGraphQueryResp::err(
+                                                entry.client_id,
+                                                WireStatus::Error,
+                                                p.snapshot_version,
+                                                "node-level output shorter than the closure",
+                                            )
+                                        }),
+                                    Err(msg) => WireGraphQueryResp::err(
+                                        entry.client_id,
+                                        WireStatus::Error,
+                                        p.snapshot_version,
+                                        msg,
+                                    ),
+                                }
+                            };
+                            match proto::encode_graph_query_resp(&wire) {
+                                Ok(frame) => queues[entry.reactor].send(ReactorMsg::Deliver {
+                                    token: entry.token,
+                                    id: r.id,
+                                    frame,
+                                }),
+                                Err(_) => {
+                                    metrics
+                                        .net()
+                                        .responses_dropped
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            continue;
+                        }
                         let wire = if r.expired {
                             WireResponse::err(
                                 entry.client_id,
@@ -285,6 +347,17 @@ impl NetServer {
         }
         metrics
     }
+}
+
+/// Gather the seed rows (request order) out of a node-level output;
+/// `None` if the output is too short for any requested local index.
+fn seed_rows(output: &[f32], seed_locals: &[u32], out_dim: usize) -> Option<Vec<f32>> {
+    let mut rows = Vec::with_capacity(seed_locals.len() * out_dim);
+    for &li in seed_locals {
+        let li = li as usize;
+        rows.extend_from_slice(output.get(li * out_dim..(li + 1) * out_dim)?);
+    }
+    Some(rows)
 }
 
 /// Dial helper shared by the client and the load generator.

@@ -151,15 +151,50 @@ impl ModelRegistry {
     /// `make artifacts` output, or a synthetic test dir) a catalog is
     /// synthesized by hashing the manifest blobs in place.
     pub fn open(dir: impl Into<PathBuf>, serve: &[String]) -> Result<ModelRegistry> {
+        Self::open_with_synthetic(dir, serve, Vec::new())
+    }
+
+    /// [`ModelRegistry::open`] plus in-memory catalog entries that have
+    /// no on-disk artifacts of their own — the resident serving mode
+    /// injects its synthesized DGN variant this way. Each synthetic
+    /// meta is appended to the catalog (reusing its base artifact
+    /// blobs when they resolve under the store root, else a
+    /// placeholder record) and to the in-memory deploy log, so lanes
+    /// compile it from the snapshot exactly like a cataloged model.
+    /// Nothing synthetic is ever written back to `registry.json`.
+    pub fn open_with_synthetic(
+        dir: impl Into<PathBuf>,
+        serve: &[String],
+        synthetic: Vec<ModelMeta>,
+    ) -> Result<ModelRegistry> {
         let dir = dir.into();
-        let artifacts = Artifacts::load(&dir)?;
+        let mut artifacts = Artifacts::load(&dir)?;
         let store = BlobStore::open(&dir);
         let registry_path = dir.join(REGISTRY_FILE);
-        let manifest = if registry_path.exists() {
+        let mut manifest = if registry_path.exists() {
             RegistryManifest::load(&registry_path)?
         } else {
             Self::synthesize(&artifacts, &store)?
         };
+        for meta in synthetic {
+            anyhow::ensure!(
+                artifacts.model(&meta.name).is_err() && manifest.model(&meta.name).is_none(),
+                "synthetic model {} collides with a cataloged model",
+                meta.name
+            );
+            let blobs = Self::blob_refs(&store, &meta).unwrap_or_else(|_| {
+                vec![BlobRef {
+                    path: format!("{}.synthetic", meta.name),
+                    digest: "0".repeat(64),
+                    size: 0,
+                }]
+            });
+            let record = ModelRecord::new(&meta.name, blobs);
+            let digest = record.digest.clone();
+            manifest.models.push(record);
+            manifest.append(LogOp::Load, &meta.name, &digest, 0);
+            artifacts.models.push(meta);
+        }
         for meta in &artifacts.models {
             anyhow::ensure!(
                 manifest.model(&meta.name).is_some(),
@@ -693,6 +728,28 @@ mod tests {
             .expect("gcn listed");
         assert!(gcn.get("live").unwrap().as_bool().unwrap());
         assert!(doc.get("history").unwrap().as_arr().unwrap().len() == 1);
+    }
+
+    #[test]
+    fn synthetic_models_join_catalog_and_serving_in_memory_only() {
+        let arts = Artifacts::load(Artifacts::default_dir()).expect("artifacts");
+        let base = arts.model("dgn_large").expect("dgn_large cataloged");
+        let meta = crate::resident::resident_meta(base, crate::datagen::CitationDataset::Cora);
+        let serve = vec!["gcn".to_string(), meta.name.clone()];
+        let reg = ModelRegistry::open_with_synthetic(Artifacts::default_dir(), &serve, vec![meta])
+            .expect("open with synthetic");
+        let snap = reg.snapshot();
+        assert!(snap.contains("dgn_resident"));
+        assert_eq!(snap.meta("dgn_resident").unwrap().in_dim, 1433);
+        assert!(reg.catalog_digest("dgn_resident").is_some());
+        // A name collision with a cataloged model is refused.
+        let dup = arts.model("gcn").unwrap().clone();
+        let err = ModelRegistry::open_with_synthetic(
+            Artifacts::default_dir(),
+            &["gcn".to_string()],
+            vec![dup],
+        );
+        assert!(err.is_err());
     }
 
     #[test]

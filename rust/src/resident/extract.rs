@@ -1,0 +1,323 @@
+//! Deterministic k-hop neighborhood extraction: a resident-graph
+//! query becomes an ordinary [`CooGraph`] that flows through the
+//! existing `GraphBatch` ingest path unchanged.
+//!
+//! The bit-exactness contract (pinned by `rust/tests/resident_e2e.rs`
+//! and `python/tools/resident_replica.py`): with full expansion
+//! (`fanout = 0`) and `hops >= layers`, the DGN forward over the
+//! extracted subgraph is **bit-identical** on the seed rows to the
+//! full-graph forward restricted to those seeds. Three properties
+//! carry it:
+//!
+//! 1. **Closure**: every node within `hops` of a seed is included, so
+//!    any node whose layer-`l` state reaches a seed (depth ≤
+//!    `layers - 1 < hops`) has its *complete* neighborhood in the
+//!    subgraph — its aggregation weights (degrees, normalized
+//!    eig-differences) are exactly the full-graph ones. Boundary
+//!    nodes at depth == `hops` contribute only their raw features.
+//! 2. **Monotone relabeling**: closure nodes are assigned local ids in
+//!    ascending global order, so every sorted in-neighbor walk — the
+//!    interpreter's f32 accumulation order — visits neighbors in the
+//!    same relative order as the full graph.
+//! 3. **Shared spectral field**: the attached eigenvector is the
+//!    *snapshot's* full-graph Fiedler vector restricted to the
+//!    closure, not a per-subgraph re-solve (which would be a
+//!    different directional field entirely).
+//!
+//! `fanout > 0` caps expansion at the first `fanout` ascending
+//! neighbors per node — a deterministic capacity-bounded
+//! approximation that deliberately trades the exactness contract for
+//! bounded extraction size (documented in `docs/SCENARIOS.md`).
+
+use std::collections::BTreeSet;
+
+use crate::graph::CooGraph;
+
+use super::store::GraphSnapshot;
+
+/// Why an extraction was refused. `SeedOutOfRange` / `DuplicateSeed` /
+/// `NoSeeds` are malformed requests (wire `BadRequest`); `TooLarge` is
+/// a capacity rejection (wire `Rejected` — the client may retry with
+/// fewer hops or a fanout cap).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExtractError {
+    SeedOutOfRange(u32),
+    DuplicateSeed(u32),
+    NoSeeds,
+    TooLarge { nodes: usize, cap: usize },
+}
+
+impl std::fmt::Display for ExtractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExtractError::SeedOutOfRange(s) => write!(f, "seed {s} out of range"),
+            ExtractError::DuplicateSeed(s) => write!(f, "duplicate seed {s}"),
+            ExtractError::NoSeeds => write!(f, "query carries no seeds"),
+            ExtractError::TooLarge { nodes, cap } => {
+                write!(f, "extraction spans {nodes}+ nodes, capacity {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExtractError {}
+
+/// Whether this error is a malformed request (vs a capacity refusal).
+impl ExtractError {
+    pub fn is_bad_request(&self) -> bool {
+        !matches!(self, ExtractError::TooLarge { .. })
+    }
+}
+
+/// One extracted k-hop neighborhood, ready for `GraphBatch` ingest.
+#[derive(Clone, Debug)]
+pub struct Extraction {
+    /// Global ids of the closure, ascending — index in this vec is the
+    /// node's local id (monotone relabeling).
+    pub nodes: Vec<u32>,
+    /// Local id of each requested seed, in request order.
+    pub seed_locals: Vec<u32>,
+    /// The induced subgraph: locally relabeled directed edges (both
+    /// mirror directions present), gathered feature rows.
+    pub graph: CooGraph,
+    /// The snapshot's full-graph Fiedler vector restricted to
+    /// `nodes` (same order; length `nodes.len()`).
+    pub eig: Vec<f32>,
+    /// Version of the snapshot this extraction resolved.
+    pub snapshot_version: u64,
+}
+
+/// Extract the k-hop in-neighbor closure of `seeds` from a snapshot.
+///
+/// `fanout = 0` expands every neighbor (the exactness contract);
+/// `fanout > 0` expands only the first `fanout` ascending neighbors
+/// per node. `cap` bounds the closure size (the resident model's
+/// padded capacity); crossing it rejects the query instead of
+/// truncating it silently.
+pub fn extract_khop(
+    snap: &GraphSnapshot,
+    seeds: &[u32],
+    hops: u8,
+    fanout: u16,
+    cap: usize,
+) -> Result<Extraction, ExtractError> {
+    if seeds.is_empty() {
+        return Err(ExtractError::NoSeeds);
+    }
+    let n = snap.n();
+    let mut closure: BTreeSet<u32> = BTreeSet::new();
+    for &s in seeds {
+        if s as usize >= n {
+            return Err(ExtractError::SeedOutOfRange(s));
+        }
+        if !closure.insert(s) {
+            return Err(ExtractError::DuplicateSeed(s));
+        }
+    }
+    if closure.len() > cap {
+        return Err(ExtractError::TooLarge {
+            nodes: closure.len(),
+            cap,
+        });
+    }
+    let mut frontier: Vec<u32> = closure.iter().copied().collect();
+    for _ in 0..hops {
+        if frontier.is_empty() {
+            break;
+        }
+        let mut next = Vec::new();
+        for &v in &frontier {
+            let nbrs = snap.neighbors(v as usize);
+            let take = if fanout == 0 {
+                nbrs.len()
+            } else {
+                (fanout as usize).min(nbrs.len())
+            };
+            for &u in &nbrs[..take] {
+                if closure.insert(u) {
+                    if closure.len() > cap {
+                        return Err(ExtractError::TooLarge {
+                            nodes: closure.len(),
+                            cap,
+                        });
+                    }
+                    next.push(u);
+                }
+            }
+        }
+        next.sort_unstable();
+        frontier = next;
+    }
+
+    // Ascending global order IS the local relabeling.
+    let nodes: Vec<u32> = closure.into_iter().collect();
+    let local = |g: u32| -> u32 {
+        nodes
+            .binary_search(&g)
+            .expect("closure member has a local id") as u32
+    };
+    let seed_locals: Vec<u32> = seeds.iter().map(|&s| local(s)).collect();
+
+    let f = snap.f();
+    let mut node_feat = Vec::with_capacity(nodes.len() * f);
+    for &g in &nodes {
+        node_feat.extend_from_slice(snap.feature_row(g as usize));
+    }
+    // Induced directed edges, grouped by destination ascending with
+    // ascending sources inside each group (deterministic order; the
+    // interpreter re-sorts per row anyway).
+    let mut edges = Vec::new();
+    for (li, &g) in nodes.iter().enumerate() {
+        for &u in snap.neighbors(g as usize) {
+            if let Ok(lu) = nodes.binary_search(&u) {
+                edges.push((lu as u32, li as u32));
+            }
+        }
+    }
+    let eig_full = snap.eig();
+    let eig: Vec<f32> = nodes.iter().map(|&g| eig_full[g as usize]).collect();
+    Ok(Extraction {
+        graph: CooGraph {
+            n: nodes.len(),
+            edges,
+            node_feat,
+            f_node: f,
+            edge_feat: Vec::new(),
+            f_edge: 0,
+        },
+        nodes,
+        seed_locals,
+        eig,
+        snapshot_version: snap.version,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resident::store::ResidentStore;
+
+    /// Path 0-1-2-3-4-5 with a branch 2-6.
+    fn store() -> ResidentStore {
+        let g = CooGraph::from_undirected(
+            7,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (2, 6)],
+            (0..7).map(|i| i as f32).collect(),
+            1,
+            &[],
+            0,
+        )
+        .unwrap();
+        ResidentStore::new(&g).unwrap()
+    }
+
+    #[test]
+    fn closure_follows_hop_count() {
+        let s = store().snapshot();
+        let e1 = extract_khop(&s, &[2], 1, 0, 64).unwrap();
+        assert_eq!(e1.nodes, vec![1, 2, 3, 6]);
+        let e2 = extract_khop(&s, &[2], 2, 0, 64).unwrap();
+        assert_eq!(e2.nodes, vec![0, 1, 2, 3, 4, 6]);
+        let e3 = extract_khop(&s, &[2], 3, 0, 64).unwrap();
+        assert_eq!(e3.nodes, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn relabeling_is_monotone_and_features_follow() {
+        let s = store().snapshot();
+        let e = extract_khop(&s, &[2], 2, 0, 64).unwrap();
+        // nodes = [0,1,2,3,4,6]: local ids ascend with global ids.
+        assert!(e.nodes.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(e.seed_locals, vec![2]);
+        // Feature row k carries global node e.nodes[k]'s features.
+        for (li, &g) in e.nodes.iter().enumerate() {
+            assert_eq!(e.graph.node_feat[li], g as f32);
+        }
+        // eig restriction picks the same positions.
+        let full = s.eig();
+        for (li, &g) in e.nodes.iter().enumerate() {
+            assert_eq!(e.eig[li], full[g as usize]);
+        }
+    }
+
+    #[test]
+    fn induced_edges_are_exactly_the_closure_pairs() {
+        let s = store().snapshot();
+        let e = extract_khop(&s, &[2], 1, 0, 64).unwrap();
+        // closure {1,2,3,6} → locals {0,1,2,3}; undirected edges
+        // inside: {1,2},{2,3},{2,6} → 6 directed entries.
+        let mut got = e.graph.edges.clone();
+        got.sort_unstable();
+        assert_eq!(
+            got,
+            vec![(0, 1), (1, 0), (1, 2), (1, 3), (2, 1), (3, 1)]
+        );
+        e.graph.validate().unwrap();
+        // Edge 0-1 of the full graph is cut: node 1 is a boundary node.
+        assert!(!got.contains(&(0, 0)));
+    }
+
+    #[test]
+    fn multi_seed_union_and_seed_locals_in_request_order() {
+        let s = store().snapshot();
+        let e = extract_khop(&s, &[5, 0], 1, 0, 64).unwrap();
+        assert_eq!(e.nodes, vec![0, 1, 4, 5]);
+        assert_eq!(e.seed_locals, vec![3, 0]);
+    }
+
+    #[test]
+    fn fanout_takes_lowest_id_neighbors() {
+        let s = store().snapshot();
+        // Node 2's neighbors are [1, 3, 6]; fanout 2 keeps {1, 3}.
+        let e = extract_khop(&s, &[2], 1, 2, 64).unwrap();
+        assert_eq!(e.nodes, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn extraction_is_deterministic() {
+        let st = store();
+        let s = st.snapshot();
+        let a = extract_khop(&s, &[2, 5], 2, 0, 64).unwrap();
+        let b = extract_khop(&s, &[2, 5], 2, 0, 64).unwrap();
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.eig, b.eig);
+        assert_eq!(a.snapshot_version, 1);
+    }
+
+    #[test]
+    fn rejections_are_typed() {
+        let s = store().snapshot();
+        assert_eq!(
+            extract_khop(&s, &[], 1, 0, 64),
+            Err(ExtractError::NoSeeds)
+        );
+        assert_eq!(
+            extract_khop(&s, &[9], 1, 0, 64),
+            Err(ExtractError::SeedOutOfRange(9))
+        );
+        assert_eq!(
+            extract_khop(&s, &[1, 1], 1, 0, 64),
+            Err(ExtractError::DuplicateSeed(1))
+        );
+        let too_big = extract_khop(&s, &[2], 2, 0, 3);
+        assert!(matches!(too_big, Err(ExtractError::TooLarge { cap: 3, .. })));
+        assert!(!ExtractError::TooLarge { nodes: 9, cap: 3 }.is_bad_request());
+        assert!(ExtractError::NoSeeds.is_bad_request());
+    }
+
+    #[test]
+    fn extraction_tracks_mutations_through_new_snapshots() {
+        use crate::resident::store::MutateOp;
+        let st = store();
+        let before = st.snapshot();
+        st.apply(&[MutateOp::AddEdge(0, 6)]);
+        let after = st.snapshot();
+        let e_before = extract_khop(&before, &[0], 1, 0, 64).unwrap();
+        let e_after = extract_khop(&after, &[0], 1, 0, 64).unwrap();
+        assert_eq!(e_before.nodes, vec![0, 1]);
+        assert_eq!(e_after.nodes, vec![0, 1, 6]);
+        assert_eq!(e_before.snapshot_version, 1);
+        assert_eq!(e_after.snapshot_version, 2);
+    }
+}

@@ -1,0 +1,339 @@
+//! Resident large-graph serving (the paper's §4.6 Large Graph
+//! Extension as a *serving mode*, not a batch benchmark).
+//!
+//! The molecular path ships each graph whole inside the request. The
+//! resident path instead keeps one citation-scale graph **hosted by
+//! the server** ([`ResidentStore`]: CSR-style sorted adjacency + node
+//! features behind an `Arc`-swapped snapshot, same publish discipline
+//! as the PR-8 model registry) and serves two new wire-v4 operations:
+//!
+//! - `GRAPH_QUERY`: a seed-node set plus hop count / fanout. The
+//!   reactor extracts the deterministic k-hop closure
+//!   ([`extract::extract_khop`]) into an ordinary [`CooGraph`] and
+//!   feeds it down the *existing* ingest path — prep, stage-IR
+//!   interpreter, fusion, QoS admission all unchanged — under the
+//!   synthesized [`RESIDENT_MODEL`] entry. Per-seed output rows are
+//!   sliced from the node-level forward.
+//! - `GRAPH_MUTATE`: add/remove edges, add nodes. Copy-on-write: a
+//!   batch builds a successor snapshot and publishes it atomically,
+//!   so in-flight queries finish on the snapshot they resolved.
+//!
+//! Correctness contract (pinned by `rust/tests/resident_e2e.rs`, the
+//! unit test below, and `python/tools/resident_replica.py`): with
+//! full expansion and `hops >= layers`, the forward on an extracted
+//! neighborhood is **bit-identical** on the seed rows to the
+//! full-graph forward restricted to those seeds, across interleaved
+//! mutation sequences. See `docs/SCENARIOS.md`.
+
+pub mod extract;
+pub mod store;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::datagen::citation::{self, CitationDataset};
+use crate::runtime::{InputSpec, ModelMeta};
+
+pub use extract::{extract_khop, ExtractError, Extraction};
+pub use store::{GraphSnapshot, MutateOp, MutateOutcome, ResidentStore};
+
+/// Catalog name of the synthesized resident model. It is injected
+/// into the registry in-memory (never persisted to the artifact
+/// store) and lowers through the stock DGN path.
+pub const RESIDENT_MODEL: &str = "dgn_resident";
+/// Padded node capacity of the resident plan — the extraction cap.
+pub const RESIDENT_N_MAX: usize = 512;
+/// Message-passing depth. Queries must carry `hops >= RESIDENT_LAYERS`
+/// for the exactness contract; shallower queries are rejected.
+pub const RESIDENT_LAYERS: usize = 2;
+/// Hidden width of the resident model.
+pub const RESIDENT_DIM: usize = 64;
+
+/// The canonical DGN-style input slots for a given capacity/width.
+fn dgn_inputs(n_max: usize, in_dim: usize) -> Vec<InputSpec> {
+    vec![
+        InputSpec {
+            name: "x".into(),
+            shape: vec![n_max, in_dim],
+        },
+        InputSpec {
+            name: "adj".into(),
+            shape: vec![n_max, n_max],
+        },
+        InputSpec {
+            name: "eig".into(),
+            shape: vec![n_max],
+        },
+        InputSpec {
+            name: "mask".into(),
+            shape: vec![n_max],
+        },
+    ]
+}
+
+/// Synthesize the resident model's metadata from a cataloged DGN base
+/// entry. The base contributes only its artifact paths (kept valid so
+/// catalog listing and client-side compile checks still resolve); all
+/// shape-bearing fields are overridden for the dataset.
+pub fn resident_meta(base: &ModelMeta, dataset: CitationDataset) -> ModelMeta {
+    let (_, _, f) = dataset.stats();
+    let out_dim = dataset.num_classes();
+    ModelMeta {
+        name: RESIDENT_MODEL.to_string(),
+        layers: RESIDENT_LAYERS,
+        dim: RESIDENT_DIM,
+        heads: 0,
+        n_max: RESIDENT_N_MAX,
+        in_dim: f,
+        out_dim,
+        node_level: true,
+        inputs: dgn_inputs(RESIDENT_N_MAX, f),
+        hlo_path: base.hlo_path.clone(),
+        golden_path: base.golden_path.clone(),
+    }
+}
+
+/// The same model re-padded to hold the *entire* resident graph —
+/// used only by reference forwards in tests and the replica, never by
+/// the serving path. Weight generation depends on widths and layer
+/// count alone, so this shares bit-exact weights with the query plan.
+pub fn full_graph_meta(meta: &ModelMeta, n: usize) -> ModelMeta {
+    let mut full = meta.clone();
+    full.n_max = n;
+    full.inputs = dgn_inputs(n, meta.in_dim);
+    full
+}
+
+/// Book-keeping for one in-flight resident query: enough to carve the
+/// per-seed rows out of the node-level output when the coordinator
+/// completes it.
+#[derive(Clone, Debug)]
+pub struct QueryPending {
+    pub seed_locals: Vec<u32>,
+    pub out_dim: usize,
+    pub snapshot_version: u64,
+}
+
+/// Shared serving state for resident mode, threaded through the
+/// reactors (dispatch) and the response pump (completion).
+pub struct ResidentState {
+    pub store: ResidentStore,
+    /// The synthesized catalog entry queries execute under.
+    pub meta: ModelMeta,
+    pub dataset: CitationDataset,
+    pending: Mutex<HashMap<u64, QueryPending>>,
+}
+
+impl std::fmt::Debug for ResidentState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResidentState")
+            .field("dataset", &self.dataset)
+            .field("snapshot_version", &self.store.version())
+            .finish_non_exhaustive()
+    }
+}
+
+impl ResidentState {
+    /// Seed the resident store from a generated citation dataset and
+    /// synthesize its model entry from `base` (any cataloged DGN meta).
+    pub fn boot(dataset: CitationDataset, seed: u64, base: &ModelMeta) -> Result<ResidentState> {
+        let graph = citation::dataset(dataset, seed);
+        let store = ResidentStore::new(&graph)
+            .with_context(|| format!("seeding resident store from {}", dataset.name()))?;
+        Ok(ResidentState {
+            store,
+            meta: resident_meta(base, dataset),
+            dataset,
+            pending: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Build directly from a graph (tests; avoids full-size datasets).
+    pub fn from_graph(
+        graph: &crate::graph::CooGraph,
+        dataset: CitationDataset,
+        base: &ModelMeta,
+    ) -> Result<ResidentState> {
+        let store = ResidentStore::new(graph)?;
+        let mut meta = resident_meta(base, dataset);
+        meta.in_dim = graph.f_node;
+        meta.inputs = dgn_inputs(meta.n_max, meta.in_dim);
+        Ok(ResidentState {
+            store,
+            meta,
+            dataset,
+            pending: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn register_pending(&self, id: u64, entry: QueryPending) {
+        crate::util::sync::lock(&self.pending).insert(id, entry);
+    }
+
+    pub fn take_pending(&self, id: u64) -> Option<QueryPending> {
+        crate::util::sync::lock(&self.pending).remove(&id)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        crate::util::sync::lock(&self.pending).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CooGraph, GraphBatch};
+    use crate::runtime::NativeModel;
+
+    /// A deterministic 40-node "toy citation" graph: a ring plus
+    /// distance-7 chords, 8 binary-ish features per node.
+    fn toy_graph() -> CooGraph {
+        let n = 40u32;
+        let f = 8usize;
+        let mut und = Vec::new();
+        for i in 0..n {
+            und.push((i, (i + 1) % n));
+            und.push((i, (i + 7) % n));
+        }
+        let feat: Vec<f32> = (0..n as usize * f)
+            .map(|k| if (k * 2654435761) % 7 < 3 { 1.0 } else { 0.0 })
+            .collect();
+        CooGraph::from_undirected(n as usize, &und, feat, f, &[], 0).unwrap()
+    }
+
+    fn toy_meta(in_dim: usize) -> ModelMeta {
+        ModelMeta {
+            name: RESIDENT_MODEL.to_string(),
+            layers: RESIDENT_LAYERS,
+            dim: RESIDENT_DIM,
+            heads: 0,
+            n_max: 64,
+            in_dim,
+            out_dim: 3,
+            node_level: true,
+            inputs: dgn_inputs(64, in_dim),
+            hlo_path: "unused.hlo.txt".into(),
+            golden_path: "unused.golden.json".into(),
+        }
+    }
+
+    fn pad(eig: &[f32], n_max: usize) -> Vec<f32> {
+        let mut v = eig.to_vec();
+        v.resize(n_max, 0.0);
+        v
+    }
+
+    /// Forward the full resident graph through a re-padded plan and
+    /// return the node-level output rows (`n * out_dim`).
+    fn full_forward(snap: &GraphSnapshot, meta: &ModelMeta, seed: u64) -> Vec<f32> {
+        let full = full_graph_meta(meta, snap.n());
+        let model = NativeModel::build(&full, seed).unwrap();
+        let batch = GraphBatch::ingest_unchecked(snap.to_coo());
+        let eig = snap.eig();
+        model.forward_batch(&batch, Some(&eig)).unwrap()
+    }
+
+    /// The tentpole's correctness pin, at unit scope: extracted k-hop
+    /// forwards are bit-identical to full-graph forwards on the seed
+    /// rows, across an interleaved mutation sequence.
+    #[test]
+    fn khop_forward_matches_full_graph_bitwise_across_mutations() {
+        let g = toy_graph();
+        let meta = toy_meta(g.f_node);
+        let store = ResidentStore::new(&g).unwrap();
+        let weight_seed = 20180414;
+        let model = NativeModel::build(&meta, weight_seed).unwrap();
+        let seeds = [3u32, 17, 30];
+
+        let mutations: [&[MutateOp]; 3] = [
+            &[],
+            &[MutateOp::AddEdge(3, 20), MutateOp::RemoveEdge(17, 18)],
+            &[
+                MutateOp::AddNode(vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]),
+                MutateOp::AddEdge(30, 40),
+            ],
+        ];
+        for ops in mutations {
+            if !ops.is_empty() {
+                let out = store.apply(ops);
+                assert_eq!(out.rejected, 0);
+            }
+            let snap = store.snapshot();
+            let full = full_forward(&snap, &meta, weight_seed);
+            let ex = extract_khop(&snap, &seeds, RESIDENT_LAYERS as u8, 0, meta.n_max).unwrap();
+            let batch = GraphBatch::ingest_unchecked(ex.graph.clone());
+            let out = model
+                .forward_batch(&batch, Some(&pad(&ex.eig, meta.n_max)))
+                .unwrap();
+            for (si, &s) in seeds.iter().enumerate() {
+                let li = ex.seed_locals[si] as usize;
+                let got = &out[li * meta.out_dim..(li + 1) * meta.out_dim];
+                let want = &full[s as usize * meta.out_dim..(s as usize + 1) * meta.out_dim];
+                let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    got_bits, want_bits,
+                    "seed {s} diverged on snapshot v{}",
+                    snap.version
+                );
+            }
+        }
+    }
+
+    /// Shallow queries cannot honor the contract: a 1-hop closure of a
+    /// 2-layer model really does diverge (the rejection rule exists
+    /// for a reason, not out of caution).
+    #[test]
+    fn one_hop_closure_diverges_for_two_layer_model() {
+        let g = toy_graph();
+        let meta = toy_meta(g.f_node);
+        let store = ResidentStore::new(&g).unwrap();
+        let weight_seed = 20180414;
+        let model = NativeModel::build(&meta, weight_seed).unwrap();
+        let snap = store.snapshot();
+        let full = full_forward(&snap, &meta, weight_seed);
+        let ex = extract_khop(&snap, &[3], 1, 0, meta.n_max).unwrap();
+        let batch = GraphBatch::ingest_unchecked(ex.graph.clone());
+        let out = model
+            .forward_batch(&batch, Some(&pad(&ex.eig, meta.n_max)))
+            .unwrap();
+        let li = ex.seed_locals[0] as usize;
+        assert_ne!(
+            out[li * meta.out_dim..(li + 1) * meta.out_dim],
+            full[3 * meta.out_dim..4 * meta.out_dim]
+        );
+    }
+
+    #[test]
+    fn resident_meta_reshapes_the_base_entry() {
+        let base = toy_meta(9);
+        let meta = resident_meta(&base, CitationDataset::Cora);
+        assert_eq!(meta.name, RESIDENT_MODEL);
+        assert_eq!(meta.in_dim, 1433);
+        assert_eq!(meta.out_dim, 7);
+        assert_eq!(meta.n_max, RESIDENT_N_MAX);
+        assert!(meta.node_level);
+        assert!(meta.needs_eig());
+        assert_eq!(meta.inputs[0].shape, vec![RESIDENT_N_MAX, 1433]);
+    }
+
+    #[test]
+    fn pending_table_round_trips() {
+        let g = toy_graph();
+        let st = ResidentState::from_graph(&g, CitationDataset::Cora, &toy_meta(g.f_node)).unwrap();
+        st.register_pending(
+            7,
+            QueryPending {
+                seed_locals: vec![1],
+                out_dim: 3,
+                snapshot_version: 1,
+            },
+        );
+        assert_eq!(st.pending_len(), 1);
+        let got = st.take_pending(7).unwrap();
+        assert_eq!(got.seed_locals, vec![1]);
+        assert!(st.take_pending(7).is_none());
+    }
+}

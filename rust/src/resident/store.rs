@@ -1,0 +1,430 @@
+//! The resident graph store: one server-hosted citation-scale graph
+//! behind `Arc`-swapped immutable snapshots.
+//!
+//! Mirrors the PR-8 registry's publication discipline exactly: writers
+//! serialize on a mutation lock, build a **new** [`GraphSnapshot`] off
+//! to the side, and publish it with a single `RwLock` write — readers
+//! clone an `Arc` and keep computing against the snapshot they
+//! resolved, however long their query takes. No reader ever observes a
+//! half-applied mutation batch, and the monotone version counter is
+//! the cutover observable (wire `GRAPH_QUERY` responses echo it).
+//!
+//! The graph itself is **undirected** — the convention of the citation
+//! datasets, whose COO form mirrors every edge ([`CooGraph`]'s
+//! `from_undirected`). The snapshot therefore stores each edge once in
+//! canonical `(min, max)` form and materializes the mirrored directed
+//! view on demand ([`GraphSnapshot::to_coo`]); adjacency rows are kept
+//! sorted ascending because that is the accumulation order the
+//! stage-IR interpreter's bit-exactness contract rests on
+//! (`graph::nbr`).
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::graph::{fiedler_vector_csr, CooGraph, Csr};
+
+/// Iteration budget of the snapshot eigensolve — the same budget the
+/// coordinator's prep workers use, so a query-attached eigenvector is
+/// bit-identical to what the prep stage would have computed.
+pub const EIG_MAX_ITER: usize = 400;
+/// Convergence tolerance matching the prep workers' eigensolve.
+pub const EIG_TOL: f64 = 1e-9;
+
+/// One immutable published state of the resident graph.
+#[derive(Debug)]
+pub struct GraphSnapshot {
+    /// Monotone publication counter (seed snapshot = 1).
+    pub version: u64,
+    n: usize,
+    f: usize,
+    /// Undirected edge set, canonical `(u, v)` with `u < v`.
+    edges: BTreeSet<(u32, u32)>,
+    /// Row-major `[n, f]` node features, shared across snapshots that
+    /// did not touch them (edge mutations clone the `Arc`, not the
+    /// buffer).
+    features: Arc<Vec<f32>>,
+    /// Per-node sorted ascending neighbor lists (undirected, so
+    /// in-neighbors == out-neighbors == neighbors).
+    nbrs: Vec<Vec<u32>>,
+    /// Full-graph Fiedler vector, solved lazily once per snapshot and
+    /// shared by every query that resolves this snapshot.
+    eig: OnceLock<Arc<Vec<f32>>>,
+}
+
+impl GraphSnapshot {
+    /// Build a snapshot from a directed COO graph whose edges are
+    /// mirrored undirected pairs (the citation generator's output).
+    /// Self-loops are rejected: the resident store's mutation ops
+    /// forbid them, so the seed must be loop-free too.
+    pub fn from_coo(version: u64, g: &CooGraph) -> Result<GraphSnapshot> {
+        let mut edges = BTreeSet::new();
+        for &(u, v) in &g.edges {
+            if u == v {
+                bail!("resident seed graph has self-loop at node {u}");
+            }
+            if u as usize >= g.n || v as usize >= g.n {
+                bail!("resident seed edge ({u},{v}) out of range");
+            }
+            edges.insert((u.min(v), u.max(v)));
+        }
+        Ok(Self::assemble(
+            version,
+            g.n,
+            g.f_node,
+            edges,
+            Arc::new(g.node_feat.clone()),
+        ))
+    }
+
+    fn assemble(
+        version: u64,
+        n: usize,
+        f: usize,
+        edges: BTreeSet<(u32, u32)>,
+        features: Arc<Vec<f32>>,
+    ) -> GraphSnapshot {
+        let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        // BTreeSet iteration is ascending (u, v): pushing v onto row u
+        // keeps row u sorted; row v gets u in ascending-u order too.
+        for &(u, v) in &edges {
+            nbrs[u as usize].push(v);
+            nbrs[v as usize].push(u);
+        }
+        for row in &mut nbrs {
+            row.sort_unstable();
+        }
+        GraphSnapshot {
+            version,
+            n,
+            f,
+            edges,
+            features,
+            nbrs,
+            eig: OnceLock::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Node feature width.
+    pub fn f(&self) -> usize {
+        self.f
+    }
+
+    /// Undirected edge count (directed COO count is twice this).
+    pub fn num_undirected(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.edges.contains(&(u.min(v), u.max(v)))
+    }
+
+    /// Sorted ascending neighbors of `v`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.nbrs[v]
+    }
+
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        &self.features[v * self.f..(v + 1) * self.f]
+    }
+
+    /// The full directed COO view (each undirected edge mirrored, set
+    /// order) with the snapshot's features — what the full-graph
+    /// reference forward ingests.
+    pub fn to_coo(&self) -> CooGraph {
+        let mut directed = Vec::with_capacity(self.edges.len() * 2);
+        for &(u, v) in &self.edges {
+            directed.push((u, v));
+            directed.push((v, u));
+        }
+        CooGraph {
+            n: self.n,
+            edges: directed,
+            node_feat: self.features.as_ref().clone(),
+            f_node: self.f,
+            edge_feat: Vec::new(),
+            f_edge: 0,
+        }
+    }
+
+    /// The snapshot's full-graph Fiedler vector (length `n`), solved
+    /// on first use with the prep workers' iteration budget and cached
+    /// for the snapshot's lifetime. Every query against this snapshot
+    /// shares the same vector — the substrate of the k-hop
+    /// bit-exactness contract (a fresh per-subgraph eigensolve would
+    /// produce a *different* directional field than the full graph).
+    pub fn eig(&self) -> &Arc<Vec<f32>> {
+        self.eig.get_or_init(|| {
+            // Feature-free shadow graph: the CSR conversion reads only
+            // `n` and `edges`, so skip cloning the feature matrix.
+            let mut directed = Vec::with_capacity(self.edges.len() * 2);
+            for &(u, v) in &self.edges {
+                directed.push((u, v));
+                directed.push((v, u));
+            }
+            let shadow = CooGraph {
+                n: self.n,
+                edges: directed,
+                node_feat: Vec::new(),
+                f_node: 0,
+                edge_feat: Vec::new(),
+                f_edge: 0,
+            };
+            let r = fiedler_vector_csr(&Csr::from_coo(&shadow), EIG_MAX_ITER, EIG_TOL);
+            Arc::new(r.vector)
+        })
+    }
+}
+
+/// One live graph mutation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MutateOp {
+    /// Insert undirected edge {u, v}. Rejected: self-loop,
+    /// out-of-range endpoint, edge already present.
+    AddEdge(u32, u32),
+    /// Remove undirected edge {u, v}. Rejected: edge not present.
+    RemoveEdge(u32, u32),
+    /// Append one node carrying these features (len must equal the
+    /// snapshot's feature width).
+    AddNode(Vec<f32>),
+}
+
+/// What one mutation batch did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MutateOutcome {
+    /// Ops applied into the published snapshot.
+    pub applied: u32,
+    /// Ops rejected (per-op validation); the rest of the batch still
+    /// applies.
+    pub rejected: u32,
+    /// Version of the snapshot holding the batch's effects (unchanged
+    /// when every op was rejected — nothing was published).
+    pub version: u64,
+}
+
+/// The mutable holder: a mutation lock serializing writers and an
+/// `RwLock<Arc<_>>` publishing immutable snapshots to readers.
+pub struct ResidentStore {
+    /// Serializes mutation batches (the `RwLock` write is held only
+    /// for the pointer swap).
+    mutate: Mutex<()>,
+    live: RwLock<Arc<GraphSnapshot>>,
+    version: AtomicU64,
+}
+
+impl ResidentStore {
+    /// Boot the store from a seed graph (version 1).
+    pub fn new(seed: &CooGraph) -> Result<ResidentStore> {
+        let snap = Arc::new(GraphSnapshot::from_coo(1, seed)?);
+        Ok(ResidentStore {
+            mutate: Mutex::new(()),
+            live: RwLock::new(snap),
+            version: AtomicU64::new(1),
+        })
+    }
+
+    /// Resolve the current snapshot. The caller keeps computing
+    /// against it even if mutations publish newer versions meanwhile.
+    pub fn snapshot(&self) -> Arc<GraphSnapshot> {
+        Arc::clone(&crate::util::sync::read(&self.live))
+    }
+
+    /// Lock-free read of the latest published version.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Apply one mutation batch copy-on-write: validate each op
+    /// against the batch's evolving state, build a fresh snapshot, and
+    /// publish it in one swap. Per-op rejections do not abort the
+    /// batch; a batch whose every op is rejected publishes nothing.
+    pub fn apply(&self, ops: &[MutateOp]) -> MutateOutcome {
+        let _guard = crate::util::sync::lock(&self.mutate);
+        let cur = self.snapshot();
+        let mut edges = cur.edges.clone();
+        let mut n = cur.n;
+        let mut features: Option<Vec<f32>> = None; // cloned only if AddNode lands
+        let mut applied = 0u32;
+        let mut rejected = 0u32;
+        for op in ops {
+            let ok = match op {
+                MutateOp::AddEdge(u, v) => {
+                    let (u, v) = (*u, *v);
+                    u != v
+                        && (u as usize) < n
+                        && (v as usize) < n
+                        && edges.insert((u.min(v), u.max(v)))
+                }
+                MutateOp::RemoveEdge(u, v) => {
+                    let (u, v) = (*u, *v);
+                    edges.remove(&(u.min(v), u.max(v)))
+                }
+                MutateOp::AddNode(feat) => {
+                    if feat.len() == cur.f && cur.f > 0 {
+                        features
+                            .get_or_insert_with(|| cur.features.as_ref().clone())
+                            .extend_from_slice(feat);
+                        n += 1;
+                        true
+                    } else {
+                        false
+                    }
+                }
+            };
+            if ok {
+                applied += 1;
+            } else {
+                rejected += 1;
+            }
+        }
+        if applied == 0 {
+            return MutateOutcome {
+                applied,
+                rejected,
+                version: cur.version,
+            };
+        }
+        let features = features.map(Arc::new).unwrap_or_else(|| Arc::clone(&cur.features));
+        let next = Arc::new(GraphSnapshot::assemble(
+            cur.version + 1,
+            n,
+            cur.f,
+            edges,
+            features,
+        ));
+        let version = next.version;
+        *crate::util::sync::write(&self.live) = next;
+        self.version.store(version, Ordering::Release);
+        MutateOutcome {
+            applied,
+            rejected,
+            version,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seed_graph() -> CooGraph {
+        // 0-1-2-3 path plus 0-3, features = node id per column.
+        CooGraph::from_undirected(
+            4,
+            &[(0, 1), (1, 2), (2, 3), (0, 3)],
+            (0..4 * 2).map(|i| i as f32).collect(),
+            2,
+            &[],
+            0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn snapshot_round_trips_the_seed() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        let s = store.snapshot();
+        assert_eq!(s.version, 1);
+        assert_eq!(s.n(), 4);
+        assert_eq!(s.num_undirected(), 4);
+        assert_eq!(s.neighbors(0), &[1, 3]);
+        assert_eq!(s.neighbors(2), &[1, 3]);
+        assert!(s.has_edge(3, 0) && !s.has_edge(0, 2));
+        let coo = s.to_coo();
+        assert_eq!(coo.num_edges(), 8);
+        coo.validate().unwrap();
+        // Directed view mirrors each undirected edge.
+        assert!(coo.edges.contains(&(0, 1)) && coo.edges.contains(&(1, 0)));
+    }
+
+    #[test]
+    fn seed_with_self_loop_is_rejected() {
+        let mut g = seed_graph();
+        g.edges.push((2, 2));
+        assert!(ResidentStore::new(&g).is_err());
+    }
+
+    #[test]
+    fn mutations_publish_cow_snapshots() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        let before = store.snapshot();
+        let out = store.apply(&[
+            MutateOp::AddEdge(0, 2),
+            MutateOp::RemoveEdge(2, 3),
+            MutateOp::AddEdge(1, 1),  // self-loop: rejected
+            MutateOp::AddEdge(0, 1),  // duplicate: rejected
+            MutateOp::RemoveEdge(0, 2), // just added above: applied
+        ]);
+        assert_eq!(out.applied, 3);
+        assert_eq!(out.rejected, 2);
+        assert_eq!(out.version, 2);
+        assert_eq!(store.version(), 2);
+        let after = store.snapshot();
+        assert!(!after.has_edge(2, 3) && !after.has_edge(0, 2));
+        // The snapshot resolved before the batch is untouched.
+        assert!(before.has_edge(2, 3));
+        assert_eq!(before.version, 1);
+        // Edge-only batch shares the feature buffer.
+        assert!(Arc::ptr_eq(&before.features, &after.features));
+    }
+
+    #[test]
+    fn add_node_extends_features_and_range() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        let out = store.apply(&[
+            MutateOp::AddNode(vec![9.0, 8.0]),
+            MutateOp::AddNode(vec![1.0]), // wrong width: rejected
+            MutateOp::AddEdge(0, 4),      // new node is attachable in-batch
+        ]);
+        assert_eq!((out.applied, out.rejected), (2, 1));
+        let s = store.snapshot();
+        assert_eq!(s.n(), 5);
+        assert_eq!(s.feature_row(4), &[9.0, 8.0]);
+        assert!(s.has_edge(0, 4));
+        assert_eq!(s.neighbors(4), &[0]);
+    }
+
+    #[test]
+    fn all_rejected_batch_publishes_nothing() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        let out = store.apply(&[MutateOp::AddEdge(0, 1), MutateOp::RemoveEdge(0, 2)]);
+        assert_eq!((out.applied, out.rejected), (0, 2));
+        assert_eq!(out.version, 1);
+        assert_eq!(store.version(), 1);
+    }
+
+    #[test]
+    fn eig_is_cached_per_snapshot_and_refreshed_by_mutation() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        let s1 = store.snapshot();
+        let e1a = Arc::clone(s1.eig());
+        let e1b = Arc::clone(s1.eig());
+        assert!(Arc::ptr_eq(&e1a, &e1b), "snapshot eig must be cached");
+        assert_eq!(e1a.len(), 4);
+        store.apply(&[MutateOp::AddEdge(0, 2)]);
+        let s2 = store.snapshot();
+        let e2 = Arc::clone(s2.eig());
+        assert_ne!(*e1a, *e2, "a structural mutation must change the field");
+        // And the snapshot eig matches a direct solve over the same COO.
+        let direct =
+            crate::graph::spectral::fiedler_vector(&s2.to_coo(), EIG_MAX_ITER, EIG_TOL);
+        assert_eq!(*e2, direct.vector);
+    }
+
+    #[test]
+    fn neighbor_rows_stay_sorted_under_mutation() {
+        let store = ResidentStore::new(&seed_graph()).unwrap();
+        store.apply(&[MutateOp::AddEdge(2, 0)]);
+        let s = store.snapshot();
+        assert_eq!(s.neighbors(0), &[1, 2, 3]);
+        for v in 0..s.n() {
+            assert!(s.neighbors(v).windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

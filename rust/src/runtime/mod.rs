@@ -27,7 +27,7 @@ pub mod literal;
 pub mod native;
 mod tensor;
 
-pub use artifact::{Artifacts, Golden, ModelMeta};
+pub use artifact::{Artifacts, Golden, InputSpec, ModelMeta};
 pub use client::Client;
 pub use dense_ref::DenseRef;
 pub use exec::Engine;

@@ -41,6 +41,7 @@ fn net_server(cfg: ServerConfigBuilder) -> NetServer {
         listen: "127.0.0.1:0".to_string(),
         reactors: 2,
         server: cfg.build().expect("server config"),
+        resident: None,
     })
     .expect("net server start")
 }
@@ -416,6 +417,7 @@ fn deadline_overload_sheds_by_ttl_and_reconciles() {
         drain_timeout: Duration::from_secs(120),
         ttl_ms: 1,
         priority_mix: "high:1,normal:2,low:1".to_string(),
+        ..LoadGenConfig::default()
     })
     .expect("loadgen run");
 

@@ -171,6 +171,7 @@ fn rollback_round_trips_over_tcp() {
             .model("gcn")
             .build()
             .expect("server config"),
+        resident: None,
     })
     .expect("net server start");
     let client = NetClient::connect(net.local_addr().to_string(), 2).expect("connect");
@@ -351,6 +352,7 @@ fn unload_then_reload_over_tcp_preserves_bits() {
             .models(["gcn", "gin"])
             .build()
             .expect("server config"),
+        resident: None,
     })
     .expect("net server start");
     let client = NetClient::connect(net.local_addr().to_string(), 2).expect("connect");

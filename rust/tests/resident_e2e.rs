@@ -1,0 +1,253 @@
+//! End-to-end tests of resident large-graph serving over TCP: a
+//! server hosting a resident graph must answer v4 `GRAPH_QUERY` ops
+//! with per-seed output rows **bit-identical** to a full-graph forward
+//! restricted to those seeds — including across interleaved
+//! `GRAPH_MUTATE` batches, each of which republishes the store
+//! copy-on-write and bumps the snapshot version. Pre-v4 clients on
+//! the same server must be entirely unaffected: classic molecular
+//! inference (v1 and v2 frames alike) flows through the same lanes.
+//!
+//! The in-process variant of the exactness pin lives in
+//! `rust/src/resident/mod.rs`; this file is the wire-level half —
+//! routing, pending-table bookkeeping, QoS plumbing, and the
+//! extraction path all sit between the client and the store here.
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, each test skips with a notice.
+
+use std::sync::Arc;
+
+use gengnn::coordinator::{Priority, ServerConfig};
+use gengnn::datagen::CitationDataset;
+use gengnn::graph::{CooGraph, GraphBatch};
+use gengnn::net::proto::{self, WireFrame, WireQos};
+use gengnn::net::{
+    NetClient, NetServer, NetServerConfig, RequestOptions, WireStatus, PROTO_V1, PROTO_VERSION,
+};
+use gengnn::resident::{full_graph_meta, MutateOp, ResidentState};
+use gengnn::runtime::{Artifacts, ModelMeta, NativeModel};
+use gengnn::util::rng::Rng;
+
+mod common;
+use common::artifacts_or_skip;
+
+/// The same deterministic 40-node toy citation graph the unit-scope
+/// pin uses: a ring plus distance-7 chords, 8 binary-ish features.
+/// Small enough that the full-graph reference forward is cheap.
+fn toy_graph() -> CooGraph {
+    let n = 40u32;
+    let f = 8usize;
+    let mut und = Vec::new();
+    for i in 0..n {
+        und.push((i, (i + 1) % n));
+        und.push((i, (i + 7) % n));
+    }
+    let feat: Vec<f32> = (0..n as usize * f)
+        .map(|k| if (k * 2654435761) % 7 < 3 { 1.0 } else { 0.0 })
+        .collect();
+    CooGraph::from_undirected(n as usize, &und, feat, f, &[], 0).unwrap()
+}
+
+/// Boot a resident net server over the toy graph, returning the
+/// server, a shared handle to its resident state, and the artifact
+/// weight seed (which the lanes compile the synthetic model with).
+fn resident_server(artifacts: &Artifacts) -> (NetServer, Arc<ResidentState>, u64) {
+    let base = artifacts
+        .model("dgn_large")
+        .or_else(|_| artifacts.model("dgn"))
+        .expect("manifest carries a DGN entry");
+    let state = Arc::new(
+        ResidentState::from_graph(&toy_graph(), CitationDataset::Cora, base)
+            .expect("resident boot"),
+    );
+    let cfg = ServerConfig::builder()
+        .model("gcn")
+        .executor_lanes(2)
+        .synthetic_models(vec![state.meta.clone()])
+        .build()
+        .expect("server config");
+    let net = NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        reactors: 2,
+        server: cfg,
+        resident: Some(Arc::clone(&state)),
+    })
+    .expect("net server start");
+    let seed = artifacts.weight_seed;
+    (net, state, seed)
+}
+
+/// Full-graph reference: forward the entire resident snapshot through
+/// a re-padded plan (bit-exact weight sharing with the query plan) and
+/// return all node rows.
+fn full_forward(state: &ResidentState, weight_seed: u64) -> (Vec<f32>, u64) {
+    let snap = state.store.snapshot();
+    let full: ModelMeta = full_graph_meta(&state.meta, snap.n());
+    let model = NativeModel::build(&full, weight_seed).unwrap();
+    let batch = GraphBatch::ingest_unchecked(snap.to_coo());
+    let eig = snap.eig();
+    (model.forward_batch(&batch, Some(eig)).unwrap(), snap.version)
+}
+
+#[test]
+fn wire_khop_queries_match_full_graph_bitwise_across_mutations() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let (net, state, weight_seed) = resident_server(&artifacts);
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 2).expect("client connect");
+    let seeds = [3u32, 17, 30];
+    let opts = RequestOptions::new(0, Priority::Normal);
+
+    let mutations: [&[MutateOp]; 3] = [
+        &[],
+        &[MutateOp::AddEdge(3, 20), MutateOp::RemoveEdge(17, 18)],
+        &[
+            MutateOp::AddNode(vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]),
+            MutateOp::AddEdge(30, 40),
+        ],
+    ];
+    for (round, ops) in mutations.iter().enumerate() {
+        if !ops.is_empty() {
+            let m = client.graph_mutate(ops).expect("wire mutate");
+            assert!(m.is_ok(), "round {round}: {}", m.message);
+            assert_eq!(m.applied, ops.len() as u32, "round {round}");
+            assert_eq!(m.rejected, 0, "round {round}");
+            assert_eq!(m.snapshot_version, state.store.version(), "round {round}");
+        }
+        let (full, version) = full_forward(&state, weight_seed);
+        let out_dim = state.meta.out_dim;
+
+        let resp = client.graph_query(&seeds, 2, 0, &opts).expect("wire query");
+        assert!(resp.is_ok(), "round {round}: {}", resp.error);
+        assert_eq!(resp.snapshot_version, version, "round {round}");
+        assert_eq!(resp.out_dim, out_dim, "round {round}");
+        assert_eq!(resp.outputs.len(), seeds.len() * out_dim, "round {round}");
+        for (i, &s) in seeds.iter().enumerate() {
+            let got: Vec<u32> = resp
+                .seed_output(i)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            let want: Vec<u32> = full[s as usize * out_dim..(s as usize + 1) * out_dim]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(
+                got, want,
+                "round {round}: seed {s} wire-served row diverged from full-graph bits"
+            );
+        }
+    }
+
+    assert_eq!(state.pending_len(), 0, "pending table must drain");
+    let metrics = net.shutdown();
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(metrics.resident().queries.load(Relaxed), 3);
+    assert_eq!(metrics.resident().queries_rejected.load(Relaxed), 0);
+    assert_eq!(metrics.resident().mutations_applied.load(Relaxed), 2);
+    assert_eq!(
+        metrics.net().requests_in_flight.load(Relaxed),
+        0,
+        "every wire request must be answered"
+    );
+}
+
+#[test]
+fn shallow_queries_and_invalid_mutations_are_rejected_with_reasons() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let (net, state, _) = resident_server(&artifacts);
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 1).expect("client connect");
+    let opts = RequestOptions::new(0, Priority::Normal);
+
+    // One hop under a two-layer model breaks the exactness contract.
+    let resp = client.graph_query(&[3], 1, 0, &opts).expect("wire query");
+    assert_eq!(resp.status, WireStatus::Rejected);
+    assert!(resp.error.contains("hops"), "reason: {}", resp.error);
+
+    // An unknown seed never reaches extraction cleanly.
+    let resp = client.graph_query(&[9999], 2, 0, &opts).expect("wire query");
+    assert_ne!(resp.status, WireStatus::Ok);
+    assert!(!resp.error.is_empty());
+
+    // Per-op validation: the duplicate edge is rejected, the valid op
+    // still applies, and the snapshot version advances exactly once.
+    let before = state.store.version();
+    let m = client
+        .graph_mutate(&[MutateOp::AddEdge(0, 1), MutateOp::AddEdge(2, 5)])
+        .expect("wire mutate");
+    assert!(m.is_ok());
+    assert_eq!((m.applied, m.rejected), (1, 1), "{}", m.message);
+    assert_eq!(m.snapshot_version, before + 1);
+
+    net.shutdown();
+}
+
+#[test]
+fn pre_v4_clients_are_unaffected_by_resident_mode() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let (net, _state, _) = resident_server(&artifacts);
+    let mut rng = Rng::new(41);
+    let g = gengnn::datagen::molecular_graph(&mut rng, &gengnn::datagen::MolConfig::molhiv());
+
+    // v2 pooled client: classic molecular inference on the same lanes.
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 1).expect("client connect");
+    let resp = client.infer("gcn", &g).expect("wire infer");
+    assert_eq!(resp.status, WireStatus::Ok, "{}", resp.error);
+    assert!(!resp.output.is_empty());
+
+    // Raw v1 frame on a bare socket: still served, still v1-stamped.
+    use std::io::Write;
+    let mut sock = std::net::TcpStream::connect(net.local_addr()).expect("connect");
+    sock.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+    let mut rx = std::io::BufReader::new(sock.try_clone().unwrap());
+    sock.write_all(&proto::encode_request_parts_v1(7, "gcn", &g).unwrap()).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    assert_eq!(payload[0], PROTO_V1, "v1 requests get v1-stamped responses");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).unwrap() else {
+        panic!("non-response frame");
+    };
+    assert_eq!((resp.id, resp.status), (7, WireStatus::Ok));
+
+    // A v2 frame on the same bare socket negotiates independently.
+    let frame =
+        proto::encode_request_parts(8, "gcn", WireQos::new(0, Priority::High), &g).unwrap();
+    sock.write_all(&frame).unwrap();
+    let payload = proto::read_frame(&mut rx).unwrap().expect("answered");
+    assert_eq!(payload[0], PROTO_VERSION, "v2 requests get v2-stamped responses");
+    net.shutdown();
+}
+
+#[test]
+fn non_resident_servers_reject_v4_graph_ops_cleanly() {
+    let Some(_) = artifacts_or_skip() else {
+        return;
+    };
+    let net = NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        reactors: 1,
+        server: ServerConfig::builder().model("gcn").build().expect("config"),
+        resident: None,
+    })
+    .expect("net server start");
+    let client =
+        NetClient::connect(net.local_addr().to_string(), 1).expect("client connect");
+    let opts = RequestOptions::new(0, Priority::Normal);
+
+    let q = client.graph_query(&[0], 2, 0, &opts).expect("wire query");
+    assert_eq!(q.status, WireStatus::Rejected);
+    assert!(q.error.contains("resident"), "reason: {}", q.error);
+
+    let m = client.graph_mutate(&[MutateOp::AddEdge(0, 1)]).expect("wire mutate");
+    assert_eq!(m.status, WireStatus::Rejected);
+    assert!(m.message.contains("resident"), "reason: {}", m.message);
+    net.shutdown();
+}
