@@ -5,7 +5,8 @@
 
 .PHONY: build test check fmt clippy doc artifacts artifacts-golden \
 	bench-snapshot serve loadgen loadgen-deadline-smoke deploy-smoke \
-	resident-smoke check-artifacts check-plans lint-plans clean
+	resident-smoke ingress-smoke check-artifacts check-plans lint-plans \
+	clean
 
 # Wire serving defaults (override: make serve SERVE_ADDR=0.0.0.0:9000).
 SERVE_ADDR ?= 127.0.0.1:7447
@@ -117,6 +118,70 @@ resident-smoke: build
 		--schema BENCH_seed.json --require-measured \
 		--require-result "loadgen/query_completed>0" \
 		--require-result "loadgen/mutate_applied>0"
+
+# Cluster-tier smoke (CI's bench-smoke ingress step): generate a
+# two-backend partitioned cluster.toml (both replicas managed by the
+# ingress reconciler), boot `gengnn ingress` over it, and drive a
+# mixed gcn/gin burst under an active fault plan: frame 120 is
+# corrupted after its id rewrite (a deterministic loadgen/failed
+# count — the backend's BadRequest flows back under the caller's own
+# id, never lost) and frame 200 SIGKILLs the gin replica mid-run
+# (link-death sweep, ejection, reconciler respawn, probation
+# walk-back). The first snapshot must reconcile with a nonzero
+# loadgen/failed series; the second, gin-only run is the recovery
+# gate — gin is served ONLY by the killed replica, so a completed
+# request (nonzero loadgen/e2e_latency) proves the respawned process
+# rejoined the pool and took traffic (see docs/CLUSTER.md).
+INGRESS_ADDR ?= 127.0.0.1:17450
+INGRESS_B0 ?= 127.0.0.1:17451
+INGRESS_B1 ?= 127.0.0.1:17452
+ingress-smoke: build
+	@set -e; \
+	mkdir -p target; \
+	{ \
+	  echo '[ingress]'; \
+	  echo 'listen = "$(INGRESS_ADDR)"'; \
+	  echo 'balance = "round-robin"'; \
+	  echo 'drain_timeout_ms = 5000'; \
+	  echo '[probe]'; \
+	  echo 'interval_ms = 200'; \
+	  echo 'timeout_ms = 1000'; \
+	  echo 'eject_after = 2'; \
+	  echo 'probation_successes = 2'; \
+	  echo '[reconcile]'; \
+	  echo 'restart_after_ms = 500'; \
+	  echo 'max_restarts = 5'; \
+	  echo '[[backend]]'; \
+	  echo 'addr = "$(INGRESS_B0)"'; \
+	  echo 'models = ["gcn"]'; \
+	  echo 'command = ["$(CURDIR)/target/release/gengnn", "serve", "--listen", "$(INGRESS_B0)", "--models", "gcn", "--duration", "180"]'; \
+	  echo '[[backend]]'; \
+	  echo 'addr = "$(INGRESS_B1)"'; \
+	  echo 'models = ["gin"]'; \
+	  echo 'command = ["$(CURDIR)/target/release/gengnn", "serve", "--listen", "$(INGRESS_B1)", "--models", "gin", "--duration", "180"]'; \
+	} > target/cluster_smoke.toml; \
+	GENGNN_FAULT_PLAN="corrupt-frame=120;kill-backend=1@200" \
+		./target/release/gengnn ingress --spec target/cluster_smoke.toml \
+		--duration 180 & \
+	pid=$$!; \
+	trap 'kill $$pid 2>/dev/null || true; \
+	      pkill -f "serve --listen $(INGRESS_B0)" 2>/dev/null || true; \
+	      pkill -f "serve --listen $(INGRESS_B1)" 2>/dev/null || true' EXIT; \
+	sleep 3; \
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_ingress_smoke.json \
+		./target/release/gengnn loadgen --addr $(INGRESS_ADDR) \
+		--rps 200 --count 600 --connections 4 --models gcn,gin; \
+	python3 python/tools/check_bench_schema.py BENCH_ingress_smoke.json \
+		--schema BENCH_seed.json --require-measured \
+		--require-result "loadgen/e2e_latency>0" \
+		--require-result "loadgen/failed>0"; \
+	sleep 6; \
+	GENGNN_BENCH_JSON=$(CURDIR)/BENCH_ingress_recovery.json \
+		./target/release/gengnn loadgen --addr $(INGRESS_ADDR) \
+		--rps 100 --count 100 --connections 2 --models gin; \
+	python3 python/tools/check_bench_schema.py BENCH_ingress_recovery.json \
+		--schema BENCH_seed.json --require-measured \
+		--require-result "loadgen/e2e_latency>0"
 
 # Re-validate the checked-in golden/manifest fixtures (CI's
 # artifacts-integrity job).

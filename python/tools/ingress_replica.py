@@ -1,0 +1,1028 @@
+#!/usr/bin/env python3
+"""No-toolchain validation harness for `rust/src/ingress/`: a Python
+replica of the cluster tier speaking the exact wire format (normative
+spec: `docs/WIRE_PROTOCOL.md` + `docs/CLUSTER.md`) with the same
+process topology as `gengnn ingress` -- an accept loop handing each
+client to its own thread, one persistent link (+ demux reader thread)
+per backend, a prober thread walking the LIST_MODELS health ladder,
+and a reconciler thread restarting dead managed backends -- fronting
+fake backends that answer deterministically over real loopback
+sockets.
+
+Replicated design points under test:
+
+* id-rewrite proxying: the ingress rewrites the request id to a
+  fleet-unique ingress id before forwarding (re-sealing the body
+  checksum), demuxes the backend's response by that id, and rewrites
+  it back -- so the bytes a client receives are the backend's own
+  bytes, independent of fleet size (the bit-exactness contract);
+* model-aware routing: advertised models partition traffic; a model
+  nobody advertises falls back to any healthy backend so the *error*
+  bytes also stay backend-canonical;
+* the probe state machine: K consecutive probe failures eject, a
+  probing success moves an ejected backend to probation (still
+  unroutable), M consecutive successes recover it;
+* exactly-once answering: every admitted frame is answered by
+  whichever side removes its route entry -- the backend's response,
+  the link-death sweep, or the ingress's own rejection -- so loadgen
+  accounting reconciles (submitted = completed + rejected + failed,
+  lost = 0) even across a backend crash;
+* drain: shutdown stops admitting (new frames are `Rejected`) but
+  relays every already-routed response before closing.
+
+Trials cover: byte-identical responses through 1 vs 3 backends for
+v1/v2 requests, v3 control, and v4 resident frames; partitioned
+routing that never crosses model assignments; a backend killed
+mid-load (ejection, reconciler restart, probation walk-back, and
+exactly-reconciled client accounting); drain answering all in-flight
+work; and probe black-holing that ejects without a crash and
+recovers once probes flow again.
+
+Usage: python3 python/tools/ingress_replica.py [trials]
+
+This validates the *design* (routing safety, accounting,
+exactly-once answering, recovery timing); the Rust implementation
+itself is gated by `cargo test --release --test ingress_e2e` where a
+toolchain exists.
+"""
+import os
+import socket
+import struct
+import sys
+import threading
+import time
+from collections import defaultdict
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from net_replica import (  # noqa: E402
+    BAD_FRAME_ID,
+    BADREQ,
+    ERROR,
+    KIND_REQ,
+    OK,
+    REJECTED,
+    V1,
+    VERSION,
+    DecodeError,
+    decode_frame,
+    encode_request,
+    encode_request_v1,
+    encode_response,
+    fnv1a,
+    mol_graph,
+    read_frame,
+    seal,
+)
+
+V3, V4 = 3, 4
+KIND_CONTROL, KIND_CONTROL_RESP = 3, 4
+KIND_GQUERY, KIND_GQUERY_RESP = 5, 6
+KIND_GMUTATE, KIND_GMUTATE_RESP = 7, 8
+OP_LIST_MODELS = 4
+
+HEALTHY, EJECTED, PROBATION = "healthy", "ejected", "probation"
+
+
+# -- v3/v4 frame encoders (layouts mirror rust/src/net/proto.rs) ----------
+
+
+def encode_control_list_models(cid):
+    body = struct.pack("<QB", cid, OP_LIST_MODELS)
+    body += struct.pack("<H", 0) + struct.pack("<H", 0)  # model, digest
+    body += struct.pack("<Q", 0)  # rollback version
+    return seal(V3, KIND_CONTROL, body)
+
+
+def encode_control_resp(cid, op, status, version, message):
+    mb = message.encode()
+    body = struct.pack("<QBB", cid, op, status)
+    body += struct.pack("<Q", version) + struct.pack("<I", len(mb)) + mb
+    return seal(V3, KIND_CONTROL_RESP, body)
+
+
+def encode_graph_query(qid, hops, fanout, seeds, ttl_ms=0, priority=0):
+    body = struct.pack("<QIBBH", qid, ttl_ms, priority, hops, fanout)
+    body += struct.pack("<H", len(seeds))
+    for s in seeds:
+        body += struct.pack("<I", s)
+    return seal(V4, KIND_GQUERY, body)
+
+
+def encode_graph_query_resp_err(qid, status, snapshot_version, error):
+    eb = error.encode()
+    body = struct.pack("<QB", qid, status) + struct.pack("<Q", snapshot_version)
+    body += struct.pack("<I", len(eb)) + eb
+    return seal(V4, KIND_GQUERY_RESP, body)
+
+
+def encode_graph_mutate(mid, ops=()):
+    body = struct.pack("<Q", mid) + struct.pack("<H", len(ops))
+    for a, b in ops:
+        body += struct.pack("<BII", 1, a, b)  # AddEdge
+    return seal(V4, KIND_GMUTATE, body)
+
+
+def encode_graph_mutate_resp_err(mid, status, error):
+    eb = error.encode()
+    body = struct.pack("<QB", mid, status) + struct.pack("<Q", 0)
+    body += struct.pack("<II", 0, 0)  # applied, rejected
+    body += struct.pack("<I", len(eb)) + eb
+    return seal(V4, KIND_GMUTATE_RESP, body)
+
+
+# -- frame peek + id rewrite (replica of proto::peek_frame / rewrite) -----
+
+
+class Peek:
+    __slots__ = ("version", "kind", "rid", "model", "ctrl_op")
+
+    def __init__(self, version, kind, rid, model, ctrl_op):
+        self.version = version
+        self.kind = kind
+        self.rid = rid
+        self.model = model
+        self.ctrl_op = ctrl_op
+
+
+def peek_frame(payload):
+    """Decode just enough to route: envelope, id, and -- for request
+    frames -- the model name. Validates the checksum so a peeked id is
+    always trustworthy."""
+    if len(payload) < 14:
+        raise DecodeError("frame too short")
+    version, kind = payload[0], payload[1]
+    if version not in (V1, VERSION, V3, V4):
+        raise DecodeError("unsupported protocol version")
+    if kind not in (KIND_REQ, KIND_CONTROL, KIND_GQUERY, KIND_GMUTATE):
+        raise DecodeError("not a client->server frame")
+    (want,) = struct.unpack_from("<I", payload, 2)
+    body = payload[6:]
+    if want != fnv1a(body):
+        raise DecodeError("checksum mismatch")
+    (rid,) = struct.unpack_from("<Q", body, 0)
+    model, ctrl_op = None, None
+    if kind == KIND_REQ:
+        off = 13 if version >= VERSION else 8  # v2+: id.ttl.prio before model
+        if len(body) < off + 2:
+            raise DecodeError("truncated request header", rid=rid)
+        (mlen,) = struct.unpack_from("<H", body, off)
+        if len(body) < off + 2 + mlen:
+            raise DecodeError("truncated model name", rid=rid)
+        model = body[off + 2 : off + 2 + mlen].decode()
+    elif kind == KIND_CONTROL:
+        ctrl_op = body[8]
+    return Peek(version, kind, rid, model, ctrl_op)
+
+
+def rewrite_frame_id(payload, new_id):
+    """Swap the body-leading id and re-seal the checksum: the only
+    bytes the ingress ever touches in a proxied frame."""
+    out = bytearray(payload)
+    struct.pack_into("<Q", out, 6, new_id)
+    struct.pack_into("<I", out, 2, fnv1a(bytes(out[6:])))
+    return bytes(out)
+
+
+def frame_id(payload):
+    return struct.unpack_from("<Q", payload, 6)[0]
+
+
+def send_frame(sock, payload):
+    sock.sendall(struct.pack("<I", len(payload)) + payload)
+
+
+def payload_of(frame):
+    """Strip the length prefix from a sealed frame (the replica's
+    internals pass un-prefixed payloads, like `proto::read_frame`)."""
+    return frame[4:]
+
+
+# -- probe health ladder (replica of ingress::health::ProbeTracker) -------
+
+
+class ProbeTracker:
+    def __init__(self, eject_after, probation_successes):
+        self.k = eject_after
+        self.m = probation_successes
+        self.state = HEALTHY
+        self.fails = 0
+        self.successes = 0
+
+    def routable(self):
+        return self.state == HEALTHY
+
+    def observe(self, ok):
+        if self.state == HEALTHY:
+            if ok:
+                self.fails = 0
+            else:
+                self.fails += 1
+                if self.fails >= self.k:
+                    self.state, self.fails = EJECTED, 0
+                    return "ejected"
+        elif self.state == EJECTED:
+            if ok:
+                self.state, self.successes = PROBATION, 1
+                if self.successes >= self.m:
+                    self.state = HEALTHY
+                    return "recovered"
+                return "probation"
+        else:  # probation
+            if ok:
+                self.successes += 1
+                if self.successes >= self.m:
+                    self.state, self.successes = HEALTHY, 0
+                    return "recovered"
+            else:
+                self.state, self.successes = EJECTED, 0
+                return "ejected"
+        return None
+
+    def force_eject(self):
+        if self.state != EJECTED:
+            self.state, self.fails, self.successes = EJECTED, 0, 0
+            return "ejected"
+        return None
+
+
+# -- fake backend ---------------------------------------------------------
+
+
+class FakeBackend:
+    """A deterministic wire-speaking backend: thread per connection,
+    answers requests as a pure function of the request bytes (so any
+    two backends with the same live set are bit-identical), answers
+    LIST_MODELS probes from its live set, and rejects v4 resident
+    frames the way a serve process without a resident graph does."""
+
+    def __init__(self, models, port=0, exec_delay=0.0, black_hole_probes=False):
+        self.models = sorted(models)
+        self.exec_delay = exec_delay
+        self.black_hole_probes = black_hole_probes
+        self.dead = threading.Event()
+        self.served = defaultdict(int)  # model -> requests answered
+        self.slock = threading.Lock()
+        self.conns = []
+        self.clock = threading.Lock()
+        self.listener = socket.create_server(("127.0.0.1", port))
+        self.listener.settimeout(0.05)
+        self.addr = self.listener.getsockname()
+        self.accept_t = threading.Thread(target=self._accept, daemon=True)
+        self.accept_t.start()
+
+    def _accept(self):
+        while not self.dead.is_set():
+            try:
+                sock, _ = self.listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self.clock:
+                if self.dead.is_set():
+                    sock.close()
+                    continue
+                self.conns.append(sock)
+            threading.Thread(target=self._serve, args=(sock,), daemon=True).start()
+
+    def _registry_doc(self):
+        entries = ", ".join(
+            '{"name": "%s", "live": true}' % m for m in self.models
+        )
+        return '{"version": 1, "models": [%s]}' % entries
+
+    def _serve(self, sock):
+        rf = sock.makefile("rb")
+        wlock = threading.Lock()
+        try:
+            while not self.dead.is_set():
+                payload = read_frame(rf)
+                if payload is None:
+                    return
+                kind = payload[1] if len(payload) > 1 else 0
+                if kind == KIND_CONTROL:
+                    if self.black_hole_probes:
+                        continue  # accept, never answer: probe times out
+                    peek = peek_frame(payload)
+                    resp = encode_control_resp(
+                        peek.rid, peek.ctrl_op, OK, 1, self._registry_doc()
+                    )
+                elif kind == KIND_GQUERY:
+                    resp = encode_graph_query_resp_err(
+                        frame_id(payload), REJECTED, 0, "no resident graph loaded"
+                    )
+                elif kind == KIND_GMUTATE:
+                    resp = encode_graph_mutate_resp_err(
+                        frame_id(payload), REJECTED, "no resident graph loaded"
+                    )
+                else:
+                    try:
+                        decoded = decode_frame(payload)
+                    except DecodeError as e:
+                        rid = e.rid if e.rid is not None else BAD_FRAME_ID
+                        resp = encode_response(VERSION, rid, "", BADREQ, error=str(e))
+                        with wlock:
+                            sock.sendall(resp)
+                        continue
+                    _, rid, model, _qos, graph, version = decoded
+                    if self.exec_delay:
+                        time.sleep(self.exec_delay)
+                    if model in self.models:
+                        out = [sum(graph[2]) + len(graph[1])]
+                        resp = encode_response(version, rid, model, OK, out)
+                        with self.slock:
+                            self.served[model] += 1
+                    else:
+                        resp = encode_response(
+                            version, rid, model, ERROR, error="model not served"
+                        )
+                with wlock:
+                    sock.sendall(resp)
+        except (OSError, ValueError):
+            return
+        finally:
+            rf.close()
+            sock.close()
+
+    def kill(self):
+        """Crash abruptly: close the listener and every live socket."""
+        self.dead.set()
+        self.listener.close()
+        with self.clock:
+            conns, self.conns = self.conns, []
+        for s in conns:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            s.close()
+        self.accept_t.join(5)
+        assert not self.accept_t.is_alive(), "backend accept loop stuck"
+
+
+# -- the ingress replica --------------------------------------------------
+
+
+class BackendSlot:
+    def __init__(self, spec, tracker):
+        self.spec = spec  # dict: addr, models, restart (callable | None)
+        self.tracker = tracker
+        self.in_flight = 0
+        self.link = None  # socket or None
+        self.link_lock = threading.Lock()  # guards link writes + replace
+        self.down_since = None
+        self.restarts = 0
+
+    def advertises(self, model):
+        return not self.spec["models"] or model in self.spec["models"]
+
+
+class Ingress:
+    """Replica of ingress::proxy::Ingress: accept x1, thread per
+    client, one demux reader per backend link, prober x1,
+    reconciler x1."""
+
+    PROBE_ID_BASE = 1 << 62
+
+    def __init__(
+        self,
+        specs,
+        probe_interval=0.05,
+        probe_timeout=0.5,
+        eject_after=2,
+        probation_successes=2,
+        restart_after=0.2,
+        drain_timeout=10.0,
+    ):
+        self.backends = [
+            BackendSlot(s, ProbeTracker(eject_after, probation_successes))
+            for s in specs
+        ]
+        self.probe_interval = probe_interval
+        self.probe_timeout = probe_timeout
+        self.restart_after = restart_after
+        self.drain_timeout = drain_timeout
+        # ingress id -> (backend idx, client sock+lock, cid, version, kind)
+        self.routes = {}
+        self.rlock = threading.Lock()
+        self.client_socks = []
+        self.cslock = threading.Lock()
+        self.next_id = 1
+        self.rr = 0
+        self.metrics = defaultdict(int)
+        self.mlock = threading.Lock()
+        self.draining = threading.Event()
+        self.stop = threading.Event()
+        self.threads = []
+        self.tlock = threading.Lock()
+        self.listener = socket.create_server(("127.0.0.1", 0))
+        self.listener.settimeout(0.05)
+        self.local_addr = self.listener.getsockname()
+        self.accept_t = threading.Thread(target=self._accept, daemon=True)
+        self.prober_t = threading.Thread(target=self._prober, daemon=True)
+        self.reconciler_t = threading.Thread(target=self._reconciler, daemon=True)
+        self.accept_t.start()
+        self.prober_t.start()
+        self.reconciler_t.start()
+
+    def bump(self, key, d=1):
+        with self.mlock:
+            self.metrics[key] += d
+
+    def health(self, idx):
+        return self.backends[idx].tracker.state
+
+    def in_flight_total(self):
+        with self.rlock:
+            return len(self.routes)
+
+    # -- routing (replica of ingress::router::Router) --------------------
+
+    def route(self, model):
+        """Advertisers of the model when anyone advertises it, any
+        routable backend otherwise; round-robin over the candidates."""
+        if model is not None and any(
+            b.advertises(model) and b.spec["models"] for b in self.backends
+        ):
+            cands = [
+                i
+                for i, b in enumerate(self.backends)
+                if b.tracker.routable() and b.advertises(model)
+            ]
+        else:
+            cands = [i for i, b in enumerate(self.backends) if b.tracker.routable()]
+        if not cands:
+            return None
+        with self.mlock:
+            self.rr += 1
+            return cands[self.rr % len(cands)]
+
+    # -- client side ------------------------------------------------------
+
+    def _accept(self):
+        while not self.stop.is_set():
+            try:
+                sock, _ = self.listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self.bump("connections_accepted")
+            with self.cslock:
+                self.client_socks.append(sock)
+            t = threading.Thread(target=self._client, args=(sock,), daemon=True)
+            t.start()
+            with self.tlock:
+                self.threads.append(t)
+
+    def _client(self, sock):
+        # Blocking reads: shutdown unblocks them by closing the socket
+        # (a buffered reader plus a read timeout can lose a partial
+        # frame, so the replica never mixes the two).
+        rf = sock.makefile("rb")
+        wlock = threading.Lock()
+        client = (sock, wlock)
+        try:
+            while not self.stop.is_set():
+                try:
+                    payload = read_frame(rf)
+                except (OSError, ValueError):
+                    return
+                if payload is None:
+                    return
+                self._handle(client, payload)
+        finally:
+            rf.close()
+            sock.close()
+
+    def _answer(self, client, version, kind, cid, model, status, error):
+        """Ingress-originated answer for a frame it never forwarded,
+        in the shape the client's frame kind expects."""
+        if kind == KIND_CONTROL:
+            wire = encode_control_resp(cid, OP_LIST_MODELS, ERROR, 0, error)
+        elif kind == KIND_GQUERY:
+            wire = encode_graph_query_resp_err(cid, status, 0, error)
+        elif kind == KIND_GMUTATE:
+            wire = encode_graph_mutate_resp_err(cid, status, error)
+        else:
+            v = version if version in (V1, VERSION) else VERSION
+            wire = encode_response(v, cid, model or "", status, error=error)
+        sock, wlock = client
+        try:
+            with wlock:
+                sock.sendall(wire)
+        except OSError:
+            self.bump("responses_dropped")
+
+    def _handle(self, client, payload):
+        try:
+            peek = peek_frame(payload)
+        except DecodeError as e:
+            self.bump("decode_errors")
+            cid = e.rid if e.rid is not None else BAD_FRAME_ID
+            self._answer(client, VERSION, KIND_REQ, cid, "", BADREQ, str(e))
+            return
+        if self.draining.is_set():
+            self.bump("drain_rejected")
+            self._answer(
+                client, peek.version, peek.kind, peek.rid, peek.model,
+                REJECTED, "ingress draining",
+            )
+            return
+        idx = self.route(peek.model)
+        if idx is None:
+            self.bump("no_backend_rejected")
+            self._answer(
+                client, peek.version, peek.kind, peek.rid, peek.model,
+                REJECTED, "no healthy backend for this request",
+            )
+            return
+        slot = self.backends[idx]
+        with self.mlock:
+            ingress_id = self.next_id
+            self.next_id += 1
+        wire = rewrite_frame_id(payload, ingress_id)
+        # Route installed BEFORE the write: the demux reader can never
+        # see a response whose route is missing because of ordering.
+        with self.rlock:
+            self.routes[ingress_id] = (idx, client, peek.rid, peek.version, peek.kind)
+            slot.in_flight += 1
+        ok = self._forward(idx, slot, wire)
+        self.bump("frames_proxied" if ok else "forward_failures")
+        if not ok:
+            # Reclaim our own route (the sweep may have beaten us).
+            with self.rlock:
+                entry = self.routes.pop(ingress_id, None)
+                if entry is not None:
+                    slot.in_flight -= 1
+            if entry is not None:
+                self.bump("backend_failed_in_flight")
+                self._answer(
+                    client, peek.version, peek.kind, peek.rid, peek.model,
+                    ERROR, "backend connection lost",
+                )
+
+    def _forward(self, idx, slot, wire):
+        with slot.link_lock:
+            if slot.link is None:
+                try:
+                    link = socket.create_connection(
+                        slot.spec["addr"], timeout=self.probe_timeout
+                    )
+                except OSError:
+                    return False
+                link.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                link.settimeout(None)
+                slot.link = link
+                t = threading.Thread(
+                    target=self._link_reader, args=(idx, slot, link), daemon=True
+                )
+                t.start()
+                with self.tlock:
+                    self.threads.append(t)
+            try:
+                send_frame(slot.link, wire)
+                return True
+            except OSError:
+                return False
+
+    # -- backend side ------------------------------------------------------
+
+    def _link_reader(self, idx, slot, link):
+        rf = link.makefile("rb")
+        try:
+            while True:
+                payload = read_frame(rf)
+                if payload is None:
+                    break
+                ingress_id = frame_id(payload)
+                with self.rlock:
+                    entry = self.routes.pop(ingress_id, None)
+                    if entry is not None:
+                        slot.in_flight -= 1
+                if entry is None:
+                    self.bump("responses_dropped")
+                    continue
+                _, client, cid, _ver, _kind = entry
+                wire = rewrite_frame_id(payload, cid)
+                sock, wlock = client
+                try:
+                    with wlock:
+                        send_frame(sock, wire)
+                    self.bump("responses_relayed")
+                except OSError:
+                    self.bump("responses_dropped")
+        except (OSError, ValueError):
+            pass
+        finally:
+            rf.close()
+            self._fail_backend(idx, slot, link)
+
+    def _fail_backend(self, idx, slot, link):
+        """Link death: clear the slot, sweep this backend's in-flight
+        routes (answering each exactly once), eject on data-plane
+        evidence."""
+        with slot.link_lock:
+            if slot.link is link:
+                slot.link = None
+        link.close()
+        swept = []
+        with self.rlock:
+            for iid, entry in list(self.routes.items()):
+                if entry[0] == idx:
+                    swept.append(self.routes.pop(iid))
+                    slot.in_flight -= 1
+        for _, client, cid, ver, kind in swept:
+            self.bump("backend_failed_in_flight")
+            self._answer(
+                client, ver, kind, cid, "", ERROR, "backend connection lost"
+            )
+        if slot.tracker.force_eject() is not None:
+            self.bump("ejections")
+
+    def _probe(self, slot):
+        """Replica of backend::probe_list_models: fresh connection,
+        LIST_MODELS, live set must cover the assignment."""
+        try:
+            s = socket.create_connection(slot.spec["addr"], timeout=self.probe_timeout)
+        except OSError:
+            return False
+        try:
+            s.settimeout(self.probe_timeout)
+            send_frame(s, payload_of(encode_control_list_models(self.PROBE_ID_BASE)))
+            rf = s.makefile("rb")
+            payload = read_frame(rf)
+            if payload is None or payload[1] != KIND_CONTROL_RESP:
+                return False
+            body = payload[6:]
+            status = body[9]
+            (mlen,) = struct.unpack_from("<I", body, 18)
+            doc = body[22 : 22 + mlen].decode()
+            if status != OK:
+                return False
+            live = set()
+            for m in slot.spec["models"]:
+                if '"name": "%s", "live": true' % m in doc:
+                    live.add(m)
+            return all(m in live for m in slot.spec["models"])
+        except (OSError, ValueError, IndexError, struct.error):
+            return False
+        finally:
+            s.close()
+
+    def _prober(self):
+        while not self.stop.wait(self.probe_interval):
+            for slot in self.backends:
+                ok = self._probe(slot)
+                self.bump("probes_ok" if ok else "probes_failed")
+                transition = slot.tracker.observe(ok)
+                if transition == "ejected":
+                    self.bump("ejections")
+                elif transition == "recovered":
+                    self.bump("recoveries")
+                if slot.tracker.routable():
+                    slot.down_since = None
+
+    def _reconciler(self):
+        while not self.stop.wait(0.02):
+            for slot in self.backends:
+                if slot.spec.get("restart") is None or slot.tracker.routable():
+                    continue
+                if not slot.spec["is_dead"]():
+                    slot.down_since = None
+                    continue
+                now = time.monotonic()
+                if slot.down_since is None:
+                    slot.down_since = now
+                elif now - slot.down_since >= self.restart_after:
+                    slot.restarts += 1
+                    self.bump("restarts")
+                    try:
+                        slot.spec["restart"]()
+                        slot.down_since = None
+                    except OSError:
+                        slot.down_since = now  # port still busy: retry
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def shutdown(self):
+        """Drain: stop admitting, relay in-flight, then stop."""
+        self.draining.set()
+        deadline = time.monotonic() + self.drain_timeout
+        while time.monotonic() < deadline:
+            if self.in_flight_total() == 0:
+                break
+            time.sleep(0.005)
+        self.stop.set()
+        self.accept_t.join(5)
+        self.prober_t.join(5)
+        self.reconciler_t.join(5)
+        for t in (self.accept_t, self.prober_t, self.reconciler_t):
+            assert not t.is_alive(), "ingress control thread stuck"
+        self.listener.close()
+        for slot in self.backends:
+            with slot.link_lock:
+                link, slot.link = slot.link, None
+            if link is not None:
+                try:
+                    link.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                link.close()
+        with self.cslock:
+            socks, self.client_socks = self.client_socks, []
+        for s in socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        with self.tlock:
+            threads, self.threads = self.threads, []
+        for t in threads:
+            t.join(5)
+            assert not t.is_alive(), "ingress worker thread stuck"
+        with self.mlock:
+            self.metrics["in_flight_at_exit"] = len(self.routes)
+            return dict(self.metrics)
+
+
+def external(backend):
+    """Spec for an ingress-unmanaged backend."""
+    return {"addr": backend.addr, "models": backend.models, "restart": None}
+
+
+# -- trials ----------------------------------------------------------------
+
+
+def deterministic_frames():
+    """The fixed client stream both fleets replay: v2 + v1 requests
+    per model, an unknown model, a v3 control, and v4 resident ops."""
+    frames = []
+    cid = 100
+    for model in ("gcn", "gat"):
+        for s in range(3):
+            frames.append((cid, payload_of(encode_request(cid, model, mol_graph(cid)))))
+            cid += 1
+            frames.append(
+                (cid, payload_of(encode_request_v1(cid, model, mol_graph(cid))))
+            )
+            cid += 1
+    frames.append((cid, payload_of(encode_request(cid, "nosuch", mol_graph(1)))))
+    cid += 1
+    frames.append((cid, payload_of(encode_control_list_models(cid))))
+    cid += 1
+    frames.append((cid, payload_of(encode_graph_query(cid, 2, 0, [0, 1]))))
+    cid += 1
+    frames.append((cid, payload_of(encode_graph_mutate(cid))))
+    return frames
+
+
+def run_fleet(n_backends):
+    """Replay the deterministic stream through an n-backend fleet;
+    return {client id: response payload bytes}."""
+    backends = [FakeBackend(["gcn", "gat"]) for _ in range(n_backends)]
+    ing = Ingress([external(b) for b in backends])
+    sock = socket.create_connection(ing.local_addr)
+    sock.settimeout(10)
+    rf = sock.makefile("rb")
+    frames = deterministic_frames()
+    got = {}
+    for _cid, payload in frames:
+        send_frame(sock, payload)
+        resp = read_frame(rf)
+        assert resp is not None, "ingress dropped a response"
+        got[frame_id(resp)] = resp
+    sock.close()
+    m = ing.shutdown()
+    for b in backends:
+        b.kill()
+    assert m["in_flight_at_exit"] == 0, m
+    assert m["responses_relayed"] == len(frames), m
+    return got
+
+
+def trial_bit_exact_1v3():
+    """The bit-exactness contract: the same client stream through one
+    backend and through three is byte-identical, response by
+    response -- including v1 envelopes, the control response, and the
+    v4 rejections."""
+    one = run_fleet(1)
+    three = run_fleet(3)
+    assert set(one) == set(three), (sorted(one), sorted(three))
+    for cid in one:
+        assert one[cid] == three[cid], (
+            "response bytes diverge for id %d: %r vs %r"
+            % (cid, one[cid][:40], three[cid][:40])
+        )
+    sample = decode_frame(one[100])
+    assert sample[0] == "resp" and sample[3] == OK, sample
+    return "bit-exact-1v3 ok (%d frames)" % len(one)
+
+
+def trial_routing_partition():
+    """Disjoint model assignments: no request ever crosses its
+    partition, and an unadvertised model still gets the backend's own
+    canonical error bytes."""
+    b_gcn = FakeBackend(["gcn"])
+    b_gat = FakeBackend(["gat"])
+    b_gin = FakeBackend(["gin"])
+    ing = Ingress([external(b_gcn), external(b_gat), external(b_gin)])
+    sock = socket.create_connection(ing.local_addr)
+    sock.settimeout(10)
+    rf = sock.makefile("rb")
+    n = 0
+    for i in range(30):
+        model = ("gcn", "gat", "gin")[i % 3]
+        send_frame(sock, payload_of(encode_request(i, model, mol_graph(i))))
+        resp = decode_frame(read_frame(rf))
+        assert resp[1] == i and resp[3] == OK, resp
+        n += 1
+    send_frame(sock, payload_of(encode_request(99, "nosuch", mol_graph(0))))
+    resp = decode_frame(read_frame(rf))
+    assert resp[1] == 99 and resp[3] == ERROR, resp
+    assert "model not served" in resp[5], resp  # backend-canonical error
+    sock.close()
+    ing.shutdown()
+    for b, only in ((b_gcn, "gcn"), (b_gat, "gat"), (b_gin, "gin")):
+        served = dict(b.served)
+        served.pop("nosuch", None)  # the fallback may land anywhere
+        assert set(served) == {only}, (only, dict(b.served))
+        assert served[only] == 10, (only, served)
+        b.kill()
+    return "routing-partition ok (%d routed)" % n
+
+
+def trial_crash_accounting():
+    """Kill the only backend for a model mid-load: every submitted
+    request is still answered exactly once (completed, failed on the
+    severed link, or rejected while no backend is healthy), the
+    tracker ejects, the reconciler restarts the process, probation
+    walks it back to healthy, and traffic completes again."""
+    holder = {}
+
+    def boot(port=0):
+        holder["backend"] = FakeBackend(["gcn"], port=port, exec_delay=0.01)
+        return holder["backend"]
+
+    first = boot()
+    port = first.addr[1]
+    spec = {
+        "addr": first.addr,
+        "models": ["gcn"],
+        "restart": lambda: boot(port),
+        "is_dead": lambda: holder["backend"].dead.is_set(),
+    }
+    ing = Ingress(
+        [spec], probe_interval=0.04, eject_after=2, probation_successes=2,
+        restart_after=0.15,
+    )
+    sock = socket.create_connection(ing.local_addr)
+    sock.settimeout(15)
+    rf = sock.makefile("rb")
+    count, kill_at = 60, 20
+    counters = defaultdict(int)
+
+    def reader():
+        for _ in range(count):
+            resp = decode_frame(read_frame(rf))
+            status = resp[3]
+            if status == OK:
+                counters["completed"] += 1
+            elif status == REJECTED:
+                counters["rejected"] += 1
+            else:
+                counters["failed"] += 1
+
+    rt = threading.Thread(target=reader, daemon=True)
+    rt.start()
+    for i in range(count):
+        if i == kill_at:
+            first.kill()
+        send_frame(sock, payload_of(encode_request(i, "gcn", mol_graph(i))))
+        time.sleep(0.004)
+    rt.join(30)
+    assert not rt.is_alive(), "a submitted request was never answered"
+    total = counters["completed"] + counters["rejected"] + counters["failed"]
+    assert total == count, dict(counters)  # submitted = completed+rejected+failed
+    assert counters["completed"] >= 1, dict(counters)
+    # The kill lands with a backlog in flight (10 ms service vs 4 ms
+    # arrivals), so the link-death sweep must answer some of them...
+    assert counters["failed"] >= 1, dict(counters)
+    # ...and frames arriving while nothing is healthy are rejected.
+    assert counters["rejected"] >= 1, dict(counters)
+    # The reconciler must have restarted the backend and the prober
+    # must have walked it back to healthy.
+    deadline = time.monotonic() + 10
+    while ing.health(0) != HEALTHY:
+        assert time.monotonic() < deadline, (
+            "backend never recovered: %s" % ing.health(0)
+        )
+        time.sleep(0.01)
+    send_frame(sock, payload_of(encode_request(10_000, "gcn", mol_graph(3))))
+    resp = decode_frame(read_frame(rf))
+    assert resp[1] == 10_000 and resp[3] == OK, resp
+    sock.close()
+    m = ing.shutdown()
+    holder["backend"].kill()
+    assert m["ejections"] >= 1, m
+    assert m["restarts"] >= 1, m
+    assert m["recoveries"] >= 1, m
+    assert m["in_flight_at_exit"] == 0, m
+    return "crash-accounting ok (%s, restarts=%d)" % (dict(counters), m["restarts"])
+
+
+def trial_drain():
+    """Shutdown with requests in flight on a slow backend: every
+    routed request is relayed before the ingress closes, and frames
+    arriving during the drain are rejected, not dropped."""
+    backend = FakeBackend(["gcn"], exec_delay=0.05)
+    ing = Ingress([external(backend)], drain_timeout=10.0)
+    sock = socket.create_connection(ing.local_addr)
+    sock.settimeout(10)
+    rf = sock.makefile("rb")
+    n = 5
+    for i in range(n):
+        send_frame(sock, payload_of(encode_request(i, "gcn", mol_graph(i))))
+    # Give the client thread time to route all five, then drain.
+    deadline = time.monotonic() + 5
+    while ing.metrics["frames_proxied"] < n and time.monotonic() < deadline:
+        time.sleep(0.002)
+    done = {}
+    shut = threading.Thread(target=lambda: done.update(m=ing.shutdown()), daemon=True)
+    shut.start()
+    statuses = [decode_frame(read_frame(rf))[3] for _ in range(n)]
+    shut.join(15)
+    assert not shut.is_alive(), "drain hung"
+    m = done["m"]
+    assert statuses == [OK] * n, statuses
+    assert m["responses_relayed"] == n, m
+    assert m.get("responses_dropped", 0) == 0, m
+    assert m["in_flight_at_exit"] == 0, m
+    sock.close()
+    backend.kill()
+    return "drain ok (%d relayed)" % n
+
+
+def trial_probe_blackhole():
+    """Probes black-holed (accepted, never answered) while the data
+    plane still works: the probe ladder ejects the backend anyway,
+    traffic fails over to the healthy peer, and un-black-holing walks
+    it through probation back to healthy."""
+    b0 = FakeBackend(["gcn"])
+    b1 = FakeBackend(["gcn"])
+    ing = Ingress(
+        [external(b0), external(b1)],
+        probe_interval=0.04, probe_timeout=0.2, eject_after=2,
+        probation_successes=2,
+    )
+    deadline = time.monotonic() + 5
+    while not (ing.health(0) == HEALTHY and ing.health(1) == HEALTHY):
+        assert time.monotonic() < deadline, "fleet never probed healthy"
+        time.sleep(0.01)
+    b0.black_hole_probes = True
+    deadline = time.monotonic() + 10
+    while ing.health(0) != EJECTED:
+        assert time.monotonic() < deadline, "black-holed backend never ejected"
+        time.sleep(0.01)
+    # Ejected != dead: traffic fails over to b1 and still completes.
+    sock = socket.create_connection(ing.local_addr)
+    sock.settimeout(10)
+    rf = sock.makefile("rb")
+    for i in range(8):
+        send_frame(sock, payload_of(encode_request(i, "gcn", mol_graph(i))))
+        resp = decode_frame(read_frame(rf))
+        assert resp[1] == i and resp[3] == OK, resp
+    assert sum(b1.served.values()) == 8, dict(b1.served)
+    assert sum(b0.served.values()) == 0, dict(b0.served)
+    b0.black_hole_probes = False
+    saw_probation = [False]
+    deadline = time.monotonic() + 10
+    while ing.health(0) != HEALTHY:
+        if ing.health(0) == PROBATION:
+            saw_probation[0] = True
+        assert time.monotonic() < deadline, "backend never recovered"
+        time.sleep(0.005)
+    assert saw_probation[0], "recovery must walk through probation"
+    sock.close()
+    m = ing.shutdown()
+    b0.kill()
+    b1.kill()
+    assert m["ejections"] >= 1 and m["recoveries"] >= 1, m
+    return "probe-blackhole ok (failover=8)"
+
+
+if __name__ == "__main__":
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 3
+    for i in range(trials):
+        print(
+            i,
+            trial_bit_exact_1v3(),
+            trial_routing_partition(),
+            trial_crash_accounting(),
+            trial_drain(),
+            trial_probe_blackhole(),
+            flush=True,
+        )
+    print("ALL REPLICA TRIALS PASSED")

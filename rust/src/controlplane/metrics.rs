@@ -1,0 +1,139 @@
+//! Lock-free counter blocks shared by the serving front-ends.
+//!
+//! [`NetCounters`] is the wire front-end block every `serve` process
+//! embeds in its `coordinator::Metrics`; it moved here so the ingress
+//! (which has no coordinator) and the server register the same wire
+//! counters from the same definition. [`IngressCounters`] is the
+//! cluster-tier block: proxy data plane, health probes, ejections, and
+//! reconciler restarts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wire front-end counters, updated lock-free by the accept loop,
+/// connection readers, and the response demux. `connections_open` and
+/// `requests_in_flight` are gauges (incremented and decremented);
+/// everything else is monotonic.
+#[derive(Default)]
+pub struct NetCounters {
+    /// Completed `accept(2)` calls — counted before connection setup,
+    /// so this includes connections later dropped during setup under
+    /// resource pressure (`connections_open` is rolled back for those).
+    pub connections_accepted: AtomicU64,
+    /// Currently-open connections (gauge).
+    pub connections_open: AtomicU64,
+    /// Frames that failed to decode (bad version, checksum, truncation).
+    pub decode_errors: AtomicU64,
+    /// Wire requests admitted but not yet answered (gauge).
+    pub requests_in_flight: AtomicU64,
+    /// Responses dropped because a connection's outbox was full (the
+    /// client stopped reading) — the demux never blocks on one stalled
+    /// connection at the expense of the others.
+    pub responses_dropped: AtomicU64,
+}
+
+/// Cluster-tier counters, updated lock-free by the ingress proxy's
+/// client readers, backend link readers, prober, and reconciler.
+/// `connections_open` and `requests_in_flight` are gauges; everything
+/// else is monotonic.
+#[derive(Default)]
+pub struct IngressCounters {
+    /// Client connections accepted by the ingress front.
+    pub connections_accepted: AtomicU64,
+    /// Currently-open client connections (gauge).
+    pub connections_open: AtomicU64,
+    /// Client frames forwarded to a backend (after id rewrite).
+    pub frames_proxied: AtomicU64,
+    /// Backend responses relayed back to a client.
+    pub responses_relayed: AtomicU64,
+    /// Proxied frames not yet answered (gauge).
+    pub requests_in_flight: AtomicU64,
+    /// Client frames the ingress could not parse far enough to route
+    /// (bad version, checksum, truncation) — answered `BadRequest` at
+    /// the ingress, never forwarded.
+    pub decode_errors: AtomicU64,
+    /// Frames answered `Rejected` because no healthy backend covers
+    /// the requested model.
+    pub no_backend_rejected: AtomicU64,
+    /// Frames answered `Rejected` because the ingress was draining.
+    pub drain_rejected: AtomicU64,
+    /// In-flight requests answered `Error` because their backend link
+    /// died before responding (the crash-accounting path: these land
+    /// in loadgen's `failed` bucket, never in `lost`).
+    pub backend_failed_in_flight: AtomicU64,
+    /// Backend responses with no live route (client disconnected
+    /// before its answer arrived).
+    pub responses_dropped: AtomicU64,
+    /// Successful health probes.
+    pub probes_ok: AtomicU64,
+    /// Failed health probes (connect/timeout/decode failures, error
+    /// statuses, and probes missing a spec-assigned model).
+    pub probes_failed: AtomicU64,
+    /// Healthy→Ejected transitions (probe threshold or link death).
+    pub ejections: AtomicU64,
+    /// Probation→Healthy transitions.
+    pub recoveries: AtomicU64,
+    /// Dead managed backends respawned by the reconciler.
+    pub restarts: AtomicU64,
+    /// Proxied frames deliberately corrupted by the fault-injection
+    /// plan (test harness only; zero in production).
+    pub frames_corrupted: AtomicU64,
+}
+
+impl IngressCounters {
+    /// Human-readable counter table (the ingress analogue of
+    /// `coordinator::Metrics::render`).
+    pub fn render(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut out = format!(
+            "ingress: {} conns accepted ({} open), {} proxied, {} relayed, {} in flight\n",
+            g(&self.connections_accepted),
+            g(&self.connections_open),
+            g(&self.frames_proxied),
+            g(&self.responses_relayed),
+            g(&self.requests_in_flight),
+        );
+        out.push_str(&format!(
+            "  rejected: {} no-backend, {} draining; {} decode errors, \
+             {} failed in flight, {} responses dropped\n",
+            g(&self.no_backend_rejected),
+            g(&self.drain_rejected),
+            g(&self.decode_errors),
+            g(&self.backend_failed_in_flight),
+            g(&self.responses_dropped),
+        ));
+        out.push_str(&format!(
+            "  health: {} probes ok / {} failed, {} ejections, {} recoveries, {} restarts\n",
+            g(&self.probes_ok),
+            g(&self.probes_failed),
+            g(&self.ejections),
+            g(&self.recoveries),
+            g(&self.restarts),
+        ));
+        let corrupted = g(&self.frames_corrupted);
+        if corrupted > 0 {
+            out.push_str(&format!("  fault injection: {corrupted} frames corrupted\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingress_render_covers_every_section() {
+        let c = IngressCounters::default();
+        c.connections_accepted.store(4, Ordering::Relaxed);
+        c.frames_proxied.store(100, Ordering::Relaxed);
+        c.ejections.store(2, Ordering::Relaxed);
+        let text = c.render();
+        assert!(text.contains("4 conns accepted"));
+        assert!(text.contains("100 proxied"));
+        assert!(text.contains("2 ejections"));
+        // The fault-injection line only appears when faults fired.
+        assert!(!text.contains("fault injection"));
+        c.frames_corrupted.store(1, Ordering::Relaxed);
+        assert!(c.render().contains("fault injection: 1 frames corrupted"));
+    }
+}

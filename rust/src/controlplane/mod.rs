@@ -1,0 +1,31 @@
+// Shared by both serving binaries; the same degrade-don't-panic rule
+// as the wire front-end applies.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+//! Control-plane building blocks shared by the `serve` and `ingress`
+//! front-ends.
+//!
+//! Before the cluster tier, everything front-end-shaped lived inside
+//! `net/` + `coordinator/` and was reachable only from the single
+//! serving process. `gengnn ingress` fronts N `gengnn serve` backends
+//! over the same wire protocol, so the pieces both binaries need are
+//! lifted here, where neither depends on the other's internals:
+//!
+//! * [`version`] — the wire protocol version table and the
+//!   echo-the-caller's-version negotiation rule (one copy, consumed by
+//!   the frame codec, the reactor, and the ingress proxy)
+//! * [`metrics`] — the lock-free counter blocks: [`NetCounters`]
+//!   (wire front-end, embedded in `coordinator::Metrics`) and
+//!   [`IngressCounters`] (proxy/probe/reconciler, owned by the ingress)
+//! * [`options`] — [`FrontendOptions`], the `--listen/--reactors/
+//!   --duration` flag triple both subcommands parse the same way
+//!
+//! `docs/CLUSTER.md` describes the fleet topology this enables.
+
+pub mod metrics;
+pub mod options;
+pub mod version;
+
+pub use metrics::{IngressCounters, NetCounters};
+pub use options::FrontendOptions;
+pub use version::{known_version, response_version, PROTO_V1, PROTO_V3, PROTO_V4, PROTO_VERSION};

@@ -1,0 +1,73 @@
+//! Front-end flag parsing shared by the `serve` and `ingress`
+//! subcommands: both expose a TCP listener whose lifetime is governed
+//! by `--duration`, and both size a worker pool — so the flag triple
+//! parses in exactly one place instead of drifting apart per binary.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+/// The `--listen / --reactors / --duration` triple of a serving
+/// front-end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrontendOptions {
+    /// Listen address (`None` when the subcommand's default applies —
+    /// in-process streaming for `serve`, the cluster spec's address
+    /// for `ingress`).
+    pub listen: Option<String>,
+    /// Worker pool size (reactor threads for `serve`; accepted and
+    /// ignored by `ingress`, which is thread-per-connection).
+    pub workers: usize,
+    /// Seconds to serve before a clean shutdown; 0 = run until killed.
+    pub duration_secs: u64,
+}
+
+impl FrontendOptions {
+    /// Parse the triple from already-parsed CLI args. `default_workers`
+    /// is the subcommand's pool size when `--reactors` is absent.
+    pub fn from_args(a: &Args, default_workers: usize) -> Result<FrontendOptions> {
+        Ok(FrontendOptions {
+            listen: a.str_opt("listen").map(|s| s.to_string()),
+            workers: a.usize_or("reactors", default_workers)?,
+            duration_secs: a.u64_or("duration", 0)?,
+        })
+    }
+
+    /// The bounded run window, or `None` to serve until killed.
+    pub fn run_for(&self) -> Option<Duration> {
+        (self.duration_secs > 0).then(|| Duration::from_secs(self.duration_secs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(argv: &[&str]) -> Args {
+        let owned: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse(&owned, &[]).unwrap()
+    }
+
+    #[test]
+    fn defaults_apply_when_flags_absent() {
+        let fo = FrontendOptions::from_args(&args(&[]), 2).unwrap();
+        assert_eq!(fo.listen, None);
+        assert_eq!(fo.workers, 2);
+        assert_eq!(fo.duration_secs, 0);
+        assert_eq!(fo.run_for(), None);
+    }
+
+    #[test]
+    fn flags_override_defaults() {
+        let fo = FrontendOptions::from_args(
+            &args(&["--listen", "127.0.0.1:9", "--reactors", "4", "--duration", "30"]),
+            2,
+        )
+        .unwrap();
+        assert_eq!(fo.listen.as_deref(), Some("127.0.0.1:9"));
+        assert_eq!(fo.workers, 4);
+        assert_eq!(fo.run_for(), Some(Duration::from_secs(30)));
+    }
+}

@@ -1,0 +1,64 @@
+//! The wire protocol version table and the negotiation rule.
+//!
+//! Version negotiation is per-frame and one-sided: a server (or the
+//! ingress answering on a server's behalf) simply echoes whatever
+//! version byte the request frame carried, so a v1 client never sees a
+//! version byte it does not understand. The table lives here — not in
+//! `net::proto` — because the ingress proxy and the reactor both need
+//! it without pulling in the frame codec's request/response types;
+//! `net::proto` re-exports the constants for wire-level callers.
+
+/// The QoS protocol version; inference frames are still encoded at
+/// this version by default (v3 changed nothing about inference).
+pub const PROTO_VERSION: u8 = 2;
+
+/// The legacy pre-QoS version; still accepted by the decoder.
+pub const PROTO_V1: u8 = 1;
+
+/// The control-plane version: inference bodies identical to v2, plus
+/// the control frame kinds carrying registry ops.
+pub const PROTO_V3: u8 = 3;
+
+/// The resident-graph version: inference and control bodies identical
+/// to v3, plus the resident frame kinds (`GRAPH_QUERY` /
+/// `GRAPH_MUTATE`) against a server-hosted graph.
+pub const PROTO_V4: u8 = 4;
+
+/// Is `version` one the decoder understands?
+pub fn known_version(version: u8) -> bool {
+    version == PROTO_V1 || version == PROTO_VERSION || version == PROTO_V3 || version == PROTO_V4
+}
+
+/// The version a response frame should be stamped with, given the
+/// first byte of the request payload it answers: responses echo the
+/// version of the frame they answer; frames whose version byte is
+/// itself unknown (or missing entirely) get the current version.
+pub fn response_version(first_byte: Option<u8>) -> u8 {
+    match first_byte {
+        Some(v) if known_version(v) => v,
+        _ => PROTO_VERSION,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_versions_are_exactly_1_through_4() {
+        for v in 0u8..=255 {
+            assert_eq!(known_version(v), (1..=4).contains(&v), "version {v}");
+        }
+    }
+
+    #[test]
+    fn responses_echo_known_versions_and_default_otherwise() {
+        assert_eq!(response_version(Some(PROTO_V1)), PROTO_V1);
+        assert_eq!(response_version(Some(PROTO_VERSION)), PROTO_VERSION);
+        assert_eq!(response_version(Some(PROTO_V3)), PROTO_V3);
+        assert_eq!(response_version(Some(PROTO_V4)), PROTO_V4);
+        assert_eq!(response_version(Some(0)), PROTO_VERSION);
+        assert_eq!(response_version(Some(99)), PROTO_VERSION);
+        assert_eq!(response_version(None), PROTO_VERSION);
+    }
+}

@@ -57,27 +57,11 @@ pub struct LaneSummary {
     pub busy_secs: f64,
 }
 
-/// Wire front-end counters, updated lock-free by the accept loop,
-/// connection readers, and the response demux. `connections_open` and
-/// `requests_in_flight` are gauges (incremented and decremented);
-/// everything else is monotonic.
-#[derive(Default)]
-pub struct NetCounters {
-    /// Completed `accept(2)` calls — counted before connection setup,
-    /// so this includes connections later dropped during setup under
-    /// resource pressure (`connections_open` is rolled back for those).
-    pub connections_accepted: AtomicU64,
-    /// Currently-open connections (gauge).
-    pub connections_open: AtomicU64,
-    /// Frames that failed to decode (bad version, checksum, truncation).
-    pub decode_errors: AtomicU64,
-    /// Wire requests admitted but not yet answered (gauge).
-    pub requests_in_flight: AtomicU64,
-    /// Responses dropped because a connection's outbox was full (the
-    /// client stopped reading) — the demux never blocks on one stalled
-    /// connection at the expense of the others.
-    pub responses_dropped: AtomicU64,
-}
+// The wire front-end counter block moved to the shared control-plane
+// module when the cluster tier landed (the ingress registers the same
+// counters without owning a coordinator); re-exported here so the
+// `Metrics::net()` surface is unchanged.
+pub use crate::controlplane::NetCounters;
 
 /// Resident graph-serving counters, updated lock-free by the reactor
 /// threads handling `GRAPH_QUERY` / `GRAPH_MUTATE` frames and by the

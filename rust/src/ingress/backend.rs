@@ -1,0 +1,234 @@
+//! Per-backend runtime state: the probe round-trip, the managed child
+//! process, and the shared plumbing the proxy's link threads hang off.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::net::proto::{self, Op, WireControl, WireFrame, WireStatus};
+use crate::util::json::Json;
+
+use super::health::ProbeTracker;
+use super::spec::BackendSpec;
+
+/// One live connection to a backend: the proxy writes proxied frames
+/// through `tx` (under the mutex); a dedicated reader thread owns the
+/// other half of the stream and demuxes responses by rewritten id.
+pub(crate) struct Link {
+    pub tx: Mutex<TcpStream>,
+    /// Cleared by whichever side sees the connection die first; both
+    /// the writer and the reader check it before trusting the stream.
+    pub alive: AtomicBool,
+    /// Monotonic link generation, so a reader that dies can tell
+    /// whether the slot still holds *its* link before clearing it.
+    pub generation: u64,
+}
+
+/// Everything the ingress tracks about one backend at runtime.
+pub(crate) struct BackendState {
+    pub spec: BackendSpec,
+    pub tracker: Mutex<ProbeTracker>,
+    /// Proxied frames awaiting this backend's answer (gauge; the
+    /// least-in-flight balancer's input).
+    pub in_flight: AtomicU64,
+    pub link: Mutex<Option<Arc<Link>>>,
+    /// Next link generation to assign.
+    pub link_generation: AtomicU64,
+    /// The managed child process (None for external backends or
+    /// between death and respawn).
+    pub child: Mutex<Option<Child>>,
+    /// Reconciler respawns so far.
+    pub restarts: AtomicU64,
+    /// When the reconciler first saw the managed child dead (cleared
+    /// on respawn) — the `restart_after` damper's clock.
+    pub down_since: Mutex<Option<Instant>>,
+}
+
+impl BackendState {
+    pub fn new(spec: BackendSpec, eject_after: u32, probation_successes: u32) -> BackendState {
+        BackendState {
+            spec,
+            tracker: Mutex::new(ProbeTracker::new(eject_after, probation_successes)),
+            in_flight: AtomicU64::new(0),
+            link: Mutex::new(None),
+            link_generation: AtomicU64::new(0),
+            child: Mutex::new(None),
+            restarts: AtomicU64::new(0),
+            down_since: Mutex::new(None),
+        }
+    }
+
+    /// Spawn the managed child process (quiet: a backend's stderr chat
+    /// belongs to its own log, not interleaved into the ingress's).
+    pub fn spawn_child(&self) -> Result<()> {
+        let cmd = &self.spec.command;
+        if cmd.is_empty() {
+            bail!("backend {} is not ingress-managed", self.spec.addr);
+        }
+        let child = Command::new(&cmd[0])
+            .args(&cmd[1..])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning backend {:?}", cmd[0]))?;
+        *crate::util::sync::lock(&self.child) = Some(child);
+        *crate::util::sync::lock(&self.down_since) = None;
+        Ok(())
+    }
+
+    /// SIGKILL the managed child (fault injection and shutdown).
+    pub fn kill_child(&self) {
+        if let Some(child) = crate::util::sync::lock(&self.child).as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Has the managed child exited? (`false` for external backends.)
+    pub fn child_exited(&self) -> bool {
+        match crate::util::sync::lock(&self.child).as_mut() {
+            Some(child) => matches!(child.try_wait(), Ok(Some(_))),
+            None => self.spec.managed(),
+        }
+    }
+}
+
+/// Dial with a bounded connect timeout (plain `TcpStream::connect`
+/// can block for the OS default, far too long for a probe tick).
+pub(crate) fn dial_timeout(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+    {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true)?;
+                return Ok(stream);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => anyhow::Error::from(e).context(format!("connecting to {addr}")),
+        None => anyhow!("{addr} resolved to no addresses"),
+    })
+}
+
+/// One LIST_MODELS probe round-trip on a fresh connection: dial,
+/// send, read until the matching control response, parse the live
+/// model set out of the registry JSON document. Every failure mode —
+/// connect refusal, timeout, decode error, non-Ok status — surfaces
+/// as `Err`, which the prober counts as one probe failure.
+pub(crate) fn probe_list_models(
+    addr: &str,
+    timeout: Duration,
+    probe_id: u64,
+) -> Result<BTreeSet<String>> {
+    let mut stream = dial_timeout(addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let frame = proto::encode_control(&WireControl {
+        id: probe_id,
+        op: Op::ListModels,
+        model: String::new(),
+        digest: String::new(),
+        version: 0,
+    })?;
+    stream.write_all(&frame)?;
+    loop {
+        let payload = proto::read_frame(&mut stream)?
+            .ok_or_else(|| anyhow!("EOF before the probe response"))?;
+        if let WireFrame::ControlResp(resp) = proto::decode_frame(&payload)? {
+            if resp.id != probe_id {
+                continue;
+            }
+            if resp.status != WireStatus::Ok {
+                bail!("probe answered {:?}: {}", resp.status, resp.message);
+            }
+            return parse_live_models(&resp.message);
+        }
+    }
+}
+
+/// Extract the live model names from a `LIST_MODELS` registry
+/// document: `{"models": [{"name": ..., "live": bool}, ...], ...}`.
+fn parse_live_models(doc: &str) -> Result<BTreeSet<String>> {
+    let json = Json::parse(doc).context("probe response is not valid JSON")?;
+    let mut live = BTreeSet::new();
+    for entry in json.get("models")?.as_arr()? {
+        if entry.get("live")?.as_bool()? {
+            live.insert(entry.get("name")?.as_str()?.to_string());
+        }
+    }
+    Ok(live)
+}
+
+/// Is a probe's advertised live set good enough for this backend's
+/// assignment? Every spec-assigned model must be live; a catch-all
+/// backend (no assignment) only needs the probe itself to succeed.
+/// This is what makes "every admitted request is routed to a backend
+/// advertising its model" hold even while a backend is still booting
+/// or mid-deploy: not-yet-serving replicas probe as unhealthy.
+pub(crate) fn advertises_assignment(spec: &BackendSpec, live: &BTreeSet<String>) -> bool {
+    spec.models.iter().all(|m| live.contains(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_models_parse_from_a_registry_document() {
+        let doc = r#"{"version": 3, "weight_seed": 7,
+            "models": [
+              {"name": "gcn", "digest": "ab", "live": true},
+              {"name": "gat", "digest": "cd", "live": false},
+              {"name": "gin", "digest": "ef", "live": true}
+            ], "history": []}"#;
+        let live = parse_live_models(doc).unwrap();
+        assert_eq!(
+            live.iter().cloned().collect::<Vec<_>>(),
+            vec!["gcn".to_string(), "gin".to_string()]
+        );
+        assert!(parse_live_models("not json").is_err());
+        assert!(parse_live_models("{\"nomodels\": 1}").is_err());
+    }
+
+    #[test]
+    fn assignment_check_requires_every_assigned_model() {
+        let live: BTreeSet<String> = ["gcn", "gin"].iter().map(|s| s.to_string()).collect();
+        let spec = |models: &[&str]| BackendSpec {
+            addr: "x:1".into(),
+            models: models.iter().map(|s| s.to_string()).collect(),
+            command: Vec::new(),
+        };
+        assert!(advertises_assignment(&spec(&["gcn"]), &live));
+        assert!(advertises_assignment(&spec(&["gcn", "gin"]), &live));
+        assert!(!advertises_assignment(&spec(&["gcn", "gat"]), &live));
+        // Catch-all: any successful probe is enough.
+        assert!(advertises_assignment(&spec(&[]), &live));
+    }
+
+    #[test]
+    fn dial_timeout_fails_fast_on_a_closed_port() {
+        // Bind then drop a listener to get a port that refuses.
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let t0 = Instant::now();
+        let err = dial_timeout(&format!("127.0.0.1:{port}"), Duration::from_millis(400));
+        assert!(err.is_err());
+        // Refusal is immediate; the timeout is an upper bound, not a
+        // sleep.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -1,0 +1,202 @@
+//! Test-only fault injection for the cluster tier.
+//!
+//! A [`FaultPlan`] is parsed from the `GENGNN_FAULT_PLAN` environment
+//! variable by the `ingress` binary (or injected programmatically via
+//! `IngressConfig` in tests, which keeps parallel test runs from
+//! fighting over process environment). An empty plan — the default —
+//! is zero-cost on the data plane beyond one frame counter.
+//!
+//! Directives (`;`-separated):
+//!
+//! * `kill-backend=IDX@N` — after the Nth client frame arrives, SIGKILL
+//!   the managed child of backend IDX (mid-load crash; exercises link
+//!   failure accounting, ejection, and reconciler recovery)
+//! * `drop-probes=IDX:COUNT` — black-hole the next COUNT probe
+//!   attempts against backend IDX (the probe never runs; exercises
+//!   probe-driven ejection while the data-plane link stays healthy)
+//! * `delay-probes-ms=MS` — sleep before every probe attempt
+//!   (exercises probe timeout handling without a slow backend)
+//! * `corrupt-frame=N` — corrupt the Nth client frame after its id
+//!   rewrite: the QoS priority byte is flipped to an invalid value and
+//!   the checksum re-sealed (`proto::corrupt_request_priority`), so the
+//!   backend's id salvage still works and its `BadRequest` flows back
+//!   under the caller's id — loadgen accounts it as `failed`, never
+//!   `lost`
+//!
+//! Example: `GENGNN_FAULT_PLAN="kill-backend=1@50;corrupt-frame=10"`.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// The declarative fault plan (immutable once parsed).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Corrupt the Nth client frame (1-based).
+    pub corrupt_frame: Option<u64>,
+    /// `(backend index, after Nth client frame)`: SIGKILL the managed
+    /// child once the frame counter reaches N.
+    pub kill_backend: Option<(usize, u64)>,
+    /// `(backend index, count)`: black-hole that many probe attempts.
+    pub drop_probes: Vec<(usize, u32)>,
+    /// Milliseconds to sleep before every probe attempt.
+    pub delay_probes_ms: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse a plan string (see module docs for the grammar).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for directive in s.split(';') {
+            let directive = directive.trim();
+            if directive.is_empty() {
+                continue;
+            }
+            let (key, value) = directive
+                .split_once('=')
+                .with_context(|| format!("fault directive {directive:?} has no `=`"))?;
+            match key.trim() {
+                "corrupt-frame" => {
+                    let n: u64 = value.trim().parse().context("corrupt-frame wants N")?;
+                    if n == 0 {
+                        bail!("corrupt-frame is 1-based");
+                    }
+                    plan.corrupt_frame = Some(n);
+                }
+                "kill-backend" => {
+                    let (idx, after) = value
+                        .split_once('@')
+                        .context("kill-backend wants IDX@N")?;
+                    plan.kill_backend = Some((
+                        idx.trim().parse().context("kill-backend backend index")?,
+                        after.trim().parse().context("kill-backend frame count")?,
+                    ));
+                }
+                "drop-probes" => {
+                    let (idx, count) = value
+                        .split_once(':')
+                        .context("drop-probes wants IDX:COUNT")?;
+                    plan.drop_probes.push((
+                        idx.trim().parse().context("drop-probes backend index")?,
+                        count.trim().parse().context("drop-probes count")?,
+                    ));
+                }
+                "delay-probes-ms" => {
+                    plan.delay_probes_ms =
+                        value.trim().parse().context("delay-probes-ms wants MS")?;
+                }
+                other => bail!("unknown fault directive {other:?}"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan carried by `GENGNN_FAULT_PLAN`, or the empty plan.
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var("GENGNN_FAULT_PLAN") {
+            Ok(s) => FaultPlan::parse(&s).context("parsing GENGNN_FAULT_PLAN"),
+            Err(_) => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// Does the plan reference a backend index outside the fleet?
+    pub fn validate(&self, backend_count: usize) -> Result<()> {
+        let check = |idx: usize, what: &str| -> Result<()> {
+            if idx >= backend_count {
+                bail!("{what} references backend {idx}, fleet has {backend_count}");
+            }
+            Ok(())
+        };
+        if let Some((idx, _)) = self.kill_backend {
+            check(idx, "kill-backend")?;
+        }
+        for &(idx, _) in &self.drop_probes {
+            check(idx, "drop-probes")?;
+        }
+        Ok(())
+    }
+}
+
+/// Mutable consumption state for one ingress run (the plan itself
+/// stays immutable; this tracks what already fired).
+pub(crate) struct FaultState {
+    /// Client frames seen so far (counted for every frame, parseable
+    /// or not, so directive offsets are stable under error traffic).
+    pub frames: AtomicU64,
+    /// The kill directive fired.
+    pub killed: AtomicBool,
+    /// Remaining probe drops per backend.
+    pub probe_drops: Vec<AtomicU32>,
+}
+
+impl FaultState {
+    pub fn new(plan: &FaultPlan, backend_count: usize) -> FaultState {
+        let probe_drops: Vec<AtomicU32> = (0..backend_count).map(|_| AtomicU32::new(0)).collect();
+        for &(idx, count) in &plan.drop_probes {
+            if let Some(slot) = probe_drops.get(idx) {
+                slot.fetch_add(count, Ordering::Relaxed);
+            }
+        }
+        FaultState {
+            frames: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+            probe_drops,
+        }
+    }
+
+    /// Consume one probe-drop token for backend `idx`; true = this
+    /// probe attempt is black-holed.
+    pub fn consume_probe_drop(&self, idx: usize) -> bool {
+        let Some(slot) = self.probe_drops.get(idx) else {
+            return false;
+        };
+        slot.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_directive() {
+        let plan = FaultPlan::parse(
+            "kill-backend=1@50; corrupt-frame=10; drop-probes=0:4; delay-probes-ms=25",
+        )
+        .unwrap();
+        assert_eq!(plan.kill_backend, Some((1, 50)));
+        assert_eq!(plan.corrupt_frame, Some(10));
+        assert_eq!(plan.drop_probes, vec![(0, 4)]);
+        assert_eq!(plan.delay_probes_ms, 25);
+        assert!(!plan.is_empty());
+        plan.validate(2).unwrap();
+        assert!(plan.validate(1).is_err());
+    }
+
+    #[test]
+    fn empty_and_malformed_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+        for bad in ["boom=1", "kill-backend=1", "drop-probes=3", "corrupt-frame=0"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn probe_drop_tokens_deplete() {
+        let plan = FaultPlan::parse("drop-probes=1:2").unwrap();
+        let state = FaultState::new(&plan, 2);
+        assert!(!state.consume_probe_drop(0));
+        assert!(state.consume_probe_drop(1));
+        assert!(state.consume_probe_drop(1));
+        assert!(!state.consume_probe_drop(1));
+        // Out-of-range indices never fire (validate catches them at
+        // boot; this is the belt to that suspender).
+        assert!(!state.consume_probe_drop(9));
+    }
+}

@@ -1,0 +1,210 @@
+//! The per-backend probe state machine.
+//!
+//! Pure and synchronous — the prober thread feeds it one boolean probe
+//! outcome at a time and acts on the returned [`Transition`]; nothing
+//! here touches sockets or clocks, which is what makes the
+//! healthy→ejected→probation→healthy ladder pinnable against a table
+//! of outcome sequences (`rust/tests/ingress_routing.rs`).
+//!
+//! The ladder:
+//!
+//! ```text
+//! Healthy ──(K consecutive failures)──▶ Ejected
+//! Ejected ──(1 success)──▶ Probation          (no traffic yet)
+//! Probation ──(M consecutive successes total)──▶ Healthy
+//! Probation ──(any failure)──▶ Ejected        (relapse, count resets)
+//! ```
+//!
+//! Probation receives no traffic: a backend that just came back (or
+//! was just restarted by the reconciler) must prove itself for M
+//! consecutive probes before the router sees it again. With M = 1 the
+//! first success graduates immediately (probation collapses to an
+//! instant).
+
+/// Routing-visible health of one backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Takes traffic.
+    Healthy,
+    /// Takes no traffic; probes keep running so it can come back.
+    Ejected,
+    /// Probes are succeeding but the success streak is still short of
+    /// the recovery threshold; takes no traffic.
+    Probation,
+}
+
+/// A state change worth counting or logging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// Entered `Ejected` (threshold reached, probation relapse, or a
+    /// forced ejection from the data plane).
+    Ejected,
+    /// Entered `Probation` (first success while ejected).
+    Probation,
+    /// Entered `Healthy` (success streak reached the threshold).
+    Recovered,
+}
+
+/// One backend's probe bookkeeping.
+#[derive(Clone, Debug)]
+pub struct ProbeTracker {
+    state: HealthState,
+    eject_after: u32,
+    probation_successes: u32,
+    /// Consecutive failures while `Healthy`.
+    failures: u32,
+    /// Consecutive successes since leaving `Healthy`.
+    successes: u32,
+}
+
+impl ProbeTracker {
+    /// A tracker that starts `Healthy` (the spec declares the backend;
+    /// the first K failed probes demote it). Zero thresholds are
+    /// clamped to 1 — `validate` rejects them upstream, but a tracker
+    /// must never be unable to transition.
+    pub fn new(eject_after: u32, probation_successes: u32) -> ProbeTracker {
+        ProbeTracker {
+            state: HealthState::Healthy,
+            eject_after: eject_after.max(1),
+            probation_successes: probation_successes.max(1),
+            failures: 0,
+            successes: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// May the router send this backend traffic?
+    pub fn routable(&self) -> bool {
+        self.state == HealthState::Healthy
+    }
+
+    /// Feed one probe outcome; returns the transition it caused, if
+    /// any.
+    pub fn observe(&mut self, ok: bool) -> Option<Transition> {
+        match (self.state, ok) {
+            (HealthState::Healthy, true) => {
+                self.failures = 0;
+                None
+            }
+            (HealthState::Healthy, false) => {
+                self.failures += 1;
+                (self.failures >= self.eject_after).then(|| {
+                    self.state = HealthState::Ejected;
+                    self.successes = 0;
+                    Transition::Ejected
+                })
+            }
+            (HealthState::Ejected, true) => {
+                self.successes = 1;
+                Some(if self.successes >= self.probation_successes {
+                    self.state = HealthState::Healthy;
+                    self.failures = 0;
+                    Transition::Recovered
+                } else {
+                    self.state = HealthState::Probation;
+                    Transition::Probation
+                })
+            }
+            (HealthState::Ejected, false) => None,
+            (HealthState::Probation, true) => {
+                self.successes += 1;
+                (self.successes >= self.probation_successes).then(|| {
+                    self.state = HealthState::Healthy;
+                    self.failures = 0;
+                    Transition::Recovered
+                })
+            }
+            (HealthState::Probation, false) => {
+                self.state = HealthState::Ejected;
+                self.successes = 0;
+                Some(Transition::Ejected)
+            }
+        }
+    }
+
+    /// Eject immediately, bypassing the failure threshold — the data
+    /// plane saw the backend die mid-frame (link EOF/reset), which is
+    /// stronger evidence than any probe. No-op when already ejected;
+    /// from probation it counts as a relapse.
+    pub fn force_eject(&mut self) -> Option<Transition> {
+        if self.state == HealthState::Ejected {
+            return None;
+        }
+        self.state = HealthState::Ejected;
+        self.failures = 0;
+        self.successes = 0;
+        Some(Transition::Ejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Replay a probe outcome sequence, returning (final state, all
+    /// transitions in order).
+    fn replay(k: u32, m: u32, outcomes: &[bool]) -> (HealthState, Vec<Transition>) {
+        let mut t = ProbeTracker::new(k, m);
+        let transitions = outcomes.iter().filter_map(|&ok| t.observe(ok)).collect();
+        (t.state(), transitions)
+    }
+
+    #[test]
+    fn full_ladder_healthy_ejected_probation_healthy() {
+        use Transition::*;
+        let (state, trans) = replay(2, 2, &[true, false, false, false, true, true]);
+        assert_eq!(state, HealthState::Healthy);
+        assert_eq!(trans, vec![Ejected, Probation, Recovered]);
+    }
+
+    #[test]
+    fn single_failure_below_threshold_does_not_eject() {
+        let (state, trans) = replay(3, 1, &[false, false, true, false, false]);
+        // Failure streaks of 2 against a threshold of 3, broken by a
+        // success: never ejected.
+        assert_eq!(state, HealthState::Healthy);
+        assert!(trans.is_empty());
+    }
+
+    #[test]
+    fn probation_relapse_resets_the_success_streak() {
+        use Transition::*;
+        let (state, trans) = replay(1, 3, &[false, true, true, false, true, true, true]);
+        assert_eq!(state, HealthState::Healthy);
+        assert_eq!(trans, vec![Ejected, Probation, Ejected, Probation, Recovered]);
+    }
+
+    #[test]
+    fn probation_takes_no_traffic() {
+        let mut t = ProbeTracker::new(1, 2);
+        assert!(t.routable());
+        t.observe(false);
+        assert!(!t.routable());
+        t.observe(true);
+        assert_eq!(t.state(), HealthState::Probation);
+        assert!(!t.routable());
+        t.observe(true);
+        assert!(t.routable());
+    }
+
+    #[test]
+    fn m_equals_one_collapses_probation() {
+        use Transition::*;
+        let (state, trans) = replay(1, 1, &[false, true]);
+        assert_eq!(state, HealthState::Healthy);
+        assert_eq!(trans, vec![Ejected, Recovered]);
+    }
+
+    #[test]
+    fn force_eject_is_idempotent_and_requires_full_recovery() {
+        let mut t = ProbeTracker::new(5, 2);
+        assert_eq!(t.force_eject(), Some(Transition::Ejected));
+        assert_eq!(t.force_eject(), None);
+        assert_eq!(t.observe(true), Some(Transition::Probation));
+        assert_eq!(t.observe(true), Some(Transition::Recovered));
+        assert!(t.routable());
+    }
+}

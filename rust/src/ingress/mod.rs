@@ -1,0 +1,48 @@
+// The cluster tier sits on the serving path: degrade, don't panic.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+//! The cluster tier: `gengnn ingress` fronting N `gengnn serve`
+//! backends over the existing wire protocol.
+//!
+//! One process was one machine until this module; the ROADMAP's
+//! fleet-scale claim needs a replica pool behind a model-aware router
+//! (the serving analogue of FlowGNN's multi-queue parallelism inside
+//! one device). The ingress speaks v1–v4 on the client side and
+//! proxies frames byte-for-byte — only the correlation id (and
+//! therefore the checksum) is rewritten in each direction — so the
+//! fleet inherits the single-process bit-exactness contract wholesale:
+//! the same request stream through 1 backend and through N backends
+//! produces identical response bytes (`rust/tests/ingress_e2e.rs`).
+//!
+//! * [`spec`]   — the declarative cluster spec (`cluster.toml`):
+//!   backend addrs, model assignments, probe/ejection/reconcile knobs
+//! * [`health`] — the per-backend probe state machine:
+//!   Healthy → Ejected after K consecutive failures, Ejected →
+//!   Probation on a probe success, Probation → Healthy after M
+//!   consecutive successes (any probation failure relapses)
+//! * [`router`] — per-model replica sets with round-robin or
+//!   least-in-flight selection among healthy members
+//! * [`backend`] — per-backend runtime state: the demuxing response
+//!   link, the LIST_MODELS probe, the managed child process
+//! * [`proxy`]  — the [`Ingress`] front: accept loop, id-rewriting
+//!   frame forwarding, drain on shutdown, the prober and the
+//!   node-agent-style reconciler that respawns dead managed backends
+//! * [`fault`]  — the test-only [`FaultPlan`] (env/config-driven):
+//!   kill a backend mid-load, black-hole probe replies, corrupt one
+//!   proxied frame
+//!
+//! `docs/CLUSTER.md` is the operator-facing description of the
+//! topology and its contracts.
+
+pub mod backend;
+pub mod fault;
+pub mod health;
+pub mod proxy;
+pub mod router;
+pub mod spec;
+
+pub use fault::FaultPlan;
+pub use health::{HealthState, ProbeTracker, Transition};
+pub use proxy::{Ingress, IngressConfig};
+pub use router::{Balance, Router};
+pub use spec::{BackendSpec, ClusterSpec, ProbeKnobs, ReconcileKnobs};

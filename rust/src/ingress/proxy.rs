@@ -1,0 +1,901 @@
+//! The ingress front: accept loop, id-rewriting frame proxy, drain,
+//! prober, and reconciler.
+//!
+//! ## Data plane
+//!
+//! Each client connection gets a reader thread; each backend gets one
+//! persistent link whose reader thread demuxes responses. A proxied
+//! frame travels: client reader → peek (version/kind/id/model, with
+//! the same envelope validation a backend performs) → route → rewrite
+//! the correlation id to a fleet-unique ingress id → forward raw
+//! bytes. The response comes back on the backend link, is matched by
+//! ingress id, gets the caller's id stamped back, and is relayed —
+//! every non-id byte untouched in both directions, which is what makes
+//! the 1-vs-N bit-exactness proof possible.
+//!
+//! Thread-per-connection is a deliberate tier tradeoff (the backends
+//! keep their reactor pool): the ingress holds a handful of client
+//! connections and per-fleet backend links, not the per-request fan-in
+//! the backends see, and blocking readers keep the proxy path free of
+//! reactor state the backends' event loop couples to admission and
+//! resident serving.
+//!
+//! ## Failure accounting
+//!
+//! Every admitted frame is answered exactly once — by the backend, or
+//! by the ingress with `Error` if the backend link dies first, or with
+//! `Rejected` if no healthy backend exists / the ingress is draining.
+//! That invariant is what keeps loadgen's reconciliation
+//! (`submitted = completed + rejected + failed + lost`, `lost == 0`)
+//! balanced across a backend crash (`rust/tests/ingress_e2e.rs`).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::controlplane::{response_version, IngressCounters};
+use crate::net::proto::{
+    self, Op, WireControlResp, WireGraphMutateResp, WireGraphQueryResp, WireResponse, WireStatus,
+    KIND_CONTROL, KIND_GRAPH_MUTATE, KIND_GRAPH_QUERY,
+};
+use crate::util::sync::lock;
+
+use super::backend::{advertises_assignment, dial_timeout, probe_list_models, BackendState, Link};
+use super::fault::{FaultPlan, FaultState};
+use super::health::{HealthState, Transition};
+use super::router::Router;
+use super::spec::ClusterSpec;
+
+/// How often blocking loops check the stop/drain flags.
+const POLL_TICK: Duration = Duration::from_millis(20);
+
+/// Socket read timeout for the stop-aware frame readers.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Bound on a single proxied write; a backend that cannot absorb a
+/// frame for this long is treated as dead rather than stalling every
+/// client routed to it.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Reconciler tick.
+const RECONCILE_TICK: Duration = Duration::from_millis(50);
+
+/// Everything needed to start an ingress.
+pub struct IngressConfig {
+    pub spec: ClusterSpec,
+    /// Test-only fault injection; `FaultPlan::default()` in production.
+    pub fault: FaultPlan,
+}
+
+/// One in-flight proxied frame: how to stamp and deliver its answer.
+#[derive(Clone)]
+struct Route {
+    /// Client connection token.
+    token: u64,
+    /// The caller's original correlation id.
+    client_id: u64,
+    version: u8,
+    kind: u8,
+    ctrl_op: u8,
+    model: String,
+    backend: usize,
+}
+
+/// The writer half of one client connection (readers own their clone).
+struct ClientConn {
+    tx: Mutex<TcpStream>,
+}
+
+struct Shared {
+    spec: ClusterSpec,
+    router: Router,
+    fault: FaultPlan,
+    fstate: FaultState,
+    backends: Vec<BackendState>,
+    /// ingress id → route, for every frame forwarded but unanswered.
+    routes: Mutex<HashMap<u64, Route>>,
+    next_ingress_id: AtomicU64,
+    next_token: AtomicU64,
+    conns: Mutex<HashMap<u64, Arc<ClientConn>>>,
+    counters: Arc<IngressCounters>,
+    /// Refuse new frames (answered `Rejected`), keep relaying answers.
+    draining: AtomicBool,
+    /// Tear everything down.
+    stop: AtomicBool,
+    client_threads: Mutex<Vec<JoinHandle<()>>>,
+    link_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running ingress. `shutdown` drains in-flight requests before
+/// tearing the fleet down; managed children die with the ingress.
+pub struct Ingress {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+    reconciler: Option<JoinHandle<()>>,
+}
+
+impl Ingress {
+    pub fn start(cfg: IngressConfig) -> Result<Ingress> {
+        cfg.spec.validate()?;
+        cfg.fault.validate(cfg.spec.backends.len())?;
+        let listener = TcpListener::bind(&cfg.spec.listen)
+            .with_context(|| format!("binding ingress listener {}", cfg.spec.listen))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+
+        let backends: Vec<BackendState> = cfg
+            .spec
+            .backends
+            .iter()
+            .map(|b| {
+                BackendState::new(
+                    b.clone(),
+                    cfg.spec.probe.eject_after,
+                    cfg.spec.probe.probation_successes,
+                )
+            })
+            .collect();
+        let fstate = FaultState::new(&cfg.fault, backends.len());
+        let router = Router::new(&cfg.spec.backends, cfg.spec.balance);
+        let shared = Arc::new(Shared {
+            router,
+            fault: cfg.fault,
+            fstate,
+            backends,
+            routes: Mutex::new(HashMap::new()),
+            next_ingress_id: AtomicU64::new(1),
+            next_token: AtomicU64::new(1),
+            conns: Mutex::new(HashMap::new()),
+            counters: Arc::new(IngressCounters::default()),
+            draining: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            client_threads: Mutex::new(Vec::new()),
+            link_threads: Mutex::new(Vec::new()),
+            spec: cfg.spec,
+        });
+
+        // Boot managed children, adopting any process already
+        // answering on the assigned address (idempotent restarts).
+        for b in &shared.backends {
+            if b.spec.managed() && dial_timeout(&b.spec.addr, Duration::from_millis(200)).is_err()
+            {
+                b.spawn_child()
+                    .with_context(|| format!("booting managed backend {}", b.spec.addr))?;
+            }
+        }
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(&shared, listener))
+        };
+        let prober = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || prober_loop(&shared))
+        };
+        let reconciler = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || reconciler_loop(&shared))
+        };
+        Ok(Ingress {
+            shared,
+            local_addr,
+            accept: Some(accept),
+            prober: Some(prober),
+            reconciler: Some(reconciler),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn counters(&self) -> Arc<IngressCounters> {
+        Arc::clone(&self.shared.counters)
+    }
+
+    /// Routing-visible health of backend `idx`.
+    pub fn backend_health(&self, idx: usize) -> HealthState {
+        lock(&self.shared.backends[idx].tracker).state()
+    }
+
+    /// Reconciler respawns of backend `idx` so far.
+    pub fn backend_restarts(&self, idx: usize) -> u64 {
+        self.shared.backends[idx].restarts.load(Ordering::Relaxed)
+    }
+
+    /// Proxied frames currently awaiting an answer.
+    pub fn in_flight(&self) -> u64 {
+        self.shared.counters.requests_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Human-readable fleet status: counters plus one line per backend.
+    pub fn status_report(&self) -> String {
+        let mut out = self.shared.counters.render();
+        for (i, b) in self.shared.backends.iter().enumerate() {
+            out.push_str(&format!(
+                "  backend {i} {} [{}] {:?}, {} in flight, {} restarts{}\n",
+                b.spec.addr,
+                if b.spec.models.is_empty() {
+                    "*".to_string()
+                } else {
+                    b.spec.models.join(",")
+                },
+                lock(&b.tracker).state(),
+                b.in_flight.load(Ordering::Relaxed),
+                b.restarts.load(Ordering::Relaxed),
+                if b.spec.managed() { " (managed)" } else { "" },
+            ));
+        }
+        out
+    }
+
+    /// Drain and stop: refuse new frames, wait for in-flight answers
+    /// (up to the spec's drain timeout), then tear down threads, close
+    /// connections, and kill managed children. Returns the counter
+    /// block for final reporting.
+    pub fn shutdown(mut self) -> Arc<IngressCounters> {
+        let shared = &self.shared;
+        shared.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + shared.spec.drain_timeout;
+        while Instant::now() < deadline {
+            if lock(&shared.routes).is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shared.stop.store(true, Ordering::SeqCst);
+        for h in [
+            self.accept.take(),
+            self.prober.take(),
+            self.reconciler.take(),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let _ = h.join();
+        }
+        // Close client sockets so any blocked I/O dies promptly.
+        for (_, conn) in lock(&shared.conns).drain() {
+            let _ = lock(&conn.tx).shutdown(Shutdown::Both);
+        }
+        for b in &shared.backends {
+            if let Some(link) = lock(&b.link).take() {
+                link.alive.store(false, Ordering::SeqCst);
+                let _ = lock(&link.tx).shutdown(Shutdown::Both);
+            }
+            b.kill_child();
+        }
+        for h in std::mem::take(&mut *lock(&shared.client_threads)) {
+            let _ = h.join();
+        }
+        for h in std::mem::take(&mut *lock(&shared.link_threads)) {
+            let _ = h.join();
+        }
+        Arc::clone(&shared.counters)
+    }
+}
+
+// ---- accept + client read path ------------------------------------------
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    while !shared.stop.load(Ordering::Relaxed) && !shared.draining.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared
+                    .counters
+                    .connections_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                shared
+                    .counters
+                    .connections_open
+                    .fetch_add(1, Ordering::Relaxed);
+                let token = shared.next_token.fetch_add(1, Ordering::Relaxed);
+                let worker = Arc::clone(shared);
+                let handle = std::thread::spawn(move || client_loop(&worker, stream, token));
+                lock(&shared.client_threads).push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_TICK);
+            }
+            Err(_) => std::thread::sleep(POLL_TICK),
+        }
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one frame payload from a stream whose read timeout is
+/// `READ_TICK`, retrying timeouts until the stop flag rises (then
+/// `Ok(None)`, as on clean EOF). Mirrors `proto::read_frame` except
+/// for the interruptibility.
+fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match stream.read(&mut len_buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                bail!("EOF inside a frame length prefix");
+            }
+            Ok(k) => filled += k,
+            Err(e) if would_block(&e) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > proto::MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {}-byte cap", proto::MAX_FRAME_BYTES);
+    }
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => bail!("EOF inside a frame body"),
+            Ok(k) => got += k,
+            Err(e) if would_block(&e) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+fn client_loop(shared: &Arc<Shared>, stream: TcpStream, token: u64) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => {
+            shared
+                .counters
+                .connections_open
+                .fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let _ = reader.set_read_timeout(Some(READ_TICK));
+    let conn = Arc::new(ClientConn {
+        tx: Mutex::new(stream),
+    });
+    lock(&shared.conns).insert(token, Arc::clone(&conn));
+    loop {
+        match read_frame_stoppable(&mut reader, &shared.stop) {
+            Ok(Some(payload)) => handle_frame(shared, &conn, token, payload),
+            Ok(None) => break,
+            Err(_) => break,
+        }
+    }
+    teardown_client(shared, token);
+}
+
+fn teardown_client(shared: &Arc<Shared>, token: u64) {
+    lock(&shared.conns).remove(&token);
+    shared
+        .counters
+        .connections_open
+        .fetch_sub(1, Ordering::Relaxed);
+    // Sweep the client's outstanding routes: its answers have nowhere
+    // to go, and drain must not wait on a vanished caller.
+    let mut swept = Vec::new();
+    lock(&shared.routes).retain(|_, r| {
+        if r.token == token {
+            swept.push(r.backend);
+            false
+        } else {
+            true
+        }
+    });
+    for backend in swept {
+        shared.backends[backend]
+            .in_flight
+            .fetch_sub(1, Ordering::Relaxed);
+        shared
+            .counters
+            .requests_in_flight
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// ---- the proxy hot path -------------------------------------------------
+
+fn handle_frame(shared: &Arc<Shared>, conn: &Arc<ClientConn>, token: u64, payload: Vec<u8>) {
+    let frame_no = shared.fstate.frames.fetch_add(1, Ordering::Relaxed) + 1;
+    maybe_kill_backend(shared, frame_no);
+
+    let peek = match proto::peek_frame(&payload) {
+        Ok(p) => p,
+        Err(e) => {
+            // Unroutable: answer BadRequest here. (A backend would
+            // have refused the same frame; the message differs but the
+            // status and the salvage-or-BAD_FRAME_ID id rule match.)
+            shared.counters.decode_errors.fetch_add(1, Ordering::Relaxed);
+            let id = proto::salvage_request_id(&payload).unwrap_or(proto::BAD_FRAME_ID);
+            let version = response_version(payload.first().copied());
+            let kind = payload.get(1).copied().unwrap_or(0);
+            send_answer(
+                conn,
+                version,
+                kind,
+                0,
+                id,
+                "",
+                WireStatus::BadRequest,
+                &format!("unroutable frame: {e:#}"),
+            );
+            return;
+        }
+    };
+
+    if shared.draining.load(Ordering::Relaxed) {
+        shared.counters.drain_rejected.fetch_add(1, Ordering::Relaxed);
+        answer_peeked(conn, &peek, WireStatus::Rejected, "ingress draining");
+        return;
+    }
+
+    let (routable, in_flight) = health_view(shared);
+    let Some(idx) = shared
+        .router
+        .route(peek.model.as_deref(), &routable, &in_flight)
+    else {
+        shared
+            .counters
+            .no_backend_rejected
+            .fetch_add(1, Ordering::Relaxed);
+        let why = match &peek.model {
+            Some(m) => format!("no healthy backend for model {m:?}"),
+            None => "no healthy backend".to_string(),
+        };
+        answer_peeked(conn, &peek, WireStatus::Rejected, &why);
+        return;
+    };
+
+    let link = match ensure_link(shared, idx) {
+        Ok(link) => link,
+        Err(e) => {
+            // The router believed in the backend but the dial failed;
+            // shed rather than stall — probes will eject it shortly.
+            shared
+                .counters
+                .no_backend_rejected
+                .fetch_add(1, Ordering::Relaxed);
+            answer_peeked(
+                conn,
+                &peek,
+                WireStatus::Rejected,
+                &format!("backend unreachable: {e:#}"),
+            );
+            return;
+        }
+    };
+
+    let ingress_id = shared.next_ingress_id.fetch_add(1, Ordering::Relaxed);
+    let mut buf = payload;
+    if proto::rewrite_frame_id(&mut buf, ingress_id).is_err() {
+        // Unreachable after a successful peek; degrade, don't panic.
+        shared.counters.decode_errors.fetch_add(1, Ordering::Relaxed);
+        answer_peeked(conn, &peek, WireStatus::Error, "id rewrite failed");
+        return;
+    }
+    if shared.fault.corrupt_frame == Some(frame_no) && proto::corrupt_request_priority(&mut buf) {
+        shared
+            .counters
+            .frames_corrupted
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    let route = Route {
+        token,
+        client_id: peek.id,
+        version: peek.version,
+        kind: peek.kind,
+        ctrl_op: peek.ctrl_op,
+        model: peek.model.clone().unwrap_or_default(),
+        backend: idx,
+    };
+    // Install the route before writing so the link reader can never
+    // see a response for an id it does not know.
+    lock(&shared.routes).insert(ingress_id, route);
+    shared.backends[idx].in_flight.fetch_add(1, Ordering::Relaxed);
+    shared
+        .counters
+        .requests_in_flight
+        .fetch_add(1, Ordering::Relaxed);
+    shared.counters.frames_proxied.fetch_add(1, Ordering::Relaxed);
+
+    let write_ok = {
+        use std::io::Write;
+        let mut tx = lock(&link.tx);
+        link.alive.load(Ordering::SeqCst)
+            && tx.write_all(&(buf.len() as u32).to_le_bytes()).is_ok()
+            && tx.write_all(&buf).is_ok()
+    };
+    if !write_ok || !link.alive.load(Ordering::SeqCst) {
+        // Either our write failed, or the link died around it and the
+        // reader's sweep may have missed our just-installed route.
+        // Whoever removes the route answers it — exactly once.
+        link.alive.store(false, Ordering::SeqCst);
+        if let Some(route) = lock(&shared.routes).remove(&ingress_id) {
+            fail_route(shared, &route, "backend connection lost");
+        }
+    }
+}
+
+/// The router's live view: routability and in-flight depth per backend.
+fn health_view(shared: &Shared) -> (Vec<bool>, Vec<u64>) {
+    let routable = shared
+        .backends
+        .iter()
+        .map(|b| lock(&b.tracker).routable())
+        .collect();
+    let in_flight = shared
+        .backends
+        .iter()
+        .map(|b| b.in_flight.load(Ordering::Relaxed))
+        .collect();
+    (routable, in_flight)
+}
+
+fn maybe_kill_backend(shared: &Shared, frame_no: u64) {
+    let Some((idx, after)) = shared.fault.kill_backend else {
+        return;
+    };
+    if frame_no >= after && !shared.fstate.killed.swap(true, Ordering::SeqCst) {
+        shared.backends[idx].kill_child();
+    }
+}
+
+// ---- answering ----------------------------------------------------------
+
+/// Encode an ingress-originated answer in the shape the frame's kind
+/// demands, stamped with the caller's version and id.
+#[allow(clippy::too_many_arguments)]
+fn encode_answer(
+    version: u8,
+    kind: u8,
+    ctrl_op: u8,
+    id: u64,
+    model: &str,
+    status: WireStatus,
+    message: &str,
+) -> Result<Vec<u8>> {
+    match kind {
+        KIND_CONTROL => proto::encode_control_resp(&WireControlResp {
+            id,
+            op: Op::from_byte(ctrl_op).unwrap_or(Op::ListModels),
+            status,
+            version: 0,
+            message: message.to_string(),
+        }),
+        KIND_GRAPH_QUERY => {
+            proto::encode_graph_query_resp(&WireGraphQueryResp::err(id, status, 0, message))
+        }
+        KIND_GRAPH_MUTATE => proto::encode_graph_mutate_resp(&WireGraphMutateResp {
+            id,
+            status,
+            snapshot_version: 0,
+            applied: 0,
+            rejected: 0,
+            message: message.to_string(),
+        }),
+        // KIND_REQUEST and anything unrecognized: the inference
+        // response shape, which every client version decodes.
+        _ => proto::encode_response_with_version(
+            version,
+            &WireResponse::err(id, model, status, message),
+        ),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_answer(
+    conn: &ClientConn,
+    version: u8,
+    kind: u8,
+    ctrl_op: u8,
+    id: u64,
+    model: &str,
+    status: WireStatus,
+    message: &str,
+) -> bool {
+    match encode_answer(version, kind, ctrl_op, id, model, status, message) {
+        Ok(frame) => {
+            use std::io::Write;
+            lock(&conn.tx).write_all(&frame).is_ok()
+        }
+        Err(_) => false,
+    }
+}
+
+fn answer_peeked(conn: &ClientConn, peek: &proto::FramePeek, status: WireStatus, message: &str) {
+    send_answer(
+        conn,
+        peek.version,
+        peek.kind,
+        peek.ctrl_op,
+        peek.id,
+        peek.model.as_deref().unwrap_or(""),
+        status,
+        message,
+    );
+}
+
+/// Answer one already-removed route with `Error` (its backend died
+/// before responding) and settle the gauges. The caller owns the
+/// route's removal, which is what makes the answer exactly-once.
+fn fail_route(shared: &Shared, route: &Route, message: &str) {
+    shared.backends[route.backend]
+        .in_flight
+        .fetch_sub(1, Ordering::Relaxed);
+    shared
+        .counters
+        .requests_in_flight
+        .fetch_sub(1, Ordering::Relaxed);
+    shared
+        .counters
+        .backend_failed_in_flight
+        .fetch_add(1, Ordering::Relaxed);
+    let conn = lock(&shared.conns).get(&route.token).map(Arc::clone);
+    if let Some(conn) = conn {
+        send_answer(
+            &conn,
+            route.version,
+            route.kind,
+            route.ctrl_op,
+            route.client_id,
+            &route.model,
+            WireStatus::Error,
+            message,
+        );
+    }
+}
+
+// ---- backend links ------------------------------------------------------
+
+fn ensure_link(shared: &Arc<Shared>, idx: usize) -> Result<Arc<Link>> {
+    let backend = &shared.backends[idx];
+    let mut slot = lock(&backend.link);
+    if let Some(link) = slot.as_ref() {
+        if link.alive.load(Ordering::SeqCst) {
+            return Ok(Arc::clone(link));
+        }
+    }
+    let stream = dial_timeout(&backend.spec.addr, shared.spec.probe.timeout)?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut reader = stream.try_clone()?;
+    reader.set_read_timeout(Some(READ_TICK))?;
+    let generation = backend.link_generation.fetch_add(1, Ordering::Relaxed) + 1;
+    let link = Arc::new(Link {
+        tx: Mutex::new(stream),
+        alive: AtomicBool::new(true),
+        generation,
+    });
+    *slot = Some(Arc::clone(&link));
+    drop(slot);
+    let handle = {
+        let shared = Arc::clone(shared);
+        let link = Arc::clone(&link);
+        std::thread::spawn(move || link_loop(&shared, idx, reader, link))
+    };
+    lock(&shared.link_threads).push(handle);
+    Ok(link)
+}
+
+fn link_loop(shared: &Arc<Shared>, idx: usize, mut reader: TcpStream, link: Arc<Link>) {
+    let died = loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break false;
+        }
+        if !link.alive.load(Ordering::SeqCst) {
+            break true;
+        }
+        match read_frame_stoppable(&mut reader, &shared.stop) {
+            Ok(Some(payload)) => deliver_response(shared, payload),
+            Ok(None) => break !shared.stop.load(Ordering::Relaxed),
+            Err(_) => break true,
+        }
+    };
+    if died {
+        fail_backend(shared, idx, &link);
+    }
+}
+
+/// Relay one backend response: match the ingress id, stamp the
+/// caller's id back, forward the bytes.
+fn deliver_response(shared: &Shared, payload: Vec<u8>) {
+    let Some(ingress_id) = proto::frame_id(&payload) else {
+        shared
+            .counters
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    let Some(route) = lock(&shared.routes).remove(&ingress_id) else {
+        // Client vanished (its routes were swept) or a stray frame.
+        shared
+            .counters
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    shared.backends[route.backend]
+        .in_flight
+        .fetch_sub(1, Ordering::Relaxed);
+    shared
+        .counters
+        .requests_in_flight
+        .fetch_sub(1, Ordering::Relaxed);
+    let mut buf = payload;
+    if proto::rewrite_frame_id(&mut buf, route.client_id).is_err() {
+        shared
+            .counters
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let conn = lock(&shared.conns).get(&route.token).map(Arc::clone);
+    let relayed = match conn {
+        Some(conn) => {
+            use std::io::Write;
+            let mut tx = lock(&conn.tx);
+            tx.write_all(&(buf.len() as u32).to_le_bytes()).is_ok()
+                && tx.write_all(&buf).is_ok()
+        }
+        None => false,
+    };
+    if relayed {
+        shared
+            .counters
+            .responses_relayed
+            .fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared
+            .counters
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The link died: fail every in-flight route on it (each answered
+/// `Error` exactly once), clear the link slot, and eject the backend
+/// on data-plane evidence.
+fn fail_backend(shared: &Shared, idx: usize, link: &Link) {
+    link.alive.store(false, Ordering::SeqCst);
+    {
+        let mut slot = lock(&shared.backends[idx].link);
+        if let Some(current) = slot.as_ref() {
+            if current.generation == link.generation {
+                *slot = None;
+            }
+        }
+    }
+    let mut failed = Vec::new();
+    lock(&shared.routes).retain(|_, r| {
+        if r.backend == idx {
+            failed.push(r.clone());
+            false
+        } else {
+            true
+        }
+    });
+    for route in &failed {
+        fail_route(shared, route, "backend connection lost");
+    }
+    if lock(&shared.backends[idx].tracker).force_eject() == Some(Transition::Ejected) {
+        shared.counters.ejections.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---- prober -------------------------------------------------------------
+
+fn sleep_stoppable(stop: &AtomicBool, total: Duration) {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(POLL_TICK.min(deadline - Instant::now()));
+    }
+}
+
+fn prober_loop(shared: &Arc<Shared>) {
+    let mut probe_id: u64 = 0;
+    while !shared.stop.load(Ordering::Relaxed) {
+        sleep_stoppable(&shared.stop, shared.spec.probe.interval);
+        for (idx, backend) in shared.backends.iter().enumerate() {
+            if shared.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            if shared.fault.delay_probes_ms > 0 {
+                sleep_stoppable(
+                    &shared.stop,
+                    Duration::from_millis(shared.fault.delay_probes_ms),
+                );
+            }
+            // A black-holed probe is one the prober never hears back
+            // from: it counts as a failure without touching the wire.
+            let ok = if shared.fstate.consume_probe_drop(idx) {
+                false
+            } else {
+                probe_id += 1;
+                match probe_list_models(&backend.spec.addr, shared.spec.probe.timeout, probe_id) {
+                    Ok(live) => advertises_assignment(&backend.spec, &live),
+                    Err(_) => false,
+                }
+            };
+            if ok {
+                shared.counters.probes_ok.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.counters.probes_failed.fetch_add(1, Ordering::Relaxed);
+            }
+            match lock(&backend.tracker).observe(ok) {
+                Some(Transition::Ejected) => {
+                    shared.counters.ejections.fetch_add(1, Ordering::Relaxed);
+                    // Drain-on-ejection: the link (if any) stays open so
+                    // in-flight requests finish; only new traffic stops.
+                }
+                Some(Transition::Recovered) => {
+                    shared.counters.recoveries.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+// ---- reconciler ---------------------------------------------------------
+
+/// Node-agent loop: respawn managed backends whose process died, after
+/// the `restart_after` damper, within the `max_restarts` budget.
+/// Re-registration is implicit — the respawned process answers probes
+/// on its spec'd address, walks probation, and rejoins the pool.
+fn reconciler_loop(shared: &Arc<Shared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        sleep_stoppable(&shared.stop, RECONCILE_TICK);
+        for backend in &shared.backends {
+            if !backend.spec.managed() || !backend.child_exited() {
+                continue;
+            }
+            let eligible = {
+                let mut down = lock(&backend.down_since);
+                match *down {
+                    None => {
+                        *down = Some(Instant::now());
+                        false
+                    }
+                    Some(t0) => t0.elapsed() >= shared.spec.reconcile.restart_after,
+                }
+            };
+            if !eligible
+                || backend.restarts.load(Ordering::Relaxed)
+                    >= shared.spec.reconcile.max_restarts as u64
+            {
+                continue;
+            }
+            // Count the attempt against the budget whether or not the
+            // spawn succeeds — a command that cannot spawn must not
+            // retry forever.
+            backend.restarts.fetch_add(1, Ordering::Relaxed);
+            shared.counters.restarts.fetch_add(1, Ordering::Relaxed);
+            if backend.spawn_child().is_err() {
+                *lock(&backend.down_since) = Some(Instant::now());
+            }
+        }
+    }
+}

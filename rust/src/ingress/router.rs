@@ -1,0 +1,205 @@
+//! Model-aware replica routing.
+//!
+//! The replica sets are fixed at boot from the cluster spec (model →
+//! the backends assigned that model, plus every catch-all backend);
+//! what changes at runtime is which members are routable, and that
+//! arrives as a per-call view (`routable` / `in_flight` slices) so the
+//! router itself stays pure and property-testable under join/leave/
+//! eject churn (`rust/tests/ingress_routing.rs`).
+//!
+//! A model no replica set covers still routes — to any healthy backend
+//! — so the *backend* generates the canonical "model not served"
+//! error. Self-answering at the ingress would break the fleet-scope
+//! bit-exactness contract: the 1-backend and N-backend fleets must
+//! produce identical bytes even for error paths.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use super::spec::BackendSpec;
+
+/// Replica selection policy within a candidate set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Balance {
+    /// Rotate through healthy candidates in order.
+    RoundRobin,
+    /// Pick the healthy candidate with the fewest proxied requests in
+    /// flight (ties break to the lowest index, keeping replays
+    /// deterministic).
+    LeastInFlight,
+}
+
+impl Balance {
+    pub fn parse(s: &str) -> Result<Balance> {
+        Ok(match s {
+            "round-robin" => Balance::RoundRobin,
+            "least-in-flight" => Balance::LeastInFlight,
+            _ => bail!("unknown balance policy {s:?} (round-robin | least-in-flight)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Balance::RoundRobin => "round-robin",
+            Balance::LeastInFlight => "least-in-flight",
+        }
+    }
+}
+
+/// The boot-time routing table: per-model candidate lists over backend
+/// indices.
+pub struct Router {
+    /// model → sorted backend indices assigned it (incl. catch-alls).
+    sets: BTreeMap<String, Vec<usize>>,
+    /// Every backend index — the candidate list for model-free frames
+    /// (control, resident ops) and for models outside every set.
+    all: Vec<usize>,
+    balance: Balance,
+    /// Round-robin cursor, shared across models: rotation within any
+    /// candidate list stays fair without per-model state.
+    rr: AtomicU64,
+}
+
+impl Router {
+    pub fn new(backends: &[BackendSpec], balance: Balance) -> Router {
+        let mut sets: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, b) in backends.iter().enumerate() {
+            for m in &b.models {
+                sets.entry(m.clone()).or_default().push(i);
+            }
+        }
+        let catch_alls: Vec<usize> = backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.models.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        for members in sets.values_mut() {
+            members.extend(catch_alls.iter().copied());
+            members.sort_unstable();
+            members.dedup();
+        }
+        Router {
+            sets,
+            all: (0..backends.len()).collect(),
+            balance,
+            rr: AtomicU64::new(0),
+        }
+    }
+
+    pub fn balance(&self) -> Balance {
+        self.balance
+    }
+
+    /// The backends that advertise `model` (assigned or catch-all),
+    /// irrespective of health.
+    pub fn candidates(&self, model: &str) -> &[usize] {
+        self.sets.get(model).map(Vec::as_slice).unwrap_or(&self.all)
+    }
+
+    /// Pick a backend for one frame. `model` is `None` for control and
+    /// resident frames (any backend answers those canonically);
+    /// `routable[i]` / `in_flight[i]` are the caller's live view of
+    /// backend `i`. Returns `None` when no routable candidate exists —
+    /// the only case the ingress self-answers (`Rejected`), because no
+    /// backend could have answered at all.
+    pub fn route(&self, model: Option<&str>, routable: &[bool], in_flight: &[u64]) -> Option<usize> {
+        let candidates = match model {
+            Some(m) => self.candidates(m),
+            None => &self.all,
+        };
+        let live: Vec<usize> = candidates
+            .iter()
+            .copied()
+            .filter(|&i| routable.get(i).copied().unwrap_or(false))
+            .collect();
+        match self.balance {
+            Balance::RoundRobin => {
+                if live.is_empty() {
+                    return None;
+                }
+                let turn = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
+                Some(live[turn % live.len()])
+            }
+            Balance::LeastInFlight => live
+                .into_iter()
+                .min_by_key(|&i| (in_flight.get(i).copied().unwrap_or(0), i)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backends(specs: &[(&str, &[&str])]) -> Vec<BackendSpec> {
+        specs
+            .iter()
+            .map(|(addr, models)| BackendSpec {
+                addr: addr.to_string(),
+                models: models.iter().map(|m| m.to_string()).collect(),
+                command: Vec::new(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn candidate_sets_union_assignments_with_catch_alls() {
+        let r = Router::new(
+            &backends(&[("a:1", &["gcn"]), ("b:1", &["gin", "gcn"]), ("c:1", &[])]),
+            Balance::RoundRobin,
+        );
+        assert_eq!(r.candidates("gcn"), &[0, 1, 2]);
+        assert_eq!(r.candidates("gin"), &[1, 2]);
+        // Unknown model → every backend (the error stays canonical).
+        assert_eq!(r.candidates("bert"), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_rotates_among_healthy_members_only() {
+        let r = Router::new(
+            &backends(&[("a:1", &["gcn"]), ("b:1", &["gcn"]), ("c:1", &["gcn"])]),
+            Balance::RoundRobin,
+        );
+        let routable = [true, false, true];
+        let picks: Vec<usize> = (0..4)
+            .map(|_| r.route(Some("gcn"), &routable, &[0; 3]).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        assert_eq!(r.route(Some("gcn"), &[false; 3], &[0; 3]), None);
+    }
+
+    #[test]
+    fn least_in_flight_prefers_idle_backends_and_breaks_ties_low() {
+        let r = Router::new(
+            &backends(&[("a:1", &["gcn"]), ("b:1", &["gcn"]), ("c:1", &["gcn"])]),
+            Balance::LeastInFlight,
+        );
+        assert_eq!(r.route(Some("gcn"), &[true; 3], &[5, 2, 9]), Some(1));
+        assert_eq!(r.route(Some("gcn"), &[true; 3], &[4, 4, 4]), Some(0));
+        assert_eq!(r.route(Some("gcn"), &[false, true, true], &[0, 7, 3]), Some(2));
+    }
+
+    #[test]
+    fn model_free_frames_route_to_any_healthy_backend() {
+        let r = Router::new(
+            &backends(&[("a:1", &["gcn"]), ("b:1", &["gin"])]),
+            Balance::LeastInFlight,
+        );
+        // A control/resident frame can land anywhere that's healthy.
+        assert_eq!(r.route(None, &[false, true], &[0, 0]), Some(1));
+        assert_eq!(r.route(None, &[false, false], &[0, 0]), None);
+    }
+
+    #[test]
+    fn balance_parses_and_round_trips() {
+        assert_eq!(Balance::parse("round-robin").unwrap(), Balance::RoundRobin);
+        assert_eq!(
+            Balance::parse(Balance::LeastInFlight.as_str()).unwrap(),
+            Balance::LeastInFlight
+        );
+        assert!(Balance::parse("fastest").is_err());
+    }
+}

@@ -1,0 +1,494 @@
+//! The declarative cluster spec (`cluster.toml`).
+//!
+//! A hand-rolled parser for the TOML subset the spec needs — plain
+//! sections, one array-of-tables (`[[backend]]`), string / integer /
+//! boolean / string-array values, `#` comments — because the vendor
+//! set carries no TOML crate and the spec grammar is small enough to
+//! own. Unknown sections and keys are hard errors: a typoed knob must
+//! not silently fall back to a default in the config that decides
+//! where production traffic lands.
+//!
+//! ```toml
+//! [ingress]
+//! listen = "127.0.0.1:7460"
+//! balance = "least-in-flight"      # or "round-robin"
+//! drain_timeout_ms = 10000
+//!
+//! [probe]
+//! interval_ms = 500
+//! timeout_ms = 1000
+//! eject_after = 3
+//! probation_successes = 2
+//!
+//! [reconcile]
+//! restart_after_ms = 1000
+//! max_restarts = 5
+//!
+//! [[backend]]
+//! addr = "127.0.0.1:7461"
+//! models = ["gcn", "gat"]          # empty/omitted = serves any model
+//! command = ["./target/release/gengnn", "serve", "--listen", "127.0.0.1:7461"]
+//! ```
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::router::Balance;
+
+/// Probe/ejection knobs (the `[probe]` section).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProbeKnobs {
+    /// Delay between probe rounds.
+    pub interval: Duration,
+    /// Per-probe connect/read deadline; a probe that outlives it
+    /// counts as a failure.
+    pub timeout: Duration,
+    /// Consecutive probe failures before a healthy backend is ejected.
+    pub eject_after: u32,
+    /// Consecutive probe successes an ejected backend must show
+    /// (through probation) before it takes traffic again.
+    pub probation_successes: u32,
+}
+
+impl Default for ProbeKnobs {
+    fn default() -> ProbeKnobs {
+        ProbeKnobs {
+            interval: Duration::from_millis(500),
+            timeout: Duration::from_millis(1000),
+            eject_after: 3,
+            probation_successes: 2,
+        }
+    }
+}
+
+/// Reconciler knobs (the `[reconcile]` section).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReconcileKnobs {
+    /// How long a managed backend must be dead before the reconciler
+    /// respawns it (a crash-loop damper, not a health judgment).
+    pub restart_after: Duration,
+    /// Respawn budget per backend; exhausted budget leaves the backend
+    /// ejected for an operator.
+    pub max_restarts: u32,
+}
+
+impl Default for ReconcileKnobs {
+    fn default() -> ReconcileKnobs {
+        ReconcileKnobs {
+            restart_after: Duration::from_millis(1000),
+            max_restarts: 5,
+        }
+    }
+}
+
+/// One replica in the pool (a `[[backend]]` table).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BackendSpec {
+    /// Wire address of the backend's listener.
+    pub addr: String,
+    /// Models this replica is assigned; empty = serves any model.
+    pub models: Vec<String>,
+    /// Spawn command for an ingress-managed replica (argv vector; the
+    /// reconciler owns the child's lifecycle). Empty = externally
+    /// managed, the ingress only probes and routes.
+    pub command: Vec<String>,
+}
+
+impl BackendSpec {
+    /// Does this replica advertise `model` (explicitly or as a
+    /// serve-anything catch-all)?
+    pub fn advertises(&self, model: &str) -> bool {
+        self.models.is_empty() || self.models.iter().any(|m| m == model)
+    }
+
+    /// Is the replica's process lifecycle owned by the ingress?
+    pub fn managed(&self) -> bool {
+        !self.command.is_empty()
+    }
+}
+
+/// The whole cluster: ingress listener + knobs + replica pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// Ingress listen address (`[ingress] listen`).
+    pub listen: String,
+    /// Replica selection policy within a model's set.
+    pub balance: Balance,
+    /// How long shutdown waits for in-flight requests to drain.
+    pub drain_timeout: Duration,
+    pub probe: ProbeKnobs,
+    pub reconcile: ReconcileKnobs,
+    pub backends: Vec<BackendSpec>,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> ClusterSpec {
+        ClusterSpec {
+            listen: "127.0.0.1:7460".to_string(),
+            balance: Balance::RoundRobin,
+            drain_timeout: Duration::from_millis(10_000),
+            probe: ProbeKnobs::default(),
+            reconcile: ReconcileKnobs::default(),
+            backends: Vec::new(),
+        }
+    }
+}
+
+/// One parsed right-hand side.
+enum Value {
+    Str(String),
+    Int(i64),
+    #[allow(dead_code)] // parsed for completeness; no boolean knob yet
+    Bool(bool),
+    List(Vec<String>),
+}
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Bool(_) => "boolean",
+            Value::List(_) => "array",
+        }
+    }
+
+    fn str(self, key: &str) -> Result<String> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => bail!("{key} must be a string, got {}", v.kind()),
+        }
+    }
+
+    fn list(self, key: &str) -> Result<Vec<String>> {
+        match self {
+            Value::List(xs) => Ok(xs),
+            v => bail!("{key} must be an array of strings, got {}", v.kind()),
+        }
+    }
+
+    fn duration_ms(self, key: &str) -> Result<Duration> {
+        match self {
+            Value::Int(n) if n >= 0 => Ok(Duration::from_millis(n as u64)),
+            Value::Int(n) => bail!("{key} must be non-negative, got {n}"),
+            v => bail!("{key} must be an integer (milliseconds), got {}", v.kind()),
+        }
+    }
+
+    fn u32(self, key: &str) -> Result<u32> {
+        match self {
+            Value::Int(n) if (0..=u32::MAX as i64).contains(&n) => Ok(n as u32),
+            Value::Int(n) => bail!("{key} out of range: {n}"),
+            v => bail!("{key} must be an integer, got {}", v.kind()),
+        }
+    }
+}
+
+/// Strip a `#` comment that is not inside a double-quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(raw: &str) -> Result<String> {
+    let inner = raw
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .with_context(|| format!("expected a double-quoted string, got {raw:?}"))?;
+    if inner.contains('"') {
+        bail!("embedded quotes are not supported: {raw:?}");
+    }
+    Ok(inner.to_string())
+}
+
+fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.starts_with('"') {
+        return Ok(Value::Str(parse_string(raw)?));
+    }
+    if let Some(inner) = raw.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::List(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_string(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::List(items));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    raw.parse::<i64>()
+        .map(Value::Int)
+        .with_context(|| format!("unparseable value {raw:?}"))
+}
+
+impl ClusterSpec {
+    /// Parse a `cluster.toml` document.
+    pub fn parse(text: &str) -> Result<ClusterSpec> {
+        let mut spec = ClusterSpec::default();
+        // "" = before any section header; "backend" = inside the most
+        // recently opened [[backend]] table.
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+                if name.trim() != "backend" {
+                    bail!("line {lineno}: unknown table [[{}]]", name.trim());
+                }
+                spec.backends.push(BackendSpec::default());
+                section = "backend".to_string();
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                let name = name.trim();
+                if !matches!(name, "ingress" | "probe" | "reconcile") {
+                    bail!("line {lineno}: unknown section [{name}]");
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, raw_value) = line
+                .split_once('=')
+                .with_context(|| format!("line {lineno}: expected `key = value`, got {line:?}"))?;
+            let key = key.trim();
+            let value = parse_value(raw_value)
+                .with_context(|| format!("line {lineno}: bad value for {key}"))?;
+            spec.assign(&section, key, value)
+                .with_context(|| format!("line {lineno}"))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and parse a spec file.
+    pub fn load(path: &Path) -> Result<ClusterSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cluster spec {}", path.display()))?;
+        ClusterSpec::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    fn assign(&mut self, section: &str, key: &str, value: Value) -> Result<()> {
+        match (section, key) {
+            ("ingress", "listen") => self.listen = value.str(key)?,
+            ("ingress", "balance") => self.balance = Balance::parse(&value.str(key)?)?,
+            ("ingress", "drain_timeout_ms") => self.drain_timeout = value.duration_ms(key)?,
+            ("probe", "interval_ms") => self.probe.interval = value.duration_ms(key)?,
+            ("probe", "timeout_ms") => self.probe.timeout = value.duration_ms(key)?,
+            ("probe", "eject_after") => self.probe.eject_after = value.u32(key)?,
+            ("probe", "probation_successes") => {
+                self.probe.probation_successes = value.u32(key)?
+            }
+            ("reconcile", "restart_after_ms") => {
+                self.reconcile.restart_after = value.duration_ms(key)?
+            }
+            ("reconcile", "max_restarts") => self.reconcile.max_restarts = value.u32(key)?,
+            ("backend", _) => {
+                let b = self
+                    .backends
+                    .last_mut()
+                    .context("backend keys must follow a [[backend]] header")?;
+                match key {
+                    "addr" => b.addr = value.str(key)?,
+                    "models" => b.models = value.list(key)?,
+                    "command" => b.command = value.list(key)?,
+                    _ => bail!("unknown backend key {key:?}"),
+                }
+            }
+            ("", _) => bail!("key {key:?} before any section header"),
+            _ => bail!("unknown key {key:?} in section [{section}]"),
+        }
+        Ok(())
+    }
+
+    /// Structural validation (independent of any model catalog).
+    pub fn validate(&self) -> Result<()> {
+        if self.backends.is_empty() {
+            bail!("cluster spec declares no [[backend]] tables");
+        }
+        let mut addrs = BTreeSet::new();
+        for (i, b) in self.backends.iter().enumerate() {
+            if b.addr.is_empty() {
+                bail!("backend {i} has no addr");
+            }
+            if !b.addr.contains(':') {
+                bail!("backend {i} addr {:?} is not host:port", b.addr);
+            }
+            if !addrs.insert(&b.addr) {
+                bail!("duplicate backend addr {:?}", b.addr);
+            }
+            if b.models.iter().any(|m| m.is_empty()) {
+                bail!("backend {i} assigns an empty model name");
+            }
+        }
+        if self.probe.eject_after == 0 {
+            bail!("probe.eject_after must be at least 1");
+        }
+        if self.probe.probation_successes == 0 {
+            bail!("probe.probation_successes must be at least 1");
+        }
+        if self.probe.interval.is_zero() || self.probe.timeout.is_zero() {
+            bail!("probe interval and timeout must be positive");
+        }
+        Ok(())
+    }
+
+    /// Validate every model→replica assignment against a catalog of
+    /// known model names (`registry::catalog_model_names`): routing
+    /// traffic for a model no backend can serve is a spec bug worth
+    /// failing at boot, not at the first misrouted request.
+    pub fn validate_models(&self, catalog: &[String]) -> Result<()> {
+        let known: BTreeSet<&str> = catalog.iter().map(|s| s.as_str()).collect();
+        let mut unknown = BTreeSet::new();
+        for b in &self.backends {
+            for m in &b.models {
+                if !known.contains(m.as_str()) {
+                    unknown.insert(m.clone());
+                }
+            }
+        }
+        if !unknown.is_empty() {
+            bail!(
+                "cluster spec assigns models not in the catalog: {:?} (catalog: {:?})",
+                unknown.into_iter().collect::<Vec<_>>(),
+                catalog
+            );
+        }
+        Ok(())
+    }
+
+    /// Model names with at least one assigned replica (catch-all
+    /// backends serve everything and are not listed).
+    pub fn assigned_models(&self) -> Vec<String> {
+        let mut names = BTreeSet::new();
+        for b in &self.backends {
+            for m in &b.models {
+                names.insert(m.clone());
+            }
+        }
+        names.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# Fleet of two, partitioned by model.
+[ingress]
+listen = "127.0.0.1:7460"
+balance = "least-in-flight"
+drain_timeout_ms = 2500
+
+[probe]
+interval_ms = 200          # fast probes for the test fleet
+timeout_ms = 400
+eject_after = 2
+probation_successes = 3
+
+[reconcile]
+restart_after_ms = 300
+max_restarts = 2
+
+[[backend]]
+addr = "127.0.0.1:7461"
+models = ["gcn", "gat"]
+command = ["./gengnn", "serve", "--listen", "127.0.0.1:7461"]
+
+[[backend]]
+addr = "127.0.0.1:7462"    # externally managed catch-all
+models = []
+"#;
+
+    #[test]
+    fn parses_the_full_example() {
+        let spec = ClusterSpec::parse(EXAMPLE).unwrap();
+        assert_eq!(spec.listen, "127.0.0.1:7460");
+        assert_eq!(spec.balance, Balance::LeastInFlight);
+        assert_eq!(spec.drain_timeout, Duration::from_millis(2500));
+        assert_eq!(spec.probe.interval, Duration::from_millis(200));
+        assert_eq!(spec.probe.eject_after, 2);
+        assert_eq!(spec.probe.probation_successes, 3);
+        assert_eq!(spec.reconcile.restart_after, Duration::from_millis(300));
+        assert_eq!(spec.reconcile.max_restarts, 2);
+        assert_eq!(spec.backends.len(), 2);
+        assert_eq!(spec.backends[0].models, vec!["gcn", "gat"]);
+        assert_eq!(spec.backends[0].command.len(), 4);
+        assert!(spec.backends[0].managed());
+        assert!(!spec.backends[1].managed());
+        assert!(spec.backends[1].advertises("anything"));
+        assert!(spec.backends[0].advertises("gcn"));
+        assert!(!spec.backends[0].advertises("dgn"));
+        assert_eq!(spec.assigned_models(), vec!["gat", "gcn"]);
+    }
+
+    #[test]
+    fn defaults_fill_unset_knobs() {
+        let spec = ClusterSpec::parse("[[backend]]\naddr = \"127.0.0.1:1\"\n").unwrap();
+        assert_eq!(spec.probe, ProbeKnobs::default());
+        assert_eq!(spec.reconcile, ReconcileKnobs::default());
+        assert_eq!(spec.balance, Balance::RoundRobin);
+    }
+
+    #[test]
+    fn rejects_misconfigurations() {
+        // A typoed knob is an error, not a silent default.
+        for bad in [
+            "[ingress]\nlistn = \"x:1\"\n[[backend]]\naddr = \"x:1\"",
+            "[probes]\ninterval_ms = 5",
+            "addr = \"x:1\"", // key before any section
+            "[[backends]]\naddr = \"x:1\"",
+            "[[backend]]\naddr = \"x:1\"\n[[backend]]\naddr = \"x:1\"", // dup addr
+            "[[backend]]\naddr = \"noport\"",
+            "[[backend]]\naddr = \"x:1\"\nmodels = [\"\"]",
+            "[[backend]]\naddr = \"x:1\"\n[probe]\neject_after = 0",
+            "[ingress]\nbalance = \"fastest\"\n[[backend]]\naddr = \"x:1\"",
+            "", // no backends at all
+        ] {
+            assert!(ClusterSpec::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn comments_and_strings_interact_correctly() {
+        let spec = ClusterSpec::parse(
+            "[[backend]]\naddr = \"127.0.0.1:7461\" # trailing comment\nmodels = [\"g#n\"]\n",
+        )
+        .unwrap();
+        // A '#' inside a quoted string is content, not a comment.
+        assert_eq!(spec.backends[0].models, vec!["g#n"]);
+    }
+
+    #[test]
+    fn catalog_validation_names_the_offenders() {
+        let spec = ClusterSpec::parse(
+            "[[backend]]\naddr = \"x:1\"\nmodels = [\"gcn\", \"bert\"]\n",
+        )
+        .unwrap();
+        let catalog = vec!["gcn".to_string(), "gat".to_string()];
+        let err = spec.validate_models(&catalog).unwrap_err().to_string();
+        // The unknown list names exactly the offender, not every
+        // assigned model.
+        assert!(err.contains("[\"bert\"]"), "{err}");
+        spec.validate_models(&["gcn".into(), "bert".into()]).unwrap();
+    }
+}

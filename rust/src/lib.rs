@@ -8,7 +8,10 @@
 //!   streaming inference server over raw COO graphs with zero
 //!   preprocessing ([`coordinator`], ingesting through
 //!   [`graph::GraphBatch`]), a wire-level TCP serving front-end with
-//!   an open-loop load generator ([`net`]), a content-addressed model
+//!   an open-loop load generator ([`net`]), a cluster tier fronting N
+//!   backend processes with model-aware routing, health probes, and a
+//!   reconciler ([`ingress`], sharing front-end plumbing through
+//!   [`controlplane`]), a content-addressed model
 //!   registry with live deploys ([`registry`]), a static plan
 //!   analyzer gating every lowering ([`analysis`]), a cycle-level
 //!   simulator of the GenGNN microarchitecture ([`sim`]), an
@@ -29,8 +32,10 @@
 
 pub mod analysis;
 pub mod baselines;
+pub mod controlplane;
 pub mod coordinator;
 pub mod datagen;
+pub mod ingress;
 pub mod dse;
 pub mod graph;
 pub mod models;

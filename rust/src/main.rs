@@ -13,6 +13,14 @@
 //!                       --resident DATASET (cora/citeseer/pubmed)
 //!                       additionally hosts a resident citation graph
 //!                       serving v4 GRAPH_QUERY / GRAPH_MUTATE ops
+//! gengnn ingress        front a replica pool of `gengnn serve`
+//!                       backends behind one address: model-aware
+//!                       routing from a declarative cluster spec
+//!                       (`--spec cluster.toml`), LIST_MODELS health
+//!                       probes with ejection/probation, a node-agent
+//!                       reconciler restarting managed backends, and
+//!                       connection drain on shutdown; --duration S to
+//!                       exit, --listen ADDR overrides the spec
 //! gengnn loadgen        open-loop load generator against a serving
 //!                       front-end: --addr, --rps, --count, model mix,
 //!                       --ttl-ms / --priority-mix QoS profile;
@@ -80,7 +88,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gengnn <serve|loadgen|deploy|models|infer|plan|lint-plan|simulate|\
+        "usage: gengnn <serve|ingress|loadgen|deploy|models|infer|plan|lint-plan|simulate|\
          resources|dse|report-fig7|report-fig8|report-fig9|report-table4|\
          report-table5|selftest> [--flags]"
     );
@@ -89,6 +97,7 @@ fn print_usage() {
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
     match cmd {
         "serve" => cmd_serve(Args::parse(rest, &["reject"])?),
+        "ingress" => cmd_ingress(Args::parse(rest, &[])?),
         "loadgen" => cmd_loadgen(Args::parse(rest, &["diurnal"])?),
         "deploy" => cmd_deploy(Args::parse(rest, &[])?),
         "models" => cmd_models(Args::parse(rest, &["json"])?),
@@ -258,6 +267,68 @@ fn cmd_serve(a: Args) -> Result<()> {
         fmt_secs(wall),
         ok as f64 / wall
     );
+    Ok(())
+}
+
+/// `gengnn ingress --spec cluster.toml` — the cluster tier's front
+/// door. Loads the declarative fleet spec, sanity-checks its model
+/// assignments against the artifacts catalog when one is present,
+/// boots any ingress-managed backends, and proxies v1–v4 client
+/// traffic with model-aware routing, health-probe ejection, and
+/// reconciler-driven restarts (see `docs/CLUSTER.md`).
+fn cmd_ingress(a: Args) -> Result<()> {
+    use gengnn::ingress::{FaultPlan, Ingress, IngressConfig};
+    let spec_path = match (a.positional.first(), a.str_opt("spec")) {
+        (Some(p), _) => p.clone(),
+        (None, Some(s)) => s.to_string(),
+        (None, None) => bail!(
+            "usage: gengnn ingress <cluster.toml> [--listen ADDR] [--duration S] \
+             [--artifacts DIR]"
+        ),
+    };
+    let mut spec = gengnn::ingress::ClusterSpec::load(std::path::Path::new(&spec_path))?;
+    if let Some(listen) = a.str_opt("listen") {
+        spec.listen = listen.to_string();
+    }
+    let duration = a.u64_or("duration", 0)?;
+    // Catch model-name typos at boot when the catalog is on disk; a
+    // spec-only host (no artifacts checkout) still runs — the backends
+    // are the authority on what they actually serve.
+    let artifacts_dir = a
+        .str_opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Artifacts::default_dir);
+    match gengnn::registry::catalog_model_names(&artifacts_dir) {
+        Ok(catalog) => spec.validate_models(&catalog)?,
+        Err(e) => eprintln!("[ingress] model assignments unchecked (no catalog: {e:#})"),
+    }
+    let fault = FaultPlan::from_env()?;
+    if !fault.is_empty() {
+        eprintln!("[ingress] FAULT INJECTION ACTIVE (GENGNN_FAULT_PLAN): {fault:?}");
+    }
+    let backends = spec.backends.len();
+    let balance = spec.balance.as_str();
+    let ingress = Ingress::start(IngressConfig { spec, fault })?;
+    eprintln!(
+        "[ingress] fronting {backends} backend(s) ({balance}) on {} ({}); drive it with \
+         `gengnn loadgen --addr {}`",
+        ingress.local_addr(),
+        if duration == 0 {
+            "until killed".to_string()
+        } else {
+            format!("for {duration}s")
+        },
+        ingress.local_addr(),
+    );
+    if duration == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            eprintln!("{}", ingress.status_report());
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration));
+    let counters = ingress.shutdown();
+    println!("{}", counters.render());
     Ok(())
 }
 

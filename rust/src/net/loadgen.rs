@@ -361,6 +361,17 @@ impl LoadGenReport {
                 p50: self.shed_by_deadline as f64,
                 min: self.shed_by_deadline as f64,
             },
+            // Likewise a count: server-side `Error` answers (e.g. a
+            // backend dying under an ingress mid-request). Zero on a
+            // healthy run; the ingress fault-injection smoke asserts
+            // it goes positive when a backend is killed mid-load.
+            BenchResult {
+                name: "loadgen/failed".to_string(),
+                iters: self.submitted as usize,
+                mean: self.failed as f64,
+                p50: self.failed as f64,
+                min: self.failed as f64,
+            },
         ];
         // Mixed-scenario series (counts, like shed_by_deadline):
         // exported only when resident traffic ran, so molecular-only
@@ -792,10 +803,14 @@ mod tests {
         assert!(text.contains("p99"), "{text}");
         assert!(text.contains("gcn"), "{text}");
         let results = r.to_bench_results();
-        assert_eq!(results.len(), 5);
+        assert_eq!(results.len(), 6);
         assert!(
             results.iter().any(|b| b.name == "loadgen/shed_by_deadline"),
             "deadline shedding must stay observable in the bench export"
+        );
+        assert!(
+            results.iter().any(|b| b.name == "loadgen/failed"),
+            "server-side failures must stay observable in the bench export"
         );
         // The snapshot invariants check_bench_schema.py enforces.
         for b in &results {
@@ -811,7 +826,7 @@ mod tests {
         let json = crate::util::bench::results_to_json("loadgen", &results);
         let v = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "loadgen");
-        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 6);
         // A run with no completions must export nothing, not NaNs.
         let empty = LoadGenReport {
             completed: 0,

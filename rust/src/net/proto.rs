@@ -91,36 +91,23 @@ use anyhow::{bail, Result};
 use crate::coordinator::Priority;
 use crate::graph::CooGraph;
 
-/// The QoS protocol version; inference frames are still encoded at
-/// this version by default (v3 changed nothing about inference).
-pub const PROTO_VERSION: u8 = 2;
+// The version table and negotiation rule live in the shared
+// control-plane module (the ingress proxy needs them without this
+// codec); re-exported here so wire-level callers keep one import path.
+pub use crate::controlplane::version::{
+    known_version, PROTO_V1, PROTO_V3, PROTO_V4, PROTO_VERSION,
+};
 
-/// The legacy pre-QoS version; still accepted by the decoder.
-pub const PROTO_V1: u8 = 1;
-
-/// The control-plane version: inference bodies identical to v2, plus
-/// the control frame kinds carrying registry [`Op`]s.
-pub const PROTO_V3: u8 = 3;
-
-/// The resident-graph version: inference and control bodies identical
-/// to v3, plus the resident frame kinds (`GRAPH_QUERY` /
-/// `GRAPH_MUTATE`) against a server-hosted graph.
-pub const PROTO_V4: u8 = 4;
-
-/// Frame kind bytes.
-const KIND_REQUEST: u8 = 1;
-const KIND_RESPONSE: u8 = 2;
-const KIND_CONTROL: u8 = 3;
-const KIND_CONTROL_RESP: u8 = 4;
-const KIND_GRAPH_QUERY: u8 = 5;
-const KIND_GRAPH_QUERY_RESP: u8 = 6;
-const KIND_GRAPH_MUTATE: u8 = 7;
-const KIND_GRAPH_MUTATE_RESP: u8 = 8;
-
-/// Is `version` one the decoder understands?
-fn known_version(version: u8) -> bool {
-    version == PROTO_V1 || version == PROTO_VERSION || version == PROTO_V3 || version == PROTO_V4
-}
+/// Frame kind bytes. Public so the ingress proxy can route on the kind
+/// without fully decoding the frame (see [`peek_frame`]).
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+pub const KIND_CONTROL: u8 = 3;
+pub const KIND_CONTROL_RESP: u8 = 4;
+pub const KIND_GRAPH_QUERY: u8 = 5;
+pub const KIND_GRAPH_QUERY_RESP: u8 = 6;
+pub const KIND_GRAPH_MUTATE: u8 = 7;
+pub const KIND_GRAPH_MUTATE_RESP: u8 = 8;
 
 /// Refuse frames above this payload size (a corrupt or hostile length
 /// prefix must not allocate unbounded memory).
@@ -267,7 +254,9 @@ impl Op {
         }
     }
 
-    fn from_byte(b: u8) -> Result<Op> {
+    /// Decode an op byte (public so the ingress can answer a control
+    /// frame it peeked but never forwarded, echoing the caller's op).
+    pub fn from_byte(b: u8) -> Result<Op> {
         Ok(match b {
             1 => Op::LoadModel,
             2 => Op::UnloadModel,
@@ -1064,6 +1053,125 @@ pub fn salvage_request_id(payload: &[u8]) -> Option<u64> {
     Some(u64::from_le_bytes(arr8(&body[..8])))
 }
 
+/// The routing-relevant envelope of a client→server payload, decoded
+/// without materializing the graph body: what the ingress proxy needs
+/// to pick a backend (model, kind) and to install a response route
+/// (id, version), nothing more.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FramePeek {
+    pub version: u8,
+    /// One of the client→server kinds: [`KIND_REQUEST`],
+    /// [`KIND_CONTROL`], [`KIND_GRAPH_QUERY`], [`KIND_GRAPH_MUTATE`].
+    pub kind: u8,
+    /// Caller-chosen correlation id (the leading u64 of every body).
+    pub id: u64,
+    /// Model an inference request targets; `None` for control and
+    /// resident frames, which route model-free.
+    pub model: Option<String>,
+    /// Control op byte ([`KIND_CONTROL`] frames only, 0 otherwise).
+    pub ctrl_op: u8,
+}
+
+/// Peek a payload's routing envelope, verifying version, checksum, and
+/// that the kind is a client→server one. Validation mirrors
+/// [`decode_frame`]'s envelope checks exactly, so every frame the
+/// ingress forwards is one a backend will at least answer under the
+/// (rewritten) caller id — deeper body corruption still decodes to a
+/// canonical backend-side `BadRequest`.
+pub fn peek_frame(payload: &[u8]) -> Result<FramePeek> {
+    if payload.len() < HEADER_BYTES + 8 {
+        bail!("frame too short to route ({} bytes)", payload.len());
+    }
+    let version = payload[0];
+    if !known_version(version) {
+        bail!(
+            "unsupported protocol version {version} (expected {PROTO_V1}, {PROTO_VERSION}, {PROTO_V3}, or {PROTO_V4})"
+        );
+    }
+    let kind = payload[1];
+    let want = u32::from_le_bytes(arr4(&payload[2..6]));
+    let body = &payload[HEADER_BYTES..];
+    let got = checksum(body);
+    if want != got {
+        bail!("checksum mismatch: frame says {want:#010x}, body hashes to {got:#010x}");
+    }
+    let mut c = Cursor { b: body, i: 0 };
+    let id = c.u64()?;
+    let (model, ctrl_op) = match kind {
+        KIND_REQUEST => {
+            if version >= PROTO_VERSION {
+                c.take(5)?; // ttl_ms + priority, irrelevant for routing
+            }
+            let model_len = c.u16()? as usize;
+            (Some(c.utf8(model_len)?), 0)
+        }
+        KIND_CONTROL => (None, c.u8()?),
+        KIND_GRAPH_QUERY | KIND_GRAPH_MUTATE => (None, 0),
+        k => bail!("frame kind byte {k} is not a client request"),
+    };
+    Ok(FramePeek {
+        version,
+        kind,
+        id,
+        model,
+        ctrl_op,
+    })
+}
+
+/// Rewrite the correlation id of a sealed payload in place, fixing the
+/// checksum. Every frame kind's body leads with the u64 id, so the
+/// ingress can stamp its own id onto a proxied frame (and stamp the
+/// caller's id back onto the relayed response) while leaving every
+/// other byte untouched — the mechanism behind the fleet-scope
+/// bit-exactness contract (`docs/CLUSTER.md`). Because the checksum is
+/// recomputed over the whole body, only call this on payloads whose
+/// checksum already verified (via [`peek_frame`] or [`decode_frame`]);
+/// resealing an unverified body would mask transit corruption.
+pub fn rewrite_frame_id(payload: &mut [u8], id: u64) -> Result<()> {
+    if payload.len() < HEADER_BYTES + 8 {
+        bail!("frame too short to carry an id ({} bytes)", payload.len());
+    }
+    payload[HEADER_BYTES..HEADER_BYTES + 8].copy_from_slice(&id.to_le_bytes());
+    let sum = checksum(&payload[HEADER_BYTES..]);
+    payload[2..6].copy_from_slice(&sum.to_le_bytes());
+    Ok(())
+}
+
+/// The correlation id of a sealed payload (the leading u64 of every
+/// body), with no validation beyond length — how the ingress demuxes
+/// backend responses back onto client routes. Returns `None` for
+/// payloads too short to carry an id.
+pub fn frame_id(payload: &[u8]) -> Option<u64> {
+    if payload.len() < HEADER_BYTES + 8 {
+        return None;
+    }
+    Some(u64::from_le_bytes(arr8(
+        &payload[HEADER_BYTES..HEADER_BYTES + 8],
+    )))
+}
+
+/// Fault-injection primitive: flip a sealed v2+ inference request's
+/// QoS priority byte to an invalid value and re-seal the checksum.
+/// The checksum stays valid, so the receiving backend's id salvage
+/// works and its `BadRequest` answer comes back under the frame's own
+/// correlation id — the corruption surfaces as a reconciled `failed`
+/// outcome, never as a lost request. Returns `false` (payload
+/// untouched) when the frame is not a v2+ inference request.
+pub fn corrupt_request_priority(payload: &mut [u8]) -> bool {
+    // Body layout: id u64, ttl u32, priority u8 — offset 12.
+    if payload.len() < HEADER_BYTES + 13
+        || payload[1] != KIND_REQUEST
+        || payload[0] < PROTO_VERSION
+        || !known_version(payload[0])
+    {
+        return false;
+    }
+    payload[HEADER_BYTES + 12] = 0xFF;
+    let sum = checksum(&payload[HEADER_BYTES..]);
+    payload[2..6].copy_from_slice(&sum.to_le_bytes());
+    true
+}
+
 /// Read one frame's payload from a stream. Returns `Ok(None)` on a
 /// clean EOF at a frame boundary (the peer closed the connection);
 /// mid-frame EOF and oversized lengths are errors.
@@ -1597,5 +1705,110 @@ mod tests {
         };
         assert_eq!((r1.id, r2.id), (1, 2));
         assert_eq!(r2.status, WireStatus::Rejected);
+    }
+
+    fn payload_of(frame: &[u8]) -> Vec<u8> {
+        read_frame(&mut std::io::Cursor::new(frame)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn peek_reads_the_routing_envelope_of_every_client_kind() {
+        let g = graph();
+        let v2 = payload_of(&encode_request_parts(9, "gat", WireQos::new(5, Priority::Low), &g).unwrap());
+        let p = peek_frame(&v2).unwrap();
+        assert_eq!(
+            (p.version, p.kind, p.id, p.model.as_deref(), p.ctrl_op),
+            (PROTO_VERSION, KIND_REQUEST, 9, Some("gat"), 0)
+        );
+
+        let v1 = payload_of(&encode_request_parts_v1(10, "gcn", &g).unwrap());
+        let p = peek_frame(&v1).unwrap();
+        assert_eq!((p.version, p.id, p.model.as_deref()), (PROTO_V1, 10, Some("gcn")));
+
+        let ctl = payload_of(
+            &encode_control(&WireControl {
+                id: 11,
+                op: Op::ListModels,
+                model: String::new(),
+                digest: String::new(),
+                version: 0,
+            })
+            .unwrap(),
+        );
+        let p = peek_frame(&ctl).unwrap();
+        assert_eq!((p.kind, p.id, p.model, p.ctrl_op), (KIND_CONTROL, 11, None, 4));
+
+        let q = payload_of(
+            &encode_graph_query(&WireGraphQuery {
+                id: 12,
+                qos: WireQos::default(),
+                hops: 2,
+                fanout: 0,
+                seeds: vec![0, 1],
+            })
+            .unwrap(),
+        );
+        let p = peek_frame(&q).unwrap();
+        assert_eq!((p.kind, p.id, p.model), (KIND_GRAPH_QUERY, 12, None));
+
+        // Server→client kinds and corrupt envelopes refuse to peek.
+        let resp = payload_of(&encode_response(&WireResponse::ok(1, "gcn", vec![1.0])).unwrap());
+        assert!(peek_frame(&resp).is_err());
+        let mut bad = v2.clone();
+        bad[7] ^= 1; // body byte flip → checksum mismatch
+        assert!(peek_frame(&bad).is_err());
+        bad = v2.clone();
+        bad[0] = 77; // unknown version
+        assert!(peek_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn rewrite_frame_id_changes_only_the_id_and_checksum_bytes() {
+        let g = graph();
+        let original =
+            payload_of(&encode_request_parts(0x1111, "dgn", WireQos::new(9, Priority::High), &g).unwrap());
+        let mut rewritten = original.clone();
+        rewrite_frame_id(&mut rewritten, 0x2222).unwrap();
+        // Still a fully valid frame, now under the new id.
+        match decode_frame(&rewritten).unwrap() {
+            WireFrame::Request(r) => assert_eq!(r.id, 0x2222),
+            other => panic!("decoded {other:?}"),
+        }
+        assert_eq!(peek_frame(&rewritten).unwrap().id, 0x2222);
+        // Byte-for-byte: only the checksum ([2..6]) and id ([6..14])
+        // regions may differ — the bit-exactness guarantee the ingress
+        // relies on when proxying.
+        assert_eq!(original.len(), rewritten.len());
+        for (i, (a, b)) in original.iter().zip(&rewritten).enumerate() {
+            if !(2..14).contains(&i) {
+                assert_eq!(a, b, "byte {i} changed");
+            }
+        }
+        // Rewriting back restores the exact original bytes.
+        rewrite_frame_id(&mut rewritten, 0x1111).unwrap();
+        assert_eq!(original, rewritten);
+        // frame_id reads without validating.
+        assert_eq!(frame_id(&original), Some(0x1111));
+        assert_eq!(frame_id(&[0u8; 5]), None);
+    }
+
+    #[test]
+    fn corrupted_priority_fails_decode_but_salvages_the_id() {
+        let g = graph();
+        let mut payload =
+            payload_of(&encode_request_parts(77, "gin", WireQos::new(0, Priority::Normal), &g).unwrap());
+        assert!(corrupt_request_priority(&mut payload));
+        // The checksum was re-sealed: full decode fails on the bad
+        // priority byte, but the envelope is trustworthy enough to
+        // salvage the caller's id — so a backend answers `BadRequest`
+        // under id 77, and an ingress can still route the answer.
+        assert!(decode_frame(&payload).is_err());
+        assert_eq!(salvage_request_id(&payload), Some(77));
+
+        // v1 frames carry no priority byte; the fault refuses them.
+        let mut v1 = payload_of(&encode_request_parts_v1(5, "gin", &g).unwrap());
+        let before = v1.clone();
+        assert!(!corrupt_request_priority(&mut v1));
+        assert_eq!(v1, before);
     }
 }

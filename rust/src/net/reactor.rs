@@ -53,7 +53,7 @@ use crate::resident::{extract_khop, QueryPending, ResidentState, RESIDENT_LAYERS
 
 use super::proto::{
     self, Op, WireControlResp, WireFrame, WireGraphMutateResp, WireGraphQueryResp, WireResponse,
-    WireStatus, PROTO_V1, PROTO_V3, PROTO_V4, PROTO_VERSION,
+    WireStatus, PROTO_V4, PROTO_VERSION,
 };
 
 /// Poller token of the reactor's waker; connection tokens start above.
@@ -528,12 +528,9 @@ impl Reactor {
     fn handle_payload(&mut self, token: u64, conn: &mut Conn, payload: &[u8]) {
         // Responses echo the version of the frame they answer; frames
         // whose version byte is itself unknown get the current one.
-        let version = match payload.first() {
-            Some(&PROTO_V1) => PROTO_V1,
-            Some(&PROTO_V3) => PROTO_V3,
-            Some(&PROTO_V4) => PROTO_V4,
-            _ => PROTO_VERSION,
-        };
+        // (The rule is shared with the ingress proxy, which must
+        // self-answer in the same version a backend would.)
+        let version = crate::controlplane::response_version(payload.first().copied());
         match proto::decode_frame(payload) {
             Ok(WireFrame::Request(req)) => self.admit(token, conn, req, version),
             Ok(WireFrame::Control(ctrl)) => self.handle_control(conn, ctrl),

@@ -597,6 +597,18 @@ pub fn local_digest(dir: &Path, model: &str) -> Result<String> {
     Ok(record.digest)
 }
 
+/// Every model name the artifacts catalog carries (client-side helper
+/// for the ingress: validate a cluster spec's model assignments
+/// against the catalog without opening a full registry).
+pub fn catalog_model_names(dir: &Path) -> Result<Vec<String>> {
+    let artifacts = Artifacts::load(dir)?;
+    Ok(artifacts
+        .model_names()
+        .iter()
+        .map(|s| s.to_string())
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

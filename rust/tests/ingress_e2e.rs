@@ -1,0 +1,442 @@
+//! End-to-end tests of the cluster tier: a real `Ingress` fronting
+//! real `NetServer` backends over loopback TCP.
+//!
+//! The two headline contracts:
+//!
+//! * **Fleet-scope bit-exactness** — an identical deterministic frame
+//!   stream pushed through a 1-backend fleet and a 3-backend fleet
+//!   produces byte-identical response payloads for every manifest
+//!   model (keyed by request id), including v1 clients, a v3 control
+//!   op, and v4 resident ops (rejected identically by non-resident
+//!   backends). The ingress rewrites nothing but the correlation id.
+//! * **Fault accounting** — killing a managed backend mid-load leaves
+//!   the load generator's ledger balanced
+//!   (`submitted = completed + rejected + failed`, `lost == 0`), the
+//!   dead backend ejected, then restarted by the reconciler and walked
+//!   back through probation to Healthy.
+//!
+//! CI runs this file in release mode as well
+//! (`cargo test --release --test ingress_e2e`).
+//!
+//! Runs against the checked-in artifact fixtures at `artifacts/`; if
+//! that directory has been stripped, artifact-gated tests skip with a
+//! notice.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use gengnn::coordinator::ServerConfig;
+use gengnn::datagen::{random_graph, RandomGraphConfig};
+use gengnn::ingress::{
+    Balance, BackendSpec, ClusterSpec, FaultPlan, HealthState, Ingress, IngressConfig,
+    ProbeKnobs, ReconcileKnobs,
+};
+use gengnn::net::proto::{
+    self, Op, WireControl, WireFrame, WireGraphMutate, WireGraphQuery, WireQos,
+};
+use gengnn::net::{loadgen, LoadGenConfig, NetServer, NetServerConfig, WireStatus};
+use gengnn::util::rng::Rng;
+
+mod common;
+use common::{artifacts_or_skip, fixture_graph};
+
+/// An in-process backend serving every manifest model.
+fn net_backend() -> NetServer {
+    NetServer::start(NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        reactors: 1,
+        server: ServerConfig::builder()
+            .executor_lanes(1)
+            .build()
+            .expect("server config"),
+        resident: None,
+    })
+    .expect("backend start")
+}
+
+/// A test-speed cluster spec: every listed backend is an external
+/// catch-all, probes run fast, probation is short.
+fn spec_for(addrs: &[String]) -> ClusterSpec {
+    ClusterSpec {
+        listen: "127.0.0.1:0".to_string(),
+        balance: Balance::RoundRobin,
+        drain_timeout: Duration::from_secs(10),
+        probe: ProbeKnobs {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            eject_after: 2,
+            probation_successes: 2,
+        },
+        reconcile: ReconcileKnobs {
+            restart_after: Duration::from_millis(300),
+            max_restarts: 5,
+        },
+        backends: addrs
+            .iter()
+            .map(|a| BackendSpec {
+                addr: a.clone(),
+                models: Vec::new(),
+                command: Vec::new(),
+            })
+            .collect(),
+    }
+}
+
+fn start_ingress(spec: ClusterSpec, fault: FaultPlan) -> Ingress {
+    Ingress::start(IngressConfig { spec, fault }).expect("ingress start")
+}
+
+fn connect(ingress: &Ingress) -> TcpStream {
+    let stream = TcpStream::connect(ingress.local_addr()).expect("connect to ingress");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("read timeout");
+    stream
+}
+
+/// Bind-then-drop a loopback listener to reserve a port for a managed
+/// child backend.
+fn reserve_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("reserve port")
+        .local_addr()
+        .expect("local addr")
+        .port()
+}
+
+/// Push `frames` through a fresh fleet of `n` backends behind a fresh
+/// ingress and collect every response payload keyed by correlation id.
+fn run_fleet(frames: &[Vec<u8>], n: usize) -> BTreeMap<u64, Vec<u8>> {
+    let backends: Vec<NetServer> = (0..n).map(|_| net_backend()).collect();
+    let addrs: Vec<String> = backends.iter().map(|b| b.local_addr().to_string()).collect();
+    let ingress = start_ingress(spec_for(&addrs), FaultPlan::default());
+    let mut stream = connect(&ingress);
+    for frame in frames {
+        stream.write_all(frame).expect("send frame");
+    }
+    let mut got = BTreeMap::new();
+    for _ in 0..frames.len() {
+        let payload = proto::read_frame(&mut stream)
+            .expect("read response")
+            .expect("EOF before every response arrived");
+        let id = proto::frame_id(&payload).expect("response id");
+        assert!(got.insert(id, payload).is_none(), "duplicate response id {id}");
+    }
+    drop(stream);
+    ingress.shutdown();
+    for b in backends {
+        b.shutdown();
+    }
+    got
+}
+
+#[test]
+fn three_backend_fleet_is_byte_identical_to_a_single_backend() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    // One deterministic frame per manifest model (v2), plus a v1
+    // client, a v3 control op, and v4 resident ops that a
+    // non-resident backend rejects — the rejection bytes must match
+    // across fleet sizes too.
+    let mut frames = Vec::new();
+    let mut next_id = 1u64;
+    for (idx, meta) in artifacts.models.iter().enumerate() {
+        let mut rng = Rng::new(0x16E55 + idx as u64);
+        let g = fixture_graph(meta, &mut rng);
+        frames.push(
+            proto::encode_request_parts(next_id, &meta.name, WireQos::default(), &g)
+                .expect("v2 frame"),
+        );
+        next_id += 1;
+        // A legacy v1 client for the same model: the response must
+        // come back v1-stamped, identically in both fleets.
+        frames.push(
+            proto::encode_request_parts_v1(next_id, &meta.name, &g).expect("v1 frame"),
+        );
+        next_id += 1;
+    }
+    frames.push(
+        proto::encode_control(&WireControl {
+            id: next_id,
+            op: Op::ListModels,
+            model: String::new(),
+            digest: String::new(),
+            version: 0,
+        })
+        .expect("control frame"),
+    );
+    next_id += 1;
+    frames.push(
+        proto::encode_graph_query(&WireGraphQuery {
+            id: next_id,
+            qos: WireQos::default(),
+            hops: 2,
+            fanout: 0,
+            seeds: vec![0, 1],
+        })
+        .expect("query frame"),
+    );
+    next_id += 1;
+    frames.push(
+        proto::encode_graph_mutate(&WireGraphMutate {
+            id: next_id,
+            ops: Vec::new(),
+        })
+        .expect("mutate frame"),
+    );
+
+    let single = run_fleet(&frames, 1);
+    let triple = run_fleet(&frames, 3);
+    assert_eq!(
+        single.keys().collect::<Vec<_>>(),
+        triple.keys().collect::<Vec<_>>(),
+        "both fleets must answer exactly the same ids"
+    );
+    for (id, bytes) in &single {
+        assert_eq!(
+            bytes, &triple[id],
+            "response {id}: bytes differ between 1-backend and 3-backend fleets"
+        );
+    }
+}
+
+#[test]
+fn corrupted_frame_fails_alone_and_under_its_own_id() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let meta = &artifacts.models[0];
+    let mut rng = Rng::new(0xC0);
+    let g = fixture_graph(meta, &mut rng);
+    let backend = net_backend();
+    let spec = spec_for(&[backend.local_addr().to_string()]);
+    let fault = FaultPlan::parse("corrupt-frame=2").expect("plan");
+    let ingress = start_ingress(spec, fault);
+    let mut stream = connect(&ingress);
+    for id in 1..=3u64 {
+        let frame = proto::encode_request_parts(id, &meta.name, WireQos::default(), &g)
+            .expect("frame");
+        stream.write_all(&frame).expect("send");
+    }
+    let mut statuses = BTreeMap::new();
+    for _ in 0..3 {
+        let payload = proto::read_frame(&mut stream)
+            .expect("read")
+            .expect("EOF before all responses");
+        let WireFrame::Response(resp) = proto::decode_frame(&payload).expect("decode") else {
+            panic!("not an inference response");
+        };
+        statuses.insert(resp.id, resp.status);
+    }
+    // The corrupted frame (the 2nd) comes back BadRequest under the
+    // caller's own id — the backend salvaged the rewritten id from the
+    // re-sealed envelope. Its neighbors are untouched.
+    assert_eq!(statuses[&1], WireStatus::Ok);
+    assert_eq!(statuses[&2], WireStatus::BadRequest);
+    assert_eq!(statuses[&3], WireStatus::Ok);
+    let counters = ingress.shutdown();
+    assert_eq!(counters.frames_corrupted.load(Ordering::Relaxed), 1);
+    backend.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_before_closing() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    let meta = &artifacts.models[0];
+    let mut rng = Rng::new(0xD8A1);
+    let g = fixture_graph(meta, &mut rng);
+    let backend = net_backend();
+    let spec = spec_for(&[backend.local_addr().to_string()]);
+    let ingress = start_ingress(spec, FaultPlan::default());
+    let mut stream = connect(&ingress);
+    for id in 1..=5u64 {
+        let frame = proto::encode_request_parts(id, &meta.name, WireQos::default(), &g)
+            .expect("frame");
+        stream.write_all(&frame).expect("send");
+    }
+    for _ in 0..5 {
+        let payload = proto::read_frame(&mut stream)
+            .expect("read")
+            .expect("EOF before all responses");
+        let WireFrame::Response(resp) = proto::decode_frame(&payload).expect("decode") else {
+            panic!("not an inference response");
+        };
+        assert_eq!(resp.status, WireStatus::Ok, "{}", resp.error);
+    }
+    assert_eq!(ingress.in_flight(), 0, "every proxied frame must settle");
+    let counters = ingress.shutdown();
+    assert_eq!(counters.responses_relayed.load(Ordering::Relaxed), 5);
+    assert_eq!(counters.responses_dropped.load(Ordering::Relaxed), 0);
+    assert_eq!(counters.requests_in_flight.load(Ordering::Relaxed), 0);
+    backend.shutdown();
+}
+
+#[test]
+fn dead_fleet_rejects_and_garbage_is_answered_not_leaked() {
+    // No artifacts needed: nothing ever reaches a backend.
+    let dead = format!("127.0.0.1:{}", reserve_port());
+    let mut spec = spec_for(&[dead]);
+    spec.probe.interval = Duration::from_millis(50);
+    spec.probe.eject_after = 1;
+    let ingress = start_ingress(spec, FaultPlan::default());
+    let mut stream = connect(&ingress);
+
+    // A well-formed request for a fleet whose only backend is dark:
+    // rejected by the ingress (dial failure or post-ejection refusal —
+    // never a hang, never a dropped connection).
+    let g = random_graph(
+        &mut Rng::new(1),
+        &RandomGraphConfig {
+            nodes: 6,
+            avg_degree: 2.0,
+            high_degree_fraction: 0.0,
+            hub_multiplier: 1.0,
+            f_node: 4,
+        },
+    );
+    let frame =
+        proto::encode_request_parts(1, "gcn", WireQos::default(), &g).expect("frame");
+    stream.write_all(&frame).expect("send");
+    let payload = proto::read_frame(&mut stream).expect("read").expect("answered");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).expect("decode") else {
+        panic!("not an inference response");
+    };
+    assert_eq!(resp.id, 1);
+    assert_eq!(resp.status, WireStatus::Rejected, "{}", resp.error);
+
+    // Garbage framing: a syntactically valid length prefix around an
+    // unparseable payload must come back BadRequest under the bad-
+    // frame id, and the connection must survive.
+    let junk = [7u8; 16];
+    stream
+        .write_all(&(junk.len() as u32).to_le_bytes())
+        .and_then(|_| stream.write_all(&junk))
+        .expect("send junk");
+    let payload = proto::read_frame(&mut stream).expect("read").expect("answered");
+    let WireFrame::Response(resp) = proto::decode_frame(&payload).expect("decode") else {
+        panic!("not an inference response");
+    };
+    assert_eq!(resp.id, proto::BAD_FRAME_ID);
+    assert_eq!(resp.status, WireStatus::BadRequest);
+
+    // The probes have had ample time to convict the dark backend.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while ingress.backend_health(0) != HealthState::Ejected && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(ingress.backend_health(0), HealthState::Ejected);
+    let counters = ingress.shutdown();
+    assert!(counters.decode_errors.load(Ordering::Relaxed) >= 1);
+    assert!(counters.ejections.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn killed_backend_is_ejected_restarted_and_rejoins_with_books_balanced() {
+    let Some(artifacts) = artifacts_or_skip() else {
+        return;
+    };
+    // Backend 0: external, in-process. Backend 1: a managed child of
+    // the real binary, spawned and restarted by the ingress.
+    let b0 = net_backend();
+    let child_addr = format!("127.0.0.1:{}", reserve_port());
+    let exe = env!("CARGO_BIN_EXE_gengnn").to_string();
+    let mut spec = spec_for(&[b0.local_addr().to_string(), child_addr.clone()]);
+    spec.backends[1].command = vec![
+        exe,
+        "serve".to_string(),
+        "--listen".to_string(),
+        child_addr.clone(),
+        "--models".to_string(),
+        "gcn".to_string(),
+        "--lanes".to_string(),
+        "1".to_string(),
+        "--reactors".to_string(),
+        "1".to_string(),
+    ];
+    let fault = FaultPlan::parse("kill-backend=1@30").expect("plan");
+    let ingress = start_ingress(spec, fault);
+
+    // Wait for the managed child to finish compiling and open its
+    // listener before generating load.
+    let boot_deadline = Instant::now() + Duration::from_secs(120);
+    while TcpStream::connect(&child_addr).is_err() {
+        assert!(
+            Instant::now() < boot_deadline,
+            "managed backend never opened {child_addr}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Open-loop load across the crash. The 30th proxied frame SIGKILLs
+    // the managed child mid-run: in-flight frames on its link come
+    // back `Error` (loadgen: failed), frames routed to it before
+    // ejection land `Rejected`, and the books must still balance.
+    let report = loadgen::run(&LoadGenConfig {
+        addr: ingress.local_addr().to_string(),
+        rps: 400.0,
+        count: 200,
+        connections: 2,
+        models: vec!["gcn".to_string()],
+        seed: 7,
+        graph_pool: 8,
+        drain_timeout: Duration::from_secs(30),
+        ..LoadGenConfig::default()
+    })
+    .expect("loadgen run");
+    assert!(
+        report.reconciles(),
+        "accounting must balance across the crash: {} submitted vs {} completed + {} \
+         rejected + {} failed + {} lost",
+        report.submitted,
+        report.completed,
+        report.rejected,
+        report.failed,
+        report.lost
+    );
+    assert_eq!(report.lost, 0);
+    assert!(report.completed > 0, "the surviving backend must carry the load");
+    assert!(
+        report.failed + report.rejected > 0,
+        "a mid-load SIGKILL must surface in the ledger (failed {} rejected {})",
+        report.failed,
+        report.rejected
+    );
+
+    // Recovery: the reconciler respawns the child after its damper;
+    // probes walk it through probation back to Healthy.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while ingress.backend_health(1) != HealthState::Healthy && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert_eq!(
+        ingress.backend_health(1),
+        HealthState::Healthy,
+        "killed backend never rejoined; status:\n{}",
+        ingress.status_report()
+    );
+    assert!(ingress.backend_restarts(1) >= 1, "the reconciler must have respawned it");
+    let counters = ingress.counters();
+    assert!(counters.ejections.load(Ordering::Relaxed) >= 1);
+    assert!(counters.restarts.load(Ordering::Relaxed) >= 1);
+    assert!(counters.recoveries.load(Ordering::Relaxed) >= 1);
+
+    // The rejoined fleet serves: round-robin over both backends, all Ok.
+    let client = gengnn::net::NetClient::connect(ingress.local_addr().to_string(), 1)
+        .expect("client connect");
+    let mut rng = Rng::new(0xF1EE7);
+    let meta = artifacts.model("gcn").expect("gcn meta");
+    for i in 0..4 {
+        let g = fixture_graph(meta, &mut rng);
+        let resp = client.infer("gcn", &g).expect("post-recovery infer");
+        assert_eq!(resp.status, WireStatus::Ok, "[{i}] {}", resp.error);
+    }
+    drop(client);
+    ingress.shutdown();
+    b0.shutdown();
+}

@@ -1,0 +1,293 @@
+//! Property and table tests for the ingress routing layer — no
+//! sockets, no artifacts, no threads. The router and the probe state
+//! machine are pure (`rust/src/ingress/router.rs`, `health.rs`), so
+//! their fleet-safety invariants can be checked over thousands of
+//! randomized churn scenarios:
+//!
+//! * no request is ever routed to a non-routable (ejected/probation)
+//!   backend, under any health churn;
+//! * every routed request lands on a backend advertising its model,
+//!   whenever the fleet partitions models without catch-alls;
+//! * the probe state machine follows the pinned
+//!   healthy→ejected→probation→healthy ladder for a table of probe
+//!   outcome sequences, including relapse and forced ejection.
+
+use gengnn::ingress::{Balance, BackendSpec, HealthState, ProbeTracker, Router, Transition};
+use gengnn::prop_assert;
+use gengnn::util::proptest::forall;
+use gengnn::util::rng::Rng;
+
+const MODEL_POOL: &[&str] = &["gcn", "gat", "gin", "dgn", "pna"];
+
+/// A random fleet: 2–6 backends, each either a catch-all (when
+/// `allow_catch_all`) or assigned a random non-empty model subset.
+fn random_fleet(rng: &mut Rng, allow_catch_all: bool) -> Vec<BackendSpec> {
+    let n = rng.range(2, 7);
+    (0..n)
+        .map(|i| {
+            let models = if allow_catch_all && rng.chance(0.25) {
+                Vec::new()
+            } else {
+                let k = rng.range(1, MODEL_POOL.len() + 1);
+                let mut pool: Vec<String> =
+                    MODEL_POOL.iter().map(|m| m.to_string()).collect();
+                rng.shuffle(&mut pool);
+                pool.truncate(k);
+                pool
+            };
+            BackendSpec {
+                addr: format!("127.0.0.1:{}", 7000 + i),
+                models,
+                command: Vec::new(),
+            }
+        })
+        .collect()
+}
+
+fn random_balance(rng: &mut Rng) -> Balance {
+    if rng.chance(0.5) {
+        Balance::RoundRobin
+    } else {
+        Balance::LeastInFlight
+    }
+}
+
+#[test]
+fn no_request_ever_routes_to_an_unroutable_backend() {
+    forall("route-respects-health", 400, 0x1A6E, |rng| {
+        let fleet = random_fleet(rng, true);
+        let router = Router::new(&fleet, random_balance(rng));
+        // Churn: every step rerolls health and routes a few frames.
+        for _ in 0..16 {
+            let routable: Vec<bool> = fleet.iter().map(|_| rng.chance(0.6)).collect();
+            let in_flight: Vec<u64> = fleet.iter().map(|_| rng.below(20) as u64).collect();
+            for _ in 0..4 {
+                let model = if rng.chance(0.2) {
+                    None // control / resident frame: model-free
+                } else {
+                    Some(*rng.choice(MODEL_POOL))
+                };
+                match router.route(model, &routable, &in_flight) {
+                    Some(i) => {
+                        prop_assert!(
+                            routable[i],
+                            "routed model {model:?} to unroutable backend {i} \
+                             (routable {routable:?})"
+                        );
+                    }
+                    None => {
+                        // Refusal is only legal when no routable
+                        // candidate exists for this frame.
+                        let candidates: Vec<usize> = match model {
+                            Some(m) => (0..fleet.len())
+                                .filter(|&i| fleet[i].advertises(m))
+                                .collect(),
+                            None => (0..fleet.len()).collect(),
+                        };
+                        prop_assert!(
+                            candidates.iter().all(|&i| !routable[i]),
+                            "refused model {model:?} with routable candidates \
+                             {candidates:?} (routable {routable:?})"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partitioned_fleets_route_every_admitted_request_to_an_advertiser() {
+    forall("route-respects-model-sets", 400, 0xCAFE, |rng| {
+        // No catch-alls: every backend has an explicit assignment, so
+        // an admitted frame must land on a backend advertising its
+        // model (the unknown-model fallback cannot trigger for pool
+        // models some backend serves).
+        let fleet = random_fleet(rng, false);
+        let router = Router::new(&fleet, random_balance(rng));
+        for _ in 0..24 {
+            let routable: Vec<bool> = fleet.iter().map(|_| rng.chance(0.7)).collect();
+            let in_flight: Vec<u64> = fleet.iter().map(|_| rng.below(10) as u64).collect();
+            let model = *rng.choice(MODEL_POOL);
+            let served = (0..fleet.len()).any(|i| fleet[i].advertises(model));
+            if let Some(i) = router.route(Some(model), &routable, &in_flight) {
+                prop_assert!(routable[i], "unroutable backend {i} chosen");
+                if served {
+                    prop_assert!(
+                        fleet[i].advertises(model),
+                        "model {model:?} routed to backend {i} ({:?}), which does \
+                         not advertise it",
+                        fleet[i].models
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn round_robin_is_fair_across_a_static_healthy_set() {
+    forall("round-robin-fairness", 100, 0xFA17, |rng| {
+        let fleet = random_fleet(rng, true);
+        let router = Router::new(&fleet, Balance::RoundRobin);
+        let routable = vec![true; fleet.len()];
+        let in_flight = vec![0u64; fleet.len()];
+        // Model-free frames see every backend; K full turns of the
+        // rotation must hit each backend exactly K times.
+        let turns = rng.range(2, 6);
+        let mut hits = vec![0usize; fleet.len()];
+        for _ in 0..turns * fleet.len() {
+            let i = router
+                .route(None, &routable, &in_flight)
+                .ok_or_else(|| "refused with a fully healthy fleet".to_string())?;
+            hits[i] += 1;
+        }
+        prop_assert!(
+            hits.iter().all(|&h| h == turns),
+            "unfair rotation: {hits:?} over {turns} turns"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn least_in_flight_keeps_load_balanced_as_it_assigns() {
+    forall("least-in-flight-balance", 100, 0x10AD, |rng| {
+        let fleet = random_fleet(rng, true);
+        let router = Router::new(&fleet, Balance::LeastInFlight);
+        let routable = vec![true; fleet.len()];
+        let mut in_flight = vec![0u64; fleet.len()];
+        // Assign model-free frames, tracking the load the router sees.
+        // Because it always picks a minimum, the spread can never
+        // exceed one.
+        for _ in 0..rng.range(10, 60) {
+            let i = router
+                .route(None, &routable, &in_flight)
+                .ok_or_else(|| "refused with a fully healthy fleet".to_string())?;
+            in_flight[i] += 1;
+            let (lo, hi) = (
+                *in_flight.iter().min().unwrap_or(&0),
+                *in_flight.iter().max().unwrap_or(&0),
+            );
+            prop_assert!(hi - lo <= 1, "load spread {in_flight:?}");
+        }
+        Ok(())
+    });
+}
+
+// ---- probe state machine, pinned against a table ------------------------
+
+#[test]
+fn probe_ladder_matches_the_pinned_outcome_table() {
+    use HealthState::*;
+    use Transition::*;
+    // (eject_after, probation_successes, probe outcomes,
+    //  expected final state, expected transitions in order)
+    #[allow(clippy::type_complexity)]
+    let table: &[(u32, u32, &[bool], HealthState, &[Transition])] = &[
+        // Healthy stays healthy on success.
+        (3, 2, &[true, true, true], Healthy, &[]),
+        // Failure streak below K never ejects; success resets it.
+        (3, 2, &[false, false, true, false, false], Healthy, &[]),
+        // Exactly K consecutive failures eject.
+        (3, 2, &[false, false, false], Ejected, &[Ejected]),
+        // Failures while ejected change nothing.
+        (2, 2, &[false, false, false, false], Ejected, &[Ejected]),
+        // The full ladder: eject, first success → probation, second
+        // success → recovered.
+        (
+            2,
+            2,
+            &[true, false, false, false, true, true],
+            Healthy,
+            &[Ejected, Probation, Recovered],
+        ),
+        // Probation relapse resets the success streak entirely.
+        (
+            1,
+            3,
+            &[false, true, true, false, true, true, true],
+            Healthy,
+            &[Ejected, Probation, Ejected, Probation, Recovered],
+        ),
+        // M = 1 collapses probation: one success goes straight home.
+        (1, 1, &[false, true], Healthy, &[Ejected, Recovered]),
+        // A recovered backend ejects again at the same threshold.
+        (
+            2,
+            1,
+            &[false, false, true, false, false],
+            Ejected,
+            &[Ejected, Recovered, Ejected],
+        ),
+    ];
+    for (i, (k, m, outcomes, want_state, want_trans)) in table.iter().enumerate() {
+        let mut tracker = ProbeTracker::new(*k, *m);
+        let got: Vec<Transition> = outcomes
+            .iter()
+            .filter_map(|&ok| tracker.observe(ok))
+            .collect();
+        assert_eq!(
+            tracker.state(),
+            *want_state,
+            "row {i}: K={k} M={m} outcomes {outcomes:?}"
+        );
+        assert_eq!(got, *want_trans, "row {i}: K={k} M={m} outcomes {outcomes:?}");
+        assert_eq!(
+            tracker.routable(),
+            *want_state == Healthy,
+            "row {i}: only Healthy takes traffic"
+        );
+    }
+}
+
+#[test]
+fn forced_ejection_requires_the_full_probation_walk_back() {
+    // Data-plane evidence (link death) ejects immediately, even with a
+    // sky-high probe threshold; recovery still walks probation.
+    let mut t = ProbeTracker::new(100, 2);
+    assert_eq!(t.force_eject(), Some(Transition::Ejected));
+    assert_eq!(t.force_eject(), None, "idempotent while ejected");
+    assert_eq!(t.observe(true), Some(Transition::Probation));
+    assert!(!t.routable(), "probation takes no traffic");
+    assert_eq!(t.observe(false), Some(Transition::Ejected), "relapse");
+    assert_eq!(t.observe(true), Some(Transition::Probation));
+    assert_eq!(t.observe(true), Some(Transition::Recovered));
+    assert!(t.routable());
+}
+
+#[test]
+fn probe_churn_never_leaves_the_tracker_wedged() {
+    forall("tracker-liveness", 300, 0x7EA1, |rng| {
+        let k = rng.range(1, 5) as u32;
+        let m = rng.range(1, 4) as u32;
+        let mut tracker = ProbeTracker::new(k, m);
+        for _ in 0..rng.range(5, 80) {
+            if rng.chance(0.05) {
+                tracker.force_eject();
+            }
+            tracker.observe(rng.chance(0.5));
+        }
+        // Whatever the history: K failures always (re-)eject, and
+        // K… probes of pure success always recover.
+        for _ in 0..k {
+            tracker.observe(false);
+        }
+        prop_assert!(
+            tracker.state() == HealthState::Ejected,
+            "{k} consecutive failures must leave the tracker ejected, got {:?}",
+            tracker.state()
+        );
+        for _ in 0..m {
+            tracker.observe(true);
+        }
+        prop_assert!(
+            tracker.state() == HealthState::Healthy && tracker.routable(),
+            "{m} consecutive successes must recover the tracker, got {:?}",
+            tracker.state()
+        );
+        Ok(())
+    });
+}
